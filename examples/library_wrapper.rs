@@ -1,0 +1,139 @@
+//! Adding a new MPI-based library (paper §3.5) + a library wrapper
+//! (§3.4): implements a custom `Library` ("statlib" — column means and a
+//! row-count routine), installs it through the factory registry (the
+//! `dlopen` substitute), registers it from the client by (name, path),
+//! and wraps it in MLlib-shaped sugar.
+//!
+//! `cargo run --release --example library_wrapper`
+
+use std::sync::Arc;
+
+use alchemist::ali::params::{self, ParamsBuilder};
+use alchemist::ali::registry::install_factory;
+use alchemist::ali::{Library, RoutineCtx, RoutineOutput};
+use alchemist::client::{AlMatrix, AlchemistContext};
+use alchemist::comm::collectives;
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{LayoutKind, ParamValue, Params};
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+use alchemist::{Error, Result};
+
+/// The custom "MPI library": distributed column statistics.
+struct StatLib;
+
+impl Library for StatLib {
+    fn name(&self) -> &str {
+        "statlib"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec!["col_means", "count_rows"]
+    }
+
+    fn run(&self, routine: &str, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        match routine {
+            // SPMD: local partial sums + one all-reduce — exactly how an
+            // MPI statistics kernel would be written.
+            "col_means" => {
+                let h = params::get_matrix(p, "A")?;
+                let a = ctx.store.get(h)?;
+                let n = a.meta.cols as usize;
+                let mut sums = vec![0.0; n];
+                for (_, row) in a.iter_rows() {
+                    alchemist::linalg::blas1::axpy(1.0, row, &mut sums);
+                }
+                collectives::allreduce_sum(ctx.mesh, &mut sums, collectives::AllReduceAlgo::Ring)?;
+                let m = a.meta.rows as f64;
+                let means: Vec<f64> = sums.iter().map(|s| s / m).collect();
+                // return as a k x 1 distributed matrix so the client can
+                // fetch it like any other AlMatrix
+                let handle = ctx.output_handle(0)?;
+                let meta = alchemist::protocol::MatrixMeta {
+                    handle,
+                    rows: n as u64,
+                    cols: 1,
+                    layout: alchemist::protocol::LayoutDesc {
+                        kind: LayoutKind::RowBlock,
+                        owners: ctx.owners.clone(),
+                    },
+                };
+                let rank = ctx.mesh.rank() as u32;
+                let mut panel = alchemist::elemental::LocalPanel::alloc(meta.clone(), rank)?;
+                let layout = panel.layout();
+                for r in layout.rows_of_slot(rank).collect::<Vec<_>>() {
+                    panel.set_row(r, &[means[r as usize]])?;
+                }
+                ctx.store.insert(panel)?;
+                Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+            }
+            "count_rows" => {
+                let h = params::get_matrix(p, "A")?;
+                let a = ctx.store.get(h)?;
+                let mut c = vec![a.local_rows() as f64];
+                collectives::allreduce_sum(ctx.mesh, &mut c, collectives::AllReduceAlgo::Ring)?;
+                Ok(RoutineOutput {
+                    outputs: vec![("rows".into(), ParamValue::I64(c[0] as i64))],
+                    new_matrices: vec![],
+                })
+            }
+            other => Err(Error::Ali(format!("statlib has no routine {other:?}"))),
+        }
+    }
+}
+
+/// §3.4-style wrapper: `ColMeans(alA)` instead of raw run() plumbing.
+fn col_means(ac: &AlchemistContext, a: &AlMatrix) -> Result<Vec<f64>> {
+    let (_, mats) = ac.run(
+        "statlib",
+        "col_means",
+        ParamsBuilder::new().matrix("A", a.handle()).build(),
+    )?;
+    let m = mats.into_iter().next().ok_or_else(|| Error::Ali("no output".into()))?;
+    let dense = ac.fetch_dense(&m)?;
+    Ok((0..dense.rows()).map(|i| dense.get(i, 0)).collect())
+}
+
+fn main() -> Result<()> {
+    alchemist::logging::init_from_env();
+
+    // "Compile the ALI and drop it next to the server" — the factory
+    // install is our dlopen substitute (DESIGN.md).
+    install_factory("file://libstatlib.so", || Arc::new(StatLib));
+
+    let mut cfg = Config::default();
+    cfg.server.workers = 3;
+    let server = start_server(&cfg)?;
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "library_wrapper")?;
+    ac.request_workers(3)?;
+
+    // Client registers the new library by (name, path), §3.3-style.
+    ac.register_library("statlib", "file://libstatlib.so")?;
+
+    let a = DenseMatrix::from_vec(1000, 8, random_matrix(3, 1000, 8))?;
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock)?;
+
+    let means = col_means(&ac, &al_a)?;
+    println!("col_means = {means:?}");
+
+    // verify against local compute
+    for j in 0..8 {
+        let want: f64 = (0..1000).map(|i| a.get(i, j)).sum::<f64>() / 1000.0;
+        assert!((means[j] - want).abs() < 1e-12, "column {j}");
+    }
+    println!("column means verified ✓");
+
+    let (out, _) = ac.run(
+        "statlib",
+        "count_rows",
+        ParamsBuilder::new().matrix("A", al_a.handle()).build(),
+    )?;
+    assert_eq!(out[0].1.as_i64()?, 1000);
+    println!("count_rows = {} ✓", out[0].1.as_i64()?);
+
+    ac.stop()?;
+    server.shutdown();
+    println!("library_wrapper OK");
+    Ok(())
+}

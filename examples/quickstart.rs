@@ -1,0 +1,80 @@
+//! Quickstart — mirrors the paper's §3.3 sample application:
+//!
+//! ```scala
+//! val ac = new Alchemist.AlchemistContext(sc, numWorkers)
+//! ac.registerLibrary(ALIlibAName, ALIlibALocation)
+//! val alA = AlMatrix(A)
+//! val output = ac.run(ALIlibAName, "condest", alA)
+//! ac.stop()
+//! ```
+//!
+//! Run with `cargo run --release --example quickstart`.
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::LayoutKind;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init_from_env();
+
+    // Start an Alchemist server (in production this is `alchemist serve`
+    // on dedicated nodes; here we spin it up in-process).
+    let mut cfg = Config::default();
+    cfg.server.workers = 4;
+    let server = start_server(&cfg)?;
+    println!("alchemist driver at {}", server.driver_addr);
+
+    // ---- the §3.3 client flow ----
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "quickstart")?;
+    ac.request_workers(4)?;
+    ac.register_library("elemlib", "builtin:elemlib")?;
+
+    // A is an "IndexedRowMatrix in the application"; here a local matrix.
+    let a = DenseMatrix::from_vec(512, 64, random_matrix(7, 512, 64))?;
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock)?; // val alA = AlMatrix(A)
+
+    // val output = ac.run(libA, "condest", alA)
+    let (outputs, _) = ac.run(
+        "elemlib",
+        "condest",
+        ParamsBuilder::new().matrix("A", al_a.handle()).build(),
+    )?;
+    println!("condest(A) = {:.4}", outputs[0].1.as_f64()?);
+
+    // Library-wrapper sugar (§3.4): same call, MLlib-shaped.
+    let cond = wrappers::cond_est(&ac, &al_a)?;
+    println!("CondEst(alA) = {cond:.4}");
+
+    // Chain a GEMM without any data round trip: B = Aᵀ? (use A with
+    // itself via a scaled copy), then fetch the result explicitly.
+    let b = DenseMatrix::from_vec(64, 32, random_matrix(8, 64, 32))?;
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock)?;
+    let al_c = wrappers::gemm(&ac, &al_a, &al_b)?;
+    let c = ac.fetch_dense(&al_c)?; // explicit AlMatrix -> local
+    println!(
+        "C = A*B is {}x{}, ‖C‖_F = {:.4}",
+        c.rows(),
+        c.cols(),
+        c.frobenius_norm()
+    );
+
+    // verify against local compute
+    let want = alchemist::linalg::gemm::gemm(&a, &b)?;
+    assert!(c.max_abs_diff(&want)? < 1e-9, "Alchemist GEMM disagrees with local");
+    println!("verified against local GEMM ✓");
+
+    println!(
+        "phase times: send {:.3}s, compute {:.3}s, receive {:.3}s",
+        ac.phases.get_secs("send"),
+        ac.phases.get_secs("compute"),
+        ac.phases.get_secs("receive"),
+    );
+
+    ac.stop()?; // ac.stop()
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! A compact §4.3-style transfer sweep: ship the same number of bytes as
+//! a tall-skinny vs a short-wide matrix, over a small grid of (client
+//! partitions × Alchemist workers), and print the Table-2/3-shaped grid.
+//! (The full grids are `cargo bench --bench table2_transfer_tall` /
+//! `table3_transfer_wide`.)
+//!
+//! `cargo run --release --example transfer_sweep`
+
+use alchemist::bench_support::harness::Table;
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::metrics::Timer;
+use alchemist::server::start_server;
+use alchemist::sparklet::{IndexedRowMatrix, SparkletContext};
+
+fn run_transfer(
+    spark_nodes: u32,
+    alchemist_nodes: u32,
+    rows: u64,
+    cols: u64,
+) -> alchemist::Result<f64> {
+    let mut cfg = Config::default();
+    cfg.server.workers = alchemist_nodes;
+    cfg.server.gemm_backend = "native".into(); // no compute in this sweep
+    cfg.sparklet.executors = spark_nodes;
+    cfg.sparklet.task_overhead_us = 0;
+    cfg.sparklet.executor_mem_mb = 4096;
+
+    let server = start_server(&cfg)?;
+    let sc = SparkletContext::new(&cfg.sparklet)?;
+    let a = IndexedRowMatrix::random(&sc, 99, rows, cols, spark_nodes, None)?;
+
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "transfer_sweep")?;
+    // paper behaviour: one row per message (what creates the tall-vs-wide
+    // gap; see `cargo bench --bench ablate_framing` for the batched fix)
+    ac.batch_rows = 1;
+    ac.request_workers(alchemist_nodes)?;
+    let t = Timer::start();
+    let al_a = a.to_alchemist(&sc, &ac)?;
+    let secs = t.elapsed_secs();
+    assert_eq!(al_a.rows(), rows);
+    ac.stop()?;
+    sc.shutdown();
+    server.shutdown();
+    Ok(secs)
+}
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init_from_env();
+    // ~26 MB each, 64x row-count difference
+    let tall = (32_768u64, 100u64);
+    let wide = (512u64, 6_400u64);
+    let grid = [2u32, 4, 8];
+
+    for (label, (rows, cols)) in [("tall-skinny", tall), ("short-wide", wide)] {
+        println!(
+            "\n{label}: {rows} x {cols} (~{:.0} MB)",
+            (rows * cols * 8) as f64 / 1e6
+        );
+        let mut table = Table::new(
+            &std::iter::once("#spark".to_string())
+                .chain(grid.iter().map(|w| format!("{w} alch")))
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|s| s.as_str())
+                .collect::<Vec<_>>(),
+        );
+        for &s in &grid {
+            let mut cells = vec![s.to_string()];
+            for &w in &grid {
+                let secs = run_transfer(s, w, rows, cols)?;
+                cells.push(format!("{secs:.2}s"));
+            }
+            table.row(cells);
+        }
+        table.print();
+    }
+    println!("\n(expect: tall-skinny slower at equal bytes — §4.3's per-row message effect)");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT exporter: lower every L2 graph to HLO *text* artifacts.
+
+HLO text (NOT serialized HloModuleProto / jax .serialize()): jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via `make artifacts`; a manifest.json records shapes/dtypes so the Rust
+runtime can validate its tiling glue against what was actually exported.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from compile.model import artifact_specs
+
+_DTYPE_NAMES = {"float32": "f32", "float64": "f64"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, args) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": _DTYPE_NAMES[str(a.dtype)]}
+                for a in args
+            ],
+            "chars": len(text),
+        }
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/model.hlo.txt",
+                   help="stamp file path; artifacts land in its directory")
+    args = p.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    manifest = export_all(out_dir)
+    # Stamp file doubles as the Make target; lists what was exported.
+    with open(args.out, "w") as f:
+        f.write("\n".join(sorted(manifest)) + "\n")
+    print(f"exported {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

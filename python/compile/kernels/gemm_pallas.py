@@ -1,0 +1,67 @@
+"""L1: tiled GEMM-accumulate Pallas kernel.
+
+This is the node-local compute hot spot of the reproduced system: the
+"MPI library" (our ElemLib) decomposes distributed GEMM / Gram matvecs into
+fixed-shape tile products, and each tile product is this kernel.
+
+TPU-idiomatic structure (see DESIGN.md §Hardware-Adaptation):
+  * the (M, N, K) iteration space is expressed as a Pallas grid
+    (m_tiles, n_tiles, k_tiles) with the contraction dimension innermost,
+  * BlockSpecs stage (bm x bk) / (bk x bn) operand tiles through VMEM —
+    the same HBM<->VMEM schedule a CPU version gets from cache blocking,
+  * the output ref doubles as the accumulator across the k grid steps,
+    which is the standard MXU accumulation pattern.
+
+interpret=True is mandatory on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. The kernel still lowers into
+the surrounding jax graph and ships in the same HLO artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_acc_kernel(x_ref, y_ref, acc_ref, o_ref):
+    """One (bm, bn) output tile; k is the innermost grid dimension.
+
+    o = acc + sum_k x[:, k] @ y[k, :].  On the first k step the accumulator
+    tile is loaded from `acc_ref`; later steps accumulate in place.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...]
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_acc(x, y, acc, *, bm=128, bn=128, bk=128):
+    """Tiled C = acc + x @ y via the Pallas kernel.
+
+    Shapes must tile evenly; the Rust runtime pads panels to the artifact's
+    static shape, so the AOT path always satisfies this.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and acc.shape == (m, n)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, acc)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for every exported graph. The pytest suite asserts the
+Pallas kernel and the L2 graphs against these before anything is exported."""
+
+import jax.numpy as jnp
+
+
+def gemm_acc_ref(x, y, acc):
+    """C = acc + x @ y."""
+    return acc + jnp.dot(x, y, preferred_element_type=acc.dtype)
+
+
+def gemv_acc_ref(a, x, acc):
+    """y = acc + A @ x (x, acc are column vectors shaped (n, 1)/(m, 1))."""
+    return acc + jnp.dot(a, x, preferred_element_type=acc.dtype)
+
+
+def gevm_acc_ref(a, x, acc):
+    """y = acc + A^T @ x."""
+    return acc + jnp.dot(a.T, x, preferred_element_type=acc.dtype)
+
+
+def gram_matvec_ref(a, v):
+    """w = A^T (A v) — one Lanczos operator application on a row panel."""
+    return jnp.dot(a.T, jnp.dot(a, v))

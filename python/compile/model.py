@@ -1,0 +1,80 @@
+"""L2: the jax compute graphs the "MPI library" (ElemLib, Rust side) calls.
+
+Each function here is AOT-lowered by aot.py into one HLO-text artifact with a
+fixed (tile) shape; the Rust runtime pads/tiles arbitrary distributed-matrix
+panels onto these shapes (rust/src/runtime/tiling.rs). The GEMM tile calls
+the L1 Pallas kernel so the kernel lowers into the same artifact.
+
+Everything is f64 by default (the paper's matrices are double precision);
+f32 variants of the GEMM tile are also exported for the ablation bench.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.gemm_pallas import gemm_acc
+
+
+def gemm_acc_graph(x, y, acc):
+    """C = acc + x @ y over one (bm, bk)x(bk, bn) tile — Pallas inside."""
+    # Block size: one VMEM-resident sub-tile per grid step. 128x128 f64 is
+    # 128 KiB/operand — comfortably inside a 16 MiB VMEM budget with double
+    # buffering; see DESIGN.md for the footprint table.
+    return (gemm_acc(x, y, acc, bm=128, bn=128, bk=128),)
+
+
+def gemv_acc_graph(a, x, acc):
+    """y = acc + A @ x; x and acc are (k, 1)/(m, 1) column vectors.
+
+    Plain jnp: XLA fuses this into a single dot; a Pallas grid adds nothing
+    for a bandwidth-bound matvec tile.
+    """
+    return (acc + jnp.dot(a, x, preferred_element_type=acc.dtype),)
+
+
+def gevm_acc_graph(a, x, acc):
+    """y = acc + A^T @ x (transpose matvec for the Gram operator)."""
+    return (acc + jnp.dot(a.T, x, preferred_element_type=acc.dtype),)
+
+
+def gram_matvec_graph(a, v):
+    """w = A^T (A v) on one row panel — a full Lanczos operator application
+    fused into one artifact (both halves in a single executable, saving one
+    PJRT round trip per panel per iteration)."""
+    t = jnp.dot(a, v, preferred_element_type=v.dtype)
+    return (jnp.dot(a.T, t, preferred_element_type=v.dtype),)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (graph fn, example arg shapes)
+# ---------------------------------------------------------------------------
+
+def _s(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def artifact_specs():
+    """Every artifact exported by `make artifacts`.
+
+    Tile sizes: 256 is the test/small-problem tile; 1024 amortizes PJRT
+    per-call overhead on the bench matrices (see EXPERIMENTS.md §Perf).
+    """
+    f32, f64 = jnp.float32, jnp.float64
+    specs = {}
+    for t in (256, 1024):
+        specs[f"gemm_acc_f64_{t}"] = (
+            gemm_acc_graph, (_s((t, t), f64), _s((t, t), f64), _s((t, t), f64)))
+        specs[f"gemm_acc_f32_{t}"] = (
+            gemm_acc_graph, (_s((t, t), f32), _s((t, t), f32), _s((t, t), f32)))
+    for t in (256, 1024):
+        specs[f"gemv_acc_f64_{t}"] = (
+            gemv_acc_graph, (_s((t, t), f64), _s((t, 1), f64), _s((t, 1), f64)))
+        specs[f"gevm_acc_f64_{t}"] = (
+            gevm_acc_graph, (_s((t, t), f64), _s((t, 1), f64), _s((t, 1), f64)))
+    # Fused Gram matvec on a fixed row-panel tile (rows x n tile).
+    for rows, n in ((1024, 256), (4096, 256), (4096, 1024)):
+        specs[f"gram_matvec_f64_{rows}x{n}"] = (
+            gram_matvec_graph, (_s((rows, n), f64), _s((n, 1), f64)))
+    return specs

@@ -1,0 +1,64 @@
+"""Pallas GEMM kernel vs the pure-jnp oracle — the core L1 correctness
+signal. hypothesis sweeps shapes/dtypes/block sizes."""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm_pallas import gemm_acc
+from compile.kernels import ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.float64, 1e-12)])
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 32, 16), (128, 128, 128)])
+def test_gemm_acc_matches_ref(dtype, tol, m, n, k):
+    x, y, acc = _rand((m, k), dtype, 0), _rand((k, n), dtype, 1), _rand((m, n), dtype, 2)
+    got = gemm_acc(x, y, acc, bm=min(m, 32), bn=min(n, 32), bk=min(k, 32))
+    want = ref.gemm_acc_ref(x, y, acc)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_gemm_acc_multi_k_step_accumulates():
+    # k spans several grid steps; exercises the pl.when init + accumulate path.
+    x, y, acc = _rand((32, 96), jnp.float64, 3), _rand((96, 32), jnp.float64, 4), _rand((32, 32), jnp.float64, 5)
+    got = gemm_acc(x, y, acc, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(got, ref.gemm_acc_ref(x, y, acc), rtol=1e-12)
+
+
+def test_gemm_acc_zero_acc_is_plain_matmul():
+    x, y = _rand((64, 64), jnp.float64, 6), _rand((64, 64), jnp.float64, 7)
+    got = gemm_acc(x, y, jnp.zeros((64, 64), jnp.float64), bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(got, x @ y, rtol=1e-12)
+
+
+def test_gemm_acc_rejects_uneven_tiles():
+    x, y, acc = (jnp.zeros((10, 8)), jnp.zeros((8, 8)), jnp.zeros((10, 8)))
+    with pytest.raises(AssertionError):
+        gemm_acc(x, y, acc, bm=4, bn=4, bk=4)  # m=10 not divisible by 4
+
+
+_dims = st.sampled_from([8, 16, 24, 32, 48, 64])
+_blocks = st.sampled_from([8, 16, 32])
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=_dims, n=_dims, k=_dims, bm=_blocks, bn=_blocks, bk=_blocks,
+       dtype=st.sampled_from([jnp.float32, jnp.float64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_gemm_acc_hypothesis_sweep(m, n, k, bm, bn, bk, dtype, seed):
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        return  # uneven tilings are rejected (covered above)
+    x, y, acc = _rand((m, k), dtype, seed), _rand((k, n), dtype, seed + 1), _rand((m, n), dtype, seed + 2)
+    got = gemm_acc(x, y, acc, bm=bm, bn=bn, bk=bk)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    np.testing.assert_allclose(got, ref.gemm_acc_ref(x, y, acc), rtol=tol, atol=tol)

@@ -1,0 +1,50 @@
+//! Ablation: all-reduce algorithm in the MPI-substitute — naive
+//! (gather-to-root + broadcast) vs ring (reduce-scatter + all-gather).
+//! The ring version carries the Lanczos per-iteration all-reduce on the
+//! SVD hot path.
+//!
+//! Run: `cargo bench --bench ablate_collectives`
+
+use alchemist::bench_support::{bench_config, harness::Table};
+use alchemist::comm::{collectives, run_mesh};
+use alchemist::metrics::Timer;
+
+fn main() {
+    let base = bench_config();
+    let reps = base.bench.reps.max(1) * 3;
+    println!("=== Ablation: all-reduce algorithm (per-call latency) ===\n");
+    let mut table = Table::new(&["ranks", "vector", "naive(ms)", "ring(ms)", "ring speedup"]);
+
+    for p in [4usize, 8, 16] {
+        for n in [1_000usize, 100_000, 1_000_000] {
+            let mut times = [0.0f64; 2];
+            for (ai, algo) in
+                [collectives::AllReduceAlgo::Naive, collectives::AllReduceAlgo::Ring]
+                    .into_iter()
+                    .enumerate()
+            {
+                let t = Timer::start();
+                run_mesh(p, move |mut mesh| {
+                    let mut data: Vec<f64> =
+                        (0..n).map(|i| (mesh.rank() + i) as f64).collect();
+                    for _ in 0..reps {
+                        collectives::allreduce_sum(&mut mesh, &mut data, algo)?;
+                    }
+                    Ok(())
+                })
+                .expect("mesh");
+                times[ai] = t.elapsed_secs() / reps as f64 * 1e3;
+            }
+            table.row(vec![
+                p.to_string(),
+                n.to_string(),
+                format!("{:.2}", times[0]),
+                format!("{:.2}", times[1]),
+                format!("{:.2}x", times[0] / times[1]),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nreading: the ring wins on large vectors (bandwidth-optimal) — the regime of");
+    println!("the SVD's per-iteration n-vector all-reduce; naive is fine for tiny payloads.");
+}

@@ -1,0 +1,115 @@
+//! Micro-benchmarks of the hot paths (criterion substitute:
+//! `bench_support::harness`): wire codec, framing over real sockets,
+//! layout routing, local GEMM/matvec kernels, PJRT dispatch, collectives.
+//! These are the §Perf profiling probes — EXPERIMENTS.md records their
+//! evolution across optimization iterations.
+//!
+//! Run: `cargo bench --bench micro_hotpaths`
+
+use alchemist::bench_support::harness::bench;
+use alchemist::comm::{collectives, run_mesh};
+use alchemist::elemental::dist_gemm::{GemmBackend, NativeBackend};
+use alchemist::elemental::Layout;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{frame, DataMsg, LayoutKind, WireRow};
+use alchemist::runtime::PjrtRuntime;
+use alchemist::workload::{random_matrix, random_row};
+
+fn main() {
+    println!("=== micro benchmarks (hot paths) ===");
+
+    // --- protocol codec: 256-row batch of 100-wide rows (~205 KB) ---
+    let rows: Vec<WireRow> =
+        (0..256u64).map(|i| WireRow { index: i, values: random_row(1, i, 100) }).collect();
+    let msg = DataMsg::PutRows { handle: 1, rows };
+    let encoded = msg.encode();
+    bench("codec: encode 256x100 row batch", 0.3, || {
+        std::hint::black_box(msg.encode());
+    });
+    bench("codec: decode 256x100 row batch", 0.3, || {
+        std::hint::black_box(DataMsg::decode(&encoded).unwrap());
+    });
+
+    // --- framing over a real loopback socket pair ---
+    {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            while frame::read_frame_into(&mut s, &mut buf).is_ok() {
+                frame::write_frame(&mut s, &[1]).unwrap();
+            }
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        c.set_nodelay(true).unwrap();
+        bench("framing: 205KB frame + ack roundtrip", 0.5, || {
+            frame::write_frame(&mut c, &encoded).unwrap();
+            std::hint::black_box(frame::read_frame(&mut c).unwrap());
+        });
+        drop(c);
+        let _ = echo.join();
+    }
+
+    // --- layout routing ---
+    let layout = Layout::new(LayoutKind::RowBlock, 1_000_000, 56).unwrap();
+    bench("layout: route 100k rows (RowBlock)", 0.2, || {
+        let mut acc = 0u64;
+        for r in 0..100_000u64 {
+            acc += layout.owner_slot(r * 7 % 1_000_000) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- local kernels ---
+    let a = DenseMatrix::from_vec(512, 512, random_matrix(2, 512, 512)).unwrap();
+    let b = DenseMatrix::from_vec(512, 512, random_matrix(3, 512, 512)).unwrap();
+    let mut c = DenseMatrix::zeros(512, 512);
+    bench("gemm: native blocked 512^3", 1.0, || {
+        NativeBackend.gemm_acc(&a, &b, &mut c).unwrap();
+    });
+    let v: Vec<f64> = (0..512).map(|i| i as f64 * 0.01).collect();
+    bench("gram matvec: native 512x512", 0.3, || {
+        let t = a.matvec(&v).unwrap();
+        std::hint::black_box(a.matvec_t(&t).unwrap());
+    });
+
+    // --- PJRT dispatch (if artifacts available) ---
+    if let Ok(dir) = PjrtRuntime::find_artifacts_dir("artifacts") {
+        let rt = PjrtRuntime::global(dir).expect("runtime");
+        let backend = alchemist::runtime::PjrtBackend::new(rt, 256).unwrap();
+        backend.gemm_acc(&a, &b, &mut c).unwrap(); // warm compile
+        bench("gemm: pjrt pallas t=256 512^3", 1.0, || {
+            backend.gemm_acc(&a, &b, &mut c).unwrap();
+        });
+        let tile = vec![0.0f64; 256 * 256];
+        let dims = vec![256i64, 256];
+        rt.execute(
+            "gemm_acc_f64_256",
+            vec![(tile.clone(), dims.clone()), (tile.clone(), dims.clone()), (tile.clone(), dims.clone())],
+        )
+        .unwrap();
+        bench("pjrt: single 256^3 tile dispatch", 0.5, || {
+            rt.execute(
+                "gemm_acc_f64_256",
+                vec![
+                    (tile.clone(), dims.clone()),
+                    (tile.clone(), dims.clone()),
+                    (tile.clone(), dims.clone()),
+                ],
+            )
+            .unwrap();
+        });
+    }
+
+    // --- collectives ---
+    bench("allreduce: ring 8 ranks x 100k f64", 1.0, || {
+        run_mesh(8, |mut mesh| {
+            let mut data = vec![mesh.rank() as f64; 100_000];
+            collectives::allreduce_sum(&mut mesh, &mut data, collectives::AllReduceAlgo::Ring)
+        })
+        .unwrap();
+    });
+
+    println!("done");
+}

@@ -1,0 +1,17 @@
+//! Regenerates **Table 2**: transmission time of a tall-skinny matrix
+//! (paper: 400 GB, 5,120,000 x 10,000; scaled ~105 MB, 131,072 x 100 —
+//! same 1/64-ish scale, same extreme row-count geometry) from the client
+//! executors to the Alchemist workers, over the paper's grid of
+//! (#Spark nodes) x (#Alchemist nodes) with at most 64 total.
+//!
+//! Run: `cargo bench --bench table2_transfer_tall`
+
+use alchemist::bench_support::{bench_config, run_transfer_grid};
+use alchemist::workload::geometries::TALL;
+
+fn main() {
+    let base = bench_config();
+    run_transfer_grid("Table 2 (tall-skinny)", TALL.0 as u64, TALL.1 as u64, &base);
+    println!("\npaper shape: times roughly flat across the grid (row-message count, not");
+    println!("parallelism, dominates tall-skinny sends), high variability.");
+}

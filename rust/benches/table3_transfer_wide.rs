@@ -1,0 +1,17 @@
+//! Regenerates **Table 3**: transmission time of a short-wide matrix
+//! (paper: 400 GB, 40,000 x 1,280,000; scaled ~105 MB, 1,024 x 12,800 —
+//! 128x fewer rows than Table 2's matrix at equal bytes) over the same
+//! node grid. Expected shape (paper §4.3): wide is faster than tall at
+//! equal bytes, and improves as Alchemist workers are added.
+//!
+//! Run: `cargo bench --bench table3_transfer_wide`
+
+use alchemist::bench_support::{bench_config, run_transfer_grid};
+use alchemist::workload::geometries::WIDE;
+
+fn main() {
+    let base = bench_config();
+    run_transfer_grid("Table 3 (short-wide)", WIDE.0 as u64, WIDE.1 as u64, &base);
+    println!("\npaper shape: short-wide transfers beat tall-skinny at equal bytes (fewer,");
+    println!("larger row messages) and speed up with more Alchemist workers.");
+}

@@ -1,0 +1,780 @@
+//! `ElemLib` — the bundled MPI-library substitute, playing the role of
+//! "Elemental + ARPACK wrapped by an ALI" in the paper's experiments.
+//!
+//! All routines are SPMD over the session mesh; node-local FLOPs go
+//! through the pluggable GEMM backend (PJRT Pallas tiles in production)
+//! and the fused PJRT Gram-matvec artifacts when available.
+//!
+//! Routines:
+//! * `gemm(A, B) -> C` — distributed GEMM (Table 1's workhorse);
+//! * `truncated_svd(A, k) -> U, S, V` — ARPACK-style thick-restart
+//!   Lanczos on the Gram operator (Figs 3/4);
+//! * `condest(A, probes?) -> cond` — the paper's §3.3 example routine;
+//! * `fro_norm(A) -> norm`;
+//! * `scale(A, alpha) -> B`;
+//! * `redistribute(A, kind) -> B` — row-block ⇄ row-cyclic.
+
+use crate::ali::{params, Library, RoutineCtx, RoutineOutput};
+use crate::arpack::{lanczos_topk, LanczosOptions, SymOp};
+use crate::comm::Mesh;
+use crate::elemental::dist_gemm::{dist_frobenius, dist_gemm, dist_gram_matvec};
+use crate::elemental::{redistribute::redistribute, LocalPanel};
+use crate::linalg::DenseMatrix;
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
+use crate::runtime::tiling::pjrt_gram_matvec;
+use crate::{Error, Result};
+
+/// The builtin library instance.
+#[derive(Debug, Default)]
+pub struct ElemLib;
+
+impl ElemLib {
+    pub fn new() -> ElemLib {
+        ElemLib
+    }
+}
+
+impl Library for ElemLib {
+    fn name(&self) -> &str {
+        "elemlib"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec![
+            "gemm",
+            "truncated_svd",
+            "condest",
+            "fro_norm",
+            "scale",
+            "redistribute",
+            "transpose",
+            "add",
+            "gramian",
+            "col_stats",
+            "lstsq",
+        ]
+    }
+
+    fn run(
+        &self,
+        routine: &str,
+        params: &Params,
+        ctx: &mut RoutineCtx<'_>,
+    ) -> Result<RoutineOutput> {
+        match routine {
+            "gemm" => run_gemm(params, ctx),
+            "truncated_svd" => run_truncated_svd(params, ctx),
+            "condest" => run_condest(params, ctx),
+            "fro_norm" => run_fro_norm(params, ctx),
+            "scale" => run_scale(params, ctx),
+            "redistribute" => run_redistribute(params, ctx),
+            "transpose" => run_transpose(params, ctx),
+            "add" => run_add(params, ctx),
+            "gramian" => run_gramian(params, ctx),
+            "col_stats" => run_col_stats(params, ctx),
+            "lstsq" => run_lstsq(params, ctx),
+            other => Err(Error::Ali(format!(
+                "elemlib has no routine {other:?} (available: {:?})",
+                self.routines()
+            ))),
+        }
+    }
+}
+
+fn run_gemm(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let hb = params::get_matrix(p, "B")?;
+    let hc = ctx.output_handle(0)?;
+    let alpha = params::get_f64_or(p, "alpha", 1.0)?;
+    let a = ctx.store.get(ha)?.clone();
+    let b = ctx.store.get(hb)?.clone();
+    let mut c = dist_gemm(ctx.mesh, &a, &b, hc, ctx.backend)?;
+    if alpha != 1.0 {
+        c.local_mut().scale(alpha);
+    }
+    let meta = c.meta.clone();
+    ctx.store.insert(c)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+/// Distributed Gram operator: w = Σ_ranks A_rᵀ(A_r v), one ring
+/// all-reduce per application. Local halves go through the fused PJRT
+/// artifacts with **device-resident cached panels** when available (the
+/// panel is uploaded once; later iterations only ship v), else native
+/// kernels.
+struct DistGramOp<'a> {
+    mesh: &'a mut Mesh,
+    local: &'a DenseMatrix,
+    runtime: Option<&'static crate::runtime::PjrtRuntime>,
+    cached: Option<crate::runtime::tiling::CachedGramPanel>,
+    pub applications: usize,
+}
+
+impl<'a> DistGramOp<'a> {
+    /// `handle` keys the device-buffer cache (worker `FreeMatrix`
+    /// invalidates it). The cache base also folds in the session rank:
+    /// in this testbed all in-process workers share one PJRT runtime, so
+    /// two ranks' panels of the same handle must not collide (separate
+    /// worker *processes* would each have their own runtime).
+    fn new(
+        mesh: &'a mut Mesh,
+        local: &'a DenseMatrix,
+        runtime: Option<&'static crate::runtime::PjrtRuntime>,
+        handle: u64,
+        use_pjrt: bool,
+    ) -> Result<DistGramOp<'a>> {
+        let base = handle * 256 + mesh.rank() as u64;
+        let runtime = if use_pjrt { runtime } else { None };
+        let cached = match runtime {
+            Some(rt) => crate::runtime::tiling::CachedGramPanel::new(rt, base, local)?,
+            None => None,
+        };
+        Ok(DistGramOp { mesh, local, runtime, cached, applications: 0 })
+    }
+}
+
+impl SymOp for DistGramOp<'_> {
+    fn dim(&self) -> usize {
+        self.local.cols()
+    }
+
+    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>> {
+        self.applications += 1;
+        let local = self.local;
+        let rt = self.runtime;
+        let cached = self.cached.as_ref();
+        dist_gram_matvec(self.mesh, v, move |x| match (cached, rt) {
+            (Some(panel), Some(rt)) => panel.apply(rt, x),
+            (None, Some(rt)) => pjrt_gram_matvec(rt, local, x),
+            (_, None) => {
+                let t = local.matvec(x)?;
+                local.matvec_t(&t)
+            }
+        })
+    }
+}
+
+fn run_truncated_svd(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let k = params::get_i64(p, "k")? as usize;
+    let tol = params::get_f64_or(p, "tol", 1e-10)?;
+    let hu = ctx.output_handle(0)?;
+    let hs = ctx.output_handle(1)?;
+    let hv = ctx.output_handle(2)?;
+
+    let a = ctx.store.get(ha)?;
+    let (m, n) = (a.meta.rows, a.meta.cols);
+    if k == 0 || k as u64 > n.min(m) {
+        return Err(Error::Numerical(format!("truncated_svd: k={k} out of range for {m}x{n}")));
+    }
+    let a_local = a.local().clone();
+    let a_meta = a.meta.clone();
+
+    // SPMD Lanczos: every rank runs the identical iteration; the only
+    // cross-rank op is the all-reduce inside the Gram operator, which is
+    // deterministic, so all ranks hold identical basis/Ritz state.
+    let result = {
+        let mut op = DistGramOp::new(ctx.mesh, &a_local, ctx.runtime, ha, ctx.svd_pjrt)?;
+        lanczos_topk(&mut op, k, &LanczosOptions { tol, ..Default::default() })?
+    };
+
+    let mut sigma = Vec::with_capacity(k);
+    let mut v_full = DenseMatrix::zeros(n as usize, k);
+    for (j, (theta, vec)) in result.eigenvalues.iter().zip(&result.eigenvectors).enumerate() {
+        sigma.push(theta.max(0.0).sqrt());
+        for i in 0..n as usize {
+            v_full.set(i, j, vec[i]);
+        }
+    }
+
+    // U_local = A_local V Σ⁻¹ (rank-deficient columns zeroed).
+    let mut u_local = ctx.backend.gemm(&a_local, &v_full)?;
+    for j in 0..k {
+        let s = sigma[j];
+        let inv = if s > 1e-12 { 1.0 / s } else { 0.0 };
+        for i in 0..u_local.rows() {
+            let cur = u_local.get(i, j);
+            u_local.set(i, j, cur * inv);
+        }
+    }
+
+    let owners = ctx.owners.clone();
+    let rank = ctx.mesh.rank() as u32;
+    let layout = |_rows: u64| LayoutDesc { kind: LayoutKind::RowBlock, owners: owners.clone() };
+
+    // U: same row distribution as A.
+    let u_meta = MatrixMeta { handle: hu, rows: m, cols: k as u64, layout: a_meta.layout.clone() };
+    let u_panel = LocalPanel::from_local(u_meta.clone(), a_meta_slot(&a_meta, rank)?, u_local)?;
+
+    // S (k x 1) and V (n x k) are replicated on every rank; store each
+    // rank's RowBlock slice so the client can fetch them like any matrix.
+    let s_meta = MatrixMeta { handle: hs, rows: k as u64, cols: 1, layout: layout(k as u64) };
+    let s_panel = slice_replicated(&s_meta, rank, |i, _| sigma[i as usize])?;
+    let v_meta = MatrixMeta { handle: hv, rows: n, cols: k as u64, layout: layout(n) };
+    let v_panel = slice_replicated(&v_meta, rank, |i, j| v_full.get(i as usize, j as usize))?;
+
+    let metas = vec![u_meta, s_meta, v_meta];
+    ctx.store.insert(u_panel)?;
+    ctx.store.insert(s_panel)?;
+    ctx.store.insert(v_panel)?;
+
+    Ok(RoutineOutput {
+        outputs: vec![
+            ("matvecs".into(), ParamValue::I64(result.matvecs as i64)),
+            ("restarts".into(), ParamValue::I64(result.restarts as i64)),
+        ],
+        new_matrices: metas,
+    })
+}
+
+/// Slot of this rank in a matrix's owner list (rank order == slot order).
+fn a_meta_slot(meta: &MatrixMeta, rank: u32) -> Result<u32> {
+    if (rank as usize) < meta.layout.owners.len() {
+        Ok(rank)
+    } else {
+        Err(Error::Server(format!("rank {rank} outside owner list of handle {}", meta.handle)))
+    }
+}
+
+/// Build this rank's RowBlock panel of a replicated matrix defined by a
+/// closure over (global_row, col).
+fn slice_replicated(
+    meta: &MatrixMeta,
+    rank: u32,
+    f: impl Fn(u64, u64) -> f64,
+) -> Result<LocalPanel> {
+    let mut panel = LocalPanel::alloc(meta.clone(), rank)?;
+    let layout = panel.layout();
+    let rows: Vec<u64> = layout.rows_of_slot(rank).collect();
+    for r in rows {
+        let row: Vec<f64> = (0..meta.cols).map(|c| f(r, c)).collect();
+        panel.set_row(r, &row)?;
+    }
+    Ok(panel)
+}
+
+fn run_condest(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let probes = params::get_i64_or(p, "probes", 8)? as usize;
+    let a = ctx.store.get(ha)?;
+    let n = a.meta.cols as usize;
+    let a_local = a.local().clone();
+    let k = probes.clamp(2, n);
+    let result = {
+        let mut op = DistGramOp::new(ctx.mesh, &a_local, ctx.runtime, ha, ctx.svd_pjrt)?;
+        let opts =
+            LanczosOptions { max_basis: (4 * k + 20).min(n), ..Default::default() };
+        lanczos_topk(&mut op, k, &opts)?
+    };
+    let smax = result.eigenvalues.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+    let smin = result.eigenvalues.last().copied().unwrap_or(0.0).max(0.0).sqrt();
+    let cond = if smin <= 1e-300 { f64::INFINITY } else { smax / smin };
+    Ok(RoutineOutput {
+        outputs: vec![("condest".into(), ParamValue::F64(cond))],
+        new_matrices: vec![],
+    })
+}
+
+fn run_fro_norm(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let a = ctx.store.get(ha)?.clone();
+    let norm = dist_frobenius(ctx.mesh, &a)?;
+    Ok(RoutineOutput {
+        outputs: vec![("fro_norm".into(), ParamValue::F64(norm))],
+        new_matrices: vec![],
+    })
+}
+
+fn run_scale(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let alpha = params::get_f64(p, "alpha")?;
+    let hb = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?;
+    let mut local = a.local().clone();
+    local.scale(alpha);
+    let meta = MatrixMeta { handle: hb, ..a.meta.clone() };
+    let panel = LocalPanel::from_local(meta.clone(), a.slot, local)?;
+    ctx.store.insert(panel)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_redistribute(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let kind = match params::get_str(p, "kind")? {
+        "row_block" => LayoutKind::RowBlock,
+        "row_cyclic" => LayoutKind::RowCyclic,
+        other => return Err(Error::Ali(format!("unknown layout kind {other:?}"))),
+    };
+    let hb = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?.clone();
+    let out = redistribute(ctx.mesh, &a, hb, kind)?;
+    let meta = out.meta.clone();
+    ctx.store.insert(out)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_transpose(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    let ha = params::get_matrix(p, "A")?;
+    let hb = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?.clone();
+    if a.meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape("transpose requires RowBlock input".into()));
+    }
+    let out = crate::elemental::transpose::dist_transpose(ctx.mesh, &a, hb)?;
+    let meta = out.meta.clone();
+    ctx.store.insert(out)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_add(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    // C = alpha A + beta B (same shape, same layout — purely local)
+    let ha = params::get_matrix(p, "A")?;
+    let hb = params::get_matrix(p, "B")?;
+    let alpha = params::get_f64_or(p, "alpha", 1.0)?;
+    let beta = params::get_f64_or(p, "beta", 1.0)?;
+    let hc = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?;
+    let b = ctx.store.get(hb)?;
+    if a.meta.rows != b.meta.rows || a.meta.cols != b.meta.cols || a.meta.layout != b.meta.layout
+    {
+        return Err(Error::Shape("add: shape/layout mismatch".into()));
+    }
+    let mut local = a.local().clone();
+    local.scale(alpha);
+    for (dst, src) in local.data_mut().iter_mut().zip(b.local().data()) {
+        *dst += beta * src;
+    }
+    let meta = MatrixMeta { handle: hc, ..a.meta.clone() };
+    let slot = a.slot;
+    let panel = LocalPanel::from_local(meta.clone(), slot, local)?;
+    ctx.store.insert(panel)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_gramian(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    // G = AᵀA (n x n): local gemm_tn + all-reduce, stored RowBlock.
+    // MLlib's computeGramianMatrix analogue — n must be modest.
+    let ha = params::get_matrix(p, "A")?;
+    let hg = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?;
+    let n = a.meta.cols as usize;
+    let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
+    crate::comm::collectives::allreduce_sum(
+        ctx.mesh,
+        &mut g,
+        crate::comm::collectives::AllReduceAlgo::Ring,
+    )?;
+    let g_full = DenseMatrix::from_vec(n, n, g)?;
+    let meta = MatrixMeta {
+        handle: hg,
+        rows: n as u64,
+        cols: n as u64,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+    };
+    let rank = ctx.mesh.rank() as u32;
+    let panel = slice_replicated(&meta, rank, |i, j| g_full.get(i as usize, j as usize))?;
+    ctx.store.insert(panel)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_col_stats(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    // column means and (population) stddevs -> n x 2 matrix [mean, std]
+    let ha = params::get_matrix(p, "A")?;
+    let hs = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?;
+    let n = a.meta.cols as usize;
+    let m = a.meta.rows as f64;
+    let mut acc = vec![0.0; 2 * n]; // sums then sumsq
+    for (_, row) in a.iter_rows() {
+        for (j, &v) in row.iter().enumerate() {
+            acc[j] += v;
+            acc[n + j] += v * v;
+        }
+    }
+    crate::comm::collectives::allreduce_sum(
+        ctx.mesh,
+        &mut acc,
+        crate::comm::collectives::AllReduceAlgo::Ring,
+    )?;
+    let meta = MatrixMeta {
+        handle: hs,
+        rows: n as u64,
+        cols: 2,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+    };
+    let rank = ctx.mesh.rank() as u32;
+    let panel = slice_replicated(&meta, rank, |i, j| {
+        let mean = acc[i as usize] / m;
+        if j == 0 {
+            mean
+        } else {
+            (acc[n + i as usize] / m - mean * mean).max(0.0).sqrt()
+        }
+    })?;
+    ctx.store.insert(panel)?;
+    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+}
+
+fn run_lstsq(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+    // min_x ||A x - y||_2 via normal equations + Cholesky:
+    //   G = AᵀA (all-reduced), b = Aᵀy (all-reduced), G x = b locally.
+    // The classic Elemental-style tall-skinny least-squares path — the
+    // regression workload the paper's intro motivates.
+    let ha = params::get_matrix(p, "A")?;
+    let hy = params::get_matrix(p, "y")?;
+    let ridge = params::get_f64_or(p, "ridge", 0.0)?;
+    let hx = ctx.output_handle(0)?;
+    let a = ctx.store.get(ha)?;
+    let y = ctx.store.get(hy)?;
+    if y.meta.rows != a.meta.rows || y.meta.cols != 1 || y.meta.layout != a.meta.layout {
+        return Err(Error::Shape("lstsq: y must be m x 1 with A's layout".into()));
+    }
+    let n = a.meta.cols as usize;
+    let y_local: Vec<f64> = (0..y.local_rows()).map(|i| y.local().get(i, 0)).collect();
+
+    let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
+    let mut b = a.local().matvec_t(&y_local)?;
+    crate::comm::collectives::allreduce_sum(
+        ctx.mesh,
+        &mut g,
+        crate::comm::collectives::AllReduceAlgo::Ring,
+    )?;
+    crate::comm::collectives::allreduce_sum(
+        ctx.mesh,
+        &mut b,
+        crate::comm::collectives::AllReduceAlgo::Ring,
+    )?;
+    let mut g_full = DenseMatrix::from_vec(n, n, g)?;
+    if ridge > 0.0 {
+        for i in 0..n {
+            g_full.set(i, i, g_full.get(i, i) + ridge);
+        }
+    }
+    let x = crate::linalg::cholesky::spd_solve(&g_full, &b)?;
+
+    // residual norm: local ||A_loc x - y_loc||^2, all-reduced
+    let ax = a.local().matvec(&x)?;
+    let mut res = vec![ax
+        .iter()
+        .zip(&y_local)
+        .map(|(p, q)| (p - q) * (p - q))
+        .sum::<f64>()];
+    crate::comm::collectives::allreduce_sum(
+        ctx.mesh,
+        &mut res,
+        crate::comm::collectives::AllReduceAlgo::Ring,
+    )?;
+
+    let meta = MatrixMeta {
+        handle: hx,
+        rows: n as u64,
+        cols: 1,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+    };
+    let rank = ctx.mesh.rank() as u32;
+    let panel = slice_replicated(&meta, rank, |i, _| x[i as usize])?;
+    ctx.store.insert(panel)?;
+    Ok(RoutineOutput {
+        outputs: vec![("residual".into(), ParamValue::F64(res[0].sqrt()))],
+        new_matrices: vec![meta],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ali::params::ParamsBuilder;
+    use crate::comm::run_mesh;
+    use crate::elemental::dist_gemm::NativeBackend;
+    use crate::elemental::panel::{gather_matrix, scatter_matrix};
+    use crate::elemental::MatrixStore;
+    use crate::workload::random_matrix;
+    use std::sync::Arc;
+
+    /// Drive an elemlib routine SPMD over an in-process mesh with each
+    /// rank's store pre-seeded by `seed_panels`.
+    fn run_routine(
+        p: usize,
+        seed_panels: Vec<Vec<LocalPanel>>, // [rank][panels]
+        routine: &'static str,
+        params: Params,
+        output_handles: Vec<u64>,
+    ) -> Vec<(RoutineOutput, MatrixStore)> {
+        let seed = Arc::new(seed_panels);
+        let params = Arc::new(params);
+        let handles = Arc::new(output_handles);
+        run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let mut store = MatrixStore::new();
+            for panel in &seed[rank] {
+                store.insert(panel.clone()).unwrap();
+            }
+            let lib = ElemLib::new();
+            let mut ctx = RoutineCtx {
+                mesh: &mut mesh,
+                owners: (0..p as u32).collect(),
+                store: &mut store,
+                output_handles: &handles,
+                backend: &NativeBackend,
+                runtime: None,
+                svd_pjrt: false,
+            };
+            let out = lib.run(routine, &params, &mut ctx)?;
+            Ok((out, store))
+        })
+        .unwrap()
+    }
+
+    fn meta(handle: u64, rows: u64, cols: u64, p: u32) -> MatrixMeta {
+        MatrixMeta {
+            handle,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p).collect() },
+        }
+    }
+
+    fn seed(handle: u64, rows: usize, cols: usize, p: usize, s: u64) -> (DenseMatrix, Vec<Vec<LocalPanel>>) {
+        let full = DenseMatrix::from_vec(rows, cols, random_matrix(s, rows, cols)).unwrap();
+        let panels = scatter_matrix(&meta(handle, rows as u64, cols as u64, p as u32), &full).unwrap();
+        (full, panels.into_iter().map(|x| vec![x]).collect())
+    }
+
+    #[test]
+    fn gemm_routine_end_to_end() {
+        let p = 3;
+        let (a_full, mut a_panels) = seed(1, 31, 7, p, 1);
+        let (b_full, b_panels) = seed(2, 7, 5, p, 2);
+        for (ap, bp) in a_panels.iter_mut().zip(b_panels) {
+            ap.extend(bp);
+        }
+        let params = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).build();
+        let results = run_routine(p, a_panels, "gemm", params, vec![100]);
+        let c_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(100).unwrap().clone()).collect();
+        let c = gather_matrix(&c_panels).unwrap();
+        let want = crate::linalg::gemm::gemm(&a_full, &b_full).unwrap();
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+        assert_eq!(results[0].0.new_matrices.len(), 1);
+        assert_eq!(results[0].0.new_matrices[0].handle, 100);
+    }
+
+    #[test]
+    fn truncated_svd_routine_matches_local_reference() {
+        let p = 2;
+        let (a_full, a_panels) = seed(1, 60, 16, p, 3);
+        let params = ParamsBuilder::new().matrix("A", 1).i64("k", 4).build();
+        let results = run_routine(p, a_panels, "truncated_svd", params, vec![10, 11, 12]);
+
+        // reference via local ARPACK-substitute
+        let want =
+            crate::arpack::truncated_svd_local(&a_full, 4, &LanczosOptions::default()).unwrap();
+
+        // singular values from the distributed S
+        let s_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(11).unwrap().clone()).collect();
+        let s = gather_matrix(&s_panels).unwrap();
+        for i in 0..4 {
+            assert!(
+                (s.get(i, 0) - want.singular_values[i]).abs() < 1e-6,
+                "sigma_{i}: {} vs {}",
+                s.get(i, 0),
+                want.singular_values[i]
+            );
+        }
+
+        // U, V reproduce A V = U Σ
+        let u_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, st)| st.get(10).unwrap().clone()).collect();
+        let v_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, st)| st.get(12).unwrap().clone()).collect();
+        let u = gather_matrix(&u_panels).unwrap();
+        let v = gather_matrix(&v_panels).unwrap();
+        let av = crate::linalg::gemm::gemm(&a_full, &v).unwrap();
+        for j in 0..4 {
+            for i in 0..60 {
+                let lhs = av.get(i, j);
+                let rhs = s.get(j, 0) * u.get(i, j);
+                assert!((lhs - rhs).abs() < 1e-6, "AV=UΣ at ({i},{j}): {lhs} vs {rhs}");
+            }
+        }
+        // scalar outputs present on rank 0
+        assert!(results[0].0.outputs.iter().any(|(k, _)| k == "matvecs"));
+    }
+
+    #[test]
+    fn fro_norm_and_scale() {
+        let p = 2;
+        let (a_full, a_panels) = seed(1, 12, 3, p, 4);
+        let params = ParamsBuilder::new().matrix("A", 1).build();
+        let results = run_routine(p, a_panels.clone(), "fro_norm", params, vec![]);
+        let (out, _) = &results[0];
+        let got = out.outputs[0].1.as_f64().unwrap();
+        assert!((got - a_full.frobenius_norm()).abs() < 1e-10);
+
+        let params = ParamsBuilder::new().matrix("A", 1).f64("alpha", -2.0).build();
+        let results = run_routine(p, a_panels, "scale", params, vec![50]);
+        let b_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(50).unwrap().clone()).collect();
+        let b = gather_matrix(&b_panels).unwrap();
+        assert!((b.get(3, 1) + 2.0 * a_full.get(3, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn redistribute_routine() {
+        let p = 3;
+        let (a_full, a_panels) = seed(1, 17, 2, p, 5);
+        let params = ParamsBuilder::new().matrix("A", 1).str("kind", "row_cyclic").build();
+        let results = run_routine(p, a_panels, "redistribute", params, vec![60]);
+        let b_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(60).unwrap().clone()).collect();
+        assert_eq!(b_panels[0].meta.layout.kind, LayoutKind::RowCyclic);
+        let b = gather_matrix(&b_panels).unwrap();
+        assert_eq!(b, a_full);
+    }
+
+    #[test]
+    fn condest_identity_is_one() {
+        let p = 2;
+        let n = 12;
+        let full = DenseMatrix::identity(n);
+        let panels = scatter_matrix(&meta(1, n as u64, n as u64, p as u32), &full).unwrap();
+        let params = ParamsBuilder::new().matrix("A", 1).i64("probes", 6).build();
+        let results = run_routine(
+            p,
+            panels.into_iter().map(|x| vec![x]).collect(),
+            "condest",
+            params,
+            vec![],
+        );
+        let got = results[0].0.outputs[0].1.as_f64().unwrap();
+        assert!((got - 1.0).abs() < 1e-6, "condest {got}");
+    }
+
+    #[test]
+    fn transpose_routine_matches_local() {
+        let p = 3;
+        let (a_full, a_panels) = seed(1, 14, 9, p, 21);
+        let params = ParamsBuilder::new().matrix("A", 1).build();
+        let results = run_routine(p, a_panels, "transpose", params, vec![70]);
+        // cell-wise assembled panels: reassemble from local storage
+        let mut bt = DenseMatrix::zeros(9, 14);
+        for (_, st) in &results {
+            let panel = st.get(70).unwrap();
+            let layout = panel.layout();
+            for li in 0..panel.local_rows() {
+                let gr = layout.global_index(panel.slot, li as u64) as usize;
+                bt.row_mut(gr).copy_from_slice(panel.local().row(li));
+            }
+        }
+        assert_eq!(bt, a_full.transpose());
+    }
+
+    #[test]
+    fn add_routine_linear_combination() {
+        let p = 2;
+        let (a_full, mut a_panels) = seed(1, 10, 4, p, 22);
+        let (b_full, b_panels) = seed(2, 10, 4, p, 23);
+        for (ap, bp) in a_panels.iter_mut().zip(b_panels) {
+            ap.extend(bp);
+        }
+        let params = ParamsBuilder::new()
+            .matrix("A", 1)
+            .matrix("B", 2)
+            .f64("alpha", 2.0)
+            .f64("beta", -0.5)
+            .build();
+        let results = run_routine(p, a_panels, "add", params, vec![71]);
+        let c_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(71).unwrap().clone()).collect();
+        let c = gather_matrix(&c_panels).unwrap();
+        for i in 0..10 {
+            for j in 0..4 {
+                let want = 2.0 * a_full.get(i, j) - 0.5 * b_full.get(i, j);
+                assert!((c.get(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gramian_routine_matches_local() {
+        let p = 2;
+        let (a_full, a_panels) = seed(1, 30, 6, p, 24);
+        let params = ParamsBuilder::new().matrix("A", 1).build();
+        let results = run_routine(p, a_panels, "gramian", params, vec![72]);
+        let g_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(72).unwrap().clone()).collect();
+        let g = gather_matrix(&g_panels).unwrap();
+        let want = crate::linalg::gemm::gemm_tn(&a_full, &a_full).unwrap();
+        assert!(g.max_abs_diff(&want).unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn col_stats_routine() {
+        let p = 2;
+        let (a_full, a_panels) = seed(1, 40, 3, p, 25);
+        let params = ParamsBuilder::new().matrix("A", 1).build();
+        let results = run_routine(p, a_panels, "col_stats", params, vec![73]);
+        let s_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, st)| st.get(73).unwrap().clone()).collect();
+        let s = gather_matrix(&s_panels).unwrap();
+        for j in 0..3 {
+            let mean: f64 = (0..40).map(|i| a_full.get(i, j)).sum::<f64>() / 40.0;
+            let var: f64 =
+                (0..40).map(|i| (a_full.get(i, j) - mean).powi(2)).sum::<f64>() / 40.0;
+            assert!((s.get(j, 0) - mean).abs() < 1e-10, "mean col {j}");
+            assert!((s.get(j, 1) - var.sqrt()).abs() < 1e-10, "std col {j}");
+        }
+    }
+
+    #[test]
+    fn lstsq_routine_recovers_planted_solution() {
+        let p = 2;
+        let (m, n) = (60u64, 5usize);
+        let (a_full, mut a_panels) = seed(1, m as usize, n, p, 26);
+        // y = A x_true (exact system -> zero residual)
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0) * 0.5).collect();
+        let y_full_vec = a_full.matvec(&x_true).unwrap();
+        let y_full =
+            DenseMatrix::from_vec(m as usize, 1, y_full_vec).unwrap();
+        let y_panels = scatter_matrix(&meta(2, m, 1, p as u32), &y_full).unwrap();
+        for (ap, yp) in a_panels.iter_mut().zip(y_panels) {
+            ap.push(yp);
+        }
+        let params = ParamsBuilder::new().matrix("A", 1).matrix("y", 2).build();
+        let results = run_routine(p, a_panels, "lstsq", params, vec![74]);
+        let x_panels: Vec<LocalPanel> =
+            results.iter().map(|(_, s)| s.get(74).unwrap().clone()).collect();
+        let x = gather_matrix(&x_panels).unwrap();
+        for i in 0..n {
+            assert!((x.get(i, 0) - x_true[i]).abs() < 1e-8, "x[{i}]");
+        }
+        let residual = results[0].0.outputs[0].1.as_f64().unwrap();
+        assert!(residual < 1e-8, "residual {residual}");
+    }
+
+    #[test]
+    fn unknown_routine_and_missing_params() {
+        let p = 1;
+        let (_, a_panels) = seed(1, 4, 2, p, 6);
+        let results = run_mesh(p, move |mut mesh| {
+            let mut store = MatrixStore::new();
+            store.insert(a_panels[0][0].clone()).unwrap();
+            let lib = ElemLib::new();
+            let mut ctx = RoutineCtx {
+                mesh: &mut mesh,
+                owners: vec![0],
+                store: &mut store,
+                output_handles: &[9],
+                backend: &NativeBackend,
+                runtime: None,
+                svd_pjrt: false,
+            };
+            let unknown = lib.run("qr", &vec![], &mut ctx);
+            let missing = lib.run("gemm", &vec![], &mut ctx);
+            Ok((unknown.is_err(), missing.is_err()))
+        })
+        .unwrap();
+        assert_eq!(results[0], (true, true));
+    }
+}

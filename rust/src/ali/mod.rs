@@ -1,0 +1,76 @@
+//! Alchemist-Library Interface (ALI) — the generic calling convention
+//! through which the server invokes library routines (paper §2.3/§3.5).
+//!
+//! An ALI in the original is a C/C++ shared object implementing `Library`
+//! and `Parameters` headers, `dlopen`ed at runtime. In this reproduction a
+//! library is a Rust [`Library`] trait object produced by a registered
+//! *factory*; the "dynamic load" surface is preserved — clients register
+//! libraries by (name, path) where the path uses the `builtin:` scheme
+//! (e.g. `builtin:elemlib`) or names a factory installed with
+//! [`registry::install_factory`]. Real `dlopen` of foreign ABIs is out of
+//! scope (documented in DESIGN.md).
+
+pub mod elemlib;
+pub mod params;
+pub mod registry;
+
+use crate::comm::Mesh;
+use crate::elemental::dist_gemm::GemmBackend;
+use crate::elemental::MatrixStore;
+use crate::protocol::{MatrixMeta, Params};
+use crate::Result;
+
+/// Everything a routine needs from its hosting worker, SPMD-style: each
+/// session worker constructs an identical ctx (modulo rank) and the
+/// routine runs collectively.
+pub struct RoutineCtx<'a> {
+    /// Session communicator (rank == slot index in matrix layouts).
+    pub mesh: &'a mut Mesh,
+    /// Worker ids of the session, in rank order (for output metadata).
+    pub owners: Vec<u32>,
+    /// This worker's panel store.
+    pub store: &'a mut MatrixStore,
+    /// Handles pre-assigned by the driver for distributed outputs, in the
+    /// order the routine allocates them.
+    pub output_handles: &'a [u64],
+    /// Node-local GEMM provider (PJRT Pallas tiles or native).
+    pub backend: &'a dyn GemmBackend,
+    /// PJRT runtime for fused artifacts (None => native-only mode).
+    pub runtime: Option<&'static crate::runtime::PjrtRuntime>,
+    /// Route the SVD Gram operator through PJRT (`server.svd_backend`);
+    /// false = native kernels (the CPU-testbed default, see config.rs).
+    pub svd_pjrt: bool,
+}
+
+impl RoutineCtx<'_> {
+    /// Take the i-th pre-assigned output handle.
+    pub fn output_handle(&self, i: usize) -> Result<u64> {
+        self.output_handles.get(i).copied().ok_or_else(|| {
+            crate::Error::Ali(format!(
+                "routine needs output handle #{i} but only {} were pre-assigned",
+                self.output_handles.len()
+            ))
+        })
+    }
+}
+
+/// What a routine returns: scalar outputs (rank 0's are reported to the
+/// client) and metadata for each new distributed matrix it stored.
+#[derive(Debug, Clone, Default)]
+pub struct RoutineOutput {
+    pub outputs: Params,
+    pub new_matrices: Vec<MatrixMeta>,
+}
+
+/// A loadable MPI-library wrapper (the ALI `Library` header analogue).
+pub trait Library: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// List of routines (for error messages / introspection).
+    fn routines(&self) -> Vec<&'static str>;
+
+    /// Invoke `routine` collectively. Every session worker calls this with
+    /// its own ctx; implementations communicate via `ctx.mesh`.
+    fn run(&self, routine: &str, params: &Params, ctx: &mut RoutineCtx<'_>)
+        -> Result<RoutineOutput>;
+}

@@ -1,0 +1,110 @@
+//! Parameter-list helpers — the ALI `Parameters` header analogue: typed
+//! access to the serialized (name, value) lists that cross the driver
+//! control plane.
+
+use crate::protocol::{ParamValue, Params};
+use crate::{Error, Result};
+
+/// Look up a parameter by name.
+pub fn get<'a>(params: &'a Params, name: &str) -> Result<&'a ParamValue> {
+    params
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v)
+        .ok_or_else(|| Error::Ali(format!("missing parameter {name:?}")))
+}
+
+pub fn get_i64(params: &Params, name: &str) -> Result<i64> {
+    get(params, name)?.as_i64()
+}
+
+pub fn get_f64(params: &Params, name: &str) -> Result<f64> {
+    get(params, name)?.as_f64()
+}
+
+pub fn get_matrix(params: &Params, name: &str) -> Result<u64> {
+    get(params, name)?.as_matrix()
+}
+
+pub fn get_str<'a>(params: &'a Params, name: &str) -> Result<&'a str> {
+    get(params, name)?.as_str()
+}
+
+pub fn get_i64_or(params: &Params, name: &str, default: i64) -> Result<i64> {
+    match params.iter().find(|(k, _)| k == name) {
+        Some((_, v)) => v.as_i64(),
+        None => Ok(default),
+    }
+}
+
+pub fn get_f64_or(params: &Params, name: &str, default: f64) -> Result<f64> {
+    match params.iter().find(|(k, _)| k == name) {
+        Some((_, v)) => v.as_f64(),
+        None => Ok(default),
+    }
+}
+
+/// Fluent builder for call-site ergonomics (client + tests).
+#[derive(Debug, Default, Clone)]
+pub struct ParamsBuilder {
+    params: Params,
+}
+
+impl ParamsBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn matrix(mut self, name: &str, handle: u64) -> Self {
+        self.params.push((name.to_string(), ParamValue::Matrix(handle)));
+        self
+    }
+
+    pub fn i64(mut self, name: &str, v: i64) -> Self {
+        self.params.push((name.to_string(), ParamValue::I64(v)));
+        self
+    }
+
+    pub fn f64(mut self, name: &str, v: f64) -> Self {
+        self.params.push((name.to_string(), ParamValue::F64(v)));
+        self
+    }
+
+    pub fn str(mut self, name: &str, v: &str) -> Self {
+        self.params.push((name.to_string(), ParamValue::Str(v.to_string())));
+        self
+    }
+
+    pub fn build(self) -> Params {
+        self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_accessors() {
+        let p = ParamsBuilder::new()
+            .matrix("A", 7)
+            .i64("k", 20)
+            .f64("tol", 1e-8)
+            .str("mode", "tall")
+            .build();
+        assert_eq!(get_matrix(&p, "A").unwrap(), 7);
+        assert_eq!(get_i64(&p, "k").unwrap(), 20);
+        assert_eq!(get_f64(&p, "tol").unwrap(), 1e-8);
+        assert_eq!(get_str(&p, "mode").unwrap(), "tall");
+        assert!(get(&p, "missing").is_err());
+        assert_eq!(get_i64_or(&p, "missing", 5).unwrap(), 5);
+        assert_eq!(get_f64_or(&p, "tol", 0.0).unwrap(), 1e-8);
+    }
+
+    #[test]
+    fn type_mismatch_is_ali_error() {
+        let p = ParamsBuilder::new().str("x", "hi").build();
+        assert!(get_matrix(&p, "x").is_err());
+        assert!(get_i64(&p, "x").is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Library registry: the server-side table of loaded ALIs plus the
+//! process-wide factory table that stands in for `dlopen`.
+//!
+//! Paper §2.4: "Alchemist loads every ALI that is required by some Spark
+//! application dynamically at runtime" — and skips the ones nobody asked
+//! for. Factories reproduce that: registering a library instantiates it
+//! on each worker the first time a session asks for it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::ali::Library;
+use crate::{Error, Result};
+
+type Factory = Arc<dyn Fn() -> Arc<dyn Library> + Send + Sync>;
+
+fn factories() -> &'static Mutex<HashMap<String, Factory>> {
+    static F: OnceLock<Mutex<HashMap<String, Factory>>> = OnceLock::new();
+    F.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Install a library factory under `path` (tests and downstream users add
+/// custom libraries this way; the equivalent of dropping a new `.so` next
+/// to the server).
+pub fn install_factory(path: &str, f: impl Fn() -> Arc<dyn Library> + Send + Sync + 'static) {
+    factories().lock().unwrap().insert(path.to_string(), Arc::new(f));
+}
+
+/// Resolve a library path to an instance. Supported schemes:
+/// * `builtin:elemlib` — the bundled Elemental-substitute library;
+/// * any path previously installed with [`install_factory`].
+pub fn load_library(path: &str) -> Result<Arc<dyn Library>> {
+    if path == "builtin:elemlib" {
+        return Ok(Arc::new(crate::ali::elemlib::ElemLib::new()));
+    }
+    if let Some(f) = factories().lock().unwrap().get(path) {
+        return Ok(f());
+    }
+    Err(Error::Ali(format!(
+        "cannot load library from {path:?}: unknown scheme/factory \
+         (native dlopen is out of scope in this reproduction; use \
+         `builtin:elemlib` or install_factory)"
+    )))
+}
+
+/// Per-worker table of loaded libraries, name -> instance.
+#[derive(Default)]
+pub struct LibraryRegistry {
+    libs: HashMap<String, Arc<dyn Library>>,
+}
+
+impl LibraryRegistry {
+    pub fn new() -> LibraryRegistry {
+        LibraryRegistry::default()
+    }
+
+    /// Register `name` from `path`. Idempotent for the same name.
+    pub fn register(&mut self, name: &str, path: &str) -> Result<()> {
+        if self.libs.contains_key(name) {
+            return Ok(());
+        }
+        let lib = load_library(path)?;
+        self.libs.insert(name.to_string(), lib);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Arc<dyn Library>> {
+        self.libs.get(name).ok_or_else(|| {
+            Error::Ali(format!(
+                "library {name:?} not registered (loaded: {:?})",
+                self.libs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.libs.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ali::{RoutineCtx, RoutineOutput};
+    use crate::protocol::Params;
+
+    struct NoopLib;
+
+    impl Library for NoopLib {
+        fn name(&self) -> &str {
+            "noop"
+        }
+
+        fn routines(&self) -> Vec<&'static str> {
+            vec!["noop"]
+        }
+
+        fn run(
+            &self,
+            _routine: &str,
+            _params: &Params,
+            _ctx: &mut RoutineCtx<'_>,
+        ) -> crate::Result<RoutineOutput> {
+            Ok(RoutineOutput::default())
+        }
+    }
+
+    #[test]
+    fn builtin_elemlib_loads() {
+        let mut reg = LibraryRegistry::new();
+        reg.register("elemlib", "builtin:elemlib").unwrap();
+        assert!(reg.get("elemlib").is_ok());
+        assert_eq!(reg.get("elemlib").unwrap().name(), "elemlib");
+        // idempotent
+        reg.register("elemlib", "builtin:elemlib").unwrap();
+        assert_eq!(reg.loaded().len(), 1);
+    }
+
+    #[test]
+    fn unknown_path_rejected() {
+        let mut reg = LibraryRegistry::new();
+        assert!(reg.register("x", "/usr/lib/libfoo.so").is_err());
+        assert!(reg.get("x").is_err());
+    }
+
+    #[test]
+    fn custom_factory_roundtrip() {
+        install_factory("test:noop", || Arc::new(NoopLib));
+        let mut reg = LibraryRegistry::new();
+        reg.register("mynoop", "test:noop").unwrap();
+        assert_eq!(reg.get("mynoop").unwrap().name(), "noop");
+    }
+}

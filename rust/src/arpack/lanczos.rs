@@ -1,0 +1,309 @@
+//! Thick-restart Lanczos (TRLan/ARPACK-style implicit restarting) with
+//! full reorthogonalization, for the top-k eigenpairs of a symmetric
+//! operator.
+//!
+//! The restarted projection matrix T is "arrowhead + tridiagonal" —
+//! diag(kept Ritz values) coupled to the first new Lanczos vector — so
+//! the inner solve uses the dense symmetric eigensolver
+//! (`linalg::symeig`), exactly as TRLan does.
+
+use crate::arpack::SymOp;
+use crate::linalg::{blas1, qr::mgs_orthonormalize, symeig::sym_eig, DenseMatrix};
+use crate::workload::Rng;
+use crate::{Error, Result};
+
+/// Options for [`lanczos_topk`].
+#[derive(Debug, Clone)]
+pub struct LanczosOptions {
+    /// Residual tolerance relative to |theta| (ARPACK default regime).
+    pub tol: f64,
+    /// Max basis size before a restart; 0 = auto (max(2k+10, 30), capped
+    /// at n).
+    pub max_basis: usize,
+    /// Max number of restarts before giving up.
+    pub max_restarts: usize,
+    /// RNG seed for the start vector.
+    pub seed: u64,
+}
+
+impl Default for LanczosOptions {
+    fn default() -> Self {
+        LanczosOptions { tol: 1e-10, max_basis: 0, max_restarts: 200, seed: 17 }
+    }
+}
+
+/// Result of a top-k symmetric eigensolve.
+#[derive(Debug, Clone)]
+pub struct LanczosResult {
+    /// Top-k eigenvalues, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Matching eigenvectors, each length n.
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// Total operator applications (the distributed-cost unit).
+    pub matvecs: usize,
+    /// Number of thick restarts performed.
+    pub restarts: usize,
+}
+
+/// Compute the k algebraically largest eigenpairs of `op`.
+pub fn lanczos_topk(
+    op: &mut dyn SymOp,
+    k: usize,
+    opts: &LanczosOptions,
+) -> Result<LanczosResult> {
+    let n = op.dim();
+    if k == 0 || k > n {
+        return Err(Error::Numerical(format!("lanczos: k={k} out of range for n={n}")));
+    }
+    let mb = if opts.max_basis == 0 {
+        (2 * k + 10).max(30).min(n)
+    } else {
+        opts.max_basis.max(k + 2).min(n)
+    };
+
+    let mut rng = Rng::new(opts.seed);
+    let mut matvecs = 0usize;
+    let mut restarts = 0usize;
+
+    // Basis vectors (columns), all length n, kept orthonormal. During a
+    // cycle the basis holds `mb` columns plus the residual direction.
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(mb + 1);
+    // Projection matrix T in that basis (leading mb x mb block used).
+    let mut t = DenseMatrix::zeros(mb, mb);
+    // Locked/kept directions at the start of the current cycle.
+    let mut l = 0usize;
+    // beta coupling the last basis column to the residual direction.
+    let mut last_beta = 0.0f64;
+
+    let mut v0: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+    if blas1::normalize(&mut v0) == 0.0 {
+        return Err(Error::Numerical("lanczos: zero start vector".into()));
+    }
+    basis.push(v0);
+
+    loop {
+        // ---- Lanczos expansion from column l to mb-1 ----
+        // Invariant entering the loop: basis has j+1 columns when
+        // expanding column j (the j-th is the newest direction).
+        let mut cycle_len = mb; // may shrink on irrecoverable breakdown
+        for j in l..mb {
+            let w_in = basis[j].clone();
+            let mut w = op.apply(&w_in)?;
+            matvecs += 1;
+            if w.len() != n {
+                return Err(Error::Numerical("lanczos: operator changed dimension".into()));
+            }
+            let alpha = blas1::dot(&w, &basis[j]);
+            t.set(j, j, alpha);
+            // Full reorthogonalization (MGS, twice) against the whole
+            // basis removes the alpha/beta/coupling components and keeps
+            // the basis numerically orthonormal.
+            let mut beta = mgs_orthonormalize(&mut w, &basis);
+            if beta <= 1e-13 {
+                // Breakdown: Krylov space invariant. Continue with a fresh
+                // random direction orthogonal to the basis; the coupling
+                // to the old space is zero.
+                let mut fresh: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+                let nrm = mgs_orthonormalize(&mut fresh, &basis);
+                if nrm <= 1e-13 {
+                    // Whole space spanned (n ~ basis size): stop the cycle.
+                    cycle_len = j + 1;
+                    last_beta = 0.0;
+                    break;
+                }
+                w = fresh;
+                beta = 0.0;
+            }
+            if j + 1 < mb {
+                t.set(j + 1, j, beta);
+                t.set(j, j + 1, beta);
+            }
+            last_beta = beta;
+            basis.push(w);
+        }
+        let m = cycle_len;
+
+        // ---- Rayleigh-Ritz on the leading m x m block ----
+        let t_sub = DenseMatrix::from_fn(m, m, |i, j| t.get(i, j));
+        let (vals, z) = sym_eig(&t_sub)?; // ascending
+        let order: Vec<usize> = (0..m).rev().collect(); // descending
+
+        let kk = k.min(m);
+        let res = |i: usize| -> f64 { (last_beta * z.get(m - 1, order[i])).abs() };
+        let all_converged = m == n
+            || m < mb // breakdown cycle: space exhausted, results exact
+            || (0..kk).all(|i| res(i) <= opts.tol * vals[order[i]].abs().max(f64::EPSILON));
+
+        if all_converged || restarts >= opts.max_restarts {
+            if !all_converged {
+                return Err(Error::Numerical(format!(
+                    "lanczos: no convergence after {restarts} restarts ({matvecs} matvecs)"
+                )));
+            }
+            let mut eigenvalues = Vec::with_capacity(kk);
+            let mut eigenvectors = Vec::with_capacity(kk);
+            for i in 0..kk {
+                eigenvalues.push(vals[order[i]]);
+                eigenvectors.push(basis_times_col(&basis, &z, m, order[i], n));
+            }
+            return Ok(LanczosResult { eigenvalues, eigenvectors, matvecs, restarts });
+        }
+
+        // ---- Thick restart: keep the top `keep` Ritz pairs ----
+        restarts += 1;
+        let keep = (kk + (m - kk) / 2).min(m - 1);
+        let mut new_basis: Vec<Vec<f64>> = Vec::with_capacity(mb + 1);
+        for i in 0..keep {
+            new_basis.push(basis_times_col(&basis, &z, m, order[i], n));
+        }
+        // The residual direction (basis column m) seeds the new cycle.
+        new_basis.push(basis[m].clone());
+
+        let mut new_t = DenseMatrix::zeros(mb, mb);
+        for i in 0..keep {
+            new_t.set(i, i, vals[order[i]]);
+            let s = last_beta * z.get(m - 1, order[i]);
+            new_t.set(keep, i, s);
+            new_t.set(i, keep, s);
+        }
+        basis = new_basis;
+        t = new_t;
+        l = keep;
+    }
+}
+
+/// y = Σ_j basis[j] * z[j, col] over the first m basis vectors.
+fn basis_times_col(
+    basis: &[Vec<f64>],
+    z: &DenseMatrix,
+    m: usize,
+    col: usize,
+    n: usize,
+) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for j in 0..m {
+        blas1::axpy(z.get(j, col), &basis[j], &mut y);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arpack::{DenseSymOp, LocalGramOp};
+    use crate::linalg::symeig::sym_eig as dense_eig;
+    use crate::workload::Rng;
+
+    fn random_symmetric(seed: u64, n: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_signed();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn topk_matches_dense_eig() {
+        for n in [12, 30, 80] {
+            let a = random_symmetric(n as u64, n);
+            let (full_vals, _) = dense_eig(&a).unwrap();
+            let mut op = DenseSymOp { a: &a };
+            let k = 5.min(n);
+            let r = lanczos_topk(&mut op, k, &LanczosOptions::default()).unwrap();
+            for i in 0..k {
+                let want = full_vals[n - 1 - i];
+                assert!(
+                    (r.eigenvalues[i] - want).abs() < 1e-7 * (1.0 + want.abs()),
+                    "n={n} i={i}: {} vs {want}",
+                    r.eigenvalues[i]
+                );
+            }
+            // eigenvector residuals ||A y - theta y||
+            for i in 0..k {
+                let y = &r.eigenvectors[i];
+                let ay = a.matvec(y).unwrap();
+                let mut res = ay.clone();
+                blas1::axpy(-r.eigenvalues[i], y, &mut res);
+                assert!(blas1::nrm2(&res) < 1e-6, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn restart_path_is_exercised() {
+        // small basis forces restarts
+        let n = 60;
+        let a = random_symmetric(7, n);
+        let (full_vals, _) = dense_eig(&a).unwrap();
+        let mut op = DenseSymOp { a: &a };
+        let opts = LanczosOptions { max_basis: 12, ..Default::default() };
+        let r = lanczos_topk(&mut op, 4, &opts).unwrap();
+        assert!(r.restarts > 0, "expected restarts with tiny basis");
+        for i in 0..4 {
+            let want = full_vals[n - 1 - i];
+            assert!((r.eigenvalues[i] - want).abs() < 1e-7 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn gram_operator_gives_singular_values() {
+        let m = 120;
+        let n = 24;
+        let a = DenseMatrix::from_vec(m, n, crate::workload::random_matrix(3, m, n)).unwrap();
+        let mut op = LocalGramOp::new(&a);
+        let r = lanczos_topk(&mut op, 6, &LanczosOptions::default()).unwrap();
+        // reference: eigenvalues of dense AᵀA
+        let ata = crate::linalg::gemm::gemm_tn(&a, &a).unwrap();
+        let (vals, _) = dense_eig(&ata).unwrap();
+        for i in 0..6 {
+            let want = vals[n - 1 - i];
+            assert!((r.eigenvalues[i] - want).abs() < 1e-7 * (1.0 + want), "i={i}");
+        }
+        assert!(op.applications > 0);
+        assert_eq!(op.applications, r.matvecs);
+    }
+
+    #[test]
+    fn exact_when_k_equals_n() {
+        let n = 10;
+        let a = random_symmetric(5, n);
+        let (full_vals, _) = dense_eig(&a).unwrap();
+        let mut op = DenseSymOp { a: &a };
+        let r = lanczos_topk(&mut op, n, &LanczosOptions::default()).unwrap();
+        for i in 0..n {
+            assert!((r.eigenvalues[i] - full_vals[n - 1 - i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn low_rank_operator_breakdown_recovers() {
+        // rank-2 PSD matrix: Lanczos breaks down after 2 steps; top-3
+        // should come back as (lam1, lam2, ~0).
+        let n = 16;
+        let mut u1: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0).sin()).collect();
+        let mut u2: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+        blas1::normalize(&mut u1);
+        let p = blas1::dot(&u1, &u2);
+        blas1::axpy(-p, &u1, &mut u2);
+        blas1::normalize(&mut u2);
+        let a = DenseMatrix::from_fn(n, n, |i, j| 5.0 * u1[i] * u1[j] + 2.0 * u2[i] * u2[j]);
+        let mut op = DenseSymOp { a: &a };
+        let r = lanczos_topk(&mut op, 3, &LanczosOptions::default()).unwrap();
+        assert!((r.eigenvalues[0] - 5.0).abs() < 1e-8);
+        assert!((r.eigenvalues[1] - 2.0).abs() < 1e-8);
+        assert!(r.eigenvalues[2].abs() < 1e-8);
+    }
+
+    #[test]
+    fn invalid_k_rejected() {
+        let a = random_symmetric(1, 5);
+        let mut op = DenseSymOp { a: &a };
+        assert!(lanczos_topk(&mut op, 0, &LanczosOptions::default()).is_err());
+        assert!(lanczos_topk(&mut op, 6, &LanczosOptions::default()).is_err());
+    }
+}

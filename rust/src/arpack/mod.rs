@@ -1,0 +1,69 @@
+//! ARPACK substitute: thick-restart Lanczos for the top-k eigenpairs of a
+//! symmetric positive semi-definite operator, and the truncated SVD built
+//! on it.
+//!
+//! The paper's §4.2 experiment runs "our own MPI-based implementation of
+//! the truncated SVD using ARPACK and Elemental" on the Alchemist side and
+//! MLlib's `computeSVD` (also ARPACK on the Gram operator) on the Spark
+//! side. We mirror that exactly: [`lanczos::lanczos_topk`] is generic over
+//! [`SymOp`], and *both* sides of our bridge drive the same algorithm —
+//! the Alchemist path applies the operator with distributed panels and a
+//! ring all-reduce per iteration, the sparklet path applies it with a
+//! scheduled aggregation stage per iteration (which is precisely where
+//! Spark's overheads bite).
+
+pub mod lanczos;
+pub mod svd;
+
+use crate::Result;
+
+/// A symmetric linear operator w = Op(v).
+pub trait SymOp {
+    /// Operator dimension n.
+    fn dim(&self) -> usize;
+    /// Apply the operator. Must be symmetric PSD for the SVD use.
+    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>>;
+}
+
+/// Dense symmetric matrix as an operator (tests / small problems).
+pub struct DenseSymOp<'a> {
+    pub a: &'a crate::linalg::DenseMatrix,
+}
+
+impl SymOp for DenseSymOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>> {
+        self.a.matvec(v)
+    }
+}
+
+/// Gram operator AᵀA of a local dense matrix.
+pub struct LocalGramOp<'a> {
+    pub a: &'a crate::linalg::DenseMatrix,
+    /// matvec counter (benches/tests assert on iteration economy).
+    pub applications: usize,
+}
+
+impl<'a> LocalGramOp<'a> {
+    pub fn new(a: &'a crate::linalg::DenseMatrix) -> Self {
+        LocalGramOp { a, applications: 0 }
+    }
+}
+
+impl SymOp for LocalGramOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>> {
+        self.applications += 1;
+        let t = self.a.matvec(v)?;
+        self.a.matvec_t(&t)
+    }
+}
+
+pub use lanczos::{lanczos_topk, LanczosOptions, LanczosResult};
+pub use svd::{truncated_svd_local, TsvdResult};

@@ -1,0 +1,277 @@
+//! Bench & property-test harness (offline substitutes for criterion and
+//! proptest — see Cargo.toml note).
+//!
+//! * [`harness`] — calibrated micro-benchmarks with mean/σ/min reporting
+//!   and paper-style table printing;
+//! * [`prop`] — seeded randomized property checks with failure-seed
+//!   reporting (rerun any failure deterministically with the printed
+//!   seed).
+
+pub mod harness {
+    use crate::metrics::Timer;
+
+    /// Summary statistics for one benchmark.
+    #[derive(Debug, Clone)]
+    pub struct Stats {
+        pub name: String,
+        pub iters: usize,
+        pub mean_s: f64,
+        pub std_s: f64,
+        pub min_s: f64,
+    }
+
+    impl Stats {
+        pub fn report(&self) -> String {
+            format!(
+                "{:<40} {:>10} it  mean {:>12}  σ {:>12}  min {:>12}",
+                self.name,
+                self.iters,
+                fmt_secs(self.mean_s),
+                fmt_secs(self.std_s),
+                fmt_secs(self.min_s)
+            )
+        }
+    }
+
+    pub fn fmt_secs(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.3} us", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    }
+
+    /// Run `f` repeatedly: calibrate the iteration count to roughly
+    /// `target_secs` of wall time (min 3 iterations), then measure.
+    pub fn bench(name: &str, target_secs: f64, mut f: impl FnMut()) -> Stats {
+        // calibration run
+        let t = Timer::start();
+        f();
+        let once = t.elapsed_secs().max(1e-9);
+        let iters = ((target_secs / once) as usize).clamp(3, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed_secs());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / samples.len() as f64;
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let s = Stats {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: min,
+        };
+        println!("{}", s.report());
+        s
+    }
+
+    /// Fixed-width table printer for the paper-replica benches.
+    pub struct Table {
+        headers: Vec<String>,
+        widths: Vec<usize>,
+        rows: Vec<Vec<String>>,
+    }
+
+    impl Table {
+        pub fn new(headers: &[&str]) -> Table {
+            Table {
+                headers: headers.iter().map(|s| s.to_string()).collect(),
+                widths: headers.iter().map(|s| s.len()).collect(),
+                rows: vec![],
+            }
+        }
+
+        pub fn row(&mut self, cells: Vec<String>) {
+            for (i, c) in cells.iter().enumerate() {
+                if i < self.widths.len() {
+                    self.widths[i] = self.widths[i].max(c.len());
+                }
+            }
+            self.rows.push(cells);
+        }
+
+        pub fn print(&self) {
+            let line = |cells: &[String], widths: &[usize]| {
+                let mut out = String::new();
+                for (i, c) in cells.iter().enumerate() {
+                    let w = widths.get(i).copied().unwrap_or(8);
+                    out.push_str(&format!("| {c:>w$} "));
+                }
+                out.push('|');
+                out
+            };
+            let header = line(&self.headers, &self.widths);
+            println!("{header}");
+            println!("{}", "-".repeat(header.len()));
+            for r in &self.rows {
+                println!("{}", line(r, &self.widths));
+            }
+        }
+    }
+}
+
+/// Transfer-grid runner shared by the Table 2 / Table 3 benches: time the
+/// executor-parallel send of a rows x cols matrix for every
+/// (#client nodes, #alchemist nodes) pair in the paper's grid (<= 64
+/// total), printing the same matrix of seconds the paper tabulates.
+pub fn run_transfer_grid(label: &str, rows: u64, cols: u64, base: &crate::config::Config) {
+    use crate::client::AlchemistContext;
+    use crate::metrics::Timer;
+    use crate::server::start_server;
+    use crate::sparklet::{IndexedRowMatrix, SparkletContext};
+    use crate::workload::geometries::NODE_GRID;
+
+    println!(
+        "=== {label}: {rows} x {cols} (~{:.0} MB) transfer, grid of nodes ===\n",
+        (rows * cols * 8) as f64 / 1e6
+    );
+    let mut headers: Vec<String> = vec!["#spark \\ #alch".into()];
+    headers.extend(NODE_GRID.iter().map(|a| a.to_string()));
+    let mut table = harness::Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    for &s_nodes in NODE_GRID.iter() {
+        let mut cells = vec![s_nodes.to_string()];
+        for &a_nodes in NODE_GRID.iter() {
+            if s_nodes + a_nodes > 64 {
+                cells.push(String::new());
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.server.workers = a_nodes;
+            cfg.server.gemm_backend = "native".into(); // transfer-only bench
+            cfg.sparklet.executors = s_nodes;
+            cfg.sparklet.default_parallelism = s_nodes;
+            cfg.sparklet.executor_mem_mb = 4096;
+            cfg.sparklet.task_overhead_us = 0;
+            let reps = base.bench.reps.max(1);
+            let mut total = 0.0;
+            for rep in 0..reps {
+                let server = start_server(&cfg).expect("server");
+                let sc = SparkletContext::new(&cfg.sparklet).expect("sparklet");
+                let a =
+                    IndexedRowMatrix::random(&sc, 40 + rep as u64, rows, cols, s_nodes, None)
+                        .expect("gen");
+                let mut ac =
+                    AlchemistContext::connect(&server.driver_addr, "transfer").expect("connect");
+                // Paper behaviour: rows are transmitted one per message
+                // (§2.1/§4.3) — this is what creates the tall-vs-wide
+                // contrast. `ablate_framing` quantifies the batched fix.
+                ac.batch_rows = 1;
+                ac.request_workers(a_nodes).expect("workers");
+                let t = Timer::start();
+                let al = a.to_alchemist(&sc, &ac).expect("send");
+                total += t.elapsed_secs();
+                assert_eq!(al.rows(), rows);
+                ac.stop().ok();
+                sc.shutdown();
+                server.shutdown();
+            }
+            cells.push(format!("{:.2}", total / reps as f64));
+        }
+        table.row(cells);
+    }
+    table.print();
+}
+
+/// Shared bench plumbing: every paper-table bench accepts the standard
+/// `--set section.key=value` overrides after `--`
+/// (`cargo bench --bench table1_matmul -- --set bench.reps=1`).
+pub fn bench_config() -> crate::config::Config {
+    let args: Vec<String> = std::env::args().collect();
+    let overrides: Vec<String> = args
+        .windows(2)
+        .filter(|w| w[0] == "--set")
+        .map(|w| w[1].clone())
+        .collect();
+    match crate::config::Config::resolve(None, &overrides) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench config error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+pub mod prop {
+    use crate::workload::Rng;
+
+    /// Run `cases` randomized checks. `f` gets a seeded RNG per case and
+    /// returns `Err(description)` to fail. On failure the case seed is
+    /// printed so the exact case can be replayed.
+    pub fn check(name: &str, cases: u64, f: impl Fn(&mut Rng) -> Result<(), String>) {
+        let base = match std::env::var("ALCHEMIST_PROP_SEED") {
+            Ok(v) => v.parse().unwrap_or(0xA1C4E0),
+            Err(_) => 0xA1C4E0,
+        };
+        for case in 0..cases {
+            let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\n\
+                     rerun with ALCHEMIST_PROP_SEED={base} to reproduce"
+                );
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn int_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+        lo + rng.next_range(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = harness::bench("noop", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(harness::fmt_secs(2.0).ends_with(" s"));
+        assert!(harness::fmt_secs(2e-3).ends_with(" ms"));
+        assert!(harness::fmt_secs(2e-6).ends_with(" us"));
+        assert!(harness::fmt_secs(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn prop_check_passes_and_fails() {
+        prop::check("trivial", 10, |_| Ok(()));
+        let r = std::panic::catch_unwind(|| {
+            prop::check("failing", 5, |rng| {
+                if rng.next_f64() >= 0.0 {
+                    Err("always".into())
+                } else {
+                    Ok(())
+                }
+            })
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn int_in_bounds() {
+        let mut rng = crate::workload::Rng::new(1);
+        for _ in 0..100 {
+            let v = prop::int_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+}

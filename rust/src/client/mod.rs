@@ -1,0 +1,284 @@
+//! Alchemist-Client Interface (ACI) — what a client application imports
+//! (paper §3.3): `AlchemistContext` for the driver connection and
+//! session lifecycle, `AlMatrix` handles for Alchemist-resident matrices,
+//! and row-wise matrix transfer over data-plane sockets.
+//!
+//! Phase timing: every context records cumulative `send` / `compute` /
+//! `receive` durations (the decomposition the paper reports in Table 1 and
+//! Fig 3) in [`AlchemistContext::phases`].
+
+pub mod transfer;
+pub mod wrappers;
+
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+
+use crate::linalg::DenseMatrix;
+use crate::metrics::{PhaseTimes, Timer};
+use crate::protocol::{
+    frame, ClientMsg, DataMsg, DriverMsg, LayoutKind, MatrixMeta, Params, WorkerInfo,
+    PROTOCOL_VERSION,
+};
+use crate::{Error, Result};
+
+/// Handle to a matrix resident on the Alchemist side (paper §3.3: "matrix
+/// handles in the form of AlMatrix objects, which act as proxies for the
+/// distributed data sets stored on Alchemist").
+#[derive(Debug, Clone)]
+pub struct AlMatrix {
+    pub meta: MatrixMeta,
+}
+
+impl AlMatrix {
+    pub fn handle(&self) -> u64 {
+        self.meta.handle
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.meta.rows
+    }
+
+    pub fn cols(&self) -> u64 {
+        self.meta.cols
+    }
+}
+
+/// The client context: one control connection to the Alchemist driver.
+pub struct AlchemistContext {
+    ctl: Mutex<TcpStream>,
+    pub session_id: u64,
+    workers: Vec<WorkerInfo>,
+    /// Rows per data-plane frame (paper behaviour = 1; see ablate_framing).
+    pub batch_rows: usize,
+    /// Cumulative send/compute/receive phase times.
+    pub phases: PhaseTimes,
+    nodelay: bool,
+}
+
+impl AlchemistContext {
+    /// Connect + handshake (§3.2 step 2).
+    pub fn connect(driver_addr: &str, app_name: &str) -> Result<AlchemistContext> {
+        let mut conn = TcpStream::connect(driver_addr)?;
+        conn.set_nodelay(true)?;
+        frame::write_frame(
+            &mut conn,
+            &ClientMsg::Handshake { app_name: app_name.into(), version: PROTOCOL_VERSION }
+                .encode(),
+        )?;
+        let reply = DriverMsg::decode(&frame::read_frame(&mut conn)?)?.into_result()?;
+        let DriverMsg::HandshakeAck { session_id, .. } = reply else {
+            return Err(Error::Protocol(format!("unexpected handshake reply {reply:?}")));
+        };
+        Ok(AlchemistContext {
+            ctl: Mutex::new(conn),
+            session_id,
+            workers: vec![],
+            batch_rows: 256,
+            phases: PhaseTimes::new(),
+            nodelay: true,
+        })
+    }
+
+    fn call(&self, msg: &ClientMsg) -> Result<DriverMsg> {
+        let mut s = self.ctl.lock().unwrap();
+        frame::write_frame(&mut *s, &msg.encode())?;
+        DriverMsg::decode(&frame::read_frame(&mut *s)?)?.into_result()
+    }
+
+    /// Request a worker group (§3.2 step 3).
+    pub fn request_workers(&mut self, count: u32) -> Result<&[WorkerInfo]> {
+        match self.call(&ClientMsg::RequestWorkers { count })? {
+            DriverMsg::WorkersGranted { workers } => {
+                self.workers = workers;
+                Ok(&self.workers)
+            }
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    pub fn workers(&self) -> &[WorkerInfo] {
+        &self.workers
+    }
+
+    /// Register an MPI-library wrapper by name/path (§3.3).
+    pub fn register_library(&self, name: &str, path: &str) -> Result<()> {
+        match self.call(&ClientMsg::RegisterLibrary { name: name.into(), path: path.into() })? {
+            DriverMsg::LibraryRegistered { .. } => Ok(()),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Allocate an empty distributed matrix for a subsequent row transfer.
+    pub fn create_matrix(&self, rows: u64, cols: u64, kind: LayoutKind) -> Result<AlMatrix> {
+        match self.call(&ClientMsg::CreateMatrix { rows, cols, kind })? {
+            DriverMsg::MatrixCreated { meta } => Ok(AlMatrix { meta }),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    fn worker_info(&self, id: u32) -> Result<&WorkerInfo> {
+        self.workers
+            .iter()
+            .find(|w| w.id == id)
+            .ok_or_else(|| Error::Server(format!("worker {id} not in session grant")))
+    }
+
+    /// Send rows to the owning workers (callable concurrently from many
+    /// threads with disjoint row sets — our stand-in for parallel Spark
+    /// executors each pushing their partitions). Rows are routed by the
+    /// matrix layout and batched `batch_rows` per frame.
+    pub fn put_rows(
+        &self,
+        m: &AlMatrix,
+        rows: impl Iterator<Item = (u64, Vec<f64>)>,
+    ) -> Result<()> {
+        let t = Timer::start();
+        transfer::push_rows(&self.workers, &m.meta, rows, self.batch_rows, self.nodelay)?;
+        self.phases.add("send", t.elapsed());
+        Ok(())
+    }
+
+    /// Finish a transfer: ask every owner to confirm receipt; errors if
+    /// the counts don't add up to the full matrix.
+    pub fn finish_put(&self, m: &AlMatrix) -> Result<u64> {
+        let t = Timer::start();
+        let mut total = 0u64;
+        for &id in &m.meta.layout.owners {
+            let info = self.worker_info(id)?;
+            let mut s = TcpStream::connect(&info.data_addr)?;
+            s.set_nodelay(true)?;
+            frame::write_frame(&mut s, &DataMsg::PutDone { handle: m.meta.handle }.encode())?;
+            match DataMsg::decode(&frame::read_frame(&mut s)?)? {
+                DataMsg::PutComplete { rows_received, .. } => total += rows_received,
+                DataMsg::Err { message } => return Err(Error::Server(message)),
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+        self.phases.add("send", t.elapsed());
+        if total != m.meta.rows {
+            return Err(Error::Server(format!(
+                "transfer incomplete: {total}/{} rows received",
+                m.meta.rows
+            )));
+        }
+        Ok(total)
+    }
+
+    /// Convenience: send a local dense matrix (single-threaded).
+    pub fn send_dense(&self, a: &DenseMatrix, kind: LayoutKind) -> Result<AlMatrix> {
+        let m = self.create_matrix(a.rows() as u64, a.cols() as u64, kind)?;
+        self.put_rows(&m, (0..a.rows()).map(|i| (i as u64, a.row(i).to_vec())))?;
+        self.finish_put(&m)?;
+        Ok(m)
+    }
+
+    /// Invoke `library.routine(params)` (§3.3 `ac.run`). Returns scalar
+    /// outputs and an `AlMatrix` per distributed output.
+    pub fn run(
+        &self,
+        library: &str,
+        routine: &str,
+        params: Params,
+    ) -> Result<(Params, Vec<AlMatrix>)> {
+        let t = Timer::start();
+        let reply = self.call(&ClientMsg::RunRoutine {
+            library: library.into(),
+            routine: routine.into(),
+            params,
+        })?;
+        self.phases.add("compute", t.elapsed());
+        match reply {
+            DriverMsg::RoutineResult { outputs, new_matrices } => Ok((
+                outputs,
+                new_matrices.into_iter().map(|meta| AlMatrix { meta }).collect(),
+            )),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Materialize an Alchemist matrix back into client memory — the
+    /// explicit AlMatrix -> local conversion of §3.3 ("Only when the user
+    /// explicitly converts this object ... will the data be sent").
+    /// Fetches from all owner workers in parallel (one thread per worker
+    /// stream — §Perf: the serial fetch was the receive-phase bottleneck).
+    pub fn fetch_dense(&self, m: &AlMatrix) -> Result<DenseMatrix> {
+        let t = Timer::start();
+        let cols = m.meta.cols as usize;
+        let mut out = DenseMatrix::zeros(m.meta.rows as usize, cols);
+        let handle = m.meta.handle;
+        let rows = m.meta.rows;
+
+        let fetch_one = |data_addr: String| -> Result<Vec<(u64, Vec<f64>)>> {
+            let mut s = TcpStream::connect(&data_addr)?;
+            s.set_nodelay(true)?;
+            frame::write_frame(&mut s, &DataMsg::GetRows { handle, start: 0, end: rows }.encode())?;
+            let mut got = Vec::new();
+            loop {
+                match DataMsg::decode(&frame::read_frame(&mut s)?)? {
+                    DataMsg::RowBatch { rows: batch, .. } => {
+                        for row in batch {
+                            if row.values.len() != cols {
+                                return Err(Error::Shape("fetched row width mismatch".into()));
+                            }
+                            got.push((row.index, row.values));
+                        }
+                    }
+                    DataMsg::GetDone { .. } => return Ok(got),
+                    DataMsg::Err { message } => return Err(Error::Server(message)),
+                    other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+                }
+            }
+        };
+
+        let mut seen = 0u64;
+        let results: Vec<Result<Vec<(u64, Vec<f64>)>>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for &id in &m.meta.layout.owners {
+                let addr = self.worker_info(id).map(|w| w.data_addr.clone());
+                handles.push(scope.spawn(move || fetch_one(addr?)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(Error::Server("fetch panicked".into()))))
+                .collect()
+        });
+        for r in results {
+            for (index, values) in r? {
+                out.row_mut(index as usize).copy_from_slice(&values);
+                seen += 1;
+            }
+        }
+        self.phases.add("receive", t.elapsed());
+        if seen != m.meta.rows {
+            return Err(Error::Server(format!("fetched {seen}/{} rows", m.meta.rows)));
+        }
+        Ok(out)
+    }
+
+    /// Release an Alchemist-side matrix.
+    pub fn release(&self, m: AlMatrix) -> Result<()> {
+        match self.call(&ClientMsg::ReleaseMatrix { handle: m.meta.handle })? {
+            DriverMsg::Released { .. } => Ok(()),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Server-wide pool status: (total workers, free workers, sessions).
+    pub fn server_status(&self) -> Result<(u32, u32, u32)> {
+        match self.call(&ClientMsg::ServerStatus)? {
+            DriverMsg::Status { total_workers, free_workers, sessions } => {
+                Ok((total_workers, free_workers, sessions))
+            }
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Close the session (§3.3 `ac.stop()`).
+    pub fn stop(self) -> Result<()> {
+        match self.call(&ClientMsg::Stop)? {
+            DriverMsg::Stopped => Ok(()),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+}

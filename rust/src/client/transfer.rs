@@ -1,0 +1,121 @@
+//! Standalone data-plane transfer helpers, shared by the driver-side ACI
+//! (`AlchemistContext`) and sparklet *executors* — in the paper, each
+//! Spark executor pushes its own partitions to the Alchemist workers
+//! directly, so the routing/batching logic must be callable from any
+//! thread holding only the worker address table and the matrix metadata.
+
+use std::net::TcpStream;
+
+use crate::elemental::Layout;
+use crate::protocol::{frame, DataMsg, MatrixMeta, WireRow, WorkerInfo};
+use crate::{Error, Result};
+
+/// Route and push a set of rows to the owning Alchemist workers.
+/// `workers` must contain an entry for every owner id in `meta`.
+/// Returns (rows_sent, frames_sent).
+pub fn push_rows(
+    workers: &[WorkerInfo],
+    meta: &MatrixMeta,
+    rows: impl Iterator<Item = (u64, Vec<f64>)>,
+    batch_rows: usize,
+    nodelay: bool,
+) -> Result<(u64, u64)> {
+    let layout = Layout::from_desc(&meta.layout, meta.rows)?;
+    let owners = &meta.layout.owners;
+    let mut conns: Vec<Option<TcpStream>> = (0..owners.len()).map(|_| None).collect();
+    let mut batches: Vec<Vec<WireRow>> = (0..owners.len()).map(|_| Vec::new()).collect();
+    let mut rows_sent = 0u64;
+    let mut frames_sent = 0u64;
+
+    let flush = |conns: &mut Vec<Option<TcpStream>>,
+                     batch: Vec<WireRow>,
+                     slot: usize|
+     -> Result<u64> {
+        if batch.is_empty() {
+            return Ok(0);
+        }
+        if conns[slot].is_none() {
+            let info = workers
+                .iter()
+                .find(|w| w.id == owners[slot])
+                .ok_or_else(|| Error::Server(format!("no address for worker {}", owners[slot])))?;
+            let s = TcpStream::connect(&info.data_addr)?;
+            if nodelay {
+                s.set_nodelay(true)?;
+            }
+            conns[slot] = Some(s);
+        }
+        let msg = DataMsg::PutRows { handle: meta.handle, rows: batch };
+        frame::write_frame(conns[slot].as_mut().unwrap(), &msg.encode())?;
+        Ok(1)
+    };
+
+    for (index, values) in rows {
+        if index >= meta.rows {
+            return Err(Error::Shape(format!("row {index} out of range ({} rows)", meta.rows)));
+        }
+        let slot = layout.owner_slot(index) as usize;
+        batches[slot].push(WireRow { index, values });
+        rows_sent += 1;
+        if batches[slot].len() >= batch_rows.max(1) {
+            let b = std::mem::take(&mut batches[slot]);
+            frames_sent += flush(&mut conns, b, slot)?;
+        }
+    }
+    for slot in 0..owners.len() {
+        let b = std::mem::take(&mut batches[slot]);
+        frames_sent += flush(&mut conns, b, slot)?;
+    }
+    // Per-connection completion barrier: a worker processes frames on one
+    // connection in order, so acking a PutDone here guarantees every row
+    // this call sent has been stored before we return. Without this, a
+    // subsequent `finish_put` on a *fresh* connection could overtake
+    // in-flight rows (TCP orders within, not across, connections).
+    for conn in conns.iter_mut().flatten() {
+        frame::write_frame(conn, &DataMsg::PutDone { handle: meta.handle }.encode())?;
+        match DataMsg::decode(&frame::read_frame(conn)?)? {
+            DataMsg::PutComplete { .. } => {}
+            DataMsg::Err { message } => return Err(Error::Server(message)),
+            other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+    Ok((rows_sent, frames_sent))
+}
+
+/// Fetch rows `[start, end)` of an Alchemist matrix, calling `sink` for
+/// each row received (rows arrive per-owner, unordered across owners).
+pub fn fetch_rows(
+    workers: &[WorkerInfo],
+    meta: &MatrixMeta,
+    start: u64,
+    end: u64,
+    mut sink: impl FnMut(u64, Vec<f64>) -> Result<()>,
+) -> Result<u64> {
+    let mut seen = 0u64;
+    for &id in &meta.layout.owners {
+        let info = workers
+            .iter()
+            .find(|w| w.id == id)
+            .ok_or_else(|| Error::Server(format!("no address for worker {id}")))?;
+        let mut s = TcpStream::connect(&info.data_addr)?;
+        s.set_nodelay(true)?;
+        frame::write_frame(
+            &mut s,
+            &DataMsg::GetRows { handle: meta.handle, start, end }.encode(),
+        )?;
+        loop {
+            match DataMsg::decode(&frame::read_frame(&mut s)?)? {
+                DataMsg::RowBatch { rows, .. } => {
+                    for row in rows {
+                        sink(row.index, row.values)?;
+                        seen += 1;
+                    }
+                }
+                DataMsg::GetDone { .. } => break,
+                DataMsg::Err { message } => return Err(Error::Server(message)),
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+    }
+    Ok(seen)
+}

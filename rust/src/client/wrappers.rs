@@ -1,0 +1,118 @@
+//! Library wrappers (paper §3.4): thin, MLlib-shaped sugar over `ac.run`
+//! so application code reads like `CondEst(alA)` instead of raw
+//! (library, routine, params) triples.
+
+use crate::ali::params::ParamsBuilder;
+use crate::client::{AlMatrix, AlchemistContext};
+use crate::{Error, Result};
+
+/// Register the builtin ElemLib under its conventional name.
+pub fn register_elemlib(ac: &AlchemistContext) -> Result<()> {
+    ac.register_library("elemlib", "builtin:elemlib")
+}
+
+/// `C = A · B` — the paper's §4.1 operation.
+pub fn gemm(ac: &AlchemistContext, a: &AlMatrix, b: &AlMatrix) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).matrix("B", b.handle()).build();
+    let (_, mut mats) = ac.run("elemlib", "gemm", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("gemm returned no matrix".into()))
+}
+
+/// Truncated SVD result handles (all still resident on Alchemist).
+pub struct TsvdHandles {
+    pub u: AlMatrix,
+    pub s: AlMatrix,
+    pub v: AlMatrix,
+    /// Gram-operator applications performed by the Lanczos solver.
+    pub matvecs: i64,
+}
+
+/// Rank-k truncated SVD — the paper's §4.2 operation (MLlib
+/// `computeSVD`-shaped).
+pub fn truncated_svd(ac: &AlchemistContext, a: &AlMatrix, k: usize) -> Result<TsvdHandles> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).i64("k", k as i64).build();
+    let (outputs, mats) = ac.run("elemlib", "truncated_svd", params)?;
+    if mats.len() != 3 {
+        return Err(Error::Ali(format!("truncated_svd returned {} matrices", mats.len())));
+    }
+    let mut it = mats.into_iter();
+    let matvecs = outputs
+        .iter()
+        .find(|(k, _)| k == "matvecs")
+        .and_then(|(_, v)| v.as_i64().ok())
+        .unwrap_or(0);
+    Ok(TsvdHandles {
+        u: it.next().unwrap(),
+        s: it.next().unwrap(),
+        v: it.next().unwrap(),
+        matvecs,
+    })
+}
+
+/// Condition-number estimate — the paper's §3.4 `CondEst` example.
+pub fn cond_est(ac: &AlchemistContext, a: &AlMatrix) -> Result<f64> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    let (outputs, _) = ac.run("elemlib", "condest", params)?;
+    outputs
+        .iter()
+        .find(|(k, _)| k == "condest")
+        .map(|(_, v)| v.as_f64())
+        .transpose()?
+        .ok_or_else(|| Error::Ali("condest returned no value".into()))
+}
+
+/// B = Aᵀ, distributed.
+pub fn transpose(ac: &AlchemistContext, a: &AlMatrix) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    let (_, mut mats) = ac.run("elemlib", "transpose", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("transpose returned no matrix".into()))
+}
+
+/// G = AᵀA (MLlib `computeGramianMatrix` analogue).
+pub fn gramian(ac: &AlchemistContext, a: &AlMatrix) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    let (_, mut mats) = ac.run("elemlib", "gramian", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("gramian returned no matrix".into()))
+}
+
+/// Column means/stddevs as an n x 2 matrix.
+pub fn col_stats(ac: &AlchemistContext, a: &AlMatrix) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    let (_, mut mats) = ac.run("elemlib", "col_stats", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("col_stats returned no matrix".into()))
+}
+
+/// Least squares min ‖Ax − y‖ via distributed normal equations;
+/// returns (x handle, residual norm).
+pub fn lstsq(
+    ac: &AlchemistContext,
+    a: &AlMatrix,
+    y: &AlMatrix,
+    ridge: f64,
+) -> Result<(AlMatrix, f64)> {
+    let params = ParamsBuilder::new()
+        .matrix("A", a.handle())
+        .matrix("y", y.handle())
+        .f64("ridge", ridge)
+        .build();
+    let (outputs, mut mats) = ac.run("elemlib", "lstsq", params)?;
+    let x = mats.pop().ok_or_else(|| Error::Ali("lstsq returned no matrix".into()))?;
+    let residual = outputs
+        .iter()
+        .find(|(k, _)| k == "residual")
+        .and_then(|(_, v)| v.as_f64().ok())
+        .unwrap_or(f64::NAN);
+    Ok((x, residual))
+}
+
+/// Frobenius norm of an Alchemist-resident matrix.
+pub fn fro_norm(ac: &AlchemistContext, a: &AlMatrix) -> Result<f64> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    let (outputs, _) = ac.run("elemlib", "fro_norm", params)?;
+    outputs
+        .iter()
+        .find(|(k, _)| k == "fro_norm")
+        .map(|(_, v)| v.as_f64())
+        .transpose()?
+        .ok_or_else(|| Error::Ali("fro_norm returned no value".into()))
+}

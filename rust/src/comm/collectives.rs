@@ -1,0 +1,302 @@
+//! Collective operations over a [`super::Mesh`].
+//!
+//! The distributed-GEMM and Lanczos paths only need a handful of MPI
+//! collectives; we provide both a naive (root-funneled) and a ring
+//! implementation of all-reduce — `ablate_collectives` measures the gap,
+//! and the ring version is what the hot path uses (bandwidth-optimal for
+//! the n-vector all-reduces each Lanczos iteration performs).
+
+use super::Mesh;
+use crate::linalg::blas1;
+use crate::Result;
+
+/// Which all-reduce algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// gather-to-0, reduce, broadcast. 2 rounds, root is the bottleneck.
+    Naive,
+    /// reduce-scatter + all-gather ring. 2(p-1) steps, each n/p sized.
+    Ring,
+}
+
+/// Barrier: everyone checks in with rank 0, rank 0 releases everyone.
+pub fn barrier(mesh: &mut Mesh) -> Result<()> {
+    if mesh.size() == 1 {
+        return Ok(());
+    }
+    if mesh.rank() == 0 {
+        for r in 1..mesh.size() {
+            mesh.recv(r)?;
+        }
+        for r in 1..mesh.size() {
+            mesh.send(r, &[])?;
+        }
+    } else {
+        mesh.send(0, &[])?;
+        mesh.recv(0)?;
+    }
+    Ok(())
+}
+
+/// Broadcast `data` from `root` to every rank (binomial-tree).
+pub fn broadcast(mesh: &mut Mesh, root: usize, data: &mut Vec<f64>) -> Result<()> {
+    let p = mesh.size();
+    if p == 1 {
+        return Ok(());
+    }
+    // Re-index so root is virtual rank 0.
+    let vrank = (mesh.rank() + p - root) % p;
+    let mut mask = 1usize;
+    // Receive phase: find our parent.
+    while mask < p {
+        if vrank & mask != 0 {
+            let parent = (vrank - mask + root) % p;
+            *data = mesh.recv_f64s(parent)?;
+            break;
+        }
+        mask <<= 1;
+    }
+    // Send phase: forward to children below our lowest set bit.
+    let mut child_mask = if vrank == 0 { largest_pow2_below(p) } else { mask >> 1 };
+    while child_mask > 0 {
+        let vchild = vrank | child_mask;
+        if vchild < p && vchild != vrank {
+            let child = (vchild + root) % p;
+            mesh.send_f64s(child, data)?;
+        }
+        child_mask >>= 1;
+    }
+    Ok(())
+}
+
+fn largest_pow2_below(p: usize) -> usize {
+    let mut m = 1;
+    while m * 2 < p {
+        m *= 2;
+    }
+    m
+}
+
+/// Gather per-rank vectors to `root`. Returns `Some(vec of per-rank data)`
+/// on the root, `None` elsewhere.
+pub fn gather(mesh: &mut Mesh, root: usize, data: &[f64]) -> Result<Option<Vec<Vec<f64>>>> {
+    if mesh.rank() == root {
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); mesh.size()];
+        out[root] = data.to_vec();
+        for r in 0..mesh.size() {
+            if r != root {
+                out[r] = mesh.recv_f64s(r)?;
+            }
+        }
+        Ok(Some(out))
+    } else {
+        mesh.send_f64s(root, data)?;
+        Ok(None)
+    }
+}
+
+/// All-gather: every rank ends with every rank's vector (ring pass).
+pub fn allgather(mesh: &mut Mesh, data: &[f64]) -> Result<Vec<Vec<f64>>> {
+    let p = mesh.size();
+    let mut out: Vec<Vec<f64>> = vec![Vec::new(); p];
+    out[mesh.rank()] = data.to_vec();
+    if p == 1 {
+        return Ok(out);
+    }
+    let next = (mesh.rank() + 1) % p;
+    let prev = (mesh.rank() + p - 1) % p;
+    // p-1 ring steps; at step s we forward the block that originated at
+    // rank (rank - s).
+    for s in 0..p - 1 {
+        let send_origin = (mesh.rank() + p - s) % p;
+        let recv_origin = (prev + p - s) % p;
+        // Deadlock-safe ordering: even ranks send first. With p >= 2 and a
+        // ring, this alternation always pairs a sender with a receiver.
+        if mesh.rank() % 2 == 0 {
+            let buf = out[send_origin].clone();
+            mesh.send_f64s(next, &buf)?;
+            out[recv_origin] = mesh.recv_f64s(prev)?;
+        } else {
+            out[recv_origin] = mesh.recv_f64s(prev)?;
+            let buf = out[send_origin].clone();
+            mesh.send_f64s(next, &buf)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Sum-reduce to root. Returns the reduced vector on root, `None` elsewhere.
+pub fn reduce_sum(mesh: &mut Mesh, root: usize, data: &[f64]) -> Result<Option<Vec<f64>>> {
+    match gather(mesh, root, data)? {
+        Some(parts) => {
+            let mut acc = vec![0.0; data.len()];
+            for part in parts {
+                blas1::axpy(1.0, &part, &mut acc);
+            }
+            Ok(Some(acc))
+        }
+        None => Ok(None),
+    }
+}
+
+/// All-reduce (sum) with the selected algorithm. `data` is reduced in place.
+pub fn allreduce_sum(mesh: &mut Mesh, data: &mut Vec<f64>, algo: AllReduceAlgo) -> Result<()> {
+    if mesh.size() == 1 {
+        return Ok(());
+    }
+    match algo {
+        AllReduceAlgo::Naive => {
+            let reduced = reduce_sum(mesh, 0, data)?;
+            let mut buf = reduced.unwrap_or_default();
+            broadcast(mesh, 0, &mut buf)?;
+            *data = buf;
+            Ok(())
+        }
+        AllReduceAlgo::Ring => ring_allreduce(mesh, data),
+    }
+}
+
+/// Bandwidth-optimal ring all-reduce: reduce-scatter then all-gather, with
+/// the vector split into `p` chunks.
+fn ring_allreduce(mesh: &mut Mesh, data: &mut [f64]) -> Result<()> {
+    let p = mesh.size();
+    let rank = mesh.rank();
+    let n = data.len();
+    let chunk = (n + p - 1) / p;
+    let bounds =
+        |c: usize| -> (usize, usize) { ((c * chunk).min(n), ((c + 1) * chunk).min(n)) };
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+
+    // Phase 1: reduce-scatter. After p-1 steps, rank r owns the fully
+    // reduced chunk (r + 1) % p.
+    for s in 0..p - 1 {
+        let send_c = (rank + p - s) % p;
+        let recv_c = (prev + p - s) % p;
+        let (s0, s1) = bounds(send_c);
+        let (r0, r1) = bounds(recv_c);
+        if rank % 2 == 0 {
+            let buf = data[s0..s1].to_vec();
+            mesh.send_f64s(next, &buf)?;
+            let got = mesh.recv_f64s(prev)?;
+            blas1::axpy(1.0, &got, &mut data[r0..r1]);
+        } else {
+            let got = mesh.recv_f64s(prev)?;
+            let buf = data[s0..s1].to_vec();
+            mesh.send_f64s(next, &buf)?;
+            blas1::axpy(1.0, &got, &mut data[r0..r1]);
+        }
+    }
+
+    // Phase 2: all-gather the reduced chunks around the ring.
+    for s in 0..p - 1 {
+        let send_c = (rank + 1 + p - s) % p;
+        let recv_c = (rank + p - s) % p;
+        let (s0, s1) = bounds(send_c);
+        let (r0, r1) = bounds(recv_c);
+        if rank % 2 == 0 {
+            let buf = data[s0..s1].to_vec();
+            mesh.send_f64s(next, &buf)?;
+            let got = mesh.recv_f64s(prev)?;
+            data[r0..r1].copy_from_slice(&got);
+        } else {
+            let got = mesh.recv_f64s(prev)?;
+            let buf = data[s0..s1].to_vec();
+            mesh.send_f64s(next, &buf)?;
+            data[r0..r1].copy_from_slice(&got);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_mesh;
+
+    #[test]
+    fn barrier_completes() {
+        run_mesh(5, |mut mesh| barrier(&mut mesh)).unwrap();
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..4 {
+            let results = run_mesh(4, move |mut mesh| {
+                let mut data = if mesh.rank() == root {
+                    vec![1.0, 2.0, 3.0, root as f64]
+                } else {
+                    vec![]
+                };
+                broadcast(&mut mesh, root, &mut data)?;
+                Ok(data)
+            })
+            .unwrap();
+            for r in results {
+                assert_eq!(r, vec![1.0, 2.0, 3.0, root as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        let results = run_mesh(3, |mut mesh| {
+            let mine = vec![mesh.rank() as f64; mesh.rank() + 1];
+            gather(&mut mesh, 0, &mine)
+        })
+        .unwrap();
+        let root = results[0].as_ref().unwrap();
+        assert_eq!(root[0], vec![0.0]);
+        assert_eq!(root[1], vec![1.0, 1.0]);
+        assert_eq!(root[2], vec![2.0, 2.0, 2.0]);
+        assert!(results[1].is_none() && results[2].is_none());
+    }
+
+    #[test]
+    fn allgather_everyone_gets_everything() {
+        let results = run_mesh(4, |mut mesh| {
+            let mine = vec![mesh.rank() as f64 * 10.0];
+            allgather(&mut mesh, &mine)
+        })
+        .unwrap();
+        for r in &results {
+            for (j, part) in r.iter().enumerate() {
+                assert_eq!(part, &vec![j as f64 * 10.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_both_algorithms_match() {
+        for algo in [AllReduceAlgo::Naive, AllReduceAlgo::Ring] {
+            for p in [1, 2, 3, 4, 7] {
+                let results = run_mesh(p, move |mut mesh| {
+                    // vector length deliberately not divisible by p
+                    let mut data: Vec<f64> =
+                        (0..10).map(|i| (mesh.rank() * 100 + i) as f64).collect();
+                    allreduce_sum(&mut mesh, &mut data, algo)?;
+                    Ok(data)
+                })
+                .unwrap();
+                let want: Vec<f64> = (0..10)
+                    .map(|i| (0..p).map(|r| (r * 100 + i) as f64).sum())
+                    .collect();
+                for r in &results {
+                    assert_eq!(r, &want, "algo {algo:?} p {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_only_root_has_result() {
+        let results = run_mesh(3, |mut mesh| {
+            let data = vec![1.0, 2.0];
+            reduce_sum(&mut mesh, 1, &data)
+        })
+        .unwrap();
+        assert!(results[0].is_none());
+        assert_eq!(results[1].as_ref().unwrap(), &vec![3.0, 6.0]);
+        assert!(results[2].is_none());
+    }
+}

@@ -1,0 +1,290 @@
+//! MPI-substitute communicator: point-to-point messaging and collectives
+//! over loopback TCP.
+//!
+//! The paper's server creates "a dedicated MPI communicator for each
+//! connected Spark application" (§3.2). [`Mesh`] is that communicator: a
+//! fully-connected group of `size` ranks with framed, blocking sockets.
+//! Blocking (std::net) on purpose — collectives run inside the worker's
+//! compute path (`spawn_blocking`), exactly where MPI calls would sit.
+//!
+//! Mesh formation follows the usual convention: rank `i` dials every rank
+//! `j > i` and accepts connections from every `j < i`; a tiny handshake
+//! (`group_id`, `rank`) lets acceptors route sockets when several meshes
+//! form concurrently.
+
+pub mod collectives;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Max comm frame: collectives chunk under this.
+const MAX_COMM_FRAME: usize = 1 << 30;
+
+/// How long a dialing rank retries while the peer's listener comes up.
+const DIAL_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// A fully-connected communicator group.
+#[derive(Debug)]
+pub struct Mesh {
+    rank: usize,
+    size: usize,
+    /// Connection to each peer rank; `None` at our own index.
+    conns: Vec<Option<TcpStream>>,
+}
+
+impl Mesh {
+    /// Form a mesh. `addrs[j]` is the comm listen address of rank `j`;
+    /// `listener` must be the one bound at `addrs[rank]`. Blocks until all
+    /// `size - 1` links are up.
+    pub fn establish(
+        group_id: u64,
+        rank: usize,
+        addrs: &[String],
+        listener: TcpListener,
+    ) -> Result<Mesh> {
+        let size = addrs.len();
+        if rank >= size {
+            return Err(Error::Protocol(format!("rank {rank} out of range {size}")));
+        }
+        let mut conns: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+
+        // Dial higher ranks from a helper thread while we accept lower ones.
+        let dial_targets: Vec<(usize, String)> =
+            (rank + 1..size).map(|j| (j, addrs[j].clone())).collect();
+        let dialer = std::thread::spawn(move || -> Result<Vec<(usize, TcpStream)>> {
+            let mut out = Vec::new();
+            for (j, addr) in dial_targets {
+                let stream = dial_with_retry(&addr)?;
+                stream.set_nodelay(true)?;
+                let mut s = stream;
+                // handshake: group_id, my rank
+                s.write_all(&group_id.to_le_bytes())?;
+                s.write_all(&(rank as u32).to_le_bytes())?;
+                out.push((j, s));
+            }
+            Ok(out)
+        });
+
+        // Accept connections from lower ranks.
+        let mut accepted = 0;
+        while accepted < rank {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let mut gid = [0u8; 8];
+            s.read_exact(&mut gid)?;
+            let got_gid = u64::from_le_bytes(gid);
+            let mut rk = [0u8; 4];
+            s.read_exact(&mut rk)?;
+            let from = u32::from_le_bytes(rk) as usize;
+            if got_gid != group_id {
+                return Err(Error::Protocol(format!(
+                    "mesh handshake: expected group {group_id}, got {got_gid}"
+                )));
+            }
+            if from >= rank || conns[from].is_some() {
+                return Err(Error::Protocol(format!("mesh handshake: bad dialer rank {from}")));
+            }
+            conns[from] = Some(s);
+            accepted += 1;
+        }
+
+        for (j, s) in dialer.join().map_err(|_| Error::Protocol("dialer panicked".into()))?? {
+            conns[j] = Some(s);
+        }
+        Ok(Mesh { rank, size, conns })
+    }
+
+    /// A size-1 mesh (no sockets) — single-worker sessions.
+    pub fn solo() -> Mesh {
+        Mesh { rank: 0, size: 1, conns: vec![None] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    fn conn(&mut self, peer: usize) -> Result<&mut TcpStream> {
+        if peer == self.rank || peer >= self.size {
+            return Err(Error::Protocol(format!(
+                "rank {} cannot talk to peer {peer} (size {})",
+                self.rank, self.size
+            )));
+        }
+        self.conns[peer]
+            .as_mut()
+            .ok_or_else(|| Error::Protocol(format!("no connection to rank {peer}")))
+    }
+
+    /// Framed send to one peer.
+    pub fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        if payload.len() > MAX_COMM_FRAME {
+            return Err(Error::Protocol("comm frame too large".into()));
+        }
+        let s = self.conn(to)?;
+        s.write_all(&(payload.len() as u32).to_le_bytes())?;
+        s.write_all(payload)?;
+        Ok(())
+    }
+
+    /// Framed receive from one peer (blocking).
+    pub fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        let s = self.conn(from)?;
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n > MAX_COMM_FRAME {
+            return Err(Error::Protocol(format!("comm frame length {n} exceeds cap")));
+        }
+        let mut buf = vec![0u8; n];
+        s.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Send a f64 slice (raw LE bytes — the collective hot path).
+    pub fn send_f64s(&mut self, to: usize, data: &[f64]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(data.len() * 8);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send(to, &bytes)
+    }
+
+    /// Deadlock-free simultaneous exchange: send `payload` to `to` while
+    /// receiving one frame from `from`. The send runs on a helper thread
+    /// over a cloned socket handle, so arbitrarily large frames cannot
+    /// jam against full kernel buffers (used by the all-to-all in
+    /// `elemental::redistribute`).
+    pub fn exchange(&mut self, to: usize, payload: &[u8], from: usize) -> Result<Vec<u8>> {
+        if to == from {
+            // pure pairwise swap
+            let send_sock = self.conn(to)?.try_clone()?;
+            let data = payload.to_vec();
+            let writer = std::thread::spawn(move || -> Result<()> {
+                let mut s = send_sock;
+                s.write_all(&(data.len() as u32).to_le_bytes())?;
+                s.write_all(&data)?;
+                Ok(())
+            });
+            let got = self.recv(from)?;
+            writer.join().map_err(|_| Error::Protocol("exchange writer panicked".into()))??;
+            return Ok(got);
+        }
+        let send_sock = self.conn(to)?.try_clone()?;
+        let data = payload.to_vec();
+        let writer = std::thread::spawn(move || -> Result<()> {
+            let mut s = send_sock;
+            s.write_all(&(data.len() as u32).to_le_bytes())?;
+            s.write_all(&data)?;
+            Ok(())
+        });
+        let got = self.recv(from)?;
+        writer.join().map_err(|_| Error::Protocol("exchange writer panicked".into()))??;
+        Ok(got)
+    }
+
+    pub fn recv_f64s(&mut self, from: usize) -> Result<Vec<f64>> {
+        let bytes = self.recv(from)?;
+        if bytes.len() % 8 != 0 {
+            return Err(Error::Protocol("f64 frame not multiple of 8".into()));
+        }
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+fn dial_with_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = Instant::now() + DIAL_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(Error::Io(e));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Test/bench helper: spin up a full mesh in-process, one thread per rank,
+/// run `f(mesh)` on each, and return the per-rank outputs in rank order.
+pub fn run_mesh<T: Send + 'static>(
+    size: usize,
+    f: impl Fn(Mesh) -> Result<T> + Send + Sync + 'static,
+) -> Result<Vec<T>> {
+    let listeners: Vec<TcpListener> =
+        (0..size).map(|_| TcpListener::bind("127.0.0.1:0")).collect::<std::io::Result<_>>()?;
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let f = std::sync::Arc::new(f);
+    let mut handles = Vec::new();
+    for (rank, listener) in listeners.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || -> Result<T> {
+            let mesh = Mesh::establish(0xC0FFEE, rank, &addrs, listener)?;
+            f(mesh)
+        }));
+    }
+    let mut out = Vec::with_capacity(size);
+    for h in handles {
+        out.push(h.join().map_err(|_| Error::Protocol("mesh thread panicked".into()))??);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_forms_and_p2p_works() {
+        let results = run_mesh(4, |mut mesh| {
+            let rank = mesh.rank();
+            // ring: send my rank to (rank+1) % size, receive from prev.
+            // ordered to avoid deadlock: evens send first.
+            let next = (rank + 1) % mesh.size();
+            let prev = (rank + mesh.size() - 1) % mesh.size();
+            let payload = vec![rank as u8];
+            if rank % 2 == 0 {
+                mesh.send(next, &payload)?;
+                Ok(mesh.recv(prev)?[0] as usize)
+            } else {
+                let got = mesh.recv(prev)?[0] as usize;
+                mesh.send(next, &payload)?;
+                Ok(got)
+            }
+        })
+        .unwrap();
+        assert_eq!(results, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn f64_payloads_roundtrip() {
+        let results = run_mesh(2, |mut mesh| {
+            if mesh.rank() == 0 {
+                mesh.send_f64s(1, &[1.5, -2.5, 1e300])?;
+                Ok(vec![])
+            } else {
+                mesh.recv_f64s(0)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![1.5, -2.5, 1e300]);
+    }
+
+    #[test]
+    fn solo_mesh_has_no_peers() {
+        let mut m = Mesh::solo();
+        assert_eq!(m.size(), 1);
+        assert!(m.send(0, b"x").is_err());
+        assert!(m.send(1, b"x").is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Configuration system: typed config structs, a minimal TOML-subset
+//! parser (sections, scalar keys, comments) and `key=value` CLI overrides.
+//!
+//! Precedence: defaults < config file < `--set section.key=value` overrides.
+//! Every bench/example accepts the same `--config`/`--set` surface, so the
+//! whole harness is parameterized the way a deployable framework would be.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Alchemist-server side knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Number of Alchemist worker processes ("nodes" in the paper's grids).
+    pub workers: u32,
+    /// Rows per data-plane frame. 1 reproduces the paper's row-at-a-time
+    /// behaviour; larger batches are the §Perf fix (see ablate_framing).
+    pub batch_rows: u32,
+    /// Directory holding the AOT artifacts (`*.hlo.txt` + manifest).
+    pub artifacts_dir: String,
+    /// "pjrt" (Pallas/XLA artifacts) or "native" (pure-Rust blocked GEMM).
+    pub gemm_backend: String,
+    /// Tile edge for the PJRT GEMM path (must match an exported artifact).
+    pub gemm_tile: u32,
+    /// Gram-operator backend for the SVD path: "native" (default on this
+    /// CPU testbed — PJRT's per-execute dispatch (~6 ms) swamps a
+    /// bandwidth-bound matvec; see EXPERIMENTS.md §Perf) or "pjrt" (the
+    /// fused artifact + device-resident panels: the real-TPU production
+    /// path, kept fully tested).
+    pub svd_backend: String,
+    /// TCP_NODELAY on data-plane sockets.
+    pub nodelay: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            batch_rows: 256,
+            artifacts_dir: "artifacts".into(),
+            gemm_backend: "pjrt".into(),
+            gemm_tile: 256,
+            svd_backend: "native".into(),
+            nodelay: true,
+        }
+    }
+}
+
+/// Sparklet (the Spark substitute) knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparkletConfig {
+    /// Number of executors ("Spark nodes").
+    pub executors: u32,
+    /// Default number of partitions for new RDDs (Spark's
+    /// `spark.default.parallelism`).
+    pub default_parallelism: u32,
+    /// Per-executor memory cap in MiB; shuffle blocks + cached partitions
+    /// count against it and overflow aborts the job (Table 1's NA rows).
+    pub executor_mem_mb: u64,
+    /// BlockMatrix block edge (Spark's default is 1024).
+    pub block_size: u32,
+    /// Simulated per-task scheduling latency in microseconds. Loopback
+    /// scheduling is ~free; real Spark pays O(ms) per task for closure
+    /// serialization + RPC + JVM dispatch. Default is deliberately modest
+    /// (200us ≈ optimistic Spark); set 0 to disable modeling entirely.
+    pub task_overhead_us: u64,
+}
+
+impl Default for SparkletConfig {
+    fn default() -> Self {
+        SparkletConfig {
+            executors: 4,
+            default_parallelism: 8,
+            executor_mem_mb: 512,
+            block_size: 256,
+            task_overhead_us: 200,
+        }
+    }
+}
+
+/// Bench-harness knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchConfig {
+    /// Wall-clock budget per run, seconds (paper: 1800 s debug queue).
+    pub budget_secs: u64,
+    /// Linear scale factor applied to the paper's matrix dimensions
+    /// (1.0 = the scaled-down defaults baked into each bench).
+    pub scale: f64,
+    /// Repetitions per configuration (paper: 3, averaged).
+    pub reps: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { budget_secs: 120, scale: 1.0, reps: 2 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub server: ServerConfig,
+    pub sparklet: SparkletConfig,
+    pub bench: BenchConfig,
+}
+
+/// A parsed `section.key -> raw string value` map.
+type RawConfig = BTreeMap<String, String>;
+
+fn parse_toml_subset(text: &str) -> Result<RawConfig> {
+    let mut out = RawConfig::new();
+    let mut section = String::new();
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = raw_line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::Config(format!("line {}: expected key = value", lineno + 1)));
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+fn apply_raw(cfg: &mut Config, raw: &RawConfig) -> Result<()> {
+    for (key, val) in raw {
+        apply_one(cfg, key, val)?;
+    }
+    Ok(())
+}
+
+fn parse<T: std::str::FromStr>(key: &str, val: &str) -> Result<T> {
+    val.parse()
+        .map_err(|_| Error::Config(format!("bad value for {key}: {val:?}")))
+}
+
+fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
+    match key {
+        "server.workers" => cfg.server.workers = parse(key, val)?,
+        "server.batch_rows" => cfg.server.batch_rows = parse(key, val)?,
+        "server.artifacts_dir" => cfg.server.artifacts_dir = val.to_string(),
+        "server.gemm_backend" => {
+            if val != "pjrt" && val != "native" {
+                return Err(Error::Config(format!("gemm_backend must be pjrt|native, got {val}")));
+            }
+            cfg.server.gemm_backend = val.to_string();
+        }
+        "server.gemm_tile" => cfg.server.gemm_tile = parse(key, val)?,
+        "server.svd_backend" => {
+            if val != "pjrt" && val != "native" {
+                return Err(Error::Config(format!("svd_backend must be pjrt|native, got {val}")));
+            }
+            cfg.server.svd_backend = val.to_string();
+        }
+        "server.nodelay" => cfg.server.nodelay = parse(key, val)?,
+        "sparklet.executors" => cfg.sparklet.executors = parse(key, val)?,
+        "sparklet.default_parallelism" => cfg.sparklet.default_parallelism = parse(key, val)?,
+        "sparklet.executor_mem_mb" => cfg.sparklet.executor_mem_mb = parse(key, val)?,
+        "sparklet.block_size" => cfg.sparklet.block_size = parse(key, val)?,
+        "sparklet.task_overhead_us" => cfg.sparklet.task_overhead_us = parse(key, val)?,
+        "bench.budget_secs" => cfg.bench.budget_secs = parse(key, val)?,
+        "bench.scale" => cfg.bench.scale = parse(key, val)?,
+        "bench.reps" => cfg.bench.reps = parse(key, val)?,
+        _ => return Err(Error::Config(format!("unknown config key: {key}"))),
+    }
+    Ok(())
+}
+
+impl Config {
+    /// Load from a config file (TOML subset). Missing file is an error;
+    /// use `Config::default()` + overrides when no file is wanted.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let mut cfg = Config::default();
+        apply_raw(&mut cfg, &parse_toml_subset(&text)?)?;
+        Ok(cfg)
+    }
+
+    /// Apply `section.key=value` CLI overrides.
+    pub fn apply_overrides<S: AsRef<str>>(&mut self, overrides: &[S]) -> Result<()> {
+        for o in overrides {
+            let s = o.as_ref();
+            let Some((k, v)) = s.split_once('=') else {
+                return Err(Error::Config(format!("override must be key=value: {s:?}")));
+            };
+            apply_one(self, k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Default config + optional file + overrides — the standard entry
+    /// point used by `main.rs`, examples and benches.
+    pub fn resolve(file: Option<&str>, overrides: &[String]) -> Result<Config> {
+        let mut cfg = match file {
+            Some(f) => Config::from_file(f)?,
+            None => Config::default(),
+        };
+        cfg.apply_overrides(overrides)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.server.workers == 0 {
+            return Err(Error::Config("server.workers must be >= 1".into()));
+        }
+        if self.server.batch_rows == 0 {
+            return Err(Error::Config("server.batch_rows must be >= 1".into()));
+        }
+        if self.sparklet.executors == 0 {
+            return Err(Error::Config("sparklet.executors must be >= 1".into()));
+        }
+        if !(self.bench.scale > 0.0) {
+            return Err(Error::Config("bench.scale must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_file_subset() {
+        let text = r#"
+# comment
+[server]
+workers = 8
+gemm_backend = "native"   # inline comment
+nodelay = false
+
+[sparklet]
+executors = 22
+executor_mem_mb = 1024
+
+[bench]
+scale = 0.5
+"#;
+        let raw = parse_toml_subset(text).unwrap();
+        let mut cfg = Config::default();
+        apply_raw(&mut cfg, &raw).unwrap();
+        assert_eq!(cfg.server.workers, 8);
+        assert_eq!(cfg.server.gemm_backend, "native");
+        assert!(!cfg.server.nodelay);
+        assert_eq!(cfg.sparklet.executors, 22);
+        assert_eq!(cfg.bench.scale, 0.5);
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&["server.workers=16", "bench.reps=1"]).unwrap();
+        assert_eq!(cfg.server.workers, 16);
+        assert_eq!(cfg.bench.reps, 1);
+        assert!(cfg.apply_overrides(&["nope.key=1"]).is_err());
+        assert!(cfg.apply_overrides(&["server.workers"]).is_err());
+        assert!(cfg.apply_overrides(&["server.gemm_backend=cuda"]).is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut cfg = Config::default();
+        assert!(cfg.apply_overrides(&["server.workers=banana"]).is_err());
+        cfg.server.workers = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Distributed GEMM — the Elemental `Gemm` substitute that Alchemist wraps
+//! for the Table 1 experiment.
+//!
+//! Decomposition (1D, panel-replicated): A (m x k) and C (m x n) are
+//! row-distributed; B (k x n) is all-gathered so every worker holds it,
+//! then each worker computes its C panel with a *local* GEMM:
+//!
+//! ```text
+//!   C_local = A_local · B         (one call per worker, no further comm)
+//! ```
+//!
+//! The local GEMM goes through a pluggable [`GemmBackend`] — the PJRT
+//! Pallas-tile path in production (`runtime::PjrtBackend`), the native
+//! blocked kernel as fallback/ablation.
+
+use crate::comm::{collectives, Mesh};
+use crate::elemental::LocalPanel;
+use crate::linalg::DenseMatrix;
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
+use crate::{Error, Result};
+
+/// Node-local GEMM provider. `c = a @ b` with `c` pre-zeroed by callers
+/// that want plain multiply.
+pub trait GemmBackend: Send + Sync {
+    fn gemm_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()>;
+
+    fn gemm(&self, a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+        let mut c = DenseMatrix::zeros(a.rows(), b.cols());
+        self.gemm_acc(a, b, &mut c)?;
+        Ok(c)
+    }
+
+    /// Backend label for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust blocked GEMM backend (`linalg::gemm`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl GemmBackend for NativeBackend {
+    fn gemm_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        crate::linalg::gemm::gemm_acc(a, b, c)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// All-gather a row-distributed matrix so every rank holds the full thing.
+/// Requires RowBlock layout (panels concatenate contiguously).
+pub fn allgather_matrix(mesh: &mut Mesh, panel: &LocalPanel) -> Result<DenseMatrix> {
+    if panel.meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape(
+            "allgather_matrix requires RowBlock layout (redistribute first)".into(),
+        ));
+    }
+    let parts = collectives::allgather(mesh, panel.local().data())?;
+    let cols = panel.meta.cols as usize;
+    let mut data = Vec::with_capacity(panel.meta.rows as usize * cols);
+    for part in parts {
+        data.extend_from_slice(&part);
+    }
+    DenseMatrix::from_vec(panel.meta.rows as usize, cols, data)
+}
+
+/// SPMD distributed GEMM: every session worker passes its panels of A and
+/// B; returns its panel of C = A·B with C row-distributed like A.
+pub fn dist_gemm(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+) -> Result<LocalPanel> {
+    if a.meta.cols != b.meta.rows {
+        return Err(Error::Shape(format!(
+            "dist_gemm: A is {}x{}, B is {}x{}",
+            a.meta.rows, a.meta.cols, b.meta.rows, b.meta.cols
+        )));
+    }
+    if a.meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape("dist_gemm requires RowBlock A".into()));
+    }
+    let b_full = allgather_matrix(mesh, b)?;
+    let c_local = backend.gemm(a.local(), &b_full)?;
+    let c_meta = MatrixMeta {
+        handle: c_handle,
+        rows: a.meta.rows,
+        cols: b.meta.cols,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: a.meta.layout.owners.clone() },
+    };
+    LocalPanel::from_local(c_meta, a.slot, c_local)
+}
+
+/// Distributed Frobenius norm: local partial + scalar all-reduce.
+pub fn dist_frobenius(mesh: &mut Mesh, panel: &LocalPanel) -> Result<f64> {
+    let local: f64 = panel.local().data().iter().map(|x| x * x).sum();
+    let mut buf = vec![local];
+    collectives::allreduce_sum(mesh, &mut buf, collectives::AllReduceAlgo::Ring)?;
+    Ok(buf[0].sqrt())
+}
+
+/// Distributed Gram matvec: w = Aᵀ(A v) with A row-distributed; v and w
+/// are replicated length-n vectors. One ring all-reduce per application —
+/// the Lanczos hot path. The local two-sided product is delegated to the
+/// backend-agnostic closure `local_gram` so callers can route it through
+/// PJRT (fused gram artifact) or native kernels.
+pub fn dist_gram_matvec(
+    mesh: &mut Mesh,
+    v: &[f64],
+    local_gram: impl FnOnce(&[f64]) -> Result<Vec<f64>>,
+) -> Result<Vec<f64>> {
+    let mut w = local_gram(v)?;
+    collectives::allreduce_sum(mesh, &mut w, collectives::AllReduceAlgo::Ring)?;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_mesh;
+    use crate::elemental::panel::{gather_matrix, scatter_matrix};
+    use crate::linalg::gemm::gemm;
+    use crate::workload::random_matrix;
+    use std::sync::Arc;
+
+    fn meta(handle: u64, rows: u64, cols: u64, p: u32) -> MatrixMeta {
+        MatrixMeta {
+            handle,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p).collect() },
+        }
+    }
+
+    #[test]
+    fn dist_gemm_matches_local() {
+        let (m, k, n, p) = (37u64, 11u64, 8u64, 3usize);
+        let a_full = DenseMatrix::from_vec(m as usize, k as usize, random_matrix(1, m as usize, k as usize)).unwrap();
+        let b_full = DenseMatrix::from_vec(k as usize, n as usize, random_matrix(2, k as usize, n as usize)).unwrap();
+        let a_panels = Arc::new(scatter_matrix(&meta(1, m, k, p as u32), &a_full).unwrap());
+        let b_panels = Arc::new(scatter_matrix(&meta(2, k, n, p as u32), &b_full).unwrap());
+        let (ap, bp) = (a_panels.clone(), b_panels.clone());
+        let c_panels = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            dist_gemm(&mut mesh, &ap[rank], &bp[rank], 3, &NativeBackend)
+        })
+        .unwrap();
+        let c = gather_matrix(&c_panels).unwrap();
+        let want = gemm(&a_full, &b_full).unwrap();
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+        assert_eq!(c_panels[0].meta.handle, 3);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a_full = DenseMatrix::zeros(4, 3);
+        let b_full = DenseMatrix::zeros(5, 2);
+        let ap = Arc::new(scatter_matrix(&meta(1, 4, 3, 1), &a_full).unwrap());
+        let bp = Arc::new(scatter_matrix(&meta(2, 5, 2, 1), &b_full).unwrap());
+        let res = run_mesh(1, move |mut mesh| {
+            match dist_gemm(&mut mesh, &ap[0], &bp[0], 3, &NativeBackend) {
+                Err(crate::Error::Shape(_)) => Ok(true),
+                _ => Ok(false),
+            }
+        })
+        .unwrap();
+        assert!(res[0]);
+    }
+
+    #[test]
+    fn dist_frobenius_matches_local() {
+        let full = DenseMatrix::from_vec(10, 4, random_matrix(5, 10, 4)).unwrap();
+        let panels = Arc::new(scatter_matrix(&meta(1, 10, 4, 2), &full).unwrap());
+        let want = full.frobenius_norm();
+        let got = run_mesh(2, move |mut mesh| {
+            let rank = mesh.rank();
+            dist_frobenius(&mut mesh, &panels[rank])
+        })
+        .unwrap();
+        for g in got {
+            assert!((g - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dist_gram_matvec_matches_dense() {
+        let (m, n, p) = (20usize, 6usize, 2usize);
+        let full = DenseMatrix::from_vec(m, n, random_matrix(7, m, n)).unwrap();
+        let panels = Arc::new(scatter_matrix(&meta(1, m as u64, n as u64, p as u32), &full).unwrap());
+        let v: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let v2 = v.clone();
+        let got = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let panel = &panels[rank];
+            dist_gram_matvec(&mut mesh, &v2, |x| {
+                let t = panel.local().matvec(x)?;
+                panel.local().matvec_t(&t)
+            })
+        })
+        .unwrap();
+        // dense reference: w = Aᵀ A v
+        let t = full.matvec(&v).unwrap();
+        let want = full.matvec_t(&t).unwrap();
+        for g in got {
+            for (a, b) in g.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+}

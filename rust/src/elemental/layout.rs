@@ -1,0 +1,159 @@
+//! Row-distribution math shared by the client (routing rows to workers on
+//! send), the workers (local storage addressing) and the redistribution
+//! kernels. Pure functions of (`LayoutKind`, total rows, #owners) — the
+//! proptest suite checks the partition-function invariants (every row has
+//! exactly one owner slot; local/global maps are inverse bijections).
+
+use crate::protocol::{LayoutDesc, LayoutKind};
+use crate::{Error, Result};
+
+/// Concrete layout of `rows` matrix rows over `slots` owner slots.
+/// A *slot* is an index into `LayoutDesc::owners`; the worker id living in
+/// that slot is a server-side concern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    pub kind: LayoutKind,
+    pub rows: u64,
+    pub slots: u32,
+}
+
+impl Layout {
+    pub fn new(kind: LayoutKind, rows: u64, slots: u32) -> Result<Layout> {
+        if slots == 0 {
+            return Err(Error::Shape("layout needs >= 1 slot".into()));
+        }
+        Ok(Layout { kind, rows, slots })
+    }
+
+    pub fn from_desc(desc: &LayoutDesc, rows: u64) -> Result<Layout> {
+        Layout::new(desc.kind, rows, desc.owners.len() as u32)
+    }
+
+    /// Rows per block in the RowBlock layout.
+    fn block(&self) -> u64 {
+        let p = self.slots as u64;
+        (self.rows + p - 1) / p
+    }
+
+    /// Which slot owns global row `r`.
+    pub fn owner_slot(&self, r: u64) -> u32 {
+        debug_assert!(r < self.rows);
+        match self.kind {
+            LayoutKind::RowBlock => {
+                let b = self.block().max(1);
+                ((r / b).min(self.slots as u64 - 1)) as u32
+            }
+            LayoutKind::RowCyclic => (r % self.slots as u64) as u32,
+        }
+    }
+
+    /// Local row index of global row `r` within its owner's panel.
+    pub fn local_index(&self, r: u64) -> u64 {
+        match self.kind {
+            LayoutKind::RowBlock => r - self.owner_slot(r) as u64 * self.block().max(1),
+            LayoutKind::RowCyclic => r / self.slots as u64,
+        }
+    }
+
+    /// Number of rows stored by `slot`.
+    pub fn local_count(&self, slot: u32) -> u64 {
+        debug_assert!(slot < self.slots);
+        match self.kind {
+            LayoutKind::RowBlock => {
+                let b = self.block();
+                let start = (slot as u64 * b).min(self.rows);
+                let end = ((slot as u64 + 1) * b).min(self.rows);
+                end - start
+            }
+            LayoutKind::RowCyclic => {
+                let p = self.slots as u64;
+                let s = slot as u64;
+                if s < self.rows % p {
+                    self.rows / p + 1
+                } else {
+                    self.rows / p
+                }
+            }
+        }
+    }
+
+    /// Global row index of local row `li` on `slot` (inverse of
+    /// `local_index` restricted to the slot).
+    pub fn global_index(&self, slot: u32, li: u64) -> u64 {
+        match self.kind {
+            LayoutKind::RowBlock => slot as u64 * self.block() + li,
+            LayoutKind::RowCyclic => li * self.slots as u64 + slot as u64,
+        }
+    }
+
+    /// Iterator over the global rows owned by `slot`, in local order.
+    pub fn rows_of_slot(&self, slot: u32) -> impl Iterator<Item = u64> + '_ {
+        let count = self.local_count(slot);
+        (0..count).map(move |li| self.global_index(slot, li))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layouts() -> Vec<Layout> {
+        let mut out = Vec::new();
+        for kind in [LayoutKind::RowBlock, LayoutKind::RowCyclic] {
+            for rows in [1u64, 5, 16, 17, 100] {
+                for slots in [1u32, 2, 3, 7, 16] {
+                    out.push(Layout::new(kind, rows, slots).unwrap());
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn every_row_has_exactly_one_owner_and_maps_invert() {
+        for l in layouts() {
+            let mut seen = vec![false; l.rows as usize];
+            for slot in 0..l.slots {
+                for (li, r) in l.rows_of_slot(slot).enumerate() {
+                    assert!(r < l.rows, "{l:?}");
+                    assert!(!seen[r as usize], "row {r} double-owned in {l:?}");
+                    seen[r as usize] = true;
+                    assert_eq!(l.owner_slot(r), slot, "{l:?}");
+                    assert_eq!(l.local_index(r), li as u64, "{l:?}");
+                    assert_eq!(l.global_index(slot, li as u64), r, "{l:?}");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "rows unowned in {l:?}");
+        }
+    }
+
+    #[test]
+    fn counts_sum_to_rows() {
+        for l in layouts() {
+            let total: u64 = (0..l.slots).map(|s| l.local_count(s)).sum();
+            assert_eq!(total, l.rows, "{l:?}");
+        }
+    }
+
+    #[test]
+    fn row_block_is_contiguous() {
+        let l = Layout::new(LayoutKind::RowBlock, 10, 3).unwrap();
+        // block = ceil(10/3) = 4 -> slots own [0..4), [4..8), [8..10)
+        assert_eq!(l.rows_of_slot(0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(l.rows_of_slot(1).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(l.rows_of_slot(2).collect::<Vec<_>>(), vec![8, 9]);
+    }
+
+    #[test]
+    fn row_cyclic_interleaves() {
+        let l = Layout::new(LayoutKind::RowCyclic, 7, 3).unwrap();
+        assert_eq!(l.rows_of_slot(0).collect::<Vec<_>>(), vec![0, 3, 6]);
+        assert_eq!(l.rows_of_slot(1).collect::<Vec<_>>(), vec![1, 4]);
+        assert_eq!(l.rows_of_slot(2).collect::<Vec<_>>(), vec![2, 5]);
+    }
+
+    #[test]
+    fn zero_slots_rejected() {
+        assert!(Layout::new(LayoutKind::RowBlock, 10, 0).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Distributed dense matrix substrate — the Elemental (`DistMatrix`)
+//! substitute.
+//!
+//! The original Alchemist stores data received from Spark executors in
+//! Elemental `DistMatrix` objects and hands those to MPI routines (§2.2).
+//! Here a distributed matrix is a [`messages::MatrixMeta`] (global shape +
+//! [`layout`]) plus one [`LocalPanel`] per owner worker holding the locally
+//! owned rows. Routines operate SPMD over panels with [`crate::comm`]
+//! collectives, mirroring Elemental's communicator-scoped kernels.
+
+pub mod dist_gemm;
+pub mod layout;
+pub mod panel;
+pub mod redistribute;
+pub mod store;
+pub mod transpose;
+
+pub use layout::Layout;
+pub use panel::LocalPanel;
+pub use store::MatrixStore;

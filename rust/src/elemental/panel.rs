@@ -1,0 +1,219 @@
+//! Per-worker local storage of a distributed matrix: the rows this worker
+//! owns under the matrix's layout, packed densely in local-index order.
+
+use crate::elemental::Layout;
+use crate::linalg::DenseMatrix;
+use crate::protocol::MatrixMeta;
+use crate::{Error, Result};
+
+/// One worker's slice of a distributed matrix.
+#[derive(Debug, Clone)]
+pub struct LocalPanel {
+    pub meta: MatrixMeta,
+    /// This worker's slot index within `meta.layout.owners`.
+    pub slot: u32,
+    layout: Layout,
+    /// `local_count(slot) x meta.cols` row-major storage.
+    local: DenseMatrix,
+    rows_received: u64,
+}
+
+impl LocalPanel {
+    /// Allocate a zeroed panel for `slot` of the matrix described by `meta`.
+    pub fn alloc(meta: MatrixMeta, slot: u32) -> Result<LocalPanel> {
+        let layout = Layout::from_desc(&meta.layout, meta.rows)?;
+        if slot >= layout.slots {
+            return Err(Error::Shape(format!(
+                "slot {slot} out of range ({} owners)",
+                layout.slots
+            )));
+        }
+        let local_rows = layout.local_count(slot) as usize;
+        Ok(LocalPanel {
+            slot,
+            layout,
+            local: DenseMatrix::zeros(local_rows, meta.cols as usize),
+            rows_received: 0,
+            meta,
+        })
+    }
+
+    /// Build a panel directly from pre-packed local storage (routines
+    /// producing distributed outputs use this).
+    pub fn from_local(meta: MatrixMeta, slot: u32, local: DenseMatrix) -> Result<LocalPanel> {
+        let layout = Layout::from_desc(&meta.layout, meta.rows)?;
+        if local.shape() != (layout.local_count(slot) as usize, meta.cols as usize) {
+            return Err(Error::Shape(format!(
+                "panel shape {:?} != expected {}x{}",
+                local.shape(),
+                layout.local_count(slot),
+                meta.cols
+            )));
+        }
+        let rows_received = local.rows() as u64;
+        Ok(LocalPanel { slot, layout, local, rows_received, meta })
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    pub fn local(&self) -> &DenseMatrix {
+        &self.local
+    }
+
+    pub fn local_mut(&mut self) -> &mut DenseMatrix {
+        &mut self.local
+    }
+
+    pub fn local_rows(&self) -> usize {
+        self.local.rows()
+    }
+
+    pub fn rows_received(&self) -> u64 {
+        self.rows_received
+    }
+
+    /// Store global row `r` (must be owned by our slot).
+    pub fn set_row(&mut self, r: u64, values: &[f64]) -> Result<()> {
+        if values.len() != self.meta.cols as usize {
+            return Err(Error::Shape(format!(
+                "row length {} != cols {}",
+                values.len(),
+                self.meta.cols
+            )));
+        }
+        if self.layout.owner_slot(r) != self.slot {
+            return Err(Error::Server(format!(
+                "row {r} routed to wrong worker (slot {} owns it, we are slot {})",
+                self.layout.owner_slot(r),
+                self.slot
+            )));
+        }
+        let li = self.layout.local_index(r) as usize;
+        self.local.row_mut(li).copy_from_slice(values);
+        self.rows_received += 1;
+        Ok(())
+    }
+
+    /// Read global row `r` (must be locally owned).
+    pub fn get_row(&self, r: u64) -> Result<&[f64]> {
+        if self.layout.owner_slot(r) != self.slot {
+            return Err(Error::Server(format!("row {r} not owned by slot {}", self.slot)));
+        }
+        Ok(self.local.row(self.layout.local_index(r) as usize))
+    }
+
+    /// Iterate (global_row, values) in local order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = (u64, &[f64])> + '_ {
+        (0..self.local.rows()).map(move |li| {
+            (self.layout.global_index(self.slot, li as u64), self.local.row(li))
+        })
+    }
+}
+
+/// Test helper: split a full matrix into per-slot panels.
+pub fn scatter_matrix(meta: &MatrixMeta, full: &DenseMatrix) -> Result<Vec<LocalPanel>> {
+    let layout = Layout::from_desc(&meta.layout, meta.rows)?;
+    if full.shape() != (meta.rows as usize, meta.cols as usize) {
+        return Err(Error::Shape("scatter: full matrix shape mismatch".into()));
+    }
+    let mut panels = Vec::new();
+    for slot in 0..layout.slots {
+        let mut p = LocalPanel::alloc(meta.clone(), slot)?;
+        for r in layout.rows_of_slot(slot) {
+            p.set_row(r, full.row(r as usize))?;
+        }
+        panels.push(p);
+    }
+    Ok(panels)
+}
+
+/// Test helper: reassemble a full matrix from all panels.
+pub fn gather_matrix(panels: &[LocalPanel]) -> Result<DenseMatrix> {
+    let meta = &panels[0].meta;
+    let mut full = DenseMatrix::zeros(meta.rows as usize, meta.cols as usize);
+    let mut seen = 0u64;
+    for p in panels {
+        for (r, row) in p.iter_rows() {
+            full.row_mut(r as usize).copy_from_slice(row);
+            seen += 1;
+        }
+    }
+    if seen != meta.rows {
+        return Err(Error::Shape(format!("gathered {seen} rows, expected {}", meta.rows)));
+    }
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{LayoutDesc, LayoutKind};
+    use crate::workload::random_matrix;
+
+    fn meta(rows: u64, cols: u64, kind: LayoutKind, p: u32) -> MatrixMeta {
+        MatrixMeta {
+            handle: 1,
+            rows,
+            cols,
+            layout: LayoutDesc { kind, owners: (0..p).collect() },
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_both_layouts() {
+        for kind in [LayoutKind::RowBlock, LayoutKind::RowCyclic] {
+            for p in [1, 2, 3, 5] {
+                let m = meta(17, 4, kind, p);
+                let full =
+                    DenseMatrix::from_vec(17, 4, random_matrix(9, 17, 4)).unwrap();
+                let panels = scatter_matrix(&m, &full).unwrap();
+                assert_eq!(panels.len(), p as usize);
+                let back = gather_matrix(&panels).unwrap();
+                assert_eq!(back, full, "{kind:?} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn misrouted_row_rejected() {
+        let m = meta(10, 2, LayoutKind::RowBlock, 2);
+        let mut p0 = LocalPanel::alloc(m, 0).unwrap();
+        // rows 0..5 belong to slot 0; row 7 belongs to slot 1
+        assert!(p0.set_row(7, &[1.0, 2.0]).is_err());
+        assert!(p0.set_row(2, &[1.0, 2.0]).is_ok());
+        assert_eq!(p0.rows_received(), 1);
+    }
+
+    #[test]
+    fn wrong_row_length_rejected() {
+        let m = meta(4, 3, LayoutKind::RowBlock, 1);
+        let mut p = LocalPanel::alloc(m, 0).unwrap();
+        assert!(p.set_row(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn get_row_reads_back() {
+        let m = meta(6, 2, LayoutKind::RowCyclic, 2);
+        let mut p1 = LocalPanel::alloc(m, 1).unwrap();
+        p1.set_row(3, &[9.0, 8.0]).unwrap();
+        assert_eq!(p1.get_row(3).unwrap(), &[9.0, 8.0]);
+        assert!(p1.get_row(2).is_err());
+    }
+
+    #[test]
+    fn from_local_validates_shape() {
+        let m = meta(10, 2, LayoutKind::RowBlock, 2);
+        let ok = DenseMatrix::zeros(5, 2);
+        assert!(LocalPanel::from_local(m.clone(), 0, ok).is_ok());
+        let bad = DenseMatrix::zeros(4, 2);
+        assert!(LocalPanel::from_local(m, 0, bad).is_err());
+    }
+
+    #[test]
+    fn out_of_range_slot_rejected() {
+        let m = meta(10, 2, LayoutKind::RowBlock, 2);
+        assert!(LocalPanel::alloc(m, 5).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Layout redistribution: convert a distributed matrix from one row
+//! layout to another by an all-to-all row exchange over the session mesh.
+//!
+//! This is the "copying data from distributed data sets in Spark to
+//! distributed matrices in Elemental requires some changes in the layout
+//! of the data" step the paper calls out in §2.2, generalized so routines
+//! can also re-lay out intermediates (the redistribution proptest checks
+//! it is a permutation: no row lost, duplicated, or corrupted).
+
+use crate::comm::Mesh;
+use crate::elemental::{Layout, LocalPanel};
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, Reader, Writer};
+use crate::{Error, Result};
+
+/// SPMD: every session worker calls this with its panel of the source
+/// matrix; returns its panel of the same matrix under `new_kind`.
+/// Slot/rank correspondence: panel slot i == mesh rank i (the server
+/// assigns session ranks in owner order).
+pub fn redistribute(
+    mesh: &mut Mesh,
+    panel: &LocalPanel,
+    new_handle: u64,
+    new_kind: LayoutKind,
+) -> Result<LocalPanel> {
+    let p = mesh.size();
+    if panel.meta.layout.owners.len() != p {
+        return Err(Error::Shape(format!(
+            "redistribute: {} owners vs mesh size {p}",
+            panel.meta.layout.owners.len()
+        )));
+    }
+    let new_meta = MatrixMeta {
+        handle: new_handle,
+        rows: panel.meta.rows,
+        cols: panel.meta.cols,
+        layout: LayoutDesc { kind: new_kind, owners: panel.meta.layout.owners.clone() },
+    };
+    let new_layout = Layout::from_desc(&new_meta.layout, new_meta.rows)?;
+    let mut out = LocalPanel::alloc(new_meta, panel.slot)?;
+
+    // Bucket our rows by destination slot.
+    let mut buckets: Vec<Writer> = (0..p).map(|_| Writer::new()).collect();
+    let mut counts = vec![0u32; p];
+    for (r, row) in panel.iter_rows() {
+        let dest = new_layout.owner_slot(r) as usize;
+        buckets[dest].put_u64(r);
+        buckets[dest].put_f64_slice(row);
+        counts[dest] += 1;
+    }
+
+    // Keep our own rows.
+    let mine = std::mem::take(&mut buckets[panel.slot as usize]).into_bytes();
+    place_rows(&mut out, &mine, counts[panel.slot as usize])?;
+
+    // Shifted all-to-all: at step s we send to rank+s and receive from
+    // rank-s; Mesh::exchange overlaps the two so cycles cannot deadlock.
+    let rank = mesh.rank();
+    for s in 1..p {
+        let to = (rank + s) % p;
+        let from = (rank + p - s) % p;
+        let mut payload = Writer::new();
+        payload.put_u32(counts[to]);
+        let body = std::mem::take(&mut buckets[to]).into_bytes();
+        payload.reserve(body.len());
+        let mut full = payload.into_bytes();
+        full.extend_from_slice(&body);
+        let got = mesh.exchange(to, &full, from)?;
+        let mut r = Reader::new(&got);
+        let n = r.get_u32()?;
+        place_rows_reader(&mut out, &mut r, n)?;
+    }
+    Ok(out)
+}
+
+fn place_rows(out: &mut LocalPanel, bytes: &[u8], n: u32) -> Result<()> {
+    let mut r = Reader::new(bytes);
+    place_rows_reader(out, &mut r, n)
+}
+
+fn place_rows_reader(out: &mut LocalPanel, r: &mut Reader<'_>, n: u32) -> Result<()> {
+    for _ in 0..n {
+        let gr = r.get_u64()?;
+        let vals = r.get_f64_slice()?;
+        out.set_row(gr, &vals)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_mesh;
+    use crate::elemental::panel::{gather_matrix, scatter_matrix};
+    use crate::linalg::DenseMatrix;
+    use crate::workload::random_matrix;
+    use std::sync::Arc;
+
+    fn run_redistribution(rows: u64, cols: u64, p: usize, from: LayoutKind, to: LayoutKind) {
+        let meta = MatrixMeta {
+            handle: 1,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: from, owners: (0..p as u32).collect() },
+        };
+        let full =
+            DenseMatrix::from_vec(rows as usize, cols as usize, random_matrix(3, rows as usize, cols as usize))
+                .unwrap();
+        let panels = Arc::new(scatter_matrix(&meta, &full).unwrap());
+        let panels2 = panels.clone();
+        let out = run_mesh(p, move |mut mesh| {
+            let mine = panels2[mesh.rank()].clone();
+            redistribute(&mut mesh, &mine, 2, to)
+        })
+        .unwrap();
+        let back = gather_matrix(&out).unwrap();
+        assert_eq!(back, full, "{from:?} -> {to:?} p={p}");
+        assert_eq!(out[0].meta.layout.kind, to);
+        assert_eq!(out[0].meta.handle, 2);
+    }
+
+    #[test]
+    fn block_to_cyclic_and_back() {
+        run_redistribution(23, 3, 3, LayoutKind::RowBlock, LayoutKind::RowCyclic);
+        run_redistribution(23, 3, 3, LayoutKind::RowCyclic, LayoutKind::RowBlock);
+    }
+
+    #[test]
+    fn identity_redistribution() {
+        run_redistribution(16, 2, 4, LayoutKind::RowBlock, LayoutKind::RowBlock);
+    }
+
+    #[test]
+    fn single_worker() {
+        run_redistribution(9, 2, 1, LayoutKind::RowBlock, LayoutKind::RowCyclic);
+    }
+
+    #[test]
+    fn uneven_rows() {
+        run_redistribution(17, 5, 4, LayoutKind::RowBlock, LayoutKind::RowCyclic);
+    }
+}

@@ -1,0 +1,106 @@
+//! Worker-local registry of distributed-matrix panels, keyed by handle.
+//! This is the storage behind the paper's `AlMatrix` handles: matrices
+//! live here, on the Alchemist side, across library calls; data only moves
+//! when the client explicitly sends or fetches it.
+
+use std::collections::HashMap;
+
+use crate::elemental::LocalPanel;
+use crate::{Error, Result};
+
+/// One worker's panel store.
+#[derive(Debug, Default)]
+pub struct MatrixStore {
+    panels: HashMap<u64, LocalPanel>,
+}
+
+impl MatrixStore {
+    pub fn new() -> MatrixStore {
+        MatrixStore::default()
+    }
+
+    pub fn insert(&mut self, panel: LocalPanel) -> Result<()> {
+        let h = panel.meta.handle;
+        if self.panels.contains_key(&h) {
+            return Err(Error::Server(format!("handle {h} already exists")));
+        }
+        self.panels.insert(h, panel);
+        Ok(())
+    }
+
+    pub fn get(&self, handle: u64) -> Result<&LocalPanel> {
+        self.panels
+            .get(&handle)
+            .ok_or_else(|| Error::Server(format!("unknown matrix handle {handle}")))
+    }
+
+    pub fn get_mut(&mut self, handle: u64) -> Result<&mut LocalPanel> {
+        self.panels
+            .get_mut(&handle)
+            .ok_or_else(|| Error::Server(format!("unknown matrix handle {handle}")))
+    }
+
+    pub fn remove(&mut self, handle: u64) -> Result<LocalPanel> {
+        self.panels
+            .remove(&handle)
+            .ok_or_else(|| Error::Server(format!("unknown matrix handle {handle}")))
+    }
+
+    pub fn contains(&self, handle: u64) -> bool {
+        self.panels.contains_key(&handle)
+    }
+
+    pub fn len(&self) -> usize {
+        self.panels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.panels.is_empty()
+    }
+
+    /// Total locally-stored bytes (memory accounting / metrics).
+    pub fn local_bytes(&self) -> u64 {
+        self.panels
+            .values()
+            .map(|p| (p.local().rows() * p.local().cols() * 8) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
+
+    fn panel(handle: u64, rows: u64) -> LocalPanel {
+        let meta = MatrixMeta {
+            handle,
+            rows,
+            cols: 2,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: vec![0] },
+        };
+        LocalPanel::alloc(meta, 0).unwrap()
+    }
+
+    #[test]
+    fn insert_get_remove_lifecycle() {
+        let mut s = MatrixStore::new();
+        assert!(s.is_empty());
+        s.insert(panel(1, 4)).unwrap();
+        s.insert(panel(2, 8)).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(1).unwrap().meta.rows, 4);
+        assert!(s.get(3).is_err());
+        assert_eq!(s.local_bytes(), (4 + 8) * 2 * 8);
+        s.remove(1).unwrap();
+        assert!(s.get(1).is_err());
+        assert!(s.remove(1).is_err());
+    }
+
+    #[test]
+    fn duplicate_handle_rejected() {
+        let mut s = MatrixStore::new();
+        s.insert(panel(1, 4)).unwrap();
+        assert!(s.insert(panel(1, 6)).is_err());
+    }
+}

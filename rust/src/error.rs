@@ -1,0 +1,89 @@
+//! Unified error type for the whole stack.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced anywhere in the Alchemist stack.
+#[derive(Debug)]
+pub enum Error {
+    /// Socket / framing failures on the control or data plane.
+    Io(std::io::Error),
+    /// Malformed or unexpected wire message.
+    Protocol(String),
+    /// Client asked for something the server cannot satisfy
+    /// (e.g. more workers than available, unknown matrix handle).
+    Server(String),
+    /// Library-interface errors (unknown library/routine, bad params).
+    Ali(String),
+    /// Shape/layout mismatches in the distributed-matrix substrate.
+    Shape(String),
+    /// Numerical failure (Lanczos breakdown, non-convergence, ...).
+    Numerical(String),
+    /// PJRT runtime errors (artifact missing, compile/execute failure).
+    Runtime(String),
+    /// Sparklet job aborted (task failure, executor OOM, ...).
+    Sparklet(String),
+    /// Configuration parse/validation errors.
+    Config(String),
+    /// Wall-clock budget exceeded (the paper's 30-minute debug queue).
+    Budget(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Protocol(s) => write!(f, "protocol: {s}"),
+            Error::Server(s) => write!(f, "server: {s}"),
+            Error::Ali(s) => write!(f, "ali: {s}"),
+            Error::Shape(s) => write!(f, "shape: {s}"),
+            Error::Numerical(s) => write!(f, "numerical: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Sparklet(s) => write!(f, "sparklet: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Budget(s) => write!(f, "budget: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// True if this error models the paper's "Spark failed" outcomes
+    /// (Table 1 NA rows: shuffle OOM / job abort) rather than a bug.
+    pub fn is_expected_failure(&self) -> bool {
+        matches!(self, Error::Sparklet(_) | Error::Budget(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        assert!(Error::Protocol("bad tag".into()).to_string().starts_with("protocol:"));
+        assert!(Error::Server("no workers".into()).to_string().contains("no workers"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn expected_failures_classified() {
+        assert!(Error::Sparklet("oom".into()).is_expected_failure());
+        assert!(Error::Budget("30min".into()).is_expected_failure());
+        assert!(!Error::Protocol("x".into()).is_expected_failure());
+    }
+}

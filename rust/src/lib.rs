@@ -1,0 +1,49 @@
+//! # Alchemist (Rust reproduction)
+//!
+//! A full reproduction of *Alchemist: An Apache Spark ⇔ MPI Interface*
+//! (Gittens et al., CUG/CCPE 2018) as a three-layer Rust + JAX + Pallas
+//! system. The original paper bridges Spark applications to MPI-based
+//! linear-algebra libraries through a socket-connected server; every
+//! substrate it depends on (Spark, MPI, Elemental, ARPACK, node-local BLAS)
+//! is rebuilt here:
+//!
+//! * [`sparklet`] — the Spark substitute: driver/executor mini framework
+//!   with RDDs, stages, a hash shuffle, and MLlib-style matrix types.
+//! * [`client`] — the Alchemist-Client Interface (ACI): `AlchemistContext`,
+//!   `AlMatrix` handles, row-wise matrix transfer over TCP sockets.
+//! * [`server`] — the Alchemist core: driver (sessions, worker allocation,
+//!   matrix registry) and workers (data plane, distributed storage, SPMD
+//!   routine execution).
+//! * [`ali`] — the Alchemist-Library Interface: the generic
+//!   (library, routine, params, handles) calling convention plus the
+//!   builtin `ElemLib` library (GEMM, truncated SVD, …).
+//! * [`comm`] — MPI-substitute communicator: p2p + collectives over TCP.
+//! * [`elemental`] — `DistMatrix` substrate (layouts, redistribution,
+//!   distributed GEMM).
+//! * [`arpack`] — ARPACK-substitute: thick-restart Lanczos truncated SVD.
+//! * [`linalg`] — local dense kernels (blocked GEMM, QR, tridiagonal eig).
+//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`) and runs them on the hot path.
+//! * [`protocol`] — the shared wire format (control + data plane).
+//!
+//! See `DESIGN.md` for the substitution table and the per-experiment index,
+//! and `EXPERIMENTS.md` for reproduced paper tables/figures.
+
+pub mod ali;
+pub mod arpack;
+pub mod bench_support;
+pub mod client;
+pub mod comm;
+pub mod config;
+pub mod elemental;
+pub mod error;
+pub mod linalg;
+pub mod logging;
+pub mod metrics;
+pub mod protocol;
+pub mod runtime;
+pub mod server;
+pub mod sparklet;
+pub mod workload;
+
+pub use error::{Error, Result};

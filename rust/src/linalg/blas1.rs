@@ -1,0 +1,92 @@
+//! Level-1 vector kernels. Written with 4-way unrolled loops so rustc
+//! auto-vectorizes them; these sit on the Lanczos hot path (reorthogonal-
+//! ization is all dot/axpy).
+
+/// x · y
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// ||x||_2 (no overflow guard — our data is O(1)-scaled).
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// x *= alpha
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// Normalize x in place; returns the original norm. A zero vector is left
+/// untouched and returns 0 (callers treat that as Lanczos breakdown).
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = nrm2(x);
+    if n > 0.0 {
+        scal(1.0 / n, x);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_on_odd_lengths() {
+        for n in [0, 1, 3, 4, 7, 16, 33] {
+            let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+            let y: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_scal() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scal(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut x = vec![3.0, 4.0];
+        let n = normalize(&mut x);
+        assert!((n - 5.0).abs() < 1e-12);
+        assert!((nrm2(&x) - 1.0).abs() < 1e-12);
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Cholesky factorization and triangular solves — the serial core of the
+//! distributed least-squares routine (`elemlib::lstsq`): the Gram matrix
+//! G = AᵀA is small (n x n, replicated after an all-reduce), so each rank
+//! factors it locally, exactly as Elemental-based normal-equation solvers
+//! do for tall-skinny systems.
+
+use crate::linalg::DenseMatrix;
+use crate::{Error, Result};
+
+/// Cholesky factorization A = L Lᵀ of a symmetric positive-definite
+/// matrix; returns lower-triangular L. Fails on non-SPD input.
+pub fn cholesky(a: &DenseMatrix) -> Result<DenseMatrix> {
+    let (n, m) = a.shape();
+    if n != m {
+        return Err(Error::Shape(format!("cholesky needs square, got {n}x{m}")));
+    }
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(Error::Numerical(format!(
+                        "cholesky: matrix not positive definite at pivot {i} ({s:.3e})"
+                    )));
+                }
+                l.set(i, i, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b with L lower triangular (forward substitution).
+pub fn solve_lower(l: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows();
+    if b.len() != n {
+        return Err(Error::Shape(format!("solve_lower: b len {} vs n {n}", b.len())));
+    }
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * y[k];
+        }
+        let d = l.get(i, i);
+        if d == 0.0 {
+            return Err(Error::Numerical(format!("solve_lower: zero pivot at {i}")));
+        }
+        y[i] = s / d;
+    }
+    Ok(y)
+}
+
+/// Solve Lᵀ x = y with L lower triangular (back substitution).
+pub fn solve_lower_t(l: &DenseMatrix, y: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows();
+    if y.len() != n {
+        return Err(Error::Shape(format!("solve_lower_t: y len {} vs n {n}", y.len())));
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.get(k, i) * x[k];
+        }
+        let d = l.get(i, i);
+        if d == 0.0 {
+            return Err(Error::Numerical(format!("solve_lower_t: zero pivot at {i}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Solve the SPD system G x = b via Cholesky (the normal-equations step).
+pub fn spd_solve(g: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(g)?;
+    let y = solve_lower(&l, b)?;
+    solve_lower_t(&l, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gemm, gemm_tn};
+    use crate::workload::Rng;
+
+    fn random_spd(seed: u64, n: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let b = DenseMatrix::from_fn(n + 4, n, |_, _| rng.next_signed());
+        // BᵀB + ridge is SPD
+        let mut g = gemm_tn(&b, &b).unwrap();
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + 0.5);
+        }
+        g
+    }
+
+    #[test]
+    fn factorization_reconstructs() {
+        for n in [1, 2, 5, 20, 50] {
+            let g = random_spd(n as u64, n);
+            let l = cholesky(&g).unwrap();
+            let llt = gemm(&l, &l.transpose()).unwrap();
+            assert!(llt.max_abs_diff(&g).unwrap() < 1e-9, "n={n}");
+            // strictly lower triangular above diagonal is zero
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spd_solve_recovers_known_solution() {
+        let n = 24;
+        let g = random_spd(7, n);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = g.matvec(&x_true).unwrap();
+        let x = spd_solve(&g, &b).unwrap();
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = DenseMatrix::identity(3);
+        a.set(1, 1, -1.0); // indefinite
+        assert!(cholesky(&a).is_err());
+        assert!(cholesky(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let g = random_spd(9, 12);
+        let l = cholesky(&g).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| i as f64 - 6.0).collect();
+        let y = solve_lower(&l, &b).unwrap();
+        // L y == b
+        let ly = l.matvec(&y).unwrap();
+        for i in 0..12 {
+            assert!((ly[i] - b[i]).abs() < 1e-10);
+        }
+        let x = solve_lower_t(&l, &y).unwrap();
+        let ltx = l.transpose().matvec(&x).unwrap();
+        for i in 0..12 {
+            assert!((ltx[i] - y[i]).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Row-major dense matrix storage — the local panel type used everywhere
+//! (worker panels of `DistMatrix`, sparklet blocks, PJRT buffers).
+
+use crate::{Error, Result};
+
+/// Row-major `rows x cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<DenseMatrix> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "data length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    /// Build from a closure over (i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> DenseMatrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> DenseMatrix {
+        DenseMatrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Copy a sub-block `[r0, r0+h) x [c0, c0+w)` out (zero-padded if the
+    /// block overhangs the matrix edge — the tiling glue relies on this).
+    pub fn block_padded(&self, r0: usize, c0: usize, h: usize, w: usize) -> DenseMatrix {
+        let mut b = DenseMatrix::zeros(h, w);
+        let hh = h.min(self.rows.saturating_sub(r0));
+        let ww = w.min(self.cols.saturating_sub(c0));
+        for i in 0..hh {
+            let src = &self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + ww];
+            b.data[i * w..i * w + ww].copy_from_slice(src);
+        }
+        b
+    }
+
+    /// Add `other`'s top-left `h x w` into this matrix at `(r0, c0)`,
+    /// clipping at our edges (inverse of `block_padded`).
+    pub fn add_block(&mut self, r0: usize, c0: usize, other: &DenseMatrix) {
+        let hh = other.rows.min(self.rows.saturating_sub(r0));
+        let ww = other.cols.min(self.cols.saturating_sub(c0));
+        for i in 0..hh {
+            for j in 0..ww {
+                self.data[(r0 + i) * self.cols + c0 + j] += other.get(i, j);
+            }
+        }
+    }
+
+    /// Overwrite the block at `(r0, c0)` with `other` (clipped).
+    pub fn set_block(&mut self, r0: usize, c0: usize, other: &DenseMatrix) {
+        let hh = other.rows.min(self.rows.saturating_sub(r0));
+        let ww = other.cols.min(self.cols.saturating_sub(c0));
+        for i in 0..hh {
+            let src = &other.data[i * other.cols..i * other.cols + ww];
+            self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + ww]
+                .copy_from_slice(src);
+        }
+    }
+
+    /// y = self * x (naive reference matvec; hot paths use gemm/runtime).
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(Error::Shape(format!("matvec: {} cols vs x len {}", self.cols, x.len())));
+        }
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = super::blas1::dot(self.row(i), x);
+        }
+        Ok(y)
+    }
+
+    /// y = selfᵀ * x.
+    pub fn matvec_t(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.rows {
+            return Err(Error::Shape(format!("matvec_t: {} rows vs x len {}", self.rows, x.len())));
+        }
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                super::blas1::axpy(xi, self.row(i), &mut y);
+            }
+        }
+        Ok(y)
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// max |self - other|; shapes must match.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!("{:?} vs {:?}", self.shape(), other.shape())));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max))
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+        assert!(DenseMatrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = DenseMatrix::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(4, 2), m.get(2, 4));
+    }
+
+    #[test]
+    fn block_padded_and_set_block_roundtrip() {
+        let m = DenseMatrix::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        let b = m.block_padded(3, 3, 4, 4); // overhangs by 2
+        assert_eq!(b.get(0, 0), m.get(3, 3));
+        assert_eq!(b.get(1, 1), m.get(4, 4));
+        assert_eq!(b.get(2, 2), 0.0); // padding
+        let mut out = DenseMatrix::zeros(5, 5);
+        out.set_block(3, 3, &b);
+        assert_eq!(out.get(4, 4), m.get(4, 4));
+        assert_eq!(out.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn add_block_accumulates() {
+        let mut m = DenseMatrix::zeros(2, 2);
+        let one = DenseMatrix::from_fn(2, 2, |_, _| 1.0);
+        m.add_block(0, 0, &one);
+        m.add_block(0, 0, &one);
+        assert_eq!(m.get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn matvec_and_transpose_agree_with_naive() {
+        let m = DenseMatrix::from_fn(4, 3, |i, j| (i + 2 * j) as f64);
+        let x = vec![1.0, -1.0, 2.0];
+        let y = m.matvec(&x).unwrap();
+        for i in 0..4 {
+            let want: f64 = (0..3).map(|j| m.get(i, j) * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-12);
+        }
+        let z = m.matvec_t(&y).unwrap();
+        for j in 0..3 {
+            let want: f64 = (0..4).map(|i| m.get(i, j) * y[i]).sum();
+            assert!((z[j] - want).abs() < 1e-12);
+        }
+        assert!(m.matvec(&[1.0]).is_err());
+        assert!(m.matvec_t(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn frobenius() {
+        let m = DenseMatrix::from_vec(1, 2, vec![3.0, 4.0]).unwrap();
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_matvec_is_noop() {
+        let i = DenseMatrix::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.matvec(&x).unwrap(), x);
+    }
+}

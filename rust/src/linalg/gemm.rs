@@ -1,0 +1,247 @@
+//! Cache-blocked, multi-threaded native GEMM.
+//!
+//! This is the *fallback / ablation baseline* for the node-local compute:
+//! the production hot path runs the AOT-compiled Pallas tile kernel through
+//! PJRT (see `runtime`), and `ablate_gemm_backend` compares the two.
+//!
+//! Blocking: (MC x KC) panels of A against (KC x NC) panels of B with a
+//! 4x4 register micro-kernel; parallelized over row panels with scoped
+//! threads (no dependency on a global pool).
+
+use crate::linalg::DenseMatrix;
+use crate::{Error, Result};
+
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 256;
+
+/// C += A * B.
+pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb || c.shape() != (m, n) {
+        return Err(Error::Shape(format!(
+            "gemm: A {m}x{ka}, B {kb}x{n}, C {:?}",
+            c.shape()
+        )));
+    }
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let row_panels: Vec<usize> = (0..m).step_by(MC).collect();
+    if threads <= 1 || row_panels.len() <= 1 {
+        for &i0 in &row_panels {
+            gemm_row_panel(a, b, c, i0, (i0 + MC).min(m));
+        }
+        return Ok(());
+    }
+
+    // Partition C's rows across threads; each thread owns disjoint rows of
+    // C, so the unsafe split is race-free.
+    let c_cols = n;
+    let c_data = c.data_mut();
+    std::thread::scope(|scope| {
+        let chunk_rows = (m + threads - 1) / threads;
+        let mut rest = &mut c_data[..];
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < m {
+            let rows_here = chunk_rows.min(m - start);
+            let (mine, tail) = rest.split_at_mut(rows_here * c_cols);
+            rest = tail;
+            let i0 = start;
+            handles.push(scope.spawn(move || {
+                let mut local =
+                    DenseMatrix::from_vec(rows_here, c_cols, mine.to_vec()).unwrap();
+                let mut ii = 0;
+                while ii < rows_here {
+                    let hi = (ii + MC).min(rows_here);
+                    gemm_row_panel_offset(a, b, &mut local, i0, ii, hi);
+                    ii = hi;
+                }
+                mine.copy_from_slice(local.data());
+            }));
+            start += rows_here;
+        }
+        for h in handles {
+            h.join().expect("gemm worker panicked");
+        }
+    });
+    Ok(())
+}
+
+/// Serial panel update for rows [i0, i1) of C (C indexed globally).
+fn gemm_row_panel(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, i0: usize, i1: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    let mut kk = 0;
+    while kk < k {
+        let k1 = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let j1 = (jj + NC).min(n);
+            micro_block(a, b, c, i0, i1, kk, k1, jj, j1, 0);
+            jj = j1;
+        }
+        kk = k1;
+    }
+}
+
+/// Variant where C is a local slab whose row 0 corresponds to global row
+/// `global_i0`, updating local rows [li0, li1).
+fn gemm_row_panel_offset(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    c_local: &mut DenseMatrix,
+    global_i0: usize,
+    li0: usize,
+    li1: usize,
+) {
+    let k = a.cols();
+    let n = b.cols();
+    let mut kk = 0;
+    while kk < k {
+        let k1 = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let j1 = (jj + NC).min(n);
+            micro_block(a, b, c_local, global_i0 + li0, global_i0 + li1, kk, k1, jj, j1, global_i0);
+            jj = j1;
+        }
+        kk = k1;
+    }
+}
+
+/// Inner kernel: C[gi0..gi1, j0..j1] += A[gi0..gi1, k0..k1] * B[k0..k1, j0..j1]
+/// with C's rows stored starting at global row `c_row_base`.
+#[inline]
+fn micro_block(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    c: &mut DenseMatrix,
+    gi0: usize,
+    gi1: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    c_row_base: usize,
+) {
+    let n_c = c.cols();
+    let cd = c.data_mut();
+    for gi in gi0..gi1 {
+        let arow = a.row(gi);
+        let crow = &mut cd[(gi - c_row_base) * n_c..(gi - c_row_base + 1) * n_c];
+        for kk in k0..k1 {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            // contiguous j-loop: auto-vectorizes
+            for j in j0..j1 {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// C = A * B convenience.
+pub fn gemm(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let mut c = DenseMatrix::zeros(a.rows(), b.cols());
+    gemm_acc(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// C = Aᵀ * B (tall-A Gram products: Aᵀ(AV) in the SVD U-recovery).
+pub fn gemm_tn(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let (m, ka) = a.shape();
+    let (mb, n) = b.shape();
+    if m != mb {
+        return Err(Error::Shape(format!("gemm_tn: A {m}x{ka}, B {mb}x{n}")));
+    }
+    let mut c = DenseMatrix::zeros(ka, n);
+    // rank-1 accumulation: cache-friendly for row-major A and B
+    for i in 0..m {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(kk);
+            super::blas1::axpy(aik, brow, crow);
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> DenseMatrix {
+        DenseMatrix::from_fn(r, c, |_, _| rng.next_signed())
+    }
+
+    fn naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        DenseMatrix::from_fn(a.rows(), b.cols(), |i, j| {
+            (0..a.cols()).map(|k| a.get(i, k) * b.get(k, j)).sum()
+        })
+    }
+
+    #[test]
+    fn gemm_matches_naive_various_shapes() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (64, 64, 64), (100, 33, 257), (130, 70, 65)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let c = gemm(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            assert!(c.max_abs_diff(&want).unwrap() < 1e-10, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 16, 8);
+        let b = random(&mut rng, 8, 12);
+        let mut c = DenseMatrix::from_fn(16, 12, |i, j| (i + j) as f64);
+        let base = c.clone();
+        gemm_acc(&a, &b, &mut c).unwrap();
+        let mut want = naive(&a, &b);
+        want.add_block(0, 0, &base);
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn gemm_shape_errors() {
+        let a = DenseMatrix::zeros(2, 3);
+        let b = DenseMatrix::zeros(4, 2);
+        assert!(gemm(&a, &b).is_err());
+        let b2 = DenseMatrix::zeros(3, 2);
+        let mut c_bad = DenseMatrix::zeros(3, 3);
+        assert!(gemm_acc(&a, &b2, &mut c_bad).is_err());
+    }
+
+    #[test]
+    fn gemm_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, 40, 9);
+        let b = random(&mut rng, 40, 13);
+        let c = gemm_tn(&a, &b).unwrap();
+        let want = gemm(&a.transpose(), &b).unwrap();
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+        assert!(gemm_tn(&DenseMatrix::zeros(3, 2), &DenseMatrix::zeros(4, 2)).is_err());
+    }
+
+    #[test]
+    fn gemm_large_parallel_path() {
+        // big enough that the threaded path engages
+        let mut rng = Rng::new(4);
+        let a = random(&mut rng, 300, 50);
+        let b = random(&mut rng, 50, 40);
+        let c = gemm(&a, &b).unwrap();
+        assert!(c.max_abs_diff(&naive(&a, &b)).unwrap() < 1e-10);
+    }
+}

@@ -1,0 +1,23 @@
+//! Local dense linear algebra — the node-level substrate under both sides
+//! of the bridge.
+//!
+//! The original system leans on node-local BLAS/LAPACK (via Elemental) and
+//! ARPACK's tridiagonal machinery. We provide:
+//!
+//! * [`dense`] — the row-major `DenseMatrix` storage type,
+//! * [`gemm`] — cache-blocked, multi-threaded native GEMM (the fallback /
+//!   ablation baseline for the PJRT Pallas path),
+//! * [`blas1`] — vector kernels (dot, axpy, nrm2, scale),
+//! * [`qr`] — thin Householder QR,
+//! * [`tridiag`] — symmetric tridiagonal eigensolver (implicit QL with
+//!   Wilkinson shifts), the core of the ARPACK-substitute.
+
+pub mod blas1;
+pub mod cholesky;
+pub mod dense;
+pub mod gemm;
+pub mod qr;
+pub mod symeig;
+pub mod tridiag;
+
+pub use dense::DenseMatrix;

@@ -1,0 +1,136 @@
+//! Thin Householder QR for tall matrices (m >= n).
+//!
+//! Used by the ARPACK-substitute to re-orthonormalize restart bases and by
+//! tests as the orthonormality oracle.
+
+use crate::linalg::{blas1, DenseMatrix};
+use crate::{Error, Result};
+
+/// Thin QR: A (m x n, m >= n) -> (Q m x n with orthonormal columns,
+/// R n x n upper triangular) with A = Q R.
+pub fn qr_thin(a: &DenseMatrix) -> Result<(DenseMatrix, DenseMatrix)> {
+    let (m, n) = a.shape();
+    if m < n {
+        return Err(Error::Shape(format!("qr_thin needs m >= n, got {m}x{n}")));
+    }
+    // Work on a column-major copy for contiguous column access.
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+    let mut r = DenseMatrix::zeros(n, n);
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let x = &cols[k][k..];
+        let alpha = -x[0].signum() * blas1::nrm2(x);
+        let mut v = x.to_vec();
+        v[0] -= alpha;
+        let vnorm = blas1::nrm2(&v);
+        if vnorm > 0.0 {
+            blas1::scal(1.0 / vnorm, &mut v);
+        }
+        // Apply H_k = I - 2 v vᵀ to remaining columns.
+        for col in cols.iter_mut().skip(k) {
+            let tail = &mut col[k..];
+            let proj = 2.0 * blas1::dot(&v, tail);
+            blas1::axpy(-proj, &v, tail);
+        }
+        r.set(k, k, cols[k][k]);
+        for j in k + 1..n {
+            r.set(k, j, cols[j][k]);
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 ... H_{n-1} * [I_n; 0] by back-application.
+    let mut q = DenseMatrix::zeros(m, n);
+    for j in 0..n {
+        let mut e = vec![0.0; m];
+        e[j] = 1.0;
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            let tail = &mut e[k..];
+            let proj = 2.0 * blas1::dot(v, tail);
+            blas1::axpy(-proj, v, tail);
+        }
+        for i in 0..m {
+            q.set(i, j, e[i]);
+        }
+    }
+    Ok((q, r))
+}
+
+/// Modified Gram-Schmidt: orthonormalize `v` against the columns stored in
+/// `basis` (each a length-n vector), twice (Kahan's "twice is enough").
+/// Returns the norm of the remainder; near-zero means `v` was in the span.
+pub fn mgs_orthonormalize(v: &mut [f64], basis: &[Vec<f64>]) -> f64 {
+    for _ in 0..2 {
+        for q in basis {
+            let proj = blas1::dot(q, v);
+            blas1::axpy(-proj, q, v);
+        }
+    }
+    blas1::normalize(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm;
+    use crate::workload::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> DenseMatrix {
+        DenseMatrix::from_fn(r, c, |_, _| rng.next_signed())
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Rng::new(1);
+        for (m, n) in [(4, 4), (10, 3), (50, 20)] {
+            let a = random(&mut rng, m, n);
+            let (q, r) = qr_thin(&a).unwrap();
+            let qr = gemm(&q, &r).unwrap();
+            assert!(qr.max_abs_diff(&a).unwrap() < 1e-10, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 30, 8);
+        let (q, _) = qr_thin(&a).unwrap();
+        let qtq = gemm(&q.transpose(), &q).unwrap();
+        assert!(qtq.max_abs_diff(&DenseMatrix::identity(8)).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, 12, 6);
+        let (_, r) = qr_thin(&a).unwrap();
+        for i in 1..6 {
+            for j in 0..i {
+                assert!(r.get(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_matrix_rejected() {
+        assert!(qr_thin(&DenseMatrix::zeros(2, 5)).is_err());
+    }
+
+    #[test]
+    fn mgs_produces_orthonormal_vector() {
+        let basis = vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 0.0]];
+        let mut v = vec![3.0, 4.0, 5.0];
+        let rem = mgs_orthonormalize(&mut v, &basis);
+        assert!(rem > 0.0);
+        assert!(blas1::dot(&v, &basis[0]).abs() < 1e-12);
+        assert!(blas1::dot(&v, &basis[1]).abs() < 1e-12);
+        assert!((blas1::nrm2(&v) - 1.0).abs() < 1e-12);
+        // vector already in span -> remainder ~ 0
+        let mut w = vec![0.5, -0.25, 0.0];
+        let rem2 = mgs_orthonormalize(&mut w, &basis);
+        assert!(rem2 < 1e-12);
+    }
+}

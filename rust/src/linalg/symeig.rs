@@ -1,0 +1,188 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization (EISPACK
+//! `tred2`) followed by the implicit-QL tridiagonal solve in [`tridiag`].
+//!
+//! The ARPACK-substitute needs this for its thick-restart projections: the
+//! restarted Rayleigh-quotient matrix T is "arrowhead + tridiagonal", not
+//! purely tridiagonal, so a full symmetric solve is required.
+
+use crate::linalg::{tridiag, DenseMatrix};
+use crate::{Error, Result};
+
+/// Eigendecomposition of a symmetric matrix.
+/// Returns `(eigenvalues ascending, Q)` with `A Q = Q diag(vals)`;
+/// column j of Q is the eigenvector for `vals[j]`.
+pub fn sym_eig(a: &DenseMatrix) -> Result<(Vec<f64>, DenseMatrix)> {
+    let (n, m) = a.shape();
+    if n != m {
+        return Err(Error::Shape(format!("sym_eig needs square, got {n}x{m}")));
+    }
+    if n == 0 {
+        return Ok((vec![], DenseMatrix::zeros(0, 0)));
+    }
+    // symmetry check (cheap, catches misuse early)
+    for i in 0..n {
+        for j in 0..i {
+            if (a.get(i, j) - a.get(j, i)).abs() > 1e-8 * (1.0 + a.get(i, j).abs()) {
+                return Err(Error::Numerical(format!(
+                    "sym_eig: matrix not symmetric at ({i},{j})"
+                )));
+            }
+        }
+    }
+
+    // --- Householder tridiagonalization with accumulated transform ---
+    // Work in-place on a copy; q accumulates the product of reflectors.
+    let mut t = a.clone();
+    let mut q = DenseMatrix::identity(n);
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n.saturating_sub(1)]; // off-diagonal
+
+    for k in 0..n.saturating_sub(2) {
+        // Householder vector annihilating column k below row k+1.
+        let mut x = vec![0.0; n - k - 1];
+        for i in k + 1..n {
+            x[i - k - 1] = t.get(i, k);
+        }
+        let alpha = -x[0].signum() * crate::linalg::blas1::nrm2(&x);
+        if alpha == 0.0 {
+            continue; // column already zero below subdiagonal
+        }
+        let mut v = x;
+        v[0] -= alpha;
+        let vnorm = crate::linalg::blas1::nrm2(&v);
+        if vnorm == 0.0 {
+            continue;
+        }
+        crate::linalg::blas1::scal(1.0 / vnorm, &mut v);
+
+        // Apply H = I - 2vv^T on both sides: T <- H T H.
+        // p = 2 * T[k+1.., k+1..] v  (using symmetry of the trailing block)
+        let nn = n - k - 1;
+        let mut p = vec![0.0; nn];
+        for i in 0..nn {
+            let mut s = 0.0;
+            for j in 0..nn {
+                s += t.get(k + 1 + i, k + 1 + j) * v[j];
+            }
+            p[i] = 2.0 * s;
+        }
+        let beta = crate::linalg::blas1::dot(&v, &p); // = 2 v^T T v
+        // w = p - beta v  (so T <- T - v w^T - w v^T)
+        let mut w = p;
+        crate::linalg::blas1::axpy(-beta, &v, &mut w);
+        for i in 0..nn {
+            for j in 0..nn {
+                let upd = v[i] * w[j] + w[i] * v[j];
+                let cur = t.get(k + 1 + i, k + 1 + j);
+                t.set(k + 1 + i, k + 1 + j, cur - upd);
+            }
+        }
+        // First column/row of the trailing block: T[k+1, k] = alpha, rest 0.
+        t.set(k + 1, k, alpha);
+        t.set(k, k + 1, alpha);
+        for i in k + 2..n {
+            t.set(i, k, 0.0);
+            t.set(k, i, 0.0);
+        }
+
+        // Accumulate Q <- Q H (apply reflector to Q's columns k+1..).
+        for r in 0..n {
+            let mut s = 0.0;
+            for j in 0..nn {
+                s += q.get(r, k + 1 + j) * v[j];
+            }
+            let s2 = 2.0 * s;
+            for j in 0..nn {
+                let cur = q.get(r, k + 1 + j);
+                q.set(r, k + 1 + j, cur - s2 * v[j]);
+            }
+        }
+    }
+
+    for i in 0..n {
+        d[i] = t.get(i, i);
+    }
+    for i in 0..n - 1 {
+        e[i] = t.get(i + 1, i);
+    }
+
+    // --- tridiagonal solve + back-transform ---
+    let (vals, z) = tridiag::tridiag_eig(&d, &e)?;
+    let zm = DenseMatrix::from_vec(n, n, z)?;
+    let vecs = crate::linalg::gemm::gemm(&q, &zm)?;
+    Ok((vals, vecs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm;
+    use crate::workload::Rng;
+
+    fn random_symmetric(seed: u64, n: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_signed() * 2.0;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_spectrum() {
+        for n in [1, 2, 3, 10, 40] {
+            let a = random_symmetric(n as u64, n);
+            let (vals, q) = sym_eig(&a).unwrap();
+            // A Q = Q diag(vals)
+            let aq = gemm(&a, &q).unwrap();
+            let ql = DenseMatrix::from_fn(n, n, |i, j| q.get(i, j) * vals[j]);
+            assert!(aq.max_abs_diff(&ql).unwrap() < 1e-8, "n={n}");
+            // Q orthogonal
+            let qtq = gemm(&q.transpose(), &q).unwrap();
+            assert!(qtq.max_abs_diff(&DenseMatrix::identity(n)).unwrap() < 1e-9);
+            // ascending
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_input() {
+        let a = DenseMatrix::from_fn(3, 3, |i, j| if i == j { (3 - i) as f64 } else { 0.0 });
+        let (vals, _) = sym_eig(&a).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn known_arrowhead_spectrum() {
+        // arrowhead matrix like a post-restart T: diag(3, 1) + coupling row
+        let mut a = DenseMatrix::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 1.0);
+        a.set(2, 2, 2.0);
+        a.set(0, 2, 0.5);
+        a.set(2, 0, 0.5);
+        a.set(1, 2, 0.25);
+        a.set(2, 1, 0.25);
+        let (vals, q) = sym_eig(&a).unwrap();
+        // trace preserved
+        let tr: f64 = vals.iter().sum();
+        assert!((tr - 6.0).abs() < 1e-10);
+        let aq = gemm(&a, &q).unwrap();
+        let ql = DenseMatrix::from_fn(3, 3, |i, j| q.get(i, j) * vals[j]);
+        assert!(aq.max_abs_diff(&ql).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn rejects_nonsquare_and_asymmetric() {
+        assert!(sym_eig(&DenseMatrix::zeros(2, 3)).is_err());
+        let mut a = DenseMatrix::zeros(2, 2);
+        a.set(0, 1, 1.0); // not symmetric
+        assert!(sym_eig(&a).is_err());
+    }
+}

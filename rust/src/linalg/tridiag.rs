@@ -1,0 +1,185 @@
+//! Symmetric tridiagonal eigensolver — implicit QL with Wilkinson shifts
+//! (a port of the classic EISPACK `tql2` algorithm, as used inside ARPACK
+//! and LAPACK's `dsteqr`). This is the serial core of our ARPACK
+//! substitute: Lanczos reduces the Gram operator to tridiagonal form and
+//! this routine delivers its Ritz values/vectors.
+
+use crate::{Error, Result};
+
+/// Eigendecomposition of the symmetric tridiagonal matrix with diagonal
+/// `d` (len n) and off-diagonal `e` (len n-1, e[i] couples i and i+1).
+///
+/// Returns `(eigenvalues ascending, z)` where `z` is n x n row-major and
+/// column j (i.e. `z[i*n + j]` over i) is the eigenvector for value j.
+pub fn tridiag_eig(d_in: &[f64], e_in: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+    let n = d_in.len();
+    if n == 0 {
+        return Ok((vec![], vec![]));
+    }
+    if e_in.len() + 1 != n {
+        return Err(Error::Shape(format!("tridiag: d len {n}, e len {}", e_in.len())));
+    }
+    let mut d = d_in.to_vec();
+    // e is shifted so e[i] couples (i-1, i) internally, e[0] unused slot.
+    let mut e = vec![0.0; n];
+    e[..n - 1].copy_from_slice(e_in);
+    // z starts as identity; accumulates rotations.
+    let mut z = vec![0.0; n * n];
+    for i in 0..n {
+        z[i * n + i] = 1.0;
+    }
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal element to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::Numerical(format!(
+                    "tridiag_eig: no convergence at index {l} after 50 iterations"
+                )));
+            }
+            // Wilkinson shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut i = m;
+            while i > l {
+                i -= 1;
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into z (columns i and i+1).
+                for k in 0..n {
+                    f = z[k * n + i + 1];
+                    z[k * n + i + 1] = s * z[k * n + i] + c * f;
+                    z[k * n + i] = c * z[k * n + i] - s * f;
+                }
+            }
+            if r == 0.0 && i > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort eigenvalues ascending, permuting eigenvector columns.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut vecs = vec![0.0; n * n];
+    for (new_j, &old_j) in idx.iter().enumerate() {
+        for i in 0..n {
+            vecs[i * n + new_j] = z[i * n + old_j];
+        }
+    }
+    Ok((vals, vecs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::workload::Rng;
+
+    /// Reconstruct T from d, e for verification.
+    fn tridiag_matrix(d: &[f64], e: &[f64]) -> DenseMatrix {
+        let n = d.len();
+        DenseMatrix::from_fn(n, n, |i, j| {
+            if i == j {
+                d[i]
+            } else if j + 1 == i {
+                e[j]
+            } else if i + 1 == j {
+                e[i]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn two_by_two_analytic() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3
+        let (vals, _) = tridiag_eig(&[2.0, 2.0], &[1.0]).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let (vals, vecs) = tridiag_eig(&[3.0, 1.0, 2.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+        // each column must be a standard basis vector (up to sign)
+        for j in 0..3 {
+            let col: Vec<f64> = (0..3).map(|i| vecs[i * 3 + j]).collect();
+            let nnz = col.iter().filter(|x| x.abs() > 1e-12).count();
+            assert_eq!(nnz, 1);
+        }
+    }
+
+    #[test]
+    fn random_tridiag_reconstruction() {
+        let mut rng = Rng::new(11);
+        for n in [3, 8, 25, 60] {
+            let d: Vec<f64> = (0..n).map(|_| rng.next_signed() * 3.0).collect();
+            let e: Vec<f64> = (0..n - 1).map(|_| rng.next_signed()).collect();
+            let (vals, vecs) = tridiag_eig(&d, &e).unwrap();
+            let t = tridiag_matrix(&d, &e);
+            let z = DenseMatrix::from_vec(n, n, vecs).unwrap();
+            // T Z ≈ Z diag(vals)
+            let tz = crate::linalg::gemm::gemm(&t, &z).unwrap();
+            let zl = DenseMatrix::from_fn(n, n, |i, j| z.get(i, j) * vals[j]);
+            assert!(tz.max_abs_diff(&zl).unwrap() < 1e-9, "n={n}");
+            // eigenvalues ascending
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            // Z orthogonal
+            let ztz = crate::linalg::gemm::gemm(&z.transpose(), &z).unwrap();
+            assert!(ztz.max_abs_diff(&DenseMatrix::identity(n)).unwrap() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let (v, z) = tridiag_eig(&[], &[]).unwrap();
+        assert!(v.is_empty() && z.is_empty());
+        let (v, z) = tridiag_eig(&[5.0], &[]).unwrap();
+        assert_eq!(v, vec![5.0]);
+        assert_eq!(z, vec![1.0]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(tridiag_eig(&[1.0, 2.0], &[0.5, 0.5]).is_err());
+    }
+}

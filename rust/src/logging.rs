@@ -1,0 +1,124 @@
+//! Minimal leveled logger — the `spdlog` substitute from the paper's
+//! dependency list. Thread-safe, zero-dependency, with per-component tags.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Log severity. Ordered so that an `AtomicU8` threshold works.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+    Off = 5,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "trace" => Level::Trace,
+            "debug" => Level::Debug,
+            "info" => Level::Info,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            "off" => Level::Off,
+            _ => return None,
+        })
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+            Level::Off => "OFF  ",
+        }
+    }
+}
+
+/// Set the global log threshold (also honours `ALCHEMIST_LOG` at startup).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialise from the `ALCHEMIST_LOG` environment variable, if set.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("ALCHEMIST_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since process start, for compact timestamps.
+fn uptime() -> f64 {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[doc(hidden)]
+pub fn log(level: Level, component: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let line = format!("[{:9.3}] [{}] [{}] {}\n", uptime(), level.tag(), component, args);
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// `log!(Level::Info, "server", "worker {} up", id)`
+#[macro_export]
+macro_rules! log {
+    ($level:expr, $component:expr, $($arg:tt)*) => {
+        $crate::logging::log($level, $component, format_args!($($arg)*))
+    };
+}
+
+/// Component-tagged convenience macros.
+#[macro_export]
+macro_rules! info {
+    ($component:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Info, $component, $($arg)*) };
+}
+#[macro_export]
+macro_rules! debugln {
+    ($component:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Debug, $component, $($arg)*) };
+}
+#[macro_export]
+macro_rules! warnln {
+    ($component:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Warn, $component, $($arg)*) };
+}
+#[macro_export]
+macro_rules! errorln {
+    ($component:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Error, $component, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("OFF"), Some(Level::Off));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,131 @@
+//! `alchemist` — launcher CLI (the `Cori-start-alchemist.sh` analogue).
+//!
+//! ```text
+//! alchemist serve  [--config FILE] [--set k=v]...   start a server, print its address
+//! alchemist demo   [--config FILE] [--set k=v]...   end-to-end smoke demo
+//! alchemist info   [--config FILE] [--set k=v]...   resolved config + artifact inventory
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline build; no clap) but follows
+//! the same `--config` / `--set section.key=value` convention everywhere.
+
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::LayoutKind;
+use alchemist::runtime::PjrtRuntime;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: alchemist <serve|demo|info> [--config FILE] [--set section.key=value]..."
+    );
+    std::process::exit(2);
+}
+
+fn parse_args(args: &[String]) -> Result<(Option<String>, Vec<String>), String> {
+    let mut config = None;
+    let mut overrides = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                config = Some(args.get(i + 1).ok_or("--config needs a value")?.clone());
+                i += 2;
+            }
+            "--set" => {
+                overrides.push(args.get(i + 1).ok_or("--set needs key=value")?.clone());
+                i += 2;
+            }
+            other => return Err(format!("unknown flag {other:?}")),
+        }
+    }
+    Ok((config, overrides))
+}
+
+fn main() {
+    alchemist::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (config_file, overrides) = match parse_args(&args[1..]) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let cfg = match Config::resolve(config_file.as_deref(), &overrides) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&cfg),
+        "demo" => cmd_demo(&cfg),
+        "info" => cmd_info(&cfg),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(cfg: &Config) -> alchemist::Result<()> {
+    let server = start_server(cfg)?;
+    // Like the Cori script, publish the driver address for clients.
+    println!("ALCHEMIST_DRIVER={}", server.driver_addr);
+    println!("workers={} backend={}", cfg.server.workers, cfg.server.gemm_backend);
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_demo(cfg: &Config) -> alchemist::Result<()> {
+    println!("starting server with {} workers...", cfg.server.workers);
+    let server = start_server(cfg)?;
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "demo")?;
+    ac.request_workers(cfg.server.workers)?;
+    wrappers::register_elemlib(&ac)?;
+
+    let a = DenseMatrix::from_vec(64, 16, random_matrix(1, 64, 16))?;
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock)?;
+    let cond = wrappers::cond_est(&ac, &al_a)?;
+    println!("condest(A) = {cond:.3}");
+    let svd = wrappers::truncated_svd(&ac, &al_a, 4)?;
+    let s = ac.fetch_dense(&svd.s)?;
+    println!(
+        "top-4 singular values: {:?} ({} gram matvecs)",
+        (0..4).map(|i| (s.get(i, 0) * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+        svd.matvecs
+    );
+    ac.stop()?;
+    server.shutdown();
+    println!("demo OK");
+    Ok(())
+}
+
+fn cmd_info(cfg: &Config) -> alchemist::Result<()> {
+    println!("config: {cfg:#?}");
+    match PjrtRuntime::find_artifacts_dir(&cfg.server.artifacts_dir) {
+        Ok(dir) => {
+            println!("artifacts dir: {}", dir.display());
+            let mut names: Vec<String> = std::fs::read_dir(&dir)?
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.ends_with(".hlo.txt"))
+                .collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}

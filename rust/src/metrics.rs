@@ -1,0 +1,216 @@
+//! Phase timers and counters for the experiment harness.
+//!
+//! The paper reports three phases for every Alchemist call — **send**,
+//! **compute**, **receive** (Table 1, Fig 3) — plus total runtimes censored
+//! by a wall-clock budget (Fig 4). This module provides exactly those
+//! primitives so the benches can print paper-shaped rows.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A single named stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named phase durations (send/compute/receive/...).
+#[derive(Debug, Default)]
+pub struct PhaseTimes {
+    phases: Mutex<BTreeMap<String, Duration>>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name` (accumulating across repeated calls).
+    pub fn add(&self, name: &str, d: Duration) {
+        let mut m = self.phases.lock().unwrap();
+        *m.entry(name.to_string()).or_default() += d;
+    }
+
+    /// Time a closure under phase `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases.lock().unwrap().get(name).copied().unwrap_or_default()
+    }
+
+    pub fn get_secs(&self, name: &str) -> f64 {
+        self.get(name).as_secs_f64()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.lock().unwrap().values().copied().sum()
+    }
+
+    /// Fraction of total time spent in `name` (0 if nothing recorded).
+    pub fn fraction(&self, name: &str) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.get_secs(name) / total
+        }
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.phases
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_secs_f64()))
+            .collect()
+    }
+
+    pub fn clear(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+}
+
+/// Monotonic named counters (bytes sent, rows routed, messages, ...).
+#[derive(Debug, Default)]
+pub struct Counters {
+    counts: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        let mut m = self.counts.lock().unwrap();
+        *m.entry(name.to_string()).or_default() += n;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counts.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counts.lock().unwrap().clone()
+    }
+}
+
+/// Outcome of a budgeted run — mirrors the paper's `NA (t)` convention for
+/// runs that blew the debug-queue limit (Table 1 / Fig 4).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Budgeted<T> {
+    Completed { secs: f64, value: T },
+    /// Did not finish (or failed) within the budget; carries elapsed secs.
+    Na { secs: f64, reason: String },
+}
+
+impl<T> Budgeted<T> {
+    pub fn secs(&self) -> f64 {
+        match self {
+            Budgeted::Completed { secs, .. } | Budgeted::Na { secs, .. } => *secs,
+        }
+    }
+
+    /// Paper-style cell: `12.3` or `NA (476.7s)`.
+    pub fn cell(&self) -> String {
+        match self {
+            Budgeted::Completed { secs, .. } => format!("{secs:.1}"),
+            Budgeted::Na { secs, .. } => format!("NA ({secs:.1}s)"),
+        }
+    }
+
+    pub fn is_na(&self) -> bool {
+        matches!(self, Budgeted::Na { .. })
+    }
+}
+
+/// Run `f` under a wall-clock budget. `f` is responsible for checking the
+/// deadline cooperatively (we pass it the deadline); a failure or deadline
+/// overrun maps to `Na` like the paper's failed/timed-out Spark runs.
+pub fn run_budgeted<T>(
+    budget: Duration,
+    f: impl FnOnce(Instant) -> crate::Result<T>,
+) -> Budgeted<T> {
+    let deadline = Instant::now() + budget;
+    let t = Timer::start();
+    match f(deadline) {
+        Ok(v) if t.elapsed() <= budget => Budgeted::Completed { secs: t.elapsed_secs(), value: v },
+        Ok(_) => Budgeted::Na { secs: t.elapsed_secs(), reason: "budget exceeded".into() },
+        Err(e) => Budgeted::Na { secs: t.elapsed_secs(), reason: e.to_string() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate() {
+        let p = PhaseTimes::new();
+        p.add("send", Duration::from_millis(10));
+        p.add("send", Duration::from_millis(15));
+        p.add("compute", Duration::from_millis(75));
+        assert!((p.get_secs("send") - 0.025).abs() < 1e-9);
+        assert!((p.fraction("compute") - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timer_runs_forward() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn counters() {
+        let c = Counters::new();
+        c.add("bytes", 100);
+        c.add("bytes", 28);
+        assert_eq!(c.get("bytes"), 128);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn budgeted_na_formatting() {
+        let r: Budgeted<()> = Budgeted::Na { secs: 476.7, reason: "oom".into() };
+        assert_eq!(r.cell(), "NA (476.7s)");
+        assert!(r.is_na());
+    }
+
+    #[test]
+    fn run_budgeted_maps_errors_to_na() {
+        let r = run_budgeted(Duration::from_secs(10), |_| -> crate::Result<()> {
+            Err(crate::Error::Sparklet("shuffle oom".into()))
+        });
+        assert!(r.is_na());
+    }
+
+    #[test]
+    fn run_budgeted_completes() {
+        let r = run_budgeted(Duration::from_secs(10), |_| Ok(42u32));
+        match r {
+            Budgeted::Completed { value, .. } => assert_eq!(value, 42),
+            _ => panic!("expected completion"),
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Little-endian primitive codec over byte buffers.
+//!
+//! Hand-rolled (no serde): the data plane moves gigabytes of f64 rows and
+//! we want exact control over layout and zero surprise allocations.
+
+use crate::{Error, Result};
+
+/// Append-only encoder.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Writer {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Bulk f64 slice: length-prefixed, bytes are the IEEE754 LE values.
+    /// This is the data-plane hot path — one memcpy on LE hosts.
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        self.reserve(v.len() * 8);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn reserve(&mut self, n: usize) {
+        self.buf.reserve(n);
+    }
+}
+
+/// Cursor-style decoder over a received frame.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Safe pre-allocation hint for `n` wire-declared elements of at
+    /// least `min_bytes` each: never trust a length word further than the
+    /// bytes actually present (a corrupted/hostile count must not drive
+    /// `Vec::with_capacity` into an allocation abort — found by the
+    /// protocol fuzz property test).
+    pub fn cap_hint(&self, n: usize, min_bytes: usize) -> usize {
+        n.min(self.remaining() / min_bytes.max(1) + 1)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Protocol(format!(
+                "short read: need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Protocol(format!("bad utf8: {e}")))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_f64_slice(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?; // errors before any allocation if short
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(8) {
+            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u16(65535);
+        w.put_u32(123456);
+        w.put_u64(u64::MAX);
+        w.put_i64(-42);
+        w.put_f64(std::f64::consts::PI);
+        w.put_str("alchemist");
+        w.put_bytes(&[1, 2, 3]);
+        w.put_f64_slice(&[1.5, -2.5, 0.0]);
+        let bytes = w.into_bytes();
+
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u16().unwrap(), 65535);
+        assert_eq!(r.get_u32().unwrap(), 123456);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.get_str().unwrap(), "alchemist");
+        assert_eq!(r.get_bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_f64_slice().unwrap(), vec![1.5, -2.5, 0.0]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn short_read_is_protocol_error() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn nan_and_infinity_roundtrip() {
+        let mut w = Writer::new();
+        w.put_f64(f64::NAN);
+        w.put_f64(f64::INFINITY);
+        let b = w.into_bytes();
+        let mut r = Reader::new(&b);
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_f64().unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn empty_string_and_slice() {
+        let mut w = Writer::new();
+        w.put_str("");
+        w.put_f64_slice(&[]);
+        let b = w.into_bytes();
+        let mut r = Reader::new(&b);
+        assert_eq!(r.get_str().unwrap(), "");
+        assert!(r.get_f64_slice().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,121 @@
+//! Length-prefixed framing over blocking sockets.
+//!
+//! Every message on every Alchemist socket is `u32 LE length || payload`.
+//! A hard frame-size cap protects against corrupted length words; the data
+//! plane batches rows *under* this cap (client/send.rs).
+//!
+//! I/O model: blocking `std::io` streams served by dedicated threads (the
+//! offline build has no async runtime; the original system used
+//! Boost.Asio, but one-thread-per-socket preserves the same wire-level
+//! behaviour on our scale of tens of sockets).
+
+use std::io::{Read, Write};
+
+use crate::{Error, Result};
+
+/// 256 MiB — far above any legitimate frame (row batches are ~1 MiB).
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Write one frame (length word + payload).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!("frame too large: {} bytes", payload.len())));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame into a fresh buffer.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!("frame length {n} exceeds cap")));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read one frame into a reusable buffer (hot-path variant: the data-plane
+/// receive loop reuses one allocation across row batches).
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<usize> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!("frame length {n} exceeds cap")));
+    }
+    buf.clear();
+    buf.resize(n, 0);
+    r.read_exact(buf)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_over_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello alchemist").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello alchemist");
+        assert!(read_frame(&mut r).unwrap().is_empty());
+    }
+
+    #[test]
+    fn oversized_frame_rejected_on_write() {
+        let mut buf = Vec::new();
+        let big = vec![0u8; MAX_FRAME_BYTES + 1];
+        assert!(write_frame(&mut buf, &big).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_rejected_on_read() {
+        let mut r = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]); // only 3 of 10 bytes
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn read_into_reuses_buffer() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &[1, 2, 3]).unwrap();
+        write_frame(&mut stream, &[9; 10]).unwrap();
+        let mut r = Cursor::new(stream);
+        let mut buf = Vec::new();
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), 3);
+        assert_eq!(buf, vec![1, 2, 3]);
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), 10);
+        assert_eq!(buf, vec![9; 10]);
+    }
+
+    #[test]
+    fn roundtrip_over_real_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got = read_frame(&mut s).unwrap();
+            write_frame(&mut s, &got).unwrap();
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, b"ping").unwrap();
+        assert_eq!(read_frame(&mut c).unwrap(), b"ping");
+        t.join().unwrap();
+    }
+}

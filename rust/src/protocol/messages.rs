@@ -1,0 +1,882 @@
+//! Typed messages for the three Alchemist planes:
+//!
+//! * **client control** — Spark(let) driver ⇔ Alchemist driver
+//!   ([`ClientMsg`] / [`DriverMsg`]), mirroring the paper's §2.1: metadata
+//!   and non-distributed parameters go driver-to-driver;
+//! * **worker control** — Alchemist driver ⇒ its workers ([`WorkerCtl`] /
+//!   [`WorkerReply`]), the paper's per-session "dedicated MPI communicator"
+//!   relay;
+//! * **data plane** — client executors ⇔ Alchemist workers ([`DataMsg`]),
+//!   the row-wise matrix transfer of §2.1/§4.3.
+//!
+//! Every message is a tagged union encoded with the [`super::codec`]
+//! primitives; unknown tags are protocol errors (never panics).
+
+use crate::protocol::{Reader, Writer};
+use crate::{Error, Result};
+
+/// Protocol version for the handshake; bumped on wire changes.
+pub const PROTOCOL_VERSION: u16 = 3;
+
+/// Scalar / handle parameter value — the paper's "non-distributed input
+/// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+    /// A handle naming a distributed matrix resident on the Alchemist side.
+    Matrix(u64),
+}
+
+impl ParamValue {
+    pub fn encode(&self, w: &mut Writer) {
+        match self {
+            ParamValue::I64(v) => {
+                w.put_u8(0);
+                w.put_i64(*v);
+            }
+            ParamValue::F64(v) => {
+                w.put_u8(1);
+                w.put_f64(*v);
+            }
+            ParamValue::Bool(v) => {
+                w.put_u8(2);
+                w.put_bool(*v);
+            }
+            ParamValue::Str(v) => {
+                w.put_u8(3);
+                w.put_str(v);
+            }
+            ParamValue::Matrix(v) => {
+                w.put_u8(4);
+                w.put_u64(*v);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<ParamValue> {
+        Ok(match r.get_u8()? {
+            0 => ParamValue::I64(r.get_i64()?),
+            1 => ParamValue::F64(r.get_f64()?),
+            2 => ParamValue::Bool(r.get_bool()?),
+            3 => ParamValue::Str(r.get_str()?),
+            4 => ParamValue::Matrix(r.get_u64()?),
+            t => return Err(Error::Protocol(format!("bad ParamValue tag {t}"))),
+        })
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            ParamValue::I64(v) => Ok(*v),
+            _ => Err(Error::Ali(format!("expected i64, got {self:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            ParamValue::F64(v) => Ok(*v),
+            ParamValue::I64(v) => Ok(*v as f64),
+            _ => Err(Error::Ali(format!("expected f64, got {self:?}"))),
+        }
+    }
+
+    pub fn as_matrix(&self) -> Result<u64> {
+        match self {
+            ParamValue::Matrix(v) => Ok(*v),
+            _ => Err(Error::Ali(format!("expected matrix handle, got {self:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            ParamValue::Str(v) => Ok(v),
+            _ => Err(Error::Ali(format!("expected string, got {self:?}"))),
+        }
+    }
+}
+
+/// Named parameter list (order-preserving).
+pub type Params = Vec<(String, ParamValue)>;
+
+pub fn encode_params(w: &mut Writer, params: &Params) {
+    w.put_u32(params.len() as u32);
+    for (k, v) in params {
+        w.put_str(k);
+        v.encode(w);
+    }
+}
+
+pub fn decode_params(r: &mut Reader<'_>) -> Result<Params> {
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(r.cap_hint(n, 5));
+    for _ in 0..n {
+        let k = r.get_str()?;
+        let v = ParamValue::decode(r)?;
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+/// How a distributed matrix's rows are assigned to its owner workers.
+/// Shared by the client (routing rows on send) and workers (local storage);
+/// the math lives in `elemental::layout`, keyed off this descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutKind {
+    /// Contiguous row blocks: worker `i` owns rows `[i*b, min((i+1)*b, m))`
+    /// with `b = ceil(m / p)`. This is the layout RDD partitions map onto
+    /// most naturally (Elemental's VC,* analogue for our purposes).
+    RowBlock,
+    /// Row-cyclic: row `r` is owned by worker `r mod p` (Elemental's
+    /// cyclic distributions; used by the redistribution tests/ablation).
+    RowCyclic,
+}
+
+impl LayoutKind {
+    fn tag(self) -> u8 {
+        match self {
+            LayoutKind::RowBlock => 0,
+            LayoutKind::RowCyclic => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<LayoutKind> {
+        Ok(match t {
+            0 => LayoutKind::RowBlock,
+            1 => LayoutKind::RowCyclic,
+            _ => return Err(Error::Protocol(format!("bad LayoutKind tag {t}"))),
+        })
+    }
+}
+
+/// Full layout descriptor: kind + the ordered owner worker ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutDesc {
+    pub kind: LayoutKind,
+    /// Worker ids in slot order; slot index is what the layout math uses.
+    pub owners: Vec<u32>,
+}
+
+impl LayoutDesc {
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.kind.tag());
+        w.put_u32(self.owners.len() as u32);
+        for o in &self.owners {
+            w.put_u32(*o);
+        }
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<LayoutDesc> {
+        let kind = LayoutKind::from_tag(r.get_u8()?)?;
+        let n = r.get_u32()? as usize;
+        let mut owners = Vec::with_capacity(r.cap_hint(n, 4));
+        for _ in 0..n {
+            owners.push(r.get_u32()?);
+        }
+        Ok(LayoutDesc { kind, owners })
+    }
+}
+
+/// Metadata for a matrix resident on the Alchemist side — what an
+/// `AlMatrix` handle dereferences to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixMeta {
+    pub handle: u64,
+    pub rows: u64,
+    pub cols: u64,
+    pub layout: LayoutDesc,
+}
+
+impl MatrixMeta {
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.handle);
+        w.put_u64(self.rows);
+        w.put_u64(self.cols);
+        self.layout.encode(w);
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<MatrixMeta> {
+        Ok(MatrixMeta {
+            handle: r.get_u64()?,
+            rows: r.get_u64()?,
+            cols: r.get_u64()?,
+            layout: LayoutDesc::decode(r)?,
+        })
+    }
+}
+
+/// Address card for one Alchemist worker, as granted to a session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerInfo {
+    pub id: u32,
+    /// Data-plane socket address ("127.0.0.1:port").
+    pub data_addr: String,
+}
+
+impl WorkerInfo {
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.id);
+        w.put_str(&self.data_addr);
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<WorkerInfo> {
+        Ok(WorkerInfo { id: r.get_u32()?, data_addr: r.get_str()? })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client control plane
+// ---------------------------------------------------------------------------
+
+/// Messages from a client application's driver to the Alchemist driver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// Open a session (§3.2 step 2).
+    Handshake { app_name: String, version: u16 },
+    /// Ask for `count` workers (§3.2 step 3).
+    RequestWorkers { count: u32 },
+    /// Register an MPI-library wrapper (§3.3 `registerLibrary`).
+    RegisterLibrary { name: String, path: String },
+    /// Allocate an empty distributed matrix ahead of a row transfer.
+    CreateMatrix { rows: u64, cols: u64, kind: LayoutKind },
+    /// Invoke `library.routine(params)` (§3.3 `ac.run`).
+    RunRoutine { library: String, routine: String, params: Params },
+    /// Look up metadata for an existing handle.
+    FetchMatrixInfo { handle: u64 },
+    /// Drop a matrix from Alchemist-side storage.
+    ReleaseMatrix { handle: u64 },
+    /// Close the session (§3.3 `ac.stop()`).
+    Stop,
+    /// Server-wide status (worker pool occupancy) — launcher tooling.
+    ServerStatus,
+}
+
+impl ClientMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            ClientMsg::Handshake { app_name, version } => {
+                w.put_u8(0);
+                w.put_str(app_name);
+                w.put_u16(*version);
+            }
+            ClientMsg::RequestWorkers { count } => {
+                w.put_u8(1);
+                w.put_u32(*count);
+            }
+            ClientMsg::RegisterLibrary { name, path } => {
+                w.put_u8(2);
+                w.put_str(name);
+                w.put_str(path);
+            }
+            ClientMsg::CreateMatrix { rows, cols, kind } => {
+                w.put_u8(3);
+                w.put_u64(*rows);
+                w.put_u64(*cols);
+                w.put_u8(kind.tag());
+            }
+            ClientMsg::RunRoutine { library, routine, params } => {
+                w.put_u8(4);
+                w.put_str(library);
+                w.put_str(routine);
+                encode_params(&mut w, params);
+            }
+            ClientMsg::FetchMatrixInfo { handle } => {
+                w.put_u8(5);
+                w.put_u64(*handle);
+            }
+            ClientMsg::ReleaseMatrix { handle } => {
+                w.put_u8(6);
+                w.put_u64(*handle);
+            }
+            ClientMsg::Stop => w.put_u8(7),
+            ClientMsg::ServerStatus => w.put_u8(8),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ClientMsg> {
+        let mut r = Reader::new(buf);
+        let msg = match r.get_u8()? {
+            0 => ClientMsg::Handshake { app_name: r.get_str()?, version: r.get_u16()? },
+            1 => ClientMsg::RequestWorkers { count: r.get_u32()? },
+            2 => ClientMsg::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
+            3 => ClientMsg::CreateMatrix {
+                rows: r.get_u64()?,
+                cols: r.get_u64()?,
+                kind: LayoutKind::from_tag(r.get_u8()?)?,
+            },
+            4 => ClientMsg::RunRoutine {
+                library: r.get_str()?,
+                routine: r.get_str()?,
+                params: decode_params(&mut r)?,
+            },
+            5 => ClientMsg::FetchMatrixInfo { handle: r.get_u64()? },
+            6 => ClientMsg::ReleaseMatrix { handle: r.get_u64()? },
+            7 => ClientMsg::Stop,
+            8 => ClientMsg::ServerStatus,
+            t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+/// Replies from the Alchemist driver to a client driver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriverMsg {
+    HandshakeAck { session_id: u64, version: u16 },
+    WorkersGranted { workers: Vec<WorkerInfo> },
+    LibraryRegistered { name: String },
+    MatrixCreated { meta: MatrixMeta },
+    /// Routine outputs: scalar outputs by name + metadata for every new
+    /// distributed output matrix (each becomes an `AlMatrix` client-side).
+    RoutineResult { outputs: Params, new_matrices: Vec<MatrixMeta> },
+    MatrixInfo { meta: MatrixMeta },
+    Released { handle: u64 },
+    Stopped,
+    /// Reply to `ServerStatus`.
+    Status { total_workers: u32, free_workers: u32, sessions: u32 },
+    Err { message: String },
+}
+
+impl DriverMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            DriverMsg::HandshakeAck { session_id, version } => {
+                w.put_u8(0);
+                w.put_u64(*session_id);
+                w.put_u16(*version);
+            }
+            DriverMsg::WorkersGranted { workers } => {
+                w.put_u8(1);
+                w.put_u32(workers.len() as u32);
+                for wk in workers {
+                    wk.encode(&mut w);
+                }
+            }
+            DriverMsg::LibraryRegistered { name } => {
+                w.put_u8(2);
+                w.put_str(name);
+            }
+            DriverMsg::MatrixCreated { meta } => {
+                w.put_u8(3);
+                meta.encode(&mut w);
+            }
+            DriverMsg::RoutineResult { outputs, new_matrices } => {
+                w.put_u8(4);
+                encode_params(&mut w, outputs);
+                w.put_u32(new_matrices.len() as u32);
+                for m in new_matrices {
+                    m.encode(&mut w);
+                }
+            }
+            DriverMsg::MatrixInfo { meta } => {
+                w.put_u8(5);
+                meta.encode(&mut w);
+            }
+            DriverMsg::Released { handle } => {
+                w.put_u8(6);
+                w.put_u64(*handle);
+            }
+            DriverMsg::Stopped => w.put_u8(7),
+            DriverMsg::Err { message } => {
+                w.put_u8(8);
+                w.put_str(message);
+            }
+            DriverMsg::Status { total_workers, free_workers, sessions } => {
+                w.put_u8(9);
+                w.put_u32(*total_workers);
+                w.put_u32(*free_workers);
+                w.put_u32(*sessions);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DriverMsg> {
+        let mut r = Reader::new(buf);
+        let msg = match r.get_u8()? {
+            0 => DriverMsg::HandshakeAck { session_id: r.get_u64()?, version: r.get_u16()? },
+            1 => {
+                let n = r.get_u32()? as usize;
+                let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
+                for _ in 0..n {
+                    workers.push(WorkerInfo::decode(&mut r)?);
+                }
+                DriverMsg::WorkersGranted { workers }
+            }
+            2 => DriverMsg::LibraryRegistered { name: r.get_str()? },
+            3 => DriverMsg::MatrixCreated { meta: MatrixMeta::decode(&mut r)? },
+            4 => {
+                let outputs = decode_params(&mut r)?;
+                let n = r.get_u32()? as usize;
+                let mut new_matrices = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    new_matrices.push(MatrixMeta::decode(&mut r)?);
+                }
+                DriverMsg::RoutineResult { outputs, new_matrices }
+            }
+            5 => DriverMsg::MatrixInfo { meta: MatrixMeta::decode(&mut r)? },
+            6 => DriverMsg::Released { handle: r.get_u64()? },
+            7 => DriverMsg::Stopped,
+            8 => DriverMsg::Err { message: r.get_str()? },
+            9 => DriverMsg::Status {
+                total_workers: r.get_u32()?,
+                free_workers: r.get_u32()?,
+                sessions: r.get_u32()?,
+            },
+            t => return Err(Error::Protocol(format!("bad DriverMsg tag {t}"))),
+        };
+        Ok(msg)
+    }
+
+    /// Collapse `Err` replies into crate errors.
+    pub fn into_result(self) -> Result<DriverMsg> {
+        match self {
+            DriverMsg::Err { message } => Err(Error::Server(message)),
+            other => Ok(other),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data plane
+// ---------------------------------------------------------------------------
+
+/// One indexed row in flight (the paper's "each row of the RDD partitions
+/// ... transmitted as sequences of bytes").
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRow {
+    pub index: u64,
+    pub values: Vec<f64>,
+}
+
+/// Data-plane messages between a client executor and an Alchemist worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataMsg {
+    /// A batch of rows for `handle`. Batch size is the framing knob the
+    /// `ablate_framing` bench sweeps (1 row/frame = the paper's behaviour).
+    PutRows { handle: u64, rows: Vec<WireRow> },
+    /// Sender is done with this handle; worker replies `PutComplete`.
+    PutDone { handle: u64 },
+    PutComplete { handle: u64, rows_received: u64 },
+    /// Request this worker's locally-owned rows of `handle` in `[start, end)`.
+    GetRows { handle: u64, start: u64, end: u64 },
+    /// A batch of rows coming back.
+    RowBatch { handle: u64, rows: Vec<WireRow> },
+    /// End of a `GetRows` stream.
+    GetDone { handle: u64 },
+    Err { message: String },
+}
+
+impl DataMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            DataMsg::PutRows { handle, rows } => {
+                w.put_u8(0);
+                w.put_u64(*handle);
+                w.put_u32(rows.len() as u32);
+                for row in rows {
+                    w.put_u64(row.index);
+                    w.put_f64_slice(&row.values);
+                }
+            }
+            DataMsg::PutDone { handle } => {
+                w.put_u8(1);
+                w.put_u64(*handle);
+            }
+            DataMsg::PutComplete { handle, rows_received } => {
+                w.put_u8(2);
+                w.put_u64(*handle);
+                w.put_u64(*rows_received);
+            }
+            DataMsg::GetRows { handle, start, end } => {
+                w.put_u8(3);
+                w.put_u64(*handle);
+                w.put_u64(*start);
+                w.put_u64(*end);
+            }
+            DataMsg::RowBatch { handle, rows } => {
+                w.put_u8(4);
+                w.put_u64(*handle);
+                w.put_u32(rows.len() as u32);
+                for row in rows {
+                    w.put_u64(row.index);
+                    w.put_f64_slice(&row.values);
+                }
+            }
+            DataMsg::GetDone { handle } => {
+                w.put_u8(5);
+                w.put_u64(*handle);
+            }
+            DataMsg::Err { message } => {
+                w.put_u8(6);
+                w.put_str(message);
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DataMsg> {
+        let mut r = Reader::new(buf);
+        let tag = r.get_u8()?;
+        let msg = match tag {
+            0 | 4 => {
+                let handle = r.get_u64()?;
+                let n = r.get_u32()? as usize;
+                let mut rows = Vec::with_capacity(r.cap_hint(n, 12));
+                for _ in 0..n {
+                    let index = r.get_u64()?;
+                    let values = r.get_f64_slice()?;
+                    rows.push(WireRow { index, values });
+                }
+                if tag == 0 {
+                    DataMsg::PutRows { handle, rows }
+                } else {
+                    DataMsg::RowBatch { handle, rows }
+                }
+            }
+            1 => DataMsg::PutDone { handle: r.get_u64()? },
+            2 => DataMsg::PutComplete { handle: r.get_u64()?, rows_received: r.get_u64()? },
+            3 => DataMsg::GetRows { handle: r.get_u64()?, start: r.get_u64()?, end: r.get_u64()? },
+            5 => DataMsg::GetDone { handle: r.get_u64()? },
+            6 => DataMsg::Err { message: r.get_str()? },
+            t => return Err(Error::Protocol(format!("bad DataMsg tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker control plane (Alchemist driver -> workers)
+// ---------------------------------------------------------------------------
+
+/// Commands the Alchemist driver relays to its workers (§3.2: "receives
+/// control commands from the Spark driver and relays the relevant
+/// information to the worker processes").
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerCtl {
+    /// Phase 1 of session setup: bind a communicator listener for this
+    /// session and report its address (`WorkerReply::SessionReady`).
+    PrepareSession { session_id: u64 },
+    /// Phase 2: join the session's communicator group; `peers` are
+    /// (worker id, comm addr) of every member in rank order, `rank` is
+    /// this worker's rank. The driver sends this to *all* members before
+    /// collecting replies (mesh formation is collective).
+    NewSession { session_id: u64, rank: u32, peers: Vec<WorkerInfo> },
+    EndSession { session_id: u64 },
+    /// Allocate local storage for (this worker's slice of) a matrix.
+    AllocMatrix { session_id: u64, meta: MatrixMeta },
+    FreeMatrix { handle: u64 },
+    /// SPMD routine invocation: every session worker receives this and
+    /// enters the library collectively (the ALI dispatch of §2.3).
+    RunRoutine {
+        session_id: u64,
+        library: String,
+        routine: String,
+        params: Params,
+        /// Handles pre-assigned by the driver for the routine's distributed
+        /// outputs (workers must agree on ids without extra round trips).
+        output_handles: Vec<u64>,
+    },
+    RegisterLibrary { name: String, path: String },
+    Shutdown,
+}
+
+impl WorkerCtl {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            WorkerCtl::PrepareSession { session_id } => {
+                w.put_u8(7);
+                w.put_u64(*session_id);
+            }
+            WorkerCtl::NewSession { session_id, rank, peers } => {
+                w.put_u8(0);
+                w.put_u64(*session_id);
+                w.put_u32(*rank);
+                w.put_u32(peers.len() as u32);
+                for p in peers {
+                    p.encode(&mut w);
+                }
+            }
+            WorkerCtl::EndSession { session_id } => {
+                w.put_u8(1);
+                w.put_u64(*session_id);
+            }
+            WorkerCtl::AllocMatrix { session_id, meta } => {
+                w.put_u8(2);
+                w.put_u64(*session_id);
+                meta.encode(&mut w);
+            }
+            WorkerCtl::FreeMatrix { handle } => {
+                w.put_u8(3);
+                w.put_u64(*handle);
+            }
+            WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles } => {
+                w.put_u8(4);
+                w.put_u64(*session_id);
+                w.put_str(library);
+                w.put_str(routine);
+                encode_params(&mut w, params);
+                w.put_u32(output_handles.len() as u32);
+                for h in output_handles {
+                    w.put_u64(*h);
+                }
+            }
+            WorkerCtl::RegisterLibrary { name, path } => {
+                w.put_u8(5);
+                w.put_str(name);
+                w.put_str(path);
+            }
+            WorkerCtl::Shutdown => w.put_u8(6),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WorkerCtl> {
+        let mut r = Reader::new(buf);
+        let msg = match r.get_u8()? {
+            0 => {
+                let session_id = r.get_u64()?;
+                let rank = r.get_u32()?;
+                let n = r.get_u32()? as usize;
+                let mut peers = Vec::with_capacity(r.cap_hint(n, 8));
+                for _ in 0..n {
+                    peers.push(WorkerInfo::decode(&mut r)?);
+                }
+                WorkerCtl::NewSession { session_id, rank, peers }
+            }
+            1 => WorkerCtl::EndSession { session_id: r.get_u64()? },
+            2 => WorkerCtl::AllocMatrix {
+                session_id: r.get_u64()?,
+                meta: MatrixMeta::decode(&mut r)?,
+            },
+            3 => WorkerCtl::FreeMatrix { handle: r.get_u64()? },
+            4 => {
+                let session_id = r.get_u64()?;
+                let library = r.get_str()?;
+                let routine = r.get_str()?;
+                let params = decode_params(&mut r)?;
+                let n = r.get_u32()? as usize;
+                let mut output_handles = Vec::with_capacity(r.cap_hint(n, 8));
+                for _ in 0..n {
+                    output_handles.push(r.get_u64()?);
+                }
+                WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles }
+            }
+            5 => WorkerCtl::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
+            6 => WorkerCtl::Shutdown,
+            7 => WorkerCtl::PrepareSession { session_id: r.get_u64()? },
+            t => return Err(Error::Protocol(format!("bad WorkerCtl tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+/// Worker replies to driver commands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerReply {
+    Ok,
+    /// Rank-0's view of a routine's results (scalar outputs + output
+    /// matrix metadata); other ranks reply `Ok`.
+    RoutineDone { outputs: Params, new_matrices: Vec<MatrixMeta> },
+    /// Reply to `PrepareSession`: the bound communicator address.
+    SessionReady { comm_addr: String },
+    Err { message: String },
+}
+
+impl WorkerReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            WorkerReply::Ok => w.put_u8(0),
+            WorkerReply::RoutineDone { outputs, new_matrices } => {
+                w.put_u8(1);
+                encode_params(&mut w, outputs);
+                w.put_u32(new_matrices.len() as u32);
+                for m in new_matrices {
+                    m.encode(&mut w);
+                }
+            }
+            WorkerReply::SessionReady { comm_addr } => {
+                w.put_u8(3);
+                w.put_str(comm_addr);
+            }
+            WorkerReply::Err { message } => {
+                w.put_u8(2);
+                w.put_str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WorkerReply> {
+        let mut r = Reader::new(buf);
+        let msg = match r.get_u8()? {
+            0 => WorkerReply::Ok,
+            1 => {
+                let outputs = decode_params(&mut r)?;
+                let n = r.get_u32()? as usize;
+                let mut new_matrices = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    new_matrices.push(MatrixMeta::decode(&mut r)?);
+                }
+                WorkerReply::RoutineDone { outputs, new_matrices }
+            }
+            2 => WorkerReply::Err { message: r.get_str()? },
+            3 => WorkerReply::SessionReady { comm_addr: r.get_str()? },
+            t => return Err(Error::Protocol(format!("bad WorkerReply tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> MatrixMeta {
+        MatrixMeta {
+            handle: 42,
+            rows: 1000,
+            cols: 64,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: vec![0, 1, 2] },
+        }
+    }
+
+    #[test]
+    fn client_msgs_roundtrip() {
+        let msgs = vec![
+            ClientMsg::Handshake { app_name: "quickstart".into(), version: PROTOCOL_VERSION },
+            ClientMsg::RequestWorkers { count: 8 },
+            ClientMsg::RegisterLibrary { name: "elemlib".into(), path: "builtin:elemlib".into() },
+            ClientMsg::CreateMatrix { rows: 100, cols: 10, kind: LayoutKind::RowCyclic },
+            ClientMsg::RunRoutine {
+                library: "elemlib".into(),
+                routine: "gemm".into(),
+                params: vec![
+                    ("A".into(), ParamValue::Matrix(1)),
+                    ("B".into(), ParamValue::Matrix(2)),
+                    ("alpha".into(), ParamValue::F64(1.5)),
+                ],
+            },
+            ClientMsg::FetchMatrixInfo { handle: 9 },
+            ClientMsg::ReleaseMatrix { handle: 9 },
+            ClientMsg::Stop,
+            ClientMsg::ServerStatus,
+        ];
+        for m in msgs {
+            assert_eq!(ClientMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn driver_msgs_roundtrip() {
+        let msgs = vec![
+            DriverMsg::HandshakeAck { session_id: 7, version: PROTOCOL_VERSION },
+            DriverMsg::WorkersGranted {
+                workers: vec![WorkerInfo { id: 0, data_addr: "127.0.0.1:4000".into() }],
+            },
+            DriverMsg::LibraryRegistered { name: "elemlib".into() },
+            DriverMsg::MatrixCreated { meta: meta() },
+            DriverMsg::RoutineResult {
+                outputs: vec![("condest".into(), ParamValue::F64(123.0))],
+                new_matrices: vec![meta()],
+            },
+            DriverMsg::MatrixInfo { meta: meta() },
+            DriverMsg::Released { handle: 42 },
+            DriverMsg::Stopped,
+            DriverMsg::Status { total_workers: 8, free_workers: 3, sessions: 2 },
+            DriverMsg::Err { message: "no workers".into() },
+        ];
+        for m in msgs {
+            assert_eq!(DriverMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn data_msgs_roundtrip() {
+        let msgs = vec![
+            DataMsg::PutRows {
+                handle: 1,
+                rows: vec![
+                    WireRow { index: 0, values: vec![1.0, 2.0] },
+                    WireRow { index: 5, values: vec![-1.0] },
+                ],
+            },
+            DataMsg::PutDone { handle: 1 },
+            DataMsg::PutComplete { handle: 1, rows_received: 2 },
+            DataMsg::GetRows { handle: 1, start: 0, end: 10 },
+            DataMsg::RowBatch { handle: 1, rows: vec![WireRow { index: 3, values: vec![0.5] }] },
+            DataMsg::GetDone { handle: 1 },
+            DataMsg::Err { message: "unknown handle".into() },
+        ];
+        for m in msgs {
+            assert_eq!(DataMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn worker_msgs_roundtrip() {
+        let msgs = vec![
+            WorkerCtl::PrepareSession { session_id: 3 },
+            WorkerCtl::NewSession {
+                session_id: 3,
+                rank: 1,
+                peers: vec![WorkerInfo { id: 4, data_addr: "127.0.0.1:5000".into() }],
+            },
+            WorkerCtl::EndSession { session_id: 3 },
+            WorkerCtl::AllocMatrix { session_id: 3, meta: meta() },
+            WorkerCtl::FreeMatrix { handle: 42 },
+            WorkerCtl::RunRoutine {
+                session_id: 3,
+                library: "elemlib".into(),
+                routine: "truncated_svd".into(),
+                params: vec![("k".into(), ParamValue::I64(20))],
+                output_handles: vec![10, 11, 12],
+            },
+            WorkerCtl::RegisterLibrary { name: "x".into(), path: "builtin:elemlib".into() },
+            WorkerCtl::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(WorkerCtl::decode(&m.encode()).unwrap(), m);
+        }
+        let replies = vec![
+            WorkerReply::Ok,
+            WorkerReply::SessionReady { comm_addr: "127.0.0.1:9999".into() },
+            WorkerReply::RoutineDone {
+                outputs: vec![("iters".into(), ParamValue::I64(30))],
+                new_matrices: vec![meta()],
+            },
+            WorkerReply::Err { message: "boom".into() },
+        ];
+        for m in replies {
+            assert_eq!(WorkerReply::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn bad_tags_are_errors() {
+        assert!(ClientMsg::decode(&[99]).is_err());
+        assert!(DriverMsg::decode(&[99]).is_err());
+        assert!(DataMsg::decode(&[99]).is_err());
+        assert!(WorkerCtl::decode(&[99]).is_err());
+        assert!(WorkerReply::decode(&[99]).is_err());
+        assert!(ClientMsg::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn param_value_accessors() {
+        assert_eq!(ParamValue::I64(5).as_f64().unwrap(), 5.0);
+        assert!(ParamValue::Str("x".into()).as_i64().is_err());
+        assert_eq!(ParamValue::Matrix(9).as_matrix().unwrap(), 9);
+    }
+}

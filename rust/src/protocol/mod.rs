@@ -1,0 +1,20 @@
+//! Wire format shared by the control plane (client driver ⇔ Alchemist
+//! driver ⇔ workers) and the data plane (client executors ⇔ Alchemist
+//! workers).
+//!
+//! The paper transfers matrices "as sequences of bytes ... one row at a
+//! time" over TCP/IP sockets (Boost.Asio in the original). We keep the same
+//! row-oriented data plane but make the rows-per-frame batching explicit —
+//! §4.3 of the paper attributes the tall-skinny vs short-wide transfer gap
+//! to per-row message counts, and `ablate_framing` measures exactly that.
+//!
+//! All sockets are blocking `std::net` streams served by dedicated threads
+//! (offline build: no async runtime available).
+
+pub mod codec;
+pub mod frame;
+pub mod messages;
+
+pub use codec::{Reader, Writer};
+pub use frame::{read_frame, write_frame, MAX_FRAME_BYTES};
+pub use messages::*;

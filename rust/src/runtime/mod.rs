@@ -1,0 +1,383 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the request path.
+//!
+//! Threading: the `xla` crate's wrapper types hold raw C++ pointers and are
+//! deliberately not `Send`, so all PJRT state lives on one dedicated
+//! *runtime thread* that owns the `PjRtClient` and the compiled-executable
+//! cache (one executable per artifact — "one compiled executable per model
+//! variant"). Workers submit jobs as plain `Vec<f64>` buffers over an mpsc
+//! channel and block on a reply channel; the PJRT CPU client parallelizes
+//! each execution internally. Python is *never* on this path — artifacts
+//! are produced once by `make artifacts`.
+
+pub mod tiling;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::{Error, Result};
+
+/// One artifact input: either a volatile buffer (copied to the device per
+/// call) or a cache-keyed panel that is uploaded once and stays
+/// device-resident across calls (the Lanczos hot-path optimization — the
+/// A panel never changes between iterations, so re-copying it every
+/// matvec is pure waste; see EXPERIMENTS.md §Perf).
+pub enum JobInput {
+    Volatile(Vec<f64>, Vec<i64>),
+    Cached { key: u64, data: Arc<Vec<f64>>, dims: Vec<i64> },
+}
+
+enum Msg {
+    Job(Job),
+    /// Drop all cached buffers whose key has this base (see [`cache_key`]).
+    InvalidateBase(u64),
+}
+
+/// One execution request. Output: the artifact's single (tupled) result.
+struct Job {
+    artifact: String,
+    inputs: Vec<JobInput>,
+    reply: mpsc::Sender<Result<Vec<f64>>>,
+}
+
+/// Cache keys are `(base << 20) | chunk`: `base` identifies the logical
+/// matrix (e.g. its Alchemist handle), `chunk` the tile within it.
+pub fn cache_key(base: u64, chunk: u64) -> u64 {
+    (base << 20) | (chunk & 0xF_FFFF)
+}
+
+/// Handle to the runtime thread. Cheap to clone; all clones feed the same
+/// executor cache.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    /// One PJRT client per thread — the "each MPI rank owns its BLAS"
+    /// model. Jobs with cached inputs route by cache base (buffer
+    /// affinity); volatile-only jobs round-robin.
+    txs: Vec<mpsc::Sender<Msg>>,
+    rr: Arc<std::sync::atomic::AtomicUsize>,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("dir", &self.dir)
+            .field("threads", &self.txs.len())
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Start a runtime pool serving artifacts from `dir` (auto-sized).
+    pub fn start(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let threads = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+            .clamp(2, 8);
+        Self::start_pool(dir, threads)
+    }
+
+    /// Start a runtime pool with an explicit thread count.
+    pub fn start_pool(dir: impl AsRef<Path>, threads: usize) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.exists() {
+            return Err(Error::Runtime(format!(
+                "artifacts directory {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let mut txs = Vec::with_capacity(threads.max(1));
+        for i in 0..threads.max(1) {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let thread_dir = dir.clone();
+            std::thread::Builder::new()
+                .name(format!("pjrt-runtime-{i}"))
+                .spawn(move || runtime_thread(thread_dir, rx))
+                .map_err(|e| Error::Runtime(format!("spawn runtime thread: {e}")))?;
+            txs.push(tx);
+        }
+        Ok(PjrtRuntime {
+            txs,
+            rr: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            dir,
+        })
+    }
+
+    /// Process-wide shared runtime (examples/benches/workers share one
+    /// accelerator, like node-local BLAS shares cores).
+    pub fn global(dir: impl AsRef<Path>) -> Result<&'static PjrtRuntime> {
+        static GLOBAL: OnceLock<PjrtRuntime> = OnceLock::new();
+        if let Some(rt) = GLOBAL.get() {
+            return Ok(rt);
+        }
+        let rt = PjrtRuntime::start(dir)?;
+        Ok(GLOBAL.get_or_init(|| rt))
+    }
+
+    /// Locate the artifacts directory: explicit config value, else walk up
+    /// from CWD looking for `artifacts/` (so tests/benches work from any
+    /// workspace subdir).
+    pub fn find_artifacts_dir(configured: &str) -> Result<PathBuf> {
+        let p = PathBuf::from(configured);
+        if p.exists() {
+            return Ok(p);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.exists() {
+                return Ok(cand);
+            }
+            if !cur.pop() {
+                return Err(Error::Runtime(format!(
+                    "cannot locate artifacts dir (configured: {configured}) — run `make artifacts`"
+                )));
+            }
+        }
+    }
+
+    /// Execute `artifact` with volatile inputs; blocks until done.
+    pub fn execute(&self, artifact: &str, inputs: Vec<(Vec<f64>, Vec<i64>)>) -> Result<Vec<f64>> {
+        self.execute_with(
+            artifact,
+            inputs.into_iter().map(|(d, dims)| JobInput::Volatile(d, dims)).collect(),
+        )
+    }
+
+    /// Execute with a mix of cached (device-resident) and volatile inputs.
+    pub fn execute_with(&self, artifact: &str, inputs: Vec<JobInput>) -> Result<Vec<f64>> {
+        // Cached inputs pin the job to the thread holding their buffers.
+        let thread = inputs
+            .iter()
+            .find_map(|i| match i {
+                JobInput::Cached { key, .. } => Some((key >> 20) as usize % self.txs.len()),
+                _ => None,
+            })
+            .unwrap_or_else(|| {
+                self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.txs.len()
+            });
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.txs[thread]
+            .send(Msg::Job(Job { artifact: artifact.to_string(), inputs, reply: reply_tx }))
+            .map_err(|_| Error::Runtime("runtime thread gone".into()))?;
+        reply_rx.recv().map_err(|_| Error::Runtime("runtime thread dropped reply".into()))?
+    }
+
+    /// Drop every cached buffer belonging to `base` (fire-and-forget).
+    pub fn invalidate_base(&self, base: u64) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::InvalidateBase(base));
+        }
+    }
+
+    /// True if the artifact file exists (without compiling it).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// All PJRT state, owned by the runtime thread.
+struct RtState {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-resident input buffers keyed by [`cache_key`].
+    buffers: HashMap<u64, xla::PjRtBuffer>,
+}
+
+fn runtime_thread(dir: PathBuf, rx: mpsc::Receiver<Msg>) {
+    // The client is created lazily so a missing libxla only fails jobs,
+    // not process startup.
+    let mut state: Option<RtState> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Job(job) => {
+                let result = run_job(&dir, &mut state, &job);
+                let _ = job.reply.send(result);
+            }
+            Msg::InvalidateBase(base) => {
+                if let Some(st) = state.as_mut() {
+                    st.buffers.retain(|k, _| (k >> 20) != base);
+                }
+            }
+        }
+    }
+}
+
+fn run_job(dir: &Path, state: &mut Option<RtState>, job: &Job) -> Result<Vec<f64>> {
+    if state.is_none() {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e:?}")))?;
+        *state = Some(RtState { client, exes: HashMap::new(), buffers: HashMap::new() });
+    }
+    let st = state.as_mut().unwrap();
+
+    if !st.exes.contains_key(&job.artifact) {
+        let path = dir.join(format!("{}.hlo.txt", job.artifact));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("bad artifact path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e:?}", job.artifact)))?;
+        st.exes.insert(job.artifact.clone(), exe);
+    }
+
+    // f32 artifacts (ablation) take converted inputs; everything else f64.
+    let f32_mode = job.artifact.contains("_f32_");
+
+    // Materialize missing cached buffers first (uploads happen once per
+    // key), then run everything through execute_b on device buffers.
+    for input in &job.inputs {
+        if let JobInput::Cached { key, data, dims } = input {
+            if f32_mode {
+                return Err(Error::Runtime("cached inputs unsupported for f32 artifacts".into()));
+            }
+            if !st.buffers.contains_key(key) {
+                let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+                let buf = st
+                    .client
+                    .buffer_from_host_buffer::<f64>(data, &udims, None)
+                    .map_err(|e| Error::Runtime(format!("buffer upload: {e:?}")))?;
+                st.buffers.insert(*key, buf);
+            }
+        }
+    }
+
+    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut arg_refs: Vec<&xla::PjRtBuffer> = Vec::new();
+    // two passes: build owned volatile buffers, then collect refs
+    for input in &job.inputs {
+        if let JobInput::Volatile(data, dims) = input {
+            let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+            let buf = if f32_mode {
+                let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                st.client
+                    .buffer_from_host_buffer::<f32>(&f32s, &udims, None)
+                    .map_err(|e| Error::Runtime(format!("buffer upload: {e:?}")))?
+            } else {
+                st.client
+                    .buffer_from_host_buffer::<f64>(data, &udims, None)
+                    .map_err(|e| Error::Runtime(format!("buffer upload: {e:?}")))?
+            };
+            owned.push(buf);
+        }
+    }
+    let mut owned_it = owned.iter();
+    for input in &job.inputs {
+        match input {
+            JobInput::Volatile(..) => arg_refs.push(owned_it.next().unwrap()),
+            JobInput::Cached { key, .. } => arg_refs.push(st.buffers.get(key).unwrap()),
+        }
+    }
+
+    let exe = st.exes.get(&job.artifact).unwrap();
+    let result = exe
+        .execute_b::<&xla::PjRtBuffer>(&arg_refs)
+        .map_err(|e| Error::Runtime(format!("execute {}: {e:?}", job.artifact)))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal: {e:?}")))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(|e| Error::Runtime(format!("to_tuple1: {e:?}")))?;
+    if f32_mode {
+        let v: Vec<f32> =
+            out.to_vec().map_err(|e| Error::Runtime(format!("to_vec f32: {e:?}")))?;
+        Ok(v.into_iter().map(|x| x as f64).collect())
+    } else {
+        out.to_vec().map_err(|e| Error::Runtime(format!("to_vec f64: {e:?}")))
+    }
+}
+
+/// Lazily-started shared runtime keyed by artifacts dir, for call sites
+/// that only have a `Config`.
+pub fn runtime_from_config(cfg: &crate::config::ServerConfig) -> Result<&'static PjrtRuntime> {
+    static BY_DIR: OnceLock<Mutex<HashMap<PathBuf, &'static PjrtRuntime>>> = OnceLock::new();
+    let dir = PjrtRuntime::find_artifacts_dir(&cfg.artifacts_dir)?;
+    let map = BY_DIR.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = map.lock().unwrap();
+    if let Some(rt) = guard.get(&dir) {
+        return Ok(rt);
+    }
+    let rt: &'static PjrtRuntime = Box::leak(Box::new(PjrtRuntime::start(&dir)?));
+    guard.insert(dir, rt);
+    Ok(rt)
+}
+
+pub use tiling::PjrtBackend;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> &'static PjrtRuntime {
+        let dir = PjrtRuntime::find_artifacts_dir("artifacts").expect("artifacts dir");
+        PjrtRuntime::global(dir).expect("runtime")
+    }
+
+    #[test]
+    fn gemm_acc_artifact_executes() {
+        let rt = runtime();
+        let t = 256usize;
+        // A = I, B = 2I, acc = 3I  =>  out = 3I + 2I = 5I
+        let mut eye = vec![0.0; t * t];
+        let mut two = vec![0.0; t * t];
+        let mut three = vec![0.0; t * t];
+        for i in 0..t {
+            eye[i * t + i] = 1.0;
+            two[i * t + i] = 2.0;
+            three[i * t + i] = 3.0;
+        }
+        let dims = vec![t as i64, t as i64];
+        let out = rt
+            .execute(
+                "gemm_acc_f64_256",
+                vec![(eye, dims.clone()), (two, dims.clone()), (three, dims)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), t * t);
+        assert!((out[0] - 5.0).abs() < 1e-12);
+        assert!((out[1]).abs() < 1e-12);
+        assert!((out[t * t - 1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = runtime();
+        assert!(!rt.has_artifact("nope"));
+        assert!(rt.execute("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn gram_matvec_artifact_matches_native() {
+        let rt = runtime();
+        let (rows, n) = (1024usize, 256usize);
+        let a = crate::workload::random_matrix(3, rows, n);
+        let v: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
+        let out = rt
+            .execute(
+                "gram_matvec_f64_1024x256",
+                vec![
+                    (a.clone(), vec![rows as i64, n as i64]),
+                    (v.clone(), vec![n as i64, 1]),
+                ],
+            )
+            .unwrap();
+        // native reference
+        let am = crate::linalg::DenseMatrix::from_vec(rows, n, a).unwrap();
+        let t = am.matvec(&v).unwrap();
+        let want = am.matvec_t(&t).unwrap();
+        assert_eq!(out.len(), n);
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+}

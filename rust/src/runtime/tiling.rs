@@ -1,0 +1,341 @@
+//! Tiling/padding glue: maps arbitrary panel shapes onto the fixed-shape
+//! AOT artifacts.
+//!
+//! Artifacts are compiled once with static shapes (tile x tile); this
+//! module pads edge blocks with zeros and loops the (i, j, l) tile space,
+//! accumulating through the artifact's `acc` input — so a local GEMM of
+//! any size is a sequence of identical PJRT executions with zero
+//! recompilation. Padding is exact for GEMM: zero blocks contribute zero.
+
+use std::sync::Arc;
+
+use crate::elemental::dist_gemm::GemmBackend;
+use crate::linalg::DenseMatrix;
+use crate::runtime::{cache_key, JobInput, PjrtRuntime};
+use crate::{Error, Result};
+
+/// GEMM backend that routes node-local tile products through the PJRT
+/// runtime (the L1 Pallas kernel inside the `gemm_acc_*` artifacts).
+#[derive(Debug, Clone)]
+pub struct PjrtBackend {
+    rt: &'static PjrtRuntime,
+    tile: usize,
+    /// "f64" (default) or "f32" (ablation).
+    dtype: &'static str,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: &'static PjrtRuntime, tile: usize) -> Result<PjrtBackend> {
+        Self::with_dtype(rt, tile, "f64")
+    }
+
+    pub fn with_dtype(
+        rt: &'static PjrtRuntime,
+        tile: usize,
+        dtype: &'static str,
+    ) -> Result<PjrtBackend> {
+        let b = PjrtBackend { rt, tile, dtype };
+        if !rt.has_artifact(&b.artifact()) {
+            return Err(Error::Runtime(format!(
+                "artifact {} not exported (tile {tile}, dtype {dtype})",
+                b.artifact()
+            )));
+        }
+        Ok(b)
+    }
+
+    fn artifact(&self) -> String {
+        format!("gemm_acc_{}_{}", self.dtype, self.tile)
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+}
+
+impl GemmBackend for PjrtBackend {
+    fn gemm_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+        let (m, ka) = a.shape();
+        let (kb, n) = b.shape();
+        if ka != kb || c.shape() != (m, n) {
+            return Err(Error::Shape(format!(
+                "pjrt gemm: A {m}x{ka}, B {kb}x{n}, C {:?}",
+                c.shape()
+            )));
+        }
+        let t = self.tile;
+        let dims = vec![t as i64, t as i64];
+        let artifact = self.artifact();
+        let tiles = |x: usize| (x + t - 1) / t;
+        for bi in 0..tiles(m) {
+            for bj in 0..tiles(n) {
+                // accumulator tile starts as the current C block
+                let mut acc = c.block_padded(bi * t, bj * t, t, t).into_vec();
+                for bl in 0..tiles(ka) {
+                    let a_blk = a.block_padded(bi * t, bl * t, t, t).into_vec();
+                    let b_blk = b.block_padded(bl * t, bj * t, t, t).into_vec();
+                    acc = self.rt.execute(
+                        &artifact,
+                        vec![(a_blk, dims.clone()), (b_blk, dims.clone()), (acc, dims.clone())],
+                    )?;
+                }
+                let tile_mat = DenseMatrix::from_vec(t, t, acc)?;
+                c.set_block(bi * t, bj * t, &tile_mat);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        if self.dtype == "f32" {
+            "pjrt-f32"
+        } else {
+            "pjrt"
+        }
+    }
+}
+
+/// A row panel pre-chunked onto the fused `gram_matvec` artifact's static
+/// row tile, with each chunk **device-resident** under a cache key: the
+/// panel is uploaded to PJRT once and every subsequent Lanczos iteration
+/// only ships the (tiny) v vector. This is the production Gram-operator
+/// path (EXPERIMENTS.md §Perf documents the win over per-call copies).
+pub struct CachedGramPanel {
+    artifact: String,
+    rows_tile: usize,
+    n: usize,
+    /// (cache key, padded chunk data) per row chunk.
+    chunks: Vec<(u64, Arc<Vec<f64>>)>,
+}
+
+impl CachedGramPanel {
+    /// `base` must uniquely identify the panel process-wide (matrix
+    /// handle); freeing the matrix should call
+    /// `rt.invalidate_base(base)`.
+    pub fn new(rt: &PjrtRuntime, base: u64, a: &DenseMatrix) -> Result<Option<CachedGramPanel>> {
+        let (m, n) = a.shape();
+        // below this, native kernels win (see pjrt_gram_matvec)
+        if m * n < (1 << 19) {
+            return Ok(None);
+        }
+        let candidates: &[usize] = if m <= 1024 { &[1024, 4096] } else { &[4096, 1024] };
+        for &rows_tile in candidates {
+            let artifact = format!("gram_matvec_f64_{rows_tile}x{n}");
+            if !rt.has_artifact(&artifact) {
+                continue;
+            }
+            let mut chunks = Vec::new();
+            let mut r0 = 0usize;
+            let mut idx = 0u64;
+            while r0 < m {
+                let blk = a.block_padded(r0, 0, rows_tile, n);
+                chunks.push((cache_key(base, idx), Arc::new(blk.into_vec())));
+                r0 += rows_tile;
+                idx += 1;
+            }
+            return Ok(Some(CachedGramPanel { artifact, rows_tile, n, chunks }));
+        }
+        Ok(None) // no fused artifact for this width
+    }
+
+    /// w = Aᵀ(A v) over the cached chunks.
+    pub fn apply(&self, rt: &PjrtRuntime, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.n {
+            return Err(Error::Shape(format!("cached gram: v len {} vs {}", v.len(), self.n)));
+        }
+        let mut w = vec![0.0; self.n];
+        for (key, data) in &self.chunks {
+            let out = rt.execute_with(
+                &self.artifact,
+                vec![
+                    JobInput::Cached {
+                        key: *key,
+                        data: data.clone(),
+                        dims: vec![self.rows_tile as i64, self.n as i64],
+                    },
+                    JobInput::Volatile(v.to_vec(), vec![self.n as i64, 1]),
+                ],
+            )?;
+            crate::linalg::blas1::axpy(1.0, &out, &mut w);
+        }
+        Ok(w)
+    }
+}
+
+/// Gram matvec w = Aᵀ(A v) through PJRT, tiling A's rows over the fused
+/// `gram_matvec` artifacts when an exact row-tile exists, otherwise
+/// falling back to the gemv/gevm tile pair. `a` is the local row panel,
+/// `v` has length `a.cols()`.
+pub fn pjrt_gram_matvec(rt: &PjrtRuntime, a: &DenseMatrix, v: &[f64]) -> Result<Vec<f64>> {
+    let (m, n) = a.shape();
+    if v.len() != n {
+        return Err(Error::Shape(format!("gram_matvec: v len {} vs cols {n}", v.len())));
+    }
+    // Small panels: PJRT per-call overhead (buffer copies + dispatch)
+    // dwarfs the FLOPs — use the native kernels. Crossover measured in
+    // EXPERIMENTS.md §Perf.
+    if m * n < (1 << 19) {
+        let t = a.matvec(v)?;
+        return a.matvec_t(&t);
+    }
+    // Preferred: fused artifact with matching column count, row-tiled.
+    // Pick the smallest exported row tile that covers the panel to cut
+    // padding waste (1024 before 4096 for m <= 1024).
+    let candidates: &[usize] = if m <= 1024 { &[1024, 4096] } else { &[4096, 1024] };
+    for &rows_tile in candidates {
+        let name = format!("gram_matvec_f64_{rows_tile}x{n}");
+        if rt.has_artifact(&name) {
+            let mut w = vec![0.0; n];
+            let v_col: Vec<f64> = v.to_vec();
+            let mut r0 = 0;
+            while r0 < m {
+                let blk = a.block_padded(r0, 0, rows_tile, n);
+                let out = rt.execute(
+                    &name,
+                    vec![
+                        (blk.into_vec(), vec![rows_tile as i64, n as i64]),
+                        (v_col.clone(), vec![n as i64, 1]),
+                    ],
+                )?;
+                crate::linalg::blas1::axpy(1.0, &out, &mut w);
+                r0 += rows_tile;
+            }
+            return Ok(w);
+        }
+    }
+    // Fallback: t = A v (gemv tiles), w = Aᵀ t (gevm tiles). Tile size
+    // adapts to the panel so padding stays bounded.
+    let tile = if m.max(n) <= 2048 { 256usize } else { 1024usize };
+    let gemv_name = format!("gemv_acc_f64_{tile}");
+    let gevm_name = format!("gevm_acc_f64_{tile}");
+    let (gemv, gevm) = (gemv_name.as_str(), gevm_name.as_str());
+    if !rt.has_artifact(gemv) || !rt.has_artifact(gevm) {
+        return Err(Error::Runtime("no gemv/gevm artifacts exported".into()));
+    }
+    let t_dims = vec![tile as i64, tile as i64];
+    let v_dims = vec![tile as i64, 1];
+    let tiles = |x: usize| (x + tile - 1) / tile;
+
+    // t = A v
+    let mut tvec = vec![0.0; tiles(m) * tile];
+    for bi in 0..tiles(m) {
+        let mut acc = vec![0.0; tile];
+        for bj in 0..tiles(n) {
+            let a_blk = a.block_padded(bi * tile, bj * tile, tile, tile).into_vec();
+            let mut v_blk = vec![0.0; tile];
+            let upto = tile.min(n.saturating_sub(bj * tile));
+            v_blk[..upto].copy_from_slice(&v[bj * tile..bj * tile + upto]);
+            acc = rt.execute(
+                gemv,
+                vec![(a_blk, t_dims.clone()), (v_blk, v_dims.clone()), (acc, v_dims.clone())],
+            )?;
+        }
+        tvec[bi * tile..(bi + 1) * tile].copy_from_slice(&acc);
+    }
+
+    // w = Aᵀ t
+    let mut w = vec![0.0; n];
+    for bj in 0..tiles(n) {
+        let mut acc = vec![0.0; tile];
+        for bi in 0..tiles(m) {
+            let a_blk = a.block_padded(bi * tile, bj * tile, tile, tile).into_vec();
+            let t_blk = tvec[bi * tile..(bi + 1) * tile].to_vec();
+            acc = rt.execute(
+                gevm,
+                vec![(a_blk, t_dims.clone()), (t_blk, v_dims.clone()), (acc, v_dims.clone())],
+            )?;
+        }
+        let upto = tile.min(n.saturating_sub(bj * tile));
+        w[bj * tile..bj * tile + upto].copy_from_slice(&acc[..upto]);
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::random_matrix;
+
+    fn runtime() -> &'static PjrtRuntime {
+        let dir = PjrtRuntime::find_artifacts_dir("artifacts").expect("artifacts dir");
+        PjrtRuntime::global(dir).expect("runtime")
+    }
+
+    fn rand(seed: u64, r: usize, c: usize) -> DenseMatrix {
+        DenseMatrix::from_vec(r, c, random_matrix(seed, r, c)).unwrap()
+    }
+
+    #[test]
+    fn pjrt_gemm_matches_native_on_uneven_shapes() {
+        let rt = runtime();
+        let backend = PjrtBackend::new(rt, 256).unwrap();
+        for (m, k, n) in [(100, 50, 30), (256, 256, 256), (300, 257, 120)] {
+            let a = rand(1, m, k);
+            let b = rand(2, k, n);
+            let want = crate::linalg::gemm::gemm(&a, &b).unwrap();
+            let got = backend.gemm(&a, &b).unwrap();
+            assert!(got.max_abs_diff(&want).unwrap() < 1e-9, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn pjrt_gemm_acc_accumulates() {
+        let rt = runtime();
+        let backend = PjrtBackend::new(rt, 256).unwrap();
+        let a = rand(3, 64, 64);
+        let b = rand(4, 64, 64);
+        let mut c = rand(5, 64, 64);
+        let mut want = c.clone();
+        crate::linalg::gemm::gemm_acc(&a, &b, &mut want).unwrap();
+        backend.gemm_acc(&a, &b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn f32_backend_is_less_precise_but_close() {
+        let rt = runtime();
+        let backend = PjrtBackend::with_dtype(rt, 256, "f32").unwrap();
+        let a = rand(6, 64, 64);
+        let b = rand(7, 64, 64);
+        let want = crate::linalg::gemm::gemm(&a, &b).unwrap();
+        let got = backend.gemm(&a, &b).unwrap();
+        let diff = got.max_abs_diff(&want).unwrap();
+        assert!(diff < 1e-3, "f32 diff {diff}");
+        assert_eq!(backend.name(), "pjrt-f32");
+    }
+
+    #[test]
+    fn gram_matvec_fused_path_matches_native() {
+        let rt = runtime();
+        // n=256 hits the fused gram artifacts; m not a tile multiple and
+        // large enough to clear the native-kernel crossover.
+        let a = rand(8, 3000, 256);
+        let v: Vec<f64> = (0..256).map(|i| ((i * 13) % 11) as f64 - 5.0).collect();
+        let t = a.matvec(&v).unwrap();
+        let want = a.matvec_t(&t).unwrap();
+        let got = pjrt_gram_matvec(rt, &a, &v).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn gram_matvec_fallback_path_matches_native() {
+        let rt = runtime();
+        // n=300: no fused artifact -> gemv/gevm tile pair (256 tiles).
+        let a = rand(9, 2000, 300);
+        let v: Vec<f64> = (0..300).map(|i| (i as f64).sin()).collect();
+        let t = a.matvec(&v).unwrap();
+        let want = a.matvec_t(&t).unwrap();
+        let got = pjrt_gram_matvec(rt, &a, &v).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn missing_tile_artifact_rejected() {
+        let rt = runtime();
+        assert!(PjrtBackend::new(rt, 999).is_err());
+    }
+}

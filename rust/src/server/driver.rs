@@ -1,0 +1,402 @@
+//! Alchemist driver: client sessions, worker allocation, the global
+//! matrix-handle registry, and command relay to workers (paper §2.1, §3.2:
+//! "The Alchemist driver process receives control commands from the Spark
+//! driver, and it relays the relevant information to the worker
+//! processes").
+
+use std::collections::{BTreeSet, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::protocol::{
+    frame, ClientMsg, DriverMsg, LayoutDesc, MatrixMeta, WorkerCtl, WorkerInfo,
+    WorkerReply, PROTOCOL_VERSION,
+};
+use crate::{debugln, info, warnln, Error, Result};
+
+/// Handles the driver reserves per RunRoutine call for distributed
+/// outputs (unused ids are simply skipped — the space is 2^64).
+const OUTPUT_HANDLE_BLOCK: u64 = 16;
+
+/// One registered worker, driver side.
+pub struct WorkerConn {
+    pub id: u32,
+    pub data_addr: String,
+    /// Control stream; sessions own disjoint workers so contention is nil,
+    /// the mutex just keeps the send/recv pairs atomic.
+    pub ctl: Mutex<TcpStream>,
+}
+
+impl WorkerConn {
+    /// Send one command and read one reply (atomic under the stream lock).
+    pub fn call(&self, cmd: &WorkerCtl) -> Result<WorkerReply> {
+        let mut s = self.ctl.lock().unwrap();
+        frame::write_frame(&mut *s, &cmd.encode())?;
+        let buf = frame::read_frame(&mut *s)?;
+        WorkerReply::decode(&buf)
+    }
+
+    /// Send without reading the reply (collective commands: send to all,
+    /// then `recv_reply` from all).
+    pub fn send(&self, cmd: &WorkerCtl) -> Result<()> {
+        let mut s = self.ctl.lock().unwrap();
+        frame::write_frame(&mut *s, &cmd.encode())
+    }
+
+    pub fn recv_reply(&self) -> Result<WorkerReply> {
+        let mut s = self.ctl.lock().unwrap();
+        let buf = frame::read_frame(&mut *s)?;
+        WorkerReply::decode(&buf)
+    }
+}
+
+/// A client session: its worker group and the matrices it owns.
+struct Session {
+    id: u64,
+    app_name: String,
+    workers: Vec<u32>,
+    matrices: HashMap<u64, MatrixMeta>,
+}
+
+/// Shared driver state.
+pub struct DriverState {
+    pub workers: Vec<Arc<WorkerConn>>,
+    free: BTreeSet<u32>,
+    next_session: u64,
+    next_handle: u64,
+    active_sessions: u32,
+}
+
+impl DriverState {
+    fn worker(&self, id: u32) -> Arc<WorkerConn> {
+        self.workers[id as usize].clone()
+    }
+}
+
+/// Run the driver: accept client connections on `client_listener`, serve
+/// each on its own thread. Returns when `stop` is set and a final
+/// connection unblocks the accept loop.
+pub fn run_driver(
+    client_listener: TcpListener,
+    workers: Vec<Arc<WorkerConn>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let free: BTreeSet<u32> = workers.iter().map(|w| w.id).collect();
+    let state = Arc::new(Mutex::new(DriverState {
+        workers,
+        free,
+        next_session: 1,
+        next_handle: 1,
+        active_sessions: 0,
+    }));
+    info!("driver", "serving clients at {}", client_listener.local_addr()?);
+    for conn in client_listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(conn) = conn else { break };
+        let _ = conn.set_nodelay(true);
+        let state = state.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = serve_client(conn, state) {
+                debugln!("driver", "client session ended: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Serve one client control connection for its whole lifetime.
+fn serve_client(mut conn: TcpStream, state: Arc<Mutex<DriverState>>) -> Result<()> {
+    let mut session: Option<Session> = None;
+    let result = loop {
+        let buf = match frame::read_frame(&mut conn) {
+            Ok(b) => b,
+            Err(e) => break Err(e), // disconnect -> cleanup below
+        };
+        let msg = ClientMsg::decode(&buf)?;
+        let stop = matches!(msg, ClientMsg::Stop);
+        if stop {
+            // Clean up *before* acking Stop so a client that immediately
+            // reconnects sees its workers back in the pool.
+            if let Some(s) = session.take() {
+                cleanup_session(s, &state);
+            }
+        }
+        let reply = match handle_client_msg(msg, &mut session, &state) {
+            Ok(r) => r,
+            Err(e) => DriverMsg::Err { message: e.to_string() },
+        };
+        frame::write_frame(&mut conn, &reply.encode())?;
+        if stop {
+            break Ok(());
+        }
+    };
+    // Session cleanup: free matrices on workers, return workers to pool.
+    if let Some(s) = session.take() {
+        cleanup_session(s, &state);
+    }
+    result
+}
+
+fn cleanup_session(s: Session, state: &Arc<Mutex<DriverState>>) {
+    let worker_conns: Vec<Arc<WorkerConn>> = {
+        let st = state.lock().unwrap();
+        s.workers.iter().map(|&id| st.worker(id)).collect()
+    };
+    for w in &worker_conns {
+        for handle in s.matrices.keys() {
+            let _ = w.call(&WorkerCtl::FreeMatrix { handle: *handle });
+        }
+        let _ = w.call(&WorkerCtl::EndSession { session_id: s.id });
+    }
+    let mut st = state.lock().unwrap();
+    for id in s.workers {
+        st.free.insert(id);
+    }
+    st.active_sessions = st.active_sessions.saturating_sub(1);
+    info!("driver", "session {} ({}) closed", s.id, s.app_name);
+}
+
+fn handle_client_msg(
+    msg: ClientMsg,
+    session: &mut Option<Session>,
+    state: &Arc<Mutex<DriverState>>,
+) -> Result<DriverMsg> {
+    match msg {
+        ClientMsg::Handshake { app_name, version } => {
+            if version != PROTOCOL_VERSION {
+                return Err(Error::Protocol(format!(
+                    "protocol version mismatch: client {version}, server {PROTOCOL_VERSION}"
+                )));
+            }
+            let id = {
+                let mut st = state.lock().unwrap();
+                let id = st.next_session;
+                st.next_session += 1;
+                st.active_sessions += 1;
+                id
+            };
+            info!("driver", "session {id} opened by {app_name:?}");
+            *session = Some(Session {
+                id,
+                app_name,
+                workers: vec![],
+                matrices: HashMap::new(),
+            });
+            Ok(DriverMsg::HandshakeAck { session_id: id, version: PROTOCOL_VERSION })
+        }
+        ClientMsg::RequestWorkers { count } => {
+            let s = need_session(session)?;
+            if count == 0 {
+                return Err(Error::Server("cannot request 0 workers".into()));
+            }
+            let allocated: Vec<Arc<WorkerConn>> = {
+                let mut st = state.lock().unwrap();
+                if (st.free.len() as u32) < count {
+                    return Err(Error::Server(format!(
+                        "insufficient workers: requested {count}, available {}",
+                        st.free.len()
+                    )));
+                }
+                let ids: Vec<u32> = st.free.iter().take(count as usize).copied().collect();
+                for id in &ids {
+                    st.free.remove(id);
+                }
+                ids.iter().map(|&id| st.worker(id)).collect()
+            };
+            s.workers = allocated.iter().map(|w| w.id).collect();
+
+            // Two-phase communicator formation (see worker.rs).
+            let mut comm_addrs = Vec::with_capacity(allocated.len());
+            for w in &allocated {
+                match w.call(&WorkerCtl::PrepareSession { session_id: s.id })? {
+                    WorkerReply::SessionReady { comm_addr } => comm_addrs.push(comm_addr),
+                    other => {
+                        return Err(Error::Server(format!("bad PrepareSession reply {other:?}")))
+                    }
+                }
+            }
+            let peers: Vec<WorkerInfo> = allocated
+                .iter()
+                .zip(&comm_addrs)
+                .map(|(w, addr)| WorkerInfo { id: w.id, data_addr: addr.clone() })
+                .collect();
+            // Collective: send NewSession to all, then read all replies
+            // (mesh formation blocks until every member participates).
+            for (rank, w) in allocated.iter().enumerate() {
+                w.send(&WorkerCtl::NewSession {
+                    session_id: s.id,
+                    rank: rank as u32,
+                    peers: peers.clone(),
+                })?;
+            }
+            collect_ok(&allocated)?;
+
+            let workers = allocated
+                .iter()
+                .map(|w| WorkerInfo { id: w.id, data_addr: w.data_addr.clone() })
+                .collect();
+            info!("driver", "session {} granted workers {:?}", s.id, s.workers);
+            Ok(DriverMsg::WorkersGranted { workers })
+        }
+        ClientMsg::RegisterLibrary { name, path } => {
+            let s = need_session(session)?;
+            let conns = session_conns(s, state)?;
+            for w in &conns {
+                w.send(&WorkerCtl::RegisterLibrary { name: name.clone(), path: path.clone() })?;
+            }
+            collect_ok(&conns)?;
+            Ok(DriverMsg::LibraryRegistered { name })
+        }
+        ClientMsg::CreateMatrix { rows, cols, kind } => {
+            let s = need_session(session)?;
+            if s.workers.is_empty() {
+                return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
+            }
+            if rows == 0 || cols == 0 {
+                return Err(Error::Shape(format!("cannot create {rows}x{cols} matrix")));
+            }
+            let handle = {
+                let mut st = state.lock().unwrap();
+                let h = st.next_handle;
+                st.next_handle += 1;
+                h
+            };
+            let meta = MatrixMeta {
+                handle,
+                rows,
+                cols,
+                layout: LayoutDesc { kind, owners: s.workers.clone() },
+            };
+            let conns = session_conns(s, state)?;
+            for w in &conns {
+                w.send(&WorkerCtl::AllocMatrix { session_id: s.id, meta: meta.clone() })?;
+            }
+            collect_ok(&conns)?;
+            s.matrices.insert(handle, meta.clone());
+            Ok(DriverMsg::MatrixCreated { meta })
+        }
+        ClientMsg::RunRoutine { library, routine, params } => {
+            let s = need_session(session)?;
+            let conns = session_conns(s, state)?;
+            // Validate referenced handles belong to this session.
+            for (_, v) in &params {
+                if let crate::protocol::ParamValue::Matrix(h) = v {
+                    if !s.matrices.contains_key(h) {
+                        return Err(Error::Server(format!(
+                            "matrix handle {h} not owned by session {}",
+                            s.id
+                        )));
+                    }
+                }
+            }
+            let output_handles: Vec<u64> = {
+                let mut st = state.lock().unwrap();
+                let start = st.next_handle;
+                st.next_handle += OUTPUT_HANDLE_BLOCK;
+                (start..start + OUTPUT_HANDLE_BLOCK).collect()
+            };
+            for w in &conns {
+                w.send(&WorkerCtl::RunRoutine {
+                    session_id: s.id,
+                    library: library.clone(),
+                    routine: routine.clone(),
+                    params: params.clone(),
+                    output_handles: output_handles.clone(),
+                })?;
+            }
+            // rank 0 carries the result; all must succeed.
+            let mut result: Option<(Vec<(String, crate::protocol::ParamValue)>, Vec<MatrixMeta>)> =
+                None;
+            let mut first_err: Option<String> = None;
+            for (rank, w) in conns.iter().enumerate() {
+                match w.recv_reply()? {
+                    WorkerReply::Ok => {}
+                    WorkerReply::RoutineDone { outputs, new_matrices } => {
+                        if rank == 0 {
+                            result = Some((outputs, new_matrices));
+                        }
+                    }
+                    WorkerReply::Err { message } => {
+                        warnln!("driver", "worker {} failed {routine}: {message}", w.id);
+                        first_err.get_or_insert(message);
+                    }
+                    other => {
+                        first_err.get_or_insert(format!("unexpected reply {other:?}"));
+                    }
+                }
+            }
+            if let Some(msg) = first_err {
+                return Err(Error::Server(format!("routine {routine} failed: {msg}")));
+            }
+            let (outputs, new_matrices) = result
+                .ok_or_else(|| Error::Server("rank 0 returned no routine result".into()))?;
+            for m in &new_matrices {
+                s.matrices.insert(m.handle, m.clone());
+            }
+            Ok(DriverMsg::RoutineResult { outputs, new_matrices })
+        }
+        ClientMsg::FetchMatrixInfo { handle } => {
+            let s = need_session(session)?;
+            let meta = s
+                .matrices
+                .get(&handle)
+                .ok_or_else(|| Error::Server(format!("unknown handle {handle}")))?;
+            Ok(DriverMsg::MatrixInfo { meta: meta.clone() })
+        }
+        ClientMsg::ReleaseMatrix { handle } => {
+            let s = need_session(session)?;
+            if s.matrices.remove(&handle).is_none() {
+                return Err(Error::Server(format!("unknown handle {handle}")));
+            }
+            let conns = session_conns(s, state)?;
+            for w in &conns {
+                w.send(&WorkerCtl::FreeMatrix { handle })?;
+            }
+            collect_ok(&conns)?;
+            Ok(DriverMsg::Released { handle })
+        }
+        ClientMsg::Stop => Ok(DriverMsg::Stopped),
+        ClientMsg::ServerStatus => {
+            let st = state.lock().unwrap();
+            Ok(DriverMsg::Status {
+                total_workers: st.workers.len() as u32,
+                free_workers: st.free.len() as u32,
+                sessions: st.active_sessions,
+            })
+        }
+    }
+}
+
+fn need_session<'a>(session: &'a mut Option<Session>) -> Result<&'a mut Session> {
+    session.as_mut().ok_or_else(|| Error::Protocol("handshake required first".into()))
+}
+
+fn session_conns(s: &Session, state: &Arc<Mutex<DriverState>>) -> Result<Vec<Arc<WorkerConn>>> {
+    if s.workers.is_empty() {
+        return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
+    }
+    let st = state.lock().unwrap();
+    Ok(s.workers.iter().map(|&id| st.worker(id)).collect())
+}
+
+fn collect_ok(conns: &[Arc<WorkerConn>]) -> Result<()> {
+    let mut first_err = None;
+    for w in conns {
+        match w.recv_reply()? {
+            WorkerReply::Ok => {}
+            WorkerReply::Err { message } => {
+                first_err.get_or_insert(message);
+            }
+            other => {
+                first_err.get_or_insert(format!("unexpected worker reply {other:?}"));
+            }
+        }
+    }
+    match first_err {
+        None => Ok(()),
+        Some(m) => Err(Error::Server(m)),
+    }
+}

@@ -1,0 +1,110 @@
+//! Launcher: assembles a full Alchemist server (driver + N workers) inside
+//! the current process — the `Cori-start-alchemist.sh` of this
+//! reproduction (paper §3.2). Every component gets real TCP listeners on
+//! loopback; the returned handle carries the driver address clients
+//! connect to.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::Config;
+use crate::protocol::frame;
+use crate::server::driver::{run_driver, WorkerConn};
+use crate::server::worker::run_worker;
+use crate::{info, Error, Result};
+
+/// A running server.
+pub struct ServerHandle {
+    /// Address the ACI connects to (`AlchemistContext::connect`).
+    pub driver_addr: String,
+    stop: Arc<AtomicBool>,
+    workers: Vec<Arc<WorkerConn>>,
+}
+
+impl ServerHandle {
+    /// Best-effort shutdown: tell every worker to exit and unblock the
+    /// driver accept loop. Threads are detached; all sockets close with
+    /// them.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.call(&crate::protocol::WorkerCtl::Shutdown);
+        }
+        // Unblock the accept loop.
+        let _ = TcpStream::connect(&self.driver_addr);
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+/// Start driver + `cfg.server.workers` workers; returns once every worker
+/// has registered and the driver is accepting clients.
+pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
+    let client_listener = TcpListener::bind("127.0.0.1:0")?;
+    let driver_addr = client_listener.local_addr()?.to_string();
+    let worker_listener = TcpListener::bind("127.0.0.1:0")?;
+    let worker_reg_addr = worker_listener.local_addr()?.to_string();
+
+    let n = cfg.server.workers;
+    // Spawn workers; they dial the registration listener.
+    for i in 0..n {
+        let addr = worker_reg_addr.clone();
+        let wcfg = cfg.server.clone();
+        std::thread::Builder::new()
+            .name(format!("alch-worker-{i}"))
+            .spawn(move || {
+                if let Err(e) = run_worker(&addr, wcfg) {
+                    crate::errorln!("launcher", "worker exited with error: {e}");
+                }
+            })
+            .map_err(|e| Error::Server(format!("spawn worker: {e}")))?;
+    }
+
+    // Register all workers: read their data addresses, assign ids.
+    let mut workers = Vec::with_capacity(n as usize);
+    for id in 0..n {
+        let (mut conn, _) = worker_listener.accept()?;
+        conn.set_nodelay(true)?;
+        let data_addr_bytes = frame::read_frame(&mut conn)?;
+        let data_addr = String::from_utf8(data_addr_bytes)
+            .map_err(|e| Error::Protocol(format!("bad worker hello: {e}")))?;
+        frame::write_frame(&mut conn, &id.to_le_bytes())?;
+        workers.push(Arc::new(WorkerConn { id, data_addr, ctl: Mutex::new(conn) }));
+    }
+    info!("launcher", "{n} workers registered; driver at {driver_addr}");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let workers = workers.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("alch-driver".into())
+            .spawn(move || {
+                if let Err(e) = run_driver(client_listener, workers, stop) {
+                    crate::errorln!("launcher", "driver exited with error: {e}");
+                }
+            })
+            .map_err(|e| Error::Server(format!("spawn driver: {e}")))?;
+    }
+
+    Ok(ServerHandle { driver_addr, stop, workers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_starts_and_shuts_down() {
+        let mut cfg = Config::default();
+        cfg.server.workers = 2;
+        cfg.server.gemm_backend = "native".into(); // skip PJRT for speed
+        let handle = start_server(&cfg).unwrap();
+        assert_eq!(handle.num_workers(), 2);
+        assert!(handle.driver_addr.starts_with("127.0.0.1:"));
+        handle.shutdown();
+    }
+}

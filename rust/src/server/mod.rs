@@ -1,0 +1,18 @@
+//! The Alchemist server core (paper §2, Fig 1/2): a driver process that
+//! owns sessions, worker allocation and the matrix-handle registry, plus N
+//! worker processes that hold distributed matrix panels, receive row data
+//! from client executors over the data plane, and execute library
+//! routines SPMD over per-session communicators.
+//!
+//! Process model: in the original, driver and workers are MPI ranks on
+//! dedicated nodes. Here they are threads in one OS process, each with its
+//! own TCP listeners and its own state — all communication still crosses
+//! real sockets, so the wire behaviour (and the benches built on it) match
+//! the paper's architecture. `launcher::start_server` assembles the whole
+//! thing and hands back the driver address a client connects to.
+
+pub mod driver;
+pub mod launcher;
+pub mod worker;
+
+pub use launcher::{start_server, ServerHandle};

@@ -1,0 +1,304 @@
+//! Alchemist worker: panel storage + data-plane service + SPMD routine
+//! execution under driver command.
+//!
+//! One worker = one control connection to the driver (commands arrive as
+//! [`WorkerCtl`] frames and are handled serially — a worker is allocated
+//! to at most one session at a time, like the paper's worker groups), one
+//! data-plane listener serving client executors (row puts/gets, each
+//! connection on its own thread), and per-session communicator meshes to
+//! the sibling workers.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use crate::ali::registry::LibraryRegistry;
+use crate::ali::RoutineCtx;
+use crate::comm::Mesh;
+use crate::config::ServerConfig;
+use crate::elemental::dist_gemm::{GemmBackend, NativeBackend};
+use crate::elemental::{LocalPanel, MatrixStore};
+use crate::protocol::{
+    frame, DataMsg, MatrixMeta, WireRow, WorkerCtl, WorkerReply,
+};
+use crate::runtime::PjrtBackend;
+use crate::{debugln, errorln, info, Error, Result};
+
+/// Session state on a worker.
+struct WorkerSession {
+    rank: u32,
+    owners: Vec<u32>,
+    mesh: Mesh,
+}
+
+/// Run one worker: register with the driver at `driver_worker_addr`, then
+/// serve until `Shutdown`. Blocks; callers run it on its own thread.
+pub fn run_worker(driver_worker_addr: &str, cfg: ServerConfig) -> Result<()> {
+    let data_listener = TcpListener::bind("127.0.0.1:0")?;
+    let data_addr = data_listener.local_addr()?.to_string();
+
+    // Register with the driver: send our data address, receive our id.
+    let mut ctl = TcpStream::connect(driver_worker_addr)?;
+    ctl.set_nodelay(true)?;
+    frame::write_frame(&mut ctl, data_addr.as_bytes())?;
+    let id_frame = frame::read_frame(&mut ctl)?;
+    let id = u32::from_le_bytes(
+        id_frame.as_slice().try_into().map_err(|_| Error::Protocol("bad id frame".into()))?,
+    );
+    info!("worker", "worker {id} up (data plane at {data_addr})");
+
+    let store: Arc<Mutex<MatrixStore>> = Arc::new(Mutex::new(MatrixStore::new()));
+
+    // Data-plane accept loop on its own thread.
+    {
+        let store = store.clone();
+        let batch_rows = cfg.batch_rows as usize;
+        let nodelay = cfg.nodelay;
+        std::thread::Builder::new()
+            .name(format!("w{id}-data"))
+            .spawn(move || {
+                for conn in data_listener.incoming() {
+                    let Ok(conn) = conn else { break };
+                    if nodelay {
+                        let _ = conn.set_nodelay(true);
+                    }
+                    let store = store.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = serve_data_conn(conn, store, batch_rows) {
+                            // client hangups are normal; real errors logged
+                            debugln!("worker", "data conn ended: {e}");
+                        }
+                    });
+                }
+            })
+            .map_err(|e| Error::Server(format!("spawn data thread: {e}")))?;
+    }
+
+    // Backend: PJRT Pallas tiles unless configured (or forced) native.
+    let (backend, runtime) = build_backend(&cfg);
+    info!("worker", "worker {id} gemm backend: {}", backend.name());
+
+    let mut registry = LibraryRegistry::new();
+    let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
+    let mut pending_listeners: HashMap<u64, TcpListener> = HashMap::new();
+
+    // Control loop.
+    loop {
+        let buf = match frame::read_frame(&mut ctl) {
+            Ok(b) => b,
+            Err(_) => {
+                // driver gone: exit quietly
+                return Ok(());
+            }
+        };
+        let cmd = WorkerCtl::decode(&buf)?;
+        let reply = handle_ctl(
+            id,
+            cmd,
+            &cfg,
+            &store,
+            &mut registry,
+            &mut sessions,
+            &mut pending_listeners,
+            backend.as_ref(),
+            runtime,
+        );
+        let (reply, shutdown) = match reply {
+            Ok(Some(r)) => (r, false),
+            Ok(None) => (WorkerReply::Ok, true),
+            Err(e) => (WorkerReply::Err { message: e.to_string() }, false),
+        };
+        frame::write_frame(&mut ctl, &reply.encode())?;
+        if shutdown {
+            info!("worker", "worker {id} shutting down");
+            return Ok(());
+        }
+    }
+}
+
+fn build_backend(cfg: &ServerConfig) -> (Box<dyn GemmBackend>, Option<&'static crate::runtime::PjrtRuntime>) {
+    if cfg.gemm_backend == "pjrt" {
+        match crate::runtime::runtime_from_config(cfg)
+            .and_then(|rt| PjrtBackend::new(rt, cfg.gemm_tile as usize).map(|b| (rt, b)))
+        {
+            Ok((rt, b)) => return (Box::new(b), Some(rt)),
+            Err(e) => {
+                errorln!("worker", "pjrt backend unavailable ({e}); falling back to native");
+            }
+        }
+    }
+    (Box::new(NativeBackend), None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_ctl(
+    my_id: u32,
+    cmd: WorkerCtl,
+    cfg: &ServerConfig,
+    store: &Arc<Mutex<MatrixStore>>,
+    registry: &mut LibraryRegistry,
+    sessions: &mut HashMap<u64, WorkerSession>,
+    pending: &mut HashMap<u64, TcpListener>,
+    backend: &dyn GemmBackend,
+    runtime: Option<&'static crate::runtime::PjrtRuntime>,
+) -> Result<Option<WorkerReply>> {
+    match cmd {
+        WorkerCtl::PrepareSession { session_id } => {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            pending.insert(session_id, listener);
+            Ok(Some(WorkerReply::SessionReady { comm_addr: addr }))
+        }
+        WorkerCtl::NewSession { session_id, rank, peers } => {
+            let listener = pending.remove(&session_id).ok_or_else(|| {
+                Error::Server(format!("NewSession {session_id} without PrepareSession"))
+            })?;
+            let addrs: Vec<String> = peers.iter().map(|p| p.data_addr.clone()).collect();
+            let owners: Vec<u32> = peers.iter().map(|p| p.id).collect();
+            let mesh = if addrs.len() == 1 {
+                Mesh::solo()
+            } else {
+                Mesh::establish(session_id, rank as usize, &addrs, listener)?
+            };
+            sessions.insert(session_id, WorkerSession { rank, owners, mesh });
+            Ok(Some(WorkerReply::Ok))
+        }
+        WorkerCtl::EndSession { session_id } => {
+            sessions.remove(&session_id);
+            Ok(Some(WorkerReply::Ok))
+        }
+        WorkerCtl::AllocMatrix { session_id: _, meta } => {
+            let slot = my_slot(&meta, my_id)?;
+            let panel = LocalPanel::alloc(meta, slot)?;
+            store.lock().unwrap().insert(panel)?;
+            Ok(Some(WorkerReply::Ok))
+        }
+        WorkerCtl::FreeMatrix { handle } => {
+            // idempotent: freeing an unknown handle is fine
+            let _ = store.lock().unwrap().remove(handle);
+            // drop any device-resident buffers cached under this handle
+            // (base folds in the session rank; sweep all 256 slots)
+            if let Some(rt) = runtime {
+                for rank in 0..256u64 {
+                    rt.invalidate_base(handle * 256 + rank);
+                }
+            }
+            Ok(Some(WorkerReply::Ok))
+        }
+        WorkerCtl::RegisterLibrary { name, path } => {
+            registry.register(&name, &path)?;
+            Ok(Some(WorkerReply::Ok))
+        }
+        WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles } => {
+            let session = sessions.get_mut(&session_id).ok_or_else(|| {
+                Error::Server(format!("RunRoutine on unknown session {session_id}"))
+            })?;
+            let lib = registry.get(&library)?.clone();
+            let svd_pjrt = cfg.svd_backend == "pjrt";
+            let mut guard = store.lock().unwrap();
+            let mut ctx = RoutineCtx {
+                mesh: &mut session.mesh,
+                owners: session.owners.clone(),
+                store: &mut guard,
+                output_handles: &output_handles,
+                backend,
+                runtime,
+                svd_pjrt,
+            };
+            let out = lib.run(&routine, &params, &mut ctx)?;
+            if session.rank == 0 {
+                Ok(Some(WorkerReply::RoutineDone {
+                    outputs: out.outputs,
+                    new_matrices: out.new_matrices,
+                }))
+            } else {
+                Ok(Some(WorkerReply::Ok))
+            }
+        }
+        WorkerCtl::Shutdown => Ok(None),
+    }
+}
+
+/// Slot of worker `my_id` in a matrix's owner list.
+fn my_slot(meta: &MatrixMeta, my_id: u32) -> Result<u32> {
+    meta.layout
+        .owners
+        .iter()
+        .position(|&o| o == my_id)
+        .map(|p| p as u32)
+        .ok_or_else(|| {
+            Error::Server(format!("worker {my_id} not an owner of handle {}", meta.handle))
+        })
+}
+
+/// Serve one data-plane connection until EOF.
+fn serve_data_conn(
+    mut conn: TcpStream,
+    store: Arc<Mutex<MatrixStore>>,
+    batch_rows: usize,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        if frame::read_frame_into(&mut conn, &mut buf).is_err() {
+            return Ok(()); // EOF / client closed
+        }
+        match DataMsg::decode(&buf)? {
+            DataMsg::PutRows { handle, rows } => {
+                let mut guard = store.lock().unwrap();
+                let panel = match guard.get_mut(handle) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        frame::write_frame(
+                            &mut conn,
+                            &DataMsg::Err { message: e.to_string() }.encode(),
+                        )?;
+                        continue;
+                    }
+                };
+                for row in &rows {
+                    if let Err(e) = panel.set_row(row.index, &row.values) {
+                        drop(guard);
+                        frame::write_frame(
+                            &mut conn,
+                            &DataMsg::Err { message: e.to_string() }.encode(),
+                        )?;
+                        return Err(e);
+                    }
+                }
+            }
+            DataMsg::PutDone { handle } => {
+                let rows_received = store.lock().unwrap().get(handle)?.rows_received();
+                frame::write_frame(
+                    &mut conn,
+                    &DataMsg::PutComplete { handle, rows_received }.encode(),
+                )?;
+            }
+            DataMsg::GetRows { handle, start, end } => {
+                // Stream locally-owned rows in [start, end) in batches.
+                let (rows, layout, slot) = {
+                    let guard = store.lock().unwrap();
+                    let panel = guard.get(handle)?;
+                    let mut rows: Vec<WireRow> = Vec::new();
+                    for (r, vals) in panel.iter_rows() {
+                        if r >= start && r < end {
+                            rows.push(WireRow { index: r, values: vals.to_vec() });
+                        }
+                    }
+                    (rows, panel.layout(), panel.slot)
+                };
+                let _ = (layout, slot);
+                for chunk in rows.chunks(batch_rows.max(1)) {
+                    let msg = DataMsg::RowBatch { handle, rows: chunk.to_vec() };
+                    frame::write_frame(&mut conn, &msg.encode())?;
+                }
+                frame::write_frame(&mut conn, &DataMsg::GetDone { handle }.encode())?;
+            }
+            other => {
+                frame::write_frame(
+                    &mut conn,
+                    &DataMsg::Err { message: format!("unexpected data msg {other:?}") }.encode(),
+                )?;
+            }
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! `SparkletContext` — the driver: spawns executors, schedules stages,
+//! tracks RDD placement, and aborts jobs on task failure (the Spark
+//! driver's role, with the same centralized-scheduling structure whose
+//! costs the paper analyzes).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+use crate::config::SparkletConfig;
+use crate::protocol::{frame, WireRow};
+use crate::sparklet::data::PartitionData;
+use crate::sparklet::executor::{run_executor, ExecMsg, ExecReply};
+use crate::sparklet::task::{TaskOp, TaskOut, TaskSpec};
+use crate::{info, Error, Result};
+
+/// Handle to a materialized distributed dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rdd {
+    pub id: u64,
+    pub num_parts: u32,
+}
+
+/// The sparklet driver.
+pub struct SparkletContext {
+    executors: Vec<Mutex<TcpStream>>,
+    pub cfg: SparkletConfig,
+    next_rdd: Mutex<u64>,
+    next_shuffle: Mutex<u64>,
+    /// Tasks dispatched (scheduler metric for the overhead analysis).
+    pub tasks_launched: Mutex<u64>,
+}
+
+impl SparkletContext {
+    /// Spawn `cfg.executors` executor threads and wire them up.
+    pub fn new(cfg: &SparkletConfig) -> Result<SparkletContext> {
+        let reg = TcpListener::bind("127.0.0.1:0")?;
+        let reg_addr = reg.local_addr()?.to_string();
+        let mem_cap = cfg.executor_mem_mb * 1024 * 1024;
+        for i in 0..cfg.executors {
+            let addr = reg_addr.clone();
+            let overhead = cfg.task_overhead_us;
+            std::thread::Builder::new()
+                .name(format!("sparklet-exec-{i}"))
+                .spawn(move || {
+                    if let Err(e) = run_executor(&addr, mem_cap, overhead) {
+                        crate::errorln!("sparklet", "executor died: {e}");
+                    }
+                })
+                .map_err(|e| Error::Sparklet(format!("spawn executor: {e}")))?;
+        }
+        let mut executors = Vec::with_capacity(cfg.executors as usize);
+        let mut shuffle_addrs = Vec::with_capacity(cfg.executors as usize);
+        for id in 0..cfg.executors {
+            let (mut conn, _) = reg.accept()?;
+            conn.set_nodelay(true)?;
+            let hello = frame::read_frame(&mut conn)?;
+            shuffle_addrs.push(
+                String::from_utf8(hello).map_err(|e| Error::Protocol(format!("hello: {e}")))?,
+            );
+            frame::write_frame(&mut conn, &id.to_le_bytes())?;
+            executors.push(Mutex::new(conn));
+        }
+        let ctx = SparkletContext {
+            executors,
+            cfg: cfg.clone(),
+            next_rdd: Mutex::new(1),
+            next_shuffle: Mutex::new(1),
+            tasks_launched: Mutex::new(0),
+        };
+        // Broadcast the peer table for shuffle pushes.
+        ctx.broadcast(&ExecMsg::SetPeers { shuffle_addrs })?;
+        info!("sparklet", "context up with {} executors", cfg.executors);
+        Ok(ctx)
+    }
+
+    pub fn num_executors(&self) -> usize {
+        self.executors.len()
+    }
+
+    /// Executor owning partition `p` (static placement, Spark-default-ish).
+    pub fn owner_of(&self, part: u32) -> usize {
+        part as usize % self.executors.len()
+    }
+
+    /// Allocate an RDD id (used by matrix.rs generators).
+    pub(crate) fn fresh_rdd_pub(&self, num_parts: u32) -> Rdd {
+        self.fresh_rdd(num_parts)
+    }
+
+    fn fresh_rdd(&self, num_parts: u32) -> Rdd {
+        let mut g = self.next_rdd.lock().unwrap();
+        let id = *g;
+        *g += 1;
+        Rdd { id, num_parts }
+    }
+
+    fn fresh_shuffle(&self) -> u64 {
+        let mut g = self.next_shuffle.lock().unwrap();
+        let id = *g;
+        *g += 1;
+        id
+    }
+
+    fn call_executor(&self, id: usize, msg: &ExecMsg) -> Result<ExecReply> {
+        let mut s = self.executors[id].lock().unwrap();
+        frame::write_frame(&mut *s, &msg.encode())?;
+        ExecReply::decode(&frame::read_frame(&mut *s)?)
+    }
+
+    fn send_executor(&self, id: usize, msg: &ExecMsg) -> Result<()> {
+        let mut s = self.executors[id].lock().unwrap();
+        frame::write_frame(&mut *s, &msg.encode())
+    }
+
+    fn recv_executor(&self, id: usize) -> Result<ExecReply> {
+        let mut s = self.executors[id].lock().unwrap();
+        ExecReply::decode(&frame::read_frame(&mut *s)?)
+    }
+
+    fn broadcast(&self, msg: &ExecMsg) -> Result<()> {
+        for id in 0..self.executors.len() {
+            self.send_executor(id, msg)?;
+        }
+        for id in 0..self.executors.len() {
+            match self.recv_executor(id)? {
+                ExecReply::Ok => {}
+                ExecReply::Err { message } => return Err(Error::Sparklet(message)),
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one stage: dispatch every task to its executor (pipelined
+    /// send-all / collect-all, like Spark's scheduler batching a task
+    /// set), fail the whole stage on the first task error.
+    pub fn run_stage(&self, tasks: Vec<(usize, TaskSpec)>) -> Result<Vec<ExecReply>> {
+        *self.tasks_launched.lock().unwrap() += tasks.len() as u64;
+        // Pipelining caveat: tasks to the same executor serialize on its
+        // control connection, which models one-core-per-executor task
+        // slots (Spark default executor-cores is small).
+        for (exec, spec) in &tasks {
+            self.send_executor(*exec, &ExecMsg::RunTask { spec: spec.clone() })?;
+        }
+        let mut replies = Vec::with_capacity(tasks.len());
+        let mut first_err: Option<String> = None;
+        for (exec, _) in &tasks {
+            match self.recv_executor(*exec)? {
+                ExecReply::Err { message } => {
+                    first_err.get_or_insert(message);
+                    replies.push(ExecReply::Err { message: "failed".into() });
+                }
+                r => replies.push(r),
+            }
+        }
+        if let Some(m) = first_err {
+            return Err(Error::Sparklet(format!("stage aborted: {m}")));
+        }
+        Ok(replies)
+    }
+
+    /// Materialize a generated rows RDD (`partitions` tasks).
+    pub fn generate_rows(
+        &self,
+        seed: u64,
+        rows: u64,
+        cols: u32,
+        num_parts: u32,
+        decay: Option<f64>,
+    ) -> Result<Rdd> {
+        let rdd = self.fresh_rdd(num_parts);
+        let per = (rows + num_parts as u64 - 1) / num_parts as u64;
+        let tasks: Vec<(usize, TaskSpec)> = (0..num_parts)
+            .map(|p| {
+                let row_start = (p as u64 * per).min(rows);
+                let row_end = ((p as u64 + 1) * per).min(rows);
+                let op = match decay {
+                    Some(d) => TaskOp::GenSpectralRows {
+                        seed,
+                        cols,
+                        row_start,
+                        row_end,
+                        decay: d,
+                    },
+                    None => TaskOp::GenRows { seed, cols, row_start, row_end },
+                };
+                (self.owner_of(p), TaskSpec {
+                    input: None,
+                    op,
+                    out: TaskOut::Store { rdd: rdd.id, part: p },
+                })
+            })
+            .collect();
+        self.run_stage(tasks)?;
+        Ok(rdd)
+    }
+
+    /// Narrow map: apply `op(part_idx)` to every partition, same
+    /// partitioning.
+    pub fn map_partitions(&self, input: Rdd, op: impl Fn(u32) -> TaskOp) -> Result<Rdd> {
+        let out = self.fresh_rdd(input.num_parts);
+        let tasks: Vec<(usize, TaskSpec)> = (0..input.num_parts)
+            .map(|p| {
+                (self.owner_of(p), TaskSpec {
+                    input: Some((input.id, p)),
+                    op: op(p),
+                    out: TaskOut::Store { rdd: out.id, part: p },
+                })
+            })
+            .collect();
+        self.run_stage(tasks)?;
+        Ok(out)
+    }
+
+    /// Wide dependency: map with a keyed op, shuffle to `num_out_parts`
+    /// partitions, finalize. `empty_kind` tags the variant of partitions
+    /// that receive nothing (see `PartitionData` tags: 0 rows, 1 triplets,
+    /// 2 blocks, 3 tagged, 4 doubles).
+    pub fn shuffle(
+        &self,
+        input: Rdd,
+        op: impl Fn(u32) -> TaskOp,
+        num_out_parts: u32,
+        empty_kind: u8,
+    ) -> Result<Rdd> {
+        let out = self.fresh_rdd(num_out_parts);
+        let shuffle_id = self.fresh_shuffle();
+        let tasks: Vec<(usize, TaskSpec)> = (0..input.num_parts)
+            .map(|p| {
+                (self.owner_of(p), TaskSpec {
+                    input: Some((input.id, p)),
+                    op: op(p),
+                    out: TaskOut::Shuffle { shuffle_id, num_parts: num_out_parts },
+                })
+            })
+            .collect();
+        self.run_stage(tasks)?;
+        // Barrier, then finalize: each executor folds its received
+        // buckets into stored partitions.
+        for exec in 0..self.executors.len() {
+            let parts: Vec<u32> =
+                (0..num_out_parts).filter(|p| self.owner_of(*p) == exec).collect();
+            self.send_executor(
+                exec,
+                &ExecMsg::FinalizeShuffle { shuffle_id, rdd_out: out.id, parts, empty_kind },
+            )?;
+        }
+        for exec in 0..self.executors.len() {
+            match self.recv_executor(exec)? {
+                ExecReply::Ok => {}
+                ExecReply::Err { message } => return Err(Error::Sparklet(message)),
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Co-shuffle two RDDs into one output RDD (the BlockMatrix-multiply
+    /// join: A-replicas and B-replicas meet in the same buckets).
+    pub fn shuffle_pair(
+        &self,
+        input_a: Rdd,
+        op_a: impl Fn(u32) -> TaskOp,
+        input_b: Rdd,
+        op_b: impl Fn(u32) -> TaskOp,
+        num_out_parts: u32,
+        empty_kind: u8,
+    ) -> Result<Rdd> {
+        let out = self.fresh_rdd(num_out_parts);
+        let shuffle_id = self.fresh_shuffle();
+        let mut tasks: Vec<(usize, TaskSpec)> = Vec::new();
+        for p in 0..input_a.num_parts {
+            tasks.push((self.owner_of(p), TaskSpec {
+                input: Some((input_a.id, p)),
+                op: op_a(p),
+                out: TaskOut::Shuffle { shuffle_id, num_parts: num_out_parts },
+            }));
+        }
+        for p in 0..input_b.num_parts {
+            tasks.push((self.owner_of(p), TaskSpec {
+                input: Some((input_b.id, p)),
+                op: op_b(p),
+                out: TaskOut::Shuffle { shuffle_id, num_parts: num_out_parts },
+            }));
+        }
+        self.run_stage(tasks)?;
+        for exec in 0..self.executors.len() {
+            let parts: Vec<u32> =
+                (0..num_out_parts).filter(|p| self.owner_of(*p) == exec).collect();
+            self.send_executor(
+                exec,
+                &ExecMsg::FinalizeShuffle { shuffle_id, rdd_out: out.id, parts, empty_kind },
+            )?;
+        }
+        for exec in 0..self.executors.len() {
+            match self.recv_executor(exec)? {
+                ExecReply::Ok => {}
+                ExecReply::Err { message } => return Err(Error::Sparklet(message)),
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Aggregate: run `op` on every partition, sum the returned vectors
+    /// element-wise on the driver (depth-2 treeAggregate shape).
+    pub fn aggregate(&self, input: Rdd, op: impl Fn(u32) -> TaskOp) -> Result<Vec<f64>> {
+        let tasks: Vec<(usize, TaskSpec)> = (0..input.num_parts)
+            .map(|p| {
+                (self.owner_of(p), TaskSpec {
+                    input: Some((input.id, p)),
+                    op: op(p),
+                    out: TaskOut::Aggregate,
+                })
+            })
+            .collect();
+        let replies = self.run_stage(tasks)?;
+        let mut acc: Vec<f64> = Vec::new();
+        for r in replies {
+            let ExecReply::Done { aggregate: Some(v), .. } = r else {
+                return Err(Error::Protocol("aggregate task returned no vector".into()));
+            };
+            if acc.is_empty() {
+                acc = v;
+            } else {
+                if v.len() != acc.len() {
+                    return Err(Error::Sparklet("aggregate length mismatch".into()));
+                }
+                crate::linalg::blas1::axpy(1.0, &v, &mut acc);
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Collect every partition to the driver.
+    pub fn collect(&self, input: Rdd) -> Result<Vec<PartitionData>> {
+        let tasks: Vec<(usize, TaskSpec)> = (0..input.num_parts)
+            .map(|p| {
+                (self.owner_of(p), TaskSpec {
+                    input: Some((input.id, p)),
+                    op: TaskOp::Identity,
+                    out: TaskOut::Collect,
+                })
+            })
+            .collect();
+        let replies = self.run_stage(tasks)?;
+        replies
+            .into_iter()
+            .map(|r| match r {
+                ExecReply::Done { collected: Some(d), .. } => Ok(d),
+                other => Err(Error::Protocol(format!("collect returned {other:?}"))),
+            })
+            .collect()
+    }
+
+    /// Collect a rows RDD into (sorted) indexed rows.
+    pub fn collect_rows(&self, input: Rdd) -> Result<Vec<WireRow>> {
+        let mut out = Vec::new();
+        for part in self.collect(input)? {
+            match part {
+                PartitionData::Rows(mut r) => out.append(&mut r),
+                other => {
+                    return Err(Error::Sparklet(format!(
+                        "collect_rows on {} partition",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+        out.sort_by_key(|r| r.index);
+        Ok(out)
+    }
+
+    /// Drop an RDD from all executors.
+    pub fn free(&self, rdd: Rdd) -> Result<()> {
+        self.broadcast(&ExecMsg::FreeRdd { rdd: rdd.id })
+    }
+
+    /// Total bytes cached across executors.
+    pub fn memory_used(&self) -> Result<u64> {
+        let mut total = 0;
+        for id in 0..self.executors.len() {
+            match self.call_executor(id, &ExecMsg::MemUsage)? {
+                ExecReply::Mem { bytes } => total += bytes,
+                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+            }
+        }
+        Ok(total)
+    }
+
+    /// Stop all executors.
+    pub fn shutdown(&self) {
+        for id in 0..self.executors.len() {
+            let _ = self.call_executor(id, &ExecMsg::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(executors: u32) -> SparkletContext {
+        let cfg = SparkletConfig {
+            executors,
+            task_overhead_us: 0,
+            ..Default::default()
+        };
+        SparkletContext::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn generate_and_collect_rows() {
+        let sc = ctx(3);
+        let rdd = sc.generate_rows(42, 25, 4, 5, None).unwrap();
+        let rows = sc.collect_rows(rdd).unwrap();
+        assert_eq!(rows.len(), 25);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.index, i as u64);
+            assert_eq!(r.values, crate::workload::random_row(42, i as u64, 4));
+        }
+        sc.shutdown();
+    }
+
+    #[test]
+    fn aggregate_sums_across_partitions() {
+        let sc = ctx(2);
+        let rdd = sc.generate_rows(1, 40, 8, 4, None).unwrap();
+        let s = sc.aggregate(rdd, |_| TaskOp::SumSq).unwrap();
+        // reference
+        let want: f64 = (0..40u64)
+            .flat_map(|i| crate::workload::random_row(1, i, 8))
+            .map(|x| x * x)
+            .sum();
+        assert!((s[0] - want).abs() < 1e-9);
+        sc.shutdown();
+    }
+
+    #[test]
+    fn shuffle_roundtrip_via_explode() {
+        let sc = ctx(2);
+        // 6x6 matrix, block 3 -> 2x2 block grid
+        let rdd = sc.generate_rows(7, 6, 6, 3, None).unwrap();
+        let shuffled = sc
+            .shuffle(rdd, |_| TaskOp::ExplodeToBlockTriplets { block: 3, nb_j: 2 }, 4, 1)
+            .unwrap();
+        let blocks = sc
+            .map_partitions(shuffled, |_| TaskOp::TripletsToBlocks {
+                block: 3,
+                mat_rows: 6,
+                mat_cols: 6,
+                nb_j: 2,
+            })
+            .unwrap();
+        // count blocks: 4 total across partitions
+        let agg = sc.aggregate(blocks, |_| TaskOp::CountItems).unwrap();
+        assert_eq!(agg[0] as u64, 4);
+        sc.shutdown();
+    }
+
+    #[test]
+    fn oom_aborts_job() {
+        let cfg = SparkletConfig {
+            executors: 2,
+            executor_mem_mb: 1, // 1 MiB cap
+            task_overhead_us: 0,
+            ..Default::default()
+        };
+        let sc = SparkletContext::new(&cfg).unwrap();
+        // 2000 x 200 doubles ~ 3.2 MB > cap
+        let r = sc.generate_rows(1, 2000, 200, 4, None);
+        match r {
+            Err(e) => assert!(e.is_expected_failure(), "wrong error class: {e}"),
+            Ok(_) => panic!("expected OOM abort"),
+        }
+        sc.shutdown();
+    }
+
+    #[test]
+    fn free_releases_memory() {
+        let sc = ctx(2);
+        let rdd = sc.generate_rows(1, 100, 10, 4, None).unwrap();
+        let used = sc.memory_used().unwrap();
+        assert!(used > 0);
+        sc.free(rdd).unwrap();
+        assert_eq!(sc.memory_used().unwrap(), 0);
+        sc.shutdown();
+    }
+}

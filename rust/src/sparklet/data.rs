@@ -1,0 +1,293 @@
+//! Partition payloads — the concrete element types sparklet RDDs carry.
+//!
+//! Spark RDDs are generic over JVM objects; a Rust reproduction cannot
+//! serialize closures/objects, so sparklet fixes a small vocabulary of
+//! element kinds (indexed rows, COO triplets, matrix blocks, tagged
+//! blocks in flight during a multiply shuffle, raw doubles) and the task
+//! interpreter (`task.rs`) operates over them. Every variant serializes
+//! through the shared wire codec — partitions really cross sockets
+//! between driver, executors, and the shuffle service, paying the same
+//! serialization costs Spark pays.
+
+use crate::linalg::DenseMatrix;
+use crate::protocol::{Reader, WireRow, Writer};
+use crate::{Error, Result};
+
+/// One dense sub-block of a BlockMatrix at block coordinates (bi, bj).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub bi: u64,
+    pub bj: u64,
+    pub mat: DenseMatrix,
+}
+
+/// A block tagged with its origin side and contraction index, in flight
+/// during the BlockMatrix-multiply shuffle (side 0 = A, 1 = B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedBlock {
+    pub bi: u64,
+    pub bj: u64,
+    pub side: u8,
+    pub k: u64,
+    pub mat: DenseMatrix,
+}
+
+/// The data held by one RDD partition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionData {
+    Rows(Vec<WireRow>),
+    Triplets(Vec<(u64, u64, f64)>),
+    Blocks(Vec<Block>),
+    TaggedBlocks(Vec<TaggedBlock>),
+    Doubles(Vec<f64>),
+}
+
+impl PartitionData {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PartitionData::Rows(_) => "rows",
+            PartitionData::Triplets(_) => "triplets",
+            PartitionData::Blocks(_) => "blocks",
+            PartitionData::TaggedBlocks(_) => "tagged_blocks",
+            PartitionData::Doubles(_) => "doubles",
+        }
+    }
+
+    /// Approximate in-memory footprint (bytes) — the unit the executor
+    /// memory accountant tracks against `executor_mem_mb`.
+    pub fn approx_bytes(&self) -> u64 {
+        match self {
+            PartitionData::Rows(rows) => {
+                rows.iter().map(|r| 16 + r.values.len() as u64 * 8).sum()
+            }
+            PartitionData::Triplets(t) => t.len() as u64 * 24,
+            PartitionData::Blocks(bs) => bs
+                .iter()
+                .map(|b| 24 + (b.mat.rows() * b.mat.cols()) as u64 * 8)
+                .sum(),
+            PartitionData::TaggedBlocks(bs) => bs
+                .iter()
+                .map(|b| 33 + (b.mat.rows() * b.mat.cols()) as u64 * 8)
+                .sum(),
+            PartitionData::Doubles(d) => d.len() as u64 * 8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PartitionData::Rows(v) => v.len(),
+            PartitionData::Triplets(v) => v.len(),
+            PartitionData::Blocks(v) => v.len(),
+            PartitionData::TaggedBlocks(v) => v.len(),
+            PartitionData::Doubles(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Empty payload of the same variant.
+    pub fn empty_like(&self) -> PartitionData {
+        match self {
+            PartitionData::Rows(_) => PartitionData::Rows(vec![]),
+            PartitionData::Triplets(_) => PartitionData::Triplets(vec![]),
+            PartitionData::Blocks(_) => PartitionData::Blocks(vec![]),
+            PartitionData::TaggedBlocks(_) => PartitionData::TaggedBlocks(vec![]),
+            PartitionData::Doubles(_) => PartitionData::Doubles(vec![]),
+        }
+    }
+
+    /// Concatenate another payload of the same variant (shuffle finalize).
+    pub fn extend(&mut self, other: PartitionData) -> Result<()> {
+        match (self, other) {
+            (PartitionData::Rows(a), PartitionData::Rows(b)) => a.extend(b),
+            (PartitionData::Triplets(a), PartitionData::Triplets(b)) => a.extend(b),
+            (PartitionData::Blocks(a), PartitionData::Blocks(b)) => a.extend(b),
+            (PartitionData::TaggedBlocks(a), PartitionData::TaggedBlocks(b)) => a.extend(b),
+            (PartitionData::Doubles(a), PartitionData::Doubles(b)) => a.extend(b),
+            (a, b) => {
+                return Err(Error::Sparklet(format!(
+                    "cannot merge partition kinds {} and {}",
+                    a.kind(),
+                    b.kind()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            PartitionData::Rows(rows) => {
+                w.put_u8(0);
+                w.put_u32(rows.len() as u32);
+                for r in rows {
+                    w.put_u64(r.index);
+                    w.put_f64_slice(&r.values);
+                }
+            }
+            PartitionData::Triplets(ts) => {
+                w.put_u8(1);
+                w.put_u32(ts.len() as u32);
+                for (i, j, v) in ts {
+                    w.put_u64(*i);
+                    w.put_u64(*j);
+                    w.put_f64(*v);
+                }
+            }
+            PartitionData::Blocks(bs) => {
+                w.put_u8(2);
+                w.put_u32(bs.len() as u32);
+                for b in bs {
+                    w.put_u64(b.bi);
+                    w.put_u64(b.bj);
+                    encode_matrix(w, &b.mat);
+                }
+            }
+            PartitionData::TaggedBlocks(bs) => {
+                w.put_u8(3);
+                w.put_u32(bs.len() as u32);
+                for b in bs {
+                    w.put_u64(b.bi);
+                    w.put_u64(b.bj);
+                    w.put_u8(b.side);
+                    w.put_u64(b.k);
+                    encode_matrix(w, &b.mat);
+                }
+            }
+            PartitionData::Doubles(d) => {
+                w.put_u8(4);
+                w.put_f64_slice(d);
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PartitionData> {
+        let mut r = Reader::new(buf);
+        let out = Self::decode_from(&mut r)?;
+        Ok(out)
+    }
+
+    pub fn decode_from(r: &mut Reader<'_>) -> Result<PartitionData> {
+        Ok(match r.get_u8()? {
+            0 => {
+                let n = r.get_u32()? as usize;
+                let mut rows = Vec::with_capacity(r.cap_hint(n, 12));
+                for _ in 0..n {
+                    let index = r.get_u64()?;
+                    let values = r.get_f64_slice()?;
+                    rows.push(WireRow { index, values });
+                }
+                PartitionData::Rows(rows)
+            }
+            1 => {
+                let n = r.get_u32()? as usize;
+                let mut ts = Vec::with_capacity(r.cap_hint(n, 24));
+                for _ in 0..n {
+                    ts.push((r.get_u64()?, r.get_u64()?, r.get_f64()?));
+                }
+                PartitionData::Triplets(ts)
+            }
+            2 => {
+                let n = r.get_u32()? as usize;
+                let mut bs = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    let bi = r.get_u64()?;
+                    let bj = r.get_u64()?;
+                    bs.push(Block { bi, bj, mat: decode_matrix(r)? });
+                }
+                PartitionData::Blocks(bs)
+            }
+            3 => {
+                let n = r.get_u32()? as usize;
+                let mut bs = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    let bi = r.get_u64()?;
+                    let bj = r.get_u64()?;
+                    let side = r.get_u8()?;
+                    let k = r.get_u64()?;
+                    bs.push(TaggedBlock { bi, bj, side, k, mat: decode_matrix(r)? });
+                }
+                PartitionData::TaggedBlocks(bs)
+            }
+            4 => PartitionData::Doubles(r.get_f64_slice()?),
+            t => return Err(Error::Protocol(format!("bad PartitionData tag {t}"))),
+        })
+    }
+}
+
+pub fn encode_matrix(w: &mut Writer, m: &DenseMatrix) {
+    w.put_u32(m.rows() as u32);
+    w.put_u32(m.cols() as u32);
+    w.put_f64_slice(m.data());
+}
+
+pub fn decode_matrix(r: &mut Reader<'_>) -> Result<DenseMatrix> {
+    let rows = r.get_u32()? as usize;
+    let cols = r.get_u32()? as usize;
+    let data = r.get_f64_slice()?;
+    DenseMatrix::from_vec(rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_block() -> Block {
+        Block {
+            bi: 1,
+            bj: 2,
+            mat: DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        }
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        let variants = vec![
+            PartitionData::Rows(vec![WireRow { index: 3, values: vec![1.0, -2.0] }]),
+            PartitionData::Triplets(vec![(0, 1, 0.5), (7, 7, -1.0)]),
+            PartitionData::Blocks(vec![sample_block()]),
+            PartitionData::TaggedBlocks(vec![TaggedBlock {
+                bi: 0,
+                bj: 1,
+                side: 1,
+                k: 5,
+                mat: DenseMatrix::identity(2),
+            }]),
+            PartitionData::Doubles(vec![0.25; 10]),
+        ];
+        for v in variants {
+            assert_eq!(PartitionData::decode(&v.encode()).unwrap(), v, "{}", v.kind());
+        }
+    }
+
+    #[test]
+    fn extend_same_kind_merges() {
+        let mut a = PartitionData::Doubles(vec![1.0]);
+        a.extend(PartitionData::Doubles(vec![2.0])).unwrap();
+        assert_eq!(a, PartitionData::Doubles(vec![1.0, 2.0]));
+        assert!(a.extend(PartitionData::Triplets(vec![])).is_err());
+    }
+
+    #[test]
+    fn approx_bytes_scales_with_payload() {
+        let small = PartitionData::Rows(vec![WireRow { index: 0, values: vec![0.0; 10] }]);
+        let big = PartitionData::Rows(vec![WireRow { index: 0, values: vec![0.0; 1000] }]);
+        assert!(big.approx_bytes() > 50 * small.approx_bytes());
+    }
+
+    #[test]
+    fn empty_like_preserves_kind() {
+        let b = PartitionData::Blocks(vec![sample_block()]);
+        let e = b.empty_like();
+        assert_eq!(e.kind(), "blocks");
+        assert!(e.is_empty());
+    }
+}

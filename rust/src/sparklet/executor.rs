@@ -1,0 +1,525 @@
+//! Sparklet executor: block store, shuffle service, task interpreter, and
+//! the executor-side memory accountant.
+//!
+//! Mirrors a Spark executor: it holds cached partition data, runs tasks
+//! the driver ships to it, writes shuffle buckets directly to the peer
+//! executors that own the target partitions (push-based shuffle), and
+//! aborts tasks when its memory cap is exceeded — which is how the
+//! paper's Table 1 "Spark failed" rows arise in this reproduction.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use crate::protocol::{frame, Reader, Writer};
+use crate::sparklet::data::PartitionData;
+use crate::sparklet::task::{eval, EvalOut, TaskOut, TaskSpec};
+use crate::{debugln, info, Error, Result};
+
+// ---------------------------------------------------------------------------
+// Driver <-> executor control messages
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecMsg {
+    RunTask { spec: TaskSpec },
+    /// Merge shuffle buckets into block-store partitions this executor
+    /// owns. `empty_kind` tags the variant for parts that received no
+    /// data (see `PartitionData` tags).
+    FinalizeShuffle { shuffle_id: u64, rdd_out: u64, parts: Vec<u32>, empty_kind: u8 },
+    /// Share the peer shuffle-service address table (rank-indexed).
+    SetPeers { shuffle_addrs: Vec<String> },
+    FreeRdd { rdd: u64 },
+    MemUsage,
+    Shutdown,
+}
+
+impl ExecMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            ExecMsg::RunTask { spec } => {
+                w.put_u8(0);
+                w.put_bytes(&spec.encode());
+            }
+            ExecMsg::FinalizeShuffle { shuffle_id, rdd_out, parts, empty_kind } => {
+                w.put_u8(1);
+                w.put_u64(*shuffle_id);
+                w.put_u64(*rdd_out);
+                w.put_u32(parts.len() as u32);
+                for p in parts {
+                    w.put_u32(*p);
+                }
+                w.put_u8(*empty_kind);
+            }
+            ExecMsg::SetPeers { shuffle_addrs } => {
+                w.put_u8(2);
+                w.put_u32(shuffle_addrs.len() as u32);
+                for a in shuffle_addrs {
+                    w.put_str(a);
+                }
+            }
+            ExecMsg::FreeRdd { rdd } => {
+                w.put_u8(3);
+                w.put_u64(*rdd);
+            }
+            ExecMsg::MemUsage => w.put_u8(4),
+            ExecMsg::Shutdown => w.put_u8(5),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ExecMsg> {
+        let mut r = Reader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => ExecMsg::RunTask { spec: TaskSpec::decode(&r.get_bytes()?)? },
+            1 => {
+                let shuffle_id = r.get_u64()?;
+                let rdd_out = r.get_u64()?;
+                let n = r.get_u32()? as usize;
+                let mut parts = Vec::with_capacity(r.cap_hint(n, 4));
+                for _ in 0..n {
+                    parts.push(r.get_u32()?);
+                }
+                ExecMsg::FinalizeShuffle { shuffle_id, rdd_out, parts, empty_kind: r.get_u8()? }
+            }
+            2 => {
+                let n = r.get_u32()? as usize;
+                let mut shuffle_addrs = Vec::with_capacity(r.cap_hint(n, 4));
+                for _ in 0..n {
+                    shuffle_addrs.push(r.get_str()?);
+                }
+                ExecMsg::SetPeers { shuffle_addrs }
+            }
+            3 => ExecMsg::FreeRdd { rdd: r.get_u64()? },
+            4 => ExecMsg::MemUsage,
+            5 => ExecMsg::Shutdown,
+            t => return Err(Error::Protocol(format!("bad ExecMsg tag {t}"))),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecReply {
+    Ok,
+    Done { aggregate: Option<Vec<f64>>, collected: Option<PartitionData> },
+    Mem { bytes: u64 },
+    Err { message: String },
+}
+
+impl ExecReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            ExecReply::Ok => w.put_u8(0),
+            ExecReply::Done { aggregate, collected } => {
+                w.put_u8(1);
+                match aggregate {
+                    Some(a) => {
+                        w.put_u8(1);
+                        w.put_f64_slice(a);
+                    }
+                    None => w.put_u8(0),
+                }
+                match collected {
+                    Some(c) => {
+                        w.put_u8(1);
+                        c.encode_into(&mut w);
+                    }
+                    None => w.put_u8(0),
+                }
+            }
+            ExecReply::Mem { bytes } => {
+                w.put_u8(2);
+                w.put_u64(*bytes);
+            }
+            ExecReply::Err { message } => {
+                w.put_u8(3);
+                w.put_str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ExecReply> {
+        let mut r = Reader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => ExecReply::Ok,
+            1 => {
+                let aggregate =
+                    if r.get_u8()? == 1 { Some(r.get_f64_slice()?) } else { None };
+                let collected =
+                    if r.get_u8()? == 1 { Some(PartitionData::decode_from(&mut r)?) } else { None };
+                ExecReply::Done { aggregate, collected }
+            }
+            2 => ExecReply::Mem { bytes: r.get_u64()? },
+            3 => ExecReply::Err { message: r.get_str()? },
+            t => return Err(Error::Protocol(format!("bad ExecReply tag {t}"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor state
+// ---------------------------------------------------------------------------
+
+/// Memory accountant: all cached partitions + in-flight shuffle buckets
+/// count against the executor's cap; exceeding it aborts the task, which
+/// aborts the job (Spark's OOM -> job failure path).
+#[derive(Debug)]
+pub struct MemTracker {
+    used: u64,
+    cap: u64,
+}
+
+impl MemTracker {
+    pub fn new(cap_bytes: u64) -> MemTracker {
+        MemTracker { used: 0, cap: cap_bytes }
+    }
+
+    pub fn charge(&mut self, bytes: u64) -> Result<()> {
+        if self.used + bytes > self.cap {
+            return Err(Error::Sparklet(format!(
+                "executor OOM: {} + {} bytes exceeds cap {} \
+                 (java.lang.OutOfMemoryError equivalent)",
+                self.used, bytes, self.cap
+            )));
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+}
+
+struct ExecState {
+    blocks: HashMap<(u64, u32), PartitionData>,
+    shuffle_in: HashMap<(u64, u32), Vec<PartitionData>>,
+    mem: MemTracker,
+}
+
+impl ExecState {
+    fn store(&mut self, rdd: u64, part: u32, data: PartitionData) -> Result<()> {
+        self.mem.charge(data.approx_bytes())?;
+        self.blocks.insert((rdd, part), data);
+        Ok(())
+    }
+}
+
+/// Run one executor. Registers with the driver at `driver_reg_addr`
+/// (sending its shuffle address), then serves control messages until
+/// `Shutdown`.
+pub fn run_executor(driver_reg_addr: &str, mem_cap_bytes: u64, task_overhead_us: u64) -> Result<()> {
+    let shuffle_listener = TcpListener::bind("127.0.0.1:0")?;
+    let shuffle_addr = shuffle_listener.local_addr()?.to_string();
+
+    let mut ctl = TcpStream::connect(driver_reg_addr)?;
+    ctl.set_nodelay(true)?;
+    frame::write_frame(&mut ctl, shuffle_addr.as_bytes())?;
+    let id_frame = frame::read_frame(&mut ctl)?;
+    let id = u32::from_le_bytes(
+        id_frame.as_slice().try_into().map_err(|_| Error::Protocol("bad id".into()))?,
+    );
+    info!("sparklet", "executor {id} up (shuffle at {shuffle_addr})");
+
+    let state = Arc::new(Mutex::new(ExecState {
+        blocks: HashMap::new(),
+        shuffle_in: HashMap::new(),
+        mem: MemTracker::new(mem_cap_bytes),
+    }));
+
+    // Shuffle service thread.
+    {
+        let state = state.clone();
+        std::thread::Builder::new()
+            .name(format!("exec{id}-shuffle"))
+            .spawn(move || {
+                for conn in shuffle_listener.incoming() {
+                    let Ok(mut conn) = conn else { break };
+                    let _ = conn.set_nodelay(true);
+                    let state = state.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_shuffle_conn(&mut conn, state);
+                    });
+                }
+            })
+            .map_err(|e| Error::Sparklet(format!("spawn shuffle thread: {e}")))?;
+    }
+
+    let mut peers: Vec<String> = Vec::new();
+
+    loop {
+        let buf = match frame::read_frame(&mut ctl) {
+            Ok(b) => b,
+            Err(_) => return Ok(()), // driver gone
+        };
+        let msg = ExecMsg::decode(&buf)?;
+        let reply = match msg {
+            ExecMsg::Shutdown => {
+                frame::write_frame(&mut ctl, &ExecReply::Ok.encode())?;
+                info!("sparklet", "executor {id} shutting down");
+                return Ok(());
+            }
+            ExecMsg::SetPeers { shuffle_addrs } => {
+                peers = shuffle_addrs;
+                ExecReply::Ok
+            }
+            ExecMsg::MemUsage => {
+                ExecReply::Mem { bytes: state.lock().unwrap().mem.used() }
+            }
+            ExecMsg::FreeRdd { rdd } => {
+                let mut st = state.lock().unwrap();
+                let keys: Vec<(u64, u32)> =
+                    st.blocks.keys().filter(|(r, _)| *r == rdd).copied().collect();
+                for k in keys {
+                    if let Some(d) = st.blocks.remove(&k) {
+                        let bytes = d.approx_bytes();
+                        st.mem.release(bytes);
+                    }
+                }
+                ExecReply::Ok
+            }
+            ExecMsg::FinalizeShuffle { shuffle_id, rdd_out, parts, empty_kind } => {
+                match finalize_shuffle(&state, shuffle_id, rdd_out, &parts, empty_kind) {
+                    Ok(()) => ExecReply::Ok,
+                    Err(e) => ExecReply::Err { message: e.to_string() },
+                }
+            }
+            ExecMsg::RunTask { spec } => {
+                // Model per-task scheduling/dispatch latency (closure
+                // deserialization, JVM dispatch). See SparkletConfig.
+                if task_overhead_us > 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(task_overhead_us));
+                }
+                match run_task(&state, &peers, &spec) {
+                    Ok(reply) => reply,
+                    Err(e) => ExecReply::Err { message: e.to_string() },
+                }
+            }
+        };
+        frame::write_frame(&mut ctl, &reply.encode())?;
+    }
+}
+
+fn run_task(
+    state: &Arc<Mutex<ExecState>>,
+    peers: &[String],
+    spec: &TaskSpec,
+) -> Result<ExecReply> {
+    // Snapshot the input partition (cloned out so eval doesn't hold the
+    // lock; Spark tasks also operate on their own iterator view).
+    let input: Option<PartitionData> = match spec.input {
+        Some((rdd, part)) => {
+            let st = state.lock().unwrap();
+            Some(
+                st.blocks
+                    .get(&(rdd, part))
+                    .ok_or_else(|| {
+                        Error::Sparklet(format!("missing partition ({rdd}, {part})"))
+                    })?
+                    .clone(),
+            )
+        }
+        None => None,
+    };
+
+    let out = eval(&spec.op, input.as_ref())?;
+    match (&spec.out, out) {
+        (TaskOut::Store { rdd, part }, EvalOut::Plain(data)) => {
+            state.lock().unwrap().store(*rdd, *part, data)?;
+            Ok(ExecReply::Done { aggregate: None, collected: None })
+        }
+        (TaskOut::Aggregate, EvalOut::Plain(PartitionData::Doubles(d))) => {
+            Ok(ExecReply::Done { aggregate: Some(d), collected: None })
+        }
+        (TaskOut::Aggregate, EvalOut::Plain(other)) => Err(Error::Sparklet(format!(
+            "aggregate task produced {} (need doubles)",
+            other.kind()
+        ))),
+        (TaskOut::Collect, EvalOut::Plain(data)) => {
+            Ok(ExecReply::Done { aggregate: None, collected: Some(data) })
+        }
+        (TaskOut::Shuffle { shuffle_id, num_parts }, EvalOut::Keyed(items)) => {
+            push_shuffle(state, peers, *shuffle_id, *num_parts, items)?;
+            Ok(ExecReply::Done { aggregate: None, collected: None })
+        }
+        (TaskOut::Shuffle { .. }, EvalOut::Plain(_)) => {
+            Err(Error::Sparklet("shuffle output needs a keyed op".into()))
+        }
+        (_, EvalOut::Keyed(_)) => {
+            Err(Error::Sparklet("keyed op needs a shuffle output".into()))
+        }
+    }
+}
+
+/// Bucket keyed items by `key % num_parts` and push each bucket to the
+/// executor owning that partition (part p lives on executor p % E).
+fn push_shuffle(
+    state: &Arc<Mutex<ExecState>>,
+    peers: &[String],
+    shuffle_id: u64,
+    num_parts: u32,
+    items: Vec<(u64, PartitionData)>,
+) -> Result<()> {
+    if peers.is_empty() {
+        return Err(Error::Sparklet("no peer table; SetPeers not received".into()));
+    }
+    // Build buckets (charged against this executor's memory as the
+    // shuffle-write buffer, released after the push).
+    let mut buckets: Vec<Option<PartitionData>> = (0..num_parts).map(|_| None).collect();
+    let mut buffered: u64 = 0;
+    for (key, data) in items {
+        let p = (key % num_parts as u64) as usize;
+        buffered += data.approx_bytes();
+        state.lock().unwrap().mem.charge(data.approx_bytes())?;
+        match &mut buckets[p] {
+            Some(b) => b.extend(data)?,
+            slot => *slot = Some(data),
+        }
+    }
+
+    let result = (|| -> Result<()> {
+        for (p, bucket) in buckets.iter().enumerate() {
+            let Some(data) = bucket else { continue };
+            let target = p % peers.len();
+            let mut conn = TcpStream::connect(&peers[target])?;
+            conn.set_nodelay(true)?;
+            let mut w = Writer::new();
+            w.put_u64(shuffle_id);
+            w.put_u32(p as u32);
+            data.encode_into(&mut w);
+            frame::write_frame(&mut conn, &w.into_bytes())?;
+            // ack carries OOM errors from the receiving executor
+            let ack = frame::read_frame(&mut conn)?;
+            let mut r = Reader::new(&ack);
+            if r.get_u8()? != 0 {
+                return Err(Error::Sparklet(r.get_str()?));
+            }
+        }
+        Ok(())
+    })();
+    state.lock().unwrap().mem.release(buffered);
+    result
+}
+
+fn serve_shuffle_conn(conn: &mut TcpStream, state: Arc<Mutex<ExecState>>) -> Result<()> {
+    let buf = frame::read_frame(conn)?;
+    let mut r = Reader::new(&buf);
+    let shuffle_id = r.get_u64()?;
+    let part = r.get_u32()?;
+    let data = PartitionData::decode_from(&mut r)?;
+    let ack = {
+        let mut st = state.lock().unwrap();
+        match st.mem.charge(data.approx_bytes()) {
+            Ok(()) => {
+                st.shuffle_in.entry((shuffle_id, part)).or_default().push(data);
+                let mut w = Writer::new();
+                w.put_u8(0);
+                w.into_bytes()
+            }
+            Err(e) => {
+                debugln!("sparklet", "shuffle receive rejected: {e}");
+                let mut w = Writer::new();
+                w.put_u8(1);
+                w.put_str(&e.to_string());
+                w.into_bytes()
+            }
+        }
+    };
+    frame::write_frame(conn, &ack)?;
+    Ok(())
+}
+
+fn finalize_shuffle(
+    state: &Arc<Mutex<ExecState>>,
+    shuffle_id: u64,
+    rdd_out: u64,
+    parts: &[u32],
+    empty_kind: u8,
+) -> Result<()> {
+    let mut st = state.lock().unwrap();
+    for &part in parts {
+        let buckets = st.shuffle_in.remove(&(shuffle_id, part)).unwrap_or_default();
+        let mut merged: Option<PartitionData> = None;
+        let mut freed = 0u64;
+        for b in buckets {
+            freed += b.approx_bytes();
+            match &mut merged {
+                None => merged = Some(b),
+                Some(m) => m.extend(b)?,
+            }
+        }
+        let data = merged.unwrap_or(empty_partition(empty_kind)?);
+        st.mem.release(freed); // buckets become the stored partition
+        st.store(rdd_out, part, data)?;
+    }
+    Ok(())
+}
+
+fn empty_partition(kind: u8) -> Result<PartitionData> {
+    Ok(match kind {
+        0 => PartitionData::Rows(vec![]),
+        1 => PartitionData::Triplets(vec![]),
+        2 => PartitionData::Blocks(vec![]),
+        3 => PartitionData::TaggedBlocks(vec![]),
+        4 => PartitionData::Doubles(vec![]),
+        t => return Err(Error::Protocol(format!("bad empty kind {t}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_msgs_roundtrip() {
+        let msgs = vec![
+            ExecMsg::RunTask {
+                spec: TaskSpec {
+                    input: None,
+                    op: crate::sparklet::task::TaskOp::Identity,
+                    out: TaskOut::Collect,
+                },
+            },
+            ExecMsg::FinalizeShuffle { shuffle_id: 3, rdd_out: 9, parts: vec![0, 2], empty_kind: 1 },
+            ExecMsg::SetPeers { shuffle_addrs: vec!["127.0.0.1:1".into()] },
+            ExecMsg::FreeRdd { rdd: 5 },
+            ExecMsg::MemUsage,
+            ExecMsg::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(ExecMsg::decode(&m.encode()).unwrap(), m);
+        }
+        let replies = vec![
+            ExecReply::Ok,
+            ExecReply::Done { aggregate: Some(vec![1.0]), collected: None },
+            ExecReply::Done {
+                aggregate: None,
+                collected: Some(PartitionData::Doubles(vec![2.0])),
+            },
+            ExecReply::Mem { bytes: 123 },
+            ExecReply::Err { message: "oom".into() },
+        ];
+        for m in replies {
+            assert_eq!(ExecReply::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn mem_tracker_caps() {
+        let mut m = MemTracker::new(100);
+        m.charge(60).unwrap();
+        assert!(m.charge(50).is_err());
+        m.release(30);
+        m.charge(50).unwrap();
+        assert_eq!(m.used(), 80);
+        m.release(1000);
+        assert_eq!(m.used(), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! `sparklet` — the Apache Spark substitute (DESIGN.md substitution table).
+//!
+//! A deliberately faithful miniature of the structures the paper blames
+//! for Spark's linear-algebra overheads:
+//!
+//! * a **driver** that centrally schedules every task over TCP
+//!   ([`context::SparkletContext`]),
+//! * **executors** holding immutable partitioned data, running a fixed
+//!   task vocabulary ([`task::TaskOp`] — the serializable-closure
+//!   substitute), with per-executor **memory caps** whose overflow aborts
+//!   jobs (Table 1's `NA` rows),
+//! * a push-based **shuffle** between executors for every re-layout
+//!   (explode-to-triplets, block conversion, multiply join),
+//! * MLlib-shaped **matrix types** ([`matrix::IndexedRowMatrix`],
+//!   [`matrix::BlockMatrix`]) and [`matrix::IndexedRowMatrix::compute_svd`]
+//!   whose Lanczos loop schedules one aggregation stage per iteration,
+//! * the **Alchemist bridge**: executors push/fetch matrix rows directly
+//!   to/from Alchemist workers ([`matrix::IndexedRowMatrix::to_alchemist`]).
+//!
+//! Known divergences from real Spark (documented in DESIGN.md): eager
+//! stage execution instead of lazy lineage (no fault-tolerance replay),
+//! push-based instead of pull-based shuffle, and a fixed op vocabulary
+//! instead of closures. None of these change the communication or memory
+//! *structure* the experiments measure.
+
+pub mod context;
+pub mod data;
+pub mod executor;
+pub mod matrix;
+pub mod task;
+
+pub use context::{Rdd, SparkletContext};
+pub use matrix::{BlockMatrix, IndexedRowMatrix, SparkSvd};

@@ -1,0 +1,707 @@
+//! Tasks — sparklet's serializable computation vocabulary, and the
+//! executor-side interpreter that evaluates them.
+//!
+//! Spark ships JVM closures; sparklet ships [`TaskOp`] variants with their
+//! parameters. A task = (input partition, op, output disposition). Wide
+//! ops return *keyed* items which the executor buckets by
+//! `key % num_output_partitions` and pushes to the owning executors —
+//! the shuffle. Everything crosses real sockets in serialized form.
+
+use crate::client::transfer;
+use crate::linalg::{gemm, DenseMatrix};
+use crate::protocol::{MatrixMeta, Reader, WireRow, Writer, WorkerInfo};
+use crate::sparklet::data::{decode_matrix, encode_matrix, Block, PartitionData, TaggedBlock};
+use crate::workload;
+use crate::{Error, Result};
+
+/// The fixed operation vocabulary (Spark-closure substitute).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOp {
+    /// Generate random rows [row_start, row_end) with `cols` columns.
+    GenRows { seed: u64, cols: u32, row_start: u64, row_end: u64 },
+    /// Generate rows with a decaying spectrum (SVD workloads).
+    GenSpectralRows { seed: u64, cols: u32, row_start: u64, row_end: u64, decay: f64 },
+    /// Rows -> keyed triplets (i, j, v), keyed by destination block id.
+    /// The "explosion" step of §4.1.
+    ExplodeToBlockTriplets { block: u32, nb_j: u64 },
+    /// Shuffle-reduce side: triplets bucket -> assembled blocks.
+    TripletsToBlocks { block: u32, mat_rows: u64, mat_cols: u64, nb_j: u64 },
+    /// Blocks -> keyed TaggedBlocks replicated for the multiply join
+    /// (side 0: A block (i,k) goes to all (i, j); side 1: B block (k,j)
+    /// goes to all (i, j)). Keyed by i * nb_j + j.
+    ReplicateForGemm { side: u8, nb_i: u64, nb_j: u64 },
+    /// TaggedBlocks bucket -> C blocks: C_ij = sum_k A_ik B_kj.
+    MultiplyJoined,
+    /// Blocks -> keyed triplets for conversion back to rows
+    /// (`toIndexedRowMatrix`), keyed by row-partition.
+    BlocksToRowTriplets { block: u32, num_row_parts: u64, rows_per_part: u64 },
+    /// Triplets bucket -> assembled rows.
+    AssembleRows { cols: u32 },
+    /// Rows -> Doubles(n): partial Gram matvec w += rowᵀ (row · v).
+    /// One per Lanczos iteration per partition (the MLlib computeSVD
+    /// inner loop).
+    GramMatvec { v: Vec<f64> },
+    /// Rows -> Rows: U rows from V Σ⁻¹ (computeU).
+    MapU { v: DenseMatrix, sigma_inv: Vec<f64> },
+    /// Rows -> Doubles(1): sum of squares (norms).
+    SumSq,
+    /// Any -> Doubles(1): element count.
+    CountItems,
+    /// Rows -> Doubles(2): push this partition's rows to Alchemist
+    /// workers; returns (rows_sent, frames_sent). The executor-side half
+    /// of the paper's distributed send.
+    SendToAlchemist { workers: Vec<WorkerInfo>, meta: MatrixMeta, batch_rows: u32 },
+    /// () -> Rows: fetch rows [row_start, row_end) from Alchemist.
+    FetchFromAlchemist {
+        workers: Vec<WorkerInfo>,
+        meta: MatrixMeta,
+        row_start: u64,
+        row_end: u64,
+    },
+    /// Pass-through (collect / repartition).
+    Identity,
+}
+
+/// Where a task's output goes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOut {
+    /// Store locally as (rdd, part) — narrow dependency.
+    Store { rdd: u64, part: u32 },
+    /// Bucket keyed output by `key % num_parts` and push to the shuffle
+    /// service of the executor owning each part — wide dependency.
+    Shuffle { shuffle_id: u64, num_parts: u32 },
+    /// Return Doubles to the driver (tree-aggregate leaf).
+    Aggregate,
+    /// Return the whole payload to the driver.
+    Collect,
+}
+
+/// A schedulable task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Input partition, if the op consumes one.
+    pub input: Option<(u64, u32)>,
+    pub op: TaskOp,
+    pub out: TaskOut,
+}
+
+/// What evaluation produced, before output disposition.
+pub enum EvalOut {
+    Plain(PartitionData),
+    /// (key, singleton payload) pairs for shuffling.
+    Keyed(Vec<(u64, PartitionData)>),
+}
+
+/// Evaluate an op against its input partition.
+pub fn eval(op: &TaskOp, input: Option<&PartitionData>) -> Result<EvalOut> {
+    match op {
+        TaskOp::GenRows { seed, cols, row_start, row_end } => {
+            let rows = (*row_start..*row_end)
+                .map(|i| WireRow { index: i, values: workload::random_row(*seed, i, *cols as usize) })
+                .collect();
+            Ok(EvalOut::Plain(PartitionData::Rows(rows)))
+        }
+        TaskOp::GenSpectralRows { seed, cols, row_start, row_end, decay } => {
+            let rows = (*row_start..*row_end)
+                .map(|i| WireRow {
+                    index: i,
+                    values: workload::spectral_row(*seed, i, *cols as usize, *decay),
+                })
+                .collect();
+            Ok(EvalOut::Plain(PartitionData::Rows(rows)))
+        }
+        TaskOp::ExplodeToBlockTriplets { block, nb_j } => {
+            let rows = expect_rows(input)?;
+            let b = *block as u64;
+            let mut out = Vec::new();
+            for r in rows {
+                let bi = r.index / b;
+                for (j, &v) in r.values.iter().enumerate() {
+                    let bj = j as u64 / b;
+                    let key = bi * nb_j + bj;
+                    out.push((key, PartitionData::Triplets(vec![(r.index, j as u64, v)])));
+                }
+            }
+            Ok(EvalOut::Keyed(out))
+        }
+        TaskOp::TripletsToBlocks { block, mat_rows, mat_cols, nb_j } => {
+            let ts = expect_triplets(input)?;
+            let b = *block as u64;
+            use std::collections::HashMap;
+            let mut blocks: HashMap<(u64, u64), DenseMatrix> = HashMap::new();
+            for &(i, j, v) in ts {
+                let (bi, bj) = (i / b, j / b);
+                let h = (b.min(mat_rows - bi * b)) as usize;
+                let w = (b.min(mat_cols - bj * b)) as usize;
+                let m = blocks.entry((bi, bj)).or_insert_with(|| DenseMatrix::zeros(h, w));
+                m.set((i - bi * b) as usize, (j - bj * b) as usize, v);
+            }
+            let _ = nb_j;
+            let mut out: Vec<Block> =
+                blocks.into_iter().map(|((bi, bj), mat)| Block { bi, bj, mat }).collect();
+            out.sort_by_key(|b| (b.bi, b.bj));
+            Ok(EvalOut::Plain(PartitionData::Blocks(out)))
+        }
+        TaskOp::ReplicateForGemm { side, nb_i, nb_j } => {
+            let blocks = expect_blocks(input)?;
+            let mut out = Vec::new();
+            for blk in blocks {
+                match side {
+                    0 => {
+                        // A block at (i, k): join partner for every j
+                        for j in 0..*nb_j {
+                            let key = blk.bi * nb_j + j;
+                            out.push((
+                                key,
+                                PartitionData::TaggedBlocks(vec![TaggedBlock {
+                                    bi: blk.bi,
+                                    bj: j,
+                                    side: 0,
+                                    k: blk.bj,
+                                    mat: blk.mat.clone(),
+                                }]),
+                            ));
+                        }
+                    }
+                    1 => {
+                        // B block at (k, j): join partner for every i
+                        for i in 0..*nb_i {
+                            let key = i * nb_j + blk.bj;
+                            out.push((
+                                key,
+                                PartitionData::TaggedBlocks(vec![TaggedBlock {
+                                    bi: i,
+                                    bj: blk.bj,
+                                    side: 1,
+                                    k: blk.bi,
+                                    mat: blk.mat.clone(),
+                                }]),
+                            ));
+                        }
+                    }
+                    s => return Err(Error::Sparklet(format!("bad gemm side {s}"))),
+                }
+            }
+            Ok(EvalOut::Keyed(out))
+        }
+        TaskOp::MultiplyJoined => {
+            let tagged = expect_tagged(input)?;
+            use std::collections::HashMap;
+            let mut groups: HashMap<(u64, u64), (Vec<&TaggedBlock>, Vec<&TaggedBlock>)> =
+                HashMap::new();
+            for tb in tagged {
+                let g = groups.entry((tb.bi, tb.bj)).or_default();
+                if tb.side == 0 {
+                    g.0.push(tb);
+                } else {
+                    g.1.push(tb);
+                }
+            }
+            let mut out = Vec::new();
+            for ((bi, bj), (mut a_parts, mut b_parts)) in groups {
+                a_parts.sort_by_key(|t| t.k);
+                b_parts.sort_by_key(|t| t.k);
+                let mut c: Option<DenseMatrix> = None;
+                let mut b_iter = b_parts.iter().peekable();
+                for a in &a_parts {
+                    // advance to matching k
+                    while b_iter.peek().map(|b| b.k < a.k).unwrap_or(false) {
+                        b_iter.next();
+                    }
+                    if let Some(b) = b_iter.peek() {
+                        if b.k == a.k {
+                            let prod = gemm::gemm(&a.mat, &b.mat)?;
+                            match &mut c {
+                                None => c = Some(prod),
+                                Some(acc) => acc.add_block(0, 0, &prod),
+                            }
+                        }
+                    }
+                }
+                if let Some(mat) = c {
+                    out.push(Block { bi, bj, mat });
+                }
+            }
+            out.sort_by_key(|b| (b.bi, b.bj));
+            Ok(EvalOut::Plain(PartitionData::Blocks(out)))
+        }
+        TaskOp::BlocksToRowTriplets { block, num_row_parts, rows_per_part } => {
+            let blocks = expect_blocks(input)?;
+            let b = *block as u64;
+            let mut out = Vec::new();
+            for blk in blocks {
+                for li in 0..blk.mat.rows() {
+                    let gi = blk.bi * b + li as u64;
+                    let key = (gi / (*rows_per_part).max(1)).min(num_row_parts - 1);
+                    let mut ts = Vec::with_capacity(blk.mat.cols());
+                    for lj in 0..blk.mat.cols() {
+                        ts.push((gi, blk.bj * b + lj as u64, blk.mat.get(li, lj)));
+                    }
+                    out.push((key, PartitionData::Triplets(ts)));
+                }
+            }
+            Ok(EvalOut::Keyed(out))
+        }
+        TaskOp::AssembleRows { cols } => {
+            let ts = expect_triplets(input)?;
+            use std::collections::HashMap;
+            let mut rows: HashMap<u64, Vec<f64>> = HashMap::new();
+            for &(i, j, v) in ts {
+                rows.entry(i).or_insert_with(|| vec![0.0; *cols as usize])[j as usize] = v;
+            }
+            let mut out: Vec<WireRow> =
+                rows.into_iter().map(|(index, values)| WireRow { index, values }).collect();
+            out.sort_by_key(|r| r.index);
+            Ok(EvalOut::Plain(PartitionData::Rows(out)))
+        }
+        TaskOp::GramMatvec { v } => {
+            let rows = expect_rows(input)?;
+            let mut w = vec![0.0; v.len()];
+            for r in rows {
+                if r.values.len() != v.len() {
+                    return Err(Error::Sparklet(format!(
+                        "gram matvec: row width {} vs v len {}",
+                        r.values.len(),
+                        v.len()
+                    )));
+                }
+                let t = crate::linalg::blas1::dot(&r.values, v);
+                crate::linalg::blas1::axpy(t, &r.values, &mut w);
+            }
+            Ok(EvalOut::Plain(PartitionData::Doubles(w)))
+        }
+        TaskOp::MapU { v, sigma_inv } => {
+            let rows = expect_rows(input)?;
+            let k = sigma_inv.len();
+            let mut out = Vec::with_capacity(rows.len());
+            for r in rows {
+                let mut u = vec![0.0; k];
+                for j in 0..k {
+                    let mut s = 0.0;
+                    for (l, &x) in r.values.iter().enumerate() {
+                        s += x * v.get(l, j);
+                    }
+                    u[j] = s * sigma_inv[j];
+                }
+                out.push(WireRow { index: r.index, values: u });
+            }
+            Ok(EvalOut::Plain(PartitionData::Rows(out)))
+        }
+        TaskOp::SumSq => {
+            let rows = expect_rows(input)?;
+            let s: f64 = rows
+                .iter()
+                .flat_map(|r| r.values.iter())
+                .map(|x| x * x)
+                .sum();
+            Ok(EvalOut::Plain(PartitionData::Doubles(vec![s])))
+        }
+        TaskOp::CountItems => {
+            let n = input.map(|d| d.len()).unwrap_or(0);
+            Ok(EvalOut::Plain(PartitionData::Doubles(vec![n as f64])))
+        }
+        TaskOp::SendToAlchemist { workers, meta, batch_rows } => {
+            let rows = expect_rows(input)?;
+            let (sent, frames) = transfer::push_rows(
+                workers,
+                meta,
+                rows.iter().map(|r| (r.index, r.values.clone())),
+                *batch_rows as usize,
+                true,
+            )?;
+            Ok(EvalOut::Plain(PartitionData::Doubles(vec![sent as f64, frames as f64])))
+        }
+        TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end } => {
+            let mut rows = Vec::new();
+            transfer::fetch_rows(workers, meta, *row_start, *row_end, |index, values| {
+                rows.push(WireRow { index, values });
+                Ok(())
+            })?;
+            rows.sort_by_key(|r| r.index);
+            Ok(EvalOut::Plain(PartitionData::Rows(rows)))
+        }
+        TaskOp::Identity => {
+            let d = input.ok_or_else(|| Error::Sparklet("identity needs input".into()))?;
+            Ok(EvalOut::Plain(d.clone()))
+        }
+    }
+}
+
+fn expect_rows(input: Option<&PartitionData>) -> Result<&Vec<WireRow>> {
+    match input {
+        Some(PartitionData::Rows(r)) => Ok(r),
+        other => Err(Error::Sparklet(format!(
+            "expected rows partition, got {:?}",
+            other.map(|d| d.kind())
+        ))),
+    }
+}
+
+fn expect_triplets(input: Option<&PartitionData>) -> Result<&Vec<(u64, u64, f64)>> {
+    match input {
+        Some(PartitionData::Triplets(t)) => Ok(t),
+        other => Err(Error::Sparklet(format!(
+            "expected triplets partition, got {:?}",
+            other.map(|d| d.kind())
+        ))),
+    }
+}
+
+fn expect_blocks(input: Option<&PartitionData>) -> Result<&Vec<Block>> {
+    match input {
+        Some(PartitionData::Blocks(b)) => Ok(b),
+        other => Err(Error::Sparklet(format!(
+            "expected blocks partition, got {:?}",
+            other.map(|d| d.kind())
+        ))),
+    }
+}
+
+fn expect_tagged(input: Option<&PartitionData>) -> Result<&Vec<TaggedBlock>> {
+    match input {
+        Some(PartitionData::TaggedBlocks(b)) => Ok(b),
+        other => Err(Error::Sparklet(format!(
+            "expected tagged blocks, got {:?}",
+            other.map(|d| d.kind())
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding (tasks really cross the driver->executor socket)
+// ---------------------------------------------------------------------------
+
+impl TaskOp {
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            TaskOp::GenRows { seed, cols, row_start, row_end } => {
+                w.put_u8(0);
+                w.put_u64(*seed);
+                w.put_u32(*cols);
+                w.put_u64(*row_start);
+                w.put_u64(*row_end);
+            }
+            TaskOp::GenSpectralRows { seed, cols, row_start, row_end, decay } => {
+                w.put_u8(1);
+                w.put_u64(*seed);
+                w.put_u32(*cols);
+                w.put_u64(*row_start);
+                w.put_u64(*row_end);
+                w.put_f64(*decay);
+            }
+            TaskOp::ExplodeToBlockTriplets { block, nb_j } => {
+                w.put_u8(2);
+                w.put_u32(*block);
+                w.put_u64(*nb_j);
+            }
+            TaskOp::TripletsToBlocks { block, mat_rows, mat_cols, nb_j } => {
+                w.put_u8(3);
+                w.put_u32(*block);
+                w.put_u64(*mat_rows);
+                w.put_u64(*mat_cols);
+                w.put_u64(*nb_j);
+            }
+            TaskOp::ReplicateForGemm { side, nb_i, nb_j } => {
+                w.put_u8(4);
+                w.put_u8(*side);
+                w.put_u64(*nb_i);
+                w.put_u64(*nb_j);
+            }
+            TaskOp::MultiplyJoined => w.put_u8(5),
+            TaskOp::BlocksToRowTriplets { block, num_row_parts, rows_per_part } => {
+                w.put_u8(6);
+                w.put_u32(*block);
+                w.put_u64(*num_row_parts);
+                w.put_u64(*rows_per_part);
+            }
+            TaskOp::AssembleRows { cols } => {
+                w.put_u8(7);
+                w.put_u32(*cols);
+            }
+            TaskOp::GramMatvec { v } => {
+                w.put_u8(8);
+                w.put_f64_slice(v);
+            }
+            TaskOp::MapU { v, sigma_inv } => {
+                w.put_u8(9);
+                encode_matrix(w, v);
+                w.put_f64_slice(sigma_inv);
+            }
+            TaskOp::SumSq => w.put_u8(10),
+            TaskOp::CountItems => w.put_u8(11),
+            TaskOp::SendToAlchemist { workers, meta, batch_rows } => {
+                w.put_u8(12);
+                w.put_u32(workers.len() as u32);
+                for wk in workers {
+                    wk.encode(w);
+                }
+                meta.encode(w);
+                w.put_u32(*batch_rows);
+            }
+            TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end } => {
+                w.put_u8(13);
+                w.put_u32(workers.len() as u32);
+                for wk in workers {
+                    wk.encode(w);
+                }
+                meta.encode(w);
+                w.put_u64(*row_start);
+                w.put_u64(*row_end);
+            }
+            TaskOp::Identity => w.put_u8(14),
+        }
+    }
+
+    pub fn decode_from(r: &mut Reader<'_>) -> Result<TaskOp> {
+        Ok(match r.get_u8()? {
+            0 => TaskOp::GenRows {
+                seed: r.get_u64()?,
+                cols: r.get_u32()?,
+                row_start: r.get_u64()?,
+                row_end: r.get_u64()?,
+            },
+            1 => TaskOp::GenSpectralRows {
+                seed: r.get_u64()?,
+                cols: r.get_u32()?,
+                row_start: r.get_u64()?,
+                row_end: r.get_u64()?,
+                decay: r.get_f64()?,
+            },
+            2 => TaskOp::ExplodeToBlockTriplets { block: r.get_u32()?, nb_j: r.get_u64()? },
+            3 => TaskOp::TripletsToBlocks {
+                block: r.get_u32()?,
+                mat_rows: r.get_u64()?,
+                mat_cols: r.get_u64()?,
+                nb_j: r.get_u64()?,
+            },
+            4 => TaskOp::ReplicateForGemm {
+                side: r.get_u8()?,
+                nb_i: r.get_u64()?,
+                nb_j: r.get_u64()?,
+            },
+            5 => TaskOp::MultiplyJoined,
+            6 => TaskOp::BlocksToRowTriplets {
+                block: r.get_u32()?,
+                num_row_parts: r.get_u64()?,
+                rows_per_part: r.get_u64()?,
+            },
+            7 => TaskOp::AssembleRows { cols: r.get_u32()? },
+            8 => TaskOp::GramMatvec { v: r.get_f64_slice()? },
+            9 => TaskOp::MapU { v: decode_matrix(r)?, sigma_inv: r.get_f64_slice()? },
+            10 => TaskOp::SumSq,
+            11 => TaskOp::CountItems,
+            12 => {
+                let n = r.get_u32()? as usize;
+                let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
+                for _ in 0..n {
+                    workers.push(WorkerInfo::decode(r)?);
+                }
+                TaskOp::SendToAlchemist {
+                    workers,
+                    meta: MatrixMeta::decode(r)?,
+                    batch_rows: r.get_u32()?,
+                }
+            }
+            13 => {
+                let n = r.get_u32()? as usize;
+                let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
+                for _ in 0..n {
+                    workers.push(WorkerInfo::decode(r)?);
+                }
+                TaskOp::FetchFromAlchemist {
+                    workers,
+                    meta: MatrixMeta::decode(r)?,
+                    row_start: r.get_u64()?,
+                    row_end: r.get_u64()?,
+                }
+            }
+            14 => TaskOp::Identity,
+            t => return Err(Error::Protocol(format!("bad TaskOp tag {t}"))),
+        })
+    }
+}
+
+impl TaskOut {
+    pub fn encode_into(&self, w: &mut Writer) {
+        match self {
+            TaskOut::Store { rdd, part } => {
+                w.put_u8(0);
+                w.put_u64(*rdd);
+                w.put_u32(*part);
+            }
+            TaskOut::Shuffle { shuffle_id, num_parts } => {
+                w.put_u8(1);
+                w.put_u64(*shuffle_id);
+                w.put_u32(*num_parts);
+            }
+            TaskOut::Aggregate => w.put_u8(2),
+            TaskOut::Collect => w.put_u8(3),
+        }
+    }
+
+    pub fn decode_from(r: &mut Reader<'_>) -> Result<TaskOut> {
+        Ok(match r.get_u8()? {
+            0 => TaskOut::Store { rdd: r.get_u64()?, part: r.get_u32()? },
+            1 => TaskOut::Shuffle { shuffle_id: r.get_u64()?, num_parts: r.get_u32()? },
+            2 => TaskOut::Aggregate,
+            3 => TaskOut::Collect,
+            t => return Err(Error::Protocol(format!("bad TaskOut tag {t}"))),
+        })
+    }
+}
+
+impl TaskSpec {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self.input {
+            Some((rdd, part)) => {
+                w.put_u8(1);
+                w.put_u64(rdd);
+                w.put_u32(part);
+            }
+            None => w.put_u8(0),
+        }
+        self.op.encode_into(&mut w);
+        self.out.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<TaskSpec> {
+        let mut r = Reader::new(buf);
+        let input = match r.get_u8()? {
+            0 => None,
+            1 => Some((r.get_u64()?, r.get_u32()?)),
+            t => return Err(Error::Protocol(format!("bad TaskSpec input tag {t}"))),
+        };
+        let op = TaskOp::decode_from(&mut r)?;
+        let out = TaskOut::decode_from(&mut r)?;
+        Ok(TaskSpec { input, op, out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_specs_roundtrip() {
+        let specs = vec![
+            TaskSpec {
+                input: None,
+                op: TaskOp::GenRows { seed: 1, cols: 4, row_start: 0, row_end: 10 },
+                out: TaskOut::Store { rdd: 1, part: 0 },
+            },
+            TaskSpec {
+                input: Some((1, 0)),
+                op: TaskOp::ExplodeToBlockTriplets { block: 2, nb_j: 3 },
+                out: TaskOut::Shuffle { shuffle_id: 7, num_parts: 4 },
+            },
+            TaskSpec {
+                input: Some((2, 1)),
+                op: TaskOp::GramMatvec { v: vec![1.0, 2.0] },
+                out: TaskOut::Aggregate,
+            },
+            TaskSpec {
+                input: Some((2, 1)),
+                op: TaskOp::MapU {
+                    v: DenseMatrix::identity(2),
+                    sigma_inv: vec![0.5, 0.25],
+                },
+                out: TaskOut::Collect,
+            },
+        ];
+        for s in specs {
+            assert_eq!(TaskSpec::decode(&s.encode()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn gen_rows_matches_workload() {
+        let out = eval(&TaskOp::GenRows { seed: 5, cols: 3, row_start: 2, row_end: 4 }, None)
+            .unwrap();
+        let EvalOut::Plain(PartitionData::Rows(rows)) = out else { panic!() };
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].index, 2);
+        assert_eq!(rows[0].values, workload::random_row(5, 2, 3));
+    }
+
+    #[test]
+    fn explode_and_reassemble_blocks() {
+        // 4x4 matrix in rows; block=2 -> 2x2 grid of 2x2 blocks
+        let rows: Vec<WireRow> = (0..4u64)
+            .map(|i| WireRow { index: i, values: (0..4).map(|j| (i * 4 + j) as f64).collect() })
+            .collect();
+        let input = PartitionData::Rows(rows);
+        let EvalOut::Keyed(keyed) =
+            eval(&TaskOp::ExplodeToBlockTriplets { block: 2, nb_j: 2 }, Some(&input)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(keyed.len(), 16); // every element exploded
+        // merge all buckets and rebuild
+        let mut all = PartitionData::Triplets(vec![]);
+        for (_, d) in keyed {
+            all.extend(d).unwrap();
+        }
+        let EvalOut::Plain(PartitionData::Blocks(blocks)) = eval(
+            &TaskOp::TripletsToBlocks { block: 2, mat_rows: 4, mat_cols: 4, nb_j: 2 },
+            Some(&all),
+        )
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(blocks.len(), 4);
+        let b11 = blocks.iter().find(|b| b.bi == 1 && b.bj == 1).unwrap();
+        assert_eq!(b11.mat.get(0, 0), (2 * 4 + 2) as f64);
+    }
+
+    #[test]
+    fn multiply_joined_computes_block_product() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = DenseMatrix::from_vec(2, 2, vec![5., 6., 7., 8.]).unwrap();
+        let input = PartitionData::TaggedBlocks(vec![
+            TaggedBlock { bi: 0, bj: 0, side: 0, k: 0, mat: a.clone() },
+            TaggedBlock { bi: 0, bj: 0, side: 1, k: 0, mat: b.clone() },
+        ]);
+        let EvalOut::Plain(PartitionData::Blocks(out)) =
+            eval(&TaskOp::MultiplyJoined, Some(&input)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(out.len(), 1);
+        let want = gemm::gemm(&a, &b).unwrap();
+        assert_eq!(out[0].mat, want);
+    }
+
+    #[test]
+    fn gram_matvec_partial_matches_dense() {
+        let rows: Vec<WireRow> = (0..5u64)
+            .map(|i| WireRow { index: i, values: workload::random_row(3, i, 4) })
+            .collect();
+        let v = vec![1.0, -0.5, 2.0, 0.0];
+        let input = PartitionData::Rows(rows.clone());
+        let EvalOut::Plain(PartitionData::Doubles(w)) =
+            eval(&TaskOp::GramMatvec { v: v.clone() }, Some(&input)).unwrap()
+        else {
+            panic!()
+        };
+        // dense reference
+        let mut a = DenseMatrix::zeros(5, 4);
+        for (i, r) in rows.iter().enumerate() {
+            a.row_mut(i).copy_from_slice(&r.values);
+        }
+        let t = a.matvec(&v).unwrap();
+        let want = a.matvec_t(&t).unwrap();
+        for (g, wnt) in w.iter().zip(&want) {
+            assert!((g - wnt).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn type_mismatches_are_sparklet_errors() {
+        let d = PartitionData::Doubles(vec![1.0]);
+        assert!(eval(&TaskOp::SumSq, Some(&d)).is_err());
+        assert!(eval(&TaskOp::MultiplyJoined, Some(&d)).is_err());
+        assert!(eval(&TaskOp::Identity, None).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Workload generation: seeded RNG + the random dense matrices the paper's
+//! experiments use ("random dense matrices generated within Spark" — §4.1,
+//! and the tall-skinny / short-wide 400 GB transfer matrices of §4.3).
+
+/// SplitMix64 — tiny, fast, reproducible. Used everywhere a bench or test
+/// needs deterministic "random" data.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [-1, 1) — matches "random dense" test matrices.
+    pub fn next_signed(&mut self) -> f64 {
+        2.0 * self.next_f64() - 1.0
+    }
+
+    /// Standard normal via Box-Muller (used for well-conditioned SVD
+    /// test matrices).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn next_range(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+}
+
+/// Generate row `i` of a seeded random matrix without materializing the
+/// whole matrix: each row is derived from (seed, i), so distributed
+/// generators (sparklet partitions, per-worker panels) produce *the same
+/// matrix* regardless of partitioning — which is what lets tests compare
+/// results across the Spark path and the Alchemist path.
+pub fn random_row(seed: u64, i: u64, cols: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ i.wrapping_mul(0xA24BAED4963EE407));
+    (0..cols).map(|_| rng.next_signed()).collect()
+}
+
+/// Dense row-major random matrix.
+pub fn random_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        out.extend_from_slice(&random_row(seed, i as u64, cols));
+    }
+    out
+}
+
+/// A matrix with a known, rapidly-decaying spectrum: A = G * diag(s),
+/// where G is Gaussian and s_j = decay^j. With m >> n, the singular values
+/// of A concentrate near sqrt(m) * s_j, giving the truncated-SVD benches
+/// a spectrum where rank-k truncation is meaningful (as in PCA workloads
+/// the paper motivates).
+pub fn spectral_row(seed: u64, i: u64, cols: usize, decay: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ i.wrapping_mul(0x9FB21C651E98DF25));
+    (0..cols).map(|j| rng.next_gaussian() * decay.powi(j as i32)).collect()
+}
+
+/// Paper experiment geometries (§4), scaled by ~2^10 for a laptop-class
+/// testbed. Dimensions stay in the paper's aspect ratios.
+pub mod geometries {
+    /// Table 1 rows: (m, n, k) — the paper's dimensions (in thousands:
+    /// (10,10,10), (50,10,30), (100,10,70), (300,10,60)) scaled by 1/16.
+    pub const TABLE1: [(usize, usize, usize); 4] = [
+        (625, 625, 625),
+        (3_125, 625, 1_875),
+        (6_250, 625, 4_375),
+        (18_750, 625, 3_750),
+    ];
+    /// Paper node counts per Table 1 row.
+    pub const TABLE1_NODES: [u32; 4] = [1, 1, 2, 4];
+
+    /// Fig 3/4 SVD sweep: paper m in {312.5k, 625k, 1.25m, 2.5m, 5m},
+    /// n = 10k, k = 20. Scaled /64: n = 156 -> round to 160.
+    pub const SVD_N: usize = 512;
+    pub const SVD_K: usize = 20;
+    pub const SVD_M: [usize; 5] = [4_882, 9_765, 19_531, 39_062, 78_125];
+
+    /// Tables 2/3: 400 GB matrices, tall 5.12M x 10k vs wide 40k x 1.28M.
+    /// Scaled to ~100 MB keeping the 128x row-count ratio.
+    pub const TALL: (usize, usize) = (131_072, 100); // 131k rows x 100
+    pub const WIDE: (usize, usize) = (1_024, 12_800); // 1k rows x 12.8k
+    /// Paper node grid (Tables 2/3): 8..56 step 8, total <= 64.
+    pub const NODE_GRID: [u32; 7] = [8, 16, 24, 32, 40, 48, 56];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn rows_independent_of_partitioning() {
+        // The core property: row i only depends on (seed, i).
+        let full = random_matrix(42, 10, 8);
+        for i in 0..10 {
+            assert_eq!(&full[i * 8..(i + 1) * 8], random_row(42, i as u64, 8).as_slice());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(random_row(1, 0, 16), random_row(2, 0, 16));
+        assert_ne!(random_row(1, 0, 16), random_row(1, 1, 16));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn spectral_rows_decay() {
+        let row = spectral_row(5, 0, 32, 0.5);
+        assert_eq!(row.len(), 32);
+        // later columns should be tiny relative to early ones on average
+        let early: f64 = row[..4].iter().map(|x| x.abs()).sum();
+        let late: f64 = row[28..].iter().map(|x| x.abs()).sum();
+        assert!(late < early);
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration: failure injection across the stack — every error path a
+//! deployment would hit must produce a typed error, not a hang or panic.
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{frame, ClientMsg, DriverMsg, LayoutKind};
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    c
+}
+
+#[test]
+fn unknown_library_and_routine() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "f").unwrap();
+    ac.request_workers(1).unwrap();
+    // unregistered library
+    let err = ac.run("nope", "gemm", vec![]).unwrap_err();
+    assert!(err.to_string().contains("not registered"), "{err}");
+    // unknown path scheme
+    let err = ac.register_library("x", "/usr/lib/libfoo.so").unwrap_err();
+    assert!(err.to_string().contains("cannot load library"), "{err}");
+    // unknown routine in a registered library
+    wrappers::register_elemlib(&ac).unwrap();
+    let err = ac.run("elemlib", "cholesky", vec![]).unwrap_err();
+    assert!(err.to_string().contains("no routine"), "{err}");
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn run_before_workers_rejected() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let ac = AlchemistContext::connect(&srv.driver_addr, "early").unwrap();
+    let err = ac.register_library("elemlib", "builtin:elemlib").unwrap_err();
+    assert!(err.to_string().contains("no workers"), "{err}");
+    let err = ac.create_matrix(4, 4, LayoutKind::RowBlock).unwrap_err();
+    assert!(err.to_string().contains("no workers"), "{err}");
+    srv.shutdown();
+}
+
+#[test]
+fn bad_routine_params_surface_cleanly() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "params").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = DenseMatrix::from_vec(8, 4, random_matrix(1, 8, 4)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    // missing k
+    let err = ac
+        .run("elemlib", "truncated_svd", ParamsBuilder::new().matrix("A", al.handle()).build())
+        .unwrap_err();
+    assert!(err.to_string().contains("missing parameter"), "{err}");
+
+    // k out of range
+    let err = ac
+        .run(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("k", 100).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+
+    // bogus handle
+    let err = ac
+        .run("elemlib", "fro_norm", ParamsBuilder::new().matrix("A", 999_999).build())
+        .unwrap_err();
+    assert!(err.to_string().contains("not owned by session"), "{err}");
+
+    // session still usable after routine failures
+    let norm = wrappers::fro_norm(&ac, &al).unwrap();
+    assert!((norm - a.frobenius_norm()).abs() < 1e-9);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn protocol_version_mismatch_rejected() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    frame::write_frame(
+        &mut conn,
+        &ClientMsg::Handshake { app_name: "old-client".into(), version: 1 }.encode(),
+    )
+    .unwrap();
+    let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
+    match reply {
+        DriverMsg::Err { message } => assert!(message.contains("version"), "{message}"),
+        other => panic!("expected version error, got {other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn message_before_handshake_rejected() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    frame::write_frame(&mut conn, &ClientMsg::RequestWorkers { count: 1 }.encode()).unwrap();
+    let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
+    match reply {
+        DriverMsg::Err { message } => assert!(message.contains("handshake"), "{message}"),
+        other => panic!("expected handshake error, got {other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn zero_sized_matrix_rejected() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "zero").unwrap();
+    ac.request_workers(1).unwrap();
+    assert!(ac.create_matrix(0, 5, LayoutKind::RowBlock).is_err());
+    assert!(ac.create_matrix(5, 0, LayoutKind::RowBlock).is_err());
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn requesting_zero_workers_rejected() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "zero-w").unwrap();
+    assert!(ac.request_workers(0).is_err());
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn fetch_after_release_fails_but_session_survives() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "rel").unwrap();
+    ac.request_workers(2).unwrap();
+    let a = DenseMatrix::from_vec(12, 3, random_matrix(4, 12, 3)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al2 = al.clone();
+    ac.release(al).unwrap();
+    assert!(ac.fetch_dense(&al2).is_err());
+    // fresh work still fine
+    let al3 = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    assert_eq!(ac.fetch_dense(&al3).unwrap(), a);
+    ac.stop().unwrap();
+    srv.shutdown();
+}

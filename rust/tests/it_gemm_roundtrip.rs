@@ -1,0 +1,164 @@
+//! Integration: full client -> driver -> workers -> ElemLib GEMM -> fetch
+//! round trip over real sockets, against the local linalg reference.
+
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::{gemm::gemm, DenseMatrix};
+use alchemist::protocol::LayoutKind;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn rand(seed: u64, r: usize, c: usize) -> DenseMatrix {
+    DenseMatrix::from_vec(r, c, random_matrix(seed, r, c)).unwrap()
+}
+
+fn native_config(workers: u32) -> Config {
+    let mut cfg = Config::default();
+    cfg.server.workers = workers;
+    cfg.server.gemm_backend = "native".into();
+    cfg
+}
+
+#[test]
+fn gemm_via_alchemist_matches_local() {
+    let server = start_server(&native_config(3)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm").unwrap();
+    ac.request_workers(3).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(1, 37, 11);
+    let b = rand(2, 11, 8);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let al_c = wrappers::gemm(&ac, &al_a, &al_b).unwrap();
+    assert_eq!(al_c.rows(), 37);
+    assert_eq!(al_c.cols(), 8);
+
+    let c = ac.fetch_dense(&al_c).unwrap();
+    let want = gemm(&a, &b).unwrap();
+    assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+
+    // phases recorded
+    assert!(ac.phases.get_secs("send") > 0.0);
+    assert!(ac.phases.get_secs("compute") > 0.0);
+    assert!(ac.phases.get_secs("receive") > 0.0);
+
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn gemm_via_pjrt_backend_matches_local() {
+    // Full production path: Pallas tile artifacts through PJRT.
+    let mut cfg = Config::default();
+    cfg.server.workers = 2;
+    cfg.server.gemm_backend = "pjrt".into();
+    cfg.server.gemm_tile = 256;
+    let server = start_server(&cfg).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm_pjrt").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(3, 130, 40);
+    let b = rand(4, 40, 27);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let al_c = wrappers::gemm(&ac, &al_a, &al_b).unwrap();
+    let c = ac.fetch_dense(&al_c).unwrap();
+    let want = gemm(&a, &b).unwrap();
+    assert!(c.max_abs_diff(&want).unwrap() < 1e-9);
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn matrix_handles_chain_without_refetch() {
+    // AlMatrix handles pass outputs into the next call without any data
+    // crossing back to the client (paper §3.3's minimization claim).
+    let server = start_server(&native_config(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_chain").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(5, 24, 6);
+    let b = rand(6, 6, 6);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let ab = wrappers::gemm(&ac, &al_a, &al_b).unwrap();
+    let abb = wrappers::gemm(&ac, &ab, &al_b).unwrap(); // chain: (AB)B
+    let got = ac.fetch_dense(&abb).unwrap();
+    let want = gemm(&gemm(&a, &b).unwrap(), &b).unwrap();
+    assert!(got.max_abs_diff(&want).unwrap() < 1e-10);
+
+    // fro_norm on a chained handle
+    let norm = wrappers::fro_norm(&ac, &abb).unwrap();
+    assert!((norm - want.frobenius_norm()).abs() < 1e-9);
+
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn transpose_and_gramian_roundtrip() {
+    let server = start_server(&native_config(3)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_tr").unwrap();
+    ac.request_workers(3).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(11, 23, 9);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    let al_at = wrappers::transpose(&ac, &al_a).unwrap();
+    assert_eq!((al_at.rows(), al_at.cols()), (9, 23));
+    let at = ac.fetch_dense(&al_at).unwrap();
+    assert_eq!(at, a.transpose());
+
+    let al_g = wrappers::gramian(&ac, &al_a).unwrap();
+    let g = ac.fetch_dense(&al_g).unwrap();
+    let want = alchemist::linalg::gemm::gemm_tn(&a, &a).unwrap();
+    assert!(g.max_abs_diff(&want).unwrap() < 1e-9);
+
+    // chaining works across the new routines: (Aᵀ)ᵀ == A
+    let al_att = wrappers::transpose(&ac, &al_at).unwrap();
+    assert_eq!(ac.fetch_dense(&al_att).unwrap(), a);
+
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn lstsq_roundtrip() {
+    let server = start_server(&native_config(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_lstsq").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(13, 50, 6);
+    let x_true: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+    let y_vec = a.matvec(&x_true).unwrap();
+    let y = DenseMatrix::from_vec(50, 1, y_vec).unwrap();
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_y = ac.send_dense(&y, LayoutKind::RowBlock).unwrap();
+    let (al_x, residual) = wrappers::lstsq(&ac, &al_a, &al_y, 0.0).unwrap();
+    assert!(residual < 1e-8);
+    let x = ac.fetch_dense(&al_x).unwrap();
+    for i in 0..6 {
+        assert!((x.get(i, 0) - x_true[i]).abs() < 1e-8);
+    }
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn release_frees_handle() {
+    let server = start_server(&native_config(1)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_release").unwrap();
+    ac.request_workers(1).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(7, 8, 4);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let handle_copy = al_a.clone();
+    ac.release(al_a).unwrap();
+    // further use of the released handle errors server-side
+    assert!(wrappers::fro_norm(&ac, &handle_copy).is_err());
+    ac.stop().unwrap();
+    server.shutdown();
+}

@@ -1,0 +1,129 @@
+//! Integration: concurrent sessions (Fig 2) — disjoint worker groups,
+//! handle isolation, worker-pool accounting, shortage rejection.
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::LayoutKind;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    c
+}
+
+#[test]
+fn concurrent_sessions_disjoint_and_correct() {
+    let srv = start_server(&cfg(6)).unwrap();
+    let addr = srv.driver_addr.clone();
+    let mut joins = Vec::new();
+    for app in 0..3u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> (Vec<u32>, f64, f64) {
+            let mut ac = AlchemistContext::connect(&addr, &format!("app{app}")).unwrap();
+            ac.request_workers(2).unwrap();
+            let ids = ac.workers().iter().map(|w| w.id).collect::<Vec<_>>();
+            wrappers::register_elemlib(&ac).unwrap();
+            let a = DenseMatrix::from_vec(60, 10, random_matrix(app, 60, 10)).unwrap();
+            let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+            let got = wrappers::fro_norm(&ac, &al).unwrap();
+            ac.stop().unwrap();
+            (ids, got, a.frobenius_norm())
+        }));
+    }
+    let mut all_ids = Vec::new();
+    for j in joins {
+        let (ids, got, want) = j.join().unwrap();
+        assert!((got - want).abs() < 1e-9);
+        all_ids.extend(ids);
+    }
+    all_ids.sort();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), 6, "worker double-booked: {all_ids:?}");
+    srv.shutdown();
+}
+
+#[test]
+fn worker_shortage_rejected_then_recovers() {
+    let srv = start_server(&cfg(3)).unwrap();
+    let mut ac1 = AlchemistContext::connect(&srv.driver_addr, "hog").unwrap();
+    ac1.request_workers(2).unwrap();
+
+    let mut ac2 = AlchemistContext::connect(&srv.driver_addr, "late").unwrap();
+    let err = ac2.request_workers(2).unwrap_err();
+    assert!(err.to_string().contains("insufficient workers"), "{err}");
+    // 1 worker still available
+    ac2.request_workers(1).unwrap();
+
+    // after ac1 stops, its workers return to the pool
+    ac1.stop().unwrap();
+    let mut ac3 = AlchemistContext::connect(&srv.driver_addr, "retry").unwrap();
+    // small wait for cleanup
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    ac3.request_workers(2).unwrap();
+    ac3.stop().unwrap();
+    ac2.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn handles_are_session_scoped() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac1 = AlchemistContext::connect(&srv.driver_addr, "owner").unwrap();
+    ac1.request_workers(1).unwrap();
+    wrappers::register_elemlib(&ac1).unwrap();
+    let a = DenseMatrix::from_vec(10, 2, random_matrix(1, 10, 2)).unwrap();
+    let al = ac1.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    let mut ac2 = AlchemistContext::connect(&srv.driver_addr, "intruder").unwrap();
+    ac2.request_workers(1).unwrap();
+    wrappers::register_elemlib(&ac2).unwrap();
+    // ac2 must not be able to run routines on ac1's handle
+    let err = ac2
+        .run(
+            "elemlib",
+            "fro_norm",
+            ParamsBuilder::new().matrix("A", al.handle()).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("not owned by session"), "{err}");
+    ac1.stop().unwrap();
+    ac2.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn server_status_tracks_pool() {
+    let srv = start_server(&cfg(4)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "status").unwrap();
+    let (total, free, sessions) = ac.server_status().unwrap();
+    assert_eq!((total, free, sessions), (4, 4, 1));
+    ac.request_workers(3).unwrap();
+    let (_, free, _) = ac.server_status().unwrap();
+    assert_eq!(free, 1);
+    ac.stop().unwrap();
+    let ac2 = AlchemistContext::connect(&srv.driver_addr, "status2").unwrap();
+    let (_, free, sessions) = ac2.server_status().unwrap();
+    assert_eq!((free, sessions), (4, 1));
+    ac2.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn client_disconnect_frees_workers() {
+    let srv = start_server(&cfg(2)).unwrap();
+    {
+        let mut ac = AlchemistContext::connect(&srv.driver_addr, "dropper").unwrap();
+        ac.request_workers(2).unwrap();
+        // drop without stop(): simulates a crashed client
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "next").unwrap();
+    ac.request_workers(2).unwrap();
+    ac.stop().unwrap();
+    srv.shutdown();
+}

@@ -1,0 +1,116 @@
+//! Integration: sparklet behaves like the Spark the paper measures —
+//! multiply correctness at scale, memory-cap failures on the explosion
+//! paths, scheduler task accounting, and overhead sensitivity.
+
+use alchemist::config::SparkletConfig;
+use alchemist::linalg::DenseMatrix;
+use alchemist::metrics::Timer;
+use alchemist::sparklet::{IndexedRowMatrix, SparkletContext};
+use alchemist::workload::random_matrix;
+
+fn ctx(executors: u32, mem_mb: u64, overhead_us: u64) -> SparkletContext {
+    SparkletContext::new(&SparkletConfig {
+        executors,
+        executor_mem_mb: mem_mb,
+        task_overhead_us: overhead_us,
+        default_parallelism: 8,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn multiply_chain_matches_local() {
+    let sc = ctx(3, 1024, 0);
+    let a = IndexedRowMatrix::random(&sc, 1, 60, 40, 6, None).unwrap();
+    let b = IndexedRowMatrix::random(&sc, 2, 40, 24, 6, None).unwrap();
+    let ab = a.to_block_matrix(&sc, 16).unwrap();
+    let bb = b.to_block_matrix(&sc, 16).unwrap();
+    let c = ab.multiply(&sc, &bb).unwrap().to_indexed_row_matrix(&sc).unwrap();
+    assert_eq!(c.rows, 60);
+    assert_eq!(c.cols, 24);
+    let got = c.collect(&sc).unwrap();
+    let want = alchemist::linalg::gemm::gemm(
+        &DenseMatrix::from_vec(60, 40, random_matrix(1, 60, 40)).unwrap(),
+        &DenseMatrix::from_vec(40, 24, random_matrix(2, 40, 24)).unwrap(),
+    )
+    .unwrap();
+    assert!(got.max_abs_diff(&want).unwrap() < 1e-9);
+    sc.shutdown();
+}
+
+#[test]
+fn multiply_oom_fails_like_table1() {
+    // The multiply's replication blows a small memory cap — the paper's
+    // "Spark failed" rows. The matrix itself fits; the shuffle does not.
+    let sc = ctx(2, 2, 0); // 2 MiB cap per executor
+    let a = IndexedRowMatrix::random(&sc, 1, 256, 128, 4, None); // ~260 KB
+    let a = match a {
+        Ok(a) => a,
+        Err(e) => {
+            assert!(e.is_expected_failure());
+            return;
+        }
+    };
+    let b = IndexedRowMatrix::random(&sc, 2, 128, 128, 4, None).unwrap();
+    let result = (|| {
+        let ab = a.to_block_matrix(&sc, 16)?;
+        let bb = b.to_block_matrix(&sc, 16)?;
+        let c = ab.multiply(&sc, &bb)?;
+        c.to_indexed_row_matrix(&sc)
+    })();
+    match result {
+        Err(e) => {
+            assert!(e.is_expected_failure(), "wrong failure class: {e}");
+            assert!(e.to_string().contains("OOM") || e.to_string().contains("aborted"));
+        }
+        Ok(_) => panic!("expected job abort under tiny memory cap"),
+    }
+    sc.shutdown();
+}
+
+#[test]
+fn task_overhead_scales_stage_latency() {
+    // The modeled per-task cost must actually show up in stage wall time:
+    // this is what makes sparklet's per-iteration scheduling overhead
+    // real in the Fig 4 comparison.
+    let parts = 16u32;
+    let sc_fast = ctx(2, 512, 0);
+    let sc_slow = ctx(2, 512, 3_000); // 3 ms/task
+    let a_fast = IndexedRowMatrix::random(&sc_fast, 1, 64, 8, parts, None).unwrap();
+    let a_slow = IndexedRowMatrix::random(&sc_slow, 1, 64, 8, parts, None).unwrap();
+
+    let t = Timer::start();
+    a_fast.fro_norm(&sc_fast).unwrap();
+    let fast = t.elapsed_secs();
+    let t = Timer::start();
+    a_slow.fro_norm(&sc_slow).unwrap();
+    let slow = t.elapsed_secs();
+    // 16 tasks x 3 ms spread over 2 executors >= 24 ms of modeled latency
+    assert!(slow > fast + 0.015, "overhead not visible: fast {fast:.4}s slow {slow:.4}s");
+    sc_fast.shutdown();
+    sc_slow.shutdown();
+}
+
+#[test]
+fn scheduler_counts_tasks() {
+    let sc = ctx(2, 512, 0);
+    let before = *sc.tasks_launched.lock().unwrap();
+    let a = IndexedRowMatrix::random(&sc, 3, 40, 8, 5, None).unwrap();
+    a.fro_norm(&sc).unwrap();
+    let after = *sc.tasks_launched.lock().unwrap();
+    assert_eq!(after - before, 10, "5 gen + 5 aggregate tasks");
+    sc.shutdown();
+}
+
+#[test]
+fn compute_svd_iteration_cost_counts_stages() {
+    let sc = ctx(2, 512, 0);
+    let a = IndexedRowMatrix::random(&sc, 9, 200, 24, 4, Some(0.9)).unwrap();
+    let before = *sc.tasks_launched.lock().unwrap();
+    let svd = a.compute_svd(&sc, 4, false, 1e-10).unwrap();
+    let after = *sc.tasks_launched.lock().unwrap();
+    // each gram matvec = one stage of 4 tasks
+    assert_eq!(after - before, svd.matvecs as u64 * 4);
+    sc.shutdown();
+}

@@ -1,0 +1,112 @@
+//! Integration: the paper's §4.2 experiment end to end — sparklet
+//! generates the matrix, both the Spark path (computeSVD) and the
+//! Spark+Alchemist path produce rank-k SVDs, and both match a local
+//! reference.
+
+use alchemist::arpack::{truncated_svd_local, LanczosOptions};
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::server::start_server;
+use alchemist::sparklet::{IndexedRowMatrix, SparkletContext};
+use alchemist::workload::spectral_row;
+
+fn local_matrix(seed: u64, m: usize, n: usize, decay: f64) -> DenseMatrix {
+    let mut data = Vec::with_capacity(m * n);
+    for i in 0..m {
+        data.extend_from_slice(&spectral_row(seed, i as u64, n, decay));
+    }
+    DenseMatrix::from_vec(m, n, data).unwrap()
+}
+
+#[test]
+fn both_paths_match_local_reference() {
+    let (m, n, k, seed, decay) = (3000u64, 64u64, 6usize, 11u64, 0.9);
+    let mut cfg = Config::default();
+    cfg.server.workers = 3;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sparklet.executors = 2;
+    cfg.sparklet.task_overhead_us = 0;
+
+    let local = local_matrix(seed, m as usize, n as usize, decay);
+    let reference = truncated_svd_local(&local, k, &LanczosOptions::default()).unwrap();
+
+    // Spark path
+    let sc = SparkletContext::new(&cfg.sparklet).unwrap();
+    let a = IndexedRowMatrix::random(&sc, seed, m, n, 4, Some(decay)).unwrap();
+    let spark = a.compute_svd(&sc, k, false, 1e-10).unwrap();
+
+    // Spark+Alchemist path
+    let server = start_server(&cfg).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_svd").unwrap();
+    ac.request_workers(3).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let al_a = a.to_alchemist(&sc, &ac).unwrap();
+    let svd = wrappers::truncated_svd(&ac, &al_a, k).unwrap();
+    let s = ac.fetch_dense(&svd.s).unwrap();
+    let v = ac.fetch_dense(&svd.v).unwrap();
+    let u = ac.fetch_dense(&svd.u).unwrap();
+
+    for i in 0..k {
+        let want = reference.singular_values[i];
+        assert!(
+            (spark.singular_values[i] - want).abs() < 1e-6 * (1.0 + want),
+            "spark sigma_{i}: {} vs {want}",
+            spark.singular_values[i]
+        );
+        assert!(
+            (s.get(i, 0) - want).abs() < 1e-6 * (1.0 + want),
+            "alchemist sigma_{i}: {} vs {want}",
+            s.get(i, 0)
+        );
+    }
+
+    // A V = U Σ on the Alchemist factors
+    let av = alchemist::linalg::gemm::gemm(&local, &v).unwrap();
+    for j in 0..k {
+        for i in (0..m as usize).step_by(97) {
+            let want = s.get(j, 0) * u.get(i, j);
+            assert!((av.get(i, j) - want).abs() < 1e-6, "AV=UΣ at ({i},{j})");
+        }
+    }
+
+    // transfer phases recorded (the Fig 3 decomposition inputs)
+    assert!(ac.phases.get_secs("send") > 0.0);
+    assert!(ac.phases.get_secs("compute") > 0.0);
+
+    ac.stop().unwrap();
+    sc.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn svd_u_roundtrip_into_sparklet() {
+    // Fetch U back into an RDD (the paper's "retrieve AlMatrix to
+    // IndexedRowMatrix") and check shapes + orthonormality-ish.
+    let (m, n, k) = (800u64, 32u64, 4usize);
+    let mut cfg = Config::default();
+    cfg.server.workers = 2;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sparklet.executors = 2;
+    cfg.sparklet.task_overhead_us = 0;
+
+    let sc = SparkletContext::new(&cfg.sparklet).unwrap();
+    let a = IndexedRowMatrix::random(&sc, 5, m, n, 4, Some(0.9)).unwrap();
+    let server = start_server(&cfg).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_svd_u").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let al_a = a.to_alchemist(&sc, &ac).unwrap();
+    let svd = wrappers::truncated_svd(&ac, &al_a, k).unwrap();
+
+    let u_rdd = IndexedRowMatrix::from_alchemist(&sc, &ac, &svd.u, 4).unwrap();
+    assert_eq!(u_rdd.rows, m);
+    assert_eq!(u_rdd.cols, k as u64);
+    let u = u_rdd.collect(&sc).unwrap();
+    let utu = alchemist::linalg::gemm::gemm_tn(&u, &u).unwrap();
+    assert!(utu.max_abs_diff(&DenseMatrix::identity(k)).unwrap() < 1e-6);
+
+    ac.stop().unwrap();
+    sc.shutdown();
+    server.shutdown();
+}

@@ -1,0 +1,132 @@
+//! Integration: the data plane — row transfers of many shapes, layouts,
+//! and batch sizes, including concurrent partitioned sends (the paper's
+//! parallel executor push) and round trips.
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::LayoutKind;
+use alchemist::server::{start_server, ServerHandle};
+use alchemist::workload::{random_matrix, random_row};
+use std::sync::Arc;
+
+fn server(workers: u32) -> ServerHandle {
+    let mut cfg = Config::default();
+    cfg.server.workers = workers;
+    cfg.server.gemm_backend = "native".into();
+    start_server(&cfg).unwrap()
+}
+
+#[test]
+fn roundtrip_shapes_layouts_batches() {
+    let srv = server(3);
+    for (rows, cols) in [(1u64, 1u64), (17, 5), (100, 33), (257, 8)] {
+        for kind in [LayoutKind::RowBlock, LayoutKind::RowCyclic] {
+            for batch in [1usize, 7, 1024] {
+                let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_tx").unwrap();
+                ac.batch_rows = batch;
+                ac.request_workers(3).unwrap();
+                let a = DenseMatrix::from_vec(
+                    rows as usize,
+                    cols as usize,
+                    random_matrix(rows * 31 + cols, rows as usize, cols as usize),
+                )
+                .unwrap();
+                let al = ac.send_dense(&a, kind).unwrap();
+                let back = ac.fetch_dense(&al).unwrap();
+                assert_eq!(back, a, "{rows}x{cols} {kind:?} batch={batch}");
+                ac.stop().unwrap();
+            }
+        }
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn concurrent_partitioned_send() {
+    // Multiple "executors" (threads) each push a disjoint row range of
+    // the same matrix concurrently — the paper's executor-parallel send.
+    let srv = server(4);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_parallel").unwrap();
+    ac.request_workers(4).unwrap();
+    let (rows, cols) = (4000u64, 16usize);
+    let m = ac.create_matrix(rows, cols as u64, LayoutKind::RowBlock).unwrap();
+
+    let ac = Arc::new(ac);
+    let parts = 8u64;
+    let per = rows / parts;
+    let mut handles = Vec::new();
+    for p in 0..parts {
+        let ac = ac.clone();
+        let m = m.clone();
+        handles.push(std::thread::spawn(move || {
+            let rows_iter =
+                (p * per..(p + 1) * per).map(move |i| (i, random_row(77, i, cols)));
+            ac.put_rows(&m, rows_iter).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = ac.finish_put(&m).unwrap();
+    assert_eq!(total, rows);
+
+    let back = ac.fetch_dense(&m).unwrap();
+    for i in (0..rows).step_by(997) {
+        assert_eq!(back.row(i as usize), random_row(77, i, cols).as_slice(), "row {i}");
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn incomplete_transfer_detected() {
+    let srv = server(2);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_incomplete").unwrap();
+    ac.request_workers(2).unwrap();
+    let m = ac.create_matrix(10, 2, LayoutKind::RowBlock).unwrap();
+    // send only 4 of 10 rows
+    ac.put_rows(&m, (0..4u64).map(|i| (i, vec![1.0, 2.0]))).unwrap();
+    let err = ac.finish_put(&m).unwrap_err();
+    assert!(err.to_string().contains("incomplete"), "{err}");
+    srv.shutdown();
+}
+
+#[test]
+fn duplicate_rows_last_write_wins_count_detected() {
+    // Re-sending a row bumps rows_received past expected: finish_put
+    // flags it (conservation check).
+    let srv = server(1);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_dup").unwrap();
+    ac.request_workers(1).unwrap();
+    let m = ac.create_matrix(3, 1, LayoutKind::RowBlock).unwrap();
+    ac.put_rows(&m, vec![(0u64, vec![1.0]), (1, vec![2.0]), (2, vec![3.0]), (0, vec![9.0])].into_iter())
+        .unwrap();
+    assert!(ac.finish_put(&m).is_err());
+    srv.shutdown();
+}
+
+#[test]
+fn out_of_range_row_rejected_client_side() {
+    let srv = server(1);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_range").unwrap();
+    ac.request_workers(1).unwrap();
+    let m = ac.create_matrix(5, 2, LayoutKind::RowBlock).unwrap();
+    let err = ac.put_rows(&m, vec![(9u64, vec![0.0, 0.0])].into_iter()).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    srv.shutdown();
+}
+
+#[test]
+fn wrong_width_row_rejected_by_worker() {
+    let srv = server(1);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_width").unwrap();
+    ac.request_workers(1).unwrap();
+    let m = ac.create_matrix(5, 3, LayoutKind::RowBlock).unwrap();
+    // too-narrow row: rejected either at the put's completion barrier or
+    // at finish_put, depending on flush timing
+    let r = ac
+        .put_rows(&m, vec![(0u64, vec![1.0])].into_iter())
+        .and_then(|_| ac.finish_put(&m).map(|_| ()));
+    assert!(r.is_err());
+    srv.shutdown();
+}

@@ -1,0 +1,225 @@
+//! Property tests on coordinator invariants (proptest-substitute harness:
+//! `bench_support::prop`): row routing, batching/framing reassembly,
+//! layout redistribution as a permutation, allocation never double-books.
+
+use alchemist::bench_support::prop::{check, int_in};
+use alchemist::elemental::panel::{gather_matrix, scatter_matrix};
+use alchemist::elemental::Layout;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{DataMsg, LayoutDesc, LayoutKind, MatrixMeta, WireRow};
+
+fn random_layout(rng: &mut alchemist::workload::Rng) -> (Layout, LayoutDesc, u64) {
+    let rows = int_in(rng, 1, 500);
+    let slots = int_in(rng, 1, 16) as u32;
+    let kind = if rng.next_f64() < 0.5 { LayoutKind::RowBlock } else { LayoutKind::RowCyclic };
+    let desc = LayoutDesc { kind, owners: (0..slots).collect() };
+    (Layout::new(kind, rows, slots).unwrap(), desc, rows)
+}
+
+#[test]
+fn routing_every_row_exactly_once() {
+    check("routing: partition function", 300, |rng| {
+        let (layout, _, rows) = random_layout(rng);
+        let mut seen = vec![0u32; rows as usize];
+        for slot in 0..layout.slots {
+            for r in layout.rows_of_slot(slot) {
+                if layout.owner_slot(r) != slot {
+                    return Err(format!("row {r}: owner {} != slot {slot}", layout.owner_slot(r)));
+                }
+                seen[r as usize] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err("row not owned exactly once".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn routing_local_global_maps_invert() {
+    check("routing: local/global bijection", 300, |rng| {
+        let (layout, _, rows) = random_layout(rng);
+        for r in 0..rows {
+            let slot = layout.owner_slot(r);
+            let li = layout.local_index(r);
+            if layout.global_index(slot, li) != r {
+                return Err(format!("map does not invert at row {r}"));
+            }
+            if li >= layout.local_count(slot) {
+                return Err(format!("local index {li} out of count at row {r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batching_reassembles_identically() {
+    // Arbitrary row batches (arbitrary batch sizes, arbitrary order per
+    // slot) must reassemble into the same matrix.
+    check("framing: batch reassembly", 100, |rng| {
+        let rows = int_in(rng, 1, 80) as usize;
+        let cols = int_in(rng, 1, 12) as usize;
+        let full = DenseMatrix::from_fn(rows, cols, |_, _| rng.next_signed());
+        // serialize rows into random-size PutRows batches
+        let mut wire_rows: Vec<WireRow> = (0..rows)
+            .map(|i| WireRow { index: i as u64, values: full.row(i).to_vec() })
+            .collect();
+        // shuffle the row order
+        for i in (1..wire_rows.len()).rev() {
+            let j = rng.next_range(i as u64 + 1) as usize;
+            wire_rows.swap(i, j);
+        }
+        let mut msgs = Vec::new();
+        let mut it = wire_rows.into_iter().peekable();
+        while it.peek().is_some() {
+            let b = int_in(rng, 1, 16) as usize;
+            let batch: Vec<WireRow> = it.by_ref().take(b).collect();
+            msgs.push(DataMsg::PutRows { handle: 1, rows: batch });
+        }
+        // decode each frame and place rows
+        let mut out = DenseMatrix::zeros(rows, cols);
+        let mut count = 0;
+        for m in msgs {
+            let decoded = DataMsg::decode(&m.encode()).map_err(|e| e.to_string())?;
+            let DataMsg::PutRows { rows: batch, .. } = decoded else {
+                return Err("wrong decoded variant".into());
+            };
+            for r in batch {
+                out.row_mut(r.index as usize).copy_from_slice(&r.values);
+                count += 1;
+            }
+        }
+        if count != rows {
+            return Err(format!("row count {count} != {rows}"));
+        }
+        if out != full {
+            return Err("reassembled matrix differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scatter_gather_is_identity_for_random_layouts() {
+    check("redistribution: scatter/gather permutation", 100, |rng| {
+        let (_, desc, rows) = random_layout(rng);
+        let cols = int_in(rng, 1, 8);
+        let meta = MatrixMeta { handle: 1, rows, cols, layout: desc };
+        let full =
+            DenseMatrix::from_fn(rows as usize, cols as usize, |_, _| rng.next_signed());
+        let panels = scatter_matrix(&meta, &full).map_err(|e| e.to_string())?;
+        // conservation: sum of local rows == rows
+        let total: usize = panels.iter().map(|p| p.local_rows()).sum();
+        if total != rows as usize {
+            return Err(format!("panels hold {total} rows, expected {rows}"));
+        }
+        let back = gather_matrix(&panels).map_err(|e| e.to_string())?;
+        if back != full {
+            return Err("gather(scatter(A)) != A".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dist_ops_match_local_on_random_shapes() {
+    // Randomized SPMD checks: distributed GEMM / transpose / redistribute
+    // over in-process meshes reproduce the local reference for arbitrary
+    // shapes and worker counts.
+    use alchemist::comm::run_mesh;
+    use alchemist::elemental::dist_gemm::{dist_gemm, NativeBackend};
+    use alchemist::elemental::transpose::dist_transpose;
+    use std::sync::Arc;
+
+    check("elemental: dist ops vs local", 12, |rng| {
+        let p = int_in(rng, 1, 5) as usize;
+        let m = int_in(rng, p as u64, 40);
+        let k = int_in(rng, 1, 20);
+        let n = int_in(rng, 1, 20);
+        let desc = LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() };
+        let a_full = DenseMatrix::from_fn(m as usize, k as usize, |_, _| rng.next_signed());
+        let b_full = DenseMatrix::from_fn(k as usize, n as usize, |_, _| rng.next_signed());
+        let a_meta = MatrixMeta { handle: 1, rows: m, cols: k, layout: desc.clone() };
+        let b_meta = MatrixMeta { handle: 2, rows: k, cols: n, layout: desc };
+        let a_panels = Arc::new(scatter_matrix(&a_meta, &a_full).map_err(|e| e.to_string())?);
+        let b_panels = Arc::new(scatter_matrix(&b_meta, &b_full).map_err(|e| e.to_string())?);
+
+        let (ap, bp) = (a_panels.clone(), b_panels.clone());
+        let out = run_mesh(p, move |mut mesh| {
+            let r = mesh.rank();
+            let c = dist_gemm(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend)?;
+            let t = dist_transpose(&mut mesh, &ap[r], 4)?;
+            Ok((c, t))
+        })
+        .map_err(|e| e.to_string())?;
+
+        // C = A B
+        let c_panels: Vec<_> = out.iter().map(|(c, _)| c.clone()).collect();
+        let c = gather_matrix(&c_panels).map_err(|e| e.to_string())?;
+        let want = alchemist::linalg::gemm::gemm(&a_full, &b_full).map_err(|e| e.to_string())?;
+        if c.max_abs_diff(&want).map_err(|e| e.to_string())? > 1e-9 {
+            return Err(format!("dist_gemm mismatch m={m} k={k} n={n} p={p}"));
+        }
+        // T = Aᵀ (panels filled cell-wise; reassemble from local storage)
+        let mut at = DenseMatrix::zeros(k as usize, m as usize);
+        for (_, t) in &out {
+            let layout = t.layout();
+            for li in 0..t.local_rows() {
+                let gr = layout.global_index(t.slot, li as u64) as usize;
+                at.row_mut(gr).copy_from_slice(t.local().row(li));
+            }
+        }
+        if at != a_full.transpose() {
+            return Err(format!("dist_transpose mismatch m={m} k={k} p={p}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allocation_never_double_books() {
+    // Simulate the driver's free-pool accounting under random
+    // alloc/release interleavings.
+    use std::collections::BTreeSet;
+    check("allocation: no double booking", 200, |rng| {
+        let total = int_in(rng, 1, 32) as u32;
+        let mut free: BTreeSet<u32> = (0..total).collect();
+        let mut sessions: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..40 {
+            if rng.next_f64() < 0.6 {
+                let want = int_in(rng, 1, 8) as usize;
+                if free.len() >= want {
+                    let ids: Vec<u32> = free.iter().take(want).copied().collect();
+                    for id in &ids {
+                        free.remove(id);
+                    }
+                    sessions.push(ids);
+                }
+            } else if !sessions.is_empty() {
+                let idx = rng.next_range(sessions.len() as u64) as usize;
+                for id in sessions.swap_remove(idx) {
+                    if !free.insert(id) {
+                        return Err(format!("worker {id} returned twice"));
+                    }
+                }
+            }
+            // invariant: free + allocated partitions the pool
+            let allocated: usize = sessions.iter().map(|s| s.len()).sum();
+            if free.len() + allocated != total as usize {
+                return Err("pool accounting broken".into());
+            }
+            let mut all: Vec<u32> = free.iter().copied().collect();
+            for s in &sessions {
+                all.extend(s);
+            }
+            all.sort();
+            all.dedup();
+            if all.len() != total as usize {
+                return Err("double-booked worker".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,177 @@
+//! Property tests on the numerical substrates: GEMM vs naive on random
+//! shapes, QR invariants, tridiagonal eigensolver reconstruction, Lanczos
+//! vs dense eig on random PSD operators, distributed GEMM/Gram vs local.
+
+use alchemist::arpack::{lanczos_topk, DenseSymOp, LanczosOptions};
+use alchemist::bench_support::prop::{check, int_in};
+use alchemist::linalg::symeig::sym_eig;
+use alchemist::linalg::{blas1, gemm, qr, tridiag, DenseMatrix};
+use alchemist::workload::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> DenseMatrix {
+    DenseMatrix::from_fn(r, c, |_, _| rng.next_signed())
+}
+
+fn naive_gemm(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    DenseMatrix::from_fn(a.rows(), b.cols(), |i, j| {
+        (0..a.cols()).map(|k| a.get(i, k) * b.get(k, j)).sum()
+    })
+}
+
+#[test]
+fn gemm_matches_naive_on_random_shapes() {
+    check("linalg: gemm vs naive", 60, |rng| {
+        let (m, k, n) = (
+            int_in(rng, 1, 90) as usize,
+            int_in(rng, 1, 70) as usize,
+            int_in(rng, 1, 90) as usize,
+        );
+        let a = rand_mat(rng, m, k);
+        let b = rand_mat(rng, k, n);
+        let c = gemm::gemm(&a, &b).map_err(|e| e.to_string())?;
+        let want = naive_gemm(&a, &b);
+        let diff = c.max_abs_diff(&want).map_err(|e| e.to_string())?;
+        if diff > 1e-10 {
+            return Err(format!("gemm diff {diff} at {m}x{k}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn qr_invariants_random() {
+    check("linalg: QR invariants", 50, |rng| {
+        let n = int_in(rng, 1, 20) as usize;
+        let m = n + int_in(rng, 0, 30) as usize;
+        let a = rand_mat(rng, m, n);
+        let (q, r) = qr::qr_thin(&a).map_err(|e| e.to_string())?;
+        let qr_prod = gemm::gemm(&q, &r).map_err(|e| e.to_string())?;
+        if qr_prod.max_abs_diff(&a).unwrap() > 1e-9 {
+            return Err("QR != A".into());
+        }
+        let qtq = gemm::gemm_tn(&q, &q).map_err(|e| e.to_string())?;
+        if qtq.max_abs_diff(&DenseMatrix::identity(n)).unwrap() > 1e-9 {
+            return Err("Q not orthonormal".into());
+        }
+        for i in 1..n {
+            for j in 0..i {
+                if r.get(i, j).abs() > 1e-10 {
+                    return Err("R not upper triangular".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tridiag_eig_reconstructs_random() {
+    check("linalg: tridiag eig", 60, |rng| {
+        let n = int_in(rng, 1, 40) as usize;
+        let d: Vec<f64> = (0..n).map(|_| rng.next_signed() * 4.0).collect();
+        let e: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.next_signed()).collect();
+        let (vals, z) = tridiag::tridiag_eig(&d, &e).map_err(|e| e.to_string())?;
+        // trace preserved
+        let tr_want: f64 = d.iter().sum();
+        let tr_got: f64 = vals.iter().sum();
+        if (tr_want - tr_got).abs() > 1e-8 * (1.0 + tr_want.abs()) {
+            return Err(format!("trace {tr_got} vs {tr_want}"));
+        }
+        // T z_j = lambda_j z_j (spot check a random column)
+        if n > 0 {
+            let j = rng.next_range(n as u64) as usize;
+            for i in 0..n {
+                let mut tz = d[i] * z[i * n + j];
+                if i > 0 {
+                    tz += e[i - 1] * z[(i - 1) * n + j];
+                }
+                if i + 1 < n {
+                    tz += e[i] * z[(i + 1) * n + j];
+                }
+                if (tz - vals[j] * z[i * n + j]).abs() > 1e-8 {
+                    return Err(format!("eigvec residual at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sym_eig_diagonalizes_random() {
+    check("linalg: sym_eig", 40, |rng| {
+        let n = int_in(rng, 1, 25) as usize;
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_signed();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        let (vals, q) = sym_eig(&a).map_err(|e| e.to_string())?;
+        let aq = gemm::gemm(&a, &q).map_err(|e| e.to_string())?;
+        for j in 0..n {
+            for i in 0..n {
+                if (aq.get(i, j) - vals[j] * q.get(i, j)).abs() > 1e-7 {
+                    return Err(format!("AQ != QΛ at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lanczos_topk_matches_dense_on_random_psd() {
+    check("arpack: lanczos vs dense", 25, |rng| {
+        let n = int_in(rng, 6, 40) as usize;
+        let k = int_in(rng, 1, 4.min(n as u64)) as usize;
+        // PSD: B Bᵀ + small ridge
+        let b = rand_mat(rng, n, n);
+        let bbt = gemm::gemm(&b, &b.transpose()).map_err(|e| e.to_string())?;
+        let a = DenseMatrix::from_fn(n, n, |i, j| {
+            bbt.get(i, j) + if i == j { 0.1 } else { 0.0 }
+        });
+        let (vals, _) = sym_eig(&a).map_err(|e| e.to_string())?;
+        let mut op = DenseSymOp { a: &a };
+        let r = lanczos_topk(&mut op, k, &LanczosOptions { seed: rng.next_u64(), ..Default::default() })
+            .map_err(|e| e.to_string())?;
+        for i in 0..k {
+            let want = vals[n - 1 - i];
+            if (r.eigenvalues[i] - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                return Err(format!(
+                    "eig {i}: {} vs {want} (n={n}, k={k})",
+                    r.eigenvalues[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blas1_identities_random() {
+    check("linalg: blas1 identities", 200, |rng| {
+        let n = int_in(rng, 0, 64) as usize;
+        let x: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+        // Cauchy-Schwarz
+        let dxy = blas1::dot(&x, &y).abs();
+        let bound = blas1::nrm2(&x) * blas1::nrm2(&y);
+        if dxy > bound + 1e-9 {
+            return Err(format!("Cauchy-Schwarz violated: {dxy} > {bound}"));
+        }
+        // axpy linearity: (y + a x) . z == y.z + a (x.z)
+        let z: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+        let a = rng.next_signed();
+        let mut yax = y.clone();
+        blas1::axpy(a, &x, &mut yax);
+        let lhs = blas1::dot(&yax, &z);
+        let rhs = blas1::dot(&y, &z) + a * blas1::dot(&x, &z);
+        if (lhs - rhs).abs() > 1e-9 * (1.0 + rhs.abs()) {
+            return Err("axpy linearity broken".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,198 @@
+//! Property tests on the wire protocol: random messages round-trip
+//! exactly; random byte soup never panics the decoders (it may error).
+
+use alchemist::bench_support::prop::{check, int_in};
+use alchemist::protocol::{
+    ClientMsg, DataMsg, DriverMsg, LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params,
+    WireRow, WorkerCtl, WorkerReply,
+};
+use alchemist::workload::Rng;
+
+fn random_string(rng: &mut Rng, max: u64) -> String {
+    let n = rng.next_range(max);
+    (0..n).map(|_| (b'a' + rng.next_range(26) as u8) as char).collect()
+}
+
+fn random_param(rng: &mut Rng) -> ParamValue {
+    match rng.next_range(5) {
+        0 => ParamValue::I64(rng.next_u64() as i64),
+        1 => ParamValue::F64(rng.next_signed() * 1e100),
+        2 => ParamValue::Bool(rng.next_f64() < 0.5),
+        3 => ParamValue::Str(random_string(rng, 20)),
+        _ => ParamValue::Matrix(rng.next_u64()),
+    }
+}
+
+fn random_params(rng: &mut Rng) -> Params {
+    (0..rng.next_range(6)).map(|_| (random_string(rng, 10), random_param(rng))).collect()
+}
+
+fn random_meta(rng: &mut Rng) -> MatrixMeta {
+    let owners = (0..int_in(rng, 1, 8) as u32).collect();
+    MatrixMeta {
+        handle: rng.next_u64(),
+        rows: int_in(rng, 1, 1 << 40),
+        cols: int_in(rng, 1, 1 << 20),
+        layout: LayoutDesc {
+            kind: if rng.next_f64() < 0.5 { LayoutKind::RowBlock } else { LayoutKind::RowCyclic },
+            owners,
+        },
+    }
+}
+
+fn random_rows(rng: &mut Rng) -> Vec<WireRow> {
+    (0..rng.next_range(5))
+        .map(|_| WireRow {
+            index: rng.next_u64(),
+            values: (0..rng.next_range(10)).map(|_| rng.next_signed()).collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn client_msgs_roundtrip_random() {
+    check("protocol: ClientMsg roundtrip", 400, |rng| {
+        let msg = match rng.next_range(8) {
+            0 => ClientMsg::Handshake { app_name: random_string(rng, 30), version: rng.next_u64() as u16 },
+            1 => ClientMsg::RequestWorkers { count: rng.next_u64() as u32 },
+            2 => ClientMsg::RegisterLibrary {
+                name: random_string(rng, 20),
+                path: random_string(rng, 40),
+            },
+            3 => ClientMsg::CreateMatrix {
+                rows: rng.next_u64(),
+                cols: rng.next_u64(),
+                kind: if rng.next_f64() < 0.5 { LayoutKind::RowBlock } else { LayoutKind::RowCyclic },
+            },
+            4 => ClientMsg::RunRoutine {
+                library: random_string(rng, 15),
+                routine: random_string(rng, 15),
+                params: random_params(rng),
+            },
+            5 => ClientMsg::FetchMatrixInfo { handle: rng.next_u64() },
+            6 => ClientMsg::ReleaseMatrix { handle: rng.next_u64() },
+            _ => ClientMsg::Stop,
+        };
+        let back = ClientMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err(format!("{back:?} != {msg:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn driver_msgs_roundtrip_random() {
+    check("protocol: DriverMsg roundtrip", 400, |rng| {
+        let msg = match rng.next_range(6) {
+            0 => DriverMsg::HandshakeAck { session_id: rng.next_u64(), version: 3 },
+            1 => DriverMsg::MatrixCreated { meta: random_meta(rng) },
+            2 => DriverMsg::RoutineResult {
+                outputs: random_params(rng),
+                new_matrices: (0..rng.next_range(3)).map(|_| random_meta(rng)).collect(),
+            },
+            3 => DriverMsg::Released { handle: rng.next_u64() },
+            4 => DriverMsg::Err { message: random_string(rng, 60) },
+            _ => DriverMsg::Stopped,
+        };
+        let back = DriverMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err("driver msg mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn data_msgs_roundtrip_random() {
+    check("protocol: DataMsg roundtrip", 400, |rng| {
+        let msg = match rng.next_range(5) {
+            0 => DataMsg::PutRows { handle: rng.next_u64(), rows: random_rows(rng) },
+            1 => DataMsg::PutDone { handle: rng.next_u64() },
+            2 => DataMsg::GetRows {
+                handle: rng.next_u64(),
+                start: rng.next_u64(),
+                end: rng.next_u64(),
+            },
+            3 => DataMsg::RowBatch { handle: rng.next_u64(), rows: random_rows(rng) },
+            _ => DataMsg::Err { message: random_string(rng, 40) },
+        };
+        let back = DataMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err("data msg mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn worker_msgs_roundtrip_random() {
+    check("protocol: WorkerCtl/Reply roundtrip", 400, |rng| {
+        let msg = match rng.next_range(5) {
+            0 => WorkerCtl::PrepareSession { session_id: rng.next_u64() },
+            1 => WorkerCtl::AllocMatrix { session_id: rng.next_u64(), meta: random_meta(rng) },
+            2 => WorkerCtl::RunRoutine {
+                session_id: rng.next_u64(),
+                library: random_string(rng, 10),
+                routine: random_string(rng, 10),
+                params: random_params(rng),
+                output_handles: (0..rng.next_range(5)).map(|_| rng.next_u64()).collect(),
+            },
+            3 => WorkerCtl::FreeMatrix { handle: rng.next_u64() },
+            _ => WorkerCtl::Shutdown,
+        };
+        if WorkerCtl::decode(&msg.encode()).map_err(|e| e.to_string())? != msg {
+            return Err("ctl mismatch".into());
+        }
+        let reply = match rng.next_range(4) {
+            0 => WorkerReply::Ok,
+            1 => WorkerReply::RoutineDone {
+                outputs: random_params(rng),
+                new_matrices: vec![random_meta(rng)],
+            },
+            2 => WorkerReply::SessionReady { comm_addr: random_string(rng, 25) },
+            _ => WorkerReply::Err { message: random_string(rng, 40) },
+        };
+        if WorkerReply::decode(&reply.encode()).map_err(|e| e.to_string())? != reply {
+            return Err("reply mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_bytes_never_panic_decoders() {
+    check("protocol: fuzz decoders", 2000, |rng| {
+        let n = rng.next_range(64) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // decoding may fail, must not panic
+        let _ = ClientMsg::decode(&bytes);
+        let _ = DriverMsg::decode(&bytes);
+        let _ = DataMsg::decode(&bytes);
+        let _ = WorkerCtl::decode(&bytes);
+        let _ = WorkerReply::decode(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_valid_messages_error_not_panic() {
+    check("protocol: truncation", 500, |rng| {
+        let msg = ClientMsg::RunRoutine {
+            library: random_string(rng, 10),
+            routine: random_string(rng, 10),
+            params: random_params(rng),
+        };
+        let bytes = msg.encode();
+        let cut = rng.next_range(bytes.len() as u64) as usize;
+        match ClientMsg::decode(&bytes[..cut]) {
+            Ok(m) if cut == bytes.len() => {
+                if m != msg {
+                    return Err("full decode mismatch".into());
+                }
+            }
+            _ => {} // error acceptable for any truncation
+        }
+        Ok(())
+    });
+}
