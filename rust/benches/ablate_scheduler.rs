@@ -1,0 +1,128 @@
+//! Scheduler ablation: routine throughput through the driver under three
+//! submission disciplines, same total work each time.
+//!
+//! * `sync`  — the paper's shape: one session, every routine a blocking
+//!   `run` (submit + wait per call, one at a time).
+//! * `async` — one session, all routines submitted up front via
+//!   `run_async`, results collected afterwards (the job queue pipelines
+//!   submission against execution).
+//! * `multi` — the pool split across S one-worker sessions driven from S
+//!   threads: what queued admission + the job table make safe to do.
+//!
+//! Run: `cargo bench --bench ablate_scheduler [-- --set bench.reps=1]`
+
+use alchemist::bench_support::{bench_config, harness::Table};
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::metrics::Timer;
+use alchemist::protocol::LayoutKind;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+const JOBS: usize = 24;
+const ROWS: usize = 192;
+const COLS: usize = 12;
+
+fn session_with(addr: &str, name: &str, workers: u32) -> alchemist::Result<(AlchemistContext, alchemist::client::AlMatrix)> {
+    let mut ac = AlchemistContext::connect(addr, name)?;
+    ac.request_workers_wait(workers, 30_000)?;
+    wrappers::register_elemlib(&ac)?;
+    let a = DenseMatrix::from_vec(ROWS, COLS, random_matrix(11, ROWS, COLS))?;
+    let al = ac.send_dense(&a, LayoutKind::RowBlock)?;
+    Ok((ac, al))
+}
+
+fn run_sync(addr: &str, workers: u32) -> alchemist::Result<f64> {
+    let (ac, al) = session_with(addr, "sync", workers)?;
+    let t = Timer::start();
+    for _ in 0..JOBS {
+        wrappers::fro_norm(&ac, &al)?;
+    }
+    let secs = t.elapsed_secs();
+    ac.stop()?;
+    Ok(secs)
+}
+
+fn run_async_pipelined(addr: &str, workers: u32) -> alchemist::Result<f64> {
+    let (ac, al) = session_with(addr, "async", workers)?;
+    let t = Timer::start();
+    let handles: Vec<_> = (0..JOBS)
+        .map(|_| wrappers::fro_norm_async(&ac, &al))
+        .collect::<alchemist::Result<_>>()?;
+    for h in handles {
+        h.wait()?;
+    }
+    let secs = t.elapsed_secs();
+    ac.stop()?;
+    Ok(secs)
+}
+
+fn run_multi_session(addr: &str, sessions: u32) -> alchemist::Result<f64> {
+    let per = JOBS / sessions as usize;
+    let t = Timer::start();
+    let joins: Vec<_> = (0..sessions)
+        .map(|s| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> alchemist::Result<()> {
+                let (ac, al) = session_with(&addr, &format!("multi{s}"), 1)?;
+                for _ in 0..per {
+                    wrappers::fro_norm(&ac, &al)?;
+                }
+                ac.stop()?;
+                Ok(())
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("session thread panicked")?;
+    }
+    Ok(t.elapsed_secs())
+}
+
+fn main() {
+    let base = bench_config();
+    let reps = base.bench.reps.max(1);
+    println!(
+        "=== scheduler ablation: {JOBS} fro_norm jobs on a {ROWS}x{COLS} matrix, {reps} rep(s) ===\n"
+    );
+
+    let pool = 4u32;
+    let mut cfg = Config::default();
+    cfg.server.workers = pool;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sparklet = base.sparklet.clone();
+
+    let mut table = Table::new(&["discipline", "sessions", "workers/session", "secs", "jobs/s"]);
+    let modes: Vec<(&str, Box<dyn Fn(&str) -> alchemist::Result<f64>>)> = vec![
+        ("sync", Box::new(move |addr: &str| run_sync(addr, pool))),
+        ("async", Box::new(move |addr: &str| run_async_pipelined(addr, pool))),
+        ("multi", Box::new(move |addr: &str| run_multi_session(addr, pool))),
+    ];
+    for (name, run) in &modes {
+        let mut total = 0.0;
+        for _ in 0..reps {
+            let server = start_server(&cfg).expect("server");
+            total += run(&server.driver_addr).expect("bench mode failed");
+            server.shutdown();
+        }
+        let secs = total / reps as f64;
+        let (sessions, wps) = match *name {
+            "multi" => (pool, 1),
+            _ => (1, pool),
+        };
+        table.row(vec![
+            name.to_string(),
+            sessions.to_string(),
+            wps.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", JOBS as f64 / secs),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nsync pays one submit+wait round trip per job; async pipelines all\n\
+         submissions through the job queue; multi uses queued admission to\n\
+         split the pool into independent sessions that execute concurrently."
+    );
+}

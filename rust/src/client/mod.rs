@@ -17,8 +17,8 @@ use std::sync::Mutex;
 use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
-    frame, ClientMsg, DataMsg, DriverMsg, LayoutKind, MatrixMeta, Params, WorkerInfo,
-    PROTOCOL_VERSION,
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
+    WorkerInfo, PROTOCOL_VERSION,
 };
 use crate::{Error, Result};
 
@@ -41,6 +41,101 @@ impl AlMatrix {
 
     pub fn cols(&self) -> u64 {
         self.meta.cols
+    }
+}
+
+/// Server-wide pool + scheduler occupancy (reply to `ServerStatus`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStatus {
+    pub total_workers: u32,
+    pub free_workers: u32,
+    pub sessions: u32,
+    /// Sessions parked in the admission queue right now.
+    pub queued_sessions: u32,
+    /// Jobs submitted but not yet `Done`/`Failed`, server-wide.
+    pub jobs_inflight: u32,
+}
+
+/// Handle to an asynchronously submitted routine (`ac.run_async`): a
+/// future-like object tied to its context. Poll it, or block on
+/// [`wait`](JobHandle::wait) for the routine result. Dropping the handle
+/// does not cancel the job — results stay in the session's job table
+/// until read (and a bounded history of read results remains pollable).
+pub struct JobHandle<'a> {
+    ac: &'a AlchemistContext,
+    pub job_id: u64,
+    routine: String,
+    /// Terminal state captured by `poll` so a later `wait` can return
+    /// the result even if the server has since evicted the (delivered)
+    /// entry from its retained history.
+    terminal: Mutex<Option<JobState>>,
+}
+
+impl std::fmt::Debug for JobHandle<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("job_id", &self.job_id)
+            .field("routine", &self.routine)
+            .finish()
+    }
+}
+
+impl<'a> JobHandle<'a> {
+    /// Routine name this job runs.
+    pub fn routine(&self) -> &str {
+        &self.routine
+    }
+
+    /// Non-blocking state snapshot. Terminal states are cached on the
+    /// handle: the server counts them delivered, so the handle keeps
+    /// the payload for a later [`wait`](JobHandle::wait).
+    pub fn poll(&self) -> Result<JobState> {
+        if let Some(state) = self.terminal.lock().unwrap().clone() {
+            return Ok(state);
+        }
+        let state = self.ac.poll_job(self.job_id)?;
+        if state.is_terminal() {
+            *self.terminal.lock().unwrap() = Some(state.clone());
+        }
+        Ok(state)
+    }
+
+    /// True once the job is `Done` or `Failed`.
+    pub fn is_finished(&self) -> Result<bool> {
+        Ok(self.poll()?.is_terminal())
+    }
+
+    /// Block until the routine finishes; returns its scalar outputs and
+    /// an `AlMatrix` per distributed output (exactly what the synchronous
+    /// `run` returns), or the routine's error if it failed. Waiting
+    /// happens in bounded server-side rounds so a slow routine never
+    /// wedges the control connection against the driver's will.
+    pub fn wait(self) -> Result<(Params, Vec<AlMatrix>)> {
+        let t = Timer::start();
+        // A terminal state already captured by `poll` short-circuits the
+        // server round trip (and survives server-side history eviction).
+        let mut next = self.terminal.lock().unwrap().take();
+        loop {
+            let state = match next.take() {
+                Some(s) => s,
+                None => self.ac.wait_job_round(self.job_id, 0)?,
+            };
+            match state {
+                JobState::Done { outputs, new_matrices } => {
+                    self.ac.phases.add("compute", t.elapsed());
+                    return Ok((
+                        outputs,
+                        new_matrices.into_iter().map(|meta| AlMatrix { meta }).collect(),
+                    ));
+                }
+                JobState::Failed { message } => {
+                    // The driver already prefixes routine context.
+                    self.ac.phases.add("compute", t.elapsed());
+                    return Err(Error::Server(message));
+                }
+                JobState::Queued | JobState::Running => {}
+            }
+        }
     }
 }
 
@@ -86,9 +181,32 @@ impl AlchemistContext {
         DriverMsg::decode(&frame::read_frame(&mut *s)?)?.into_result()
     }
 
-    /// Request a worker group (§3.2 step 3).
+    /// Request a worker group (§3.2 step 3). Fails immediately when the
+    /// pool is short (the paper's behaviour); see
+    /// [`request_workers_wait`](Self::request_workers_wait) for queued
+    /// admission.
     pub fn request_workers(&mut self, count: u32) -> Result<&[WorkerInfo]> {
-        match self.call(&ClientMsg::RequestWorkers { count })? {
+        self.request_workers_inner(count, false, 0)
+    }
+
+    /// Request a worker group, parking in the driver's FIFO admission
+    /// queue if the pool is currently short. `timeout_ms = 0` uses the
+    /// server's `sched.wait_timeout_ms` default.
+    pub fn request_workers_wait(
+        &mut self,
+        count: u32,
+        timeout_ms: u64,
+    ) -> Result<&[WorkerInfo]> {
+        self.request_workers_inner(count, true, timeout_ms)
+    }
+
+    fn request_workers_inner(
+        &mut self,
+        count: u32,
+        wait: bool,
+        timeout_ms: u64,
+    ) -> Result<&[WorkerInfo]> {
+        match self.call(&ClientMsg::RequestWorkers { count, wait, timeout_ms })? {
             DriverMsg::WorkersGranted { workers } => {
                 self.workers = workers;
                 Ok(&self.workers)
@@ -175,24 +293,60 @@ impl AlchemistContext {
 
     /// Invoke `library.routine(params)` (§3.3 `ac.run`). Returns scalar
     /// outputs and an `AlMatrix` per distributed output.
+    ///
+    /// Since protocol v4 this is sugar over the async job path: submit,
+    /// then block on the handle. Semantics are unchanged; the driver
+    /// executes the routine the same way either path is taken.
     pub fn run(
         &self,
         library: &str,
         routine: &str,
         params: Params,
     ) -> Result<(Params, Vec<AlMatrix>)> {
-        let t = Timer::start();
-        let reply = self.call(&ClientMsg::RunRoutine {
+        self.run_async(library, routine, params)?.wait()
+    }
+
+    /// Submit `library.routine(params)` as an asynchronous job and return
+    /// immediately with a [`JobHandle`]. The driver queues the routine
+    /// (jobs within one session execute in submission order on the SPMD
+    /// worker group) and the control connection stays free, so several
+    /// jobs can be in flight at once — the oversubscription/pipelining
+    /// mode the `sched` subsystem exists for.
+    pub fn run_async(
+        &self,
+        library: &str,
+        routine: &str,
+        params: Params,
+    ) -> Result<JobHandle<'_>> {
+        let reply = self.call(&ClientMsg::SubmitRoutine {
             library: library.into(),
             routine: routine.into(),
             params,
         })?;
-        self.phases.add("compute", t.elapsed());
         match reply {
-            DriverMsg::RoutineResult { outputs, new_matrices } => Ok((
-                outputs,
-                new_matrices.into_iter().map(|meta| AlMatrix { meta }).collect(),
-            )),
+            DriverMsg::JobAccepted { job_id } => Ok(JobHandle {
+                ac: self,
+                job_id,
+                routine: routine.to_string(),
+                terminal: Mutex::new(None),
+            }),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Non-blocking job-state snapshot.
+    pub fn poll_job(&self, job_id: u64) -> Result<JobState> {
+        match self.call(&ClientMsg::PollJob { job_id })? {
+            DriverMsg::JobStatus { state, .. } => Ok(state),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// One bounded server-side wait round (the server caps each round at
+    /// `sched.waitjob_block_ms`); returns the state when the round ends.
+    pub fn wait_job_round(&self, job_id: u64, timeout_ms: u64) -> Result<JobState> {
+        match self.call(&ClientMsg::WaitJob { job_id, timeout_ms })? {
+            DriverMsg::JobStatus { state, .. } => Ok(state),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
     }
@@ -266,10 +420,26 @@ impl AlchemistContext {
 
     /// Server-wide pool status: (total workers, free workers, sessions).
     pub fn server_status(&self) -> Result<(u32, u32, u32)> {
+        let s = self.scheduler_status()?;
+        Ok((s.total_workers, s.free_workers, s.sessions))
+    }
+
+    /// Full server status including scheduler occupancy.
+    pub fn scheduler_status(&self) -> Result<ServerStatus> {
         match self.call(&ClientMsg::ServerStatus)? {
-            DriverMsg::Status { total_workers, free_workers, sessions } => {
-                Ok((total_workers, free_workers, sessions))
-            }
+            DriverMsg::Status {
+                total_workers,
+                free_workers,
+                sessions,
+                queued_sessions,
+                jobs_inflight,
+            } => Ok(ServerStatus {
+                total_workers,
+                free_workers,
+                sessions,
+                queued_sessions,
+                jobs_inflight,
+            }),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
     }

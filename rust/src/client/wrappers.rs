@@ -3,7 +3,7 @@
 //! (library, routine, params) triples.
 
 use crate::ali::params::ParamsBuilder;
-use crate::client::{AlMatrix, AlchemistContext};
+use crate::client::{AlMatrix, AlchemistContext, JobHandle};
 use crate::{Error, Result};
 
 /// Register the builtin ElemLib under its conventional name.
@@ -16,6 +16,24 @@ pub fn gemm(ac: &AlchemistContext, a: &AlMatrix, b: &AlMatrix) -> Result<AlMatri
     let params = ParamsBuilder::new().matrix("A", a.handle()).matrix("B", b.handle()).build();
     let (_, mut mats) = ac.run("elemlib", "gemm", params)?;
     mats.pop().ok_or_else(|| Error::Ali("gemm returned no matrix".into()))
+}
+
+/// Asynchronous `C = A · B`: returns a [`JobHandle`] immediately so the
+/// caller can pipeline further submissions (`sched` job queue).
+pub fn gemm_async<'a>(
+    ac: &'a AlchemistContext,
+    a: &AlMatrix,
+    b: &AlMatrix,
+) -> Result<JobHandle<'a>> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).matrix("B", b.handle()).build();
+    ac.run_async("elemlib", "gemm", params)
+}
+
+/// Asynchronous Frobenius norm; `handle.wait()` yields the scalar in its
+/// outputs under `"fro_norm"`.
+pub fn fro_norm_async<'a>(ac: &'a AlchemistContext, a: &AlMatrix) -> Result<JobHandle<'a>> {
+    let params = ParamsBuilder::new().matrix("A", a.handle()).build();
+    ac.run_async("elemlib", "fro_norm", params)
 }
 
 /// Truncated SVD result handles (all still resident on Alchemist).

@@ -80,6 +80,35 @@ impl Default for SparkletConfig {
     }
 }
 
+/// Driver scheduler knobs (the `sched` subsystem: queued admission +
+/// async job queue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    /// Per-session worker quota enforced by the allocator; 0 = unlimited.
+    pub max_workers_per_session: u32,
+    /// Cap on jobs submitted-but-not-finished per session (each inflight
+    /// job holds a driver thread + retained result); 0 = unlimited.
+    pub max_jobs_per_session: u32,
+    /// Default time a `RequestWorkers { wait: true }` call may sit in the
+    /// admission queue before the driver gives up (clients can override
+    /// per request; 0 in the request means "use this default").
+    pub wait_timeout_ms: u64,
+    /// Server-side cap on how long one `WaitJob` round blocks the control
+    /// connection; clients loop, so this only bounds per-poll latency.
+    pub waitjob_block_ms: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            max_workers_per_session: 0,
+            max_jobs_per_session: 1024,
+            wait_timeout_ms: 30_000,
+            waitjob_block_ms: 2_000,
+        }
+    }
+}
+
 /// Bench-harness knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchConfig {
@@ -102,6 +131,7 @@ impl Default for BenchConfig {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub server: ServerConfig,
+    pub sched: SchedConfig,
     pub sparklet: SparkletConfig,
     pub bench: BenchConfig,
 }
@@ -166,6 +196,12 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
             cfg.server.svd_backend = val.to_string();
         }
         "server.nodelay" => cfg.server.nodelay = parse(key, val)?,
+        "sched.max_workers_per_session" => {
+            cfg.sched.max_workers_per_session = parse(key, val)?
+        }
+        "sched.max_jobs_per_session" => cfg.sched.max_jobs_per_session = parse(key, val)?,
+        "sched.wait_timeout_ms" => cfg.sched.wait_timeout_ms = parse(key, val)?,
+        "sched.waitjob_block_ms" => cfg.sched.waitjob_block_ms = parse(key, val)?,
         "sparklet.executors" => cfg.sparklet.executors = parse(key, val)?,
         "sparklet.default_parallelism" => cfg.sparklet.default_parallelism = parse(key, val)?,
         "sparklet.executor_mem_mb" => cfg.sparklet.executor_mem_mb = parse(key, val)?,
@@ -226,6 +262,12 @@ impl Config {
         if !(self.bench.scale > 0.0) {
             return Err(Error::Config("bench.scale must be > 0".into()));
         }
+        if self.sched.waitjob_block_ms == 0 {
+            return Err(Error::Config("sched.waitjob_block_ms must be >= 1".into()));
+        }
+        if self.sched.wait_timeout_ms == 0 {
+            return Err(Error::Config("sched.wait_timeout_ms must be >= 1".into()));
+        }
         Ok(())
     }
 }
@@ -263,6 +305,24 @@ scale = 0.5
         assert!(!cfg.server.nodelay);
         assert_eq!(cfg.sparklet.executors, 22);
         assert_eq!(cfg.bench.scale, 0.5);
+    }
+
+    #[test]
+    fn sched_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&[
+            "sched.max_workers_per_session=2",
+            "sched.max_jobs_per_session=8",
+            "sched.wait_timeout_ms=500",
+            "sched.waitjob_block_ms=100",
+        ])
+        .unwrap();
+        assert_eq!(cfg.sched.max_workers_per_session, 2);
+        assert_eq!(cfg.sched.max_jobs_per_session, 8);
+        assert_eq!(cfg.sched.wait_timeout_ms, 500);
+        assert_eq!(cfg.sched.waitjob_block_ms, 100);
+        cfg.sched.waitjob_block_ms = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

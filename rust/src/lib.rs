@@ -14,6 +14,9 @@
 //! * [`server`] — the Alchemist core: driver (sessions, worker allocation,
 //!   matrix registry) and workers (data plane, distributed storage, SPMD
 //!   routine execution).
+//! * [`sched`] — the driver's scheduling subsystem: FIFO queued worker
+//!   admission (no more hard `insufficient workers` failures) and the
+//!   async job queue behind `SubmitRoutine`/`PollJob`/`WaitJob`.
 //! * [`ali`] — the Alchemist-Library Interface: the generic
 //!   (library, routine, params, handles) calling convention plus the
 //!   builtin `ElemLib` library (GEMM, truncated SVD, …).
@@ -42,6 +45,7 @@ pub mod logging;
 pub mod metrics;
 pub mod protocol;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod sparklet;
 pub mod workload;

@@ -90,6 +90,61 @@ impl PhaseTimes {
     }
 }
 
+/// A point-in-time level indicator (queue depth, jobs in flight, ...).
+/// Unlike [`Counters`] it can go down; readers get the instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: std::sync::atomic::AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.v.fetch_add(delta, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn set(&self, value: i64) {
+        self.v.store(value, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+/// Scheduler observability bundle, shared by the driver and the `sched`
+/// allocator/job-queue: admission-queue depth, jobs in flight, grant
+/// counters, and cumulative allocation wait time.
+#[derive(Debug, Default)]
+pub struct SchedMetrics {
+    /// Sessions currently parked in the allocator's admission queue.
+    pub queue_depth: Gauge,
+    /// Jobs submitted but not yet `Done`/`Failed`.
+    pub jobs_inflight: Gauge,
+    /// "grants", "grant_timeouts", "jobs_submitted", "jobs_done",
+    /// "jobs_failed" — monotonic event counts.
+    pub counters: Counters,
+    /// "alloc_wait" — cumulative time sessions spent queued for workers.
+    pub phases: PhaseTimes,
+}
+
+impl SchedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Monotonic named counters (bytes sent, rows routed, messages, ...).
 #[derive(Debug, Default)]
 pub struct Counters {
@@ -179,6 +234,30 @@ mod tests {
         let t = Timer::start();
         std::thread::sleep(Duration::from_millis(5));
         assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.add(-5);
+        assert_eq!(g.get(), -4);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn sched_metrics_bundle() {
+        let m = SchedMetrics::new();
+        m.queue_depth.inc();
+        m.counters.add("grants", 2);
+        m.phases.add("alloc_wait", Duration::from_millis(3));
+        assert_eq!(m.queue_depth.get(), 1);
+        assert_eq!(m.counters.get("grants"), 2);
+        assert!(m.phases.get_secs("alloc_wait") > 0.0);
     }
 
     #[test]

@@ -16,7 +16,9 @@ use crate::protocol::{Reader, Writer};
 use crate::{Error, Result};
 
 /// Protocol version for the handshake; bumped on wire changes.
-pub const PROTOCOL_VERSION: u16 = 3;
+/// v4: queued admission (`RequestWorkers { wait, timeout_ms }`), async
+/// jobs (`SubmitRoutine`/`PollJob`/`WaitJob`), scheduler status fields.
+pub const PROTOCOL_VERSION: u16 = 4;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -225,6 +227,72 @@ impl WorkerInfo {
     }
 }
 
+/// Lifecycle state of an asynchronously submitted routine (`sched` job
+/// queue): `Queued -> Running -> Done | Failed`. Terminal states carry the
+/// full routine result / error so `PollJob`/`WaitJob` replies are
+/// self-contained.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done { outputs: Params, new_matrices: Vec<MatrixMeta> },
+    Failed { message: String },
+}
+
+impl JobState {
+    /// True for `Done` / `Failed`.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed { .. })
+    }
+
+    /// Short state name for logs and status lines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        match self {
+            JobState::Queued => w.put_u8(0),
+            JobState::Running => w.put_u8(1),
+            JobState::Done { outputs, new_matrices } => {
+                w.put_u8(2);
+                encode_params(w, outputs);
+                w.put_u32(new_matrices.len() as u32);
+                for m in new_matrices {
+                    m.encode(w);
+                }
+            }
+            JobState::Failed { message } => {
+                w.put_u8(3);
+                w.put_str(message);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<JobState> {
+        Ok(match r.get_u8()? {
+            0 => JobState::Queued,
+            1 => JobState::Running,
+            2 => {
+                let outputs = decode_params(r)?;
+                let n = r.get_u32()? as usize;
+                let mut new_matrices = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    new_matrices.push(MatrixMeta::decode(r)?);
+                }
+                JobState::Done { outputs, new_matrices }
+            }
+            3 => JobState::Failed { message: r.get_str()? },
+            t => return Err(Error::Protocol(format!("bad JobState tag {t}"))),
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Client control plane
 // ---------------------------------------------------------------------------
@@ -234,8 +302,14 @@ impl WorkerInfo {
 pub enum ClientMsg {
     /// Open a session (§3.2 step 2).
     Handshake { app_name: String, version: u16 },
-    /// Ask for `count` workers (§3.2 step 3).
-    RequestWorkers { count: u32 },
+    /// Ask for `count` workers (§3.2 step 3). With `wait: false` a pool
+    /// shortage is an immediate error (the paper's behaviour); with
+    /// `wait: true` the session parks in the scheduler's FIFO admission
+    /// queue until enough workers free up or `timeout_ms` elapses
+    /// (0 = the server's `sched.wait_timeout_ms` default, which is also
+    /// the ceiling — a parked session head-blocks the queue, so clients
+    /// may shorten the wait but not extend it).
+    RequestWorkers { count: u32, wait: bool, timeout_ms: u64 },
     /// Register an MPI-library wrapper (§3.3 `registerLibrary`).
     RegisterLibrary { name: String, path: String },
     /// Allocate an empty distributed matrix ahead of a row transfer.
@@ -250,6 +324,16 @@ pub enum ClientMsg {
     Stop,
     /// Server-wide status (worker pool occupancy) — launcher tooling.
     ServerStatus,
+    /// Asynchronous `RunRoutine`: enqueue the routine as a job and return
+    /// `JobAccepted { job_id }` immediately, leaving the control
+    /// connection free for more submissions (`ac.run_async`).
+    SubmitRoutine { library: String, routine: String, params: Params },
+    /// Non-blocking job-state snapshot.
+    PollJob { job_id: u64 },
+    /// Block (server-side, up to `timeout_ms`) until the job reaches a
+    /// terminal state; replies `JobStatus` with whatever state it is in
+    /// when the wait ends. 0 = one bounded server-default block.
+    WaitJob { job_id: u64, timeout_ms: u64 },
 }
 
 impl ClientMsg {
@@ -261,9 +345,11 @@ impl ClientMsg {
                 w.put_str(app_name);
                 w.put_u16(*version);
             }
-            ClientMsg::RequestWorkers { count } => {
+            ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
                 w.put_u8(1);
                 w.put_u32(*count);
+                w.put_bool(*wait);
+                w.put_u64(*timeout_ms);
             }
             ClientMsg::RegisterLibrary { name, path } => {
                 w.put_u8(2);
@@ -292,6 +378,21 @@ impl ClientMsg {
             }
             ClientMsg::Stop => w.put_u8(7),
             ClientMsg::ServerStatus => w.put_u8(8),
+            ClientMsg::SubmitRoutine { library, routine, params } => {
+                w.put_u8(9);
+                w.put_str(library);
+                w.put_str(routine);
+                encode_params(&mut w, params);
+            }
+            ClientMsg::PollJob { job_id } => {
+                w.put_u8(10);
+                w.put_u64(*job_id);
+            }
+            ClientMsg::WaitJob { job_id, timeout_ms } => {
+                w.put_u8(11);
+                w.put_u64(*job_id);
+                w.put_u64(*timeout_ms);
+            }
         }
         w.into_bytes()
     }
@@ -300,7 +401,11 @@ impl ClientMsg {
         let mut r = Reader::new(buf);
         let msg = match r.get_u8()? {
             0 => ClientMsg::Handshake { app_name: r.get_str()?, version: r.get_u16()? },
-            1 => ClientMsg::RequestWorkers { count: r.get_u32()? },
+            1 => ClientMsg::RequestWorkers {
+                count: r.get_u32()?,
+                wait: r.get_bool()?,
+                timeout_ms: r.get_u64()?,
+            },
             2 => ClientMsg::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
             3 => ClientMsg::CreateMatrix {
                 rows: r.get_u64()?,
@@ -316,6 +421,13 @@ impl ClientMsg {
             6 => ClientMsg::ReleaseMatrix { handle: r.get_u64()? },
             7 => ClientMsg::Stop,
             8 => ClientMsg::ServerStatus,
+            9 => ClientMsg::SubmitRoutine {
+                library: r.get_str()?,
+                routine: r.get_str()?,
+                params: decode_params(&mut r)?,
+            },
+            10 => ClientMsg::PollJob { job_id: r.get_u64()? },
+            11 => ClientMsg::WaitJob { job_id: r.get_u64()?, timeout_ms: r.get_u64()? },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
         Ok(msg)
@@ -335,8 +447,19 @@ pub enum DriverMsg {
     MatrixInfo { meta: MatrixMeta },
     Released { handle: u64 },
     Stopped,
-    /// Reply to `ServerStatus`.
-    Status { total_workers: u32, free_workers: u32, sessions: u32 },
+    /// Reply to `ServerStatus`, including scheduler occupancy: sessions
+    /// parked in the admission queue and jobs submitted-but-not-finished.
+    Status {
+        total_workers: u32,
+        free_workers: u32,
+        sessions: u32,
+        queued_sessions: u32,
+        jobs_inflight: u32,
+    },
+    /// Reply to `SubmitRoutine`: the job is in the session's job table.
+    JobAccepted { job_id: u64 },
+    /// Reply to `PollJob` / `WaitJob`.
+    JobStatus { job_id: u64, state: JobState },
     Err { message: String },
 }
 
@@ -385,11 +508,28 @@ impl DriverMsg {
                 w.put_u8(8);
                 w.put_str(message);
             }
-            DriverMsg::Status { total_workers, free_workers, sessions } => {
+            DriverMsg::Status {
+                total_workers,
+                free_workers,
+                sessions,
+                queued_sessions,
+                jobs_inflight,
+            } => {
                 w.put_u8(9);
                 w.put_u32(*total_workers);
                 w.put_u32(*free_workers);
                 w.put_u32(*sessions);
+                w.put_u32(*queued_sessions);
+                w.put_u32(*jobs_inflight);
+            }
+            DriverMsg::JobAccepted { job_id } => {
+                w.put_u8(10);
+                w.put_u64(*job_id);
+            }
+            DriverMsg::JobStatus { job_id, state } => {
+                w.put_u8(11);
+                w.put_u64(*job_id);
+                state.encode(&mut w);
             }
         }
         w.into_bytes()
@@ -426,7 +566,11 @@ impl DriverMsg {
                 total_workers: r.get_u32()?,
                 free_workers: r.get_u32()?,
                 sessions: r.get_u32()?,
+                queued_sessions: r.get_u32()?,
+                jobs_inflight: r.get_u32()?,
             },
+            10 => DriverMsg::JobAccepted { job_id: r.get_u64()? },
+            11 => DriverMsg::JobStatus { job_id: r.get_u64()?, state: JobState::decode(&mut r)? },
             t => return Err(Error::Protocol(format!("bad DriverMsg tag {t}"))),
         };
         Ok(msg)
@@ -756,7 +900,8 @@ mod tests {
     fn client_msgs_roundtrip() {
         let msgs = vec![
             ClientMsg::Handshake { app_name: "quickstart".into(), version: PROTOCOL_VERSION },
-            ClientMsg::RequestWorkers { count: 8 },
+            ClientMsg::RequestWorkers { count: 8, wait: false, timeout_ms: 0 },
+            ClientMsg::RequestWorkers { count: 2, wait: true, timeout_ms: 1500 },
             ClientMsg::RegisterLibrary { name: "elemlib".into(), path: "builtin:elemlib".into() },
             ClientMsg::CreateMatrix { rows: 100, cols: 10, kind: LayoutKind::RowCyclic },
             ClientMsg::RunRoutine {
@@ -772,6 +917,13 @@ mod tests {
             ClientMsg::ReleaseMatrix { handle: 9 },
             ClientMsg::Stop,
             ClientMsg::ServerStatus,
+            ClientMsg::SubmitRoutine {
+                library: "elemlib".into(),
+                routine: "gramian".into(),
+                params: vec![("A".into(), ParamValue::Matrix(4))],
+            },
+            ClientMsg::PollJob { job_id: 17 },
+            ClientMsg::WaitJob { job_id: 17, timeout_ms: 250 },
         ];
         for m in msgs {
             assert_eq!(ClientMsg::decode(&m.encode()).unwrap(), m);
@@ -794,12 +946,41 @@ mod tests {
             DriverMsg::MatrixInfo { meta: meta() },
             DriverMsg::Released { handle: 42 },
             DriverMsg::Stopped,
-            DriverMsg::Status { total_workers: 8, free_workers: 3, sessions: 2 },
+            DriverMsg::Status {
+                total_workers: 8,
+                free_workers: 3,
+                sessions: 2,
+                queued_sessions: 1,
+                jobs_inflight: 4,
+            },
+            DriverMsg::JobAccepted { job_id: 5 },
+            DriverMsg::JobStatus { job_id: 5, state: JobState::Queued },
+            DriverMsg::JobStatus { job_id: 5, state: JobState::Running },
+            DriverMsg::JobStatus {
+                job_id: 5,
+                state: JobState::Done {
+                    outputs: vec![("iters".into(), ParamValue::I64(12))],
+                    new_matrices: vec![meta()],
+                },
+            },
+            DriverMsg::JobStatus {
+                job_id: 6,
+                state: JobState::Failed { message: "boom".into() },
+            },
             DriverMsg::Err { message: "no workers".into() },
         ];
         for m in msgs {
             assert_eq!(DriverMsg::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn job_state_properties() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done { outputs: vec![], new_matrices: vec![] }.is_terminal());
+        assert!(JobState::Failed { message: "x".into() }.is_terminal());
+        assert_eq!(JobState::Running.name(), "running");
     }
 
     #[test]

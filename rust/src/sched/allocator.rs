@@ -1,0 +1,425 @@
+//! Worker-pool allocator: exclusive grants, FIFO queued admission,
+//! per-session quotas.
+//!
+//! Grants are exclusive (a worker belongs to at most one session — the
+//! paper's disjoint worker groups, Fig 2) and first-fit: the lowest free
+//! worker ids satisfy a request. When the pool is short, a `wait: true`
+//! request parks in a strict-FIFO queue; parked sessions are granted in
+//! arrival order as releases refill the pool, and nobody (waiting or not)
+//! is allowed to overtake the queue head. Every state change funnels
+//! through one mutex + condvar pair, which is what makes the
+//! never-double-grant property easy to believe and easy to test.
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SchedConfig;
+use crate::metrics::{SchedMetrics, Timer};
+use crate::{Error, Result};
+
+/// Allocation policy knobs (derived from [`SchedConfig`]).
+#[derive(Debug, Clone)]
+pub struct AllocPolicy {
+    /// Cumulative workers one session may hold; 0 = unlimited.
+    pub max_workers_per_session: u32,
+    /// Queue-wait budget used when a request does not carry its own.
+    pub default_wait_timeout: Duration,
+}
+
+impl Default for AllocPolicy {
+    fn default() -> Self {
+        AllocPolicy::from(&SchedConfig::default())
+    }
+}
+
+impl From<&SchedConfig> for AllocPolicy {
+    fn from(cfg: &SchedConfig) -> Self {
+        AllocPolicy {
+            max_workers_per_session: cfg.max_workers_per_session,
+            default_wait_timeout: Duration::from_millis(cfg.wait_timeout_ms),
+        }
+    }
+}
+
+/// One parked `RequestWorkers { wait: true }` call. (The owning session
+/// is implicit: the parked thread *is* the session's control thread.)
+struct Waiter {
+    ticket: u64,
+    count: u32,
+}
+
+struct AllocState {
+    free: BTreeSet<u32>,
+    /// worker id -> session currently holding it (exclusive grants).
+    granted: HashMap<u32, u64>,
+    /// session -> workers held (quota accounting).
+    held: HashMap<u64, u32>,
+    /// FIFO admission queue.
+    queue: VecDeque<Waiter>,
+    next_ticket: u64,
+    /// Workers permanently quarantined (wedged groups) — no longer part
+    /// of satisfiable capacity.
+    lost: u32,
+}
+
+/// The worker-pool allocator. Thread-safe; one instance per driver.
+pub struct PoolAllocator {
+    state: Mutex<AllocState>,
+    cv: Condvar,
+    policy: AllocPolicy,
+    metrics: Arc<SchedMetrics>,
+    total: u32,
+}
+
+impl PoolAllocator {
+    pub fn new(
+        worker_ids: impl IntoIterator<Item = u32>,
+        policy: AllocPolicy,
+        metrics: Arc<SchedMetrics>,
+    ) -> PoolAllocator {
+        let free: BTreeSet<u32> = worker_ids.into_iter().collect();
+        let total = free.len() as u32;
+        PoolAllocator {
+            state: Mutex::new(AllocState {
+                free,
+                granted: HashMap::new(),
+                held: HashMap::new(),
+                queue: VecDeque::new(),
+                next_ticket: 0,
+                lost: 0,
+            }),
+            cv: Condvar::new(),
+            policy,
+            metrics,
+            total,
+        }
+    }
+
+    /// Satisfiable pool size: registered workers minus quarantined ones.
+    pub fn total(&self) -> u32 {
+        self.total - self.state.lock().unwrap().lost
+    }
+
+    pub fn free_count(&self) -> u32 {
+        self.state.lock().unwrap().free.len() as u32
+    }
+
+    /// Sessions currently parked in the admission queue.
+    pub fn queue_depth(&self) -> u32 {
+        self.state.lock().unwrap().queue.len() as u32
+    }
+
+    /// Workers currently held by `session_id`.
+    pub fn held_by(&self, session_id: u64) -> u32 {
+        self.state.lock().unwrap().held.get(&session_id).copied().unwrap_or(0)
+    }
+
+    /// Acquire `count` workers for `session_id`.
+    ///
+    /// `wait: false` — grant immediately or fail with the paper's
+    /// `insufficient workers` error (also failing, for fairness, when
+    /// parked sessions are queued ahead even if the pool could cover it).
+    ///
+    /// `wait: true` — park in FIFO order until grantable or the timeout
+    /// (`timeout`, else the policy default) elapses.
+    pub fn acquire(
+        &self,
+        session_id: u64,
+        count: u32,
+        wait: bool,
+        timeout: Option<Duration>,
+    ) -> Result<Vec<u32>> {
+        if count == 0 {
+            return Err(Error::Server("cannot request 0 workers".into()));
+        }
+        let quota = self.policy.max_workers_per_session;
+        let mut st = self.state.lock().unwrap();
+        // Fast-fail requests no release can ever satisfy (quarantined
+        // workers never come back) instead of head-blocking the queue.
+        let live = self.total - st.lost;
+        if count > live {
+            return Err(Error::Server(format!(
+                "insufficient workers: requested {count}, pool size {live}"
+            )));
+        }
+        if quota > 0 {
+            let would_hold = st.held.get(&session_id).copied().unwrap_or(0) + count;
+            if would_hold > quota {
+                return Err(Error::Server(format!(
+                    "session quota exceeded: requesting {count} would hold {would_hold} \
+                     workers, sched.max_workers_per_session = {quota}"
+                )));
+            }
+        }
+
+        if st.queue.is_empty() && st.free.len() as u32 >= count {
+            return Ok(Self::grant(&mut st, session_id, count, &self.metrics));
+        }
+        if !wait {
+            return Err(Error::Server(format!(
+                "insufficient workers: requested {count}, available {} ({} queued ahead)",
+                st.free.len(),
+                st.queue.len()
+            )));
+        }
+
+        // Park in FIFO order.
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back(Waiter { ticket, count });
+        // The gauge mirrors the queue; always set() from the
+        // authoritative length under the lock so it cannot drift.
+        self.metrics.queue_depth.set(st.queue.len() as i64);
+        let waited = Timer::start();
+        // Clamp the budget (clients send timeout_ms over the wire):
+        // unchecked `Instant + huge Duration` would panic while the
+        // state mutex is held, poisoning it for every session.
+        let budget = timeout
+            .unwrap_or(self.policy.default_wait_timeout)
+            .min(Duration::from_secs(24 * 3600));
+        let deadline = Instant::now() + budget;
+        loop {
+            // Capacity may shrink while parked (quarantine): fail fast
+            // once the request can never be satisfied instead of
+            // head-blocking the queue until the deadline.
+            if count > self.total - st.lost {
+                st.queue.retain(|w| w.ticket != ticket);
+                self.metrics.queue_depth.set(st.queue.len() as i64);
+                self.metrics.phases.add("alloc_wait", waited.elapsed());
+                self.cv.notify_all();
+                return Err(Error::Server(format!(
+                    "insufficient workers: requested {count}, pool size {}",
+                    self.total - st.lost
+                )));
+            }
+            let head_ok = st
+                .queue
+                .front()
+                .map(|w| w.ticket == ticket && st.free.len() as u32 >= w.count)
+                .unwrap_or(false);
+            if head_ok {
+                st.queue.pop_front();
+                self.metrics.queue_depth.set(st.queue.len() as i64);
+                self.metrics.phases.add("alloc_wait", waited.elapsed());
+                let ids = Self::grant(&mut st, session_id, count, &self.metrics);
+                // The next waiter may also be satisfiable now.
+                self.cv.notify_all();
+                return Ok(ids);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                st.queue.retain(|w| w.ticket != ticket);
+                self.metrics.queue_depth.set(st.queue.len() as i64);
+                self.metrics.counters.add("grant_timeouts", 1);
+                self.metrics.phases.add("alloc_wait", waited.elapsed());
+                // Our departure may unblock the waiter behind us.
+                self.cv.notify_all();
+                return Err(Error::Server(format!(
+                    "worker wait timed out after {:.1}s (requested {count}, available {})",
+                    waited.elapsed_secs(),
+                    st.free.len()
+                )));
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn grant(
+        st: &mut AllocState,
+        session_id: u64,
+        count: u32,
+        metrics: &SchedMetrics,
+    ) -> Vec<u32> {
+        let ids: Vec<u32> = st.free.iter().take(count as usize).copied().collect();
+        debug_assert_eq!(ids.len(), count as usize);
+        for id in &ids {
+            st.free.remove(id);
+            let prev = st.granted.insert(*id, session_id);
+            debug_assert!(prev.is_none(), "double-grant of worker {id}");
+        }
+        *st.held.entry(session_id).or_insert(0) += count;
+        metrics.counters.add("grants", 1);
+        ids
+    }
+
+    /// Permanently remove workers from circulation (e.g. a group wedged
+    /// in collective mesh formation): ownership moves to a sentinel so
+    /// no release can ever return them to the pool, and the session's
+    /// quota charge is dropped so it can retry with fresh workers.
+    pub fn quarantine(&self, session_id: u64, ids: &[u32]) {
+        const SENTINEL: u64 = u64::MAX;
+        let mut st = self.state.lock().unwrap();
+        let mut moved = 0u32;
+        for id in ids {
+            if st.granted.get(id) == Some(&session_id) {
+                st.granted.insert(*id, SENTINEL);
+                moved += 1;
+            }
+        }
+        if moved > 0 {
+            st.lost += moved;
+            if let Some(h) = st.held.get_mut(&session_id) {
+                *h = h.saturating_sub(moved);
+                if *h == 0 {
+                    st.held.remove(&session_id);
+                }
+            }
+            self.metrics.counters.add("quarantined_workers", moved as u64);
+            // Wake parked waiters: requests exceeding the shrunken live
+            // capacity must fail fast rather than sit at the queue head.
+            self.cv.notify_all();
+        }
+    }
+
+    /// Return workers to the pool, waking parked sessions. Ids not
+    /// currently granted to `session_id` are ignored (release is
+    /// idempotent so error-path cleanup can be unconditional).
+    pub fn release(&self, session_id: u64, ids: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        let mut returned = 0u32;
+        for id in ids {
+            if st.granted.get(id) == Some(&session_id) {
+                st.granted.remove(id);
+                st.free.insert(*id);
+                returned += 1;
+            }
+        }
+        if returned > 0 {
+            if let Some(h) = st.held.get_mut(&session_id) {
+                *h = h.saturating_sub(returned);
+                if *h == 0 {
+                    st.held.remove(&session_id);
+                }
+            }
+            self.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(n: u32, quota: u32, timeout_ms: u64) -> PoolAllocator {
+        let policy = AllocPolicy {
+            max_workers_per_session: quota,
+            default_wait_timeout: Duration::from_millis(timeout_ms),
+        };
+        PoolAllocator::new(0..n, policy, Arc::new(SchedMetrics::new()))
+    }
+
+    #[test]
+    fn exclusive_first_fit() {
+        let a = alloc(4, 0, 100);
+        let g1 = a.acquire(1, 2, false, None).unwrap();
+        assert_eq!(g1, vec![0, 1]);
+        let g2 = a.acquire(2, 2, false, None).unwrap();
+        assert_eq!(g2, vec![2, 3]);
+        assert!(a.acquire(3, 1, false, None).is_err());
+        a.release(1, &g1);
+        assert_eq!(a.acquire(3, 1, false, None).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn zero_and_oversized_requests_rejected() {
+        let a = alloc(2, 0, 100);
+        assert!(a.acquire(1, 0, false, None).is_err());
+        let err = a.acquire(1, 3, true, None).unwrap_err();
+        assert!(err.to_string().contains("pool size"), "{err}");
+    }
+
+    #[test]
+    fn quota_enforced_cumulatively() {
+        let a = alloc(4, 2, 100);
+        a.acquire(1, 2, false, None).unwrap();
+        let err = a.acquire(1, 1, false, None).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
+        // other sessions unaffected
+        a.acquire(2, 2, false, None).unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_errors() {
+        let a = alloc(1, 0, 50);
+        let g = a.acquire(1, 1, false, None).unwrap();
+        let err = a.acquire(2, 1, true, None).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        a.release(1, &g);
+        assert_eq!(a.acquire(2, 1, true, None).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn queued_waiter_granted_on_release() {
+        let a = Arc::new(alloc(2, 0, 5_000));
+        let g = a.acquire(1, 2, false, None).unwrap();
+        let a2 = a.clone();
+        let waiter = std::thread::spawn(move || a2.acquire(2, 2, true, None));
+        // Give the waiter time to park, then free the pool.
+        while a.queue_depth() == 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        a.release(1, &g);
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got, vec![0, 1]);
+        assert_eq!(a.queue_depth(), 0);
+    }
+
+    #[test]
+    fn fifo_order_is_respected() {
+        let a = Arc::new(alloc(1, 0, 5_000));
+        let g = a.acquire(1, 1, false, None).unwrap();
+        let (a2, a3) = (a.clone(), a.clone());
+        let first = std::thread::spawn(move || a2.acquire(2, 1, true, None));
+        while a.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let second = std::thread::spawn(move || a3.acquire(3, 1, true, None));
+        while a.queue_depth() < 2 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // A non-waiting request may not overtake the queue.
+        assert!(a.acquire(4, 1, false, None).is_err());
+        a.release(1, &g);
+        let w1 = first.join().unwrap().unwrap();
+        // Session 2 (queued first) must win worker 0.
+        assert_eq!(w1, vec![0]);
+        a.release(2, &w1);
+        let w2 = second.join().unwrap().unwrap();
+        assert_eq!(w2, vec![0]);
+        a.release(3, &w2);
+    }
+
+    #[test]
+    fn quarantine_removes_workers_and_clears_quota_charge() {
+        let a = alloc(3, 2, 100);
+        let g = a.acquire(1, 2, false, None).unwrap();
+        a.quarantine(1, &g);
+        // Quarantined workers never return to the pool...
+        a.release(1, &g);
+        assert_eq!(a.free_count(), 1);
+        // ...but the session's quota charge is gone, so it can retry
+        // with the remaining worker.
+        assert_eq!(a.held_by(1), 0);
+        assert_eq!(a.acquire(1, 1, false, None).unwrap(), vec![2]);
+        // Live capacity shrank: a request for more than what remains
+        // fails fast instead of head-blocking the admission queue.
+        assert_eq!(a.total(), 1);
+        let err = a.acquire(2, 2, true, None).unwrap_err();
+        assert!(err.to_string().contains("pool size 1"), "{err}");
+    }
+
+    #[test]
+    fn release_is_idempotent_and_owner_checked() {
+        let a = alloc(2, 0, 100);
+        let g = a.acquire(1, 2, false, None).unwrap();
+        // wrong session releasing has no effect
+        a.release(99, &g);
+        assert_eq!(a.free_count(), 0);
+        a.release(1, &g);
+        a.release(1, &g); // double release is a no-op
+        assert_eq!(a.free_count(), 2);
+        assert_eq!(a.held_by(1), 0);
+    }
+}

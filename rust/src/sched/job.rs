@@ -1,0 +1,362 @@
+//! Per-session job tables for asynchronously submitted routines.
+//!
+//! A job is one `SubmitRoutine` call: it enters the table `Queued`, a
+//! driver thread moves it to `Running` once it holds the session's
+//! routine lock, and it finishes `Done` (carrying the routine outputs and
+//! new matrix metadata) or `Failed`. A terminal result is never evicted
+//! before the client has read it (`get`/`wait` mark delivery); once
+//! *delivered*, only the most recent [`DEFAULT_RETAINED_TERMINAL`]
+//! entries are kept (oldest evicted FIFO), so a long-lived session
+//! looping `run()` cannot grow driver memory without bound. Unread
+//! results are bounded instead by the submit-side backlog cap (see
+//! [`JobTable::undelivered`]). `wait` is condvar-based so the driver's
+//! `WaitJob` handler never spins.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::protocol::{JobState, MatrixMeta, Params};
+
+/// Delivered terminal (Done/Failed) entries kept per session before
+/// FIFO eviction.
+pub const DEFAULT_RETAINED_TERMINAL: usize = 1024;
+
+/// Job identifier, unique within one session.
+pub type JobId = u64;
+
+/// Point-in-time view of one job.
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    pub id: JobId,
+    pub routine: String,
+    pub state: JobState,
+    /// Seconds since the job was submitted.
+    pub age_secs: f64,
+}
+
+struct Job {
+    routine: String,
+    state: JobState,
+    submitted: Instant,
+    /// True once a terminal state has been returned to the client.
+    delivered: bool,
+}
+
+struct Inner {
+    next_id: JobId,
+    jobs: HashMap<JobId, Job>,
+    /// Non-terminal job count (O(1) backlog checks on the submit path).
+    inflight: usize,
+    /// Jobs whose terminal result the client has not read yet (includes
+    /// all inflight jobs) — the submit-side backlog cap counts these.
+    undelivered: usize,
+    /// Total jobs ever submitted.
+    total: usize,
+    /// Delivered terminal job ids in delivery order, for FIFO eviction.
+    delivered_order: VecDeque<JobId>,
+    retain_cap: usize,
+}
+
+/// Thread-safe job table; one per session.
+#[derive(Default)]
+pub struct JobTable {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            next_id: 1,
+            jobs: HashMap::new(),
+            inflight: 0,
+            undelivered: 0,
+            total: 0,
+            delivered_order: VecDeque::new(),
+            retain_cap: DEFAULT_RETAINED_TERMINAL,
+        }
+    }
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable::default()
+    }
+
+    /// Table that evicts terminal entries beyond `cap` (tests; `new`
+    /// uses [`DEFAULT_RETAINED_TERMINAL`]).
+    pub fn with_retention(cap: usize) -> JobTable {
+        let t = JobTable::default();
+        t.inner.lock().unwrap().retain_cap = cap.max(1);
+        t
+    }
+
+    /// Register a new job in `Queued` state and return its id. Ids are
+    /// assigned in submission order (the driver's execution turnstile
+    /// relies on this).
+    pub fn submit(&self, routine: &str) -> JobId {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.inflight += 1;
+        inner.undelivered += 1;
+        inner.total += 1;
+        inner.jobs.insert(
+            id,
+            Job {
+                routine: routine.to_string(),
+                state: JobState::Queued,
+                submitted: Instant::now(),
+                delivered: false,
+            },
+        );
+        id
+    }
+
+    /// Move a queued job to `Running`. Returns false if the job is
+    /// unknown or already past `Queued` (e.g. failed by session close).
+    pub fn set_running(&self, id: JobId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let ok = match inner.jobs.get_mut(&id) {
+            Some(j) if j.state == JobState::Queued => {
+                j.state = JobState::Running;
+                true
+            }
+            _ => false,
+        };
+        if ok {
+            self.cv.notify_all();
+        }
+        ok
+    }
+
+    /// Terminal success.
+    pub fn complete(&self, id: JobId, outputs: Params, new_matrices: Vec<MatrixMeta>) {
+        self.finish(id, JobState::Done { outputs, new_matrices });
+    }
+
+    /// Terminal failure.
+    pub fn fail(&self, id: JobId, message: impl Into<String>) {
+        self.finish(id, JobState::Failed { message: message.into() });
+    }
+
+    fn finish(&self, id: JobId, state: JobState) {
+        debug_assert!(state.is_terminal());
+        let mut inner = self.inner.lock().unwrap();
+        let newly_terminal = match inner.jobs.get_mut(&id) {
+            Some(j) if !j.state.is_terminal() => {
+                j.state = state;
+                true
+            }
+            _ => false,
+        };
+        if newly_terminal {
+            inner.inflight = inner.inflight.saturating_sub(1);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Drop a job outright — for submit-path failures where the client
+    /// never learns the id, so the entry could otherwise never be
+    /// delivered (and would consume a backlog-cap slot forever).
+    pub fn remove(&self, id: JobId) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(j) = inner.jobs.remove(&id) {
+            if !j.state.is_terminal() {
+                inner.inflight = inner.inflight.saturating_sub(1);
+            }
+            if !j.delivered {
+                inner.undelivered = inner.undelivered.saturating_sub(1);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Fail every non-terminal job (session teardown).
+    pub fn fail_all_nonterminal(&self, message: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut failed = 0usize;
+        for j in inner.jobs.values_mut() {
+            if !j.state.is_terminal() {
+                j.state = JobState::Failed { message: message.to_string() };
+                failed += 1;
+            }
+        }
+        inner.inflight = inner.inflight.saturating_sub(failed);
+        self.cv.notify_all();
+    }
+
+    /// Snapshot a job and, when it is terminal, mark it delivered —
+    /// delivered results become eligible for FIFO eviction beyond the
+    /// retention cap. Unread results are never evicted.
+    fn snapshot_and_mark(inner: &mut Inner, id: JobId) -> Option<JobSnapshot> {
+        let j = inner.jobs.get_mut(&id)?;
+        let snap = snapshot(id, j);
+        if j.state.is_terminal() && !j.delivered {
+            j.delivered = true;
+            inner.undelivered = inner.undelivered.saturating_sub(1);
+            inner.delivered_order.push_back(id);
+            while inner.delivered_order.len() > inner.retain_cap {
+                if let Some(old) = inner.delivered_order.pop_front() {
+                    inner.jobs.remove(&old);
+                }
+            }
+        }
+        Some(snap)
+    }
+
+    /// Non-blocking snapshot; `None` for unknown ids.
+    pub fn get(&self, id: JobId) -> Option<JobSnapshot> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::snapshot_and_mark(&mut inner, id)
+    }
+
+    /// Block until the job reaches a terminal state or `timeout` elapses;
+    /// returns the state at that moment (`None` for unknown ids).
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobSnapshot> {
+        // Clamp like the allocator does: an unchecked `Instant + huge
+        // Duration` (operator-configured waitjob_block_ms has no upper
+        // bound) would panic the control thread past its cleanup.
+        let deadline = Instant::now() + timeout.min(Duration::from_secs(24 * 3600));
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let terminal = match inner.jobs.get(&id) {
+                None => return None,
+                Some(j) => j.state.is_terminal(),
+            };
+            let now = Instant::now();
+            if terminal || now >= deadline {
+                return Self::snapshot_and_mark(&mut inner, id);
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Highest job id assigned so far (0 if none).
+    pub fn last_id(&self) -> JobId {
+        self.inner.lock().unwrap().next_id - 1
+    }
+
+    /// Jobs submitted but not yet terminal (O(1)).
+    pub fn inflight(&self) -> usize {
+        self.inner.lock().unwrap().inflight
+    }
+
+    /// Jobs whose terminal result the client has not read yet, plus all
+    /// inflight jobs (O(1)) — what the submit-side backlog cap bounds:
+    /// each undelivered job holds memory the client can still claim.
+    pub fn undelivered(&self) -> usize {
+        self.inner.lock().unwrap().undelivered
+    }
+
+    /// Total jobs ever submitted to this table (evicted ones included).
+    pub fn submitted(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+}
+
+fn snapshot(id: JobId, j: &Job) -> JobSnapshot {
+    JobSnapshot {
+        id,
+        routine: j.routine.clone(),
+        state: j.state.clone(),
+        age_secs: j.submitted.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::ParamValue;
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let t = JobTable::new();
+        let id = t.submit("gemm");
+        assert_eq!(t.get(id).unwrap().state, JobState::Queued);
+        assert_eq!(t.inflight(), 1);
+        assert!(t.set_running(id));
+        assert!(!t.set_running(id)); // not queued anymore
+        t.complete(id, vec![("x".into(), ParamValue::I64(1))], vec![]);
+        let snap = t.get(id).unwrap();
+        assert!(matches!(snap.state, JobState::Done { .. }));
+        assert_eq!(snap.routine, "gemm");
+        assert_eq!(t.inflight(), 0);
+        assert_eq!(t.undelivered(), 0);
+        assert_eq!(t.submitted(), 1);
+    }
+
+    #[test]
+    fn terminal_states_are_sticky() {
+        let t = JobTable::new();
+        let id = t.submit("svd");
+        t.fail(id, "boom");
+        t.complete(id, vec![], vec![]); // ignored: already terminal
+        assert!(matches!(t.get(id).unwrap().state, JobState::Failed { .. }));
+    }
+
+    #[test]
+    fn wait_returns_on_completion() {
+        let t = std::sync::Arc::new(JobTable::new());
+        let id = t.submit("fro_norm");
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            t2.set_running(id);
+            t2.complete(id, vec![], vec![]);
+        });
+        let snap = t.wait(id, Duration::from_secs(5)).unwrap();
+        assert!(snap.state.is_terminal());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out_with_current_state() {
+        let t = JobTable::new();
+        let id = t.submit("slow");
+        let snap = t.wait(id, Duration::from_millis(30)).unwrap();
+        assert_eq!(snap.state, JobState::Queued);
+        assert!(t.wait(999, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn delivered_results_evicted_fifo_beyond_cap() {
+        let t = JobTable::with_retention(2);
+        let ids: Vec<JobId> = (0..4).map(|i| t.submit(&format!("j{i}"))).collect();
+        for &id in &ids {
+            t.complete(id, vec![], vec![]);
+        }
+        // Terminal but unread: nothing may be evicted.
+        assert_eq!(t.undelivered(), 4);
+        assert_eq!(t.inflight(), 0);
+        // Reading delivers; beyond the cap of 2, oldest deliveries go.
+        for &id in &ids {
+            assert!(t.get(id).is_some(), "unread result {id} evicted");
+        }
+        assert_eq!(t.undelivered(), 0);
+        assert!(t.get(ids[0]).is_none());
+        assert!(t.get(ids[1]).is_none());
+        assert!(t.get(ids[2]).is_some());
+        assert!(t.get(ids[3]).is_some());
+        assert_eq!(t.submitted(), 4);
+        // Re-reading a retained delivered result does not re-deliver.
+        assert!(t.get(ids[3]).is_some());
+        assert_eq!(t.undelivered(), 0);
+    }
+
+    #[test]
+    fn fail_all_nonterminal_spares_done() {
+        let t = JobTable::new();
+        let a = t.submit("a");
+        let b = t.submit("b");
+        t.complete(a, vec![], vec![]);
+        t.fail_all_nonterminal("session closed");
+        assert!(matches!(t.get(a).unwrap().state, JobState::Done { .. }));
+        match t.get(b).unwrap().state {
+            JobState::Failed { message } => assert!(message.contains("closed")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! `sched` — the driver's scheduling subsystem: worker-pool admission
+//! control and the asynchronous job queue.
+//!
+//! The paper's Alchemist driver (§2, Fig 2) multiplexes many concurrent
+//! client applications onto one fixed worker pool, but its allocation
+//! story is all-or-nothing: a `RequestWorkers` that cannot be satisfied
+//! immediately fails, and every `RunRoutine` blocks the session's control
+//! connection end to end. This module upgrades both halves:
+//!
+//! * [`allocator`] — [`PoolAllocator`]: exclusive first-fit worker grants
+//!   with an optional FIFO admission queue (`wait: true` requests park
+//!   until workers free up, with a timeout) and an optional per-session
+//!   quota. Fairness is strict FIFO: nobody — not even a non-waiting
+//!   request — jumps over a parked session.
+//! * [`job`] — [`JobTable`]: per-session tables of submitted routines
+//!   with `Queued -> Running -> Done | Failed` lifecycles, condvar-based
+//!   waiting, and result retention until the session closes. The driver
+//!   runs each job on its own thread, serialized per session by a routine
+//!   lock (the worker group is an SPMD unit), so a client can keep
+//!   submitting while earlier jobs execute.
+//!
+//! Wire surface: `SubmitRoutine -> JobAccepted { job_id }`, `PollJob`,
+//! `WaitJob`, and the `wait`/`timeout_ms` fields on `RequestWorkers`
+//! (protocol v4). Client surface: `AlchemistContext::run_async` returning
+//! a `JobHandle`, with the synchronous `run` reimplemented on top.
+//! Observability: `metrics::SchedMetrics` (queue depth, jobs in flight,
+//! grant counters, cumulative allocation wait time).
+
+pub mod allocator;
+pub mod job;
+
+pub use allocator::{AllocPolicy, PoolAllocator};
+pub use job::{JobId, JobSnapshot, JobTable};

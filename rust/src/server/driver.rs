@@ -3,16 +3,29 @@
 //! "The Alchemist driver process receives control commands from the Spark
 //! driver, and it relays the relevant information to the worker
 //! processes").
+//!
+//! Scheduling is delegated to the [`crate::sched`] subsystem: worker
+//! grants go through [`PoolAllocator`] (queued FIFO admission instead of
+//! hard failure when `wait: true`), and routines can be submitted
+//! asynchronously (`SubmitRoutine` -> job thread -> `PollJob`/`WaitJob`).
+//! Jobs within one session are serialized by a per-session routine lock —
+//! the worker group is an SPMD unit — but the control connection stays
+//! free, so a client can pipeline submissions and overlap transfer with
+//! compute.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
+use crate::config::SchedConfig;
+use crate::metrics::SchedMetrics;
 use crate::protocol::{
-    frame, ClientMsg, DriverMsg, LayoutDesc, MatrixMeta, WorkerCtl, WorkerInfo,
+    frame, ClientMsg, DriverMsg, LayoutDesc, MatrixMeta, Params, WorkerCtl, WorkerInfo,
     WorkerReply, PROTOCOL_VERSION,
 };
+use crate::sched::{AllocPolicy, JobTable, PoolAllocator};
 use crate::{debugln, info, warnln, Error, Result};
 
 /// Handles the driver reserves per RunRoutine call for distributed
@@ -51,27 +64,63 @@ impl WorkerConn {
     }
 }
 
-/// A client session: its worker group and the matrices it owns.
-struct Session {
-    id: u64,
-    app_name: String,
-    workers: Vec<u32>,
-    matrices: HashMap<u64, MatrixMeta>,
-}
-
-/// Shared driver state.
-pub struct DriverState {
+/// Shared driver state: the worker roster, the scheduler, and counters.
+/// Every field is internally synchronized — there is no big driver lock,
+/// so session threads and job threads never serialize on each other
+/// except where the scheduler demands it.
+pub struct DriverCore {
     pub workers: Vec<Arc<WorkerConn>>,
-    free: BTreeSet<u32>,
-    next_session: u64,
-    next_handle: u64,
-    active_sessions: u32,
+    pub alloc: PoolAllocator,
+    pub metrics: Arc<SchedMetrics>,
+    sched_cfg: SchedConfig,
+    next_session: AtomicU64,
+    next_handle: AtomicU64,
+    active_sessions: AtomicU32,
 }
 
-impl DriverState {
+impl DriverCore {
     fn worker(&self, id: u32) -> Arc<WorkerConn> {
         self.workers[id as usize].clone()
     }
+
+    fn alloc_handles(&self, n: u64) -> std::ops::Range<u64> {
+        let start = self.next_handle.fetch_add(n, Ordering::SeqCst);
+        start..start + n
+    }
+}
+
+/// Per-session state shared between the control-connection thread and the
+/// session's job threads.
+struct SessionShared {
+    id: u64,
+    app_name: String,
+    /// Worker ids granted to this session (empty until `RequestWorkers`).
+    workers: Mutex<Vec<u32>>,
+    /// Matrix registry: handle -> metadata, session-scoped.
+    matrices: Mutex<HashMap<u64, MatrixMeta>>,
+    /// Async job table (`sched::JobTable`).
+    jobs: JobTable,
+    /// Serializes SPMD routine execution on this session's worker group:
+    /// jobs overlap from the client's perspective, but the group runs one
+    /// routine at a time.
+    routine_lock: Mutex<()>,
+    /// FIFO turnstile enforcing submission-order job execution. Job ids
+    /// are assigned in submission order on the serial control thread,
+    /// and a bare mutex is not fair — without this, a later job's thread
+    /// could barge in front of an earlier one.
+    turn: Mutex<TurnState>,
+    turn_cv: Condvar,
+    /// Set at teardown; job threads that wake up afterwards must not
+    /// touch the (already released) workers.
+    closed: AtomicBool,
+}
+
+/// Execution-turnstile state: `next` is the job id allowed to run now;
+/// `retired` holds ids whose slot was consumed out of order (spawn
+/// failures, closed-session bails) so `next` can skip over them.
+struct TurnState {
+    next: u64,
+    retired: std::collections::BTreeSet<u64>,
 }
 
 /// Run the driver: accept client connections on `client_listener`, serve
@@ -81,15 +130,19 @@ pub fn run_driver(
     client_listener: TcpListener,
     workers: Vec<Arc<WorkerConn>>,
     stop: Arc<AtomicBool>,
+    sched_cfg: SchedConfig,
 ) -> Result<()> {
-    let free: BTreeSet<u32> = workers.iter().map(|w| w.id).collect();
-    let state = Arc::new(Mutex::new(DriverState {
+    let metrics = Arc::new(SchedMetrics::new());
+    let ids: Vec<u32> = workers.iter().map(|w| w.id).collect();
+    let core = Arc::new(DriverCore {
         workers,
-        free,
-        next_session: 1,
-        next_handle: 1,
-        active_sessions: 0,
-    }));
+        alloc: PoolAllocator::new(ids, AllocPolicy::from(&sched_cfg), metrics.clone()),
+        metrics,
+        sched_cfg,
+        next_session: AtomicU64::new(1),
+        next_handle: AtomicU64::new(1),
+        active_sessions: AtomicU32::new(0),
+    });
     info!("driver", "serving clients at {}", client_listener.local_addr()?);
     for conn in client_listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -97,9 +150,9 @@ pub fn run_driver(
         }
         let Ok(conn) = conn else { break };
         let _ = conn.set_nodelay(true);
-        let state = state.clone();
+        let core = core.clone();
         std::thread::spawn(move || {
-            if let Err(e) = serve_client(conn, state) {
+            if let Err(e) = serve_client(conn, core) {
                 debugln!("driver", "client session ended: {e}");
             }
         });
@@ -108,23 +161,28 @@ pub fn run_driver(
 }
 
 /// Serve one client control connection for its whole lifetime.
-fn serve_client(mut conn: TcpStream, state: Arc<Mutex<DriverState>>) -> Result<()> {
-    let mut session: Option<Session> = None;
+fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
+    let mut session: Option<Arc<SessionShared>> = None;
     let result = loop {
         let buf = match frame::read_frame(&mut conn) {
             Ok(b) => b,
             Err(e) => break Err(e), // disconnect -> cleanup below
         };
-        let msg = ClientMsg::decode(&buf)?;
+        // A decode failure must still fall through to session cleanup
+        // (returning early would strand the session's workers).
+        let msg = match ClientMsg::decode(&buf) {
+            Ok(m) => m,
+            Err(e) => break Err(e),
+        };
         let stop = matches!(msg, ClientMsg::Stop);
         if stop {
             // Clean up *before* acking Stop so a client that immediately
             // reconnects sees its workers back in the pool.
             if let Some(s) = session.take() {
-                cleanup_session(s, &state);
+                cleanup_session(&s, &core);
             }
         }
-        let reply = match handle_client_msg(msg, &mut session, &state) {
+        let reply = match handle_client_msg(msg, &mut session, &core) {
             Ok(r) => r,
             Err(e) => DriverMsg::Err { message: e.to_string() },
         };
@@ -135,34 +193,313 @@ fn serve_client(mut conn: TcpStream, state: Arc<Mutex<DriverState>>) -> Result<(
     };
     // Session cleanup: free matrices on workers, return workers to pool.
     if let Some(s) = session.take() {
-        cleanup_session(s, &state);
+        cleanup_session(&s, &core);
     }
     result
 }
 
-fn cleanup_session(s: Session, state: &Arc<Mutex<DriverState>>) {
-    let worker_conns: Vec<Arc<WorkerConn>> = {
-        let st = state.lock().unwrap();
-        s.workers.iter().map(|&id| st.worker(id)).collect()
-    };
-    for w in &worker_conns {
-        for handle in s.matrices.keys() {
+fn cleanup_session(s: &Arc<SessionShared>, core: &Arc<DriverCore>) {
+    // Stop the job pipeline first: queued job threads that acquire the
+    // routine lock after this point bail out without touching workers.
+    s.closed.store(true, Ordering::SeqCst);
+    // Wake jobs parked in the execution turnstile so they observe
+    // `closed` and drain instead of waiting for turns that never come.
+    s.turn_cv.notify_all();
+    // Wait for the routine currently on the worker group (if any).
+    let _running = s.routine_lock.lock().unwrap();
+    s.jobs.fail_all_nonterminal("session closed");
+
+    let worker_ids: Vec<u32> = s.workers.lock().unwrap().clone();
+    let matrix_handles: Vec<u64> = s.matrices.lock().unwrap().keys().copied().collect();
+    for &id in &worker_ids {
+        let w = core.worker(id);
+        for handle in &matrix_handles {
             let _ = w.call(&WorkerCtl::FreeMatrix { handle: *handle });
         }
         let _ = w.call(&WorkerCtl::EndSession { session_id: s.id });
     }
-    let mut st = state.lock().unwrap();
-    for id in s.workers {
-        st.free.insert(id);
-    }
-    st.active_sessions = st.active_sessions.saturating_sub(1);
+    core.alloc.release(s.id, &worker_ids);
+    core.active_sessions.fetch_sub(1, Ordering::SeqCst);
     info!("driver", "session {} ({}) closed", s.id, s.app_name);
+}
+
+/// Resolve the session's worker connections (error if none granted yet).
+fn session_conns(s: &SessionShared, core: &DriverCore) -> Result<Vec<Arc<WorkerConn>>> {
+    let ids = s.workers.lock().unwrap();
+    if ids.is_empty() {
+        return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
+    }
+    Ok(ids.iter().map(|&id| core.worker(id)).collect())
+}
+
+/// Validate that every matrix param references a handle this session owns.
+fn validate_handles(s: &SessionShared, params: &Params) -> Result<()> {
+    let matrices = s.matrices.lock().unwrap();
+    for (_, v) in params {
+        if let crate::protocol::ParamValue::Matrix(h) = v {
+            if !matrices.contains_key(h) {
+                return Err(Error::Server(format!(
+                    "matrix handle {h} not owned by session {}",
+                    s.id
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one SPMD routine on the session's worker group, serialized by the
+/// session routine lock. Shared by the legacy synchronous `RunRoutine`
+/// path and the async job threads.
+fn execute_routine(
+    core: &DriverCore,
+    s: &SessionShared,
+    library: &str,
+    routine: &str,
+    params: &Params,
+    output_handles: &[u64],
+) -> Result<(Params, Vec<MatrixMeta>)> {
+    let _serial = s.routine_lock.lock().unwrap();
+    if s.closed.load(Ordering::SeqCst) {
+        return Err(Error::Server("session closed".into()));
+    }
+    execute_routine_locked(core, s, library, routine, params, output_handles)
+}
+
+/// The SPMD relay proper; caller must hold the session routine lock.
+fn execute_routine_locked(
+    core: &DriverCore,
+    s: &SessionShared,
+    library: &str,
+    routine: &str,
+    params: &Params,
+    output_handles: &[u64],
+) -> Result<(Params, Vec<MatrixMeta>)> {
+    let conns = session_conns(s, core)?;
+    // RunRoutine is an SPMD collective: once some members have entered
+    // it, a member that never will (socket failure) leaves the rest
+    // blocked in the mesh forever — reading from them would wedge this
+    // thread (which holds the routine lock) and deadlock cleanup. Any
+    // socket-level failure therefore poisons the session: the worker
+    // group is quarantined and never contacted again.
+    for w in &conns {
+        let r = w.send(&WorkerCtl::RunRoutine {
+            session_id: s.id,
+            library: library.to_string(),
+            routine: routine.to_string(),
+            params: params.clone(),
+            output_handles: output_handles.to_vec(),
+        });
+        if let Err(e) = r {
+            let why = format!("send to worker {}: {e}", w.id);
+            poison_session(core, s, &why);
+            return Err(Error::Server(format!("routine {routine} failed: {why}")));
+        }
+    }
+    // rank 0 carries the result; all must succeed. Decoded Err replies
+    // mean the worker returned from the routine (stream still synced) —
+    // keep draining those; only socket-level recv failures poison.
+    let mut first_err: Option<String> = None;
+    let mut result: Option<(Params, Vec<MatrixMeta>)> = None;
+    for (rank, w) in conns.iter().enumerate() {
+        match w.recv_reply() {
+            Ok(WorkerReply::Ok) => {}
+            Ok(WorkerReply::RoutineDone { outputs, new_matrices }) => {
+                if rank == 0 {
+                    result = Some((outputs, new_matrices));
+                }
+            }
+            Ok(WorkerReply::Err { message }) => {
+                warnln!("driver", "worker {} failed {routine}: {message}", w.id);
+                first_err.get_or_insert(message);
+            }
+            Ok(other) => {
+                first_err.get_or_insert(format!("unexpected reply {other:?}"));
+            }
+            Err(e) => {
+                let why = format!("recv from worker {}: {e}", w.id);
+                poison_session(core, s, &why);
+                return Err(Error::Server(format!("routine {routine} failed: {why}")));
+            }
+        }
+    }
+    if first_err.is_some() || result.is_none() {
+        // Every reply was drained (streams synced), so it is safe to
+        // contact the group: free any output panels the succeeding
+        // ranks allocated under the pre-reserved handles. They were
+        // never registered in s.matrices, so session cleanup would not
+        // reach them and they would leak for the worker's lifetime
+        // (FreeMatrix is idempotent on ranks that allocated nothing).
+        for h in output_handles {
+            let _ = broadcast(&conns, &WorkerCtl::FreeMatrix { handle: *h });
+        }
+        return Err(match first_err {
+            Some(msg) => Error::Server(format!("routine {routine} failed: {msg}")),
+            None => Error::Server("rank 0 returned no routine result".into()),
+        });
+    }
+    let (outputs, new_matrices) = result.unwrap();
+    let mut matrices = s.matrices.lock().unwrap();
+    for m in &new_matrices {
+        matrices.insert(m.handle, m.clone());
+    }
+    Ok((outputs, new_matrices))
+}
+
+/// How session setup failed, and therefore what the caller may do with
+/// the worker grant.
+enum SetupFailure {
+    /// Every involved worker responded over a synced stream and was
+    /// rolled back cleanly — the whole grant is safe to release back to
+    /// the pool.
+    Clean(Error),
+    /// Transport-level failure: the listed workers are unreachable,
+    /// desynced, or possibly wedged inside collective mesh formation.
+    /// They must be quarantined (kept out of the pool, never contacted
+    /// again — a first-fit re-grant of a dead lowest-id worker would
+    /// otherwise brick every future allocation); the rest of the grant
+    /// is safe to release.
+    Quarantined(Error, Vec<u32>),
+}
+
+/// Block until every job submitted so far has retired its turnstile
+/// slot (finished or bailed). Destructive control-plane ops call this so
+/// they execute after, not between, accepted jobs. Returns immediately
+/// on closed sessions (their jobs drain without running).
+fn drain_jobs(s: &SessionShared) {
+    let last = s.jobs.last_id();
+    let mut turn = s.turn.lock().unwrap();
+    while turn.next <= last && !s.closed.load(Ordering::SeqCst) {
+        turn = s.turn_cv.wait(turn).unwrap();
+    }
+}
+
+/// Quarantine a session whose worker group hit a socket-level failure
+/// mid-collective: members may be wedged waiting for a peer that will
+/// never arrive, so they must not be contacted again (a blocking call
+/// would hang the caller) nor returned to the pool. The session is
+/// closed for further routines; teardown then skips worker calls
+/// because the id list is empty. Caller holds the routine lock.
+fn poison_session(core: &DriverCore, s: &SessionShared, why: &str) {
+    warnln!("driver", "session {}: quarantining worker group: {why}", s.id);
+    s.closed.store(true, Ordering::SeqCst);
+    let ids: Vec<u32> = std::mem::take(&mut *s.workers.lock().unwrap());
+    core.alloc.quarantine(s.id, &ids);
+    // Wake queued job threads so they observe `closed` and drain.
+    s.turn_cv.notify_all();
+}
+
+/// Two-phase communicator formation (see worker.rs) for a fresh worker
+/// grant. On failure, [`SetupFailure`] tells the caller whether the
+/// grant can be released (phase 1) or must be quarantined (phase 2).
+fn setup_session_workers(
+    core: &DriverCore,
+    session_id: u64,
+    ids: &[u32],
+) -> std::result::Result<Vec<WorkerInfo>, SetupFailure> {
+    let conns: Vec<Arc<WorkerConn>> = ids.iter().map(|&id| core.worker(id)).collect();
+
+    // Phase 1: each worker binds a communicator listener. Workers
+    // already prepared are idle in their control loops, so the
+    // EndSession rollbacks below cannot block.
+    let mut comm_addrs = Vec::with_capacity(conns.len());
+    for (i, w) in conns.iter().enumerate() {
+        match w.call(&WorkerCtl::PrepareSession { session_id }) {
+            Ok(WorkerReply::SessionReady { comm_addr }) => comm_addrs.push(comm_addr),
+            Ok(other) => {
+                // The worker responded (stream still synced) but
+                // refused — clean rollback, whole grant reusable.
+                for wp in &conns[..i] {
+                    let _ = wp.call(&WorkerCtl::EndSession { session_id });
+                }
+                return Err(SetupFailure::Clean(Error::Server(format!(
+                    "bad PrepareSession reply {other:?}"
+                ))));
+            }
+            Err(e) => {
+                // Transport-level: this worker is dead or desynced and
+                // must never return to the pool; the rest are healthy.
+                for wp in &conns[..i] {
+                    let _ = wp.call(&WorkerCtl::EndSession { session_id });
+                }
+                return Err(SetupFailure::Quarantined(
+                    Error::Server(format!("PrepareSession on worker {}: {e}", w.id)),
+                    vec![w.id],
+                ));
+            }
+        }
+    }
+
+    let peers: Vec<WorkerInfo> = conns
+        .iter()
+        .zip(&comm_addrs)
+        .map(|(w, addr)| WorkerInfo { id: w.id, data_addr: addr.clone() })
+        .collect();
+
+    // Phase 2 (collective): send NewSession to all, then read all replies
+    // (mesh formation blocks until every member participates).
+    for (rank, w) in conns.iter().enumerate() {
+        if let Err(e) = w.send(&WorkerCtl::NewSession {
+            session_id,
+            rank: rank as u32,
+            peers: peers.clone(),
+        }) {
+            // Members that did get NewSession (ranks before this one)
+            // are now blocked inside collective mesh formation waiting
+            // for a member that never will — they cannot read another
+            // control command, so a blocking EndSession would hang this
+            // thread: quarantine them and the failed worker. Later
+            // ranks never received NewSession and are idle after
+            // PrepareSession — roll them back so they can re-pool.
+            for cp in &conns[rank + 1..] {
+                let _ = cp.call(&WorkerCtl::EndSession { session_id });
+            }
+            let wedged: Vec<u32> = conns[..=rank].iter().map(|c| c.id).collect();
+            return Err(SetupFailure::Quarantined(
+                Error::Server(format!("send NewSession to worker {}: {e}", w.id)),
+                wedged,
+            ));
+        }
+    }
+    let mut reply_err: Option<String> = None;
+    for w in &conns {
+        match w.recv_reply() {
+            Ok(WorkerReply::Ok) => {}
+            Ok(WorkerReply::Err { message }) => {
+                reply_err.get_or_insert(message);
+            }
+            Ok(other) => {
+                reply_err.get_or_insert(format!("unexpected worker reply {other:?}"));
+            }
+            Err(e) => {
+                // Socket-level failure mid-collective: remaining group
+                // state is unknown; do not touch these workers again.
+                return Err(SetupFailure::Quarantined(
+                    Error::Server(format!("recv from worker {}: {e}", w.id)),
+                    ids.to_vec(),
+                ));
+            }
+        }
+    }
+    if let Some(m) = reply_err {
+        // Every member replied, so all are back in their control loops
+        // (mesh formation returned everywhere) — safe to roll back.
+        for w in &conns {
+            let _ = w.call(&WorkerCtl::EndSession { session_id });
+        }
+        return Err(SetupFailure::Clean(Error::Server(m)));
+    }
+
+    Ok(conns
+        .iter()
+        .map(|w| WorkerInfo { id: w.id, data_addr: w.data_addr.clone() })
+        .collect())
 }
 
 fn handle_client_msg(
     msg: ClientMsg,
-    session: &mut Option<Session>,
-    state: &Arc<Mutex<DriverState>>,
+    session: &mut Option<Arc<SessionShared>>,
+    core: &Arc<DriverCore>,
 ) -> Result<DriverMsg> {
     match msg {
         ClientMsg::Handshake { app_name, version } => {
@@ -171,227 +508,360 @@ fn handle_client_msg(
                     "protocol version mismatch: client {version}, server {PROTOCOL_VERSION}"
                 )));
             }
-            let id = {
-                let mut st = state.lock().unwrap();
-                let id = st.next_session;
-                st.next_session += 1;
-                st.active_sessions += 1;
-                id
-            };
+            if session.is_some() {
+                // Replacing the session here would drop the only
+                // cleanup-reachable reference to it, stranding its
+                // workers and matrices.
+                return Err(Error::Protocol(
+                    "session already open on this connection (send Stop first)".into(),
+                ));
+            }
+            let id = core.next_session.fetch_add(1, Ordering::SeqCst);
+            core.active_sessions.fetch_add(1, Ordering::SeqCst);
             info!("driver", "session {id} opened by {app_name:?}");
-            *session = Some(Session {
+            *session = Some(Arc::new(SessionShared {
                 id,
                 app_name,
-                workers: vec![],
-                matrices: HashMap::new(),
-            });
+                workers: Mutex::new(vec![]),
+                matrices: Mutex::new(HashMap::new()),
+                jobs: JobTable::new(),
+                routine_lock: Mutex::new(()),
+                turn: Mutex::new(TurnState {
+                    next: 1,
+                    retired: std::collections::BTreeSet::new(),
+                }),
+                turn_cv: Condvar::new(),
+                closed: AtomicBool::new(false),
+            }));
             Ok(DriverMsg::HandshakeAck { session_id: id, version: PROTOCOL_VERSION })
         }
-        ClientMsg::RequestWorkers { count } => {
+        ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
             let s = need_session(session)?;
-            if count == 0 {
-                return Err(Error::Server("cannot request 0 workers".into()));
+            if s.closed.load(Ordering::SeqCst) {
+                // A poisoned session must not acquire workers it can
+                // never use (routines are refused once closed).
+                return Err(Error::Server("session closed; reconnect to retry".into()));
             }
-            let allocated: Vec<Arc<WorkerConn>> = {
-                let mut st = state.lock().unwrap();
-                if (st.free.len() as u32) < count {
-                    return Err(Error::Server(format!(
-                        "insufficient workers: requested {count}, available {}",
-                        st.free.len()
-                    )));
-                }
-                let ids: Vec<u32> = st.free.iter().take(count as usize).copied().collect();
-                for id in &ids {
-                    st.free.remove(id);
-                }
-                ids.iter().map(|&id| st.worker(id)).collect()
+            if !s.workers.lock().unwrap().is_empty() {
+                return Err(Error::Server(
+                    "workers already allocated to this session".into(),
+                ));
+            }
+            // The server's wait_timeout_ms is a ceiling, not just the
+            // default: a parked session head-blocks the FIFO queue, so
+            // clients may shorten the wait but never extend it (a
+            // crashed client's park would otherwise stall every tenant
+            // for a client-chosen duration).
+            let cap_ms = core.sched_cfg.wait_timeout_ms;
+            let timeout = if timeout_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(timeout_ms.min(cap_ms)))
             };
-            s.workers = allocated.iter().map(|w| w.id).collect();
-
-            // Two-phase communicator formation (see worker.rs).
-            let mut comm_addrs = Vec::with_capacity(allocated.len());
-            for w in &allocated {
-                match w.call(&WorkerCtl::PrepareSession { session_id: s.id })? {
-                    WorkerReply::SessionReady { comm_addr } => comm_addrs.push(comm_addr),
-                    other => {
-                        return Err(Error::Server(format!("bad PrepareSession reply {other:?}")))
-                    }
+            let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
+            let workers = match setup_session_workers(core, s.id, &ids) {
+                Ok(infos) => infos,
+                Err(SetupFailure::Clean(e)) => {
+                    // Satellite fix: a partially-formed session must hand
+                    // its grant back instead of stranding the workers
+                    // until teardown.
+                    core.alloc.release(s.id, &ids);
+                    return Err(e);
                 }
-            }
-            let peers: Vec<WorkerInfo> = allocated
-                .iter()
-                .zip(&comm_addrs)
-                .map(|(w, addr)| WorkerInfo { id: w.id, data_addr: addr.clone() })
-                .collect();
-            // Collective: send NewSession to all, then read all replies
-            // (mesh formation blocks until every member participates).
-            for (rank, w) in allocated.iter().enumerate() {
-                w.send(&WorkerCtl::NewSession {
-                    session_id: s.id,
-                    rank: rank as u32,
-                    peers: peers.clone(),
-                })?;
-            }
-            collect_ok(&allocated)?;
-
-            let workers = allocated
-                .iter()
-                .map(|w| WorkerInfo { id: w.id, data_addr: w.data_addr.clone() })
-                .collect();
-            info!("driver", "session {} granted workers {:?}", s.id, s.workers);
+                Err(SetupFailure::Quarantined(e, bad)) => {
+                    // Keep unreachable/wedged workers out of the pool
+                    // rather than hand them to the next tenant; release
+                    // the healthy remainder and drop the session's quota
+                    // charge so it can retry.
+                    warnln!(
+                        "driver",
+                        "quarantining workers {bad:?} after failed session setup: {e}"
+                    );
+                    core.alloc.quarantine(s.id, &bad);
+                    let good: Vec<u32> =
+                        ids.iter().copied().filter(|id| !bad.contains(id)).collect();
+                    core.alloc.release(s.id, &good);
+                    return Err(e);
+                }
+            };
+            info!("driver", "session {} granted workers {ids:?}", s.id);
+            *s.workers.lock().unwrap() = ids;
             Ok(DriverMsg::WorkersGranted { workers })
         }
         ClientMsg::RegisterLibrary { name, path } => {
             let s = need_session(session)?;
-            let conns = session_conns(s, state)?;
-            for w in &conns {
-                w.send(&WorkerCtl::RegisterLibrary { name: name.clone(), path: path.clone() })?;
-            }
-            collect_ok(&conns)?;
+            // Worker control streams carry one request/reply pair at a
+            // time per session: serialize against in-flight jobs so
+            // replies cannot cross.
+            let _serial = s.routine_lock.lock().unwrap();
+            let conns = session_conns(s, core)?;
+            broadcast(&conns, &WorkerCtl::RegisterLibrary { name: name.clone(), path })?;
             Ok(DriverMsg::LibraryRegistered { name })
         }
         ClientMsg::CreateMatrix { rows, cols, kind } => {
             let s = need_session(session)?;
-            if s.workers.is_empty() {
-                return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
-            }
             if rows == 0 || cols == 0 {
                 return Err(Error::Shape(format!("cannot create {rows}x{cols} matrix")));
             }
-            let handle = {
-                let mut st = state.lock().unwrap();
-                let h = st.next_handle;
-                st.next_handle += 1;
-                h
-            };
+            let _serial = s.routine_lock.lock().unwrap();
+            let conns = session_conns(s, core)?;
+            let handle = core.alloc_handles(1).start;
             let meta = MatrixMeta {
                 handle,
                 rows,
                 cols,
-                layout: LayoutDesc { kind, owners: s.workers.clone() },
+                layout: LayoutDesc { kind, owners: s.workers.lock().unwrap().clone() },
             };
-            let conns = session_conns(s, state)?;
-            for w in &conns {
-                w.send(&WorkerCtl::AllocMatrix { session_id: s.id, meta: meta.clone() })?;
+            let alloc = WorkerCtl::AllocMatrix { session_id: s.id, meta: meta.clone() };
+            if let Err(e) = broadcast(&conns, &alloc) {
+                // Some workers may have allocated the panel before the
+                // failure; without this rollback the handle is untracked
+                // and those panels leak for the worker's lifetime
+                // (FreeMatrix is idempotent on workers that did not).
+                let _ = broadcast(&conns, &WorkerCtl::FreeMatrix { handle });
+                return Err(e);
             }
-            collect_ok(&conns)?;
-            s.matrices.insert(handle, meta.clone());
+            s.matrices.lock().unwrap().insert(handle, meta.clone());
             Ok(DriverMsg::MatrixCreated { meta })
         }
         ClientMsg::RunRoutine { library, routine, params } => {
+            // Legacy synchronous path — kept for wire compatibility; the
+            // v4 client pipelines through SubmitRoutine/WaitJob instead.
             let s = need_session(session)?;
-            let conns = session_conns(s, state)?;
-            // Validate referenced handles belong to this session.
-            for (_, v) in &params {
-                if let crate::protocol::ParamValue::Matrix(h) = v {
-                    if !s.matrices.contains_key(h) {
-                        return Err(Error::Server(format!(
-                            "matrix handle {h} not owned by session {}",
-                            s.id
-                        )));
-                    }
-                }
-            }
-            let output_handles: Vec<u64> = {
-                let mut st = state.lock().unwrap();
-                let start = st.next_handle;
-                st.next_handle += OUTPUT_HANDLE_BLOCK;
-                (start..start + OUTPUT_HANDLE_BLOCK).collect()
-            };
-            for w in &conns {
-                w.send(&WorkerCtl::RunRoutine {
-                    session_id: s.id,
-                    library: library.clone(),
-                    routine: routine.clone(),
-                    params: params.clone(),
-                    output_handles: output_handles.clone(),
-                })?;
-            }
-            // rank 0 carries the result; all must succeed.
-            let mut result: Option<(Vec<(String, crate::protocol::ParamValue)>, Vec<MatrixMeta>)> =
-                None;
-            let mut first_err: Option<String> = None;
-            for (rank, w) in conns.iter().enumerate() {
-                match w.recv_reply()? {
-                    WorkerReply::Ok => {}
-                    WorkerReply::RoutineDone { outputs, new_matrices } => {
-                        if rank == 0 {
-                            result = Some((outputs, new_matrices));
-                        }
-                    }
-                    WorkerReply::Err { message } => {
-                        warnln!("driver", "worker {} failed {routine}: {message}", w.id);
-                        first_err.get_or_insert(message);
-                    }
-                    other => {
-                        first_err.get_or_insert(format!("unexpected reply {other:?}"));
-                    }
-                }
-            }
-            if let Some(msg) = first_err {
-                return Err(Error::Server(format!("routine {routine} failed: {msg}")));
-            }
-            let (outputs, new_matrices) = result
-                .ok_or_else(|| Error::Server("rank 0 returned no routine result".into()))?;
-            for m in &new_matrices {
-                s.matrices.insert(m.handle, m.clone());
-            }
+            validate_handles(s, &params)?;
+            let output_handles: Vec<u64> = core.alloc_handles(OUTPUT_HANDLE_BLOCK).collect();
+            let (outputs, new_matrices) =
+                execute_routine(core, s, &library, &routine, &params, &output_handles)?;
             Ok(DriverMsg::RoutineResult { outputs, new_matrices })
+        }
+        ClientMsg::SubmitRoutine { library, routine, params } => {
+            let s = need_session(session)?;
+            // Fail fast on bad handles and missing workers so the client
+            // gets the error at submit time, not buried in a job.
+            validate_handles(s, &params)?;
+            session_conns(s, core)?;
+            // Each undelivered job (inflight, or finished but unread)
+            // holds a driver thread and/or a retained result; cap the
+            // backlog so one tenant cannot exhaust the server
+            // (0 = unlimited).
+            let cap = core.sched_cfg.max_jobs_per_session;
+            if cap > 0 && s.jobs.undelivered() >= cap as usize {
+                return Err(Error::Server(format!(
+                    "job backlog full: {} jobs unfinished or unread, \
+                     sched.max_jobs_per_session = {cap}",
+                    s.jobs.undelivered()
+                )));
+            }
+            let job_id = s.jobs.submit(&routine);
+            core.metrics.jobs_inflight.inc();
+            core.metrics.counters.add("jobs_submitted", 1);
+            let output_handles: Vec<u64> = core.alloc_handles(OUTPUT_HANDLE_BLOCK).collect();
+            let (core2, s2) = (core.clone(), s.clone());
+            let spawned = std::thread::Builder::new()
+                .name(format!("job-{}-{job_id}", s.id))
+                .spawn(move || {
+                    run_job(&core2, &s2, job_id, &library, &routine, params, &output_handles)
+                });
+            if let Err(e) = spawned {
+                // The client never learns this job id (we reply Err, not
+                // JobAccepted): drop the entry outright so it cannot sit
+                // undeliverable in the table eating a backlog-cap slot.
+                s.jobs.remove(job_id);
+                core.metrics.jobs_inflight.dec();
+                // No thread will ever consume this job's turnstile slot.
+                retire_turn(s, job_id);
+                return Err(Error::Server(format!("spawn job thread: {e}")));
+            }
+            Ok(DriverMsg::JobAccepted { job_id })
+        }
+        ClientMsg::PollJob { job_id } => {
+            let s = need_session(session)?;
+            let snap = s
+                .jobs
+                .get(job_id)
+                .ok_or_else(|| Error::Server(format!("unknown job {job_id}")))?;
+            Ok(DriverMsg::JobStatus { job_id, state: snap.state })
+        }
+        ClientMsg::WaitJob { job_id, timeout_ms } => {
+            let s = need_session(session)?;
+            // Bound the server-side block: clients loop on non-terminal
+            // replies, so this only caps per-poll latency.
+            let cap = core.sched_cfg.waitjob_block_ms;
+            let block = if timeout_ms == 0 { cap } else { timeout_ms.min(cap) };
+            let snap = s
+                .jobs
+                .wait(job_id, Duration::from_millis(block))
+                .ok_or_else(|| Error::Server(format!("unknown job {job_id}")))?;
+            Ok(DriverMsg::JobStatus { job_id, state: snap.state })
         }
         ClientMsg::FetchMatrixInfo { handle } => {
             let s = need_session(session)?;
-            let meta = s
-                .matrices
+            let matrices = s.matrices.lock().unwrap();
+            let meta = matrices
                 .get(&handle)
                 .ok_or_else(|| Error::Server(format!("unknown handle {handle}")))?;
             Ok(DriverMsg::MatrixInfo { meta: meta.clone() })
         }
         ClientMsg::ReleaseMatrix { handle } => {
             let s = need_session(session)?;
-            if s.matrices.remove(&handle).is_none() {
+            // Destructive op: let every already-accepted job retire
+            // first — those jobs passed submit-time validation against
+            // this handle and must not have it freed out from under
+            // them by a control-plane barge.
+            drain_jobs(s);
+            let _serial = s.routine_lock.lock().unwrap();
+            if s.matrices.lock().unwrap().remove(&handle).is_none() {
                 return Err(Error::Server(format!("unknown handle {handle}")));
             }
-            let conns = session_conns(s, state)?;
-            for w in &conns {
-                w.send(&WorkerCtl::FreeMatrix { handle })?;
-            }
-            collect_ok(&conns)?;
+            let conns = session_conns(s, core)?;
+            broadcast(&conns, &WorkerCtl::FreeMatrix { handle })?;
             Ok(DriverMsg::Released { handle })
         }
         ClientMsg::Stop => Ok(DriverMsg::Stopped),
-        ClientMsg::ServerStatus => {
-            let st = state.lock().unwrap();
-            Ok(DriverMsg::Status {
-                total_workers: st.workers.len() as u32,
-                free_workers: st.free.len() as u32,
-                sessions: st.active_sessions,
-            })
+        ClientMsg::ServerStatus => Ok(DriverMsg::Status {
+            total_workers: core.alloc.total(),
+            free_workers: core.alloc.free_count(),
+            sessions: core.active_sessions.load(Ordering::SeqCst),
+            queued_sessions: core.alloc.queue_depth(),
+            jobs_inflight: core.metrics.jobs_inflight.get().max(0) as u32,
+        }),
+    }
+}
+
+/// Body of one async job thread.
+fn run_job(
+    core: &DriverCore,
+    s: &SessionShared,
+    job_id: u64,
+    library: &str,
+    routine: &str,
+    params: Params,
+    output_handles: &[u64],
+) {
+    // FIFO turnstile: wait until every earlier-submitted job has run
+    // (job ids are submission-ordered). A closed session short-circuits
+    // the wait — the body bails under the routine lock either way.
+    {
+        let mut turn = s.turn.lock().unwrap();
+        while turn.next != job_id && !s.closed.load(Ordering::SeqCst) {
+            turn = s.turn_cv.wait(turn).unwrap();
+        }
+    }
+    run_job_body(core, s, job_id, library, routine, &params, output_handles);
+    retire_turn(s, job_id);
+}
+
+/// Consume `job_id`'s turnstile slot; called exactly once per assigned
+/// job id (by its thread, or by the submit handler when the spawn itself
+/// fails) so later jobs never stall on a slot nobody will release. Ids
+/// retired out of order (spawn failure before their turn, closed-session
+/// bails) are remembered so `next` can skip them when it reaches them.
+fn retire_turn(s: &SessionShared, job_id: u64) {
+    let mut turn = s.turn.lock().unwrap();
+    if turn.next == job_id {
+        turn.next += 1;
+        loop {
+            let n = turn.next;
+            if !turn.retired.remove(&n) {
+                break;
+            }
+            turn.next += 1;
+        }
+    } else {
+        turn.retired.insert(job_id);
+    }
+    drop(turn);
+    s.turn_cv.notify_all();
+}
+
+fn run_job_body(
+    core: &DriverCore,
+    s: &SessionShared,
+    job_id: u64,
+    library: &str,
+    routine: &str,
+    params: &Params,
+    output_handles: &[u64],
+) {
+    // Jobs report `Running` only once they actually hold the worker
+    // group; until then polls see `Queued` behind the session's earlier
+    // jobs.
+    let _serial = s.routine_lock.lock().unwrap();
+    if s.closed.load(Ordering::SeqCst) || !s.jobs.set_running(job_id) {
+        // Session closed (teardown or poisoned worker group): do not
+        // touch the workers, but make sure the job reaches a terminal
+        // state so a client blocked in WaitJob is released (no-op when
+        // teardown already failed the table wholesale).
+        s.jobs.fail(job_id, "session closed");
+        core.metrics.jobs_inflight.dec();
+        return;
+    }
+    // The gauge drops *before* the terminal state is published: a client
+    // observing its result must never then read a stale inflight count.
+    match execute_routine_locked(core, s, library, routine, params, output_handles) {
+        Ok((outputs, new_matrices)) => {
+            core.metrics.jobs_inflight.dec();
+            s.jobs.complete(job_id, outputs, new_matrices);
+            core.metrics.counters.add("jobs_done", 1);
+        }
+        Err(e) => {
+            debugln!("driver", "job {job_id} ({routine}) failed: {e}");
+            core.metrics.jobs_inflight.dec();
+            s.jobs.fail(job_id, e.to_string());
+            core.metrics.counters.add("jobs_failed", 1);
         }
     }
 }
 
-fn need_session<'a>(session: &'a mut Option<Session>) -> Result<&'a mut Session> {
-    session.as_mut().ok_or_else(|| Error::Protocol("handshake required first".into()))
+fn need_session<'a>(
+    session: &'a mut Option<Arc<SessionShared>>,
+) -> Result<&'a Arc<SessionShared>> {
+    session.as_ref().ok_or_else(|| Error::Protocol("handshake required first".into()))
 }
 
-fn session_conns(s: &Session, state: &Arc<Mutex<DriverState>>) -> Result<Vec<Arc<WorkerConn>>> {
-    if s.workers.is_empty() {
-        return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
+/// Send the same command to every worker, then read one reply from every
+/// worker the send reached; the first failure is reported after all
+/// streams are drained (see `collect_ok`).
+fn broadcast(conns: &[Arc<WorkerConn>], cmd: &WorkerCtl) -> Result<()> {
+    let mut send_err: Option<String> = None;
+    let mut sent = vec![false; conns.len()];
+    for (i, w) in conns.iter().enumerate() {
+        match w.send(cmd) {
+            Ok(()) => sent[i] = true,
+            Err(e) => {
+                send_err.get_or_insert(format!("send to worker {}: {e}", w.id));
+            }
+        }
     }
-    let st = state.lock().unwrap();
-    Ok(s.workers.iter().map(|&id| st.worker(id)).collect())
+    let reached: Vec<Arc<WorkerConn>> = conns
+        .iter()
+        .zip(&sent)
+        .filter(|(_, ok)| **ok)
+        .map(|(w, _)| w.clone())
+        .collect();
+    let collected = collect_ok(&reached);
+    match send_err {
+        Some(m) => Err(Error::Server(m)),
+        None => collected,
+    }
 }
 
+/// Read one reply from every worker, aggregating the first failure —
+/// never aborting early, so no reply is left buffered on a healthy
+/// worker's control stream.
 fn collect_ok(conns: &[Arc<WorkerConn>]) -> Result<()> {
     let mut first_err = None;
     for w in conns {
-        match w.recv_reply()? {
-            WorkerReply::Ok => {}
-            WorkerReply::Err { message } => {
+        match w.recv_reply() {
+            Ok(WorkerReply::Ok) => {}
+            Ok(WorkerReply::Err { message }) => {
                 first_err.get_or_insert(message);
             }
-            other => {
+            Ok(other) => {
                 first_err.get_or_insert(format!("unexpected worker reply {other:?}"));
+            }
+            Err(e) => {
+                first_err.get_or_insert(format!("recv from worker {}: {e}", w.id));
             }
         }
     }

@@ -80,10 +80,11 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     {
         let workers = workers.clone();
         let stop = stop.clone();
+        let sched = cfg.sched.clone();
         std::thread::Builder::new()
             .name("alch-driver".into())
             .spawn(move || {
-                if let Err(e) = run_driver(client_listener, workers, stop) {
+                if let Err(e) = run_driver(client_listener, workers, stop, sched) {
                     crate::errorln!("launcher", "driver exited with error: {e}");
                 }
             })

@@ -165,6 +165,10 @@ fn handle_ctl(
         }
         WorkerCtl::EndSession { session_id } => {
             sessions.remove(&session_id);
+            // Also drop a half-open PrepareSession listener: the driver
+            // sends EndSession when session setup fails partway, and the
+            // bound communicator listener must not leak.
+            pending.remove(&session_id);
             Ok(Some(WorkerReply::Ok))
         }
         WorkerCtl::AllocMatrix { session_id: _, meta } => {

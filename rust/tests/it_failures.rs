@@ -105,7 +105,11 @@ fn protocol_version_mismatch_rejected() {
 fn message_before_handshake_rejected() {
     let srv = start_server(&cfg(1)).unwrap();
     let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
-    frame::write_frame(&mut conn, &ClientMsg::RequestWorkers { count: 1 }.encode()).unwrap();
+    frame::write_frame(
+        &mut conn,
+        &ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }.encode(),
+    )
+    .unwrap();
     let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
     match reply {
         DriverMsg::Err { message } => assert!(message.contains("handshake"), "{message}"),

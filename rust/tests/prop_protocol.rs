@@ -3,8 +3,8 @@
 
 use alchemist::bench_support::prop::{check, int_in};
 use alchemist::protocol::{
-    ClientMsg, DataMsg, DriverMsg, LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params,
-    WireRow, WorkerCtl, WorkerReply,
+    ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta, ParamValue,
+    Params, WireRow, WorkerCtl, WorkerReply,
 };
 use alchemist::workload::Rng;
 
@@ -52,9 +52,13 @@ fn random_rows(rng: &mut Rng) -> Vec<WireRow> {
 #[test]
 fn client_msgs_roundtrip_random() {
     check("protocol: ClientMsg roundtrip", 400, |rng| {
-        let msg = match rng.next_range(8) {
+        let msg = match rng.next_range(11) {
             0 => ClientMsg::Handshake { app_name: random_string(rng, 30), version: rng.next_u64() as u16 },
-            1 => ClientMsg::RequestWorkers { count: rng.next_u64() as u32 },
+            1 => ClientMsg::RequestWorkers {
+                count: rng.next_u64() as u32,
+                wait: rng.next_f64() < 0.5,
+                timeout_ms: rng.next_range(100_000),
+            },
             2 => ClientMsg::RegisterLibrary {
                 name: random_string(rng, 20),
                 path: random_string(rng, 40),
@@ -71,6 +75,13 @@ fn client_msgs_roundtrip_random() {
             },
             5 => ClientMsg::FetchMatrixInfo { handle: rng.next_u64() },
             6 => ClientMsg::ReleaseMatrix { handle: rng.next_u64() },
+            7 => ClientMsg::SubmitRoutine {
+                library: random_string(rng, 15),
+                routine: random_string(rng, 15),
+                params: random_params(rng),
+            },
+            8 => ClientMsg::PollJob { job_id: rng.next_u64() },
+            9 => ClientMsg::WaitJob { job_id: rng.next_u64(), timeout_ms: rng.next_u64() },
             _ => ClientMsg::Stop,
         };
         let back = ClientMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
@@ -84,8 +95,8 @@ fn client_msgs_roundtrip_random() {
 #[test]
 fn driver_msgs_roundtrip_random() {
     check("protocol: DriverMsg roundtrip", 400, |rng| {
-        let msg = match rng.next_range(6) {
-            0 => DriverMsg::HandshakeAck { session_id: rng.next_u64(), version: 3 },
+        let msg = match rng.next_range(8) {
+            0 => DriverMsg::HandshakeAck { session_id: rng.next_u64(), version: 4 },
             1 => DriverMsg::MatrixCreated { meta: random_meta(rng) },
             2 => DriverMsg::RoutineResult {
                 outputs: random_params(rng),
@@ -93,6 +104,19 @@ fn driver_msgs_roundtrip_random() {
             },
             3 => DriverMsg::Released { handle: rng.next_u64() },
             4 => DriverMsg::Err { message: random_string(rng, 60) },
+            5 => DriverMsg::JobAccepted { job_id: rng.next_u64() },
+            6 => DriverMsg::JobStatus {
+                job_id: rng.next_u64(),
+                state: match rng.next_range(4) {
+                    0 => JobState::Queued,
+                    1 => JobState::Running,
+                    2 => JobState::Done {
+                        outputs: random_params(rng),
+                        new_matrices: (0..rng.next_range(3)).map(|_| random_meta(rng)).collect(),
+                    },
+                    _ => JobState::Failed { message: random_string(rng, 40) },
+                },
+            },
             _ => DriverMsg::Stopped,
         };
         let back = DriverMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;

@@ -1,0 +1,136 @@
+//! Property tests on the `sched` allocator: under random acquire/release
+//! interleavings — sequential or truly concurrent — no worker is ever
+//! granted to two sessions at once, and accounting never drifts.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use alchemist::bench_support::prop::{check, int_in};
+use alchemist::metrics::SchedMetrics;
+use alchemist::sched::{AllocPolicy, PoolAllocator};
+
+fn policy(timeout_ms: u64) -> AllocPolicy {
+    AllocPolicy {
+        max_workers_per_session: 0,
+        default_wait_timeout: Duration::from_millis(timeout_ms),
+    }
+}
+
+/// Random sequential acquire/release traffic: every grant is disjoint
+/// from every outstanding grant, and free + granted == pool size at all
+/// times.
+#[test]
+fn allocator_never_double_grants_sequential() {
+    check("sched: no double grant (sequential)", 60, |rng| {
+        let pool = int_in(rng, 1, 8) as u32;
+        let alloc = PoolAllocator::new(0..pool, policy(10), Arc::new(SchedMetrics::new()));
+        let mut outstanding: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut next_session = 1u64;
+        for _ in 0..200 {
+            let do_acquire = outstanding.is_empty() || rng.next_f64() < 0.5;
+            if do_acquire {
+                let count = int_in(rng, 1, pool as u64) as u32;
+                let sid = next_session;
+                next_session += 1;
+                if let Ok(ids) = alloc.acquire(sid, count, false, None) {
+                    if ids.len() != count as usize {
+                        return Err(format!("grant size {} != {count}", ids.len()));
+                    }
+                    let mut seen: HashSet<u32> = HashSet::new();
+                    for held in outstanding.values() {
+                        seen.extend(held.iter().copied());
+                    }
+                    for id in &ids {
+                        if !seen.insert(*id) {
+                            return Err(format!("worker {id} double-granted"));
+                        }
+                    }
+                    outstanding.insert(sid, ids);
+                }
+            } else {
+                let sid = *outstanding
+                    .keys()
+                    .nth(rng.next_range(outstanding.len() as u64) as usize)
+                    .unwrap();
+                let ids = outstanding.remove(&sid).unwrap();
+                alloc.release(sid, &ids);
+            }
+            let granted: usize = outstanding.values().map(|v| v.len()).sum();
+            if alloc.free_count() as usize + granted != pool as usize {
+                return Err(format!(
+                    "pool accounting drift: free {} + granted {granted} != {pool}",
+                    alloc.free_count()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Concurrent hammer: threads acquire with waiting, hold briefly while
+/// asserting global disjointness through a shared ledger, then release.
+#[test]
+fn allocator_never_double_grants_concurrent() {
+    check("sched: no double grant (concurrent)", 8, |rng| {
+        let pool = int_in(rng, 2, 6) as u32;
+        let threads = int_in(rng, 3, 8);
+        let iters = 20;
+        let alloc =
+            Arc::new(PoolAllocator::new(0..pool, policy(10_000), Arc::new(SchedMetrics::new())));
+        let ledger: Arc<Mutex<HashSet<u32>>> = Arc::new(Mutex::new(HashSet::new()));
+        let violations: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let (alloc, ledger, violations) = (alloc.clone(), ledger.clone(), violations.clone());
+            joins.push(std::thread::spawn(move || {
+                for i in 0..iters {
+                    let sid = t * 1000 + i + 1;
+                    let count = 1 + ((t + i) % 2) as u32;
+                    let count = count.min(alloc.total());
+                    let ids = match alloc.acquire(sid, count, true, None) {
+                        Ok(ids) => ids,
+                        Err(e) => {
+                            violations.lock().unwrap().push(format!("acquire failed: {e}"));
+                            return;
+                        }
+                    };
+                    {
+                        let mut held = ledger.lock().unwrap();
+                        for id in &ids {
+                            if !held.insert(*id) {
+                                violations
+                                    .lock()
+                                    .unwrap()
+                                    .push(format!("worker {id} granted twice"));
+                            }
+                        }
+                    }
+                    std::thread::yield_now();
+                    {
+                        let mut held = ledger.lock().unwrap();
+                        for id in &ids {
+                            held.remove(id);
+                        }
+                    }
+                    alloc.release(sid, &ids);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| "worker thread panicked".to_string())?;
+        }
+        let v = violations.lock().unwrap();
+        if !v.is_empty() {
+            return Err(v.join("; "));
+        }
+        if alloc.free_count() != pool {
+            return Err(format!("pool did not refill: {} != {pool}", alloc.free_count()));
+        }
+        if alloc.queue_depth() != 0 {
+            return Err("queue not drained".into());
+        }
+        Ok(())
+    });
+}
