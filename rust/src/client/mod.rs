@@ -14,11 +14,12 @@ use std::net::TcpStream;
 use std::sync::Mutex;
 
 
+use crate::config::TransferConfig;
 use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
-    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
-    WorkerInfo, PROTOCOL_VERSION,
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params, WorkerInfo,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION,
 };
 use crate::{Error, Result};
 
@@ -146,9 +147,13 @@ pub struct AlchemistContext {
     workers: Vec<WorkerInfo>,
     /// Rows per data-plane frame (paper behaviour = 1; see ablate_framing).
     pub batch_rows: usize,
+    /// Data-plane pipeline knobs (`[transfer]` config section).
+    pub transfer: TransferConfig,
     /// Cumulative send/compute/receive phase times.
     pub phases: PhaseTimes,
     nodelay: bool,
+    /// Protocol version negotiated at handshake (`min(client, server)`).
+    negotiated: u16,
 }
 
 impl AlchemistContext {
@@ -162,17 +167,46 @@ impl AlchemistContext {
                 .encode(),
         )?;
         let reply = DriverMsg::decode(&frame::read_frame(&mut conn)?)?.into_result()?;
-        let DriverMsg::HandshakeAck { session_id, .. } = reply else {
+        let DriverMsg::HandshakeAck { session_id, version } = reply else {
             return Err(Error::Protocol(format!("unexpected handshake reply {reply:?}")));
         };
+        if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
+            return Err(Error::Protocol(format!(
+                "server negotiated unsupported protocol v{version} \
+                 (we speak v{MIN_PROTOCOL_VERSION}..=v{PROTOCOL_VERSION})"
+            )));
+        }
         Ok(AlchemistContext {
             ctl: Mutex::new(conn),
             session_id,
             workers: vec![],
             batch_rows: 256,
+            transfer: TransferConfig::default(),
             phases: PhaseTimes::new(),
             nodelay: true,
+            negotiated: version,
         })
+    }
+
+    /// Protocol version negotiated with the server at handshake.
+    pub fn protocol_version(&self) -> u16 {
+        self.negotiated
+    }
+
+    /// True once the session speaks the v5 slab data plane.
+    pub fn slab_negotiated(&self) -> bool {
+        self.negotiated >= SLAB_PROTOCOL_VERSION
+    }
+
+    /// Transfer options for this context: config knobs + the negotiated
+    /// wire format (slab frames only once the session speaks v5).
+    fn transfer_opts(&self) -> transfer::TransferOptions {
+        transfer::TransferOptions::new(
+            &self.transfer,
+            self.batch_rows,
+            self.nodelay,
+            self.negotiated >= SLAB_PROTOCOL_VERSION,
+        )
     }
 
     fn call(&self, msg: &ClientMsg) -> Result<DriverMsg> {
@@ -245,14 +279,17 @@ impl AlchemistContext {
     /// Send rows to the owning workers (callable concurrently from many
     /// threads with disjoint row sets — our stand-in for parallel Spark
     /// executors each pushing their partitions). Rows are routed by the
-    /// matrix layout and batched `batch_rows` per frame.
-    pub fn put_rows(
+    /// matrix layout, packed into slab batches, and pipelined through
+    /// per-owner sender threads (see `transfer::push_rows`). Rows may be
+    /// owned (`Vec<f64>`) or borrowed (`&[f64]`) — they are copied into
+    /// the outgoing slab either way.
+    pub fn put_rows<V: AsRef<[f64]>>(
         &self,
         m: &AlMatrix,
-        rows: impl Iterator<Item = (u64, Vec<f64>)>,
+        rows: impl Iterator<Item = (u64, V)>,
     ) -> Result<()> {
         let t = Timer::start();
-        transfer::push_rows(&self.workers, &m.meta, rows, self.batch_rows, self.nodelay)?;
+        transfer::push_rows(&self.workers, &m.meta, rows, &self.transfer_opts())?;
         self.phases.add("send", t.elapsed());
         Ok(())
     }
@@ -283,10 +320,11 @@ impl AlchemistContext {
         Ok(total)
     }
 
-    /// Convenience: send a local dense matrix (single-threaded).
+    /// Convenience: send a local dense matrix (rows borrowed straight out
+    /// of the matrix storage — no per-row staging copies).
     pub fn send_dense(&self, a: &DenseMatrix, kind: LayoutKind) -> Result<AlMatrix> {
         let m = self.create_matrix(a.rows() as u64, a.cols() as u64, kind)?;
-        self.put_rows(&m, (0..a.rows()).map(|i| (i as u64, a.row(i).to_vec())))?;
+        self.put_rows(&m, (0..a.rows()).map(|i| (i as u64, a.row(i))))?;
         self.finish_put(&m)?;
         Ok(m)
     }
@@ -355,54 +393,33 @@ impl AlchemistContext {
     /// explicit AlMatrix -> local conversion of §3.3 ("Only when the user
     /// explicitly converts this object ... will the data be sent").
     /// Fetches from all owner workers in parallel (one thread per worker
-    /// stream — §Perf: the serial fetch was the receive-phase bottleneck).
+    /// stream — §Perf: the serial fetch was the receive-phase bottleneck),
+    /// copying each row straight from the receive slab into the output.
     pub fn fetch_dense(&self, m: &AlMatrix) -> Result<DenseMatrix> {
         let t = Timer::start();
         let cols = m.meta.cols as usize;
-        let mut out = DenseMatrix::zeros(m.meta.rows as usize, cols);
-        let handle = m.meta.handle;
         let rows = m.meta.rows;
-
-        let fetch_one = |data_addr: String| -> Result<Vec<(u64, Vec<f64>)>> {
-            let mut s = TcpStream::connect(&data_addr)?;
-            s.set_nodelay(true)?;
-            frame::write_frame(&mut s, &DataMsg::GetRows { handle, start: 0, end: rows }.encode())?;
-            let mut got = Vec::new();
-            loop {
-                match DataMsg::decode(&frame::read_frame(&mut s)?)? {
-                    DataMsg::RowBatch { rows: batch, .. } => {
-                        for row in batch {
-                            if row.values.len() != cols {
-                                return Err(Error::Shape("fetched row width mismatch".into()));
-                            }
-                            got.push((row.index, row.values));
-                        }
+        let mut out = DenseMatrix::zeros(rows as usize, cols);
+        let seen = {
+            let out = &mut out;
+            transfer::fetch_rows(
+                &self.workers,
+                &m.meta,
+                0,
+                rows,
+                &self.transfer_opts(),
+                move |index, values| {
+                    if index >= rows {
+                        return Err(Error::Server(format!("fetched row {index} out of range")));
                     }
-                    DataMsg::GetDone { .. } => return Ok(got),
-                    DataMsg::Err { message } => return Err(Error::Server(message)),
-                    other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
-                }
-            }
+                    if values.len() != cols {
+                        return Err(Error::Shape("fetched row width mismatch".into()));
+                    }
+                    out.row_mut(index as usize).copy_from_slice(values);
+                    Ok(())
+                },
+            )?
         };
-
-        let mut seen = 0u64;
-        let results: Vec<Result<Vec<(u64, Vec<f64>)>>> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for &id in &m.meta.layout.owners {
-                let addr = self.worker_info(id).map(|w| w.data_addr.clone());
-                handles.push(scope.spawn(move || fetch_one(addr?)));
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(Error::Server("fetch panicked".into()))))
-                .collect()
-        });
-        for r in results {
-            for (index, values) in r? {
-                out.row_mut(index as usize).copy_from_slice(&values);
-                seen += 1;
-            }
-        }
         self.phases.add("receive", t.elapsed());
         if seen != m.meta.rows {
             return Err(Error::Server(format!("fetched {seen}/{} rows", m.meta.rows)));

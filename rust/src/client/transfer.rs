@@ -3,119 +3,393 @@
 //! Spark executor pushes its own partitions to the Alchemist workers
 //! directly, so the routing/batching logic must be callable from any
 //! thread holding only the worker address table and the matrix metadata.
+//!
+//! Since protocol v5 this is a pipelined, slab-oriented path:
+//!
+//! * the routing thread packs rows into per-owner slab batches (one index
+//!   array + one contiguous value slab, no per-row allocations);
+//! * full batches flow through bounded channels to sender threads, so
+//!   routing/encode overlaps socket I/O across all owners (backpressure
+//!   stalls are recorded per owner in [`TransferMetrics`]);
+//! * each owner's frames go through exactly one thread and one
+//!   connection, preserving the per-connection ordering the `PutDone`
+//!   barrier relies on;
+//! * fetches run one thread per owner, merged through a mutex-protected
+//!   sink that borrows each row straight out of the decoded slab.
 
+use std::collections::HashMap;
 use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Mutex;
 
+use crate::config::TransferConfig;
 use crate::elemental::Layout;
-use crate::protocol::{frame, DataMsg, MatrixMeta, WireRow, WorkerInfo};
+use crate::metrics::{transfer_metrics, Timer, TransferMetrics};
+use crate::protocol::{frame, DataMsg, MatrixMeta, WireRow, WorkerInfo, Writer};
 use crate::{Error, Result};
 
-/// Route and push a set of rows to the owning Alchemist workers.
-/// `workers` must contain an entry for every owner id in `meta`.
-/// Returns (rows_sent, frames_sent).
-pub fn push_rows(
-    workers: &[WorkerInfo],
-    meta: &MatrixMeta,
-    rows: impl Iterator<Item = (u64, Vec<f64>)>,
-    batch_rows: usize,
-    nodelay: bool,
-) -> Result<(u64, u64)> {
-    let layout = Layout::from_desc(&meta.layout, meta.rows)?;
-    let owners = &meta.layout.owners;
-    let mut conns: Vec<Option<TcpStream>> = (0..owners.len()).map(|_| None).collect();
-    let mut batches: Vec<Vec<WireRow>> = (0..owners.len()).map(|_| Vec::new()).collect();
-    let mut rows_sent = 0u64;
-    let mut frames_sent = 0u64;
+/// Per-call tuning for the transfer helpers. Build one from the
+/// `[transfer]` config section via [`TransferOptions::new`], or start from
+/// `Default` (config defaults, 256 rows/frame, nodelay, slab wire format).
+#[derive(Debug, Clone)]
+pub struct TransferOptions {
+    /// Rows per data-plane frame (paper behaviour = 1; see ablate_framing).
+    pub batch_rows: usize,
+    /// TCP_NODELAY on the data-plane sockets (both push and fetch).
+    pub nodelay: bool,
+    /// Sender threads for `push_rows`; owners are multiplexed round-robin
+    /// across them.
+    pub sender_threads: usize,
+    /// Target value bytes per frame; a batch flushes at this size even if
+    /// `batch_rows` hasn't been reached.
+    pub slab_bytes: usize,
+    /// Bounded batches-in-flight per sender thread before the router
+    /// blocks.
+    pub channel_depth: usize,
+    /// Use the v5 slab wire format. `false` keeps the v4 per-row
+    /// `PutRows`/`RowBatch` frames for sessions negotiated at v4.
+    pub use_slab: bool,
+}
 
-    let flush = |conns: &mut Vec<Option<TcpStream>>,
-                     batch: Vec<WireRow>,
-                     slot: usize|
-     -> Result<u64> {
-        if batch.is_empty() {
-            return Ok(0);
+impl TransferOptions {
+    pub fn new(cfg: &TransferConfig, batch_rows: usize, nodelay: bool, use_slab: bool) -> Self {
+        TransferOptions {
+            batch_rows,
+            nodelay,
+            sender_threads: cfg.sender_threads.max(1) as usize,
+            slab_bytes: cfg.slab_bytes as usize,
+            channel_depth: cfg.channel_depth.max(1) as usize,
+            use_slab,
         }
-        if conns[slot].is_none() {
-            let info = workers
-                .iter()
-                .find(|w| w.id == owners[slot])
-                .ok_or_else(|| Error::Server(format!("no address for worker {}", owners[slot])))?;
-            let s = TcpStream::connect(&info.data_addr)?;
-            if nodelay {
+    }
+}
+
+impl Default for TransferOptions {
+    fn default() -> Self {
+        TransferOptions::new(&TransferConfig::default(), 256, true, true)
+    }
+}
+
+/// One routed batch in flight between the router and a sender thread:
+/// `indices[i]`'s row lives at `values[i*cols .. (i+1)*cols]`.
+struct RouteBatch {
+    slot: usize,
+    indices: Vec<u64>,
+    values: Vec<f64>,
+}
+
+impl RouteBatch {
+    fn empty(slot: usize) -> RouteBatch {
+        RouteBatch { slot, indices: Vec::new(), values: Vec::new() }
+    }
+}
+
+/// Resolve the data-plane address of every owner slot up front (one
+/// hash-map build instead of a linear `workers` scan per flush).
+fn resolve_owner_addrs(workers: &[WorkerInfo], owners: &[u32]) -> Result<Vec<String>> {
+    let by_id: HashMap<u32, &WorkerInfo> = workers.iter().map(|w| (w.id, w)).collect();
+    owners
+        .iter()
+        .map(|id| {
+            by_id
+                .get(id)
+                .map(|w| w.data_addr.clone())
+                .ok_or_else(|| Error::Server(format!("no address for worker {id}")))
+        })
+        .collect()
+}
+
+fn pipeline_closed() -> Error {
+    Error::Server("transfer pipeline closed early (sender failed)".into())
+}
+
+/// Hand a full batch to its owner's sender thread, blocking (and timing
+/// the stall) when that owner's pipeline is saturated.
+fn dispatch(
+    txs: &[mpsc::SyncSender<RouteBatch>],
+    owners: &[u32],
+    metrics: &TransferMetrics,
+    batch: RouteBatch,
+) -> Result<()> {
+    let owner = owners[batch.slot];
+    let tx = &txs[batch.slot % txs.len()];
+    match tx.try_send(batch) {
+        Ok(()) => Ok(()),
+        Err(mpsc::TrySendError::Full(batch)) => {
+            let t = Timer::start();
+            let r = tx.send(batch).map_err(|_| pipeline_closed());
+            metrics.phases.add(&format!("stall_w{owner}"), t.elapsed());
+            r
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => Err(pipeline_closed()),
+    }
+}
+
+/// Rebuild per-row `WireRow`s from a slab batch (the v4 compat path).
+fn slab_to_rows(indices: Vec<u64>, values: Vec<f64>, cols: usize) -> Vec<WireRow> {
+    indices
+        .into_iter()
+        .enumerate()
+        .map(|(i, index)| WireRow { index, values: values[i * cols..(i + 1) * cols].to_vec() })
+        .collect()
+}
+
+/// One sender thread: drains its bounded channel, lazily opening one
+/// connection (and one reusable encode buffer) per owner slot it serves,
+/// then runs the per-connection `PutDone` barrier when the channel closes.
+///
+/// The barrier matters: a worker processes frames on one connection in
+/// order, so acking a `PutDone` here guarantees every row this call sent
+/// has been stored before `push_rows` returns. Without it, a subsequent
+/// `finish_put` on a *fresh* connection could overtake in-flight rows
+/// (TCP orders within, not across, connections).
+fn run_sender(
+    rx: mpsc::Receiver<RouteBatch>,
+    slot_addrs: &[String],
+    handle: u64,
+    cols: u32,
+    opts: &TransferOptions,
+) -> Result<u64> {
+    let mut conns: HashMap<usize, TcpStream> = HashMap::new();
+    let mut wbuf = Writer::new();
+    let mut frames = 0u64;
+    let mut bytes = 0u64;
+    while let Ok(batch) = rx.recv() {
+        let slot = batch.slot;
+        if !conns.contains_key(&slot) {
+            let s = TcpStream::connect(&slot_addrs[slot])?;
+            if opts.nodelay {
                 s.set_nodelay(true)?;
             }
-            conns[slot] = Some(s);
+            conns.insert(slot, s);
         }
-        let msg = DataMsg::PutRows { handle: meta.handle, rows: batch };
-        frame::write_frame(conns[slot].as_mut().unwrap(), &msg.encode())?;
-        Ok(1)
-    };
-
-    for (index, values) in rows {
-        if index >= meta.rows {
-            return Err(Error::Shape(format!("row {index} out of range ({} rows)", meta.rows)));
-        }
-        let slot = layout.owner_slot(index) as usize;
-        batches[slot].push(WireRow { index, values });
-        rows_sent += 1;
-        if batches[slot].len() >= batch_rows.max(1) {
-            let b = std::mem::take(&mut batches[slot]);
-            frames_sent += flush(&mut conns, b, slot)?;
-        }
+        let conn = conns.get_mut(&slot).unwrap();
+        let msg = if opts.use_slab {
+            DataMsg::PutSlab { handle, indices: batch.indices, cols, values: batch.values }
+        } else {
+            DataMsg::PutRows {
+                handle,
+                rows: slab_to_rows(batch.indices, batch.values, cols as usize),
+            }
+        };
+        bytes += frame::write_frame_with(conn, &mut wbuf, |w| msg.encode_into(w))? as u64;
+        frames += 1;
     }
-    for slot in 0..owners.len() {
-        let b = std::mem::take(&mut batches[slot]);
-        frames_sent += flush(&mut conns, b, slot)?;
-    }
-    // Per-connection completion barrier: a worker processes frames on one
-    // connection in order, so acking a PutDone here guarantees every row
-    // this call sent has been stored before we return. Without this, a
-    // subsequent `finish_put` on a *fresh* connection could overtake
-    // in-flight rows (TCP orders within, not across, connections).
-    for conn in conns.iter_mut().flatten() {
-        frame::write_frame(conn, &DataMsg::PutDone { handle: meta.handle }.encode())?;
+    for conn in conns.values_mut() {
+        let done = DataMsg::PutDone { handle };
+        frame::write_frame_with(conn, &mut wbuf, |w| done.encode_into(w))?;
         match DataMsg::decode(&frame::read_frame(conn)?)? {
             DataMsg::PutComplete { .. } => {}
             DataMsg::Err { message } => return Err(Error::Server(message)),
             other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
         }
     }
+    let metrics = transfer_metrics();
+    metrics.counters.add("bytes_sent", bytes);
+    metrics.counters.add("frames_sent", frames);
+    Ok(frames)
+}
+
+/// Route and push a set of rows to the owning Alchemist workers.
+/// `workers` must contain an entry for every owner id in `meta`, and each
+/// row must be exactly `meta.cols` wide (validated before it is shipped).
+/// Callable concurrently from many threads with disjoint row sets.
+/// Returns (rows_sent, frames_sent).
+pub fn push_rows<V: AsRef<[f64]>>(
+    workers: &[WorkerInfo],
+    meta: &MatrixMeta,
+    rows: impl Iterator<Item = (u64, V)>,
+    opts: &TransferOptions,
+) -> Result<(u64, u64)> {
+    let layout = Layout::from_desc(&meta.layout, meta.rows)?;
+    let owners = &meta.layout.owners;
+    let cols = meta.cols as usize;
+    let slot_addrs = resolve_owner_addrs(workers, owners)?;
+
+    let threads = opts.sender_threads.max(1).min(owners.len().max(1));
+    let batch_rows = opts.batch_rows.max(1);
+    // flush a batch once its value slab reaches slab_bytes (but always
+    // accept at least one row per batch, however wide)
+    let value_cap = (opts.slab_bytes / 8).max(cols.max(1));
+
+    let metrics = transfer_metrics();
+    let mut rows_sent = 0u64;
+
+    let frames_sent = std::thread::scope(|scope| -> Result<u64> {
+        let mut txs: Vec<mpsc::SyncSender<RouteBatch>> = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::sync_channel::<RouteBatch>(opts.channel_depth.max(1));
+            txs.push(tx);
+            let slot_addrs = &slot_addrs;
+            handles.push(
+                scope.spawn(move || run_sender(rx, slot_addrs, meta.handle, cols as u32, opts)),
+            );
+        }
+
+        let mut pending: Vec<RouteBatch> = (0..owners.len()).map(RouteBatch::empty).collect();
+        let mut route_err: Option<Error> = None;
+        for (index, values) in rows {
+            let values = values.as_ref();
+            if index >= meta.rows {
+                route_err = Some(Error::Shape(format!(
+                    "row {index} out of range ({} rows)",
+                    meta.rows
+                )));
+                break;
+            }
+            if values.len() != cols {
+                route_err = Some(Error::Shape(format!(
+                    "row {index} has {} values, matrix has {cols} cols",
+                    values.len()
+                )));
+                break;
+            }
+            let slot = layout.owner_slot(index) as usize;
+            let b = &mut pending[slot];
+            b.indices.push(index);
+            b.values.extend_from_slice(values);
+            rows_sent += 1;
+            if b.indices.len() >= batch_rows || b.values.len() >= value_cap {
+                let full = std::mem::replace(b, RouteBatch::empty(slot));
+                if let Err(e) = dispatch(&txs, owners, metrics, full) {
+                    route_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if route_err.is_none() {
+            for slot in 0..owners.len() {
+                let b = std::mem::replace(&mut pending[slot], RouteBatch::empty(slot));
+                if b.indices.is_empty() {
+                    continue;
+                }
+                if let Err(e) = dispatch(&txs, owners, metrics, b) {
+                    route_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // close the channels so senders drain and run their PutDone barrier
+        drop(txs);
+
+        let mut frames = 0u64;
+        let mut sender_err: Option<Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(f)) => frames += f,
+                Ok(Err(e)) => sender_err = sender_err.or(Some(e)),
+                Err(_) => {
+                    sender_err =
+                        sender_err.or_else(|| Some(Error::Server("sender thread panicked".into())))
+                }
+            }
+        }
+        // a sender failure is the root cause of any routing-side
+        // disconnect error, so it wins
+        match sender_err.or(route_err) {
+            Some(e) => Err(e),
+            None => Ok(frames),
+        }
+    })?;
+
+    metrics.counters.add("rows_sent", rows_sent);
     Ok((rows_sent, frames_sent))
 }
 
+/// Fetch one owner's rows, feeding each decoded row (borrowed straight
+/// from the frame's slab) to the shared sink.
+fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
+    addr: &str,
+    meta: &MatrixMeta,
+    start: u64,
+    end: u64,
+    opts: &TransferOptions,
+    sink: &Mutex<F>,
+) -> Result<u64> {
+    let mut s = TcpStream::connect(addr)?;
+    if opts.nodelay {
+        s.set_nodelay(true)?;
+    }
+    let handle = meta.handle;
+    let req = if opts.use_slab {
+        DataMsg::GetRowsSlab { handle, start, end }
+    } else {
+        DataMsg::GetRows { handle, start, end }
+    };
+    frame::write_frame(&mut s, &req.encode())?;
+    let mut buf = Vec::new();
+    let mut seen = 0u64;
+    let mut frames = 0u64;
+    let mut bytes = 0u64;
+    loop {
+        let n = frame::read_frame_into(&mut s, &mut buf)?;
+        frames += 1;
+        bytes += n as u64 + 4; // + header, mirroring the send-side count
+        match DataMsg::decode(&buf)? {
+            DataMsg::SlabBatch { indices, cols, values, .. } => {
+                let cols = cols as usize;
+                let mut guard = sink.lock().unwrap();
+                let f = &mut *guard;
+                for (i, &index) in indices.iter().enumerate() {
+                    f(index, &values[i * cols..(i + 1) * cols])?;
+                    seen += 1;
+                }
+            }
+            DataMsg::RowBatch { rows, .. } => {
+                let mut guard = sink.lock().unwrap();
+                let f = &mut *guard;
+                for row in rows {
+                    f(row.index, &row.values)?;
+                    seen += 1;
+                }
+            }
+            DataMsg::GetDone { .. } => break,
+            DataMsg::Err { message } => return Err(Error::Server(message)),
+            other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+    let metrics = transfer_metrics();
+    metrics.counters.add("bytes_recv", bytes);
+    metrics.counters.add("frames_recv", frames);
+    Ok(seen)
+}
+
 /// Fetch rows `[start, end)` of an Alchemist matrix, calling `sink` for
-/// each row received (rows arrive per-owner, unordered across owners).
-pub fn fetch_rows(
+/// each row received. All owners are fetched in parallel (one thread per
+/// owner stream) and merged through a mutex around the sink, so rows
+/// arrive unordered across owners; each row's values are borrowed from
+/// the receive slab (copy out if you need to keep them).
+pub fn fetch_rows<F>(
     workers: &[WorkerInfo],
     meta: &MatrixMeta,
     start: u64,
     end: u64,
-    mut sink: impl FnMut(u64, Vec<f64>) -> Result<()>,
-) -> Result<u64> {
-    let mut seen = 0u64;
-    for &id in &meta.layout.owners {
-        let info = workers
-            .iter()
-            .find(|w| w.id == id)
-            .ok_or_else(|| Error::Server(format!("no address for worker {id}")))?;
-        let mut s = TcpStream::connect(&info.data_addr)?;
-        s.set_nodelay(true)?;
-        frame::write_frame(
-            &mut s,
-            &DataMsg::GetRows { handle: meta.handle, start, end }.encode(),
-        )?;
-        loop {
-            match DataMsg::decode(&frame::read_frame(&mut s)?)? {
-                DataMsg::RowBatch { rows, .. } => {
-                    for row in rows {
-                        sink(row.index, row.values)?;
-                        seen += 1;
-                    }
-                }
-                DataMsg::GetDone { .. } => break,
-                DataMsg::Err { message } => return Err(Error::Server(message)),
-                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
-            }
+    opts: &TransferOptions,
+    sink: F,
+) -> Result<u64>
+where
+    F: FnMut(u64, &[f64]) -> Result<()> + Send,
+{
+    let slot_addrs = resolve_owner_addrs(workers, &meta.layout.owners)?;
+    let sink = Mutex::new(sink);
+    let results: Vec<Result<u64>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(slot_addrs.len());
+        for addr in &slot_addrs {
+            let sink = &sink;
+            handles.push(scope.spawn(move || fetch_one(addr, meta, start, end, opts, sink)));
         }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| Err(Error::Server("fetch thread panicked".into())))
+            })
+            .collect()
+    });
+    let mut seen = 0u64;
+    for r in results {
+        seen += r?;
     }
+    transfer_metrics().counters.add("rows_recv", seen);
     Ok(seen)
 }

@@ -48,6 +48,31 @@ impl Default for ServerConfig {
     }
 }
 
+/// Data-plane transfer knobs (the client-side per-owner sender pipeline;
+/// see `client/transfer.rs` and DESIGN.md §Data plane).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferConfig {
+    /// Sender threads per `push_rows` call. Owners are multiplexed
+    /// round-robin across the threads when a matrix has more owners than
+    /// threads; each owner's frames always go through exactly one thread
+    /// (and one connection), preserving per-connection frame order.
+    pub sender_threads: u32,
+    /// Target payload bytes per data-plane frame: a routed batch flushes
+    /// when it reaches this many value bytes or `batch_rows` rows,
+    /// whichever comes first.
+    pub slab_bytes: u32,
+    /// Bounded depth of each sender pipeline channel — batches in flight
+    /// per sender thread before the routing thread blocks (backpressure;
+    /// stall time is recorded in `TransferMetrics`).
+    pub channel_depth: u32,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig { sender_threads: 4, slab_bytes: 1 << 20, channel_depth: 4 }
+    }
+}
+
 /// Sparklet (the Spark substitute) knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparkletConfig {
@@ -132,6 +157,7 @@ impl Default for BenchConfig {
 pub struct Config {
     pub server: ServerConfig,
     pub sched: SchedConfig,
+    pub transfer: TransferConfig,
     pub sparklet: SparkletConfig,
     pub bench: BenchConfig,
 }
@@ -202,6 +228,9 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sched.max_jobs_per_session" => cfg.sched.max_jobs_per_session = parse(key, val)?,
         "sched.wait_timeout_ms" => cfg.sched.wait_timeout_ms = parse(key, val)?,
         "sched.waitjob_block_ms" => cfg.sched.waitjob_block_ms = parse(key, val)?,
+        "transfer.sender_threads" => cfg.transfer.sender_threads = parse(key, val)?,
+        "transfer.slab_bytes" => cfg.transfer.slab_bytes = parse(key, val)?,
+        "transfer.channel_depth" => cfg.transfer.channel_depth = parse(key, val)?,
         "sparklet.executors" => cfg.sparklet.executors = parse(key, val)?,
         "sparklet.default_parallelism" => cfg.sparklet.default_parallelism = parse(key, val)?,
         "sparklet.executor_mem_mb" => cfg.sparklet.executor_mem_mb = parse(key, val)?,
@@ -268,6 +297,24 @@ impl Config {
         if self.sched.wait_timeout_ms == 0 {
             return Err(Error::Config("sched.wait_timeout_ms must be >= 1".into()));
         }
+        if self.transfer.sender_threads == 0 {
+            return Err(Error::Config("transfer.sender_threads must be >= 1".into()));
+        }
+        if self.transfer.channel_depth == 0 {
+            return Err(Error::Config("transfer.channel_depth must be >= 1".into()));
+        }
+        if self.transfer.slab_bytes < 64 {
+            return Err(Error::Config("transfer.slab_bytes must be >= 64".into()));
+        }
+        // Leave generous headroom under the frame cap for the index
+        // array + message header, so a validated config can never produce
+        // a "frame too large" error mid-transfer.
+        if self.transfer.slab_bytes as usize > crate::protocol::MAX_FRAME_BYTES / 2 {
+            return Err(Error::Config(format!(
+                "transfer.slab_bytes must be <= {} (half the frame cap)",
+                crate::protocol::MAX_FRAME_BYTES / 2
+            )));
+        }
         Ok(())
     }
 }
@@ -322,6 +369,27 @@ scale = 0.5
         assert_eq!(cfg.sched.wait_timeout_ms, 500);
         assert_eq!(cfg.sched.waitjob_block_ms, 100);
         cfg.sched.waitjob_block_ms = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transfer_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&[
+            "transfer.sender_threads=8",
+            "transfer.slab_bytes=65536",
+            "transfer.channel_depth=2",
+        ])
+        .unwrap();
+        assert_eq!(cfg.transfer.sender_threads, 8);
+        assert_eq!(cfg.transfer.slab_bytes, 65536);
+        assert_eq!(cfg.transfer.channel_depth, 2);
+        cfg.transfer.sender_threads = 0;
+        assert!(cfg.validate().is_err());
+        cfg.transfer.sender_threads = 1;
+        cfg.transfer.slab_bytes = 8;
+        assert!(cfg.validate().is_err());
+        cfg.transfer.slab_bytes = u32::MAX; // above the frame-cap headroom
         assert!(cfg.validate().is_err());
     }
 

@@ -25,17 +25,22 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
             c.shape()
         )));
     }
+    if n == 0 {
+        return Ok(());
+    }
     let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let row_panels: Vec<usize> = (0..m).step_by(MC).collect();
     if threads <= 1 || row_panels.len() <= 1 {
+        let cd = c.data_mut();
         for &i0 in &row_panels {
-            gemm_row_panel(a, b, c, i0, (i0 + MC).min(m));
+            gemm_row_panel(a, b, cd, n, 0, i0, (i0 + MC).min(m));
         }
         return Ok(());
     }
 
-    // Partition C's rows across threads; each thread owns disjoint rows of
-    // C, so the unsafe split is race-free.
+    // Partition C's rows across threads; each thread owns a disjoint
+    // row slab of C and updates it in place (no staging copy of C in
+    // either direction — the split already guarantees race freedom).
     let c_cols = n;
     let c_data = c.data_mut();
     std::thread::scope(|scope| {
@@ -49,15 +54,12 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
             rest = tail;
             let i0 = start;
             handles.push(scope.spawn(move || {
-                let mut local =
-                    DenseMatrix::from_vec(rows_here, c_cols, mine.to_vec()).unwrap();
                 let mut ii = 0;
                 while ii < rows_here {
                     let hi = (ii + MC).min(rows_here);
-                    gemm_row_panel_offset(a, b, &mut local, i0, ii, hi);
+                    gemm_row_panel(a, b, mine, c_cols, i0, i0 + ii, i0 + hi);
                     ii = hi;
                 }
-                mine.copy_from_slice(local.data());
             }));
             start += rows_here;
         }
@@ -68,32 +70,18 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
     Ok(())
 }
 
-/// Serial panel update for rows [i0, i1) of C (C indexed globally).
-fn gemm_row_panel(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, i0: usize, i1: usize) {
-    let k = a.cols();
-    let n = b.cols();
-    let mut kk = 0;
-    while kk < k {
-        let k1 = (kk + KC).min(k);
-        let mut jj = 0;
-        while jj < n {
-            let j1 = (jj + NC).min(n);
-            micro_block(a, b, c, i0, i1, kk, k1, jj, j1, 0);
-            jj = j1;
-        }
-        kk = k1;
-    }
-}
-
-/// Variant where C is a local slab whose row 0 corresponds to global row
-/// `global_i0`, updating local rows [li0, li1).
-fn gemm_row_panel_offset(
+/// Panel update for global rows [gi0, gi1) of C, where `c_slab` is the
+/// row-major storage of C's rows starting at global row `c_row_base`
+/// (the serial path passes the whole matrix with base 0; the threaded
+/// path passes each thread's owned slab with its global offset).
+fn gemm_row_panel(
     a: &DenseMatrix,
     b: &DenseMatrix,
-    c_local: &mut DenseMatrix,
-    global_i0: usize,
-    li0: usize,
-    li1: usize,
+    c_slab: &mut [f64],
+    n_c: usize,
+    c_row_base: usize,
+    gi0: usize,
+    gi1: usize,
 ) {
     let k = a.cols();
     let n = b.cols();
@@ -103,7 +91,7 @@ fn gemm_row_panel_offset(
         let mut jj = 0;
         while jj < n {
             let j1 = (jj + NC).min(n);
-            micro_block(a, b, c_local, global_i0 + li0, global_i0 + li1, kk, k1, jj, j1, global_i0);
+            micro_block(a, b, c_slab, n_c, gi0, gi1, kk, k1, jj, j1, c_row_base);
             jj = j1;
         }
         kk = k1;
@@ -111,12 +99,14 @@ fn gemm_row_panel_offset(
 }
 
 /// Inner kernel: C[gi0..gi1, j0..j1] += A[gi0..gi1, k0..k1] * B[k0..k1, j0..j1]
-/// with C's rows stored starting at global row `c_row_base`.
+/// with C's rows stored in `c_slab` starting at global row `c_row_base`.
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn micro_block(
     a: &DenseMatrix,
     b: &DenseMatrix,
-    c: &mut DenseMatrix,
+    c_slab: &mut [f64],
+    n_c: usize,
     gi0: usize,
     gi1: usize,
     k0: usize,
@@ -125,11 +115,9 @@ fn micro_block(
     j1: usize,
     c_row_base: usize,
 ) {
-    let n_c = c.cols();
-    let cd = c.data_mut();
     for gi in gi0..gi1 {
         let arow = a.row(gi);
-        let crow = &mut cd[(gi - c_row_base) * n_c..(gi - c_row_base + 1) * n_c];
+        let crow = &mut c_slab[(gi - c_row_base) * n_c..(gi - c_row_base + 1) * n_c];
         for kk in k0..k1 {
             let aik = arow[kk];
             if aik == 0.0 {

@@ -145,6 +145,35 @@ impl SchedMetrics {
     }
 }
 
+/// Data-plane transfer observability (client `push_rows`/`fetch_rows` and
+/// the sparklet executors share the same transfer helpers, so one
+/// process-wide sink — see [`transfer_metrics`]).
+#[derive(Debug, Default)]
+pub struct TransferMetrics {
+    /// "rows_sent", "frames_sent", "bytes_sent", "rows_recv",
+    /// "frames_recv", "bytes_recv" — monotonic event counts.
+    pub counters: Counters,
+    /// "stall_w{id}" — cumulative time the routing thread spent blocked
+    /// dispatching a batch bound for worker `id`. Channels are per sender
+    /// *thread*, so when owners outnumber `transfer.sender_threads` the
+    /// stall is attributed to the stalled batch's owner even though the
+    /// queued batches ahead of it may belong to other owners sharing the
+    /// channel.
+    pub phases: PhaseTimes,
+}
+
+impl TransferMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Process-wide [`TransferMetrics`] instance.
+pub fn transfer_metrics() -> &'static TransferMetrics {
+    static METRICS: std::sync::OnceLock<TransferMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(TransferMetrics::new)
+}
+
 /// Monotonic named counters (bytes sent, rows routed, messages, ...).
 #[derive(Debug, Default)]
 pub struct Counters {
@@ -258,6 +287,16 @@ mod tests {
         assert_eq!(m.queue_depth.get(), 1);
         assert_eq!(m.counters.get("grants"), 2);
         assert!(m.phases.get_secs("alloc_wait") > 0.0);
+    }
+
+    #[test]
+    fn transfer_metrics_accumulate() {
+        let m = transfer_metrics();
+        let before = m.counters.get("rows_sent");
+        m.counters.add("rows_sent", 5);
+        m.phases.add("stall_w0", Duration::from_millis(1));
+        assert_eq!(m.counters.get("rows_sent"), before + 5);
+        assert!(m.phases.get_secs("stall_w0") > 0.0);
     }
 
     #[test]

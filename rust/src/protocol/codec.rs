@@ -24,6 +24,24 @@ impl Writer {
         self.buf
     }
 
+    /// Borrow the encoded bytes (single-write framing reads the buffer in
+    /// place instead of consuming the writer).
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Reset for reuse, keeping the allocation — the data-plane sender
+    /// threads keep one `Writer` per connection across frames.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Overwrite 4 already-written bytes at `pos` (length back-patching
+    /// for single-write framing). Panics if `pos + 4` exceeds the buffer.
+    pub fn patch_u32(&mut self, pos: usize, v: u32) {
+        self.buf[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -71,12 +89,34 @@ impl Writer {
     }
 
     /// Bulk f64 slice: length-prefixed, bytes are the IEEE754 LE values.
-    /// This is the data-plane hot path — one memcpy on LE hosts.
+    /// This is the data-plane hot path — a single memcpy of the whole slab
+    /// on little-endian hosts (the in-memory layout *is* the wire layout),
+    /// with a portable per-element fallback elsewhere.
     pub fn put_f64_slice(&mut self, v: &[f64]) {
         self.put_u32(v.len() as u32);
-        self.reserve(v.len() * 8);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(le_slab_bytes(v));
+        #[cfg(not(target_endian = "little"))]
+        {
+            self.reserve(v.len() * 8);
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Bulk u64 slice (slab row-index arrays); same layout rules as
+    /// [`put_f64_slice`].
+    pub fn put_u64_slice(&mut self, v: &[u64]) {
+        self.put_u32(v.len() as u32);
+        #[cfg(target_endian = "little")]
+        self.buf.extend_from_slice(le_slab_bytes(v));
+        #[cfg(not(target_endian = "little"))]
+        {
+            self.reserve(v.len() * 8);
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
         }
     }
 
@@ -84,6 +124,52 @@ impl Writer {
         self.buf.reserve(n);
     }
 }
+
+/// View a u64/f64 slab as its wire bytes (LE hosts only, where the
+/// in-memory layout is the wire layout). Private, and only instantiated
+/// with the two padding-free 8-byte element types.
+#[cfg(target_endian = "little")]
+fn le_slab_bytes<T>(v: &[T]) -> &[u8] {
+    // SAFETY: u64/f64 have no padding and every bit pattern is valid as
+    // bytes; size_of_val gives the exact byte length of the slab.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+/// Define `fn $name(raw: &[u8], out: &mut Vec<$ty>)`: append the wire
+/// bytes of `raw` (LE 8-byte elements) to `out` — one memcpy on LE
+/// hosts, per-element conversion elsewhere. `raw.len()` must be a
+/// multiple of 8 (callers take exact byte counts from the frame). One
+/// macro so the unsafe reserve/copy/set_len sequence exists (and gets
+/// audited) exactly once.
+macro_rules! copy_le_slab {
+    ($name:ident, $ty:ty) => {
+        fn $name(raw: &[u8], out: &mut Vec<$ty>) {
+            debug_assert_eq!(raw.len() % 8, 0);
+            let n = raw.len() / 8;
+            #[cfg(target_endian = "little")]
+            unsafe {
+                // SAFETY: `reserve` guarantees capacity for `n` more
+                // elements; every 8-byte pattern is a valid value of the
+                // (u64/f64) element type; the copy fully initializes the
+                // new elements before `set_len` exposes them.
+                out.reserve(n);
+                let dst = out.as_mut_ptr().add(out.len()).cast::<u8>();
+                std::ptr::copy_nonoverlapping(raw.as_ptr(), dst, raw.len());
+                out.set_len(out.len() + n);
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                out.reserve(n);
+                for c in raw.chunks_exact(8) {
+                    out.push(<$ty>::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+        }
+    };
+}
+
+copy_le_slab!(copy_f64_from_le, f64);
+copy_le_slab!(copy_u64_from_le, u64);
 
 /// Cursor-style decoder over a received frame.
 #[derive(Debug)]
@@ -169,10 +255,36 @@ impl<'a> Reader<'a> {
         let n = self.get_u32()? as usize;
         let raw = self.take(n * 8)?; // errors before any allocation if short
         let mut out = Vec::with_capacity(n);
-        for c in raw.chunks_exact(8) {
-            out.push(f64::from_le_bytes(c.try_into().unwrap()));
-        }
+        copy_f64_from_le(raw, &mut out);
         Ok(out)
+    }
+
+    /// Borrowed hot-path variant of [`get_f64_slice`]: append the decoded
+    /// values to a caller-provided buffer (the worker's data-plane loop
+    /// reuses one slab allocation across frames). Returns the element
+    /// count decoded.
+    pub fn get_f64_slab(&mut self, out: &mut Vec<f64>) -> Result<usize> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?;
+        copy_f64_from_le(raw, out);
+        Ok(n)
+    }
+
+    pub fn get_u64_slice(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        copy_u64_from_le(raw, &mut out);
+        Ok(out)
+    }
+
+    /// Borrowed variant of [`get_u64_slice`] (slab index arrays); appends
+    /// to `out` and returns the element count decoded.
+    pub fn get_u64_slice_into(&mut self, out: &mut Vec<u64>) -> Result<usize> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?;
+        copy_u64_from_le(raw, out);
+        Ok(n)
     }
 }
 
@@ -224,6 +336,77 @@ mod tests {
         let mut r = Reader::new(&b);
         assert!(r.get_f64().unwrap().is_nan());
         assert_eq!(r.get_f64().unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn bulk_slices_roundtrip_and_match_per_element_layout() {
+        let vals = [1.5f64, -0.0, f64::NAN, f64::INFINITY, 3.25e300];
+        let idx = [0u64, 7, u64::MAX, 42];
+        let mut w = Writer::new();
+        w.put_u64_slice(&idx);
+        w.put_f64_slice(&vals);
+        let bytes = w.into_bytes();
+
+        // the bulk writers must produce the per-element layout exactly
+        let mut manual = Vec::new();
+        manual.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for v in &idx {
+            manual.extend_from_slice(&v.to_le_bytes());
+        }
+        manual.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+        for v in &vals {
+            manual.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(bytes, manual);
+
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u64_slice().unwrap(), idx);
+        let got = r.get_f64_slice().unwrap();
+        assert_eq!(got.len(), vals.len());
+        for (a, b) in got.iter().zip(vals.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn borrowed_slab_decode_appends_and_reuses() {
+        let mut w = Writer::new();
+        w.put_u64_slice(&[3, 1]);
+        w.put_f64_slice(&[9.0, 8.0, 7.0]);
+        let bytes = w.into_bytes();
+
+        let mut idx = vec![99u64]; // pre-existing contents must survive
+        let mut vals = vec![0.5f64];
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u64_slice_into(&mut idx).unwrap(), 2);
+        assert_eq!(r.get_f64_slab(&mut vals).unwrap(), 3);
+        assert_eq!(idx, vec![99, 3, 1]);
+        assert_eq!(vals, vec![0.5, 9.0, 8.0, 7.0]);
+
+        // short input errors before touching the output buffers
+        let mut short = Writer::new();
+        short.put_u32(10); // claims 10 elements, provides none
+        let b = short.into_bytes();
+        let mut r = Reader::new(&b);
+        let before = vals.clone();
+        assert!(r.get_f64_slab(&mut vals).is_err());
+        assert_eq!(vals, before);
+    }
+
+    #[test]
+    fn writer_reuse_and_patching() {
+        let mut w = Writer::new();
+        w.put_u32(0); // placeholder
+        w.put_str("payload");
+        w.patch_u32(0, (w.len() - 4) as u32);
+        let first = w.as_slice().to_vec();
+        assert_eq!(u32::from_le_bytes(first[0..4].try_into().unwrap()), first.len() as u32 - 4);
+
+        w.clear();
+        assert!(w.is_empty());
+        w.put_u8(7);
+        assert_eq!(w.as_slice(), &[7]);
     }
 
     #[test]

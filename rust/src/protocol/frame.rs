@@ -11,6 +11,7 @@
 
 use std::io::{Read, Write};
 
+use super::codec::Writer;
 use crate::{Error, Result};
 
 /// 256 MiB — far above any legitimate frame (row batches are ~1 MiB).
@@ -24,6 +25,28 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
     Ok(())
+}
+
+/// Hot-path framing: encode a message directly into `buf` (reusing its
+/// allocation) behind a back-patched length word, then emit header+payload
+/// with a single `write_all` — one syscall per frame instead of the two
+/// that [`write_frame`] costs on an unbuffered socket. Returns the total
+/// bytes written (header + payload).
+pub fn write_frame_with<W: Write>(
+    sock: &mut W,
+    buf: &mut Writer,
+    encode: impl FnOnce(&mut Writer),
+) -> Result<usize> {
+    buf.clear();
+    buf.put_u32(0); // length placeholder, patched below
+    encode(buf);
+    let n = buf.len() - 4;
+    if n > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!("frame too large: {n} bytes")));
+    }
+    buf.patch_u32(0, n as u32);
+    sock.write_all(buf.as_slice())?;
+    Ok(buf.len())
 }
 
 /// Read one frame into a fresh buffer.
@@ -89,6 +112,31 @@ mod tests {
         buf.extend_from_slice(&[1, 2, 3]); // only 3 of 10 bytes
         let mut r = Cursor::new(buf);
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn single_write_framing_matches_write_frame() {
+        let mut two_calls = Vec::new();
+        write_frame(&mut two_calls, b"slab payload").unwrap();
+
+        let mut one_call = Vec::new();
+        let mut w = Writer::new();
+        let n = write_frame_with(&mut one_call, &mut w, |w| {
+            w.put_u8(b's');
+            w.put_u8(b'l');
+            for b in b"ab payload" {
+                w.put_u8(*b);
+            }
+        })
+        .unwrap();
+        assert_eq!(one_call, two_calls);
+        assert_eq!(n, one_call.len());
+
+        // the writer is reusable across frames
+        let mut next = Vec::new();
+        write_frame_with(&mut next, &mut w, |w| w.put_u8(9)).unwrap();
+        let mut r = Cursor::new(next);
+        assert_eq!(read_frame(&mut r).unwrap(), vec![9]);
     }
 
     #[test]

@@ -18,7 +18,19 @@ use crate::{Error, Result};
 /// Protocol version for the handshake; bumped on wire changes.
 /// v4: queued admission (`RequestWorkers { wait, timeout_ms }`), async
 /// jobs (`SubmitRoutine`/`PollJob`/`WaitJob`), scheduler status fields.
-pub const PROTOCOL_VERSION: u16 = 4;
+/// v5: slab row-batch data plane (`PutSlab`/`SlabBatch`/`GetRowsSlab`) —
+/// one index array + one contiguous f64 slab per frame instead of a
+/// heap-allocated `WireRow` per row.
+pub const PROTOCOL_VERSION: u16 = 5;
+
+/// Oldest client version the server still speaks. The handshake
+/// *negotiates*: the server acks `min(client, server)` and both sides use
+/// that session version, so v4 clients keep the per-row `PutRows`/
+/// `RowBatch` data plane while v5 clients get slabs.
+pub const MIN_PROTOCOL_VERSION: u16 = 4;
+
+/// First version that understands the slab data-plane messages.
+pub const SLAB_PROTOCOL_VERSION: u16 = 5;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -613,9 +625,26 @@ pub enum DataMsg {
     /// End of a `GetRows` stream.
     GetDone { handle: u64 },
     Err { message: String },
+    /// v5 slab upload: `indices[i]` is the global row index of the row
+    /// stored at `values[i*cols .. (i+1)*cols]`. One frame costs two
+    /// allocations total (index array + value slab) instead of one per
+    /// row, and both arrays decode with a bulk memcpy on LE hosts.
+    PutSlab { handle: u64, indices: Vec<u64>, cols: u32, values: Vec<f64> },
+    /// v5 slab download batch (reply to `GetRowsSlab`); same layout as
+    /// [`DataMsg::PutSlab`].
+    SlabBatch { handle: u64, indices: Vec<u64>, cols: u32, values: Vec<f64> },
+    /// v5 request for this worker's locally-owned rows of `handle` in
+    /// `[start, end)`, streamed back as `SlabBatch` frames. Kept separate
+    /// from `GetRows` so v4 clients (which send tag 3) still get legacy
+    /// `RowBatch` replies.
+    GetRowsSlab { handle: u64, start: u64, end: u64 },
 }
 
 impl DataMsg {
+    /// Wire tag of [`DataMsg::PutSlab`], exposed so the worker's receive
+    /// loop can peek the hot-path tag and decode into reusable buffers
+    /// without going through the allocating [`DataMsg::decode`].
+    pub const TAG_PUT_SLAB: u8 = 7;
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         self.encode_into(&mut w);
@@ -665,6 +694,26 @@ impl DataMsg {
                 w.put_u8(6);
                 w.put_str(message);
             }
+            DataMsg::PutSlab { handle, indices, cols, values } => {
+                w.put_u8(Self::TAG_PUT_SLAB);
+                w.put_u64(*handle);
+                w.put_u64_slice(indices);
+                w.put_u32(*cols);
+                w.put_f64_slice(values);
+            }
+            DataMsg::SlabBatch { handle, indices, cols, values } => {
+                w.put_u8(8);
+                w.put_u64(*handle);
+                w.put_u64_slice(indices);
+                w.put_u32(*cols);
+                w.put_f64_slice(values);
+            }
+            DataMsg::GetRowsSlab { handle, start, end } => {
+                w.put_u8(9);
+                w.put_u64(*handle);
+                w.put_u64(*start);
+                w.put_u64(*end);
+            }
         }
     }
 
@@ -692,6 +741,30 @@ impl DataMsg {
             3 => DataMsg::GetRows { handle: r.get_u64()?, start: r.get_u64()?, end: r.get_u64()? },
             5 => DataMsg::GetDone { handle: r.get_u64()? },
             6 => DataMsg::Err { message: r.get_str()? },
+            7 | 8 => {
+                let handle = r.get_u64()?;
+                let indices = r.get_u64_slice()?;
+                let cols = r.get_u32()?;
+                let values = r.get_f64_slice()?;
+                if indices.len().checked_mul(cols as usize) != Some(values.len()) {
+                    return Err(Error::Protocol(format!(
+                        "slab size mismatch: {} rows x {} cols != {} values",
+                        indices.len(),
+                        cols,
+                        values.len()
+                    )));
+                }
+                if tag == Self::TAG_PUT_SLAB {
+                    DataMsg::PutSlab { handle, indices, cols, values }
+                } else {
+                    DataMsg::SlabBatch { handle, indices, cols, values }
+                }
+            }
+            9 => DataMsg::GetRowsSlab {
+                handle: r.get_u64()?,
+                start: r.get_u64()?,
+                end: r.get_u64()?,
+            },
             t => return Err(Error::Protocol(format!("bad DataMsg tag {t}"))),
         };
         Ok(msg)
@@ -999,10 +1072,32 @@ mod tests {
             DataMsg::RowBatch { handle: 1, rows: vec![WireRow { index: 3, values: vec![0.5] }] },
             DataMsg::GetDone { handle: 1 },
             DataMsg::Err { message: "unknown handle".into() },
+            DataMsg::PutSlab {
+                handle: 2,
+                indices: vec![5, 0, 3],
+                cols: 2,
+                values: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+            DataMsg::PutSlab { handle: 2, indices: vec![9, 4], cols: 0, values: vec![] },
+            DataMsg::SlabBatch { handle: 3, indices: vec![], cols: 7, values: vec![] },
+            DataMsg::SlabBatch { handle: 3, indices: vec![8], cols: 1, values: vec![-0.25] },
+            DataMsg::GetRowsSlab { handle: 2, start: 1, end: 9 },
         ];
         for m in msgs {
             assert_eq!(DataMsg::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn slab_size_mismatch_rejected() {
+        // hand-roll a PutSlab whose value count disagrees with rows x cols
+        let mut w = Writer::new();
+        w.put_u8(DataMsg::TAG_PUT_SLAB);
+        w.put_u64(1);
+        w.put_u64_slice(&[0, 1]); // 2 rows
+        w.put_u32(3); // x 3 cols = 6 values expected
+        w.put_f64_slice(&[1.0, 2.0]); // only 2 provided
+        assert!(DataMsg::decode(&w.into_bytes()).is_err());
     }
 
     #[test]

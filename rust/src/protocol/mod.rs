@@ -16,5 +16,5 @@ pub mod frame;
 pub mod messages;
 
 pub use codec::{Reader, Writer};
-pub use frame::{read_frame, write_frame, MAX_FRAME_BYTES};
+pub use frame::{read_frame, read_frame_into, write_frame, write_frame_with, MAX_FRAME_BYTES};
 pub use messages::*;

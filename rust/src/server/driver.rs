@@ -23,7 +23,7 @@ use crate::config::SchedConfig;
 use crate::metrics::SchedMetrics;
 use crate::protocol::{
     frame, ClientMsg, DriverMsg, LayoutDesc, MatrixMeta, Params, WorkerCtl, WorkerInfo,
-    WorkerReply, PROTOCOL_VERSION,
+    WorkerReply, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
 };
 use crate::sched::{AllocPolicy, JobTable, PoolAllocator};
 use crate::{debugln, info, warnln, Error, Result};
@@ -503,11 +503,16 @@ fn handle_client_msg(
 ) -> Result<DriverMsg> {
     match msg {
         ClientMsg::Handshake { app_name, version } => {
-            if version != PROTOCOL_VERSION {
+            // Negotiate, don't assume: the session runs at
+            // min(client, server), so older (>= v4) clients keep working
+            // with their per-row data plane while v5 clients get slabs.
+            if version < MIN_PROTOCOL_VERSION {
                 return Err(Error::Protocol(format!(
-                    "protocol version mismatch: client {version}, server {PROTOCOL_VERSION}"
+                    "protocol version mismatch: client {version} too old, \
+                     server supports v{MIN_PROTOCOL_VERSION}..=v{PROTOCOL_VERSION}"
                 )));
             }
+            let negotiated = version.min(PROTOCOL_VERSION);
             if session.is_some() {
                 // Replacing the session here would drop the only
                 // cleanup-reachable reference to it, stranding its
@@ -533,7 +538,7 @@ fn handle_client_msg(
                 turn_cv: Condvar::new(),
                 closed: AtomicBool::new(false),
             }));
-            Ok(DriverMsg::HandshakeAck { session_id: id, version: PROTOCOL_VERSION })
+            Ok(DriverMsg::HandshakeAck { session_id: id, version: negotiated })
         }
         ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
             let s = need_session(session)?;

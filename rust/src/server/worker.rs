@@ -19,7 +19,7 @@ use crate::config::ServerConfig;
 use crate::elemental::dist_gemm::{GemmBackend, NativeBackend};
 use crate::elemental::{LocalPanel, MatrixStore};
 use crate::protocol::{
-    frame, DataMsg, MatrixMeta, WireRow, WorkerCtl, WorkerReply,
+    frame, DataMsg, MatrixMeta, Reader, WireRow, WorkerCtl, WorkerReply, Writer,
 };
 use crate::runtime::PjrtBackend;
 use crate::{debugln, errorln, info, Error, Result};
@@ -235,16 +235,84 @@ fn my_slot(meta: &MatrixMeta, my_id: u32) -> Result<u32> {
         })
 }
 
-/// Serve one data-plane connection until EOF.
+/// Target value bytes per `SlabBatch` reply frame (get-side twin of the
+/// client's `transfer.slab_bytes` default).
+const REPLY_SLAB_BYTES: usize = 1 << 20;
+
+/// Decode a `PutSlab` frame into the connection's reusable index/value
+/// buffers (no per-row, per-frame allocations on the receive hot path).
+/// Returns (handle, cols).
+fn decode_put_slab(buf: &[u8], idx: &mut Vec<u64>, vals: &mut Vec<f64>) -> Result<(u64, usize)> {
+    let mut r = Reader::new(buf);
+    let _tag = r.get_u8()?;
+    let handle = r.get_u64()?;
+    idx.clear();
+    let n = r.get_u64_slice_into(idx)?;
+    let cols = r.get_u32()? as usize;
+    vals.clear();
+    let got = r.get_f64_slab(vals)?;
+    if n.checked_mul(cols) != Some(got) {
+        return Err(Error::Protocol(format!(
+            "slab size mismatch: {n} rows x {cols} cols != {got} values"
+        )));
+    }
+    Ok((handle, cols))
+}
+
+/// Serve one data-plane connection until EOF. The receive loop reuses one
+/// frame buffer, one slab index/value buffer pair, and one encode buffer
+/// across all frames on the connection.
 fn serve_data_conn(
     mut conn: TcpStream,
     store: Arc<Mutex<MatrixStore>>,
     batch_rows: usize,
 ) -> Result<()> {
     let mut buf = Vec::new();
+    let mut idx_buf: Vec<u64> = Vec::new();
+    let mut val_buf: Vec<f64> = Vec::new();
+    let mut wbuf = Writer::new();
     loop {
         if frame::read_frame_into(&mut conn, &mut buf).is_err() {
             return Ok(()); // EOF / client closed
+        }
+        // Hot path first: v5 slab uploads bypass the allocating decoder.
+        if buf.first() == Some(&DataMsg::TAG_PUT_SLAB) {
+            let (handle, cols) = match decode_put_slab(&buf, &mut idx_buf, &mut val_buf) {
+                Ok(v) => v,
+                Err(e) => {
+                    let msg = DataMsg::Err { message: e.to_string() };
+                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                    return Err(e);
+                }
+            };
+            // `(error, fatal)`: unknown handle is a per-frame error (the
+            // connection survives, as for legacy PutRows); a misrouted or
+            // mis-sized row poisons the connection like the legacy path.
+            let failure: Option<(Error, bool)> = {
+                let mut guard = store.lock().unwrap();
+                match guard.get_mut(handle) {
+                    Ok(panel) => {
+                        let mut bad = None;
+                        for (i, &r) in idx_buf.iter().enumerate() {
+                            if let Err(e) = panel.set_row(r, &val_buf[i * cols..(i + 1) * cols])
+                            {
+                                bad = Some((e, true));
+                                break;
+                            }
+                        }
+                        bad
+                    }
+                    Err(e) => Some((e, false)),
+                }
+            };
+            if let Some((e, fatal)) = failure {
+                let msg = DataMsg::Err { message: e.to_string() };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                if fatal {
+                    return Err(e);
+                }
+            }
+            continue;
         }
         match DataMsg::decode(&buf)? {
             DataMsg::PutRows { handle, rows } => {
@@ -252,34 +320,76 @@ fn serve_data_conn(
                 let panel = match guard.get_mut(handle) {
                     Ok(p) => p,
                     Err(e) => {
-                        frame::write_frame(
-                            &mut conn,
-                            &DataMsg::Err { message: e.to_string() }.encode(),
-                        )?;
+                        let msg = DataMsg::Err { message: e.to_string() };
+                        frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
                         continue;
                     }
                 };
                 for row in &rows {
                     if let Err(e) = panel.set_row(row.index, &row.values) {
                         drop(guard);
-                        frame::write_frame(
-                            &mut conn,
-                            &DataMsg::Err { message: e.to_string() }.encode(),
-                        )?;
+                        let msg = DataMsg::Err { message: e.to_string() };
+                        frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
                         return Err(e);
                     }
                 }
             }
             DataMsg::PutDone { handle } => {
                 let rows_received = store.lock().unwrap().get(handle)?.rows_received();
-                frame::write_frame(
-                    &mut conn,
-                    &DataMsg::PutComplete { handle, rows_received }.encode(),
-                )?;
+                let msg = DataMsg::PutComplete { handle, rows_received };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+            }
+            DataMsg::GetRowsSlab { handle, start, end } => {
+                // v5 download: pack locally-owned rows in [start, end)
+                // into slab chunks under the lock (one bulk copy per row,
+                // no per-row Vec), then stream frames lock-free.
+                let mut cols = 0usize;
+                let mut chunks: Vec<(Vec<u64>, Vec<f64>)> = Vec::new();
+                let lookup_err = {
+                    let guard = store.lock().unwrap();
+                    match guard.get(handle) {
+                        Ok(panel) => {
+                            cols = panel.meta.cols as usize;
+                            let rows_cap = batch_rows.max(1);
+                            let vals_cap = (REPLY_SLAB_BYTES / 8).max(cols.max(1));
+                            let mut idx: Vec<u64> = Vec::new();
+                            let mut vals: Vec<f64> = Vec::new();
+                            for (r, row) in panel.iter_rows() {
+                                if r < start || r >= end {
+                                    continue;
+                                }
+                                idx.push(r);
+                                vals.extend_from_slice(row);
+                                if idx.len() >= rows_cap || vals.len() >= vals_cap {
+                                    chunks.push((
+                                        std::mem::take(&mut idx),
+                                        std::mem::take(&mut vals),
+                                    ));
+                                }
+                            }
+                            if !idx.is_empty() {
+                                chunks.push((idx, vals));
+                            }
+                            None
+                        }
+                        Err(e) => Some(e.to_string()),
+                    }
+                };
+                if let Some(message) = lookup_err {
+                    let msg = DataMsg::Err { message };
+                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                    continue;
+                }
+                for (indices, values) in chunks {
+                    let msg = DataMsg::SlabBatch { handle, indices, cols: cols as u32, values };
+                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                }
+                let done = DataMsg::GetDone { handle };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| done.encode_into(w))?;
             }
             DataMsg::GetRows { handle, start, end } => {
-                // Stream locally-owned rows in [start, end) in batches.
-                let (rows, layout, slot) = {
+                // Legacy (v4) download: per-row frames for old clients.
+                let rows = {
                     let guard = store.lock().unwrap();
                     let panel = guard.get(handle)?;
                     let mut rows: Vec<WireRow> = Vec::new();
@@ -288,20 +398,18 @@ fn serve_data_conn(
                             rows.push(WireRow { index: r, values: vals.to_vec() });
                         }
                     }
-                    (rows, panel.layout(), panel.slot)
+                    rows
                 };
-                let _ = (layout, slot);
                 for chunk in rows.chunks(batch_rows.max(1)) {
                     let msg = DataMsg::RowBatch { handle, rows: chunk.to_vec() };
-                    frame::write_frame(&mut conn, &msg.encode())?;
+                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
                 }
-                frame::write_frame(&mut conn, &DataMsg::GetDone { handle }.encode())?;
+                let done = DataMsg::GetDone { handle };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| done.encode_into(w))?;
             }
             other => {
-                frame::write_frame(
-                    &mut conn,
-                    &DataMsg::Err { message: format!("unexpected data msg {other:?}") }.encode(),
-                )?;
+                let msg = DataMsg::Err { message: format!("unexpected data msg {other:?}") };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
             }
         }
     }

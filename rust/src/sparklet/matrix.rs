@@ -95,11 +95,15 @@ impl IndexedRowMatrix {
         let workers = ac.workers().to_vec();
         let meta = m.meta.clone();
         let batch_rows = ac.batch_rows as u32;
+        let transfer = ac.transfer.clone();
+        let use_slab = ac.slab_negotiated();
         let t = crate::metrics::Timer::start();
         let sent = sc.aggregate(self.rdd, |_| TaskOp::SendToAlchemist {
             workers: workers.clone(),
             meta: meta.clone(),
             batch_rows,
+            transfer: transfer.clone(),
+            use_slab,
         })?;
         ac.phases.add("send", t.elapsed());
         if sent[0] as u64 != self.rows {
@@ -135,6 +139,7 @@ impl IndexedRowMatrix {
                     meta: meta.clone(),
                     row_start,
                     row_end,
+                    use_slab: ac.slab_negotiated(),
                 }
             })?;
             out

@@ -8,6 +8,7 @@
 //! the shuffle. Everything crosses real sockets in serialized form.
 
 use crate::client::transfer;
+use crate::config::TransferConfig;
 use crate::linalg::{gemm, DenseMatrix};
 use crate::protocol::{MatrixMeta, Reader, WireRow, Writer, WorkerInfo};
 use crate::sparklet::data::{decode_matrix, encode_matrix, Block, PartitionData, TaggedBlock};
@@ -49,14 +50,23 @@ pub enum TaskOp {
     CountItems,
     /// Rows -> Doubles(2): push this partition's rows to Alchemist
     /// workers; returns (rows_sent, frames_sent). The executor-side half
-    /// of the paper's distributed send.
-    SendToAlchemist { workers: Vec<WorkerInfo>, meta: MatrixMeta, batch_rows: u32 },
+    /// of the paper's distributed send. Carries the driver's `[transfer]`
+    /// knobs and the session's negotiated wire format so every executor
+    /// pushes exactly the way the ACI would.
+    SendToAlchemist {
+        workers: Vec<WorkerInfo>,
+        meta: MatrixMeta,
+        batch_rows: u32,
+        transfer: TransferConfig,
+        use_slab: bool,
+    },
     /// () -> Rows: fetch rows [row_start, row_end) from Alchemist.
     FetchFromAlchemist {
         workers: Vec<WorkerInfo>,
         meta: MatrixMeta,
         row_start: u64,
         row_end: u64,
+        use_slab: bool,
     },
     /// Pass-through (collect / repartition).
     Identity,
@@ -300,21 +310,24 @@ pub fn eval(op: &TaskOp, input: Option<&PartitionData>) -> Result<EvalOut> {
             let n = input.map(|d| d.len()).unwrap_or(0);
             Ok(EvalOut::Plain(PartitionData::Doubles(vec![n as f64])))
         }
-        TaskOp::SendToAlchemist { workers, meta, batch_rows } => {
+        TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer: tcfg, use_slab } => {
             let rows = expect_rows(input)?;
+            let opts =
+                transfer::TransferOptions::new(tcfg, *batch_rows as usize, true, *use_slab);
             let (sent, frames) = transfer::push_rows(
                 workers,
                 meta,
-                rows.iter().map(|r| (r.index, r.values.clone())),
-                *batch_rows as usize,
-                true,
+                rows.iter().map(|r| (r.index, r.values.as_slice())),
+                &opts,
             )?;
             Ok(EvalOut::Plain(PartitionData::Doubles(vec![sent as f64, frames as f64])))
         }
-        TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end } => {
+        TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end, use_slab } => {
+            let opts =
+                transfer::TransferOptions { use_slab: *use_slab, ..Default::default() };
             let mut rows = Vec::new();
-            transfer::fetch_rows(workers, meta, *row_start, *row_end, |index, values| {
-                rows.push(WireRow { index, values });
+            transfer::fetch_rows(workers, meta, *row_start, *row_end, &opts, |index, values| {
+                rows.push(WireRow { index, values: values.to_vec() });
                 Ok(())
             })?;
             rows.sort_by_key(|r| r.index);
@@ -429,7 +442,7 @@ impl TaskOp {
             }
             TaskOp::SumSq => w.put_u8(10),
             TaskOp::CountItems => w.put_u8(11),
-            TaskOp::SendToAlchemist { workers, meta, batch_rows } => {
+            TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer, use_slab } => {
                 w.put_u8(12);
                 w.put_u32(workers.len() as u32);
                 for wk in workers {
@@ -437,8 +450,12 @@ impl TaskOp {
                 }
                 meta.encode(w);
                 w.put_u32(*batch_rows);
+                w.put_u32(transfer.sender_threads);
+                w.put_u32(transfer.slab_bytes);
+                w.put_u32(transfer.channel_depth);
+                w.put_bool(*use_slab);
             }
-            TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end } => {
+            TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end, use_slab } => {
                 w.put_u8(13);
                 w.put_u32(workers.len() as u32);
                 for wk in workers {
@@ -447,6 +464,7 @@ impl TaskOp {
                 meta.encode(w);
                 w.put_u64(*row_start);
                 w.put_u64(*row_end);
+                w.put_bool(*use_slab);
             }
             TaskOp::Identity => w.put_u8(14),
         }
@@ -500,6 +518,12 @@ impl TaskOp {
                     workers,
                     meta: MatrixMeta::decode(r)?,
                     batch_rows: r.get_u32()?,
+                    transfer: TransferConfig {
+                        sender_threads: r.get_u32()?,
+                        slab_bytes: r.get_u32()?,
+                        channel_depth: r.get_u32()?,
+                    },
+                    use_slab: r.get_bool()?,
                 }
             }
             13 => {
@@ -513,6 +537,7 @@ impl TaskOp {
                     meta: MatrixMeta::decode(r)?,
                     row_start: r.get_u64()?,
                     row_end: r.get_u64()?,
+                    use_slab: r.get_bool()?,
                 }
             }
             14 => TaskOp::Identity,

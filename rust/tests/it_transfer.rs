@@ -5,9 +5,13 @@
 use alchemist::client::AlchemistContext;
 use alchemist::config::Config;
 use alchemist::linalg::DenseMatrix;
-use alchemist::protocol::LayoutKind;
+use alchemist::metrics::transfer_metrics;
+use alchemist::protocol::{
+    frame, ClientMsg, DataMsg, DriverMsg, LayoutKind, WireRow, MIN_PROTOCOL_VERSION,
+};
 use alchemist::server::{start_server, ServerHandle};
 use alchemist::workload::{random_matrix, random_row};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 fn server(workers: u32) -> ServerHandle {
@@ -128,5 +132,110 @@ fn wrong_width_row_rejected_by_worker() {
         .put_rows(&m, vec![(0u64, vec![1.0])].into_iter())
         .and_then(|_| ac.finish_put(&m).map(|_| ()));
     assert!(r.is_err());
+    srv.shutdown();
+}
+
+#[test]
+fn parallel_pipeline_multi_mib_roundtrip() {
+    // Multi-MiB matrix through the full pipelined slab path (per-owner
+    // sender threads, bounded channels, slab frames) and back intact.
+    let srv = server(3);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_pipeline").unwrap();
+    ac.transfer.sender_threads = 2; // fewer threads than owners: multiplexed
+    ac.transfer.slab_bytes = 256 * 1024;
+    ac.request_workers(3).unwrap();
+
+    let (rows, cols) = (26_000usize, 32usize); // ~6.7 MB
+    let a = DenseMatrix::from_vec(rows, cols, random_matrix(11, rows, cols)).unwrap();
+    let sent_before = transfer_metrics().counters.get("rows_sent");
+    let recv_before = transfer_metrics().counters.get("rows_recv");
+
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let back = ac.fetch_dense(&al).unwrap();
+    assert_eq!(back, a);
+
+    // the transfer metrics saw every row, both directions
+    let m = transfer_metrics();
+    assert!(m.counters.get("rows_sent") >= sent_before + rows as u64);
+    assert!(m.counters.get("rows_recv") >= recv_before + rows as u64);
+    assert!(m.counters.get("bytes_sent") >= (rows * cols * 8) as u64);
+    srv.shutdown();
+}
+
+#[test]
+fn legacy_v4_row_frames_still_interoperate() {
+    // A v4 client speaks per-row PutRows/GetRows directly to the worker
+    // data plane; the server must still accept the upload and serve the
+    // legacy reply stream.
+    let srv = server(1);
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_legacy").unwrap();
+    ac.request_workers(1).unwrap();
+    let m = ac.create_matrix(10, 3, LayoutKind::RowBlock).unwrap();
+    let handle = m.handle();
+
+    let rows: Vec<WireRow> = (0..10u64)
+        .map(|i| WireRow { index: i, values: vec![i as f64, -(i as f64), 0.5] })
+        .collect();
+    let addr = ac.workers()[0].data_addr.clone();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    frame::write_frame(&mut s, &DataMsg::PutRows { handle, rows: rows.clone() }.encode())
+        .unwrap();
+    frame::write_frame(&mut s, &DataMsg::PutDone { handle }.encode()).unwrap();
+    match DataMsg::decode(&frame::read_frame(&mut s).unwrap()).unwrap() {
+        DataMsg::PutComplete { rows_received, .. } => assert_eq!(rows_received, 10),
+        other => panic!("expected PutComplete, got {other:?}"),
+    }
+
+    // legacy download: GetRows must stream RowBatch frames (not slabs)
+    frame::write_frame(&mut s, &DataMsg::GetRows { handle, start: 0, end: 10 }.encode())
+        .unwrap();
+    let mut got: Vec<WireRow> = Vec::new();
+    loop {
+        match DataMsg::decode(&frame::read_frame(&mut s).unwrap()).unwrap() {
+            DataMsg::RowBatch { rows: batch, .. } => got.extend(batch),
+            DataMsg::GetDone { .. } => break,
+            other => panic!("expected RowBatch/GetDone, got {other:?}"),
+        }
+    }
+    got.sort_by_key(|r| r.index);
+    assert_eq!(got, rows);
+
+    // and the v5 client still sees the same data through the slab path
+    let back = ac.fetch_dense(&m).unwrap();
+    assert_eq!(back.row(3), &[3.0, -3.0, 0.5]);
+    srv.shutdown();
+}
+
+#[test]
+fn handshake_negotiates_protocol_version() {
+    let srv = server(1);
+
+    // a v4 client is acked at v4 (min(client, server)), not rejected
+    let mut s = TcpStream::connect(&srv.driver_addr).unwrap();
+    frame::write_frame(
+        &mut s,
+        &ClientMsg::Handshake { app_name: "v4-client".into(), version: 4 }.encode(),
+    )
+    .unwrap();
+    match DriverMsg::decode(&frame::read_frame(&mut s).unwrap()).unwrap() {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 4),
+        other => panic!("expected HandshakeAck, got {other:?}"),
+    }
+
+    // below the supported floor is still a hard error
+    let mut s2 = TcpStream::connect(&srv.driver_addr).unwrap();
+    frame::write_frame(
+        &mut s2,
+        &ClientMsg::Handshake {
+            app_name: "ancient".into(),
+            version: MIN_PROTOCOL_VERSION - 1,
+        }
+        .encode(),
+    )
+    .unwrap();
+    match DriverMsg::decode(&frame::read_frame(&mut s2).unwrap()).unwrap() {
+        DriverMsg::Err { message } => assert!(message.contains("version"), "{message}"),
+        other => panic!("expected version error, got {other:?}"),
+    }
     srv.shutdown();
 }

@@ -127,10 +127,61 @@ fn driver_msgs_roundtrip_random() {
     });
 }
 
+/// Uniform-width batch (matrix rows): the only shape the slab format
+/// represents. Covers empty batches, zero-width ("empty") rows, NaN/Inf
+/// values, and out-of-order indices.
+fn random_uniform_rows(rng: &mut Rng) -> (Vec<WireRow>, u32) {
+    let n = rng.next_range(30) as usize;
+    let cols = rng.next_range(12) as usize;
+    let rows = (0..n)
+        .map(|_| WireRow {
+            index: rng.next_u64(),
+            values: (0..cols)
+                .map(|_| match rng.next_range(8) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => f64::NEG_INFINITY,
+                    3 => -0.0,
+                    _ => rng.next_signed() * 1e30,
+                })
+                .collect(),
+        })
+        .collect();
+    (rows, cols as u32)
+}
+
+/// Flatten uniform rows into the slab layout (index array + value slab).
+fn to_slab(rows: &[WireRow], cols: u32) -> (Vec<u64>, Vec<f64>) {
+    let mut indices = Vec::with_capacity(rows.len());
+    let mut values = Vec::with_capacity(rows.len() * cols as usize);
+    for r in rows {
+        indices.push(r.index);
+        values.extend_from_slice(&r.values);
+    }
+    (indices, values)
+}
+
+/// Bitwise view of rows so NaN payloads compare exactly.
+fn rows_bits(rows: &[WireRow]) -> Vec<(u64, Vec<u64>)> {
+    rows.iter()
+        .map(|r| (r.index, r.values.iter().map(|v| v.to_bits()).collect()))
+        .collect()
+}
+
+/// Finite-valued uniform batch for the `==`-based roundtrip test (NaN
+/// coverage lives in `slab_and_legacy_row_batches_agree`).
+fn random_finite_slab(rng: &mut Rng) -> (Vec<u64>, u32, Vec<f64>) {
+    let n = rng.next_range(20) as usize;
+    let cols = rng.next_range(9);
+    let indices: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let values: Vec<f64> = (0..n as u64 * cols).map(|_| rng.next_signed()).collect();
+    (indices, cols as u32, values)
+}
+
 #[test]
 fn data_msgs_roundtrip_random() {
     check("protocol: DataMsg roundtrip", 400, |rng| {
-        let msg = match rng.next_range(5) {
+        let msg = match rng.next_range(8) {
             0 => DataMsg::PutRows { handle: rng.next_u64(), rows: random_rows(rng) },
             1 => DataMsg::PutDone { handle: rng.next_u64() },
             2 => DataMsg::GetRows {
@@ -139,11 +190,63 @@ fn data_msgs_roundtrip_random() {
                 end: rng.next_u64(),
             },
             3 => DataMsg::RowBatch { handle: rng.next_u64(), rows: random_rows(rng) },
+            4 => {
+                let (indices, cols, values) = random_finite_slab(rng);
+                DataMsg::PutSlab { handle: rng.next_u64(), indices, cols, values }
+            }
+            5 => {
+                let (indices, cols, values) = random_finite_slab(rng);
+                DataMsg::SlabBatch { handle: rng.next_u64(), indices, cols, values }
+            }
+            6 => DataMsg::GetRowsSlab {
+                handle: rng.next_u64(),
+                start: rng.next_u64(),
+                end: rng.next_u64(),
+            },
             _ => DataMsg::Err { message: random_string(rng, 40) },
         };
         let back = DataMsg::decode(&msg.encode()).map_err(|e| e.to_string())?;
         if back != msg {
             return Err("data msg mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slab_and_legacy_row_batches_agree() {
+    check("protocol: slab vs legacy row-batch equivalence", 400, |rng| {
+        let (rows, cols) = random_uniform_rows(rng);
+        let handle = rng.next_u64();
+        let (indices, values) = to_slab(&rows, cols);
+        let legacy = DataMsg::PutRows { handle, rows: rows.clone() };
+        let slab = DataMsg::PutSlab { handle, indices, cols, values };
+
+        // both wire formats must decode back to the same rows, bit for bit
+        let legacy_back = match DataMsg::decode(&legacy.encode()).map_err(|e| e.to_string())? {
+            DataMsg::PutRows { handle: h, rows } if h == handle => rows,
+            other => return Err(format!("unexpected legacy decode {other:?}")),
+        };
+        let slab_back = match DataMsg::decode(&slab.encode()).map_err(|e| e.to_string())? {
+            DataMsg::PutSlab { handle: h, indices, cols: c, values }
+                if h == handle && c == cols =>
+            {
+                indices
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, index)| WireRow {
+                        index,
+                        values: values[i * cols as usize..(i + 1) * cols as usize].to_vec(),
+                    })
+                    .collect::<Vec<_>>()
+            }
+            other => return Err(format!("unexpected slab decode {other:?}")),
+        };
+        if rows_bits(&legacy_back) != rows_bits(&rows) {
+            return Err("legacy roundtrip changed rows".into());
+        }
+        if rows_bits(&slab_back) != rows_bits(&rows) {
+            return Err("slab decode disagrees with the rows sent".into());
         }
         Ok(())
     });
