@@ -5,15 +5,17 @@
 //!
 //! Run: `cargo bench --bench ablate_collectives`
 
-use alchemist::bench_support::{bench_config, harness::Table};
+use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
 use alchemist::comm::{collectives, run_mesh};
 use alchemist::metrics::Timer;
 
 fn main() {
     let base = bench_config();
+    let json_path = json_out_path();
     let reps = base.bench.reps.max(1) * 3;
     println!("=== Ablation: all-reduce algorithm (per-call latency) ===\n");
     let mut table = Table::new(&["ranks", "vector", "naive(ms)", "ring(ms)", "ring speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
 
     for p in [4usize, 8, 16] {
         for n in [1_000usize, 100_000, 1_000_000] {
@@ -42,9 +44,42 @@ fn main() {
                 format!("{:.2}", times[1]),
                 format!("{:.2}x", times[0] / times[1]),
             ]);
+            json_rows.push(format!(
+                "{{\"ranks\":{p},\"vector\":{n},\"naive_ms\":{:.4},\"ring_ms\":{:.4}}}",
+                times[0], times[1],
+            ));
         }
     }
+
     table.print();
+
+    // barrier: dissemination (log2 rounds) replacing the rank-0 funnel.
+    // Timed inside the mesh closure after a warm-up barrier, so mesh
+    // construction (thread spawns + O(p^2) dials) stays out of a
+    // microsecond-scale figure; the reported value is the slowest rank.
+    println!("\n--- barrier latency (dissemination) ---");
+    let mut btable = Table::new(&["ranks", "barrier(us)"]);
+    let barrier_reps = reps.max(50);
+    for p in [4usize, 8, 16] {
+        let per_rank = run_mesh(p, move |mut mesh| {
+            collectives::barrier(&mut mesh)?; // warm-up / alignment
+            let t = Timer::start();
+            for _ in 0..barrier_reps {
+                collectives::barrier(&mut mesh)?;
+            }
+            Ok(t.elapsed_secs())
+        })
+        .expect("mesh");
+        let per = per_rank.into_iter().fold(0.0f64, f64::max) / barrier_reps as f64 * 1e6;
+        btable.row(vec![p.to_string(), format!("{per:.1}")]);
+        json_rows.push(format!("{{\"ranks\":{p},\"barrier_us\":{per:.2}}}"));
+    }
+    btable.print();
     println!("\nreading: the ring wins on large vectors (bandwidth-optimal) — the regime of");
     println!("the SVD's per-iteration n-vector all-reduce; naive is fine for tiny payloads.");
+    println!("barrier is log2(p) dissemination rounds — no rank-0 funnel.");
+
+    if let Some(path) = json_path {
+        write_json_rows(&path, &json_rows);
+    }
 }

@@ -10,7 +10,7 @@ use alchemist::bench_support::harness::bench;
 use alchemist::comm::{collectives, run_mesh};
 use alchemist::elemental::dist_gemm::{GemmBackend, NativeBackend};
 use alchemist::elemental::Layout;
-use alchemist::linalg::DenseMatrix;
+use alchemist::linalg::{gemm, DenseMatrix};
 use alchemist::protocol::{frame, DataMsg, LayoutKind, WireRow, Writer};
 use alchemist::runtime::PjrtRuntime;
 use alchemist::workload::{random_matrix, random_row};
@@ -135,6 +135,49 @@ fn main() {
     bench("gemm: native blocked 512^3", 1.0, || {
         NativeBackend.gemm_acc(&a, &b, &mut c).unwrap();
     });
+
+    // --- packed micro-kernel vs pre-packing scalar kernel. m = 64 keeps
+    // gemm_acc on its serial path (m <= MC), so this isolates the
+    // packing + 4x8 register kernel win from thread-level parallelism —
+    // the local-kernel half of the PR3 change, measured not asserted ---
+    {
+        let sa = DenseMatrix::from_vec(64, 512, random_matrix(8, 64, 512)).unwrap();
+        let mut sc = DenseMatrix::zeros(64, 512);
+        let flops = 2.0 * 64.0 * 512.0 * 512.0 / 1e9;
+        let packed = bench("gemm: packed 4x8 kernel 64x512x512 (serial)", 0.8, || {
+            gemm::gemm_acc(&sa, &b, &mut sc).unwrap();
+        });
+        let unpacked = bench("gemm: unpacked scalar kernel 64x512x512 (serial)", 0.8, || {
+            gemm::gemm_acc_unpacked(&sa, &b, &mut sc).unwrap();
+        });
+        println!(
+            "gemm packed-kernel speedup (serial vs serial): {:.2}x ({:.2} vs {:.2} GFLOP/s)",
+            unpacked.mean_s / packed.mean_s,
+            flops / packed.mean_s,
+            flops / unpacked.mean_s,
+        );
+    }
+
+    // --- gemm_tn serial vs parallel (the SVD U-recovery / gramian /
+    // lstsq hot path) ---
+    {
+        let ta = DenseMatrix::from_vec(2048, 96, random_matrix(11, 2048, 96)).unwrap();
+        let tb = DenseMatrix::from_vec(2048, 96, random_matrix(12, 2048, 96)).unwrap();
+        let flops = 2.0 * 2048.0 * 96.0 * 96.0 / 1e9;
+        let par = bench("gemm_tn: parallel 2048x96 x 2048x96", 0.5, || {
+            std::hint::black_box(gemm::gemm_tn(&ta, &tb).unwrap());
+        });
+        let ser = bench("gemm_tn: serial   2048x96 x 2048x96", 0.5, || {
+            std::hint::black_box(gemm::gemm_tn_serial(&ta, &tb).unwrap());
+        });
+        println!(
+            "gemm_tn parallel speedup: {:.2}x ({:.2} vs {:.2} GFLOP/s)",
+            ser.mean_s / par.mean_s,
+            flops / par.mean_s,
+            flops / ser.mean_s,
+        );
+    }
+
     let v: Vec<f64> = (0..512).map(|i| i as f64 * 0.01).collect();
     bench("gram matvec: native 512x512", 0.3, || {
         let t = a.matvec(&v).unwrap();

@@ -1,0 +1,90 @@
+//! CI smoke bench: exercises the perf-critical paths (packed GEMM
+//! kernel, ring-pipelined dist_gemm, collectives) at small shapes in a
+//! few seconds, as a wall-clock canary between full bench runs.
+//!
+//! Shapes are feature-gated: the default profile is "small" (sub-minute,
+//! still perf-meaningful); building with `--features smoke` switches to
+//! "tiny" shapes so `cargo bench --bench smoke --features smoke` finishes
+//! in seconds on CI runners.
+//!
+//! Run: `cargo bench --bench smoke [--features smoke]`
+
+use alchemist::bench_support::harness::bench;
+use alchemist::comm::{collectives, run_mesh};
+use alchemist::elemental::dist_gemm::{
+    dist_gemm_with, DistGemmAlgo, DistGemmOptions, NativeBackend,
+};
+use alchemist::elemental::panel::scatter_matrix;
+use alchemist::linalg::{gemm, DenseMatrix};
+use alchemist::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
+use alchemist::workload::random_matrix;
+use std::sync::Arc;
+
+#[cfg(feature = "smoke")]
+const GEMM_N: usize = 96;
+#[cfg(not(feature = "smoke"))]
+const GEMM_N: usize = 384;
+
+#[cfg(feature = "smoke")]
+const DIST_N: usize = 64;
+#[cfg(not(feature = "smoke"))]
+const DIST_N: usize = 256;
+
+#[cfg(feature = "smoke")]
+const REDUCE_LEN: usize = 10_000;
+#[cfg(not(feature = "smoke"))]
+const REDUCE_LEN: usize = 100_000;
+
+fn main() {
+    println!(
+        "=== smoke bench (profile: {}) ===",
+        if cfg!(feature = "smoke") { "tiny" } else { "small" }
+    );
+
+    // local kernel
+    let a = DenseMatrix::from_vec(GEMM_N, GEMM_N, random_matrix(1, GEMM_N, GEMM_N)).unwrap();
+    let b = DenseMatrix::from_vec(GEMM_N, GEMM_N, random_matrix(2, GEMM_N, GEMM_N)).unwrap();
+    let mut c = DenseMatrix::zeros(GEMM_N, GEMM_N);
+    bench(&format!("gemm packed {GEMM_N}^3"), 0.3, || {
+        gemm::gemm_acc(&a, &b, &mut c).unwrap();
+    });
+
+    // distributed gemm, both algorithms (p = 4)
+    let p = 4usize;
+    let meta = |h: u64| MatrixMeta {
+        handle: h,
+        rows: DIST_N as u64,
+        cols: DIST_N as u64,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() },
+    };
+    let fa = DenseMatrix::from_vec(DIST_N, DIST_N, random_matrix(3, DIST_N, DIST_N)).unwrap();
+    let fb = DenseMatrix::from_vec(DIST_N, DIST_N, random_matrix(4, DIST_N, DIST_N)).unwrap();
+    let ap = Arc::new(scatter_matrix(&meta(1), &fa).unwrap());
+    let bp = Arc::new(scatter_matrix(&meta(2), &fb).unwrap());
+    for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
+        let (ap, bp) = (ap.clone(), bp.clone());
+        bench(&format!("dist_gemm {} {DIST_N}^3 p={p}", algo.name()), 0.3, move || {
+            let (ap, bp) = (ap.clone(), bp.clone());
+            run_mesh(p, move |mut mesh| {
+                let r = mesh.rank();
+                let opts = DistGemmOptions { algo, panel_rows: 0 };
+                dist_gemm_with(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, &opts)
+            })
+            .unwrap();
+        });
+    }
+
+    // collectives
+    bench(&format!("allreduce ring p=4 x {REDUCE_LEN}"), 0.2, || {
+        run_mesh(4, |mut mesh| {
+            let mut data = vec![mesh.rank() as f64; REDUCE_LEN];
+            collectives::allreduce_sum(&mut mesh, &mut data, collectives::AllReduceAlgo::Ring)
+        })
+        .unwrap();
+    });
+    bench("barrier p=8 (dissemination)", 0.2, || {
+        run_mesh(8, |mut mesh| collectives::barrier(&mut mesh)).unwrap();
+    });
+
+    println!("smoke done");
+}

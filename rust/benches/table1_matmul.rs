@@ -4,12 +4,18 @@
 //! Spark side (executor OOM during the block-multiply shuffle — the
 //! paper's `NA (t)` rows).
 //!
+//! PR3 addition: the Alchemist compute phase is measured for **both**
+//! distributed GEMM algorithms — the default ring-pipelined panel
+//! rotation and the legacy all-gather-B baseline — so the table doubles
+//! as the compute-plane ablation (acceptance: ring ≥ parity at p=4).
+//!
 //! Dimensions are the paper's, scaled 1/16; "node" = 2 executors /
 //! 2 workers; per-executor memory scales the paper's 128 GB node by the
 //! same data ratio. Run: `cargo bench --bench table1_matmul`
-//! (options: `-- --set bench.reps=1 --set bench.budget_secs=300`).
+//! (options: `-- --set bench.reps=1 --set bench.budget_secs=300
+//! --json BENCH.json`).
 
-use alchemist::bench_support::{bench_config, harness::Table};
+use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
 use alchemist::client::{wrappers, AlchemistContext};
 use alchemist::metrics::{run_budgeted, Budgeted, Timer};
 use alchemist::server::start_server;
@@ -18,11 +24,13 @@ use alchemist::workload::geometries::{TABLE1, TABLE1_NODES};
 
 fn main() {
     let base = bench_config();
+    let json_path = json_out_path();
     println!("=== Table 1: GEMM — Spark vs Spark+Alchemist (dims = paper/16) ===\n");
     let mut table = Table::new(&[
-        "m", "n", "k", "result(MB)", "nodes", "Send(s)", "Compute(s)", "Receive(s)",
-        "Spark compute(s)",
+        "m", "n", "k", "result(MB)", "nodes", "Send(s)", "Ring comp(s)", "AllGather comp(s)",
+        "Receive(s)", "Spark compute(s)",
     ]);
+    let mut json_rows: Vec<String> = Vec::new();
 
     for (idx, &(m, n, k)) in TABLE1.iter().enumerate() {
         let nodes = TABLE1_NODES[idx];
@@ -35,8 +43,8 @@ fn main() {
         cfg.sparklet.block_size = 96; // paper block/width ratio ≈ 0.1
         let reps = base.bench.reps.max(1);
 
-        // ---- Alchemist path (averaged over reps) ----
-        let (mut send_s, mut comp_s, mut recv_s) = (0.0, 0.0, 0.0);
+        // ---- Alchemist path (averaged over reps; both algorithms) ----
+        let (mut send_s, mut ring_s, mut agb_s, mut recv_s) = (0.0, 0.0, 0.0, 0.0);
         for rep in 0..reps {
             let server = start_server(&cfg).expect("server");
             let sc = SparkletContext::new(&cfg.sparklet).expect("sparklet");
@@ -55,11 +63,18 @@ fn main() {
 
             let al_a = a.to_alchemist(&sc, &ac).expect("send A");
             let al_b = b.to_alchemist(&sc, &ac).expect("send B");
-            let al_c = wrappers::gemm(&ac, &al_a, &al_b).expect("gemm");
+            let c0 = ac.phases.get_secs("compute");
+            let al_c = wrappers::gemm_with_algo(&ac, &al_a, &al_b, "ring", 0).expect("gemm ring");
+            let c1 = ac.phases.get_secs("compute");
+            let al_c2 =
+                wrappers::gemm_with_algo(&ac, &al_a, &al_b, "allgather", 0).expect("gemm agb");
+            let c2 = ac.phases.get_secs("compute");
+            ac.release(al_c2).ok();
             let _c = ac.fetch_dense(&al_c).expect("fetch C");
 
             send_s += ac.phases.get_secs("send");
-            comp_s += ac.phases.get_secs("compute");
+            ring_s += c1 - c0;
+            agb_s += c2 - c1;
             recv_s += ac.phases.get_secs("receive");
             ac.stop().ok();
             sc.shutdown();
@@ -105,12 +120,28 @@ fn main() {
             format!("{:.0}", (m * k * 8) as f64 / 1e6),
             nodes.to_string(),
             format!("{:.1}", send_s / r),
-            format!("{:.1}", comp_s / r),
+            format!("{:.1}", ring_s / r),
+            format!("{:.1}", agb_s / r),
             format!("{:.1}", recv_s / r),
-            spark_cell,
+            spark_cell.clone(),
         ]);
+        json_rows.push(format!(
+            "{{\"m\":{m},\"n\":{n},\"k\":{k},\"nodes\":{nodes},\"send_s\":{:.4},\
+             \"ring_compute_s\":{:.4},\"allgather_compute_s\":{:.4},\"recv_s\":{:.4},\
+             \"spark\":\"{}\"}}",
+            send_s / r,
+            ring_s / r,
+            agb_s / r,
+            recv_s / r,
+            spark_cell.replace('"', ""),
+        ));
     }
     table.print();
     println!("\npaper shape: Alchemist completes all rows; Spark is ~10-25x slower where it");
-    println!("completes and fails (NA) on the two largest multiplies.");
+    println!("completes and fails (NA) on the two largest multiplies. Ring compute should");
+    println!("be <= all-gather compute (overlap + no full-B materialization).");
+
+    if let Some(path) = json_path {
+        write_json_rows(&path, &json_rows);
+    }
 }

@@ -17,7 +17,9 @@
 use crate::ali::{params, Library, RoutineCtx, RoutineOutput};
 use crate::arpack::{lanczos_topk, LanczosOptions, SymOp};
 use crate::comm::Mesh;
-use crate::elemental::dist_gemm::{dist_frobenius, dist_gemm, dist_gram_matvec};
+use crate::elemental::dist_gemm::{
+    dist_frobenius, dist_gemm_with, dist_gram_matvec, DistGemmAlgo,
+};
 use crate::elemental::{redistribute::redistribute, LocalPanel};
 use crate::linalg::DenseMatrix;
 use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
@@ -86,9 +88,20 @@ fn run_gemm(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
     let hb = params::get_matrix(p, "B")?;
     let hc = ctx.output_handle(0)?;
     let alpha = params::get_f64_or(p, "alpha", 1.0)?;
+    // Per-call overrides of the worker's `[compute]` defaults. SPMD-safe:
+    // every rank receives the identical params frame.
+    let mut opts = ctx.compute;
+    if let Some(algo) = params::get_str_opt(p, "algo")? {
+        opts.algo = DistGemmAlgo::parse(algo).map_err(|e| Error::Ali(e.to_string()))?;
+    }
+    let rows = params::get_i64_or(p, "panel_rows", opts.panel_rows as i64)?;
+    if rows < 0 {
+        return Err(Error::Ali("panel_rows must be >= 0".into()));
+    }
+    opts.panel_rows = rows as usize;
     let a = ctx.store.get(ha)?.clone();
     let b = ctx.store.get(hb)?.clone();
-    let mut c = dist_gemm(ctx.mesh, &a, &b, hc, ctx.backend)?;
+    let mut c = dist_gemm_with(ctx.mesh, &a, &b, hc, ctx.backend, &opts)?;
     if alpha != 1.0 {
         c.local_mut().scale(alpha);
     }
@@ -518,6 +531,7 @@ mod tests {
                 backend: &NativeBackend,
                 runtime: None,
                 svd_pjrt: false,
+                compute: Default::default(),
             };
             let out = lib.run(routine, &params, &mut ctx)?;
             Ok((out, store))
@@ -557,6 +571,74 @@ mod tests {
         assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
         assert_eq!(results[0].0.new_matrices.len(), 1);
         assert_eq!(results[0].0.new_matrices[0].handle, 100);
+    }
+
+    #[test]
+    fn gemm_routine_algo_params() {
+        // "ring" and "allgather" via routine params are bit-identical;
+        // a bogus algo is an Ali error.
+        let p = 3;
+        let (_, mut a_panels) = seed(1, 19, 7, p, 31);
+        let (_, b_panels) = seed(2, 7, 5, p, 32);
+        for (ap, bp) in a_panels.iter_mut().zip(b_panels) {
+            ap.extend(bp);
+        }
+        let mut gathered = Vec::new();
+        for algo in ["ring", "allgather"] {
+            let params = ParamsBuilder::new()
+                .matrix("A", 1)
+                .matrix("B", 2)
+                .str("algo", algo)
+                .i64("panel_rows", 2)
+                .build();
+            let results = run_routine(p, a_panels.clone(), "gemm", params, vec![100]);
+            let c_panels: Vec<LocalPanel> =
+                results.iter().map(|(_, s)| s.get(100).unwrap().clone()).collect();
+            gathered.push(gather_matrix(&c_panels).unwrap());
+        }
+        assert_eq!(gathered[0], gathered[1], "ring vs allgather through the routine layer");
+
+        let params = ParamsBuilder::new()
+            .matrix("A", 1)
+            .matrix("B", 2)
+            .str("algo", "summa3d")
+            .build();
+        let results = run_routine_fallible(p, a_panels, "gemm", params, vec![100]);
+        assert!(results.iter().all(|r| r.is_err()));
+    }
+
+    /// Like `run_routine` but returning each rank's `Result` (for tests
+    /// exercising SPMD error paths).
+    fn run_routine_fallible(
+        p: usize,
+        seed_panels: Vec<Vec<LocalPanel>>,
+        routine: &'static str,
+        params: Params,
+        output_handles: Vec<u64>,
+    ) -> Vec<std::result::Result<RoutineOutput, String>> {
+        let seed = Arc::new(seed_panels);
+        let params = Arc::new(params);
+        let handles = Arc::new(output_handles);
+        run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let mut store = MatrixStore::new();
+            for panel in &seed[rank] {
+                store.insert(panel.clone()).unwrap();
+            }
+            let lib = ElemLib::new();
+            let mut ctx = RoutineCtx {
+                mesh: &mut mesh,
+                owners: (0..p as u32).collect(),
+                store: &mut store,
+                output_handles: &handles,
+                backend: &NativeBackend,
+                runtime: None,
+                svd_pjrt: false,
+                compute: Default::default(),
+            };
+            Ok(lib.run(routine, &params, &mut ctx).map_err(|e| e.to_string()))
+        })
+        .unwrap()
     }
 
     #[test]
@@ -769,6 +851,7 @@ mod tests {
                 backend: &NativeBackend,
                 runtime: None,
                 svd_pjrt: false,
+                compute: Default::default(),
             };
             let unknown = lib.run("qr", &vec![], &mut ctx);
             let missing = lib.run("gemm", &vec![], &mut ctx);

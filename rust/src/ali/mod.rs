@@ -15,7 +15,7 @@ pub mod params;
 pub mod registry;
 
 use crate::comm::Mesh;
-use crate::elemental::dist_gemm::GemmBackend;
+use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend};
 use crate::elemental::MatrixStore;
 use crate::protocol::{MatrixMeta, Params};
 use crate::Result;
@@ -40,6 +40,9 @@ pub struct RoutineCtx<'a> {
     /// Route the SVD Gram operator through PJRT (`server.svd_backend`);
     /// false = native kernels (the CPU-testbed default, see config.rs).
     pub svd_pjrt: bool,
+    /// Distributed-GEMM defaults from the `[compute]` config (routines
+    /// may override per call via `algo` / `panel_rows` params).
+    pub compute: DistGemmOptions,
 }
 
 impl RoutineCtx<'_> {

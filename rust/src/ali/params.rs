@@ -30,6 +30,15 @@ pub fn get_str<'a>(params: &'a Params, name: &str) -> Result<&'a str> {
     get(params, name)?.as_str()
 }
 
+/// Optional string parameter: `Ok(None)` when absent, type error when
+/// present but not a string.
+pub fn get_str_opt<'a>(params: &'a Params, name: &str) -> Result<Option<&'a str>> {
+    match params.iter().find(|(k, _)| k == name) {
+        Some((_, v)) => Ok(Some(v.as_str()?)),
+        None => Ok(None),
+    }
+}
+
 pub fn get_i64_or(params: &Params, name: &str, default: i64) -> Result<i64> {
     match params.iter().find(|(k, _)| k == name) {
         Some((_, v)) => v.as_i64(),
@@ -99,6 +108,9 @@ mod tests {
         assert!(get(&p, "missing").is_err());
         assert_eq!(get_i64_or(&p, "missing", 5).unwrap(), 5);
         assert_eq!(get_f64_or(&p, "tol", 0.0).unwrap(), 1e-8);
+        assert_eq!(get_str_opt(&p, "mode").unwrap(), Some("tall"));
+        assert_eq!(get_str_opt(&p, "missing").unwrap(), None);
+        assert!(get_str_opt(&p, "k").is_err()); // present, wrong type
     }
 
     #[test]

@@ -182,6 +182,22 @@ pub fn run_transfer_grid(label: &str, rows: u64, cols: u64, base: &crate::config
     table.print();
 }
 
+/// Parse the optional `--json <path>` bench argument (sibling of the
+/// `--set` overrides `bench_config` consumes): where to write
+/// machine-readable rows for `scripts/bench_snapshot.sh`.
+pub fn json_out_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.windows(2).find(|w| w[0] == "--json").map(|w| w[1].clone())
+}
+
+/// Write pre-rendered JSON objects as one array to `path` (the
+/// `--json` output format shared by the snapshot benches).
+pub fn write_json_rows(path: &str, rows: &[String]) {
+    let body = format!("[\n  {}\n]\n", rows.join(",\n  "));
+    std::fs::write(path, body).expect("write bench json");
+    eprintln!("wrote {path}");
+}
+
 /// Shared bench plumbing: every paper-table bench accepts the standard
 /// `--set section.key=value` overrides after `--`
 /// (`cargo bench --bench table1_matmul -- --set bench.reps=1`).

@@ -18,6 +18,27 @@ pub fn gemm(ac: &AlchemistContext, a: &AlMatrix, b: &AlMatrix) -> Result<AlMatri
     mats.pop().ok_or_else(|| Error::Ali("gemm returned no matrix".into()))
 }
 
+/// `C = A · B` with an explicit distributed algorithm ("ring" |
+/// "allgather") and optional sub-panel rows (0 = whole owned panels),
+/// overriding the server's `[compute]` defaults — the
+/// `table1_matmul`/`ablate_gemm_backend` ablation hook.
+pub fn gemm_with_algo(
+    ac: &AlchemistContext,
+    a: &AlMatrix,
+    b: &AlMatrix,
+    algo: &str,
+    panel_rows: u32,
+) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new()
+        .matrix("A", a.handle())
+        .matrix("B", b.handle())
+        .str("algo", algo)
+        .i64("panel_rows", panel_rows as i64)
+        .build();
+    let (_, mut mats) = ac.run("elemlib", "gemm", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("gemm returned no matrix".into()))
+}
+
 /// Asynchronous `C = A · B`: returns a [`JobHandle`] immediately so the
 /// caller can pipeline further submissions (`sched` job queue).
 pub fn gemm_async<'a>(

@@ -7,8 +7,8 @@
 //! the n-vector all-reduces each Lanczos iteration performs).
 
 use super::Mesh;
-use crate::linalg::blas1;
-use crate::Result;
+use crate::linalg::{blas1, DenseMatrix};
+use crate::{Error, Result};
 
 /// Which all-reduce algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,21 +19,26 @@ pub enum AllReduceAlgo {
     Ring,
 }
 
-/// Barrier: everyone checks in with rank 0, rank 0 releases everyone.
+/// Dissemination barrier: ⌈log₂ p⌉ rounds; in round k every rank sends an
+/// empty frame to `(rank + 2^k) % p` and receives one from
+/// `(rank - 2^k) % p`. Replaces the root-funneled barrier (2(p−1)
+/// sequential messages through rank 0) with log-depth all-to-all
+/// progress — no rank is a bottleneck.
 pub fn barrier(mesh: &mut Mesh) -> Result<()> {
-    if mesh.size() == 1 {
+    let p = mesh.size();
+    if p == 1 {
         return Ok(());
     }
-    if mesh.rank() == 0 {
-        for r in 1..mesh.size() {
-            mesh.recv(r)?;
-        }
-        for r in 1..mesh.size() {
-            mesh.send(r, &[])?;
-        }
-    } else {
-        mesh.send(0, &[])?;
-        mesh.recv(0)?;
+    let rank = mesh.rank();
+    let mut d = 1usize;
+    while d < p {
+        let to = (rank + d) % p;
+        let from = (rank + p - d) % p;
+        // Empty frames always fit the kernel socket buffer, so the
+        // blocking send cannot jam against the matching recv.
+        mesh.send(to, &[])?;
+        mesh.recv(from)?;
+        d *= 2;
     }
     Ok(())
 }
@@ -113,16 +118,71 @@ pub fn allgather(mesh: &mut Mesh, data: &[f64]) -> Result<Vec<Vec<f64>>> {
         // Deadlock-safe ordering: even ranks send first. With p >= 2 and a
         // ring, this alternation always pairs a sender with a receiver.
         if mesh.rank() % 2 == 0 {
-            let buf = out[send_origin].clone();
-            mesh.send_f64s(next, &buf)?;
+            mesh.send_f64s(next, &out[send_origin])?;
             out[recv_origin] = mesh.recv_f64s(prev)?;
         } else {
             out[recv_origin] = mesh.recv_f64s(prev)?;
-            let buf = out[send_origin].clone();
-            mesh.send_f64s(next, &buf)?;
+            mesh.send_f64s(next, &out[send_origin])?;
         }
     }
     Ok(out)
+}
+
+/// All-gather with known per-rank element counts, assembled directly into
+/// one flat pre-sized buffer laid out in rank order (`counts[r]` elements
+/// at offset `counts[..r].sum()`). This is the matrix all-gather hot path:
+/// no `Vec<Vec<f64>>`, no re-concatenation — every received block lands
+/// in its final position via `recv_f64s_into`.
+pub fn allgather_flat(mesh: &mut Mesh, mine: &[f64], counts: &[usize]) -> Result<Vec<f64>> {
+    let p = mesh.size();
+    if counts.len() != p {
+        return Err(Error::Protocol(format!(
+            "allgather_flat: {} counts for {p} ranks",
+            counts.len()
+        )));
+    }
+    let rank = mesh.rank();
+    if counts[rank] != mine.len() {
+        return Err(Error::Protocol(format!(
+            "allgather_flat: rank {rank} holds {} elements, counts say {}",
+            mine.len(),
+            counts[rank]
+        )));
+    }
+    let offsets: Vec<usize> = counts
+        .iter()
+        .scan(0usize, |acc, &c| {
+            let o = *acc;
+            *acc += c;
+            Some(o)
+        })
+        .collect();
+    let total: usize = counts.iter().sum();
+    let mut flat = vec![0.0f64; total];
+    flat[offsets[rank]..offsets[rank] + mine.len()].copy_from_slice(mine);
+    if p == 1 {
+        return Ok(flat);
+    }
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    // Same ring walk as `allgather`: at step s we forward the block that
+    // originated at rank (rank - s), receiving origin (prev - s).
+    for s in 0..p - 1 {
+        let send_origin = (rank + p - s) % p;
+        let recv_origin = (prev + p - s) % p;
+        let (s0, s1) = (offsets[send_origin], offsets[send_origin] + counts[send_origin]);
+        let (r0, r1) = (offsets[recv_origin], offsets[recv_origin] + counts[recv_origin]);
+        // Deadlock-safe ordering: even ranks send first (p >= 2 always
+        // pairs a sender with a receiver around the ring).
+        if rank % 2 == 0 {
+            mesh.send_f64s(next, &flat[s0..s1])?;
+            mesh.recv_f64s_into(prev, &mut flat[r0..r1])?;
+        } else {
+            mesh.recv_f64s_into(prev, &mut flat[r0..r1])?;
+            mesh.send_f64s(next, &flat[s0..s1])?;
+        }
+    }
+    Ok(flat)
 }
 
 /// Sum-reduce to root. Returns the reduced vector on root, `None` elsewhere.
@@ -209,6 +269,234 @@ fn ring_allreduce(mesh: &mut Mesh, data: &mut [f64]) -> Result<()> {
     Ok(())
 }
 
+/// Expected shape of one inbound [`RingPipeline`] frame.
+#[derive(Debug, Clone, Copy)]
+pub enum FrameShape {
+    /// Exactly `rows x cols` doubles (length-validated in the receiver
+    /// thread; a mismatch is a protocol error).
+    Matrix(usize, usize),
+    /// Any length; delivered as an `n x 1` matrix.
+    Any,
+}
+
+/// Overlapped ring shift with store-and-forward: a dedicated sender
+/// thread and receiver thread per rank over cloned `Mesh` sockets, so
+/// panel communication proceeds *while* the owning thread computes — the
+/// primitive under the ring-pipelined distributed GEMM (replaces the
+/// blocking `exchange`-style pattern, which serialized each shift
+/// against the compute between shifts).
+///
+/// Wire order is fixed at construction: the sender first writes
+/// `own_frames` panels enqueued by the compute thread (`send_own`),
+/// then forwards the first `forward_frames` inbound frames. Forwarding
+/// happens *inside* the pipeline — the receiver hands each decoded frame
+/// to the compute thread, then rendezvous-enqueues the same `Arc` to the
+/// sender before reading the next frame.
+///
+/// Memory discipline (this is what bounds the GEMM's B footprint at two
+/// whole panels):
+/// * the own-panel channel is buffered to `own_frames` entries — a rank
+///   in its send-only opening burst must never block on a neighbor
+///   (that cycle deadlocks the ring), and all own sub-panels together
+///   are at most one whole panel of doubles;
+/// * the forward channel and the delivery channel are rendezvous
+///   channels: at most one forwarded frame is in flight (sharing its
+///   allocation with the compute thread's current panel via `Arc`), and
+///   the receiver reads at most one frame ahead — because the forward
+///   enqueue only completes once the sender finished the previous
+///   frame, the next read cannot start while an earlier allocation is
+///   still draining onto the wire.
+///
+/// Framing matches `Mesh::send_f64s`, so ordinary collectives can follow
+/// on the same links once the pipeline is quiesced (`finish`). Dropping
+/// without `finish` (error paths) *poisons the links*: both cloned
+/// sockets are shut down so the helper threads exit instead of racing a
+/// later collective for frames, and subsequent traffic on this mesh
+/// fails loudly — matching the driver's mid-collective session-poisoning
+/// semantics.
+pub struct RingPipeline {
+    own_tx: Option<std::sync::mpsc::SyncSender<std::sync::Arc<DenseMatrix>>>,
+    /// `Option` so abnormal drop can disconnect the delivery channel
+    /// *before* joining the receiver (which may be parked on it).
+    recv_rx: Option<std::sync::mpsc::Receiver<Result<std::sync::Arc<DenseMatrix>>>>,
+    sender: Option<std::thread::JoinHandle<Result<()>>>,
+    receiver: Option<std::thread::JoinHandle<()>>,
+    /// Control clones for poisoning on abnormal drop.
+    send_ctl: std::net::TcpStream,
+    recv_ctl: std::net::TcpStream,
+}
+
+impl RingPipeline {
+    /// Open a pipeline that sends to ring neighbor `to` and consumes one
+    /// frame from neighbor `from` per entry of `frame_shapes` (in that
+    /// order). The compute thread must call `send_own` exactly
+    /// `own_frames` times and `recv` exactly `frame_shapes.len()` times;
+    /// the first `forward_frames` inbound frames are re-sent to `to`
+    /// automatically after delivery.
+    pub fn new(
+        mesh: &mut Mesh,
+        to: usize,
+        from: usize,
+        own_frames: usize,
+        forward_frames: usize,
+        frame_shapes: Vec<FrameShape>,
+    ) -> Result<RingPipeline> {
+        if forward_frames > frame_shapes.len() {
+            return Err(Error::Protocol(format!(
+                "ring pipeline: cannot forward {forward_frames} of {} frames",
+                frame_shapes.len()
+            )));
+        }
+        let mut send_sock = mesh.clone_conn(to)?;
+        let mut recv_sock = mesh.clone_conn(from)?;
+        let send_ctl = send_sock.try_clone()?;
+        let recv_ctl = recv_sock.try_clone()?;
+
+        let (own_tx, own_rx) =
+            std::sync::mpsc::sync_channel::<std::sync::Arc<DenseMatrix>>(own_frames);
+        let (fwd_tx, fwd_rx) =
+            std::sync::mpsc::sync_channel::<std::sync::Arc<DenseMatrix>>(0);
+        let sender = std::thread::Builder::new()
+            .name("ring-send".into())
+            .spawn(move || -> Result<()> {
+                for _ in 0..own_frames {
+                    let Ok(panel) = own_rx.recv() else { return Ok(()) };
+                    super::write_f64_frame(&mut send_sock, panel.data())?;
+                }
+                for _ in 0..forward_frames {
+                    let Ok(panel) = fwd_rx.recv() else { return Ok(()) };
+                    super::write_f64_frame(&mut send_sock, panel.data())?;
+                }
+                Ok(())
+            })
+            .map_err(|e| Error::Protocol(format!("spawn ring sender: {e}")))?;
+
+        let (recv_tx, recv_rx) =
+            std::sync::mpsc::sync_channel::<Result<std::sync::Arc<DenseMatrix>>>(0);
+        let receiver = std::thread::Builder::new()
+            .name("ring-recv".into())
+            .spawn(move || {
+                for (i, shape) in frame_shapes.into_iter().enumerate() {
+                    let decoded = super::recv_f64_frame(&mut recv_sock).and_then(|v| {
+                        let (rows, cols) = match shape {
+                            FrameShape::Matrix(r, c) => (r, c),
+                            FrameShape::Any => (v.len(), 1),
+                        };
+                        if v.len() != rows * cols {
+                            return Err(Error::Protocol(format!(
+                                "ring frame {i}: {} doubles, expected {rows}x{cols}",
+                                v.len()
+                            )));
+                        }
+                        Ok(std::sync::Arc::new(DenseMatrix::from_vec(rows, cols, v)?))
+                    });
+                    match decoded {
+                        Ok(panel) => {
+                            // Hand to the compute thread first (it can
+                            // start multiplying), then give the sender
+                            // its forward copy; this enqueue gates the
+                            // next read on the previous frame draining.
+                            if recv_tx.send(Ok(panel.clone())).is_err() {
+                                return;
+                            }
+                            if i < forward_frames && fwd_tx.send(panel).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = recv_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Protocol(format!("spawn ring receiver: {e}")))?;
+
+        Ok(RingPipeline {
+            own_tx: Some(own_tx),
+            recv_rx: Some(recv_rx),
+            sender: Some(sender),
+            receiver: Some(receiver),
+            send_ctl,
+            recv_ctl,
+        })
+    }
+
+    /// Enqueue one of this rank's own panels for sending (buffered up to
+    /// `own_frames`, so the opening send-only burst never blocks on ring
+    /// neighbors). The caller keeps its `Arc` clone and may compute on
+    /// the panel concurrently; panels are immutable once enqueued.
+    pub fn send_own(&self, panel: std::sync::Arc<DenseMatrix>) -> Result<()> {
+        self.own_tx
+            .as_ref()
+            .expect("ring pipeline already finished")
+            .send(panel)
+            .map_err(|_| Error::Protocol("ring sender thread terminated early".into()))
+    }
+
+    /// Take the next inbound panel, blocking until it is fully read and
+    /// shape-checked. Forwarding (when due) happens automatically.
+    pub fn recv(&self) -> Result<std::sync::Arc<DenseMatrix>> {
+        let rx = self.recv_rx.as_ref().expect("ring pipeline already finished");
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Protocol("ring receiver thread terminated early".into())),
+        }
+    }
+
+    /// Quiesce: wait until every frame is on the wire and the receiver
+    /// consumed its quota, then reap both threads. The caller must have
+    /// consumed every inbound frame (`recv` × `frame_shapes.len()`)
+    /// first, or this blocks.
+    pub fn finish(mut self) -> Result<()> {
+        drop(self.own_tx.take());
+        if let Some(h) = self.sender.take() {
+            h.join().map_err(|_| Error::Protocol("ring sender panicked".into()))??;
+        }
+        if let Some(h) = self.receiver.take() {
+            h.join().map_err(|_| Error::Protocol("ring receiver panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RingPipeline {
+    fn drop(&mut self) {
+        drop(self.own_tx.take());
+        if self.sender.is_none() && self.receiver.is_none() {
+            return; // finished cleanly
+        }
+        // Abnormal teardown (error path): the helper threads may be
+        // parked on channel rendezvous or on socket I/O over cloned
+        // handles to the session's links. Left alone they would race the
+        // next collective for frames, silently corrupting it. Disconnect
+        // the channels, shut the links down so every park site errors
+        // out and later traffic fails loudly (session poisoning), then
+        // reap both threads.
+        drop(self.recv_rx.take());
+        let _ = self.send_ctl.shutdown(std::net::Shutdown::Both);
+        let _ = self.recv_ctl.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.sender.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.receiver.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One blocking ring shift without pipelining: send `data` to `to` while
+/// receiving one frame from `from` (helper-thread overlap only, no
+/// compute overlap). Convenience wrapper over [`RingPipeline`] for
+/// single-step callers and tests.
+pub fn ring_shift(mesh: &mut Mesh, to: usize, data: &[f64], from: usize) -> Result<Vec<f64>> {
+    let pipe = RingPipeline::new(mesh, to, from, 1, 0, vec![FrameShape::Any])?;
+    pipe.send_own(std::sync::Arc::new(DenseMatrix::from_vec(data.len(), 1, data.to_vec())?))?;
+    let got = pipe.recv()?;
+    pipe.finish()?;
+    Ok(got.data().to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,7 +504,163 @@ mod tests {
 
     #[test]
     fn barrier_completes() {
-        run_mesh(5, |mut mesh| barrier(&mut mesh)).unwrap();
+        // non-power-of-two and power-of-two sizes, plus solo
+        for p in [1, 2, 3, 5, 8] {
+            run_mesh(p, |mut mesh| barrier(&mut mesh)).unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        // No rank may exit the barrier before every rank entered it.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let entered = Arc::new(AtomicUsize::new(0));
+        let e = entered.clone();
+        run_mesh(6, move |mut mesh| {
+            if mesh.rank() == 3 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            e.fetch_add(1, Ordering::SeqCst);
+            barrier(&mut mesh)?;
+            Ok(e.load(Ordering::SeqCst))
+        })
+        .unwrap()
+        .into_iter()
+        .for_each(|seen| assert_eq!(seen, 6, "rank left barrier before all entered"));
+    }
+
+    #[test]
+    fn allgather_flat_matches_legacy() {
+        for p in [1usize, 2, 3, 5] {
+            let results = run_mesh(p, move |mut mesh| {
+                // ragged: rank r contributes r+1 elements
+                let mine: Vec<f64> = (0..mesh.rank() + 1).map(|i| (mesh.rank() * 10 + i) as f64).collect();
+                let counts: Vec<usize> = (0..p).map(|r| r + 1).collect();
+                allgather_flat(&mut mesh, &mine, &counts)
+            })
+            .unwrap();
+            let mut want = Vec::new();
+            for r in 0..p {
+                want.extend((0..r + 1).map(|i| (r * 10 + i) as f64));
+            }
+            for got in results {
+                assert_eq!(got, want, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_flat_rejects_bad_counts() {
+        let results = run_mesh(2, |mut mesh| {
+            let mine = vec![1.0];
+            Ok(allgather_flat(&mut mesh, &mine, &[2, 2]).is_err())
+        })
+        .unwrap();
+        assert!(results.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ring_shift_rotates() {
+        for p in [2usize, 3, 5] {
+            let results = run_mesh(p, move |mut mesh| {
+                let rank = mesh.rank();
+                let to = (rank + p - 1) % p; // send to prev
+                let from = (rank + 1) % p; // receive from next
+                ring_shift(&mut mesh, to, &[rank as f64; 4], from)
+            })
+            .unwrap();
+            for (r, got) in results.iter().enumerate() {
+                assert_eq!(got, &vec![((r + 1) % p) as f64; 4], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_pipeline_multi_step_large_frames() {
+        // Multiple in-flight shifts with frames far above socket buffers:
+        // the dedicated threads must keep both directions draining.
+        let p = 3usize;
+        let steps = 3usize;
+        let n = 200_000usize; // ~1.6 MB frames
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let to = (rank + p - 1) % p;
+            let from = (rank + 1) % p;
+            let pipe =
+                RingPipeline::new(&mut mesh, to, from, steps, 0, vec![FrameShape::Any; steps])?;
+            let mut cur = std::sync::Arc::new(
+                DenseMatrix::from_vec(n, 1, vec![rank as f64; n]).unwrap(),
+            );
+            for _ in 0..steps {
+                pipe.send_own(cur.clone())?;
+                cur = pipe.recv()?;
+            }
+            pipe.finish()?;
+            // after `steps` shifts towards prev, we hold the panel of
+            // rank (rank + steps) % p
+            Ok(cur.data()[0])
+        })
+        .unwrap();
+        for (r, got) in results.iter().enumerate() {
+            assert_eq!(*got, ((r + steps) % p) as f64);
+        }
+    }
+
+    #[test]
+    fn ring_pipeline_store_and_forward() {
+        // The dist_gemm shape: one own frame per rank, forwarded around
+        // the ring by the pipeline itself. Rank r must receive origins
+        // r+1 then r+2 (the second via rank r+1's automatic forward).
+        // Frames are ~2 MB — above loopback socket buffering, so the
+        // forward path runs under real backpressure.
+        let p = 3usize;
+        let side = 500usize;
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let to = (rank + p - 1) % p;
+            let from = (rank + 1) % p;
+            // 2 inbound frames; forward only the first (the second's
+            // origin is `to`, whose last recipient we are)
+            let pipe = RingPipeline::new(
+                &mut mesh,
+                to,
+                from,
+                1,
+                1,
+                vec![FrameShape::Matrix(side, side); 2],
+            )?;
+            let own = std::sync::Arc::new(
+                DenseMatrix::from_vec(side, side, vec![rank as f64; side * side]).unwrap(),
+            );
+            pipe.send_own(own)?;
+            let first = pipe.recv()?;
+            let second = pipe.recv()?;
+            pipe.finish()?;
+            Ok((first.data()[0], *first.data().last().unwrap(), second.data()[0]))
+        })
+        .unwrap();
+        for (r, &(first, first_last, second)) in results.iter().enumerate() {
+            assert_eq!(first, ((r + 1) % p) as f64);
+            assert_eq!(first_last, ((r + 1) % p) as f64);
+            assert_eq!(second, ((r + 2) % p) as f64);
+        }
+    }
+
+    #[test]
+    fn ring_pipeline_shape_mismatch_is_error() {
+        let results = run_mesh(2, |mut mesh| {
+            let peer = 1 - mesh.rank();
+            let pipe =
+                RingPipeline::new(&mut mesh, peer, peer, 1, 0, vec![FrameShape::Matrix(3, 2)])?;
+            pipe.send_own(std::sync::Arc::new(
+                DenseMatrix::from_vec(2, 2, vec![1.0; 4]).unwrap(),
+            ))?;
+            // peer sent 4 doubles, we expect 6 -> receiver reports error
+            Ok(pipe.recv().is_err())
+        })
+        .unwrap();
+        assert!(results.iter().all(|&e| e));
     }
 
     #[test]

@@ -147,13 +147,21 @@ impl Mesh {
         Ok(buf)
     }
 
-    /// Send a f64 slice (raw LE bytes — the collective hot path).
+    /// Send a f64 slice (raw LE bytes — the collective hot path). On LE
+    /// hosts the payload is written straight from the caller's slice (no
+    /// staging copy); the BE fallback converts through a byte buffer.
     pub fn send_f64s(&mut self, to: usize, data: &[f64]) -> Result<()> {
-        let mut bytes = Vec::with_capacity(data.len() * 8);
-        for v in data {
-            bytes.extend_from_slice(&v.to_le_bytes());
-        }
-        self.send(to, &bytes)
+        let s = self.conn(to)?;
+        write_f64_frame(s, data)
+    }
+
+    /// Clone the socket to `peer` for a helper thread (the overlapped
+    /// send/recv pipelines in `collectives` run dedicated threads per
+    /// direction over these handles). The caller owns the framing
+    /// discipline: while a cloned handle is in use, nothing else may
+    /// read (for a recv clone) or write (for a send clone) that link.
+    pub(crate) fn clone_conn(&mut self, peer: usize) -> Result<TcpStream> {
+        Ok(self.conn(peer)?.try_clone()?)
     }
 
     /// Deadlock-free simultaneous exchange: send `payload` to `to` while
@@ -190,12 +198,94 @@ impl Mesh {
     }
 
     pub fn recv_f64s(&mut self, from: usize) -> Result<Vec<f64>> {
-        let bytes = self.recv(from)?;
-        if bytes.len() % 8 != 0 {
-            return Err(Error::Protocol("f64 frame not multiple of 8".into()));
-        }
-        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+        let s = self.conn(from)?;
+        recv_f64_frame(s)
     }
+
+    /// Receive one f64 frame into a caller-provided slice whose length
+    /// must match the frame exactly (flat collectives receive straight
+    /// into their pre-sized output, no intermediate Vec).
+    pub fn recv_f64s_into(&mut self, from: usize, out: &mut [f64]) -> Result<()> {
+        let s = self.conn(from)?;
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n != out.len() * 8 {
+            return Err(Error::Protocol(format!(
+                "f64 frame is {n} bytes, expected {}",
+                out.len() * 8
+            )));
+        }
+        read_f64s_exact(s, out)
+    }
+}
+
+/// View a f64 slice as raw bytes (LE hosts only; f64 has no padding and
+/// u8 alignment is never stricter).
+#[cfg(target_endian = "little")]
+pub(crate) fn f64s_as_bytes(v: &[f64]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+/// Write one length-prefixed f64 frame (the comm wire format used by all
+/// point-to-point f64 traffic, including the overlapped ring pipelines'
+/// dedicated sender threads).
+pub(crate) fn write_f64_frame(w: &mut impl Write, data: &[f64]) -> Result<()> {
+    let byte_len = data.len() * 8;
+    if byte_len > MAX_COMM_FRAME {
+        return Err(Error::Protocol("comm frame too large".into()));
+    }
+    w.write_all(&(byte_len as u32).to_le_bytes())?;
+    #[cfg(target_endian = "little")]
+    {
+        w.write_all(f64s_as_bytes(data))?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut bytes = Vec::with_capacity(byte_len);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+/// Read exactly `out.len()` f64s from `r` (single `read_exact` into the
+/// slice's byte view on LE hosts).
+pub(crate) fn read_f64s_exact(r: &mut impl Read, out: &mut [f64]) -> Result<()> {
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), std::mem::size_of_val(out))
+        };
+        r.read_exact(bytes)?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut buf = vec![0u8; out.len() * 8];
+        r.read_exact(&mut buf)?;
+        for (dst, c) in out.iter_mut().zip(buf.chunks_exact(8)) {
+            *dst = f64::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+    Ok(())
+}
+
+/// Read one length-prefixed f64 frame from `r` into a fresh Vec.
+pub(crate) fn recv_f64_frame(r: &mut impl Read) -> Result<Vec<f64>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_COMM_FRAME {
+        return Err(Error::Protocol(format!("comm frame length {n} exceeds cap")));
+    }
+    if n % 8 != 0 {
+        return Err(Error::Protocol("f64 frame not multiple of 8".into()));
+    }
+    let mut out = vec![0.0f64; n / 8];
+    read_f64s_exact(r, &mut out)?;
+    Ok(out)
 }
 
 fn dial_with_retry(addr: &str) -> Result<TcpStream> {
@@ -278,6 +368,26 @@ mod tests {
         })
         .unwrap();
         assert_eq!(results[1], vec![1.5, -2.5, 1e300]);
+    }
+
+    #[test]
+    fn recv_f64s_into_checks_length() {
+        let results = run_mesh(2, |mut mesh| {
+            if mesh.rank() == 0 {
+                mesh.send_f64s(1, &[1.0, 2.0, 3.0])?;
+                mesh.send_f64s(1, &[4.0])?;
+                Ok(vec![])
+            } else {
+                let mut buf = [0.0f64; 3];
+                mesh.recv_f64s_into(0, &mut buf)?;
+                // wrong-size target is a protocol error (frame has 1 f64)
+                let mut wrong = [0.0f64; 2];
+                assert!(mesh.recv_f64s_into(0, &mut wrong).is_err());
+                Ok(buf.to_vec())
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -48,6 +48,36 @@ impl Default for ServerConfig {
     }
 }
 
+/// Compute-plane knobs (the distributed GEMM algorithm; see
+/// `elemental/dist_gemm.rs` and DESIGN.md §Compute plane).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeConfig {
+    /// Distributed GEMM algorithm: "ring" (ring-pipelined B-panel
+    /// rotation with compute/comm overlap — the default) or "allgather"
+    /// (materialize full B per rank — the ablation baseline).
+    pub dist_gemm_algo: String,
+    /// Split each owned B panel into sub-panels of at most this many rows
+    /// before shifting (finer overlap granularity, lower peak memory);
+    /// 0 = shift whole owned panels.
+    pub ring_panel_rows: u32,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig { dist_gemm_algo: "ring".into(), ring_panel_rows: 0 }
+    }
+}
+
+impl ComputeConfig {
+    /// Resolve into the typed options `dist_gemm_with` takes.
+    pub fn dist_gemm_options(&self) -> Result<crate::elemental::dist_gemm::DistGemmOptions> {
+        Ok(crate::elemental::dist_gemm::DistGemmOptions {
+            algo: crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.dist_gemm_algo)?,
+            panel_rows: self.ring_panel_rows as usize,
+        })
+    }
+}
+
 /// Data-plane transfer knobs (the client-side per-owner sender pipeline;
 /// see `client/transfer.rs` and DESIGN.md §Data plane).
 #[derive(Debug, Clone, PartialEq)]
@@ -157,6 +187,7 @@ impl Default for BenchConfig {
 pub struct Config {
     pub server: ServerConfig,
     pub sched: SchedConfig,
+    pub compute: ComputeConfig,
     pub transfer: TransferConfig,
     pub sparklet: SparkletConfig,
     pub bench: BenchConfig,
@@ -228,6 +259,11 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sched.max_jobs_per_session" => cfg.sched.max_jobs_per_session = parse(key, val)?,
         "sched.wait_timeout_ms" => cfg.sched.wait_timeout_ms = parse(key, val)?,
         "sched.waitjob_block_ms" => cfg.sched.waitjob_block_ms = parse(key, val)?,
+        "compute.dist_gemm_algo" => {
+            crate::elemental::dist_gemm::DistGemmAlgo::parse(val)?;
+            cfg.compute.dist_gemm_algo = val.to_string();
+        }
+        "compute.ring_panel_rows" => cfg.compute.ring_panel_rows = parse(key, val)?,
         "transfer.sender_threads" => cfg.transfer.sender_threads = parse(key, val)?,
         "transfer.slab_bytes" => cfg.transfer.slab_bytes = parse(key, val)?,
         "transfer.channel_depth" => cfg.transfer.channel_depth = parse(key, val)?,
@@ -297,6 +333,8 @@ impl Config {
         if self.sched.wait_timeout_ms == 0 {
             return Err(Error::Config("sched.wait_timeout_ms must be >= 1".into()));
         }
+        // re-validate in case the struct was mutated directly
+        crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.compute.dist_gemm_algo)?;
         if self.transfer.sender_threads == 0 {
             return Err(Error::Config("transfer.sender_threads must be >= 1".into()));
         }
@@ -369,6 +407,22 @@ scale = 0.5
         assert_eq!(cfg.sched.wait_timeout_ms, 500);
         assert_eq!(cfg.sched.waitjob_block_ms, 100);
         cfg.sched.waitjob_block_ms = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn compute_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.compute.dist_gemm_algo, "ring");
+        cfg.apply_overrides(&["compute.dist_gemm_algo=allgather", "compute.ring_panel_rows=32"])
+            .unwrap();
+        assert_eq!(cfg.compute.dist_gemm_algo, "allgather");
+        assert_eq!(cfg.compute.ring_panel_rows, 32);
+        let opts = cfg.compute.dist_gemm_options().unwrap();
+        assert_eq!(opts.algo, crate::elemental::dist_gemm::DistGemmAlgo::AllGatherB);
+        assert_eq!(opts.panel_rows, 32);
+        assert!(cfg.apply_overrides(&["compute.dist_gemm_algo=summa3d"]).is_err());
+        cfg.compute.dist_gemm_algo = "bogus".into();
         assert!(cfg.validate().is_err());
     }
 

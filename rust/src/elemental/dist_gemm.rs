@@ -1,21 +1,38 @@
 //! Distributed GEMM — the Elemental `Gemm` substitute that Alchemist wraps
 //! for the Table 1 experiment.
 //!
-//! Decomposition (1D, panel-replicated): A (m x k) and C (m x n) are
-//! row-distributed; B (k x n) is all-gathered so every worker holds it,
-//! then each worker computes its C panel with a *local* GEMM:
+//! Decomposition (1D over rows): A (m x k) and C (m x n) are
+//! row-distributed; B (k x n) is row-distributed in RowBlock panels.
+//! Two algorithms, selected by [`DistGemmAlgo`]:
 //!
-//! ```text
-//!   C_local = A_local · B         (one call per worker, no further comm)
-//! ```
+//! * **RingPipelined** (default) — 1D SUMMA variant: B's row-panels
+//!   rotate around the ring while every rank accumulates
+//!   `C_local += A_local[:, k_o..] · B_panel(o)` with the pluggable
+//!   [`GemmBackend`]. A dedicated sender/receiver thread pair per rank
+//!   ([`collectives::RingPipeline`]) overlaps the shift of the next panel
+//!   with compute on the current one; after the first panel the
+//!   communication hides behind compute. Peak extra B memory per rank is
+//!   **two panels** (≤ 2·ceil(k/p)·n doubles, asserted by the prop suite
+//!   through [`dist_gemm_ring_with_stats`]); the full B is never
+//!   materialized anywhere.
 //!
-//! The local GEMM goes through a pluggable [`GemmBackend`] — the PJRT
-//! Pallas-tile path in production (`runtime::PjrtBackend`), the native
-//! blocked kernel as fallback/ablation.
+//! * **AllGatherB** — the legacy baseline: all-gather the whole B onto
+//!   every rank (O(k·n) memory, all communication up front), then run the
+//!   *same* panel-by-panel local schedule. Because both algorithms feed
+//!   the backend identical (A-slice, B-panel, C) calls in identical
+//!   order, their outputs are **bit-identical** — the ablation
+//!   (`table1_matmul`, `ablate_gemm_backend`) measures pure
+//!   communication/overlap effects.
+//!
+//! Per-rank compute vs shift-wait time and the peak panel footprint are
+//! recorded in [`crate::metrics::compute_metrics`].
+
+use std::sync::Arc;
 
 use crate::comm::{collectives, Mesh};
-use crate::elemental::LocalPanel;
+use crate::elemental::{Layout, LocalPanel};
 use crate::linalg::DenseMatrix;
+use crate::metrics::{compute_metrics, Timer};
 use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
 use crate::{Error, Result};
 
@@ -48,25 +65,83 @@ impl GemmBackend for NativeBackend {
     }
 }
 
+/// Which distributed-GEMM algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DistGemmAlgo {
+    /// Materialize full B on every rank, then sweep panels locally.
+    AllGatherB,
+    /// Rotate B row-panels around the ring, overlapping shift and
+    /// compute (the default).
+    #[default]
+    RingPipelined,
+}
+
+impl DistGemmAlgo {
+    /// Parse the config / routine-param spelling ("ring" | "allgather").
+    pub fn parse(s: &str) -> Result<DistGemmAlgo> {
+        match s {
+            "ring" => Ok(DistGemmAlgo::RingPipelined),
+            "allgather" => Ok(DistGemmAlgo::AllGatherB),
+            other => Err(Error::Config(format!(
+                "dist_gemm algo must be ring|allgather, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistGemmAlgo::AllGatherB => "allgather",
+            DistGemmAlgo::RingPipelined => "ring",
+        }
+    }
+}
+
+/// Tunables for [`dist_gemm_with`] (the `[compute]` config section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DistGemmOptions {
+    pub algo: DistGemmAlgo,
+    /// Split each owned B panel into sub-panels of at most this many rows
+    /// before shifting (finer pipelining granularity); 0 = shift whole
+    /// owned panels (the default, and the 2-panel memory contract).
+    pub panel_rows: usize,
+}
+
+/// Per-call observability from the ring path (test hook + metrics feed).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RingStats {
+    /// High-water mark of B-panel doubles resident on this rank
+    /// (compute panel + receiver prefetch + any not-yet-retired
+    /// in-flight send).
+    pub peak_b_doubles: usize,
+    /// Time inside the local GEMM kernel.
+    pub compute_s: f64,
+    /// Time stalled on the pipeline (enqueueing sends + awaiting recvs).
+    pub wait_s: f64,
+    /// Panels shifted through this rank.
+    pub shifts: usize,
+}
+
 /// All-gather a row-distributed matrix so every rank holds the full thing.
-/// Requires RowBlock layout (panels concatenate contiguously).
+/// Requires RowBlock layout (panels concatenate contiguously). Gathers
+/// straight into one flat pre-sized buffer (`collectives::allgather_flat`)
+/// — no per-rank `Vec` staging, no re-concatenation copy.
 pub fn allgather_matrix(mesh: &mut Mesh, panel: &LocalPanel) -> Result<DenseMatrix> {
     if panel.meta.layout.kind != LayoutKind::RowBlock {
         return Err(Error::Shape(
             "allgather_matrix requires RowBlock layout (redistribute first)".into(),
         ));
     }
-    let parts = collectives::allgather(mesh, panel.local().data())?;
+    let layout = panel.layout();
     let cols = panel.meta.cols as usize;
-    let mut data = Vec::with_capacity(panel.meta.rows as usize * cols);
-    for part in parts {
-        data.extend_from_slice(&part);
-    }
-    DenseMatrix::from_vec(panel.meta.rows as usize, cols, data)
+    let counts: Vec<usize> =
+        (0..layout.slots).map(|s| layout.local_count(s) as usize * cols).collect();
+    let flat = collectives::allgather_flat(mesh, panel.local().data(), &counts)?;
+    DenseMatrix::from_vec(panel.meta.rows as usize, cols, flat)
 }
 
-/// SPMD distributed GEMM: every session worker passes its panels of A and
-/// B; returns its panel of C = A·B with C row-distributed like A.
+/// SPMD distributed GEMM with the default options (ring-pipelined, whole
+/// owned panels): every session worker passes its panels of A and B;
+/// returns its panel of C = A·B with C row-distributed like A.
 pub fn dist_gemm(
     mesh: &mut Mesh,
     a: &LocalPanel,
@@ -74,6 +149,60 @@ pub fn dist_gemm(
     c_handle: u64,
     backend: &dyn GemmBackend,
 ) -> Result<LocalPanel> {
+    dist_gemm_with(mesh, a, b, c_handle, backend, &DistGemmOptions::default())
+}
+
+/// SPMD distributed GEMM with explicit algorithm/panel options.
+pub fn dist_gemm_with(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+    opts: &DistGemmOptions,
+) -> Result<LocalPanel> {
+    validate_operands(mesh, a, b)?;
+    let rank = mesh.rank();
+    let m = compute_metrics();
+    let c_local = match opts.algo {
+        DistGemmAlgo::AllGatherB => {
+            m.counters.add("allgather_gemms", 1);
+            dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows)?
+        }
+        DistGemmAlgo::RingPipelined => {
+            m.counters.add("ring_gemms", 1);
+            let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, opts.panel_rows)?;
+            m.phases.add(
+                &format!("ring_compute_r{rank}"),
+                std::time::Duration::from_secs_f64(stats.compute_s),
+            );
+            m.phases.add(
+                &format!("ring_wait_r{rank}"),
+                std::time::Duration::from_secs_f64(stats.wait_s),
+            );
+            m.peak_b_doubles.set_max(stats.peak_b_doubles as i64);
+            c_local
+        }
+    };
+    wrap_output(a, b, c_handle, c_local)
+}
+
+/// Ring-pipelined distributed GEMM returning the per-rank [`RingStats`] —
+/// the prop suite asserts the two-panel memory contract through this.
+pub fn dist_gemm_ring_with_stats(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+    panel_rows: usize,
+) -> Result<(LocalPanel, RingStats)> {
+    validate_operands(mesh, a, b)?;
+    let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, panel_rows)?;
+    Ok((wrap_output(a, b, c_handle, c_local)?, stats))
+}
+
+fn validate_operands(mesh: &Mesh, a: &LocalPanel, b: &LocalPanel) -> Result<()> {
     if a.meta.cols != b.meta.rows {
         return Err(Error::Shape(format!(
             "dist_gemm: A is {}x{}, B is {}x{}",
@@ -83,8 +212,28 @@ pub fn dist_gemm(
     if a.meta.layout.kind != LayoutKind::RowBlock {
         return Err(Error::Shape("dist_gemm requires RowBlock A".into()));
     }
-    let b_full = allgather_matrix(mesh, b)?;
-    let c_local = backend.gemm(a.local(), &b_full)?;
+    if b.meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape("dist_gemm requires RowBlock B".into()));
+    }
+    let p = mesh.size() as u32;
+    if a.layout().slots != p || b.layout().slots != p {
+        return Err(Error::Shape(format!(
+            "dist_gemm: A has {} owners, B has {}, mesh has {p} ranks",
+            a.layout().slots,
+            b.layout().slots
+        )));
+    }
+    let rank = mesh.rank() as u32;
+    if a.slot != rank || b.slot != rank {
+        return Err(Error::Shape(format!(
+            "dist_gemm: rank {rank} holds A slot {} / B slot {} (slots must follow mesh ranks)",
+            a.slot, b.slot
+        )));
+    }
+    Ok(())
+}
+
+fn wrap_output(a: &LocalPanel, b: &LocalPanel, c_handle: u64, c_local: DenseMatrix) -> Result<LocalPanel> {
     let c_meta = MatrixMeta {
         handle: c_handle,
         rows: a.meta.rows,
@@ -92,6 +241,181 @@ pub fn dist_gemm(
         layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: a.meta.layout.owners.clone() },
     };
     LocalPanel::from_local(c_meta, a.slot, c_local)
+}
+
+/// Contiguous global k-ranges `(k0, rows)` of `origin`'s owned B rows,
+/// split into chunks of at most `panel_rows` rows (0 = one chunk).
+fn sub_panels(layout: &Layout, origin: u32, panel_rows: usize) -> Vec<(u64, usize)> {
+    let count = layout.local_count(origin) as usize;
+    if count == 0 {
+        return Vec::new();
+    }
+    let start = layout.global_index(origin, 0);
+    let w = if panel_rows == 0 { count } else { panel_rows };
+    let mut out = Vec::with_capacity((count + w - 1) / w);
+    let mut off = 0usize;
+    while off < count {
+        let rows = w.min(count - off);
+        out.push((start + off as u64, rows));
+        off += rows;
+    }
+    out
+}
+
+/// `C_local += A_local[:, k0..k0+panel.rows()] · panel`. The one place
+/// both algorithms call the backend — identical calls in identical order
+/// is what makes ring and allgather outputs bit-identical.
+///
+/// The A column slice is materialized with `block_padded` (one extra
+/// copy of A_local per dist_gemm call, amortized over the panels). This
+/// is deliberate: the pluggable backend takes whole `DenseMatrix`
+/// operands (the PJRT path uploads them as-is), and the copy is
+/// O(m·k) against the call's O(m·k·n) FLOPs — noise for any n beyond a
+/// few columns. Fusing the slice into `pack_a` would save it for the
+/// native backend only, at the cost of a second backend entry point.
+fn accumulate_panel(
+    backend: &dyn GemmBackend,
+    a_local: &DenseMatrix,
+    k0: usize,
+    panel: &DenseMatrix,
+    c: &mut DenseMatrix,
+) -> Result<()> {
+    if panel.rows() == 0 {
+        return Ok(());
+    }
+    let a_cols = a_local.block_padded(0, k0, a_local.rows(), panel.rows());
+    backend.gemm_acc(&a_cols, panel, c)
+}
+
+/// Legacy baseline: materialize full B, then run the identical cyclic
+/// panel schedule the ring uses.
+fn dist_gemm_allgather_local(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    backend: &dyn GemmBackend,
+    panel_rows: usize,
+) -> Result<DenseMatrix> {
+    let b_full = allgather_matrix(mesh, b)?;
+    let p = mesh.size();
+    let rank = mesh.rank();
+    let layout_b = b.layout();
+    let n = b.meta.cols as usize;
+    let mut c = DenseMatrix::zeros(a.local_rows(), n);
+    for d in 0..p {
+        let origin = ((rank + d) % p) as u32;
+        for (k0, rows) in sub_panels(&layout_b, origin, panel_rows) {
+            let panel = b_full.block_padded(k0 as usize, 0, rows, n);
+            accumulate_panel(backend, a.local(), k0 as usize, &panel, &mut c)?;
+        }
+    }
+    Ok(c)
+}
+
+/// The ring: rank r sends panels to r-1 and receives from r+1, so the
+/// panel that originated at rank o reaches rank r after (o − r) mod p
+/// hops — every rank processes origins in cyclic order r, r+1, …, r−1.
+/// Forwarding is handled inside [`collectives::RingPipeline`]: the wire
+/// order is this rank's own panels followed by every received panel
+/// except those of origin `to` (whose last recipient we are).
+fn dist_gemm_ring_local(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    backend: &dyn GemmBackend,
+    panel_rows: usize,
+) -> Result<(DenseMatrix, RingStats)> {
+    let p = mesh.size();
+    let rank = mesh.rank();
+    let layout_b = b.layout();
+    let n = b.meta.cols as usize;
+    let mut c = DenseMatrix::zeros(a.local_rows(), n);
+    let mut stats = RingStats::default();
+
+    // Schedule: (origin, k0, rows) in compute order.
+    let schedule: Vec<(u32, u64, usize)> = (0..p)
+        .flat_map(|d| {
+            let origin = ((rank + d) % p) as u32;
+            sub_panels(&layout_b, origin, panel_rows)
+                .into_iter()
+                .map(move |(k0, rows)| (origin, k0, rows))
+        })
+        .collect();
+
+    if p == 1 {
+        let t = Timer::start();
+        for &(_, k0, rows) in &schedule {
+            let li0 = layout_b.local_index(k0) as usize;
+            let panel = DenseMatrix::from_vec(
+                rows,
+                n,
+                b.local().data()[li0 * n..(li0 + rows) * n].to_vec(),
+            )?;
+            stats.peak_b_doubles = stats.peak_b_doubles.max(rows * n);
+            accumulate_panel(backend, a.local(), k0 as usize, &panel, &mut c)?;
+        }
+        stats.compute_s = t.elapsed_secs();
+        return Ok((c, stats));
+    }
+
+    let to = (rank + p - 1) % p;
+    let from = (rank + 1) % p;
+    let own_frames = sub_panels(&layout_b, rank as u32, panel_rows).len();
+    let remote: Vec<usize> =
+        schedule.iter().filter(|&&(o, _, _)| o as usize != rank).map(|&(_, _, r)| r).collect();
+    let shapes: Vec<collectives::FrameShape> =
+        remote.iter().map(|&rows| collectives::FrameShape::Matrix(rows, n)).collect();
+    // Frames of origin `to` terminate here; everything else is forwarded.
+    let forward_frames = remote.len() - sub_panels(&layout_b, to as u32, panel_rows).len();
+
+    // Peak B residency, from the pipeline's channel discipline (see
+    // RingPipeline docs): during the own-panel burst, all own copies
+    // (≤ one whole panel) plus the receiver's first in-progress read
+    // coexist; from then on a compute panel coexists with exactly one of
+    // (previous frame draining onto the wire | next frame being read).
+    let own_total: usize = schedule
+        .iter()
+        .filter(|&&(o, _, _)| o as usize == rank)
+        .map(|&(_, _, r)| r * n)
+        .sum();
+    let mut peak = if remote.is_empty() { own_total } else { 0 };
+    for i in 0..remote.len() {
+        let prev = if i == 0 { own_total } else { remote[i - 1] * n };
+        let next = remote.get(i + 1).map(|&r| r * n).unwrap_or(0);
+        peak = peak.max(remote[i] * n + prev.max(next));
+    }
+    stats.peak_b_doubles = peak;
+
+    let pipe = collectives::RingPipeline::new(mesh, to, from, own_frames, forward_frames, shapes)?;
+
+    for &(origin, k0, rows) in &schedule {
+        let panel: Arc<DenseMatrix> = if origin as usize == rank {
+            let li0 = layout_b.local_index(k0) as usize;
+            let arc = Arc::new(DenseMatrix::from_vec(
+                rows,
+                n,
+                b.local().data()[li0 * n..(li0 + rows) * n].to_vec(),
+            )?);
+            let t = Timer::start();
+            pipe.send_own(arc.clone())?;
+            stats.wait_s += t.elapsed_secs();
+            arc
+        } else {
+            let t = Timer::start();
+            let got = pipe.recv()?; // shape-checked by the receiver
+            stats.wait_s += t.elapsed_secs();
+            got
+        };
+        stats.shifts += 1;
+
+        let t = Timer::start();
+        accumulate_panel(backend, a.local(), k0 as usize, &panel, &mut c)?;
+        stats.compute_s += t.elapsed_secs();
+    }
+    let t = Timer::start();
+    pipe.finish()?;
+    stats.wait_s += t.elapsed_secs();
+    Ok((c, stats))
 }
 
 /// Distributed Frobenius norm: local partial + scalar all-reduce.
@@ -124,7 +448,6 @@ mod tests {
     use crate::elemental::panel::{gather_matrix, scatter_matrix};
     use crate::linalg::gemm::gemm;
     use crate::workload::random_matrix;
-    use std::sync::Arc;
 
     fn meta(handle: u64, rows: u64, cols: u64, p: u32) -> MatrixMeta {
         MatrixMeta {
@@ -135,23 +458,122 @@ mod tests {
         }
     }
 
-    #[test]
-    fn dist_gemm_matches_local() {
-        let (m, k, n, p) = (37u64, 11u64, 8u64, 3usize);
-        let a_full = DenseMatrix::from_vec(m as usize, k as usize, random_matrix(1, m as usize, k as usize)).unwrap();
-        let b_full = DenseMatrix::from_vec(k as usize, n as usize, random_matrix(2, k as usize, n as usize)).unwrap();
+    fn run_dist_gemm(
+        m: u64,
+        k: u64,
+        n: u64,
+        p: usize,
+        opts: DistGemmOptions,
+        seed: u64,
+    ) -> (DenseMatrix, DenseMatrix) {
+        let a_full =
+            DenseMatrix::from_vec(m as usize, k as usize, random_matrix(seed, m as usize, k as usize))
+                .unwrap();
+        let b_full = DenseMatrix::from_vec(
+            k as usize,
+            n as usize,
+            random_matrix(seed + 1, k as usize, n as usize),
+        )
+        .unwrap();
         let a_panels = Arc::new(scatter_matrix(&meta(1, m, k, p as u32), &a_full).unwrap());
         let b_panels = Arc::new(scatter_matrix(&meta(2, k, n, p as u32), &b_full).unwrap());
-        let (ap, bp) = (a_panels.clone(), b_panels.clone());
         let c_panels = run_mesh(p, move |mut mesh| {
             let rank = mesh.rank();
-            dist_gemm(&mut mesh, &ap[rank], &bp[rank], 3, &NativeBackend)
+            dist_gemm_with(&mut mesh, &a_panels[rank], &b_panels[rank], 3, &NativeBackend, &opts)
         })
         .unwrap();
         let c = gather_matrix(&c_panels).unwrap();
         let want = gemm(&a_full, &b_full).unwrap();
+        (c, want)
+    }
+
+    #[test]
+    fn dist_gemm_matches_local() {
+        let (c, want) = run_dist_gemm(37, 11, 8, 3, DistGemmOptions::default(), 1);
         assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
-        assert_eq!(c_panels[0].meta.handle, 3);
+    }
+
+    #[test]
+    fn both_algorithms_match_local_across_shapes() {
+        // ragged (p does not divide k), p > k, narrow sub-panels
+        for (m, k, n, p, w) in [
+            (20u64, 7u64, 5u64, 3usize, 0usize),
+            (9, 2, 4, 4, 0), // p > k: some ranks own no B rows
+            (16, 12, 6, 4, 2),
+            (8, 5, 3, 1, 2), // solo mesh
+        ] {
+            for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
+                let opts = DistGemmOptions { algo, panel_rows: w };
+                let (c, want) = run_dist_gemm(m, k, n, p, opts, 7);
+                assert!(
+                    c.max_abs_diff(&want).unwrap() < 1e-10,
+                    "{algo:?} m={m} k={k} n={n} p={p} w={w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_and_allgather_are_bitwise_equal() {
+        for (m, k, n, p, w) in [(21u64, 13u64, 9u64, 4usize, 0usize), (10, 6, 4, 3, 2)] {
+            let (ring, _) = run_dist_gemm(
+                m, k, n, p,
+                DistGemmOptions { algo: DistGemmAlgo::RingPipelined, panel_rows: w },
+                9,
+            );
+            let (agb, _) = run_dist_gemm(
+                m, k, n, p,
+                DistGemmOptions { algo: DistGemmAlgo::AllGatherB, panel_rows: w },
+                9,
+            );
+            assert_eq!(ring, agb, "m={m} k={k} n={n} p={p} w={w}");
+        }
+    }
+
+    #[test]
+    fn ring_memory_contract_and_stats() {
+        let (m, k, n, p) = (24u64, 10u64, 6u64, 3usize);
+        let a_full =
+            DenseMatrix::from_vec(m as usize, k as usize, random_matrix(3, m as usize, k as usize))
+                .unwrap();
+        let b_full =
+            DenseMatrix::from_vec(k as usize, n as usize, random_matrix(4, k as usize, n as usize))
+                .unwrap();
+        let a_panels = Arc::new(scatter_matrix(&meta(1, m, k, p as u32), &a_full).unwrap());
+        let b_panels = Arc::new(scatter_matrix(&meta(2, k, n, p as u32), &b_full).unwrap());
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            dist_gemm_ring_with_stats(
+                &mut mesh,
+                &a_panels[rank],
+                &b_panels[rank],
+                3,
+                &NativeBackend,
+                0,
+            )
+        })
+        .unwrap();
+        let bound = 2 * ((k as usize + p - 1) / p) * n as usize;
+        for (panel, stats) in &results {
+            assert!(
+                stats.peak_b_doubles <= bound,
+                "peak {} > 2·ceil(k/p)·n = {bound}",
+                stats.peak_b_doubles
+            );
+            assert_eq!(stats.shifts, p, "every origin's panel visits every rank once");
+            assert_eq!(panel.meta.handle, 3);
+        }
+        let c = gather_matrix(&results.iter().map(|(c, _)| c.clone()).collect::<Vec<_>>()).unwrap();
+        let want = gemm(&a_full, &b_full).unwrap();
+        assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn algo_parsing() {
+        assert_eq!(DistGemmAlgo::parse("ring").unwrap(), DistGemmAlgo::RingPipelined);
+        assert_eq!(DistGemmAlgo::parse("allgather").unwrap(), DistGemmAlgo::AllGatherB);
+        assert!(DistGemmAlgo::parse("summa3d").is_err());
+        assert_eq!(DistGemmAlgo::default().name(), "ring");
     }
 
     #[test]
@@ -168,6 +590,18 @@ mod tests {
         })
         .unwrap();
         assert!(res[0]);
+    }
+
+    #[test]
+    fn empty_matrices_are_fine() {
+        // k = 0 (no panels anywhere) and n = 0 (zero-width panels)
+        for (m, k, n, p) in [(6u64, 0u64, 4u64, 2usize), (6, 5, 0, 2), (0, 3, 2, 2)] {
+            for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
+                let (c, want) =
+                    run_dist_gemm(m, k, n, p, DistGemmOptions { algo, panel_rows: 0 }, 11);
+                assert_eq!(c, want, "{algo:?} m={m} k={k} n={n}");
+            }
+        }
     }
 
     #[test]

@@ -188,6 +188,14 @@ impl DenseMatrix {
     }
 }
 
+/// Flat row-major view (`data()` as a trait impl), letting matrices ride
+/// slice-generic plumbing.
+impl AsRef<[f64]> for DenseMatrix {
+    fn as_ref(&self) -> &[f64] {
+        &self.data
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,12 +1,24 @@
-//! Cache-blocked, multi-threaded native GEMM.
+//! Cache-blocked, multi-threaded native GEMM with packed panels and a
+//! 4x8 register micro-kernel.
 //!
 //! This is the *fallback / ablation baseline* for the node-local compute:
 //! the production hot path runs the AOT-compiled Pallas tile kernel through
 //! PJRT (see `runtime`), and `ablate_gemm_backend` compares the two.
 //!
-//! Blocking: (MC x KC) panels of A against (KC x NC) panels of B with a
-//! 4x4 register micro-kernel; parallelized over row panels with scoped
-//! threads (no dependency on a global pool).
+//! Blocking: (MC x KC) panels of A against (KC x NC) panels of B. Both
+//! operands are repacked into aligned contiguous buffers — A in MR-row
+//! strips stored column-major within the strip, B in NR-column strips
+//! stored row-major within the strip — so the MR x NR register
+//! micro-kernel streams both with unit stride. Parallelized over C row
+//! slabs with scoped threads (no dependency on a global pool).
+//!
+//! **Determinism contract** (the distributed-GEMM bitwise tests lean on
+//! this): for every C element the kernel performs one `c += a*b` per k,
+//! with k strictly ascending and the accumulator chain unbroken across
+//! panel/block boundaries (the micro-kernel loads C, accumulates
+//! sequentially in registers, stores back). Hence any row split and any
+//! k-partitioning into ascending contiguous panels produces bit-identical
+//! results to a single serial call.
 
 use crate::linalg::DenseMatrix;
 use crate::{Error, Result};
@@ -14,6 +26,9 @@ use crate::{Error, Result};
 const MC: usize = 64;
 const KC: usize = 256;
 const NC: usize = 256;
+/// Micro-kernel tile: MR rows of A x NR columns of B held in registers.
+const MR: usize = 4;
+const NR: usize = 8;
 
 /// C += A * B.
 pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
@@ -25,16 +40,13 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
             c.shape()
         )));
     }
-    if n == 0 {
+    if n == 0 || m == 0 {
         return Ok(());
     }
     let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-    let row_panels: Vec<usize> = (0..m).step_by(MC).collect();
-    if threads <= 1 || row_panels.len() <= 1 {
+    if threads <= 1 || m <= MC {
         let cd = c.data_mut();
-        for &i0 in &row_panels {
-            gemm_row_panel(a, b, cd, n, 0, i0, (i0 + MC).min(m));
-        }
+        gemm_row_panel(a, b, cd, n, 0, 0, m);
         return Ok(());
     }
 
@@ -54,12 +66,7 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
             rest = tail;
             let i0 = start;
             handles.push(scope.spawn(move || {
-                let mut ii = 0;
-                while ii < rows_here {
-                    let hi = (ii + MC).min(rows_here);
-                    gemm_row_panel(a, b, mine, c_cols, i0, i0 + ii, i0 + hi);
-                    ii = hi;
-                }
+                gemm_row_panel(a, b, mine, c_cols, i0, i0, i0 + rows_here);
             }));
             start += rows_here;
         }
@@ -70,10 +77,11 @@ pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result
     Ok(())
 }
 
-/// Panel update for global rows [gi0, gi1) of C, where `c_slab` is the
-/// row-major storage of C's rows starting at global row `c_row_base`
+/// Packed-panel update for global rows [gi0, gi1) of C, where `c_slab` is
+/// the row-major storage of C's rows starting at global row `c_row_base`
 /// (the serial path passes the whole matrix with base 0; the threaded
-/// path passes each thread's owned slab with its global offset).
+/// path passes each thread's owned slab with its global offset). Owns the
+/// per-thread packing buffers.
 fn gemm_row_panel(
     a: &DenseMatrix,
     b: &DenseMatrix,
@@ -85,51 +93,182 @@ fn gemm_row_panel(
 ) {
     let k = a.cols();
     let n = b.cols();
-    let mut kk = 0;
-    while kk < k {
-        let k1 = (kk + KC).min(k);
-        let mut jj = 0;
-        while jj < n {
-            let j1 = (jj + NC).min(n);
-            micro_block(a, b, c_slab, n_c, gi0, gi1, kk, k1, jj, j1, c_row_base);
-            jj = j1;
+    if gi1 <= gi0 || n == 0 {
+        return;
+    }
+    let mut ap: Vec<f64> = Vec::new();
+    let mut bp: Vec<f64> = Vec::new();
+    let mut jj = 0;
+    while jj < n {
+        let j1 = (jj + NC).min(n);
+        let mut kk = 0;
+        while kk < k {
+            let k1 = (kk + KC).min(k);
+            pack_b(b, kk, k1, jj, j1, &mut bp);
+            let mut ii = gi0;
+            while ii < gi1 {
+                let i1 = (ii + MC).min(gi1);
+                pack_a(a, ii, i1, kk, k1, &mut ap);
+                macro_kernel(
+                    &ap, &bp, k1 - kk, ii, i1, jj, j1, c_slab, n_c, c_row_base,
+                );
+                ii = i1;
+            }
+            kk = k1;
         }
-        kk = k1;
+        jj = j1;
     }
 }
 
-/// Inner kernel: C[gi0..gi1, j0..j1] += A[gi0..gi1, k0..k1] * B[k0..k1, j0..j1]
-/// with C's rows stored in `c_slab` starting at global row `c_row_base`.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn micro_block(
-    a: &DenseMatrix,
-    b: &DenseMatrix,
-    c_slab: &mut [f64],
-    n_c: usize,
-    gi0: usize,
-    gi1: usize,
-    k0: usize,
-    k1: usize,
-    j0: usize,
-    j1: usize,
-    c_row_base: usize,
-) {
-    for gi in gi0..gi1 {
-        let arow = a.row(gi);
-        let crow = &mut c_slab[(gi - c_row_base) * n_c..(gi - c_row_base + 1) * n_c];
-        for kk in k0..k1 {
-            let aik = arow[kk];
-            if aik == 0.0 {
-                continue;
+/// Pack A[i0..i1, k0..k1) into MR-row strips, column-major within each
+/// strip: `ap[strip*kc*MR + kl*MR + il] = A[i0 + strip*MR + il, k0 + kl]`,
+/// zero-padded in the row direction.
+fn pack_a(a: &DenseMatrix, i0: usize, i1: usize, k0: usize, k1: usize, ap: &mut Vec<f64>) {
+    let mc = i1 - i0;
+    let kc = k1 - k0;
+    let strips = (mc + MR - 1) / MR;
+    ap.clear();
+    ap.resize(strips * kc * MR, 0.0);
+    for strip in 0..strips {
+        let base = strip * kc * MR;
+        for il in 0..MR {
+            let gi = i0 + strip * MR + il;
+            if gi >= i1 {
+                break;
             }
-            let brow = b.row(kk);
-            // contiguous j-loop: auto-vectorizes
-            for j in j0..j1 {
-                crow[j] += aik * brow[j];
+            let arow = &a.row(gi)[k0..k1];
+            for (kl, &v) in arow.iter().enumerate() {
+                ap[base + kl * MR + il] = v;
             }
         }
     }
+}
+
+/// Pack B[k0..k1, j0..j1) into NR-column strips, row-major within each
+/// strip: `bp[strip*kc*NR + kl*NR + jl] = B[k0 + kl, j0 + strip*NR + jl]`,
+/// zero-padded in the column direction.
+fn pack_b(b: &DenseMatrix, k0: usize, k1: usize, j0: usize, j1: usize, bp: &mut Vec<f64>) {
+    let nc = j1 - j0;
+    let kc = k1 - k0;
+    let strips = (nc + NR - 1) / NR;
+    bp.clear();
+    bp.resize(strips * kc * NR, 0.0);
+    for kl in 0..kc {
+        let brow = &b.row(k0 + kl)[j0..j1];
+        for strip in 0..strips {
+            let js = strip * NR;
+            let w = NR.min(nc - js);
+            let dst = strip * kc * NR + kl * NR;
+            bp[dst..dst + w].copy_from_slice(&brow[js..js + w]);
+        }
+    }
+}
+
+/// Sweep the packed panels with the register micro-kernel, loading and
+/// storing C tiles around each call (edge tiles use the padded lanes of
+/// the accumulator, which are simply not stored back).
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    ap: &[f64],
+    bp: &[f64],
+    kc: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    c_slab: &mut [f64],
+    n_c: usize,
+    c_row_base: usize,
+) {
+    let mc = i1 - i0;
+    let nc = j1 - j0;
+    let m_strips = (mc + MR - 1) / MR;
+    let n_strips = (nc + NR - 1) / NR;
+    let mut acc = [0.0f64; MR * NR];
+    for ms in 0..m_strips {
+        let mr_valid = MR.min(mc - ms * MR);
+        let a_strip = &ap[ms * kc * MR..(ms + 1) * kc * MR];
+        for ns in 0..n_strips {
+            let nr_valid = NR.min(nc - ns * NR);
+            let b_strip = &bp[ns * kc * NR..(ns + 1) * kc * NR];
+            // load C tile (padded lanes zeroed so inf/nan in valid
+            // operand lanes cannot leak through a stale accumulator)
+            acc.fill(0.0);
+            for il in 0..mr_valid {
+                let row = (i0 + ms * MR + il - c_row_base) * n_c + j0 + ns * NR;
+                acc[il * NR..il * NR + nr_valid]
+                    .copy_from_slice(&c_slab[row..row + nr_valid]);
+            }
+            micro_kernel(kc, a_strip, b_strip, &mut acc);
+            for il in 0..mr_valid {
+                let row = (i0 + ms * MR + il - c_row_base) * n_c + j0 + ns * NR;
+                c_slab[row..row + nr_valid]
+                    .copy_from_slice(&acc[il * NR..il * NR + nr_valid]);
+            }
+        }
+    }
+}
+
+/// MR x NR register tile: one multiply-add per (element, k), k strictly
+/// ascending — the determinism contract. The fixed-bound inner loops
+/// unroll and vectorize across j.
+#[inline]
+fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+    for kl in 0..kc {
+        let a = &ap[kl * MR..kl * MR + MR];
+        let b = &bp[kl * NR..kl * NR + NR];
+        for il in 0..MR {
+            let aik = a[il];
+            let row = &mut acc[il * NR..il * NR + NR];
+            for jl in 0..NR {
+                row[jl] += aik * b[jl];
+            }
+        }
+    }
+}
+
+/// C += A * B with the pre-packing scalar kernel — kept as the ablation
+/// baseline for `micro_hotpaths` (packed vs unpacked). Serial.
+pub fn gemm_acc_unpacked(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb || c.shape() != (m, n) {
+        return Err(Error::Shape(format!(
+            "gemm: A {m}x{ka}, B {kb}x{n}, C {:?}",
+            c.shape()
+        )));
+    }
+    let cd = c.data_mut();
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut kk = 0;
+        while kk < ka {
+            let k1 = (kk + KC).min(ka);
+            let mut jj = 0;
+            while jj < n {
+                let j1 = (jj + NC).min(n);
+                for gi in i0..i1 {
+                    let arow = a.row(gi);
+                    let crow = &mut cd[gi * n..(gi + 1) * n];
+                    // no zero-skip: one add per k, exactly like the
+                    // packed kernel, so the two stay bit-identical even
+                    // for inputs with exact zeros / inf / -0.0
+                    for k in kk..k1 {
+                        let aik = arow[k];
+                        let brow = b.row(k);
+                        for j in jj..j1 {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+                jj = j1;
+            }
+            kk = k1;
+        }
+        i0 = i1;
+    }
+    Ok(())
 }
 
 /// C = A * B convenience.
@@ -140,6 +279,10 @@ pub fn gemm(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
 }
 
 /// C = Aᵀ * B (tall-A Gram products: Aᵀ(AV) in the SVD U-recovery).
+/// Row-split across scoped threads over C's rows (= A's columns): each
+/// thread streams all of A and B once and owns a disjoint slab of C, the
+/// same race-free split `gemm_acc` uses. Falls back to the serial rank-1
+/// loop for small problems.
 pub fn gemm_tn(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
     let (m, ka) = a.shape();
     let (mb, n) = b.shape();
@@ -147,19 +290,64 @@ pub fn gemm_tn(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
         return Err(Error::Shape(format!("gemm_tn: A {m}x{ka}, B {mb}x{n}")));
     }
     let mut c = DenseMatrix::zeros(ka, n);
-    // rank-1 accumulation: cache-friendly for row-major A and B
-    for i in 0..m {
-        let arow = a.row(i);
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    // flop cutoff: thread spawns cost ~10us; below ~0.5 MFLOP serial wins
+    if threads <= 1 || ka < 2 || m * ka * n < (1 << 18) {
+        gemm_tn_range(a, b, 0, ka, c.data_mut());
+        return Ok(c);
+    }
+    let c_data = c.data_mut();
+    std::thread::scope(|scope| {
+        let chunk = (ka + threads - 1) / threads;
+        let mut rest = &mut c_data[..];
+        let mut k_lo = 0usize;
+        let mut handles = Vec::new();
+        while k_lo < ka {
+            let rows_here = chunk.min(ka - k_lo);
+            let (mine, tail) = rest.split_at_mut(rows_here * n);
+            rest = tail;
+            let lo = k_lo;
+            handles.push(scope.spawn(move || {
+                gemm_tn_range(a, b, lo, lo + rows_here, mine);
+            }));
+            k_lo += rows_here;
+        }
+        for h in handles {
+            h.join().expect("gemm_tn worker panicked");
+        }
+    });
+    Ok(c)
+}
+
+/// Serial reference (rank-1 accumulation over the full k range) — the
+/// `micro_hotpaths` serial-vs-parallel ablation baseline.
+pub fn gemm_tn_serial(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let (m, ka) = a.shape();
+    let (mb, n) = b.shape();
+    if m != mb {
+        return Err(Error::Shape(format!("gemm_tn: A {m}x{ka}, B {mb}x{n}")));
+    }
+    let mut c = DenseMatrix::zeros(ka, n);
+    gemm_tn_range(a, b, 0, ka, c.data_mut());
+    Ok(c)
+}
+
+/// Accumulate C[k_lo..k_hi, :] += Σ_i A[i, k]·B[i, :] into `c_rows`
+/// (row-major storage of exactly those C rows). Streams A and B rows in
+/// ascending i — same per-element fold as the serial whole-matrix loop,
+/// so the threaded split is bit-identical to serial.
+fn gemm_tn_range(a: &DenseMatrix, b: &DenseMatrix, k_lo: usize, k_hi: usize, c_rows: &mut [f64]) {
+    let n = b.cols();
+    for i in 0..a.rows() {
+        let arow = &a.row(i)[k_lo..k_hi];
         let brow = b.row(i);
-        for (kk, &aik) in arow.iter().enumerate() {
+        for (kl, &aik) in arow.iter().enumerate() {
             if aik == 0.0 {
                 continue;
             }
-            let crow = c.row_mut(kk);
-            super::blas1::axpy(aik, brow, crow);
+            super::blas1::axpy(aik, brow, &mut c_rows[kl * n..(kl + 1) * n]);
         }
     }
-    Ok(c)
 }
 
 #[cfg(test)]
@@ -180,7 +368,16 @@ mod tests {
     #[test]
     fn gemm_matches_naive_various_shapes() {
         let mut rng = Rng::new(1);
-        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (64, 64, 64), (100, 33, 257), (130, 70, 65)] {
+        for (m, k, n) in [
+            (1, 1, 1),
+            (5, 7, 3),
+            (4, 9, 8),
+            (3, 5, 17), // NR edge
+            (6, 300, 11), // multiple KC panels
+            (64, 64, 64),
+            (100, 33, 257),
+            (130, 70, 65),
+        ] {
             let a = random(&mut rng, m, k);
             let b = random(&mut rng, k, n);
             let c = gemm(&a, &b).unwrap();
@@ -210,6 +407,56 @@ mod tests {
         let b2 = DenseMatrix::zeros(3, 2);
         let mut c_bad = DenseMatrix::zeros(3, 3);
         assert!(gemm_acc(&a, &b2, &mut c_bad).is_err());
+        assert!(gemm_acc_unpacked(&a, &b2, &mut c_bad).is_err());
+    }
+
+    #[test]
+    fn packed_matches_unpacked_bitwise() {
+        // Same fold order -> identical bits, not just close.
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(5, 7, 3), (64, 300, 40), (129, 17, 263)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let mut c1 = DenseMatrix::from_fn(m, n, |i, j| (i * 31 + j) as f64 * 0.25);
+            let mut c2 = c1.clone();
+            gemm_acc(&a, &b, &mut c1).unwrap();
+            gemm_acc_unpacked(&a, &b, &mut c2).unwrap();
+            assert_eq!(c1, c2, "packed vs unpacked differ at {m}x{k}x{n}");
+        }
+        // exact zeros in A against inf/-0.0 operands: both kernels must
+        // do the same one-add-per-k work (neither may skip zero terms)
+        let a = DenseMatrix::from_vec(1, 2, vec![0.0, 1.0]).unwrap();
+        let b = DenseMatrix::from_vec(2, 2, vec![f64::INFINITY, 0.0, 2.0, 3.0]).unwrap();
+        let mut c1 = DenseMatrix::from_vec(1, 2, vec![-0.0, -0.0]).unwrap();
+        let mut c2 = c1.clone();
+        gemm_acc(&a, &b, &mut c1).unwrap();
+        gemm_acc_unpacked(&a, &b, &mut c2).unwrap();
+        assert!(c1.get(0, 0).is_nan() && c2.get(0, 0).is_nan()); // 0*inf
+        assert_eq!(c1.data()[1].to_bits(), c2.data()[1].to_bits());
+    }
+
+    #[test]
+    fn k_panel_accumulation_is_bitwise_stable() {
+        // The determinism contract the ring GEMM relies on: accumulating
+        // ascending contiguous k-panels one gemm_acc at a time produces
+        // the exact bits of a single full-k call, for any panel split.
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (33, 41, 29);
+        let a = random(&mut rng, m, k);
+        let b = random(&mut rng, k, n);
+        let whole = gemm(&a, &b).unwrap();
+        for split in [1usize, 2, 3, 5, 40, 41] {
+            let mut c = DenseMatrix::zeros(m, n);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + split).min(k);
+                let a_cols = a.block_padded(0, k0, m, k1 - k0);
+                let b_rows = b.block_padded(k0, 0, k1 - k0, n);
+                gemm_acc(&a_cols, &b_rows, &mut c).unwrap();
+                k0 = k1;
+            }
+            assert_eq!(c, whole, "panel split {split} changed bits");
+        }
     }
 
     #[test]
@@ -221,6 +468,20 @@ mod tests {
         let want = gemm(&a.transpose(), &b).unwrap();
         assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
         assert!(gemm_tn(&DenseMatrix::zeros(3, 2), &DenseMatrix::zeros(4, 2)).is_err());
+        assert!(gemm_tn_serial(&DenseMatrix::zeros(3, 2), &DenseMatrix::zeros(4, 2)).is_err());
+    }
+
+    #[test]
+    fn gemm_tn_parallel_bitwise_matches_serial() {
+        // large enough to clear the flop cutoff -> threaded path
+        let mut rng = Rng::new(9);
+        let a = random(&mut rng, 200, 60);
+        let b = random(&mut rng, 200, 50);
+        let par = gemm_tn(&a, &b).unwrap();
+        let ser = gemm_tn_serial(&a, &b).unwrap();
+        assert_eq!(par, ser);
+        let want = gemm(&a.transpose(), &b).unwrap();
+        assert!(par.max_abs_diff(&want).unwrap() < 1e-9);
     }
 
     #[test]
@@ -231,5 +492,20 @@ mod tests {
         let b = random(&mut rng, 50, 40);
         let c = gemm(&a, &b).unwrap();
         assert!(c.max_abs_diff(&naive(&a, &b)).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        let a = DenseMatrix::zeros(0, 5);
+        let b = DenseMatrix::zeros(5, 4);
+        assert_eq!(gemm(&a, &b).unwrap().shape(), (0, 4));
+        let a2 = DenseMatrix::zeros(3, 0);
+        let b2 = DenseMatrix::zeros(0, 4);
+        assert_eq!(gemm(&a2, &b2).unwrap(), DenseMatrix::zeros(3, 4));
+        let a3 = DenseMatrix::zeros(3, 2);
+        let b3 = DenseMatrix::zeros(2, 0);
+        assert_eq!(gemm(&a3, &b3).unwrap().shape(), (3, 0));
+        // Aᵀ·B with zero shared rows: a 5x4 zero matrix
+        assert_eq!(gemm_tn(&a, &DenseMatrix::zeros(0, 4)).unwrap(), DenseMatrix::zeros(5, 4));
     }
 }

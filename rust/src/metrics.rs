@@ -118,6 +118,12 @@ impl Gauge {
         self.v.store(value, std::sync::atomic::Ordering::SeqCst);
     }
 
+    /// Raise the gauge to `value` if it is higher (high-water marks:
+    /// peak buffer footprints, max queue depth, ...).
+    pub fn set_max(&self, value: i64) {
+        self.v.fetch_max(value, std::sync::atomic::Ordering::SeqCst);
+    }
+
     pub fn get(&self) -> i64 {
         self.v.load(std::sync::atomic::Ordering::SeqCst)
     }
@@ -172,6 +178,37 @@ impl TransferMetrics {
 pub fn transfer_metrics() -> &'static TransferMetrics {
     static METRICS: std::sync::OnceLock<TransferMetrics> = std::sync::OnceLock::new();
     METRICS.get_or_init(TransferMetrics::new)
+}
+
+/// Compute-plane observability: per-rank overlap accounting for the
+/// ring-pipelined distributed GEMM. Overlap efficiency per rank is
+/// `ring_compute_r{rank} / (ring_compute_r{rank} + ring_wait_r{rank})` —
+/// wait is the time the compute thread stalled on the shift pipeline
+/// (enqueueing the outbound panel + taking the inbound one); with
+/// perfect overlap it is the first-panel latency only.
+#[derive(Debug, Default)]
+pub struct ComputeMetrics {
+    /// "ring_compute_r{rank}" — time in the local GEMM kernel;
+    /// "ring_wait_r{rank}" — time stalled on panel shifts.
+    pub phases: PhaseTimes,
+    /// High-water mark of B-panel doubles resident per rank during a
+    /// ring GEMM (the ≤ 2·ceil(k/p)·n memory contract — asserted by the
+    /// prop suite via the `dist_gemm` stats hook).
+    pub peak_b_doubles: Gauge,
+    /// "ring_gemms", "allgather_gemms" — algorithm selection counts.
+    pub counters: Counters,
+}
+
+impl ComputeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Process-wide [`ComputeMetrics`] instance.
+pub fn compute_metrics() -> &'static ComputeMetrics {
+    static METRICS: std::sync::OnceLock<ComputeMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(ComputeMetrics::new)
 }
 
 /// Monotonic named counters (bytes sent, rows routed, messages, ...).
@@ -297,6 +334,28 @@ mod tests {
         m.phases.add("stall_w0", Duration::from_millis(1));
         assert_eq!(m.counters.get("rows_sent"), before + 5);
         assert!(m.phases.get_secs("stall_w0") > 0.0);
+    }
+
+    #[test]
+    fn gauge_set_max_is_high_water() {
+        let g = Gauge::new();
+        g.set_max(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn compute_metrics_accumulate() {
+        let m = compute_metrics();
+        m.phases.add("ring_compute_r0", Duration::from_millis(2));
+        m.phases.add("ring_wait_r0", Duration::from_millis(1));
+        m.peak_b_doubles.set_max(1024);
+        m.counters.add("ring_gemms", 1);
+        assert!(m.phases.get_secs("ring_compute_r0") > 0.0);
+        assert!(m.peak_b_doubles.get() >= 1024);
+        assert!(m.counters.get("ring_gemms") >= 1);
     }
 
     #[test]

@@ -53,10 +53,11 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     for i in 0..n {
         let addr = worker_reg_addr.clone();
         let wcfg = cfg.server.clone();
+        let ccfg = cfg.compute.clone();
         std::thread::Builder::new()
             .name(format!("alch-worker-{i}"))
             .spawn(move || {
-                if let Err(e) = run_worker(&addr, wcfg) {
+                if let Err(e) = run_worker(&addr, wcfg, ccfg) {
                     crate::errorln!("launcher", "worker exited with error: {e}");
                 }
             })

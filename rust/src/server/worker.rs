@@ -15,8 +15,8 @@ use std::sync::{Arc, Mutex};
 use crate::ali::registry::LibraryRegistry;
 use crate::ali::RoutineCtx;
 use crate::comm::Mesh;
-use crate::config::ServerConfig;
-use crate::elemental::dist_gemm::{GemmBackend, NativeBackend};
+use crate::config::{ComputeConfig, ServerConfig};
+use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend, NativeBackend};
 use crate::elemental::{LocalPanel, MatrixStore};
 use crate::protocol::{
     frame, DataMsg, MatrixMeta, Reader, WireRow, WorkerCtl, WorkerReply, Writer,
@@ -33,7 +33,14 @@ struct WorkerSession {
 
 /// Run one worker: register with the driver at `driver_worker_addr`, then
 /// serve until `Shutdown`. Blocks; callers run it on its own thread.
-pub fn run_worker(driver_worker_addr: &str, cfg: ServerConfig) -> Result<()> {
+pub fn run_worker(
+    driver_worker_addr: &str,
+    cfg: ServerConfig,
+    compute_cfg: ComputeConfig,
+) -> Result<()> {
+    // Resolve the [compute] section once; a bad algo string is a startup
+    // error, not a per-routine surprise.
+    let compute = compute_cfg.dist_gemm_options()?;
     let data_listener = TcpListener::bind("127.0.0.1:0")?;
     let data_addr = data_listener.local_addr()?.to_string();
 
@@ -96,6 +103,7 @@ pub fn run_worker(driver_worker_addr: &str, cfg: ServerConfig) -> Result<()> {
             id,
             cmd,
             &cfg,
+            compute,
             &store,
             &mut registry,
             &mut sessions,
@@ -135,6 +143,7 @@ fn handle_ctl(
     my_id: u32,
     cmd: WorkerCtl,
     cfg: &ServerConfig,
+    compute: DistGemmOptions,
     store: &Arc<Mutex<MatrixStore>>,
     registry: &mut LibraryRegistry,
     sessions: &mut HashMap<u64, WorkerSession>,
@@ -208,6 +217,7 @@ fn handle_ctl(
                 backend,
                 runtime,
                 svd_pjrt,
+                compute,
             };
             let out = lib.run(&routine, &params, &mut ctx)?;
             if session.rank == 0 {

@@ -48,6 +48,59 @@ fn gemm_via_alchemist_matches_local() {
 }
 
 #[test]
+fn gemm_ring_and_allgather_end_to_end() {
+    // Full driver-session path for both distributed algorithms, plus a
+    // narrow-panel ring: all three must agree bitwise with each other
+    // (identical local schedules) and match the local reference.
+    let server = start_server(&native_config(4)).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm_algos").unwrap();
+    ac.request_workers(4).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(21, 45, 13);
+    let b = rand(22, 13, 9);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+
+    let c_ring = ac
+        .fetch_dense(&wrappers::gemm_with_algo(&ac, &al_a, &al_b, "ring", 0).unwrap())
+        .unwrap();
+    let c_agb = ac
+        .fetch_dense(&wrappers::gemm_with_algo(&ac, &al_a, &al_b, "allgather", 0).unwrap())
+        .unwrap();
+    let c_narrow = ac
+        .fetch_dense(&wrappers::gemm_with_algo(&ac, &al_a, &al_b, "ring", 2).unwrap())
+        .unwrap();
+
+    assert_eq!(c_ring, c_agb, "ring vs allgather through a real session");
+    assert_eq!(c_ring, c_narrow, "panel width must not change bits (native kernel fold)");
+    let want = gemm(&a, &b).unwrap();
+    assert!(c_ring.max_abs_diff(&want).unwrap() < 1e-10);
+
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn gemm_via_config_selected_allgather() {
+    // [compute] config default reaches the workers.
+    let mut cfg = native_config(2);
+    cfg.compute.dist_gemm_algo = "allgather".into();
+    let server = start_server(&cfg).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm_cfg").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(23, 18, 6);
+    let b = rand(24, 6, 5);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let c = ac.fetch_dense(&wrappers::gemm(&ac, &al_a, &al_b).unwrap()).unwrap();
+    assert!(c.max_abs_diff(&gemm(&a, &b).unwrap()).unwrap() < 1e-10);
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
 fn gemm_via_pjrt_backend_matches_local() {
     // Full production path: Pallas tile artifacts through PJRT.
     let mut cfg = Config::default();

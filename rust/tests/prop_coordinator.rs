@@ -179,6 +179,93 @@ fn dist_ops_match_local_on_random_shapes() {
 }
 
 #[test]
+fn ring_gemm_bitwise_equals_allgather_and_respects_memory_bound() {
+    // Across ragged shapes (p ∤ k), p > k, single-rank meshes, empty
+    // matrices and random sub-panel widths:
+    //  * RingPipelined and AllGatherB produce *bit-identical* C (they
+    //    run the same local schedule; only the communication differs);
+    //  * rank 0's C panel is bit-identical to the local gemm (its cyclic
+    //    origin order IS ascending k, and the native kernel's per-element
+    //    fold is split-invariant);
+    //  * all panels match local gemm within round-off (other ranks
+    //    accumulate k in a rotated order);
+    //  * the ring never holds more than 2·ceil(k/p)·n B doubles.
+    use alchemist::elemental::dist_gemm::{
+        dist_gemm_ring_with_stats, dist_gemm_with, DistGemmAlgo, DistGemmOptions, NativeBackend,
+    };
+    use alchemist::comm::run_mesh;
+    use std::sync::Arc;
+
+    check("elemental: ring vs allgather dist_gemm", 10, |rng| {
+        let p = int_in(rng, 1, 5) as usize;
+        // deliberately include degenerate shapes: k < p, k = 0, n = 0
+        let m = int_in(rng, 0, 30);
+        let k = int_in(rng, 0, 16);
+        let n = int_in(rng, 0, 12);
+        let w = int_in(rng, 0, 5) as usize; // 0 = whole panels
+        let desc = LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() };
+        let a_full = DenseMatrix::from_fn(m as usize, k as usize, |_, _| rng.next_signed());
+        let b_full = DenseMatrix::from_fn(k as usize, n as usize, |_, _| rng.next_signed());
+        let a_meta = MatrixMeta { handle: 1, rows: m, cols: k, layout: desc.clone() };
+        let b_meta = MatrixMeta { handle: 2, rows: k, cols: n, layout: desc };
+        let a_panels = Arc::new(scatter_matrix(&a_meta, &a_full).map_err(|e| e.to_string())?);
+        let b_panels = Arc::new(scatter_matrix(&b_meta, &b_full).map_err(|e| e.to_string())?);
+
+        let (ap, bp) = (a_panels.clone(), b_panels.clone());
+        let ring = run_mesh(p, move |mut mesh| {
+            let r = mesh.rank();
+            dist_gemm_ring_with_stats(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, w)
+        })
+        .map_err(|e| e.to_string())?;
+        let (ap, bp) = (a_panels.clone(), b_panels.clone());
+        let agb = run_mesh(p, move |mut mesh| {
+            let r = mesh.rank();
+            let opts = DistGemmOptions { algo: DistGemmAlgo::AllGatherB, panel_rows: w };
+            dist_gemm_with(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, &opts)
+        })
+        .map_err(|e| e.to_string())?;
+
+        let ceil = (k as usize + p - 1) / p;
+        let bound = if w == 0 {
+            // the acceptance contract: compute panel + one in-flight
+            2 * ceil * n as usize
+        } else {
+            // narrow panels: the buffered own-burst (≤ one whole panel)
+            // can coexist with the first in-progress remote read
+            (ceil + w.min(ceil)) * n as usize
+        };
+        for ((rpanel, stats), apanel) in ring.iter().zip(&agb) {
+            if rpanel.local() != apanel.local() {
+                return Err(format!("ring != allgather bits at m={m} k={k} n={n} p={p} w={w}"));
+            }
+            if stats.peak_b_doubles > bound {
+                return Err(format!(
+                    "peak {} > bound {bound} at k={k} n={n} p={p} w={w}",
+                    stats.peak_b_doubles
+                ));
+            }
+        }
+
+        let want = alchemist::linalg::gemm::gemm(&a_full, &b_full).map_err(|e| e.to_string())?;
+        // rank 0: ascending-k schedule -> exact bits vs local gemm
+        let r0 = &ring[0].0;
+        for li in 0..r0.local_rows() {
+            let gr = r0.layout().global_index(0, li as u64) as usize;
+            if r0.local().row(li) != want.row(gr) {
+                return Err(format!("rank0 bits differ from local gemm at row {gr} (k={k} n={n} p={p} w={w})"));
+            }
+        }
+        // all ranks: tolerance vs local
+        let c_panels: Vec<_> = ring.iter().map(|(c, _)| c.clone()).collect();
+        let c = gather_matrix(&c_panels).map_err(|e| e.to_string())?;
+        if m > 0 && n > 0 && c.max_abs_diff(&want).map_err(|e| e.to_string())? > 1e-9 {
+            return Err(format!("ring dist_gemm off vs local at m={m} k={k} n={n} p={p}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn allocation_never_double_books() {
     // Simulate the driver's free-pool accounting under random
     // alloc/release interleavings.

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Snapshot the PR3 compute-plane benchmarks into a single JSON file,
+# seeding the repo's perf trajectory (BENCH_PR3.json at the repo root).
+#
+# Runs table1_matmul (ring vs all-gather compute decomposition + the
+# Spark comparison) and ablate_collectives (all-reduce + barrier), each
+# with its machine-readable --json output, then merges the two.
+#
+# Usage: scripts/bench_snapshot.sh [output.json]
+#   env: REPS=N        bench.reps override (default 1 for a quick pass)
+#        BUDGET_SECS=N spark-side budget (default 120)
+set -euo pipefail
+
+OUT="${1:-BENCH_PR3.json}"
+REPS="${REPS:-1}"
+BUDGET_SECS="${BUDGET_SECS:-120}"
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+echo "== bench_snapshot: table1_matmul (reps=$REPS) =="
+cargo bench --bench table1_matmul -- \
+    --set "bench.reps=$REPS" --set "bench.budget_secs=$BUDGET_SECS" \
+    --json "$TMP/table1.json"
+
+echo "== bench_snapshot: ablate_collectives (reps=$REPS) =="
+cargo bench --bench ablate_collectives -- \
+    --set "bench.reps=$REPS" \
+    --json "$TMP/collectives.json"
+
+GIT_SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo unknown)"
+DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+
+{
+    printf '{\n'
+    printf '  "generated_at": "%s",\n' "$DATE"
+    printf '  "git": "%s",\n' "$GIT_SHA"
+    printf '  "reps": %s,\n' "$REPS"
+    printf '  "table1_matmul": %s,\n' "$(cat "$TMP/table1.json")"
+    printf '  "ablate_collectives": %s\n' "$(cat "$TMP/collectives.json")"
+    printf '}\n'
+} > "$ROOT/$OUT"
+
+echo "wrote $ROOT/$OUT"
