@@ -1,0 +1,40 @@
+//! Print the builtin library's routine table, generated straight from
+//! the `RoutineRegistry` specs — the same data a remote client gets via
+//! `describe_routines()` (protocol v6 `DescribeRoutines`).
+//!
+//! `cargo run --release --example describe_routines`
+//!
+//! The output is the markdown block embedded in rust/README.md between
+//! the `routine-table` markers; CI diffs the two
+//! (`scripts/check_routine_table.sh`), so the docs can never drift from
+//! the registry.
+
+use alchemist::ali::elemlib::ElemLib;
+use alchemist::ali::Library;
+
+fn main() {
+    let lib = ElemLib::new();
+    let reg = lib.registry().expect("elemlib publishes routine specs");
+    println!("| routine | params | outputs | summary |");
+    println!("|---|---|---|---|");
+    for spec in reg.specs() {
+        let params: Vec<String> = spec
+            .params
+            .iter()
+            .map(|p| {
+                let opt = if p.required { "" } else { "?" };
+                format!("`{}{}: {}`", p.name, opt, p.ty.name())
+            })
+            .collect();
+        let outputs = if spec.outputs.is_empty() {
+            "—".to_string()
+        } else {
+            spec.outputs
+                .iter()
+                .map(|o| format!("`{}`", o.name))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!("| `{}` | {} | {} | {} |", spec.name, params.join(", "), outputs, spec.summary);
+    }
+}

@@ -1,38 +1,43 @@
 //! `ElemLib` — the bundled MPI-library substitute, playing the role of
 //! "Elemental + ARPACK wrapped by an ALI" in the paper's experiments.
 //!
-//! All routines are SPMD over the session mesh; node-local FLOPs go
-//! through the pluggable GEMM backend (PJRT Pallas tiles in production)
-//! and the fused PJRT Gram-matvec artifacts when available.
+//! Since the typed routine engine the library is a thin shell over a
+//! [`RoutineRegistry`]: each routine lives in its own module under
+//! [`crate::ali::routines`] with a typed [`RoutineSpec`] (param schema,
+//! shape rules, cost estimate). `run` validates the params frame against
+//! the spec on every rank — identically, so a rejection is
+//! SPMD-deterministic and happens before any collective — then dispatches
+//! to the routine body.
 //!
-//! Routines:
-//! * `gemm(A, B) -> C` — distributed GEMM (Table 1's workhorse);
-//! * `truncated_svd(A, k) -> U, S, V` — ARPACK-style thick-restart
-//!   Lanczos on the Gram operator (Figs 3/4);
-//! * `condest(A, probes?) -> cond` — the paper's §3.3 example routine;
-//! * `fro_norm(A) -> norm`;
-//! * `scale(A, alpha) -> B`;
-//! * `redistribute(A, kind) -> B` — row-block ⇄ row-cyclic.
+//! Routines (see `cargo run --example describe_routines` for the full
+//! table): `gemm`, `truncated_svd`, `condest`, `fro_norm`, `scale`,
+//! `redistribute`, `transpose`, `add`, `gramian`, `col_stats`, `lstsq`.
 
-use crate::ali::{params, Library, RoutineCtx, RoutineOutput};
-use crate::arpack::{lanczos_topk, LanczosOptions, SymOp};
-use crate::comm::Mesh;
-use crate::elemental::dist_gemm::{
-    dist_frobenius, dist_gemm_with, dist_gram_matvec, DistGemmAlgo,
-};
-use crate::elemental::{redistribute::redistribute, LocalPanel};
-use crate::linalg::DenseMatrix;
-use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
-use crate::runtime::tiling::pjrt_gram_matvec;
+use crate::ali::registry::RoutineRegistry;
+use crate::ali::{routines, Library, RoutineCtx, RoutineOutput};
+use crate::protocol::Params;
 use crate::{Error, Result};
 
 /// The builtin library instance.
-#[derive(Debug, Default)]
-pub struct ElemLib;
+pub struct ElemLib {
+    registry: RoutineRegistry,
+}
+
+impl Default for ElemLib {
+    fn default() -> Self {
+        ElemLib::new()
+    }
+}
+
+impl std::fmt::Debug for ElemLib {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ElemLib").field("routines", &self.registry.names()).finish()
+    }
+}
 
 impl ElemLib {
     pub fn new() -> ElemLib {
-        ElemLib
+        ElemLib { registry: routines::registry() }
     }
 }
 
@@ -42,19 +47,11 @@ impl Library for ElemLib {
     }
 
     fn routines(&self) -> Vec<&'static str> {
-        vec![
-            "gemm",
-            "truncated_svd",
-            "condest",
-            "fro_norm",
-            "scale",
-            "redistribute",
-            "transpose",
-            "add",
-            "gramian",
-            "col_stats",
-            "lstsq",
-        ]
+        self.registry.names()
+    }
+
+    fn registry(&self) -> Option<&RoutineRegistry> {
+        Some(&self.registry)
     }
 
     fn run(
@@ -63,444 +60,30 @@ impl Library for ElemLib {
         params: &Params,
         ctx: &mut RoutineCtx<'_>,
     ) -> Result<RoutineOutput> {
-        match routine {
-            "gemm" => run_gemm(params, ctx),
-            "truncated_svd" => run_truncated_svd(params, ctx),
-            "condest" => run_condest(params, ctx),
-            "fro_norm" => run_fro_norm(params, ctx),
-            "scale" => run_scale(params, ctx),
-            "redistribute" => run_redistribute(params, ctx),
-            "transpose" => run_transpose(params, ctx),
-            "add" => run_add(params, ctx),
-            "gramian" => run_gramian(params, ctx),
-            "col_stats" => run_col_stats(params, ctx),
-            "lstsq" => run_lstsq(params, ctx),
-            other => Err(Error::Ali(format!(
-                "elemlib has no routine {other:?} (available: {:?})",
+        let r = self.registry.get(routine).ok_or_else(|| {
+            Error::Ali(format!(
+                "elemlib has no routine {routine:?} (available: {:?})",
                 self.routines()
-            ))),
-        }
+            ))
+        })?;
+        // Worker-side validation mirrors the driver's pre-admission pass:
+        // same spec, same params frame, metadata identical on every rank.
+        r.spec().validate(params, |h| ctx.store.get(h).ok().map(|p| p.meta.clone()))?;
+        r.run(params, ctx)
     }
-}
-
-fn run_gemm(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let hb = params::get_matrix(p, "B")?;
-    let hc = ctx.output_handle(0)?;
-    let alpha = params::get_f64_or(p, "alpha", 1.0)?;
-    // Per-call overrides of the worker's `[compute]` defaults. SPMD-safe:
-    // every rank receives the identical params frame.
-    let mut opts = ctx.compute;
-    if let Some(algo) = params::get_str_opt(p, "algo")? {
-        opts.algo = DistGemmAlgo::parse(algo).map_err(|e| Error::Ali(e.to_string()))?;
-    }
-    let rows = params::get_i64_or(p, "panel_rows", opts.panel_rows as i64)?;
-    if rows < 0 {
-        return Err(Error::Ali("panel_rows must be >= 0".into()));
-    }
-    opts.panel_rows = rows as usize;
-    let a = ctx.store.get(ha)?.clone();
-    let b = ctx.store.get(hb)?.clone();
-    let mut c = dist_gemm_with(ctx.mesh, &a, &b, hc, ctx.backend, &opts)?;
-    if alpha != 1.0 {
-        c.local_mut().scale(alpha);
-    }
-    let meta = c.meta.clone();
-    ctx.store.insert(c)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-/// Distributed Gram operator: w = Σ_ranks A_rᵀ(A_r v), one ring
-/// all-reduce per application. Local halves go through the fused PJRT
-/// artifacts with **device-resident cached panels** when available (the
-/// panel is uploaded once; later iterations only ship v), else native
-/// kernels.
-struct DistGramOp<'a> {
-    mesh: &'a mut Mesh,
-    local: &'a DenseMatrix,
-    runtime: Option<&'static crate::runtime::PjrtRuntime>,
-    cached: Option<crate::runtime::tiling::CachedGramPanel>,
-    pub applications: usize,
-}
-
-impl<'a> DistGramOp<'a> {
-    /// `handle` keys the device-buffer cache (worker `FreeMatrix`
-    /// invalidates it). The cache base also folds in the session rank:
-    /// in this testbed all in-process workers share one PJRT runtime, so
-    /// two ranks' panels of the same handle must not collide (separate
-    /// worker *processes* would each have their own runtime).
-    fn new(
-        mesh: &'a mut Mesh,
-        local: &'a DenseMatrix,
-        runtime: Option<&'static crate::runtime::PjrtRuntime>,
-        handle: u64,
-        use_pjrt: bool,
-    ) -> Result<DistGramOp<'a>> {
-        let base = handle * 256 + mesh.rank() as u64;
-        let runtime = if use_pjrt { runtime } else { None };
-        let cached = match runtime {
-            Some(rt) => crate::runtime::tiling::CachedGramPanel::new(rt, base, local)?,
-            None => None,
-        };
-        Ok(DistGramOp { mesh, local, runtime, cached, applications: 0 })
-    }
-}
-
-impl SymOp for DistGramOp<'_> {
-    fn dim(&self) -> usize {
-        self.local.cols()
-    }
-
-    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>> {
-        self.applications += 1;
-        let local = self.local;
-        let rt = self.runtime;
-        let cached = self.cached.as_ref();
-        dist_gram_matvec(self.mesh, v, move |x| match (cached, rt) {
-            (Some(panel), Some(rt)) => panel.apply(rt, x),
-            (None, Some(rt)) => pjrt_gram_matvec(rt, local, x),
-            (_, None) => {
-                let t = local.matvec(x)?;
-                local.matvec_t(&t)
-            }
-        })
-    }
-}
-
-fn run_truncated_svd(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let k = params::get_i64(p, "k")? as usize;
-    let tol = params::get_f64_or(p, "tol", 1e-10)?;
-    let hu = ctx.output_handle(0)?;
-    let hs = ctx.output_handle(1)?;
-    let hv = ctx.output_handle(2)?;
-
-    let a = ctx.store.get(ha)?;
-    let (m, n) = (a.meta.rows, a.meta.cols);
-    if k == 0 || k as u64 > n.min(m) {
-        return Err(Error::Numerical(format!("truncated_svd: k={k} out of range for {m}x{n}")));
-    }
-    let a_local = a.local().clone();
-    let a_meta = a.meta.clone();
-
-    // SPMD Lanczos: every rank runs the identical iteration; the only
-    // cross-rank op is the all-reduce inside the Gram operator, which is
-    // deterministic, so all ranks hold identical basis/Ritz state.
-    let result = {
-        let mut op = DistGramOp::new(ctx.mesh, &a_local, ctx.runtime, ha, ctx.svd_pjrt)?;
-        lanczos_topk(&mut op, k, &LanczosOptions { tol, ..Default::default() })?
-    };
-
-    let mut sigma = Vec::with_capacity(k);
-    let mut v_full = DenseMatrix::zeros(n as usize, k);
-    for (j, (theta, vec)) in result.eigenvalues.iter().zip(&result.eigenvectors).enumerate() {
-        sigma.push(theta.max(0.0).sqrt());
-        for i in 0..n as usize {
-            v_full.set(i, j, vec[i]);
-        }
-    }
-
-    // U_local = A_local V Σ⁻¹ (rank-deficient columns zeroed).
-    let mut u_local = ctx.backend.gemm(&a_local, &v_full)?;
-    for j in 0..k {
-        let s = sigma[j];
-        let inv = if s > 1e-12 { 1.0 / s } else { 0.0 };
-        for i in 0..u_local.rows() {
-            let cur = u_local.get(i, j);
-            u_local.set(i, j, cur * inv);
-        }
-    }
-
-    let owners = ctx.owners.clone();
-    let rank = ctx.mesh.rank() as u32;
-    let layout = |_rows: u64| LayoutDesc { kind: LayoutKind::RowBlock, owners: owners.clone() };
-
-    // U: same row distribution as A.
-    let u_meta = MatrixMeta { handle: hu, rows: m, cols: k as u64, layout: a_meta.layout.clone() };
-    let u_panel = LocalPanel::from_local(u_meta.clone(), a_meta_slot(&a_meta, rank)?, u_local)?;
-
-    // S (k x 1) and V (n x k) are replicated on every rank; store each
-    // rank's RowBlock slice so the client can fetch them like any matrix.
-    let s_meta = MatrixMeta { handle: hs, rows: k as u64, cols: 1, layout: layout(k as u64) };
-    let s_panel = slice_replicated(&s_meta, rank, |i, _| sigma[i as usize])?;
-    let v_meta = MatrixMeta { handle: hv, rows: n, cols: k as u64, layout: layout(n) };
-    let v_panel = slice_replicated(&v_meta, rank, |i, j| v_full.get(i as usize, j as usize))?;
-
-    let metas = vec![u_meta, s_meta, v_meta];
-    ctx.store.insert(u_panel)?;
-    ctx.store.insert(s_panel)?;
-    ctx.store.insert(v_panel)?;
-
-    Ok(RoutineOutput {
-        outputs: vec![
-            ("matvecs".into(), ParamValue::I64(result.matvecs as i64)),
-            ("restarts".into(), ParamValue::I64(result.restarts as i64)),
-        ],
-        new_matrices: metas,
-    })
-}
-
-/// Slot of this rank in a matrix's owner list (rank order == slot order).
-fn a_meta_slot(meta: &MatrixMeta, rank: u32) -> Result<u32> {
-    if (rank as usize) < meta.layout.owners.len() {
-        Ok(rank)
-    } else {
-        Err(Error::Server(format!("rank {rank} outside owner list of handle {}", meta.handle)))
-    }
-}
-
-/// Build this rank's RowBlock panel of a replicated matrix defined by a
-/// closure over (global_row, col).
-fn slice_replicated(
-    meta: &MatrixMeta,
-    rank: u32,
-    f: impl Fn(u64, u64) -> f64,
-) -> Result<LocalPanel> {
-    let mut panel = LocalPanel::alloc(meta.clone(), rank)?;
-    let layout = panel.layout();
-    let rows: Vec<u64> = layout.rows_of_slot(rank).collect();
-    for r in rows {
-        let row: Vec<f64> = (0..meta.cols).map(|c| f(r, c)).collect();
-        panel.set_row(r, &row)?;
-    }
-    Ok(panel)
-}
-
-fn run_condest(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let probes = params::get_i64_or(p, "probes", 8)? as usize;
-    let a = ctx.store.get(ha)?;
-    let n = a.meta.cols as usize;
-    let a_local = a.local().clone();
-    let k = probes.clamp(2, n);
-    let result = {
-        let mut op = DistGramOp::new(ctx.mesh, &a_local, ctx.runtime, ha, ctx.svd_pjrt)?;
-        let opts =
-            LanczosOptions { max_basis: (4 * k + 20).min(n), ..Default::default() };
-        lanczos_topk(&mut op, k, &opts)?
-    };
-    let smax = result.eigenvalues.first().copied().unwrap_or(0.0).max(0.0).sqrt();
-    let smin = result.eigenvalues.last().copied().unwrap_or(0.0).max(0.0).sqrt();
-    let cond = if smin <= 1e-300 { f64::INFINITY } else { smax / smin };
-    Ok(RoutineOutput {
-        outputs: vec![("condest".into(), ParamValue::F64(cond))],
-        new_matrices: vec![],
-    })
-}
-
-fn run_fro_norm(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let a = ctx.store.get(ha)?.clone();
-    let norm = dist_frobenius(ctx.mesh, &a)?;
-    Ok(RoutineOutput {
-        outputs: vec![("fro_norm".into(), ParamValue::F64(norm))],
-        new_matrices: vec![],
-    })
-}
-
-fn run_scale(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let alpha = params::get_f64(p, "alpha")?;
-    let hb = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?;
-    let mut local = a.local().clone();
-    local.scale(alpha);
-    let meta = MatrixMeta { handle: hb, ..a.meta.clone() };
-    let panel = LocalPanel::from_local(meta.clone(), a.slot, local)?;
-    ctx.store.insert(panel)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_redistribute(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let kind = match params::get_str(p, "kind")? {
-        "row_block" => LayoutKind::RowBlock,
-        "row_cyclic" => LayoutKind::RowCyclic,
-        other => return Err(Error::Ali(format!("unknown layout kind {other:?}"))),
-    };
-    let hb = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?.clone();
-    let out = redistribute(ctx.mesh, &a, hb, kind)?;
-    let meta = out.meta.clone();
-    ctx.store.insert(out)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_transpose(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    let ha = params::get_matrix(p, "A")?;
-    let hb = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?.clone();
-    if a.meta.layout.kind != LayoutKind::RowBlock {
-        return Err(Error::Shape("transpose requires RowBlock input".into()));
-    }
-    let out = crate::elemental::transpose::dist_transpose(ctx.mesh, &a, hb)?;
-    let meta = out.meta.clone();
-    ctx.store.insert(out)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_add(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    // C = alpha A + beta B (same shape, same layout — purely local)
-    let ha = params::get_matrix(p, "A")?;
-    let hb = params::get_matrix(p, "B")?;
-    let alpha = params::get_f64_or(p, "alpha", 1.0)?;
-    let beta = params::get_f64_or(p, "beta", 1.0)?;
-    let hc = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?;
-    let b = ctx.store.get(hb)?;
-    if a.meta.rows != b.meta.rows || a.meta.cols != b.meta.cols || a.meta.layout != b.meta.layout
-    {
-        return Err(Error::Shape("add: shape/layout mismatch".into()));
-    }
-    let mut local = a.local().clone();
-    local.scale(alpha);
-    for (dst, src) in local.data_mut().iter_mut().zip(b.local().data()) {
-        *dst += beta * src;
-    }
-    let meta = MatrixMeta { handle: hc, ..a.meta.clone() };
-    let slot = a.slot;
-    let panel = LocalPanel::from_local(meta.clone(), slot, local)?;
-    ctx.store.insert(panel)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_gramian(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    // G = AᵀA (n x n): local gemm_tn + all-reduce, stored RowBlock.
-    // MLlib's computeGramianMatrix analogue — n must be modest.
-    let ha = params::get_matrix(p, "A")?;
-    let hg = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?;
-    let n = a.meta.cols as usize;
-    let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
-    crate::comm::collectives::allreduce_sum(
-        ctx.mesh,
-        &mut g,
-        crate::comm::collectives::AllReduceAlgo::Ring,
-    )?;
-    let g_full = DenseMatrix::from_vec(n, n, g)?;
-    let meta = MatrixMeta {
-        handle: hg,
-        rows: n as u64,
-        cols: n as u64,
-        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
-    };
-    let rank = ctx.mesh.rank() as u32;
-    let panel = slice_replicated(&meta, rank, |i, j| g_full.get(i as usize, j as usize))?;
-    ctx.store.insert(panel)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_col_stats(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    // column means and (population) stddevs -> n x 2 matrix [mean, std]
-    let ha = params::get_matrix(p, "A")?;
-    let hs = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?;
-    let n = a.meta.cols as usize;
-    let m = a.meta.rows as f64;
-    let mut acc = vec![0.0; 2 * n]; // sums then sumsq
-    for (_, row) in a.iter_rows() {
-        for (j, &v) in row.iter().enumerate() {
-            acc[j] += v;
-            acc[n + j] += v * v;
-        }
-    }
-    crate::comm::collectives::allreduce_sum(
-        ctx.mesh,
-        &mut acc,
-        crate::comm::collectives::AllReduceAlgo::Ring,
-    )?;
-    let meta = MatrixMeta {
-        handle: hs,
-        rows: n as u64,
-        cols: 2,
-        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
-    };
-    let rank = ctx.mesh.rank() as u32;
-    let panel = slice_replicated(&meta, rank, |i, j| {
-        let mean = acc[i as usize] / m;
-        if j == 0 {
-            mean
-        } else {
-            (acc[n + i as usize] / m - mean * mean).max(0.0).sqrt()
-        }
-    })?;
-    ctx.store.insert(panel)?;
-    Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
-}
-
-fn run_lstsq(p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
-    // min_x ||A x - y||_2 via normal equations + Cholesky:
-    //   G = AᵀA (all-reduced), b = Aᵀy (all-reduced), G x = b locally.
-    // The classic Elemental-style tall-skinny least-squares path — the
-    // regression workload the paper's intro motivates.
-    let ha = params::get_matrix(p, "A")?;
-    let hy = params::get_matrix(p, "y")?;
-    let ridge = params::get_f64_or(p, "ridge", 0.0)?;
-    let hx = ctx.output_handle(0)?;
-    let a = ctx.store.get(ha)?;
-    let y = ctx.store.get(hy)?;
-    if y.meta.rows != a.meta.rows || y.meta.cols != 1 || y.meta.layout != a.meta.layout {
-        return Err(Error::Shape("lstsq: y must be m x 1 with A's layout".into()));
-    }
-    let n = a.meta.cols as usize;
-    let y_local: Vec<f64> = (0..y.local_rows()).map(|i| y.local().get(i, 0)).collect();
-
-    let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
-    let mut b = a.local().matvec_t(&y_local)?;
-    crate::comm::collectives::allreduce_sum(
-        ctx.mesh,
-        &mut g,
-        crate::comm::collectives::AllReduceAlgo::Ring,
-    )?;
-    crate::comm::collectives::allreduce_sum(
-        ctx.mesh,
-        &mut b,
-        crate::comm::collectives::AllReduceAlgo::Ring,
-    )?;
-    let mut g_full = DenseMatrix::from_vec(n, n, g)?;
-    if ridge > 0.0 {
-        for i in 0..n {
-            g_full.set(i, i, g_full.get(i, i) + ridge);
-        }
-    }
-    let x = crate::linalg::cholesky::spd_solve(&g_full, &b)?;
-
-    // residual norm: local ||A_loc x - y_loc||^2, all-reduced
-    let ax = a.local().matvec(&x)?;
-    let mut res = vec![ax
-        .iter()
-        .zip(&y_local)
-        .map(|(p, q)| (p - q) * (p - q))
-        .sum::<f64>()];
-    crate::comm::collectives::allreduce_sum(
-        ctx.mesh,
-        &mut res,
-        crate::comm::collectives::AllReduceAlgo::Ring,
-    )?;
-
-    let meta = MatrixMeta {
-        handle: hx,
-        rows: n as u64,
-        cols: 1,
-        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
-    };
-    let rank = ctx.mesh.rank() as u32;
-    let panel = slice_replicated(&meta, rank, |i, _| x[i as usize])?;
-    ctx.store.insert(panel)?;
-    Ok(RoutineOutput {
-        outputs: vec![("residual".into(), ParamValue::F64(res[0].sqrt()))],
-        new_matrices: vec![meta],
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ali::params::ParamsBuilder;
+    use crate::ali::task::{CancelToken, ProgressSink};
     use crate::comm::run_mesh;
     use crate::elemental::dist_gemm::NativeBackend;
     use crate::elemental::panel::{gather_matrix, scatter_matrix};
-    use crate::elemental::MatrixStore;
+    use crate::elemental::{LocalPanel, MatrixStore};
+    use crate::linalg::DenseMatrix;
+    use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, PROTOCOL_VERSION};
     use crate::workload::random_matrix;
     use std::sync::Arc;
 
@@ -532,6 +115,9 @@ mod tests {
                 runtime: None,
                 svd_pjrt: false,
                 compute: Default::default(),
+                cancel: CancelToken::new(),
+                progress: ProgressSink::disabled(),
+                wire_version: PROTOCOL_VERSION,
             };
             let out = lib.run(routine, &params, &mut ctx)?;
             Ok((out, store))
@@ -548,9 +134,16 @@ mod tests {
         }
     }
 
-    fn seed(handle: u64, rows: usize, cols: usize, p: usize, s: u64) -> (DenseMatrix, Vec<Vec<LocalPanel>>) {
+    fn seed(
+        handle: u64,
+        rows: usize,
+        cols: usize,
+        p: usize,
+        s: u64,
+    ) -> (DenseMatrix, Vec<Vec<LocalPanel>>) {
         let full = DenseMatrix::from_vec(rows, cols, random_matrix(s, rows, cols)).unwrap();
-        let panels = scatter_matrix(&meta(handle, rows as u64, cols as u64, p as u32), &full).unwrap();
+        let panels =
+            scatter_matrix(&meta(handle, rows as u64, cols as u64, p as u32), &full).unwrap();
         (full, panels.into_iter().map(|x| vec![x]).collect())
     }
 
@@ -576,7 +169,7 @@ mod tests {
     #[test]
     fn gemm_routine_algo_params() {
         // "ring" and "allgather" via routine params are bit-identical;
-        // a bogus algo is an Ali error.
+        // a bogus algo is rejected by the spec before any collective.
         let p = 3;
         let (_, mut a_panels) = seed(1, 19, 7, p, 31);
         let (_, b_panels) = seed(2, 7, 5, p, 32);
@@ -635,6 +228,9 @@ mod tests {
                 runtime: None,
                 svd_pjrt: false,
                 compute: Default::default(),
+                cancel: CancelToken::new(),
+                progress: ProgressSink::disabled(),
+                wire_version: PROTOCOL_VERSION,
             };
             Ok(lib.run(routine, &params, &mut ctx).map_err(|e| e.to_string()))
         })
@@ -649,12 +245,19 @@ mod tests {
         let results = run_routine(p, a_panels, "truncated_svd", params, vec![10, 11, 12]);
 
         // reference via local ARPACK-substitute
-        let want =
-            crate::arpack::truncated_svd_local(&a_full, 4, &LanczosOptions::default()).unwrap();
+        let want = crate::arpack::truncated_svd_local(
+            &a_full,
+            4,
+            &crate::arpack::LanczosOptions::default(),
+        )
+        .unwrap();
 
-        // singular values from the distributed S
+        // singular values from the distributed S (Replicated since v6:
+        // every rank stores the full k x 1 vector)
         let s_panels: Vec<LocalPanel> =
             results.iter().map(|(_, s)| s.get(11).unwrap().clone()).collect();
+        assert_eq!(s_panels[0].meta.layout.kind, LayoutKind::Replicated);
+        assert_eq!(s_panels[0].local_rows(), 4, "replicated panel holds all rows");
         let s = gather_matrix(&s_panels).unwrap();
         for i in 0..4 {
             assert!(
@@ -682,6 +285,50 @@ mod tests {
         }
         // scalar outputs present on rank 0
         assert!(results[0].0.outputs.iter().any(|(k, _)| k == "matvecs"));
+    }
+
+    #[test]
+    fn truncated_svd_v5_sessions_keep_rowblock_small_outputs() {
+        // Pre-v6 clients cannot decode the Replicated layout tag: the
+        // routine must fall back to RowBlock slicing (the k < p edge then
+        // legitimately leaves owners with zero rows).
+        let p = 3;
+        let (_, a_panels) = seed(1, 30, 8, p, 13);
+        let k = 2usize; // k < p: some RowBlock owners of S hold no rows
+        let seed_panels = Arc::new(a_panels);
+        let params =
+            Arc::new(ParamsBuilder::new().matrix("A", 1).i64("k", k as i64).build());
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let mut store = MatrixStore::new();
+            for panel in &seed_panels[rank] {
+                store.insert(panel.clone()).unwrap();
+            }
+            let lib = ElemLib::new();
+            let mut ctx = RoutineCtx {
+                mesh: &mut mesh,
+                owners: (0..p as u32).collect(),
+                store: &mut store,
+                output_handles: &[20, 21, 22],
+                backend: &NativeBackend,
+                runtime: None,
+                svd_pjrt: false,
+                compute: Default::default(),
+                cancel: CancelToken::new(),
+                progress: ProgressSink::disabled(),
+                wire_version: 5,
+            };
+            lib.run("truncated_svd", &params, &mut ctx)?;
+            Ok(store)
+        })
+        .unwrap();
+        let s_panels: Vec<LocalPanel> =
+            results.iter().map(|st| st.get(21).unwrap().clone()).collect();
+        assert_eq!(s_panels[0].meta.layout.kind, LayoutKind::RowBlock);
+        // k=2 rows over 3 owners: block = 1, so the last owner is empty.
+        assert_eq!(s_panels[2].local_rows(), 0, "zero-row owner in the k < p edge");
+        let s = gather_matrix(&s_panels).unwrap();
+        assert_eq!(s.rows(), k);
     }
 
     #[test]
@@ -817,8 +464,7 @@ mod tests {
         // y = A x_true (exact system -> zero residual)
         let x_true: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0) * 0.5).collect();
         let y_full_vec = a_full.matvec(&x_true).unwrap();
-        let y_full =
-            DenseMatrix::from_vec(m as usize, 1, y_full_vec).unwrap();
+        let y_full = DenseMatrix::from_vec(m as usize, 1, y_full_vec).unwrap();
         let y_panels = scatter_matrix(&meta(2, m, 1, p as u32), &y_full).unwrap();
         for (ap, yp) in a_panels.iter_mut().zip(y_panels) {
             ap.push(yp);
@@ -852,6 +498,9 @@ mod tests {
                 runtime: None,
                 svd_pjrt: false,
                 compute: Default::default(),
+                cancel: CancelToken::new(),
+                progress: ProgressSink::disabled(),
+                wire_version: PROTOCOL_VERSION,
             };
             let unknown = lib.run("qr", &vec![], &mut ctx);
             let missing = lib.run("gemm", &vec![], &mut ctx);
@@ -859,5 +508,50 @@ mod tests {
         })
         .unwrap();
         assert_eq!(results[0], (true, true));
+    }
+
+    #[test]
+    fn registry_lists_all_routines_with_specs() {
+        let lib = ElemLib::new();
+        let reg = lib.registry().expect("elemlib publishes specs");
+        assert_eq!(
+            reg.names(),
+            vec![
+                "gemm",
+                "truncated_svd",
+                "condest",
+                "fro_norm",
+                "scale",
+                "redistribute",
+                "transpose",
+                "add",
+                "gramian",
+                "col_stats",
+                "lstsq",
+            ]
+        );
+        for spec in reg.specs() {
+            assert!(!spec.summary.is_empty(), "{} has no summary", spec.name);
+        }
+        // Cancellation/cost surfaces: a gemm on known shapes has a
+        // plausible flop estimate.
+        let spec = reg.get("gemm").unwrap().spec();
+        let params = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).build();
+        let mk = |h: u64, rows: u64, cols: u64| MatrixMeta {
+            handle: h,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: vec![0] },
+        };
+        let inputs = spec
+            .validate(&params, |h| match h {
+                1 => Some(mk(1, 100, 10)),
+                2 => Some(mk(2, 10, 20)),
+                _ => None,
+            })
+            .unwrap();
+        let cost = spec.cost(&params, &inputs);
+        assert_eq!(cost.flops, 2.0 * 100.0 * 10.0 * 20.0);
+        assert!(cost.weight() > cost.flops);
     }
 }

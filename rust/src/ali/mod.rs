@@ -9,16 +9,29 @@
 //! (e.g. `builtin:elemlib`) or names a factory installed with
 //! [`registry::install_factory`]. Real `dlopen` of foreign ABIs is out of
 //! scope (documented in DESIGN.md).
+//!
+//! Since the typed routine engine, a library's routines are first-class
+//! [`Routine`] objects: each carries a [`spec::RoutineSpec`] (typed param
+//! schema, input shape rules, output roles, cost estimate) registered in
+//! a [`registry::RoutineRegistry`]. The driver validates submissions
+//! against the same specs *before* sched admission and uses the cost
+//! estimate for its per-session in-flight cap; workers re-validate on
+//! entry (SPMD-deterministically) before any collective is touched.
 
 pub mod elemlib;
 pub mod params;
 pub mod registry;
+pub mod routines;
+pub mod spec;
+pub mod task;
 
 use crate::comm::Mesh;
 use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend};
 use crate::elemental::MatrixStore;
 use crate::protocol::{MatrixMeta, Params};
 use crate::Result;
+
+pub use task::{CancelToken, ProgressSink, StatusBoard};
 
 /// Everything a routine needs from its hosting worker, SPMD-style: each
 /// session worker constructs an identical ctx (modulo rank) and the
@@ -43,6 +56,17 @@ pub struct RoutineCtx<'a> {
     /// Distributed-GEMM defaults from the `[compute]` config (routines
     /// may override per call via `algo` / `panel_rows` params).
     pub compute: DistGemmOptions,
+    /// Cooperative cancel flag for this invocation. Routines act on it
+    /// only at collective boundaries, after cross-rank agreement (see
+    /// [`task`] module docs) — never by bailing out locally.
+    pub cancel: CancelToken,
+    /// Live `(phase, fraction)` reporting channel; rank 0's reports feed
+    /// `PollJob`'s `Running { phase, progress }`.
+    pub progress: ProgressSink,
+    /// Client protocol version negotiated for the session. Routines
+    /// consult it before emitting wire shapes old clients cannot decode
+    /// (e.g. `Replicated` output layouts need ≥ v6).
+    pub wire_version: u16,
 }
 
 impl RoutineCtx<'_> {
@@ -65,12 +89,31 @@ pub struct RoutineOutput {
     pub new_matrices: Vec<MatrixMeta>,
 }
 
+/// One typed routine: a spec (schema + shape rules + cost) plus the SPMD
+/// body. Implementations live in [`routines`] and are registered in the
+/// library's [`registry::RoutineRegistry`].
+pub trait Routine: Send + Sync {
+    fn spec(&self) -> &spec::RoutineSpec;
+
+    /// Invoke collectively; params have already been validated against
+    /// [`Routine::spec`] by the caller ([`Library::run`]).
+    fn run(&self, params: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput>;
+}
+
 /// A loadable MPI-library wrapper (the ALI `Library` header analogue).
 pub trait Library: Send + Sync {
     fn name(&self) -> &str;
 
     /// List of routines (for error messages / introspection).
     fn routines(&self) -> Vec<&'static str>;
+
+    /// The typed routine table, when this library publishes one. Drives
+    /// driver-side validation, cost-aware admission and
+    /// `DescribeRoutines`; `None` (the default, for foreign ALIs) means
+    /// submissions are validated on the workers only, as before.
+    fn registry(&self) -> Option<&registry::RoutineRegistry> {
+        None
+    }
 
     /// Invoke `routine` collectively. Every session worker calls this with
     /// its own ctx; implementations communicate via `ctx.mesh`.

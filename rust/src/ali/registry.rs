@@ -1,16 +1,65 @@
 //! Library registry: the server-side table of loaded ALIs plus the
-//! process-wide factory table that stands in for `dlopen`.
+//! process-wide factory table that stands in for `dlopen`, and the
+//! per-library [`RoutineRegistry`] of typed routines.
 //!
 //! Paper §2.4: "Alchemist loads every ALI that is required by some Spark
 //! application dynamically at runtime" — and skips the ones nobody asked
 //! for. Factories reproduce that: registering a library instantiates it
-//! on each worker the first time a session asks for it.
+//! on each worker the first time a session asks for it. The driver loads
+//! the same library in-process, which is how it gets the routine specs it
+//! validates submissions against before sched admission.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::ali::Library;
+use crate::ali::spec::RoutineSpec;
+use crate::ali::{Library, Routine};
 use crate::{Error, Result};
+
+/// Ordered table of a library's typed routines. Registration order is
+/// the introspection/report order (`DescribeRoutines`, the README table).
+#[derive(Default)]
+pub struct RoutineRegistry {
+    routines: Vec<Arc<dyn Routine>>,
+}
+
+impl RoutineRegistry {
+    pub fn new() -> RoutineRegistry {
+        RoutineRegistry::default()
+    }
+
+    /// Add a routine; duplicate names are a registration bug.
+    pub fn register(&mut self, routine: Arc<dyn Routine>) -> Result<()> {
+        let name = routine.spec().name;
+        if self.routines.iter().any(|r| r.spec().name == name) {
+            return Err(Error::Ali(format!("routine {name:?} registered twice")));
+        }
+        self.routines.push(routine);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn Routine>> {
+        self.routines.iter().find(|r| r.spec().name == name)
+    }
+
+    /// Routine names in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.routines.iter().map(|r| r.spec().name).collect()
+    }
+
+    /// All specs in registration order.
+    pub fn specs(&self) -> Vec<&RoutineSpec> {
+        self.routines.iter().map(|r| r.spec()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.routines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routines.is_empty()
+    }
+}
 
 type Factory = Arc<dyn Fn() -> Arc<dyn Library> + Send + Sync>;
 

@@ -1,0 +1,118 @@
+//! Purely local elementwise routines: `scale` and `add`.
+
+use crate::ali::spec::{CostEstimate, OutputSpec, ParamSpec, RoutineSpec, ShapeRule};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::elemental::LocalPanel;
+use crate::protocol::{MatrixMeta, Params};
+use crate::Result;
+
+fn area(inputs: &[(&str, &MatrixMeta)], name: &str) -> f64 {
+    inputs
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, m)| m.rows as f64 * m.cols as f64)
+        .unwrap_or(0.0)
+}
+
+fn scale_cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let a = area(inputs, "A");
+    CostEstimate { flops: a, bytes: 16.0 * a }
+}
+
+pub struct Scale;
+
+impl Scale {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "input matrix"),
+                ParamSpec::f64_req("alpha", "scale factor"),
+            ],
+            outputs: vec![OutputSpec::new("B", "alpha * A, layout of A")],
+            cost: scale_cost,
+            ..RoutineSpec::new("scale", "B = alpha * A (local, no communication)")
+        }
+    }
+}
+
+static SCALE_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Scale {
+    fn spec(&self) -> &RoutineSpec {
+        SCALE_SPEC.get_or_init(Scale::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let alpha = params::get_f64(p, "alpha")?;
+        let hb = ctx.output_handle(0)?;
+        let a = ctx.store.get(ha)?;
+        let mut local = a.local().clone();
+        local.scale(alpha);
+        let meta = MatrixMeta { handle: hb, ..a.meta.clone() };
+        let slot = a.slot;
+        let panel = LocalPanel::from_local(meta.clone(), slot, local)?;
+        ctx.store.insert(panel)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}
+
+fn add_cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let a = area(inputs, "A");
+    CostEstimate { flops: 3.0 * a, bytes: 24.0 * a }
+}
+
+pub struct Add;
+
+impl Add {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "left operand"),
+                ParamSpec::matrix("B", "right operand (shape/layout of A)"),
+                ParamSpec::f64_opt("alpha", 1.0, "scale on A"),
+                ParamSpec::f64_opt("beta", 1.0, "scale on B"),
+            ],
+            outputs: vec![OutputSpec::new("C", "alpha * A + beta * B, layout of A")],
+            shape_rules: vec![ShapeRule::SameShape("A", "B"), ShapeRule::SameLayout("A", "B")],
+            cost: add_cost,
+            ..RoutineSpec::new("add", "C = alpha * A + beta * B (local, no communication)")
+        }
+    }
+}
+
+static ADD_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Add {
+    fn spec(&self) -> &RoutineSpec {
+        ADD_SPEC.get_or_init(Add::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        // C = alpha A + beta B (same shape, same layout — purely local;
+        // the spec's shape rules enforced the operand agreement).
+        let ha = params::get_matrix(p, "A")?;
+        let hb = params::get_matrix(p, "B")?;
+        let alpha = params::get_f64_or(p, "alpha", 1.0)?;
+        let beta = params::get_f64_or(p, "beta", 1.0)?;
+        let hc = ctx.output_handle(0)?;
+        let a = ctx.store.get(ha)?;
+        let b = ctx.store.get(hb)?;
+        if a.meta.rows != b.meta.rows
+            || a.meta.cols != b.meta.cols
+            || a.meta.layout != b.meta.layout
+        {
+            return Err(crate::Error::Shape("add: shape/layout mismatch".into()));
+        }
+        let mut local = a.local().clone();
+        local.scale(alpha);
+        for (dst, src) in local.data_mut().iter_mut().zip(b.local().data()) {
+            *dst += beta * src;
+        }
+        let meta = MatrixMeta { handle: hc, ..a.meta.clone() };
+        let slot = a.slot;
+        let panel = LocalPanel::from_local(meta.clone(), slot, local)?;
+        ctx.store.insert(panel)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}

@@ -1,0 +1,94 @@
+//! `gemm(A, B) -> C` — distributed GEMM (Table 1's workhorse).
+
+use crate::ali::spec::{
+    CostEstimate, OutputSpec, ParamRange, ParamSpec, RoutineSpec, ShapeRule,
+};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::elemental::dist_gemm::{dist_gemm_with_cancel, DistGemmAlgo};
+use crate::protocol::{MatrixMeta, Params};
+use crate::{Error, Result};
+
+fn cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let (mut m, mut k, mut n) = (0.0, 0.0, 0.0);
+    for (name, meta) in inputs {
+        match *name {
+            "A" => {
+                m = meta.rows as f64;
+                k = meta.cols as f64;
+            }
+            "B" => n = meta.cols as f64,
+            _ => {}
+        }
+    }
+    CostEstimate { flops: 2.0 * m * k * n, bytes: 8.0 * (m * k + k * n + m * n) }
+}
+
+pub struct Gemm;
+
+impl Gemm {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "left operand (m x k, RowBlock)"),
+                ParamSpec::matrix("B", "right operand (k x n, RowBlock)"),
+                ParamSpec::f64_opt("alpha", 1.0, "scale applied to the product"),
+                ParamSpec::str_opt(
+                    "algo",
+                    &["ring", "allgather"],
+                    "distributed algorithm override ([compute] default otherwise)",
+                ),
+                ParamSpec::i64_opt("panel_rows", 0, "sub-panel rows per shift (0 = whole)")
+                    .with_range(ParamRange::I64 { min: 0, max: i64::MAX }),
+            ],
+            outputs: vec![OutputSpec::new("C", "alpha * A * B, RowBlock like A")],
+            shape_rules: vec![
+                ShapeRule::RowBlock("A"),
+                ShapeRule::RowBlock("B"),
+                ShapeRule::ColsEqRows("A", "B"),
+            ],
+            cost,
+            ..RoutineSpec::new("gemm", "distributed C = alpha * A * B")
+        }
+    }
+}
+
+static GEMM_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Gemm {
+    fn spec(&self) -> &RoutineSpec {
+        GEMM_SPEC.get_or_init(Gemm::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let hb = params::get_matrix(p, "B")?;
+        let hc = ctx.output_handle(0)?;
+        let alpha = params::get_f64_or(p, "alpha", 1.0)?;
+        // Per-call overrides of the worker's `[compute]` defaults. SPMD-safe:
+        // every rank receives the identical params frame.
+        let mut opts = ctx.compute;
+        if let Some(algo) = params::get_str_opt(p, "algo")? {
+            opts.algo = DistGemmAlgo::parse(algo).map_err(|e| Error::Ali(e.to_string()))?;
+        }
+        let rows = params::get_i64_or(p, "panel_rows", opts.panel_rows as i64)?;
+        if rows < 0 {
+            return Err(Error::Ali("panel_rows must be >= 0".into()));
+        }
+        opts.panel_rows = rows as usize;
+        ctx.progress.report("dist_gemm", 0.05);
+        // The stored panels are read in place (disjoint-field borrows of
+        // ctx: store immutably, mesh mutably) — no per-call panel copies.
+        let mut c = {
+            let a = ctx.store.get(ha)?;
+            let b = ctx.store.get(hb)?;
+            dist_gemm_with_cancel(ctx.mesh, a, b, hc, ctx.backend, &opts, Some(&ctx.cancel))?
+        };
+        if alpha != 1.0 {
+            c.local_mut().scale(alpha);
+        }
+        ctx.progress.report("store_output", 0.95);
+        let meta = c.meta.clone();
+        ctx.store.insert(c)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}

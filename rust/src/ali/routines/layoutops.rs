@@ -1,0 +1,100 @@
+//! Layout/shape movers: `redistribute` (row-block ⇄ row-cyclic) and
+//! `transpose`.
+
+use crate::ali::spec::{CostEstimate, OutputSpec, ParamSpec, RoutineSpec, ShapeRule};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::elemental::redistribute::redistribute;
+use crate::protocol::{LayoutKind, MatrixMeta, Params};
+use crate::{Error, Result};
+
+fn bytes_cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let a = inputs
+        .iter()
+        .find(|(n, _)| *n == "A")
+        .map(|(_, m)| m.rows as f64 * m.cols as f64)
+        .unwrap_or(0.0);
+    CostEstimate { flops: 0.0, bytes: 16.0 * a }
+}
+
+pub struct Redistribute;
+
+impl Redistribute {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "input matrix"),
+                ParamSpec::str_req(
+                    "kind",
+                    &["row_block", "row_cyclic"],
+                    "target row distribution",
+                ),
+            ],
+            outputs: vec![OutputSpec::new("B", "A re-laid-out under `kind`")],
+            shape_rules: vec![ShapeRule::RowDistributed("A")],
+            cost: bytes_cost,
+            ..RoutineSpec::new("redistribute", "re-distribute rows across the worker group")
+        }
+    }
+}
+
+static REDIST_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Redistribute {
+    fn spec(&self) -> &RoutineSpec {
+        REDIST_SPEC.get_or_init(Redistribute::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let kind = match params::get_str(p, "kind")? {
+            "row_block" => LayoutKind::RowBlock,
+            "row_cyclic" => LayoutKind::RowCyclic,
+            other => return Err(Error::Ali(format!("unknown layout kind {other:?}"))),
+        };
+        let hb = ctx.output_handle(0)?;
+        let out = {
+            let a = ctx.store.get(ha)?;
+            redistribute(ctx.mesh, a, hb, kind)?
+        };
+        let meta = out.meta.clone();
+        ctx.store.insert(out)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}
+
+pub struct Transpose;
+
+impl Transpose {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![ParamSpec::matrix("A", "input matrix (RowBlock)")],
+            outputs: vec![OutputSpec::new("B", "A transposed, RowBlock")],
+            shape_rules: vec![ShapeRule::RowBlock("A")],
+            cost: bytes_cost,
+            ..RoutineSpec::new("transpose", "distributed B = A^T")
+        }
+    }
+}
+
+static TRANSPOSE_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Transpose {
+    fn spec(&self) -> &RoutineSpec {
+        TRANSPOSE_SPEC.get_or_init(Transpose::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let hb = ctx.output_handle(0)?;
+        let out = {
+            let a = ctx.store.get(ha)?;
+            if a.meta.layout.kind != LayoutKind::RowBlock {
+                return Err(Error::Shape("transpose requires RowBlock input".into()));
+            }
+            crate::elemental::transpose::dist_transpose(ctx.mesh, a, hb)?
+        };
+        let meta = out.meta.clone();
+        ctx.store.insert(out)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}

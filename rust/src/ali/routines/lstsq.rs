@@ -1,0 +1,117 @@
+//! `lstsq(A, y) -> x` — tall-skinny least squares via distributed normal
+//! equations + Cholesky (the regression workload the paper's intro
+//! motivates).
+
+use crate::ali::routines::slice_replicated;
+use crate::ali::spec::{
+    CostEstimate, OutputSpec, ParamRange, ParamSpec, RoutineSpec, ShapeRule,
+};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::comm::collectives::{allreduce_sum, AllReduceAlgo};
+use crate::linalg::DenseMatrix;
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
+use crate::{Error, Result};
+
+fn cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    match inputs.iter().find(|(n, _)| *n == "A") {
+        Some((_, a)) => {
+            let (m, n) = (a.rows as f64, a.cols as f64);
+            CostEstimate {
+                flops: 2.0 * m * n * n + n * n * n / 3.0,
+                bytes: 8.0 * (m * n + n * n),
+            }
+        }
+        None => CostEstimate::default(),
+    }
+}
+
+pub struct Lstsq;
+
+impl Lstsq {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "design matrix (m x n)"),
+                ParamSpec::matrix("y", "targets (m x 1, layout of A)"),
+                ParamSpec::f64_opt("ridge", 0.0, "Tikhonov regularization added to G's diagonal")
+                    .with_range(ParamRange::F64 { min: 0.0, max: f64::INFINITY }),
+            ],
+            outputs: vec![OutputSpec::new("x", "solution (n x 1)")],
+            shape_rules: vec![
+                ShapeRule::RowDistributed("A"),
+                ShapeRule::RowsMatch("y", "A"),
+                ShapeRule::ColsExactly("y", 1),
+                ShapeRule::SameLayout("y", "A"),
+            ],
+            cost,
+            ..RoutineSpec::new(
+                "lstsq",
+                "least-squares solve via distributed normal equations + Cholesky",
+            )
+        }
+    }
+}
+
+static LSTSQ_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Lstsq {
+    fn spec(&self) -> &RoutineSpec {
+        LSTSQ_SPEC.get_or_init(Lstsq::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        // min_x ||A x - y||_2 via normal equations + Cholesky:
+        //   G = AᵀA (all-reduced), b = Aᵀy (all-reduced), G x = b locally.
+        let ha = params::get_matrix(p, "A")?;
+        let hy = params::get_matrix(p, "y")?;
+        let ridge = params::get_f64_or(p, "ridge", 0.0)?;
+        let hx = ctx.output_handle(0)?;
+
+        let (n, x, res) = {
+            let a = ctx.store.get(ha)?;
+            let y = ctx.store.get(hy)?;
+            if y.meta.rows != a.meta.rows || y.meta.cols != 1 || y.meta.layout != a.meta.layout
+            {
+                return Err(Error::Shape("lstsq: y must be m x 1 with A's layout".into()));
+            }
+            let n = a.meta.cols as usize;
+            let y_local: Vec<f64> = (0..y.local_rows()).map(|i| y.local().get(i, 0)).collect();
+
+            let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
+            let mut b = a.local().matvec_t(&y_local)?;
+            allreduce_sum(ctx.mesh, &mut g, AllReduceAlgo::Ring)?;
+            allreduce_sum(ctx.mesh, &mut b, AllReduceAlgo::Ring)?;
+            let mut g_full = DenseMatrix::from_vec(n, n, g)?;
+            if ridge > 0.0 {
+                for i in 0..n {
+                    g_full.set(i, i, g_full.get(i, i) + ridge);
+                }
+            }
+            let x = crate::linalg::cholesky::spd_solve(&g_full, &b)?;
+
+            // residual norm: local ||A_loc x - y_loc||^2, all-reduced
+            let ax = a.local().matvec(&x)?;
+            let mut res = vec![ax
+                .iter()
+                .zip(&y_local)
+                .map(|(p, q)| (p - q) * (p - q))
+                .sum::<f64>()];
+            allreduce_sum(ctx.mesh, &mut res, AllReduceAlgo::Ring)?;
+            (n, x, res)
+        };
+
+        let meta = MatrixMeta {
+            handle: hx,
+            rows: n as u64,
+            cols: 1,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+        };
+        let rank = ctx.mesh.rank() as u32;
+        let panel = slice_replicated(&meta, rank, |i, _| x[i as usize])?;
+        ctx.store.insert(panel)?;
+        Ok(RoutineOutput {
+            outputs: vec![("residual".into(), ParamValue::F64(res[0].sqrt()))],
+            new_matrices: vec![meta],
+        })
+    }
+}

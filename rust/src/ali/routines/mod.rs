@@ -1,0 +1,80 @@
+//! The builtin library's routines, one module per routine family, each a
+//! [`Routine`](crate::ali::Routine) with a typed
+//! [`RoutineSpec`](crate::ali::spec::RoutineSpec) — the per-routine split
+//! of the old string-matched `ElemLib::run` monolith.
+//!
+//! [`registry`] assembles the table; its registration order is the
+//! introspection order (`DescribeRoutines`, the README routine table).
+
+pub mod elementwise;
+pub mod gemm;
+pub mod layoutops;
+pub mod lstsq;
+pub mod stats;
+pub mod svd;
+
+use std::sync::Arc;
+
+use crate::ali::registry::RoutineRegistry;
+use crate::elemental::LocalPanel;
+use crate::protocol::{MatrixMeta, ROUTINE_ENGINE_PROTOCOL_VERSION};
+use crate::{Error, Result};
+
+/// The full elemlib routine table, in its canonical order.
+pub fn registry() -> RoutineRegistry {
+    let mut reg = RoutineRegistry::new();
+    for routine in [
+        Arc::new(gemm::Gemm) as Arc<dyn crate::ali::Routine>,
+        Arc::new(svd::TruncatedSvd),
+        Arc::new(svd::CondEst),
+        Arc::new(stats::FroNorm),
+        Arc::new(elementwise::Scale),
+        Arc::new(layoutops::Redistribute),
+        Arc::new(layoutops::Transpose),
+        Arc::new(elementwise::Add),
+        Arc::new(stats::Gramian),
+        Arc::new(stats::ColStats),
+        Arc::new(lstsq::Lstsq),
+    ] {
+        reg.register(routine).expect("builtin routine table has no duplicates");
+    }
+    reg
+}
+
+/// True when the session's client can decode `Replicated` layouts;
+/// pre-v6 sessions get the legacy RowBlock slicing of small outputs.
+pub fn replicated_ok(wire_version: u16) -> bool {
+    wire_version >= ROUTINE_ENGINE_PROTOCOL_VERSION
+}
+
+/// Slot of this rank in a matrix's owner list (rank order == slot order).
+pub(crate) fn rank_slot(meta: &MatrixMeta, rank: u32) -> Result<u32> {
+    if (rank as usize) < meta.layout.owners.len() {
+        Ok(rank)
+    } else {
+        Err(Error::Server(format!("rank {rank} outside owner list of handle {}", meta.handle)))
+    }
+}
+
+/// Build this rank's panel of a logically replicated matrix defined by a
+/// closure over (global_row, col). With a `Replicated` layout the panel
+/// holds every row; with the legacy RowBlock layout it holds the rank's
+/// slice (the k < p edge then leaves some owners with zero rows — see
+/// rust/README.md §Replicated outputs).
+pub(crate) fn slice_replicated(
+    meta: &MatrixMeta,
+    rank: u32,
+    f: impl Fn(u64, u64) -> f64,
+) -> Result<LocalPanel> {
+    let mut panel = LocalPanel::alloc(meta.clone(), rank)?;
+    let layout = panel.layout();
+    let rows: Vec<u64> = layout.rows_of_slot(rank).collect();
+    let mut buf = vec![0.0; meta.cols as usize];
+    for r in rows {
+        for (c, slot) in buf.iter_mut().enumerate() {
+            *slot = f(r, c as u64);
+        }
+        panel.set_row(r, &buf)?;
+    }
+    Ok(panel)
+}

@@ -1,0 +1,171 @@
+//! Reduction-shaped routines: `fro_norm`, `gramian`, `col_stats`.
+
+use crate::ali::routines::slice_replicated;
+use crate::ali::spec::{CostEstimate, OutputSpec, ParamSpec, RoutineSpec, ShapeRule};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::comm::collectives::{allreduce_sum, AllReduceAlgo};
+use crate::elemental::dist_gemm::dist_frobenius;
+use crate::linalg::DenseMatrix;
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
+use crate::Result;
+
+fn area(inputs: &[(&str, &MatrixMeta)]) -> f64 {
+    inputs
+        .iter()
+        .find(|(n, _)| *n == "A")
+        .map(|(_, m)| m.rows as f64 * m.cols as f64)
+        .unwrap_or(0.0)
+}
+
+fn linear_cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let a = area(inputs);
+    CostEstimate { flops: 2.0 * a, bytes: 8.0 * a }
+}
+
+pub struct FroNorm;
+
+impl FroNorm {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![ParamSpec::matrix("A", "input matrix")],
+            shape_rules: vec![ShapeRule::RowDistributed("A")],
+            cost: linear_cost,
+            ..RoutineSpec::new("fro_norm", "distributed Frobenius norm (scalar output)")
+        }
+    }
+}
+
+static FRO_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for FroNorm {
+    fn spec(&self) -> &RoutineSpec {
+        FRO_SPEC.get_or_init(FroNorm::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let norm = {
+            let a = ctx.store.get(ha)?;
+            dist_frobenius(ctx.mesh, a)?
+        };
+        Ok(RoutineOutput {
+            outputs: vec![("fro_norm".into(), ParamValue::F64(norm))],
+            new_matrices: vec![],
+        })
+    }
+}
+
+fn gramian_cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    match inputs.iter().find(|(n, _)| *n == "A") {
+        Some((_, a)) => {
+            let (m, n) = (a.rows as f64, a.cols as f64);
+            CostEstimate { flops: 2.0 * m * n * n, bytes: 8.0 * (m * n + n * n) }
+        }
+        None => CostEstimate::default(),
+    }
+}
+
+pub struct Gramian;
+
+impl Gramian {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![ParamSpec::matrix("A", "input matrix (m x n, modest n)")],
+            outputs: vec![OutputSpec::new("G", "A^T A (n x n)")],
+            shape_rules: vec![ShapeRule::RowDistributed("A")],
+            cost: gramian_cost,
+            ..RoutineSpec::new("gramian", "G = A^T A via local gemm_tn + all-reduce")
+        }
+    }
+}
+
+static GRAMIAN_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for Gramian {
+    fn spec(&self) -> &RoutineSpec {
+        GRAMIAN_SPEC.get_or_init(Gramian::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        // G = AᵀA (n x n): local gemm_tn + all-reduce, stored RowBlock.
+        // MLlib's computeGramianMatrix analogue — n must be modest.
+        let ha = params::get_matrix(p, "A")?;
+        let hg = ctx.output_handle(0)?;
+        let (n, g_full) = {
+            let a = ctx.store.get(ha)?;
+            let n = a.meta.cols as usize;
+            let mut g = crate::linalg::gemm::gemm_tn(a.local(), a.local())?.into_vec();
+            allreduce_sum(ctx.mesh, &mut g, AllReduceAlgo::Ring)?;
+            (n, DenseMatrix::from_vec(n, n, g)?)
+        };
+        let meta = MatrixMeta {
+            handle: hg,
+            rows: n as u64,
+            cols: n as u64,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+        };
+        let rank = ctx.mesh.rank() as u32;
+        let panel = slice_replicated(&meta, rank, |i, j| g_full.get(i as usize, j as usize))?;
+        ctx.store.insert(panel)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}
+
+pub struct ColStats;
+
+impl ColStats {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![ParamSpec::matrix("A", "input matrix")],
+            outputs: vec![OutputSpec::new("S", "n x 2 [mean, stddev] per column")],
+            shape_rules: vec![ShapeRule::RowDistributed("A")],
+            cost: linear_cost,
+            ..RoutineSpec::new("col_stats", "column means and population stddevs")
+        }
+    }
+}
+
+static COLSTATS_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for ColStats {
+    fn spec(&self) -> &RoutineSpec {
+        COLSTATS_SPEC.get_or_init(ColStats::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        // column means and (population) stddevs -> n x 2 matrix [mean, std]
+        let ha = params::get_matrix(p, "A")?;
+        let hs = ctx.output_handle(0)?;
+        let (n, m, acc) = {
+            let a = ctx.store.get(ha)?;
+            let n = a.meta.cols as usize;
+            let m = a.meta.rows as f64;
+            let mut acc = vec![0.0; 2 * n]; // sums then sumsq
+            for (_, row) in a.iter_rows() {
+                for (j, &v) in row.iter().enumerate() {
+                    acc[j] += v;
+                    acc[n + j] += v * v;
+                }
+            }
+            allreduce_sum(ctx.mesh, &mut acc, AllReduceAlgo::Ring)?;
+            (n, m, acc)
+        };
+        let meta = MatrixMeta {
+            handle: hs,
+            rows: n as u64,
+            cols: 2,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: ctx.owners.clone() },
+        };
+        let rank = ctx.mesh.rank() as u32;
+        let panel = slice_replicated(&meta, rank, |i, j| {
+            let mean = acc[i as usize] / m;
+            if j == 0 {
+                mean
+            } else {
+                (acc[n + i as usize] / m - mean * mean).max(0.0).sqrt()
+            }
+        })?;
+        ctx.store.insert(panel)?;
+        Ok(RoutineOutput { outputs: vec![], new_matrices: vec![meta] })
+    }
+}

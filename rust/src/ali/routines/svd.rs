@@ -1,0 +1,318 @@
+//! `truncated_svd(A, k) -> U, S, V` — ARPACK-style thick-restart Lanczos
+//! on the Gram operator (the paper's Figs 3/4) — and `condest(A)`, the
+//! paper's §3.3 example routine built on the same operator.
+
+use crate::ali::routines::{rank_slot, replicated_ok, slice_replicated};
+use crate::ali::spec::{
+    CostEstimate, OutputSpec, ParamRange, ParamSpec, RoutineSpec, ShapeRule,
+};
+use crate::ali::task::{CancelToken, ProgressSink};
+use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
+use crate::arpack::{lanczos_topk, LanczosOptions, SymOp};
+use crate::comm::{collectives, Mesh};
+use crate::elemental::dist_gemm::dist_gram_matvec;
+use crate::linalg::DenseMatrix;
+use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, ParamValue, Params};
+use crate::runtime::tiling::pjrt_gram_matvec;
+use crate::{Error, Result};
+
+/// Distributed Gram operator: w = Σ_ranks A_rᵀ(A_r v), one ring
+/// all-reduce per application. Local halves go through the fused PJRT
+/// artifacts with **device-resident cached panels** when available (the
+/// panel is uploaded once; later iterations only ship v), else native
+/// kernels. The panel is *borrowed* from the worker's store — the
+/// operator never copies it (the old full-panel clone was one whole copy
+/// of A on the Fig 3/4 hot path).
+///
+/// Each application ends with a scalar cancel-agreement all-reduce
+/// (`allreduce_flag`), so a client `CancelJob` takes effect within one
+/// Lanczos iteration of every rank's token being set — and every rank
+/// aborts at the same iteration (see `ali::task`).
+pub(crate) struct DistGramOp<'a> {
+    mesh: &'a mut Mesh,
+    local: &'a DenseMatrix,
+    runtime: Option<&'static crate::runtime::PjrtRuntime>,
+    cached: Option<crate::runtime::tiling::CachedGramPanel>,
+    cancel: CancelToken,
+    progress: ProgressSink,
+    pub applications: usize,
+}
+
+impl<'a> DistGramOp<'a> {
+    /// `handle` keys the device-buffer cache (worker `FreeMatrix`
+    /// invalidates it). The cache base also folds in the session rank:
+    /// in this testbed all in-process workers share one PJRT runtime, so
+    /// two ranks' panels of the same handle must not collide (separate
+    /// worker *processes* would each have their own runtime).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        mesh: &'a mut Mesh,
+        local: &'a DenseMatrix,
+        runtime: Option<&'static crate::runtime::PjrtRuntime>,
+        handle: u64,
+        use_pjrt: bool,
+        cancel: CancelToken,
+        progress: ProgressSink,
+    ) -> Result<DistGramOp<'a>> {
+        let base = handle * 256 + mesh.rank() as u64;
+        let runtime = if use_pjrt { runtime } else { None };
+        let cached = match runtime {
+            Some(rt) => crate::runtime::tiling::CachedGramPanel::new(rt, base, local)?,
+            None => None,
+        };
+        Ok(DistGramOp { mesh, local, runtime, cached, cancel, progress, applications: 0 })
+    }
+}
+
+impl SymOp for DistGramOp<'_> {
+    fn dim(&self) -> usize {
+        self.local.cols()
+    }
+
+    fn apply(&mut self, v: &[f64]) -> Result<Vec<f64>> {
+        self.applications += 1;
+        let local = self.local;
+        let rt = self.runtime;
+        let cached = self.cached.as_ref();
+        let w = dist_gram_matvec(self.mesh, v, move |x| match (cached, rt) {
+            (Some(panel), Some(rt)) => panel.apply(rt, x),
+            (None, Some(rt)) => pjrt_gram_matvec(rt, local, x),
+            (_, None) => {
+                let t = local.matvec(x)?;
+                local.matvec_t(&t)
+            }
+        })?;
+        // Cancel agreement at the collective boundary. Kept as a separate
+        // scalar all-reduce (not piggybacked on the Gram reduction) so
+        // the main-path summation order — and therefore the routine's
+        // output bits — are unchanged from the pre-engine code.
+        if collectives::allreduce_flag(self.mesh, self.cancel.is_cancelled())? {
+            return Err(Error::Cancelled(format!(
+                "cancelled after {} Gram applications",
+                self.applications
+            )));
+        }
+        // Lanczos has no fixed iteration count; report a monotone
+        // asymptotic fraction so `PollJob` sees movement.
+        let a = self.applications as f64;
+        self.progress.report("lanczos", a / (a + 32.0));
+        Ok(w)
+    }
+}
+
+fn tsvd_cost(p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let k = p
+        .iter()
+        .find(|(name, _)| name == "k")
+        .and_then(|(_, v)| v.as_i64().ok())
+        .unwrap_or(1)
+        .max(1) as f64;
+    match inputs.iter().find(|(name, _)| *name == "A") {
+        Some((_, a)) => {
+            let (m, n) = (a.rows as f64, a.cols as f64);
+            CostEstimate { flops: 4.0 * m * n * (2.0 * k + 30.0), bytes: 8.0 * m * n }
+        }
+        None => CostEstimate::default(),
+    }
+}
+
+pub struct TruncatedSvd;
+
+impl TruncatedSvd {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "input matrix (m x n)"),
+                ParamSpec::i64_req("k", "number of singular triplets"),
+                ParamSpec::f64_opt("tol", 1e-10, "Lanczos residual tolerance")
+                    .with_range(ParamRange::F64 { min: 0.0, max: f64::INFINITY }),
+            ],
+            outputs: vec![
+                OutputSpec::new("U", "left singular vectors (m x k, layout of A)"),
+                OutputSpec::new("S", "singular values (k x 1, replicated)"),
+                OutputSpec::new("V", "right singular vectors (n x k, replicated)"),
+            ],
+            shape_rules: vec![ShapeRule::RowDistributed("A"), ShapeRule::ParamLeMinDim("k", "A")],
+            cost: tsvd_cost,
+            ..RoutineSpec::new("truncated_svd", "rank-k truncated SVD (thick-restart Lanczos)")
+        }
+    }
+}
+
+static TSVD_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for TruncatedSvd {
+    fn spec(&self) -> &RoutineSpec {
+        TSVD_SPEC.get_or_init(TruncatedSvd::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let k = params::get_i64(p, "k")? as usize;
+        let tol = params::get_f64_or(p, "tol", 1e-10)?;
+        let hu = ctx.output_handle(0)?;
+        let hs = ctx.output_handle(1)?;
+        let hv = ctx.output_handle(2)?;
+
+        let a_meta = ctx.store.get(ha)?.meta.clone();
+        let (m, n) = (a_meta.rows, a_meta.cols);
+        if k == 0 || k as u64 > n.min(m) {
+            return Err(Error::Numerical(format!(
+                "truncated_svd: k={k} out of range for {m}x{n}"
+            )));
+        }
+
+        // SPMD Lanczos: every rank runs the identical iteration; the only
+        // cross-rank ops are the all-reduces inside the Gram operator,
+        // which are deterministic, so all ranks hold identical basis/Ritz
+        // state. The operator reads the stored panel in place (disjoint
+        // borrows: ctx.store immutably, ctx.mesh mutably).
+        let result = {
+            let a = ctx.store.get(ha)?;
+            let mut op = DistGramOp::new(
+                ctx.mesh,
+                a.local(),
+                ctx.runtime,
+                ha,
+                ctx.svd_pjrt,
+                ctx.cancel.clone(),
+                ctx.progress.clone(),
+            )?;
+            lanczos_topk(&mut op, k, &LanczosOptions { tol, ..Default::default() })?
+        };
+        ctx.progress.report("factor", 0.9);
+
+        let mut sigma = Vec::with_capacity(k);
+        let mut v_full = DenseMatrix::zeros(n as usize, k);
+        for (j, (theta, vec)) in result.eigenvalues.iter().zip(&result.eigenvectors).enumerate()
+        {
+            sigma.push(theta.max(0.0).sqrt());
+            for i in 0..n as usize {
+                v_full.set(i, j, vec[i]);
+            }
+        }
+
+        // U_local = A_local V Σ⁻¹ (rank-deficient columns zeroed).
+        let mut u_local = {
+            let a = ctx.store.get(ha)?;
+            ctx.backend.gemm(a.local(), &v_full)?
+        };
+        for j in 0..k {
+            let s = sigma[j];
+            let inv = if s > 1e-12 { 1.0 / s } else { 0.0 };
+            for i in 0..u_local.rows() {
+                let cur = u_local.get(i, j);
+                u_local.set(i, j, cur * inv);
+            }
+        }
+
+        let owners = ctx.owners.clone();
+        let rank = ctx.mesh.rank() as u32;
+        // S (k x 1) and V (n x k) are logically replicated on every rank.
+        // v6+ sessions store them under the explicit Replicated layout so
+        // client fetches read one owner; older sessions keep the legacy
+        // RowBlock slicing (with its k < p zero-row owners).
+        let small_kind = if replicated_ok(ctx.wire_version) {
+            LayoutKind::Replicated
+        } else {
+            LayoutKind::RowBlock
+        };
+        let layout =
+            |_rows: u64| LayoutDesc { kind: small_kind, owners: owners.clone() };
+
+        // U: same row distribution as A.
+        let u_meta =
+            MatrixMeta { handle: hu, rows: m, cols: k as u64, layout: a_meta.layout.clone() };
+        let u_slot = rank_slot(&a_meta, rank)?;
+        let u_panel = crate::elemental::LocalPanel::from_local(u_meta.clone(), u_slot, u_local)?;
+
+        let s_meta = MatrixMeta { handle: hs, rows: k as u64, cols: 1, layout: layout(k as u64) };
+        let s_panel = slice_replicated(&s_meta, rank, |i, _| sigma[i as usize])?;
+        let v_meta = MatrixMeta { handle: hv, rows: n, cols: k as u64, layout: layout(n) };
+        let v_panel =
+            slice_replicated(&v_meta, rank, |i, j| v_full.get(i as usize, j as usize))?;
+
+        let metas = vec![u_meta, s_meta, v_meta];
+        ctx.store.insert(u_panel)?;
+        ctx.store.insert(s_panel)?;
+        ctx.store.insert(v_panel)?;
+
+        Ok(RoutineOutput {
+            outputs: vec![
+                ("matvecs".into(), ParamValue::I64(result.matvecs as i64)),
+                ("restarts".into(), ParamValue::I64(result.restarts as i64)),
+            ],
+            new_matrices: metas,
+        })
+    }
+}
+
+fn condest_cost(p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    let probes = p
+        .iter()
+        .find(|(name, _)| name == "probes")
+        .and_then(|(_, v)| v.as_i64().ok())
+        .unwrap_or(8)
+        .max(1) as f64;
+    match inputs.iter().find(|(name, _)| *name == "A") {
+        Some((_, a)) => {
+            let (m, n) = (a.rows as f64, a.cols as f64);
+            CostEstimate { flops: 4.0 * m * n * (4.0 * probes + 20.0), bytes: 8.0 * m * n }
+        }
+        None => CostEstimate::default(),
+    }
+}
+
+pub struct CondEst;
+
+impl CondEst {
+    pub fn spec() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "input matrix (m x n)"),
+                ParamSpec::i64_opt("probes", 8, "Lanczos probes (clamped to [2, n])")
+                    .with_range(ParamRange::I64 { min: 1, max: i64::MAX }),
+            ],
+            shape_rules: vec![ShapeRule::RowDistributed("A")],
+            cost: condest_cost,
+            ..RoutineSpec::new("condest", "2-norm condition-number estimate via the Gram operator")
+        }
+    }
+}
+
+static CONDEST_SPEC: std::sync::OnceLock<RoutineSpec> = std::sync::OnceLock::new();
+
+impl Routine for CondEst {
+    fn spec(&self) -> &RoutineSpec {
+        CONDEST_SPEC.get_or_init(CondEst::spec)
+    }
+
+    fn run(&self, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        let ha = params::get_matrix(p, "A")?;
+        let probes = params::get_i64_or(p, "probes", 8)? as usize;
+        let n = ctx.store.get(ha)?.meta.cols as usize;
+        let k = probes.clamp(2.min(n), n);
+        // Same in-place panel borrow as truncated_svd (no panel clone).
+        let result = {
+            let a = ctx.store.get(ha)?;
+            let mut op = DistGramOp::new(
+                ctx.mesh,
+                a.local(),
+                ctx.runtime,
+                ha,
+                ctx.svd_pjrt,
+                ctx.cancel.clone(),
+                ctx.progress.clone(),
+            )?;
+            let opts = LanczosOptions { max_basis: (4 * k + 20).min(n), ..Default::default() };
+            lanczos_topk(&mut op, k, &opts)?
+        };
+        let smax = result.eigenvalues.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+        let smin = result.eigenvalues.last().copied().unwrap_or(0.0).max(0.0).sqrt();
+        let cond = if smin <= 1e-300 { f64::INFINITY } else { smax / smin };
+        Ok(RoutineOutput {
+            outputs: vec![("condest".into(), ParamValue::F64(cond))],
+            new_matrices: vec![],
+        })
+    }
+}

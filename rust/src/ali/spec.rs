@@ -1,0 +1,607 @@
+//! Typed routine specifications — the introspectable half of the ALI
+//! calling convention (paper §2.3/§3.5, plus the routine-introspection
+//! surface the Alchemist deployment papers motivate).
+//!
+//! A [`RoutineSpec`] declares a routine's parameter schema (names, types,
+//! defaults, ranges), its input-matrix shape rules, its distributed
+//! outputs, and a FLOP/byte cost estimate. The same spec is evaluated in
+//! two places:
+//!
+//! * **driver-side**, before sched admission: malformed submissions fail
+//!   at `SubmitRoutine` time without ever consuming a job slot or the
+//!   worker group;
+//! * **worker-side**, on entry to the library: every rank validates the
+//!   identical params frame against the identical store metadata, so a
+//!   rejection is SPMD-deterministic (all ranks refuse before any
+//!   collective is entered).
+//!
+//! The serializable subset (names/types/defaults/docs) crosses the wire
+//! as [`RoutineDescriptor`] in the v6 `DescribeRoutines` reply; shape
+//! rules and cost functions stay server-side.
+
+use crate::protocol::{
+    MatrixMeta, ParamDescriptor, ParamType, ParamValue, Params, RoutineDescriptor,
+};
+use crate::{Error, Result};
+
+/// Estimated resource footprint of one routine invocation, derived from
+/// the spec's cost function over the resolved input shapes. The
+/// scheduler's per-session in-flight cost cap compares
+/// [`CostEstimate::weight`] sums against `sched.max_inflight_cost_per_session`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostEstimate {
+    /// Floating-point operations across the worker group.
+    pub flops: f64,
+    /// Bytes touched/moved (panel reads, collective traffic).
+    pub bytes: f64,
+}
+
+impl CostEstimate {
+    /// Scalar admission weight: flops plus bytes, both counted once.
+    /// Crude, but monotone in problem size — which is all the in-flight
+    /// cap needs.
+    pub fn weight(&self) -> f64 {
+        self.flops + self.bytes
+    }
+}
+
+/// Cost function over (params, resolved input metas). Input metas are
+/// `(param_name, meta)` pairs in spec order.
+pub type CostFn = fn(&Params, &[(&str, &MatrixMeta)]) -> CostEstimate;
+
+fn zero_cost(_: &Params, _: &[(&str, &MatrixMeta)]) -> CostEstimate {
+    CostEstimate::default()
+}
+
+/// Value constraint on one parameter.
+#[derive(Debug, Clone, Copy)]
+pub enum ParamRange {
+    Any,
+    I64 { min: i64, max: i64 },
+    F64 { min: f64, max: f64 },
+    /// String must be one of these spellings.
+    OneOf(&'static [&'static str]),
+}
+
+/// One declared parameter.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub ty: ParamType,
+    pub required: bool,
+    /// Default applied by the routine when the parameter is omitted
+    /// (documentation; specs do not inject it into the params list).
+    pub default: Option<ParamValue>,
+    pub range: ParamRange,
+    pub doc: &'static str,
+}
+
+impl ParamSpec {
+    /// Required matrix-handle parameter (an input role).
+    pub fn matrix(name: &'static str, doc: &'static str) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::Matrix,
+            required: true,
+            default: None,
+            range: ParamRange::Any,
+            doc,
+        }
+    }
+
+    /// Required i64 parameter.
+    pub fn i64_req(name: &'static str, doc: &'static str) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::I64,
+            required: true,
+            default: None,
+            range: ParamRange::Any,
+            doc,
+        }
+    }
+
+    /// Optional i64 parameter with a default.
+    pub fn i64_opt(name: &'static str, default: i64, doc: &'static str) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::I64,
+            required: false,
+            default: Some(ParamValue::I64(default)),
+            range: ParamRange::Any,
+            doc,
+        }
+    }
+
+    /// Required f64 parameter.
+    pub fn f64_req(name: &'static str, doc: &'static str) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::F64,
+            required: true,
+            default: None,
+            range: ParamRange::Any,
+            doc,
+        }
+    }
+
+    /// Optional f64 parameter with a default.
+    pub fn f64_opt(name: &'static str, default: f64, doc: &'static str) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::F64,
+            required: false,
+            default: Some(ParamValue::F64(default)),
+            range: ParamRange::Any,
+            doc,
+        }
+    }
+
+    /// Required string parameter constrained to `one_of`.
+    pub fn str_req(
+        name: &'static str,
+        one_of: &'static [&'static str],
+        doc: &'static str,
+    ) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::Str,
+            required: true,
+            default: None,
+            range: ParamRange::OneOf(one_of),
+            doc,
+        }
+    }
+
+    /// Optional string parameter constrained to `one_of`.
+    pub fn str_opt(
+        name: &'static str,
+        one_of: &'static [&'static str],
+        doc: &'static str,
+    ) -> ParamSpec {
+        ParamSpec {
+            name,
+            ty: ParamType::Str,
+            required: false,
+            default: None,
+            range: ParamRange::OneOf(one_of),
+            doc,
+        }
+    }
+
+    /// Attach a value range.
+    pub fn with_range(mut self, range: ParamRange) -> ParamSpec {
+        self.range = range;
+        self
+    }
+}
+
+/// One declared distributed output.
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub name: &'static str,
+    pub doc: &'static str,
+}
+
+impl OutputSpec {
+    pub fn new(name: &'static str, doc: &'static str) -> OutputSpec {
+        OutputSpec { name, doc }
+    }
+}
+
+/// Declarative shape/layout constraint over the resolved input metas.
+/// Rules referencing a matrix param that is absent (only possible for
+/// optional matrix params) are skipped.
+#[derive(Debug, Clone, Copy)]
+pub enum ShapeRule {
+    /// `a.cols == b.rows` (GEMM compatibility).
+    ColsEqRows(&'static str, &'static str),
+    /// Same (rows, cols) on both.
+    SameShape(&'static str, &'static str),
+    /// Identical layout descriptor (kind + owners).
+    SameLayout(&'static str, &'static str),
+    /// `m.cols == n` exactly.
+    ColsExactly(&'static str, u64),
+    /// `a.rows == b.rows`.
+    RowsMatch(&'static str, &'static str),
+    /// Input must be RowBlock-distributed.
+    RowBlock(&'static str),
+    /// Input rows must be *partitioned* across owners (RowBlock or
+    /// RowCyclic) — a `Replicated` input would make every
+    /// partial-sum-then-all-reduce routine overcount by a factor of p.
+    RowDistributed(&'static str),
+    /// i64 param must satisfy `1 <= p <= min(m.rows, m.cols)`.
+    ParamLeMinDim(&'static str, &'static str),
+}
+
+fn find<'a>(
+    inputs: &'a [(&'static str, MatrixMeta)],
+    name: &str,
+) -> Option<&'a MatrixMeta> {
+    inputs.iter().find(|(n, _)| *n == name).map(|(_, m)| m)
+}
+
+impl ShapeRule {
+    fn check(
+        &self,
+        routine: &str,
+        params: &Params,
+        inputs: &[(&'static str, MatrixMeta)],
+    ) -> Result<()> {
+        let shape_err = |msg: String| Err(Error::Shape(format!("routine {routine}: {msg}")));
+        match *self {
+            ShapeRule::ColsEqRows(a, b) => match (find(inputs, a), find(inputs, b)) {
+                (Some(ma), Some(mb)) if ma.cols != mb.rows => shape_err(format!(
+                    "{a} is {}x{} but {b} is {}x{} ({a}.cols must equal {b}.rows)",
+                    ma.rows, ma.cols, mb.rows, mb.cols
+                )),
+                _ => Ok(()),
+            },
+            ShapeRule::SameShape(a, b) => match (find(inputs, a), find(inputs, b)) {
+                (Some(ma), Some(mb)) if (ma.rows, ma.cols) != (mb.rows, mb.cols) => {
+                    shape_err(format!(
+                        "{a} is {}x{} but {b} is {}x{} (shapes must match)",
+                        ma.rows, ma.cols, mb.rows, mb.cols
+                    ))
+                }
+                _ => Ok(()),
+            },
+            ShapeRule::SameLayout(a, b) => match (find(inputs, a), find(inputs, b)) {
+                (Some(ma), Some(mb)) if ma.layout != mb.layout => {
+                    shape_err(format!("{a} and {b} must share one layout"))
+                }
+                _ => Ok(()),
+            },
+            ShapeRule::ColsExactly(a, n) => match find(inputs, a) {
+                Some(ma) if ma.cols != n => {
+                    shape_err(format!("{a} must have exactly {n} column(s), has {}", ma.cols))
+                }
+                _ => Ok(()),
+            },
+            ShapeRule::RowsMatch(a, b) => match (find(inputs, a), find(inputs, b)) {
+                (Some(ma), Some(mb)) if ma.rows != mb.rows => shape_err(format!(
+                    "{a} has {} rows but {b} has {} (row counts must match)",
+                    ma.rows, mb.rows
+                )),
+                _ => Ok(()),
+            },
+            ShapeRule::RowBlock(a) => match find(inputs, a) {
+                Some(ma) if ma.layout.kind != crate::protocol::LayoutKind::RowBlock => {
+                    shape_err(format!("{a} must be RowBlock-distributed (redistribute first)"))
+                }
+                _ => Ok(()),
+            },
+            ShapeRule::RowDistributed(a) => match find(inputs, a) {
+                Some(ma) if ma.layout.kind == crate::protocol::LayoutKind::Replicated => {
+                    shape_err(format!(
+                        "{a} is Replicated; this routine needs a row-partitioned input"
+                    ))
+                }
+                _ => Ok(()),
+            },
+            ShapeRule::ParamLeMinDim(p, a) => {
+                let (Some(ma), Some((_, v))) =
+                    (find(inputs, a), params.iter().find(|(k, _)| k == p))
+                else {
+                    return Ok(());
+                };
+                let x = v.as_i64()?;
+                let cap = ma.rows.min(ma.cols);
+                if x < 1 || x as u64 > cap {
+                    return shape_err(format!(
+                        "{p}={x} out of range for {} x {} {a} (must be in 1..={cap})",
+                        ma.rows, ma.cols
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Full typed specification of one routine.
+#[derive(Clone)]
+pub struct RoutineSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<OutputSpec>,
+    pub shape_rules: Vec<ShapeRule>,
+    pub cost: CostFn,
+}
+
+impl std::fmt::Debug for RoutineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RoutineSpec")
+            .field("name", &self.name)
+            .field("params", &self.params.len())
+            .field("outputs", &self.outputs.len())
+            .finish()
+    }
+}
+
+impl RoutineSpec {
+    /// Spec with no params/outputs/rules and zero cost — extend with the
+    /// struct-update syntax.
+    pub fn new(name: &'static str, summary: &'static str) -> RoutineSpec {
+        RoutineSpec {
+            name,
+            summary,
+            params: vec![],
+            outputs: vec![],
+            shape_rules: vec![],
+            cost: zero_cost,
+        }
+    }
+
+    /// Validate `params` against this spec, resolving matrix handles
+    /// through `lookup`. Returns the resolved `(param_name, meta)` inputs
+    /// in spec order. Checks, in order: unknown/duplicate names, required
+    /// presence, value types, value ranges, handle resolution, then the
+    /// shape rules.
+    pub fn validate(
+        &self,
+        params: &Params,
+        mut lookup: impl FnMut(u64) -> Option<MatrixMeta>,
+    ) -> Result<Vec<(&'static str, MatrixMeta)>> {
+        for (i, (name, _)) in params.iter().enumerate() {
+            if !self.params.iter().any(|p| p.name == name) {
+                let known: Vec<&str> = self.params.iter().map(|p| p.name).collect();
+                return Err(Error::Ali(format!(
+                    "routine {}: unknown parameter {name:?} (expected among {known:?})",
+                    self.name
+                )));
+            }
+            if params.iter().skip(i + 1).any(|(other, _)| other == name) {
+                return Err(Error::Ali(format!(
+                    "routine {}: duplicate parameter {name:?}",
+                    self.name
+                )));
+            }
+        }
+
+        let mut inputs: Vec<(&'static str, MatrixMeta)> = Vec::new();
+        for spec in &self.params {
+            let found = params.iter().find(|(k, _)| k == spec.name);
+            let Some((_, value)) = found else {
+                if spec.required {
+                    return Err(Error::Ali(format!(
+                        "routine {}: missing parameter {:?} (required, {})",
+                        self.name,
+                        spec.name,
+                        spec.ty.name()
+                    )));
+                }
+                continue;
+            };
+            let ctx = |e: Error| {
+                Error::Ali(format!("routine {}: parameter {:?}: {e}", self.name, spec.name))
+            };
+            match spec.ty {
+                ParamType::I64 => {
+                    let x = value.as_i64().map_err(ctx)?;
+                    if let ParamRange::I64 { min, max } = spec.range {
+                        if x < min || x > max {
+                            return Err(Error::Ali(format!(
+                                "routine {}: parameter {:?} = {x} out of range [{min}, {max}]",
+                                self.name, spec.name
+                            )));
+                        }
+                    }
+                }
+                ParamType::F64 => {
+                    let x = value.as_f64().map_err(ctx)?;
+                    if let ParamRange::F64 { min, max } = spec.range {
+                        if !(x >= min && x <= max) {
+                            return Err(Error::Ali(format!(
+                                "routine {}: parameter {:?} = {x} out of range [{min}, {max}]",
+                                self.name, spec.name
+                            )));
+                        }
+                    }
+                }
+                ParamType::Bool => {
+                    if !matches!(value, ParamValue::Bool(_)) {
+                        return Err(ctx(Error::Ali(format!("expected bool, got {value:?}"))));
+                    }
+                }
+                ParamType::Str => {
+                    let s = value.as_str().map_err(ctx)?;
+                    if let ParamRange::OneOf(choices) = spec.range {
+                        if !choices.contains(&s) {
+                            return Err(Error::Ali(format!(
+                                "routine {}: parameter {:?} = {s:?} not among {choices:?}",
+                                self.name, spec.name
+                            )));
+                        }
+                    }
+                }
+                ParamType::Matrix => {
+                    let h = value.as_matrix().map_err(ctx)?;
+                    let meta = lookup(h).ok_or_else(|| {
+                        Error::Server(format!(
+                            "routine {}: parameter {:?} references unknown matrix handle {h}",
+                            self.name, spec.name
+                        ))
+                    })?;
+                    inputs.push((spec.name, meta));
+                }
+            }
+        }
+
+        for rule in &self.shape_rules {
+            rule.check(self.name, params, &inputs)?;
+        }
+        Ok(inputs)
+    }
+
+    /// Evaluate the cost function over resolved inputs.
+    pub fn cost(&self, params: &Params, inputs: &[(&'static str, MatrixMeta)]) -> CostEstimate {
+        let refs: Vec<(&str, &MatrixMeta)> = inputs.iter().map(|(n, m)| (*n, m)).collect();
+        (self.cost)(params, &refs)
+    }
+
+    /// The serializable subset for `DescribeRoutines`.
+    pub fn descriptor(&self) -> RoutineDescriptor {
+        RoutineDescriptor {
+            name: self.name.to_string(),
+            summary: self.summary.to_string(),
+            params: self
+                .params
+                .iter()
+                .map(|p| ParamDescriptor {
+                    name: p.name.to_string(),
+                    ty: p.ty,
+                    required: p.required,
+                    default: p.default.clone(),
+                    doc: p.doc.to_string(),
+                })
+                .collect(),
+            outputs: self.outputs.iter().map(|o| o.name.to_string()).collect(),
+        }
+    }
+}
+
+/// Meta of the input named `name` among resolved inputs (routine bodies
+/// use this after `validate`).
+pub fn input_meta<'a>(
+    inputs: &'a [(&'static str, MatrixMeta)],
+    name: &str,
+) -> Result<&'a MatrixMeta> {
+    find(inputs, name)
+        .ok_or_else(|| Error::Ali(format!("no resolved input matrix named {name:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ali::params::ParamsBuilder;
+    use crate::protocol::{LayoutDesc, LayoutKind};
+
+    fn meta(h: u64, rows: u64, cols: u64) -> MatrixMeta {
+        MatrixMeta {
+            handle: h,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: vec![0, 1] },
+        }
+    }
+
+    fn gemm_like() -> RoutineSpec {
+        RoutineSpec {
+            params: vec![
+                ParamSpec::matrix("A", "left"),
+                ParamSpec::matrix("B", "right"),
+                ParamSpec::f64_opt("alpha", 1.0, "scale"),
+                ParamSpec::str_opt("algo", &["ring", "allgather"], "algorithm"),
+                ParamSpec::i64_opt("panel_rows", 0, "sub-panel rows")
+                    .with_range(ParamRange::I64 { min: 0, max: i64::MAX }),
+            ],
+            outputs: vec![OutputSpec::new("C", "product")],
+            shape_rules: vec![ShapeRule::ColsEqRows("A", "B"), ShapeRule::RowBlock("A")],
+            ..RoutineSpec::new("gemm", "C = A * B")
+        }
+    }
+
+    #[test]
+    fn accepts_valid_params_and_resolves_inputs() {
+        let spec = gemm_like();
+        let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).f64("alpha", 2.0).build();
+        let lookup = |h: u64| match h {
+            1 => Some(meta(1, 10, 4)),
+            2 => Some(meta(2, 4, 3)),
+            _ => None,
+        };
+        let inputs = spec.validate(&p, lookup).unwrap();
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(input_meta(&inputs, "B").unwrap().cols, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_missing_mistyped_and_out_of_range() {
+        let spec = gemm_like();
+        let lookup = |h: u64| Some(meta(h, 4, 4));
+
+        let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).i64("bogus", 1).build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("unknown parameter"));
+
+        let p = ParamsBuilder::new().matrix("A", 1).build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("missing parameter"));
+
+        let p = ParamsBuilder::new().matrix("A", 1).str("B", "oops").build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("parameter \"B\""));
+
+        let p = ParamsBuilder::new()
+            .matrix("A", 1)
+            .matrix("B", 2)
+            .i64("panel_rows", -3)
+            .build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("out of range"));
+
+        let p =
+            ParamsBuilder::new().matrix("A", 1).matrix("B", 2).str("algo", "summa3d").build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("not among"));
+
+        let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).matrix("A", 1).build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn shape_rules_catch_mismatches() {
+        let spec = gemm_like();
+        let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).build();
+        // A is 10x4, B is 5x3: cols != rows
+        let lookup = |h: u64| match h {
+            1 => Some(meta(1, 10, 4)),
+            2 => Some(meta(2, 5, 3)),
+            _ => None,
+        };
+        let err = spec.validate(&p, lookup).unwrap_err();
+        assert!(err.to_string().contains("must equal"), "{err}");
+
+        // unknown handle surfaces as a Server error
+        let err = spec.validate(&p, |_| None).unwrap_err();
+        assert!(err.to_string().contains("unknown matrix handle"), "{err}");
+    }
+
+    #[test]
+    fn param_le_min_dim() {
+        let spec = RoutineSpec {
+            params: vec![ParamSpec::matrix("A", "in"), ParamSpec::i64_req("k", "rank")],
+            shape_rules: vec![ShapeRule::ParamLeMinDim("k", "A")],
+            ..RoutineSpec::new("tsvd", "svd")
+        };
+        let lookup = |h: u64| Some(meta(h, 8, 5));
+        let ok = ParamsBuilder::new().matrix("A", 1).i64("k", 5).build();
+        assert!(spec.validate(&ok, lookup).is_ok());
+        for bad_k in [0i64, 6, -2] {
+            let bad = ParamsBuilder::new().matrix("A", 1).i64("k", bad_k).build();
+            assert!(spec.validate(&bad, lookup).is_err(), "k={bad_k}");
+        }
+    }
+
+    #[test]
+    fn descriptor_roundtrips_the_serializable_subset() {
+        let d = gemm_like().descriptor();
+        assert_eq!(d.name, "gemm");
+        assert_eq!(d.params.len(), 5);
+        assert_eq!(d.outputs, vec!["C".to_string()]);
+        assert!(d.params[0].required);
+        assert_eq!(d.params[2].default, Some(ParamValue::F64(1.0)));
+        let mut w = crate::protocol::Writer::new();
+        d.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::protocol::Reader::new(&bytes);
+        assert_eq!(RoutineDescriptor::decode(&mut r).unwrap(), d);
+    }
+
+    #[test]
+    fn i64_coerces_into_f64_params() {
+        let spec = RoutineSpec {
+            params: vec![ParamSpec::f64_req("alpha", "scale")],
+            ..RoutineSpec::new("scale", "scale")
+        };
+        let p = ParamsBuilder::new().i64("alpha", 3).build();
+        assert!(spec.validate(&p, |_| None).is_ok());
+    }
+}

@@ -1,0 +1,262 @@
+//! Cooperative cancellation and progress reporting for routine
+//! invocations — the recoverable-long-running-call surface the Alchemist
+//! deployment papers ask of a production interface.
+//!
+//! A routine runs SPMD across the session's worker group, so a rank may
+//! never abort on its *local* cancel flag alone: one rank returning early
+//! while its peers enter the next collective would wedge the mesh. The
+//! contract is therefore:
+//!
+//! * [`CancelToken`] is a cheap shared flag, set asynchronously (the
+//!   driver relays a client `CancelJob` to every worker over the
+//!   always-responsive data plane);
+//! * routines only act on it at **collective boundaries**, after
+//!   agreement: each rank contributes its local flag to a tiny all-reduce
+//!   (`comm::collectives::allreduce_flag`, or one piggybacked on an
+//!   existing reduction) so every rank aborts at the same iteration or
+//!   none does.
+//!
+//! [`StatusBoard`] is the per-worker rendezvous between the control loop
+//! (which installs a token per `RunRoutine`) and the data-plane threads
+//! (which deliver cancels and serve progress queries keyed by the
+//! driver's `job_token`, so a stale cancel can never hit a later job).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared cancel flag, checked cooperatively at collective boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; never un-set.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Local view of the flag. SPMD routines must not abort on this
+    /// alone — agree via `collectives::allreduce_flag` first.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// The live `(phase, progress)` channel from a running routine back to
+/// the driver's job table. Cloneable; reporting through a disabled sink
+/// (tests, direct library calls) is a no-op.
+#[derive(Clone, Default)]
+pub struct ProgressSink {
+    board: Option<Arc<StatusBoard>>,
+    token: u64,
+}
+
+impl ProgressSink {
+    /// Sink wired to a worker's status board under `token`.
+    pub fn new(board: Arc<StatusBoard>, token: u64) -> ProgressSink {
+        ProgressSink { board: Some(board), token }
+    }
+
+    /// No-op sink for contexts without a driver watching (tests, local
+    /// harnesses).
+    pub fn disabled() -> ProgressSink {
+        ProgressSink::default()
+    }
+
+    /// Publish the routine's current phase and completed fraction
+    /// (`frac` is clamped to `[0, 1]`). Rank 0's reports are what
+    /// `PollJob` surfaces; other ranks' reports are cheap and harmless.
+    pub fn report(&self, phase: &str, frac: f64) {
+        if let Some(board) = &self.board {
+            board.report(self.token, phase, frac.clamp(0.0, 1.0));
+        }
+    }
+}
+
+impl std::fmt::Debug for ProgressSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProgressSink")
+            .field("enabled", &self.board.is_some())
+            .field("token", &self.token)
+            .finish()
+    }
+}
+
+/// State of the routine currently occupying a worker.
+struct Active {
+    token: u64,
+    cancel: CancelToken,
+    phase: String,
+    frac: f64,
+}
+
+/// Cancels remembered for routines that have not *started* here yet —
+/// covers the race where the driver's cancel frame (data plane) overtakes
+/// the `RunRoutine` command (control plane). Bounded ring; tokens are
+/// driver-unique so a stale entry can only ever match its own job.
+const PENDING_CANCEL_CAP: usize = 64;
+
+#[derive(Default)]
+struct BoardInner {
+    active: Option<Active>,
+    pending_cancels: std::collections::VecDeque<u64>,
+}
+
+/// Per-worker rendezvous for out-of-band cancel/progress traffic. One
+/// routine runs at a time per worker (sessions own disjoint workers and
+/// serialize their jobs), so a single active slot suffices.
+#[derive(Default)]
+pub struct StatusBoard {
+    inner: Mutex<BoardInner>,
+}
+
+impl StatusBoard {
+    pub fn new() -> StatusBoard {
+        StatusBoard::default()
+    }
+
+    /// Install a fresh token for the routine invoked under `token`,
+    /// displacing any stale entry. Returns the token to thread into the
+    /// routine's ctx — pre-cancelled if this token's cancel already
+    /// arrived (the overtaking-frame race).
+    pub fn begin(&self, token: u64) -> CancelToken {
+        let cancel = CancelToken::new();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.pending_cancels.iter().any(|&t| t == token) {
+            inner.pending_cancels.retain(|&t| t != token);
+            cancel.cancel();
+        }
+        inner.active = Some(Active {
+            token,
+            cancel: cancel.clone(),
+            phase: String::new(),
+            frac: 0.0,
+        });
+        cancel
+    }
+
+    /// Clear the slot once the routine returns (matched by token so an
+    /// out-of-order call cannot clear a newer entry).
+    pub fn finish(&self, token: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.active.as_ref().map(|a| a.token) == Some(token) {
+            inner.active = None;
+        }
+    }
+
+    /// Deliver a cancel for `token`. True when a matching routine was
+    /// active; otherwise the token is remembered so a `begin` that is
+    /// still in flight starts pre-cancelled.
+    pub fn cancel(&self, token: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let matched = match inner.active.as_ref() {
+            Some(a) if a.token == token => {
+                a.cancel.cancel();
+                true
+            }
+            _ => false,
+        };
+        if !matched && !inner.pending_cancels.iter().any(|&t| t == token) {
+            inner.pending_cancels.push_back(token);
+            while inner.pending_cancels.len() > PENDING_CANCEL_CAP {
+                inner.pending_cancels.pop_front();
+            }
+        }
+        matched
+    }
+
+    /// Record a progress report from the routine running under `token`.
+    pub fn report(&self, token: u64, phase: &str, frac: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(a) = inner.active.as_mut() {
+            if a.token == token {
+                a.phase.clear();
+                a.phase.push_str(phase);
+                a.frac = frac;
+            }
+        }
+    }
+
+    /// Latest `(phase, frac)` reported under `token`, if it is the
+    /// active routine and has reported at least once.
+    pub fn progress(&self, token: u64) -> Option<(String, f64)> {
+        let inner = self.inner.lock().unwrap();
+        match inner.active.as_ref() {
+            Some(a) if a.token == token && !a.phase.is_empty() => {
+                Some((a.phase.clone(), a.frac))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_flags() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let t2 = t.clone();
+        t2.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn early_cancel_is_remembered_until_begin() {
+        let b = StatusBoard::new();
+        // Cancel arrives before the RunRoutine command: remembered...
+        assert!(!b.cancel(5));
+        // ...so the routine starts pre-cancelled.
+        assert!(b.begin(5).is_cancelled());
+        b.finish(5);
+        // The pending entry was consumed: a re-run of token 5 (cannot
+        // happen in practice — tokens are unique) starts clean.
+        assert!(!b.begin(5).is_cancelled());
+    }
+
+    #[test]
+    fn board_token_matching() {
+        let b = StatusBoard::new();
+        // Nothing active: progress misses.
+        assert!(b.progress(1).is_none());
+
+        let tok = b.begin(1);
+        assert!(!tok.is_cancelled());
+        // No report yet -> no progress.
+        assert!(b.progress(1).is_none());
+        b.report(1, "lanczos", 0.5);
+        assert_eq!(b.progress(1).unwrap(), ("lanczos".to_string(), 0.5));
+        // Wrong token: ignored.
+        b.report(2, "other", 0.9);
+        assert!(b.progress(2).is_none());
+        assert!(!b.cancel(2));
+        assert!(!tok.is_cancelled());
+        // Matching cancel reaches the routine's token.
+        assert!(b.cancel(1));
+        assert!(tok.is_cancelled());
+
+        // finish clears only a matching entry.
+        b.finish(2);
+        assert!(b.progress(1).is_some());
+        b.finish(1);
+        assert!(b.progress(1).is_none());
+        assert!(!b.cancel(1));
+    }
+
+    #[test]
+    fn sink_clamps_and_disabled_is_noop() {
+        let board = Arc::new(StatusBoard::new());
+        board.begin(7);
+        let sink = ProgressSink::new(board.clone(), 7);
+        sink.report("x", 2.5);
+        assert_eq!(board.progress(7).unwrap().1, 1.0);
+        ProgressSink::disabled().report("y", 0.5); // must not panic
+    }
+}

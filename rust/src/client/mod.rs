@@ -18,8 +18,9 @@ use crate::config::TransferConfig;
 use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
-    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params, WorkerInfo,
-    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION,
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
+    RoutineDescriptor, WorkerInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+    ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION,
 };
 use crate::{Error, Result};
 
@@ -134,8 +135,34 @@ impl<'a> JobHandle<'a> {
                     self.ac.phases.add("compute", t.elapsed());
                     return Err(Error::Server(message));
                 }
-                JobState::Queued | JobState::Running => {}
+                JobState::Queued | JobState::Running { .. } => {}
             }
+        }
+    }
+
+    /// Cancel this job (v6): queued jobs fail instantly; running jobs
+    /// get a best-effort cooperative cancel honored at the routine's
+    /// next collective boundary (one Lanczos iteration / panel sweep).
+    /// Returns the job's state as of the request — poll or
+    /// [`wait`](JobHandle::wait) afterwards for the terminal state.
+    pub fn cancel(&self) -> Result<JobState> {
+        let state = self.ac.cancel_job(self.job_id)?;
+        if state.is_terminal() {
+            *self.terminal.lock().unwrap() = Some(state.clone());
+        }
+        Ok(state)
+    }
+
+    /// Live `(phase, completed fraction)` of a running job, pulled by
+    /// the driver from the worker group; `None` when the job is not
+    /// currently running (or has not reported yet — the phase is then
+    /// empty).
+    pub fn progress(&self) -> Result<Option<(String, f64)>> {
+        match self.poll()? {
+            JobState::Running { phase, progress } if !phase.is_empty() => {
+                Ok(Some((phase, progress)))
+            }
+            _ => Ok(None),
         }
     }
 }
@@ -385,6 +412,37 @@ impl AlchemistContext {
     pub fn wait_job_round(&self, job_id: u64, timeout_ms: u64) -> Result<JobState> {
         match self.call(&ClientMsg::WaitJob { job_id, timeout_ms })? {
             DriverMsg::JobStatus { state, .. } => Ok(state),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    fn need_v6(&self, what: &str) -> Result<()> {
+        if self.negotiated < ROUTINE_ENGINE_PROTOCOL_VERSION {
+            return Err(Error::Protocol(format!(
+                "{what} needs protocol v{ROUTINE_ENGINE_PROTOCOL_VERSION}+, session \
+                 negotiated v{}",
+                self.negotiated
+            )));
+        }
+        Ok(())
+    }
+
+    /// Cancel a job by id (v6); see [`JobHandle::cancel`].
+    pub fn cancel_job(&self, job_id: u64) -> Result<JobState> {
+        self.need_v6("CancelJob")?;
+        match self.call(&ClientMsg::CancelJob { job_id })? {
+            DriverMsg::JobStatus { state, .. } => Ok(state),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Introspect a registered library's routines (v6): names, typed
+    /// parameter schemas (with defaults and requiredness) and output
+    /// roles, straight from the server-side routine specs.
+    pub fn describe_routines(&self, library: &str) -> Result<Vec<RoutineDescriptor>> {
+        self.need_v6("DescribeRoutines")?;
+        match self.call(&ClientMsg::DescribeRoutines { library: library.into() })? {
+            DriverMsg::RoutineList { routines } => Ok(routines),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
     }

@@ -25,7 +25,7 @@ use std::sync::Mutex;
 use crate::config::TransferConfig;
 use crate::elemental::Layout;
 use crate::metrics::{transfer_metrics, Timer, TransferMetrics};
-use crate::protocol::{frame, DataMsg, MatrixMeta, WireRow, WorkerInfo, Writer};
+use crate::protocol::{frame, DataMsg, LayoutKind, MatrixMeta, WireRow, WorkerInfo, Writer};
 use crate::{Error, Result};
 
 /// Per-call tuning for the transfer helpers. Build one from the
@@ -201,6 +201,13 @@ pub fn push_rows<V: AsRef<[f64]>>(
     rows: impl Iterator<Item = (u64, V)>,
     opts: &TransferOptions,
 ) -> Result<(u64, u64)> {
+    if meta.layout.kind == LayoutKind::Replicated {
+        // Routing a row to its "owner" would populate one replica only;
+        // replicated matrices are produced by routines, never uploaded.
+        return Err(Error::Shape(
+            "cannot push rows to a Replicated matrix (routine outputs only)".into(),
+        ));
+    }
     let layout = Layout::from_desc(&meta.layout, meta.rows)?;
     let owners = &meta.layout.owners;
     let cols = meta.cols as usize;
@@ -359,7 +366,10 @@ fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
 /// each row received. All owners are fetched in parallel (one thread per
 /// owner stream) and merged through a mutex around the sink, so rows
 /// arrive unordered across owners; each row's values are borrowed from
-/// the receive slab (copy out if you need to keep them).
+/// the receive slab (copy out if you need to keep them). A `Replicated`
+/// matrix is read from its first owner only — every owner holds the full
+/// matrix, so fanning out would both duplicate rows and bother p-1
+/// workers for nothing.
 pub fn fetch_rows<F>(
     workers: &[WorkerInfo],
     meta: &MatrixMeta,
@@ -371,7 +381,10 @@ pub fn fetch_rows<F>(
 where
     F: FnMut(u64, &[f64]) -> Result<()> + Send,
 {
-    let slot_addrs = resolve_owner_addrs(workers, &meta.layout.owners)?;
+    let mut slot_addrs = resolve_owner_addrs(workers, &meta.layout.owners)?;
+    if meta.layout.kind == LayoutKind::Replicated {
+        slot_addrs.truncate(1);
+    }
     let sink = Mutex::new(sink);
     let results: Vec<Result<u64>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(slot_addrs.len());

@@ -199,6 +199,16 @@ pub fn reduce_sum(mesh: &mut Mesh, root: usize, data: &[f64]) -> Result<Option<V
     }
 }
 
+/// Collective boolean OR: true on *every* rank iff `flag` is true on at
+/// least one. The agreement step of cooperative cancellation — each rank
+/// contributes its local cancel flag, and all ranks abort at the same
+/// iteration or none does (see `ali::task`). One scalar ring all-reduce.
+pub fn allreduce_flag(mesh: &mut Mesh, flag: bool) -> Result<bool> {
+    let mut buf = vec![if flag { 1.0 } else { 0.0 }];
+    allreduce_sum(mesh, &mut buf, AllReduceAlgo::Ring)?;
+    Ok(buf[0] > 0.0)
+}
+
 /// All-reduce (sum) with the selected algorithm. `data` is reduced in place.
 pub fn allreduce_sum(mesh: &mut Mesh, data: &mut Vec<f64>, algo: AllReduceAlgo) -> Result<()> {
     if mesh.size() == 1 {

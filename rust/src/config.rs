@@ -151,6 +151,14 @@ pub struct SchedConfig {
     /// Server-side cap on how long one `WaitJob` round blocks the control
     /// connection; clients loop, so this only bounds per-poll latency.
     pub waitjob_block_ms: u64,
+    /// Cost-aware admission: cap on the summed spec-derived cost
+    /// (flops + bytes, see `ali::spec::CostEstimate::weight`) of one
+    /// session's in-flight jobs. A submission that would push the sum
+    /// over the cap is rejected at `SubmitRoutine` time — except the
+    /// first job (an idle session always admits one job, so a cap below
+    /// any single job's cost cannot brick the session). 0 = unlimited.
+    /// Only spec-publishing libraries are counted (foreign ALIs cost 0).
+    pub max_inflight_cost_per_session: f64,
 }
 
 impl Default for SchedConfig {
@@ -160,6 +168,7 @@ impl Default for SchedConfig {
             max_jobs_per_session: 1024,
             wait_timeout_ms: 30_000,
             waitjob_block_ms: 2_000,
+            max_inflight_cost_per_session: 0.0,
         }
     }
 }
@@ -259,6 +268,9 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sched.max_jobs_per_session" => cfg.sched.max_jobs_per_session = parse(key, val)?,
         "sched.wait_timeout_ms" => cfg.sched.wait_timeout_ms = parse(key, val)?,
         "sched.waitjob_block_ms" => cfg.sched.waitjob_block_ms = parse(key, val)?,
+        "sched.max_inflight_cost_per_session" => {
+            cfg.sched.max_inflight_cost_per_session = parse(key, val)?
+        }
         "compute.dist_gemm_algo" => {
             crate::elemental::dist_gemm::DistGemmAlgo::parse(val)?;
             cfg.compute.dist_gemm_algo = val.to_string();
@@ -333,6 +345,13 @@ impl Config {
         if self.sched.wait_timeout_ms == 0 {
             return Err(Error::Config("sched.wait_timeout_ms must be >= 1".into()));
         }
+        if !self.sched.max_inflight_cost_per_session.is_finite()
+            || self.sched.max_inflight_cost_per_session < 0.0
+        {
+            return Err(Error::Config(
+                "sched.max_inflight_cost_per_session must be finite and >= 0".into(),
+            ));
+        }
         // re-validate in case the struct was mutated directly
         crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.compute.dist_gemm_algo)?;
         if self.transfer.sender_threads == 0 {
@@ -400,12 +419,17 @@ scale = 0.5
             "sched.max_jobs_per_session=8",
             "sched.wait_timeout_ms=500",
             "sched.waitjob_block_ms=100",
+            "sched.max_inflight_cost_per_session=1e9",
         ])
         .unwrap();
         assert_eq!(cfg.sched.max_workers_per_session, 2);
         assert_eq!(cfg.sched.max_jobs_per_session, 8);
         assert_eq!(cfg.sched.wait_timeout_ms, 500);
         assert_eq!(cfg.sched.waitjob_block_ms, 100);
+        assert_eq!(cfg.sched.max_inflight_cost_per_session, 1e9);
+        cfg.sched.max_inflight_cost_per_session = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.sched.max_inflight_cost_per_session = 0.0;
         cfg.sched.waitjob_block_ms = 0;
         assert!(cfg.validate().is_err());
     }

@@ -29,6 +29,7 @@
 
 use std::sync::Arc;
 
+use crate::ali::task::CancelToken;
 use crate::comm::{collectives, Mesh};
 use crate::elemental::{Layout, LocalPanel};
 use crate::linalg::DenseMatrix;
@@ -161,17 +162,36 @@ pub fn dist_gemm_with(
     backend: &dyn GemmBackend,
     opts: &DistGemmOptions,
 ) -> Result<LocalPanel> {
+    dist_gemm_with_cancel(mesh, a, b, c_handle, backend, opts, None)
+}
+
+/// [`dist_gemm_with`] plus a cooperative cancel token, checked at
+/// panel-step boundaries. Cancellation preserves the collective protocol:
+/// a flagged rank keeps shifting/forwarding panels (skipping only the
+/// local compute) and all ranks agree on the flag in one scalar
+/// all-reduce after the panel sweep, so either every rank returns
+/// [`Error::Cancelled`] or none does — the mesh is never left desynced.
+pub fn dist_gemm_with_cancel(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+    opts: &DistGemmOptions,
+    cancel: Option<&CancelToken>,
+) -> Result<LocalPanel> {
     validate_operands(mesh, a, b)?;
     let rank = mesh.rank();
     let m = compute_metrics();
     let c_local = match opts.algo {
         DistGemmAlgo::AllGatherB => {
             m.counters.add("allgather_gemms", 1);
-            dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows)?
+            dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows, cancel)?
         }
         DistGemmAlgo::RingPipelined => {
             m.counters.add("ring_gemms", 1);
-            let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, opts.panel_rows)?;
+            let (c_local, stats) =
+                dist_gemm_ring_local(mesh, a, b, backend, opts.panel_rows, cancel)?;
             m.phases.add(
                 &format!("ring_compute_r{rank}"),
                 std::time::Duration::from_secs_f64(stats.compute_s),
@@ -198,7 +218,7 @@ pub fn dist_gemm_ring_with_stats(
     panel_rows: usize,
 ) -> Result<(LocalPanel, RingStats)> {
     validate_operands(mesh, a, b)?;
-    let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, panel_rows)?;
+    let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, panel_rows, None)?;
     Ok((wrap_output(a, b, c_handle, c_local)?, stats))
 }
 
@@ -295,6 +315,7 @@ fn dist_gemm_allgather_local(
     b: &LocalPanel,
     backend: &dyn GemmBackend,
     panel_rows: usize,
+    cancel: Option<&CancelToken>,
 ) -> Result<DenseMatrix> {
     let b_full = allgather_matrix(mesh, b)?;
     let p = mesh.size();
@@ -305,11 +326,37 @@ fn dist_gemm_allgather_local(
     for d in 0..p {
         let origin = ((rank + d) % p) as u32;
         for (k0, rows) in sub_panels(&layout_b, origin, panel_rows) {
+            // Cancelled ranks skip the compute only; the flag is agreed
+            // collectively below before anyone returns.
+            if cancel.is_some_and(|t| t.is_cancelled()) {
+                continue;
+            }
             let panel = b_full.block_padded(k0 as usize, 0, rows, n);
             accumulate_panel(backend, a.local(), k0 as usize, &panel, &mut c)?;
         }
     }
+    agree_not_cancelled(mesh, cancel, "gemm (allgather)")?;
     Ok(c)
+}
+
+/// Collective cancel agreement after a panel sweep: every rank returns
+/// `Err(Cancelled)` iff any rank's token was set. No-op without a token
+/// (plain `dist_gemm_with` calls stay bitwise-identical to before).
+fn agree_not_cancelled(
+    mesh: &mut Mesh,
+    cancel: Option<&CancelToken>,
+    what: &str,
+) -> Result<()> {
+    let Some(token) = cancel else { return Ok(()) };
+    let flagged = if mesh.size() == 1 {
+        token.is_cancelled()
+    } else {
+        collectives::allreduce_flag(mesh, token.is_cancelled())?
+    };
+    if flagged {
+        return Err(Error::Cancelled(format!("{what} cancelled mid-panel-sweep")));
+    }
+    Ok(())
 }
 
 /// The ring: rank r sends panels to r-1 and receives from r+1, so the
@@ -324,6 +371,7 @@ fn dist_gemm_ring_local(
     b: &LocalPanel,
     backend: &dyn GemmBackend,
     panel_rows: usize,
+    cancel: Option<&CancelToken>,
 ) -> Result<(DenseMatrix, RingStats)> {
     let p = mesh.size();
     let rank = mesh.rank();
@@ -345,6 +393,9 @@ fn dist_gemm_ring_local(
     if p == 1 {
         let t = Timer::start();
         for &(_, k0, rows) in &schedule {
+            if cancel.is_some_and(|tok| tok.is_cancelled()) {
+                return Err(Error::Cancelled("gemm cancelled mid-panel-sweep".into()));
+            }
             let li0 = layout_b.local_index(k0) as usize;
             let panel = DenseMatrix::from_vec(
                 rows,
@@ -408,6 +459,12 @@ fn dist_gemm_ring_local(
         };
         stats.shifts += 1;
 
+        // A cancelled rank must keep the ring protocol alive (send/recv
+        // above still ran) — it only skips the local kernel. All ranks
+        // agree on the flag after the sweep, below.
+        if cancel.is_some_and(|tok| tok.is_cancelled()) {
+            continue;
+        }
         let t = Timer::start();
         accumulate_panel(backend, a.local(), k0 as usize, &panel, &mut c)?;
         stats.compute_s += t.elapsed_secs();
@@ -415,6 +472,7 @@ fn dist_gemm_ring_local(
     let t = Timer::start();
     pipe.finish()?;
     stats.wait_s += t.elapsed_secs();
+    agree_not_cancelled(mesh, cancel, "gemm (ring)")?;
     Ok((c, stats))
 }
 

@@ -35,7 +35,10 @@ impl Layout {
         (self.rows + p - 1) / p
     }
 
-    /// Which slot owns global row `r`.
+    /// Which slot owns global row `r`. For `Replicated` layouts every
+    /// slot stores every row; this returns the *canonical* owner (slot 0)
+    /// — the one fetches should read from. Use [`Layout::owns`] for
+    /// storage-membership checks.
     pub fn owner_slot(&self, r: u64) -> u32 {
         debug_assert!(r < self.rows);
         match self.kind {
@@ -44,6 +47,16 @@ impl Layout {
                 ((r / b).min(self.slots as u64 - 1)) as u32
             }
             LayoutKind::RowCyclic => (r % self.slots as u64) as u32,
+            LayoutKind::Replicated => 0,
+        }
+    }
+
+    /// True when `slot` stores global row `r` (every slot, for
+    /// `Replicated`; exactly the owner slot otherwise).
+    pub fn owns(&self, slot: u32, r: u64) -> bool {
+        match self.kind {
+            LayoutKind::Replicated => slot < self.slots,
+            _ => self.owner_slot(r) == slot,
         }
     }
 
@@ -52,6 +65,7 @@ impl Layout {
         match self.kind {
             LayoutKind::RowBlock => r - self.owner_slot(r) as u64 * self.block().max(1),
             LayoutKind::RowCyclic => r / self.slots as u64,
+            LayoutKind::Replicated => r,
         }
     }
 
@@ -74,6 +88,7 @@ impl Layout {
                     self.rows / p
                 }
             }
+            LayoutKind::Replicated => self.rows,
         }
     }
 
@@ -83,6 +98,7 @@ impl Layout {
         match self.kind {
             LayoutKind::RowBlock => slot as u64 * self.block() + li,
             LayoutKind::RowCyclic => li * self.slots as u64 + slot as u64,
+            LayoutKind::Replicated => li,
         }
     }
 
@@ -155,5 +171,26 @@ mod tests {
     #[test]
     fn zero_slots_rejected() {
         assert!(Layout::new(LayoutKind::RowBlock, 10, 0).is_err());
+    }
+
+    #[test]
+    fn replicated_every_slot_stores_every_row() {
+        let l = Layout::new(LayoutKind::Replicated, 7, 3).unwrap();
+        for slot in 0..3 {
+            assert_eq!(l.local_count(slot), 7);
+            assert_eq!(l.rows_of_slot(slot).collect::<Vec<_>>(), (0..7).collect::<Vec<_>>());
+            for r in 0..7 {
+                assert!(l.owns(slot, r));
+                assert_eq!(l.local_index(r), r);
+                assert_eq!(l.global_index(slot, r), r);
+            }
+        }
+        // The canonical fetch owner is slot 0.
+        for r in 0..7 {
+            assert_eq!(l.owner_slot(r), 0);
+        }
+        // Non-replicated layouts keep exclusive ownership semantics.
+        let rb = Layout::new(LayoutKind::RowBlock, 10, 2).unwrap();
+        assert!(rb.owns(0, 2) && !rb.owns(1, 2));
     }
 }

@@ -83,7 +83,7 @@ impl LocalPanel {
                 self.meta.cols
             )));
         }
-        if self.layout.owner_slot(r) != self.slot {
+        if !self.layout.owns(self.slot, r) {
             return Err(Error::Server(format!(
                 "row {r} routed to wrong worker (slot {} owns it, we are slot {})",
                 self.layout.owner_slot(r),
@@ -96,9 +96,9 @@ impl LocalPanel {
         Ok(())
     }
 
-    /// Read global row `r` (must be locally owned).
+    /// Read global row `r` (must be locally stored).
     pub fn get_row(&self, r: u64) -> Result<&[f64]> {
-        if self.layout.owner_slot(r) != self.slot {
+        if !self.layout.owns(self.slot, r) {
             return Err(Error::Server(format!("row {r} not owned by slot {}", self.slot)));
         }
         Ok(self.local.row(self.layout.local_index(r) as usize))
@@ -129,12 +129,20 @@ pub fn scatter_matrix(meta: &MatrixMeta, full: &DenseMatrix) -> Result<Vec<Local
     Ok(panels)
 }
 
-/// Test helper: reassemble a full matrix from all panels.
+/// Test helper: reassemble a full matrix from all panels. Replicated
+/// matrices are read from the first panel alone (every panel holds the
+/// full matrix).
 pub fn gather_matrix(panels: &[LocalPanel]) -> Result<DenseMatrix> {
     let meta = &panels[0].meta;
     let mut full = DenseMatrix::zeros(meta.rows as usize, meta.cols as usize);
     let mut seen = 0u64;
-    for p in panels {
+    let read_from: &[LocalPanel] = if meta.layout.kind == crate::protocol::LayoutKind::Replicated
+    {
+        &panels[..1]
+    } else {
+        panels
+    };
+    for p in read_from {
         for (r, row) in p.iter_rows() {
             full.row_mut(r as usize).copy_from_slice(row);
             seen += 1;
@@ -215,5 +223,22 @@ mod tests {
     fn out_of_range_slot_rejected() {
         let m = meta(10, 2, LayoutKind::RowBlock, 2);
         assert!(LocalPanel::alloc(m, 5).is_err());
+    }
+
+    #[test]
+    fn replicated_panels_hold_full_copies() {
+        let m = meta(5, 2, LayoutKind::Replicated, 3);
+        let full = DenseMatrix::from_vec(5, 2, random_matrix(11, 5, 2)).unwrap();
+        let panels = scatter_matrix(&m, &full).unwrap();
+        assert_eq!(panels.len(), 3);
+        for p in &panels {
+            assert_eq!(p.local_rows(), 5, "every slot stores every row");
+            for (r, row) in p.iter_rows() {
+                assert_eq!(row, full.row(r as usize));
+            }
+            // any slot serves any row
+            assert_eq!(p.get_row(4).unwrap(), full.row(4));
+        }
+        assert_eq!(gather_matrix(&panels).unwrap(), full);
     }
 }

@@ -29,6 +29,9 @@ pub enum Error {
     Config(String),
     /// Wall-clock budget exceeded (the paper's 30-minute debug queue).
     Budget(String),
+    /// Routine invocation cancelled cooperatively (client `CancelJob`,
+    /// honored collectively at the next Lanczos iteration / panel step).
+    Cancelled(String),
 }
 
 impl fmt::Display for Error {
@@ -44,6 +47,7 @@ impl fmt::Display for Error {
             Error::Sparklet(s) => write!(f, "sparklet: {s}"),
             Error::Config(s) => write!(f, "config: {s}"),
             Error::Budget(s) => write!(f, "budget: {s}"),
+            Error::Cancelled(s) => write!(f, "cancelled: {s}"),
         }
     }
 }

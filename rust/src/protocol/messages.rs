@@ -21,7 +21,11 @@ use crate::{Error, Result};
 /// v5: slab row-batch data plane (`PutSlab`/`SlabBatch`/`GetRowsSlab`) —
 /// one index array + one contiguous f64 slab per frame instead of a
 /// heap-allocated `WireRow` per row.
-pub const PROTOCOL_VERSION: u16 = 5;
+/// v6: typed routine engine — `DescribeRoutines`/`RoutineList`
+/// introspection, `CancelJob`, `JobState::Running { phase, progress }`
+/// (encoded as the legacy bare `Running` tag for ≤ v5 sessions), and the
+/// `Replicated` matrix layout for small routine outputs.
+pub const PROTOCOL_VERSION: u16 = 6;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -31,6 +35,12 @@ pub const MIN_PROTOCOL_VERSION: u16 = 4;
 
 /// First version that understands the slab data-plane messages.
 pub const SLAB_PROTOCOL_VERSION: u16 = 5;
+
+/// First version that understands the typed routine engine surfaces:
+/// routine introspection, job cancellation, running-state progress, and
+/// the `Replicated` layout kind. Sessions negotiated below this keep the
+/// v5 wire shapes (bare `Running`, RowBlock-sliced small outputs).
+pub const ROUTINE_ENGINE_PROTOCOL_VERSION: u16 = 6;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -133,6 +143,144 @@ pub fn decode_params(r: &mut Reader<'_>) -> Result<Params> {
     Ok(out)
 }
 
+/// Wire-level type tag of a routine parameter — the typed half of the
+/// ALI `Parameters` header (paper §2.3). Shared by the spec layer
+/// (`ali::spec::ParamSpec`) and the v6 `DescribeRoutines` introspection
+/// reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamType {
+    I64,
+    F64,
+    Bool,
+    Str,
+    Matrix,
+}
+
+impl ParamType {
+    pub fn tag(self) -> u8 {
+        match self {
+            ParamType::I64 => 0,
+            ParamType::F64 => 1,
+            ParamType::Bool => 2,
+            ParamType::Str => 3,
+            ParamType::Matrix => 4,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<ParamType> {
+        Ok(match t {
+            0 => ParamType::I64,
+            1 => ParamType::F64,
+            2 => ParamType::Bool,
+            3 => ParamType::Str,
+            4 => ParamType::Matrix,
+            _ => return Err(Error::Protocol(format!("bad ParamType tag {t}"))),
+        })
+    }
+
+    /// Human-readable name (routine tables, error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            ParamType::I64 => "i64",
+            ParamType::F64 => "f64",
+            ParamType::Bool => "bool",
+            ParamType::Str => "str",
+            ParamType::Matrix => "matrix",
+        }
+    }
+}
+
+/// One parameter of a routine, as described over the wire by
+/// `DescribeRoutines` (the serializable subset of the server-side
+/// `ali::spec::ParamSpec` — shape rules and cost functions stay
+/// server-side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDescriptor {
+    pub name: String,
+    pub ty: ParamType,
+    pub required: bool,
+    /// Default applied when an optional parameter is omitted (docs only;
+    /// the routine itself applies it).
+    pub default: Option<ParamValue>,
+    pub doc: String,
+}
+
+impl ParamDescriptor {
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_u8(self.ty.tag());
+        w.put_bool(self.required);
+        match &self.default {
+            Some(v) => {
+                w.put_bool(true);
+                v.encode(w);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_str(&self.doc);
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<ParamDescriptor> {
+        let name = r.get_str()?;
+        let ty = ParamType::from_tag(r.get_u8()?)?;
+        let required = r.get_bool()?;
+        let default = if r.get_bool()? { Some(ParamValue::decode(r)?) } else { None };
+        let doc = r.get_str()?;
+        Ok(ParamDescriptor { name, ty, required, default, doc })
+    }
+}
+
+/// One routine, as described over the wire by `DescribeRoutines`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutineDescriptor {
+    pub name: String,
+    pub summary: String,
+    pub params: Vec<ParamDescriptor>,
+    /// Names of the distributed output matrices, in handle order.
+    pub outputs: Vec<String>,
+}
+
+impl RoutineDescriptor {
+    /// Name-only descriptor for libraries that publish no typed specs.
+    pub fn bare(name: &str) -> RoutineDescriptor {
+        RoutineDescriptor {
+            name: name.to_string(),
+            summary: String::new(),
+            params: vec![],
+            outputs: vec![],
+        }
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_str(&self.summary);
+        w.put_u32(self.params.len() as u32);
+        for p in &self.params {
+            p.encode(w);
+        }
+        w.put_u32(self.outputs.len() as u32);
+        for o in &self.outputs {
+            w.put_str(o);
+        }
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<RoutineDescriptor> {
+        let name = r.get_str()?;
+        let summary = r.get_str()?;
+        let n = r.get_u32()? as usize;
+        let mut params = Vec::with_capacity(r.cap_hint(n, 8));
+        for _ in 0..n {
+            params.push(ParamDescriptor::decode(r)?);
+        }
+        let n = r.get_u32()? as usize;
+        let mut outputs = Vec::with_capacity(r.cap_hint(n, 4));
+        for _ in 0..n {
+            outputs.push(r.get_str()?);
+        }
+        Ok(RoutineDescriptor { name, summary, params, outputs })
+    }
+}
+
 /// How a distributed matrix's rows are assigned to its owner workers.
 /// Shared by the client (routing rows on send) and workers (local storage);
 /// the math lives in `elemental::layout`, keyed off this descriptor.
@@ -145,6 +293,12 @@ pub enum LayoutKind {
     /// Row-cyclic: row `r` is owned by worker `r mod p` (Elemental's
     /// cyclic distributions; used by the redistribution tests/ablation).
     RowCyclic,
+    /// Every owner holds a full copy (Elemental's STAR,STAR analogue).
+    /// Produced by routines for small outputs (e.g. the k×1 singular-value
+    /// vector of `truncated_svd`) so fetches read from one owner instead
+    /// of fanning out to p owners that each hold ~k/p (often zero) rows.
+    /// v6+ sessions only; clients cannot `CreateMatrix` with it.
+    Replicated,
 }
 
 impl LayoutKind {
@@ -152,6 +306,7 @@ impl LayoutKind {
         match self {
             LayoutKind::RowBlock => 0,
             LayoutKind::RowCyclic => 1,
+            LayoutKind::Replicated => 2,
         }
     }
 
@@ -159,6 +314,7 @@ impl LayoutKind {
         Ok(match t {
             0 => LayoutKind::RowBlock,
             1 => LayoutKind::RowCyclic,
+            2 => LayoutKind::Replicated,
             _ => return Err(Error::Protocol(format!("bad LayoutKind tag {t}"))),
         })
     }
@@ -246,12 +402,22 @@ impl WorkerInfo {
 #[derive(Debug, Clone, PartialEq)]
 pub enum JobState {
     Queued,
-    Running,
+    /// In flight on the worker group. Since v6 the state carries the
+    /// routine's live progress report (`RoutineCtx::progress`): a short
+    /// phase label and a monotonic fraction in `[0, 1)`. For ≤ v5
+    /// sessions the driver encodes the legacy bare `Running` tag and
+    /// these fields decode as `("", 0.0)`.
+    Running { phase: String, progress: f64 },
     Done { outputs: Params, new_matrices: Vec<MatrixMeta> },
     Failed { message: String },
 }
 
 impl JobState {
+    /// A fresh `Running` state with no progress reported yet.
+    pub fn running() -> JobState {
+        JobState::Running { phase: String::new(), progress: 0.0 }
+    }
+
     /// True for `Done` / `Failed`.
     pub fn is_terminal(&self) -> bool {
         matches!(self, JobState::Done { .. } | JobState::Failed { .. })
@@ -261,16 +427,31 @@ impl JobState {
     pub fn name(&self) -> &'static str {
         match self {
             JobState::Queued => "queued",
-            JobState::Running => "running",
+            JobState::Running { .. } => "running",
             JobState::Done { .. } => "done",
             JobState::Failed { .. } => "failed",
         }
     }
 
     pub fn encode(&self, w: &mut Writer) {
+        self.encode_versioned(w, PROTOCOL_VERSION);
+    }
+
+    /// Version-aware encoding: ≤ v5 sessions get the legacy bare
+    /// `Running` tag (1); v6+ sessions get tag 4 carrying phase/progress.
+    /// All other states encode identically at every version.
+    pub fn encode_versioned(&self, w: &mut Writer, version: u16) {
         match self {
             JobState::Queued => w.put_u8(0),
-            JobState::Running => w.put_u8(1),
+            JobState::Running { phase, progress } => {
+                if version >= ROUTINE_ENGINE_PROTOCOL_VERSION {
+                    w.put_u8(4);
+                    w.put_str(phase);
+                    w.put_f64(*progress);
+                } else {
+                    w.put_u8(1);
+                }
+            }
             JobState::Done { outputs, new_matrices } => {
                 w.put_u8(2);
                 encode_params(w, outputs);
@@ -289,7 +470,8 @@ impl JobState {
     pub fn decode(r: &mut Reader<'_>) -> Result<JobState> {
         Ok(match r.get_u8()? {
             0 => JobState::Queued,
-            1 => JobState::Running,
+            1 => JobState::running(),
+            4 => JobState::Running { phase: r.get_str()?, progress: r.get_f64()? },
             2 => {
                 let outputs = decode_params(r)?;
                 let n = r.get_u32()? as usize;
@@ -346,6 +528,14 @@ pub enum ClientMsg {
     /// terminal state; replies `JobStatus` with whatever state it is in
     /// when the wait ends. 0 = one bounded server-default block.
     WaitJob { job_id: u64, timeout_ms: u64 },
+    /// v6 introspection: list a registered library's routines with their
+    /// typed parameter specs (`DriverMsg::RoutineList`).
+    DescribeRoutines { library: String },
+    /// v6: cancel a job. Queued jobs fail instantly; running jobs get a
+    /// best-effort cooperative cancel (the workers' cancel token is set
+    /// and honored at the next collective boundary). Replies `JobStatus`
+    /// with the job's state at the time of the request.
+    CancelJob { job_id: u64 },
 }
 
 impl ClientMsg {
@@ -405,6 +595,14 @@ impl ClientMsg {
                 w.put_u64(*job_id);
                 w.put_u64(*timeout_ms);
             }
+            ClientMsg::DescribeRoutines { library } => {
+                w.put_u8(12);
+                w.put_str(library);
+            }
+            ClientMsg::CancelJob { job_id } => {
+                w.put_u8(13);
+                w.put_u64(*job_id);
+            }
         }
         w.into_bytes()
     }
@@ -440,6 +638,8 @@ impl ClientMsg {
             },
             10 => ClientMsg::PollJob { job_id: r.get_u64()? },
             11 => ClientMsg::WaitJob { job_id: r.get_u64()?, timeout_ms: r.get_u64()? },
+            12 => ClientMsg::DescribeRoutines { library: r.get_str()? },
+            13 => ClientMsg::CancelJob { job_id: r.get_u64()? },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
         Ok(msg)
@@ -470,13 +670,22 @@ pub enum DriverMsg {
     },
     /// Reply to `SubmitRoutine`: the job is in the session's job table.
     JobAccepted { job_id: u64 },
-    /// Reply to `PollJob` / `WaitJob`.
+    /// Reply to `PollJob` / `WaitJob` / `CancelJob`.
     JobStatus { job_id: u64, state: JobState },
+    /// Reply to `DescribeRoutines` (v6).
+    RoutineList { routines: Vec<RoutineDescriptor> },
     Err { message: String },
 }
 
 impl DriverMsg {
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_versioned(PROTOCOL_VERSION)
+    }
+
+    /// Encode for a session negotiated at `version` — only
+    /// `JobStatus { state: Running { .. } }` differs (see
+    /// [`JobState::encode_versioned`]).
+    pub fn encode_versioned(&self, version: u16) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
             DriverMsg::HandshakeAck { session_id, version } => {
@@ -541,7 +750,14 @@ impl DriverMsg {
             DriverMsg::JobStatus { job_id, state } => {
                 w.put_u8(11);
                 w.put_u64(*job_id);
-                state.encode(&mut w);
+                state.encode_versioned(&mut w, version);
+            }
+            DriverMsg::RoutineList { routines } => {
+                w.put_u8(12);
+                w.put_u32(routines.len() as u32);
+                for r in routines {
+                    r.encode(&mut w);
+                }
             }
         }
         w.into_bytes()
@@ -583,6 +799,14 @@ impl DriverMsg {
             },
             10 => DriverMsg::JobAccepted { job_id: r.get_u64()? },
             11 => DriverMsg::JobStatus { job_id: r.get_u64()?, state: JobState::decode(&mut r)? },
+            12 => {
+                let n = r.get_u32()? as usize;
+                let mut routines = Vec::with_capacity(r.cap_hint(n, 16));
+                for _ in 0..n {
+                    routines.push(RoutineDescriptor::decode(&mut r)?);
+                }
+                DriverMsg::RoutineList { routines }
+            }
             t => return Err(Error::Protocol(format!("bad DriverMsg tag {t}"))),
         };
         Ok(msg)
@@ -638,6 +862,21 @@ pub enum DataMsg {
     /// from `GetRows` so v4 clients (which send tag 3) still get legacy
     /// `RowBatch` replies.
     GetRowsSlab { handle: u64, start: u64, end: u64 },
+    /// v6, driver → worker: cooperatively cancel the routine currently
+    /// running under `token` (the `job_token` the driver stamped on the
+    /// `RunRoutine` command). Rides the always-responsive data plane
+    /// because the worker's control stream is occupied by the routine
+    /// itself. Reply: [`DataMsg::CancelAck`].
+    CancelRoutine { token: u64 },
+    /// v6, driver → worker: read the live `(phase, progress)` the routine
+    /// running under `token` last reported. Reply: [`DataMsg::Progress`]
+    /// (empty phase when no matching routine is running).
+    QueryProgress { token: u64 },
+    /// Reply to [`DataMsg::QueryProgress`].
+    Progress { phase: String, frac: f64 },
+    /// Reply to [`DataMsg::CancelRoutine`]: whether a matching routine
+    /// was running here (cancel is best-effort either way).
+    CancelAck { matched: bool },
 }
 
 impl DataMsg {
@@ -714,6 +953,23 @@ impl DataMsg {
                 w.put_u64(*start);
                 w.put_u64(*end);
             }
+            DataMsg::CancelRoutine { token } => {
+                w.put_u8(10);
+                w.put_u64(*token);
+            }
+            DataMsg::QueryProgress { token } => {
+                w.put_u8(11);
+                w.put_u64(*token);
+            }
+            DataMsg::Progress { phase, frac } => {
+                w.put_u8(12);
+                w.put_str(phase);
+                w.put_f64(*frac);
+            }
+            DataMsg::CancelAck { matched } => {
+                w.put_u8(13);
+                w.put_bool(*matched);
+            }
         }
     }
 
@@ -765,6 +1021,10 @@ impl DataMsg {
                 start: r.get_u64()?,
                 end: r.get_u64()?,
             },
+            10 => DataMsg::CancelRoutine { token: r.get_u64()? },
+            11 => DataMsg::QueryProgress { token: r.get_u64()? },
+            12 => DataMsg::Progress { phase: r.get_str()?, frac: r.get_f64()? },
+            13 => DataMsg::CancelAck { matched: r.get_bool()? },
             t => return Err(Error::Protocol(format!("bad DataMsg tag {t}"))),
         };
         Ok(msg)
@@ -787,7 +1047,10 @@ pub enum WorkerCtl {
     /// (worker id, comm addr) of every member in rank order, `rank` is
     /// this worker's rank. The driver sends this to *all* members before
     /// collecting replies (mesh formation is collective).
-    NewSession { session_id: u64, rank: u32, peers: Vec<WorkerInfo> },
+    /// `wire_version` is the client protocol version negotiated for the
+    /// session — routines consult it before emitting wire shapes (e.g.
+    /// `Replicated` output layouts) an old client could not decode.
+    NewSession { session_id: u64, rank: u32, peers: Vec<WorkerInfo>, wire_version: u16 },
     EndSession { session_id: u64 },
     /// Allocate local storage for (this worker's slice of) a matrix.
     AllocMatrix { session_id: u64, meta: MatrixMeta },
@@ -802,6 +1065,11 @@ pub enum WorkerCtl {
         /// Handles pre-assigned by the driver for the routine's distributed
         /// outputs (workers must agree on ids without extra round trips).
         output_handles: Vec<u64>,
+        /// Driver-unique id of this invocation. Out-of-band
+        /// `DataMsg::CancelRoutine` / `QueryProgress` requests name the
+        /// routine by this token so a stale cancel can never hit a later
+        /// job. 0 = synchronous/legacy invocation (never cancelled).
+        job_token: u64,
     },
     RegisterLibrary { name: String, path: String },
     Shutdown,
@@ -815,7 +1083,7 @@ impl WorkerCtl {
                 w.put_u8(7);
                 w.put_u64(*session_id);
             }
-            WorkerCtl::NewSession { session_id, rank, peers } => {
+            WorkerCtl::NewSession { session_id, rank, peers, wire_version } => {
                 w.put_u8(0);
                 w.put_u64(*session_id);
                 w.put_u32(*rank);
@@ -823,6 +1091,7 @@ impl WorkerCtl {
                 for p in peers {
                     p.encode(&mut w);
                 }
+                w.put_u16(*wire_version);
             }
             WorkerCtl::EndSession { session_id } => {
                 w.put_u8(1);
@@ -837,7 +1106,14 @@ impl WorkerCtl {
                 w.put_u8(3);
                 w.put_u64(*handle);
             }
-            WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles } => {
+            WorkerCtl::RunRoutine {
+                session_id,
+                library,
+                routine,
+                params,
+                output_handles,
+                job_token,
+            } => {
                 w.put_u8(4);
                 w.put_u64(*session_id);
                 w.put_str(library);
@@ -847,6 +1123,7 @@ impl WorkerCtl {
                 for h in output_handles {
                     w.put_u64(*h);
                 }
+                w.put_u64(*job_token);
             }
             WorkerCtl::RegisterLibrary { name, path } => {
                 w.put_u8(5);
@@ -869,7 +1146,8 @@ impl WorkerCtl {
                 for _ in 0..n {
                     peers.push(WorkerInfo::decode(&mut r)?);
                 }
-                WorkerCtl::NewSession { session_id, rank, peers }
+                let wire_version = r.get_u16()?;
+                WorkerCtl::NewSession { session_id, rank, peers, wire_version }
             }
             1 => WorkerCtl::EndSession { session_id: r.get_u64()? },
             2 => WorkerCtl::AllocMatrix {
@@ -887,7 +1165,15 @@ impl WorkerCtl {
                 for _ in 0..n {
                     output_handles.push(r.get_u64()?);
                 }
-                WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles }
+                let job_token = r.get_u64()?;
+                WorkerCtl::RunRoutine {
+                    session_id,
+                    library,
+                    routine,
+                    params,
+                    output_handles,
+                    job_token,
+                }
             }
             5 => WorkerCtl::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
             6 => WorkerCtl::Shutdown,
@@ -997,6 +1283,8 @@ mod tests {
             },
             ClientMsg::PollJob { job_id: 17 },
             ClientMsg::WaitJob { job_id: 17, timeout_ms: 250 },
+            ClientMsg::DescribeRoutines { library: "elemlib".into() },
+            ClientMsg::CancelJob { job_id: 17 },
         ];
         for m in msgs {
             assert_eq!(ClientMsg::decode(&m.encode()).unwrap(), m);
@@ -1028,7 +1316,37 @@ mod tests {
             },
             DriverMsg::JobAccepted { job_id: 5 },
             DriverMsg::JobStatus { job_id: 5, state: JobState::Queued },
-            DriverMsg::JobStatus { job_id: 5, state: JobState::Running },
+            DriverMsg::JobStatus { job_id: 5, state: JobState::running() },
+            DriverMsg::JobStatus {
+                job_id: 5,
+                state: JobState::Running { phase: "lanczos".into(), progress: 0.25 },
+            },
+            DriverMsg::RoutineList {
+                routines: vec![
+                    RoutineDescriptor::bare("count_rows"),
+                    RoutineDescriptor {
+                        name: "gemm".into(),
+                        summary: "C = A * B".into(),
+                        params: vec![
+                            ParamDescriptor {
+                                name: "A".into(),
+                                ty: ParamType::Matrix,
+                                required: true,
+                                default: None,
+                                doc: "left operand".into(),
+                            },
+                            ParamDescriptor {
+                                name: "alpha".into(),
+                                ty: ParamType::F64,
+                                required: false,
+                                default: Some(ParamValue::F64(1.0)),
+                                doc: "scale".into(),
+                            },
+                        ],
+                        outputs: vec!["C".into()],
+                    },
+                ],
+            },
             DriverMsg::JobStatus {
                 job_id: 5,
                 state: JobState::Done {
@@ -1050,10 +1368,34 @@ mod tests {
     #[test]
     fn job_state_properties() {
         assert!(!JobState::Queued.is_terminal());
-        assert!(!JobState::Running.is_terminal());
+        assert!(!JobState::running().is_terminal());
         assert!(JobState::Done { outputs: vec![], new_matrices: vec![] }.is_terminal());
         assert!(JobState::Failed { message: "x".into() }.is_terminal());
-        assert_eq!(JobState::Running.name(), "running");
+        assert_eq!(JobState::running().name(), "running");
+    }
+
+    #[test]
+    fn running_state_downgrades_for_v5_sessions() {
+        // A v5 session must see the legacy bare Running tag (1), with the
+        // phase/progress payload dropped; v6 sessions get tag 4.
+        let state = JobState::Running { phase: "lanczos".into(), progress: 0.5 };
+        let msg = DriverMsg::JobStatus { job_id: 9, state: state.clone() };
+
+        let v5 = msg.encode_versioned(5);
+        // tag(1) + job_id(8) + state tag(1) and nothing else
+        assert_eq!(v5.len(), 10);
+        assert_eq!(v5[9], 1, "v5 Running must use the legacy tag");
+        match DriverMsg::decode(&v5).unwrap() {
+            DriverMsg::JobStatus { state: JobState::Running { phase, progress }, .. } => {
+                assert!(phase.is_empty());
+                assert_eq!(progress, 0.0);
+            }
+            other => panic!("bad v5 decode: {other:?}"),
+        }
+
+        let v6 = msg.encode_versioned(6);
+        assert_eq!(v6[9], 4, "v6 Running carries phase/progress");
+        assert_eq!(DriverMsg::decode(&v6).unwrap(), msg);
     }
 
     #[test]
@@ -1082,6 +1424,10 @@ mod tests {
             DataMsg::SlabBatch { handle: 3, indices: vec![], cols: 7, values: vec![] },
             DataMsg::SlabBatch { handle: 3, indices: vec![8], cols: 1, values: vec![-0.25] },
             DataMsg::GetRowsSlab { handle: 2, start: 1, end: 9 },
+            DataMsg::CancelRoutine { token: 77 },
+            DataMsg::QueryProgress { token: 77 },
+            DataMsg::Progress { phase: "lanczos".into(), frac: 0.75 },
+            DataMsg::CancelAck { matched: true },
         ];
         for m in msgs {
             assert_eq!(DataMsg::decode(&m.encode()).unwrap(), m);
@@ -1108,6 +1454,7 @@ mod tests {
                 session_id: 3,
                 rank: 1,
                 peers: vec![WorkerInfo { id: 4, data_addr: "127.0.0.1:5000".into() }],
+                wire_version: PROTOCOL_VERSION,
             },
             WorkerCtl::EndSession { session_id: 3 },
             WorkerCtl::AllocMatrix { session_id: 3, meta: meta() },
@@ -1118,6 +1465,7 @@ mod tests {
                 routine: "truncated_svd".into(),
                 params: vec![("k".into(), ParamValue::I64(20))],
                 output_handles: vec![10, 11, 12],
+                job_token: 99,
             },
             WorkerCtl::RegisterLibrary { name: "x".into(), path: "builtin:elemlib".into() },
             WorkerCtl::Shutdown,

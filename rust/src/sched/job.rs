@@ -33,6 +33,24 @@ pub struct JobSnapshot {
     pub state: JobState,
     /// Seconds since the job was submitted.
     pub age_secs: f64,
+    /// Driver-unique invocation token (0 for legacy/sync submissions) —
+    /// keys the out-of-band cancel/progress traffic to the workers.
+    pub token: u64,
+}
+
+/// What `request_cancel` found, and therefore what the caller must do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelDisposition {
+    /// Job was still queued: it is now terminal (`Failed("cancelled")`),
+    /// nothing ever reached the workers.
+    Queued,
+    /// Job is on the worker group: relay the cancel out-of-band under
+    /// this token; the job fails once the routine returns `Cancelled`.
+    Running { token: u64 },
+    /// Already `Done`/`Failed` — nothing to do.
+    Terminal,
+    /// No such job.
+    Unknown,
 }
 
 struct Job {
@@ -41,6 +59,11 @@ struct Job {
     submitted: Instant,
     /// True once a terminal state has been returned to the client.
     delivered: bool,
+    /// Driver-unique invocation token (see [`JobSnapshot::token`]).
+    token: u64,
+    /// Spec-derived admission cost (0.0 when the library publishes no
+    /// specs); counted in `inflight_cost` until the job is terminal.
+    cost: f64,
 }
 
 struct Inner {
@@ -48,6 +71,9 @@ struct Inner {
     jobs: HashMap<JobId, Job>,
     /// Non-terminal job count (O(1) backlog checks on the submit path).
     inflight: usize,
+    /// Summed cost of non-terminal jobs — what
+    /// `sched.max_inflight_cost_per_session` caps at submit time.
+    inflight_cost: f64,
     /// Jobs whose terminal result the client has not read yet (includes
     /// all inflight jobs) — the submit-side backlog cap counts these.
     undelivered: usize,
@@ -71,6 +97,7 @@ impl Default for Inner {
             next_id: 1,
             jobs: HashMap::new(),
             inflight: 0,
+            inflight_cost: 0.0,
             undelivered: 0,
             total: 0,
             delivered_order: VecDeque::new(),
@@ -94,12 +121,21 @@ impl JobTable {
 
     /// Register a new job in `Queued` state and return its id. Ids are
     /// assigned in submission order (the driver's execution turnstile
-    /// relies on this).
+    /// relies on this). Shorthand for [`JobTable::submit_with`] with no
+    /// token and zero cost.
     pub fn submit(&self, routine: &str) -> JobId {
+        self.submit_with(routine, 0, 0.0)
+    }
+
+    /// Register a new job with its invocation token and spec-derived
+    /// admission cost.
+    pub fn submit_with(&self, routine: &str, token: u64, cost: f64) -> JobId {
+        let cost = if cost.is_finite() { cost.max(0.0) } else { 0.0 };
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
         inner.inflight += 1;
+        inner.inflight_cost += cost;
         inner.undelivered += 1;
         inner.total += 1;
         inner.jobs.insert(
@@ -109,6 +145,8 @@ impl JobTable {
                 state: JobState::Queued,
                 submitted: Instant::now(),
                 delivered: false,
+                token,
+                cost,
             },
         );
         id
@@ -120,7 +158,7 @@ impl JobTable {
         let mut inner = self.inner.lock().unwrap();
         let ok = match inner.jobs.get_mut(&id) {
             Some(j) if j.state == JobState::Queued => {
-                j.state = JobState::Running;
+                j.state = JobState::running();
                 true
             }
             _ => false,
@@ -129,6 +167,44 @@ impl JobTable {
             self.cv.notify_all();
         }
         ok
+    }
+
+    /// Record a live progress report against a `Running` job (no-op in
+    /// any other state — progress never resurrects a terminal job).
+    pub fn update_progress(&self, id: JobId, phase: &str, frac: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(j) = inner.jobs.get_mut(&id) {
+            if matches!(j.state, JobState::Running { .. }) {
+                j.state =
+                    JobState::Running { phase: phase.to_string(), progress: frac.clamp(0.0, 1.0) };
+            }
+        }
+    }
+
+    /// Act on a client cancel request: queued jobs fail instantly (their
+    /// parked thread will observe the terminal state and bail); running
+    /// jobs report their token so the caller can relay the cancel to the
+    /// workers.
+    pub fn request_cancel(&self, id: JobId) -> CancelDisposition {
+        let mut inner = self.inner.lock().unwrap();
+        let (disposition, freed_cost) = match inner.jobs.get_mut(&id) {
+            None => (CancelDisposition::Unknown, None),
+            Some(j) if j.state == JobState::Queued => {
+                j.state = JobState::Failed { message: "cancelled before start".into() };
+                (CancelDisposition::Queued, Some(j.cost))
+            }
+            Some(j) if matches!(j.state, JobState::Running { .. }) => {
+                (CancelDisposition::Running { token: j.token }, None)
+            }
+            Some(_) => (CancelDisposition::Terminal, None),
+        };
+        if let Some(cost) = freed_cost {
+            inner.inflight = inner.inflight.saturating_sub(1);
+            inner.inflight_cost = (inner.inflight_cost - cost).max(0.0);
+        }
+        drop(inner);
+        self.cv.notify_all();
+        disposition
     }
 
     /// Terminal success.
@@ -147,12 +223,13 @@ impl JobTable {
         let newly_terminal = match inner.jobs.get_mut(&id) {
             Some(j) if !j.state.is_terminal() => {
                 j.state = state;
-                true
+                Some(j.cost)
             }
-            _ => false,
+            _ => None,
         };
-        if newly_terminal {
+        if let Some(cost) = newly_terminal {
             inner.inflight = inner.inflight.saturating_sub(1);
+            inner.inflight_cost = (inner.inflight_cost - cost).max(0.0);
         }
         self.cv.notify_all();
     }
@@ -165,6 +242,7 @@ impl JobTable {
         if let Some(j) = inner.jobs.remove(&id) {
             if !j.state.is_terminal() {
                 inner.inflight = inner.inflight.saturating_sub(1);
+                inner.inflight_cost = (inner.inflight_cost - j.cost).max(0.0);
             }
             if !j.delivered {
                 inner.undelivered = inner.undelivered.saturating_sub(1);
@@ -177,13 +255,16 @@ impl JobTable {
     pub fn fail_all_nonterminal(&self, message: &str) {
         let mut inner = self.inner.lock().unwrap();
         let mut failed = 0usize;
+        let mut freed = 0.0f64;
         for j in inner.jobs.values_mut() {
             if !j.state.is_terminal() {
                 j.state = JobState::Failed { message: message.to_string() };
                 failed += 1;
+                freed += j.cost;
             }
         }
         inner.inflight = inner.inflight.saturating_sub(failed);
+        inner.inflight_cost = (inner.inflight_cost - freed).max(0.0);
         self.cv.notify_all();
     }
 
@@ -244,6 +325,12 @@ impl JobTable {
         self.inner.lock().unwrap().inflight
     }
 
+    /// Summed spec-derived cost of non-terminal jobs (O(1)) — what the
+    /// `sched.max_inflight_cost_per_session` admission cap compares.
+    pub fn inflight_cost(&self) -> f64 {
+        self.inner.lock().unwrap().inflight_cost
+    }
+
     /// Jobs whose terminal result the client has not read yet, plus all
     /// inflight jobs (O(1)) — what the submit-side backlog cap bounds:
     /// each undelivered job holds memory the client can still claim.
@@ -263,6 +350,7 @@ fn snapshot(id: JobId, j: &Job) -> JobSnapshot {
         routine: j.routine.clone(),
         state: j.state.clone(),
         age_secs: j.submitted.elapsed().as_secs_f64(),
+        token: j.token,
     }
 }
 
@@ -344,6 +432,69 @@ mod tests {
         // Re-reading a retained delivered result does not re-deliver.
         assert!(t.get(ids[3]).is_some());
         assert_eq!(t.undelivered(), 0);
+    }
+
+    #[test]
+    fn cancel_queued_is_instant_and_running_reports_token() {
+        let t = JobTable::new();
+        let queued = t.submit_with("svd", 11, 100.0);
+        let running = t.submit_with("gemm", 12, 50.0);
+        t.set_running(running);
+        assert_eq!(t.inflight_cost(), 150.0);
+
+        assert_eq!(t.request_cancel(queued), CancelDisposition::Queued);
+        let snap = t.get(queued).unwrap();
+        match snap.state {
+            JobState::Failed { message } => assert!(message.contains("cancel"), "{message}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(t.inflight(), 1);
+        assert_eq!(t.inflight_cost(), 50.0);
+
+        assert_eq!(t.request_cancel(running), CancelDisposition::Running { token: 12 });
+        // still running until the workers actually abort it
+        assert!(!t.get(running).unwrap().state.is_terminal());
+        t.fail(running, "cancelled by workers");
+        assert_eq!(t.request_cancel(running), CancelDisposition::Terminal);
+        assert_eq!(t.request_cancel(999), CancelDisposition::Unknown);
+        assert_eq!(t.inflight_cost(), 0.0);
+    }
+
+    #[test]
+    fn progress_updates_only_running_jobs() {
+        let t = JobTable::new();
+        let id = t.submit_with("svd", 7, 0.0);
+        t.update_progress(id, "lanczos", 0.5); // still queued: ignored
+        assert_eq!(t.get(id).unwrap().state, JobState::Queued);
+        t.set_running(id);
+        t.update_progress(id, "lanczos", 0.5);
+        match t.get(id).unwrap().state {
+            JobState::Running { phase, progress } => {
+                assert_eq!(phase, "lanczos");
+                assert_eq!(progress, 0.5);
+            }
+            other => panic!("expected Running, got {other:?}"),
+        }
+        assert_eq!(t.get(id).unwrap().token, 7);
+        t.complete(id, vec![], vec![]);
+        t.update_progress(id, "late", 0.9); // terminal: ignored
+        assert!(t.get(id).unwrap().state.is_terminal());
+    }
+
+    #[test]
+    fn inflight_cost_tracks_lifecycle() {
+        let t = JobTable::new();
+        let a = t.submit_with("a", 1, 10.0);
+        let b = t.submit_with("b", 2, 20.0);
+        let c = t.submit_with("c", 3, 30.0);
+        assert_eq!(t.inflight_cost(), 60.0);
+        t.complete(a, vec![], vec![]);
+        assert_eq!(t.inflight_cost(), 50.0);
+        t.remove(b);
+        assert_eq!(t.inflight_cost(), 30.0);
+        t.fail_all_nonterminal("teardown");
+        assert_eq!(t.inflight_cost(), 0.0);
+        assert!(t.get(c).unwrap().state.is_terminal());
     }
 
     #[test]

@@ -21,8 +21,13 @@
 //!
 //! Wire surface: `SubmitRoutine -> JobAccepted { job_id }`, `PollJob`,
 //! `WaitJob`, and the `wait`/`timeout_ms` fields on `RequestWorkers`
-//! (protocol v4). Client surface: `AlchemistContext::run_async` returning
-//! a `JobHandle`, with the synchronous `run` reimplemented on top.
+//! (protocol v4); `CancelJob` and `Running { phase, progress }` since v6.
+//! Client surface: `AlchemistContext::run_async` returning a `JobHandle`
+//! (with `cancel()`/`progress()`), the synchronous `run` reimplemented on
+//! top. Admission is cost-aware since the typed routine engine: each job
+//! carries its spec's cost estimate, and
+//! `sched.max_inflight_cost_per_session` caps the summed in-flight cost a
+//! session may hold (see [`job::JobTable::inflight_cost`]).
 //! Observability: `metrics::SchedMetrics` (queue depth, jobs in flight,
 //! grant counters, cumulative allocation wait time).
 
@@ -30,4 +35,4 @@ pub mod allocator;
 pub mod job;
 
 pub use allocator::{AllocPolicy, PoolAllocator};
-pub use job::{JobId, JobSnapshot, JobTable};
+pub use job::{CancelDisposition, JobId, JobSnapshot, JobTable};

@@ -19,13 +19,16 @@ use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::ali::registry::load_library;
+use crate::ali::Library;
 use crate::config::SchedConfig;
 use crate::metrics::SchedMetrics;
 use crate::protocol::{
-    frame, ClientMsg, DriverMsg, LayoutDesc, MatrixMeta, Params, WorkerCtl, WorkerInfo,
-    WorkerReply, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta,
+    Params, RoutineDescriptor, WorkerCtl, WorkerInfo, WorkerReply, MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
 };
-use crate::sched::{AllocPolicy, JobTable, PoolAllocator};
+use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator};
 use crate::{debugln, info, warnln, Error, Result};
 
 /// Handles the driver reserves per RunRoutine call for distributed
@@ -75,6 +78,9 @@ pub struct DriverCore {
     sched_cfg: SchedConfig,
     next_session: AtomicU64,
     next_handle: AtomicU64,
+    /// Driver-unique tokens stamped on async `RunRoutine` commands so
+    /// out-of-band cancel/progress traffic can never hit the wrong job.
+    next_job_token: AtomicU64,
     active_sessions: AtomicU32,
 }
 
@@ -87,6 +93,10 @@ impl DriverCore {
         let start = self.next_handle.fetch_add(n, Ordering::SeqCst);
         start..start + n
     }
+
+    fn alloc_job_token(&self) -> u64 {
+        self.next_job_token.fetch_add(1, Ordering::SeqCst)
+    }
 }
 
 /// Per-session state shared between the control-connection thread and the
@@ -94,10 +104,19 @@ impl DriverCore {
 struct SessionShared {
     id: u64,
     app_name: String,
+    /// Client protocol version negotiated at handshake; replies (and the
+    /// wire shapes routines may emit) are encoded for this version.
+    wire_version: u16,
     /// Worker ids granted to this session (empty until `RequestWorkers`).
     workers: Mutex<Vec<u32>>,
     /// Matrix registry: handle -> metadata, session-scoped.
     matrices: Mutex<HashMap<u64, MatrixMeta>>,
+    /// Driver-side instances of the session's registered libraries. The
+    /// driver loads the same (name, path) it relays to the workers, which
+    /// is where it gets the routine specs for pre-admission validation,
+    /// cost estimates and `DescribeRoutines`. Libraries that fail to load
+    /// driver-side simply skip validation (workers still enforce).
+    libraries: Mutex<HashMap<String, Arc<dyn Library>>>,
     /// Async job table (`sched::JobTable`).
     jobs: JobTable,
     /// Serializes SPMD routine execution on this session's worker group:
@@ -141,6 +160,7 @@ pub fn run_driver(
         sched_cfg,
         next_session: AtomicU64::new(1),
         next_handle: AtomicU64::new(1),
+        next_job_token: AtomicU64::new(1),
         active_sessions: AtomicU32::new(0),
     });
     info!("driver", "serving clients at {}", client_listener.local_addr()?);
@@ -163,6 +183,9 @@ pub fn run_driver(
 /// Serve one client control connection for its whole lifetime.
 fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
     let mut session: Option<Arc<SessionShared>> = None;
+    // Replies are encoded for the negotiated version (pre-handshake
+    // traffic only ever carries version-stable shapes).
+    let mut wire_version = PROTOCOL_VERSION;
     let result = loop {
         let buf = match frame::read_frame(&mut conn) {
             Ok(b) => b,
@@ -186,7 +209,10 @@ fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
             Ok(r) => r,
             Err(e) => DriverMsg::Err { message: e.to_string() },
         };
-        frame::write_frame(&mut conn, &reply.encode())?;
+        if let DriverMsg::HandshakeAck { version, .. } = &reply {
+            wire_version = *version;
+        }
+        frame::write_frame(&mut conn, &reply.encode_versioned(wire_version))?;
         if stop {
             break Ok(());
         }
@@ -232,6 +258,70 @@ fn session_conns(s: &SessionShared, core: &DriverCore) -> Result<Vec<Arc<WorkerC
     Ok(ids.iter().map(|&id| core.worker(id)).collect())
 }
 
+/// Validate a submission against the library's routine specs, driver
+/// side: unknown routine names, unknown/missing/mistyped/out-of-range
+/// params and shape-mismatched inputs all fail here — before a job slot
+/// is taken and long before a worker grant is consumed. Returns the
+/// spec's admission-cost weight, or `None` when the library publishes no
+/// specs driver-side (foreign ALIs keep their worker-side validation).
+fn validate_against_spec(
+    s: &SessionShared,
+    library: &str,
+    routine: &str,
+    params: &Params,
+) -> Result<Option<f64>> {
+    let libs = s.libraries.lock().unwrap();
+    let Some(lib) = libs.get(library) else { return Ok(None) };
+    let Some(reg) = lib.registry() else { return Ok(None) };
+    let Some(r) = reg.get(routine) else {
+        return Err(Error::Ali(format!(
+            "library {library:?} has no routine {routine:?} (available: {:?})",
+            reg.names()
+        )));
+    };
+    let matrices = s.matrices.lock().unwrap();
+    let inputs = r.spec().validate(params, |h| matrices.get(&h).cloned())?;
+    Ok(Some(r.spec().cost(params, &inputs).weight()))
+}
+
+/// One request/reply exchange on a worker's data plane (the out-of-band
+/// channel for cancel/progress while the control stream is occupied by
+/// the routine itself). Connect/read/write are all bounded so a wedged
+/// or unreachable worker can never hang the session's control thread
+/// (an unbounded `connect` would block it for the OS TCP timeout).
+fn data_call(addr: &str, msg: &DataMsg) -> Result<DataMsg> {
+    const BUDGET: Duration = Duration::from_millis(500);
+    let sock: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|e| Error::Server(format!("bad worker data addr {addr:?}: {e}")))?;
+    let mut s = TcpStream::connect_timeout(&sock, BUDGET)?;
+    let _ = s.set_nodelay(true);
+    s.set_read_timeout(Some(BUDGET))?;
+    s.set_write_timeout(Some(BUDGET))?;
+    frame::write_frame(&mut s, &msg.encode())?;
+    DataMsg::decode(&frame::read_frame(&mut s)?)
+}
+
+/// Pull the live (phase, fraction) of the routine running under `token`
+/// from the session's rank-0 worker. Best-effort: any failure (no
+/// workers, routine already finished, timeout) reads as "no live
+/// progress" and the caller keeps the table's last snapshot.
+fn query_worker_progress(
+    core: &DriverCore,
+    s: &SessionShared,
+    token: u64,
+) -> Option<(String, f64)> {
+    if token == 0 {
+        return None;
+    }
+    let rank0 = *s.workers.lock().unwrap().first()?;
+    let addr = core.worker(rank0).data_addr.clone();
+    match data_call(&addr, &DataMsg::QueryProgress { token }) {
+        Ok(DataMsg::Progress { phase, frac }) if !phase.is_empty() => Some((phase, frac)),
+        _ => None,
+    }
+}
+
 /// Validate that every matrix param references a handle this session owns.
 fn validate_handles(s: &SessionShared, params: &Params) -> Result<()> {
     let matrices = s.matrices.lock().unwrap();
@@ -263,10 +353,13 @@ fn execute_routine(
     if s.closed.load(Ordering::SeqCst) {
         return Err(Error::Server("session closed".into()));
     }
-    execute_routine_locked(core, s, library, routine, params, output_handles)
+    execute_routine_locked(core, s, library, routine, params, output_handles, 0)
 }
 
 /// The SPMD relay proper; caller must hold the session routine lock.
+/// `job_token` keys out-of-band cancel/progress traffic (0 = sync path,
+/// never cancelled).
+#[allow(clippy::too_many_arguments)]
 fn execute_routine_locked(
     core: &DriverCore,
     s: &SessionShared,
@@ -274,6 +367,7 @@ fn execute_routine_locked(
     routine: &str,
     params: &Params,
     output_handles: &[u64],
+    job_token: u64,
 ) -> Result<(Params, Vec<MatrixMeta>)> {
     let conns = session_conns(s, core)?;
     // RunRoutine is an SPMD collective: once some members have entered
@@ -289,6 +383,7 @@ fn execute_routine_locked(
             routine: routine.to_string(),
             params: params.clone(),
             output_handles: output_handles.to_vec(),
+            job_token,
         });
         if let Err(e) = r {
             let why = format!("send to worker {}: {e}", w.id);
@@ -396,6 +491,7 @@ fn setup_session_workers(
     core: &DriverCore,
     session_id: u64,
     ids: &[u32],
+    wire_version: u16,
 ) -> std::result::Result<Vec<WorkerInfo>, SetupFailure> {
     let conns: Vec<Arc<WorkerConn>> = ids.iter().map(|&id| core.worker(id)).collect();
 
@@ -443,6 +539,7 @@ fn setup_session_workers(
             session_id,
             rank: rank as u32,
             peers: peers.clone(),
+            wire_version,
         }) {
             // Members that did get NewSession (ranks before this one)
             // are now blocked inside collective mesh formation waiting
@@ -523,12 +620,14 @@ fn handle_client_msg(
             }
             let id = core.next_session.fetch_add(1, Ordering::SeqCst);
             core.active_sessions.fetch_add(1, Ordering::SeqCst);
-            info!("driver", "session {id} opened by {app_name:?}");
+            info!("driver", "session {id} opened by {app_name:?} at v{negotiated}");
             *session = Some(Arc::new(SessionShared {
                 id,
                 app_name,
+                wire_version: negotiated,
                 workers: Mutex::new(vec![]),
                 matrices: Mutex::new(HashMap::new()),
+                libraries: Mutex::new(HashMap::new()),
                 jobs: JobTable::new(),
                 routine_lock: Mutex::new(()),
                 turn: Mutex::new(TurnState {
@@ -564,7 +663,7 @@ fn handle_client_msg(
                 Some(Duration::from_millis(timeout_ms.min(cap_ms)))
             };
             let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
-            let workers = match setup_session_workers(core, s.id, &ids) {
+            let workers = match setup_session_workers(core, s.id, &ids, s.wire_version) {
                 Ok(infos) => infos,
                 Err(SetupFailure::Clean(e)) => {
                     // Satellite fix: a partially-formed session must hand
@@ -600,13 +699,35 @@ fn handle_client_msg(
             // replies cannot cross.
             let _serial = s.routine_lock.lock().unwrap();
             let conns = session_conns(s, core)?;
-            broadcast(&conns, &WorkerCtl::RegisterLibrary { name: name.clone(), path })?;
+            let cmd = WorkerCtl::RegisterLibrary { name: name.clone(), path: path.clone() };
+            broadcast(&conns, &cmd)?;
+            // Load the same library driver-side: its routine specs power
+            // pre-admission validation, cost-aware admission and
+            // DescribeRoutines. A driver-side load failure is not fatal —
+            // the workers accepted it, so routines still run, merely
+            // without driver-side validation.
+            match load_library(&path) {
+                Ok(lib) => {
+                    s.libraries.lock().unwrap().insert(name.clone(), lib);
+                }
+                Err(e) => {
+                    debugln!("driver", "library {name:?} not loadable driver-side: {e}");
+                }
+            }
             Ok(DriverMsg::LibraryRegistered { name })
         }
         ClientMsg::CreateMatrix { rows, cols, kind } => {
             let s = need_session(session)?;
             if rows == 0 || cols == 0 {
                 return Err(Error::Shape(format!("cannot create {rows}x{cols} matrix")));
+            }
+            if kind == LayoutKind::Replicated {
+                // Row uploads route each row to one owner; a client
+                // cannot populate p replicas. Replicated matrices are
+                // produced by routines only.
+                return Err(Error::Shape(
+                    "clients cannot create Replicated matrices (routine outputs only)".into(),
+                ));
             }
             let _serial = s.routine_lock.lock().unwrap();
             let conns = session_conns(s, core)?;
@@ -634,6 +755,7 @@ fn handle_client_msg(
             // v4 client pipelines through SubmitRoutine/WaitJob instead.
             let s = need_session(session)?;
             validate_handles(s, &params)?;
+            validate_against_spec(s, &library, &routine, &params)?;
             let output_handles: Vec<u64> = core.alloc_handles(OUTPUT_HANDLE_BLOCK).collect();
             let (outputs, new_matrices) =
                 execute_routine(core, s, &library, &routine, &params, &output_handles)?;
@@ -644,6 +766,12 @@ fn handle_client_msg(
             // Fail fast on bad handles and missing workers so the client
             // gets the error at submit time, not buried in a job.
             validate_handles(s, &params)?;
+            // Typed-engine validation: unknown routine, missing/mistyped
+            // params and shape-mismatched inputs are all rejected here —
+            // before a job slot exists and before the worker group is
+            // ever involved. Returns the spec's admission cost (None for
+            // libraries without driver-side specs).
+            let cost = validate_against_spec(s, &library, &routine, &params)?;
             session_conns(s, core)?;
             // Each undelivered job (inflight, or finished but unread)
             // holds a driver thread and/or a retained result; cap the
@@ -657,7 +785,24 @@ fn handle_client_msg(
                     s.jobs.undelivered()
                 )));
             }
-            let job_id = s.jobs.submit(&routine);
+            // Cost-aware admission: the summed in-flight cost may not
+            // exceed the cap — except for a session's only job, so a cap
+            // below any single job's cost cannot brick the session.
+            let cost = cost.unwrap_or(0.0);
+            let cost_cap = core.sched_cfg.max_inflight_cost_per_session;
+            let inflight_cost = s.jobs.inflight_cost();
+            if cost_cap > 0.0
+                && s.jobs.inflight() > 0
+                && inflight_cost + cost > cost_cap
+            {
+                core.metrics.counters.add("jobs_cost_rejected", 1);
+                return Err(Error::Server(format!(
+                    "cost cap exceeded: {inflight_cost:.3e} in flight + {cost:.3e} for \
+                     {routine} > sched.max_inflight_cost_per_session = {cost_cap:.3e}"
+                )));
+            }
+            let job_token = core.alloc_job_token();
+            let job_id = s.jobs.submit_with(&routine, job_token, cost);
             core.metrics.jobs_inflight.inc();
             core.metrics.counters.add("jobs_submitted", 1);
             let output_handles: Vec<u64> = core.alloc_handles(OUTPUT_HANDLE_BLOCK).collect();
@@ -665,7 +810,16 @@ fn handle_client_msg(
             let spawned = std::thread::Builder::new()
                 .name(format!("job-{}-{job_id}", s.id))
                 .spawn(move || {
-                    run_job(&core2, &s2, job_id, &library, &routine, params, &output_handles)
+                    run_job(
+                        &core2,
+                        &s2,
+                        job_id,
+                        job_token,
+                        &library,
+                        &routine,
+                        params,
+                        &output_handles,
+                    )
                 });
             if let Err(e) = spawned {
                 // The client never learns this job id (we reply Err, not
@@ -685,7 +839,73 @@ fn handle_client_msg(
                 .jobs
                 .get(job_id)
                 .ok_or_else(|| Error::Server(format!("unknown job {job_id}")))?;
+            // Live progress: a running job's (phase, fraction) is pulled
+            // from rank 0's always-responsive data plane, keyed by the
+            // job token so a stale read can never describe a later job.
+            let state = match snap.state {
+                JobState::Running { phase, progress } => {
+                    match query_worker_progress(core, s, snap.token) {
+                        Some((live_phase, live_frac)) => {
+                            s.jobs.update_progress(job_id, &live_phase, live_frac);
+                            JobState::Running { phase: live_phase, progress: live_frac }
+                        }
+                        None => JobState::Running { phase, progress },
+                    }
+                }
+                other => other,
+            };
+            Ok(DriverMsg::JobStatus { job_id, state })
+        }
+        ClientMsg::CancelJob { job_id } => {
+            let s = need_session(session)?;
+            match s.jobs.request_cancel(job_id) {
+                CancelDisposition::Unknown => {
+                    return Err(Error::Server(format!("unknown job {job_id}")));
+                }
+                CancelDisposition::Queued => {
+                    // Instant: the job is terminal already; its parked
+                    // thread will observe that and bail without touching
+                    // the workers (run_job_body's set_running fails).
+                    core.metrics.counters.add("jobs_cancelled_queued", 1);
+                }
+                CancelDisposition::Running { token } => {
+                    // Best-effort cooperative cancel: set every session
+                    // worker's token over the data plane; the routine
+                    // aborts collectively at its next cancel checkpoint
+                    // and the job fails through the normal error path.
+                    let ids: Vec<u32> = s.workers.lock().unwrap().clone();
+                    for id in ids {
+                        let addr = core.worker(id).data_addr.clone();
+                        if let Err(e) =
+                            data_call(&addr, &DataMsg::CancelRoutine { token })
+                        {
+                            debugln!("driver", "cancel relay to worker {id}: {e}");
+                        }
+                    }
+                    core.metrics.counters.add("jobs_cancel_requested", 1);
+                }
+                CancelDisposition::Terminal => {}
+            }
+            let snap = s
+                .jobs
+                .get(job_id)
+                .ok_or_else(|| Error::Server(format!("unknown job {job_id}")))?;
             Ok(DriverMsg::JobStatus { job_id, state: snap.state })
+        }
+        ClientMsg::DescribeRoutines { library } => {
+            let s = need_session(session)?;
+            let libs = s.libraries.lock().unwrap();
+            let lib = libs.get(&library).ok_or_else(|| {
+                Error::Server(format!(
+                    "library {library:?} not registered in this session \
+                     (or not loadable driver-side)"
+                ))
+            })?;
+            let routines: Vec<RoutineDescriptor> = match lib.registry() {
+                Some(reg) => reg.specs().iter().map(|spec| spec.descriptor()).collect(),
+                None => lib.routines().iter().map(|n| RoutineDescriptor::bare(n)).collect(),
+            };
+            Ok(DriverMsg::RoutineList { routines })
         }
         ClientMsg::WaitJob { job_id, timeout_ms } => {
             let s = need_session(session)?;
@@ -734,10 +954,12 @@ fn handle_client_msg(
 }
 
 /// Body of one async job thread.
+#[allow(clippy::too_many_arguments)]
 fn run_job(
     core: &DriverCore,
     s: &SessionShared,
     job_id: u64,
+    job_token: u64,
     library: &str,
     routine: &str,
     params: Params,
@@ -752,7 +974,7 @@ fn run_job(
             turn = s.turn_cv.wait(turn).unwrap();
         }
     }
-    run_job_body(core, s, job_id, library, routine, &params, output_handles);
+    run_job_body(core, s, job_id, job_token, library, routine, &params, output_handles);
     retire_turn(s, job_id);
 }
 
@@ -779,10 +1001,12 @@ fn retire_turn(s: &SessionShared, job_id: u64) {
     s.turn_cv.notify_all();
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_job_body(
     core: &DriverCore,
     s: &SessionShared,
     job_id: u64,
+    job_token: u64,
     library: &str,
     routine: &str,
     params: &Params,
@@ -793,17 +1017,18 @@ fn run_job_body(
     // jobs.
     let _serial = s.routine_lock.lock().unwrap();
     if s.closed.load(Ordering::SeqCst) || !s.jobs.set_running(job_id) {
-        // Session closed (teardown or poisoned worker group): do not
-        // touch the workers, but make sure the job reaches a terminal
-        // state so a client blocked in WaitJob is released (no-op when
-        // teardown already failed the table wholesale).
+        // Session closed (teardown or poisoned worker group) or the job
+        // was cancelled while queued: do not touch the workers, but make
+        // sure the job reaches a terminal state so a client blocked in
+        // WaitJob is released (no-op when the state is terminal already).
         s.jobs.fail(job_id, "session closed");
         core.metrics.jobs_inflight.dec();
         return;
     }
     // The gauge drops *before* the terminal state is published: a client
     // observing its result must never then read a stale inflight count.
-    match execute_routine_locked(core, s, library, routine, params, output_handles) {
+    match execute_routine_locked(core, s, library, routine, params, output_handles, job_token)
+    {
         Ok((outputs, new_matrices)) => {
             core.metrics.jobs_inflight.dec();
             s.jobs.complete(job_id, outputs, new_matrices);

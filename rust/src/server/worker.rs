@@ -13,6 +13,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 
 use crate::ali::registry::LibraryRegistry;
+use crate::ali::task::{ProgressSink, StatusBoard};
 use crate::ali::RoutineCtx;
 use crate::comm::Mesh;
 use crate::config::{ComputeConfig, ServerConfig};
@@ -29,6 +30,9 @@ struct WorkerSession {
     rank: u32,
     owners: Vec<u32>,
     mesh: Mesh,
+    /// Client protocol version negotiated for the session (routines gate
+    /// version-sensitive wire shapes on this).
+    wire_version: u16,
 }
 
 /// Run one worker: register with the driver at `driver_worker_addr`, then
@@ -55,10 +59,14 @@ pub fn run_worker(
     info!("worker", "worker {id} up (data plane at {data_addr})");
 
     let store: Arc<Mutex<MatrixStore>> = Arc::new(Mutex::new(MatrixStore::new()));
+    // Cancel/progress rendezvous between the control loop (which is busy
+    // inside RunRoutine) and the always-responsive data-plane threads.
+    let board: Arc<StatusBoard> = Arc::new(StatusBoard::new());
 
     // Data-plane accept loop on its own thread.
     {
         let store = store.clone();
+        let board = board.clone();
         let batch_rows = cfg.batch_rows as usize;
         let nodelay = cfg.nodelay;
         std::thread::Builder::new()
@@ -70,8 +78,9 @@ pub fn run_worker(
                         let _ = conn.set_nodelay(true);
                     }
                     let store = store.clone();
+                    let board = board.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = serve_data_conn(conn, store, batch_rows) {
+                        if let Err(e) = serve_data_conn(conn, store, board, batch_rows) {
                             // client hangups are normal; real errors logged
                             debugln!("worker", "data conn ended: {e}");
                         }
@@ -105,6 +114,7 @@ pub fn run_worker(
             &cfg,
             compute,
             &store,
+            &board,
             &mut registry,
             &mut sessions,
             &mut pending_listeners,
@@ -145,6 +155,7 @@ fn handle_ctl(
     cfg: &ServerConfig,
     compute: DistGemmOptions,
     store: &Arc<Mutex<MatrixStore>>,
+    board: &Arc<StatusBoard>,
     registry: &mut LibraryRegistry,
     sessions: &mut HashMap<u64, WorkerSession>,
     pending: &mut HashMap<u64, TcpListener>,
@@ -158,7 +169,7 @@ fn handle_ctl(
             pending.insert(session_id, listener);
             Ok(Some(WorkerReply::SessionReady { comm_addr: addr }))
         }
-        WorkerCtl::NewSession { session_id, rank, peers } => {
+        WorkerCtl::NewSession { session_id, rank, peers, wire_version } => {
             let listener = pending.remove(&session_id).ok_or_else(|| {
                 Error::Server(format!("NewSession {session_id} without PrepareSession"))
             })?;
@@ -169,7 +180,7 @@ fn handle_ctl(
             } else {
                 Mesh::establish(session_id, rank as usize, &addrs, listener)?
             };
-            sessions.insert(session_id, WorkerSession { rank, owners, mesh });
+            sessions.insert(session_id, WorkerSession { rank, owners, mesh, wire_version });
             Ok(Some(WorkerReply::Ok))
         }
         WorkerCtl::EndSession { session_id } => {
@@ -202,24 +213,43 @@ fn handle_ctl(
             registry.register(&name, &path)?;
             Ok(Some(WorkerReply::Ok))
         }
-        WorkerCtl::RunRoutine { session_id, library, routine, params, output_handles } => {
+        WorkerCtl::RunRoutine {
+            session_id,
+            library,
+            routine,
+            params,
+            output_handles,
+            job_token,
+        } => {
             let session = sessions.get_mut(&session_id).ok_or_else(|| {
                 Error::Server(format!("RunRoutine on unknown session {session_id}"))
             })?;
             let lib = registry.get(&library)?.clone();
             let svd_pjrt = cfg.svd_backend == "pjrt";
-            let mut guard = store.lock().unwrap();
-            let mut ctx = RoutineCtx {
-                mesh: &mut session.mesh,
-                owners: session.owners.clone(),
-                store: &mut guard,
-                output_handles: &output_handles,
-                backend,
-                runtime,
-                svd_pjrt,
-                compute,
+            // Install this invocation on the status board so the data
+            // plane can deliver cancels and serve progress queries while
+            // this control loop is busy in the routine.
+            let cancel = board.begin(job_token);
+            let progress = ProgressSink::new(board.clone(), job_token);
+            let out = {
+                let mut guard = store.lock().unwrap();
+                let mut ctx = RoutineCtx {
+                    mesh: &mut session.mesh,
+                    owners: session.owners.clone(),
+                    store: &mut guard,
+                    output_handles: &output_handles,
+                    backend,
+                    runtime,
+                    svd_pjrt,
+                    compute,
+                    cancel,
+                    progress,
+                    wire_version: session.wire_version,
+                };
+                lib.run(&routine, &params, &mut ctx)
             };
-            let out = lib.run(&routine, &params, &mut ctx)?;
+            board.finish(job_token);
+            let out = out?;
             if session.rank == 0 {
                 Ok(Some(WorkerReply::RoutineDone {
                     outputs: out.outputs,
@@ -271,10 +301,14 @@ fn decode_put_slab(buf: &[u8], idx: &mut Vec<u64>, vals: &mut Vec<f64>) -> Resul
 
 /// Serve one data-plane connection until EOF. The receive loop reuses one
 /// frame buffer, one slab index/value buffer pair, and one encode buffer
-/// across all frames on the connection.
+/// across all frames on the connection. Besides row traffic, the data
+/// plane carries the out-of-band cancel/progress exchanges — those touch
+/// only the status board, never the store lock, so they stay responsive
+/// while a routine holds the store.
 fn serve_data_conn(
     mut conn: TcpStream,
     store: Arc<Mutex<MatrixStore>>,
+    board: Arc<StatusBoard>,
     batch_rows: usize,
 ) -> Result<()> {
     let mut buf = Vec::new();
@@ -325,6 +359,16 @@ fn serve_data_conn(
             continue;
         }
         match DataMsg::decode(&buf)? {
+            DataMsg::CancelRoutine { token } => {
+                let matched = board.cancel(token);
+                let msg = DataMsg::CancelAck { matched };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+            }
+            DataMsg::QueryProgress { token } => {
+                let (phase, frac) = board.progress(token).unwrap_or_default();
+                let msg = DataMsg::Progress { phase, frac };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+            }
             DataMsg::PutRows { handle, rows } => {
                 let mut guard = store.lock().unwrap();
                 let panel = match guard.get_mut(handle) {

@@ -139,6 +139,7 @@ impl IndexedRowMatrix {
                     meta: meta.clone(),
                     row_start,
                     row_end,
+                    transfer: ac.transfer.clone(),
                     use_slab: ac.slab_negotiated(),
                 }
             })?;

@@ -61,11 +61,15 @@ pub enum TaskOp {
         use_slab: bool,
     },
     /// () -> Rows: fetch rows [row_start, row_end) from Alchemist.
+    /// Carries the driver's `[transfer]` knobs like `SendToAlchemist`
+    /// (replicated-layout matrices are fetched from one owner inside
+    /// `transfer::fetch_rows`).
     FetchFromAlchemist {
         workers: Vec<WorkerInfo>,
         meta: MatrixMeta,
         row_start: u64,
         row_end: u64,
+        transfer: TransferConfig,
         use_slab: bool,
     },
     /// Pass-through (collect / repartition).
@@ -322,9 +326,15 @@ pub fn eval(op: &TaskOp, input: Option<&PartitionData>) -> Result<EvalOut> {
             )?;
             Ok(EvalOut::Plain(PartitionData::Doubles(vec![sent as f64, frames as f64])))
         }
-        TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end, use_slab } => {
-            let opts =
-                transfer::TransferOptions { use_slab: *use_slab, ..Default::default() };
+        TaskOp::FetchFromAlchemist {
+            workers,
+            meta,
+            row_start,
+            row_end,
+            transfer: tcfg,
+            use_slab,
+        } => {
+            let opts = transfer::TransferOptions::new(tcfg, 256, true, *use_slab);
             let mut rows = Vec::new();
             transfer::fetch_rows(workers, meta, *row_start, *row_end, &opts, |index, values| {
                 rows.push(WireRow { index, values: values.to_vec() });
@@ -455,7 +465,14 @@ impl TaskOp {
                 w.put_u32(transfer.channel_depth);
                 w.put_bool(*use_slab);
             }
-            TaskOp::FetchFromAlchemist { workers, meta, row_start, row_end, use_slab } => {
+            TaskOp::FetchFromAlchemist {
+                workers,
+                meta,
+                row_start,
+                row_end,
+                transfer,
+                use_slab,
+            } => {
                 w.put_u8(13);
                 w.put_u32(workers.len() as u32);
                 for wk in workers {
@@ -464,6 +481,9 @@ impl TaskOp {
                 meta.encode(w);
                 w.put_u64(*row_start);
                 w.put_u64(*row_end);
+                w.put_u32(transfer.sender_threads);
+                w.put_u32(transfer.slab_bytes);
+                w.put_u32(transfer.channel_depth);
                 w.put_bool(*use_slab);
             }
             TaskOp::Identity => w.put_u8(14),
@@ -537,6 +557,11 @@ impl TaskOp {
                     meta: MatrixMeta::decode(r)?,
                     row_start: r.get_u64()?,
                     row_end: r.get_u64()?,
+                    transfer: TransferConfig {
+                        sender_threads: r.get_u32()?,
+                        slab_bytes: r.get_u32()?,
+                        channel_depth: r.get_u32()?,
+                    },
                     use_slab: r.get_bool()?,
                 }
             }

@@ -1,0 +1,173 @@
+//! Integration: cooperative cancellation end-to-end — cancel mid-Lanczos
+//! leaves no partial output panels in the matrix store, the session is
+//! immediately usable afterwards, `WaitJob` observes the cancelled
+//! terminal state, queued jobs cancel instantly, and `PollJob` reports
+//! live (phase, progress) while a routine runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::ali::registry::install_factory;
+use alchemist::ali::{Library, RoutineCtx, RoutineOutput};
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{JobState, LayoutKind, ParamValue, Params};
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+use alchemist::{Error, Result};
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    c
+}
+
+/// Tiny foreign ALI that reports how many panels this worker's store
+/// holds — the post-cancel "no partial outputs" probe.
+struct StoreProbe;
+
+impl Library for StoreProbe {
+    fn name(&self) -> &str {
+        "probe"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec!["store_len"]
+    }
+
+    fn run(&self, routine: &str, _p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        match routine {
+            "store_len" => Ok(RoutineOutput {
+                outputs: vec![("len".into(), ParamValue::I64(ctx.store.len() as i64))],
+                new_matrices: vec![],
+            }),
+            other => Err(Error::Ali(format!("probe has no routine {other:?}"))),
+        }
+    }
+}
+
+fn store_len(ac: &AlchemistContext) -> i64 {
+    let (outputs, _) = ac.run("probe", "store_len", vec![]).unwrap();
+    outputs
+        .iter()
+        .find(|(k, _)| k == "len")
+        .and_then(|(_, v)| v.as_i64().ok())
+        .expect("store_len output")
+}
+
+/// Cancel an in-flight truncated_svd: progress is observable first, the
+/// cancel lands within a bounded number of Lanczos iterations, the store
+/// keeps only the input panel, and the session runs follow-up work.
+#[test]
+fn cancel_mid_lanczos_leaves_store_clean_and_session_usable() {
+    install_factory("test:probe", || Arc::new(StoreProbe));
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "cancel").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    ac.register_library("probe", "test:probe").unwrap();
+
+    let a = DenseMatrix::from_vec(200, 64, random_matrix(5, 200, 64)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    assert_eq!(store_len(&ac), 1);
+
+    // tol = 0 keeps the solver iterating (up to its restart cap) so the
+    // cancel deterministically lands mid-Lanczos.
+    let h = ac
+        .run_async(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("k", 8).f64("tol", 0.0).build(),
+        )
+        .unwrap();
+    let job_id = h.job_id;
+
+    // PollJob must surface a non-trivial (phase, progress) while running.
+    let mut seen_progress = None;
+    for _ in 0..4000 {
+        if let Some((phase, frac)) = h.progress().unwrap() {
+            seen_progress = Some((phase, frac));
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (phase, frac) = seen_progress.expect("never observed live progress");
+    assert_eq!(phase, "lanczos");
+    assert!(frac > 0.0 && frac < 1.0, "progress fraction {frac}");
+
+    // Cancel and wait for the cancelled terminal state.
+    let state = h.cancel().unwrap();
+    assert!(
+        !matches!(state, JobState::Done { .. }),
+        "job finished before the cancel landed: {state:?}"
+    );
+    let err = h.wait().unwrap_err();
+    assert!(err.to_string().contains("cancel"), "{err}");
+
+    // WaitJob / PollJob agree on the cancelled terminal state.
+    match ac.wait_job_round(job_id, 100).unwrap() {
+        JobState::Failed { message } => assert!(message.contains("cancel"), "{message}"),
+        other => panic!("expected cancelled Failed state, got {other:?}"),
+    }
+
+    // No partial U/S/V panels were left behind: the store still holds
+    // exactly the input matrix (the driver freed the pre-assigned output
+    // handles when the routine failed).
+    assert_eq!(store_len(&ac), 1, "cancelled routine leaked output panels");
+
+    // Session immediately usable for follow-up collectives.
+    let at = wrappers::transpose(&ac, &al).unwrap();
+    let g = wrappers::gemm(&ac, &at, &al).unwrap();
+    assert_eq!((g.rows(), g.cols()), (64, 64));
+    assert!((wrappers::fro_norm(&ac, &al).unwrap() - a.frobenius_norm()).abs() < 1e-9);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// Cancelling a queued job is instant (it never touches the workers) and
+/// does not disturb the job ahead of it.
+#[test]
+fn cancel_queued_job_is_instant() {
+    // Two workers: the per-apply all-reduce keeps the tol=0 head job busy
+    // for a long time relative to the cancel round trips, while jobs in
+    // one session still execute strictly one at a time (routine lock).
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "cancelq").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = DenseMatrix::from_vec(60, 40, random_matrix(6, 60, 40)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    // Long-running head job; the norm behind it stays queued.
+    let slow = ac
+        .run_async(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("k", 4).f64("tol", 0.0).build(),
+        )
+        .unwrap();
+    let queued = wrappers::fro_norm_async(&ac, &al).unwrap();
+
+    // The queued job cancels instantly — terminal state straight from
+    // the CancelJob reply, long before the head job finishes.
+    let state = queued.cancel().unwrap();
+    match state {
+        JobState::Failed { message } => assert!(message.contains("cancel"), "{message}"),
+        other => panic!("queued cancel not instant: {other:?}"),
+    }
+
+    // Cancel the head job too (queued or running, both paths are legal).
+    let _ = slow.cancel().unwrap();
+    let err = slow.wait().unwrap_err();
+    assert!(err.to_string().contains("cancel"), "{err}");
+
+    // Session recovered: fresh work runs.
+    assert!((wrappers::fro_norm(&ac, &al).unwrap() - a.frobenius_norm()).abs() < 1e-9);
+    let status = ac.scheduler_status().unwrap();
+    assert_eq!(status.jobs_inflight, 0);
+    ac.stop().unwrap();
+    srv.shutdown();
+}

@@ -1,0 +1,326 @@
+//! Integration: the typed routine engine's driver-side surfaces —
+//! pre-admission validation (malformed submissions fail before a job
+//! slot or the worker group is touched), cost-aware admission,
+//! `DescribeRoutines` introspection, and v5-client interop against the
+//! v6 server.
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, ParamType, ParamValue,
+    WireRow, PROTOCOL_VERSION,
+};
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    c
+}
+
+/// Every class of malformed submission is rejected at `SubmitRoutine`
+/// time — no job id is handed out, no worker grant is consumed, and the
+/// scheduler's counters stay untouched.
+#[test]
+fn invalid_submissions_rejected_before_admission() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "validate").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = DenseMatrix::from_vec(20, 4, random_matrix(1, 20, 4)).unwrap();
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let b = DenseMatrix::from_vec(20, 4, random_matrix(2, 20, 4)).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+
+    let before = ac.scheduler_status().unwrap();
+    assert_eq!(before.jobs_inflight, 0);
+
+    // Bad routine name.
+    let err = ac
+        .run_async(
+            "elemlib",
+            "qr_decompose",
+            ParamsBuilder::new().matrix("A", al_a.handle()).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("no routine"), "{err}");
+
+    // Missing required param (gemm without B).
+    let err = ac
+        .run_async("elemlib", "gemm", ParamsBuilder::new().matrix("A", al_a.handle()).build())
+        .unwrap_err();
+    assert!(err.to_string().contains("missing parameter"), "{err}");
+
+    // Mistyped param (B as a float instead of a matrix handle).
+    let err = ac
+        .run_async(
+            "elemlib",
+            "gemm",
+            ParamsBuilder::new().matrix("A", al_a.handle()).f64("B", 1.0).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("parameter \"B\""), "{err}");
+
+    // Unknown param name (typo).
+    let err = ac
+        .run_async(
+            "elemlib",
+            "gemm",
+            ParamsBuilder::new()
+                .matrix("A", al_a.handle())
+                .matrix("B", al_b.handle())
+                .f64("aplha", 2.0)
+                .build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown parameter"), "{err}");
+
+    // Shape mismatch: both matrices are 20x4, so A.cols != B.rows.
+    let err = ac
+        .run_async(
+            "elemlib",
+            "gemm",
+            ParamsBuilder::new().matrix("A", al_a.handle()).matrix("B", al_b.handle()).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("must equal"), "{err}");
+
+    // Out-of-range param (tsvd k beyond min(m, n)).
+    let err = ac
+        .run_async(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al_a.handle()).i64("k", 50).build(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+
+    // None of the rejections consumed anything schedulable.
+    let after = ac.scheduler_status().unwrap();
+    assert_eq!(after.jobs_inflight, 0, "rejections must not create jobs");
+    assert_eq!(after.free_workers, before.free_workers);
+    assert_eq!(after.total_workers, before.total_workers);
+    assert_eq!(after.queued_sessions, 0);
+
+    // And the session still runs valid work (A 20x4 x A^T panels: use
+    // transpose then gemm).
+    let at = wrappers::transpose(&ac, &al_a).unwrap();
+    let c = wrappers::gemm(&ac, &al_a, &at).unwrap();
+    assert_eq!((c.rows(), c.cols()), (20, 20));
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// `describe_routines` returns the registry's typed specs.
+#[test]
+fn describe_routines_exposes_typed_specs() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "introspect").unwrap();
+    ac.request_workers(1).unwrap();
+
+    // Before registration: no table.
+    let err = ac.describe_routines("elemlib").unwrap_err();
+    assert!(err.to_string().contains("not registered"), "{err}");
+
+    wrappers::register_elemlib(&ac).unwrap();
+    let routines = ac.describe_routines("elemlib").unwrap();
+    assert_eq!(routines.len(), 11);
+    assert_eq!(routines[0].name, "gemm");
+
+    let gemm = routines.iter().find(|r| r.name == "gemm").unwrap();
+    assert_eq!(gemm.outputs, vec!["C".to_string()]);
+    let a = gemm.params.iter().find(|p| p.name == "A").unwrap();
+    assert!(a.required);
+    assert_eq!(a.ty, ParamType::Matrix);
+    let alpha = gemm.params.iter().find(|p| p.name == "alpha").unwrap();
+    assert!(!alpha.required);
+    assert_eq!(alpha.default, Some(ParamValue::F64(1.0)));
+
+    let tsvd = routines.iter().find(|r| r.name == "truncated_svd").unwrap();
+    assert_eq!(tsvd.outputs.len(), 3);
+    assert!(tsvd.params.iter().any(|p| p.name == "k" && p.required));
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// Cost-aware admission: with a tiny cap, a session's *second* in-flight
+/// job is refused at submit time (the first always admits), and the
+/// session recovers once the backlog drains.
+#[test]
+fn cost_cap_bounds_inflight_work() {
+    let mut c = cfg(1);
+    c.sched.max_inflight_cost_per_session = 1.0;
+    let srv = start_server(&c).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "costcap").unwrap();
+    ac.request_workers(1).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = DenseMatrix::from_vec(60, 40, random_matrix(3, 60, 40)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    // First job admits regardless of the cap; its cost is charged from
+    // the moment JobAccepted is returned, and tol=0 keeps the Lanczos
+    // solver busy long past the next submission...
+    let h = ac
+        .run_async(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("k", 4).f64("tol", 0.0).build(),
+        )
+        .unwrap();
+    // ...so an immediate second spec-costed submission blows the cap.
+    let err = ac
+        .run_async("elemlib", "fro_norm", ParamsBuilder::new().matrix("A", al.handle()).build())
+        .unwrap_err();
+    assert!(err.to_string().contains("cost cap"), "{err}");
+
+    // Drain (tol=0 may legitimately end in a no-convergence failure —
+    // either terminal state releases the in-flight cost).
+    let _ = h.wait();
+    // In-flight cost drained: submissions flow again.
+    assert!((wrappers::fro_norm(&ac, &al).unwrap() - a.frobenius_norm()).abs() < 1e-9);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// A v5 client against the v6 server: the handshake negotiates down, the
+/// whole job flow runs on v5 shapes, and truncated_svd's small outputs
+/// come back RowBlock (never the Replicated layout v5 cannot decode).
+#[test]
+fn v5_client_interop_against_v6_server() {
+    assert!(PROTOCOL_VERSION >= 6);
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+
+    let mut call = |msg: &ClientMsg| -> DriverMsg {
+        frame::write_frame(&mut conn, &msg.encode()).unwrap();
+        DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap()
+    };
+
+    // Handshake at v5 negotiates v5.
+    match call(&ClientMsg::Handshake { app_name: "v5".into(), version: 5 }) {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 5),
+        other => panic!("expected ack, got {other:?}"),
+    }
+    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
+    {
+        DriverMsg::WorkersGranted { workers } => workers,
+        other => panic!("expected grant, got {other:?}"),
+    };
+    match call(&ClientMsg::RegisterLibrary {
+        name: "elemlib".into(),
+        path: "builtin:elemlib".into(),
+    }) {
+        DriverMsg::LibraryRegistered { .. } => {}
+        other => panic!("expected registered, got {other:?}"),
+    }
+
+    // Upload a small matrix over the legacy per-row data plane.
+    let (m, n, k) = (12u64, 5u64, 2i64);
+    let values = random_matrix(7, m as usize, n as usize);
+    let full = DenseMatrix::from_vec(m as usize, n as usize, values).unwrap();
+    let create = ClientMsg::CreateMatrix { rows: m, cols: n, kind: LayoutKind::RowBlock };
+    let meta = match call(&create) {
+        DriverMsg::MatrixCreated { meta } => meta,
+        other => panic!("expected matrix, got {other:?}"),
+    };
+    {
+        let mut data = std::net::TcpStream::connect(&workers[0].data_addr).unwrap();
+        let rows: Vec<WireRow> = (0..m)
+            .map(|i| WireRow { index: i, values: full.row(i as usize).to_vec() })
+            .collect();
+        frame::write_frame(&mut data, &DataMsg::PutRows { handle: meta.handle, rows }.encode())
+            .unwrap();
+        frame::write_frame(&mut data, &DataMsg::PutDone { handle: meta.handle }.encode())
+            .unwrap();
+        match DataMsg::decode(&frame::read_frame(&mut data).unwrap()).unwrap() {
+            DataMsg::PutComplete { rows_received, .. } => assert_eq!(rows_received, m),
+            other => panic!("expected PutComplete, got {other:?}"),
+        }
+    }
+
+    // Async truncated_svd through raw v5 frames.
+    let job_id = match call(&ClientMsg::SubmitRoutine {
+        library: "elemlib".into(),
+        routine: "truncated_svd".into(),
+        params: vec![
+            ("A".to_string(), ParamValue::Matrix(meta.handle)),
+            ("k".to_string(), ParamValue::I64(k)),
+        ],
+    }) {
+        DriverMsg::JobAccepted { job_id } => job_id,
+        other => panic!("expected JobAccepted, got {other:?}"),
+    };
+    let new_matrices = loop {
+        match call(&ClientMsg::WaitJob { job_id, timeout_ms: 0 }) {
+            DriverMsg::JobStatus { state: JobState::Done { new_matrices, .. }, .. } => {
+                break new_matrices;
+            }
+            DriverMsg::JobStatus { state: JobState::Failed { message }, .. } => {
+                panic!("tsvd failed: {message}");
+            }
+            DriverMsg::JobStatus { state, .. } => {
+                // v5 decode of a running job must yield the legacy bare
+                // Running (phase dropped server-side).
+                if let JobState::Running { phase, progress } = state {
+                    assert!(phase.is_empty(), "v5 session saw a v6 Running payload");
+                    assert_eq!(progress, 0.0);
+                }
+            }
+            other => panic!("expected JobStatus, got {other:?}"),
+        }
+    };
+    assert_eq!(new_matrices.len(), 3);
+    for meta in &new_matrices {
+        assert_ne!(
+            meta.layout.kind,
+            LayoutKind::Replicated,
+            "v5 session must never see Replicated layouts ({meta:?})"
+        );
+    }
+    // S is k x 1, RowBlock-sliced for v5.
+    assert_eq!((new_matrices[1].rows, new_matrices[1].cols), (k as u64, 1));
+    assert_eq!(new_matrices[1].layout.kind, LayoutKind::RowBlock);
+
+    match call(&ClientMsg::Stop) {
+        DriverMsg::Stopped => {}
+        other => panic!("expected Stopped, got {other:?}"),
+    }
+    srv.shutdown();
+}
+
+/// The v6 client fetches Replicated small outputs from a single owner.
+#[test]
+fn replicated_small_outputs_fetch_from_one_owner() {
+    let srv = start_server(&cfg(3)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "repl").unwrap();
+    ac.request_workers(3).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = DenseMatrix::from_vec(45, 9, random_matrix(9, 45, 9)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    // k=2 < p=3: under RowBlock slicing S would have a zero-row owner;
+    // under Replicated it is served whole by owner 0.
+    let svd = wrappers::truncated_svd(&ac, &al, 2).unwrap();
+    assert_eq!(svd.s.meta.layout.kind, LayoutKind::Replicated);
+    assert_eq!(svd.v.meta.layout.kind, LayoutKind::Replicated);
+    let s = ac.fetch_dense(&svd.s).unwrap();
+    assert_eq!((s.rows(), s.cols()), (2, 1));
+    assert!(s.get(0, 0) >= s.get(1, 0) && s.get(1, 0) > 0.0);
+    let v = ac.fetch_dense(&svd.v).unwrap();
+    assert_eq!((v.rows(), v.cols()), (9, 2));
+    // U stays distributed like A.
+    assert_eq!(svd.u.meta.layout.kind, LayoutKind::RowBlock);
+    let u = ac.fetch_dense(&svd.u).unwrap();
+    assert_eq!((u.rows(), u.cols()), (45, 2));
+
+    // Clients cannot create Replicated matrices themselves.
+    let err = ac.create_matrix(4, 4, LayoutKind::Replicated).unwrap_err();
+    assert!(err.to_string().contains("Replicated"), "{err}");
+    ac.stop().unwrap();
+    srv.shutdown();
+}

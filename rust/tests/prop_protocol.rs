@@ -107,9 +107,13 @@ fn driver_msgs_roundtrip_random() {
             5 => DriverMsg::JobAccepted { job_id: rng.next_u64() },
             6 => DriverMsg::JobStatus {
                 job_id: rng.next_u64(),
-                state: match rng.next_range(4) {
+                state: match rng.next_range(5) {
                     0 => JobState::Queued,
-                    1 => JobState::Running,
+                    1 => JobState::running(),
+                    4 => JobState::Running {
+                        phase: random_string(rng, 12),
+                        progress: rng.next_f64(),
+                    },
                     2 => JobState::Done {
                         outputs: random_params(rng),
                         new_matrices: (0..rng.next_range(3)).map(|_| random_meta(rng)).collect(),
@@ -264,6 +268,7 @@ fn worker_msgs_roundtrip_random() {
                 routine: random_string(rng, 10),
                 params: random_params(rng),
                 output_handles: (0..rng.next_range(5)).map(|_| rng.next_u64()).collect(),
+                job_token: rng.next_u64(),
             },
             3 => WorkerCtl::FreeMatrix { handle: rng.next_u64() },
             _ => WorkerCtl::Shutdown,

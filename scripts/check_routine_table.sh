@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI drift check: the routine table embedded in rust/README.md must match
+# what the registry actually publishes (`cargo run --example
+# describe_routines`). Regenerate the README block with:
+#   cd rust && cargo run --quiet --release --example describe_routines
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+generated=$(mktemp)
+embedded=$(mktemp)
+trap 'rm -f "$generated" "$embedded"' EXIT
+
+cargo run --quiet --release --example describe_routines > "$generated"
+awk '/<!-- routine-table:begin -->/{f=1;next} /<!-- routine-table:end -->/{f=0} f' \
+    README.md > "$embedded"
+
+if ! diff -u "$embedded" "$generated"; then
+    echo "rust/README.md routine table drifted from the RoutineRegistry." >&2
+    echo "Regenerate it: cd rust && cargo run --example describe_routines" >&2
+    exit 1
+fi
+echo "routine table in sync with the registry"
