@@ -9,9 +9,17 @@
 //! * `multi` — the pool split across S one-worker sessions driven from S
 //!   threads: what queued admission + the job table make safe to do.
 //!
-//! Run: `cargo bench --bench ablate_scheduler [-- --set bench.reps=1]`
+//! A fourth scenario, `pool_recovery`, exercises the worker-lifecycle
+//! subsystem: sever one worker's control stream mid-session, let the
+//! session poison and the group quarantine, then measure how long the
+//! prober takes to heal the pool back to full capacity.
+//!
+//! Run: `cargo bench --bench ablate_scheduler [-- --set bench.reps=1]
+//!       [--json out.json]`
 
-use alchemist::bench_support::{bench_config, harness::Table};
+use std::time::{Duration, Instant};
+
+use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
 use alchemist::client::{wrappers, AlchemistContext};
 use alchemist::config::Config;
 use alchemist::linalg::DenseMatrix;
@@ -80,8 +88,51 @@ fn run_multi_session(addr: &str, sessions: u32) -> alchemist::Result<f64> {
     Ok(t.elapsed_secs())
 }
 
+/// Fault-injection scenario: returns `(recovered_workers, recovery_secs,
+/// timed_out)` where recovery_secs spans fault injection →
+/// scheduler_status reporting the full pool free again (probe latency +
+/// one probe interval). `timed_out` marks a run where the pool never
+/// fully recovered within the deadline — a regression signal, not a
+/// slow-but-valid datapoint.
+fn run_pool_recovery(pool: u32) -> alchemist::Result<(u32, f64, bool)> {
+    let mut cfg = Config::default();
+    cfg.server.workers = pool;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sched.probe_interval_ms = 50;
+    cfg.sched.probe_timeout_ms = 500;
+    let srv = start_server(&cfg)?;
+    let (ac, al) = session_with(&srv.driver_addr, "recovery", pool)?;
+
+    let t = Timer::start();
+    srv.inject_worker_ctl_failure(0);
+    // First routine after the fault trips the dead socket and poisons
+    // the session; the error is the expected fault signal, not a bench
+    // failure.
+    let _ = wrappers::fro_norm(&ac, &al);
+    let _ = ac.stop();
+
+    let obs = AlchemistContext::connect(&srv.driver_addr, "recovery-obs")?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let (recovered, timed_out) = loop {
+        let st = obs.scheduler_status()?;
+        if st.free_workers == pool && st.lost_workers == 0 {
+            break (st.recovered_workers, false);
+        }
+        if Instant::now() > deadline {
+            break (st.recovered_workers, true);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let secs = t.elapsed_secs();
+    obs.stop()?;
+    srv.shutdown();
+    Ok((recovered, secs, timed_out))
+}
+
 fn main() {
     let base = bench_config();
+    let json_path = json_out_path();
+    let mut json_rows: Vec<String> = Vec::new();
     let reps = base.bench.reps.max(1);
     println!(
         "=== scheduler ablation: {JOBS} fro_norm jobs on a {ROWS}x{COLS} matrix, {reps} rep(s) ===\n"
@@ -118,6 +169,11 @@ fn main() {
             format!("{secs:.3}"),
             format!("{:.1}", JOBS as f64 / secs),
         ]);
+        json_rows.push(format!(
+            "{{\"scenario\":\"discipline\",\"name\":\"{name}\",\"secs\":{secs:.4},\
+             \"jobs_per_s\":{:.2}}}",
+            JOBS as f64 / secs
+        ));
     }
     table.print();
     println!(
@@ -125,4 +181,34 @@ fn main() {
          submissions through the job queue; multi uses queued admission to\n\
          split the pool into independent sessions that execute concurrently."
     );
+
+    println!("\n=== pool recovery: sever 1 of {pool} workers, poison, probe, readmit ===\n");
+    let mut recovery = Table::new(&["workers", "severed", "recovered", "recovery(ms)"]);
+    let (recovered, secs, timed_out) =
+        run_pool_recovery(pool).expect("pool_recovery scenario failed");
+    recovery.row(vec![
+        pool.to_string(),
+        "1".to_string(),
+        recovered.to_string(),
+        if timed_out {
+            format!("TIMED OUT ({:.0} ms)", secs * 1e3)
+        } else {
+            format!("{:.1}", secs * 1e3)
+        },
+    ]);
+    recovery.print();
+    json_rows.push(format!(
+        "{{\"scenario\":\"pool_recovery\",\"workers\":{pool},\"severed\":1,\
+         \"recovered\":{recovered},\"recovery_ms\":{:.1},\"timed_out\":{timed_out}}}",
+        secs * 1e3
+    ));
+    println!(
+        "\nrecovery(ms) spans fault injection -> scheduler_status reporting the\n\
+         full pool free again (session poison + quarantine + worker\n\
+         re-registration + health probe + Reset + readmit)."
+    );
+
+    if let Some(path) = json_path {
+        write_json_rows(&path, &json_rows);
+    }
 }

@@ -56,6 +56,13 @@ pub struct ServerStatus {
     pub queued_sessions: u32,
     /// Jobs submitted but not yet `Done`/`Failed`, server-wide.
     pub jobs_inflight: u32,
+    /// Workers currently quarantined, awaiting a clean health probe
+    /// (v7 servers; 0 from older servers).
+    pub lost_workers: u32,
+    /// Workers the prober has readmitted to the pool, cumulative (v7).
+    pub recovered_workers: u32,
+    /// Worker re-registrations (epoch bumps) accepted, cumulative (v7).
+    pub worker_epochs: u32,
 }
 
 /// Handle to an asynchronously submitted routine (`ac.run_async`): a
@@ -131,9 +138,11 @@ impl<'a> JobHandle<'a> {
                     ));
                 }
                 JobState::Failed { message } => {
-                    // The driver already prefixes routine context.
+                    // The driver already prefixes routine context; known
+                    // failure classes (session poisoning) come back typed
+                    // so callers can reconnect-and-retry programmatically.
                     self.ac.phases.add("compute", t.elapsed());
-                    return Err(Error::Server(message));
+                    return Err(Error::from_server_message(message));
                 }
                 JobState::Queued | JobState::Running { .. } => {}
             }
@@ -499,7 +508,8 @@ impl AlchemistContext {
         Ok((s.total_workers, s.free_workers, s.sessions))
     }
 
-    /// Full server status including scheduler occupancy.
+    /// Full server status including scheduler occupancy and (v7) the
+    /// worker-pool recovery counters.
     pub fn scheduler_status(&self) -> Result<ServerStatus> {
         match self.call(&ClientMsg::ServerStatus)? {
             DriverMsg::Status {
@@ -508,12 +518,18 @@ impl AlchemistContext {
                 sessions,
                 queued_sessions,
                 jobs_inflight,
+                lost_workers,
+                recovered_workers,
+                worker_epochs,
             } => Ok(ServerStatus {
                 total_workers,
                 free_workers,
                 sessions,
                 queued_sessions,
                 jobs_inflight,
+                lost_workers,
+                recovered_workers,
+                worker_epochs,
             }),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }

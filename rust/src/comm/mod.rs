@@ -26,6 +26,19 @@ const MAX_COMM_FRAME: usize = 1 << 30;
 /// How long a dialing rank retries while the peer's listener comes up.
 const DIAL_TIMEOUT: Duration = Duration::from_secs(20);
 
+/// Per-read deadline on the mesh-formation handshake. The 12 handshake
+/// bytes follow the TCP connect immediately, so a peer that connects and
+/// then stalls is wedged or hostile — without this bound one bad peer
+/// holds session setup (and the session's worker grant) forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Overall deadline for the accept side of mesh formation (symmetric
+/// with [`DIAL_TIMEOUT`] on the dial side): a lower-rank peer that never
+/// dials (it died before entering formation) must error this rank out of
+/// `establish` — back to its control loop where the health prober can
+/// reach it — rather than wedge it in `accept` forever.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(20);
+
 /// A fully-connected communicator group.
 #[derive(Debug)]
 pub struct Mesh {
@@ -68,30 +81,14 @@ impl Mesh {
             Ok(out)
         });
 
-        // Accept connections from lower ranks.
-        let mut accepted = 0;
-        while accepted < rank {
-            let (mut s, _) = listener.accept()?;
-            s.set_nodelay(true)?;
-            let mut gid = [0u8; 8];
-            s.read_exact(&mut gid)?;
-            let got_gid = u64::from_le_bytes(gid);
-            let mut rk = [0u8; 4];
-            s.read_exact(&mut rk)?;
-            let from = u32::from_le_bytes(rk) as usize;
-            if got_gid != group_id {
-                return Err(Error::Protocol(format!(
-                    "mesh handshake: expected group {group_id}, got {got_gid}"
-                )));
-            }
-            if from >= rank || conns[from].is_some() {
-                return Err(Error::Protocol(format!("mesh handshake: bad dialer rank {from}")));
-            }
-            conns[from] = Some(s);
-            accepted += 1;
-        }
-
-        for (j, s) in dialer.join().map_err(|_| Error::Protocol("dialer panicked".into()))?? {
+        // Accept connections from lower ranks. Handshake reads run under
+        // a deadline, and the dialer thread is joined on *every* exit
+        // path — an early bad-peer return must not leak a detached thread
+        // still writing handshakes into half-formed sockets.
+        let accept_result = accept_lower_ranks(group_id, rank, &listener, &mut conns);
+        let dial_result = dialer.join().map_err(|_| Error::Protocol("dialer panicked".into()));
+        accept_result?;
+        for (j, s) in dial_result?? {
             conns[j] = Some(s);
         }
         Ok(Mesh { rank, size, conns })
@@ -288,6 +285,69 @@ pub(crate) fn recv_f64_frame(r: &mut impl Read) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+/// Accept one mesh-formation connection under a deadline. The listener
+/// flips to non-blocking and is polled until `deadline`; the accepted
+/// stream is returned to blocking mode (collectives rely on it).
+fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    let res = loop {
+        match listener.accept() {
+            Ok((s, _)) => break Ok(s),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    break Err(Error::Protocol(
+                        "mesh formation: timed out waiting for a peer to dial".into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => break Err(Error::Io(e)),
+        }
+    };
+    let _ = listener.set_nonblocking(false);
+    let s = res?;
+    s.set_nonblocking(false)?;
+    Ok(s)
+}
+
+/// Accept-side half of mesh formation: take `rank` connections off the
+/// listener (all within [`ACCEPT_TIMEOUT`]), handshake each under
+/// [`HANDSHAKE_TIMEOUT`], and slot them by dialer rank. Streams are
+/// returned to blocking mode before storage (collectives rely on
+/// blocking reads).
+fn accept_lower_ranks(
+    group_id: u64,
+    rank: usize,
+    listener: &TcpListener,
+    conns: &mut [Option<TcpStream>],
+) -> Result<()> {
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let mut accepted = 0;
+    while accepted < rank {
+        let mut s = accept_with_deadline(listener, deadline)?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut gid = [0u8; 8];
+        s.read_exact(&mut gid)?;
+        let got_gid = u64::from_le_bytes(gid);
+        let mut rk = [0u8; 4];
+        s.read_exact(&mut rk)?;
+        let from = u32::from_le_bytes(rk) as usize;
+        if got_gid != group_id {
+            return Err(Error::Protocol(format!(
+                "mesh handshake: expected group {group_id}, got {got_gid}"
+            )));
+        }
+        if from >= rank || conns[from].is_some() {
+            return Err(Error::Protocol(format!("mesh handshake: bad dialer rank {from}")));
+        }
+        s.set_read_timeout(None)?;
+        conns[from] = Some(s);
+        accepted += 1;
+    }
+    Ok(())
+}
+
 fn dial_with_retry(addr: &str) -> Result<TcpStream> {
     let deadline = Instant::now() + DIAL_TIMEOUT;
     loop {
@@ -388,6 +448,25 @@ mod tests {
         })
         .unwrap();
         assert_eq!(results[1], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn establish_errors_on_wedged_handshake_peer() {
+        // Rank 1 of a size-2 mesh accepts one connection from rank 0. A
+        // peer that connects but never sends its handshake must produce
+        // an error within the handshake deadline — not hang session
+        // setup forever while the worker grant is held.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let addrs = vec!["127.0.0.1:1".to_string(), addr.clone()];
+        let _wedged = TcpStream::connect(&addr).unwrap();
+        let t = Instant::now();
+        assert!(Mesh::establish(7, 1, &addrs, listener).is_err());
+        assert!(
+            t.elapsed() < Duration::from_secs(15),
+            "handshake read not bounded: {:?}",
+            t.elapsed()
+        );
     }
 
     #[test]

@@ -159,6 +159,13 @@ pub struct SchedConfig {
     /// any single job's cost cannot brick the session). 0 = unlimited.
     /// Only spec-publishing libraries are counted (foreign ALIs cost 0).
     pub max_inflight_cost_per_session: f64,
+    /// Pool recovery: how often the driver's health prober walks the
+    /// quarantined workers (ping, drain stale replies, `Reset`, readmit).
+    pub probe_interval_ms: u64,
+    /// Pool recovery: per-I/O budget of one probe/reset exchange — a
+    /// still-wedged worker fails its probe within this bound and stays
+    /// quarantined until the next round.
+    pub probe_timeout_ms: u64,
 }
 
 impl Default for SchedConfig {
@@ -169,6 +176,8 @@ impl Default for SchedConfig {
             wait_timeout_ms: 30_000,
             waitjob_block_ms: 2_000,
             max_inflight_cost_per_session: 0.0,
+            probe_interval_ms: 500,
+            probe_timeout_ms: 1_000,
         }
     }
 }
@@ -271,6 +280,8 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sched.max_inflight_cost_per_session" => {
             cfg.sched.max_inflight_cost_per_session = parse(key, val)?
         }
+        "sched.probe_interval_ms" => cfg.sched.probe_interval_ms = parse(key, val)?,
+        "sched.probe_timeout_ms" => cfg.sched.probe_timeout_ms = parse(key, val)?,
         "compute.dist_gemm_algo" => {
             crate::elemental::dist_gemm::DistGemmAlgo::parse(val)?;
             cfg.compute.dist_gemm_algo = val.to_string();
@@ -344,6 +355,12 @@ impl Config {
         }
         if self.sched.wait_timeout_ms == 0 {
             return Err(Error::Config("sched.wait_timeout_ms must be >= 1".into()));
+        }
+        if self.sched.probe_interval_ms == 0 {
+            return Err(Error::Config("sched.probe_interval_ms must be >= 1".into()));
+        }
+        if self.sched.probe_timeout_ms == 0 {
+            return Err(Error::Config("sched.probe_timeout_ms must be >= 1".into()));
         }
         if !self.sched.max_inflight_cost_per_session.is_finite()
             || self.sched.max_inflight_cost_per_session < 0.0
@@ -420,6 +437,8 @@ scale = 0.5
             "sched.wait_timeout_ms=500",
             "sched.waitjob_block_ms=100",
             "sched.max_inflight_cost_per_session=1e9",
+            "sched.probe_interval_ms=50",
+            "sched.probe_timeout_ms=250",
         ])
         .unwrap();
         assert_eq!(cfg.sched.max_workers_per_session, 2);
@@ -427,10 +446,18 @@ scale = 0.5
         assert_eq!(cfg.sched.wait_timeout_ms, 500);
         assert_eq!(cfg.sched.waitjob_block_ms, 100);
         assert_eq!(cfg.sched.max_inflight_cost_per_session, 1e9);
+        assert_eq!(cfg.sched.probe_interval_ms, 50);
+        assert_eq!(cfg.sched.probe_timeout_ms, 250);
         cfg.sched.max_inflight_cost_per_session = -1.0;
         assert!(cfg.validate().is_err());
         cfg.sched.max_inflight_cost_per_session = 0.0;
         cfg.sched.waitjob_block_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.sched.waitjob_block_ms = 1;
+        cfg.sched.probe_interval_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.sched.probe_interval_ms = 1;
+        cfg.sched.probe_timeout_ms = 0;
         assert!(cfg.validate().is_err());
     }
 

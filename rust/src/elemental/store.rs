@@ -50,6 +50,18 @@ impl MatrixStore {
         self.panels.contains_key(&handle)
     }
 
+    /// All stored handles (worker reset sweeps these through the runtime
+    /// cache before dropping the panels).
+    pub fn handles(&self) -> Vec<u64> {
+        self.panels.keys().copied().collect()
+    }
+
+    /// Drop every panel — worker-wide reset on re-registration or a
+    /// driver `WorkerCtl::Reset` (session-scoped cleanup uses `remove`).
+    pub fn clear(&mut self) {
+        self.panels.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.panels.len()
     }
@@ -95,6 +107,19 @@ mod tests {
         s.remove(1).unwrap();
         assert!(s.get(1).is_err());
         assert!(s.remove(1).is_err());
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let mut s = MatrixStore::new();
+        s.insert(panel(1, 4)).unwrap();
+        s.insert(panel(2, 8)).unwrap();
+        assert_eq!(s.handles().len(), 2);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(s.handles().is_empty());
+        // a cleared store accepts previously used handles again
+        s.insert(panel(1, 4)).unwrap();
     }
 
     #[test]

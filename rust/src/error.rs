@@ -32,7 +32,17 @@ pub enum Error {
     /// Routine invocation cancelled cooperatively (client `CancelJob`,
     /// honored collectively at the next Lanczos iteration / panel step).
     Cancelled(String),
+    /// The session's worker group hit a socket-level failure
+    /// mid-collective and was quarantined: no further routine can run on
+    /// this session. Carries the original failure; the client should
+    /// reconnect (a fresh session draws from the recovering pool).
+    SessionPoisoned(String),
 }
+
+/// Display prefix of [`Error::SessionPoisoned`] — the wire carries error
+/// strings, so the client re-types server messages by this prefix (see
+/// [`Error::from_server_message`]).
+const POISONED_PREFIX: &str = "session poisoned: ";
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -48,6 +58,7 @@ impl fmt::Display for Error {
             Error::Config(s) => write!(f, "config: {s}"),
             Error::Budget(s) => write!(f, "budget: {s}"),
             Error::Cancelled(s) => write!(f, "cancelled: {s}"),
+            Error::SessionPoisoned(s) => write!(f, "{POISONED_PREFIX}{s}"),
         }
     }
 }
@@ -66,6 +77,23 @@ impl Error {
     pub fn is_expected_failure(&self) -> bool {
         matches!(self, Error::Sparklet(_) | Error::Budget(_))
     }
+
+    /// True for [`Error::SessionPoisoned`]: the session is dead but the
+    /// server is not — reconnect and retry on a fresh session.
+    pub fn is_session_poisoned(&self) -> bool {
+        matches!(self, Error::SessionPoisoned(_))
+    }
+
+    /// Re-type an error string received over the wire (`DriverMsg::Err`,
+    /// `JobState::Failed`): the protocol carries plain strings, so typed
+    /// failure classes the client must react to — currently only session
+    /// poisoning — are recovered from their stable display prefix.
+    pub fn from_server_message(message: String) -> Error {
+        match message.strip_prefix(POISONED_PREFIX) {
+            Some(cause) => Error::SessionPoisoned(cause.to_string()),
+            None => Error::Server(message),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -82,6 +110,22 @@ mod tests {
     fn io_conversion() {
         let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn poisoned_errors_roundtrip_through_strings() {
+        let e = Error::SessionPoisoned("send to worker 2: io: broken pipe".into());
+        assert!(e.is_session_poisoned());
+        let wire = e.to_string();
+        assert!(wire.starts_with("session poisoned: "), "{wire}");
+        match Error::from_server_message(wire) {
+            Error::SessionPoisoned(cause) => {
+                assert_eq!(cause, "send to worker 2: io: broken pipe")
+            }
+            other => panic!("expected SessionPoisoned, got {other:?}"),
+        }
+        // Ordinary server messages stay Server.
+        assert!(matches!(Error::from_server_message("no workers".into()), Error::Server(_)));
     }
 
     #[test]

@@ -138,10 +138,16 @@ pub struct SchedMetrics {
     pub queue_depth: Gauge,
     /// Jobs submitted but not yet `Done`/`Failed`.
     pub jobs_inflight: Gauge,
+    /// Workers currently quarantined (pool-recovery lifecycle: set on
+    /// quarantine, lowered as the health prober readmits).
+    pub lost_workers: Gauge,
     /// "grants", "grant_timeouts", "jobs_submitted", "jobs_done",
-    /// "jobs_failed" — monotonic event counts.
+    /// "jobs_failed", plus the recovery counts "quarantined_workers",
+    /// "readmitted_workers", "worker_reregistrations", "probes_failed" —
+    /// monotonic event counts.
     pub counters: Counters,
-    /// "alloc_wait" — cumulative time sessions spent queued for workers.
+    /// "alloc_wait" — cumulative time sessions spent queued for workers;
+    /// "probe" — cumulative probe→readmit latency of recovered workers.
     pub phases: PhaseTimes,
 }
 
@@ -321,9 +327,13 @@ mod tests {
         m.queue_depth.inc();
         m.counters.add("grants", 2);
         m.phases.add("alloc_wait", Duration::from_millis(3));
+        m.lost_workers.set(2);
+        m.counters.add("readmitted_workers", 1);
         assert_eq!(m.queue_depth.get(), 1);
         assert_eq!(m.counters.get("grants"), 2);
         assert!(m.phases.get_secs("alloc_wait") > 0.0);
+        assert_eq!(m.lost_workers.get(), 2);
+        assert_eq!(m.counters.get("readmitted_workers"), 1);
     }
 
     #[test]

@@ -25,7 +25,12 @@ use crate::{Error, Result};
 /// introspection, `CancelJob`, `JobState::Running { phase, progress }`
 /// (encoded as the legacy bare `Running` tag for ≤ v5 sessions), and the
 /// `Replicated` matrix layout for small routine outputs.
-pub const PROTOCOL_VERSION: u16 = 6;
+/// v7: pool recovery — the extended `Status` reply carrying worker
+/// lost/recovered/epoch counters (≤ v6 sessions keep the 5-field shape),
+/// plus the worker-control `Reset`/`Ping`/`Pong` lifecycle messages used
+/// by the driver's health prober (driver ⇄ worker only, never
+/// client-visible).
+pub const PROTOCOL_VERSION: u16 = 7;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -41,6 +46,11 @@ pub const SLAB_PROTOCOL_VERSION: u16 = 5;
 /// the `Replicated` layout kind. Sessions negotiated below this keep the
 /// v5 wire shapes (bare `Running`, RowBlock-sliced small outputs).
 pub const ROUTINE_ENGINE_PROTOCOL_VERSION: u16 = 6;
+
+/// First version whose `Status` reply carries the worker-pool recovery
+/// counters (lost/recovered workers, cumulative registration epochs).
+/// Sessions negotiated below this get the legacy 5-field `Status` shape.
+pub const POOL_RECOVERY_PROTOCOL_VERSION: u16 = 7;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -661,12 +671,21 @@ pub enum DriverMsg {
     Stopped,
     /// Reply to `ServerStatus`, including scheduler occupancy: sessions
     /// parked in the admission queue and jobs submitted-but-not-finished.
+    /// Since v7 it also carries the pool-recovery counters; for ≤ v6
+    /// sessions the driver encodes the legacy 5-field shape and the
+    /// recovery fields decode as zero.
     Status {
         total_workers: u32,
         free_workers: u32,
         sessions: u32,
         queued_sessions: u32,
         jobs_inflight: u32,
+        /// Workers currently quarantined (awaiting a clean health probe).
+        lost_workers: u32,
+        /// Workers readmitted to the pool by the prober, cumulative.
+        recovered_workers: u32,
+        /// Worker re-registrations (epoch bumps) accepted, cumulative.
+        worker_epochs: u32,
     },
     /// Reply to `SubmitRoutine`: the job is in the session's job table.
     JobAccepted { job_id: u64 },
@@ -735,13 +754,27 @@ impl DriverMsg {
                 sessions,
                 queued_sessions,
                 jobs_inflight,
+                lost_workers,
+                recovered_workers,
+                worker_epochs,
             } => {
-                w.put_u8(9);
+                // v7 gets its own tag so the decode stays self-describing
+                // (appending fields under tag 9 would desync ≤ v6 readers).
+                if version >= POOL_RECOVERY_PROTOCOL_VERSION {
+                    w.put_u8(13);
+                } else {
+                    w.put_u8(9);
+                }
                 w.put_u32(*total_workers);
                 w.put_u32(*free_workers);
                 w.put_u32(*sessions);
                 w.put_u32(*queued_sessions);
                 w.put_u32(*jobs_inflight);
+                if version >= POOL_RECOVERY_PROTOCOL_VERSION {
+                    w.put_u32(*lost_workers);
+                    w.put_u32(*recovered_workers);
+                    w.put_u32(*worker_epochs);
+                }
             }
             DriverMsg::JobAccepted { job_id } => {
                 w.put_u8(10);
@@ -790,12 +823,15 @@ impl DriverMsg {
             6 => DriverMsg::Released { handle: r.get_u64()? },
             7 => DriverMsg::Stopped,
             8 => DriverMsg::Err { message: r.get_str()? },
-            9 => DriverMsg::Status {
+            tag @ (9 | 13) => DriverMsg::Status {
                 total_workers: r.get_u32()?,
                 free_workers: r.get_u32()?,
                 sessions: r.get_u32()?,
                 queued_sessions: r.get_u32()?,
                 jobs_inflight: r.get_u32()?,
+                lost_workers: if tag == 13 { r.get_u32()? } else { 0 },
+                recovered_workers: if tag == 13 { r.get_u32()? } else { 0 },
+                worker_epochs: if tag == 13 { r.get_u32()? } else { 0 },
             },
             10 => DriverMsg::JobAccepted { job_id: r.get_u64()? },
             11 => DriverMsg::JobStatus { job_id: r.get_u64()?, state: JobState::decode(&mut r)? },
@@ -812,10 +848,11 @@ impl DriverMsg {
         Ok(msg)
     }
 
-    /// Collapse `Err` replies into crate errors.
+    /// Collapse `Err` replies into crate errors, re-typing known failure
+    /// classes (session poisoning) from their stable message prefix.
     pub fn into_result(self) -> Result<DriverMsg> {
         match self {
-            DriverMsg::Err { message } => Err(Error::Server(message)),
+            DriverMsg::Err { message } => Err(Error::from_server_message(message)),
             other => Ok(other),
         }
     }
@@ -1073,6 +1110,16 @@ pub enum WorkerCtl {
     },
     RegisterLibrary { name: String, path: String },
     Shutdown,
+    /// v7 lifecycle: drop every session/panel/mesh the worker holds and
+    /// adopt `epoch` as its registration generation. Sent by the driver's
+    /// health prober before readmitting a quarantined worker, so a
+    /// recycled worker can never serve state a stale session left behind.
+    Reset { epoch: u64 },
+    /// v7 lifecycle: liveness/resync probe. The worker echoes `nonce` in
+    /// a [`WorkerReply::Pong`]; the driver reads frames until the echo
+    /// arrives, draining any stale replies an earlier failure left
+    /// buffered on the control stream.
+    Ping { nonce: u64 },
 }
 
 impl WorkerCtl {
@@ -1131,6 +1178,14 @@ impl WorkerCtl {
                 w.put_str(path);
             }
             WorkerCtl::Shutdown => w.put_u8(6),
+            WorkerCtl::Reset { epoch } => {
+                w.put_u8(8);
+                w.put_u64(*epoch);
+            }
+            WorkerCtl::Ping { nonce } => {
+                w.put_u8(9);
+                w.put_u64(*nonce);
+            }
         }
         w.into_bytes()
     }
@@ -1178,6 +1233,8 @@ impl WorkerCtl {
             5 => WorkerCtl::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
             6 => WorkerCtl::Shutdown,
             7 => WorkerCtl::PrepareSession { session_id: r.get_u64()? },
+            8 => WorkerCtl::Reset { epoch: r.get_u64()? },
+            9 => WorkerCtl::Ping { nonce: r.get_u64()? },
             t => return Err(Error::Protocol(format!("bad WorkerCtl tag {t}"))),
         };
         Ok(msg)
@@ -1194,6 +1251,10 @@ pub enum WorkerReply {
     /// Reply to `PrepareSession`: the bound communicator address.
     SessionReady { comm_addr: String },
     Err { message: String },
+    /// Reply to [`WorkerCtl::Ping`]: the echoed nonce plus the worker's
+    /// current registration epoch. A matched nonce also proves the
+    /// control stream is back in request/reply sync.
+    Pong { nonce: u64, epoch: u64 },
 }
 
 impl WorkerReply {
@@ -1217,6 +1278,11 @@ impl WorkerReply {
                 w.put_u8(2);
                 w.put_str(message);
             }
+            WorkerReply::Pong { nonce, epoch } => {
+                w.put_u8(4);
+                w.put_u64(*nonce);
+                w.put_u64(*epoch);
+            }
         }
         w.into_bytes()
     }
@@ -1236,9 +1302,85 @@ impl WorkerReply {
             }
             2 => WorkerReply::Err { message: r.get_str()? },
             3 => WorkerReply::SessionReady { comm_addr: r.get_str()? },
+            4 => WorkerReply::Pong { nonce: r.get_u64()?, epoch: r.get_u64()? },
             t => return Err(Error::Protocol(format!("bad WorkerReply tag {t}"))),
         };
         Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker registration plane (worker -> driver registration listener)
+// ---------------------------------------------------------------------------
+
+/// First frame a worker sends when dialing the driver's registration
+/// listener — at startup (`claimed_id: None`, the driver assigns one) and
+/// again whenever its control stream dies (`claimed_id: Some(id)`, the
+/// worker rejoins the pool under its original id with a bumped epoch).
+/// `data_addr` is re-advertised on every registration since a restarted
+/// worker may bind a different data-plane port.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerHello {
+    pub claimed_id: Option<u32>,
+    pub data_addr: String,
+}
+
+impl WorkerHello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u32(self.claimed_id.unwrap_or(u32::MAX));
+        w.put_str(&self.data_addr);
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WorkerHello> {
+        let mut r = Reader::new(buf);
+        let raw = r.get_u32()?;
+        let claimed_id = if raw == u32::MAX { None } else { Some(raw) };
+        Ok(WorkerHello { claimed_id, data_addr: r.get_str()? })
+    }
+}
+
+/// Driver's reply to a [`WorkerHello`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerAck {
+    /// Registration accepted: the worker's (possibly newly assigned) id
+    /// and the epoch the driver stamped on this generation. Epoch 0 is
+    /// the initial registration; every re-registration bumps it, and
+    /// `WorkerCtl::Reset`/`WorkerReply::Pong` carry it so stale
+    /// generations are always distinguishable.
+    Granted { id: u32, epoch: u64 },
+    /// Registration refused — the claimed slot is not reclaimable right
+    /// now (still granted to a session, or its current generation is
+    /// provably alive). The driver is up; the worker should keep
+    /// retrying with backoff rather than treat this as a dead server.
+    Refused { message: String },
+}
+
+impl WorkerAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            WorkerAck::Granted { id, epoch } => {
+                w.put_u8(0);
+                w.put_u32(*id);
+                w.put_u64(*epoch);
+            }
+            WorkerAck::Refused { message } => {
+                w.put_u8(1);
+                w.put_str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WorkerAck> {
+        let mut r = Reader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => WorkerAck::Granted { id: r.get_u32()?, epoch: r.get_u64()? },
+            1 => WorkerAck::Refused { message: r.get_str()? },
+            t => return Err(Error::Protocol(format!("bad WorkerAck tag {t}"))),
+        })
     }
 }
 
@@ -1313,6 +1455,9 @@ mod tests {
                 sessions: 2,
                 queued_sessions: 1,
                 jobs_inflight: 4,
+                lost_workers: 2,
+                recovered_workers: 5,
+                worker_epochs: 7,
             },
             DriverMsg::JobAccepted { job_id: 5 },
             DriverMsg::JobStatus { job_id: 5, state: JobState::Queued },
@@ -1399,6 +1544,56 @@ mod tests {
     }
 
     #[test]
+    fn status_downgrades_for_v6_sessions() {
+        // ≤ v6 sessions must see the legacy 5-field Status (tag 9) with
+        // the recovery counters dropped; v7 sessions get tag 13.
+        let msg = DriverMsg::Status {
+            total_workers: 4,
+            free_workers: 1,
+            sessions: 2,
+            queued_sessions: 0,
+            jobs_inflight: 3,
+            lost_workers: 2,
+            recovered_workers: 6,
+            worker_epochs: 9,
+        };
+        let v6 = msg.encode_versioned(6);
+        assert_eq!(v6[0], 9, "v6 Status must use the legacy tag");
+        assert_eq!(v6.len(), 1 + 5 * 4);
+        match DriverMsg::decode(&v6).unwrap() {
+            DriverMsg::Status {
+                total_workers,
+                lost_workers,
+                recovered_workers,
+                worker_epochs,
+                ..
+            } => {
+                assert_eq!(total_workers, 4);
+                assert_eq!((lost_workers, recovered_workers, worker_epochs), (0, 0, 0));
+            }
+            other => panic!("bad v6 decode: {other:?}"),
+        }
+        let v7 = msg.encode_versioned(7);
+        assert_eq!(v7[0], 13, "v7 Status carries recovery counters");
+        assert_eq!(DriverMsg::decode(&v7).unwrap(), msg);
+    }
+
+    #[test]
+    fn registration_plane_roundtrips() {
+        let fresh = WorkerHello { claimed_id: None, data_addr: "127.0.0.1:4000".into() };
+        assert_eq!(WorkerHello::decode(&fresh.encode()).unwrap(), fresh);
+        let back = WorkerHello { claimed_id: Some(3), data_addr: "127.0.0.1:4001".into() };
+        assert_eq!(WorkerHello::decode(&back.encode()).unwrap(), back);
+        let ack = WorkerAck::Granted { id: 3, epoch: 2 };
+        assert_eq!(WorkerAck::decode(&ack.encode()).unwrap(), ack);
+        let no = WorkerAck::Refused { message: "slot still granted".into() };
+        assert_eq!(WorkerAck::decode(&no.encode()).unwrap(), no);
+        assert!(WorkerHello::decode(&[1]).is_err());
+        assert!(WorkerAck::decode(&[]).is_err());
+        assert!(WorkerAck::decode(&[9]).is_err());
+    }
+
+    #[test]
     fn data_msgs_roundtrip() {
         let msgs = vec![
             DataMsg::PutRows {
@@ -1469,6 +1664,8 @@ mod tests {
             },
             WorkerCtl::RegisterLibrary { name: "x".into(), path: "builtin:elemlib".into() },
             WorkerCtl::Shutdown,
+            WorkerCtl::Reset { epoch: 4 },
+            WorkerCtl::Ping { nonce: 77 },
         ];
         for m in msgs {
             assert_eq!(WorkerCtl::decode(&m.encode()).unwrap(), m);
@@ -1481,6 +1678,7 @@ mod tests {
                 new_matrices: vec![meta()],
             },
             WorkerReply::Err { message: "boom".into() },
+            WorkerReply::Pong { nonce: 77, epoch: 4 },
         ];
         for m in replies {
             assert_eq!(WorkerReply::decode(&m.encode()).unwrap(), m);

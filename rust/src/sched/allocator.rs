@@ -58,9 +58,10 @@ struct AllocState {
     /// FIFO admission queue.
     queue: VecDeque<Waiter>,
     next_ticket: u64,
-    /// Workers permanently quarantined (wedged groups) — no longer part
-    /// of satisfiable capacity.
-    lost: u32,
+    /// Quarantined workers (wedged or unreachable groups) — out of
+    /// satisfiable capacity until a clean health probe readmits them
+    /// (see [`PoolAllocator::readmit`]).
+    lost: BTreeSet<u32>,
 }
 
 /// The worker-pool allocator. Thread-safe; one instance per driver.
@@ -87,7 +88,7 @@ impl PoolAllocator {
                 held: HashMap::new(),
                 queue: VecDeque::new(),
                 next_ticket: 0,
-                lost: 0,
+                lost: BTreeSet::new(),
             }),
             cv: Condvar::new(),
             policy,
@@ -98,11 +99,22 @@ impl PoolAllocator {
 
     /// Satisfiable pool size: registered workers minus quarantined ones.
     pub fn total(&self) -> u32 {
-        self.total - self.state.lock().unwrap().lost
+        self.total - self.state.lock().unwrap().lost.len() as u32
     }
 
     pub fn free_count(&self) -> u32 {
         self.state.lock().unwrap().free.len() as u32
+    }
+
+    /// Workers currently quarantined.
+    pub fn lost_count(&self) -> u32 {
+        self.state.lock().unwrap().lost.len() as u32
+    }
+
+    /// Snapshot of the quarantined worker ids — what the driver's health
+    /// prober walks each probe round.
+    pub fn quarantined(&self) -> Vec<u32> {
+        self.state.lock().unwrap().lost.iter().copied().collect()
     }
 
     /// Sessions currently parked in the admission queue.
@@ -113,6 +125,14 @@ impl PoolAllocator {
     /// Workers currently held by `session_id`.
     pub fn held_by(&self, session_id: u64) -> u32 {
         self.state.lock().unwrap().held.get(&session_id).copied().unwrap_or(0)
+    }
+
+    /// True while `id` is granted to some session. The re-registration
+    /// guard consults this: a granted worker's control stream belongs to
+    /// its session, so the driver must neither probe it nor swap it out
+    /// from under the grant.
+    pub fn is_granted(&self, id: u32) -> bool {
+        self.state.lock().unwrap().granted.contains_key(&id)
     }
 
     /// Acquire `count` workers for `session_id`.
@@ -135,9 +155,11 @@ impl PoolAllocator {
         }
         let quota = self.policy.max_workers_per_session;
         let mut st = self.state.lock().unwrap();
-        // Fast-fail requests no release can ever satisfy (quarantined
-        // workers never come back) instead of head-blocking the queue.
-        let live = self.total - st.lost;
+        // Fast-fail requests the *current* live capacity can never
+        // satisfy instead of head-blocking the queue. Quarantined workers
+        // may return via `readmit`, but admission only promises what the
+        // pool holds today — clients retry once the prober heals it.
+        let live = self.total - st.lost.len() as u32;
         if count > live {
             return Err(Error::Server(format!(
                 "insufficient workers: requested {count}, pool size {live}"
@@ -181,16 +203,18 @@ impl PoolAllocator {
         let deadline = Instant::now() + budget;
         loop {
             // Capacity may shrink while parked (quarantine): fail fast
-            // once the request can never be satisfied instead of
-            // head-blocking the queue until the deadline.
-            if count > self.total - st.lost {
+            // once the request exceeds live capacity instead of
+            // head-blocking the queue until the deadline (a later readmit
+            // wakes waiters, but a parked session does not gamble the
+            // queue head on recovery).
+            if count > self.total - st.lost.len() as u32 {
                 st.queue.retain(|w| w.ticket != ticket);
                 self.metrics.queue_depth.set(st.queue.len() as i64);
                 self.metrics.phases.add("alloc_wait", waited.elapsed());
                 self.cv.notify_all();
                 return Err(Error::Server(format!(
                     "insufficient workers: requested {count}, pool size {}",
-                    self.total - st.lost
+                    self.total - st.lost.len() as u32
                 )));
             }
             let head_ok = st
@@ -244,22 +268,23 @@ impl PoolAllocator {
         ids
     }
 
-    /// Permanently remove workers from circulation (e.g. a group wedged
-    /// in collective mesh formation): ownership moves to a sentinel so
-    /// no release can ever return them to the pool, and the session's
-    /// quota charge is dropped so it can retry with fresh workers.
+    /// Remove workers from circulation (e.g. a group wedged in collective
+    /// mesh formation): ownership moves to the quarantine set so no
+    /// release can return them to the pool, and the session's quota
+    /// charge is dropped so it can retry with fresh workers. Quarantine
+    /// is not a death sentence: the driver's health prober calls
+    /// [`PoolAllocator::readmit`] once a worker proves clean again.
     pub fn quarantine(&self, session_id: u64, ids: &[u32]) {
-        const SENTINEL: u64 = u64::MAX;
         let mut st = self.state.lock().unwrap();
         let mut moved = 0u32;
         for id in ids {
             if st.granted.get(id) == Some(&session_id) {
-                st.granted.insert(*id, SENTINEL);
+                st.granted.remove(id);
+                st.lost.insert(*id);
                 moved += 1;
             }
         }
         if moved > 0 {
-            st.lost += moved;
             if let Some(h) = st.held.get_mut(&session_id) {
                 *h = h.saturating_sub(moved);
                 if *h == 0 {
@@ -267,10 +292,29 @@ impl PoolAllocator {
                 }
             }
             self.metrics.counters.add("quarantined_workers", moved as u64);
+            self.metrics.lost_workers.set(st.lost.len() as i64);
             // Wake parked waiters: requests exceeding the shrunken live
             // capacity must fail fast rather than sit at the queue head.
             self.cv.notify_all();
         }
+    }
+
+    /// Return a quarantined worker to the free pool — the recovery half
+    /// of [`PoolAllocator::quarantine`], called by the health prober
+    /// after a clean probe + `Reset`. Workers that are not quarantined
+    /// (already readmitted, or never lost) are left alone. Waking parked
+    /// sessions matters here: a waiter whose request the degraded pool
+    /// could not cover may become grantable again.
+    pub fn readmit(&self, id: u32) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.lost.remove(&id) {
+            return false;
+        }
+        st.free.insert(id);
+        self.metrics.counters.add("readmitted_workers", 1);
+        self.metrics.lost_workers.set(st.lost.len() as i64);
+        self.cv.notify_all();
+        true
     }
 
     /// Return workers to the pool, waking parked sessions. Ids not
@@ -396,7 +440,7 @@ mod tests {
         let a = alloc(3, 2, 100);
         let g = a.acquire(1, 2, false, None).unwrap();
         a.quarantine(1, &g);
-        // Quarantined workers never return to the pool...
+        // Quarantined workers do not return to the pool via release...
         a.release(1, &g);
         assert_eq!(a.free_count(), 1);
         // ...but the session's quota charge is gone, so it can retry
@@ -408,6 +452,57 @@ mod tests {
         assert_eq!(a.total(), 1);
         let err = a.acquire(2, 2, true, None).unwrap_err();
         assert!(err.to_string().contains("pool size 1"), "{err}");
+    }
+
+    #[test]
+    fn readmit_restores_capacity() {
+        let a = alloc(2, 0, 100);
+        let g = a.acquire(1, 2, false, None).unwrap();
+        assert!(a.is_granted(0));
+        a.quarantine(1, &g);
+        assert!(!a.is_granted(0), "quarantined workers are no longer granted");
+        assert_eq!(a.total(), 0);
+        assert_eq!(a.lost_count(), 2);
+        assert_eq!(a.quarantined(), vec![0, 1]);
+        // Readmission is probe-driven and per worker.
+        assert!(a.readmit(0));
+        assert!(!a.readmit(0), "double readmit must be a no-op");
+        assert!(!a.readmit(9), "unknown ids are not readmittable");
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.free_count(), 1);
+        assert_eq!(a.acquire(2, 1, false, None).unwrap(), vec![0]);
+        assert!(a.readmit(1));
+        assert_eq!(a.lost_count(), 0);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.acquire(3, 1, false, None).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn readmit_wakes_parked_waiters() {
+        let a = Arc::new(alloc(2, 0, 5_000));
+        let g = a.acquire(1, 2, false, None).unwrap();
+        let a2 = a.clone();
+        let waiter = std::thread::spawn(move || a2.acquire(2, 2, true, None));
+        while a.queue_depth() == 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Quarantine one worker and release the other: the waiter needs 2
+        // but live capacity is 1, so it fails fast...
+        a.quarantine(1, &g[..1]);
+        a.release(1, &g[1..]);
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("pool size 1"), "{err}");
+        // ...and a waiter parked on an exhausted (but satisfiable) pool
+        // is woken and granted by the readmission itself.
+        let held = a.acquire(4, 1, false, None).unwrap();
+        assert_eq!(held, vec![1]);
+        let a3 = a.clone();
+        let waiter = std::thread::spawn(move || a3.acquire(3, 1, true, None));
+        while a.queue_depth() == 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(a.readmit(g[0]));
+        assert_eq!(waiter.join().unwrap().unwrap(), vec![0]);
     }
 
     #[test]

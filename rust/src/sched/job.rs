@@ -251,8 +251,11 @@ impl JobTable {
         self.cv.notify_all();
     }
 
-    /// Fail every non-terminal job (session teardown).
-    pub fn fail_all_nonterminal(&self, message: &str) {
+    /// Fail every non-terminal job (session teardown, or fail-fast when
+    /// the session's worker group is poisoned: queued jobs must not sit
+    /// `Queued` waiting for turns that can never run). Returns how many
+    /// jobs were failed; blocked `WaitJob` callers are woken either way.
+    pub fn fail_all_nonterminal(&self, message: &str) -> usize {
         let mut inner = self.inner.lock().unwrap();
         let mut failed = 0usize;
         let mut freed = 0.0f64;
@@ -266,6 +269,7 @@ impl JobTable {
         inner.inflight = inner.inflight.saturating_sub(failed);
         inner.inflight_cost = (inner.inflight_cost - freed).max(0.0);
         self.cv.notify_all();
+        failed
     }
 
     /// Snapshot a job and, when it is terminal, mark it delivered —
@@ -492,7 +496,7 @@ mod tests {
         assert_eq!(t.inflight_cost(), 50.0);
         t.remove(b);
         assert_eq!(t.inflight_cost(), 30.0);
-        t.fail_all_nonterminal("teardown");
+        assert_eq!(t.fail_all_nonterminal("teardown"), 1);
         assert_eq!(t.inflight_cost(), 0.0);
         assert!(t.get(c).unwrap().state.is_terminal());
     }
@@ -503,7 +507,7 @@ mod tests {
         let a = t.submit("a");
         let b = t.submit("b");
         t.complete(a, vec![], vec![]);
-        t.fail_all_nonterminal("session closed");
+        assert_eq!(t.fail_all_nonterminal("session closed"), 1);
         assert!(matches!(t.get(a).unwrap().state, JobState::Done { .. }));
         match t.get(b).unwrap().state {
             JobState::Failed { message } => assert!(message.contains("closed")),

@@ -16,29 +16,47 @@
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::ali::registry::load_library;
 use crate::ali::Library;
 use crate::config::SchedConfig;
-use crate::metrics::SchedMetrics;
+use crate::metrics::{SchedMetrics, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta,
-    Params, RoutineDescriptor, WorkerCtl, WorkerInfo, WorkerReply, MIN_PROTOCOL_VERSION,
-    PROTOCOL_VERSION,
+    Params, RoutineDescriptor, WorkerAck, WorkerCtl, WorkerHello, WorkerInfo, WorkerReply,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
 };
 use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator};
+use crate::server::MAX_ACCEPT_ERRORS;
 use crate::{debugln, info, warnln, Error, Result};
 
 /// Handles the driver reserves per RunRoutine call for distributed
 /// outputs (unused ids are simply skipped — the space is 2^64).
 const OUTPUT_HANDLE_BLOCK: u64 = 16;
 
-/// One registered worker, driver side.
+/// Budget for best-effort cleanup traffic to workers (session-teardown
+/// FreeMatrix/EndSession, setup rollbacks): a wedged worker must never
+/// block a rollback path indefinitely — it gets quarantined and healed by
+/// the prober instead.
+const CLEANUP_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Stale reply frames a probe will drain while resynchronizing a control
+/// stream (a failed collective can leave at most one unread reply per
+/// in-flight command; 64 is comfortably past any real backlog).
+const MAX_PROBE_DRAIN: usize = 64;
+
+/// One registered worker, driver side. A `WorkerConn` is one registration
+/// *generation*: re-registration swaps a fresh `WorkerConn` (same id,
+/// bumped epoch) into the roster, while sessions keep the `Arc` they were
+/// granted — a stale session keeps talking to its dead generation and
+/// fails cleanly instead of ever touching a recycled worker.
 pub struct WorkerConn {
     pub id: u32,
     pub data_addr: String,
+    /// Registration generation (0 at startup, +1 per re-registration).
+    pub epoch: u64,
     /// Control stream; sessions own disjoint workers so contention is nil,
     /// the mutex just keeps the send/recv pairs atomic.
     pub ctl: Mutex<TcpStream>,
@@ -51,6 +69,57 @@ impl WorkerConn {
         frame::write_frame(&mut *s, &cmd.encode())?;
         let buf = frame::read_frame(&mut *s)?;
         WorkerReply::decode(&buf)
+    }
+
+    /// Run `f` with per-I/O read/write deadlines installed on the control
+    /// stream, restoring blocking mode on success. On failure the socket
+    /// is killed outright: a timeout may have fired mid-frame, leaving
+    /// the stream *byte*-misaligned — a state no frame-granular ping
+    /// drain can ever repair. Shutting it down makes the worker side see
+    /// EOF and re-register with a fresh, aligned stream (which is also
+    /// what unwedges a worker stuck in a dead collective: its control
+    /// reads fail the moment it returns).
+    fn with_deadline<T>(
+        &self,
+        timeout: Duration,
+        f: impl FnOnce(&mut TcpStream) -> Result<T>,
+    ) -> Result<T> {
+        let mut s = self.ctl.lock().unwrap();
+        s.set_read_timeout(Some(timeout))?;
+        s.set_write_timeout(Some(timeout))?;
+        let out = f(&mut s);
+        if out.is_ok() {
+            let _ = s.set_read_timeout(None);
+            let _ = s.set_write_timeout(None);
+        } else {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        out
+    }
+
+    /// [`WorkerConn::call`] with a per-I/O deadline — for best-effort
+    /// cleanup/rollback traffic where a wedged worker must cost the
+    /// caller a bounded wait, not a hang. A timeout may leave the stream
+    /// desynced; that is acceptable exactly because these callers treat
+    /// failure as "quarantine and let the prober resync".
+    pub fn call_timeout(&self, cmd: &WorkerCtl, timeout: Duration) -> Result<WorkerReply> {
+        self.with_deadline(timeout, |s| {
+            frame::write_frame(s, &cmd.encode())?;
+            let buf = frame::read_frame(s)?;
+            WorkerReply::decode(&buf)
+        })
+    }
+
+    /// Health probe: send `Ping` and read replies until the matching
+    /// `Pong` echo arrives, discarding stale frames an earlier failure
+    /// left buffered (a worker answers every command exactly once, so
+    /// draining to the echo provably resynchronizes the stream). Returns
+    /// the worker's registration epoch on success. `timeout` bounds both
+    /// each I/O *and* the whole exchange — a half-alive worker trickling
+    /// frames must not pin the (single, serial) prober for
+    /// `MAX_PROBE_DRAIN` individual timeouts.
+    pub fn probe(&self, timeout: Duration) -> Result<u64> {
+        self.with_deadline(timeout, |s| probe_exchange(s, timeout))
     }
 
     /// Send without reading the reply (collective commands: send to all,
@@ -67,12 +136,41 @@ impl WorkerConn {
     }
 }
 
+/// The ping → drain-until-echo exchange behind [`WorkerConn::probe`],
+/// over an already-locked control stream (the re-registration guard runs
+/// it on a `try_lock` guard directly — dropping that guard to call
+/// `probe` could block behind a session's long-running call). The caller
+/// is responsible for read/write deadlines on the stream.
+fn probe_exchange(s: &mut TcpStream, timeout: Duration) -> Result<u64> {
+    static PROBE_NONCE: AtomicU64 = AtomicU64::new(1);
+    let nonce = PROBE_NONCE.fetch_add(1, Ordering::SeqCst);
+    let deadline = Instant::now() + timeout;
+    frame::write_frame(s, &WorkerCtl::Ping { nonce }.encode())?;
+    for _ in 0..MAX_PROBE_DRAIN {
+        if Instant::now() >= deadline {
+            return Err(Error::Protocol("probe: deadline exhausted".into()));
+        }
+        let buf = frame::read_frame(s)?;
+        match WorkerReply::decode(&buf) {
+            Ok(WorkerReply::Pong { nonce: n, epoch }) if n == nonce => return Ok(epoch),
+            // Stale reply (or stale Pong from an abandoned probe): keep
+            // draining toward our echo.
+            _ => {}
+        }
+    }
+    Err(Error::Protocol("probe: control stream did not resync".into()))
+}
+
 /// Shared driver state: the worker roster, the scheduler, and counters.
 /// Every field is internally synchronized — there is no big driver lock,
 /// so session threads and job threads never serialize on each other
 /// except where the scheduler demands it.
 pub struct DriverCore {
-    pub workers: Vec<Arc<WorkerConn>>,
+    /// Worker roster indexed by worker id. Entries are swapped for fresh
+    /// generations when a worker re-registers; sessions pin the `Arc`
+    /// they were granted, so a swap never hands a stale session the new
+    /// connection (see [`WorkerConn`]).
+    roster: Vec<RwLock<Arc<WorkerConn>>>,
     pub alloc: PoolAllocator,
     pub metrics: Arc<SchedMetrics>,
     sched_cfg: SchedConfig,
@@ -82,11 +180,48 @@ pub struct DriverCore {
     /// out-of-band cancel/progress traffic can never hit the wrong job.
     next_job_token: AtomicU64,
     active_sessions: AtomicU32,
+    /// Cumulative worker re-registrations (epoch bumps) across the pool.
+    reregistrations: AtomicU64,
 }
 
 impl DriverCore {
-    fn worker(&self, id: u32) -> Arc<WorkerConn> {
-        self.workers[id as usize].clone()
+    /// Assemble the shared driver state from the initially registered
+    /// worker roster. The launcher builds this before starting the
+    /// driver so shutdown tooling can reach the live roster too.
+    pub fn new(workers: Vec<Arc<WorkerConn>>, sched_cfg: SchedConfig) -> Arc<DriverCore> {
+        let metrics = Arc::new(SchedMetrics::new());
+        let ids: Vec<u32> = workers.iter().map(|w| w.id).collect();
+        Arc::new(DriverCore {
+            roster: workers.into_iter().map(RwLock::new).collect(),
+            alloc: PoolAllocator::new(ids, AllocPolicy::from(&sched_cfg), metrics.clone()),
+            metrics,
+            sched_cfg,
+            next_session: AtomicU64::new(1),
+            next_handle: AtomicU64::new(1),
+            next_job_token: AtomicU64::new(1),
+            active_sessions: AtomicU32::new(0),
+            reregistrations: AtomicU64::new(0),
+        })
+    }
+
+    /// Current generation of worker `id`.
+    pub fn worker(&self, id: u32) -> Arc<WorkerConn> {
+        self.roster[id as usize].read().unwrap().clone()
+    }
+
+    /// Registered pool size (including quarantined workers).
+    pub fn num_workers(&self) -> usize {
+        self.roster.len()
+    }
+
+    /// Install a freshly re-registered generation of a worker. The old
+    /// generation's `Arc` stays alive wherever a session pinned it; only
+    /// new grants and probes see the replacement.
+    fn swap_worker(&self, conn: Arc<WorkerConn>) {
+        let slot = &self.roster[conn.id as usize];
+        *slot.write().unwrap() = conn;
+        self.reregistrations.fetch_add(1, Ordering::SeqCst);
+        self.metrics.counters.add("worker_reregistrations", 1);
     }
 
     fn alloc_handles(&self, n: u64) -> std::ops::Range<u64> {
@@ -107,8 +242,12 @@ struct SessionShared {
     /// Client protocol version negotiated at handshake; replies (and the
     /// wire shapes routines may emit) are encoded for this version.
     wire_version: u16,
-    /// Worker ids granted to this session (empty until `RequestWorkers`).
-    workers: Mutex<Vec<u32>>,
+    /// Worker connections granted to this session (empty until
+    /// `RequestWorkers`). These pin the registration *generation* the
+    /// grant was made against: if a worker is recycled (re-registers at a
+    /// higher epoch) this session keeps its dead generation and fails
+    /// cleanly — it can never reach through to the recycled worker.
+    workers: Mutex<Vec<Arc<WorkerConn>>>,
     /// Matrix registry: handle -> metadata, session-scoped.
     matrices: Mutex<HashMap<u64, MatrixMeta>>,
     /// Driver-side instances of the session's registered libraries. The
@@ -132,6 +271,11 @@ struct SessionShared {
     /// Set at teardown; job threads that wake up afterwards must not
     /// touch the (already released) workers.
     closed: AtomicBool,
+    /// First socket-level failure that poisoned this session (None while
+    /// healthy, and for ordinary teardown). Read by everything that
+    /// reports "session closed" so clients see the typed
+    /// `Error::SessionPoisoned` cause and know to reconnect.
+    poison_cause: Mutex<Option<String>>,
 }
 
 /// Execution-turnstile state: `next` is the job id allowed to run now;
@@ -143,27 +287,34 @@ struct TurnState {
 }
 
 /// Run the driver: accept client connections on `client_listener`, serve
-/// each on its own thread. Returns when `stop` is set and a final
+/// each on its own thread. `reg_listener` (the same listener workers
+/// registered on at startup) keeps accepting worker *re*-registrations
+/// for the driver's lifetime, and a background prober heals quarantined
+/// workers back into the pool. Returns when `stop` is set and a final
 /// connection unblocks the accept loop.
 pub fn run_driver(
     client_listener: TcpListener,
-    workers: Vec<Arc<WorkerConn>>,
+    reg_listener: TcpListener,
+    core: Arc<DriverCore>,
     stop: Arc<AtomicBool>,
-    sched_cfg: SchedConfig,
 ) -> Result<()> {
-    let metrics = Arc::new(SchedMetrics::new());
-    let ids: Vec<u32> = workers.iter().map(|w| w.id).collect();
-    let core = Arc::new(DriverCore {
-        workers,
-        alloc: PoolAllocator::new(ids, AllocPolicy::from(&sched_cfg), metrics.clone()),
-        metrics,
-        sched_cfg,
-        next_session: AtomicU64::new(1),
-        next_handle: AtomicU64::new(1),
-        next_job_token: AtomicU64::new(1),
-        active_sessions: AtomicU32::new(0),
-    });
     info!("driver", "serving clients at {}", client_listener.local_addr()?);
+    {
+        let core = core.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("alch-reg".into())
+            .spawn(move || serve_reregistrations(reg_listener, core, stop))
+            .map_err(|e| Error::Server(format!("spawn registration thread: {e}")))?;
+    }
+    {
+        let core = core.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("alch-prober".into())
+            .spawn(move || probe_quarantined(core, stop))
+            .map_err(|e| Error::Server(format!("spawn prober thread: {e}")))?;
+    }
     for conn in client_listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -180,12 +331,198 @@ pub fn run_driver(
     Ok(())
 }
 
+/// Accept worker re-registrations for the driver's lifetime: a worker
+/// whose control stream died dials back in claiming its original id, and
+/// the driver swaps a fresh generation (bumped epoch) into the roster.
+/// Allocation state is deliberately untouched — a re-registered worker
+/// that was granted or quarantined stays so until the normal
+/// poison/probe/readmit lifecycle runs its course on the new connection.
+fn serve_reregistrations(listener: TcpListener, core: Arc<DriverCore>, stop: Arc<AtomicBool>) {
+    // Same transient-error discipline as the worker's data accept loop:
+    // log, breathe, retry — break only on a solid run of failures.
+    let mut consecutive_errors = 0u32;
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let conn = match conn {
+            Ok(c) => c,
+            Err(e) => {
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_ACCEPT_ERRORS {
+                    warnln!(
+                        "driver",
+                        "registration accept loop: {consecutive_errors} consecutive \
+                         failures (last: {e}); listener presumed dead"
+                    );
+                    break;
+                }
+                debugln!("driver", "transient registration accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        consecutive_errors = 0;
+        if let Err(e) = admit_reregistration(conn, &core) {
+            debugln!("driver", "worker re-registration rejected: {e}");
+        }
+    }
+}
+
+/// Reply a typed refusal on the registration connection (best-effort —
+/// the claimant may already be gone) and surface the reason for logging.
+/// A replied refusal lets a genuine worker distinguish "driver alive,
+/// slot not reclaimable yet — keep retrying" from "no driver".
+fn refuse_registration(conn: &mut TcpStream, message: String) -> Error {
+    let ack = WorkerAck::Refused { message: message.clone() };
+    let _ = frame::write_frame(conn, &ack.encode());
+    Error::Server(message)
+}
+
+fn admit_reregistration(mut conn: TcpStream, core: &DriverCore) -> Result<()> {
+    conn.set_nodelay(true)?;
+    // Bound the hello read so a connect-and-stall peer cannot wedge the
+    // (serial) registration acceptor.
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let hello = WorkerHello::decode(&frame::read_frame(&mut conn)?)?;
+    conn.set_read_timeout(None)?;
+    let Some(id) = hello.claimed_id else {
+        return Err(refuse_registration(
+            &mut conn,
+            "re-registration requires the worker's original id (pool size is fixed)".into(),
+        ));
+    };
+    if id as usize >= core.num_workers() {
+        return Err(refuse_registration(
+            &mut conn,
+            format!("unknown worker id {id} (pool size {})", core.num_workers()),
+        ));
+    }
+    // Never displace a generation a session is holding: a granted
+    // worker's control stream belongs to its session, so the driver may
+    // neither probe it (an unanswered Ping would leave a stray Pong that
+    // desyncs the session's request/reply pairing) nor swap it. If the
+    // claimant is the real worker and its old stream is truly dead, the
+    // session's next call fails, poisons, and quarantines the slot —
+    // after which the retried claim lands below. For free/quarantined
+    // slots, a *live* current generation (a stale process from a
+    // previous server incarnation dialing a reused port, say) must keep
+    // its slot, so an idle stream gets one brief ping; a genuinely
+    // re-registering worker has closed its old socket, so the ping
+    // fails immediately and the claim is accepted.
+    //
+    // Ordering closes the check/ping race: a concurrent grant pins this
+    // generation first and then *blocks on the ctl mutex we hold* for
+    // its first call, so re-checking `is_granted` under the lock means
+    // an unanswered ping can only belong to a dead or quarantined
+    // generation — never to a stream a healthy session is about to use.
+    let old = core.worker(id);
+    let timeout = Duration::from_millis(core.sched_cfg.probe_timeout_ms);
+    let granted_msg = || format!("worker {id} is granted to a session; retry after quarantine");
+    let refusal: Option<String> = if core.alloc.is_granted(id) {
+        Some(granted_msg())
+    } else {
+        match old.ctl.try_lock() {
+            // In active use by the prober or shutdown tooling.
+            Err(_) => Some(format!("worker {id}'s control stream is busy; retry")),
+            Ok(mut s) => {
+                if core.alloc.is_granted(id) {
+                    Some(granted_msg())
+                } else {
+                    let _ = s.set_read_timeout(Some(timeout));
+                    let _ = s.set_write_timeout(Some(timeout));
+                    if probe_exchange(&mut s, timeout).is_ok() {
+                        let _ = s.set_read_timeout(None);
+                        let _ = s.set_write_timeout(None);
+                        Some(format!(
+                            "worker {id} (epoch {}) is still alive; claim refused",
+                            old.epoch
+                        ))
+                    } else {
+                        // Dead generation: kill the socket so nothing
+                        // (late frames, a wedged worker returning) can
+                        // ever be read from it again, then admit.
+                        let _ = s.shutdown(std::net::Shutdown::Both);
+                        None
+                    }
+                }
+            }
+        }
+    };
+    if let Some(message) = refusal {
+        return Err(refuse_registration(&mut conn, message));
+    }
+    let epoch = old.epoch + 1;
+    frame::write_frame(&mut conn, &WorkerAck::Granted { id, epoch }.encode())?;
+    let fresh = Arc::new(WorkerConn {
+        id,
+        data_addr: hello.data_addr,
+        epoch,
+        ctl: Mutex::new(conn),
+    });
+    info!(
+        "driver",
+        "worker {id} re-registered at epoch {epoch} (data plane at {})",
+        fresh.data_addr
+    );
+    core.swap_worker(fresh);
+    Ok(())
+}
+
+/// Background health prober: every `sched.probe_interval_ms`, walk the
+/// quarantined workers and try ping → drain → `Reset` → readmit. A probe
+/// that fails (worker still wedged, unreachable, or mid-re-registration)
+/// leaves the worker quarantined for the next round — quarantine decay is
+/// the steady state, not a terminal one.
+fn probe_quarantined(core: Arc<DriverCore>, stop: Arc<AtomicBool>) {
+    let interval = Duration::from_millis(core.sched_cfg.probe_interval_ms);
+    let timeout = Duration::from_millis(core.sched_cfg.probe_timeout_ms);
+    loop {
+        std::thread::sleep(interval);
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        for id in core.alloc.quarantined() {
+            let w = core.worker(id);
+            let t = Timer::start();
+            let outcome = w.probe(timeout).and_then(|_| {
+                // Clean probe: wipe every session/panel/mesh the worker
+                // may still hold before it can be granted again.
+                match w.call_timeout(&WorkerCtl::Reset { epoch: w.epoch }, timeout)? {
+                    WorkerReply::Ok => Ok(()),
+                    other => Err(Error::Server(format!("bad Reset reply {other:?}"))),
+                }
+            });
+            match outcome {
+                Ok(()) => {
+                    if core.alloc.readmit(id) {
+                        core.metrics.phases.add("probe", t.elapsed());
+                        info!(
+                            "driver",
+                            "worker {id} (epoch {}) probed clean; readmitted to pool",
+                            w.epoch
+                        );
+                    }
+                }
+                Err(e) => {
+                    core.metrics.counters.add("probes_failed", 1);
+                    debugln!("driver", "probe of quarantined worker {id} failed: {e}");
+                }
+            }
+        }
+    }
+}
+
 /// Serve one client control connection for its whole lifetime.
 fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
     let mut session: Option<Arc<SessionShared>> = None;
-    // Replies are encoded for the negotiated version (pre-handshake
-    // traffic only ever carries version-stable shapes).
-    let mut wire_version = PROTOCOL_VERSION;
+    // Replies are encoded for the negotiated version. Until the
+    // handshake lands, encode at the *oldest* supported version: the
+    // client's version is unknown, and pre-handshake replies (Err,
+    // HandshakeAck, Status for version-agnostic monitoring tools) must
+    // decode everywhere — v7's extended Status tag would be rejected by
+    // a ≤ v6 client polling ServerStatus before Handshake.
+    let mut wire_version = MIN_PROTOCOL_VERSION;
     let result = loop {
         let buf = match frame::read_frame(&mut conn) {
             Ok(b) => b,
@@ -235,27 +572,66 @@ fn cleanup_session(s: &Arc<SessionShared>, core: &Arc<DriverCore>) {
     let _running = s.routine_lock.lock().unwrap();
     s.jobs.fail_all_nonterminal("session closed");
 
-    let worker_ids: Vec<u32> = s.workers.lock().unwrap().clone();
+    let conns: Vec<Arc<WorkerConn>> = s.workers.lock().unwrap().clone();
     let matrix_handles: Vec<u64> = s.matrices.lock().unwrap().keys().copied().collect();
-    for &id in &worker_ids {
-        let w = core.worker(id);
+    // Best-effort cleanup under a bounded deadline. A transport-level
+    // failure (timeout included) may leave that worker's control stream
+    // desynced — stop talking to it immediately and quarantine it
+    // instead of releasing, so the desynced stream never reaches the
+    // next tenant; the prober resyncs (drains the late replies) and
+    // readmits it. Decoded Err replies keep the stream synced and are
+    // fine to ignore (FreeMatrix/EndSession are idempotent).
+    let mut healthy: Vec<u32> = Vec::with_capacity(conns.len());
+    let mut suspect: Vec<u32> = Vec::new();
+    for w in &conns {
+        let mut ok = true;
         for handle in &matrix_handles {
-            let _ = w.call(&WorkerCtl::FreeMatrix { handle: *handle });
+            let free = WorkerCtl::FreeMatrix { handle: *handle };
+            if w.call_timeout(&free, CLEANUP_TIMEOUT).is_err() {
+                ok = false;
+                break;
+            }
         }
-        let _ = w.call(&WorkerCtl::EndSession { session_id: s.id });
+        let end = WorkerCtl::EndSession { session_id: s.id };
+        if ok && w.call_timeout(&end, CLEANUP_TIMEOUT).is_err() {
+            ok = false;
+        }
+        if ok {
+            healthy.push(w.id);
+        } else {
+            suspect.push(w.id);
+        }
     }
-    core.alloc.release(s.id, &worker_ids);
+    if !suspect.is_empty() {
+        warnln!(
+            "driver",
+            "session {}: quarantining workers {suspect:?} after failed cleanup",
+            s.id
+        );
+        core.alloc.quarantine(s.id, &suspect);
+    }
+    core.alloc.release(s.id, &healthy);
     core.active_sessions.fetch_sub(1, Ordering::SeqCst);
     info!("driver", "session {} ({}) closed", s.id, s.app_name);
 }
 
 /// Resolve the session's worker connections (error if none granted yet).
-fn session_conns(s: &SessionShared, core: &DriverCore) -> Result<Vec<Arc<WorkerConn>>> {
-    let ids = s.workers.lock().unwrap();
-    if ids.is_empty() {
+/// These are the grant-time generations — see [`SessionShared::workers`].
+fn session_conns(s: &SessionShared) -> Result<Vec<Arc<WorkerConn>>> {
+    let conns = s.workers.lock().unwrap();
+    if conns.is_empty() {
         return Err(Error::Server("no workers allocated; RequestWorkers first".into()));
     }
-    Ok(ids.iter().map(|&id| core.worker(id)).collect())
+    Ok(conns.clone())
+}
+
+/// The error a closed session reports: the typed poison cause when the
+/// worker group was quarantined, the plain teardown message otherwise.
+fn closed_session_error(s: &SessionShared) -> Error {
+    match s.poison_cause.lock().unwrap().clone() {
+        Some(cause) => Error::SessionPoisoned(cause),
+        None => Error::Server("session closed".into()),
+    }
 }
 
 /// Validate a submission against the library's routine specs, driver
@@ -306,16 +682,11 @@ fn data_call(addr: &str, msg: &DataMsg) -> Result<DataMsg> {
 /// from the session's rank-0 worker. Best-effort: any failure (no
 /// workers, routine already finished, timeout) reads as "no live
 /// progress" and the caller keeps the table's last snapshot.
-fn query_worker_progress(
-    core: &DriverCore,
-    s: &SessionShared,
-    token: u64,
-) -> Option<(String, f64)> {
+fn query_worker_progress(s: &SessionShared, token: u64) -> Option<(String, f64)> {
     if token == 0 {
         return None;
     }
-    let rank0 = *s.workers.lock().unwrap().first()?;
-    let addr = core.worker(rank0).data_addr.clone();
+    let addr = s.workers.lock().unwrap().first()?.data_addr.clone();
     match data_call(&addr, &DataMsg::QueryProgress { token }) {
         Ok(DataMsg::Progress { phase, frac }) if !phase.is_empty() => Some((phase, frac)),
         _ => None,
@@ -351,7 +722,7 @@ fn execute_routine(
 ) -> Result<(Params, Vec<MatrixMeta>)> {
     let _serial = s.routine_lock.lock().unwrap();
     if s.closed.load(Ordering::SeqCst) {
-        return Err(Error::Server("session closed".into()));
+        return Err(closed_session_error(s));
     }
     execute_routine_locked(core, s, library, routine, params, output_handles, 0)
 }
@@ -369,13 +740,14 @@ fn execute_routine_locked(
     output_handles: &[u64],
     job_token: u64,
 ) -> Result<(Params, Vec<MatrixMeta>)> {
-    let conns = session_conns(s, core)?;
+    let conns = session_conns(s)?;
     // RunRoutine is an SPMD collective: once some members have entered
     // it, a member that never will (socket failure) leaves the rest
     // blocked in the mesh forever — reading from them would wedge this
     // thread (which holds the routine lock) and deadlock cleanup. Any
     // socket-level failure therefore poisons the session: the worker
-    // group is quarantined and never contacted again.
+    // group is quarantined (until the prober heals it) and this session
+    // never contacts it again.
     for w in &conns {
         let r = w.send(&WorkerCtl::RunRoutine {
             session_id: s.id,
@@ -386,9 +758,9 @@ fn execute_routine_locked(
             job_token,
         });
         if let Err(e) = r {
-            let why = format!("send to worker {}: {e}", w.id);
+            let why = format!("routine {routine}: send to worker {}: {e}", w.id);
             poison_session(core, s, &why);
-            return Err(Error::Server(format!("routine {routine} failed: {why}")));
+            return Err(Error::SessionPoisoned(why));
         }
     }
     // rank 0 carries the result; all must succeed. Decoded Err replies
@@ -412,9 +784,9 @@ fn execute_routine_locked(
                 first_err.get_or_insert(format!("unexpected reply {other:?}"));
             }
             Err(e) => {
-                let why = format!("recv from worker {}: {e}", w.id);
+                let why = format!("routine {routine}: recv from worker {}: {e}", w.id);
                 poison_session(core, s, &why);
-                return Err(Error::Server(format!("routine {routine} failed: {why}")));
+                return Err(Error::SessionPoisoned(why));
             }
         }
     }
@@ -439,6 +811,23 @@ fn execute_routine_locked(
         matrices.insert(m.handle, m.clone());
     }
     Ok((outputs, new_matrices))
+}
+
+/// Best-effort `EndSession` rollback under the cleanup deadline (setup
+/// failures, partial-grant unwinding). Returns the ids whose rollback
+/// hit a transport failure: their control streams may be desynced, so
+/// the caller must quarantine them (prober resyncs + readmits) instead
+/// of releasing them to the next tenant. Decoded Err replies keep the
+/// stream synced and are ignored (EndSession is idempotent).
+fn rollback_sessions(conns: &[Arc<WorkerConn>], session_id: u64) -> Vec<u32> {
+    let mut failed = Vec::new();
+    for w in conns {
+        let end = WorkerCtl::EndSession { session_id };
+        if w.call_timeout(&end, CLEANUP_TIMEOUT).is_err() {
+            failed.push(w.id);
+        }
+    }
+    failed
 }
 
 /// How session setup failed, and therefore what the caller may do with
@@ -471,15 +860,30 @@ fn drain_jobs(s: &SessionShared) {
 
 /// Quarantine a session whose worker group hit a socket-level failure
 /// mid-collective: members may be wedged waiting for a peer that will
-/// never arrive, so they must not be contacted again (a blocking call
-/// would hang the caller) nor returned to the pool. The session is
-/// closed for further routines; teardown then skips worker calls
-/// because the id list is empty. Caller holds the routine lock.
+/// never arrive, so this session must not contact them again (a blocking
+/// call would hang the caller) nor return them to the pool — the health
+/// prober readmits each one once it probes clean. The session is closed
+/// for further routines and fails fast: every queued job flips to
+/// `Failed` immediately with the typed poison cause, so a client blocked
+/// in `WaitJob` learns to reconnect instead of draining its backlog one
+/// timeout at a time. Caller holds the routine lock.
 fn poison_session(core: &DriverCore, s: &SessionShared, why: &str) {
     warnln!("driver", "session {}: quarantining worker group: {why}", s.id);
     s.closed.store(true, Ordering::SeqCst);
-    let ids: Vec<u32> = std::mem::take(&mut *s.workers.lock().unwrap());
+    {
+        let mut cause = s.poison_cause.lock().unwrap();
+        if cause.is_none() {
+            *cause = Some(why.to_string());
+        }
+    }
+    let conns: Vec<Arc<WorkerConn>> = std::mem::take(&mut *s.workers.lock().unwrap());
+    let ids: Vec<u32> = conns.iter().map(|w| w.id).collect();
     core.alloc.quarantine(s.id, &ids);
+    let cause = Error::SessionPoisoned(why.to_string()).to_string();
+    let failed = s.jobs.fail_all_nonterminal(&cause);
+    if failed > 0 {
+        debugln!("driver", "session {}: failed {failed} queued/running jobs", s.id);
+    }
     // Wake queued job threads so they observe `closed` and drain.
     s.turn_cv.notify_all();
 }
@@ -487,14 +891,13 @@ fn poison_session(core: &DriverCore, s: &SessionShared, why: &str) {
 /// Two-phase communicator formation (see worker.rs) for a fresh worker
 /// grant. On failure, [`SetupFailure`] tells the caller whether the
 /// grant can be released (phase 1) or must be quarantined (phase 2).
+/// Rollback calls run under [`CLEANUP_TIMEOUT`] — best-effort cleanup
+/// traffic may not block session setup on a wedged worker.
 fn setup_session_workers(
-    core: &DriverCore,
     session_id: u64,
-    ids: &[u32],
+    conns: &[Arc<WorkerConn>],
     wire_version: u16,
 ) -> std::result::Result<Vec<WorkerInfo>, SetupFailure> {
-    let conns: Vec<Arc<WorkerConn>> = ids.iter().map(|&id| core.worker(id)).collect();
-
     // Phase 1: each worker binds a communicator listener. Workers
     // already prepared are idle in their control loops, so the
     // EndSession rollbacks below cannot block.
@@ -504,23 +907,24 @@ fn setup_session_workers(
             Ok(WorkerReply::SessionReady { comm_addr }) => comm_addrs.push(comm_addr),
             Ok(other) => {
                 // The worker responded (stream still synced) but
-                // refused — clean rollback, whole grant reusable.
-                for wp in &conns[..i] {
-                    let _ = wp.call(&WorkerCtl::EndSession { session_id });
+                // refused — roll back the prepared prefix; the grant is
+                // reusable except for rollbacks that themselves failed.
+                let bad = rollback_sessions(&conns[..i], session_id);
+                let e = Error::Server(format!("bad PrepareSession reply {other:?}"));
+                if bad.is_empty() {
+                    return Err(SetupFailure::Clean(e));
                 }
-                return Err(SetupFailure::Clean(Error::Server(format!(
-                    "bad PrepareSession reply {other:?}"
-                ))));
+                return Err(SetupFailure::Quarantined(e, bad));
             }
             Err(e) => {
                 // Transport-level: this worker is dead or desynced and
-                // must never return to the pool; the rest are healthy.
-                for wp in &conns[..i] {
-                    let _ = wp.call(&WorkerCtl::EndSession { session_id });
-                }
+                // must not return to the pool until probed clean; the
+                // rest are healthy unless their rollback also failed.
+                let mut bad = rollback_sessions(&conns[..i], session_id);
+                bad.push(w.id);
                 return Err(SetupFailure::Quarantined(
                     Error::Server(format!("PrepareSession on worker {}: {e}", w.id)),
-                    vec![w.id],
+                    bad,
                 ));
             }
         }
@@ -547,11 +951,10 @@ fn setup_session_workers(
             // control command, so a blocking EndSession would hang this
             // thread: quarantine them and the failed worker. Later
             // ranks never received NewSession and are idle after
-            // PrepareSession — roll them back so they can re-pool.
-            for cp in &conns[rank + 1..] {
-                let _ = cp.call(&WorkerCtl::EndSession { session_id });
-            }
-            let wedged: Vec<u32> = conns[..=rank].iter().map(|c| c.id).collect();
+            // PrepareSession — roll them back so they can re-pool
+            // (failed rollbacks join the quarantine list).
+            let mut wedged: Vec<u32> = conns[..=rank].iter().map(|c| c.id).collect();
+            wedged.extend(rollback_sessions(&conns[rank + 1..], session_id));
             return Err(SetupFailure::Quarantined(
                 Error::Server(format!("send NewSession to worker {}: {e}", w.id)),
                 wedged,
@@ -559,7 +962,7 @@ fn setup_session_workers(
         }
     }
     let mut reply_err: Option<String> = None;
-    for w in &conns {
+    for w in conns {
         match w.recv_reply() {
             Ok(WorkerReply::Ok) => {}
             Ok(WorkerReply::Err { message }) => {
@@ -573,18 +976,21 @@ fn setup_session_workers(
                 // state is unknown; do not touch these workers again.
                 return Err(SetupFailure::Quarantined(
                     Error::Server(format!("recv from worker {}: {e}", w.id)),
-                    ids.to_vec(),
+                    conns.iter().map(|c| c.id).collect(),
                 ));
             }
         }
     }
     if let Some(m) = reply_err {
         // Every member replied, so all are back in their control loops
-        // (mesh formation returned everywhere) — safe to roll back.
-        for w in &conns {
-            let _ = w.call(&WorkerCtl::EndSession { session_id });
+        // (mesh formation returned everywhere) — safe to roll back;
+        // rollbacks that fail at the transport level still quarantine.
+        let bad = rollback_sessions(conns, session_id);
+        let e = Error::Server(m);
+        if bad.is_empty() {
+            return Err(SetupFailure::Clean(e));
         }
-        return Err(SetupFailure::Clean(Error::Server(m)));
+        return Err(SetupFailure::Quarantined(e, bad));
     }
 
     Ok(conns
@@ -636,6 +1042,7 @@ fn handle_client_msg(
                 }),
                 turn_cv: Condvar::new(),
                 closed: AtomicBool::new(false),
+                poison_cause: Mutex::new(None),
             }));
             Ok(DriverMsg::HandshakeAck { session_id: id, version: negotiated })
         }
@@ -643,8 +1050,9 @@ fn handle_client_msg(
             let s = need_session(session)?;
             if s.closed.load(Ordering::SeqCst) {
                 // A poisoned session must not acquire workers it can
-                // never use (routines are refused once closed).
-                return Err(Error::Server("session closed; reconnect to retry".into()));
+                // never use (routines are refused once closed); surface
+                // the typed cause so the client reconnects.
+                return Err(closed_session_error(s));
             }
             if !s.workers.lock().unwrap().is_empty() {
                 return Err(Error::Server(
@@ -663,7 +1071,12 @@ fn handle_client_msg(
                 Some(Duration::from_millis(timeout_ms.min(cap_ms)))
             };
             let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
-            let workers = match setup_session_workers(core, s.id, &ids, s.wire_version) {
+            // Pin the grant-time generation of each worker: the session
+            // keeps exactly these connections, so a later re-registration
+            // (which swaps the roster) can never leak a recycled worker
+            // into this session.
+            let conns: Vec<Arc<WorkerConn>> = ids.iter().map(|&id| core.worker(id)).collect();
+            let workers = match setup_session_workers(s.id, &conns, s.wire_version) {
                 Ok(infos) => infos,
                 Err(SetupFailure::Clean(e)) => {
                     // Satellite fix: a partially-formed session must hand
@@ -674,9 +1087,9 @@ fn handle_client_msg(
                 }
                 Err(SetupFailure::Quarantined(e, bad)) => {
                     // Keep unreachable/wedged workers out of the pool
-                    // rather than hand them to the next tenant; release
-                    // the healthy remainder and drop the session's quota
-                    // charge so it can retry.
+                    // until the prober heals them; release the healthy
+                    // remainder and drop the session's quota charge so
+                    // it can retry.
                     warnln!(
                         "driver",
                         "quarantining workers {bad:?} after failed session setup: {e}"
@@ -689,7 +1102,7 @@ fn handle_client_msg(
                 }
             };
             info!("driver", "session {} granted workers {ids:?}", s.id);
-            *s.workers.lock().unwrap() = ids;
+            *s.workers.lock().unwrap() = conns;
             Ok(DriverMsg::WorkersGranted { workers })
         }
         ClientMsg::RegisterLibrary { name, path } => {
@@ -698,7 +1111,7 @@ fn handle_client_msg(
             // time per session: serialize against in-flight jobs so
             // replies cannot cross.
             let _serial = s.routine_lock.lock().unwrap();
-            let conns = session_conns(s, core)?;
+            let conns = session_conns(s)?;
             let cmd = WorkerCtl::RegisterLibrary { name: name.clone(), path: path.clone() };
             broadcast(&conns, &cmd)?;
             // Load the same library driver-side: its routine specs power
@@ -730,13 +1143,13 @@ fn handle_client_msg(
                 ));
             }
             let _serial = s.routine_lock.lock().unwrap();
-            let conns = session_conns(s, core)?;
+            let conns = session_conns(s)?;
             let handle = core.alloc_handles(1).start;
             let meta = MatrixMeta {
                 handle,
                 rows,
                 cols,
-                layout: LayoutDesc { kind, owners: s.workers.lock().unwrap().clone() },
+                layout: LayoutDesc { kind, owners: conns.iter().map(|w| w.id).collect() },
             };
             let alloc = WorkerCtl::AllocMatrix { session_id: s.id, meta: meta.clone() };
             if let Err(e) = broadcast(&conns, &alloc) {
@@ -754,6 +1167,9 @@ fn handle_client_msg(
             // Legacy synchronous path — kept for wire compatibility; the
             // v4 client pipelines through SubmitRoutine/WaitJob instead.
             let s = need_session(session)?;
+            if s.closed.load(Ordering::SeqCst) {
+                return Err(closed_session_error(s));
+            }
             validate_handles(s, &params)?;
             validate_against_spec(s, &library, &routine, &params)?;
             let output_handles: Vec<u64> = core.alloc_handles(OUTPUT_HANDLE_BLOCK).collect();
@@ -763,6 +1179,12 @@ fn handle_client_msg(
         }
         ClientMsg::SubmitRoutine { library, routine, params } => {
             let s = need_session(session)?;
+            // Fail fast on poisoned/closed sessions: accepting a job that
+            // can only ever fail would burn a backlog slot and a wait
+            // round trip just to report the same cause.
+            if s.closed.load(Ordering::SeqCst) {
+                return Err(closed_session_error(s));
+            }
             // Fail fast on bad handles and missing workers so the client
             // gets the error at submit time, not buried in a job.
             validate_handles(s, &params)?;
@@ -772,7 +1194,7 @@ fn handle_client_msg(
             // ever involved. Returns the spec's admission cost (None for
             // libraries without driver-side specs).
             let cost = validate_against_spec(s, &library, &routine, &params)?;
-            session_conns(s, core)?;
+            session_conns(s)?;
             // Each undelivered job (inflight, or finished but unread)
             // holds a driver thread and/or a retained result; cap the
             // backlog so one tenant cannot exhaust the server
@@ -844,7 +1266,7 @@ fn handle_client_msg(
             // job token so a stale read can never describe a later job.
             let state = match snap.state {
                 JobState::Running { phase, progress } => {
-                    match query_worker_progress(core, s, snap.token) {
+                    match query_worker_progress(s, snap.token) {
                         Some((live_phase, live_frac)) => {
                             s.jobs.update_progress(job_id, &live_phase, live_frac);
                             JobState::Running { phase: live_phase, progress: live_frac }
@@ -873,13 +1295,12 @@ fn handle_client_msg(
                     // worker's token over the data plane; the routine
                     // aborts collectively at its next cancel checkpoint
                     // and the job fails through the normal error path.
-                    let ids: Vec<u32> = s.workers.lock().unwrap().clone();
-                    for id in ids {
-                        let addr = core.worker(id).data_addr.clone();
+                    let conns: Vec<Arc<WorkerConn>> = s.workers.lock().unwrap().clone();
+                    for w in conns {
                         if let Err(e) =
-                            data_call(&addr, &DataMsg::CancelRoutine { token })
+                            data_call(&w.data_addr, &DataMsg::CancelRoutine { token })
                         {
-                            debugln!("driver", "cancel relay to worker {id}: {e}");
+                            debugln!("driver", "cancel relay to worker {}: {e}", w.id);
                         }
                     }
                     core.metrics.counters.add("jobs_cancel_requested", 1);
@@ -938,7 +1359,7 @@ fn handle_client_msg(
             if s.matrices.lock().unwrap().remove(&handle).is_none() {
                 return Err(Error::Server(format!("unknown handle {handle}")));
             }
-            let conns = session_conns(s, core)?;
+            let conns = session_conns(s)?;
             broadcast(&conns, &WorkerCtl::FreeMatrix { handle })?;
             Ok(DriverMsg::Released { handle })
         }
@@ -949,6 +1370,9 @@ fn handle_client_msg(
             sessions: core.active_sessions.load(Ordering::SeqCst),
             queued_sessions: core.alloc.queue_depth(),
             jobs_inflight: core.metrics.jobs_inflight.get().max(0) as u32,
+            lost_workers: core.alloc.lost_count(),
+            recovered_workers: core.metrics.counters.get("readmitted_workers") as u32,
+            worker_epochs: core.reregistrations.load(Ordering::SeqCst) as u32,
         }),
     }
 }
@@ -1020,8 +1444,10 @@ fn run_job_body(
         // Session closed (teardown or poisoned worker group) or the job
         // was cancelled while queued: do not touch the workers, but make
         // sure the job reaches a terminal state so a client blocked in
-        // WaitJob is released (no-op when the state is terminal already).
-        s.jobs.fail(job_id, "session closed");
+        // WaitJob is released (no-op when the state is terminal already —
+        // poisoned sessions fail their whole backlog with the typed
+        // cause at poison time).
+        s.jobs.fail(job_id, closed_session_error(s).to_string());
         core.metrics.jobs_inflight.dec();
         return;
     }

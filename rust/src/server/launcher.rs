@@ -7,10 +7,11 @@
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::config::Config;
-use crate::protocol::frame;
-use crate::server::driver::{run_driver, WorkerConn};
+use crate::protocol::{frame, WorkerAck, WorkerCtl, WorkerHello};
+use crate::server::driver::{run_driver, DriverCore, WorkerConn};
 use crate::server::worker::run_worker;
 use crate::{info, Error, Result};
 
@@ -18,25 +19,42 @@ use crate::{info, Error, Result};
 pub struct ServerHandle {
     /// Address the ACI connects to (`AlchemistContext::connect`).
     pub driver_addr: String,
+    /// Worker (re-)registration address — workers dial back here when
+    /// their control stream dies.
+    reg_addr: String,
     stop: Arc<AtomicBool>,
-    workers: Vec<Arc<WorkerConn>>,
+    core: Arc<DriverCore>,
 }
 
 impl ServerHandle {
-    /// Best-effort shutdown: tell every worker to exit and unblock the
-    /// driver accept loop. Threads are detached; all sockets close with
-    /// them.
+    /// Best-effort shutdown: tell every worker (its *current*
+    /// registration generation) to exit under a bounded deadline, then
+    /// unblock the driver's accept loops. Threads are detached; all
+    /// sockets close with them.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        for w in &self.workers {
-            let _ = w.call(&crate::protocol::WorkerCtl::Shutdown);
+        let deadline = Duration::from_secs(2);
+        for id in 0..self.core.num_workers() as u32 {
+            let w = self.core.worker(id);
+            let _ = w.call_timeout(&WorkerCtl::Shutdown, deadline);
         }
-        // Unblock the accept loop.
+        // Unblock the client and registration accept loops.
         let _ = TcpStream::connect(&self.driver_addr);
+        let _ = TcpStream::connect(&self.reg_addr);
     }
 
     pub fn num_workers(&self) -> usize {
-        self.workers.len()
+        self.core.num_workers()
+    }
+
+    /// Fault injection for tests/benches: sever worker `id`'s current
+    /// control stream (both directions), simulating a socket-level
+    /// failure. The worker side survives and re-registers; the driver
+    /// side poisons whatever session holds the worker on next use.
+    pub fn inject_worker_ctl_failure(&self, id: u32) -> bool {
+        let w = self.core.worker(id);
+        let s = w.ctl.lock().unwrap();
+        s.shutdown(std::net::Shutdown::Both).is_ok()
     }
 }
 
@@ -64,35 +82,40 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
             .map_err(|e| Error::Server(format!("spawn worker: {e}")))?;
     }
 
-    // Register all workers: read their data addresses, assign ids.
+    // Initial registration: read each worker's hello, assign ids in
+    // arrival order at epoch 0. (Re-registrations are served later by the
+    // driver on this same listener.)
     let mut workers = Vec::with_capacity(n as usize);
     for id in 0..n {
         let (mut conn, _) = worker_listener.accept()?;
         conn.set_nodelay(true)?;
-        let data_addr_bytes = frame::read_frame(&mut conn)?;
-        let data_addr = String::from_utf8(data_addr_bytes)
-            .map_err(|e| Error::Protocol(format!("bad worker hello: {e}")))?;
-        frame::write_frame(&mut conn, &id.to_le_bytes())?;
-        workers.push(Arc::new(WorkerConn { id, data_addr, ctl: Mutex::new(conn) }));
+        let hello = WorkerHello::decode(&frame::read_frame(&mut conn)?)?;
+        frame::write_frame(&mut conn, &WorkerAck::Granted { id, epoch: 0 }.encode())?;
+        workers.push(Arc::new(WorkerConn {
+            id,
+            data_addr: hello.data_addr,
+            epoch: 0,
+            ctl: Mutex::new(conn),
+        }));
     }
     info!("launcher", "{n} workers registered; driver at {driver_addr}");
 
     let stop = Arc::new(AtomicBool::new(false));
+    let core = DriverCore::new(workers, cfg.sched.clone());
     {
-        let workers = workers.clone();
+        let core = core.clone();
         let stop = stop.clone();
-        let sched = cfg.sched.clone();
         std::thread::Builder::new()
             .name("alch-driver".into())
             .spawn(move || {
-                if let Err(e) = run_driver(client_listener, workers, stop, sched) {
+                if let Err(e) = run_driver(client_listener, worker_listener, core, stop) {
                     crate::errorln!("launcher", "driver exited with error: {e}");
                 }
             })
             .map_err(|e| Error::Server(format!("spawn driver: {e}")))?;
     }
 
-    Ok(ServerHandle { driver_addr, stop, workers })
+    Ok(ServerHandle { driver_addr, reg_addr: worker_reg_addr, stop, core })
 }
 
 #[cfg(test)]

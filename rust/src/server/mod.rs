@@ -16,3 +16,9 @@ pub mod launcher;
 pub mod worker;
 
 pub use launcher::{start_server, ServerHandle};
+
+/// Shared accept-loop error discipline for the server's long-lived
+/// listeners (worker data plane, driver registration plane): transient
+/// `accept` failures are logged and retried with a short sleep; only
+/// this many *consecutive* failures conclude the listener is dead.
+pub(crate) const MAX_ACCEPT_ERRORS: u32 = 64;

@@ -11,6 +11,7 @@
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::ali::registry::LibraryRegistry;
 use crate::ali::task::{ProgressSink, StatusBoard};
@@ -20,10 +21,22 @@ use crate::config::{ComputeConfig, ServerConfig};
 use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend, NativeBackend};
 use crate::elemental::{LocalPanel, MatrixStore};
 use crate::protocol::{
-    frame, DataMsg, MatrixMeta, Reader, WireRow, WorkerCtl, WorkerReply, Writer,
+    frame, DataMsg, MatrixMeta, Reader, WireRow, WorkerAck, WorkerCtl, WorkerHello,
+    WorkerReply, Writer,
 };
 use crate::runtime::PjrtBackend;
-use crate::{debugln, errorln, info, Error, Result};
+use crate::server::MAX_ACCEPT_ERRORS;
+use crate::{debugln, errorln, info, warnln, Error, Result};
+
+/// Re-registration backoff: first retry delay, doubling per failure.
+const REG_BACKOFF_START: Duration = Duration::from_millis(50);
+/// Re-registration backoff cap. Retrying never stops — a worker that
+/// gave up would stay counted in the pool and probed forever by a
+/// driver that later recovers, which is exactly the permanent pool
+/// shrinkage this subsystem removes. At the cap the retry costs one
+/// failed connect per 2 s; the driver's `Shutdown` (or process exit)
+/// is what ends a worker.
+const REG_BACKOFF_CAP: Duration = Duration::from_secs(2);
 
 /// Session state on a worker.
 struct WorkerSession {
@@ -35,8 +48,77 @@ struct WorkerSession {
     wire_version: u16,
 }
 
+/// Outcome of one registration attempt.
+enum RegOutcome {
+    /// Registered: the control stream plus our (id, epoch).
+    Granted(TcpStream, u32, u64),
+    /// The driver is up but refused the claim (our slot is still granted
+    /// to a session, or our old generation still answers pings). Retry
+    /// with backoff; this is *not* a dead-driver signal.
+    Refused(String),
+}
+
+/// One registration round trip: dial the driver's registration listener,
+/// present our data address (and original id when re-registering), get
+/// back our id + epoch (or a typed refusal).
+fn register_with_driver(
+    addr: &str,
+    claimed_id: Option<u32>,
+    data_addr: &str,
+) -> Result<RegOutcome> {
+    let mut ctl = TcpStream::connect(addr)?;
+    ctl.set_nodelay(true)?;
+    let hello = WorkerHello { claimed_id, data_addr: data_addr.to_string() };
+    frame::write_frame(&mut ctl, &hello.encode())?;
+    // Bound the ack read: a driver that accepts but never acks (e.g. it
+    // is tearing down) must fail this attempt, not wedge the worker.
+    ctl.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let ack = WorkerAck::decode(&frame::read_frame(&mut ctl)?)?;
+    ctl.set_read_timeout(None)?;
+    Ok(match ack {
+        WorkerAck::Granted { id, epoch } => RegOutcome::Granted(ctl, id, epoch),
+        WorkerAck::Refused { message } => RegOutcome::Refused(message),
+    })
+}
+
+/// Drop any device-resident buffers cached under `handle`. The device
+/// base folds in the session rank, so all 256 rank slots are swept —
+/// this encoding must stay in sync with the base computation in
+/// `ali/routines/svd.rs`.
+fn invalidate_device_cache(rt: &'static crate::runtime::PjrtRuntime, handle: u64) {
+    for rank in 0..256u64 {
+        rt.invalidate_base(handle * 256 + rank);
+    }
+}
+
+/// Drop every piece of cross-registration state: sessions (closing their
+/// meshes), half-open session listeners, stored panels, and any
+/// device-resident buffers cached under them.
+fn reset_worker_state(
+    sessions: &mut HashMap<u64, WorkerSession>,
+    pending: &mut HashMap<u64, TcpListener>,
+    store: &Mutex<MatrixStore>,
+    runtime: Option<&'static crate::runtime::PjrtRuntime>,
+) {
+    sessions.clear();
+    pending.clear();
+    let mut guard = store.lock().unwrap();
+    if let Some(rt) = runtime {
+        for handle in guard.handles() {
+            invalidate_device_cache(rt, handle);
+        }
+    }
+    guard.clear();
+}
+
 /// Run one worker: register with the driver at `driver_worker_addr`, then
 /// serve until `Shutdown`. Blocks; callers run it on its own thread.
+///
+/// Resilience: a dead control stream is not fatal. The worker drops all
+/// session state (its sessions are stale the moment the driver loses the
+/// stream) and re-registers under its original id with capped
+/// exponential backoff, advertising its (possibly new) data address. The
+/// driver readmits it to the pool once its health prober agrees.
 pub fn run_worker(
     driver_worker_addr: &str,
     cfg: ServerConfig,
@@ -48,89 +130,205 @@ pub fn run_worker(
     let data_listener = TcpListener::bind("127.0.0.1:0")?;
     let data_addr = data_listener.local_addr()?.to_string();
 
-    // Register with the driver: send our data address, receive our id.
-    let mut ctl = TcpStream::connect(driver_worker_addr)?;
-    ctl.set_nodelay(true)?;
-    frame::write_frame(&mut ctl, data_addr.as_bytes())?;
-    let id_frame = frame::read_frame(&mut ctl)?;
-    let id = u32::from_le_bytes(
-        id_frame.as_slice().try_into().map_err(|_| Error::Protocol("bad id frame".into()))?,
-    );
-    info!("worker", "worker {id} up (data plane at {data_addr})");
-
     let store: Arc<Mutex<MatrixStore>> = Arc::new(Mutex::new(MatrixStore::new()));
     // Cancel/progress rendezvous between the control loop (which is busy
     // inside RunRoutine) and the always-responsive data-plane threads.
     let board: Arc<StatusBoard> = Arc::new(StatusBoard::new());
 
-    // Data-plane accept loop on its own thread.
+    // Data-plane accept loop on its own thread. It outlives control
+    // re-registrations (the listener, and therefore our advertised data
+    // address, is stable for the worker's lifetime).
     {
         let store = store.clone();
         let board = board.clone();
         let batch_rows = cfg.batch_rows as usize;
         let nodelay = cfg.nodelay;
         std::thread::Builder::new()
-            .name(format!("w{id}-data"))
-            .spawn(move || {
-                for conn in data_listener.incoming() {
-                    let Ok(conn) = conn else { break };
-                    if nodelay {
-                        let _ = conn.set_nodelay(true);
-                    }
-                    let store = store.clone();
-                    let board = board.clone();
-                    std::thread::spawn(move || {
-                        if let Err(e) = serve_data_conn(conn, store, board, batch_rows) {
-                            // client hangups are normal; real errors logged
-                            debugln!("worker", "data conn ended: {e}");
-                        }
-                    });
-                }
-            })
+            .name("wkr-data".to_string())
+            .spawn(move || serve_data_plane(data_listener, store, board, batch_rows, nodelay))
             .map_err(|e| Error::Server(format!("spawn data thread: {e}")))?;
     }
 
     // Backend: PJRT Pallas tiles unless configured (or forced) native.
     let (backend, runtime) = build_backend(&cfg);
-    info!("worker", "worker {id} gemm backend: {}", backend.name());
 
     let mut registry = LibraryRegistry::new();
     let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
     let mut pending_listeners: HashMap<u64, TcpListener> = HashMap::new();
 
-    // Control loop.
+    let mut identity: Option<(u32, u64)> = None; // assigned (id, epoch)
+    let mut backoff = REG_BACKOFF_START;
+    let mut failures = 0u64;
+
+    // Registration loop: each iteration is one control-connection
+    // lifetime. The first registration is fatal on failure (startup
+    // error); later ones retry with capped exponential backoff,
+    // indefinitely (see REG_BACKOFF_CAP).
     loop {
-        let buf = match frame::read_frame(&mut ctl) {
-            Ok(b) => b,
-            Err(_) => {
-                // driver gone: exit quietly
-                return Ok(());
+        let claimed = identity.map(|(id, _)| id);
+        let mut ctl = match register_with_driver(driver_worker_addr, claimed, &data_addr) {
+            Ok(RegOutcome::Granted(conn, new_id, epoch)) => {
+                if let Some((old_id, _)) = identity {
+                    if old_id != new_id {
+                        return Err(Error::Server(format!(
+                            "driver reassigned worker id {old_id} -> {new_id}"
+                        )));
+                    }
+                    info!("worker", "worker {old_id} re-registered at epoch {epoch}");
+                } else {
+                    info!(
+                        "worker",
+                        "worker {new_id} up (data plane at {data_addr}, gemm backend: {})",
+                        backend.name()
+                    );
+                }
+                identity = Some((new_id, epoch));
+                backoff = REG_BACKOFF_START;
+                failures = 0;
+                conn
+            }
+            Ok(RegOutcome::Refused(message)) => {
+                let Some((id, _)) = identity else {
+                    // Refused at startup: the launcher will never admit
+                    // us; surface it instead of spinning.
+                    return Err(Error::Server(format!("initial registration refused: {message}")));
+                };
+                // The driver is alive — our slot just is not reclaimable
+                // yet (e.g. still granted to a session that has not
+                // tripped the failure). Keep retrying.
+                debugln!("worker", "worker {id}: re-registration refused ({message}); retrying");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(REG_BACKOFF_CAP);
+                continue;
+            }
+            Err(e) => {
+                let Some((id, _)) = identity else {
+                    // Never registered: the launcher is waiting on us, so
+                    // surface the startup failure instead of spinning.
+                    return Err(e);
+                };
+                failures += 1;
+                if failures % 32 == 0 {
+                    // Periodic (not per-attempt) visibility while the
+                    // driver is unreachable; retrying never stops.
+                    errorln!(
+                        "worker",
+                        "worker {id}: {failures} failed re-registration attempts ({e}); \
+                         still retrying"
+                    );
+                } else {
+                    debugln!("worker", "worker {id}: re-registration failed ({e}); backing off");
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(REG_BACKOFF_CAP);
+                continue;
             }
         };
-        let cmd = WorkerCtl::decode(&buf)?;
-        let reply = handle_ctl(
-            id,
-            cmd,
-            &cfg,
-            compute,
-            &store,
-            &board,
-            &mut registry,
-            &mut sessions,
-            &mut pending_listeners,
-            backend.as_ref(),
-            runtime,
-        );
-        let (reply, shutdown) = match reply {
-            Ok(Some(r)) => (r, false),
-            Ok(None) => (WorkerReply::Ok, true),
-            Err(e) => (WorkerReply::Err { message: e.to_string() }, false),
-        };
-        frame::write_frame(&mut ctl, &reply.encode())?;
-        if shutdown {
-            info!("worker", "worker {id} shutting down");
-            return Ok(());
+        let (id, mut epoch) = identity.unwrap();
+
+        // Control loop: serve this connection until it breaks (back to
+        // registration) or the driver says Shutdown (exit for real).
+        loop {
+            let buf = match frame::read_frame(&mut ctl) {
+                Ok(b) => b,
+                Err(e) => {
+                    warnln!("worker", "worker {id}: control stream lost ({e}); re-registering");
+                    break;
+                }
+            };
+            let cmd = match WorkerCtl::decode(&buf) {
+                Ok(c) => c,
+                Err(e) => {
+                    warnln!("worker", "worker {id}: bad control frame ({e}); re-registering");
+                    break;
+                }
+            };
+            let reply = handle_ctl(
+                id,
+                &mut epoch,
+                cmd,
+                &cfg,
+                compute,
+                &store,
+                &board,
+                &mut registry,
+                &mut sessions,
+                &mut pending_listeners,
+                backend.as_ref(),
+                runtime,
+            );
+            let (reply, shutdown) = match reply {
+                Ok(Some(r)) => (r, false),
+                Ok(None) => (WorkerReply::Ok, true),
+                Err(e) => (WorkerReply::Err { message: e.to_string() }, false),
+            };
+            if let Err(e) = frame::write_frame(&mut ctl, &reply.encode()) {
+                if shutdown {
+                    // We were exiting anyway; no point re-registering.
+                    info!("worker", "worker {id} shutting down");
+                    return Ok(());
+                }
+                warnln!("worker", "worker {id}: control write failed ({e}); re-registering");
+                break;
+            }
+            if shutdown {
+                info!("worker", "worker {id} shutting down");
+                return Ok(());
+            }
         }
+        // The control stream is gone: every session granted over it is
+        // stale. Drop them *now* — before the re-registration backoff
+        // loop — so closing our mesh sockets immediately unwedges any
+        // peer blocked in a collective with us (they error out, return
+        // to their control loops, and become probe-able), instead of
+        // holding them hostage for the whole backoff window.
+        reset_worker_state(&mut sessions, &mut pending_listeners, &store, runtime);
+        identity = Some((id, epoch));
+    }
+}
+
+/// Data-plane accept loop. Transient `accept` failures (a client that
+/// reset mid-handshake, momentary fd pressure) must not kill the data
+/// plane while the control plane looks healthy — log, breathe, retry.
+/// Only a solid run of consecutive failures (listener teardown) breaks.
+fn serve_data_plane(
+    listener: TcpListener,
+    store: Arc<Mutex<MatrixStore>>,
+    board: Arc<StatusBoard>,
+    batch_rows: usize,
+    nodelay: bool,
+) {
+    let mut consecutive_errors = 0u32;
+    for conn in listener.incoming() {
+        let conn = match conn {
+            Ok(c) => c,
+            Err(e) => {
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_ACCEPT_ERRORS {
+                    errorln!(
+                        "worker",
+                        "data accept loop: {consecutive_errors} consecutive failures \
+                         (last: {e}); listener presumed dead"
+                    );
+                    break;
+                }
+                debugln!("worker", "transient data accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        consecutive_errors = 0;
+        if nodelay {
+            let _ = conn.set_nodelay(true);
+        }
+        let store = store.clone();
+        let board = board.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = serve_data_conn(conn, store, board, batch_rows) {
+                // client hangups are normal; real errors logged
+                debugln!("worker", "data conn ended: {e}");
+            }
+        });
     }
 }
 
@@ -151,6 +349,7 @@ fn build_backend(cfg: &ServerConfig) -> (Box<dyn GemmBackend>, Option<&'static c
 #[allow(clippy::too_many_arguments)]
 fn handle_ctl(
     my_id: u32,
+    epoch: &mut u64,
     cmd: WorkerCtl,
     cfg: &ServerConfig,
     compute: DistGemmOptions,
@@ -200,12 +399,8 @@ fn handle_ctl(
         WorkerCtl::FreeMatrix { handle } => {
             // idempotent: freeing an unknown handle is fine
             let _ = store.lock().unwrap().remove(handle);
-            // drop any device-resident buffers cached under this handle
-            // (base folds in the session rank; sweep all 256 slots)
             if let Some(rt) = runtime {
-                for rank in 0..256u64 {
-                    rt.invalidate_base(handle * 256 + rank);
-                }
+                invalidate_device_cache(rt, handle);
             }
             Ok(Some(WorkerReply::Ok))
         }
@@ -260,6 +455,21 @@ fn handle_ctl(
             }
         }
         WorkerCtl::Shutdown => Ok(None),
+        WorkerCtl::Ping { nonce } => {
+            // Liveness/resync probe: the echoed nonce both proves we are
+            // serving commands and marks the driver's drain point when it
+            // resynchronizes a stream with stale replies buffered.
+            Ok(Some(WorkerReply::Pong { nonce, epoch: *epoch }))
+        }
+        WorkerCtl::Reset { epoch: new_epoch } => {
+            // Full wipe before readmission: no session, panel, mesh or
+            // cached device buffer from a previous grant may survive into
+            // the next tenant.
+            reset_worker_state(sessions, pending, store, runtime);
+            *epoch = new_epoch;
+            info!("worker", "worker {my_id} reset to epoch {new_epoch}");
+            Ok(Some(WorkerReply::Ok))
+        }
     }
 }
 

@@ -1,17 +1,19 @@
 #!/usr/bin/env bash
-# Snapshot the PR3 compute-plane benchmarks into a single JSON file,
-# seeding the repo's perf trajectory (BENCH_PR3.json at the repo root).
+# Snapshot the perf-trajectory benchmarks into a single JSON file
+# (BENCH_PR5.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
-# Spark comparison) and ablate_collectives (all-reduce + barrier), each
-# with its machine-readable --json output, then merges the two.
+# Spark comparison), ablate_collectives (all-reduce + barrier), and
+# ablate_scheduler (submission disciplines + the pool_recovery
+# fault-injection scenario: recovered-worker count and fault->readmit
+# latency), each with its machine-readable --json output, then merges.
 #
 # Usage: scripts/bench_snapshot.sh [output.json]
 #   env: REPS=N        bench.reps override (default 1 for a quick pass)
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR3.json}"
+OUT="${1:-BENCH_PR5.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -31,6 +33,11 @@ cargo bench --bench ablate_collectives -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/collectives.json"
 
+echo "== bench_snapshot: ablate_scheduler + pool_recovery (reps=$REPS) =="
+cargo bench --bench ablate_scheduler -- \
+    --set "bench.reps=$REPS" \
+    --json "$TMP/scheduler.json"
+
 GIT_SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo unknown)"
 DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 
@@ -40,7 +47,8 @@ DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
     printf '  "git": "%s",\n' "$GIT_SHA"
     printf '  "reps": %s,\n' "$REPS"
     printf '  "table1_matmul": %s,\n' "$(cat "$TMP/table1.json")"
-    printf '  "ablate_collectives": %s\n' "$(cat "$TMP/collectives.json")"
+    printf '  "ablate_collectives": %s,\n' "$(cat "$TMP/collectives.json")"
+    printf '  "ablate_scheduler": %s\n' "$(cat "$TMP/scheduler.json")"
     printf '}\n'
 } > "$ROOT/$OUT"
 
