@@ -1,0 +1,183 @@
+//! `top` for an Alchemist server — a live view of the v8 telemetry
+//! plane. Starts an in-process server, pushes a workload through it, and
+//! renders what `FetchTelemetry` returns while the jobs run: scheduler
+//! occupancy, per-rank counters, and the per-job send/compute/receive
+//! breakdown the paper reports (Table 1 / Fig 3).
+//!
+//! ```text
+//! cargo run --release --example alchemist_top -- \
+//!     [--workers N] [--jobs N] [--headless] \
+//!     [--snapshot-json PATH] [--chrome PATH]
+//! ```
+//!
+//! `--headless` skips the live ticks (CI / bench_snapshot.sh use this);
+//! `--snapshot-json` / `--chrome` write the final merged report as a
+//! JSON snapshot / a chrome://tracing (Perfetto-loadable) span export.
+
+use std::time::Duration;
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::LayoutKind;
+use alchemist::server::start_server;
+use alchemist::telemetry::{TelemetryReport, AMBIENT_TRACE};
+use alchemist::workload::random_matrix;
+
+struct Args {
+    workers: u32,
+    jobs: usize,
+    headless: bool,
+    snapshot_json: Option<String>,
+    chrome: Option<String>,
+}
+
+fn parse_args() -> Args {
+    let mut args =
+        Args { workers: 2, jobs: 3, headless: false, snapshot_json: None, chrome: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut need = |name: &str| it.next().unwrap_or_else(|| panic!("{name} needs a value"));
+        match a.as_str() {
+            "--workers" => args.workers = need("--workers").parse().expect("--workers N"),
+            "--jobs" => args.jobs = need("--jobs").parse().expect("--jobs N"),
+            "--headless" => args.headless = true,
+            "--snapshot-json" => args.snapshot_json = Some(need("--snapshot-json")),
+            "--chrome" => args.chrome = Some(need("--chrome")),
+            other => panic!("unknown flag {other:?} (see the header comment)"),
+        }
+    }
+    args
+}
+
+/// One status frame rendered from a merged report.
+fn render(report: &TelemetryReport) {
+    let c = |k: &str| report.registry.counters.get(k).copied().unwrap_or(0);
+    let g = |k: &str| report.registry.gauges.get(k).copied().unwrap_or(0);
+    println!(
+        "  sched: {} submitted / {} done / {} failed | inflight {} | queue {}",
+        c("sched.jobs_submitted"),
+        c("sched.jobs_done"),
+        c("sched.jobs_failed"),
+        g("sched.jobs_inflight"),
+        g("sched.queue_depth"),
+    );
+    println!(
+        "  transfer: {} rows out ({} B), {} rows in ({} B)",
+        c("transfer.rows_sent"),
+        c("transfer.bytes_sent"),
+        c("transfer.rows_recv"),
+        c("transfer.bytes_recv"),
+    );
+    let mut rank = 0u32;
+    loop {
+        let key = format!("w{rank}.jobs_run");
+        if !report.registry.counters.contains_key(&key) {
+            break;
+        }
+        println!(
+            "  w{rank}: {} routines run, {} slab frames ({} B) received",
+            c(&key),
+            c(&format!("w{rank}.slab_frames")),
+            c(&format!("w{rank}.slab_bytes")),
+        );
+        rank += 1;
+    }
+    let jobs: std::collections::BTreeSet<u64> = report
+        .spans
+        .iter()
+        .map(|s| s.trace_id)
+        .filter(|&t| t != AMBIENT_TRACE)
+        .collect();
+    println!("  spans: {} recorded across {} job trace(s)", report.spans.len(), jobs.len());
+}
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init_from_env();
+    let args = parse_args();
+
+    let mut cfg = Config::default();
+    cfg.server.workers = args.workers;
+    cfg.server.gemm_backend = "native".into();
+    let server = start_server(&cfg)?;
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "alchemist_top")?;
+    ac.request_workers(args.workers)?;
+    wrappers::register_elemlib(&ac)?;
+
+    let a = DenseMatrix::from_vec(240, 24, random_matrix(1, 240, 24))?;
+    let al = ac.send_dense(&a, LayoutKind::RowBlock)?;
+
+    // Submit the whole batch up front, then watch it drain.
+    let handles: Vec<_> = (0..args.jobs)
+        .map(|i| {
+            if i % 2 == 0 {
+                ac.run_async(
+                    "elemlib",
+                    "gramian",
+                    ParamsBuilder::new().matrix("A", al.handle()).build(),
+                )
+            } else {
+                ac.run_async(
+                    "elemlib",
+                    "truncated_svd",
+                    ParamsBuilder::new().matrix("A", al.handle()).i64("k", 4).build(),
+                )
+            }
+        })
+        .collect::<alchemist::Result<_>>()?;
+    println!("{} job(s) submitted on {} worker(s)", handles.len(), args.workers);
+
+    // Live ticks while the queue drains (the pull is cheap: one control
+    // round trip + one bounded data-plane exchange per worker).
+    loop {
+        let done = handles
+            .iter()
+            .map(|h| Ok(h.is_finished()? as usize))
+            .sum::<alchemist::Result<usize>>()?;
+        if !args.headless {
+            let report = ac.fetch_telemetry(None)?;
+            println!("-- alchemist_top: {done}/{} jobs done --", handles.len());
+            render(&report);
+        }
+        if done == handles.len() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(if args.headless { 5 } else { 100 }));
+    }
+
+    // Per-job phase rows (the paper's decomposition, from the trace).
+    println!("\nper-job breakdown (send/receive are context-cumulative):");
+    println!(
+        "  {:>6} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "job", "queue_wait_s", "compute_s", "total_s", "send_s", "receive_s"
+    );
+    for h in &handles {
+        let bd = h.phase_breakdown()?;
+        println!(
+            "  {:>6} {:>12.6} {:>10.6} {:>10.6} {:>10.6} {:>10.6}",
+            h.job_id, bd.queue_wait_s, bd.compute_s, bd.total_s, bd.send_s, bd.receive_s
+        );
+    }
+    for h in handles {
+        h.wait()?;
+    }
+
+    // Final merged snapshot + optional exports.
+    let report = ac.fetch_telemetry(None)?;
+    println!("\nfinal snapshot:");
+    render(&report);
+    if let Some(path) = &args.snapshot_json {
+        std::fs::write(path, report.to_json())?;
+        println!("wrote JSON snapshot to {path}");
+    }
+    if let Some(path) = &args.chrome {
+        std::fs::write(path, report.chrome_trace())?;
+        println!("wrote chrome://tracing export to {path} (load in Perfetto)");
+    }
+
+    ac.stop()?;
+    server.shutdown();
+    println!("\nalchemist_top OK");
+    Ok(())
+}

@@ -24,6 +24,8 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::telemetry::TelemetrySink;
+
 /// Shared cancel flag, checked cooperatively at collective boundaries.
 #[derive(Clone, Debug, Default)]
 pub struct CancelToken(Arc<AtomicBool>);
@@ -52,12 +54,20 @@ impl CancelToken {
 pub struct ProgressSink {
     board: Option<Arc<StatusBoard>>,
     token: u64,
+    spans: Option<Arc<TelemetrySink>>,
 }
 
 impl ProgressSink {
     /// Sink wired to a worker's status board under `token`.
     pub fn new(board: Arc<StatusBoard>, token: u64) -> ProgressSink {
-        ProgressSink { board: Some(board), token }
+        ProgressSink { board: Some(board), token, spans: None }
+    }
+
+    /// Also drop an instant span per report into `spans` (trace id =
+    /// `token`), so phase transitions show up on the job timeline.
+    pub fn with_spans(mut self, spans: Arc<TelemetrySink>) -> ProgressSink {
+        self.spans = Some(spans);
+        self
     }
 
     /// No-op sink for contexts without a driver watching (tests, local
@@ -72,6 +82,9 @@ impl ProgressSink {
     pub fn report(&self, phase: &str, frac: f64) {
         if let Some(board) = &self.board {
             board.report(self.token, phase, frac.clamp(0.0, 1.0));
+        }
+        if let Some(spans) = &self.spans {
+            spans.mark(self.token, &format!("progress:{phase}"));
         }
     }
 }

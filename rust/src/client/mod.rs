@@ -20,8 +20,9 @@ use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
     RoutineDescriptor, WorkerInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
-    ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION,
+    ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
 };
+use crate::telemetry::TelemetryReport;
 use crate::{Error, Result};
 
 /// Handle to a matrix resident on the Alchemist side (paper §3.3: "matrix
@@ -63,6 +64,29 @@ pub struct ServerStatus {
     pub recovered_workers: u32,
     /// Worker re-registrations (epoch bumps) accepted, cumulative (v7).
     pub worker_epochs: u32,
+}
+
+/// Paper-shaped per-job phase decomposition (Table 1 / Fig. 3 of the
+/// Alchemist paper: time in send / compute / receive), assembled from the
+/// job's cross-process trace plus this context's transfer phase totals.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PhaseBreakdown {
+    /// Client-side send seconds (`ac.phases`, cumulative for this
+    /// context — transfers are not tied to a job id on the wire).
+    pub send_s: f64,
+    /// Server-side execution seconds: the driver's `execute` span, from
+    /// worker fan-out to the job's terminal state.
+    pub compute_s: f64,
+    /// Client-side receive seconds (cumulative for this context).
+    pub receive_s: f64,
+    /// Seconds the job sat in the session's queue before its turn.
+    pub queue_wait_s: f64,
+    /// Driver-side parameter/handle validation seconds at submit.
+    pub validate_s: f64,
+    /// Wall-clock width of the job's whole trace (first span start to
+    /// last span end, across driver and worker ranks). `queue_wait_s +
+    /// compute_s` accounts for this window up to clock skew.
+    pub total_s: f64,
 }
 
 /// Handle to an asynchronously submitted routine (`ac.run_async`): a
@@ -160,6 +184,35 @@ impl<'a> JobHandle<'a> {
             *self.terminal.lock().unwrap() = Some(state.clone());
         }
         Ok(state)
+    }
+
+    /// Per-job phase breakdown (v8): pulls the job's merged trace from
+    /// the driver and reduces it to the paper's send/compute/receive
+    /// row, plus the queueing/validation split only the trace can give.
+    /// Works for running and finished jobs (spans live in bounded ring
+    /// buffers — very old jobs may have aged out, yielding zeros).
+    pub fn phase_breakdown(&self) -> Result<PhaseBreakdown> {
+        let report = self.ac.fetch_telemetry(Some(self.job_id))?;
+        let driver_sum = |name: &str| -> f64 {
+            report
+                .spans
+                .iter()
+                .filter(|s| s.source == "driver" && s.name == name)
+                .map(|s| s.dur_us as f64 / 1e6)
+                .sum()
+        };
+        let total_s = report
+            .span_window()
+            .map(|(lo, hi)| hi.saturating_sub(lo) as f64 / 1e6)
+            .unwrap_or(0.0);
+        Ok(PhaseBreakdown {
+            send_s: self.ac.phases.get_secs("send"),
+            compute_s: driver_sum("execute"),
+            receive_s: self.ac.phases.get_secs("receive"),
+            queue_wait_s: driver_sum("queue_wait"),
+            validate_s: driver_sum("validate"),
+            total_s,
+        })
     }
 
     /// Live `(phase, completed fraction)` of a running job, pulled by
@@ -434,6 +487,31 @@ impl AlchemistContext {
             )));
         }
         Ok(())
+    }
+
+    fn need_v8(&self, what: &str) -> Result<()> {
+        if self.negotiated < TELEMETRY_PROTOCOL_VERSION {
+            return Err(Error::Protocol(format!(
+                "{what} needs protocol v{TELEMETRY_PROTOCOL_VERSION}+, session \
+                 negotiated v{}",
+                self.negotiated
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pull the server's merged telemetry report (v8): the driver's
+    /// registry snapshot (`sched.` / `transfer.` / `compute.` prefixes)
+    /// summed with every session worker's (`w{id}.` prefixes), plus the
+    /// stitched cross-process span timeline. `Some(job_id)` filters the
+    /// spans to that job's trace; `None` returns the full snapshot,
+    /// ambient spans included.
+    pub fn fetch_telemetry(&self, job_id: Option<u64>) -> Result<TelemetryReport> {
+        self.need_v8("FetchTelemetry")?;
+        match self.call(&ClientMsg::FetchTelemetry { job_id: job_id.unwrap_or(0) })? {
+            DriverMsg::Telemetry(report) => Ok(report),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
     }
 
     /// Cancel a job by id (v6); see [`JobHandle::cancel`].

@@ -184,9 +184,12 @@ fn run_sender(
             other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
         }
     }
+    // Pre-registered handles (one relaxed atomic add each), not the
+    // string-keyed legacy view — this runs once per sender thread but the
+    // same handles back the per-frame counters elsewhere.
     let metrics = transfer_metrics();
-    metrics.counters.add("bytes_sent", bytes);
-    metrics.counters.add("frames_sent", frames);
+    metrics.bytes_sent.inc(bytes);
+    metrics.frames_sent.inc(frames);
     Ok(frames)
 }
 
@@ -300,7 +303,7 @@ pub fn push_rows<V: AsRef<[f64]>>(
         }
     })?;
 
-    metrics.counters.add("rows_sent", rows_sent);
+    metrics.rows_sent.inc(rows_sent);
     Ok((rows_sent, frames_sent))
 }
 
@@ -357,8 +360,8 @@ fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
         }
     }
     let metrics = transfer_metrics();
-    metrics.counters.add("bytes_recv", bytes);
-    metrics.counters.add("frames_recv", frames);
+    metrics.bytes_recv.inc(bytes);
+    metrics.frames_recv.inc(frames);
     Ok(seen)
 }
 
@@ -403,6 +406,6 @@ where
     for r in results {
         seen += r?;
     }
-    transfer_metrics().counters.add("rows_recv", seen);
+    transfer_metrics().rows_recv.inc(seen);
     Ok(seen)
 }

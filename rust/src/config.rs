@@ -182,6 +182,29 @@ impl Default for SchedConfig {
     }
 }
 
+/// Telemetry-plane knobs (metrics registry + span tracing; see
+/// `telemetry/` and DESIGN.md §Telemetry plane).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch for span recording. Metrics counters always run
+    /// (they are single relaxed atomic ops); disabling telemetry stops
+    /// span buffer writes and turns `FetchTelemetry` replies span-free.
+    pub enabled: bool,
+    /// Span ring-buffer capacity per component (driver, each worker).
+    /// Oldest spans are evicted — and counted — once the ring is full.
+    pub span_buffer: u32,
+    /// Record a data-plane span for every Nth slab frame a worker
+    /// receives (0 = off, the default: per-frame spans are the one place
+    /// tracing could touch a hot loop).
+    pub sample_every: u32,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true, span_buffer: 4096, sample_every: 0 }
+    }
+}
+
 /// Bench-harness knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchConfig {
@@ -208,6 +231,7 @@ pub struct Config {
     pub compute: ComputeConfig,
     pub transfer: TransferConfig,
     pub sparklet: SparkletConfig,
+    pub telemetry: TelemetryConfig,
     pub bench: BenchConfig,
 }
 
@@ -295,6 +319,9 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sparklet.executor_mem_mb" => cfg.sparklet.executor_mem_mb = parse(key, val)?,
         "sparklet.block_size" => cfg.sparklet.block_size = parse(key, val)?,
         "sparklet.task_overhead_us" => cfg.sparklet.task_overhead_us = parse(key, val)?,
+        "telemetry.enabled" => cfg.telemetry.enabled = parse(key, val)?,
+        "telemetry.span_buffer" => cfg.telemetry.span_buffer = parse(key, val)?,
+        "telemetry.sample_every" => cfg.telemetry.sample_every = parse(key, val)?,
         "bench.budget_secs" => cfg.bench.budget_secs = parse(key, val)?,
         "bench.scale" => cfg.bench.scale = parse(key, val)?,
         "bench.reps" => cfg.bench.reps = parse(key, val)?,
@@ -388,6 +415,9 @@ impl Config {
                 "transfer.slab_bytes must be <= {} (half the frame cap)",
                 crate::protocol::MAX_FRAME_BYTES / 2
             )));
+        }
+        if !(16..=1 << 20).contains(&self.telemetry.span_buffer) {
+            return Err(Error::Config("telemetry.span_buffer must be in [16, 2^20]".into()));
         }
         Ok(())
     }
@@ -496,6 +526,34 @@ scale = 0.5
         assert!(cfg.validate().is_err());
         cfg.transfer.slab_bytes = u32::MAX; // above the frame-cap headroom
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn telemetry_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.span_buffer, 4096);
+        assert_eq!(cfg.telemetry.sample_every, 0);
+        cfg.apply_overrides(&[
+            "telemetry.enabled=false",
+            "telemetry.span_buffer=128",
+            "telemetry.sample_every=64",
+        ])
+        .unwrap();
+        assert!(!cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.span_buffer, 128);
+        assert_eq!(cfg.telemetry.sample_every, 64);
+        cfg.validate().unwrap();
+        cfg.telemetry.span_buffer = 8;
+        assert!(cfg.validate().is_err());
+        cfg.telemetry.span_buffer = (1 << 20) + 1;
+        assert!(cfg.validate().is_err());
+
+        let text = "[telemetry]\nenabled = true\nspan_buffer = 256\n";
+        let raw = parse_toml_subset(text).unwrap();
+        let mut cfg = Config::default();
+        apply_raw(&mut cfg, &raw).unwrap();
+        assert_eq!(cfg.telemetry.span_buffer, 256);
     }
 
     #[test]

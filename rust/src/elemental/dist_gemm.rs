@@ -185,11 +185,11 @@ pub fn dist_gemm_with_cancel(
     let m = compute_metrics();
     let c_local = match opts.algo {
         DistGemmAlgo::AllGatherB => {
-            m.counters.add("allgather_gemms", 1);
+            m.allgather_gemms.inc(1);
             dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows, cancel)?
         }
         DistGemmAlgo::RingPipelined => {
-            m.counters.add("ring_gemms", 1);
+            m.ring_gemms.inc(1);
             let (c_local, stats) =
                 dist_gemm_ring_local(mesh, a, b, backend, opts.panel_rows, cancel)?;
             m.phases.add(

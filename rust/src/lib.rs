@@ -28,6 +28,9 @@
 //! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas HLO
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them on the hot path.
 //! * [`protocol`] — the shared wire format (control + data plane).
+//! * [`telemetry`] — the live measurement plane: metrics registry with
+//!   pre-registered atomic handles, cross-process job tracing, and the
+//!   v8 `FetchTelemetry` pull-based export.
 //!
 //! See `DESIGN.md` for the substitution table and the per-experiment index,
 //! and `EXPERIMENTS.md` for reproduced paper tables/figures.
@@ -48,6 +51,7 @@ pub mod runtime;
 pub mod sched;
 pub mod server;
 pub mod sparklet;
+pub mod telemetry;
 pub mod workload;
 
 pub use error::{Error, Result};

@@ -1,9 +1,18 @@
 //! Minimal leveled logger — the `spdlog` substitute from the paper's
 //! dependency list. Thread-safe, zero-dependency, with per-component tags.
+//!
+//! Every line carries a wall-clock UTC timestamp (cross-process
+//! correlation) plus the process-uptime seconds, the level, and the
+//! component tag. Lines emitted while a telemetry trace context is
+//! active on the thread (`telemetry::trace::push_trace_ctx`, set around
+//! routine execution on every worker rank) additionally carry
+//! `trace=<job trace id>@<component tag>`. Set
+//! `ALCHEMIST_LOG_FORMAT=json` for structured one-object-per-line
+//! output.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::time::Instant;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
@@ -68,12 +77,100 @@ fn uptime() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+/// Whether `ALCHEMIST_LOG_FORMAT=json` was set at first log call.
+fn json_format() -> bool {
+    static JSON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *JSON.get_or_init(|| {
+        std::env::var("ALCHEMIST_LOG_FORMAT")
+            .map(|v| v.eq_ignore_ascii_case("json"))
+            .unwrap_or(false)
+    })
+}
+
+/// Proleptic-Gregorian civil date from days since 1970-01-01
+/// (Hinnant's `civil_from_days`).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// `2026-08-08T12:34:56.789Z` for a unix-micros wall-clock reading.
+pub(crate) fn format_utc(micros: u64) -> String {
+    let secs = micros / 1_000_000;
+    let millis = (micros % 1_000_000) / 1000;
+    let (y, mo, d) = civil_from_days((secs / 86_400) as i64);
+    let tod = secs % 86_400;
+    format!(
+        "{y:04}-{mo:02}-{d:02}T{:02}:{:02}:{:02}.{millis:03}Z",
+        tod / 3600,
+        (tod % 3600) / 60,
+        tod % 60
+    )
+}
+
+fn now_micros() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[doc(hidden)]
 pub fn log(level: Level, component: &str, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let line = format!("[{:9.3}] [{}] [{}] {}\n", uptime(), level.tag(), component, args);
+    let ts = format_utc(now_micros());
+    let trace = crate::telemetry::trace::current_trace();
+    let line = if json_format() {
+        let trace_fields = match &trace {
+            Some((id, tag)) => {
+                format!(", \"trace_id\": {id}, \"span_source\": \"{}\"", json_escape(tag))
+            }
+            None => String::new(),
+        };
+        format!(
+            "{{\"ts\": \"{ts}\", \"uptime\": {:.3}, \"level\": \"{}\", \
+             \"component\": \"{}\"{trace_fields}, \"msg\": \"{}\"}}\n",
+            uptime(),
+            level.tag().trim(),
+            json_escape(component),
+            json_escape(&format!("{args}"))
+        )
+    } else {
+        let trace_tag = match &trace {
+            Some((id, tag)) => format!(" [trace {id}@{tag}]"),
+            None => String::new(),
+        };
+        format!(
+            "[{ts}] [{:9.3}] [{}] [{}]{trace_tag} {}\n",
+            uptime(),
+            level.tag(),
+            component,
+            args
+        )
+    };
     let _ = std::io::stderr().write_all(line.as_bytes());
 }
 
@@ -120,5 +217,21 @@ mod tests {
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Error));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn utc_formatting_known_instants() {
+        assert_eq!(format_utc(0), "1970-01-01T00:00:00.000Z");
+        // 2004-02-29T12:00:00.500Z — leap-year day (1078056000 s)
+        assert_eq!(format_utc(1_078_056_000_500_000), "2004-02-29T12:00:00.500Z");
+        // 2026-08-08T00:00:00Z = 1786147200 s
+        assert_eq!(format_utc(1_786_147_200_000_000), "2026-08-08T00:00:00.000Z");
+    }
+
+    #[test]
+    fn json_escaping_covers_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

@@ -4,10 +4,24 @@
 //! **compute**, **receive** (Table 1, Fig 3) — plus total runtimes censored
 //! by a wall-clock budget (Fig 4). This module provides exactly those
 //! primitives so the benches can print paper-shaped rows.
+//!
+//! Since protocol v8 the shared bundles ([`SchedMetrics`],
+//! [`TransferMetrics`], [`ComputeMetrics`]) are backed by
+//! [`crate::telemetry::MetricsRegistry`] instances: hot paths hold
+//! pre-registered atomic handles, the legacy string-keyed
+//! `counters`/`phases` API survives as registry views over the same
+//! cells, and each bundle's snapshot feeds the live `FetchTelemetry`
+//! export. The standalone value types below ([`Timer`], [`PhaseTimes`],
+//! [`Gauge`], [`Counters`]) are unchanged — per-instance accumulators
+//! for client contexts and benches.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::telemetry::{
+    CounterHandle, CountersView, GaugeHandle, MetricsRegistry, PhasesView,
+};
 
 /// A single named stopwatch.
 #[derive(Debug)]
@@ -132,51 +146,102 @@ impl Gauge {
 /// Scheduler observability bundle, shared by the driver and the `sched`
 /// allocator/job-queue: admission-queue depth, jobs in flight, grant
 /// counters, and cumulative allocation wait time.
-#[derive(Debug, Default)]
+///
+/// Registry-backed since protocol v8: the bundle owns a
+/// [`MetricsRegistry`] instance (one per `DriverCore`, so tests never
+/// cross-pollute) whose snapshot feeds the driver's `FetchTelemetry`
+/// reply; `counters`/`phases` keep the legacy string-keyed API as views
+/// into the same cells.
+#[derive(Debug)]
 pub struct SchedMetrics {
+    /// The backing registry (exported by the telemetry plane).
+    pub registry: Arc<MetricsRegistry>,
     /// Sessions currently parked in the allocator's admission queue.
-    pub queue_depth: Gauge,
+    pub queue_depth: GaugeHandle,
     /// Jobs submitted but not yet `Done`/`Failed`.
-    pub jobs_inflight: Gauge,
+    pub jobs_inflight: GaugeHandle,
     /// Workers currently quarantined (pool-recovery lifecycle: set on
     /// quarantine, lowered as the health prober readmits).
-    pub lost_workers: Gauge,
+    pub lost_workers: GaugeHandle,
     /// "grants", "grant_timeouts", "jobs_submitted", "jobs_done",
     /// "jobs_failed", plus the recovery counts "quarantined_workers",
     /// "readmitted_workers", "worker_reregistrations", "probes_failed" —
     /// monotonic event counts.
-    pub counters: Counters,
+    pub counters: CountersView,
     /// "alloc_wait" — cumulative time sessions spent queued for workers;
     /// "probe" — cumulative probe→readmit latency of recovered workers.
-    pub phases: PhaseTimes,
+    pub phases: PhasesView,
 }
 
 impl SchedMetrics {
     pub fn new() -> Self {
-        Self::default()
+        let registry = Arc::new(MetricsRegistry::new());
+        SchedMetrics {
+            queue_depth: registry.gauge("queue_depth"),
+            jobs_inflight: registry.gauge("jobs_inflight"),
+            lost_workers: registry.gauge("lost_workers"),
+            counters: CountersView::new(registry.clone()),
+            phases: PhasesView::new(registry.clone()),
+            registry,
+        }
+    }
+}
+
+impl Default for SchedMetrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
 /// Data-plane transfer observability (client `push_rows`/`fetch_rows` and
 /// the sparklet executors share the same transfer helpers, so one
 /// process-wide sink — see [`transfer_metrics`]).
-#[derive(Debug, Default)]
+///
+/// The per-frame/per-call event counts are **pre-registered handles**
+/// (one relaxed atomic add per event — the hot-path fix of PR 6); the
+/// `counters`/`phases` views keep the legacy string-keyed API over the
+/// same cells for cold paths and existing readers.
+#[derive(Debug)]
 pub struct TransferMetrics {
-    /// "rows_sent", "frames_sent", "bytes_sent", "rows_recv",
-    /// "frames_recv", "bytes_recv" — monotonic event counts.
-    pub counters: Counters,
+    /// The backing registry (exported by the telemetry plane).
+    pub registry: Arc<MetricsRegistry>,
+    pub rows_sent: CounterHandle,
+    pub frames_sent: CounterHandle,
+    pub bytes_sent: CounterHandle,
+    pub rows_recv: CounterHandle,
+    pub frames_recv: CounterHandle,
+    pub bytes_recv: CounterHandle,
+    /// Legacy string-keyed view over the counters above (same cells).
+    pub counters: CountersView,
     /// "stall_w{id}" — cumulative time the routing thread spent blocked
     /// dispatching a batch bound for worker `id`. Channels are per sender
     /// *thread*, so when owners outnumber `transfer.sender_threads` the
     /// stall is attributed to the stalled batch's owner even though the
     /// queued batches ahead of it may belong to other owners sharing the
-    /// channel.
-    pub phases: PhaseTimes,
+    /// channel. (Only written while blocked — not a hot path.)
+    pub phases: PhasesView,
 }
 
 impl TransferMetrics {
     pub fn new() -> Self {
-        Self::default()
+        let registry = Arc::new(MetricsRegistry::new());
+        TransferMetrics {
+            rows_sent: registry.counter("rows_sent"),
+            frames_sent: registry.counter("frames_sent"),
+            bytes_sent: registry.counter("bytes_sent"),
+            rows_recv: registry.counter("rows_recv"),
+            frames_recv: registry.counter("frames_recv"),
+            bytes_recv: registry.counter("bytes_recv"),
+            counters: CountersView::new(registry.clone()),
+            phases: PhasesView::new(registry.clone()),
+            registry,
+        }
+    }
+}
+
+impl Default for TransferMetrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -192,22 +257,41 @@ pub fn transfer_metrics() -> &'static TransferMetrics {
 /// wait is the time the compute thread stalled on the shift pipeline
 /// (enqueueing the outbound panel + taking the inbound one); with
 /// perfect overlap it is the first-panel latency only.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ComputeMetrics {
+    /// The backing registry (exported by the telemetry plane).
+    pub registry: Arc<MetricsRegistry>,
     /// "ring_compute_r{rank}" — time in the local GEMM kernel;
     /// "ring_wait_r{rank}" — time stalled on panel shifts.
-    pub phases: PhaseTimes,
+    pub phases: PhasesView,
     /// High-water mark of B-panel doubles resident per rank during a
     /// ring GEMM (the ≤ 2·ceil(k/p)·n memory contract — asserted by the
     /// prop suite via the `dist_gemm` stats hook).
-    pub peak_b_doubles: Gauge,
-    /// "ring_gemms", "allgather_gemms" — algorithm selection counts.
-    pub counters: Counters,
+    pub peak_b_doubles: GaugeHandle,
+    /// Pre-registered algorithm selection counts (per dist_gemm call).
+    pub ring_gemms: CounterHandle,
+    pub allgather_gemms: CounterHandle,
+    /// Legacy string-keyed view over the counters above (same cells).
+    pub counters: CountersView,
 }
 
 impl ComputeMetrics {
     pub fn new() -> Self {
-        Self::default()
+        let registry = Arc::new(MetricsRegistry::new());
+        ComputeMetrics {
+            phases: PhasesView::new(registry.clone()),
+            peak_b_doubles: registry.gauge("peak_b_doubles"),
+            ring_gemms: registry.counter("ring_gemms"),
+            allgather_gemms: registry.counter("allgather_gemms"),
+            counters: CountersView::new(registry.clone()),
+            registry,
+        }
+    }
+}
+
+impl Default for ComputeMetrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 

@@ -13,6 +13,7 @@
 //! primitives; unknown tags are protocol errors (never panics).
 
 use crate::protocol::{Reader, Writer};
+use crate::telemetry::TelemetryReport;
 use crate::{Error, Result};
 
 /// Protocol version for the handshake; bumped on wire changes.
@@ -30,7 +31,12 @@ use crate::{Error, Result};
 /// plus the worker-control `Reset`/`Ping`/`Pong` lifecycle messages used
 /// by the driver's health prober (driver ⇄ worker only, never
 /// client-visible).
-pub const PROTOCOL_VERSION: u16 = 7;
+/// v8: telemetry plane — `FetchTelemetry` pulls a merged
+/// [`crate::telemetry::TelemetryReport`] (metrics registry snapshot +
+/// cross-process span timeline) from the driver, which in turn drains
+/// each session worker over the data plane (`DataMsg::FetchTelemetry` /
+/// `DataMsg::Telemetry`). ≤ v7 sessions never see the new tags.
+pub const PROTOCOL_VERSION: u16 = 8;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -51,6 +57,13 @@ pub const ROUTINE_ENGINE_PROTOCOL_VERSION: u16 = 6;
 /// counters (lost/recovered workers, cumulative registration epochs).
 /// Sessions negotiated below this get the legacy 5-field `Status` shape.
 pub const POOL_RECOVERY_PROTOCOL_VERSION: u16 = 7;
+
+/// First version that understands the telemetry pull surfaces:
+/// `ClientMsg::FetchTelemetry` → `DriverMsg::Telemetry` on the client
+/// control plane and `DataMsg::FetchTelemetry` → `DataMsg::Telemetry` on
+/// the driver ⇄ worker data plane. Sessions negotiated below this are
+/// refused telemetry pulls with a versioned error.
+pub const TELEMETRY_PROTOCOL_VERSION: u16 = 8;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -546,6 +559,12 @@ pub enum ClientMsg {
     /// and honored at the next collective boundary). Replies `JobStatus`
     /// with the job's state at the time of the request.
     CancelJob { job_id: u64 },
+    /// v8: pull the merged telemetry report — registry snapshots from the
+    /// driver (scheduler/transfer/compute bundles) and every session
+    /// worker, plus the stitched cross-process span timeline. `job_id`
+    /// filters spans to one job's trace (0 = full timeline). Reply:
+    /// [`DriverMsg::Telemetry`].
+    FetchTelemetry { job_id: u64 },
 }
 
 impl ClientMsg {
@@ -613,6 +632,10 @@ impl ClientMsg {
                 w.put_u8(13);
                 w.put_u64(*job_id);
             }
+            ClientMsg::FetchTelemetry { job_id } => {
+                w.put_u8(14);
+                w.put_u64(*job_id);
+            }
         }
         w.into_bytes()
     }
@@ -650,6 +673,7 @@ impl ClientMsg {
             11 => ClientMsg::WaitJob { job_id: r.get_u64()?, timeout_ms: r.get_u64()? },
             12 => ClientMsg::DescribeRoutines { library: r.get_str()? },
             13 => ClientMsg::CancelJob { job_id: r.get_u64()? },
+            14 => ClientMsg::FetchTelemetry { job_id: r.get_u64()? },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
         Ok(msg)
@@ -693,6 +717,9 @@ pub enum DriverMsg {
     JobStatus { job_id: u64, state: JobState },
     /// Reply to `DescribeRoutines` (v6).
     RoutineList { routines: Vec<RoutineDescriptor> },
+    /// Reply to `FetchTelemetry` (v8): merged registry snapshot + span
+    /// timeline across the driver and every session worker.
+    Telemetry(TelemetryReport),
     Err { message: String },
 }
 
@@ -792,6 +819,10 @@ impl DriverMsg {
                     r.encode(&mut w);
                 }
             }
+            DriverMsg::Telemetry(report) => {
+                w.put_u8(14);
+                report.encode_into(&mut w);
+            }
         }
         w.into_bytes()
     }
@@ -843,6 +874,7 @@ impl DriverMsg {
                 }
                 DriverMsg::RoutineList { routines }
             }
+            14 => DriverMsg::Telemetry(TelemetryReport::decode(&mut r)?),
             t => return Err(Error::Protocol(format!("bad DriverMsg tag {t}"))),
         };
         Ok(msg)
@@ -914,6 +946,15 @@ pub enum DataMsg {
     /// Reply to [`DataMsg::CancelRoutine`]: whether a matching routine
     /// was running here (cancel is best-effort either way).
     CancelAck { matched: bool },
+    /// v8, driver → worker: drain this worker's telemetry (registry
+    /// snapshot + span buffer). Rides the data plane for the same reason
+    /// cancel/progress do: the control stream is occupied while a routine
+    /// runs. Reply: [`DataMsg::Telemetry`].
+    FetchTelemetry,
+    /// Reply to [`DataMsg::FetchTelemetry`]: this worker's local report
+    /// (unprefixed — the driver prefixes registry keys `w<id>.` when
+    /// merging).
+    Telemetry(TelemetryReport),
 }
 
 impl DataMsg {
@@ -1007,6 +1048,11 @@ impl DataMsg {
                 w.put_u8(13);
                 w.put_bool(*matched);
             }
+            DataMsg::FetchTelemetry => w.put_u8(14),
+            DataMsg::Telemetry(report) => {
+                w.put_u8(15);
+                report.encode_into(w);
+            }
         }
     }
 
@@ -1062,6 +1108,8 @@ impl DataMsg {
             11 => DataMsg::QueryProgress { token: r.get_u64()? },
             12 => DataMsg::Progress { phase: r.get_str()?, frac: r.get_f64()? },
             13 => DataMsg::CancelAck { matched: r.get_bool()? },
+            14 => DataMsg::FetchTelemetry,
+            15 => DataMsg::Telemetry(TelemetryReport::decode(&mut r)?),
             t => return Err(Error::Protocol(format!("bad DataMsg tag {t}"))),
         };
         Ok(msg)
@@ -1397,6 +1445,23 @@ mod tests {
         }
     }
 
+    fn report() -> TelemetryReport {
+        let mut rep = TelemetryReport::default();
+        rep.registry.counters.insert("w0.jobs_run".into(), 3);
+        rep.registry.gauges.insert("sched.queue_depth".into(), -1);
+        rep.registry
+            .phases
+            .insert("transfer.send".into(), crate::telemetry::PhaseStat { secs: 0.25, count: 4 });
+        rep.spans.push(crate::telemetry::SpanRecord {
+            trace_id: 99,
+            name: "execute".into(),
+            source: "driver".into(),
+            start_us: 1_700_000_000_000_000,
+            dur_us: 2_500,
+        });
+        rep
+    }
+
     #[test]
     fn client_msgs_roundtrip() {
         let msgs = vec![
@@ -1427,6 +1492,8 @@ mod tests {
             ClientMsg::WaitJob { job_id: 17, timeout_ms: 250 },
             ClientMsg::DescribeRoutines { library: "elemlib".into() },
             ClientMsg::CancelJob { job_id: 17 },
+            ClientMsg::FetchTelemetry { job_id: 0 },
+            ClientMsg::FetchTelemetry { job_id: 17 },
         ];
         for m in msgs {
             assert_eq!(ClientMsg::decode(&m.encode()).unwrap(), m);
@@ -1503,11 +1570,18 @@ mod tests {
                 job_id: 6,
                 state: JobState::Failed { message: "boom".into() },
             },
+            DriverMsg::Telemetry(report()),
             DriverMsg::Err { message: "no workers".into() },
         ];
         for m in msgs {
             assert_eq!(DriverMsg::decode(&m.encode()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn telemetry_report_roundtrips_empty() {
+        let empty = DriverMsg::Telemetry(TelemetryReport::default());
+        assert_eq!(DriverMsg::decode(&empty.encode()).unwrap(), empty);
     }
 
     #[test]
@@ -1623,6 +1697,8 @@ mod tests {
             DataMsg::QueryProgress { token: 77 },
             DataMsg::Progress { phase: "lanczos".into(), frac: 0.75 },
             DataMsg::CancelAck { matched: true },
+            DataMsg::FetchTelemetry,
+            DataMsg::Telemetry(report()),
         ];
         for m in msgs {
             assert_eq!(DataMsg::decode(&m.encode()).unwrap(), m);

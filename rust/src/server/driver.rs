@@ -21,15 +21,17 @@ use std::time::{Duration, Instant};
 
 use crate::ali::registry::load_library;
 use crate::ali::Library;
-use crate::config::SchedConfig;
-use crate::metrics::{SchedMetrics, Timer};
+use crate::config::{SchedConfig, TelemetryConfig};
+use crate::metrics::{compute_metrics, transfer_metrics, SchedMetrics, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta,
     Params, RoutineDescriptor, WorkerAck, WorkerCtl, WorkerHello, WorkerInfo, WorkerReply,
-    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
 };
 use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator};
 use crate::server::MAX_ACCEPT_ERRORS;
+use crate::telemetry::trace::push_trace_ctx;
+use crate::telemetry::{unix_micros, TelemetryReport, TelemetrySink, AMBIENT_TRACE};
 use crate::{debugln, info, warnln, Error, Result};
 
 /// Handles the driver reserves per RunRoutine call for distributed
@@ -173,6 +175,10 @@ pub struct DriverCore {
     roster: Vec<RwLock<Arc<WorkerConn>>>,
     pub alloc: PoolAllocator,
     pub metrics: Arc<SchedMetrics>,
+    /// Driver-side span buffer: queue-wait/validate/execute per job
+    /// (trace = job token) plus ambient grant/teardown spans. Drained by
+    /// `FetchTelemetry` alongside each worker's sink.
+    pub telemetry: Arc<TelemetrySink>,
     sched_cfg: SchedConfig,
     next_session: AtomicU64,
     next_handle: AtomicU64,
@@ -188,13 +194,21 @@ impl DriverCore {
     /// Assemble the shared driver state from the initially registered
     /// worker roster. The launcher builds this before starting the
     /// driver so shutdown tooling can reach the live roster too.
-    pub fn new(workers: Vec<Arc<WorkerConn>>, sched_cfg: SchedConfig) -> Arc<DriverCore> {
+    pub fn new(
+        workers: Vec<Arc<WorkerConn>>,
+        sched_cfg: SchedConfig,
+        tel_cfg: &TelemetryConfig,
+    ) -> Arc<DriverCore> {
         let metrics = Arc::new(SchedMetrics::new());
+        let telemetry =
+            Arc::new(TelemetrySink::new("driver", tel_cfg.span_buffer as usize));
+        telemetry.set_enabled(tel_cfg.enabled);
         let ids: Vec<u32> = workers.iter().map(|w| w.id).collect();
         Arc::new(DriverCore {
             roster: workers.into_iter().map(RwLock::new).collect(),
             alloc: PoolAllocator::new(ids, AllocPolicy::from(&sched_cfg), metrics.clone()),
             metrics,
+            telemetry,
             sched_cfg,
             next_session: AtomicU64::new(1),
             next_handle: AtomicU64::new(1),
@@ -562,6 +576,7 @@ fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
 }
 
 fn cleanup_session(s: &Arc<SessionShared>, core: &Arc<DriverCore>) {
+    let _span = core.telemetry.span(AMBIENT_TRACE, "teardown");
     // Stop the job pipeline first: queued job threads that acquire the
     // routine lock after this point bail out without touching workers.
     s.closed.store(true, Ordering::SeqCst);
@@ -1070,6 +1085,9 @@ fn handle_client_msg(
             } else {
                 Some(Duration::from_millis(timeout_ms.min(cap_ms)))
             };
+            // Ambient span covering queue wait + mesh formation; recorded
+            // on failure too (a timed-out grant is a timeline event).
+            let _grant = core.telemetry.span(AMBIENT_TRACE, "grant");
             let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
             // Pin the grant-time generation of each worker: the session
             // keeps exactly these connections, so a later re-registration
@@ -1185,15 +1203,24 @@ fn handle_client_msg(
             if s.closed.load(Ordering::SeqCst) {
                 return Err(closed_session_error(s));
             }
+            // The job token doubles as the job's trace id: minted here —
+            // at Submit — so even pre-admission work (validation) lands
+            // on the job's timeline. A rejected submission just retires
+            // the token unused (the space is 2^64).
+            let job_token = core.alloc_job_token();
+            let submit_us = unix_micros();
             // Fail fast on bad handles and missing workers so the client
             // gets the error at submit time, not buried in a job.
-            validate_handles(s, &params)?;
             // Typed-engine validation: unknown routine, missing/mistyped
             // params and shape-mismatched inputs are all rejected here —
             // before a job slot exists and before the worker group is
             // ever involved. Returns the spec's admission cost (None for
             // libraries without driver-side specs).
-            let cost = validate_against_spec(s, &library, &routine, &params)?;
+            let cost = {
+                let _v = core.telemetry.span(job_token, "validate");
+                validate_handles(s, &params)?;
+                validate_against_spec(s, &library, &routine, &params)?
+            };
             session_conns(s)?;
             // Each undelivered job (inflight, or finished but unread)
             // holds a driver thread and/or a retained result; cap the
@@ -1223,7 +1250,6 @@ fn handle_client_msg(
                      {routine} > sched.max_inflight_cost_per_session = {cost_cap:.3e}"
                 )));
             }
-            let job_token = core.alloc_job_token();
             let job_id = s.jobs.submit_with(&routine, job_token, cost);
             core.metrics.jobs_inflight.inc();
             core.metrics.counters.add("jobs_submitted", 1);
@@ -1237,6 +1263,7 @@ fn handle_client_msg(
                         &s2,
                         job_id,
                         job_token,
+                        submit_us,
                         &library,
                         &routine,
                         params,
@@ -1363,6 +1390,17 @@ fn handle_client_msg(
             broadcast(&conns, &WorkerCtl::FreeMatrix { handle })?;
             Ok(DriverMsg::Released { handle })
         }
+        ClientMsg::FetchTelemetry { job_id } => {
+            let s = need_session(session)?;
+            if s.wire_version < TELEMETRY_PROTOCOL_VERSION {
+                return Err(Error::Protocol(format!(
+                    "FetchTelemetry requires protocol v{TELEMETRY_PROTOCOL_VERSION} \
+                     (session negotiated v{})",
+                    s.wire_version
+                )));
+            }
+            Ok(DriverMsg::Telemetry(fetch_telemetry(core, s, job_id)?))
+        }
         ClientMsg::Stop => Ok(DriverMsg::Stopped),
         ClientMsg::ServerStatus => Ok(DriverMsg::Status {
             total_workers: core.alloc.total(),
@@ -1377,6 +1415,66 @@ fn handle_client_msg(
     }
 }
 
+/// Assemble the merged telemetry report for one session: the driver's
+/// own bundles (scheduler registry, the process-wide transfer/compute
+/// singletons) plus a live pull of every session worker's registry and
+/// span buffer over its always-responsive data plane. Worker pulls are
+/// best-effort under the bounded `data_call` budget — an unreachable
+/// worker costs one counter (`telemetry.worker_pull_failures`), never a
+/// hang. `job_id != 0` filters the span timeline to that job's trace.
+fn fetch_telemetry(
+    core: &DriverCore,
+    s: &SessionShared,
+    job_id: u64,
+) -> Result<TelemetryReport> {
+    let token = if job_id == 0 {
+        None
+    } else {
+        Some(
+            s.jobs
+                .get(job_id)
+                .ok_or_else(|| Error::Server(format!("unknown job {job_id}")))?
+                .token,
+        )
+    };
+    let mut report = TelemetryReport {
+        registry: core.metrics.registry.snapshot().prefixed("sched."),
+        spans: core.telemetry.snapshot(),
+    };
+    report
+        .registry
+        .merge(&transfer_metrics().registry.snapshot().prefixed("transfer."));
+    report
+        .registry
+        .merge(&compute_metrics().registry.snapshot().prefixed("compute."));
+    let dropped = core.telemetry.dropped();
+    if dropped > 0 {
+        report.registry.counters.insert("telemetry.driver_spans_dropped".into(), dropped);
+    }
+    let conns: Vec<Arc<WorkerConn>> = s.workers.lock().unwrap().clone();
+    let mut pull_failures = 0u64;
+    for w in &conns {
+        match data_call(&w.data_addr, &DataMsg::FetchTelemetry) {
+            Ok(DataMsg::Telemetry(wr)) => {
+                report.registry.merge(&wr.registry.prefixed(&format!("w{}.", w.id)));
+                report.spans.extend(wr.spans);
+            }
+            Ok(_) | Err(_) => pull_failures += 1,
+        }
+    }
+    if pull_failures > 0 {
+        report
+            .registry
+            .counters
+            .insert("telemetry.worker_pull_failures".into(), pull_failures);
+    }
+    if let Some(token) = token {
+        report.spans.retain(|sp| sp.trace_id == token);
+    }
+    report.spans.sort_by(|a, b| (a.start_us, a.end_us()).cmp(&(b.start_us, b.end_us())));
+    Ok(report)
+}
+
 /// Body of one async job thread.
 #[allow(clippy::too_many_arguments)]
 fn run_job(
@@ -1384,6 +1482,7 @@ fn run_job(
     s: &SessionShared,
     job_id: u64,
     job_token: u64,
+    submit_us: u64,
     library: &str,
     routine: &str,
     params: Params,
@@ -1398,7 +1497,19 @@ fn run_job(
             turn = s.turn_cv.wait(turn).unwrap();
         }
     }
-    run_job_body(core, s, job_id, job_token, library, routine, &params, output_handles);
+    // queue_wait (submit → turn) and execute (turn → terminal) partition
+    // the job's wall time exactly — phase_breakdown() relies on that.
+    core.telemetry.record(
+        job_token,
+        "queue_wait",
+        submit_us,
+        unix_micros().saturating_sub(submit_us),
+    );
+    {
+        let _ctx = push_trace_ctx(job_token, "driver");
+        let _exec = core.telemetry.span(job_token, "execute");
+        run_job_body(core, s, job_id, job_token, library, routine, &params, output_handles);
+    }
     retire_turn(s, job_id);
 }
 

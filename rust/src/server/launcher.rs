@@ -72,10 +72,11 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
         let addr = worker_reg_addr.clone();
         let wcfg = cfg.server.clone();
         let ccfg = cfg.compute.clone();
+        let tcfg = cfg.telemetry.clone();
         std::thread::Builder::new()
             .name(format!("alch-worker-{i}"))
             .spawn(move || {
-                if let Err(e) = run_worker(&addr, wcfg, ccfg) {
+                if let Err(e) = run_worker(&addr, wcfg, ccfg, tcfg) {
                     crate::errorln!("launcher", "worker exited with error: {e}");
                 }
             })
@@ -101,7 +102,7 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     info!("launcher", "{n} workers registered; driver at {driver_addr}");
 
     let stop = Arc::new(AtomicBool::new(false));
-    let core = DriverCore::new(workers, cfg.sched.clone());
+    let core = DriverCore::new(workers, cfg.sched.clone(), &cfg.telemetry);
     {
         let core = core.clone();
         let stop = stop.clone();

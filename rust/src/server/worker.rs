@@ -17,7 +17,7 @@ use crate::ali::registry::LibraryRegistry;
 use crate::ali::task::{ProgressSink, StatusBoard};
 use crate::ali::RoutineCtx;
 use crate::comm::Mesh;
-use crate::config::{ComputeConfig, ServerConfig};
+use crate::config::{ComputeConfig, ServerConfig, TelemetryConfig};
 use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend, NativeBackend};
 use crate::elemental::{LocalPanel, MatrixStore};
 use crate::protocol::{
@@ -26,6 +26,10 @@ use crate::protocol::{
 };
 use crate::runtime::PjrtBackend;
 use crate::server::MAX_ACCEPT_ERRORS;
+use crate::telemetry::trace::push_trace_ctx;
+use crate::telemetry::{
+    CounterHandle, MetricsRegistry, TelemetryReport, TelemetrySink, AMBIENT_TRACE,
+};
 use crate::{debugln, errorln, info, warnln, Error, Result};
 
 /// Re-registration backoff: first retry delay, doubling per failure.
@@ -37,6 +41,56 @@ const REG_BACKOFF_START: Duration = Duration::from_millis(50);
 /// failed connect per 2 s; the driver's `Shutdown` (or process exit)
 /// is what ends a worker.
 const REG_BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Per-worker telemetry bundle: a metrics registry (pre-registered
+/// handles for the data-plane hot path), the rank's span sink, and the
+/// sampling knob. Shared by the control loop (spans around routine
+/// execution) and every data-plane thread (frame counters + the
+/// `DataMsg::FetchTelemetry` service the driver pulls from).
+pub struct WorkerTelemetry {
+    pub sink: Arc<TelemetrySink>,
+    pub registry: Arc<MetricsRegistry>,
+    /// Routines this rank has entered (per `RunRoutine` command).
+    pub jobs_run: CounterHandle,
+    /// Slab upload frames / raw frame bytes received on the data plane —
+    /// pre-registered handles: the receive loop pays two relaxed atomic
+    /// adds per frame, no map lookup, no string allocation.
+    pub slab_frames: CounterHandle,
+    pub slab_bytes: CounterHandle,
+    /// `telemetry.sample_every`: record an instant span for every Nth
+    /// slab frame (0 = off).
+    pub sample_every: u32,
+}
+
+impl WorkerTelemetry {
+    fn new(cfg: &TelemetryConfig) -> Arc<WorkerTelemetry> {
+        let registry = Arc::new(MetricsRegistry::new());
+        // Source is retagged to "w<id>" once the driver assigns an id.
+        let sink = Arc::new(TelemetrySink::new("w?", cfg.span_buffer as usize));
+        sink.set_enabled(cfg.enabled);
+        Arc::new(WorkerTelemetry {
+            jobs_run: registry.counter("jobs_run"),
+            slab_frames: registry.counter("slab_frames"),
+            slab_bytes: registry.counter("slab_bytes"),
+            registry,
+            sink,
+            sample_every: cfg.sample_every,
+        })
+    }
+
+    /// This worker's local report (unprefixed; the driver adds `w<id>.`).
+    fn report(&self) -> TelemetryReport {
+        let mut report = TelemetryReport {
+            registry: self.registry.snapshot(),
+            spans: self.sink.snapshot(),
+        };
+        let dropped = self.sink.dropped();
+        if dropped > 0 {
+            report.registry.counters.insert("spans_dropped".into(), dropped);
+        }
+        report
+    }
+}
 
 /// Session state on a worker.
 struct WorkerSession {
@@ -123,6 +177,7 @@ pub fn run_worker(
     driver_worker_addr: &str,
     cfg: ServerConfig,
     compute_cfg: ComputeConfig,
+    tel_cfg: TelemetryConfig,
 ) -> Result<()> {
     // Resolve the [compute] section once; a bad algo string is a startup
     // error, not a per-routine surprise.
@@ -134,6 +189,7 @@ pub fn run_worker(
     // Cancel/progress rendezvous between the control loop (which is busy
     // inside RunRoutine) and the always-responsive data-plane threads.
     let board: Arc<StatusBoard> = Arc::new(StatusBoard::new());
+    let telemetry = WorkerTelemetry::new(&tel_cfg);
 
     // Data-plane accept loop on its own thread. It outlives control
     // re-registrations (the listener, and therefore our advertised data
@@ -141,11 +197,14 @@ pub fn run_worker(
     {
         let store = store.clone();
         let board = board.clone();
+        let telemetry = telemetry.clone();
         let batch_rows = cfg.batch_rows as usize;
         let nodelay = cfg.nodelay;
         std::thread::Builder::new()
             .name("wkr-data".to_string())
-            .spawn(move || serve_data_plane(data_listener, store, board, batch_rows, nodelay))
+            .spawn(move || {
+                serve_data_plane(data_listener, store, board, telemetry, batch_rows, nodelay)
+            })
             .map_err(|e| Error::Server(format!("spawn data thread: {e}")))?;
     }
 
@@ -183,6 +242,9 @@ pub fn run_worker(
                     );
                 }
                 identity = Some((new_id, epoch));
+                // Tag our spans with the assigned rank; the id is stable
+                // across re-registrations so this is effectively once.
+                telemetry.sink.set_source(&format!("w{new_id}"));
                 backoff = REG_BACKOFF_START;
                 failures = 0;
                 conn
@@ -251,6 +313,7 @@ pub fn run_worker(
                 compute,
                 &store,
                 &board,
+                &telemetry,
                 &mut registry,
                 &mut sessions,
                 &mut pending_listeners,
@@ -295,6 +358,7 @@ fn serve_data_plane(
     listener: TcpListener,
     store: Arc<Mutex<MatrixStore>>,
     board: Arc<StatusBoard>,
+    telemetry: Arc<WorkerTelemetry>,
     batch_rows: usize,
     nodelay: bool,
 ) {
@@ -323,8 +387,9 @@ fn serve_data_plane(
         }
         let store = store.clone();
         let board = board.clone();
+        let telemetry = telemetry.clone();
         std::thread::spawn(move || {
-            if let Err(e) = serve_data_conn(conn, store, board, batch_rows) {
+            if let Err(e) = serve_data_conn(conn, store, board, telemetry, batch_rows) {
                 // client hangups are normal; real errors logged
                 debugln!("worker", "data conn ended: {e}");
             }
@@ -355,6 +420,7 @@ fn handle_ctl(
     compute: DistGemmOptions,
     store: &Arc<Mutex<MatrixStore>>,
     board: &Arc<StatusBoard>,
+    telemetry: &WorkerTelemetry,
     registry: &mut LibraryRegistry,
     sessions: &mut HashMap<u64, WorkerSession>,
     pending: &mut HashMap<u64, TcpListener>,
@@ -374,6 +440,7 @@ fn handle_ctl(
             })?;
             let addrs: Vec<String> = peers.iter().map(|p| p.data_addr.clone()).collect();
             let owners: Vec<u32> = peers.iter().map(|p| p.id).collect();
+            let _setup = telemetry.sink.span(AMBIENT_TRACE, "session_setup");
             let mesh = if addrs.len() == 1 {
                 Mesh::solo()
             } else {
@@ -425,8 +492,15 @@ fn handle_ctl(
             // plane can deliver cancels and serve progress queries while
             // this control loop is busy in the routine.
             let cancel = board.begin(job_token);
-            let progress = ProgressSink::new(board.clone(), job_token);
+            let progress = ProgressSink::new(board.clone(), job_token)
+                .with_spans(telemetry.sink.clone());
+            // Trace context: log lines emitted inside the routine carry
+            // the job's trace id; the "compute" span is this rank's share
+            // of the job's cross-process timeline.
+            let _ctx = push_trace_ctx(job_token, &format!("w{my_id}"));
+            telemetry.jobs_run.inc(1);
             let out = {
+                let _compute = telemetry.sink.span(job_token, "compute");
                 let mut guard = store.lock().unwrap();
                 let mut ctx = RoutineCtx {
                     mesh: &mut session.mesh,
@@ -519,6 +593,7 @@ fn serve_data_conn(
     mut conn: TcpStream,
     store: Arc<Mutex<MatrixStore>>,
     board: Arc<StatusBoard>,
+    telemetry: Arc<WorkerTelemetry>,
     batch_rows: usize,
 ) -> Result<()> {
     let mut buf = Vec::new();
@@ -531,6 +606,14 @@ fn serve_data_conn(
         }
         // Hot path first: v5 slab uploads bypass the allocating decoder.
         if buf.first() == Some(&DataMsg::TAG_PUT_SLAB) {
+            // Pre-registered handles: two relaxed atomic adds per frame.
+            telemetry.slab_frames.inc(1);
+            telemetry.slab_bytes.inc(buf.len() as u64);
+            if telemetry.sample_every > 0
+                && telemetry.slab_frames.get() % telemetry.sample_every as u64 == 0
+            {
+                telemetry.sink.mark(AMBIENT_TRACE, "put_slab_frame");
+            }
             let (handle, cols) = match decode_put_slab(&buf, &mut idx_buf, &mut val_buf) {
                 Ok(v) => v,
                 Err(e) => {
@@ -569,6 +652,14 @@ fn serve_data_conn(
             continue;
         }
         match DataMsg::decode(&buf)? {
+            DataMsg::FetchTelemetry => {
+                // Telemetry pull rides the data plane for the same reason
+                // cancel/progress do: the control stream is busy for the
+                // whole life of a routine, and telemetry is most wanted
+                // exactly then. Touches only the registry + span sink.
+                let msg = DataMsg::Telemetry(telemetry.report());
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+            }
             DataMsg::CancelRoutine { token } => {
                 let matched = board.cancel(token);
                 let msg = DataMsg::CancelAck { matched };

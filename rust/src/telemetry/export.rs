@@ -1,0 +1,338 @@
+//! Pull-based telemetry export: the merged report + its renderings.
+//!
+//! The driver answers `ClientMsg::FetchTelemetry` with one
+//! [`TelemetryReport`]: its own registry snapshot merged with every
+//! session worker's (pulled over the data plane, names prefixed
+//! `w{id}.`) plus the concatenated span buffers. The report renders as
+//! a Prometheus-style text page, a JSON snapshot, or a
+//! chrome://tracing-compatible event array (load the file via
+//! `chrome://tracing` / Perfetto to see the per-job timeline).
+
+use std::collections::BTreeMap;
+
+use crate::protocol::{Reader, Writer};
+use crate::telemetry::registry::RegistrySnapshot;
+use crate::telemetry::trace::SpanRecord;
+use crate::Result;
+
+/// Decode guard: a hostile frame must not drive span decoding into an
+/// unbounded allocation (mirrors `Reader::cap_hint` discipline).
+const MAX_WIRE_SPANS: usize = 1 << 20;
+
+/// One registry snapshot + one span buffer — the v8 pull payload, from
+/// a single component (worker reply) or merged (driver reply).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetryReport {
+    pub registry: RegistrySnapshot,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl TelemetryReport {
+    /// Fold another component's report in: registry names are summed
+    /// (prefix them first if they must stay distinct), spans concatenate.
+    pub fn merge(&mut self, other: TelemetryReport) {
+        self.registry.merge(&other.registry);
+        self.spans.extend(other.spans);
+    }
+
+    /// Spans of one job's trace, time-ordered.
+    pub fn spans_for(&self, trace_id: u64) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> =
+            self.spans.iter().filter(|s| s.trace_id == trace_id).cloned().collect();
+        out.sort_by_key(|s| (s.start_us, s.dur_us));
+        out
+    }
+
+    /// Distinct span sources, sorted ("driver", "w0", "w1", ...).
+    pub fn sources(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.spans.iter().map(|s| s.source.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// `[min start, max end]` over the spans (micros), if any.
+    pub fn span_window(&self) -> Option<(u64, u64)> {
+        let lo = self.spans.iter().map(|s| s.start_us).min()?;
+        let hi = self.spans.iter().map(|s| s.end_us()).max()?;
+        Some((lo, hi))
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        self.registry.encode_into(w);
+        w.put_u32(self.spans.len() as u32);
+        for s in &self.spans {
+            s.encode_into(w);
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<TelemetryReport> {
+        let registry = RegistrySnapshot::decode(r)?;
+        let n = r.get_u32()? as usize;
+        if n > MAX_WIRE_SPANS {
+            return Err(crate::Error::Protocol(format!("telemetry report claims {n} spans")));
+        }
+        let mut spans = Vec::with_capacity(r.cap_hint(n, 32));
+        for _ in 0..n {
+            spans.push(SpanRecord::decode(r)?);
+        }
+        Ok(TelemetryReport { registry, spans })
+    }
+
+    /// Prometheus text exposition (counters/gauges plus
+    /// `<phase>_seconds_total` / `<phase>_events_total` pairs).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.registry.counters {
+            let name = sanitize_metric_name(k);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (k, v) in &self.registry.gauges {
+            let name = sanitize_metric_name(k);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (k, v) in &self.registry.phases {
+            let name = sanitize_metric_name(k);
+            out.push_str(&format!(
+                "# TYPE {name}_seconds_total counter\n{name}_seconds_total {}\n",
+                fmt_f64(v.secs)
+            ));
+            out.push_str(&format!(
+                "# TYPE {name}_events_total counter\n{name}_events_total {}\n",
+                v.count
+            ));
+        }
+        out
+    }
+
+    /// JSON snapshot: `{"counters":{},"gauges":{},"phases":{},"spans":[]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        out.push_str(&join_entries(
+            self.registry.counters.iter().map(|(k, v)| (k.as_str(), v.to_string())),
+        ));
+        out.push_str("},\n  \"gauges\": {");
+        out.push_str(&join_entries(
+            self.registry.gauges.iter().map(|(k, v)| (k.as_str(), v.to_string())),
+        ));
+        out.push_str("},\n  \"phases\": {");
+        out.push_str(&join_entries(self.registry.phases.iter().map(|(k, v)| {
+            (k.as_str(), format!("{{\"secs\": {}, \"count\": {}}}", fmt_f64(v.secs), v.count))
+        })));
+        out.push_str("},\n  \"spans\": [");
+        let spans: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"trace_id\": {}, \"name\": \"{}\", \"source\": \"{}\", \
+                     \"start_us\": {}, \"dur_us\": {}}}",
+                    s.trace_id,
+                    json_escape(&s.name),
+                    json_escape(&s.source),
+                    s.start_us,
+                    s.dur_us
+                )
+            })
+            .collect();
+        out.push_str(&spans.join(", "));
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// chrome://tracing "trace event format" JSON: one complete (`"X"`)
+    /// event per span plus thread-name metadata per source.
+    pub fn chrome_trace(&self) -> String {
+        let mut tids: BTreeMap<&str, u64> = BTreeMap::new();
+        for s in &self.spans {
+            let next = tids.len() as u64;
+            tids.entry(s.source.as_str()).or_insert(next);
+        }
+        let mut events: Vec<String> = tids
+            .iter()
+            .map(|(src, tid)| {
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": 1, \"tid\": {tid}, \"name\": \"thread_name\", \
+                     \"args\": {{\"name\": \"{}\"}}}}",
+                    json_escape(src)
+                )
+            })
+            .collect();
+        for s in &self.spans {
+            let tid = tids[s.source.as_str()];
+            events.push(format!(
+                "{{\"ph\": \"X\", \"pid\": 1, \"tid\": {tid}, \"name\": \"{}\", \
+                 \"ts\": {}, \"dur\": {}, \"args\": {{\"trace_id\": {}}}}}",
+                json_escape(&s.name),
+                s.start_us,
+                s.dur_us,
+                s.trace_id
+            ));
+        }
+        format!("[\n{}\n]\n", events.join(",\n"))
+    }
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; everything else
+/// (dots from the `w{id}.` prefixes) becomes `_`.
+fn sanitize_metric_name(s: &str) -> String {
+    let mut out: String = s
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// f64 as JSON-safe text (never NaN/Inf from our accumulators, but be
+/// defensive — JSON has no literals for them).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9}")
+    } else {
+        "0".into()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn join_entries<'a>(entries: impl Iterator<Item = (&'a str, String)>) -> String {
+    let parts: Vec<String> =
+        entries.map(|(k, v)| format!("\"{}\": {}", json_escape(k), v)).collect();
+    parts.join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{MetricsRegistry, PhaseStat};
+
+    fn sample() -> TelemetryReport {
+        let reg = MetricsRegistry::new();
+        reg.counter("w0.frames").inc(3);
+        reg.gauge("sched.queue_depth").set(1);
+        reg.phase("w0.compute").add(std::time::Duration::from_millis(5));
+        TelemetryReport {
+            registry: reg.snapshot(),
+            spans: vec![
+                SpanRecord {
+                    trace_id: 7,
+                    name: "queue_wait".into(),
+                    source: "driver".into(),
+                    start_us: 100,
+                    dur_us: 20,
+                },
+                SpanRecord {
+                    trace_id: 7,
+                    name: "compute".into(),
+                    source: "w0".into(),
+                    start_us: 120,
+                    dur_us: 80,
+                },
+                SpanRecord {
+                    trace_id: 0,
+                    name: "grant".into(),
+                    source: "driver".into(),
+                    start_us: 50,
+                    dur_us: 10,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_wire_roundtrip() {
+        let rep = sample();
+        let mut w = Writer::new();
+        rep.encode_into(&mut w);
+        let bytes = w.into_bytes();
+        let got = TelemetryReport::decode(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got, rep);
+    }
+
+    #[test]
+    fn merge_concatenates_spans_and_sums_registry() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(b);
+        assert_eq!(a.spans.len(), 6);
+        assert_eq!(a.registry.counters["w0.frames"], 6);
+    }
+
+    #[test]
+    fn per_trace_filter_and_window() {
+        let rep = sample();
+        let j7 = rep.spans_for(7);
+        assert_eq!(j7.len(), 2);
+        assert!(j7[0].start_us <= j7[1].start_us, "time-ordered");
+        assert_eq!(rep.span_window(), Some((50, 200)));
+        assert_eq!(rep.sources(), vec!["driver".to_string(), "w0".to_string()]);
+    }
+
+    #[test]
+    fn prometheus_rendering_sanitizes_names() {
+        let text = sample().prometheus();
+        assert!(text.contains("# TYPE w0_frames counter"));
+        assert!(text.contains("w0_frames 3"));
+        assert!(text.contains("sched_queue_depth 1"));
+        assert!(text.contains("w0_compute_seconds_total"));
+        assert!(text.contains("w0_compute_events_total 1"));
+        assert!(!text.contains('.'), "dots must be sanitized away:\n{text}");
+    }
+
+    #[test]
+    fn json_snapshot_is_balanced_and_complete() {
+        let js = sample().to_json();
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = js.matches(open).count();
+            let c = js.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close} in:\n{js}");
+        }
+        assert!(js.contains("\"w0.frames\": 3"));
+        assert!(js.contains("\"queue_wait\""));
+        assert!(js.contains("\"count\": 1"));
+    }
+
+    #[test]
+    fn chrome_trace_has_events_and_thread_names() {
+        let ct = sample().chrome_trace();
+        assert!(ct.starts_with("[\n"));
+        assert!(ct.contains("\"ph\": \"M\""));
+        assert!(ct.contains("\"thread_name\""));
+        assert_eq!(ct.matches("\"ph\": \"X\"").count(), 3);
+        assert!(ct.contains("\"ts\": 120"));
+        // one tid per source, stable across events
+        assert!(ct.contains("\"args\": {\"name\": \"driver\"}"));
+        assert!(ct.contains("\"args\": {\"name\": \"w0\"}"));
+    }
+
+    #[test]
+    fn hostile_span_count_is_rejected() {
+        let mut w = Writer::new();
+        RegistrySnapshot {
+            counters: Default::default(),
+            gauges: Default::default(),
+            phases: BTreeMap::from([("p".to_string(), PhaseStat { secs: 1.0, count: 1 })]),
+        }
+        .encode_into(&mut w);
+        w.put_u32(u32::MAX); // absurd span count
+        let bytes = w.into_bytes();
+        assert!(TelemetryReport::decode(&mut Reader::new(&bytes)).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Unified telemetry plane (protocol v8).
+//!
+//! The paper's entire evaluation is a phase breakdown — every Alchemist
+//! call is reported as **send / compute / receive** (Table 1, Fig 3) —
+//! but before this subsystem those numbers only existed inside offline
+//! benches. This module is the live measurement substrate:
+//!
+//! * [`registry`] — a central [`MetricsRegistry`] of named counters,
+//!   gauges and phase accumulators with **pre-registered atomic
+//!   handles**: hot paths resolve a name once at setup and then pay a
+//!   single relaxed atomic op per event (no `Mutex<BTreeMap<String,_>>`
+//!   lock, no `String` allocation). The registry also serves compat
+//!   views ([`CountersView`]/[`PhasesView`]) with the legacy
+//!   `metrics::Counters`/`metrics::PhaseTimes` API so cold call sites
+//!   did not have to change.
+//! * [`trace`] — cross-process job tracing. Every job's `job_token`
+//!   (minted at Submit by the driver) doubles as its **trace id**; it is
+//!   already propagated through `WorkerCtl::RunRoutine` and the
+//!   data-plane cancel/progress frames, so driver and every worker rank
+//!   record [`SpanRecord`]s (queue-wait, validation, compute,
+//!   teardown, …) into bounded per-component [`TelemetrySink`] ring
+//!   buffers that stitch into one per-job timeline. Wall-clock span
+//!   timestamps (unix micros) make the records comparable across
+//!   processes on one host.
+//! * [`export`] — the pull side: [`TelemetryReport`] (one registry
+//!   snapshot + one span buffer) merges across driver + ranks and
+//!   renders as a Prometheus-style text page, a JSON snapshot, or a
+//!   chrome://tracing-compatible span export.
+//!
+//! Overhead budget: a disabled sink is one relaxed atomic load per span
+//! site; an enabled one is a short critical section on a `VecDeque`
+//! (bounded by `telemetry.span_buffer`). Counter handles are one
+//! `fetch_add(Relaxed)`. `benches/micro_hotpaths.rs` asserts the
+//! data-plane total stays under 2%.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::TelemetryReport;
+pub use registry::{
+    CounterHandle, CountersView, GaugeHandle, MetricsRegistry, PhaseHandle, PhaseStat,
+    PhasesView, RegistrySnapshot,
+};
+pub use trace::{
+    current_trace, push_trace_ctx, unix_micros, SpanGuard, SpanRecord, TelemetrySink,
+    TraceCtxGuard, AMBIENT_TRACE,
+};

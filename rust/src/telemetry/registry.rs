@@ -1,0 +1,388 @@
+//! Central metrics registry with pre-registered atomic handles.
+//!
+//! Registration (`counter`/`gauge`/`phase`) takes a short lock on a name
+//! map and hands back an `Arc`'d atomic cell; after that every event is
+//! one relaxed atomic op with zero allocation. Snapshots clone the name
+//! maps once and read each cell — safe to take while hot paths write.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::protocol::{Reader, Writer};
+use crate::Result;
+
+/// Pre-registered monotonic counter: `inc` is one `fetch_add(Relaxed)`.
+#[derive(Debug, Clone, Default)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    pub fn inc(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Pre-registered point-in-time level (can move both ways); same
+/// surface as `metrics::Gauge` so bundle fields could swap types.
+#[derive(Debug, Clone, Default)]
+pub struct GaugeHandle(Arc<AtomicI64>);
+
+impl GaugeHandle {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, value: i64) {
+        self.0.store(value, Ordering::Relaxed);
+    }
+
+    /// Raise to `value` if higher (high-water marks).
+    pub fn set_max(&self, value: i64) {
+        self.0.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Accumulated duration + event count for one named phase.
+#[derive(Debug, Default)]
+pub struct PhaseCell {
+    nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Pre-registered phase accumulator: `add` is two relaxed atomic adds.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseHandle(Arc<PhaseCell>);
+
+impl PhaseHandle {
+    pub fn add(&self, d: Duration) {
+        self.0.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_secs(&self, s: f64) {
+        self.0.nanos.fetch_add((s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time reading of one phase accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PhaseStat {
+    pub secs: f64,
+    pub count: u64,
+}
+
+/// Named counters/gauges/phases. Instantiable (one per component —
+/// driver scheduler, each worker) so in-process deployments never
+/// double-count; process-wide singletons (`metrics::transfer_metrics`)
+/// embed their own instance.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, CounterHandle>>,
+    gauges: Mutex<BTreeMap<String, GaugeHandle>>,
+    phases: Mutex<BTreeMap<String, PhaseHandle>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) the counter `name`; the returned handle is
+    /// the hot-path entry point.
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn phase(&self, name: &str) -> PhaseHandle {
+        let mut m = self.phases.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges =
+            self.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect();
+        let phases = self
+            .phases
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), PhaseStat { secs: v.secs(), count: v.count() }))
+            .collect();
+        RegistrySnapshot { counters, gauges, phases }
+    }
+}
+
+/// Legacy-`metrics::Counters`-shaped view over a registry: string-keyed
+/// `add`/`get` (one lock + possible allocation per call) for cold call
+/// sites; hot paths hold [`CounterHandle`]s into the same cells instead.
+#[derive(Debug, Clone)]
+pub struct CountersView {
+    reg: Arc<MetricsRegistry>,
+}
+
+impl CountersView {
+    pub fn new(reg: Arc<MetricsRegistry>) -> Self {
+        CountersView { reg }
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        self.reg.counter(name).inc(n);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.reg.counter(name).get()
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.reg.snapshot().counters
+    }
+}
+
+/// Legacy-`metrics::PhaseTimes`-shaped view over a registry.
+#[derive(Debug, Clone)]
+pub struct PhasesView {
+    reg: Arc<MetricsRegistry>,
+}
+
+impl PhasesView {
+    pub fn new(reg: Arc<MetricsRegistry>) -> Self {
+        PhasesView { reg }
+    }
+
+    pub fn add(&self, name: &str, d: Duration) {
+        self.reg.phase(name).add(d);
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        Duration::from_secs_f64(self.get_secs(name))
+    }
+
+    pub fn get_secs(&self, name: &str) -> f64 {
+        self.reg.phase(name).secs()
+    }
+
+    pub fn total(&self) -> Duration {
+        let total: f64 = self.snapshot().values().sum();
+        Duration::from_secs_f64(total)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.reg
+            .snapshot()
+            .phases
+            .into_iter()
+            .map(|(k, v)| (k, v.secs))
+            .collect()
+    }
+}
+
+/// Point-in-time copy of a registry — the v8 wire payload unit. Merging
+/// sums counters/gauges and adds phase time+count; `prefixed` namespaces
+/// every name (the driver tags worker snapshots `w{id}.` before merge).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub phases: BTreeMap<String, PhaseStat>,
+}
+
+impl RegistrySnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.phases.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.phases {
+            let e = self.phases.entry(k.clone()).or_default();
+            e.secs += v.secs;
+            e.count += v.count;
+        }
+    }
+
+    pub fn prefixed(self, prefix: &str) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self.counters.into_iter().map(|(k, v)| (format!("{prefix}{k}"), v)).collect(),
+            gauges: self.gauges.into_iter().map(|(k, v)| (format!("{prefix}{k}"), v)).collect(),
+            phases: self.phases.into_iter().map(|(k, v)| (format!("{prefix}{k}"), v)).collect(),
+        }
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        w.put_u32(self.counters.len() as u32);
+        for (k, v) in &self.counters {
+            w.put_str(k);
+            w.put_u64(*v);
+        }
+        w.put_u32(self.gauges.len() as u32);
+        for (k, v) in &self.gauges {
+            w.put_str(k);
+            w.put_i64(*v);
+        }
+        w.put_u32(self.phases.len() as u32);
+        for (k, v) in &self.phases {
+            w.put_str(k);
+            w.put_f64(v.secs);
+            w.put_u64(v.count);
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<RegistrySnapshot> {
+        let mut out = RegistrySnapshot::default();
+        let n = r.get_u32()? as usize;
+        for _ in 0..n {
+            let k = r.get_str()?;
+            out.counters.insert(k, r.get_u64()?);
+        }
+        let n = r.get_u32()? as usize;
+        for _ in 0..n {
+            let k = r.get_str()?;
+            out.gauges.insert(k, r.get_i64()?);
+        }
+        let n = r.get_u32()? as usize;
+        for _ in 0..n {
+            let k = r.get_str()?;
+            let secs = r.get_f64()?;
+            let count = r.get_u64()?;
+            out.phases.insert(k, PhaseStat { secs, count });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_with_views() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let h = reg.counter("bytes");
+        h.inc(100);
+        h.inc(28);
+        let view = CountersView::new(reg.clone());
+        assert_eq!(view.get("bytes"), 128);
+        view.add("bytes", 2);
+        assert_eq!(h.get(), 130);
+        assert_eq!(view.get("missing"), 0);
+    }
+
+    #[test]
+    fn gauge_handle_full_surface() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("depth");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(7);
+        g.set_max(3);
+        assert_eq!(g.get(), 7);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+        g.add(-5);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn phases_accumulate_with_counts() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let p = reg.phase("send");
+        p.add(Duration::from_millis(10));
+        p.add_secs(0.015);
+        assert!((p.secs() - 0.025).abs() < 1e-6);
+        assert_eq!(p.count(), 2);
+        let view = PhasesView::new(reg);
+        assert!((view.get_secs("send") - 0.025).abs() < 1e-6);
+        view.add("compute", Duration::from_millis(75));
+        assert!((view.total().as_secs_f64() - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn snapshot_merge_and_prefix() {
+        let reg = MetricsRegistry::new();
+        reg.counter("frames").inc(3);
+        reg.gauge("depth").set(2);
+        reg.phase("compute").add(Duration::from_millis(5));
+        let a = reg.snapshot().prefixed("w0.");
+        assert_eq!(a.counters.get("w0.frames"), Some(&3));
+
+        let mut merged = a.clone();
+        merged.merge(&a);
+        assert_eq!(merged.counters["w0.frames"], 6);
+        assert_eq!(merged.gauges["w0.depth"], 4);
+        assert_eq!(merged.phases["w0.compute"].count, 2);
+        assert!(merged.phases["w0.compute"].secs > 0.009);
+    }
+
+    #[test]
+    fn snapshot_wire_roundtrip() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").inc(7);
+        reg.gauge("b").set(-3);
+        reg.phase("c").add(Duration::from_micros(1500));
+        let snap = reg.snapshot();
+        let mut w = Writer::new();
+        snap.encode_into(&mut w);
+        let bytes = w.into_bytes();
+        let got = RegistrySnapshot::decode(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got, snap);
+        assert!(!got.is_empty());
+        assert!(RegistrySnapshot::default().is_empty());
+    }
+
+    #[test]
+    fn truncated_snapshot_is_protocol_error() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").inc(1);
+        let mut w = Writer::new();
+        reg.snapshot().encode_into(&mut w);
+        let bytes = w.into_bytes();
+        assert!(RegistrySnapshot::decode(&mut Reader::new(&bytes[..bytes.len() - 3])).is_err());
+    }
+}

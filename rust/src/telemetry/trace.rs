@@ -1,0 +1,320 @@
+//! Cross-process span recording.
+//!
+//! A **trace id** is the job's `job_token` — minted at Submit on the
+//! driver, stamped on `WorkerCtl::RunRoutine` and the data-plane
+//! cancel/progress frames, so every component that sees the job can tag
+//! its spans without new wire plumbing. Spans carry wall-clock start
+//! times (unix micros) so driver and worker records stitch into one
+//! timeline even across process boundaries on the same host.
+//!
+//! Components each own a bounded [`TelemetrySink`] ring buffer (one per
+//! worker rank, one on the driver, one in the client context); the v8
+//! `FetchTelemetry` pull drains copies of them toward the driver.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::protocol::{Reader, Writer};
+use crate::Result;
+
+/// Trace id for spans not tied to any job (grants, session setup,
+/// data-plane streams): they appear in the full timeline export but are
+/// excluded from per-job filtering.
+pub const AMBIENT_TRACE: u64 = 0;
+
+/// Wall-clock microseconds since the unix epoch.
+pub fn unix_micros() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+/// One recorded span. `source` identifies the recording component
+/// ("driver", "w0", "client"); `trace_id` groups the spans of one job
+/// (0 = ambient, see [`AMBIENT_TRACE`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub name: String,
+    pub source: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRecord {
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+
+    pub fn encode_into(&self, w: &mut Writer) {
+        w.put_u64(self.trace_id);
+        w.put_str(&self.name);
+        w.put_str(&self.source);
+        w.put_u64(self.start_us);
+        w.put_u64(self.dur_us);
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<SpanRecord> {
+        Ok(SpanRecord {
+            trace_id: r.get_u64()?,
+            name: r.get_str()?,
+            source: r.get_str()?,
+            start_us: r.get_u64()?,
+            dur_us: r.get_u64()?,
+        })
+    }
+}
+
+/// Bounded per-component span buffer. Oldest spans are evicted once the
+/// ring holds `cap` records (`telemetry.span_buffer`); evictions are
+/// counted, never blocked on. Disabled sinks cost one relaxed atomic
+/// load per call site.
+#[derive(Debug)]
+pub struct TelemetrySink {
+    source: Mutex<String>,
+    enabled: AtomicBool,
+    cap: usize,
+    spans: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl TelemetrySink {
+    pub fn new(source: &str, cap: usize) -> TelemetrySink {
+        TelemetrySink {
+            source: Mutex::new(source.to_string()),
+            enabled: AtomicBool::new(true),
+            cap: cap.max(1),
+            spans: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Re-tag the sink (workers learn their rank only at registration).
+    pub fn set_source(&self, source: &str) {
+        *self.source.lock().unwrap() = source.to_string();
+    }
+
+    pub fn source(&self) -> String {
+        self.source.lock().unwrap().clone()
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record a completed span. `start_us` is wall-clock
+    /// ([`unix_micros`] taken when the phase began).
+    pub fn record(&self, trace_id: u64, name: &str, start_us: u64, dur_us: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let rec = SpanRecord {
+            trace_id,
+            name: name.to_string(),
+            source: self.source(),
+            start_us,
+            dur_us,
+        };
+        let mut q = self.spans.lock().unwrap();
+        if q.len() >= self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(rec);
+    }
+
+    /// Start a span now; it records itself on drop (or [`SpanGuard::done`]).
+    pub fn span<'a>(&'a self, trace_id: u64, name: &'a str) -> SpanGuard<'a> {
+        SpanGuard { sink: self, trace_id, name, start_us: unix_micros(), t: Instant::now() }
+    }
+
+    /// An instant marker (zero-duration span) — per-iteration progress
+    /// ticks from `ProgressSink` land here.
+    pub fn mark(&self, trace_id: u64, name: &str) {
+        self.record(trace_id, name, unix_micros(), 0);
+    }
+
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn spans_for(&self, trace_id: u64) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().iter().filter(|s| s.trace_id == trace_id).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+    }
+}
+
+/// RAII span: measures from construction to drop.
+pub struct SpanGuard<'a> {
+    sink: &'a TelemetrySink,
+    trace_id: u64,
+    name: &'a str,
+    start_us: u64,
+    t: Instant,
+}
+
+impl SpanGuard<'_> {
+    /// Explicit finish (same as drop; reads better at call sites).
+    pub fn done(self) {}
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let dur_us = self.t.elapsed().as_micros() as u64;
+        self.sink.record(self.trace_id, self.name, self.start_us, dur_us);
+    }
+}
+
+thread_local! {
+    /// (trace id, component tag) of the innermost active span on this
+    /// thread — injected into log lines by `logging::log`.
+    static TRACE_CTX: RefCell<Vec<(u64, String)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Enter a trace context for the current thread; log lines emitted until
+/// the guard drops carry `trace=<id>@<tag>`. Nests (inner wins).
+pub fn push_trace_ctx(trace_id: u64, tag: &str) -> TraceCtxGuard {
+    TRACE_CTX.with(|c| c.borrow_mut().push((trace_id, tag.to_string())));
+    TraceCtxGuard { _priv: () }
+}
+
+/// The innermost active trace context, if any.
+pub fn current_trace() -> Option<(u64, String)> {
+    TRACE_CTX.with(|c| c.borrow().last().cloned())
+}
+
+/// Pops its trace context on drop.
+pub struct TraceCtxGuard {
+    _priv: (),
+}
+
+impl Drop for TraceCtxGuard {
+    fn drop(&mut self) {
+        TRACE_CTX.with(|c| {
+            c.borrow_mut().pop();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_and_filter() {
+        let sink = TelemetrySink::new("driver", 16);
+        sink.record(7, "queue_wait", 1000, 50);
+        sink.record(7, "execute", 1050, 200);
+        sink.record(9, "execute", 2000, 10);
+        sink.mark(7, "progress:lanczos");
+        assert_eq!(sink.len(), 4);
+        let j7 = sink.spans_for(7);
+        assert_eq!(j7.len(), 3);
+        assert!(j7.iter().all(|s| s.source == "driver"));
+        assert_eq!(j7[1].end_us(), 1250);
+        assert_eq!(j7[2].dur_us, 0);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let sink = TelemetrySink::new("w0", 3);
+        for i in 0..5u64 {
+            sink.record(i, "s", i * 10, 1);
+        }
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.dropped(), 2);
+        let spans = sink.snapshot();
+        assert_eq!(spans[0].trace_id, 2); // 0 and 1 evicted
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TelemetrySink::new("w0", 8);
+        sink.set_enabled(false);
+        sink.record(1, "s", 0, 1);
+        {
+            let _g = sink.span(1, "guarded");
+        }
+        assert!(sink.is_empty());
+        sink.set_enabled(true);
+        sink.mark(1, "s");
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn span_guard_measures() {
+        let sink = TelemetrySink::new("client", 8);
+        {
+            let g = sink.span(3, "send");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            g.done();
+        }
+        let spans = sink.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].dur_us >= 1_000, "dur {}", spans[0].dur_us);
+        assert!(spans[0].start_us > 0);
+        assert_eq!(spans[0].name, "send");
+    }
+
+    #[test]
+    fn source_retag_applies_to_new_spans() {
+        let sink = TelemetrySink::new("w?", 8);
+        sink.record(1, "a", 0, 1);
+        sink.set_source("w3");
+        sink.record(1, "b", 1, 1);
+        let spans = sink.snapshot();
+        assert_eq!(spans[0].source, "w?");
+        assert_eq!(spans[1].source, "w3");
+    }
+
+    #[test]
+    fn trace_ctx_nests_and_restores() {
+        assert!(current_trace().is_none());
+        {
+            let _a = push_trace_ctx(5, "w0");
+            assert_eq!(current_trace(), Some((5, "w0".into())));
+            {
+                let _b = push_trace_ctx(6, "w0");
+                assert_eq!(current_trace().unwrap().0, 6);
+            }
+            assert_eq!(current_trace().unwrap().0, 5);
+        }
+        assert!(current_trace().is_none());
+    }
+
+    #[test]
+    fn span_wire_roundtrip() {
+        let s = SpanRecord {
+            trace_id: 42,
+            name: "compute".into(),
+            source: "w1".into(),
+            start_us: 1_700_000_000_000_000,
+            dur_us: 12_345,
+        };
+        let mut w = Writer::new();
+        s.encode_into(&mut w);
+        let bytes = w.into_bytes();
+        let got = SpanRecord::decode(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got, s);
+    }
+}

@@ -1,0 +1,216 @@
+//! Integration: the v8 telemetry plane — `FetchTelemetry` merges the
+//! driver's registry with every session worker's (`w{id}.` prefixes) and
+//! stitches the cross-process span timeline; `JobHandle::phase_breakdown`
+//! reduces a job's trace to the paper's send/compute/receive row; v7
+//! clients negotiate down and are refused the new surface cleanly.
+
+use alchemist::ali::params::ParamsBuilder;
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{
+    frame, ClientMsg, DriverMsg, LayoutKind, PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
+};
+use alchemist::server::start_server;
+use alchemist::telemetry::AMBIENT_TRACE;
+use alchemist::workload::random_matrix;
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    c
+}
+
+fn rand(seed: u64, r: usize, c: usize) -> DenseMatrix {
+    DenseMatrix::from_vec(r, c, random_matrix(seed, r, c)).unwrap()
+}
+
+/// A full snapshot after a GEMM job carries every component's registry
+/// (scheduler, transfer, compute, each worker rank) and a span timeline
+/// with driver + worker sources, and all three renderings are well-formed.
+#[test]
+fn fetch_telemetry_merges_all_ranks() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "telemetry").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(1, 30, 7);
+    let b = rand(2, 7, 5);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let al_c = wrappers::gemm(&ac, &al_a, &al_b).unwrap();
+    let _ = ac.fetch_dense(&al_c).unwrap();
+
+    let report = ac.fetch_telemetry(None).unwrap();
+
+    // Driver-side scheduler registry, prefixed "sched.".
+    assert!(report.registry.counters.get("sched.jobs_done").copied().unwrap_or(0) >= 1);
+    assert!(report.registry.counters.get("sched.jobs_submitted").copied().unwrap_or(0) >= 1);
+    // Transfer registry (process-wide singleton, exported by the driver).
+    assert!(report.registry.counters.get("transfer.rows_sent").copied().unwrap_or(0) >= 37);
+    // Every session worker's registry, prefixed "w{id}.".
+    for id in 0..2u32 {
+        let key = format!("w{id}.jobs_run");
+        assert!(
+            report.registry.counters.get(&key).copied().unwrap_or(0) >= 1,
+            "missing/zero {key}; counters: {:?}",
+            report.registry.counters
+        );
+        assert!(
+            report.registry.counters.get(&format!("w{id}.slab_frames")).copied().unwrap_or(0)
+                >= 1
+        );
+    }
+
+    // The span timeline has driver and worker sources, plus ambient
+    // (grant / session_setup) spans only the full snapshot exposes.
+    let sources = report.sources();
+    assert!(sources.contains(&"driver".to_string()), "sources: {sources:?}");
+    assert!(sources.iter().any(|s| s.starts_with('w')), "sources: {sources:?}");
+    assert!(report.spans.iter().any(|s| s.trace_id == AMBIENT_TRACE && s.name == "grant"));
+    assert!(report.spans.iter().any(|s| s.name == "compute" && s.source.starts_with('w')));
+
+    // Renderings: Prometheus text, JSON snapshot, chrome trace.
+    let prom = report.prometheus();
+    assert!(prom.contains("sched_jobs_done"), "{prom}");
+    assert!(prom.contains("w0_jobs_run"), "{prom}");
+    let js = report.to_json();
+    assert_eq!(js.matches('{').count(), js.matches('}').count());
+    assert!(js.contains("\"sched.jobs_done\""));
+    let ct = report.chrome_trace();
+    assert!(ct.contains("\"thread_name\""));
+
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// Per-job view: the trace of one tsvd job is internally consistent —
+/// one trace id, time-ordered, queue_wait + execute accounting for the
+/// whole span window — and `phase_breakdown` reports the paper's row.
+#[test]
+fn phase_breakdown_partitions_job_wall() {
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "breakdown").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+
+    let a = rand(5, 48, 10);
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let h = ac
+        .run_async(
+            "elemlib",
+            "truncated_svd",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("k", 3).build(),
+        )
+        .unwrap();
+    while !h.is_finished().unwrap() {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // The job's merged trace: single trace id, driver + >=1 worker rank,
+    // time-ordered, with the driver's three phases present.
+    let report = ac.fetch_telemetry(Some(h.job_id)).unwrap();
+    assert!(!report.spans.is_empty());
+    let trace = report.spans[0].trace_id;
+    assert_ne!(trace, AMBIENT_TRACE);
+    assert!(report.spans.iter().all(|s| s.trace_id == trace), "{:?}", report.spans);
+    assert!(report.spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+    let sources = report.sources();
+    assert!(sources.contains(&"driver".to_string()));
+    assert!(sources.iter().any(|s| s.starts_with('w')), "sources: {sources:?}");
+    for name in ["validate", "queue_wait", "execute"] {
+        assert!(
+            report.spans.iter().any(|s| s.name == name && s.source == "driver"),
+            "missing driver span {name}: {:?}",
+            report.spans
+        );
+    }
+    // Worker ranks contribute their compute share of the same trace.
+    assert!(report.spans.iter().any(|s| s.name == "compute" && s.source.starts_with('w')));
+
+    // The paper-shaped row. queue_wait and execute are recorded to
+    // exactly partition the job's submit->terminal wall time, so their
+    // sum must reconstruct the trace window (same-host clocks).
+    let bd = h.phase_breakdown().unwrap();
+    assert!(bd.compute_s > 0.0, "{bd:?}");
+    assert!(bd.queue_wait_s >= 0.0 && bd.validate_s >= 0.0, "{bd:?}");
+    assert!(bd.send_s > 0.0, "{bd:?}");
+    assert!(bd.total_s > 0.0, "{bd:?}");
+    let sum = bd.queue_wait_s + bd.compute_s;
+    let err = (sum - bd.total_s).abs();
+    assert!(
+        err <= 0.1 * bd.total_s + 0.005,
+        "queue_wait + compute = {sum:.6}s should approximate the {:.6}s window ({bd:?})",
+        bd.total_s
+    );
+
+    let _ = h.wait().unwrap();
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// `telemetry.enabled = false` silences every span sink (driver and
+/// workers) while the metric registries keep counting.
+#[test]
+fn disabling_telemetry_silences_spans_not_metrics() {
+    let mut c = cfg(1);
+    c.telemetry.enabled = false;
+    let srv = start_server(&c).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "quiet").unwrap();
+    ac.request_workers(1).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(9, 16, 4);
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    assert!(wrappers::fro_norm(&ac, &al).unwrap() > 0.0);
+
+    let report = ac.fetch_telemetry(None).unwrap();
+    assert!(report.spans.is_empty(), "spans despite telemetry.enabled=false: {:?}", report.spans);
+    assert!(report.registry.counters.get("sched.jobs_done").copied().unwrap_or(0) >= 1);
+    assert!(report.registry.counters.get("w0.jobs_run").copied().unwrap_or(0) >= 1);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// A v7 client against the v8 server: the handshake negotiates down to
+/// v7, the pre-v8 surface keeps working, and `FetchTelemetry` on the v7
+/// session is refused with a versioned error instead of a bad frame.
+#[test]
+fn v7_client_interop_and_fetch_refused() {
+    assert!(PROTOCOL_VERSION >= TELEMETRY_PROTOCOL_VERSION);
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    let mut call = |msg: &ClientMsg| -> DriverMsg {
+        frame::write_frame(&mut conn, &msg.encode()).unwrap();
+        DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap()
+    };
+
+    match call(&ClientMsg::Handshake { app_name: "v7".into(), version: 7 }) {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 7),
+        other => panic!("expected ack, got {other:?}"),
+    }
+    match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }) {
+        DriverMsg::WorkersGranted { workers } => assert_eq!(workers.len(), 1),
+        other => panic!("expected grant, got {other:?}"),
+    }
+    // v7 surface still works on the v8 server...
+    match call(&ClientMsg::ServerStatus) {
+        DriverMsg::Status { total_workers, .. } => assert_eq!(total_workers, 1),
+        other => panic!("expected status, got {other:?}"),
+    }
+    // ...but the v8 pull is a typed refusal naming the needed version.
+    match call(&ClientMsg::FetchTelemetry { job_id: 0 }) {
+        DriverMsg::Err { message } => {
+            assert!(message.contains("protocol v8"), "{message}");
+            assert!(message.contains("v7"), "{message}");
+        }
+        other => panic!("expected version refusal, got {other:?}"),
+    }
+    // The refusal must not poison the session.
+    match call(&ClientMsg::Stop) {
+        DriverMsg::Stopped => {}
+        other => panic!("expected Stopped, got {other:?}"),
+    }
+    srv.shutdown();
+}

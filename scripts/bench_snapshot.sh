@@ -1,19 +1,21 @@
 #!/usr/bin/env bash
 # Snapshot the perf-trajectory benchmarks into a single JSON file
-# (BENCH_PR5.json at the repo root).
+# (BENCH_PR6.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
 # Spark comparison), ablate_collectives (all-reduce + barrier), and
 # ablate_scheduler (submission disciplines + the pool_recovery
 # fault-injection scenario: recovered-worker count and fault->readmit
-# latency), each with its machine-readable --json output, then merges.
+# latency), each with its machine-readable --json output, then captures
+# a live v8 telemetry snapshot (merged registry + span timeline) from a
+# headless alchemist_top run, and merges everything.
 #
 # Usage: scripts/bench_snapshot.sh [output.json]
 #   env: REPS=N        bench.reps override (default 1 for a quick pass)
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR5.json}"
+OUT="${1:-BENCH_PR6.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -38,6 +40,10 @@ cargo bench --bench ablate_scheduler -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/scheduler.json"
 
+echo "== bench_snapshot: telemetry snapshot (alchemist_top --headless) =="
+cargo run --release --example alchemist_top -- \
+    --headless --jobs 4 --snapshot-json "$TMP/telemetry.json"
+
 GIT_SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo unknown)"
 DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 
@@ -48,7 +54,8 @@ DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
     printf '  "reps": %s,\n' "$REPS"
     printf '  "table1_matmul": %s,\n' "$(cat "$TMP/table1.json")"
     printf '  "ablate_collectives": %s,\n' "$(cat "$TMP/collectives.json")"
-    printf '  "ablate_scheduler": %s\n' "$(cat "$TMP/scheduler.json")"
+    printf '  "ablate_scheduler": %s,\n' "$(cat "$TMP/scheduler.json")"
+    printf '  "telemetry": %s\n' "$(cat "$TMP/telemetry.json")"
     printf '}\n'
 } > "$ROOT/$OUT"
 

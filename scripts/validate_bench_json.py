@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Validate the shape of the checked-in BENCH_PR*.json snapshots.
+
+The perf trajectory lives in these files (one per PR that moved it), and
+downstream tooling reads them blindly, so CI checks every snapshot —
+whether a schema seed full of nulls or a populated run from
+scripts/bench_snapshot.sh — against the row shapes the bench --json
+emitters (and, since PR 6, TelemetryReport::to_json) actually produce.
+Values may be null (seed) or numbers (populated); *missing or misnamed
+keys* are what this catches.
+
+Usage: python3 scripts/validate_bench_json.py [FILE ...]
+       (no args: validates every BENCH_PR*.json at the repo root)
+
+Stdlib only; exits non-zero listing every problem found.
+"""
+
+import glob
+import json
+import os
+import sys
+
+NUM = (int, float)
+
+
+def is_num_or_null(v):
+    return v is None or (isinstance(v, NUM) and not isinstance(v, bool))
+
+
+class Checker:
+    def __init__(self, path):
+        self.path = path
+        self.errors = []
+
+    def err(self, where, msg):
+        self.errors.append(f"{self.path}: {where}: {msg}")
+
+    def require_keys(self, obj, keys, where):
+        if not isinstance(obj, dict):
+            self.err(where, f"expected object, got {type(obj).__name__}")
+            return False
+        missing = [k for k in keys if k not in obj]
+        if missing:
+            self.err(where, f"missing keys {missing} (has {sorted(obj)})")
+        return not missing
+
+    def rows(self, doc, section, required_keys, numeric_keys):
+        """A section must be a list of objects with the given keys."""
+        rows = doc.get(section)
+        if not isinstance(rows, list) or not rows:
+            self.err(section, "expected a non-empty array of rows")
+            return
+        for i, row in enumerate(rows):
+            where = f"{section}[{i}]"
+            if not self.require_keys(row, required_keys, where):
+                continue
+            for k in numeric_keys:
+                if k in row and not is_num_or_null(row[k]):
+                    self.err(where, f"{k!r} should be a number or null, got {row[k]!r}")
+
+    def telemetry(self, doc):
+        """The merged v8 snapshot (TelemetryReport::to_json shape)."""
+        tel = doc.get("telemetry")
+        if not self.require_keys(tel, ["counters", "gauges", "phases", "spans"], "telemetry"):
+            return
+        for section in ("counters", "gauges"):
+            vals = tel[section]
+            if not isinstance(vals, dict):
+                self.err(f"telemetry.{section}", "expected an object")
+                continue
+            for k, v in vals.items():
+                if not is_num_or_null(v):
+                    self.err(f"telemetry.{section}.{k}", f"expected number or null, got {v!r}")
+        if isinstance(tel["phases"], dict):
+            for k, v in tel["phases"].items():
+                self.require_keys(v, ["secs", "count"], f"telemetry.phases.{k}")
+        else:
+            self.err("telemetry.phases", "expected an object")
+        if isinstance(tel["spans"], list):
+            for i, span in enumerate(tel["spans"]):
+                self.require_keys(
+                    span,
+                    ["trace_id", "name", "source", "start_us", "dur_us"],
+                    f"telemetry.spans[{i}]",
+                )
+        else:
+            self.err("telemetry.spans", "expected an array")
+
+    def run(self):
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            self.err("parse", str(e))
+            return self.errors
+        self.require_keys(doc, ["generated_at", "git", "reps"], "top-level")
+        if not isinstance(doc, dict):
+            return self.errors
+
+        self.rows(
+            doc,
+            "table1_matmul",
+            ["m", "n", "k", "nodes", "send_s", "recv_s"],
+            ["m", "n", "k", "nodes", "send_s", "ring_compute_s", "allgather_compute_s", "recv_s"],
+        )
+        for i, row in enumerate(doc.get("ablate_collectives") or []):
+            where = f"ablate_collectives[{i}]"
+            if not isinstance(row, dict) or "ranks" not in row:
+                self.err(where, "row needs a 'ranks' key")
+            elif not any(k in row for k in ("naive_ms", "ring_ms", "barrier_us")):
+                self.err(where, "row needs naive_ms/ring_ms or barrier_us")
+        # Sections that joined the trajectory later are validated only
+        # when present, so older snapshots (PR3...) stay green.
+        if "ablate_scheduler" in doc:
+            self.rows(doc, "ablate_scheduler", ["scenario"], ["secs", "jobs_per_s", "recovery_ms"])
+        if "telemetry" in doc:
+            self.telemetry(doc)
+        return self.errors
+
+
+def main(argv):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv or sorted(glob.glob(os.path.join(root, "BENCH_PR*.json")))
+    if not paths:
+        print("validate_bench_json: no BENCH_PR*.json found", file=sys.stderr)
+        return 1
+    failed = False
+    for path in paths:
+        errors = Checker(path).run()
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"FAIL {e}", file=sys.stderr)
+        else:
+            print(f"ok {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
