@@ -2,16 +2,25 @@
 //! (paper: 400 GB, 5,120,000 x 10,000; scaled ~105 MB, 131,072 x 100 —
 //! same 1/64-ish scale, same extreme row-count geometry) from the client
 //! executors to the Alchemist workers, over the paper's grid of
-//! (#Spark nodes) x (#Alchemist nodes) with at most 64 total.
+//! (#Spark nodes) x (#Alchemist nodes) with at most 64 total, then over
+//! the PR 7 transport x compression sweep (tcp / uds / striped-N x
+//! none / delta / f32).
 //!
-//! Run: `cargo bench --bench table2_transfer_tall`
+//! Run: `cargo bench --bench table2_transfer_tall [-- --json out.json]`
 
-use alchemist::bench_support::{bench_config, run_transfer_grid};
+use alchemist::bench_support::{
+    bench_config, json_out_path, run_transfer_grid, run_transport_sweep, write_json_rows,
+};
 use alchemist::workload::geometries::TALL;
 
 fn main() {
     let base = bench_config();
-    run_transfer_grid("Table 2 (tall-skinny)", TALL.0 as u64, TALL.1 as u64, &base);
+    let label = "Table 2 (tall-skinny)";
+    let mut rows = run_transfer_grid(label, TALL.0 as u64, TALL.1 as u64, &base);
+    rows.extend(run_transport_sweep(label, TALL.0 as u64, TALL.1 as u64, &base));
     println!("\npaper shape: times roughly flat across the grid (row-message count, not");
     println!("parallelism, dominates tall-skinny sends), high variability.");
+    if let Some(path) = json_out_path() {
+        write_json_rows(&path, &rows);
+    }
 }

@@ -2,16 +2,24 @@
 //! (paper: 400 GB, 40,000 x 1,280,000; scaled ~105 MB, 1,024 x 12,800 —
 //! 128x fewer rows than Table 2's matrix at equal bytes) over the same
 //! node grid. Expected shape (paper §4.3): wide is faster than tall at
-//! equal bytes, and improves as Alchemist workers are added.
+//! equal bytes, and improves as Alchemist workers are added. Also runs
+//! the PR 7 transport x compression sweep on the wide geometry.
 //!
-//! Run: `cargo bench --bench table3_transfer_wide`
+//! Run: `cargo bench --bench table3_transfer_wide [-- --json out.json]`
 
-use alchemist::bench_support::{bench_config, run_transfer_grid};
+use alchemist::bench_support::{
+    bench_config, json_out_path, run_transfer_grid, run_transport_sweep, write_json_rows,
+};
 use alchemist::workload::geometries::WIDE;
 
 fn main() {
     let base = bench_config();
-    run_transfer_grid("Table 3 (short-wide)", WIDE.0 as u64, WIDE.1 as u64, &base);
+    let label = "Table 3 (short-wide)";
+    let mut rows = run_transfer_grid(label, WIDE.0 as u64, WIDE.1 as u64, &base);
+    rows.extend(run_transport_sweep(label, WIDE.0 as u64, WIDE.1 as u64, &base));
     println!("\npaper shape: short-wide transfers beat tall-skinny at equal bytes (fewer,");
     println!("larger row messages) and speed up with more Alchemist workers.");
+    if let Some(path) = json_out_path() {
+        write_json_rows(&path, &rows);
+    }
 }

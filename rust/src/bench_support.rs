@@ -123,7 +123,13 @@ pub mod harness {
 /// executor-parallel send of a rows x cols matrix for every
 /// (#client nodes, #alchemist nodes) pair in the paper's grid (<= 64
 /// total), printing the same matrix of seconds the paper tabulates.
-pub fn run_transfer_grid(label: &str, rows: u64, cols: u64, base: &crate::config::Config) {
+/// Returns `--json` rows (scenario `transfer_grid`) for the snapshot.
+pub fn run_transfer_grid(
+    label: &str,
+    rows: u64,
+    cols: u64,
+    base: &crate::config::Config,
+) -> Vec<String> {
     use crate::client::AlchemistContext;
     use crate::metrics::Timer;
     use crate::server::start_server;
@@ -137,6 +143,7 @@ pub fn run_transfer_grid(label: &str, rows: u64, cols: u64, base: &crate::config
     let mut headers: Vec<String> = vec!["#spark \\ #alch".into()];
     headers.extend(NODE_GRID.iter().map(|a| a.to_string()));
     let mut table = harness::Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut json_rows: Vec<String> = Vec::new();
 
     for &s_nodes in NODE_GRID.iter() {
         let mut cells = vec![s_nodes.to_string()];
@@ -175,11 +182,101 @@ pub fn run_transfer_grid(label: &str, rows: u64, cols: u64, base: &crate::config
                 sc.shutdown();
                 server.shutdown();
             }
-            cells.push(format!("{:.2}", total / reps as f64));
+            let secs = total / reps as f64;
+            cells.push(format!("{secs:.2}"));
+            json_rows.push(format!(
+                "{{\"scenario\":\"transfer_grid\",\"table\":\"{label}\",\"spark\":{s_nodes},\
+                 \"alch\":{a_nodes},\"secs\":{secs:.4}}}"
+            ));
         }
         table.row(cells);
     }
     table.print();
+    json_rows
+}
+
+/// Transport x compression sweep shared by the Table 2 / Table 3 benches:
+/// push the same rows x cols matrix from 2 executors to 2 workers once
+/// per (transport, wire codec) combination and report logical MB/s. The
+/// `--json` rows (scenario `transport_sweep`) feed
+/// `scripts/bench_snapshot.sh`; the tcp-vs-uds pair is the PR 7 loopback
+/// fast-path check.
+pub fn run_transport_sweep(
+    label: &str,
+    rows: u64,
+    cols: u64,
+    base: &crate::config::Config,
+) -> Vec<String> {
+    use crate::client::AlchemistContext;
+    use crate::metrics::Timer;
+    use crate::server::start_server;
+    use crate::sparklet::{IndexedRowMatrix, SparkletContext};
+
+    let mb = (rows * cols * 8) as f64 / 1e6;
+    println!(
+        "\n=== {label}: transport x compression sweep \
+         ({rows} x {cols}, ~{mb:.0} MB, 2 executors -> 2 workers) ===\n"
+    );
+    // (row label, [transfer].transport, stripes, compression)
+    let mut combos: Vec<(&str, &str, u32, &str)> = vec![
+        ("tcp", "tcp", 1, "none"),
+        ("tcp", "tcp", 1, "delta"),
+        ("tcp", "tcp", 1, "f32"),
+    ];
+    if cfg!(unix) {
+        combos.push(("uds", "uds", 1, "none"));
+        combos.push(("uds", "uds", 1, "delta"));
+    }
+    combos.push(("striped-4", "auto", 4, "none"));
+    combos.push(("striped-4", "auto", 4, "delta"));
+
+    let mut cfg = base.clone();
+    cfg.server.workers = 2;
+    cfg.server.gemm_backend = "native".into(); // transfer-only bench
+    cfg.sparklet.executors = 2;
+    cfg.sparklet.default_parallelism = 2;
+    cfg.sparklet.executor_mem_mb = 4096;
+    cfg.sparklet.task_overhead_us = 0;
+    let reps = base.bench.reps.max(1);
+
+    let mut table = harness::Table::new(&["transport", "compression", "secs", "MB/s"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &(name, transport, stripes, comp) in &combos {
+        let mut total = 0.0;
+        for rep in 0..reps {
+            let server = start_server(&cfg).expect("server");
+            let sc = SparkletContext::new(&cfg.sparklet).expect("sparklet");
+            let a = IndexedRowMatrix::random(&sc, 700 + rep as u64, rows, cols, 2, None)
+                .expect("gen");
+            let mut ac = AlchemistContext::connect(&server.driver_addr, "transport-sweep")
+                .expect("connect");
+            ac.transfer.transport = transport.into();
+            ac.transfer.stripes = stripes;
+            ac.transfer.compression = comp.into();
+            ac.request_workers(2).expect("workers");
+            let t = Timer::start();
+            let al = a.to_alchemist(&sc, &ac).expect("send");
+            total += t.elapsed_secs();
+            assert_eq!(al.rows(), rows);
+            ac.stop().ok();
+            sc.shutdown();
+            server.shutdown();
+        }
+        let secs = total / reps as f64;
+        table.row(vec![
+            name.to_string(),
+            comp.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", mb / secs),
+        ]);
+        json_rows.push(format!(
+            "{{\"scenario\":\"transport_sweep\",\"table\":\"{label}\",\"transport\":\"{name}\",\
+             \"compression\":\"{comp}\",\"secs\":{secs:.4},\"mb_per_s\":{:.1}}}",
+            mb / secs
+        ));
+    }
+    table.print();
+    json_rows
 }
 
 /// Parse the optional `--json <path>` bench argument (sibling of the

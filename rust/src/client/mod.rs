@@ -19,8 +19,9 @@ use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
-    RoutineDescriptor, WorkerInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+    RoutineDescriptor, WireCodec, WorkerInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
     ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
+    TRANSPORT_PROTOCOL_VERSION,
 };
 use crate::telemetry::TelemetryReport;
 use crate::{Error, Result};
@@ -243,6 +244,10 @@ pub struct AlchemistContext {
     nodelay: bool,
     /// Protocol version negotiated at handshake (`min(client, server)`).
     negotiated: u16,
+    /// Wire-codec capability mask the server advertised in the v9
+    /// `TransferCaps` exchange (0 for ≤ v8 sessions — which also keeps
+    /// [`wire_codec`](Self::wire_codec) at `None` by construction).
+    server_caps: u32,
 }
 
 impl AlchemistContext {
@@ -265,6 +270,24 @@ impl AlchemistContext {
                  (we speak v{MIN_PROTOCOL_VERSION}..=v{PROTOCOL_VERSION})"
             )));
         }
+        // v9 capability exchange: advertise every codec we can encode and
+        // remember which the server can decode. ≤ v8 servers never see
+        // this frame and the mask stays 0 (= plain TCP/uncompressed).
+        let mut server_caps = 0u32;
+        if version >= TRANSPORT_PROTOCOL_VERSION {
+            frame::write_frame(
+                &mut conn,
+                &ClientMsg::TransferCaps { codecs: WireCodec::mask_all() }.encode(),
+            )?;
+            match DriverMsg::decode(&frame::read_frame(&mut conn)?)?.into_result()? {
+                DriverMsg::TransferCaps { codecs } => server_caps = codecs,
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "unexpected TransferCaps reply {other:?}"
+                    )))
+                }
+            }
+        }
         Ok(AlchemistContext {
             ctl: Mutex::new(conn),
             session_id,
@@ -274,6 +297,7 @@ impl AlchemistContext {
             phases: PhaseTimes::new(),
             nodelay: true,
             negotiated: version,
+            server_caps,
         })
     }
 
@@ -287,15 +311,41 @@ impl AlchemistContext {
         self.negotiated >= SLAB_PROTOCOL_VERSION
     }
 
+    /// Codec capability mask the server advertised (0 on ≤ v8 sessions).
+    pub fn transfer_caps(&self) -> u32 {
+        self.server_caps
+    }
+
+    /// The wire codec this session's transfers actually use: the
+    /// configured `[transfer] compression`, gated on the session speaking
+    /// v9 *and* the server having advertised that codec in the
+    /// `TransferCaps` exchange. The lossy `f32` downcast is never
+    /// auto-negotiated — it reaches here only via explicit config, and
+    /// even then only when the server claims it.
+    pub fn wire_codec(&self) -> WireCodec {
+        if self.negotiated < TRANSPORT_PROTOCOL_VERSION {
+            return WireCodec::None;
+        }
+        let codec = WireCodec::parse(&self.transfer.compression).unwrap_or(WireCodec::None);
+        if self.server_caps & codec.bit() != 0 {
+            codec
+        } else {
+            WireCodec::None
+        }
+    }
+
     /// Transfer options for this context: config knobs + the negotiated
-    /// wire format (slab frames only once the session speaks v5).
+    /// wire format (slab frames only once the session speaks v5; a codec
+    /// only once `TransferCaps` confirmed it).
     fn transfer_opts(&self) -> transfer::TransferOptions {
-        transfer::TransferOptions::new(
+        let mut opts = transfer::TransferOptions::new(
             &self.transfer,
             self.batch_rows,
             self.nodelay,
             self.negotiated >= SLAB_PROTOCOL_VERSION,
-        )
+        );
+        opts.codec = self.wire_codec();
+        opts
     }
 
     fn call(&self, msg: &ClientMsg) -> Result<DriverMsg> {
@@ -384,14 +434,16 @@ impl AlchemistContext {
     }
 
     /// Finish a transfer: ask every owner to confirm receipt; errors if
-    /// the counts don't add up to the full matrix.
+    /// the counts don't add up to the full matrix. Dials through the
+    /// configured transport, so co-located workers are confirmed over
+    /// the same UDS fast path the rows took.
     pub fn finish_put(&self, m: &AlMatrix) -> Result<u64> {
         let t = Timer::start();
+        let opts = self.transfer_opts();
         let mut total = 0u64;
         for &id in &m.meta.layout.owners {
             let info = self.worker_info(id)?;
-            let mut s = TcpStream::connect(&info.data_addr)?;
-            s.set_nodelay(true)?;
+            let mut s = transfer::dial_worker(info, &opts)?;
             frame::write_frame(&mut s, &DataMsg::PutDone { handle: m.meta.handle }.encode())?;
             match DataMsg::decode(&frame::read_frame(&mut s)?)? {
                 DataMsg::PutComplete { rows_received, .. } => total += rows_received,

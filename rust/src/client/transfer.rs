@@ -11,21 +11,44 @@
 //! * full batches flow through bounded channels to sender threads, so
 //!   routing/encode overlaps socket I/O across all owners (backpressure
 //!   stalls are recorded per owner in [`TransferMetrics`]);
-//! * each owner's frames go through exactly one thread and one
+//! * each *lane*'s frames go through exactly one thread and one
 //!   connection, preserving the per-connection ordering the `PutDone`
 //!   barrier relies on;
-//! * fetches run one thread per owner, merged through a mutex-protected
-//!   sink that borrows each row straight out of the decoded slab.
+//! * fetches run one thread per owner stream, merged through a
+//!   mutex-protected sink that borrows each row straight out of the
+//!   decoded slab.
+//!
+//! Protocol v9 adds the transfer plane v2 on top (all per-call knobs on
+//! [`TransferOptions`]):
+//!
+//! * **pluggable transports** — connections are dialed through a
+//!   [`Connector`] ([`crate::transport`]): plain TCP, the Unix-domain-
+//!   socket fast path (auto-selected for co-located workers), or either
+//!   one striped;
+//! * **striping** — `stripes` lanes per owner. Pushes round-robin full
+//!   batches over an owner's lanes and every lane runs its own `PutDone`
+//!   barrier; fetches split each owner's row range into contiguous
+//!   sub-ranges ([`stripe_ranges`]) and deliver them in stripe order, so
+//!   the merged per-owner stream is index-ordered exactly like a single
+//!   connection's;
+//! * **wire compression** — a negotiated [`WireCodec`] applied inside the
+//!   sender/fetch threads (`PutSlabZ`/`SlabBatchZ` frames), so the codec
+//!   overlaps socket I/O; `comp_raw_bytes`/`comp_wire_bytes` record the
+//!   achieved ratio and per-transport byte counters split the volume.
 
 use std::collections::HashMap;
-use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::Mutex;
 
 use crate::config::TransferConfig;
 use crate::elemental::Layout;
 use crate::metrics::{transfer_metrics, Timer, TransferMetrics};
-use crate::protocol::{frame, DataMsg, LayoutKind, MatrixMeta, WireRow, WorkerInfo, Writer};
+use crate::protocol::{
+    compress_slab, decompress_slab, frame, DataMsg, LayoutKind, MatrixMeta, WireCodec, WireRow,
+    WorkerInfo, Writer,
+};
+use crate::transport::striped::stripe_ranges;
+use crate::transport::{connector_for, Connector, Endpoint, Transport, TransportChoice};
 use crate::{Error, Result};
 
 /// Per-call tuning for the transfer helpers. Build one from the
@@ -37,7 +60,7 @@ pub struct TransferOptions {
     pub batch_rows: usize,
     /// TCP_NODELAY on the data-plane sockets (both push and fetch).
     pub nodelay: bool,
-    /// Sender threads for `push_rows`; owners are multiplexed round-robin
+    /// Sender threads for `push_rows`; lanes are multiplexed round-robin
     /// across them.
     pub sender_threads: usize,
     /// Target value bytes per frame; a batch flushes at this size even if
@@ -49,6 +72,15 @@ pub struct TransferOptions {
     /// Use the v5 slab wire format. `false` keeps the v4 per-row
     /// `PutRows`/`RowBatch` frames for sessions negotiated at v4.
     pub use_slab: bool,
+    /// How data-plane connections are dialed (`[transfer] transport`).
+    pub transport: TransportChoice,
+    /// Connections per owner (`[transfer] stripes`; 1 = classic).
+    pub stripes: usize,
+    /// Wire codec for slab frames. [`TransferOptions::new`] always starts
+    /// at `None`; the ACI sets it only after the v9 `TransferCaps`
+    /// exchange confirmed the server speaks the configured codec, so a
+    /// bare `TransferOptions` can never emit frames a peer won't decode.
+    pub codec: WireCodec,
 }
 
 impl TransferOptions {
@@ -60,7 +92,15 @@ impl TransferOptions {
             slab_bytes: cfg.slab_bytes as usize,
             channel_depth: cfg.channel_depth.max(1) as usize,
             use_slab,
+            transport: TransportChoice::parse(&cfg.transport).unwrap_or_default(),
+            stripes: cfg.stripes.max(1) as usize,
+            codec: WireCodec::None,
         }
+    }
+
+    /// True when slab frames should cross the wire compressed.
+    fn compressed(&self) -> bool {
+        self.use_slab && self.codec != WireCodec::None
     }
 }
 
@@ -70,30 +110,44 @@ impl Default for TransferOptions {
     }
 }
 
+/// A worker's data-plane endpoint: its TCP address plus the UDS path it
+/// advertised (empty for ≤ v8 servers and remote mesh peers).
+pub fn worker_endpoint(w: &WorkerInfo) -> Endpoint {
+    Endpoint { tcp_addr: w.data_addr.clone(), uds_addr: w.uds_addr.clone() }
+}
+
+/// Dial one worker's data plane with the configured transport — the
+/// single-connection entry point (`finish_put`, ad-hoc control frames).
+pub fn dial_worker(w: &WorkerInfo, opts: &TransferOptions) -> Result<Transport> {
+    connector_for(opts.transport, opts.nodelay).dial(&worker_endpoint(w))
+}
+
 /// One routed batch in flight between the router and a sender thread:
-/// `indices[i]`'s row lives at `values[i*cols .. (i+1)*cols]`.
+/// `indices[i]`'s row lives at `values[i*cols .. (i+1)*cols]`, bound for
+/// lane `slot * stripes + stripe`.
 struct RouteBatch {
     slot: usize,
+    stripe: usize,
     indices: Vec<u64>,
     values: Vec<f64>,
 }
 
 impl RouteBatch {
     fn empty(slot: usize) -> RouteBatch {
-        RouteBatch { slot, indices: Vec::new(), values: Vec::new() }
+        RouteBatch { slot, stripe: 0, indices: Vec::new(), values: Vec::new() }
     }
 }
 
-/// Resolve the data-plane address of every owner slot up front (one
+/// Resolve the data-plane endpoint of every owner slot up front (one
 /// hash-map build instead of a linear `workers` scan per flush).
-fn resolve_owner_addrs(workers: &[WorkerInfo], owners: &[u32]) -> Result<Vec<String>> {
+fn resolve_owner_endpoints(workers: &[WorkerInfo], owners: &[u32]) -> Result<Vec<Endpoint>> {
     let by_id: HashMap<u32, &WorkerInfo> = workers.iter().map(|w| (w.id, w)).collect();
     owners
         .iter()
         .map(|id| {
             by_id
                 .get(id)
-                .map(|w| w.data_addr.clone())
+                .map(|w| worker_endpoint(w))
                 .ok_or_else(|| Error::Server(format!("no address for worker {id}")))
         })
         .collect()
@@ -103,16 +157,18 @@ fn pipeline_closed() -> Error {
     Error::Server("transfer pipeline closed early (sender failed)".into())
 }
 
-/// Hand a full batch to its owner's sender thread, blocking (and timing
-/// the stall) when that owner's pipeline is saturated.
+/// Hand a full batch to its lane's sender thread, blocking (and timing
+/// the stall) when that lane's pipeline is saturated.
 fn dispatch(
     txs: &[mpsc::SyncSender<RouteBatch>],
     owners: &[u32],
+    stripes: usize,
     metrics: &TransferMetrics,
     batch: RouteBatch,
 ) -> Result<()> {
     let owner = owners[batch.slot];
-    let tx = &txs[batch.slot % txs.len()];
+    let lane = batch.slot * stripes + batch.stripe;
+    let tx = &txs[lane % txs.len()];
     match tx.try_send(batch) {
         Ok(()) => Ok(()),
         Err(mpsc::TrySendError::Full(batch)) => {
@@ -134,37 +190,84 @@ fn slab_to_rows(indices: Vec<u64>, values: Vec<f64>, cols: usize) -> Vec<WireRow
         .collect()
 }
 
-/// One sender thread: drains its bounded channel, lazily opening one
-/// connection (and one reusable encode buffer) per owner slot it serves,
-/// then runs the per-connection `PutDone` barrier when the channel closes.
+/// Per-transport byte split + compression accounting, tallied locally in
+/// each worker thread and folded into the shared counters once at the
+/// end (one relaxed add per handle, never on the per-frame path).
+#[derive(Default)]
+struct WireTally {
+    tcp: u64,
+    uds: u64,
+    comp_raw: u64,
+    comp_wire: u64,
+}
+
+impl WireTally {
+    fn frame(&mut self, t: &Transport, n: u64) {
+        match t.kind() {
+            crate::transport::TransportKind::Tcp => self.tcp += n,
+            crate::transport::TransportKind::Uds => self.uds += n,
+        }
+    }
+
+    fn publish_sent(&self, metrics: &TransferMetrics) {
+        metrics.tcp_bytes_sent.inc(self.tcp);
+        metrics.uds_bytes_sent.inc(self.uds);
+        metrics.comp_raw_bytes.inc(self.comp_raw);
+        metrics.comp_wire_bytes.inc(self.comp_wire);
+    }
+
+    fn publish_recv(&self, metrics: &TransferMetrics) {
+        metrics.tcp_bytes_recv.inc(self.tcp);
+        metrics.uds_bytes_recv.inc(self.uds);
+        metrics.comp_raw_bytes.inc(self.comp_raw);
+        metrics.comp_wire_bytes.inc(self.comp_wire);
+    }
+}
+
+/// One sender thread: drains its bounded channel, lazily dialing one
+/// connection (and one reusable encode buffer) per *lane* it serves, then
+/// runs the per-connection `PutDone` barrier when the channel closes.
 ///
 /// The barrier matters: a worker processes frames on one connection in
 /// order, so acking a `PutDone` here guarantees every row this call sent
 /// has been stored before `push_rows` returns. Without it, a subsequent
 /// `finish_put` on a *fresh* connection could overtake in-flight rows
-/// (TCP orders within, not across, connections).
+/// (TCP orders within, not across, connections). With striping the same
+/// invariant holds per lane — every lane is drained and acked, so the
+/// union of all lanes' rows is durable when `push_rows` returns.
 fn run_sender(
     rx: mpsc::Receiver<RouteBatch>,
-    slot_addrs: &[String],
+    connector: &dyn Connector,
+    endpoints: &[Endpoint],
+    stripes: usize,
     handle: u64,
     cols: u32,
     opts: &TransferOptions,
 ) -> Result<u64> {
-    let mut conns: HashMap<usize, TcpStream> = HashMap::new();
+    let mut conns: HashMap<usize, Transport> = HashMap::new();
     let mut wbuf = Writer::new();
+    let mut zbuf: Vec<u8> = Vec::new();
     let mut frames = 0u64;
     let mut bytes = 0u64;
+    let mut tally = WireTally::default();
     while let Ok(batch) = rx.recv() {
-        let slot = batch.slot;
-        if !conns.contains_key(&slot) {
-            let s = TcpStream::connect(&slot_addrs[slot])?;
-            if opts.nodelay {
-                s.set_nodelay(true)?;
-            }
-            conns.insert(slot, s);
+        let lane = batch.slot * stripes + batch.stripe;
+        if !conns.contains_key(&lane) {
+            conns.insert(lane, connector.dial(&endpoints[batch.slot])?);
         }
-        let conn = conns.get_mut(&slot).unwrap();
-        let msg = if opts.use_slab {
+        let conn = conns.get_mut(&lane).unwrap();
+        let msg = if opts.compressed() {
+            compress_slab(opts.codec, &batch.indices, &batch.values, &mut zbuf);
+            tally.comp_raw += 8 * (batch.indices.len() + batch.values.len()) as u64;
+            tally.comp_wire += zbuf.len() as u64;
+            DataMsg::PutSlabZ {
+                handle,
+                codec: opts.codec.tag(),
+                count: batch.indices.len() as u32,
+                cols,
+                payload: std::mem::take(&mut zbuf),
+            }
+        } else if opts.use_slab {
             DataMsg::PutSlab { handle, indices: batch.indices, cols, values: batch.values }
         } else {
             DataMsg::PutRows {
@@ -172,12 +275,17 @@ fn run_sender(
                 rows: slab_to_rows(batch.indices, batch.values, cols as usize),
             }
         };
-        bytes += frame::write_frame_with(conn, &mut wbuf, |w| msg.encode_into(w))? as u64;
+        let n = conn.send_frame(&mut wbuf, |w| msg.encode_into(w))? as u64;
+        bytes += n;
         frames += 1;
+        tally.frame(conn, n);
+        if let DataMsg::PutSlabZ { payload, .. } = msg {
+            zbuf = payload; // reclaim the compression buffer
+        }
     }
     for conn in conns.values_mut() {
         let done = DataMsg::PutDone { handle };
-        frame::write_frame_with(conn, &mut wbuf, |w| done.encode_into(w))?;
+        conn.send_frame(&mut wbuf, |w| done.encode_into(w))?;
         match DataMsg::decode(&frame::read_frame(conn)?)? {
             DataMsg::PutComplete { .. } => {}
             DataMsg::Err { message } => return Err(Error::Server(message)),
@@ -190,6 +298,7 @@ fn run_sender(
     let metrics = transfer_metrics();
     metrics.bytes_sent.inc(bytes);
     metrics.frames_sent.inc(frames);
+    tally.publish_sent(metrics);
     Ok(frames)
 }
 
@@ -214,9 +323,12 @@ pub fn push_rows<V: AsRef<[f64]>>(
     let layout = Layout::from_desc(&meta.layout, meta.rows)?;
     let owners = &meta.layout.owners;
     let cols = meta.cols as usize;
-    let slot_addrs = resolve_owner_addrs(workers, owners)?;
+    let endpoints = resolve_owner_endpoints(workers, owners)?;
+    let connector = connector_for(opts.transport, opts.nodelay);
 
-    let threads = opts.sender_threads.max(1).min(owners.len().max(1));
+    let stripes = opts.stripes.max(1);
+    let lanes = owners.len().max(1) * stripes;
+    let threads = opts.sender_threads.max(1).min(lanes);
     let batch_rows = opts.batch_rows.max(1);
     // flush a batch once its value slab reaches slab_bytes (but always
     // accept at least one row per batch, however wide)
@@ -231,13 +343,24 @@ pub fn push_rows<V: AsRef<[f64]>>(
         for _ in 0..threads {
             let (tx, rx) = mpsc::sync_channel::<RouteBatch>(opts.channel_depth.max(1));
             txs.push(tx);
-            let slot_addrs = &slot_addrs;
-            handles.push(
-                scope.spawn(move || run_sender(rx, slot_addrs, meta.handle, cols as u32, opts)),
-            );
+            let endpoints = &endpoints;
+            let connector = connector.as_ref();
+            handles.push(scope.spawn(move || {
+                run_sender(rx, connector, endpoints, stripes, meta.handle, cols as u32, opts)
+            }));
         }
 
         let mut pending: Vec<RouteBatch> = (0..owners.len()).map(RouteBatch::empty).collect();
+        // next stripe per owner slot — full batches round-robin over the
+        // owner's lanes so a fat pipe is filled by `stripes` connections
+        let mut rr = vec![0usize; owners.len()];
+        let mut flush = |batch: &mut RouteBatch, rr: &mut [usize]| -> Result<()> {
+            let slot = batch.slot;
+            let mut full = std::mem::replace(batch, RouteBatch::empty(slot));
+            full.stripe = rr[slot];
+            rr[slot] = (rr[slot] + 1) % stripes;
+            dispatch(&txs, owners, stripes, metrics, full)
+        };
         let mut route_err: Option<Error> = None;
         for (index, values) in rows {
             let values = values.as_ref();
@@ -261,8 +384,7 @@ pub fn push_rows<V: AsRef<[f64]>>(
             b.values.extend_from_slice(values);
             rows_sent += 1;
             if b.indices.len() >= batch_rows || b.values.len() >= value_cap {
-                let full = std::mem::replace(b, RouteBatch::empty(slot));
-                if let Err(e) = dispatch(&txs, owners, metrics, full) {
+                if let Err(e) = flush(b, &mut rr) {
                     route_err = Some(e);
                     break;
                 }
@@ -270,17 +392,17 @@ pub fn push_rows<V: AsRef<[f64]>>(
         }
         if route_err.is_none() {
             for slot in 0..owners.len() {
-                let b = std::mem::replace(&mut pending[slot], RouteBatch::empty(slot));
-                if b.indices.is_empty() {
+                if pending[slot].indices.is_empty() {
                     continue;
                 }
-                if let Err(e) = dispatch(&txs, owners, metrics, b) {
+                if let Err(e) = flush(&mut pending[slot], &mut rr) {
                     route_err = Some(e);
                     break;
                 }
             }
         }
         // close the channels so senders drain and run their PutDone barrier
+        drop(flush);
         drop(txs);
 
         let mut frames = 0u64;
@@ -307,50 +429,80 @@ pub fn push_rows<V: AsRef<[f64]>>(
     Ok((rows_sent, frames_sent))
 }
 
-/// Fetch one owner's rows, feeding each decoded row (borrowed straight
-/// from the frame's slab) to the shared sink.
-fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
-    addr: &str,
+/// Stream one owner connection's rows for `[start, end)`, feeding every
+/// decoded frame to `feed(indices, row-major values)` (borrowed straight
+/// out of the receive buffers). Handles all three reply shapes: plain
+/// slabs, compressed slabs (decompressed into reusable buffers here, so
+/// the codec runs on this fetch thread), and v4 row batches.
+fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
+    connector: &dyn Connector,
+    ep: &Endpoint,
     meta: &MatrixMeta,
     start: u64,
     end: u64,
     opts: &TransferOptions,
-    sink: &Mutex<F>,
+    mut feed: F,
 ) -> Result<u64> {
-    let mut s = TcpStream::connect(addr)?;
-    if opts.nodelay {
-        s.set_nodelay(true)?;
-    }
+    let mut t = connector.dial(ep)?;
     let handle = meta.handle;
-    let req = if opts.use_slab {
+    let req = if opts.compressed() {
+        DataMsg::GetRowsSlabZ { handle, start, end, codec: opts.codec.tag() }
+    } else if opts.use_slab {
         DataMsg::GetRowsSlab { handle, start, end }
     } else {
         DataMsg::GetRows { handle, start, end }
     };
-    frame::write_frame(&mut s, &req.encode())?;
+    let mut wbuf = Writer::new();
+    t.send_frame(&mut wbuf, |w| req.encode_into(w))?;
     let mut buf = Vec::new();
+    let mut ibuf: Vec<u64> = Vec::new();
+    let mut vbuf: Vec<f64> = Vec::new();
     let mut seen = 0u64;
     let mut frames = 0u64;
     let mut bytes = 0u64;
+    let mut tally = WireTally::default();
+    let want_cols = meta.cols;
+    let check_cols = |cols: u32| -> Result<()> {
+        if u64::from(cols) != want_cols {
+            return Err(Error::Protocol(format!(
+                "fetched slab is {cols} wide, matrix has {want_cols} cols"
+            )));
+        }
+        Ok(())
+    };
     loop {
-        let n = frame::read_frame_into(&mut s, &mut buf)?;
+        let n = t.recv_frame_into(&mut buf)?;
         frames += 1;
-        bytes += n as u64 + 4; // + header, mirroring the send-side count
+        let framed = n as u64 + 4; // + header, mirroring the send-side count
+        bytes += framed;
+        tally.frame(&t, framed);
         match DataMsg::decode(&buf)? {
-            DataMsg::SlabBatch { indices, cols, values, .. } => {
-                let cols = cols as usize;
-                let mut guard = sink.lock().unwrap();
-                let f = &mut *guard;
-                for (i, &index) in indices.iter().enumerate() {
-                    f(index, &values[i * cols..(i + 1) * cols])?;
-                    seen += 1;
+            DataMsg::SlabBatchZ { codec, count, cols, payload, .. } => {
+                // the worker echoes the requested codec; the payload is
+                // self-describing, so decode doesn't need it — but a
+                // mismatch means crossed streams
+                if codec != opts.codec.tag() {
+                    return Err(Error::Protocol(format!(
+                        "SlabBatchZ codec {codec} != requested {}",
+                        opts.codec.tag()
+                    )));
                 }
+                check_cols(cols)?;
+                decompress_slab(&payload, count as usize, cols as usize, &mut ibuf, &mut vbuf)?;
+                tally.comp_raw += 8 * (ibuf.len() + vbuf.len()) as u64;
+                tally.comp_wire += payload.len() as u64;
+                feed(&ibuf, &vbuf)?;
+                seen += count as u64;
+            }
+            DataMsg::SlabBatch { indices, cols, values, .. } => {
+                check_cols(cols)?;
+                seen += indices.len() as u64;
+                feed(&indices, &values)?;
             }
             DataMsg::RowBatch { rows, .. } => {
-                let mut guard = sink.lock().unwrap();
-                let f = &mut *guard;
                 for row in rows {
-                    f(row.index, &row.values)?;
+                    check_cols(row.values.len() as u32)?;
+                    feed(&[row.index], &row.values)?;
                     seen += 1;
                 }
             }
@@ -362,6 +514,83 @@ fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
     let metrics = transfer_metrics();
     metrics.bytes_recv.inc(bytes);
     metrics.frames_recv.inc(frames);
+    tally.publish_recv(metrics);
+    Ok(seen)
+}
+
+/// Fetch one owner's rows on a single connection, feeding each decoded
+/// row to the shared sink (one lock per frame, not per row).
+fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
+    connector: &dyn Connector,
+    ep: &Endpoint,
+    meta: &MatrixMeta,
+    start: u64,
+    end: u64,
+    opts: &TransferOptions,
+    sink: &Mutex<F>,
+) -> Result<u64> {
+    let cols = meta.cols as usize;
+    fetch_range(connector, ep, meta, start, end, opts, |indices, values| {
+        let mut guard = sink.lock().unwrap();
+        let f = &mut *guard;
+        for (i, &index) in indices.iter().enumerate() {
+            f(index, &values[i * cols..(i + 1) * cols])?;
+        }
+        Ok(())
+    })
+}
+
+/// Fetch one owner's rows over `stripes` connections: the range is split
+/// into contiguous sub-ranges, each lane buffers its sub-range, and the
+/// buffers are delivered to the sink in stripe order. Workers stream a
+/// range in ascending global-index order, so the merged per-owner stream
+/// is deterministic and index-sorted — exactly the row sequence a single
+/// connection would have produced.
+fn fetch_one_striped<F: FnMut(u64, &[f64]) -> Result<()>>(
+    connector: &dyn Connector,
+    ep: &Endpoint,
+    meta: &MatrixMeta,
+    start: u64,
+    end: u64,
+    opts: &TransferOptions,
+    sink: &Mutex<F>,
+) -> Result<u64> {
+    let ranges = stripe_ranges(start, end, opts.stripes);
+    let bufs: Vec<Result<(Vec<u64>, Vec<f64>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(s, e)| {
+                scope.spawn(move || -> Result<(Vec<u64>, Vec<f64>)> {
+                    let mut idx: Vec<u64> = Vec::new();
+                    let mut vals: Vec<f64> = Vec::new();
+                    fetch_range(connector, ep, meta, s, e, opts, |indices, values| {
+                        idx.extend_from_slice(indices);
+                        vals.extend_from_slice(values);
+                        Ok(())
+                    })?;
+                    Ok((idx, vals))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Server("fetch stripe thread panicked".into())))
+            })
+            .collect()
+    });
+    let cols = meta.cols as usize;
+    let mut seen = 0u64;
+    let mut guard = sink.lock().unwrap();
+    let f = &mut *guard;
+    for r in bufs {
+        let (idx, vals) = r?;
+        for (i, &index) in idx.iter().enumerate() {
+            f(index, &vals[i * cols..(i + 1) * cols])?;
+            seen += 1;
+        }
+    }
     Ok(seen)
 }
 
@@ -384,16 +613,25 @@ pub fn fetch_rows<F>(
 where
     F: FnMut(u64, &[f64]) -> Result<()> + Send,
 {
-    let mut slot_addrs = resolve_owner_addrs(workers, &meta.layout.owners)?;
+    let mut endpoints = resolve_owner_endpoints(workers, &meta.layout.owners)?;
     if meta.layout.kind == LayoutKind::Replicated {
-        slot_addrs.truncate(1);
+        endpoints.truncate(1);
     }
+    let connector = connector_for(opts.transport, opts.nodelay);
+    let striped = opts.stripes > 1;
     let sink = Mutex::new(sink);
     let results: Vec<Result<u64>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(slot_addrs.len());
-        for addr in &slot_addrs {
+        let mut handles = Vec::with_capacity(endpoints.len());
+        for ep in &endpoints {
             let sink = &sink;
-            handles.push(scope.spawn(move || fetch_one(addr, meta, start, end, opts, sink)));
+            let connector = connector.as_ref();
+            handles.push(scope.spawn(move || {
+                if striped {
+                    fetch_one_striped(connector, ep, meta, start, end, opts, sink)
+                } else {
+                    fetch_one(connector, ep, meta, start, end, opts, sink)
+                }
+            }));
         }
         handles
             .into_iter()

@@ -95,11 +95,30 @@ pub struct TransferConfig {
     /// per sender thread before the routing thread blocks (backpressure;
     /// stall time is recorded in `TransferMetrics`).
     pub channel_depth: u32,
+    /// Data-plane transport selection: "auto" (the UDS fast path when a
+    /// worker is co-located and advertises a socket path, TCP otherwise),
+    /// "tcp", or "uds" (forced; dial errors if the worker has no path).
+    pub transport: String,
+    /// Data connections per owner. 1 = the classic single lane; higher
+    /// values stripe slab batches round-robin over that many connections
+    /// per owner (fat pipes). Capped at 16 by validation.
+    pub stripes: u32,
+    /// Wire codec for v9 sessions: "none", "delta" (lossless
+    /// delta+varint packing, bit-identical roundtrip), or "f32" (lossy
+    /// f64→f32 downcast — opt-in only, never auto-negotiated).
+    pub compression: String,
 }
 
 impl Default for TransferConfig {
     fn default() -> Self {
-        TransferConfig { sender_threads: 4, slab_bytes: 1 << 20, channel_depth: 4 }
+        TransferConfig {
+            sender_threads: 4,
+            slab_bytes: 1 << 20,
+            channel_depth: 4,
+            transport: "auto".into(),
+            stripes: 1,
+            compression: "none".into(),
+        }
     }
 }
 
@@ -314,6 +333,15 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "transfer.sender_threads" => cfg.transfer.sender_threads = parse(key, val)?,
         "transfer.slab_bytes" => cfg.transfer.slab_bytes = parse(key, val)?,
         "transfer.channel_depth" => cfg.transfer.channel_depth = parse(key, val)?,
+        "transfer.transport" => {
+            crate::transport::TransportChoice::parse(val)?;
+            cfg.transfer.transport = val.to_string();
+        }
+        "transfer.stripes" => cfg.transfer.stripes = parse(key, val)?,
+        "transfer.compression" => {
+            crate::protocol::WireCodec::parse(val)?;
+            cfg.transfer.compression = val.to_string();
+        }
         "sparklet.executors" => cfg.sparklet.executors = parse(key, val)?,
         "sparklet.default_parallelism" => cfg.sparklet.default_parallelism = parse(key, val)?,
         "sparklet.executor_mem_mb" => cfg.sparklet.executor_mem_mb = parse(key, val)?,
@@ -416,6 +444,12 @@ impl Config {
                 crate::protocol::MAX_FRAME_BYTES / 2
             )));
         }
+        if !(1..=16).contains(&self.transfer.stripes) {
+            return Err(Error::Config("transfer.stripes must be in [1, 16]".into()));
+        }
+        // re-validate in case the struct was mutated directly
+        crate::transport::TransportChoice::parse(&self.transfer.transport)?;
+        crate::protocol::WireCodec::parse(&self.transfer.compression)?;
         if !(16..=1 << 20).contains(&self.telemetry.span_buffer) {
             return Err(Error::Config("telemetry.span_buffer must be in [16, 2^20]".into()));
         }
@@ -510,21 +544,48 @@ scale = 0.5
     #[test]
     fn transfer_keys_parse_and_validate() {
         let mut cfg = Config::default();
+        assert_eq!(cfg.transfer.transport, "auto");
+        assert_eq!(cfg.transfer.stripes, 1);
+        assert_eq!(cfg.transfer.compression, "none");
         cfg.apply_overrides(&[
             "transfer.sender_threads=8",
             "transfer.slab_bytes=65536",
             "transfer.channel_depth=2",
+            "transfer.transport=uds",
+            "transfer.stripes=4",
+            "transfer.compression=delta",
         ])
         .unwrap();
         assert_eq!(cfg.transfer.sender_threads, 8);
         assert_eq!(cfg.transfer.slab_bytes, 65536);
         assert_eq!(cfg.transfer.channel_depth, 2);
+        assert_eq!(cfg.transfer.transport, "uds");
+        assert_eq!(cfg.transfer.stripes, 4);
+        assert_eq!(cfg.transfer.compression, "delta");
+        cfg.validate().unwrap();
+        // unknown enum values are rejected at apply time
+        assert!(cfg.apply_overrides(&["transfer.transport=rdma"]).is_err());
+        assert!(cfg.apply_overrides(&["transfer.compression=lz4"]).is_err());
+        // zero / out-of-range numerics are typed config errors
         cfg.transfer.sender_threads = 0;
         assert!(cfg.validate().is_err());
         cfg.transfer.sender_threads = 1;
+        cfg.transfer.channel_depth = 0;
+        assert!(cfg.validate().is_err());
+        cfg.transfer.channel_depth = 1;
         cfg.transfer.slab_bytes = 8;
         assert!(cfg.validate().is_err());
         cfg.transfer.slab_bytes = u32::MAX; // above the frame-cap headroom
+        assert!(cfg.validate().is_err());
+        cfg.transfer.slab_bytes = 65536;
+        cfg.transfer.stripes = 0;
+        assert!(cfg.validate().is_err());
+        cfg.transfer.stripes = 17;
+        assert!(cfg.validate().is_err());
+        cfg.transfer.stripes = 16;
+        cfg.validate().unwrap();
+        // direct struct mutation is caught by validate too
+        cfg.transfer.transport = "bogus".into();
         assert!(cfg.validate().is_err());
     }
 

@@ -52,6 +52,7 @@ pub mod sched;
 pub mod server;
 pub mod sparklet;
 pub mod telemetry;
+pub mod transport;
 pub mod workload;
 
 pub use error::{Error, Result};

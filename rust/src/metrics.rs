@@ -211,6 +211,20 @@ pub struct TransferMetrics {
     pub rows_recv: CounterHandle,
     pub frames_recv: CounterHandle,
     pub bytes_recv: CounterHandle,
+    /// Bytes pushed over plain TCP data connections (v9 transport plane;
+    /// a subset of `bytes_sent`, split by wire).
+    pub tcp_bytes_sent: CounterHandle,
+    /// Bytes pushed over the Unix-domain-socket fast path.
+    pub uds_bytes_sent: CounterHandle,
+    /// Bytes fetched over TCP / UDS (subsets of `bytes_recv`).
+    pub tcp_bytes_recv: CounterHandle,
+    pub uds_bytes_recv: CounterHandle,
+    /// Wire-compression accounting: logical slab bytes before the codec
+    /// ran vs bytes that actually crossed the wire. The session's
+    /// compression ratio is `comp_wire_bytes / comp_raw_bytes`; both stay
+    /// zero when the codec is `none`.
+    pub comp_raw_bytes: CounterHandle,
+    pub comp_wire_bytes: CounterHandle,
     /// Legacy string-keyed view over the counters above (same cells).
     pub counters: CountersView,
     /// "stall_w{id}" — cumulative time the routing thread spent blocked
@@ -232,6 +246,12 @@ impl TransferMetrics {
             rows_recv: registry.counter("rows_recv"),
             frames_recv: registry.counter("frames_recv"),
             bytes_recv: registry.counter("bytes_recv"),
+            tcp_bytes_sent: registry.counter("tcp_bytes_sent"),
+            uds_bytes_sent: registry.counter("uds_bytes_sent"),
+            tcp_bytes_recv: registry.counter("tcp_bytes_recv"),
+            uds_bytes_recv: registry.counter("uds_bytes_recv"),
+            comp_raw_bytes: registry.counter("comp_raw_bytes"),
+            comp_wire_bytes: registry.counter("comp_wire_bytes"),
             counters: CountersView::new(registry.clone()),
             phases: PhasesView::new(registry.clone()),
             registry,

@@ -251,6 +251,14 @@ impl<'a> Reader<'a> {
         Ok(self.take(n)?.to_vec())
     }
 
+    /// Borrowed variant of [`get_bytes`]: the returned slice aliases the
+    /// frame buffer (the worker's compressed-slab hot path decompresses
+    /// straight out of it, no payload copy).
+    pub fn get_bytes_ref(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+
     pub fn get_f64_slice(&mut self) -> Result<Vec<f64>> {
         let n = self.get_u32()? as usize;
         let raw = self.take(n * 8)?; // errors before any allocation if short

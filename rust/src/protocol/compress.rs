@@ -1,0 +1,423 @@
+//! Per-slab wire compression for the v9 data plane.
+//!
+//! A compressed slab frame (`PutSlabZ` / `SlabBatchZ`) carries the same
+//! logical content as its plain sibling — `count` global row indices plus
+//! a `count × cols` f64 value slab — packed into one byte payload with
+//! two self-describing sections:
+//!
+//! * **indices** — a mode byte, then either raw u64 LE (`mode 0`) or
+//!   zigzag-varint deltas between consecutive indices (`mode 1`; handles
+//!   out-of-order rows via wrapping signed deltas). The encoder falls
+//!   back to raw whenever varints would be larger, so the section never
+//!   exceeds `count * 8 + 1` bytes.
+//! * **values** — a mode byte, then raw f64 LE (`mode 0`),
+//!   XOR-with-previous bit patterns as varints (`mode 1`, the
+//!   [`WireCodec::Delta`] payload, bit-exact for every f64 including NaN
+//!   payloads and infinities, with the same raw fallback), or f32 LE
+//!   (`mode 2`, the opt-in lossy [`WireCodec::F32`] downcast).
+//!
+//! Both lossless paths roundtrip *bit-identically*: the PR 2 slab
+//! equivalence property extends over every transport × codec combination
+//! (see `tests/it_transport.rs`).
+
+use crate::{Error, Result};
+
+/// Wire codec negotiated per session via `TransferCaps` and named by the
+/// codec byte in every compressed data-plane frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    /// No compression — plain `PutSlab`/`SlabBatch` frames are used and
+    /// the bytes are identical to a v8 session.
+    None,
+    /// Lossless delta+varint packing of indices and value bit patterns.
+    Delta,
+    /// Lossy f64→f32 downcast of the value slab (indices stay lossless).
+    /// Never auto-negotiated: only used when explicitly configured.
+    F32,
+}
+
+impl WireCodec {
+    /// All codecs, in tag order (bench sweeps, capability masks).
+    pub const ALL: [WireCodec; 3] = [WireCodec::None, WireCodec::Delta, WireCodec::F32];
+
+    /// Wire tag carried in the `codec` byte of compressed frames.
+    pub const fn tag(self) -> u8 {
+        match self {
+            WireCodec::None => 0,
+            WireCodec::Delta => 1,
+            WireCodec::F32 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<WireCodec> {
+        Ok(match t {
+            0 => WireCodec::None,
+            1 => WireCodec::Delta,
+            2 => WireCodec::F32,
+            _ => return Err(Error::Protocol(format!("bad WireCodec tag {t}"))),
+        })
+    }
+
+    /// Config-file spelling (`[transfer] compression = ...`).
+    pub fn parse(s: &str) -> Result<WireCodec> {
+        Ok(match s {
+            "none" => WireCodec::None,
+            "delta" => WireCodec::Delta,
+            "f32" => WireCodec::F32,
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown transfer.compression {s:?} (expected none|delta|f32)"
+                )))
+            }
+        })
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            WireCodec::None => "none",
+            WireCodec::Delta => "delta",
+            WireCodec::F32 => "f32",
+        }
+    }
+
+    /// Capability-mask bit for the `TransferCaps` exchange.
+    pub const fn bit(self) -> u32 {
+        1 << self.tag()
+    }
+
+    /// Bitmask of every codec this build supports.
+    pub fn mask_all() -> u32 {
+        Self::ALL.iter().fold(0, |m, c| m | c.bit())
+    }
+
+    /// True when a compress→decompress roundtrip is bit-identical.
+    pub const fn lossless(self) -> bool {
+        !matches!(self, WireCodec::F32)
+    }
+}
+
+const MODE_RAW: u8 = 0;
+const MODE_VARINT: u8 = 1;
+const MODE_F32: u8 = 2;
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Protocol("varint runs past payload end".into()))?;
+        *pos += 1;
+        if shift >= 64 || (shift == 63 && (b & 0x7E) != 0) {
+            return Err(Error::Protocol("varint overflows u64".into()));
+        }
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+const fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+const fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Pack one slab (`indices` + row-major `values`) into `out` (cleared
+/// first) using `codec`. Index packing is always lossless; only the
+/// value section depends on the codec.
+pub fn compress_slab(codec: WireCodec, indices: &[u64], values: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    // --- index section ---
+    match codec {
+        WireCodec::None => put_indices_raw(indices, out),
+        WireCodec::Delta | WireCodec::F32 => {
+            let mode_pos = out.len();
+            out.push(MODE_VARINT);
+            let start = out.len();
+            let mut prev = 0u64;
+            for &ix in indices {
+                put_varint(out, zigzag(ix.wrapping_sub(prev) as i64));
+                prev = ix;
+            }
+            if out.len() - start > indices.len() * 8 {
+                out.truncate(mode_pos);
+                put_indices_raw(indices, out);
+            }
+        }
+    }
+    // --- value section ---
+    match codec {
+        WireCodec::None => put_values_raw(values, out),
+        WireCodec::Delta => {
+            let mode_pos = out.len();
+            out.push(MODE_VARINT);
+            let start = out.len();
+            let mut prev = 0u64;
+            for &v in values {
+                let bits = v.to_bits();
+                put_varint(out, bits ^ prev);
+                prev = bits;
+            }
+            if out.len() - start > values.len() * 8 {
+                out.truncate(mode_pos);
+                put_values_raw(values, out);
+            }
+        }
+        WireCodec::F32 => {
+            out.push(MODE_F32);
+            out.reserve(values.len() * 4);
+            for &v in values {
+                out.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_indices_raw(indices: &[u64], out: &mut Vec<u8>) {
+    out.push(MODE_RAW);
+    out.reserve(indices.len() * 8);
+    for &ix in indices {
+        out.extend_from_slice(&ix.to_le_bytes());
+    }
+}
+
+fn put_values_raw(values: &[f64], out: &mut Vec<u8>) {
+    out.push(MODE_RAW);
+    out.reserve(values.len() * 8);
+    for &v in values {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Unpack a compressed slab payload of `count` rows × `cols` columns into
+/// reusable buffers (cleared first). The sections are self-describing via
+/// their mode bytes, so this works for any codec; trailing garbage or a
+/// short payload is a protocol error.
+pub fn decompress_slab(
+    payload: &[u8],
+    count: usize,
+    cols: usize,
+    indices: &mut Vec<u64>,
+    values: &mut Vec<f64>,
+) -> Result<()> {
+    indices.clear();
+    values.clear();
+    let nvals = count
+        .checked_mul(cols)
+        .ok_or_else(|| Error::Protocol("compressed slab dimensions overflow".into()))?;
+    let mut pos = 0usize;
+
+    let imode = take_mode(payload, &mut pos)?;
+    indices.reserve(count);
+    match imode {
+        MODE_RAW => {
+            for _ in 0..count {
+                indices.push(u64::from_le_bytes(take8(payload, &mut pos)?));
+            }
+        }
+        MODE_VARINT => {
+            let mut prev = 0u64;
+            for _ in 0..count {
+                let d = unzigzag(get_varint(payload, &mut pos)?);
+                prev = prev.wrapping_add(d as u64);
+                indices.push(prev);
+            }
+        }
+        m => return Err(Error::Protocol(format!("bad slab index mode {m}"))),
+    }
+
+    let vmode = take_mode(payload, &mut pos)?;
+    values.reserve(nvals);
+    match vmode {
+        MODE_RAW => {
+            for _ in 0..nvals {
+                values.push(f64::from_bits(u64::from_le_bytes(take8(payload, &mut pos)?)));
+            }
+        }
+        MODE_VARINT => {
+            let mut prev = 0u64;
+            for _ in 0..nvals {
+                prev ^= get_varint(payload, &mut pos)?;
+                values.push(f64::from_bits(prev));
+            }
+        }
+        MODE_F32 => {
+            for _ in 0..nvals {
+                let b = take4(payload, &mut pos)?;
+                values.push(f64::from(f32::from_le_bytes(b)));
+            }
+        }
+        m => return Err(Error::Protocol(format!("bad slab value mode {m}"))),
+    }
+
+    if pos != payload.len() {
+        return Err(Error::Protocol(format!(
+            "compressed slab has {} trailing bytes",
+            payload.len() - pos
+        )));
+    }
+    Ok(())
+}
+
+fn take_mode(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    let b = *buf
+        .get(*pos)
+        .ok_or_else(|| Error::Protocol("compressed slab payload truncated".into()))?;
+    *pos += 1;
+    Ok(b)
+}
+
+fn take8(buf: &[u8], pos: &mut usize) -> Result<[u8; 8]> {
+    let end = *pos + 8;
+    let s = buf
+        .get(*pos..end)
+        .ok_or_else(|| Error::Protocol("compressed slab payload truncated".into()))?;
+    *pos = end;
+    Ok(s.try_into().expect("slice is 8 bytes"))
+}
+
+fn take4(buf: &[u8], pos: &mut usize) -> Result<[u8; 4]> {
+    let end = *pos + 4;
+    let s = buf
+        .get(*pos..end)
+        .ok_or_else(|| Error::Protocol("compressed slab payload truncated".into()))?;
+    *pos = end;
+    Ok(s.try_into().expect("slice is 4 bytes"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(codec: WireCodec, indices: &[u64], values: &[f64], cols: usize) {
+        let mut payload = Vec::new();
+        compress_slab(codec, indices, values, &mut payload);
+        let (mut ix, mut vs) = (Vec::new(), Vec::new());
+        decompress_slab(&payload, indices.len(), cols, &mut ix, &mut vs).unwrap();
+        assert_eq!(ix, indices, "{codec:?} index roundtrip");
+        if codec.lossless() {
+            let got: Vec<u64> = vs.iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u64> = values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "{codec:?} must be bit-identical");
+        } else {
+            let want: Vec<f64> = values.iter().map(|&v| f64::from(v as f32)).collect();
+            assert_eq!(vs, want, "{codec:?} must equal the f32 downcast");
+        }
+    }
+
+    #[test]
+    fn lossless_codecs_roundtrip_bit_exact() {
+        let indices = [5u64, 0, 3, 1_000_000, 2];
+        let values: Vec<f64> = (0..indices.len() * 3)
+            .map(|i| (i as f64) * 1.25 - 2.0)
+            .collect();
+        for codec in [WireCodec::None, WireCodec::Delta] {
+            roundtrip(codec, &indices, &values, 3);
+        }
+    }
+
+    #[test]
+    fn specials_survive_every_codec() {
+        // NaN payloads, infinities, signed zero, subnormals, u64::MAX index
+        let indices = [u64::MAX, 0, 42];
+        let values = [
+            f64::NAN,
+            f64::from_bits(0x7FF8_0000_0000_0001), // NaN with payload
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -0.0,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+        ];
+        roundtrip(WireCodec::None, &indices, &values, 2);
+        roundtrip(WireCodec::Delta, &indices, &values, 2);
+        // f32: indices still exact; values follow the downcast exactly
+        roundtrip(WireCodec::F32, &indices, &values, 2);
+    }
+
+    #[test]
+    fn empty_slab_roundtrips() {
+        for codec in WireCodec::ALL {
+            roundtrip(codec, &[], &[], 7);
+        }
+    }
+
+    #[test]
+    fn delta_shrinks_sequential_slabs() {
+        let indices: Vec<u64> = (100..1100).collect();
+        let values = vec![1.0f64; indices.len()];
+        let mut packed = Vec::new();
+        compress_slab(WireCodec::Delta, &indices, &values, &mut packed);
+        let raw = indices.len() * 8 + values.len() * 8 + 2;
+        assert!(packed.len() < raw / 4, "{} bytes vs {} raw", packed.len(), raw);
+    }
+
+    #[test]
+    fn random_bits_fall_back_to_raw_sections() {
+        // xorshift noise is incompressible; the encoder must cap the
+        // payload at raw size + mode bytes instead of inflating it.
+        let mut x = 0x243F_6A88_85A3_08D3u64;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        let indices: Vec<u64> = (0..256).map(|_| next()).collect();
+        let values: Vec<f64> = (0..256).map(|_| f64::from_bits(next())).collect();
+        let mut packed = Vec::new();
+        compress_slab(WireCodec::Delta, &indices, &values, &mut packed);
+        assert!(packed.len() <= indices.len() * 8 + values.len() * 8 + 2);
+        let (mut ix, mut vs) = (Vec::new(), Vec::new());
+        decompress_slab(&packed, indices.len(), 1, &mut ix, &mut vs).unwrap();
+        assert_eq!(ix, indices);
+        assert_eq!(
+            vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_are_errors() {
+        let mut packed = Vec::new();
+        compress_slab(WireCodec::Delta, &[1, 2, 3], &[1.0, 2.0, 3.0], &mut packed);
+        let (mut ix, mut vs) = (Vec::new(), Vec::new());
+        let short = &packed[..packed.len() - 1];
+        assert!(decompress_slab(short, 3, 1, &mut ix, &mut vs).is_err());
+        let mut long = packed.clone();
+        long.push(0);
+        assert!(decompress_slab(&long, 3, 1, &mut ix, &mut vs).is_err());
+        // count lying about the payload is caught too
+        assert!(decompress_slab(&packed, 2, 1, &mut ix, &mut vs).is_err());
+    }
+
+    #[test]
+    fn codec_tags_and_masks() {
+        for codec in WireCodec::ALL {
+            assert_eq!(WireCodec::from_tag(codec.tag()).unwrap(), codec);
+            assert_eq!(WireCodec::parse(codec.name()).unwrap(), codec);
+            assert_ne!(WireCodec::mask_all() & codec.bit(), 0);
+        }
+        assert!(WireCodec::from_tag(9).is_err());
+        assert!(WireCodec::parse("lz4").is_err());
+        assert!(WireCodec::None.lossless());
+        assert!(WireCodec::Delta.lossless());
+        assert!(!WireCodec::F32.lossless());
+    }
+}

@@ -36,7 +36,15 @@ use crate::{Error, Result};
 /// cross-process span timeline) from the driver, which in turn drains
 /// each session worker over the data plane (`DataMsg::FetchTelemetry` /
 /// `DataMsg::Telemetry`). ≤ v7 sessions never see the new tags.
-pub const PROTOCOL_VERSION: u16 = 8;
+/// v9: transfer plane v2 — `WorkersGranted` carries each worker's
+/// Unix-domain-socket data address alongside TCP (tag 15; ≤ v8 sessions
+/// keep the TCP-only tag-1 shape), the post-handshake
+/// `ClientMsg::TransferCaps` ⇄ `DriverMsg::TransferCaps` codec
+/// negotiation, and the compressed slab frames `PutSlabZ` / `SlabBatchZ`
+/// / `GetRowsSlabZ` on the data plane. ≤ v8 sessions never see any of
+/// the new tags and stay byte-for-byte on the plain TCP/uncompressed
+/// path.
+pub const PROTOCOL_VERSION: u16 = 9;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -64,6 +72,13 @@ pub const POOL_RECOVERY_PROTOCOL_VERSION: u16 = 7;
 /// the driver ⇄ worker data plane. Sessions negotiated below this are
 /// refused telemetry pulls with a versioned error.
 pub const TELEMETRY_PROTOCOL_VERSION: u16 = 8;
+
+/// First version that understands the transfer-plane-v2 surfaces: the
+/// extended `WorkersGranted` (UDS data addresses), the `TransferCaps`
+/// codec negotiation, and the compressed slab data-plane frames.
+/// Sessions negotiated below this get the legacy TCP-only shapes and
+/// plain slabs.
+pub const TRANSPORT_PROTOCOL_VERSION: u16 = 9;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -403,18 +418,36 @@ impl MatrixMeta {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WorkerInfo {
     pub id: u32,
-    /// Data-plane socket address ("127.0.0.1:port").
+    /// Data-plane TCP socket address ("127.0.0.1:port").
     pub data_addr: String,
+    /// Data-plane Unix-domain-socket path, or "" when the worker did not
+    /// bind one (non-unix hosts). Only travels inside the v9 extended
+    /// `WorkersGranted` shape; the legacy encodings drop it.
+    pub uds_addr: String,
 }
 
 impl WorkerInfo {
+    /// Legacy (≤ v8) two-field encoding — also what `WorkerCtl::NewSession`
+    /// peers use, since mesh formation only needs the comm address.
     pub fn encode(&self, w: &mut Writer) {
         w.put_u32(self.id);
         w.put_str(&self.data_addr);
     }
 
     pub fn decode(r: &mut Reader<'_>) -> Result<WorkerInfo> {
-        Ok(WorkerInfo { id: r.get_u32()?, data_addr: r.get_str()? })
+        Ok(WorkerInfo { id: r.get_u32()?, data_addr: r.get_str()?, uds_addr: String::new() })
+    }
+
+    /// v9 three-field encoding (adds the UDS address), used by the
+    /// extended `WorkersGranted` (tag 15).
+    pub fn encode_ex(&self, w: &mut Writer) {
+        w.put_u32(self.id);
+        w.put_str(&self.data_addr);
+        w.put_str(&self.uds_addr);
+    }
+
+    pub fn decode_ex(r: &mut Reader<'_>) -> Result<WorkerInfo> {
+        Ok(WorkerInfo { id: r.get_u32()?, data_addr: r.get_str()?, uds_addr: r.get_str()? })
     }
 }
 
@@ -565,6 +598,14 @@ pub enum ClientMsg {
     /// filters spans to one job's trace (0 = full timeline). Reply:
     /// [`DriverMsg::Telemetry`].
     FetchTelemetry { job_id: u64 },
+    /// v9 transfer-capability exchange, sent right after the handshake on
+    /// sessions negotiated at ≥ v9: `codecs` is the bitmask of wire
+    /// codecs the client can decode (`1 << WireCodec::tag()`). The server
+    /// replies [`DriverMsg::TransferCaps`] with the intersection of the
+    /// client mask and its own; the session may only use codecs present
+    /// in the reply. ≤ v8 clients never send this, so old sessions stay
+    /// uncompressed by construction.
+    TransferCaps { codecs: u32 },
 }
 
 impl ClientMsg {
@@ -636,6 +677,10 @@ impl ClientMsg {
                 w.put_u8(14);
                 w.put_u64(*job_id);
             }
+            ClientMsg::TransferCaps { codecs } => {
+                w.put_u8(15);
+                w.put_u32(*codecs);
+            }
         }
         w.into_bytes()
     }
@@ -674,6 +719,7 @@ impl ClientMsg {
             12 => ClientMsg::DescribeRoutines { library: r.get_str()? },
             13 => ClientMsg::CancelJob { job_id: r.get_u64()? },
             14 => ClientMsg::FetchTelemetry { job_id: r.get_u64()? },
+            15 => ClientMsg::TransferCaps { codecs: r.get_u32()? },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
         Ok(msg)
@@ -720,6 +766,10 @@ pub enum DriverMsg {
     /// Reply to `FetchTelemetry` (v8): merged registry snapshot + span
     /// timeline across the driver and every session worker.
     Telemetry(TelemetryReport),
+    /// Reply to [`ClientMsg::TransferCaps`] (v9): the wire-codec bitmask
+    /// the session may use — the intersection of what the client offered
+    /// and what the server supports.
+    TransferCaps { codecs: u32 },
     Err { message: String },
 }
 
@@ -740,10 +790,20 @@ impl DriverMsg {
                 w.put_u16(*version);
             }
             DriverMsg::WorkersGranted { workers } => {
-                w.put_u8(1);
-                w.put_u32(workers.len() as u32);
-                for wk in workers {
-                    wk.encode(&mut w);
+                // v9 gets its own tag carrying the extended (TCP + UDS)
+                // address cards; ≤ v8 readers keep the two-field shape.
+                if version >= TRANSPORT_PROTOCOL_VERSION {
+                    w.put_u8(15);
+                    w.put_u32(workers.len() as u32);
+                    for wk in workers {
+                        wk.encode_ex(&mut w);
+                    }
+                } else {
+                    w.put_u8(1);
+                    w.put_u32(workers.len() as u32);
+                    for wk in workers {
+                        wk.encode(&mut w);
+                    }
                 }
             }
             DriverMsg::LibraryRegistered { name } => {
@@ -823,6 +883,10 @@ impl DriverMsg {
                 w.put_u8(14);
                 report.encode_into(&mut w);
             }
+            DriverMsg::TransferCaps { codecs } => {
+                w.put_u8(16);
+                w.put_u32(*codecs);
+            }
         }
         w.into_bytes()
     }
@@ -831,11 +895,15 @@ impl DriverMsg {
         let mut r = Reader::new(buf);
         let msg = match r.get_u8()? {
             0 => DriverMsg::HandshakeAck { session_id: r.get_u64()?, version: r.get_u16()? },
-            1 => {
+            tag @ (1 | 15) => {
                 let n = r.get_u32()? as usize;
                 let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
                 for _ in 0..n {
-                    workers.push(WorkerInfo::decode(&mut r)?);
+                    workers.push(if tag == 15 {
+                        WorkerInfo::decode_ex(&mut r)?
+                    } else {
+                        WorkerInfo::decode(&mut r)?
+                    });
                 }
                 DriverMsg::WorkersGranted { workers }
             }
@@ -875,6 +943,7 @@ impl DriverMsg {
                 DriverMsg::RoutineList { routines }
             }
             14 => DriverMsg::Telemetry(TelemetryReport::decode(&mut r)?),
+            16 => DriverMsg::TransferCaps { codecs: r.get_u32()? },
             t => return Err(Error::Protocol(format!("bad DriverMsg tag {t}"))),
         };
         Ok(msg)
@@ -955,6 +1024,22 @@ pub enum DataMsg {
     /// (unprefixed — the driver prefixes registry keys `w<id>.` when
     /// merging).
     Telemetry(TelemetryReport),
+    /// v9 compressed slab upload: same logical content as
+    /// [`DataMsg::PutSlab`] (`count` rows × `cols` columns plus their
+    /// global indices) but with both arrays packed by the wire codec
+    /// named in `codec` (see [`crate::protocol::compress::WireCodec`]).
+    /// Only sent on sessions that negotiated the codec via
+    /// `TransferCaps`; the frame is self-describing so the worker never
+    /// consults session state to decode it.
+    PutSlabZ { handle: u64, codec: u8, count: u32, cols: u32, payload: Vec<u8> },
+    /// v9 compressed slab download batch (reply to `GetRowsSlabZ` when
+    /// the request asked for a non-`None` codec).
+    SlabBatchZ { handle: u64, codec: u8, count: u32, cols: u32, payload: Vec<u8> },
+    /// v9 slab fetch that names the codec the worker should compress the
+    /// reply stream with (`SlabBatchZ` frames; `GetDone` still ends the
+    /// stream). `codec` 0 (= `WireCodec::None`) behaves exactly like
+    /// `GetRowsSlab`.
+    GetRowsSlabZ { handle: u64, start: u64, end: u64, codec: u8 },
 }
 
 impl DataMsg {
@@ -962,6 +1047,9 @@ impl DataMsg {
     /// loop can peek the hot-path tag and decode into reusable buffers
     /// without going through the allocating [`DataMsg::decode`].
     pub const TAG_PUT_SLAB: u8 = 7;
+    /// Wire tag of [`DataMsg::PutSlabZ`] — peeked by the same worker
+    /// hot path so compressed slabs also decode into reusable buffers.
+    pub const TAG_PUT_SLAB_Z: u8 = 16;
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         self.encode_into(&mut w);
@@ -1053,6 +1141,29 @@ impl DataMsg {
                 w.put_u8(15);
                 report.encode_into(w);
             }
+            DataMsg::PutSlabZ { handle, codec, count, cols, payload } => {
+                w.put_u8(Self::TAG_PUT_SLAB_Z);
+                w.put_u64(*handle);
+                w.put_u8(*codec);
+                w.put_u32(*count);
+                w.put_u32(*cols);
+                w.put_bytes(payload);
+            }
+            DataMsg::SlabBatchZ { handle, codec, count, cols, payload } => {
+                w.put_u8(17);
+                w.put_u64(*handle);
+                w.put_u8(*codec);
+                w.put_u32(*count);
+                w.put_u32(*cols);
+                w.put_bytes(payload);
+            }
+            DataMsg::GetRowsSlabZ { handle, start, end, codec } => {
+                w.put_u8(18);
+                w.put_u64(*handle);
+                w.put_u64(*start);
+                w.put_u64(*end);
+                w.put_u8(*codec);
+            }
         }
     }
 
@@ -1110,6 +1221,24 @@ impl DataMsg {
             13 => DataMsg::CancelAck { matched: r.get_bool()? },
             14 => DataMsg::FetchTelemetry,
             15 => DataMsg::Telemetry(TelemetryReport::decode(&mut r)?),
+            16 | 17 => {
+                let handle = r.get_u64()?;
+                let codec = r.get_u8()?;
+                let count = r.get_u32()?;
+                let cols = r.get_u32()?;
+                let payload = r.get_bytes()?;
+                if tag == Self::TAG_PUT_SLAB_Z {
+                    DataMsg::PutSlabZ { handle, codec, count, cols, payload }
+                } else {
+                    DataMsg::SlabBatchZ { handle, codec, count, cols, payload }
+                }
+            }
+            18 => DataMsg::GetRowsSlabZ {
+                handle: r.get_u64()?,
+                start: r.get_u64()?,
+                end: r.get_u64()?,
+                codec: r.get_u8()?,
+            },
             t => return Err(Error::Protocol(format!("bad DataMsg tag {t}"))),
         };
         Ok(msg)
@@ -1371,6 +1500,11 @@ impl WorkerReply {
 pub struct WorkerHello {
     pub claimed_id: Option<u32>,
     pub data_addr: String,
+    /// Unix-domain-socket data-plane path, or "" when the worker bound
+    /// none. Encoded as a trailing field that old drivers simply never
+    /// read (the hello is a standalone frame, so extra bytes are inert)
+    /// and new drivers treat as absent when the frame ends early.
+    pub uds_addr: String,
 }
 
 impl WorkerHello {
@@ -1378,6 +1512,7 @@ impl WorkerHello {
         let mut w = Writer::new();
         w.put_u32(self.claimed_id.unwrap_or(u32::MAX));
         w.put_str(&self.data_addr);
+        w.put_str(&self.uds_addr);
         w.into_bytes()
     }
 
@@ -1385,7 +1520,9 @@ impl WorkerHello {
         let mut r = Reader::new(buf);
         let raw = r.get_u32()?;
         let claimed_id = if raw == u32::MAX { None } else { Some(raw) };
-        Ok(WorkerHello { claimed_id, data_addr: r.get_str()? })
+        let data_addr = r.get_str()?;
+        let uds_addr = if r.is_done() { String::new() } else { r.get_str()? };
+        Ok(WorkerHello { claimed_id, data_addr, uds_addr })
     }
 }
 
@@ -1505,7 +1642,11 @@ mod tests {
         let msgs = vec![
             DriverMsg::HandshakeAck { session_id: 7, version: PROTOCOL_VERSION },
             DriverMsg::WorkersGranted {
-                workers: vec![WorkerInfo { id: 0, data_addr: "127.0.0.1:4000".into() }],
+                workers: vec![WorkerInfo {
+                    id: 0,
+                    data_addr: "127.0.0.1:4000".into(),
+                    uds_addr: "/tmp/alch-w0.sock".into(),
+                }],
             },
             DriverMsg::LibraryRegistered { name: "elemlib".into() },
             DriverMsg::MatrixCreated { meta: meta() },
@@ -1654,10 +1795,25 @@ mod tests {
 
     #[test]
     fn registration_plane_roundtrips() {
-        let fresh = WorkerHello { claimed_id: None, data_addr: "127.0.0.1:4000".into() };
+        let fresh = WorkerHello {
+            claimed_id: None,
+            data_addr: "127.0.0.1:4000".into(),
+            uds_addr: "/tmp/alch-w0.sock".into(),
+        };
         assert_eq!(WorkerHello::decode(&fresh.encode()).unwrap(), fresh);
-        let back = WorkerHello { claimed_id: Some(3), data_addr: "127.0.0.1:4001".into() };
+        let back = WorkerHello {
+            claimed_id: Some(3),
+            data_addr: "127.0.0.1:4001".into(),
+            uds_addr: String::new(),
+        };
         assert_eq!(WorkerHello::decode(&back.encode()).unwrap(), back);
+        // a pre-v9 hello (no trailing uds field) still decodes
+        let mut legacy = Writer::new();
+        legacy.put_u32(u32::MAX);
+        legacy.put_str("127.0.0.1:4002");
+        let hello = WorkerHello::decode(&legacy.into_bytes()).unwrap();
+        assert_eq!(hello.data_addr, "127.0.0.1:4002");
+        assert!(hello.uds_addr.is_empty());
         let ack = WorkerAck::Granted { id: 3, epoch: 2 };
         assert_eq!(WorkerAck::decode(&ack.encode()).unwrap(), ack);
         let no = WorkerAck::Refused { message: "slot still granted".into() };
@@ -1665,6 +1821,39 @@ mod tests {
         assert!(WorkerHello::decode(&[1]).is_err());
         assert!(WorkerAck::decode(&[]).is_err());
         assert!(WorkerAck::decode(&[9]).is_err());
+    }
+
+    #[test]
+    fn workers_granted_downgrades_for_v8_sessions() {
+        // ≤ v8 sessions must see the legacy tag-1 shape with the UDS
+        // address dropped; v9 sessions get tag 15 carrying it.
+        let msg = DriverMsg::WorkersGranted {
+            workers: vec![WorkerInfo {
+                id: 2,
+                data_addr: "127.0.0.1:4100".into(),
+                uds_addr: "/tmp/alch-w2.sock".into(),
+            }],
+        };
+        let v8 = msg.encode_versioned(8);
+        assert_eq!(v8[0], 1, "v8 WorkersGranted must use the legacy tag");
+        match DriverMsg::decode(&v8).unwrap() {
+            DriverMsg::WorkersGranted { workers } => {
+                assert_eq!(workers[0].data_addr, "127.0.0.1:4100");
+                assert!(workers[0].uds_addr.is_empty(), "uds must not leak to v8");
+            }
+            other => panic!("bad v8 decode: {other:?}"),
+        }
+        let v9 = msg.encode_versioned(9);
+        assert_eq!(v9[0], 15, "v9 WorkersGranted carries UDS addresses");
+        assert_eq!(DriverMsg::decode(&v9).unwrap(), msg);
+    }
+
+    #[test]
+    fn transfer_caps_roundtrip() {
+        let ask = ClientMsg::TransferCaps { codecs: 0b111 };
+        assert_eq!(ClientMsg::decode(&ask.encode()).unwrap(), ask);
+        let reply = DriverMsg::TransferCaps { codecs: 0b011 };
+        assert_eq!(DriverMsg::decode(&reply.encode()).unwrap(), reply);
     }
 
     #[test]
@@ -1699,6 +1888,15 @@ mod tests {
             DataMsg::CancelAck { matched: true },
             DataMsg::FetchTelemetry,
             DataMsg::Telemetry(report()),
+            DataMsg::PutSlabZ {
+                handle: 2,
+                codec: 1,
+                count: 3,
+                cols: 2,
+                payload: vec![0xDE, 0xAD, 0xBE, 0xEF],
+            },
+            DataMsg::SlabBatchZ { handle: 3, codec: 2, count: 0, cols: 7, payload: vec![] },
+            DataMsg::GetRowsSlabZ { handle: 2, start: 1, end: 9, codec: 1 },
         ];
         for m in msgs {
             assert_eq!(DataMsg::decode(&m.encode()).unwrap(), m);
@@ -1724,7 +1922,11 @@ mod tests {
             WorkerCtl::NewSession {
                 session_id: 3,
                 rank: 1,
-                peers: vec![WorkerInfo { id: 4, data_addr: "127.0.0.1:5000".into() }],
+                peers: vec![WorkerInfo {
+                    id: 4,
+                    data_addr: "127.0.0.1:5000".into(),
+                    uds_addr: String::new(),
+                }],
                 wire_version: PROTOCOL_VERSION,
             },
             WorkerCtl::EndSession { session_id: 3 },

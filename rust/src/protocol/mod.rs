@@ -12,9 +12,11 @@
 //! (offline build: no async runtime available).
 
 pub mod codec;
+pub mod compress;
 pub mod frame;
 pub mod messages;
 
 pub use codec::{Reader, Writer};
+pub use compress::{compress_slab, decompress_slab, WireCodec};
 pub use frame::{read_frame, read_frame_into, write_frame, write_frame_with, MAX_FRAME_BYTES};
 pub use messages::*;

@@ -25,8 +25,8 @@ use crate::config::{SchedConfig, TelemetryConfig};
 use crate::metrics::{compute_metrics, transfer_metrics, SchedMetrics, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta,
-    Params, RoutineDescriptor, WorkerAck, WorkerCtl, WorkerHello, WorkerInfo, WorkerReply,
-    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
+    Params, RoutineDescriptor, WireCodec, WorkerAck, WorkerCtl, WorkerHello, WorkerInfo,
+    WorkerReply, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
 };
 use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator};
 use crate::server::MAX_ACCEPT_ERRORS;
@@ -57,6 +57,9 @@ const MAX_PROBE_DRAIN: usize = 64;
 pub struct WorkerConn {
     pub id: u32,
     pub data_addr: String,
+    /// UDS data-plane path the worker advertised ("" when it has none);
+    /// forwarded to v9 clients in their `WorkersGranted`.
+    pub uds_addr: String,
     /// Registration generation (0 at startup, +1 per re-registration).
     pub epoch: u64,
     /// Control stream; sessions own disjoint workers so contention is nil,
@@ -471,6 +474,7 @@ fn admit_reregistration(mut conn: TcpStream, core: &DriverCore) -> Result<()> {
     let fresh = Arc::new(WorkerConn {
         id,
         data_addr: hello.data_addr,
+        uds_addr: hello.uds_addr,
         epoch,
         ctl: Mutex::new(conn),
     });
@@ -948,7 +952,11 @@ fn setup_session_workers(
     let peers: Vec<WorkerInfo> = conns
         .iter()
         .zip(&comm_addrs)
-        .map(|(w, addr)| WorkerInfo { id: w.id, data_addr: addr.clone() })
+        .map(|(w, addr)| WorkerInfo {
+            id: w.id,
+            data_addr: addr.clone(),
+            uds_addr: String::new(),
+        })
         .collect();
 
     // Phase 2 (collective): send NewSession to all, then read all replies
@@ -1010,7 +1018,11 @@ fn setup_session_workers(
 
     Ok(conns
         .iter()
-        .map(|w| WorkerInfo { id: w.id, data_addr: w.data_addr.clone() })
+        .map(|w| WorkerInfo {
+            id: w.id,
+            data_addr: w.data_addr.clone(),
+            uds_addr: w.uds_addr.clone(),
+        })
         .collect())
 }
 
@@ -1060,6 +1072,16 @@ fn handle_client_msg(
                 poison_cause: Mutex::new(None),
             }));
             Ok(DriverMsg::HandshakeAck { session_id: id, version: negotiated })
+        }
+        ClientMsg::TransferCaps { codecs } => {
+            // v9 `[transfer]` capability exchange: reply with the
+            // intersection of the client's codec mask and ours. The
+            // session needs no state for this — every compressed frame
+            // names its codec, and the worker's decoder is
+            // self-describing; the exchange only lets the client prove
+            // the server side will understand a codec before using it.
+            need_session(session)?;
+            Ok(DriverMsg::TransferCaps { codecs: codecs & WireCodec::mask_all() })
         }
         ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
             let s = need_session(session)?;

@@ -95,6 +95,7 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
         workers.push(Arc::new(WorkerConn {
             id,
             data_addr: hello.data_addr,
+            uds_addr: hello.uds_addr,
             epoch: 0,
             ctl: Mutex::new(conn),
         }));

@@ -9,6 +9,7 @@
 //! the sibling workers.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -21,8 +22,8 @@ use crate::config::{ComputeConfig, ServerConfig, TelemetryConfig};
 use crate::elemental::dist_gemm::{DistGemmOptions, GemmBackend, NativeBackend};
 use crate::elemental::{LocalPanel, MatrixStore};
 use crate::protocol::{
-    frame, DataMsg, MatrixMeta, Reader, WireRow, WorkerAck, WorkerCtl, WorkerHello,
-    WorkerReply, Writer,
+    compress_slab, decompress_slab, frame, DataMsg, MatrixMeta, Reader, WireCodec, WireRow,
+    WorkerAck, WorkerCtl, WorkerHello, WorkerReply, Writer,
 };
 use crate::runtime::PjrtBackend;
 use crate::server::MAX_ACCEPT_ERRORS;
@@ -119,10 +120,15 @@ fn register_with_driver(
     addr: &str,
     claimed_id: Option<u32>,
     data_addr: &str,
+    uds_addr: &str,
 ) -> Result<RegOutcome> {
     let mut ctl = TcpStream::connect(addr)?;
     ctl.set_nodelay(true)?;
-    let hello = WorkerHello { claimed_id, data_addr: data_addr.to_string() };
+    let hello = WorkerHello {
+        claimed_id,
+        data_addr: data_addr.to_string(),
+        uds_addr: uds_addr.to_string(),
+    };
     frame::write_frame(&mut ctl, &hello.encode())?;
     // Bound the ack read: a driver that accepts but never acks (e.g. it
     // is tearing down) must fail this attempt, not wedge the worker.
@@ -208,6 +214,13 @@ pub fn run_worker(
             .map_err(|e| Error::Server(format!("spawn data thread: {e}")))?;
     }
 
+    // v9 UDS fast path: bind a Unix socket next to the TCP data listener
+    // and advertise its path in the registration hello. Same frames, same
+    // `serve_data_conn` loop — only the kernel path differs. Best-effort:
+    // a bind failure just means this worker advertises no UDS address and
+    // co-located clients stay on TCP loopback.
+    let uds_addr = bind_uds_data_plane(&data_addr, &store, &board, &telemetry, cfg.batch_rows);
+
     // Backend: PJRT Pallas tiles unless configured (or forced) native.
     let (backend, runtime) = build_backend(&cfg);
 
@@ -225,7 +238,8 @@ pub fn run_worker(
     // indefinitely (see REG_BACKOFF_CAP).
     loop {
         let claimed = identity.map(|(id, _)| id);
-        let mut ctl = match register_with_driver(driver_worker_addr, claimed, &data_addr) {
+        let mut ctl =
+            match register_with_driver(driver_worker_addr, claimed, &data_addr, &uds_addr) {
             Ok(RegOutcome::Granted(conn, new_id, epoch)) => {
                 if let Some((old_id, _)) = identity {
                     if old_id != new_id {
@@ -395,6 +409,94 @@ fn serve_data_plane(
             }
         });
     }
+}
+
+/// Bind the v9 Unix-domain-socket data listener and spawn its accept
+/// loop. Returns the socket path to advertise, or "" when the fast path
+/// is unavailable (non-unix host, bind failure) — the worker then simply
+/// never advertises a UDS address and clients use TCP.
+#[cfg(unix)]
+fn bind_uds_data_plane(
+    data_addr: &str,
+    store: &Arc<Mutex<MatrixStore>>,
+    board: &Arc<StatusBoard>,
+    telemetry: &Arc<WorkerTelemetry>,
+    batch_rows: u32,
+) -> String {
+    use std::os::unix::net::UnixListener;
+    let dir = std::env::temp_dir().join("alchemist-uds");
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        warnln!("worker", "uds fast path disabled (create {}: {e})", dir.display());
+        return String::new();
+    }
+    // pid + TCP data port make the name unique across workers in one
+    // process and across processes; remove any stale file from a crashed
+    // predecessor that happened to get the same pair
+    let port = data_addr.rsplit(':').next().unwrap_or("0");
+    let path = dir.join(format!("wkr-{}-{port}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let listener = match UnixListener::bind(&path) {
+        Ok(l) => l,
+        Err(e) => {
+            warnln!("worker", "uds fast path disabled (bind {}: {e})", path.display());
+            return String::new();
+        }
+    };
+    let addr = path.to_string_lossy().into_owned();
+    let store = store.clone();
+    let board = board.clone();
+    let telemetry = telemetry.clone();
+    let batch_rows = batch_rows as usize;
+    let spawned = std::thread::Builder::new().name("wkr-uds".to_string()).spawn(move || {
+        let mut consecutive_errors = 0u32;
+        for conn in listener.incoming() {
+            let conn = match conn {
+                Ok(c) => c,
+                Err(e) => {
+                    consecutive_errors += 1;
+                    if consecutive_errors >= MAX_ACCEPT_ERRORS {
+                        errorln!(
+                            "worker",
+                            "uds accept loop: {consecutive_errors} consecutive failures \
+                             (last: {e}); listener presumed dead"
+                        );
+                        break;
+                    }
+                    debugln!("worker", "transient uds accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            consecutive_errors = 0;
+            let store = store.clone();
+            let board = board.clone();
+            let telemetry = telemetry.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = serve_data_conn(conn, store, board, telemetry, batch_rows) {
+                    debugln!("worker", "uds data conn ended: {e}");
+                }
+            });
+        }
+    });
+    match spawned {
+        Ok(_) => addr,
+        Err(e) => {
+            warnln!("worker", "uds fast path disabled (spawn accept thread: {e})");
+            let _ = std::fs::remove_file(&path);
+            String::new()
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn bind_uds_data_plane(
+    _data_addr: &str,
+    _store: &Arc<Mutex<MatrixStore>>,
+    _board: &Arc<StatusBoard>,
+    _telemetry: &Arc<WorkerTelemetry>,
+    _batch_rows: u32,
+) -> String {
+    String::new()
 }
 
 fn build_backend(cfg: &ServerConfig) -> (Box<dyn GemmBackend>, Option<&'static crate::runtime::PjrtRuntime>) {
@@ -583,14 +685,103 @@ fn decode_put_slab(buf: &[u8], idx: &mut Vec<u64>, vals: &mut Vec<f64>) -> Resul
     Ok((handle, cols))
 }
 
+/// Decode a v9 `PutSlabZ` frame into the same reusable buffers: the
+/// compressed payload is borrowed straight from the frame buffer and
+/// decompressed in place on this connection's thread (so the codec
+/// overlaps the sender's socket I/O, not the store lock). Returns
+/// (handle, cols).
+fn decode_put_slab_z(buf: &[u8], idx: &mut Vec<u64>, vals: &mut Vec<f64>) -> Result<(u64, usize)> {
+    let mut r = Reader::new(buf);
+    let _tag = r.get_u8()?;
+    let handle = r.get_u64()?;
+    // the payload's sections are self-describing; the codec byte is for
+    // telemetry/debugging, not decode
+    let _codec = r.get_u8()?;
+    let count = r.get_u32()? as usize;
+    let cols = r.get_u32()? as usize;
+    let payload = r.get_bytes_ref()?;
+    decompress_slab(payload, count, cols, idx, vals)?;
+    Ok((handle, cols))
+}
+
+/// Store one decoded slab under the store lock. Returns `Some((error,
+/// fatal))` on failure: an unknown handle is a per-frame error (the
+/// connection survives, as for legacy `PutRows`); a misrouted or
+/// mis-sized row poisons the connection like the legacy path.
+fn store_slab(
+    store: &Mutex<MatrixStore>,
+    handle: u64,
+    cols: usize,
+    idx_buf: &[u64],
+    val_buf: &[f64],
+) -> Option<(Error, bool)> {
+    let mut guard = store.lock().unwrap();
+    match guard.get_mut(handle) {
+        Ok(panel) => {
+            for (i, &r) in idx_buf.iter().enumerate() {
+                if let Err(e) = panel.set_row(r, &val_buf[i * cols..(i + 1) * cols]) {
+                    return Some((e, true));
+                }
+            }
+            None
+        }
+        Err(e) => Some((e, false)),
+    }
+}
+
+/// Collect the locally-owned rows of `[start, end)` into slab chunks
+/// under the store lock (one bulk copy per row, no per-row Vec), so the
+/// caller can stream — and optionally compress — frames lock-free.
+/// Workers iterate rows in ascending global index, which the striped
+/// fetch merge relies on. Returns `(cols, chunks)` or the lookup error
+/// message to send back as a data-plane `Err` frame.
+#[allow(clippy::type_complexity)]
+fn collect_slab_chunks(
+    store: &Mutex<MatrixStore>,
+    handle: u64,
+    start: u64,
+    end: u64,
+    batch_rows: usize,
+) -> std::result::Result<(usize, Vec<(Vec<u64>, Vec<f64>)>), String> {
+    let guard = store.lock().unwrap();
+    let panel = match guard.get(handle) {
+        Ok(p) => p,
+        Err(e) => return Err(e.to_string()),
+    };
+    let cols = panel.meta.cols as usize;
+    let rows_cap = batch_rows.max(1);
+    let vals_cap = (REPLY_SLAB_BYTES / 8).max(cols.max(1));
+    let mut chunks: Vec<(Vec<u64>, Vec<f64>)> = Vec::new();
+    let mut idx: Vec<u64> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for (r, row) in panel.iter_rows() {
+        if r < start || r >= end {
+            continue;
+        }
+        idx.push(r);
+        vals.extend_from_slice(row);
+        if idx.len() >= rows_cap || vals.len() >= vals_cap {
+            chunks.push((std::mem::take(&mut idx), std::mem::take(&mut vals)));
+        }
+    }
+    if !idx.is_empty() {
+        chunks.push((idx, vals));
+    }
+    Ok((cols, chunks))
+}
+
 /// Serve one data-plane connection until EOF. The receive loop reuses one
 /// frame buffer, one slab index/value buffer pair, and one encode buffer
 /// across all frames on the connection. Besides row traffic, the data
 /// plane carries the out-of-band cancel/progress exchanges — those touch
 /// only the status board, never the store lock, so they stay responsive
 /// while a routine holds the store.
-fn serve_data_conn(
-    mut conn: TcpStream,
+///
+/// Generic over the byte stream: TCP connections and the v9 UDS fast
+/// path run the exact same loop (the frames are identical bytes
+/// whichever socket they cross).
+fn serve_data_conn<S: Read + Write>(
+    mut conn: S,
     store: Arc<Mutex<MatrixStore>>,
     board: Arc<StatusBoard>,
     telemetry: Arc<WorkerTelemetry>,
@@ -604,8 +795,10 @@ fn serve_data_conn(
         if frame::read_frame_into(&mut conn, &mut buf).is_err() {
             return Ok(()); // EOF / client closed
         }
-        // Hot path first: v5 slab uploads bypass the allocating decoder.
-        if buf.first() == Some(&DataMsg::TAG_PUT_SLAB) {
+        // Hot path first: v5 slab uploads (and their v9 compressed twin)
+        // bypass the allocating decoder.
+        let first = buf.first().copied();
+        if first == Some(DataMsg::TAG_PUT_SLAB) || first == Some(DataMsg::TAG_PUT_SLAB_Z) {
             // Pre-registered handles: two relaxed atomic adds per frame.
             telemetry.slab_frames.inc(1);
             telemetry.slab_bytes.inc(buf.len() as u64);
@@ -614,7 +807,12 @@ fn serve_data_conn(
             {
                 telemetry.sink.mark(AMBIENT_TRACE, "put_slab_frame");
             }
-            let (handle, cols) = match decode_put_slab(&buf, &mut idx_buf, &mut val_buf) {
+            let decoded = if first == Some(DataMsg::TAG_PUT_SLAB) {
+                decode_put_slab(&buf, &mut idx_buf, &mut val_buf)
+            } else {
+                decode_put_slab_z(&buf, &mut idx_buf, &mut val_buf)
+            };
+            let (handle, cols) = match decoded {
                 Ok(v) => v,
                 Err(e) => {
                     let msg = DataMsg::Err { message: e.to_string() };
@@ -622,27 +820,7 @@ fn serve_data_conn(
                     return Err(e);
                 }
             };
-            // `(error, fatal)`: unknown handle is a per-frame error (the
-            // connection survives, as for legacy PutRows); a misrouted or
-            // mis-sized row poisons the connection like the legacy path.
-            let failure: Option<(Error, bool)> = {
-                let mut guard = store.lock().unwrap();
-                match guard.get_mut(handle) {
-                    Ok(panel) => {
-                        let mut bad = None;
-                        for (i, &r) in idx_buf.iter().enumerate() {
-                            if let Err(e) = panel.set_row(r, &val_buf[i * cols..(i + 1) * cols])
-                            {
-                                bad = Some((e, true));
-                                break;
-                            }
-                        }
-                        bad
-                    }
-                    Err(e) => Some((e, false)),
-                }
-            };
-            if let Some((e, fatal)) = failure {
+            if let Some((e, fatal)) = store_slab(&store, handle, cols, &idx_buf, &val_buf) {
                 let msg = DataMsg::Err { message: e.to_string() };
                 frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
                 if fatal {
@@ -696,48 +874,64 @@ fn serve_data_conn(
             }
             DataMsg::GetRowsSlab { handle, start, end } => {
                 // v5 download: pack locally-owned rows in [start, end)
-                // into slab chunks under the lock (one bulk copy per row,
-                // no per-row Vec), then stream frames lock-free.
-                let mut cols = 0usize;
-                let mut chunks: Vec<(Vec<u64>, Vec<f64>)> = Vec::new();
-                let lookup_err = {
-                    let guard = store.lock().unwrap();
-                    match guard.get(handle) {
-                        Ok(panel) => {
-                            cols = panel.meta.cols as usize;
-                            let rows_cap = batch_rows.max(1);
-                            let vals_cap = (REPLY_SLAB_BYTES / 8).max(cols.max(1));
-                            let mut idx: Vec<u64> = Vec::new();
-                            let mut vals: Vec<f64> = Vec::new();
-                            for (r, row) in panel.iter_rows() {
-                                if r < start || r >= end {
-                                    continue;
-                                }
-                                idx.push(r);
-                                vals.extend_from_slice(row);
-                                if idx.len() >= rows_cap || vals.len() >= vals_cap {
-                                    chunks.push((
-                                        std::mem::take(&mut idx),
-                                        std::mem::take(&mut vals),
-                                    ));
-                                }
-                            }
-                            if !idx.is_empty() {
-                                chunks.push((idx, vals));
-                            }
-                            None
-                        }
-                        Err(e) => Some(e.to_string()),
+                // into slab chunks under the lock, then stream frames
+                // lock-free.
+                let r = collect_slab_chunks(&store, handle, start, end, batch_rows);
+                let (cols, chunks) = match r {
+                    Ok(v) => v,
+                    Err(message) => {
+                        let msg = DataMsg::Err { message };
+                        frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                        continue;
                     }
                 };
-                if let Some(message) = lookup_err {
-                    let msg = DataMsg::Err { message };
-                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
-                    continue;
-                }
                 for (indices, values) in chunks {
                     let msg = DataMsg::SlabBatch { handle, indices, cols: cols as u32, values };
                     frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                }
+                let done = DataMsg::GetDone { handle };
+                frame::write_frame_with(&mut conn, &mut wbuf, |w| done.encode_into(w))?;
+            }
+            DataMsg::GetRowsSlabZ { handle, start, end, codec } => {
+                // v9 compressed download: same chunking, but each chunk is
+                // packed with the requested codec before it hits the wire
+                // (on this connection's thread, outside the store lock).
+                // Codec 0 degenerates to plain `SlabBatch` frames.
+                let codec = match WireCodec::from_tag(codec) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let msg = DataMsg::Err { message: e.to_string() };
+                        frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                        continue;
+                    }
+                };
+                let r = collect_slab_chunks(&store, handle, start, end, batch_rows);
+                let (cols, chunks) = match r {
+                    Ok(v) => v,
+                    Err(message) => {
+                        let msg = DataMsg::Err { message };
+                        frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                        continue;
+                    }
+                };
+                let mut zbuf: Vec<u8> = Vec::new();
+                for (indices, values) in chunks {
+                    let msg = if codec == WireCodec::None {
+                        DataMsg::SlabBatch { handle, indices, cols: cols as u32, values }
+                    } else {
+                        compress_slab(codec, &indices, &values, &mut zbuf);
+                        DataMsg::SlabBatchZ {
+                            handle,
+                            codec: codec.tag(),
+                            count: indices.len() as u32,
+                            cols: cols as u32,
+                            payload: std::mem::take(&mut zbuf),
+                        }
+                    };
+                    frame::write_frame_with(&mut conn, &mut wbuf, |w| msg.encode_into(w))?;
+                    if let DataMsg::SlabBatchZ { payload, .. } = msg {
+                        zbuf = payload; // reclaim the compression buffer
+                    }
                 }
                 let done = DataMsg::GetDone { handle };
                 frame::write_frame_with(&mut conn, &mut wbuf, |w| done.encode_into(w))?;

@@ -97,6 +97,7 @@ impl IndexedRowMatrix {
         let batch_rows = ac.batch_rows as u32;
         let transfer = ac.transfer.clone();
         let use_slab = ac.slab_negotiated();
+        let codec = ac.wire_codec().tag();
         let t = crate::metrics::Timer::start();
         let sent = sc.aggregate(self.rdd, |_| TaskOp::SendToAlchemist {
             workers: workers.clone(),
@@ -104,6 +105,7 @@ impl IndexedRowMatrix {
             batch_rows,
             transfer: transfer.clone(),
             use_slab,
+            codec,
         })?;
         ac.phases.add("send", t.elapsed());
         if sent[0] as u64 != self.rows {
@@ -141,6 +143,7 @@ impl IndexedRowMatrix {
                     row_end,
                     transfer: ac.transfer.clone(),
                     use_slab: ac.slab_negotiated(),
+                    codec: ac.wire_codec().tag(),
                 }
             })?;
             out

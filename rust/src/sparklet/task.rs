@@ -10,7 +10,7 @@
 use crate::client::transfer;
 use crate::config::TransferConfig;
 use crate::linalg::{gemm, DenseMatrix};
-use crate::protocol::{MatrixMeta, Reader, WireRow, Writer, WorkerInfo};
+use crate::protocol::{MatrixMeta, Reader, WireCodec, WireRow, Writer, WorkerInfo};
 use crate::sparklet::data::{decode_matrix, encode_matrix, Block, PartitionData, TaggedBlock};
 use crate::workload;
 use crate::{Error, Result};
@@ -59,6 +59,8 @@ pub enum TaskOp {
         batch_rows: u32,
         transfer: TransferConfig,
         use_slab: bool,
+        /// Negotiated wire codec tag (`WireCodec::tag()`); 0 = none.
+        codec: u8,
     },
     /// () -> Rows: fetch rows [row_start, row_end) from Alchemist.
     /// Carries the driver's `[transfer]` knobs like `SendToAlchemist`
@@ -71,6 +73,8 @@ pub enum TaskOp {
         row_end: u64,
         transfer: TransferConfig,
         use_slab: bool,
+        /// Negotiated wire codec tag (`WireCodec::tag()`); 0 = none.
+        codec: u8,
     },
     /// Pass-through (collect / repartition).
     Identity,
@@ -314,10 +318,11 @@ pub fn eval(op: &TaskOp, input: Option<&PartitionData>) -> Result<EvalOut> {
             let n = input.map(|d| d.len()).unwrap_or(0);
             Ok(EvalOut::Plain(PartitionData::Doubles(vec![n as f64])))
         }
-        TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer: tcfg, use_slab } => {
+        TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer: tcfg, use_slab, codec } => {
             let rows = expect_rows(input)?;
-            let opts =
+            let mut opts =
                 transfer::TransferOptions::new(tcfg, *batch_rows as usize, true, *use_slab);
+            opts.codec = WireCodec::from_tag(*codec)?;
             let (sent, frames) = transfer::push_rows(
                 workers,
                 meta,
@@ -333,8 +338,10 @@ pub fn eval(op: &TaskOp, input: Option<&PartitionData>) -> Result<EvalOut> {
             row_end,
             transfer: tcfg,
             use_slab,
+            codec,
         } => {
-            let opts = transfer::TransferOptions::new(tcfg, 256, true, *use_slab);
+            let mut opts = transfer::TransferOptions::new(tcfg, 256, true, *use_slab);
+            opts.codec = WireCodec::from_tag(*codec)?;
             let mut rows = Vec::new();
             transfer::fetch_rows(workers, meta, *row_start, *row_end, &opts, |index, values| {
                 rows.push(WireRow { index, values: values.to_vec() });
@@ -452,18 +459,17 @@ impl TaskOp {
             }
             TaskOp::SumSq => w.put_u8(10),
             TaskOp::CountItems => w.put_u8(11),
-            TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer, use_slab } => {
+            TaskOp::SendToAlchemist { workers, meta, batch_rows, transfer, use_slab, codec } => {
                 w.put_u8(12);
                 w.put_u32(workers.len() as u32);
                 for wk in workers {
-                    wk.encode(w);
+                    wk.encode_ex(w);
                 }
                 meta.encode(w);
                 w.put_u32(*batch_rows);
-                w.put_u32(transfer.sender_threads);
-                w.put_u32(transfer.slab_bytes);
-                w.put_u32(transfer.channel_depth);
+                encode_transfer_cfg(w, transfer);
                 w.put_bool(*use_slab);
+                w.put_u8(*codec);
             }
             TaskOp::FetchFromAlchemist {
                 workers,
@@ -472,19 +478,19 @@ impl TaskOp {
                 row_end,
                 transfer,
                 use_slab,
+                codec,
             } => {
                 w.put_u8(13);
                 w.put_u32(workers.len() as u32);
                 for wk in workers {
-                    wk.encode(w);
+                    wk.encode_ex(w);
                 }
                 meta.encode(w);
                 w.put_u64(*row_start);
                 w.put_u64(*row_end);
-                w.put_u32(transfer.sender_threads);
-                w.put_u32(transfer.slab_bytes);
-                w.put_u32(transfer.channel_depth);
+                encode_transfer_cfg(w, transfer);
                 w.put_bool(*use_slab);
+                w.put_u8(*codec);
             }
             TaskOp::Identity => w.put_u8(14),
         }
@@ -532,43 +538,60 @@ impl TaskOp {
                 let n = r.get_u32()? as usize;
                 let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
                 for _ in 0..n {
-                    workers.push(WorkerInfo::decode(r)?);
+                    workers.push(WorkerInfo::decode_ex(r)?);
                 }
                 TaskOp::SendToAlchemist {
                     workers,
                     meta: MatrixMeta::decode(r)?,
                     batch_rows: r.get_u32()?,
-                    transfer: TransferConfig {
-                        sender_threads: r.get_u32()?,
-                        slab_bytes: r.get_u32()?,
-                        channel_depth: r.get_u32()?,
-                    },
+                    transfer: decode_transfer_cfg(r)?,
                     use_slab: r.get_bool()?,
+                    codec: r.get_u8()?,
                 }
             }
             13 => {
                 let n = r.get_u32()? as usize;
                 let mut workers = Vec::with_capacity(r.cap_hint(n, 8));
                 for _ in 0..n {
-                    workers.push(WorkerInfo::decode(r)?);
+                    workers.push(WorkerInfo::decode_ex(r)?);
                 }
                 TaskOp::FetchFromAlchemist {
                     workers,
                     meta: MatrixMeta::decode(r)?,
                     row_start: r.get_u64()?,
                     row_end: r.get_u64()?,
-                    transfer: TransferConfig {
-                        sender_threads: r.get_u32()?,
-                        slab_bytes: r.get_u32()?,
-                        channel_depth: r.get_u32()?,
-                    },
+                    transfer: decode_transfer_cfg(r)?,
                     use_slab: r.get_bool()?,
+                    codec: r.get_u8()?,
                 }
             }
             14 => TaskOp::Identity,
             t => return Err(Error::Protocol(format!("bad TaskOp tag {t}"))),
         })
     }
+}
+
+/// Serialize the `[transfer]` knobs carried inside transfer tasks. This
+/// is the sparklet-internal task wire (driver and executors are always
+/// the same build), so the format changes freely with the struct.
+fn encode_transfer_cfg(w: &mut Writer, t: &TransferConfig) {
+    w.put_u32(t.sender_threads);
+    w.put_u32(t.slab_bytes);
+    w.put_u32(t.channel_depth);
+    w.put_str(&t.transport);
+    w.put_u32(t.stripes);
+    w.put_str(&t.compression);
+}
+
+fn decode_transfer_cfg(r: &mut Reader<'_>) -> Result<TransferConfig> {
+    Ok(TransferConfig {
+        sender_threads: r.get_u32()?,
+        slab_bytes: r.get_u32()?,
+        channel_depth: r.get_u32()?,
+        transport: r.get_str()?,
+        stripes: r.get_u32()?,
+        compression: r.get_str()?,
+    })
 }
 
 impl TaskOut {
@@ -656,6 +679,64 @@ mod tests {
                 op: TaskOp::MapU {
                     v: DenseMatrix::identity(2),
                     sigma_inv: vec![0.5, 0.25],
+                },
+                out: TaskOut::Collect,
+            },
+            // Transfer tasks carry the full `[transfer]` knob set, the
+            // 3-field WorkerInfo (uds_addr), and the negotiated codec tag.
+            TaskSpec {
+                input: Some((3, 0)),
+                op: TaskOp::SendToAlchemist {
+                    workers: vec![crate::protocol::WorkerInfo {
+                        id: 0,
+                        data_addr: "127.0.0.1:9000".into(),
+                        uds_addr: "/tmp/alchemist-uds/wkr-1-9000.sock".into(),
+                    }],
+                    meta: crate::protocol::MatrixMeta {
+                        handle: 9,
+                        rows: 8,
+                        cols: 2,
+                        layout: crate::protocol::LayoutDesc {
+                            kind: crate::protocol::LayoutKind::RowBlock,
+                            owners: vec![0],
+                        },
+                    },
+                    batch_rows: 64,
+                    transfer: TransferConfig {
+                        sender_threads: 2,
+                        slab_bytes: 1 << 16,
+                        channel_depth: 4,
+                        transport: "auto".into(),
+                        stripes: 3,
+                        compression: "delta".into(),
+                    },
+                    use_slab: true,
+                    codec: 1,
+                },
+                out: TaskOut::Aggregate,
+            },
+            TaskSpec {
+                input: None,
+                op: TaskOp::FetchFromAlchemist {
+                    workers: vec![crate::protocol::WorkerInfo {
+                        id: 1,
+                        data_addr: "127.0.0.1:9001".into(),
+                        uds_addr: String::new(),
+                    }],
+                    meta: crate::protocol::MatrixMeta {
+                        handle: 10,
+                        rows: 4,
+                        cols: 4,
+                        layout: crate::protocol::LayoutDesc {
+                            kind: crate::protocol::LayoutKind::Replicated,
+                            owners: vec![1],
+                        },
+                    },
+                    row_start: 0,
+                    row_end: 4,
+                    transfer: TransferConfig::default(),
+                    use_slab: false,
+                    codec: 0,
                 },
                 out: TaskOut::Collect,
             },

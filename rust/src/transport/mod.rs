@@ -1,0 +1,340 @@
+//! Pluggable data-plane transports (transfer plane v2).
+//!
+//! The slab codec and the framing layer are transport-agnostic — every
+//! data-plane socket is a blocking byte stream carrying `u32 LE length ||
+//! payload` frames. This module puts a [`Transport`]/[`Connector`]
+//! abstraction behind them so the client's sender/fetch pipelines can
+//! dial:
+//!
+//! * **tcp** — the classic path, one `TcpStream` per owner;
+//! * **uds** — a Unix-domain-socket fast path, auto-selected when the
+//!   owner's TCP data address resolves to the local host *and* the worker
+//!   advertised a UDS path (v9 sessions only — ≤ v8 servers never
+//!   publish one, so old sessions stay on TCP by construction);
+//! * **striped** — N connections per owner for fat pipes, with
+//!   round-robin slab dispatch and a per-stripe `PutDone` barrier
+//!   (`client/transfer.rs` owns the lane bookkeeping; this module
+//!   provides the connector and the deterministic range partitioning).
+//!
+//! Workers serve every transport with the same `serve_data_conn` loop —
+//! the frames are identical bytes whichever socket they cross.
+
+pub mod striped;
+pub mod tcp;
+#[cfg(unix)]
+pub mod uds;
+
+use std::io::{Read, Write};
+use std::net::SocketAddr;
+
+use crate::protocol::{frame, Writer};
+use crate::{Error, Result};
+
+/// Where one worker's data plane can be dialed: always a TCP address,
+/// plus a UDS path when the worker bound one ("" otherwise).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Endpoint {
+    pub tcp_addr: String,
+    pub uds_addr: String,
+}
+
+impl Endpoint {
+    /// TCP-only endpoint (≤ v8 servers, mesh peers).
+    pub fn tcp(addr: impl Into<String>) -> Endpoint {
+        Endpoint { tcp_addr: addr.into(), uds_addr: String::new() }
+    }
+
+    /// True when the TCP address parses to a loopback IP — the UDS
+    /// auto-selection rule (a UDS path advertised by a remote host names
+    /// a file that does not exist here).
+    pub fn is_local(&self) -> bool {
+        self.tcp_addr
+            .parse::<SocketAddr>()
+            .map(|a| a.ip().is_loopback())
+            .unwrap_or(false)
+    }
+}
+
+/// Marker trait for the byte streams a [`Transport`] can wrap.
+pub trait Stream: Read + Write + Send {}
+
+impl<T: Read + Write + Send> Stream for T {}
+
+/// Which wire a [`Transport`] runs over — keys the per-transport byte
+/// counters in [`crate::metrics::TransferMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    Tcp,
+    Uds,
+}
+
+impl TransportKind {
+    pub const fn name(self) -> &'static str {
+        match self {
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
+        }
+    }
+}
+
+/// One dialed data-plane connection: a boxed blocking stream plus the
+/// kind tag telemetry wants. Implements `Read`/`Write` by delegation so
+/// the framing helpers (and any code written against `TcpStream`) work
+/// unchanged.
+pub struct Transport {
+    kind: TransportKind,
+    stream: Box<dyn Stream>,
+}
+
+impl Transport {
+    pub fn new(kind: TransportKind, stream: Box<dyn Stream>) -> Transport {
+        Transport { kind, stream }
+    }
+
+    pub fn kind(&self) -> TransportKind {
+        self.kind
+    }
+
+    /// Framed write (single syscall, reusable encode buffer); returns the
+    /// bytes written including the length header.
+    pub fn send_frame(
+        &mut self,
+        wbuf: &mut Writer,
+        encode: impl FnOnce(&mut Writer),
+    ) -> Result<usize> {
+        frame::write_frame_with(&mut self.stream, wbuf, encode)
+    }
+
+    /// Framed read into a reusable buffer; returns the payload length.
+    pub fn recv_frame_into(&mut self, buf: &mut Vec<u8>) -> Result<usize> {
+        frame::read_frame_into(&mut self.stream, buf)
+    }
+}
+
+impl std::fmt::Debug for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Transport").field("kind", &self.kind).finish()
+    }
+}
+
+impl Read for Transport {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.stream.read(buf)
+    }
+}
+
+impl Write for Transport {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.stream.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+/// Static capabilities of a connector — what the dial path may assume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportFeatures {
+    /// The underlying socket honors a no-delay (anti-Nagle) knob.
+    pub supports_nodelay: bool,
+    /// Only endpoints on this host can be dialed.
+    pub local_only: bool,
+}
+
+/// Dials [`Endpoint`]s into [`Transport`]s. Implementations must be
+/// shareable across the sender/fetch thread pools.
+pub trait Connector: Send + Sync {
+    /// Short name for logs, bench sweep labels and error messages.
+    fn name(&self) -> &'static str;
+
+    fn features(&self) -> TransportFeatures;
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport>;
+}
+
+/// How the `[transfer] transport` knob selects a connector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportChoice {
+    /// UDS when the endpoint is local and advertises a path, else TCP.
+    #[default]
+    Auto,
+    Tcp,
+    Uds,
+}
+
+impl TransportChoice {
+    pub fn parse(s: &str) -> Result<TransportChoice> {
+        Ok(match s {
+            "auto" => TransportChoice::Auto,
+            "tcp" => TransportChoice::Tcp,
+            "uds" => TransportChoice::Uds,
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown transfer.transport {s:?} (expected auto|tcp|uds)"
+                )))
+            }
+        })
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            TransportChoice::Auto => "auto",
+            TransportChoice::Tcp => "tcp",
+            TransportChoice::Uds => "uds",
+        }
+    }
+}
+
+/// The auto-selection policy: try the UDS fast path when the endpoint is
+/// provably co-located (loopback TCP address + advertised UDS path), fall
+/// back to TCP — including when the UDS dial itself fails, e.g. a stale
+/// socket file left by a restarted worker.
+pub struct AutoConnector {
+    tcp: tcp::TcpConnector,
+}
+
+impl AutoConnector {
+    pub fn new(nodelay: bool) -> AutoConnector {
+        AutoConnector { tcp: tcp::TcpConnector { nodelay } }
+    }
+}
+
+impl Connector for AutoConnector {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        self.tcp.features()
+    }
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport> {
+        #[cfg(unix)]
+        if !ep.uds_addr.is_empty() && ep.is_local() {
+            if let Ok(t) = uds::UdsConnector.dial(ep) {
+                return Ok(t);
+            }
+        }
+        self.tcp.dial(ep)
+    }
+}
+
+#[cfg(not(unix))]
+struct Unsupported(&'static str);
+
+#[cfg(not(unix))]
+impl Connector for Unsupported {
+    fn name(&self) -> &'static str {
+        "unsupported"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        TransportFeatures { supports_nodelay: false, local_only: false }
+    }
+
+    fn dial(&self, _ep: &Endpoint) -> Result<Transport> {
+        Err(Error::Config(self.0.into()))
+    }
+}
+
+#[cfg(unix)]
+fn uds_connector() -> Box<dyn Connector> {
+    Box::new(uds::UdsConnector)
+}
+
+#[cfg(not(unix))]
+fn uds_connector() -> Box<dyn Connector> {
+    Box::new(Unsupported("transfer.transport = \"uds\" requires a unix host"))
+}
+
+/// Build the connector for a configured transport choice.
+pub fn connector_for(choice: TransportChoice, nodelay: bool) -> Box<dyn Connector> {
+    match choice {
+        TransportChoice::Auto => Box::new(AutoConnector::new(nodelay)),
+        TransportChoice::Tcp => Box::new(tcp::TcpConnector { nodelay }),
+        TransportChoice::Uds => uds_connector(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_locality_rule() {
+        assert!(Endpoint::tcp("127.0.0.1:4000").is_local());
+        assert!(Endpoint::tcp("[::1]:4000").is_local());
+        assert!(!Endpoint::tcp("10.0.0.7:4000").is_local());
+        assert!(!Endpoint::tcp("not-an-addr").is_local());
+    }
+
+    #[test]
+    fn choice_parses_and_rejects() {
+        for c in [TransportChoice::Auto, TransportChoice::Tcp, TransportChoice::Uds] {
+            assert_eq!(TransportChoice::parse(c.name()).unwrap(), c);
+        }
+        assert!(TransportChoice::parse("rdma").is_err());
+    }
+
+    #[test]
+    fn tcp_connector_dials_and_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got = frame::read_frame(&mut s).unwrap();
+            frame::write_frame(&mut s, &got).unwrap();
+        });
+        let conn = connector_for(TransportChoice::Tcp, true);
+        assert_eq!(conn.name(), "tcp");
+        assert!(conn.features().supports_nodelay);
+        let mut tr = conn.dial(&Endpoint::tcp(addr)).unwrap();
+        assert_eq!(tr.kind(), TransportKind::Tcp);
+        let mut w = Writer::new();
+        tr.send_frame(&mut w, |w| w.put_u8(42)).unwrap();
+        let mut buf = Vec::new();
+        assert_eq!(tr.recv_frame_into(&mut buf).unwrap(), 1);
+        assert_eq!(buf, vec![42]);
+        t.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn auto_prefers_uds_and_falls_back() {
+        use std::os::unix::net::UnixListener;
+        let dir = std::env::temp_dir().join(format!("alch-transport-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("auto.sock");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got = frame::read_frame(&mut s).unwrap();
+            frame::write_frame(&mut s, &got).unwrap();
+        });
+        let ep = Endpoint {
+            tcp_addr: "127.0.0.1:1".into(), // unused: UDS wins
+            uds_addr: path.to_string_lossy().into_owned(),
+        };
+        let conn = connector_for(TransportChoice::Auto, true);
+        let mut tr = conn.dial(&ep).unwrap();
+        assert_eq!(tr.kind(), TransportKind::Uds);
+        let mut w = Writer::new();
+        tr.send_frame(&mut w, |w| w.put_u8(7)).unwrap();
+        let mut buf = Vec::new();
+        tr.recv_frame_into(&mut buf).unwrap();
+        assert_eq!(buf, vec![7]);
+        t.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        // non-local endpoints must not try the UDS path even if one is
+        // advertised (the file belongs to another host's namespace)
+        let remote = Endpoint { tcp_addr: "10.9.8.7:1".into(), uds_addr: "/tmp/x.sock".into() };
+        assert!(!remote.is_local());
+
+        // forced uds with no advertised path is a typed error
+        let bare = Endpoint::tcp("127.0.0.1:1");
+        assert!(connector_for(TransportChoice::Uds, false).dial(&bare).is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Striped multi-connection transfers: N lanes per owner for fat pipes.
+//!
+//! A single TCP stream often cannot fill a high-bandwidth path (one
+//! congestion window, one kernel copy pipeline). Striping opens
+//! `stripes` connections per owner and spreads slabs across them:
+//!
+//! * **push** — the router round-robins full slab batches over an
+//!   owner's lanes; every lane runs its own `PutDone` barrier, and
+//!   `push_rows` only returns once *all* lanes of all owners acked, so
+//!   the completion guarantee is unchanged (each row's frames stay
+//!   ordered within their lane, and every lane is drained).
+//! * **fetch** — the requested row range is partitioned into `stripes`
+//!   contiguous sub-ranges per owner ([`stripe_ranges`]); each lane
+//!   streams one sub-range, and the owner's results are delivered in
+//!   stripe order. Workers stream a range in ascending global-index
+//!   order, so the per-owner merge is deterministic and index-sorted —
+//!   byte-for-byte the row set a single connection would have produced.
+//!
+//! The connector itself is deliberately thin: each `dial` opens one more
+//! lane over the inner transport (so striping composes with the UDS fast
+//! path); the lane bookkeeping lives in `client/transfer.rs`.
+
+use super::{Connector, Endpoint, Transport, TransportFeatures};
+use crate::Result;
+
+/// Opens one lane per `dial` over an inner connector.
+pub struct StripedConnector {
+    inner: Box<dyn Connector>,
+    stripes: usize,
+}
+
+impl StripedConnector {
+    pub fn new(inner: Box<dyn Connector>, stripes: usize) -> StripedConnector {
+        StripedConnector { inner, stripes: stripes.max(1) }
+    }
+
+    /// Lanes per owner.
+    pub fn stripes(&self) -> usize {
+        self.stripes
+    }
+}
+
+impl Connector for StripedConnector {
+    fn name(&self) -> &'static str {
+        "striped"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        self.inner.features()
+    }
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport> {
+        self.inner.dial(ep)
+    }
+}
+
+/// Partition `[start, end)` into up to `stripes` contiguous, non-empty,
+/// ascending sub-ranges that exactly cover it (ceil division, so the
+/// first ranges are at most one unit longer than the last).
+pub fn stripe_ranges(start: u64, end: u64, stripes: usize) -> Vec<(u64, u64)> {
+    let stripes = stripes.max(1) as u64;
+    let span = end.saturating_sub(start);
+    if span == 0 {
+        return Vec::new();
+    }
+    let per = span.div_ceil(stripes);
+    let mut out = Vec::with_capacity(stripes as usize);
+    let mut cur = start;
+    while cur < end {
+        let next = (cur + per).min(end);
+        out.push((cur, next));
+        cur = next;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly_in_order() {
+        for (start, end, stripes) in
+            [(0u64, 100u64, 4usize), (10, 11, 4), (5, 5, 3), (0, 7, 3), (3, 1000, 1), (0, 3, 8)]
+        {
+            let ranges = stripe_ranges(start, end, stripes);
+            assert!(ranges.len() <= stripes.max(1));
+            let mut cur = start;
+            for &(s, e) in &ranges {
+                assert_eq!(s, cur, "contiguous");
+                assert!(e > s, "non-empty");
+                cur = e;
+            }
+            assert_eq!(cur, if end > start { end } else { start }, "covers [start,end)");
+            if end <= start {
+                assert!(ranges.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn striped_connector_composes() {
+        let inner = super::super::connector_for(super::super::TransportChoice::Tcp, true);
+        let striped = StripedConnector::new(inner, 0);
+        assert_eq!(striped.stripes(), 1, "stripe count is clamped");
+        assert_eq!(striped.name(), "striped");
+        assert!(striped.features().supports_nodelay);
+    }
+}

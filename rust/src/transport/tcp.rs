@@ -1,0 +1,33 @@
+//! The classic TCP data-plane transport (what every session used before
+//! v9, and what ≤ v8 peers and cross-host endpoints still use).
+
+use std::net::TcpStream;
+
+use super::{Connector, Endpoint, Transport, TransportFeatures, TransportKind};
+use crate::Result;
+
+/// Dials the endpoint's TCP data address, optionally disabling Nagle
+/// (the `[transfer] nodelay` knob — small `PutDone`/`PutComplete` control
+/// frames should not wait behind a coalescing timer).
+#[derive(Debug, Clone, Copy)]
+pub struct TcpConnector {
+    pub nodelay: bool,
+}
+
+impl Connector for TcpConnector {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        TransportFeatures { supports_nodelay: true, local_only: false }
+    }
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport> {
+        let s = TcpStream::connect(&ep.tcp_addr)?;
+        if self.nodelay {
+            s.set_nodelay(true)?;
+        }
+        Ok(Transport::new(TransportKind::Tcp, Box::new(s)))
+    }
+}

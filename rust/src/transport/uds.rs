@@ -1,0 +1,39 @@
+//! Unix-domain-socket fast path for co-located client ⇄ worker pairs.
+//!
+//! Same frames, same blocking I/O model as TCP, but the kernel skips the
+//! loopback network stack entirely — no pseudo-checksums, no 64 KiB
+//! loopback MTU segmentation, larger default buffers. Workers bind the
+//! socket next to their TCP data listener and advertise the path in
+//! their registration hello; it only reaches clients through the v9
+//! `WorkersGranted` shape.
+
+use std::os::unix::net::UnixStream;
+
+use super::{Connector, Endpoint, Transport, TransportFeatures, TransportKind};
+use crate::{Error, Result};
+
+/// Dials the endpoint's advertised UDS path. Fails with a typed error
+/// when the endpoint has none (pre-v9 server, or a non-unix worker).
+#[derive(Debug, Clone, Copy)]
+pub struct UdsConnector;
+
+impl Connector for UdsConnector {
+    fn name(&self) -> &'static str {
+        "uds"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        TransportFeatures { supports_nodelay: false, local_only: true }
+    }
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport> {
+        if ep.uds_addr.is_empty() {
+            return Err(Error::Server(format!(
+                "worker at {} advertised no UDS data address (pre-v9 server?)",
+                ep.tcp_addr
+            )));
+        }
+        let s = UnixStream::connect(&ep.uds_addr)?;
+        Ok(Transport::new(TransportKind::Uds, Box::new(s)))
+    }
+}

@@ -1,0 +1,310 @@
+//! Integration: transfer plane v2 — pluggable transports (TCP, the UDS
+//! loopback fast path, striped multi-connection lanes) and negotiated
+//! wire compression, plus raw-frame proof that ≤ v8 peers keep the old
+//! plain-TCP/uncompressed wire byte-for-byte.
+
+use alchemist::bench_support::prop;
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::metrics::transfer_metrics;
+use alchemist::protocol::{
+    frame, ClientMsg, DataMsg, DriverMsg, LayoutKind, WireCodec, TRANSPORT_PROTOCOL_VERSION,
+};
+use alchemist::server::{start_server, ServerHandle};
+use alchemist::workload::random_matrix;
+use std::net::TcpStream;
+
+fn server(workers: u32) -> ServerHandle {
+    let mut cfg = Config::default();
+    cfg.server.workers = workers;
+    cfg.server.gemm_backend = "native".into();
+    start_server(&cfg).unwrap()
+}
+
+/// Every (transport, stripes, compression) combination whose roundtrip
+/// must be bit-identical. The lossy `f32` codec is tested separately —
+/// it is opt-in only and never part of this set.
+fn lossless_combos() -> Vec<(&'static str, u32, &'static str)> {
+    let mut c = vec![
+        ("tcp", 1, "none"),
+        ("tcp", 1, "delta"),
+        ("tcp", 3, "none"),
+        ("tcp", 3, "delta"),
+        ("auto", 1, "none"),
+    ];
+    if cfg!(unix) {
+        c.extend([("uds", 1, "none"), ("uds", 1, "delta"), ("uds", 2, "delta")]);
+    }
+    c
+}
+
+fn connect_with(
+    srv: &ServerHandle,
+    transport: &str,
+    stripes: u32,
+    comp: &str,
+    workers: u32,
+) -> AlchemistContext {
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "it_transport").unwrap();
+    ac.transfer.transport = transport.into();
+    ac.transfer.stripes = stripes;
+    ac.transfer.compression = comp.into();
+    ac.request_workers(workers).unwrap();
+    ac
+}
+
+#[test]
+fn prop_roundtrip_bitwise_across_transports_and_codecs() {
+    // The PR 2 slab-equivalence property, extended over the whole
+    // transport x codec grid: adversarial payloads (NaN, ±Inf, -0.0,
+    // denormals) uploaded out of order must come back bit-identical on
+    // every lossless combination.
+    let srv = server(2);
+    prop::check("transport_roundtrip", 4, |rng| {
+        let rows = prop::int_in(rng, 1, 48) as usize;
+        let cols = prop::int_in(rng, 1, 7) as usize;
+        let special = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 5e-324, 1.0];
+        let mut data = vec![vec![0.0f64; cols]; rows];
+        for row in data.iter_mut() {
+            for v in row.iter_mut() {
+                *v = if rng.next_f64() < 0.3 {
+                    special[prop::int_in(rng, 0, special.len() as u64 - 1) as usize]
+                } else {
+                    rng.next_f64() * 2e9 - 1e9
+                };
+            }
+        }
+        // shuffled upload order: slabs arrive with out-of-order indices
+        let mut order: Vec<u64> = (0..rows as u64).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, prop::int_in(rng, 0, i as u64) as usize);
+        }
+        for (transport, stripes, comp) in lossless_combos() {
+            let tag = format!("{transport} x{stripes} {comp}");
+            let mut ac = connect_with(&srv, transport, stripes, comp, 2);
+            ac.batch_rows = 5; // force several slabs per transfer
+            let m = ac
+                .create_matrix(rows as u64, cols as u64, LayoutKind::RowBlock)
+                .map_err(|e| format!("{tag}: create: {e}"))?;
+            ac.put_rows(&m, order.iter().map(|&i| (i, data[i as usize].clone())))
+                .map_err(|e| format!("{tag}: put: {e}"))?;
+            let n = ac.finish_put(&m).map_err(|e| format!("{tag}: finish: {e}"))?;
+            if n != rows as u64 {
+                return Err(format!("{tag}: finish_put saw {n} of {rows} rows"));
+            }
+            let back = ac.fetch_dense(&m).map_err(|e| format!("{tag}: fetch: {e}"))?;
+            for (i, row) in data.iter().enumerate() {
+                for (j, v) in row.iter().enumerate() {
+                    let (want, got) = (v.to_bits(), back.get(i, j).to_bits());
+                    if want != got {
+                        return Err(format!("{tag}: ({i},{j}) bits {got:#x} != {want:#x}"));
+                    }
+                }
+            }
+            ac.stop().ok();
+        }
+        Ok(())
+    });
+    srv.shutdown();
+}
+
+#[test]
+fn empty_owner_ranges_roundtrip_all_transports() {
+    // 2 workers, 1 row: one owner serves a zero-slab stream. Every
+    // transport/codec combination must end such a fetch cleanly.
+    let srv = server(2);
+    for (transport, stripes, comp) in lossless_combos() {
+        let ac = connect_with(&srv, transport, stripes, comp, 2);
+        let m = ac.create_matrix(1, 3, LayoutKind::RowBlock).unwrap();
+        ac.put_rows(&m, [(0u64, vec![1.0, -0.0, f64::MAX])].into_iter()).unwrap();
+        assert_eq!(ac.finish_put(&m).unwrap(), 1);
+        let back = ac.fetch_dense(&m).unwrap();
+        assert_eq!(back.row(0), &[1.0, -0.0, f64::MAX], "{transport} x{stripes} {comp}");
+        ac.stop().unwrap();
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn striped_transfer_roundtrips_large_matrix() {
+    // Multi-MB matrix over 4 lanes per owner with delta compression:
+    // the per-lane PutDone barrier and the index-ordered stripe merge
+    // must reassemble the exact matrix.
+    let srv = server(3);
+    let mut ac = connect_with(&srv, "tcp", 4, "delta", 3);
+    ac.transfer.sender_threads = 6;
+    ac.transfer.slab_bytes = 32 * 1024;
+    let (rows, cols) = (9_000usize, 24usize);
+    let a = DenseMatrix::from_vec(rows, cols, random_matrix(13, rows, cols)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let back = ac.fetch_dense(&al).unwrap();
+    assert_eq!(back, a);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn v9_sessions_negotiate_codec_caps() {
+    let srv = server(1);
+    let ac = AlchemistContext::connect(&srv.driver_addr, "it_caps").unwrap();
+    assert_eq!(ac.protocol_version(), TRANSPORT_PROTOCOL_VERSION);
+    assert_eq!(ac.transfer_caps(), WireCodec::mask_all());
+    // lossless default: no compression unless configured
+    assert_eq!(ac.wire_codec(), WireCodec::None);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn f32_downcast_is_opt_in_and_approximate() {
+    let srv = server(1);
+    // never auto-negotiated: an unconfigured session stays lossless
+    let ac = connect_with(&srv, "tcp", 1, "none", 1);
+    assert_eq!(ac.wire_codec(), WireCodec::None);
+    ac.stop().unwrap();
+
+    // explicit opt-in: values roundtrip through an f32 downcast
+    let ac = connect_with(&srv, "tcp", 1, "f32", 1);
+    assert_eq!(ac.wire_codec(), WireCodec::F32);
+    let vals =
+        [[1.5f64, f64::NAN], [1e300, -1e-300], [0.125, -7.25], [f64::INFINITY, -0.0]];
+    let m = ac.create_matrix(4, 2, LayoutKind::RowBlock).unwrap();
+    ac.put_rows(&m, vals.iter().enumerate().map(|(i, v)| (i as u64, v.to_vec())))
+        .unwrap();
+    assert_eq!(ac.finish_put(&m).unwrap(), 4);
+    let back = ac.fetch_dense(&m).unwrap();
+    for (i, row) in vals.iter().enumerate() {
+        for (j, v) in row.iter().enumerate() {
+            let want = (*v as f32) as f64;
+            let got = back.get(i, j);
+            assert!(
+                got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                "({i},{j}): got {got}, want {want}"
+            );
+        }
+    }
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn uds_fast_path_moves_bytes_over_uds() {
+    let srv = server(2);
+    // launcher workers live on loopback and advertise a UDS path
+    let ac = connect_with(&srv, "uds", 1, "none", 2);
+    assert!(
+        ac.workers().iter().all(|w| !w.uds_addr.is_empty()),
+        "loopback workers must advertise a UDS data address"
+    );
+    let before_sent = transfer_metrics().counters.get("uds_bytes_sent");
+    let before_recv = transfer_metrics().counters.get("uds_bytes_recv");
+    let a = DenseMatrix::from_vec(64, 8, random_matrix(7, 64, 8)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let back = ac.fetch_dense(&al).unwrap();
+    assert_eq!(back, a);
+    let m = transfer_metrics();
+    assert!(m.counters.get("uds_bytes_sent") > before_sent, "no bytes moved over UDS (send)");
+    assert!(m.counters.get("uds_bytes_recv") > before_recv, "no bytes moved over UDS (fetch)");
+    ac.stop().unwrap();
+
+    // "auto" picks the same fast path when the worker is co-located
+    let ac = connect_with(&srv, "auto", 1, "none", 2);
+    let before_sent = transfer_metrics().counters.get("uds_bytes_sent");
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    assert_eq!(al.rows(), 64);
+    assert!(
+        transfer_metrics().counters.get("uds_bytes_sent") > before_sent,
+        "auto transport should select UDS for loopback workers"
+    );
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn v8_raw_session_gets_legacy_grants_and_plain_tcp() {
+    // A peer pinned at v8 must see the pre-PR-7 wire byte-for-byte: the
+    // legacy tag-1 WorkersGranted (no UDS address), no TransferCaps leg,
+    // and plain uncompressed slab frames over TCP.
+    let srv = server(1);
+    let mut s = TcpStream::connect(&srv.driver_addr).unwrap();
+    frame::write_frame(
+        &mut s,
+        &ClientMsg::Handshake { app_name: "v8-client".into(), version: 8 }.encode(),
+    )
+    .unwrap();
+    match DriverMsg::decode(&frame::read_frame(&mut s).unwrap()).unwrap() {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 8),
+        other => panic!("expected HandshakeAck, got {other:?}"),
+    }
+
+    // v8 clients go straight to RequestWorkers — no TransferCaps exchange
+    frame::write_frame(
+        &mut s,
+        &ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }.encode(),
+    )
+    .unwrap();
+    let raw = frame::read_frame(&mut s).unwrap();
+    assert_eq!(raw[0], 1, "v8 WorkersGranted must keep the legacy tag");
+    let workers = match DriverMsg::decode(&raw).unwrap() {
+        DriverMsg::WorkersGranted { workers } => workers,
+        other => panic!("expected WorkersGranted, got {other:?}"),
+    };
+    assert_eq!(workers.len(), 1);
+    assert!(workers[0].uds_addr.is_empty(), "legacy grant must not carry a UDS address");
+
+    frame::write_frame(
+        &mut s,
+        &ClientMsg::CreateMatrix { rows: 6, cols: 2, kind: LayoutKind::RowBlock }.encode(),
+    )
+    .unwrap();
+    let meta = match DriverMsg::decode(&frame::read_frame(&mut s).unwrap()).unwrap() {
+        DriverMsg::MatrixCreated { meta } => meta,
+        other => panic!("expected MatrixCreated, got {other:?}"),
+    };
+
+    // plain-TCP uncompressed v5 slab upload, then the v5 fetch stream
+    let mut d = TcpStream::connect(&workers[0].data_addr).unwrap();
+    let indices: Vec<u64> = (0..6).collect();
+    let values: Vec<f64> = (0..12).map(|i| i as f64 * 1.25).collect();
+    frame::write_frame(
+        &mut d,
+        &DataMsg::PutSlab {
+            handle: meta.handle,
+            indices: indices.clone(),
+            cols: 2,
+            values: values.clone(),
+        }
+        .encode(),
+    )
+    .unwrap();
+    frame::write_frame(&mut d, &DataMsg::PutDone { handle: meta.handle }.encode()).unwrap();
+    match DataMsg::decode(&frame::read_frame(&mut d).unwrap()).unwrap() {
+        DataMsg::PutComplete { rows_received, .. } => assert_eq!(rows_received, 6),
+        other => panic!("expected PutComplete, got {other:?}"),
+    }
+    frame::write_frame(
+        &mut d,
+        &DataMsg::GetRowsSlab { handle: meta.handle, start: 0, end: 6 }.encode(),
+    )
+    .unwrap();
+    let (mut got_i, mut got_v) = (Vec::new(), Vec::new());
+    loop {
+        match DataMsg::decode(&frame::read_frame(&mut d).unwrap()).unwrap() {
+            DataMsg::SlabBatch { indices, cols, values, .. } => {
+                assert_eq!(cols, 2);
+                got_i.extend(indices);
+                got_v.extend(values);
+            }
+            DataMsg::GetDone { .. } => break,
+            other => panic!("expected SlabBatch/GetDone, got {other:?}"),
+        }
+    }
+    assert_eq!(got_i, indices);
+    assert_eq!(got_v, values);
+
+    frame::write_frame(&mut s, &ClientMsg::Stop.encode()).unwrap();
+    let _ = frame::read_frame(&mut s);
+    srv.shutdown();
+}

@@ -1,21 +1,23 @@
 #!/usr/bin/env bash
 # Snapshot the perf-trajectory benchmarks into a single JSON file
-# (BENCH_PR6.json at the repo root).
+# (BENCH_PR7.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
-# Spark comparison), ablate_collectives (all-reduce + barrier), and
+# Spark comparison), ablate_collectives (all-reduce + barrier),
 # ablate_scheduler (submission disciplines + the pool_recovery
-# fault-injection scenario: recovered-worker count and fault->readmit
-# latency), each with its machine-readable --json output, then captures
-# a live v8 telemetry snapshot (merged registry + span timeline) from a
-# headless alchemist_top run, and merges everything.
+# fault-injection scenario), and the table2/table3 transfer benches
+# (node grid + the PR 7 transport x compression sweep: tcp / uds /
+# striped-N x none / delta / f32), each with its machine-readable
+# --json output, then captures a live telemetry snapshot (merged
+# registry + span timeline) from a headless alchemist_top run, and
+# merges everything.
 #
 # Usage: scripts/bench_snapshot.sh [output.json]
 #   env: REPS=N        bench.reps override (default 1 for a quick pass)
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR6.json}"
+OUT="${1:-BENCH_PR7.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -40,6 +42,16 @@ cargo bench --bench ablate_scheduler -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/scheduler.json"
 
+echo "== bench_snapshot: table2_transfer_tall + transport sweep (reps=$REPS) =="
+cargo bench --bench table2_transfer_tall -- \
+    --set "bench.reps=$REPS" \
+    --json "$TMP/transfer_tall.json"
+
+echo "== bench_snapshot: table3_transfer_wide + transport sweep (reps=$REPS) =="
+cargo bench --bench table3_transfer_wide -- \
+    --set "bench.reps=$REPS" \
+    --json "$TMP/transfer_wide.json"
+
 echo "== bench_snapshot: telemetry snapshot (alchemist_top --headless) =="
 cargo run --release --example alchemist_top -- \
     --headless --jobs 4 --snapshot-json "$TMP/telemetry.json"
@@ -55,6 +67,8 @@ DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
     printf '  "table1_matmul": %s,\n' "$(cat "$TMP/table1.json")"
     printf '  "ablate_collectives": %s,\n' "$(cat "$TMP/collectives.json")"
     printf '  "ablate_scheduler": %s,\n' "$(cat "$TMP/scheduler.json")"
+    printf '  "table2_transfer_tall": %s,\n' "$(cat "$TMP/transfer_tall.json")"
+    printf '  "table3_transfer_wide": %s,\n' "$(cat "$TMP/transfer_wide.json")"
     printf '  "telemetry": %s\n' "$(cat "$TMP/telemetry.json")"
     printf '}\n'
 } > "$ROOT/$OUT"

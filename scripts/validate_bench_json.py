@@ -113,6 +113,25 @@ class Checker:
         # when present, so older snapshots (PR3...) stay green.
         if "ablate_scheduler" in doc:
             self.rows(doc, "ablate_scheduler", ["scenario"], ["secs", "jobs_per_s", "recovery_ms"])
+        # PR 7: the table2/table3 transfer benches emit transfer_grid
+        # rows plus the transport x compression sweep.
+        for section in ("table2_transfer_tall", "table3_transfer_wide"):
+            if section not in doc:
+                continue
+            self.rows(doc, section, ["scenario"], ["secs", "mb_per_s", "spark", "alch"])
+            sweeps = [
+                r
+                for r in doc[section] or []
+                if isinstance(r, dict) and r.get("scenario") == "transport_sweep"
+            ]
+            if not sweeps:
+                self.err(section, "expected at least one transport_sweep row")
+            for i, row in enumerate(sweeps):
+                self.require_keys(
+                    row,
+                    ["table", "transport", "compression", "secs", "mb_per_s"],
+                    f"{section}.transport_sweep[{i}]",
+                )
         if "telemetry" in doc:
             self.telemetry(doc)
         return self.errors
