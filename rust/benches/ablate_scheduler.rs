@@ -10,18 +10,27 @@
 //!   threads: what queued admission + the job table make safe to do.
 //!
 //! A fourth scenario, `pool_recovery`, exercises the worker-lifecycle
-//! subsystem: sever one worker's control stream mid-session, let the
-//! session poison and the group quarantine, then measure how long the
-//! prober takes to heal the pool back to full capacity.
+//! subsystem: sever one worker's control stream mid-session (the driver
+//! requeues the in-flight job and quarantines the dead group), then
+//! measure how long the prober takes to heal the pool back to full
+//! capacity.
+//!
+//! A fifth scenario, `fault_storm`, turns on the seeded fault plane on
+//! both sides (driver grant delays + data-accept refusals, client
+//! stream stalls + mid-frame disconnects) and measures how many of a
+//! fixed batch of upload→fro_norm jobs complete under the storm, plus
+//! how long the pool takes to return to full strength afterwards.
 //!
 //! Run: `cargo bench --bench ablate_scheduler [-- --set bench.reps=1]
 //!       [--json out.json]`
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
 use alchemist::client::{wrappers, AlchemistContext};
 use alchemist::config::Config;
+use alchemist::fault::{parse_sites, FaultPlane};
 use alchemist::linalg::DenseMatrix;
 use alchemist::metrics::Timer;
 use alchemist::protocol::LayoutKind;
@@ -31,6 +40,8 @@ use alchemist::workload::random_matrix;
 const JOBS: usize = 24;
 const ROWS: usize = 192;
 const COLS: usize = 12;
+const STORM_JOBS: usize = 12;
+const STORM_SEED: u64 = 404;
 
 fn session_with(addr: &str, name: &str, workers: u32) -> alchemist::Result<(AlchemistContext, alchemist::client::AlMatrix)> {
     let mut ac = AlchemistContext::connect(addr, name)?;
@@ -105,9 +116,9 @@ fn run_pool_recovery(pool: u32) -> alchemist::Result<(u32, f64, bool)> {
 
     let t = Timer::start();
     srv.inject_worker_ctl_failure(0);
-    // First routine after the fault trips the dead socket and poisons
-    // the session; the error is the expected fault signal, not a bench
-    // failure.
+    // First routine after the fault trips the dead socket; the driver
+    // requeues it onto a fresh grant (v10), so it may fail typed or even
+    // succeed — either way it is the fault signal, not a bench failure.
     let _ = wrappers::fro_norm(&ac, &al);
     let _ = ac.stop();
 
@@ -127,6 +138,68 @@ fn run_pool_recovery(pool: u32) -> alchemist::Result<(u32, f64, bool)> {
     obs.stop()?;
     srv.shutdown();
     Ok((recovered, secs, timed_out))
+}
+
+/// Fault-storm scenario: seeded fault schedules on both planes while a
+/// fixed batch of upload→fro_norm jobs runs. Returns `(completed, secs,
+/// recovery_secs, timed_out)` — how many jobs survived the storm (the
+/// retry/resume ladder should carry most of them), how long the batch
+/// took, and how long the pool needed to return to full strength after
+/// the storm (30s deadline ⇒ `timed_out`).
+fn run_fault_storm(seed: u64) -> alchemist::Result<(usize, f64, f64, bool)> {
+    let pool = 2u32;
+    let mut cfg = Config::default();
+    cfg.server.workers = pool;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sched.probe_interval_ms = 50;
+    cfg.sched.probe_timeout_ms = 500;
+    cfg.fault.enabled = true;
+    cfg.fault.seed = seed;
+    cfg.fault.sites = "driver.delay_grant:0.3:4,worker.accept_error:0.2:4".into();
+    let srv = start_server(&cfg)?;
+
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "storm")?;
+    ac.set_fault_plane(Some(Arc::new(FaultPlane::from_specs(
+        seed,
+        &parse_sites("transport.disconnect:0.15:4,transport.stall:0.15:4")?,
+    ))));
+    ac.request_workers_wait(pool, 30_000)?;
+    wrappers::register_elemlib(&ac)?;
+    let a = DenseMatrix::from_vec(ROWS, COLS, random_matrix(11, ROWS, COLS))?;
+
+    let t = Timer::start();
+    let mut completed = 0usize;
+    for _ in 0..STORM_JOBS {
+        let round = (|| -> alchemist::Result<()> {
+            let al = ac.send_dense(&a, LayoutKind::RowBlock)?;
+            wrappers::fro_norm(&ac, &al)?;
+            ac.release(al)?;
+            Ok(())
+        })();
+        if round.is_ok() {
+            completed += 1;
+        }
+    }
+    let secs = t.elapsed_secs();
+    let _ = ac.stop();
+
+    let heal = Timer::start();
+    let obs = AlchemistContext::connect(&srv.driver_addr, "storm-obs")?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let timed_out = loop {
+        let st = obs.scheduler_status()?;
+        if st.free_workers == pool && st.lost_workers == 0 {
+            break false;
+        }
+        if Instant::now() > deadline {
+            break true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let recovery_secs = heal.elapsed_secs();
+    obs.stop()?;
+    srv.shutdown();
+    Ok((completed, secs, recovery_secs, timed_out))
 }
 
 fn main() {
@@ -204,8 +277,39 @@ fn main() {
     ));
     println!(
         "\nrecovery(ms) spans fault injection -> scheduler_status reporting the\n\
-         full pool free again (session poison + quarantine + worker\n\
+         full pool free again (job requeue + quarantine + worker\n\
          re-registration + health probe + Reset + readmit)."
+    );
+
+    println!(
+        "\n=== fault storm: seeded chaos on both planes, {STORM_JOBS} upload+fro_norm jobs ===\n"
+    );
+    let mut storm = Table::new(&["seed", "jobs", "completed", "secs", "recovery(ms)"]);
+    let (completed, storm_secs, recovery_secs, storm_timed_out) =
+        run_fault_storm(STORM_SEED).expect("fault_storm scenario failed");
+    storm.row(vec![
+        STORM_SEED.to_string(),
+        STORM_JOBS.to_string(),
+        completed.to_string(),
+        format!("{storm_secs:.3}"),
+        if storm_timed_out {
+            format!("TIMED OUT ({:.0} ms)", recovery_secs * 1e3)
+        } else {
+            format!("{:.1}", recovery_secs * 1e3)
+        },
+    ]);
+    storm.print();
+    json_rows.push(format!(
+        "{{\"scenario\":\"fault_storm\",\"seed\":{STORM_SEED},\"jobs\":{STORM_JOBS},\
+         \"completed\":{completed},\"completion_rate\":{:.3},\"secs\":{storm_secs:.4},\
+         \"recovery_ms\":{:.1},\"timed_out\":{storm_timed_out}}}",
+        completed as f64 / STORM_JOBS as f64,
+        recovery_secs * 1e3
+    ));
+    println!(
+        "\ncompleted/jobs is the storm survival rate: every fault schedule is\n\
+         finite (max_fires), so the retry + resume ladder should carry most\n\
+         jobs to a correct result; recovery(ms) is the post-storm heal time."
     );
 
     if let Some(path) = json_path {

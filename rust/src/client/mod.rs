@@ -11,17 +11,18 @@ pub mod transfer;
 pub mod wrappers;
 
 use std::net::TcpStream;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
-
-use crate::config::TransferConfig;
+use crate::config::{RetryConfig, TransferConfig};
 use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
-    RoutineDescriptor, WireCodec, WorkerInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
-    ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
-    TRANSPORT_PROTOCOL_VERSION,
+    RoutineDescriptor, WireCodec, WorkerInfo, IDEMPOTENT_SUBMIT_PROTOCOL_VERSION,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, ROUTINE_ENGINE_PROTOCOL_VERSION,
+    SLAB_PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION, TRANSPORT_PROTOCOL_VERSION,
 };
 use crate::telemetry::TelemetryReport;
 use crate::{Error, Result};
@@ -241,6 +242,16 @@ pub struct AlchemistContext {
     pub transfer: TransferConfig,
     /// Cumulative send/compute/receive phase times.
     pub phases: PhaseTimes,
+    /// Control/data-plane retry policy (`[retry]` config section):
+    /// transfer redial attempts, backoff shape, and the opt-in
+    /// control-call reply deadline.
+    pub retry: RetryConfig,
+    /// Client-side fault plane (chaos tests/benches); `None` — the
+    /// default — costs nothing on any path.
+    fault: Option<Arc<crate::fault::FaultPlane>>,
+    /// Monotonic source of v10 submission nonces (starts at 1; nonce 0
+    /// on the wire means "no dedup").
+    nonce_counter: AtomicU64,
     nodelay: bool,
     /// Protocol version negotiated at handshake (`min(client, server)`).
     negotiated: u16,
@@ -295,6 +306,9 @@ impl AlchemistContext {
             batch_rows: 256,
             transfer: TransferConfig::default(),
             phases: PhaseTimes::new(),
+            retry: RetryConfig::default(),
+            fault: None,
+            nonce_counter: AtomicU64::new(1),
             nodelay: true,
             negotiated: version,
             server_caps,
@@ -345,13 +359,86 @@ impl AlchemistContext {
             self.negotiated >= SLAB_PROTOCOL_VERSION,
         );
         opts.codec = self.wire_codec();
+        opts.retry = self.retry.clone();
+        opts.fault = self.fault.clone();
         opts
     }
 
+    /// Install a client-side fault plane: transfer dials and streams are
+    /// wrapped by `fault::wrap_connector`, letting chaos tests perturb
+    /// the data plane deterministically. `None` (the default) leaves
+    /// every path untouched.
+    pub fn set_fault_plane(&mut self, plane: Option<Arc<crate::fault::FaultPlane>>) {
+        self.fault = plane;
+    }
+
+    /// One control-plane request/reply exchange. Frames encode at the
+    /// negotiated session version, so ≤ v9 servers keep receiving their
+    /// legacy byte shapes. Socket-level failures come back typed as
+    /// [`Error::DriverGone`]: the driver tears down its session side on
+    /// disconnect, so the whole connection — not just this call — is over.
+    ///
+    /// With `[retry] call_timeout_ms` set, every call gets a reply
+    /// deadline (so a dropped reply can never hang the client), and
+    /// *idempotent* requests — nonce-carrying `SubmitRoutine` (the v10
+    /// driver answers a replay with the original job id), `PollJob`,
+    /// `WaitJob`, `ServerStatus`, `FetchTelemetry` — are re-sent with
+    /// backoff up to `retry.max_attempts` before giving up. The deadline
+    /// must exceed the server's `sched.waitjob_block_ms` or blocking
+    /// waits will resend spuriously (harmless, but wasteful).
     fn call(&self, msg: &ClientMsg) -> Result<DriverMsg> {
         let mut s = self.ctl.lock().unwrap();
-        frame::write_frame(&mut *s, &msg.encode())?;
-        DriverMsg::decode(&frame::read_frame(&mut *s)?)?.into_result()
+        let bytes = msg.encode_versioned(self.negotiated);
+        let deadline_ms = self.retry.call_timeout_ms;
+        if deadline_ms == 0 {
+            frame::write_frame(&mut *s, &bytes).map_err(Error::into_driver_gone)?;
+            let buf = frame::read_frame(&mut *s).map_err(Error::into_driver_gone)?;
+            return DriverMsg::decode(&buf)?.into_result();
+        }
+        let attempts = if idempotent_request(msg) { self.retry.max_attempts.max(1) } else { 1 };
+        let deadline = Duration::from_millis(deadline_ms);
+        let mut attempt = 0u32;
+        loop {
+            frame::write_frame(&mut *s, &bytes).map_err(Error::into_driver_gone)?;
+            let _ = s.set_read_timeout(Some(deadline));
+            let res = frame::read_frame(&mut *s);
+            let _ = s.set_read_timeout(None);
+            match res {
+                Ok(buf) => {
+                    if attempt > 0 {
+                        // A resend can race a merely-slow original reply;
+                        // both replies are identical (the request was
+                        // idempotent), so drain the straggler before it
+                        // can desync a later call. Best-effort: bounded
+                        // by a short read timeout.
+                        let _ = s.set_read_timeout(Some(Duration::from_millis(20)));
+                        while frame::read_frame(&mut *s).is_ok() {}
+                        let _ = s.set_read_timeout(None);
+                    }
+                    return DriverMsg::decode(&buf)?.into_result();
+                }
+                Err(Error::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    attempt += 1;
+                    if attempt >= attempts {
+                        return Err(Error::DriverGone(format!(
+                            "no reply within {deadline_ms}ms after {attempt} attempt(s)"
+                        )));
+                    }
+                    std::thread::sleep(crate::fault::retry_backoff(
+                        attempt,
+                        self.retry.backoff_base_ms,
+                        self.retry.backoff_cap_ms,
+                        self.session_id,
+                    ));
+                }
+                Err(e) => return Err(e.into_driver_gone()),
+            }
+        }
     }
 
     /// Request a worker group (§3.2 step 3). Fails immediately when the
@@ -443,13 +530,44 @@ impl AlchemistContext {
         let mut total = 0u64;
         for &id in &m.meta.layout.owners {
             let info = self.worker_info(id)?;
-            let mut s = transfer::dial_worker(info, &opts)?;
-            frame::write_frame(&mut s, &DataMsg::PutDone { handle: m.meta.handle }.encode())?;
-            match DataMsg::decode(&frame::read_frame(&mut s)?)? {
-                DataMsg::PutComplete { rows_received, .. } => total += rows_received,
-                DataMsg::Err { message } => return Err(Error::Server(message)),
-                other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
-            }
+            // PutDone is idempotent on the worker (it reports, never
+            // mutates), so a dropped data connection here retries on the
+            // same ladder the slab lanes use.
+            let attempts = self.retry.max_attempts.max(1);
+            let mut attempt = 0u32;
+            total += loop {
+                let confirm = (|| -> Result<u64> {
+                    let mut s = transfer::dial_worker(info, &opts)?;
+                    frame::write_frame(
+                        &mut s,
+                        &DataMsg::PutDone { handle: m.meta.handle }.encode(),
+                    )?;
+                    match DataMsg::decode(&frame::read_frame(&mut s)?)? {
+                        DataMsg::PutComplete { rows_received, .. } => Ok(rows_received),
+                        DataMsg::Err { message } => Err(Error::Server(message)),
+                        other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+                    }
+                })();
+                match confirm {
+                    Ok(rows) => break rows,
+                    Err(e) if e.is_transient_io() && attempt + 1 < attempts => {
+                        attempt += 1;
+                        crate::metrics::transfer_metrics().retry_attempts.inc(1);
+                        std::thread::sleep(crate::fault::retry_backoff(
+                            attempt,
+                            self.retry.backoff_base_ms,
+                            self.retry.backoff_cap_ms,
+                            m.meta.handle ^ u64::from(id),
+                        ));
+                    }
+                    Err(e) => {
+                        if e.is_transient_io() {
+                            crate::metrics::transfer_metrics().retry_exhausted.inc(1);
+                        }
+                        return Err(e);
+                    }
+                }
+            };
         }
         self.phases.add("send", t.elapsed());
         if total != m.meta.rows {
@@ -497,10 +615,20 @@ impl AlchemistContext {
         routine: &str,
         params: Params,
     ) -> Result<JobHandle<'_>> {
+        // v10: mint a per-submission idempotency nonce so a re-sent
+        // Submit (reply deadline hit, driver dropped the reply) maps to
+        // the same job instead of running the routine twice. ≤ v9
+        // sessions get nonce 0 — and never see the field on the wire.
+        let nonce = if self.negotiated >= IDEMPOTENT_SUBMIT_PROTOCOL_VERSION {
+            self.nonce_counter.fetch_add(1, Ordering::Relaxed)
+        } else {
+            0
+        };
         let reply = self.call(&ClientMsg::SubmitRoutine {
             library: library.into(),
             routine: routine.into(),
             params,
+            nonce,
         })?;
         match reply {
             DriverMsg::JobAccepted { job_id } => Ok(JobHandle {
@@ -671,5 +799,19 @@ impl AlchemistContext {
             DriverMsg::Stopped => Ok(()),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
+    }
+}
+
+/// True for requests the client may safely re-send after a reply
+/// deadline: pure reads, plus `SubmitRoutine` once it carries a real
+/// idempotency nonce (the v10 driver dedups the replay by nonce).
+fn idempotent_request(msg: &ClientMsg) -> bool {
+    match msg {
+        ClientMsg::SubmitRoutine { nonce, .. } => *nonce != 0,
+        ClientMsg::PollJob { .. }
+        | ClientMsg::WaitJob { .. }
+        | ClientMsg::ServerStatus
+        | ClientMsg::FetchTelemetry { .. } => true,
+        _ => false,
     }
 }

@@ -35,12 +35,32 @@
 //!   sender/fetch threads (`PutSlabZ`/`SlabBatchZ` frames), so the codec
 //!   overlaps socket I/O; `comp_raw_bytes`/`comp_wire_bytes` record the
 //!   achieved ratio and per-transport byte counters split the volume.
+//!
+//! Protocol v10 adds transfer *resume* (the `[retry]` config section):
+//!
+//! * **upload resume** — each sender lane keeps the batches sent since
+//!   its last acknowledged `PutDone` (a mid-stream ack every
+//!   [`ACK_EVERY`] batches bounds the window) and, on a transient socket
+//!   failure, redials with capped exponential backoff and re-sends only
+//!   that window over the fresh connection (`retry.slabs_resent` counts
+//!   the replays). Redials degrade: configured transport first, plain
+//!   TCP from the second retry on;
+//! * **fetch resume** — workers stream a range in ascending global-index
+//!   order, so a broken fetch re-requests exactly `[last_delivered+1,
+//!   end)` on a fresh connection — no duplicates, no gaps;
+//! * **fail-fast fan-in** — the first lane to exhaust its retries trips
+//!   a shared abort latch; the router and every sibling sender observe
+//!   it and bail out instead of blocking on a bounded channel (or
+//!   finishing a doomed transfer), and `push_rows` surfaces that first
+//!   error with its owner/stripe context.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
+use std::time::Duration;
 
-use crate::config::TransferConfig;
+use crate::config::{RetryConfig, TransferConfig};
 use crate::elemental::Layout;
 use crate::metrics::{transfer_metrics, Timer, TransferMetrics};
 use crate::protocol::{
@@ -81,6 +101,13 @@ pub struct TransferOptions {
     /// exchange confirmed the server speaks the configured codec, so a
     /// bare `TransferOptions` can never emit frames a peer won't decode.
     pub codec: WireCodec,
+    /// Retry/resume policy (`[retry]` config). `max_attempts <= 1`
+    /// restores the pre-v10 behaviour: one try, fail hard, no resume
+    /// window kept.
+    pub retry: RetryConfig,
+    /// Fault plane wrapped around every dialed connection (chaos
+    /// tests/benches). `None` — the default — adds nothing to any path.
+    pub fault: Option<std::sync::Arc<crate::fault::FaultPlane>>,
 }
 
 impl TransferOptions {
@@ -95,6 +122,8 @@ impl TransferOptions {
             transport: TransportChoice::parse(&cfg.transport).unwrap_or_default(),
             stripes: cfg.stripes.max(1) as usize,
             codec: WireCodec::None,
+            retry: RetryConfig::default(),
+            fault: None,
         }
     }
 
@@ -119,7 +148,60 @@ pub fn worker_endpoint(w: &WorkerInfo) -> Endpoint {
 /// Dial one worker's data plane with the configured transport — the
 /// single-connection entry point (`finish_put`, ad-hoc control frames).
 pub fn dial_worker(w: &WorkerInfo, opts: &TransferOptions) -> Result<Transport> {
-    connector_for(opts.transport, opts.nodelay).dial(&worker_endpoint(w))
+    data_connector(opts).dial(&worker_endpoint(w))
+}
+
+/// Primary data-plane connector: the configured transport, wrapped by
+/// the fault plane when one is installed.
+fn data_connector(opts: &TransferOptions) -> Box<dyn Connector> {
+    crate::fault::wrap_connector(connector_for(opts.transport, opts.nodelay), &opts.fault)
+}
+
+/// Connector for redial attempt `attempt` (count of failures so far):
+/// the configured transport for the first retry, plain TCP from the
+/// second on — the degradation ladder drops the UDS fast path in case
+/// the fast path itself is what is broken. The fault wrapper stays on
+/// every rung, so chaos schedules exercise redials too.
+fn redial_connector(opts: &TransferOptions, attempt: u32) -> Box<dyn Connector> {
+    let choice = if attempt >= 2 { TransportChoice::Tcp } else { opts.transport };
+    crate::fault::wrap_connector(connector_for(choice, opts.nodelay), &opts.fault)
+}
+
+/// Mid-stream ack cadence (batches per lane between `PutDone` barriers)
+/// when upload resume is active: bounds both the resend window and the
+/// memory pinned by unacknowledged slabs (~`ACK_EVERY * slab_bytes`).
+const ACK_EVERY: usize = 8;
+
+/// Shared abort latch for one `push_rows` call. The first lane to fail
+/// (after exhausting its retries) parks its error — with owner/stripe
+/// context — here; the router and every sibling sender poll the latch
+/// and bail out instead of completing a doomed transfer or blocking
+/// forever on a bounded channel whose consumer is gone.
+struct AbortState {
+    failed: AtomicBool,
+    first: Mutex<Option<Error>>,
+}
+
+impl AbortState {
+    fn new() -> AbortState {
+        AbortState { failed: AtomicBool::new(false), first: Mutex::new(None) }
+    }
+
+    fn record(&self, e: Error) {
+        let mut g = self.first.lock().unwrap();
+        if g.is_none() {
+            *g = Some(e);
+        }
+        self.failed.store(true, Ordering::SeqCst);
+    }
+
+    fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    fn take(&self) -> Option<Error> {
+        self.first.lock().unwrap().take()
+    }
 }
 
 /// One routed batch in flight between the router and a sender thread:
@@ -157,13 +239,17 @@ fn pipeline_closed() -> Error {
     Error::Server("transfer pipeline closed early (sender failed)".into())
 }
 
-/// Hand a full batch to its lane's sender thread, blocking (and timing
-/// the stall) when that lane's pipeline is saturated.
+/// Hand a full batch to its lane's sender thread, stalling (and timing
+/// the stall) when that lane's pipeline is saturated. The stall is a
+/// bounded poll, not a blocking `send`: it watches the abort latch so a
+/// dead sibling sender can never leave the router wedged against a full
+/// channel.
 fn dispatch(
     txs: &[mpsc::SyncSender<RouteBatch>],
     owners: &[u32],
     stripes: usize,
     metrics: &TransferMetrics,
+    abort: &AbortState,
     batch: RouteBatch,
 ) -> Result<()> {
     let owner = owners[batch.slot];
@@ -173,7 +259,20 @@ fn dispatch(
         Ok(()) => Ok(()),
         Err(mpsc::TrySendError::Full(batch)) => {
             let t = Timer::start();
-            let r = tx.send(batch).map_err(|_| pipeline_closed());
+            let mut batch = batch;
+            let r = loop {
+                if abort.is_failed() {
+                    break Err(pipeline_closed());
+                }
+                match tx.try_send(batch) {
+                    Ok(()) => break Ok(()),
+                    Err(mpsc::TrySendError::Full(b)) => {
+                        batch = b;
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => break Err(pipeline_closed()),
+                }
+            };
             metrics.phases.add(&format!("stall_w{owner}"), t.elapsed());
             r
         }
@@ -224,9 +323,206 @@ impl WireTally {
     }
 }
 
+/// Per-lane sender state: one connection plus the resume window — every
+/// batch sent since the lane's last acknowledged `PutDone`. On a
+/// transient failure the lane redials and re-sends exactly that window
+/// (worker-side row stores are idempotent by row index, so replaying a
+/// batch the worker already stored is harmless — and `rows_received`
+/// counts distinct rows, so the transfer-complete check stays exact).
+struct LaneState {
+    slot: usize,
+    stripe: usize,
+    conn: Option<Transport>,
+    unacked: Vec<RouteBatch>,
+    /// Prefix of `unacked` already written to `conn`.
+    sent: usize,
+    /// High-water mark of `sent` since the last ack: sending a batch
+    /// below it again is a resend (counted in `retry.slabs_resent`).
+    high_water: usize,
+    /// Redial attempts since the last successful ack.
+    attempt: u32,
+}
+
+impl LaneState {
+    fn new(slot: usize, stripe: usize) -> LaneState {
+        LaneState {
+            slot,
+            stripe,
+            conn: None,
+            unacked: Vec::new(),
+            sent: 0,
+            high_water: 0,
+            attempt: 0,
+        }
+    }
+
+    fn acked(&mut self) {
+        self.unacked.clear();
+        self.sent = 0;
+        self.high_water = 0;
+        self.attempt = 0;
+    }
+}
+
+/// Encode one batch as the negotiated frame shape and send it, returning
+/// the framed byte count. The batch's buffers are moved into the frame
+/// message and restored afterwards, so the caller keeps the batch for
+/// the resume window without copying the slab.
+fn encode_send(
+    conn: &mut Transport,
+    wbuf: &mut Writer,
+    zbuf: &mut Vec<u8>,
+    handle: u64,
+    cols: u32,
+    batch: &mut RouteBatch,
+    opts: &TransferOptions,
+    tally: &mut WireTally,
+) -> Result<u64> {
+    let msg = if opts.compressed() {
+        compress_slab(opts.codec, &batch.indices, &batch.values, zbuf);
+        tally.comp_raw += 8 * (batch.indices.len() + batch.values.len()) as u64;
+        tally.comp_wire += zbuf.len() as u64;
+        DataMsg::PutSlabZ {
+            handle,
+            codec: opts.codec.tag(),
+            count: batch.indices.len() as u32,
+            cols,
+            payload: std::mem::take(zbuf),
+        }
+    } else if opts.use_slab {
+        DataMsg::PutSlab {
+            handle,
+            indices: std::mem::take(&mut batch.indices),
+            cols,
+            values: std::mem::take(&mut batch.values),
+        }
+    } else {
+        // v4 compat path: per-row frames. The clone keeps the batch for
+        // the resume window; this shape never sees the hot path.
+        DataMsg::PutRows {
+            handle,
+            rows: slab_to_rows(batch.indices.clone(), batch.values.clone(), cols as usize),
+        }
+    };
+    let res = conn.send_frame(wbuf, |w| msg.encode_into(w)).map(|n| n as u64);
+    match msg {
+        DataMsg::PutSlabZ { payload, .. } => *zbuf = payload, // reclaim the buffer
+        DataMsg::PutSlab { indices, values, .. } => {
+            batch.indices = indices;
+            batch.values = values;
+        }
+        _ => {}
+    }
+    if let Ok(n) = res {
+        tally.frame(conn, n);
+    }
+    res
+}
+
+/// Bring one lane up to date: dial if needed (re-sending the resume
+/// window on a fresh connection), write every pending batch, and — when
+/// `want_ack` — run the `PutDone` barrier. Transient socket failures
+/// retry with capped exponential backoff up to `retry.max_attempts`
+/// total tries; typed worker/protocol errors fail immediately.
+#[allow(clippy::too_many_arguments)]
+fn flush_lane(
+    lane: &mut LaneState,
+    ep: &Endpoint,
+    handle: u64,
+    cols: u32,
+    opts: &TransferOptions,
+    want_ack: bool,
+    wbuf: &mut Writer,
+    zbuf: &mut Vec<u8>,
+    tally: &mut WireTally,
+    frames: &mut u64,
+    bytes: &mut u64,
+) -> Result<()> {
+    let metrics = transfer_metrics();
+    let max_attempts = opts.retry.max_attempts.max(1);
+    loop {
+        let step = (|| -> Result<()> {
+            if lane.conn.is_none() {
+                let connector = if lane.attempt == 0 {
+                    data_connector(opts)
+                } else {
+                    redial_connector(opts, lane.attempt)
+                };
+                lane.conn = Some(connector.dial(ep)?);
+            }
+            let conn = lane.conn.as_mut().unwrap();
+            while lane.sent < lane.unacked.len() {
+                let resend = lane.sent < lane.high_water;
+                let n = encode_send(
+                    conn,
+                    wbuf,
+                    zbuf,
+                    handle,
+                    cols,
+                    &mut lane.unacked[lane.sent],
+                    opts,
+                    tally,
+                )?;
+                *bytes += n;
+                *frames += 1;
+                lane.sent += 1;
+                if resend {
+                    metrics.slabs_resent.inc(1);
+                } else {
+                    lane.high_water = lane.sent;
+                }
+            }
+            if want_ack {
+                let done = DataMsg::PutDone { handle };
+                conn.send_frame(wbuf, |w| done.encode_into(w))?;
+                match DataMsg::decode(&frame::read_frame(conn)?)? {
+                    DataMsg::PutComplete { .. } => {}
+                    DataMsg::Err { message } => return Err(Error::Server(message)),
+                    other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+                }
+                lane.acked();
+            }
+            Ok(())
+        })();
+        match step {
+            Ok(()) => return Ok(()),
+            Err(e) if e.is_transient_io() && lane.attempt + 1 < max_attempts => {
+                // The stream is dead: everything written to it since the
+                // last ack must go again on the next connection.
+                lane.conn = None;
+                lane.sent = 0;
+                lane.attempt += 1;
+                metrics.retry_attempts.inc(1);
+                std::thread::sleep(crate::fault::retry_backoff(
+                    lane.attempt,
+                    opts.retry.backoff_base_ms,
+                    opts.retry.backoff_cap_ms,
+                    handle ^ (lane.slot * 31 + lane.stripe) as u64,
+                ));
+            }
+            Err(e) => {
+                if e.is_transient_io() {
+                    metrics.retry_exhausted.inc(1);
+                }
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// First-failure context: which owner and stripe the failing lane served.
+fn lane_error(owners: &[u32], lane: &LaneState, e: Error) -> Error {
+    Error::Server(format!(
+        "upload lane to worker {} (stripe {}) failed after {} attempt(s): {e}",
+        owners[lane.slot],
+        lane.stripe,
+        lane.attempt + 1
+    ))
+}
+
 /// One sender thread: drains its bounded channel, lazily dialing one
-/// connection (and one reusable encode buffer) per *lane* it serves, then
-/// runs the per-connection `PutDone` barrier when the channel closes.
+/// connection (and one resume window) per *lane* it serves, then runs
+/// the per-connection `PutDone` barrier when the channel closes.
 ///
 /// The barrier matters: a worker processes frames on one connection in
 /// order, so acking a `PutDone` here guarantees every row this call sent
@@ -234,62 +530,88 @@ impl WireTally {
 /// `finish_put` on a *fresh* connection could overtake in-flight rows
 /// (TCP orders within, not across, connections). With striping the same
 /// invariant holds per lane — every lane is drained and acked, so the
-/// union of all lanes' rows is durable when `push_rows` returns.
+/// union of all lanes' rows is durable when `push_rows` returns. Resume
+/// preserves it too: a redial replays the whole unacknowledged window in
+/// order on one fresh connection before the next ack.
+#[allow(clippy::too_many_arguments)]
 fn run_sender(
     rx: mpsc::Receiver<RouteBatch>,
-    connector: &dyn Connector,
     endpoints: &[Endpoint],
+    owners: &[u32],
     stripes: usize,
     handle: u64,
     cols: u32,
     opts: &TransferOptions,
+    abort: &AbortState,
 ) -> Result<u64> {
-    let mut conns: HashMap<usize, Transport> = HashMap::new();
+    let mut lanes: HashMap<usize, LaneState> = HashMap::new();
     let mut wbuf = Writer::new();
     let mut zbuf: Vec<u8> = Vec::new();
     let mut frames = 0u64;
     let mut bytes = 0u64;
     let mut tally = WireTally::default();
+    let resume = opts.retry.max_attempts > 1;
+    let mut failed = false;
     while let Ok(batch) = rx.recv() {
-        let lane = batch.slot * stripes + batch.stripe;
-        if !conns.contains_key(&lane) {
-            conns.insert(lane, connector.dial(&endpoints[batch.slot])?);
+        if failed || abort.is_failed() {
+            continue; // drain, so the router never blocks on a doomed pipeline
         }
-        let conn = conns.get_mut(&lane).unwrap();
-        let msg = if opts.compressed() {
-            compress_slab(opts.codec, &batch.indices, &batch.values, &mut zbuf);
-            tally.comp_raw += 8 * (batch.indices.len() + batch.values.len()) as u64;
-            tally.comp_wire += zbuf.len() as u64;
-            DataMsg::PutSlabZ {
-                handle,
-                codec: opts.codec.tag(),
-                count: batch.indices.len() as u32,
-                cols,
-                payload: std::mem::take(&mut zbuf),
+        let lane_id = batch.slot * stripes + batch.stripe;
+        let lane =
+            lanes.entry(lane_id).or_insert_with(|| LaneState::new(batch.slot, batch.stripe));
+        lane.unacked.push(batch);
+        let want_ack = resume && lane.unacked.len() >= ACK_EVERY;
+        match flush_lane(
+            lane,
+            &endpoints[lane.slot],
+            handle,
+            cols,
+            opts,
+            want_ack,
+            &mut wbuf,
+            &mut zbuf,
+            &mut tally,
+            &mut frames,
+            &mut bytes,
+        ) {
+            Ok(()) => {
+                if !resume {
+                    // no resume window to keep: the batch is on the wire
+                    lane.unacked.clear();
+                    lane.sent = 0;
+                    lane.high_water = 0;
+                }
             }
-        } else if opts.use_slab {
-            DataMsg::PutSlab { handle, indices: batch.indices, cols, values: batch.values }
-        } else {
-            DataMsg::PutRows {
-                handle,
-                rows: slab_to_rows(batch.indices, batch.values, cols as usize),
+            Err(e) => {
+                abort.record(lane_error(owners, lane, e));
+                failed = true;
             }
-        };
-        let n = conn.send_frame(&mut wbuf, |w| msg.encode_into(w))? as u64;
-        bytes += n;
-        frames += 1;
-        tally.frame(conn, n);
-        if let DataMsg::PutSlabZ { payload, .. } = msg {
-            zbuf = payload; // reclaim the compression buffer
         }
     }
-    for conn in conns.values_mut() {
-        let done = DataMsg::PutDone { handle };
-        conn.send_frame(&mut wbuf, |w| done.encode_into(w))?;
-        match DataMsg::decode(&frame::read_frame(conn)?)? {
-            DataMsg::PutComplete { .. } => {}
-            DataMsg::Err { message } => return Err(Error::Server(message)),
-            other => return Err(Error::Protocol(format!("unexpected {other:?}"))),
+    if !failed && !abort.is_failed() {
+        // Final barrier: drain and ack every lane, redialing lanes whose
+        // connection died with batches still unacknowledged.
+        for lane in lanes.values_mut() {
+            if lane.conn.is_none() && lane.unacked.is_empty() {
+                continue;
+            }
+            if let Err(e) = flush_lane(
+                lane,
+                &endpoints[lane.slot],
+                handle,
+                cols,
+                opts,
+                true,
+                &mut wbuf,
+                &mut zbuf,
+                &mut tally,
+                &mut frames,
+                &mut bytes,
+            ) {
+                abort.record(lane_error(owners, lane, e));
+                failed = true;
+                break;
+            }
         }
     }
     // Pre-registered handles (one relaxed atomic add each), not the
@@ -299,7 +621,11 @@ fn run_sender(
     metrics.bytes_sent.inc(bytes);
     metrics.frames_sent.inc(frames);
     tally.publish_sent(metrics);
-    Ok(frames)
+    if failed {
+        Err(pipeline_closed())
+    } else {
+        Ok(frames)
+    }
 }
 
 /// Route and push a set of rows to the owning Alchemist workers.
@@ -324,7 +650,7 @@ pub fn push_rows<V: AsRef<[f64]>>(
     let owners = &meta.layout.owners;
     let cols = meta.cols as usize;
     let endpoints = resolve_owner_endpoints(workers, owners)?;
-    let connector = connector_for(opts.transport, opts.nodelay);
+    let abort = AbortState::new();
 
     let stripes = opts.stripes.max(1);
     let lanes = owners.len().max(1) * stripes;
@@ -344,9 +670,9 @@ pub fn push_rows<V: AsRef<[f64]>>(
             let (tx, rx) = mpsc::sync_channel::<RouteBatch>(opts.channel_depth.max(1));
             txs.push(tx);
             let endpoints = &endpoints;
-            let connector = connector.as_ref();
+            let abort = &abort;
             handles.push(scope.spawn(move || {
-                run_sender(rx, connector, endpoints, stripes, meta.handle, cols as u32, opts)
+                run_sender(rx, endpoints, owners, stripes, meta.handle, cols as u32, opts, abort)
             }));
         }
 
@@ -359,10 +685,14 @@ pub fn push_rows<V: AsRef<[f64]>>(
             let mut full = std::mem::replace(batch, RouteBatch::empty(slot));
             full.stripe = rr[slot];
             rr[slot] = (rr[slot] + 1) % stripes;
-            dispatch(&txs, owners, stripes, metrics, full)
+            dispatch(&txs, owners, stripes, metrics, &abort, full)
         };
         let mut route_err: Option<Error> = None;
         for (index, values) in rows {
+            if abort.is_failed() {
+                route_err = Some(pipeline_closed());
+                break;
+            }
             let values = values.as_ref();
             if index >= meta.rows {
                 route_err = Some(Error::Shape(format!(
@@ -417,9 +747,11 @@ pub fn push_rows<V: AsRef<[f64]>>(
                 }
             }
         }
-        // a sender failure is the root cause of any routing-side
-        // disconnect error, so it wins
-        match sender_err.or(route_err) {
+        // The abort latch holds the chronologically-first lane failure
+        // (with owner/stripe context); it is the root cause of every
+        // routing-side disconnect and of the senders' marker errors, so
+        // it wins over both.
+        match abort.take().or(sender_err).or(route_err) {
             Some(e) => Err(e),
             None => Ok(frames),
         }
@@ -429,13 +761,14 @@ pub fn push_rows<V: AsRef<[f64]>>(
     Ok((rows_sent, frames_sent))
 }
 
-/// Stream one owner connection's rows for `[start, end)`, feeding every
-/// decoded frame to `feed(indices, row-major values)` (borrowed straight
-/// out of the receive buffers). Handles all three reply shapes: plain
-/// slabs, compressed slabs (decompressed into reusable buffers here, so
-/// the codec runs on this fetch thread), and v4 row batches.
+/// Stream one owner's rows for `[start, end)` with resume, feeding every
+/// decoded frame to `feed(indices, row-major values)`. Transient socket
+/// failures redial with backoff (configured transport first, plain TCP
+/// from the second retry) and re-request only the not-yet-delivered
+/// tail: workers stream a range in ascending global-index order, so
+/// "resume after the last delivered index" is exact — no duplicates, no
+/// gaps. Typed worker/protocol/sink errors fail immediately.
 fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
-    connector: &dyn Connector,
     ep: &Endpoint,
     meta: &MatrixMeta,
     start: u64,
@@ -443,6 +776,71 @@ fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
     opts: &TransferOptions,
     mut feed: F,
 ) -> Result<u64> {
+    let metrics = transfer_metrics();
+    let max_attempts = opts.retry.max_attempts.max(1);
+    let mut next_start = start;
+    let mut seen = 0u64;
+    let mut attempt = 0u32;
+    loop {
+        let connector =
+            if attempt == 0 { data_connector(opts) } else { redial_connector(opts, attempt) };
+        let r = {
+            let next_start = &mut next_start;
+            let seen = &mut seen;
+            let feed = &mut feed;
+            fetch_range_once(
+                connector.as_ref(),
+                ep,
+                meta,
+                *next_start,
+                end,
+                opts,
+                |indices, values| {
+                    feed(indices, values)?;
+                    if let Some(&last) = indices.last() {
+                        *next_start = last + 1;
+                        *seen += indices.len() as u64;
+                    }
+                    Ok(())
+                },
+            )
+        };
+        match r {
+            Ok(()) => return Ok(seen),
+            Err(e) if e.is_transient_io() && attempt + 1 < max_attempts => {
+                attempt += 1;
+                metrics.retry_attempts.inc(1);
+                std::thread::sleep(crate::fault::retry_backoff(
+                    attempt,
+                    opts.retry.backoff_base_ms,
+                    opts.retry.backoff_cap_ms,
+                    meta.handle ^ start,
+                ));
+            }
+            Err(e) => {
+                if e.is_transient_io() {
+                    metrics.retry_exhausted.inc(1);
+                }
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// One fetch connection's lifetime: request `[start, end)` and stream
+/// reply frames to `feed` (borrowed straight out of the receive
+/// buffers). Handles all three reply shapes: plain slabs, compressed
+/// slabs (decompressed into reusable buffers here, so the codec runs on
+/// this fetch thread), and v4 row batches.
+fn fetch_range_once<F: FnMut(&[u64], &[f64]) -> Result<()>>(
+    connector: &dyn Connector,
+    ep: &Endpoint,
+    meta: &MatrixMeta,
+    start: u64,
+    end: u64,
+    opts: &TransferOptions,
+    mut feed: F,
+) -> Result<()> {
     let mut t = connector.dial(ep)?;
     let handle = meta.handle;
     let req = if opts.compressed() {
@@ -457,7 +855,6 @@ fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
     let mut buf = Vec::new();
     let mut ibuf: Vec<u64> = Vec::new();
     let mut vbuf: Vec<f64> = Vec::new();
-    let mut seen = 0u64;
     let mut frames = 0u64;
     let mut bytes = 0u64;
     let mut tally = WireTally::default();
@@ -492,18 +889,15 @@ fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
                 tally.comp_raw += 8 * (ibuf.len() + vbuf.len()) as u64;
                 tally.comp_wire += payload.len() as u64;
                 feed(&ibuf, &vbuf)?;
-                seen += count as u64;
             }
             DataMsg::SlabBatch { indices, cols, values, .. } => {
                 check_cols(cols)?;
-                seen += indices.len() as u64;
                 feed(&indices, &values)?;
             }
             DataMsg::RowBatch { rows, .. } => {
                 for row in rows {
                     check_cols(row.values.len() as u32)?;
                     feed(&[row.index], &row.values)?;
-                    seen += 1;
                 }
             }
             DataMsg::GetDone { .. } => break,
@@ -515,13 +909,12 @@ fn fetch_range<F: FnMut(&[u64], &[f64]) -> Result<()>>(
     metrics.bytes_recv.inc(bytes);
     metrics.frames_recv.inc(frames);
     tally.publish_recv(metrics);
-    Ok(seen)
+    Ok(())
 }
 
 /// Fetch one owner's rows on a single connection, feeding each decoded
 /// row to the shared sink (one lock per frame, not per row).
 fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
-    connector: &dyn Connector,
     ep: &Endpoint,
     meta: &MatrixMeta,
     start: u64,
@@ -530,7 +923,7 @@ fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
     sink: &Mutex<F>,
 ) -> Result<u64> {
     let cols = meta.cols as usize;
-    fetch_range(connector, ep, meta, start, end, opts, |indices, values| {
+    fetch_range(ep, meta, start, end, opts, |indices, values| {
         let mut guard = sink.lock().unwrap();
         let f = &mut *guard;
         for (i, &index) in indices.iter().enumerate() {
@@ -547,7 +940,6 @@ fn fetch_one<F: FnMut(u64, &[f64]) -> Result<()>>(
 /// is deterministic and index-sorted — exactly the row sequence a single
 /// connection would have produced.
 fn fetch_one_striped<F: FnMut(u64, &[f64]) -> Result<()>>(
-    connector: &dyn Connector,
     ep: &Endpoint,
     meta: &MatrixMeta,
     start: u64,
@@ -563,7 +955,9 @@ fn fetch_one_striped<F: FnMut(u64, &[f64]) -> Result<()>>(
                 scope.spawn(move || -> Result<(Vec<u64>, Vec<f64>)> {
                     let mut idx: Vec<u64> = Vec::new();
                     let mut vals: Vec<f64> = Vec::new();
-                    fetch_range(connector, ep, meta, s, e, opts, |indices, values| {
+                    // Each stripe resumes its own sub-range; a stripe
+                    // that falls back to TCP degrades only itself.
+                    fetch_range(ep, meta, s, e, opts, |indices, values| {
                         idx.extend_from_slice(indices);
                         vals.extend_from_slice(values);
                         Ok(())
@@ -617,19 +1011,17 @@ where
     if meta.layout.kind == LayoutKind::Replicated {
         endpoints.truncate(1);
     }
-    let connector = connector_for(opts.transport, opts.nodelay);
     let striped = opts.stripes > 1;
     let sink = Mutex::new(sink);
     let results: Vec<Result<u64>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(endpoints.len());
         for ep in &endpoints {
             let sink = &sink;
-            let connector = connector.as_ref();
             handles.push(scope.spawn(move || {
                 if striped {
-                    fetch_one_striped(connector, ep, meta, start, end, opts, sink)
+                    fetch_one_striped(ep, meta, start, end, opts, sink)
                 } else {
-                    fetch_one(connector, ep, meta, start, end, opts, sink)
+                    fetch_one(ep, meta, start, end, opts, sink)
                 }
             }));
         }

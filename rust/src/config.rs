@@ -242,6 +242,61 @@ impl Default for BenchConfig {
     }
 }
 
+/// Deterministic fault-injection knobs (the `fault` subsystem; see
+/// `fault/mod.rs` and DESIGN.md §Fault injection & client resilience).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch. Off by default: a disabled plane is never even
+    /// constructed, so production paths carry zero injection cost.
+    pub enabled: bool,
+    /// Seed for the per-site SplitMix64 streams — two runs with the same
+    /// seed and schedule misbehave identically.
+    pub seed: u64,
+    /// Comma-separated injection schedule: `site:prob[:max_fires[:warmup]]`
+    /// entries against the site catalog (`fault::SITE_CATALOG`) — warmup
+    /// consults pass clean before the site arms, e.g.
+    /// `"transport.disconnect:0.05:2,driver.drop_reply:1.0:1:4"`.
+    pub sites: String,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { enabled: false, seed: 1, sites: String::new() }
+    }
+}
+
+/// Client-side retry/resume knobs (`client/transfer.rs` reconnect ladder
+/// and the control-plane lost-reply resend).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryConfig {
+    /// Attempts per data-plane connection (1 = no retry). Each retry
+    /// redials and resends only the slabs the worker has not acknowledged.
+    pub max_attempts: u32,
+    /// First backoff delay; doubles per attempt (with deterministic
+    /// jitter in [0.5, 1.0] of the computed delay).
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_cap_ms: u64,
+    /// Control-plane read timeout for lost-reply recovery: 0 (default)
+    /// keeps the classic blocking behaviour; > 0 arms a read timeout and
+    /// resends idempotent calls (nonce-carrying Submit, Poll/Wait) on the
+    /// same connection. Only meaningful for v10 sessions under fault
+    /// testing — a reply that is slow rather than lost would desync the
+    /// call pairing, so leave this 0 outside chaos schedules.
+    pub call_timeout_ms: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            max_attempts: 3,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            call_timeout_ms: 0,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -252,6 +307,8 @@ pub struct Config {
     pub sparklet: SparkletConfig,
     pub telemetry: TelemetryConfig,
     pub bench: BenchConfig,
+    pub fault: FaultConfig,
+    pub retry: RetryConfig,
 }
 
 /// A parsed `section.key -> raw string value` map.
@@ -353,6 +410,16 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "bench.budget_secs" => cfg.bench.budget_secs = parse(key, val)?,
         "bench.scale" => cfg.bench.scale = parse(key, val)?,
         "bench.reps" => cfg.bench.reps = parse(key, val)?,
+        "fault.enabled" => cfg.fault.enabled = parse(key, val)?,
+        "fault.seed" => cfg.fault.seed = parse(key, val)?,
+        "fault.sites" => {
+            crate::fault::parse_sites(val)?;
+            cfg.fault.sites = val.to_string();
+        }
+        "retry.max_attempts" => cfg.retry.max_attempts = parse(key, val)?,
+        "retry.backoff_base_ms" => cfg.retry.backoff_base_ms = parse(key, val)?,
+        "retry.backoff_cap_ms" => cfg.retry.backoff_cap_ms = parse(key, val)?,
+        "retry.call_timeout_ms" => cfg.retry.call_timeout_ms = parse(key, val)?,
         _ => return Err(Error::Config(format!("unknown config key: {key}"))),
     }
     Ok(())
@@ -452,6 +519,19 @@ impl Config {
         crate::protocol::WireCodec::parse(&self.transfer.compression)?;
         if !(16..=1 << 20).contains(&self.telemetry.span_buffer) {
             return Err(Error::Config("telemetry.span_buffer must be in [16, 2^20]".into()));
+        }
+        // re-validate in case the struct was mutated directly
+        crate::fault::parse_sites(&self.fault.sites)?;
+        if self.retry.max_attempts == 0 {
+            return Err(Error::Config("retry.max_attempts must be >= 1".into()));
+        }
+        if self.retry.backoff_base_ms == 0 {
+            return Err(Error::Config("retry.backoff_base_ms must be >= 1".into()));
+        }
+        if self.retry.backoff_cap_ms < self.retry.backoff_base_ms {
+            return Err(Error::Config(
+                "retry.backoff_cap_ms must be >= retry.backoff_base_ms".into(),
+            ));
         }
         Ok(())
     }
@@ -615,6 +695,60 @@ scale = 0.5
         let mut cfg = Config::default();
         apply_raw(&mut cfg, &raw).unwrap();
         assert_eq!(cfg.telemetry.span_buffer, 256);
+    }
+
+    #[test]
+    fn fault_and_retry_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        assert!(!cfg.fault.enabled);
+        assert_eq!(cfg.fault.seed, 1);
+        assert!(cfg.fault.sites.is_empty());
+        assert_eq!(cfg.retry.max_attempts, 3);
+        assert_eq!(cfg.retry.call_timeout_ms, 0);
+        cfg.apply_overrides(&[
+            "fault.enabled=true",
+            "fault.seed=42",
+            "fault.sites=transport.disconnect:0.1:2,driver.drop_reply:1.0:1",
+            "retry.max_attempts=5",
+            "retry.backoff_base_ms=10",
+            "retry.backoff_cap_ms=500",
+            "retry.call_timeout_ms=250",
+        ])
+        .unwrap();
+        assert!(cfg.fault.enabled);
+        assert_eq!(cfg.fault.seed, 42);
+        assert_eq!(cfg.retry.max_attempts, 5);
+        assert_eq!(cfg.retry.backoff_base_ms, 10);
+        assert_eq!(cfg.retry.backoff_cap_ms, 500);
+        assert_eq!(cfg.retry.call_timeout_ms, 250);
+        cfg.validate().unwrap();
+        // unknown sites and malformed schedules are rejected at apply time
+        assert!(cfg.apply_overrides(&["fault.sites=transport.warp:0.5"]).is_err());
+        assert!(cfg.apply_overrides(&["fault.sites=transport.dial:2.0"]).is_err());
+        // direct struct mutation is caught by validate
+        cfg.fault.sites = "bogus:1.0".into();
+        assert!(cfg.validate().is_err());
+        cfg.fault.sites = String::new();
+        cfg.retry.max_attempts = 0;
+        assert!(cfg.validate().is_err());
+        cfg.retry.max_attempts = 1;
+        cfg.retry.backoff_base_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.retry.backoff_base_ms = 100;
+        cfg.retry.backoff_cap_ms = 50;
+        assert!(cfg.validate().is_err());
+        cfg.retry.backoff_cap_ms = 100;
+        cfg.validate().unwrap();
+
+        let text = "[fault]\nenabled = true\nseed = 7\nsites = \"transport.stall:0.5\"\n\
+                    \n[retry]\nmax_attempts = 2\n";
+        let raw = parse_toml_subset(text).unwrap();
+        let mut cfg = Config::default();
+        apply_raw(&mut cfg, &raw).unwrap();
+        assert!(cfg.fault.enabled);
+        assert_eq!(cfg.fault.seed, 7);
+        assert_eq!(cfg.fault.sites, "transport.stall:0.5");
+        assert_eq!(cfg.retry.max_attempts, 2);
     }
 
     #[test]

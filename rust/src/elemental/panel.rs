@@ -15,7 +15,14 @@ pub struct LocalPanel {
     layout: Layout,
     /// `local_count(slot) x meta.cols` row-major storage.
     local: DenseMatrix,
+    /// Count of *distinct* local rows stored so far (see `filled`).
     rows_received: u64,
+    /// Bitset over local row indices: which rows have been stored.
+    /// Makes `set_row` idempotent in the count — a client resending an
+    /// unacknowledged upload slab after a reconnect must not inflate
+    /// `rows_received` (and a duplicate row must not mask a missing one
+    /// in the transfer-complete check).
+    filled: Vec<u64>,
 }
 
 impl LocalPanel {
@@ -34,6 +41,7 @@ impl LocalPanel {
             layout,
             local: DenseMatrix::zeros(local_rows, meta.cols as usize),
             rows_received: 0,
+            filled: vec![0u64; local_rows.div_ceil(64)],
             meta,
         })
     }
@@ -51,7 +59,8 @@ impl LocalPanel {
             )));
         }
         let rows_received = local.rows() as u64;
-        Ok(LocalPanel { slot, layout, local, rows_received, meta })
+        let filled = vec![u64::MAX; local.rows().div_ceil(64)];
+        Ok(LocalPanel { slot, layout, local, rows_received, filled, meta })
     }
 
     pub fn layout(&self) -> Layout {
@@ -92,7 +101,11 @@ impl LocalPanel {
         }
         let li = self.layout.local_index(r) as usize;
         self.local.row_mut(li).copy_from_slice(values);
-        self.rows_received += 1;
+        let (word, bit) = (li / 64, 1u64 << (li % 64));
+        if self.filled[word] & bit == 0 {
+            self.filled[word] |= bit;
+            self.rows_received += 1;
+        }
         Ok(())
     }
 
@@ -192,6 +205,23 @@ mod tests {
         assert!(p0.set_row(7, &[1.0, 2.0]).is_err());
         assert!(p0.set_row(2, &[1.0, 2.0]).is_ok());
         assert_eq!(p0.rows_received(), 1);
+    }
+
+    #[test]
+    fn duplicate_set_row_does_not_inflate_rows_received() {
+        // A resumed upload replays unacknowledged slabs; the count must
+        // track distinct rows, or a replay would satisfy the
+        // transfer-complete check with rows still missing.
+        let m = meta(4, 2, LayoutKind::RowBlock, 1);
+        let mut p = LocalPanel::alloc(m, 0).unwrap();
+        p.set_row(1, &[1.0, 2.0]).unwrap();
+        p.set_row(1, &[3.0, 4.0]).unwrap();
+        assert_eq!(p.rows_received(), 1);
+        assert_eq!(p.get_row(1).unwrap(), &[3.0, 4.0]);
+        for r in [0u64, 2, 3] {
+            p.set_row(r, &[0.5, 0.5]).unwrap();
+        }
+        assert_eq!(p.rows_received(), 4);
     }
 
     #[test]

@@ -37,12 +37,25 @@ pub enum Error {
     /// this session. Carries the original failure; the client should
     /// reconnect (a fresh session draws from the recovering pool).
     SessionPoisoned(String),
+    /// The control connection to the Alchemist driver died (socket-level
+    /// failure or reply deadline exceeded): this session is gone — its
+    /// driver side is torn down on disconnect — but the *server* is
+    /// probably fine. Retry policy treats this as "reconnect on a fresh
+    /// session", distinct from both a fatal server error and a
+    /// recoverable data-plane blip.
+    DriverGone(String),
 }
 
 /// Display prefix of [`Error::SessionPoisoned`] — the wire carries error
 /// strings, so the client re-types server messages by this prefix (see
 /// [`Error::from_server_message`]).
 const POISONED_PREFIX: &str = "session poisoned: ";
+
+/// Display prefix of [`Error::DriverGone`]. Unlike poisoning this class
+/// is minted client-side (a dead driver cannot send anything), but it
+/// follows the same stable-prefix convention so it survives stringly
+/// relays through higher layers.
+const DRIVER_GONE_PREFIX: &str = "driver gone: ";
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -59,6 +72,7 @@ impl fmt::Display for Error {
             Error::Budget(s) => write!(f, "budget: {s}"),
             Error::Cancelled(s) => write!(f, "cancelled: {s}"),
             Error::SessionPoisoned(s) => write!(f, "{POISONED_PREFIX}{s}"),
+            Error::DriverGone(s) => write!(f, "{DRIVER_GONE_PREFIX}{s}"),
         }
     }
 }
@@ -84,15 +98,42 @@ impl Error {
         matches!(self, Error::SessionPoisoned(_))
     }
 
+    /// True for [`Error::DriverGone`]: the control connection died; the
+    /// session is unrecoverable but a fresh connect will likely succeed.
+    pub fn is_driver_gone(&self) -> bool {
+        matches!(self, Error::DriverGone(_))
+    }
+
+    /// True for transient transport failures a data-plane retry may heal
+    /// (socket-level errors — not typed server/protocol failures, which
+    /// would fail again identically on a fresh connection).
+    pub fn is_transient_io(&self) -> bool {
+        matches!(self, Error::Io(_))
+    }
+
+    /// Re-type a control-plane transport failure as [`Error::DriverGone`]
+    /// — io/framing errors while talking to the driver mean the session's
+    /// connection is dead (its driver side tears down on disconnect).
+    /// Typed errors the driver actually sent pass through unchanged.
+    pub fn into_driver_gone(self) -> Error {
+        match self {
+            Error::Io(e) => Error::DriverGone(format!("io: {e}")),
+            other => other,
+        }
+    }
+
     /// Re-type an error string received over the wire (`DriverMsg::Err`,
     /// `JobState::Failed`): the protocol carries plain strings, so typed
-    /// failure classes the client must react to — currently only session
-    /// poisoning — are recovered from their stable display prefix.
+    /// failure classes the client must react to — session poisoning,
+    /// driver loss — are recovered from their stable display prefixes.
     pub fn from_server_message(message: String) -> Error {
-        match message.strip_prefix(POISONED_PREFIX) {
-            Some(cause) => Error::SessionPoisoned(cause.to_string()),
-            None => Error::Server(message),
+        if let Some(cause) = message.strip_prefix(POISONED_PREFIX) {
+            return Error::SessionPoisoned(cause.to_string());
         }
+        if let Some(cause) = message.strip_prefix(DRIVER_GONE_PREFIX) {
+            return Error::DriverGone(cause.to_string());
+        }
+        Error::Server(message)
     }
 }
 
@@ -126,6 +167,29 @@ mod tests {
         }
         // Ordinary server messages stay Server.
         assert!(matches!(Error::from_server_message("no workers".into()), Error::Server(_)));
+    }
+
+    #[test]
+    fn driver_gone_retypes_and_roundtrips() {
+        // io failures on the control plane become DriverGone...
+        let io: Error = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe").into();
+        let e = io.into_driver_gone();
+        assert!(e.is_driver_gone(), "{e:?}");
+        assert!(!e.is_session_poisoned());
+        // ...typed errors pass through unchanged
+        assert!(matches!(
+            Error::Server("no workers".into()).into_driver_gone(),
+            Error::Server(_)
+        ));
+        // the stable prefix survives a stringly relay
+        let wire = e.to_string();
+        assert!(wire.starts_with("driver gone: "), "{wire}");
+        assert!(Error::from_server_message(wire).is_driver_gone());
+        // retryability classification: socket errors yes, typed no
+        assert!(Error::Io(std::io::Error::new(std::io::ErrorKind::ConnectionReset, "r"))
+            .is_transient_io());
+        assert!(!Error::Server("unknown handle".into()).is_transient_io());
+        assert!(!Error::Protocol("bad tag".into()).is_transient_io());
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! Deterministic fault-injection plane.
+//!
+//! Robustness claims need a harness: PR 5 proved the *server* heals, but
+//! every failure test so far hand-injected one bespoke fault. This module
+//! turns failure into a first-class, **seeded** input: a [`FaultPlane`]
+//! built from the `[fault]` config section decides, per named *injection
+//! site*, whether the next pass through that seam misbehaves — and two
+//! runs with the same seed misbehave identically.
+//!
+//! Sites (see [`site`] for the catalog):
+//!
+//! * **transport.*** — a [`FaultConnector`] wraps any
+//!   [`Connector`](crate::transport::Connector): dials can be refused,
+//!   established streams can stall, disconnect mid-frame, or corrupt a
+//!   frame's length word (always *detectably*: the corrupted length
+//!   exceeds `MAX_FRAME_BYTES`, so the peer fails typed, never stores
+//!   garbage).
+//! * **driver.*** — the driver can delay a worker grant or drop (never
+//!   write) one client reply, leaving the control stream aligned for an
+//!   idempotent resend.
+//! * **worker.*** — a worker can stall a control call past the driver's
+//!   patience, or drop freshly accepted data-plane connections.
+//!
+//! Everything is compiled in but **zero-cost when disabled**:
+//! [`FaultPlane::from_config`] returns `None` for a disabled `[fault]`
+//! section, and every seam threads an `Option<Arc<FaultPlane>>` — the
+//! disabled path is one `Option` check at wiring time (connector
+//! construction, loop entry), not per byte.
+//!
+//! Injections that fire are counted per site in a process-wide registry
+//! ([`fired_counters`]) which the driver merges into `FetchTelemetry`
+//! under the `fault.` prefix, so chaos runs are observable end to end.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::config::FaultConfig;
+use crate::transport::{Connector, Endpoint, Transport, TransportFeatures};
+use crate::{Error, Result};
+
+/// The injection-site catalog. Config `fault.sites` entries must name one
+/// of these; anything else is a config validation error (typos must not
+/// silently disable a chaos schedule).
+pub mod site {
+    /// Refuse a data-plane dial outright (connection refused).
+    pub const TRANSPORT_DIAL: &str = "transport.dial";
+    /// Reset an established data-plane stream mid-frame.
+    pub const TRANSPORT_DISCONNECT: &str = "transport.disconnect";
+    /// Stall a data-plane read/write for [`super::STALL`].
+    pub const TRANSPORT_STALL: &str = "transport.stall";
+    /// Corrupt an outgoing frame's length word (detectable by the peer).
+    pub const TRANSPORT_CORRUPT: &str = "transport.corrupt";
+    /// Delay a worker grant after allocation (slow scheduler).
+    pub const DRIVER_DELAY_GRANT: &str = "driver.delay_grant";
+    /// Drop (never write) one control-plane reply to the client.
+    pub const DRIVER_DROP_REPLY: &str = "driver.drop_reply";
+    /// Stall a worker control call past the driver's call deadline.
+    pub const WORKER_CTL_TIMEOUT: &str = "worker.ctl_timeout";
+    /// Drop a freshly accepted worker data-plane connection.
+    pub const WORKER_ACCEPT_ERROR: &str = "worker.accept_error";
+}
+
+/// Every valid injection-site name (config validation checks against it).
+pub const SITE_CATALOG: &[&str] = &[
+    site::TRANSPORT_DIAL,
+    site::TRANSPORT_DISCONNECT,
+    site::TRANSPORT_STALL,
+    site::TRANSPORT_CORRUPT,
+    site::DRIVER_DELAY_GRANT,
+    site::DRIVER_DROP_REPLY,
+    site::WORKER_CTL_TIMEOUT,
+    site::WORKER_ACCEPT_ERROR,
+];
+
+/// How long a fired `transport.stall` sleeps.
+pub const STALL: Duration = Duration::from_millis(100);
+
+/// How long a fired `driver.delay_grant` sleeps.
+pub const GRANT_DELAY: Duration = Duration::from_millis(100);
+
+/// How long a fired `worker.ctl_timeout` sleeps — longer than the
+/// driver's cleanup/probe deadlines, so the driver classifies the worker
+/// as suspect exactly like a real wedged node.
+pub const CTL_STALL: Duration = Duration::from_millis(2500);
+
+/// SplitMix64 — the stdlib-only deterministic PRNG behind every fault
+/// decision and every retry-jitter draw. Tiny state, full 64-bit period,
+/// and crucially *seedable*, so a chaos schedule is a pure function of
+/// `(seed, site, draw index)`.
+#[derive(Debug, Clone)]
+pub struct SplitMix64(u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64(seed)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform draw in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// FNV-1a over a site name: folded into the plane seed so each site owns
+/// an independent deterministic stream (adding a site to a schedule never
+/// shifts another site's decisions).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Backoff for retry attempt `attempt` (1-based): exponential from
+/// `base_ms`, capped at `cap_ms`, with deterministic jitter in
+/// `[0.5, 1.0]` of the computed delay drawn from `salt` (callers pass
+/// something connection-specific so concurrent lanes don't thunder in
+/// lockstep).
+pub fn retry_backoff(attempt: u32, base_ms: u64, cap_ms: u64, salt: u64) -> Duration {
+    let exp = base_ms.saturating_mul(1u64 << attempt.saturating_sub(1).min(16)).min(cap_ms.max(1));
+    let jitter = SplitMix64::new(salt ^ u64::from(attempt)).next_f64();
+    Duration::from_millis(((exp as f64) * (0.5 + 0.5 * jitter)) as u64)
+}
+
+struct Site {
+    name: &'static str,
+    prob: f64,
+    /// 0 = unlimited; otherwise the site goes quiet after this many fires
+    /// (finite schedules keep chaos tests deterministic *and* convergent).
+    max_fires: u64,
+    /// This many initial consults pass through untouched before the site
+    /// arms. `prob:1.0, max_fires:1, warmup:N` fires exactly on consult
+    /// N+1 — the precision tool for targeting one specific seam crossing
+    /// (e.g. "drop the reply to the 5th control request, the Submit").
+    warmup: u64,
+    consults: AtomicU64,
+    fired: AtomicU64,
+    rng: Mutex<SplitMix64>,
+}
+
+/// One parsed `fault.sites` entry: `name:prob[:max_fires[:warmup]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSpec {
+    pub name: &'static str,
+    pub prob: f64,
+    pub max_fires: u64,
+    pub warmup: u64,
+}
+
+/// Parse and validate a `fault.sites` schedule string — a comma-separated
+/// list of `site:prob`, `site:prob:max_fires`, or
+/// `site:prob:max_fires:warmup` entries, e.g.
+/// `"transport.disconnect:0.05:2,driver.drop_reply:1.0:1:4"`.
+pub fn parse_sites(spec: &str) -> Result<Vec<SiteSpec>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let name = parts.next().unwrap_or("");
+        let catalog_name = SITE_CATALOG
+            .iter()
+            .find(|s| **s == name)
+            .copied()
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown fault site {name:?} (catalog: {})",
+                    SITE_CATALOG.join(", ")
+                ))
+            })?;
+        let prob: f64 = parts
+            .next()
+            .ok_or_else(|| Error::Config(format!("fault site {name:?} needs a probability")))?
+            .parse()
+            .map_err(|_| Error::Config(format!("fault site {name:?}: bad probability")))?;
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(Error::Config(format!(
+                "fault site {name:?}: probability {prob} outside [0, 1]"
+            )));
+        }
+        let max_fires: u64 = match parts.next() {
+            None => 0,
+            Some(m) => m
+                .parse()
+                .map_err(|_| Error::Config(format!("fault site {name:?}: bad max_fires")))?,
+        };
+        let warmup: u64 = match parts.next() {
+            None => 0,
+            Some(m) => m
+                .parse()
+                .map_err(|_| Error::Config(format!("fault site {name:?}: bad warmup")))?,
+        };
+        if parts.next().is_some() {
+            return Err(Error::Config(format!(
+                "fault site {name:?}: expected name:prob[:max_fires[:warmup]]"
+            )));
+        }
+        out.push(SiteSpec { name: catalog_name, prob, max_fires, warmup });
+    }
+    Ok(out)
+}
+
+/// The seeded fault plane: per-site probability/schedule state. Threaded
+/// as `Option<Arc<FaultPlane>>` through every seam; `None` (the default)
+/// costs nothing.
+pub struct FaultPlane {
+    sites: Vec<Site>,
+}
+
+impl std::fmt::Debug for FaultPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("FaultPlane");
+        for s in &self.sites {
+            d.field(s.name, &(s.prob, s.max_fires, s.fired.load(Ordering::Relaxed)));
+        }
+        d.finish()
+    }
+}
+
+impl FaultPlane {
+    /// Build a plane from the `[fault]` config section. Returns `None`
+    /// when injection is disabled or no sites are scheduled — callers
+    /// keep their fast path by never wrapping anything.
+    pub fn from_config(cfg: &FaultConfig) -> Result<Option<Arc<FaultPlane>>> {
+        let specs = parse_sites(&cfg.sites)?;
+        if !cfg.enabled || specs.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Arc::new(FaultPlane::from_specs(cfg.seed, &specs))))
+    }
+
+    /// Build directly from parsed specs (tests/benches).
+    pub fn from_specs(seed: u64, specs: &[SiteSpec]) -> FaultPlane {
+        FaultPlane {
+            sites: specs
+                .iter()
+                .map(|s| Site {
+                    name: s.name,
+                    prob: s.prob,
+                    max_fires: s.max_fires,
+                    warmup: s.warmup,
+                    consults: AtomicU64::new(0),
+                    fired: AtomicU64::new(0),
+                    rng: Mutex::new(SplitMix64::new(seed ^ fnv1a(s.name))),
+                })
+                .collect(),
+        }
+    }
+
+    /// Should the injection at `name` fire now? Deterministic in
+    /// `(seed, site, call index)`; counts fires locally and in the
+    /// process-wide registry. Sites absent from the schedule never fire.
+    pub fn should_fire(&self, name: &str) -> bool {
+        let Some(s) = self.sites.iter().find(|s| s.name == name) else {
+            return false;
+        };
+        if s.consults.fetch_add(1, Ordering::Relaxed) < s.warmup {
+            return false;
+        }
+        if s.max_fires != 0 && s.fired.load(Ordering::Relaxed) >= s.max_fires {
+            return false;
+        }
+        let hit = s.rng.lock().unwrap().next_f64() < s.prob;
+        if hit {
+            s.fired.fetch_add(1, Ordering::Relaxed);
+            record_fire(s.name);
+        }
+        hit
+    }
+
+    /// Fires so far at one site (0 for unscheduled sites).
+    pub fn fired(&self, name: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.fired.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+}
+
+/// Process-wide fired-injection counters, keyed by site name. The driver
+/// merges these into `FetchTelemetry` under the `fault.` prefix. (Fires
+/// are rare by construction, so a mutex is fine; the hot path never
+/// touches this.)
+fn fired_registry() -> &'static Mutex<HashMap<&'static str, u64>> {
+    static REG: OnceLock<Mutex<HashMap<&'static str, u64>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn record_fire(name: &'static str) {
+    *fired_registry().lock().unwrap().entry(name).or_insert(0) += 1;
+}
+
+/// Snapshot of every site's cumulative fired count this process —
+/// monotonic, like every other registry counter.
+pub fn fired_counters() -> Vec<(String, u64)> {
+    let reg = fired_registry().lock().unwrap();
+    let mut out: Vec<(String, u64)> = reg.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+    out.sort();
+    out
+}
+
+/// Wrap a connector in the fault plane when one is active; identity when
+/// the plane is `None` (the zero-cost disabled path).
+pub fn wrap_connector(
+    inner: Box<dyn Connector>,
+    plane: &Option<Arc<FaultPlane>>,
+) -> Box<dyn Connector> {
+    match plane {
+        Some(p) => Box::new(FaultConnector { inner, plane: p.clone() }),
+        None => inner,
+    }
+}
+
+/// A [`Connector`] that consults the fault plane on every dial and wraps
+/// the dialed stream in a [`FaultStream`].
+pub struct FaultConnector {
+    inner: Box<dyn Connector>,
+    plane: Arc<FaultPlane>,
+}
+
+impl Connector for FaultConnector {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn features(&self) -> TransportFeatures {
+        self.inner.features()
+    }
+
+    fn dial(&self, ep: &Endpoint) -> Result<Transport> {
+        if self.plane.should_fire(site::TRANSPORT_DIAL) {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                format!("fault injected: dial {} refused", ep.tcp_addr),
+            )));
+        }
+        let t = self.inner.dial(ep)?;
+        let kind = t.kind();
+        Ok(Transport::new(
+            kind,
+            Box::new(FaultStream { inner: t, plane: self.plane.clone(), continuation: false }),
+        ))
+    }
+}
+
+/// A byte stream that misbehaves on the fault plane's command: reads and
+/// writes can stall or reset, and an outgoing frame's *length word* can
+/// be corrupted.
+///
+/// Corruption is careful to stay detectable: it only fires on a write
+/// that starts a new frame (tracked via short-write continuations) and
+/// XORs the leading 4 bytes with `0xAA`. Frame lengths are bounded by
+/// `MAX_FRAME_BYTES` (256 MiB, top byte ≤ 0x10), so the corrupted length
+/// word always decodes to an over-limit frame the peer rejects typed —
+/// the fault can delay or kill a transfer, never silently alter data.
+pub struct FaultStream {
+    inner: Transport,
+    plane: Arc<FaultPlane>,
+    /// True when the previous `write` was short — the next call resumes
+    /// mid-frame, so corrupting it would hit payload, not the length word.
+    continuation: bool,
+}
+
+impl Read for FaultStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.plane.should_fire(site::TRANSPORT_STALL) {
+            std::thread::sleep(STALL);
+        }
+        if self.plane.should_fire(site::TRANSPORT_DISCONNECT) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "fault injected: read reset",
+            ));
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl Write for FaultStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.plane.should_fire(site::TRANSPORT_STALL) {
+            std::thread::sleep(STALL);
+        }
+        if self.plane.should_fire(site::TRANSPORT_DISCONNECT) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "fault injected: write reset",
+            ));
+        }
+        let n = if !self.continuation
+            && buf.len() >= 4
+            && self.plane.should_fire(site::TRANSPORT_CORRUPT)
+        {
+            let mut corrupted = buf.to_vec();
+            for b in &mut corrupted[..4] {
+                *b ^= 0xAA;
+            }
+            self.inner.write(&corrupted)?
+        } else {
+            self.inner.write(buf)?
+        };
+        self.continuation = n < buf.len();
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_spread() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = SplitMix64::new(43);
+        assert_ne!(SplitMix64::new(42).next_u64(), c.next_u64());
+        for _ in 0..100 {
+            let f = c.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn sites_parse_and_reject() {
+        let specs =
+            parse_sites("transport.disconnect:0.5:2, driver.drop_reply:1.0").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, site::TRANSPORT_DISCONNECT);
+        assert_eq!(specs[0].prob, 0.5);
+        assert_eq!(specs[0].max_fires, 2);
+        assert_eq!(specs[1].max_fires, 0);
+        let with_warmup = parse_sites("driver.drop_reply:1.0:1:4").unwrap();
+        assert_eq!(with_warmup[0].warmup, 4);
+        assert!(parse_sites("").unwrap().is_empty());
+        assert!(parse_sites("transport.warp:0.5").is_err());
+        assert!(parse_sites("transport.dial").is_err());
+        assert!(parse_sites("transport.dial:1.5").is_err());
+        assert!(parse_sites("transport.dial:0.5:x").is_err());
+        assert!(parse_sites("transport.dial:0.5:1:x").is_err());
+        assert!(parse_sites("transport.dial:0.5:1:9:0").is_err());
+    }
+
+    #[test]
+    fn warmup_skips_then_arms_exactly() {
+        // prob 1.0, max_fires 1, warmup 3: consults 1..=3 pass clean,
+        // consult 4 fires, everything after is quiet again.
+        let p = FaultPlane::from_specs(5, &parse_sites("driver.drop_reply:1.0:1:3").unwrap());
+        let pattern: Vec<bool> =
+            (0..6).map(|_| p.should_fire(site::DRIVER_DROP_REPLY)).collect();
+        assert_eq!(pattern, [false, false, false, true, false, false]);
+        assert_eq!(p.fired(site::DRIVER_DROP_REPLY), 1);
+    }
+
+    #[test]
+    fn plane_is_seed_deterministic_and_bounded() {
+        let specs = parse_sites("driver.drop_reply:0.5").unwrap();
+        let a = FaultPlane::from_specs(7, &specs);
+        let b = FaultPlane::from_specs(7, &specs);
+        let da: Vec<bool> = (0..64).map(|_| a.should_fire(site::DRIVER_DROP_REPLY)).collect();
+        let db: Vec<bool> = (0..64).map(|_| b.should_fire(site::DRIVER_DROP_REPLY)).collect();
+        assert_eq!(da, db);
+        assert!(da.iter().any(|&x| x) && da.iter().any(|&x| !x));
+        // unscheduled sites never fire
+        assert!(!a.should_fire(site::TRANSPORT_DIAL));
+        assert_eq!(a.fired(site::TRANSPORT_DIAL), 0);
+
+        // max_fires bounds the schedule
+        let c = FaultPlane::from_specs(7, &parse_sites("transport.dial:1.0:3").unwrap());
+        let fires = (0..10).filter(|_| c.should_fire(site::TRANSPORT_DIAL)).count();
+        assert_eq!(fires, 3);
+        assert_eq!(c.fired(site::TRANSPORT_DIAL), 3);
+    }
+
+    #[test]
+    fn disabled_config_yields_no_plane() {
+        use crate::config::FaultConfig;
+        let cfg = FaultConfig::default();
+        assert!(FaultPlane::from_config(&cfg).unwrap().is_none());
+        let on = FaultConfig { enabled: true, sites: String::new(), ..cfg };
+        assert!(FaultPlane::from_config(&on).unwrap().is_none());
+        let bad = FaultConfig {
+            enabled: true,
+            sites: "transport.warp:1.0".into(),
+            ..FaultConfig::default()
+        };
+        assert!(FaultPlane::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let a = retry_backoff(1, 50, 2000, 99);
+        assert_eq!(a, retry_backoff(1, 50, 2000, 99));
+        assert!(a.as_millis() >= 25 && a.as_millis() <= 50, "{a:?}");
+        let late = retry_backoff(10, 50, 2000, 99);
+        assert!(late.as_millis() <= 2000);
+        assert!(late.as_millis() >= 1000);
+        // huge attempt numbers must not overflow
+        let _ = retry_backoff(u32::MAX, 50, 2000, 1);
+    }
+
+    #[test]
+    fn fault_connector_refuses_and_wraps() {
+        use crate::transport::{connector_for, TransportChoice};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // accept two streams; echo one frame on the second
+            let (_first, _) = listener.accept().unwrap();
+            let (mut s, _) = listener.accept().unwrap();
+            let got = crate::protocol::frame::read_frame(&mut s).unwrap();
+            crate::protocol::frame::write_frame(&mut s, &got).unwrap();
+        });
+        let plane = Arc::new(FaultPlane::from_specs(
+            1,
+            &parse_sites("transport.dial:1.0:1").unwrap(),
+        ));
+        let conn =
+            wrap_connector(connector_for(TransportChoice::Tcp, true), &Some(plane.clone()));
+        assert_eq!(conn.name(), "fault");
+        // first dial refused by the schedule...
+        assert!(conn.dial(&Endpoint::tcp(addr.clone())).is_err());
+        assert_eq!(plane.fired(site::TRANSPORT_DIAL), 1);
+        // keep the server's first accept satisfied (the refused dial never
+        // reached it)
+        let _pad = std::net::TcpStream::connect(&addr).unwrap();
+        // ...second dial passes through and frames work
+        let mut t = conn.dial(&Endpoint::tcp(addr)).unwrap();
+        let mut w = crate::protocol::Writer::new();
+        t.send_frame(&mut w, |w| w.put_u8(9)).unwrap();
+        let mut buf = Vec::new();
+        t.recv_frame_into(&mut buf).unwrap();
+        assert_eq!(buf, vec![9]);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn corrupted_length_word_is_always_detectable() {
+        // MAX_FRAME_BYTES = 256 MiB: any legal length's top byte is
+        // <= 0x10, so the XOR'd top byte is >= 0xAA ^ 0x10 > 0x10 and the
+        // peer's bounds check rejects the frame.
+        for len in [0u32, 1, 1024, crate::protocol::frame::MAX_FRAME_BYTES as u32] {
+            let corrupted = len.to_le_bytes().map(|b| b ^ 0xAA);
+            let decoded = u32::from_le_bytes(corrupted);
+            assert!(
+                decoded as usize > crate::protocol::frame::MAX_FRAME_BYTES,
+                "len {len} corrupts to {decoded}, not over-limit"
+            );
+        }
+    }
+
+    #[test]
+    fn wrap_connector_is_identity_when_disabled() {
+        use crate::transport::{connector_for, TransportChoice};
+        let conn = wrap_connector(connector_for(TransportChoice::Tcp, true), &None);
+        assert_eq!(conn.name(), "tcp");
+    }
+}

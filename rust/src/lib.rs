@@ -28,6 +28,9 @@
 //! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas HLO
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them on the hot path.
 //! * [`protocol`] — the shared wire format (control + data plane).
+//! * [`fault`] — deterministic, seeded fault-injection plane: named
+//!   sites threaded through the transport/driver/worker seams, zero-cost
+//!   when disabled (the chaos harness behind `tests/it_chaos.rs`).
 //! * [`telemetry`] — the live measurement plane: metrics registry with
 //!   pre-registered atomic handles, cross-process job tracing, and the
 //!   v8 `FetchTelemetry` pull-based export.
@@ -43,6 +46,7 @@ pub mod comm;
 pub mod config;
 pub mod elemental;
 pub mod error;
+pub mod fault;
 pub mod linalg;
 pub mod logging;
 pub mod metrics;

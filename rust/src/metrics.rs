@@ -163,6 +163,10 @@ pub struct SchedMetrics {
     /// Workers currently quarantined (pool-recovery lifecycle: set on
     /// quarantine, lowered as the health prober readmits).
     pub lost_workers: GaugeHandle,
+    /// Jobs put back to `Queued` after their pinned worker group died
+    /// before any routine frame was delivered (PR 8 requeue path —
+    /// exported as "jobs_requeued").
+    pub jobs_requeued: CounterHandle,
     /// "grants", "grant_timeouts", "jobs_submitted", "jobs_done",
     /// "jobs_failed", plus the recovery counts "quarantined_workers",
     /// "readmitted_workers", "worker_reregistrations", "probes_failed" —
@@ -180,6 +184,7 @@ impl SchedMetrics {
             queue_depth: registry.gauge("queue_depth"),
             jobs_inflight: registry.gauge("jobs_inflight"),
             lost_workers: registry.gauge("lost_workers"),
+            jobs_requeued: registry.counter("jobs_requeued"),
             counters: CountersView::new(registry.clone()),
             phases: PhasesView::new(registry.clone()),
             registry,
@@ -225,6 +230,16 @@ pub struct TransferMetrics {
     /// zero when the codec is `none`.
     pub comp_raw_bytes: CounterHandle,
     pub comp_wire_bytes: CounterHandle,
+    /// Client-resilience accounting (PR 8): "retry.attempts" — transfer
+    /// reconnect attempts (upload lanes + fetch ranges);
+    /// "retry.exhausted" — retry ladders that ran out of attempts and
+    /// surfaced the underlying error; "retry.slabs_resent" — route
+    /// batches re-sent after a mid-upload failure because they were not
+    /// yet covered by a `PutDone` ack (resume proof: stays below the
+    /// total batch count).
+    pub retry_attempts: CounterHandle,
+    pub retry_exhausted: CounterHandle,
+    pub slabs_resent: CounterHandle,
     /// Legacy string-keyed view over the counters above (same cells).
     pub counters: CountersView,
     /// "stall_w{id}" — cumulative time the routing thread spent blocked
@@ -252,6 +267,9 @@ impl TransferMetrics {
             uds_bytes_recv: registry.counter("uds_bytes_recv"),
             comp_raw_bytes: registry.counter("comp_raw_bytes"),
             comp_wire_bytes: registry.counter("comp_wire_bytes"),
+            retry_attempts: registry.counter("retry.attempts"),
+            retry_exhausted: registry.counter("retry.exhausted"),
+            slabs_resent: registry.counter("retry.slabs_resent"),
             counters: CountersView::new(registry.clone()),
             phases: PhasesView::new(registry.clone()),
             registry,
@@ -438,6 +456,19 @@ mod tests {
         assert!(m.phases.get_secs("alloc_wait") > 0.0);
         assert_eq!(m.lost_workers.get(), 2);
         assert_eq!(m.counters.get("readmitted_workers"), 1);
+        m.jobs_requeued.inc(1);
+        assert_eq!(m.counters.get("jobs_requeued"), 1);
+    }
+
+    #[test]
+    fn retry_counters_share_cells_with_view() {
+        let m = TransferMetrics::new();
+        m.retry_attempts.inc(2);
+        m.slabs_resent.inc(7);
+        m.retry_exhausted.inc(1);
+        assert_eq!(m.counters.get("retry.attempts"), 2);
+        assert_eq!(m.counters.get("retry.slabs_resent"), 7);
+        assert_eq!(m.counters.get("retry.exhausted"), 1);
     }
 
     #[test]

@@ -44,7 +44,14 @@ use crate::{Error, Result};
 /// / `GetRowsSlabZ` on the data plane. ≤ v8 sessions never see any of
 /// the new tags and stay byte-for-byte on the plain TCP/uncompressed
 /// path.
-pub const PROTOCOL_VERSION: u16 = 9;
+/// v10: idempotent submission — `SubmitRoutine` carries a client-minted
+/// nonce (tag 16; ≤ v9 sessions keep the legacy tag-9 shape
+/// byte-for-byte) so a submit retried after a lost reply dedupes to the
+/// original job instead of double-running. Purely a control-plane
+/// change: the data plane and every other message are untouched, and the
+/// fault-injection plane (`crate::fault`) is config-local with zero wire
+/// surface at any version.
+pub const PROTOCOL_VERSION: u16 = 10;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -79,6 +86,12 @@ pub const TELEMETRY_PROTOCOL_VERSION: u16 = 8;
 /// Sessions negotiated below this get the legacy TCP-only shapes and
 /// plain slabs.
 pub const TRANSPORT_PROTOCOL_VERSION: u16 = 9;
+
+/// First version whose `SubmitRoutine` carries the client-minted
+/// idempotency nonce (tag 16). Sessions negotiated below this encode the
+/// legacy tag-9 shape with no nonce; the driver treats those submissions
+/// as nonce 0 (= dedup disabled), exactly the pre-v10 behaviour.
+pub const IDEMPOTENT_SUBMIT_PROTOCOL_VERSION: u16 = 10;
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -576,8 +589,13 @@ pub enum ClientMsg {
     ServerStatus,
     /// Asynchronous `RunRoutine`: enqueue the routine as a job and return
     /// `JobAccepted { job_id }` immediately, leaving the control
-    /// connection free for more submissions (`ac.run_async`).
-    SubmitRoutine { library: String, routine: String, params: Params },
+    /// connection free for more submissions (`ac.run_async`). `nonce` is
+    /// the v10 client-minted idempotency token: the driver remembers
+    /// `nonce -> job_id` per session, so a submit retried after a lost
+    /// reply returns the original job instead of double-running. 0 means
+    /// "no dedup" — the only value ≤ v9 sessions can produce (their
+    /// legacy tag-9 wire shape has no nonce field).
+    SubmitRoutine { library: String, routine: String, params: Params, nonce: u64 },
     /// Non-blocking job-state snapshot.
     PollJob { job_id: u64 },
     /// Block (server-side, up to `timeout_ms`) until the job reaches a
@@ -610,6 +628,14 @@ pub enum ClientMsg {
 
 impl ClientMsg {
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_versioned(PROTOCOL_VERSION)
+    }
+
+    /// Version-aware encoding: `SubmitRoutine` downgrades to the legacy
+    /// tag-9 shape (no nonce) for sessions negotiated below
+    /// [`IDEMPOTENT_SUBMIT_PROTOCOL_VERSION`] — byte-for-byte what a v9
+    /// client would have sent. Every other message is version-invariant.
+    pub fn encode_versioned(&self, version: u16) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
             ClientMsg::Handshake { app_name, version } => {
@@ -650,11 +676,21 @@ impl ClientMsg {
             }
             ClientMsg::Stop => w.put_u8(7),
             ClientMsg::ServerStatus => w.put_u8(8),
-            ClientMsg::SubmitRoutine { library, routine, params } => {
-                w.put_u8(9);
-                w.put_str(library);
-                w.put_str(routine);
-                encode_params(&mut w, params);
+            ClientMsg::SubmitRoutine { library, routine, params, nonce } => {
+                if version >= IDEMPOTENT_SUBMIT_PROTOCOL_VERSION {
+                    w.put_u8(16);
+                    w.put_str(library);
+                    w.put_str(routine);
+                    encode_params(&mut w, params);
+                    w.put_u64(*nonce);
+                } else {
+                    // Legacy shape: the nonce is dropped, not zeroed —
+                    // a ≤ v9 peer must see exactly the old bytes.
+                    w.put_u8(9);
+                    w.put_str(library);
+                    w.put_str(routine);
+                    encode_params(&mut w, params);
+                }
             }
             ClientMsg::PollJob { job_id } => {
                 w.put_u8(10);
@@ -713,6 +749,7 @@ impl ClientMsg {
                 library: r.get_str()?,
                 routine: r.get_str()?,
                 params: decode_params(&mut r)?,
+                nonce: 0,
             },
             10 => ClientMsg::PollJob { job_id: r.get_u64()? },
             11 => ClientMsg::WaitJob { job_id: r.get_u64()?, timeout_ms: r.get_u64()? },
@@ -720,6 +757,12 @@ impl ClientMsg {
             13 => ClientMsg::CancelJob { job_id: r.get_u64()? },
             14 => ClientMsg::FetchTelemetry { job_id: r.get_u64()? },
             15 => ClientMsg::TransferCaps { codecs: r.get_u32()? },
+            16 => ClientMsg::SubmitRoutine {
+                library: r.get_str()?,
+                routine: r.get_str()?,
+                params: decode_params(&mut r)?,
+                nonce: r.get_u64()?,
+            },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
         Ok(msg)
@@ -1624,6 +1667,7 @@ mod tests {
                 library: "elemlib".into(),
                 routine: "gramian".into(),
                 params: vec![("A".into(), ParamValue::Matrix(4))],
+                nonce: 0xFEED_F00D,
             },
             ClientMsg::PollJob { job_id: 17 },
             ClientMsg::WaitJob { job_id: 17, timeout_ms: 250 },
@@ -1854,6 +1898,43 @@ mod tests {
         assert_eq!(ClientMsg::decode(&ask.encode()).unwrap(), ask);
         let reply = DriverMsg::TransferCaps { codecs: 0b011 };
         assert_eq!(DriverMsg::decode(&reply.encode()).unwrap(), reply);
+    }
+
+    #[test]
+    fn submit_routine_downgrades_for_v9_sessions() {
+        // ≤ v9 sessions must see the legacy tag-9 shape with the nonce
+        // dropped — byte-for-byte what a v9 client always sent; v10
+        // sessions get tag 16 carrying the nonce.
+        let params = vec![("A".into(), ParamValue::Matrix(4))];
+        let msg = ClientMsg::SubmitRoutine {
+            library: "elemlib".into(),
+            routine: "gramian".into(),
+            params: params.clone(),
+            nonce: 0xDEAD_BEEF,
+        };
+
+        let v9 = msg.encode_versioned(9);
+        assert_eq!(v9[0], 9, "v9 SubmitRoutine must use the legacy tag");
+        // Hand-assemble the exact legacy bytes a v9 client produced.
+        let mut legacy = Writer::new();
+        legacy.put_u8(9);
+        legacy.put_str("elemlib");
+        legacy.put_str("gramian");
+        encode_params(&mut legacy, &params);
+        assert_eq!(v9, legacy.into_bytes(), "v9 shape must be byte-identical to pre-v10");
+        match ClientMsg::decode(&v9).unwrap() {
+            ClientMsg::SubmitRoutine { nonce, library, .. } => {
+                assert_eq!(nonce, 0, "legacy shape decodes as nonce 0");
+                assert_eq!(library, "elemlib");
+            }
+            other => panic!("bad v9 decode: {other:?}"),
+        }
+
+        let v10 = msg.encode_versioned(10);
+        assert_eq!(v10[0], 16, "v10 SubmitRoutine carries the nonce");
+        assert_eq!(ClientMsg::decode(&v10).unwrap(), msg);
+        // default encode() is the current-version shape
+        assert_eq!(msg.encode(), v10);
     }
 
     #[test]

@@ -169,6 +169,28 @@ impl JobTable {
         ok
     }
 
+    /// Put a `Running` job back to `Queued` — the PR 8 requeue path for
+    /// jobs whose pinned worker group died before any routine frame was
+    /// delivered (the job never partially executed, so re-running it from
+    /// the queue is safe). Inflight/cost accounting is untouched: the job
+    /// was non-terminal and stays non-terminal. Returns false if the job
+    /// is unknown or not `Running` (a concurrent cancel/fail wins —
+    /// terminal states are never resurrected).
+    pub fn requeue(&self, id: JobId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let ok = match inner.jobs.get_mut(&id) {
+            Some(j) if matches!(j.state, JobState::Running { .. }) => {
+                j.state = JobState::Queued;
+                true
+            }
+            _ => false,
+        };
+        if ok {
+            self.cv.notify_all();
+        }
+        ok
+    }
+
     /// Record a live progress report against a `Running` job (no-op in
     /// any other state — progress never resurrects a terminal job).
     pub fn update_progress(&self, id: JobId, phase: &str, frac: f64) {
@@ -499,6 +521,26 @@ mod tests {
         assert_eq!(t.fail_all_nonterminal("teardown"), 1);
         assert_eq!(t.inflight_cost(), 0.0);
         assert!(t.get(c).unwrap().state.is_terminal());
+    }
+
+    #[test]
+    fn requeue_returns_running_jobs_to_queued() {
+        let t = JobTable::new();
+        let id = t.submit_with("gemm", 5, 10.0);
+        // Queued jobs cannot be requeued (nothing to roll back).
+        assert!(!t.requeue(id));
+        t.set_running(id);
+        assert!(t.requeue(id));
+        assert_eq!(t.get(id).unwrap().state, JobState::Queued);
+        // Accounting is untouched: still one inflight job at full cost.
+        assert_eq!(t.inflight(), 1);
+        assert_eq!(t.inflight_cost(), 10.0);
+        // The requeued job runs again through the normal lifecycle.
+        assert!(t.set_running(id));
+        t.complete(id, vec![], vec![]);
+        assert!(!t.requeue(id), "terminal jobs are never resurrected");
+        assert!(t.get(id).unwrap().state.is_terminal());
+        assert!(!t.requeue(999));
     }
 
     #[test]

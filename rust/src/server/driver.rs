@@ -178,6 +178,10 @@ pub struct DriverCore {
     roster: Vec<RwLock<Arc<WorkerConn>>>,
     pub alloc: PoolAllocator,
     pub metrics: Arc<SchedMetrics>,
+    /// Deterministic fault-injection plane (`[fault]` config) — `None`
+    /// in production, where every site check is a single branch on a
+    /// `None` discriminant (zero-cost when disabled).
+    pub fault: Option<Arc<crate::fault::FaultPlane>>,
     /// Driver-side span buffer: queue-wait/validate/execute per job
     /// (trace = job token) plus ambient grant/teardown spans. Drained by
     /// `FetchTelemetry` alongside each worker's sink.
@@ -201,6 +205,7 @@ impl DriverCore {
         workers: Vec<Arc<WorkerConn>>,
         sched_cfg: SchedConfig,
         tel_cfg: &TelemetryConfig,
+        fault: Option<Arc<crate::fault::FaultPlane>>,
     ) -> Arc<DriverCore> {
         let metrics = Arc::new(SchedMetrics::new());
         let telemetry =
@@ -211,6 +216,7 @@ impl DriverCore {
             roster: workers.into_iter().map(RwLock::new).collect(),
             alloc: PoolAllocator::new(ids, AllocPolicy::from(&sched_cfg), metrics.clone()),
             metrics,
+            fault,
             telemetry,
             sched_cfg,
             next_session: AtomicU64::new(1),
@@ -248,6 +254,15 @@ impl DriverCore {
 
     fn alloc_job_token(&self) -> u64 {
         self.next_job_token.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Should the named injection site fire? One branch on the `None`
+    /// discriminant when faults are disabled.
+    fn fault_fires(&self, site: &'static str) -> bool {
+        match &self.fault {
+            Some(f) => f.should_fire(site),
+            None => false,
+        }
     }
 }
 
@@ -293,6 +308,40 @@ struct SessionShared {
     /// reports "session closed" so clients see the typed
     /// `Error::SessionPoisoned` cause and know to reconnect.
     poison_cause: Mutex<Option<String>>,
+    /// v10 idempotent submission: client-minted nonce -> accepted job id.
+    /// A submit replayed after a lost `JobAccepted` reply dedupes to the
+    /// original job instead of double-running. Bounded FIFO (the client
+    /// only ever replays its most recent submits).
+    submit_nonces: Mutex<NonceCache>,
+}
+
+/// Bounded nonce -> job-id memory behind idempotent `SubmitRoutine`.
+#[derive(Default)]
+struct NonceCache {
+    map: HashMap<u64, u64>,
+    order: std::collections::VecDeque<u64>,
+}
+
+/// Nonce -> job-id pairs remembered per session before FIFO eviction.
+/// Far beyond any client's in-flight submit window (the control plane is
+/// one request/reply at a time), tiny next to the job table itself.
+const MAX_REMEMBERED_NONCES: usize = 1024;
+
+impl NonceCache {
+    fn get(&self, nonce: u64) -> Option<u64> {
+        self.map.get(&nonce).copied()
+    }
+
+    fn insert(&mut self, nonce: u64, job_id: u64) {
+        if self.map.insert(nonce, job_id).is_none() {
+            self.order.push_back(nonce);
+            while self.order.len() > MAX_REMEMBERED_NONCES {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
 }
 
 /// Execution-turnstile state: `next` is the job id allowed to run now;
@@ -567,7 +616,20 @@ fn serve_client(mut conn: TcpStream, core: Arc<DriverCore>) -> Result<()> {
         if let DriverMsg::HandshakeAck { version, .. } = &reply {
             wire_version = *version;
         }
-        frame::write_frame(&mut conn, &reply.encode_versioned(wire_version))?;
+        // Injection site `driver.drop_reply`: swallow a post-handshake,
+        // non-Stop reply. The request was fully processed and no bytes
+        // are written, so the control stream stays frame-aligned — the
+        // client sees a reply deadline, not corruption, and an
+        // idempotent resend (v10 Submit nonce, Poll/Wait) recovers.
+        let drop_reply = !stop
+            && session.is_some()
+            && !matches!(reply, DriverMsg::HandshakeAck { .. })
+            && core.fault_fires(crate::fault::site::DRIVER_DROP_REPLY);
+        if drop_reply {
+            warnln!("driver", "fault: dropping {reply:?} reply");
+        } else {
+            frame::write_frame(&mut conn, &reply.encode_versioned(wire_version))?;
+        }
         if stop {
             break Ok(());
         }
@@ -728,6 +790,20 @@ fn validate_handles(s: &SessionShared, params: &Params) -> Result<()> {
     Ok(())
 }
 
+/// How an SPMD routine relay failed — the split that decides whether a
+/// job may be requeued or the session must die.
+enum ExecError {
+    /// Terminal for this invocation: a typed routine failure, or a
+    /// mid-collective transport failure that already poisoned the
+    /// session.
+    Fatal(Error),
+    /// The *first* routine frame could not be delivered: zero workers
+    /// received the command, so nothing entered the collective and no
+    /// state changed anywhere. The caller may quarantine the dead group
+    /// and requeue the job onto a fresh grant instead of poisoning.
+    PreExecution { cause: String },
+}
+
 /// Run one SPMD routine on the session's worker group, serialized by the
 /// session routine lock. Shared by the legacy synchronous `RunRoutine`
 /// path and the async job threads.
@@ -743,7 +819,16 @@ fn execute_routine(
     if s.closed.load(Ordering::SeqCst) {
         return Err(closed_session_error(s));
     }
-    execute_routine_locked(core, s, library, routine, params, output_handles, 0)
+    match execute_routine_locked(core, s, library, routine, params, output_handles, 0) {
+        Ok(r) => Ok(r),
+        Err(ExecError::Fatal(e)) => Err(e),
+        Err(ExecError::PreExecution { cause }) => {
+            // The synchronous path has no job table to requeue into —
+            // keep the pre-v10 contract and poison.
+            poison_session(core, s, &cause);
+            Err(Error::SessionPoisoned(cause))
+        }
+    }
 }
 
 /// The SPMD relay proper; caller must hold the session routine lock.
@@ -758,16 +843,18 @@ fn execute_routine_locked(
     params: &Params,
     output_handles: &[u64],
     job_token: u64,
-) -> Result<(Params, Vec<MatrixMeta>)> {
-    let conns = session_conns(s)?;
+) -> std::result::Result<(Params, Vec<MatrixMeta>), ExecError> {
+    let conns = session_conns(s).map_err(ExecError::Fatal)?;
     // RunRoutine is an SPMD collective: once some members have entered
     // it, a member that never will (socket failure) leaves the rest
     // blocked in the mesh forever — reading from them would wedge this
-    // thread (which holds the routine lock) and deadlock cleanup. Any
+    // thread (which holds the routine lock) and deadlock cleanup. A
     // socket-level failure therefore poisons the session: the worker
     // group is quarantined (until the prober heals it) and this session
-    // never contacts it again.
-    for w in &conns {
+    // never contacts it again. The one exception is a failure on the
+    // *first* send — no worker has the command yet, so the invocation is
+    // cleanly requeueable (`ExecError::PreExecution`).
+    for (i, w) in conns.iter().enumerate() {
         let r = w.send(&WorkerCtl::RunRoutine {
             session_id: s.id,
             library: library.to_string(),
@@ -778,8 +865,11 @@ fn execute_routine_locked(
         });
         if let Err(e) = r {
             let why = format!("routine {routine}: send to worker {}: {e}", w.id);
+            if i == 0 {
+                return Err(ExecError::PreExecution { cause: why });
+            }
             poison_session(core, s, &why);
-            return Err(Error::SessionPoisoned(why));
+            return Err(ExecError::Fatal(Error::SessionPoisoned(why)));
         }
     }
     // rank 0 carries the result; all must succeed. Decoded Err replies
@@ -805,7 +895,7 @@ fn execute_routine_locked(
             Err(e) => {
                 let why = format!("routine {routine}: recv from worker {}: {e}", w.id);
                 poison_session(core, s, &why);
-                return Err(Error::SessionPoisoned(why));
+                return Err(ExecError::Fatal(Error::SessionPoisoned(why)));
             }
         }
     }
@@ -819,10 +909,10 @@ fn execute_routine_locked(
         for h in output_handles {
             let _ = broadcast(&conns, &WorkerCtl::FreeMatrix { handle: *h });
         }
-        return Err(match first_err {
+        return Err(ExecError::Fatal(match first_err {
             Some(msg) => Error::Server(format!("routine {routine} failed: {msg}")),
             None => Error::Server("rank 0 returned no routine result".into()),
-        });
+        }));
     }
     let (outputs, new_matrices) = result.unwrap();
     let mut matrices = s.matrices.lock().unwrap();
@@ -1070,6 +1160,7 @@ fn handle_client_msg(
                 turn_cv: Condvar::new(),
                 closed: AtomicBool::new(false),
                 poison_cause: Mutex::new(None),
+                submit_nonces: Mutex::new(NonceCache::default()),
             }));
             Ok(DriverMsg::HandshakeAck { session_id: id, version: negotiated })
         }
@@ -1091,10 +1182,32 @@ fn handle_client_msg(
                 // the typed cause so the client reconnects.
                 return Err(closed_session_error(s));
             }
-            if !s.workers.lock().unwrap().is_empty() {
-                return Err(Error::Server(
-                    "workers already allocated to this session".into(),
-                ));
+            {
+                let held = s.workers.lock().unwrap();
+                if !held.is_empty() {
+                    // v10: a re-request for the same group size is a
+                    // roster *refresh*, not an error — after a requeue
+                    // swapped this session onto a fresh grant (see
+                    // `requeue_onto_fresh_grant`) the client re-syncs
+                    // its worker list this way, making RequestWorkers
+                    // idempotent for the no-op case. Asking for a
+                    // different size while holding a grant is still a
+                    // programming error.
+                    if held.len() == count as usize {
+                        let workers = held
+                            .iter()
+                            .map(|w| WorkerInfo {
+                                id: w.id,
+                                data_addr: w.data_addr.clone(),
+                                uds_addr: w.uds_addr.clone(),
+                            })
+                            .collect();
+                        return Ok(DriverMsg::WorkersGranted { workers });
+                    }
+                    return Err(Error::Server(
+                        "workers already allocated to this session".into(),
+                    ));
+                }
             }
             // The server's wait_timeout_ms is a ceiling, not just the
             // default: a parked session head-blocks the FIFO queue, so
@@ -1111,6 +1224,12 @@ fn handle_client_msg(
             // on failure too (a timed-out grant is a timeline event).
             let _grant = core.telemetry.span(AMBIENT_TRACE, "grant");
             let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
+            // Injection site `driver.delay_grant`: stretch the window
+            // between allocation and mesh formation (where concurrent
+            // re-registrations / client timeouts can interleave).
+            if core.fault_fires(crate::fault::site::DRIVER_DELAY_GRANT) {
+                std::thread::sleep(crate::fault::GRANT_DELAY);
+            }
             // Pin the grant-time generation of each worker: the session
             // keeps exactly these connections, so a later re-registration
             // (which swaps the roster) can never leak a recycled worker
@@ -1217,8 +1336,22 @@ fn handle_client_msg(
                 execute_routine(core, s, &library, &routine, &params, &output_handles)?;
             Ok(DriverMsg::RoutineResult { outputs, new_matrices })
         }
-        ClientMsg::SubmitRoutine { library, routine, params } => {
+        ClientMsg::SubmitRoutine { library, routine, params, nonce } => {
             let s = need_session(session)?;
+            // v10 idempotency: a nonce we have already accepted means the
+            // client never saw the original JobAccepted (lost reply /
+            // retried call) — return the same job id; the job runs once.
+            // Nonce 0 is the legacy no-dedup sentinel (≤ v9 shape).
+            if nonce != 0 {
+                if let Some(job_id) = s.submit_nonces.lock().unwrap().get(nonce) {
+                    debugln!(
+                        "driver",
+                        "session {}: replayed submit nonce {nonce:#x} -> job {job_id}",
+                        s.id
+                    );
+                    return Ok(DriverMsg::JobAccepted { job_id });
+                }
+            }
             // Fail fast on poisoned/closed sessions: accepting a job that
             // can only ever fail would burn a backlog slot and a wait
             // round trip just to report the same cause.
@@ -1301,6 +1434,11 @@ fn handle_client_msg(
                 // No thread will ever consume this job's turnstile slot.
                 retire_turn(s, job_id);
                 return Err(Error::Server(format!("spawn job thread: {e}")));
+            }
+            // Remember the nonce only once the job is truly accepted: a
+            // rejected submission must stay replayable.
+            if nonce != 0 {
+                s.submit_nonces.lock().unwrap().insert(nonce, job_id);
             }
             Ok(DriverMsg::JobAccepted { job_id })
         }
@@ -1473,6 +1611,12 @@ fn fetch_telemetry(
     if dropped > 0 {
         report.registry.counters.insert("telemetry.driver_spans_dropped".into(), dropped);
     }
+    // Fault-injection observability: per-site fire counts from the
+    // process-wide registry (covers this driver's plane and any client
+    // plane living in the same process, e.g. the chaos harness).
+    for (site, fired) in crate::fault::fired_counters() {
+        report.registry.counters.insert(format!("fault.{site}"), fired);
+    }
     let conns: Vec<Arc<WorkerConn>> = s.workers.lock().unwrap().clone();
     let mut pull_failures = 0u64;
     for w in &conns {
@@ -1586,20 +1730,158 @@ fn run_job_body(
     }
     // The gauge drops *before* the terminal state is published: a client
     // observing its result must never then read a stale inflight count.
-    match execute_routine_locked(core, s, library, routine, params, output_handles, job_token)
-    {
-        Ok((outputs, new_matrices)) => {
-            core.metrics.jobs_inflight.dec();
-            s.jobs.complete(job_id, outputs, new_matrices);
-            core.metrics.counters.add("jobs_done", 1);
-        }
-        Err(e) => {
-            debugln!("driver", "job {job_id} ({routine}) failed: {e}");
-            core.metrics.jobs_inflight.dec();
-            s.jobs.fail(job_id, e.to_string());
-            core.metrics.counters.add("jobs_failed", 1);
+    let mut requeues = 0u32;
+    loop {
+        match execute_routine_locked(
+            core, s, library, routine, params, output_handles, job_token,
+        ) {
+            Ok((outputs, new_matrices)) => {
+                core.metrics.jobs_inflight.dec();
+                s.jobs.complete(job_id, outputs, new_matrices);
+                core.metrics.counters.add("jobs_done", 1);
+                return;
+            }
+            Err(ExecError::PreExecution { cause }) if requeues < MAX_REQUEUES => {
+                // The pinned group died before any routine frame was
+                // delivered: requeue onto a fresh grant instead of
+                // poisoning the whole session. The caller still holds
+                // the routine lock, so no other job can interleave.
+                requeues += 1;
+                match requeue_onto_fresh_grant(core, s, job_id, &cause) {
+                    Ok(()) => continue,
+                    Err(e) => {
+                        debugln!("driver", "job {job_id} ({routine}) requeue failed: {e}");
+                        core.metrics.jobs_inflight.dec();
+                        s.jobs.fail(job_id, e.to_string());
+                        core.metrics.counters.add("jobs_failed", 1);
+                        return;
+                    }
+                }
+            }
+            Err(ExecError::PreExecution { cause }) => {
+                // Out of requeue budget: fall back to the poison path so
+                // a flapping pool cannot spin this thread forever.
+                poison_session(core, s, &cause);
+                core.metrics.jobs_inflight.dec();
+                s.jobs.fail(job_id, Error::SessionPoisoned(cause).to_string());
+                core.metrics.counters.add("jobs_failed", 1);
+                return;
+            }
+            Err(ExecError::Fatal(e)) => {
+                debugln!("driver", "job {job_id} ({routine}) failed: {e}");
+                core.metrics.jobs_inflight.dec();
+                s.jobs.fail(job_id, e.to_string());
+                core.metrics.counters.add("jobs_failed", 1);
+                return;
+            }
         }
     }
+}
+
+/// Pre-execution requeues allowed per job before the driver gives up and
+/// poisons the session (a flapping pool must not spin a job thread).
+const MAX_REQUEUES: u32 = 2;
+
+/// The PR 8 requeue path: the session's pinned worker group died before
+/// a routine delivered any frame. Quarantine the dead generation, put
+/// the job back to `Queued`, block for a fresh grant (the prober readmits
+/// the quarantined workers once they probe clean) and re-form the mesh.
+/// The session itself stays open throughout — only this job's execution
+/// stalls. Caller holds the routine lock. On success the session holds a
+/// fresh worker group and the job is `Running` again.
+///
+/// Distributed matrices are *not* resurrected: panels lived on the dead
+/// generation, so a requeued job that references them fails typed
+/// (`unknown handle`) on the fresh group — the client re-uploads on the
+/// same, still-live session. Jobs without matrix inputs simply run.
+fn requeue_onto_fresh_grant(
+    core: &DriverCore,
+    s: &SessionShared,
+    job_id: u64,
+    cause: &str,
+) -> Result<()> {
+    if s.closed.load(Ordering::SeqCst) {
+        return Err(closed_session_error(s));
+    }
+    let dead: Vec<Arc<WorkerConn>> = std::mem::take(&mut *s.workers.lock().unwrap());
+    let ids: Vec<u32> = dead.iter().map(|w| w.id).collect();
+    let count = ids.len() as u32;
+    if count == 0 {
+        return Err(Error::Server(format!("no workers to requeue onto: {cause}")));
+    }
+    warnln!(
+        "driver",
+        "session {}: job {job_id} requeued, quarantining dead group {ids:?}: {cause}",
+        s.id
+    );
+    core.alloc.quarantine(s.id, &ids);
+    core.metrics.jobs_requeued.inc(1);
+    if !s.jobs.requeue(job_id) {
+        // Concurrent cancel/teardown won while we quarantined.
+        return Err(Error::Cancelled(format!("job {job_id} cancelled during requeue")));
+    }
+    // Block for fresh capacity: the quarantined workers re-enter the
+    // pool through the prober's ping → Reset → readmit cycle, or other
+    // free workers satisfy the grant sooner. `acquire` fast-fails while
+    // the shrunken live pool cannot cover the request (it only promises
+    // what the pool holds *today*), so poll it until the prober readmits
+    // capacity or the wait budget runs out.
+    let deadline = Instant::now() + Duration::from_millis(core.sched_cfg.wait_timeout_ms);
+    let fresh_ids = loop {
+        let now = Instant::now();
+        let remaining = deadline.saturating_duration_since(now);
+        match core.alloc.acquire(s.id, count, true, Some(remaining.max(
+            Duration::from_millis(1),
+        ))) {
+            Ok(ids) => break ids,
+            Err(e) => {
+                if now >= deadline || s.closed.load(Ordering::SeqCst) {
+                    return Err(Error::Server(format!(
+                        "requeue after `{cause}`: re-grant failed: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(
+                    core.sched_cfg.probe_interval_ms.clamp(10, 200),
+                ));
+            }
+        }
+    };
+    let conns: Vec<Arc<WorkerConn>> = fresh_ids.iter().map(|&id| core.worker(id)).collect();
+    match setup_session_workers(s.id, &conns, s.wire_version) {
+        Ok(_) => {}
+        Err(SetupFailure::Clean(e)) => {
+            core.alloc.release(s.id, &fresh_ids);
+            return Err(Error::Server(format!("requeue mesh formation failed: {e}")));
+        }
+        Err(SetupFailure::Quarantined(e, bad)) => {
+            core.alloc.quarantine(s.id, &bad);
+            let good: Vec<u32> =
+                fresh_ids.iter().copied().filter(|id| !bad.contains(id)).collect();
+            core.alloc.release(s.id, &good);
+            return Err(Error::Server(format!("requeue mesh formation failed: {e}")));
+        }
+    }
+    {
+        let mut workers = s.workers.lock().unwrap();
+        if !workers.is_empty() || s.closed.load(Ordering::SeqCst) {
+            // Teardown (or a concurrent grant) raced us: hand the fresh
+            // grant straight back.
+            drop(workers);
+            let _ = rollback_sessions(&conns, s.id);
+            core.alloc.release(s.id, &fresh_ids);
+            return Err(closed_session_error(s));
+        }
+        *workers = conns;
+    }
+    info!(
+        "driver",
+        "session {}: job {job_id} re-granted workers {fresh_ids:?} after requeue",
+        s.id
+    );
+    if !s.jobs.set_running(job_id) {
+        return Err(Error::Cancelled(format!("job {job_id} cancelled during requeue")));
+    }
+    Ok(())
 }
 
 fn need_session<'a>(

@@ -66,6 +66,11 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     let worker_listener = TcpListener::bind("127.0.0.1:0")?;
     let worker_reg_addr = worker_listener.local_addr()?.to_string();
 
+    // One seeded fault plane shared by the driver and every worker, so a
+    // single `[fault]` seed yields one deterministic server-side schedule.
+    // None (the default) compiles every site check down to a tag match.
+    let fault = crate::fault::FaultPlane::from_config(&cfg.fault)?;
+
     let n = cfg.server.workers;
     // Spawn workers; they dial the registration listener.
     for i in 0..n {
@@ -73,10 +78,11 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
         let wcfg = cfg.server.clone();
         let ccfg = cfg.compute.clone();
         let tcfg = cfg.telemetry.clone();
+        let wfault = fault.clone();
         std::thread::Builder::new()
             .name(format!("alch-worker-{i}"))
             .spawn(move || {
-                if let Err(e) = run_worker(&addr, wcfg, ccfg, tcfg) {
+                if let Err(e) = run_worker(&addr, wcfg, ccfg, tcfg, wfault) {
                     crate::errorln!("launcher", "worker exited with error: {e}");
                 }
             })
@@ -103,7 +109,7 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     info!("launcher", "{n} workers registered; driver at {driver_addr}");
 
     let stop = Arc::new(AtomicBool::new(false));
-    let core = DriverCore::new(workers, cfg.sched.clone(), &cfg.telemetry);
+    let core = DriverCore::new(workers, cfg.sched.clone(), &cfg.telemetry, fault);
     {
         let core = core.clone();
         let stop = stop.clone();

@@ -184,6 +184,7 @@ pub fn run_worker(
     cfg: ServerConfig,
     compute_cfg: ComputeConfig,
     tel_cfg: TelemetryConfig,
+    fault: Option<Arc<crate::fault::FaultPlane>>,
 ) -> Result<()> {
     // Resolve the [compute] section once; a bad algo string is a startup
     // error, not a per-routine surprise.
@@ -206,10 +207,11 @@ pub fn run_worker(
         let telemetry = telemetry.clone();
         let batch_rows = cfg.batch_rows as usize;
         let nodelay = cfg.nodelay;
+        let fault = fault.clone();
         std::thread::Builder::new()
             .name("wkr-data".to_string())
             .spawn(move || {
-                serve_data_plane(data_listener, store, board, telemetry, batch_rows, nodelay)
+                serve_data_plane(data_listener, store, board, telemetry, batch_rows, nodelay, fault)
             })
             .map_err(|e| Error::Server(format!("spawn data thread: {e}")))?;
     }
@@ -319,6 +321,16 @@ pub fn run_worker(
                     break;
                 }
             };
+            // Fault site: stall the control loop long enough to trip the
+            // driver's ctl-call timeout without actually dying — the
+            // driver must treat the slow reply the same as a dead worker.
+            if let Some(f) = &fault {
+                if f.should_fire(crate::fault::site::WORKER_CTL_TIMEOUT) {
+                    warnln!("worker", "worker {id}: fault site {} fired; stalling ctl loop",
+                        crate::fault::site::WORKER_CTL_TIMEOUT);
+                    std::thread::sleep(crate::fault::CTL_STALL);
+                }
+            }
             let reply = handle_ctl(
                 id,
                 &mut epoch,
@@ -375,6 +387,7 @@ fn serve_data_plane(
     telemetry: Arc<WorkerTelemetry>,
     batch_rows: usize,
     nodelay: bool,
+    fault: Option<Arc<crate::fault::FaultPlane>>,
 ) {
     let mut consecutive_errors = 0u32;
     for conn in listener.incoming() {
@@ -396,6 +409,17 @@ fn serve_data_plane(
             }
         };
         consecutive_errors = 0;
+        // Fault site: drop a freshly-accepted data connection on the
+        // floor. The client sees an abrupt EOF mid-transfer and must
+        // redial and resume, not restart.
+        if let Some(f) = &fault {
+            if f.should_fire(crate::fault::site::WORKER_ACCEPT_ERROR) {
+                debugln!("worker", "fault site {} fired; dropping accepted data conn",
+                    crate::fault::site::WORKER_ACCEPT_ERROR);
+                drop(conn);
+                continue;
+            }
+        }
         if nodelay {
             let _ = conn.set_nodelay(true);
         }

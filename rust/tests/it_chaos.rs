@@ -1,0 +1,530 @@
+//! Integration: end-to-end failure survival under the seeded fault plane
+//! (protocol v10). Chaos schedules perturb the transport, driver and
+//! workers while real workloads run; every job must complete
+//! bitwise-identical to a fault-free run or fail typed — never hang,
+//! never corrupt — and the pool must return to full strength. Also
+//! covers upload resume accounting, idempotent submission (raw-frame
+//! replay and the dropped-reply retry path), the pre-execution requeue
+//! contract, `DriverGone` typing, and ≤ v9 wire-shape interop.
+//!
+//! Transfer/fault metrics are process-wide singletons, so every test
+//! serializes on `GATE` before touching them.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use alchemist::client::{wrappers, AlchemistContext, ServerStatus};
+use alchemist::config::Config;
+use alchemist::fault::{parse_sites, FaultPlane};
+use alchemist::linalg::DenseMatrix;
+use alchemist::metrics::transfer_metrics;
+use alchemist::protocol::{
+    frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, ParamValue, WireRow,
+    PROTOCOL_VERSION,
+};
+use alchemist::server::{start_server, ServerHandle};
+use alchemist::workload::random_matrix;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    // Fast heal loop so recovery is observable in ~100ms, not seconds.
+    c.sched.probe_interval_ms = 50;
+    c.sched.probe_timeout_ms = 500;
+    c
+}
+
+/// Poll scheduler status until the whole pool is free again (or panic at
+/// the deadline with the last observed status).
+fn wait_for_recovery(srv: &ServerHandle, workers: u32) -> ServerStatus {
+    let obs = AlchemistContext::connect(&srv.driver_addr, "observer").unwrap();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let st = obs.scheduler_status().unwrap();
+        if st.total_workers == workers && st.free_workers == workers && st.lost_workers == 0 {
+            obs.stop().unwrap();
+            return st;
+        }
+        assert!(Instant::now() < deadline, "pool never recovered: {st:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The acceptance scenario: three fixed seeds drive random fault
+/// schedules across both planes — server-side grant delays and dropped
+/// data-plane accepts, client-side stream stalls and mid-frame
+/// disconnects — while upload → gemm → tsvd-shaped work runs end to end.
+/// Every schedule is finite (`max_fires`), so with the retry ladder the
+/// run must complete and the fetched result must be bitwise-identical to
+/// a fault-free run on an identically-shaped server. The pool ends at
+/// full strength with zero lost workers.
+#[test]
+fn seeded_chaos_runs_complete_bitwise_identical_and_pool_heals() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let workers = 2u32;
+    let a = DenseMatrix::from_vec(40, 6, random_matrix(31, 40, 6)).unwrap();
+    let b = DenseMatrix::from_vec(6, 5, random_matrix(32, 6, 5)).unwrap();
+
+    // Fault-free baseline on an identical server shape (same worker
+    // count => same layouts => same summation order => bitwise result).
+    let baseline = {
+        let srv = start_server(&cfg(workers)).unwrap();
+        let mut ac = AlchemistContext::connect(&srv.driver_addr, "baseline").unwrap();
+        ac.request_workers(workers).unwrap();
+        wrappers::register_elemlib(&ac).unwrap();
+        let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+        let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+        let c = ac.fetch_dense(&wrappers::gemm(&ac, &al_a, &al_b).unwrap()).unwrap();
+        ac.stop().unwrap();
+        srv.shutdown();
+        c
+    };
+
+    for seed in [101u64, 202, 303] {
+        let mut c = cfg(workers);
+        c.fault.enabled = true;
+        c.fault.seed = seed;
+        c.fault.sites = "driver.delay_grant:0.5:2,worker.accept_error:0.4:2".into();
+        let srv = start_server(&c).unwrap();
+        let mut ac = AlchemistContext::connect(&srv.driver_addr, "chaos").unwrap();
+        // Client-plane schedule: data-plane streams stall and reset.
+        ac.set_fault_plane(Some(Arc::new(FaultPlane::from_specs(
+            seed,
+            &parse_sites("transport.disconnect:0.25:2,transport.stall:0.25:2").unwrap(),
+        ))));
+        ac.request_workers(workers).unwrap();
+        wrappers::register_elemlib(&ac).unwrap();
+        let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+        let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+        let got = ac.fetch_dense(&wrappers::gemm(&ac, &al_a, &al_b).unwrap()).unwrap();
+        assert_eq!(got, baseline, "seed {seed}: chaos result differs from fault-free run");
+        ac.stop().unwrap();
+        // Zero lost workers at exit: the pool returns to full strength.
+        let st = wait_for_recovery(&srv, workers);
+        assert_eq!(st.lost_workers, 0, "seed {seed}: {st:?}");
+        srv.shutdown();
+    }
+}
+
+/// Upload *resume*, proven by the counters: a mid-upload disconnect must
+/// re-send only the slabs the worker never acknowledged — strictly fewer
+/// than the total slab count — and the fetched matrix must still be
+/// bitwise-identical. The disconnect site is probabilistic over stream
+/// operations, so we walk seeds until one lands mid-stream (each run is
+/// deterministic per seed; correctness is asserted on every run).
+#[test]
+fn upload_resume_resends_only_unacked_slabs() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let workers = 2u32;
+    let srv = start_server(&cfg(workers)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "resume").unwrap();
+    ac.request_workers(workers).unwrap();
+    // Small slabs so each lane carries many batches and the mid-stream
+    // ack window (ACK_EVERY) engages: 400 rows / 2 owners / 16-row
+    // batches = 13 slabs per lane, 26 total.
+    ac.batch_rows = 16;
+    let total_slabs = 26u64;
+    let a = DenseMatrix::from_vec(400, 4, random_matrix(77, 400, 4)).unwrap();
+
+    let m = transfer_metrics();
+    let mut proven = false;
+    for seed in 1u64..=24 {
+        let resent0 = m.slabs_resent.get();
+        let frames0 = m.frames_sent.get();
+        let attempts0 = m.retry_attempts.get();
+        ac.set_fault_plane(Some(Arc::new(FaultPlane::from_specs(
+            seed,
+            &parse_sites("transport.disconnect:0.12:1").unwrap(),
+        ))));
+        let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+        ac.set_fault_plane(None);
+        let back = ac.fetch_dense(&al).unwrap();
+        assert_eq!(back, a, "seed {seed}: resumed upload corrupted the matrix");
+        ac.release(al).unwrap();
+
+        let resent = m.slabs_resent.get() - resent0;
+        if resent > 0 {
+            assert!(
+                resent < total_slabs,
+                "seed {seed}: resume re-sent {resent} of {total_slabs} slabs — that is a \
+                 restart, not a resume"
+            );
+            assert!(
+                m.retry_attempts.get() > attempts0,
+                "slabs re-sent without a retry attempt recorded"
+            );
+            let frames = m.frames_sent.get() - frames0;
+            assert!(resent < frames, "re-sent ({resent}) >= all frames sent ({frames})");
+            proven = true;
+            break;
+        }
+    }
+    assert!(proven, "no seed in 1..=24 disconnected mid-upload; resume unproven");
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// Idempotent submission at the wire level: replaying a byte-identical
+/// v10 `SubmitRoutine` (same nonce, same connection) returns the same
+/// job id, the job runs exactly once, and its result is correct.
+#[test]
+fn replayed_submit_nonce_returns_same_job_and_runs_once() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut call = |msg: &ClientMsg| {
+        frame::write_frame(&mut conn, &msg.encode_versioned(PROTOCOL_VERSION)).unwrap();
+        DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap()
+    };
+
+    match call(&ClientMsg::Handshake { app_name: "replay".into(), version: PROTOCOL_VERSION }) {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, PROTOCOL_VERSION),
+        other => panic!("expected ack, got {other:?}"),
+    }
+    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
+    {
+        DriverMsg::WorkersGranted { workers } => workers,
+        other => panic!("expected grant, got {other:?}"),
+    };
+    match call(&ClientMsg::RegisterLibrary {
+        name: "elemlib".into(),
+        path: "builtin:elemlib".into(),
+    }) {
+        DriverMsg::LibraryRegistered { .. } => {}
+        other => panic!("expected registered, got {other:?}"),
+    }
+
+    let (m, n) = (8u64, 3u64);
+    let full =
+        DenseMatrix::from_vec(m as usize, n as usize, random_matrix(5, m as usize, n as usize))
+            .unwrap();
+    let meta = match call(&ClientMsg::CreateMatrix { rows: m, cols: n, kind: LayoutKind::RowBlock })
+    {
+        DriverMsg::MatrixCreated { meta } => meta,
+        other => panic!("expected matrix, got {other:?}"),
+    };
+    {
+        let mut data = std::net::TcpStream::connect(&workers[0].data_addr).unwrap();
+        let rows: Vec<WireRow> = (0..m)
+            .map(|i| WireRow { index: i, values: full.row(i as usize).to_vec() })
+            .collect();
+        frame::write_frame(&mut data, &DataMsg::PutRows { handle: meta.handle, rows }.encode())
+            .unwrap();
+        frame::write_frame(&mut data, &DataMsg::PutDone { handle: meta.handle }.encode())
+            .unwrap();
+        match DataMsg::decode(&frame::read_frame(&mut data).unwrap()).unwrap() {
+            DataMsg::PutComplete { rows_received, .. } => assert_eq!(rows_received, m),
+            other => panic!("expected PutComplete, got {other:?}"),
+        }
+    }
+
+    // Submit once, then replay the byte-identical frame.
+    let submit = ClientMsg::SubmitRoutine {
+        library: "elemlib".into(),
+        routine: "fro_norm".into(),
+        params: vec![("A".to_string(), ParamValue::Matrix(meta.handle))],
+        nonce: 0xDEAD_BEEF,
+    };
+    let job1 = match call(&submit) {
+        DriverMsg::JobAccepted { job_id } => job_id,
+        other => panic!("expected JobAccepted, got {other:?}"),
+    };
+    let job2 = match call(&submit) {
+        DriverMsg::JobAccepted { job_id } => job_id,
+        other => panic!("expected JobAccepted on replay, got {other:?}"),
+    };
+    assert_eq!(job2, job1, "replayed nonce must map to the original job");
+
+    let outputs = loop {
+        match call(&ClientMsg::WaitJob { job_id: job1, timeout_ms: 0 }) {
+            DriverMsg::JobStatus { state: JobState::Done { outputs, .. }, .. } => break outputs,
+            DriverMsg::JobStatus { state: JobState::Failed { message }, .. } => {
+                panic!("job failed: {message}")
+            }
+            DriverMsg::JobStatus { .. } => {}
+            other => panic!("expected JobStatus, got {other:?}"),
+        }
+    };
+    let norm = outputs
+        .iter()
+        .find(|(k, _)| k == "fro_norm")
+        .and_then(|(_, v)| v.as_f64().ok())
+        .expect("fro_norm output");
+    assert!((norm - full.frobenius_norm()).abs() < 1e-9);
+    match call(&ClientMsg::Stop) {
+        DriverMsg::Stopped => {}
+        other => panic!("expected Stopped, got {other:?}"),
+    }
+
+    // Driver-side proof the routine ran once: one submission, one
+    // completion, despite two JobAccepted replies.
+    let obs = AlchemistContext::connect(&srv.driver_addr, "obs").unwrap();
+    let rep = obs.fetch_telemetry(None).unwrap();
+    assert_eq!(rep.registry.counters.get("sched.jobs_submitted").copied(), Some(1));
+    assert_eq!(rep.registry.counters.get("sched.jobs_done").copied(), Some(1));
+    obs.stop().unwrap();
+    srv.shutdown();
+}
+
+/// The production retry path over a dropped reply: the driver swallows
+/// exactly the `JobAccepted` reply (warmup-targeted schedule), the
+/// client's reply deadline trips, the idempotent re-send dedups onto the
+/// original job, and the result is correct — with exactly one submission
+/// recorded server-side.
+#[test]
+fn dropped_submit_reply_recovers_via_idempotent_resend() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let workers = 2u32;
+    let mut c = cfg(workers);
+    c.fault.enabled = true;
+    c.fault.seed = 9;
+    // warmup=4 passes the TransferCaps, grant, register and create
+    // replies through untouched; the 5th post-handshake reply on this
+    // server is the JobAccepted below — dropped exactly once.
+    c.fault.sites = "driver.drop_reply:1.0:1:4".into();
+    let srv = start_server(&c).unwrap();
+
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "dropped").unwrap();
+    // Reply deadline; must exceed sched.waitjob_block_ms (2000) so
+    // blocking waits don't resend spuriously.
+    ac.retry.call_timeout_ms = 3_000;
+    ac.request_workers(workers).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = DenseMatrix::from_vec(24, 6, random_matrix(41, 24, 6)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    let t = Instant::now();
+    let norm = wrappers::fro_norm(&ac, &al).unwrap();
+    assert!((norm - a.frobenius_norm()).abs() < 1e-9);
+    assert!(t.elapsed() < Duration::from_secs(15), "resend never converged: {:?}", t.elapsed());
+
+    let rep = ac.fetch_telemetry(None).unwrap();
+    assert!(
+        rep.registry.counters.get("fault.driver.drop_reply").copied().unwrap_or(0) >= 1,
+        "the scheduled reply drop never fired: {:?}",
+        rep.registry.counters
+    );
+    assert_eq!(
+        rep.registry.counters.get("sched.jobs_submitted").copied(),
+        Some(1),
+        "the re-sent submit must dedup onto the original job, not run twice"
+    );
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// The v10 requeue contract: a pinned worker that dies *before* any
+/// routine frame lands must not poison the session. The job is requeued
+/// onto a fresh grant (panels died with the old group, so it may fail
+/// typed); the same session then refreshes its roster, re-uploads and
+/// reruns to completion, and the pool heals with zero lost workers.
+#[test]
+fn dead_pinned_group_requeues_job_and_session_survives() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let workers = 3u32;
+    let srv = start_server(&cfg(workers)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "requeue").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = DenseMatrix::from_vec(24, 6, random_matrix(51, 24, 6)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    assert!((wrappers::fro_norm(&ac, &al).unwrap() - a.frobenius_norm()).abs() < 1e-9);
+
+    // Kill the first-granted worker: the next routine's *first* send
+    // hits the dead socket — pre-execution, so the driver must requeue,
+    // never poison.
+    let first_id = ac.workers()[0].id;
+    assert!(srv.inject_worker_ctl_failure(first_id));
+
+    match wrappers::fro_norm(&ac, &al) {
+        // Requeue landed on a wiped group: typed failure, client
+        // re-uploads. (Success would mean the panels survived — also
+        // fine, also not poisoned.)
+        Ok(v) => assert!((v - a.frobenius_norm()).abs() < 1e-9),
+        Err(e) => {
+            assert!(!e.is_session_poisoned(), "pre-execution death must requeue, not poison: {e}")
+        }
+    }
+
+    // Same session, same connection: refresh the roster (the requeue may
+    // have swapped worker ids), re-upload, rerun.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let round = (|| -> Result<f64, alchemist::Error> {
+            ac.request_workers(2)?;
+            let al2 = ac.send_dense(&a, LayoutKind::RowBlock)?;
+            let v = wrappers::fro_norm(&ac, &al2)?;
+            ac.release(al2)?;
+            Ok(v)
+        })();
+        match round {
+            Ok(v) => {
+                assert!((v - a.frobenius_norm()).abs() < 1e-9);
+                break;
+            }
+            Err(e) => {
+                assert!(!e.is_session_poisoned(), "session died instead of surviving: {e}");
+                assert!(Instant::now() < deadline, "session never became usable again: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+
+    // The requeue path ran, observably.
+    let rep = ac.fetch_telemetry(None).unwrap();
+    assert!(
+        rep.registry.counters.get("sched.jobs_requeued").copied().unwrap_or(0) >= 1,
+        "jobs_requeued never moved: {:?}",
+        rep.registry.counters.get("sched.jobs_requeued")
+    );
+    ac.stop().unwrap();
+    let st = wait_for_recovery(&srv, workers);
+    assert_eq!(st.lost_workers, 0, "{st:?}");
+    srv.shutdown();
+}
+
+/// A control call that dies because the driver went away surfaces the
+/// typed `DriverGone`, not a bare io error.
+#[test]
+fn lost_driver_connection_is_typed_driver_gone() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let srv = start_server(&cfg(1)).unwrap();
+    let ac = AlchemistContext::connect(&srv.driver_addr, "orphan").unwrap();
+    assert!(ac.scheduler_status().is_ok());
+    srv.shutdown();
+    // The driver is gone; the next call (or the one after, if a buffered
+    // reply sneaks through) must fail typed.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match ac.scheduler_status() {
+            Ok(_) => assert!(Instant::now() < deadline, "server never went away"),
+            Err(e) => {
+                assert!(e.is_driver_gone(), "expected DriverGone, got: {e}");
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// ≤ v9 interop: the legacy tag-9 `SubmitRoutine` wire shape is emitted
+/// byte-for-byte for v9 sessions (no nonce anywhere), the v10 shape is
+/// the same bytes under tag 16 plus a trailing nonce, and a full v9
+/// session runs end to end against the v10 server without ever seeing a
+/// v10-only frame.
+#[test]
+fn v9_sessions_keep_the_legacy_wire_shape() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+
+    // Wire-shape proof, no server needed.
+    let nonce = 0x0123_4567_89AB_CDEFu64;
+    let msg = ClientMsg::SubmitRoutine {
+        library: "elemlib".into(),
+        routine: "fro_norm".into(),
+        params: vec![("A".to_string(), ParamValue::Matrix(7))],
+        nonce,
+    };
+    let v9 = msg.encode_versioned(9);
+    let v10 = msg.encode_versioned(10);
+    assert_eq!(v9[0], 9, "legacy tag");
+    assert_eq!(v10[0], 16, "v10 tag");
+    assert_eq!(v10.len(), v9.len() + 8, "v10 adds exactly the 8-byte nonce");
+    assert_eq!(&v10[1..v10.len() - 8], &v9[1..], "payload identical up to the nonce");
+    assert_eq!(&v10[v10.len() - 8..], &nonce.to_le_bytes(), "nonce trails the frame");
+    assert_eq!(msg.encode(), v10, "default encoding is the current version");
+    // Decoding the legacy shape yields the no-dedup sentinel.
+    match ClientMsg::decode(&v9).unwrap() {
+        ClientMsg::SubmitRoutine { nonce, .. } => assert_eq!(nonce, 0),
+        other => panic!("unexpected decode {other:?}"),
+    }
+    match ClientMsg::decode(&v10).unwrap() {
+        ClientMsg::SubmitRoutine { nonce: got, .. } => assert_eq!(got, nonce),
+        other => panic!("unexpected decode {other:?}"),
+    }
+
+    // Full v9 session against the v10 server.
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut call = |msg: &ClientMsg| {
+        frame::write_frame(&mut conn, &msg.encode_versioned(9)).unwrap();
+        DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap()
+    };
+    match call(&ClientMsg::Handshake { app_name: "v9".into(), version: 9 }) {
+        DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 9),
+        other => panic!("expected ack, got {other:?}"),
+    }
+    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
+    {
+        DriverMsg::WorkersGranted { workers } => workers,
+        other => panic!("expected grant, got {other:?}"),
+    };
+    match call(&ClientMsg::RegisterLibrary {
+        name: "elemlib".into(),
+        path: "builtin:elemlib".into(),
+    }) {
+        DriverMsg::LibraryRegistered { .. } => {}
+        other => panic!("expected registered, got {other:?}"),
+    }
+    let (m, n) = (10u64, 4u64);
+    let full =
+        DenseMatrix::from_vec(m as usize, n as usize, random_matrix(6, m as usize, n as usize))
+            .unwrap();
+    let meta = match call(&ClientMsg::CreateMatrix { rows: m, cols: n, kind: LayoutKind::RowBlock })
+    {
+        DriverMsg::MatrixCreated { meta } => meta,
+        other => panic!("expected matrix, got {other:?}"),
+    };
+    {
+        let mut data = std::net::TcpStream::connect(&workers[0].data_addr).unwrap();
+        let rows: Vec<WireRow> = (0..m)
+            .map(|i| WireRow { index: i, values: full.row(i as usize).to_vec() })
+            .collect();
+        frame::write_frame(&mut data, &DataMsg::PutRows { handle: meta.handle, rows }.encode())
+            .unwrap();
+        frame::write_frame(&mut data, &DataMsg::PutDone { handle: meta.handle }.encode())
+            .unwrap();
+        match DataMsg::decode(&frame::read_frame(&mut data).unwrap()).unwrap() {
+            DataMsg::PutComplete { rows_received, .. } => assert_eq!(rows_received, m),
+            other => panic!("expected PutComplete, got {other:?}"),
+        }
+    }
+    // The v9 encoder drops the nonce; the v10 driver reads it back as 0
+    // (dedup disabled) — exactly the pre-v10 behaviour.
+    let job_id = match call(&ClientMsg::SubmitRoutine {
+        library: "elemlib".into(),
+        routine: "fro_norm".into(),
+        params: vec![("A".to_string(), ParamValue::Matrix(meta.handle))],
+        nonce: 0,
+    }) {
+        DriverMsg::JobAccepted { job_id } => job_id,
+        other => panic!("expected JobAccepted, got {other:?}"),
+    };
+    loop {
+        match call(&ClientMsg::WaitJob { job_id, timeout_ms: 0 }) {
+            DriverMsg::JobStatus { state: JobState::Done { outputs, .. }, .. } => {
+                let norm = outputs
+                    .iter()
+                    .find(|(k, _)| k == "fro_norm")
+                    .and_then(|(_, v)| v.as_f64().ok())
+                    .expect("fro_norm output");
+                assert!((norm - full.frobenius_norm()).abs() < 1e-9);
+                break;
+            }
+            DriverMsg::JobStatus { state: JobState::Failed { message }, .. } => {
+                panic!("v9 job failed: {message}")
+            }
+            DriverMsg::JobStatus { .. } => {}
+            other => panic!("expected JobStatus, got {other:?}"),
+        }
+    }
+    match call(&ClientMsg::Stop) {
+        DriverMsg::Stopped => {}
+        other => panic!("expected Stopped, got {other:?}"),
+    }
+    srv.shutdown();
+}

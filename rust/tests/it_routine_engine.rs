@@ -197,7 +197,9 @@ fn v5_client_interop_against_v6_server() {
     let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
 
     let mut call = |msg: &ClientMsg| -> DriverMsg {
-        frame::write_frame(&mut conn, &msg.encode()).unwrap();
+        // Encode at the negotiated session version: a real v5 client
+        // can only produce the v5 wire shapes.
+        frame::write_frame(&mut conn, &msg.encode_versioned(5)).unwrap();
         DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap()
     };
 
@@ -251,6 +253,7 @@ fn v5_client_interop_against_v6_server() {
             ("A".to_string(), ParamValue::Matrix(meta.handle)),
             ("k".to_string(), ParamValue::I64(k)),
         ],
+        nonce: 0,
     }) {
         DriverMsg::JobAccepted { job_id } => job_id,
         other => panic!("expected JobAccepted, got {other:?}"),

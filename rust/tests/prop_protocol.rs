@@ -79,6 +79,7 @@ fn client_msgs_roundtrip_random() {
                 library: random_string(rng, 15),
                 routine: random_string(rng, 15),
                 params: random_params(rng),
+                nonce: rng.next_u64(),
             },
             8 => ClientMsg::PollJob { job_id: rng.next_u64() },
             9 => ClientMsg::WaitJob { job_id: rng.next_u64(), timeout_ms: rng.next_u64() },

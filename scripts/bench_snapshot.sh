@@ -1,11 +1,11 @@
 #!/usr/bin/env bash
 # Snapshot the perf-trajectory benchmarks into a single JSON file
-# (BENCH_PR7.json at the repo root).
+# (BENCH_PR8.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
 # Spark comparison), ablate_collectives (all-reduce + barrier),
-# ablate_scheduler (submission disciplines + the pool_recovery
-# fault-injection scenario), and the table2/table3 transfer benches
+# ablate_scheduler (submission disciplines + the pool_recovery and
+# PR 8 fault_storm fault-injection scenarios), and the table2/table3 transfer benches
 # (node grid + the PR 7 transport x compression sweep: tcp / uds /
 # striped-N x none / delta / f32), each with its machine-readable
 # --json output, then captures a live telemetry snapshot (merged
@@ -17,7 +17,7 @@
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR7.json}"
+OUT="${1:-BENCH_PR8.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -37,7 +37,7 @@ cargo bench --bench ablate_collectives -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/collectives.json"
 
-echo "== bench_snapshot: ablate_scheduler + pool_recovery (reps=$REPS) =="
+echo "== bench_snapshot: ablate_scheduler + pool_recovery + fault_storm (reps=$REPS) =="
 cargo bench --bench ablate_scheduler -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/scheduler.json"

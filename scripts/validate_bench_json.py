@@ -113,6 +113,26 @@ class Checker:
         # when present, so older snapshots (PR3...) stay green.
         if "ablate_scheduler" in doc:
             self.rows(doc, "ablate_scheduler", ["scenario"], ["secs", "jobs_per_s", "recovery_ms"])
+            # PR 8: the fault_storm scenario reports chaos survival plus
+            # the post-storm pool heal time.
+            storms = [
+                r
+                for r in doc["ablate_scheduler"] or []
+                if isinstance(r, dict) and r.get("scenario") == "fault_storm"
+            ]
+            for i, row in enumerate(storms):
+                where = f"ablate_scheduler.fault_storm[{i}]"
+                if not self.require_keys(
+                    row,
+                    ["seed", "jobs", "completed", "completion_rate", "secs", "recovery_ms", "timed_out"],
+                    where,
+                ):
+                    continue
+                for k in ("seed", "jobs", "completed", "completion_rate", "secs", "recovery_ms"):
+                    if not is_num_or_null(row[k]):
+                        self.err(where, f"{k!r} should be a number or null, got {row[k]!r}")
+                if not (row["timed_out"] is None or isinstance(row["timed_out"], bool)):
+                    self.err(where, f"'timed_out' should be a bool or null, got {row['timed_out']!r}")
         # PR 7: the table2/table3 transfer benches emit transfer_grid
         # rows plus the transport x compression sweep.
         for section in ("table2_transfer_tall", "table3_transfer_wide"):
