@@ -70,6 +70,15 @@ fn render(report: &TelemetryReport) {
         c("transfer.rows_recv"),
         c("transfer.bytes_recv"),
     );
+    println!(
+        "  compute: backend code {} | grid {}x{} | gemms ring/allgather/summa2d {}/{}/{}",
+        g("compute.backend"),
+        g("compute.grid_r"),
+        g("compute.grid_c"),
+        c("compute.ring_gemms"),
+        c("compute.allgather_gemms"),
+        c("compute.summa_gemms"),
+    );
     let mut rank = 0u32;
     loop {
         let key = format!("w{rank}.jobs_run");

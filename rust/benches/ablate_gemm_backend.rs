@@ -5,12 +5,14 @@
 //!
 //! Run: `cargo bench --bench ablate_gemm_backend`
 
-use alchemist::bench_support::{bench_config, harness::Table};
+use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
 use alchemist::comm::run_mesh;
 use alchemist::elemental::dist_gemm::{
-    dist_gemm_with, DistGemmAlgo, DistGemmOptions, GemmBackend, NativeBackend,
+    dist_gemm_summa_with_stats, dist_gemm_with, summa_bcast_doubles_per_rank, DistGemmAlgo,
+    DistGemmOptions, GemmBackend, NativeBackend,
 };
 use alchemist::elemental::panel::scatter_matrix;
+use alchemist::elemental::{Grid, GridSpec};
 use alchemist::linalg::DenseMatrix;
 use alchemist::metrics::Timer;
 use alchemist::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
@@ -35,7 +37,7 @@ fn time_dist(n: usize, p: usize, algo: DistGemmAlgo, reps: u32) -> f64 {
     let b_panels = Arc::new(scatter_matrix(&meta(2), &full_b).unwrap());
     let per_rank = run_mesh(p, move |mut mesh| {
         let r = mesh.rank();
-        let opts = DistGemmOptions { algo, panel_rows: 0 };
+        let opts = DistGemmOptions { algo, panel_rows: 0, grid: GridSpec::Auto };
         dist_gemm_with(&mut mesh, &a_panels[r], &b_panels[r], 3, &NativeBackend, &opts)?;
         let t = Timer::start();
         for _ in 0..reps {
@@ -45,6 +47,39 @@ fn time_dist(n: usize, p: usize, algo: DistGemmAlgo, reps: u32) -> f64 {
     })
     .expect("mesh");
     per_rank.into_iter().fold(0.0f64, f64::max) / reps as f64
+}
+
+/// Time summa2d on an explicit grid shape; returns (secs/call for the
+/// slowest rank, max over ranks of peak temp-panel doubles, resolved grid).
+fn time_summa(n: usize, p: usize, spec: GridSpec, reps: u32) -> (f64, usize, Grid) {
+    let meta = |handle: u64| MatrixMeta {
+        handle,
+        rows: n as u64,
+        cols: n as u64,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() },
+    };
+    let full_a = DenseMatrix::from_vec(n, n, random_matrix(5, n, n)).unwrap();
+    let full_b = DenseMatrix::from_vec(n, n, random_matrix(6, n, n)).unwrap();
+    let a_panels = Arc::new(scatter_matrix(&meta(1), &full_a).unwrap());
+    let b_panels = Arc::new(scatter_matrix(&meta(2), &full_b).unwrap());
+    let results = run_mesh(p, move |mut mesh| {
+        let r = mesh.rank();
+        dist_gemm_summa_with_stats(&mut mesh, &a_panels[r], &b_panels[r], 3, &NativeBackend, 0, spec)?;
+        let t = Timer::start();
+        let mut peak = 0usize;
+        for _ in 0..reps {
+            let (_, stats) = dist_gemm_summa_with_stats(
+                &mut mesh, &a_panels[r], &b_panels[r], 3, &NativeBackend, 0, spec,
+            )?;
+            peak = peak.max(stats.peak_a_doubles + stats.peak_b_doubles);
+        }
+        Ok((t.elapsed_secs(), peak))
+    })
+    .expect("mesh");
+    let secs = results.iter().map(|(s, _)| *s).fold(0.0f64, f64::max) / reps as f64;
+    let peak = results.iter().map(|(_, pk)| *pk).max().unwrap_or(0);
+    let grid = spec.resolve(p as u32).expect("grid");
+    (secs, peak, grid)
 }
 
 fn bench_backend(name: &str, backend: &dyn GemmBackend, n: usize, reps: u32, table: &mut Table) {
@@ -69,6 +104,8 @@ fn bench_backend(name: &str, backend: &dyn GemmBackend, n: usize, reps: u32, tab
 fn main() {
     let base = bench_config();
     let reps = base.bench.reps.max(1);
+    let json_path = json_out_path();
+    let mut json_rows: Vec<String> = Vec::new();
     println!("=== Ablation: node-local GEMM backend (C += A*B, square) ===\n");
     let dir = PjrtRuntime::find_artifacts_dir(&base.server.artifacts_dir).expect("artifacts");
     let rt = PjrtRuntime::global(dir).expect("runtime");
@@ -112,4 +149,43 @@ fn main() {
     println!("\nreading: the ring hides panel shifts behind compute and keeps only two");
     println!("B panels per rank (the 'B mem ratio' column is full-B vs the ring's peak);");
     println!("all-gather pays all communication up front and O(k·n) memory per rank.");
+
+    // --- grid sweep: summa2d process-grid shapes vs the 1D degenerations ---
+    println!("\n=== Ablation: summa2d process grid (square, native backend) ===\n");
+    let mut gtable =
+        Table::new(&["grid", "n", "ms/call", "bcast MiB/rank", "peak tmp (doubles)"]);
+    let p = 4usize;
+    for n in [256usize, 512] {
+        for spec in [GridSpec::Auto, GridSpec::Fixed(1, 4), GridSpec::Fixed(4, 1)] {
+            let (secs, peak, grid) = time_summa(n, p, spec, reps);
+            let doubles =
+                summa_bcast_doubles_per_rank(grid, n as u64, n as u64, n as u64, 0);
+            let mib = doubles as f64 * 8.0 / (1024.0 * 1024.0);
+            gtable.row(vec![
+                format!("{}x{}", grid.p_r, grid.p_c),
+                n.to_string(),
+                format!("{:.2}", secs * 1e3),
+                format!("{mib:.2}"),
+                peak.to_string(),
+            ]);
+            json_rows.push(format!(
+                "{{\"scenario\":\"grid_sweep\",\"backend\":\"native\",\"grid\":\"{}x{}\",\
+                 \"p_r\":{},\"p_c\":{},\"ranks\":{p},\"n\":{n},\"secs\":{secs:.6},\
+                 \"per_rank_bcast_bytes\":{},\"peak_tmp_doubles\":{peak}}}",
+                grid.p_r,
+                grid.p_c,
+                grid.p_r,
+                grid.p_c,
+                doubles * 8
+            ));
+        }
+    }
+    gtable.print();
+    println!("\nreading: an RxC grid broadcasts A along rows ((p_c-1)/p_c of the A panel");
+    println!("per step) and B along columns; the square grid moves O(n^2·(1/p_r+1/p_c))");
+    println!("doubles per rank vs O(n^2) for a 1xp or px1 grid — same bits, fewer bytes.");
+
+    if let Some(path) = json_path {
+        write_json_rows(&path, &json_rows);
+    }
 }

@@ -15,6 +15,7 @@ use alchemist::elemental::dist_gemm::{
     dist_gemm_with, DistGemmAlgo, DistGemmOptions, NativeBackend,
 };
 use alchemist::elemental::panel::scatter_matrix;
+use alchemist::elemental::GridSpec;
 use alchemist::linalg::{gemm, DenseMatrix};
 use alchemist::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
 use alchemist::workload::random_matrix;
@@ -49,7 +50,7 @@ fn main() {
         gemm::gemm_acc(&a, &b, &mut c).unwrap();
     });
 
-    // distributed gemm, both algorithms (p = 4)
+    // distributed gemm, all algorithms (p = 4; summa2d on a 2x2 grid)
     let p = 4usize;
     let meta = |h: u64| MatrixMeta {
         handle: h,
@@ -61,13 +62,18 @@ fn main() {
     let fb = DenseMatrix::from_vec(DIST_N, DIST_N, random_matrix(4, DIST_N, DIST_N)).unwrap();
     let ap = Arc::new(scatter_matrix(&meta(1), &fa).unwrap());
     let bp = Arc::new(scatter_matrix(&meta(2), &fb).unwrap());
-    for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
+    let cases = [
+        (DistGemmAlgo::RingPipelined, GridSpec::Auto, String::new()),
+        (DistGemmAlgo::AllGatherB, GridSpec::Auto, String::new()),
+        (DistGemmAlgo::Summa2D, GridSpec::Fixed(2, 2), " grid=2x2".to_string()),
+    ];
+    for (algo, grid, tag) in cases {
         let (ap, bp) = (ap.clone(), bp.clone());
-        bench(&format!("dist_gemm {} {DIST_N}^3 p={p}", algo.name()), 0.3, move || {
+        bench(&format!("dist_gemm {}{tag} {DIST_N}^3 p={p}", algo.name()), 0.3, move || {
             let (ap, bp) = (ap.clone(), bp.clone());
             run_mesh(p, move |mut mesh| {
                 let r = mesh.rank();
-                let opts = DistGemmOptions { algo, panel_rows: 0 };
+                let opts = DistGemmOptions { algo, panel_rows: 0, grid };
                 dist_gemm_with(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, &opts)
             })
             .unwrap();

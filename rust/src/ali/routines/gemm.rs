@@ -5,7 +5,8 @@ use crate::ali::spec::{
 };
 use crate::ali::{params, Routine, RoutineCtx, RoutineOutput};
 use crate::elemental::dist_gemm::{dist_gemm_with_cancel, DistGemmAlgo};
-use crate::protocol::{MatrixMeta, Params};
+use crate::elemental::GridSpec;
+use crate::protocol::{MatrixMeta, ParamType, Params};
 use crate::{Error, Result};
 
 fn cost(_p: &Params, inputs: &[(&str, &MatrixMeta)]) -> CostEstimate {
@@ -34,11 +35,19 @@ impl Gemm {
                 ParamSpec::f64_opt("alpha", 1.0, "scale applied to the product"),
                 ParamSpec::str_opt(
                     "algo",
-                    &["ring", "allgather"],
+                    &["ring", "allgather", "summa2d"],
                     "distributed algorithm override ([compute] default otherwise)",
                 ),
                 ParamSpec::i64_opt("panel_rows", 0, "sub-panel rows per shift (0 = whole)")
                     .with_range(ParamRange::I64 { min: 0, max: i64::MAX }),
+                ParamSpec {
+                    name: "grid",
+                    ty: ParamType::Str,
+                    required: false,
+                    default: None,
+                    range: ParamRange::Grid,
+                    doc: "summa2d process grid: \"auto\" or \"RxC\" (must tile the worker group)",
+                },
             ],
             outputs: vec![OutputSpec::new("C", "alpha * A * B, RowBlock like A")],
             shape_rules: vec![
@@ -75,6 +84,9 @@ impl Routine for Gemm {
             return Err(Error::Ali("panel_rows must be >= 0".into()));
         }
         opts.panel_rows = rows as usize;
+        if let Some(grid) = params::get_str_opt(p, "grid")? {
+            opts.grid = GridSpec::parse(grid).map_err(|e| Error::Ali(e.to_string()))?;
+        }
         ctx.progress.report("dist_gemm", 0.05);
         // The stored panels are read in place (disjoint-field borrows of
         // ctx: store immutably, mesh mutably) — no per-call panel copies.

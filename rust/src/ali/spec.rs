@@ -61,6 +61,11 @@ pub enum ParamRange {
     F64 { min: f64, max: f64 },
     /// String must be one of these spellings.
     OneOf(&'static [&'static str]),
+    /// String must parse as a process-grid spec: "auto" or "RxC" with
+    /// positive factors (see [`crate::elemental::GridSpec::parse`]).
+    /// Whether the shape tiles the worker group is only known at run
+    /// time; pre-admission validation checks the spelling.
+    Grid,
 }
 
 /// One declared parameter.
@@ -407,13 +412,24 @@ impl RoutineSpec {
                 }
                 ParamType::Str => {
                     let s = value.as_str().map_err(ctx)?;
-                    if let ParamRange::OneOf(choices) = spec.range {
-                        if !choices.contains(&s) {
-                            return Err(Error::Ali(format!(
-                                "routine {}: parameter {:?} = {s:?} not among {choices:?}",
-                                self.name, spec.name
-                            )));
+                    match spec.range {
+                        ParamRange::OneOf(choices) => {
+                            if !choices.contains(&s) {
+                                return Err(Error::Ali(format!(
+                                    "routine {}: parameter {:?} = {s:?} not among {choices:?}",
+                                    self.name, spec.name
+                                )));
+                            }
                         }
+                        ParamRange::Grid => {
+                            crate::elemental::GridSpec::parse(s).map_err(|e| {
+                                Error::Ali(format!(
+                                    "routine {}: parameter {:?}: {e}",
+                                    self.name, spec.name
+                                ))
+                            })?;
+                        }
+                        _ => {}
                     }
                 }
                 ParamType::Matrix => {
@@ -496,6 +512,14 @@ mod tests {
                 ParamSpec::str_opt("algo", &["ring", "allgather"], "algorithm"),
                 ParamSpec::i64_opt("panel_rows", 0, "sub-panel rows")
                     .with_range(ParamRange::I64 { min: 0, max: i64::MAX }),
+                ParamSpec {
+                    name: "grid",
+                    ty: ParamType::Str,
+                    required: false,
+                    default: None,
+                    range: ParamRange::Grid,
+                    doc: "process grid",
+                },
             ],
             outputs: vec![OutputSpec::new("C", "product")],
             shape_rules: vec![ShapeRule::ColsEqRows("A", "B"), ShapeRule::RowBlock("A")],
@@ -544,6 +568,14 @@ mod tests {
 
         let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).matrix("A", 1).build();
         assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("duplicate"));
+
+        // grid specs validate spelling pre-admission
+        let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).str("grid", "2x0").build();
+        assert!(spec.validate(&p, lookup).unwrap_err().to_string().contains("grid"));
+        for good in ["auto", "2x2", "1x8"] {
+            let p = ParamsBuilder::new().matrix("A", 1).matrix("B", 2).str("grid", good).build();
+            assert!(spec.validate(&p, lookup).is_ok(), "grid={good}");
+        }
     }
 
     #[test]
@@ -584,7 +616,7 @@ mod tests {
     fn descriptor_roundtrips_the_serializable_subset() {
         let d = gemm_like().descriptor();
         assert_eq!(d.name, "gemm");
-        assert_eq!(d.params.len(), 5);
+        assert_eq!(d.params.len(), 6);
         assert_eq!(d.outputs, vec!["C".to_string()]);
         assert!(d.params[0].required);
         assert_eq!(d.params[2].default, Some(ParamValue::F64(1.0)));

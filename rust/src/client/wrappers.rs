@@ -19,7 +19,7 @@ pub fn gemm(ac: &AlchemistContext, a: &AlMatrix, b: &AlMatrix) -> Result<AlMatri
 }
 
 /// `C = A · B` with an explicit distributed algorithm ("ring" |
-/// "allgather") and optional sub-panel rows (0 = whole owned panels),
+/// "allgather" | "summa2d") and optional sub-panel rows (0 = whole owned panels),
 /// overriding the server's `[compute]` defaults — the
 /// `table1_matmul`/`ablate_gemm_backend` ablation hook.
 pub fn gemm_with_algo(
@@ -33,6 +33,27 @@ pub fn gemm_with_algo(
         .matrix("A", a.handle())
         .matrix("B", b.handle())
         .str("algo", algo)
+        .i64("panel_rows", panel_rows as i64)
+        .build();
+    let (_, mut mats) = ac.run("elemlib", "gemm", params)?;
+    mats.pop().ok_or_else(|| Error::Ali("gemm returned no matrix".into()))
+}
+
+/// `C = A · B` on an explicit summa2d process grid ("auto" or "RxC";
+/// a fixed shape must tile the worker group). `panel_rows` is the
+/// k-panel width (0 = ceil(k/p)).
+pub fn gemm_with_grid(
+    ac: &AlchemistContext,
+    a: &AlMatrix,
+    b: &AlMatrix,
+    grid: &str,
+    panel_rows: u32,
+) -> Result<AlMatrix> {
+    let params = ParamsBuilder::new()
+        .matrix("A", a.handle())
+        .matrix("B", b.handle())
+        .str("algo", "summa2d")
+        .str("grid", grid)
         .i64("panel_rows", panel_rows as i64)
         .build();
     let (_, mut mats) = ac.run("elemlib", "gemm", params)?;

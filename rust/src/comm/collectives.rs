@@ -495,6 +495,252 @@ impl Drop for RingPipeline {
     }
 }
 
+/// Pipelined sequenced broadcast over an ordered [`SubMesh`] chain — the
+/// primitive under both the ascending-k ring GEMM (its p×1 degenerate
+/// case) and the 2D SUMMA row/column panel broadcasts.
+///
+/// The caller supplies a *global frame schedule*: frame `t` originates at
+/// sub-rank `schedule[t].0` and every member observes it at position `t`
+/// — roots call [`BcastPipeline::send_own`], everyone else
+/// [`BcastPipeline::recv`], all in schedule order. Each frame travels the
+/// fixed chain root → root+1 → … → root+q−1 (mod q): every member
+/// receives from its predecessor and forwards to its successor, except
+/// the member whose successor is the frame's root (its last recipient).
+/// The wire carries frames in schedule order, so *arrival order equals
+/// schedule order at every member* — this is what lets all ranks fold
+/// k-panels in globally ascending order, the bitwise-determinism
+/// contract of `dist_gemm`.
+///
+/// Memory discipline (the ≤ 2 in-flight panels per pipeline bound):
+/// * the delivery and forward channels are rendezvous, exactly like
+///   [`RingPipeline`]: the receiver reads at most one frame ahead, and a
+///   forwarded frame shares its allocation with the compute thread's
+///   current panel;
+/// * own frames are handed over by a two-phase rendezvous: `send_own`
+///   first waits for the sender thread to reach the frame's wire slot
+///   (the previous frame has fully drained), and only *then*
+///   materializes the panel — so an own copy never coexists with both a
+///   draining predecessor and the receiver's read-ahead.
+///
+/// So at any instant at most two schedule-consecutive frames are
+/// resident per pipeline. Like `RingPipeline`, dropping without
+/// [`BcastPipeline::finish`] poisons both cloned sockets so the helper
+/// threads exit and later traffic on the mesh fails loudly.
+pub struct BcastPipeline {
+    own_tx: Option<std::sync::mpsc::SyncSender<std::sync::Arc<DenseMatrix>>>,
+    ready_rx: Option<std::sync::mpsc::Receiver<()>>,
+    recv_rx: Option<std::sync::mpsc::Receiver<Result<std::sync::Arc<DenseMatrix>>>>,
+    sender: Option<std::thread::JoinHandle<Result<()>>>,
+    receiver: Option<std::thread::JoinHandle<()>>,
+    send_ctl: std::net::TcpStream,
+    recv_ctl: std::net::TcpStream,
+}
+
+impl BcastPipeline {
+    /// Open the pipeline for one schedule sweep. `schedule[t]` is
+    /// `(root sub-rank, expected frame shape)`; the calling rank must
+    /// then walk the schedule in order, calling `send_own` on its own
+    /// frames and `recv` on every other frame, and `finish` at the end.
+    /// Singleton sub-meshes are rejected — broadcasts there are local
+    /// no-ops the caller should skip.
+    pub fn new(
+        mesh: &mut Mesh,
+        sub: &super::SubMesh,
+        schedule: &[(usize, FrameShape)],
+    ) -> Result<BcastPipeline> {
+        let q = sub.size();
+        if q < 2 {
+            return Err(Error::Protocol(
+                "bcast pipeline needs >= 2 members (singleton broadcasts are local)".into(),
+            ));
+        }
+        let s = sub.rank();
+        let next_sub = (s + 1) % q;
+        // Wire plan: `true` = an own frame (rendezvous with the compute
+        // thread), `false` = forward an inbound frame. Inbound plan: one
+        // (shape, forward?) entry per frame rooted elsewhere.
+        let mut wire: Vec<bool> = Vec::new();
+        let mut inbound: Vec<(FrameShape, bool)> = Vec::new();
+        for &(root, shape) in schedule {
+            if root >= q {
+                return Err(Error::Protocol(format!(
+                    "bcast frame root {root} out of range ({q} members)"
+                )));
+            }
+            if root == s {
+                wire.push(true);
+            } else {
+                let fwd = root != next_sub;
+                inbound.push((shape, fwd));
+                if fwd {
+                    wire.push(false);
+                }
+            }
+        }
+        let mut send_sock = mesh.clone_conn(sub.next())?;
+        let mut recv_sock = mesh.clone_conn(sub.prev())?;
+        let send_ctl = send_sock.try_clone()?;
+        let recv_ctl = recv_sock.try_clone()?;
+
+        let (own_tx, own_rx) = std::sync::mpsc::sync_channel::<std::sync::Arc<DenseMatrix>>(0);
+        let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<()>(0);
+        let (fwd_tx, fwd_rx) = std::sync::mpsc::sync_channel::<std::sync::Arc<DenseMatrix>>(0);
+        let sender = std::thread::Builder::new()
+            .name("bcast-send".into())
+            .spawn(move || -> Result<()> {
+                for own in wire {
+                    let panel = if own {
+                        // Two-phase own handoff: signal the slot is open,
+                        // then take the panel the compute thread built.
+                        if ready_tx.send(()).is_err() {
+                            return Ok(());
+                        }
+                        match own_rx.recv() {
+                            Ok(p) => p,
+                            Err(_) => return Ok(()),
+                        }
+                    } else {
+                        match fwd_rx.recv() {
+                            Ok(p) => p,
+                            Err(_) => return Ok(()),
+                        }
+                    };
+                    super::write_f64_frame(&mut send_sock, panel.data())?;
+                }
+                Ok(())
+            })
+            .map_err(|e| Error::Protocol(format!("spawn bcast sender: {e}")))?;
+
+        let (recv_tx, recv_rx) =
+            std::sync::mpsc::sync_channel::<Result<std::sync::Arc<DenseMatrix>>>(0);
+        let receiver = std::thread::Builder::new()
+            .name("bcast-recv".into())
+            .spawn(move || {
+                for (i, (shape, fwd)) in inbound.into_iter().enumerate() {
+                    let decoded = super::recv_f64_frame(&mut recv_sock).and_then(|v| {
+                        let (rows, cols) = match shape {
+                            FrameShape::Matrix(r, c) => (r, c),
+                            FrameShape::Any => (v.len(), 1),
+                        };
+                        if v.len() != rows * cols {
+                            return Err(Error::Protocol(format!(
+                                "bcast frame {i}: {} doubles, expected {rows}x{cols}",
+                                v.len()
+                            )));
+                        }
+                        Ok(std::sync::Arc::new(DenseMatrix::from_vec(rows, cols, v)?))
+                    });
+                    match decoded {
+                        Ok(panel) => {
+                            // Deliver first (compute can start), then hand
+                            // the sender its forward copy; the rendezvous
+                            // gates the next read on this frame draining.
+                            if recv_tx.send(Ok(panel.clone())).is_err() {
+                                return;
+                            }
+                            if fwd && fwd_tx.send(panel).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = recv_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Protocol(format!("spawn bcast receiver: {e}")))?;
+
+        Ok(BcastPipeline {
+            own_tx: Some(own_tx),
+            ready_rx: Some(ready_rx),
+            recv_rx: Some(recv_rx),
+            sender: Some(sender),
+            receiver: Some(receiver),
+            send_ctl,
+            recv_ctl,
+        })
+    }
+
+    /// Broadcast this rank's next own frame: wait for the sender thread
+    /// to reach its wire slot, *then* materialize the panel via `make`
+    /// and enqueue it. Returns the panel for local compute (the sender
+    /// drains the same allocation concurrently; panels are immutable
+    /// once enqueued).
+    pub fn send_own(
+        &self,
+        make: impl FnOnce() -> Result<std::sync::Arc<DenseMatrix>>,
+    ) -> Result<std::sync::Arc<DenseMatrix>> {
+        let ready = self.ready_rx.as_ref().expect("bcast pipeline already finished");
+        ready
+            .recv()
+            .map_err(|_| Error::Protocol("bcast sender thread terminated early".into()))?;
+        let panel = make()?;
+        self.own_tx
+            .as_ref()
+            .expect("bcast pipeline already finished")
+            .send(panel.clone())
+            .map_err(|_| Error::Protocol("bcast sender thread terminated early".into()))?;
+        Ok(panel)
+    }
+
+    /// Take the next inbound frame, blocking until it is fully read and
+    /// shape-checked. Forwarding (when due) happens automatically.
+    pub fn recv(&self) -> Result<std::sync::Arc<DenseMatrix>> {
+        let rx = self.recv_rx.as_ref().expect("bcast pipeline already finished");
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Protocol("bcast receiver thread terminated early".into())),
+        }
+    }
+
+    /// Quiesce after a complete schedule walk and reap both threads.
+    pub fn finish(mut self) -> Result<()> {
+        drop(self.own_tx.take());
+        drop(self.ready_rx.take());
+        if let Some(h) = self.sender.take() {
+            h.join().map_err(|_| Error::Protocol("bcast sender panicked".into()))??;
+        }
+        if let Some(h) = self.receiver.take() {
+            h.join().map_err(|_| Error::Protocol("bcast receiver panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for BcastPipeline {
+    fn drop(&mut self) {
+        drop(self.own_tx.take());
+        drop(self.ready_rx.take());
+        if self.sender.is_none() && self.receiver.is_none() {
+            return; // finished cleanly
+        }
+        // Abnormal teardown: same session-poisoning semantics as
+        // RingPipeline — disconnect channels, shut the cloned links down
+        // so parked helper threads error out, then reap them.
+        drop(self.recv_rx.take());
+        let _ = self.send_ctl.shutdown(std::net::Shutdown::Both);
+        let _ = self.recv_ctl.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.sender.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.receiver.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Open a [`BcastPipeline`] over `sub` for `schedule` — the `comm`
+/// entry point the SUMMA compute plane uses for its row/column panel
+/// broadcasts (see the type docs for the protocol).
+pub fn bcast_pipelined(
+    mesh: &mut Mesh,
+    sub: &super::SubMesh,
+    schedule: &[(usize, FrameShape)],
+) -> Result<BcastPipeline> {
+    BcastPipeline::new(mesh, sub, schedule)
+}
+
 /// One blocking ring shift without pipelining: send `data` to `to` while
 /// receiving one frame from `from` (helper-thread overlap only, no
 /// compute overlap). Convenience wrapper over [`RingPipeline`] for
@@ -655,6 +901,169 @@ mod tests {
             assert_eq!(first_last, ((r + 1) % p) as f64);
             assert_eq!(second, ((r + 2) % p) as f64);
         }
+    }
+
+    #[test]
+    fn sub_mesh_carving_and_validation() {
+        run_mesh(4, |mesh| {
+            let rank = mesh.rank();
+            // grid-row sub-meshes of a 2x2 grid
+            let members = if rank < 2 { vec![0usize, 1] } else { vec![2, 3] };
+            let sub = crate::comm::SubMesh::new(&mesh, members.clone())?;
+            assert_eq!(sub.rank(), rank % 2);
+            assert_eq!(sub.size(), 2);
+            assert_eq!(sub.members(), &members[..]);
+            assert_eq!(sub.global(sub.rank()), rank);
+            assert_eq!(sub.next(), members[(rank % 2 + 1) % 2]);
+            assert_eq!(sub.prev(), sub.next()); // q = 2: same neighbor
+            // not a member / duplicate / out of range all rejected
+            let others = if rank < 2 { vec![2usize, 3] } else { vec![0, 1] };
+            assert!(crate::comm::SubMesh::new(&mesh, others).is_err());
+            assert!(crate::comm::SubMesh::new(&mesh, vec![rank, rank]).is_err());
+            assert!(crate::comm::SubMesh::new(&mesh, vec![rank, 9]).is_err());
+            assert!(crate::comm::SubMesh::new(&mesh, vec![]).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn bcast_pipeline_delivers_in_schedule_order() {
+        // Mixed roots over the full mesh as one chain: every rank must
+        // observe the frames in schedule order with root-stamped payloads.
+        let p = 3usize;
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let sub = crate::comm::SubMesh::new(&mesh, (0..p).collect())?;
+            let roots = [0usize, 1, 2, 0, 2];
+            let schedule: Vec<(usize, FrameShape)> =
+                roots.iter().map(|&r| (r, FrameShape::Matrix(2, 2))).collect();
+            let pipe = BcastPipeline::new(&mut mesh, &sub, &schedule)?;
+            let mut seen = Vec::new();
+            for (t, &root) in roots.iter().enumerate() {
+                let stamp = (root * 100 + t) as f64;
+                let panel = if root == rank {
+                    pipe.send_own(|| {
+                        Ok(std::sync::Arc::new(
+                            DenseMatrix::from_vec(2, 2, vec![stamp; 4]).unwrap(),
+                        ))
+                    })?
+                } else {
+                    pipe.recv()?
+                };
+                seen.push(panel.data()[0]);
+                assert_eq!(panel.data()[3], panel.data()[0]);
+            }
+            pipe.finish()?;
+            Ok(seen)
+        })
+        .unwrap();
+        for got in results {
+            assert_eq!(got, vec![0.0, 101.0, 202.0, 3.0, 204.0]);
+        }
+    }
+
+    #[test]
+    fn bcast_pipeline_row_and_col_sub_meshes_concurrently() {
+        // The SUMMA shape on a 2x2 grid: every rank walks a row pipeline
+        // and a column pipeline in lockstep, one frame per step from each.
+        let p = 4usize;
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let (gr, gc) = (rank / 2, rank % 2);
+            let row_members = vec![gr * 2, gr * 2 + 1]; // sub-rank = gc
+            let col_members = vec![gc, gc + 2]; // sub-rank = gr
+            let row_sub = crate::comm::SubMesh::new(&mesh, row_members)?;
+            let col_sub = crate::comm::SubMesh::new(&mesh, col_members)?;
+            let steps = 4usize;
+            let schedule: Vec<(usize, FrameShape)> =
+                (0..steps).map(|t| (t % 2, FrameShape::Matrix(1, 3))).collect();
+            let row_pipe = bcast_pipelined(&mut mesh, &row_sub, &schedule)?;
+            let col_pipe = bcast_pipelined(&mut mesh, &col_sub, &schedule)?;
+            let mut seen = Vec::new();
+            for t in 0..steps {
+                let row_val = (gr * 10 + t) as f64; // same across a grid row
+                let a = if t % 2 == gc {
+                    row_pipe.send_own(|| {
+                        Ok(std::sync::Arc::new(
+                            DenseMatrix::from_vec(1, 3, vec![row_val; 3]).unwrap(),
+                        ))
+                    })?
+                } else {
+                    row_pipe.recv()?
+                };
+                let col_val = (gc * 10 + t) as f64; // same across a grid col
+                let b = if t % 2 == gr {
+                    col_pipe.send_own(|| {
+                        Ok(std::sync::Arc::new(
+                            DenseMatrix::from_vec(1, 3, vec![col_val; 3]).unwrap(),
+                        ))
+                    })?
+                } else {
+                    col_pipe.recv()?
+                };
+                assert_eq!(a.data()[0], row_val, "row bcast at step {t}");
+                assert_eq!(b.data()[0], col_val, "col bcast at step {t}");
+                seen.push((a.data()[0], b.data()[0]));
+            }
+            row_pipe.finish()?;
+            col_pipe.finish()?;
+            Ok(seen.len())
+        })
+        .unwrap();
+        assert!(results.iter().all(|&n| n == 4));
+    }
+
+    #[test]
+    fn bcast_pipeline_forwards_under_backpressure() {
+        // Chain of 3 with frames above loopback buffering: middle members
+        // must store-and-forward while the compute thread consumes.
+        let p = 3usize;
+        let side = 400usize; // ~1.3 MB frames
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            let sub = crate::comm::SubMesh::new(&mesh, (0..p).collect())?;
+            let roots = [0usize, 1, 2];
+            let schedule: Vec<(usize, FrameShape)> =
+                roots.iter().map(|&r| (r, FrameShape::Matrix(side, side))).collect();
+            let pipe = BcastPipeline::new(&mut mesh, &sub, &schedule)?;
+            let mut sum = 0.0;
+            for &root in &roots {
+                let panel = if root == rank {
+                    pipe.send_own(|| {
+                        Ok(std::sync::Arc::new(
+                            DenseMatrix::from_vec(side, side, vec![root as f64; side * side])
+                                .unwrap(),
+                        ))
+                    })?
+                } else {
+                    pipe.recv()?
+                };
+                assert_eq!(panel.data()[0], root as f64);
+                assert_eq!(*panel.data().last().unwrap(), root as f64);
+                sum += panel.data()[0];
+            }
+            pipe.finish()?;
+            Ok(sum)
+        })
+        .unwrap();
+        for got in results {
+            assert_eq!(got, 3.0); // 0 + 1 + 2 observed everywhere
+        }
+    }
+
+    #[test]
+    fn bcast_pipeline_rejects_bad_schedules() {
+        run_mesh(2, |mut mesh| {
+            let sub = crate::comm::SubMesh::new(&mesh, vec![0, 1])?;
+            // root out of range
+            assert!(BcastPipeline::new(&mut mesh, &sub, &[(2, FrameShape::Any)]).is_err());
+            // singleton sub-mesh
+            let solo = crate::comm::SubMesh::new(&mesh, vec![mesh.rank()])?;
+            assert!(BcastPipeline::new(&mut mesh, &solo, &[(0, FrameShape::Any)]).is_err());
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -217,6 +217,79 @@ impl Mesh {
     }
 }
 
+/// A sub-communicator carved out of an established [`Mesh`]: an ordered
+/// subset of its ranks (a grid row or column, for the 2D SUMMA path)
+/// addressed by *sub-rank*. No new sockets are opened — operations borrow
+/// the parent mesh's links (the pipelined broadcast clones them exactly
+/// like [`collectives::RingPipeline`] does), so carving is free and two
+/// sub-meshes over disjoint neighbor pairs can run pipelines concurrently.
+#[derive(Debug, Clone)]
+pub struct SubMesh {
+    /// Global mesh ranks of the members, in sub-rank order.
+    members: Vec<usize>,
+    /// This rank's index in `members`.
+    rank: usize,
+}
+
+impl SubMesh {
+    /// Carve a sub-mesh containing `members` (global mesh ranks, in the
+    /// order that defines sub-ranks). The calling rank must be a member,
+    /// and members must be distinct in-range ranks.
+    pub fn new(mesh: &Mesh, members: Vec<usize>) -> Result<SubMesh> {
+        if members.is_empty() {
+            return Err(Error::Protocol("sub-mesh needs >= 1 member".into()));
+        }
+        let mut seen = vec![false; mesh.size()];
+        for &m in &members {
+            if m >= mesh.size() {
+                return Err(Error::Protocol(format!(
+                    "sub-mesh member {m} out of range (mesh size {})",
+                    mesh.size()
+                )));
+            }
+            if seen[m] {
+                return Err(Error::Protocol(format!("sub-mesh member {m} listed twice")));
+            }
+            seen[m] = true;
+        }
+        let Some(rank) = members.iter().position(|&m| m == mesh.rank()) else {
+            return Err(Error::Protocol(format!(
+                "rank {} is not a member of the sub-mesh {members:?}",
+                mesh.rank()
+            )));
+        };
+        Ok(SubMesh { members, rank })
+    }
+
+    /// This rank's sub-rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Global rank of sub-rank `s`.
+    pub fn global(&self, s: usize) -> usize {
+        self.members[s]
+    }
+
+    /// Global rank of this rank's successor on the sub-mesh ring.
+    pub fn next(&self) -> usize {
+        self.members[(self.rank + 1) % self.members.len()]
+    }
+
+    /// Global rank of this rank's predecessor on the sub-mesh ring.
+    pub fn prev(&self) -> usize {
+        self.members[(self.rank + self.members.len() - 1) % self.members.len()]
+    }
+}
+
 /// View a f64 slice as raw bytes (LE hosts only; f64 has no padding and
 /// u8 alignment is never stricter).
 #[cfg(target_endian = "little")]

@@ -53,18 +53,24 @@ impl Default for ServerConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComputeConfig {
     /// Distributed GEMM algorithm: "ring" (ring-pipelined B-panel
-    /// rotation with compute/comm overlap — the default) or "allgather"
-    /// (materialize full B per rank — the ablation baseline).
+    /// rotation with compute/comm overlap — the default), "allgather"
+    /// (materialize full B per rank — the ablation baseline), or
+    /// "summa2d" (true 2D SUMMA over a p_r × p_c process grid).
     pub dist_gemm_algo: String,
     /// Split each owned B panel into sub-panels of at most this many rows
     /// before shifting (finer overlap granularity, lower peak memory);
-    /// 0 = shift whole owned panels.
+    /// 0 = shift whole owned panels. For summa2d this is the k-panel
+    /// width (0 = ceil(k/p)).
     pub ring_panel_rows: u32,
+    /// Process-grid shape for summa2d: "auto" (most-square factoring of
+    /// the mesh size) or an explicit "RxC" such as "2x2". Ignored by the
+    /// 1D algorithms.
+    pub grid: String,
 }
 
 impl Default for ComputeConfig {
     fn default() -> Self {
-        ComputeConfig { dist_gemm_algo: "ring".into(), ring_panel_rows: 0 }
+        ComputeConfig { dist_gemm_algo: "ring".into(), ring_panel_rows: 0, grid: "auto".into() }
     }
 }
 
@@ -74,6 +80,7 @@ impl ComputeConfig {
         Ok(crate::elemental::dist_gemm::DistGemmOptions {
             algo: crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.dist_gemm_algo)?,
             panel_rows: self.ring_panel_rows as usize,
+            grid: crate::elemental::GridSpec::parse(&self.grid)?,
         })
     }
 }
@@ -387,6 +394,10 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
             cfg.compute.dist_gemm_algo = val.to_string();
         }
         "compute.ring_panel_rows" => cfg.compute.ring_panel_rows = parse(key, val)?,
+        "compute.grid" => {
+            crate::elemental::GridSpec::parse(val)?;
+            cfg.compute.grid = val.to_string();
+        }
         "transfer.sender_threads" => cfg.transfer.sender_threads = parse(key, val)?,
         "transfer.slab_bytes" => cfg.transfer.slab_bytes = parse(key, val)?,
         "transfer.channel_depth" => cfg.transfer.channel_depth = parse(key, val)?,
@@ -493,6 +504,7 @@ impl Config {
         }
         // re-validate in case the struct was mutated directly
         crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.compute.dist_gemm_algo)?;
+        crate::elemental::GridSpec::parse(&self.compute.grid)?;
         if self.transfer.sender_threads == 0 {
             return Err(Error::Config("transfer.sender_threads must be >= 1".into()));
         }
@@ -618,6 +630,17 @@ scale = 0.5
         assert_eq!(opts.panel_rows, 32);
         assert!(cfg.apply_overrides(&["compute.dist_gemm_algo=summa3d"]).is_err());
         cfg.compute.dist_gemm_algo = "bogus".into();
+        assert!(cfg.validate().is_err());
+        // summa2d + explicit grid
+        let mut cfg = Config::default();
+        assert_eq!(cfg.compute.grid, "auto");
+        cfg.apply_overrides(&["compute.dist_gemm_algo=summa2d", "compute.grid=2x2"]).unwrap();
+        let opts = cfg.compute.dist_gemm_options().unwrap();
+        assert_eq!(opts.algo, crate::elemental::dist_gemm::DistGemmAlgo::Summa2D);
+        assert_eq!(opts.grid, crate::elemental::GridSpec::Fixed(2, 2));
+        assert!(cfg.apply_overrides(&["compute.grid=0x3"]).is_err());
+        assert!(cfg.apply_overrides(&["compute.grid=banana"]).is_err());
+        cfg.compute.grid = "3x".into();
         assert!(cfg.validate().is_err());
     }
 

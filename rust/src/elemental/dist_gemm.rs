@@ -1,39 +1,56 @@
 //! Distributed GEMM — the Elemental `Gemm` substitute that Alchemist wraps
 //! for the Table 1 experiment.
 //!
-//! Decomposition (1D over rows): A (m x k) and C (m x n) are
-//! row-distributed; B (k x n) is row-distributed in RowBlock panels.
-//! Two algorithms, selected by [`DistGemmAlgo`]:
+//! A (m x k), B (k x n) and C (m x n) arrive row-distributed in RowBlock
+//! panels. Three algorithms, selected by [`DistGemmAlgo`]:
 //!
-//! * **RingPipelined** (default) — 1D SUMMA variant: B's row-panels
-//!   rotate around the ring while every rank accumulates
-//!   `C_local += A_local[:, k_o..] · B_panel(o)` with the pluggable
-//!   [`GemmBackend`]. A dedicated sender/receiver thread pair per rank
-//!   ([`collectives::RingPipeline`]) overlaps the shift of the next panel
-//!   with compute on the current one; after the first panel the
-//!   communication hides behind compute. Peak extra B memory per rank is
-//!   **two panels** (≤ 2·ceil(k/p)·n doubles, asserted by the prop suite
-//!   through [`dist_gemm_ring_with_stats`]); the full B is never
-//!   materialized anywhere.
+//! * **Summa2D** — true SUMMA over a p_r × p_c process grid
+//!   ([`Grid`], `[compute] grid`): A and B are redistributed into 2D
+//!   block-cyclic layouts ([`BlockCyclic2D`]) whose cyclic block width
+//!   equals the k-panel width, then each step broadcasts one A
+//!   column-panel along grid rows and one B row-panel along grid columns
+//!   (two concurrent [`collectives::BcastPipeline`]s per rank) and
+//!   accumulates `C_local += A_panel · B_panel` with the pluggable
+//!   [`GemmBackend`]. Per-rank broadcast volume scales as O(1/√p) of the
+//!   1D algorithms' for square grids — the reason Elemental's GEMM
+//!   scales and the ablation's bytes-moved column. C is converted back
+//!   to RowBlock on exit, so clients see identical layouts regardless of
+//!   algorithm.
+//!
+//! * **RingPipelined** (default) — the p×1 degenerate case: B's
+//!   row-panels travel the rank chain via one sequenced-broadcast
+//!   pipeline while every rank accumulates
+//!   `C_local += A_local[:, k0..] · B_panel`. Peak extra B memory per
+//!   rank is **two panels** (≤ 2·ceil(k/p)·n doubles, asserted by the
+//!   prop suite through [`dist_gemm_ring_with_stats`]); the full B is
+//!   never materialized anywhere.
 //!
 //! * **AllGatherB** — the legacy baseline: all-gather the whole B onto
-//!   every rank (O(k·n) memory, all communication up front), then run the
-//!   *same* panel-by-panel local schedule. Because both algorithms feed
-//!   the backend identical (A-slice, B-panel, C) calls in identical
-//!   order, their outputs are **bit-identical** — the ablation
-//!   (`table1_matmul`, `ablate_gemm_backend`) measures pure
-//!   communication/overlap effects.
+//!   every rank (O(k·n) memory, all communication up front), then run
+//!   the same panel-by-panel local schedule.
 //!
-//! Per-rank compute vs shift-wait time and the peak panel footprint are
-//! recorded in [`crate::metrics::compute_metrics`].
+//! **Determinism contract**: every algorithm folds each C element's
+//! k-terms in globally ascending k order — panel schedules walk k0
+//! ascending on every rank, and [`BcastPipeline`] delivers frames in
+//! schedule order. With a split-invariant backend (the native kernel's
+//! documented contract: one add per k, accumulator chain unbroken across
+//! panel boundaries), **all three algorithms, any grid shape, and any
+//! panel width produce bit-identical C** — equal to a single-node local
+//! GEMM. The prop and integration suites assert this exactly, not within
+//! a tolerance.
+//!
+//! Per-rank compute vs communication-wait time, the peak panel
+//! footprints, and the active backend/grid shape are recorded in
+//! [`crate::metrics::compute_metrics`].
 
 use std::sync::Arc;
 
 use crate::ali::task::CancelToken;
-use crate::comm::{collectives, Mesh};
-use crate::elemental::{Layout, LocalPanel};
+use crate::comm::{collectives, Mesh, SubMesh};
+use crate::elemental::redistribute::{grid_to_rowblock, rowblock_to_grid};
+use crate::elemental::{BlockCyclic2D, Grid, GridSpec, Layout, LocalPanel};
 use crate::linalg::DenseMatrix;
-use crate::metrics::{compute_metrics, Timer};
+use crate::metrics::{backend_code, compute_metrics, Timer};
 use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta};
 use crate::{Error, Result};
 
@@ -71,20 +88,25 @@ impl GemmBackend for NativeBackend {
 pub enum DistGemmAlgo {
     /// Materialize full B on every rank, then sweep panels locally.
     AllGatherB,
-    /// Rotate B row-panels around the ring, overlapping shift and
+    /// Shift B row-panels along the rank chain, overlapping shift and
     /// compute (the default).
     #[default]
     RingPipelined,
+    /// True 2D SUMMA on a p_r × p_c grid: dual pipelined panel
+    /// broadcasts over row/column sub-meshes.
+    Summa2D,
 }
 
 impl DistGemmAlgo {
-    /// Parse the config / routine-param spelling ("ring" | "allgather").
+    /// Parse the config / routine-param spelling
+    /// ("ring" | "allgather" | "summa2d").
     pub fn parse(s: &str) -> Result<DistGemmAlgo> {
         match s {
             "ring" => Ok(DistGemmAlgo::RingPipelined),
             "allgather" => Ok(DistGemmAlgo::AllGatherB),
+            "summa2d" => Ok(DistGemmAlgo::Summa2D),
             other => Err(Error::Config(format!(
-                "dist_gemm algo must be ring|allgather, got {other:?}"
+                "dist_gemm algo must be ring|allgather|summa2d, got {other:?}"
             ))),
         }
     }
@@ -93,6 +115,7 @@ impl DistGemmAlgo {
         match self {
             DistGemmAlgo::AllGatherB => "allgather",
             DistGemmAlgo::RingPipelined => "ring",
+            DistGemmAlgo::Summa2D => "summa2d",
         }
     }
 }
@@ -103,8 +126,13 @@ pub struct DistGemmOptions {
     pub algo: DistGemmAlgo,
     /// Split each owned B panel into sub-panels of at most this many rows
     /// before shifting (finer pipelining granularity); 0 = shift whole
-    /// owned panels (the default, and the 2-panel memory contract).
+    /// owned panels (the default, and the 2-panel memory contract). For
+    /// Summa2D this is the k-panel width per broadcast step (0 =
+    /// ceil(k/p)).
     pub panel_rows: usize,
+    /// Process-grid shape for Summa2D (`"auto"` = most-square
+    /// factorization of the grant size); ignored by the 1D algorithms.
+    pub grid: GridSpec,
 }
 
 /// Per-call observability from the ring path (test hook + metrics feed).
@@ -120,6 +148,30 @@ pub struct RingStats {
     pub wait_s: f64,
     /// Panels shifted through this rank.
     pub shifts: usize,
+}
+
+/// Per-call observability from the SUMMA path (test hook + metrics
+/// feed). The peaks are per-pipeline analytic bounds from the
+/// [`collectives::BcastPipeline`] channel discipline: at most two
+/// schedule-consecutive panels resident per dimension.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SummaStats {
+    /// High-water mark of A-panel doubles resident on this rank.
+    pub peak_a_doubles: usize,
+    /// High-water mark of B-panel doubles resident on this rank.
+    pub peak_b_doubles: usize,
+    /// Time stalled on A-panel broadcasts (row sub-mesh).
+    pub row_bcast_s: f64,
+    /// Time stalled on B-panel broadcasts (column sub-mesh).
+    pub col_bcast_s: f64,
+    /// Time inside the local GEMM kernel.
+    pub compute_s: f64,
+    /// Entry/exit redistribution plus pipeline teardown time.
+    pub wait_s: f64,
+    /// Broadcast steps executed (= ceil(k / panel width)).
+    pub steps: usize,
+    /// The resolved (p_r, p_c) grid.
+    pub grid: (u32, u32),
 }
 
 /// All-gather a row-distributed matrix so every rank holds the full thing.
@@ -183,10 +235,13 @@ pub fn dist_gemm_with_cancel(
     validate_operands(mesh, a, b)?;
     let rank = mesh.rank();
     let m = compute_metrics();
-    let c_local = match opts.algo {
+    m.backend.set(backend_code(backend.name()));
+    let (c_panel, grid) = match opts.algo {
         DistGemmAlgo::AllGatherB => {
             m.allgather_gemms.inc(1);
-            dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows, cancel)?
+            let c_local =
+                dist_gemm_allgather_local(mesh, a, b, backend, opts.panel_rows, cancel)?;
+            (wrap_output(a, b, c_handle, c_local)?, (mesh.size() as u32, 1))
         }
         DistGemmAlgo::RingPipelined => {
             m.ring_gemms.inc(1);
@@ -201,10 +256,39 @@ pub fn dist_gemm_with_cancel(
                 std::time::Duration::from_secs_f64(stats.wait_s),
             );
             m.peak_b_doubles.set_max(stats.peak_b_doubles as i64);
-            c_local
+            (wrap_output(a, b, c_handle, c_local)?, (mesh.size() as u32, 1))
+        }
+        DistGemmAlgo::Summa2D => {
+            m.summa_gemms.inc(1);
+            let (c_panel, stats) = dist_gemm_summa_local(
+                mesh,
+                a,
+                b,
+                c_handle,
+                backend,
+                opts.panel_rows,
+                opts.grid,
+                cancel,
+            )?;
+            for (phase, secs) in [
+                ("row_bcast", stats.row_bcast_s),
+                ("col_bcast", stats.col_bcast_s),
+                ("compute", stats.compute_s),
+                ("wait", stats.wait_s),
+            ] {
+                m.phases.add(
+                    &format!("summa_{phase}_r{rank}"),
+                    std::time::Duration::from_secs_f64(secs),
+                );
+            }
+            m.peak_a_doubles.set_max(stats.peak_a_doubles as i64);
+            m.peak_b_doubles.set_max(stats.peak_b_doubles as i64);
+            (c_panel, stats.grid)
         }
     };
-    wrap_output(a, b, c_handle, c_local)
+    m.grid_r.set(grid.0 as i64);
+    m.grid_c.set(grid.1 as i64);
+    Ok(c_panel)
 }
 
 /// Ring-pipelined distributed GEMM returning the per-rank [`RingStats`] —
@@ -220,6 +304,22 @@ pub fn dist_gemm_ring_with_stats(
     validate_operands(mesh, a, b)?;
     let (c_local, stats) = dist_gemm_ring_local(mesh, a, b, backend, panel_rows, None)?;
     Ok((wrap_output(a, b, c_handle, c_local)?, stats))
+}
+
+/// 2D SUMMA distributed GEMM returning the per-rank [`SummaStats`] — the
+/// prop suite asserts the per-dimension two-panel memory contract
+/// through this.
+pub fn dist_gemm_summa_with_stats(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+    panel_rows: usize,
+    grid: GridSpec,
+) -> Result<(LocalPanel, SummaStats)> {
+    validate_operands(mesh, a, b)?;
+    dist_gemm_summa_local(mesh, a, b, c_handle, backend, panel_rows, grid, None)
 }
 
 fn validate_operands(mesh: &Mesh, a: &LocalPanel, b: &LocalPanel) -> Result<()> {
@@ -307,8 +407,8 @@ fn accumulate_panel(
     backend.gemm_acc(&a_cols, panel, c)
 }
 
-/// Legacy baseline: materialize full B, then run the identical cyclic
-/// panel schedule the ring uses.
+/// Legacy baseline: materialize full B, then run the identical
+/// ascending-k panel schedule the other algorithms use.
 fn dist_gemm_allgather_local(
     mesh: &mut Mesh,
     a: &LocalPanel,
@@ -318,13 +418,11 @@ fn dist_gemm_allgather_local(
     cancel: Option<&CancelToken>,
 ) -> Result<DenseMatrix> {
     let b_full = allgather_matrix(mesh, b)?;
-    let p = mesh.size();
-    let rank = mesh.rank();
+    let p = mesh.size() as u32;
     let layout_b = b.layout();
     let n = b.meta.cols as usize;
     let mut c = DenseMatrix::zeros(a.local_rows(), n);
-    for d in 0..p {
-        let origin = ((rank + d) % p) as u32;
+    for origin in 0..p {
         for (k0, rows) in sub_panels(&layout_b, origin, panel_rows) {
             // Cancelled ranks skip the compute only; the flag is agreed
             // collectively below before anyone returns.
@@ -359,12 +457,27 @@ fn agree_not_cancelled(
     Ok(())
 }
 
-/// The ring: rank r sends panels to r-1 and receives from r+1, so the
-/// panel that originated at rank o reaches rank r after (o − r) mod p
-/// hops — every rank processes origins in cyclic order r, r+1, …, r−1.
-/// Forwarding is handled inside [`collectives::RingPipeline`]: the wire
-/// order is this rank's own panels followed by every received panel
-/// except those of origin `to` (whose last recipient we are).
+/// Peak doubles resident for one pipeline's frame-size sequence. With a
+/// [`collectives::BcastPipeline`] in play at most two
+/// schedule-consecutive frames coexist (compute panel + either the
+/// previous frame draining onto the wire or the receiver's one-frame
+/// read-ahead — see the pipeline's channel-discipline docs); without one
+/// (singleton dimension) panels are materialized one at a time.
+fn peak_frames(sizes: impl Iterator<Item = usize>, piped: bool) -> usize {
+    let sizes: Vec<usize> = sizes.collect();
+    match sizes.len() {
+        0 => 0,
+        1 => sizes[0],
+        _ if !piped => sizes.iter().copied().max().unwrap_or(0),
+        _ => sizes.windows(2).map(|pair| pair[0] + pair[1]).max().unwrap_or(0),
+    }
+}
+
+/// The 1D chain (p×1 SUMMA): every rank walks origins 0..p in ascending
+/// order — so k0 ascends globally — sourcing its own panels into a
+/// [`collectives::BcastPipeline`] over the whole mesh and receiving
+/// everyone else's in schedule order. Store-and-forward gating inside
+/// the pipeline bounds residency at two schedule-consecutive panels.
 fn dist_gemm_ring_local(
     mesh: &mut Mesh,
     a: &LocalPanel,
@@ -380,10 +493,10 @@ fn dist_gemm_ring_local(
     let mut c = DenseMatrix::zeros(a.local_rows(), n);
     let mut stats = RingStats::default();
 
-    // Schedule: (origin, k0, rows) in compute order.
-    let schedule: Vec<(u32, u64, usize)> = (0..p)
-        .flat_map(|d| {
-            let origin = ((rank + d) % p) as u32;
+    // Schedule: (origin, k0, rows) in compute order — ascending origin,
+    // hence globally ascending k0, identical on every rank.
+    let schedule: Vec<(u32, u64, usize)> = (0..p as u32)
+        .flat_map(|origin| {
             sub_panels(&layout_b, origin, panel_rows)
                 .into_iter()
                 .map(move |(k0, rows)| (origin, k0, rows))
@@ -409,46 +522,26 @@ fn dist_gemm_ring_local(
         return Ok((c, stats));
     }
 
-    let to = (rank + p - 1) % p;
-    let from = (rank + 1) % p;
-    let own_frames = sub_panels(&layout_b, rank as u32, panel_rows).len();
-    let remote: Vec<usize> =
-        schedule.iter().filter(|&&(o, _, _)| o as usize != rank).map(|&(_, _, r)| r).collect();
-    let shapes: Vec<collectives::FrameShape> =
-        remote.iter().map(|&rows| collectives::FrameShape::Matrix(rows, n)).collect();
-    // Frames of origin `to` terminate here; everything else is forwarded.
-    let forward_frames = remote.len() - sub_panels(&layout_b, to as u32, panel_rows).len();
+    stats.peak_b_doubles = peak_frames(schedule.iter().map(|&(_, _, r)| r * n), true);
 
-    // Peak B residency, from the pipeline's channel discipline (see
-    // RingPipeline docs): during the own-panel burst, all own copies
-    // (≤ one whole panel) plus the receiver's first in-progress read
-    // coexist; from then on a compute panel coexists with exactly one of
-    // (previous frame draining onto the wire | next frame being read).
-    let own_total: usize = schedule
+    let sub = SubMesh::new(mesh, (0..p).collect())?;
+    let bcast_sched: Vec<(usize, collectives::FrameShape)> = schedule
         .iter()
-        .filter(|&&(o, _, _)| o as usize == rank)
-        .map(|&(_, _, r)| r * n)
-        .sum();
-    let mut peak = if remote.is_empty() { own_total } else { 0 };
-    for i in 0..remote.len() {
-        let prev = if i == 0 { own_total } else { remote[i - 1] * n };
-        let next = remote.get(i + 1).map(|&r| r * n).unwrap_or(0);
-        peak = peak.max(remote[i] * n + prev.max(next));
-    }
-    stats.peak_b_doubles = peak;
-
-    let pipe = collectives::RingPipeline::new(mesh, to, from, own_frames, forward_frames, shapes)?;
+        .map(|&(origin, _, rows)| (origin as usize, collectives::FrameShape::Matrix(rows, n)))
+        .collect();
+    let pipe = collectives::bcast_pipelined(mesh, &sub, &bcast_sched)?;
 
     for &(origin, k0, rows) in &schedule {
         let panel: Arc<DenseMatrix> = if origin as usize == rank {
             let li0 = layout_b.local_index(k0) as usize;
-            let arc = Arc::new(DenseMatrix::from_vec(
-                rows,
-                n,
-                b.local().data()[li0 * n..(li0 + rows) * n].to_vec(),
-            )?);
             let t = Timer::start();
-            pipe.send_own(arc.clone())?;
+            let arc = pipe.send_own(|| {
+                Ok(Arc::new(DenseMatrix::from_vec(
+                    rows,
+                    n,
+                    b.local().data()[li0 * n..(li0 + rows) * n].to_vec(),
+                )?))
+            })?;
             stats.wait_s += t.elapsed_secs();
             arc
         } else {
@@ -459,7 +552,7 @@ fn dist_gemm_ring_local(
         };
         stats.shifts += 1;
 
-        // A cancelled rank must keep the ring protocol alive (send/recv
+        // A cancelled rank must keep the chain protocol alive (send/recv
         // above still ran) — it only skips the local kernel. All ranks
         // agree on the flag after the sweep, below.
         if cancel.is_some_and(|tok| tok.is_cancelled()) {
@@ -474,6 +567,196 @@ fn dist_gemm_ring_local(
     stats.wait_s += t.elapsed_secs();
     agree_not_cancelled(mesh, cancel, "gemm (ring)")?;
     Ok((c, stats))
+}
+
+/// True 2D SUMMA over a p_r × p_c grid.
+///
+/// Entry: A and B are redistributed from RowBlock into block-cyclic 2D
+/// layouts whose cyclic block width along k equals the panel width `w`,
+/// so the owner of step t's panel holds it as one contiguous local
+/// block. Step t broadcasts A's k-columns [t·w, t·w+w) from grid column
+/// `t % p_c` along each grid row, and B's k-rows from grid row
+/// `t % p_r` along each grid column — two concurrent
+/// [`collectives::BcastPipeline`]s per rank, each delivering frames in
+/// ascending-t order — then every rank folds
+/// `C_local += A_panel · B_panel`. Ascending t means globally ascending
+/// k: bit-identical to the 1D algorithms and to a local GEMM. Exit: C
+/// (pure-block × pure-block) is redistributed back to RowBlock.
+///
+/// Cancellation is cooperative per step: a flagged rank keeps both
+/// broadcast pipelines fed (frames still flow) and skips only the local
+/// kernel; the flag is agreed in one scalar all-reduce after the sweep,
+/// so every rank returns [`Error::Cancelled`] together or none does.
+#[allow(clippy::too_many_arguments)]
+fn dist_gemm_summa_local(
+    mesh: &mut Mesh,
+    a: &LocalPanel,
+    b: &LocalPanel,
+    c_handle: u64,
+    backend: &dyn GemmBackend,
+    panel_rows: usize,
+    grid_spec: GridSpec,
+    cancel: Option<&CancelToken>,
+) -> Result<(LocalPanel, SummaStats)> {
+    let p = mesh.size();
+    let rank = mesh.rank() as u32;
+    let grid = grid_spec.resolve(p as u32)?;
+    let (p_r, p_c) = (grid.p_r, grid.p_c);
+    let (m_rows, k, n) = (a.meta.rows, a.meta.cols, b.meta.cols);
+    let w = if panel_rows == 0 { k.div_ceil(p as u64).max(1) } else { panel_rows as u64 };
+    let steps = k.div_ceil(w) as usize;
+    let wt = |t: usize| w.min(k - t as u64 * w) as usize;
+
+    // k-cyclic block width == panel width: the owner's panel for step t
+    // is a contiguous local block at offset (t / q)·w.
+    let dist_a = BlockCyclic2D::new(grid, m_rows, k, m_rows.div_ceil(p_r as u64).max(1), w)?;
+    let dist_b = BlockCyclic2D::new(grid, k, n, w, n.div_ceil(p_c as u64).max(1))?;
+    let (my_r, my_c) = (grid.row_of(rank), grid.col_of(rank));
+
+    let mut stats = SummaStats { steps, grid: (p_r, p_c), ..SummaStats::default() };
+
+    let t0 = Timer::start();
+    let a2 = rowblock_to_grid(mesh, a, &dist_a)?;
+    let b2 = rowblock_to_grid(mesh, b, &dist_b)?;
+    stats.wait_s += t0.elapsed_secs();
+    let a_rows = a2.rows();
+    let b_cols = b2.cols();
+    let mut c = DenseMatrix::zeros(a_rows, b_cols);
+
+    // One pipeline per non-singleton grid dimension. The two use
+    // disjoint neighbor links (row neighbors are rank±1, column
+    // neighbors rank±p_c), so their sender/receiver thread pairs never
+    // share a socket.
+    let row_pipe = if p_c >= 2 && steps > 0 {
+        let sub =
+            SubMesh::new(mesh, (0..p_c).map(|gc| grid.rank_of(my_r, gc) as usize).collect())?;
+        let sched: Vec<(usize, collectives::FrameShape)> = (0..steps)
+            .map(|t| (t % p_c as usize, collectives::FrameShape::Matrix(a_rows, wt(t))))
+            .collect();
+        Some(collectives::bcast_pipelined(mesh, &sub, &sched)?)
+    } else {
+        None
+    };
+    let col_pipe = if p_r >= 2 && steps > 0 {
+        let sub =
+            SubMesh::new(mesh, (0..p_r).map(|gr| grid.rank_of(gr, my_c) as usize).collect())?;
+        let sched: Vec<(usize, collectives::FrameShape)> = (0..steps)
+            .map(|t| (t % p_r as usize, collectives::FrameShape::Matrix(wt(t), b_cols)))
+            .collect();
+        Some(collectives::bcast_pipelined(mesh, &sub, &sched)?)
+    } else {
+        None
+    };
+
+    stats.peak_a_doubles = peak_frames((0..steps).map(|t| a_rows * wt(t)), row_pipe.is_some());
+    stats.peak_b_doubles = peak_frames((0..steps).map(|t| wt(t) * b_cols), col_pipe.is_some());
+
+    for t in 0..steps {
+        let wt_t = wt(t);
+        let a_panel: Arc<DenseMatrix> = if t % p_c as usize == my_c as usize {
+            let lj0 = (t / p_c as usize) * w as usize;
+            let make = || Ok(Arc::new(a2.block_padded(0, lj0, a_rows, wt_t)));
+            match &row_pipe {
+                Some(pipe) => {
+                    let tm = Timer::start();
+                    let got = pipe.send_own(make)?;
+                    stats.row_bcast_s += tm.elapsed_secs();
+                    got
+                }
+                None => make()?,
+            }
+        } else {
+            let tm = Timer::start();
+            let got = row_pipe.as_ref().expect("a non-owner rank implies p_c >= 2").recv()?;
+            stats.row_bcast_s += tm.elapsed_secs();
+            got
+        };
+        let b_panel: Arc<DenseMatrix> = if t % p_r as usize == my_r as usize {
+            let li0 = (t / p_r as usize) * w as usize;
+            let make = || Ok(Arc::new(b2.block_padded(li0, 0, wt_t, b_cols)));
+            match &col_pipe {
+                Some(pipe) => {
+                    let tm = Timer::start();
+                    let got = pipe.send_own(make)?;
+                    stats.col_bcast_s += tm.elapsed_secs();
+                    got
+                }
+                None => make()?,
+            }
+        } else {
+            let tm = Timer::start();
+            let got = col_pipe.as_ref().expect("a non-owner rank implies p_r >= 2").recv()?;
+            stats.col_bcast_s += tm.elapsed_secs();
+            got
+        };
+
+        // A cancelled rank must keep both broadcasts alive (the frame
+        // exchanges above still ran) — it only skips the local kernel.
+        if cancel.is_some_and(|tok| tok.is_cancelled()) {
+            continue;
+        }
+        let tm = Timer::start();
+        backend.gemm_acc(&a_panel, &b_panel, &mut c)?;
+        stats.compute_s += tm.elapsed_secs();
+    }
+
+    let tm = Timer::start();
+    if let Some(pipe) = row_pipe {
+        pipe.finish()?;
+    }
+    if let Some(pipe) = col_pipe {
+        pipe.finish()?;
+    }
+    // C is (pure-block rows) × (pure-block cols): convert back to the
+    // RowBlock panels the 1D world (and wrap_output's contract) expects.
+    let dist_c = BlockCyclic2D::new(
+        grid,
+        m_rows,
+        n,
+        m_rows.div_ceil(p_r as u64).max(1),
+        n.div_ceil(p_c as u64).max(1),
+    )?;
+    let c_meta = MatrixMeta {
+        handle: c_handle,
+        rows: m_rows,
+        cols: n,
+        layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: a.meta.layout.owners.clone() },
+    };
+    let c_panel = grid_to_rowblock(mesh, &c, &dist_c, c_meta)?;
+    stats.wait_s += tm.elapsed_secs();
+    agree_not_cancelled(mesh, cancel, "gemm (summa)")?;
+    Ok((c_panel, stats))
+}
+
+/// Analytic per-rank broadcast volume of one Summa2D sweep: the doubles
+/// rank (0,0) *receives* — every A panel rooted in another grid column
+/// plus every B panel rooted in another grid row. Exact (no measurement
+/// needed), so the bench's bytes-moved ablation works without running
+/// the mesh; multiply by 8 for bytes. Square grids receive O(1/√p) of
+/// what the 1D shapes (1×p / p×1) move.
+pub fn summa_bcast_doubles_per_rank(
+    grid: Grid,
+    m: u64,
+    k: u64,
+    n: u64,
+    panel_rows: usize,
+) -> u64 {
+    let p = grid.size() as u64;
+    let w = if panel_rows == 0 { k.div_ceil(p).max(1) } else { panel_rows as u64 };
+    let dist_a = BlockCyclic2D { grid, rows: m, cols: k, row_block: m.div_ceil(grid.p_r as u64).max(1), col_block: w };
+    let dist_b = BlockCyclic2D { grid, rows: k, cols: n, row_block: w, col_block: n.div_ceil(grid.p_c as u64).max(1) };
+    let (a_rows0, b_cols0) = (dist_a.local_rows(0), dist_b.local_cols(0));
+    let mut total = 0u64;
+    for t in 0..k.div_ceil(w) {
+        let wt = w.min(k - t * w);
+        if t % grid.p_c as u64 != 0 {
+            total += a_rows0 * wt;
+        }
+        if t % grid.p_r as u64 != 0 {
+            total += wt * b_cols0;
+        }
+    }
+    total
 }
 
 /// Distributed Frobenius norm: local partial + scalar all-reduce.
@@ -551,17 +834,21 @@ mod tests {
         assert!(c.max_abs_diff(&want).unwrap() < 1e-10);
     }
 
+    const ALL_ALGOS: [DistGemmAlgo; 3] =
+        [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB, DistGemmAlgo::Summa2D];
+
     #[test]
-    fn both_algorithms_match_local_across_shapes() {
-        // ragged (p does not divide k), p > k, narrow sub-panels
+    fn all_algorithms_match_local_across_shapes() {
+        // ragged (p does not divide k), p > k, narrow sub-panels, prime p
         for (m, k, n, p, w) in [
             (20u64, 7u64, 5u64, 3usize, 0usize),
-            (9, 2, 4, 4, 0), // p > k: some ranks own no B rows
+            (9, 2, 4, 4, 0), // p > k: whole grid rows/cols own no k-block
             (16, 12, 6, 4, 2),
-            (8, 5, 3, 1, 2), // solo mesh
+            (8, 5, 3, 1, 2),  // solo mesh
+            (11, 9, 7, 5, 0), // prime p: summa falls back to 5x1
         ] {
-            for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
-                let opts = DistGemmOptions { algo, panel_rows: w };
+            for algo in ALL_ALGOS {
+                let opts = DistGemmOptions { algo, panel_rows: w, grid: GridSpec::Auto };
                 let (c, want) = run_dist_gemm(m, k, n, p, opts, 7);
                 assert!(
                     c.max_abs_diff(&want).unwrap() < 1e-10,
@@ -572,19 +859,28 @@ mod tests {
     }
 
     #[test]
-    fn ring_and_allgather_are_bitwise_equal() {
+    fn all_algorithms_are_bitwise_equal_to_local() {
+        // The determinism contract: ascending-k panel schedules + the
+        // split-invariant native kernel make every algorithm, grid shape
+        // and panel width produce the exact bits of a local gemm.
         for (m, k, n, p, w) in [(21u64, 13u64, 9u64, 4usize, 0usize), (10, 6, 4, 3, 2)] {
-            let (ring, _) = run_dist_gemm(
-                m, k, n, p,
-                DistGemmOptions { algo: DistGemmAlgo::RingPipelined, panel_rows: w },
+            for algo in ALL_ALGOS {
+                let (c, want) = run_dist_gemm(
+                    m, k, n, p,
+                    DistGemmOptions { algo, panel_rows: w, grid: GridSpec::Auto },
+                    9,
+                );
+                assert_eq!(c, want, "{algo:?} m={m} k={k} n={n} p={p} w={w}");
+            }
+        }
+        // explicit grid shapes, including both 1D degenerations
+        for spec in [GridSpec::Fixed(2, 2), GridSpec::Fixed(1, 4), GridSpec::Fixed(4, 1)] {
+            let (c, want) = run_dist_gemm(
+                21, 13, 9, 4,
+                DistGemmOptions { algo: DistGemmAlgo::Summa2D, panel_rows: 3, grid: spec },
                 9,
             );
-            let (agb, _) = run_dist_gemm(
-                m, k, n, p,
-                DistGemmOptions { algo: DistGemmAlgo::AllGatherB, panel_rows: w },
-                9,
-            );
-            assert_eq!(ring, agb, "m={m} k={k} n={n} p={p} w={w}");
+            assert_eq!(c, want, "summa2d grid {}", spec.name());
         }
     }
 
@@ -627,9 +923,72 @@ mod tests {
     }
 
     #[test]
+    fn summa_memory_contract_and_stats() {
+        let (m, k, n, p) = (24u64, 20u64, 12u64, 4usize);
+        let w = 5usize; // steps = ceil(20/5) = 4
+        let a_full =
+            DenseMatrix::from_vec(m as usize, k as usize, random_matrix(3, m as usize, k as usize))
+                .unwrap();
+        let b_full =
+            DenseMatrix::from_vec(k as usize, n as usize, random_matrix(4, k as usize, n as usize))
+                .unwrap();
+        let a_panels = Arc::new(scatter_matrix(&meta(1, m, k, p as u32), &a_full).unwrap());
+        let b_panels = Arc::new(scatter_matrix(&meta(2, k, n, p as u32), &b_full).unwrap());
+        let results = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank();
+            dist_gemm_summa_with_stats(
+                &mut mesh,
+                &a_panels[rank],
+                &b_panels[rank],
+                3,
+                &NativeBackend,
+                w,
+                GridSpec::Fixed(2, 2),
+            )
+        })
+        .unwrap();
+        // Store-and-forward gating bounds temps at two in-flight panels
+        // per dimension: 2·ceil(m/p_r)·w for A, 2·w·ceil(n/p_c) for B.
+        let a_bound = 2 * (m as usize).div_ceil(2) * w;
+        let b_bound = 2 * w * (n as usize).div_ceil(2);
+        for (panel, stats) in &results {
+            assert_eq!(stats.grid, (2, 2));
+            assert_eq!(stats.steps, (k as usize).div_ceil(w));
+            assert!(
+                stats.peak_a_doubles <= a_bound,
+                "peak A {} > 2·ceil(m/p_r)·w = {a_bound}",
+                stats.peak_a_doubles
+            );
+            assert!(
+                stats.peak_b_doubles <= b_bound,
+                "peak B {} > 2·w·ceil(n/p_c) = {b_bound}",
+                stats.peak_b_doubles
+            );
+            assert_eq!(panel.meta.handle, 3);
+        }
+        let c = gather_matrix(&results.iter().map(|(c, _)| c.clone()).collect::<Vec<_>>()).unwrap();
+        let want = gemm(&a_full, &b_full).unwrap();
+        assert_eq!(c, want, "summa2d must match the local kernel bitwise");
+    }
+
+    #[test]
+    fn summa_byte_model_prefers_square_grids() {
+        // The analytic per-rank broadcast volume that the bench grid sweep
+        // reports: an auto (square) grid must beat both 1D degenerations.
+        let square = summa_bcast_doubles_per_rank(Grid::new(2, 2).unwrap(), 512, 512, 512, 128);
+        let wide = summa_bcast_doubles_per_rank(Grid::new(1, 4).unwrap(), 512, 512, 512, 128);
+        let tall = summa_bcast_doubles_per_rank(Grid::new(4, 1).unwrap(), 512, 512, 512, 128);
+        assert_eq!(square, 131072);
+        assert_eq!(wide, 196608);
+        assert_eq!(tall, 196608);
+        assert!(square < wide && square < tall);
+    }
+
+    #[test]
     fn algo_parsing() {
         assert_eq!(DistGemmAlgo::parse("ring").unwrap(), DistGemmAlgo::RingPipelined);
         assert_eq!(DistGemmAlgo::parse("allgather").unwrap(), DistGemmAlgo::AllGatherB);
+        assert_eq!(DistGemmAlgo::parse("summa2d").unwrap(), DistGemmAlgo::Summa2D);
         assert!(DistGemmAlgo::parse("summa3d").is_err());
         assert_eq!(DistGemmAlgo::default().name(), "ring");
     }
@@ -654,9 +1013,9 @@ mod tests {
     fn empty_matrices_are_fine() {
         // k = 0 (no panels anywhere) and n = 0 (zero-width panels)
         for (m, k, n, p) in [(6u64, 0u64, 4u64, 2usize), (6, 5, 0, 2), (0, 3, 2, 2)] {
-            for algo in [DistGemmAlgo::RingPipelined, DistGemmAlgo::AllGatherB] {
-                let (c, want) =
-                    run_dist_gemm(m, k, n, p, DistGemmOptions { algo, panel_rows: 0 }, 11);
+            for algo in ALL_ALGOS {
+                let opts = DistGemmOptions { algo, panel_rows: 0, grid: GridSpec::Auto };
+                let (c, want) = run_dist_gemm(m, k, n, p, opts, 11);
                 assert_eq!(c, want, "{algo:?} m={m} k={k} n={n}");
             }
         }

@@ -109,6 +109,248 @@ impl Layout {
     }
 }
 
+/// A p_r × p_c process grid over the ranks of a session mesh, row-major:
+/// rank r sits at grid position (r / p_c, r % p_c). The 1D layouts are the
+/// degenerate cases — p×1 is RowBlock's view of the world, 1×p is its
+/// transpose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid {
+    pub p_r: u32,
+    pub p_c: u32,
+}
+
+impl Grid {
+    pub fn new(p_r: u32, p_c: u32) -> Result<Grid> {
+        if p_r == 0 || p_c == 0 {
+            return Err(Error::Shape("process grid needs >= 1 rank per dimension".into()));
+        }
+        Ok(Grid { p_r, p_c })
+    }
+
+    /// The most-square factorization of `p`: p_r·p_c == p with p_r ≥ p_c
+    /// and p_c the largest divisor of p at most √p. Perfect squares give
+    /// √p × √p; primes degenerate to p×1 (the 1D ring shape).
+    pub fn auto(p: u32) -> Grid {
+        assert!(p > 0, "grid over an empty mesh");
+        let mut d = 1u32;
+        let mut c = 1u32;
+        while d * d <= p {
+            if p % d == 0 {
+                c = d;
+            }
+            d += 1;
+        }
+        Grid { p_r: p / c, p_c: c }
+    }
+
+    pub fn size(&self) -> u32 {
+        self.p_r * self.p_c
+    }
+
+    /// Grid row of mesh rank `rank`.
+    pub fn row_of(&self, rank: u32) -> u32 {
+        debug_assert!(rank < self.size());
+        rank / self.p_c
+    }
+
+    /// Grid column of mesh rank `rank`.
+    pub fn col_of(&self, rank: u32) -> u32 {
+        debug_assert!(rank < self.size());
+        rank % self.p_c
+    }
+
+    /// Mesh rank at grid position (r, c).
+    pub fn rank_of(&self, r: u32, c: u32) -> u32 {
+        debug_assert!(r < self.p_r && c < self.p_c);
+        r * self.p_c + c
+    }
+}
+
+/// Config / routine-param spelling of a process grid: `"auto"` (resolve to
+/// the most-square factorization of the grant size) or an explicit
+/// `"RxC"`. Divisibility against the actual rank count is checked at
+/// [`GridSpec::resolve`] time — parsing only validates the spelling, so
+/// the driver can pre-admit requests before the grant size is known.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GridSpec {
+    #[default]
+    Auto,
+    Fixed(u32, u32),
+}
+
+impl GridSpec {
+    pub fn parse(s: &str) -> Result<GridSpec> {
+        if s == "auto" {
+            return Ok(GridSpec::Auto);
+        }
+        let bad = || Error::Config(format!("grid must be \"auto\" or \"RxC\" (e.g. \"2x4\"), got {s:?}"));
+        let (r, c) = s.split_once('x').ok_or_else(bad)?;
+        let p_r: u32 = r.parse().map_err(|_| bad())?;
+        let p_c: u32 = c.parse().map_err(|_| bad())?;
+        if p_r == 0 || p_c == 0 {
+            return Err(bad());
+        }
+        Ok(GridSpec::Fixed(p_r, p_c))
+    }
+
+    /// Concrete grid for a `p`-rank mesh. `Fixed` shapes must tile the
+    /// mesh exactly — a mismatch is a shape error, not a silent fallback.
+    pub fn resolve(&self, p: u32) -> Result<Grid> {
+        match *self {
+            GridSpec::Auto => {
+                if p == 0 {
+                    return Err(Error::Shape("grid over an empty mesh".into()));
+                }
+                Ok(Grid::auto(p))
+            }
+            GridSpec::Fixed(p_r, p_c) => {
+                if p_r as u64 * p_c as u64 != p as u64 {
+                    return Err(Error::Shape(format!(
+                        "grid {p_r}x{p_c} needs {} ranks, mesh has {p}",
+                        p_r as u64 * p_c as u64
+                    )));
+                }
+                Grid::new(p_r, p_c)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            GridSpec::Auto => "auto".into(),
+            GridSpec::Fixed(r, c) => format!("{r}x{c}"),
+        }
+    }
+}
+
+/// 2D block-cyclic distribution of a `rows` × `cols` matrix over a
+/// [`Grid`] — the Elemental `[MC, MR]`-style distribution the paper's
+/// routines assume. Rows are dealt to grid rows in blocks of `row_block`,
+/// columns to grid columns in blocks of `col_block`, both cyclically;
+/// choosing `block = ceil(extent/p)` degenerates to the pure-block
+/// distribution (RowBlock is exactly the p×1 pure-block case).
+///
+/// Every rank in grid row i stores the same set of global rows, and every
+/// rank in grid column j the same set of global columns — which is what
+/// lets SUMMA broadcast A-panels along grid rows and B-panels along grid
+/// columns with no per-rank reshaping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockCyclic2D {
+    pub grid: Grid,
+    pub rows: u64,
+    pub cols: u64,
+    pub row_block: u64,
+    pub col_block: u64,
+}
+
+impl BlockCyclic2D {
+    pub fn new(grid: Grid, rows: u64, cols: u64, row_block: u64, col_block: u64) -> Result<BlockCyclic2D> {
+        if row_block == 0 || col_block == 0 {
+            return Err(Error::Shape("block-cyclic blocks must be >= 1".into()));
+        }
+        Ok(BlockCyclic2D { grid, rows, cols, row_block, col_block })
+    }
+
+    /// Pure-block distribution: one contiguous block per grid row/column.
+    pub fn blocked(grid: Grid, rows: u64, cols: u64) -> BlockCyclic2D {
+        let rb = rows.div_ceil(grid.p_r as u64).max(1);
+        let cb = cols.div_ceil(grid.p_c as u64).max(1);
+        BlockCyclic2D { grid, rows, cols, row_block: rb, col_block: cb }
+    }
+
+    /// Grid row owning global row `i`.
+    pub fn owner_row(&self, i: u64) -> u32 {
+        debug_assert!(i < self.rows);
+        ((i / self.row_block) % self.grid.p_r as u64) as u32
+    }
+
+    /// Grid column owning global column `j`.
+    pub fn owner_col(&self, j: u64) -> u32 {
+        debug_assert!(j < self.cols);
+        ((j / self.col_block) % self.grid.p_c as u64) as u32
+    }
+
+    /// Mesh rank storing element (i, j).
+    pub fn owner(&self, i: u64, j: u64) -> u32 {
+        self.grid.rank_of(self.owner_row(i), self.owner_col(j))
+    }
+
+    /// Local row index of global row `i` on its owning grid row.
+    pub fn local_row(&self, i: u64) -> u64 {
+        let (b, q) = (self.row_block, self.grid.p_r as u64);
+        (i / (b * q)) * b + i % b
+    }
+
+    /// Local column index of global column `j` on its owning grid column.
+    pub fn local_col(&self, j: u64) -> u64 {
+        let (b, q) = (self.col_block, self.grid.p_c as u64);
+        (j / (b * q)) * b + j % b
+    }
+
+    /// Number of global rows stored by grid row `gr`.
+    pub fn local_rows(&self, gr: u32) -> u64 {
+        cyclic_count(self.rows, self.row_block, self.grid.p_r, gr)
+    }
+
+    /// Number of global columns stored by grid column `gc`.
+    pub fn local_cols(&self, gc: u32) -> u64 {
+        cyclic_count(self.cols, self.col_block, self.grid.p_c, gc)
+    }
+
+    /// Global row of local row `li` on grid row `gr` (inverse of
+    /// `local_row` restricted to `gr`).
+    pub fn global_row(&self, gr: u32, li: u64) -> u64 {
+        let b = self.row_block;
+        (li / b * self.grid.p_r as u64 + gr as u64) * b + li % b
+    }
+
+    /// Global column of local column `lj` on grid column `gc`.
+    pub fn global_col(&self, gc: u32, lj: u64) -> u64 {
+        let b = self.col_block;
+        (lj / b * self.grid.p_c as u64 + gc as u64) * b + lj % b
+    }
+
+    /// The `(global_start, width)` column blocks owned by grid column
+    /// `gc`, in local order (each block is contiguous both globally and
+    /// locally — the unit the redistribution kernels copy).
+    pub fn col_blocks_of(&self, gc: u32) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let nb = self.cols.div_ceil(self.col_block);
+        let (b, q) = (self.col_block, self.grid.p_c as u64);
+        (0..nb).filter(move |t| t % q == gc as u64).map(move |t| {
+            let j0 = t * b;
+            (j0, b.min(self.cols - j0))
+        })
+    }
+
+    /// As [`Self::col_blocks_of`], for the row dimension.
+    pub fn row_blocks_of(&self, gr: u32) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let nb = self.rows.div_ceil(self.row_block);
+        let (b, q) = (self.row_block, self.grid.p_r as u64);
+        (0..nb).filter(move |t| t % q == gr as u64).map(move |t| {
+            let i0 = t * b;
+            (i0, b.min(self.rows - i0))
+        })
+    }
+}
+
+/// Elements stored by cyclic slot `s` when `extent` indices are dealt in
+/// blocks of `b` over `q` slots: full blocks except (possibly) the
+/// globally-last one.
+fn cyclic_count(extent: u64, b: u64, q: u32, s: u32) -> u64 {
+    debug_assert!(s < q);
+    if extent == 0 {
+        return 0;
+    }
+    let nb = extent.div_ceil(b);
+    let q = q as u64;
+    let owned = nb / q + u64::from(nb % q > s as u64);
+    let mut count = owned * b;
+    if (nb - 1) % q == s as u64 {
+        count -= nb * b - extent; // last block is short by this much
+    }
+    count
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +434,138 @@ mod tests {
         // Non-replicated layouts keep exclusive ownership semantics.
         let rb = Layout::new(LayoutKind::RowBlock, 10, 2).unwrap();
         assert!(rb.owns(0, 2) && !rb.owns(1, 2));
+    }
+
+    #[test]
+    fn grid_auto_is_most_square() {
+        assert_eq!(Grid::auto(1), Grid { p_r: 1, p_c: 1 });
+        assert_eq!(Grid::auto(4), Grid { p_r: 2, p_c: 2 });
+        assert_eq!(Grid::auto(6), Grid { p_r: 3, p_c: 2 });
+        assert_eq!(Grid::auto(12), Grid { p_r: 4, p_c: 3 });
+        assert_eq!(Grid::auto(36), Grid { p_r: 6, p_c: 6 });
+        // primes fall back to the 1D ring shape
+        assert_eq!(Grid::auto(7), Grid { p_r: 7, p_c: 1 });
+        assert_eq!(Grid::auto(13), Grid { p_r: 13, p_c: 1 });
+    }
+
+    #[test]
+    fn grid_rank_maps_invert() {
+        for (p_r, p_c) in [(1u32, 1u32), (1, 5), (5, 1), (2, 3), (4, 4)] {
+            let g = Grid::new(p_r, p_c).unwrap();
+            let mut seen = vec![false; g.size() as usize];
+            for r in 0..p_r {
+                for c in 0..p_c {
+                    let rank = g.rank_of(r, c);
+                    assert!(rank < g.size());
+                    assert!(!seen[rank as usize], "rank {rank} double-assigned");
+                    seen[rank as usize] = true;
+                    assert_eq!(g.row_of(rank), r);
+                    assert_eq!(g.col_of(rank), c);
+                }
+            }
+        }
+        assert!(Grid::new(0, 3).is_err());
+    }
+
+    #[test]
+    fn grid_spec_parses_and_resolves() {
+        assert_eq!(GridSpec::parse("auto").unwrap(), GridSpec::Auto);
+        assert_eq!(GridSpec::parse("2x3").unwrap(), GridSpec::Fixed(2, 3));
+        assert!(GridSpec::parse("2x").is_err());
+        assert!(GridSpec::parse("x3").is_err());
+        assert!(GridSpec::parse("0x3").is_err());
+        assert!(GridSpec::parse("2*3").is_err());
+        assert!(GridSpec::parse("").is_err());
+        assert_eq!(GridSpec::Auto.resolve(6).unwrap(), Grid { p_r: 3, p_c: 2 });
+        assert_eq!(GridSpec::Fixed(2, 3).resolve(6).unwrap(), Grid { p_r: 2, p_c: 3 });
+        assert!(GridSpec::Fixed(2, 3).resolve(4).is_err());
+        assert_eq!(GridSpec::Fixed(4, 2).name(), "4x2");
+        assert_eq!(GridSpec::default().name(), "auto");
+    }
+
+    fn dists_2d() -> Vec<BlockCyclic2D> {
+        let mut out = Vec::new();
+        for (p_r, p_c) in [(1u32, 1u32), (2, 2), (3, 2), (1, 4), (4, 1)] {
+            let g = Grid::new(p_r, p_c).unwrap();
+            for (rows, cols) in [(1u64, 1u64), (7, 5), (16, 16), (5, 13)] {
+                out.push(BlockCyclic2D::blocked(g, rows, cols));
+                out.push(BlockCyclic2D::new(g, rows, cols, 2, 3).unwrap());
+                out.push(BlockCyclic2D::new(g, rows, cols, 1, 1).unwrap());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn block_cyclic_2d_partitions_and_maps_invert() {
+        for d in dists_2d() {
+            // every element owned exactly once, local/global maps invert
+            let mut owned = vec![0u32; (d.rows * d.cols) as usize];
+            for gr in 0..d.grid.p_r {
+                for li in 0..d.local_rows(gr) {
+                    let i = d.global_row(gr, li);
+                    assert!(i < d.rows, "{d:?}");
+                    assert_eq!(d.owner_row(i), gr, "{d:?}");
+                    assert_eq!(d.local_row(i), li, "{d:?}");
+                }
+            }
+            for gc in 0..d.grid.p_c {
+                for lj in 0..d.local_cols(gc) {
+                    let j = d.global_col(gc, lj);
+                    assert!(j < d.cols, "{d:?}");
+                    assert_eq!(d.owner_col(j), gc, "{d:?}");
+                    assert_eq!(d.local_col(j), lj, "{d:?}");
+                }
+            }
+            for i in 0..d.rows {
+                for j in 0..d.cols {
+                    owned[(i * d.cols + j) as usize] += 1;
+                    assert!(d.owner(i, j) < d.grid.size(), "{d:?}");
+                }
+            }
+            assert!(owned.iter().all(|&c| c == 1));
+            // counts tile the matrix
+            let row_total: u64 = (0..d.grid.p_r).map(|gr| d.local_rows(gr)).sum();
+            let col_total: u64 = (0..d.grid.p_c).map(|gc| d.local_cols(gc)).sum();
+            assert_eq!(row_total, d.rows, "{d:?}");
+            assert_eq!(col_total, d.cols, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn block_cyclic_2d_blocks_enumerate_owned_indices() {
+        for d in dists_2d() {
+            for gc in 0..d.grid.p_c {
+                let mut lj = 0u64;
+                for (j0, w) in d.col_blocks_of(gc) {
+                    assert!(w >= 1 && j0 + w <= d.cols, "{d:?}");
+                    for off in 0..w {
+                        assert_eq!(d.owner_col(j0 + off), gc, "{d:?}");
+                        assert_eq!(d.local_col(j0 + off), lj + off, "{d:?}");
+                    }
+                    lj += w;
+                }
+                assert_eq!(lj, d.local_cols(gc), "{d:?}");
+            }
+            for gr in 0..d.grid.p_r {
+                let total: u64 = d.row_blocks_of(gr).map(|(_, h)| h).sum();
+                assert_eq!(total, d.local_rows(gr), "{d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pure_block_2d_matches_row_block_on_px1() {
+        // RowBlock over p ranks == the p×1 pure-block 2D distribution.
+        let p = 3u32;
+        let l = Layout::new(LayoutKind::RowBlock, 10, p).unwrap();
+        let d = BlockCyclic2D::blocked(Grid::new(p, 1).unwrap(), 10, 4);
+        for i in 0..10u64 {
+            assert_eq!(d.owner_row(i), l.owner_slot(i));
+            assert_eq!(d.local_row(i), l.local_index(i));
+        }
+        for s in 0..p {
+            assert_eq!(d.local_rows(s), l.local_count(s));
+        }
     }
 }

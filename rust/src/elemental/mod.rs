@@ -15,6 +15,6 @@ pub mod redistribute;
 pub mod store;
 pub mod transpose;
 
-pub use layout::Layout;
+pub use layout::{BlockCyclic2D, Grid, GridSpec, Layout};
 pub use panel::LocalPanel;
 pub use store::MatrixStore;

@@ -8,7 +8,8 @@
 //! it is a permutation: no row lost, duplicated, or corrupted).
 
 use crate::comm::Mesh;
-use crate::elemental::{Layout, LocalPanel};
+use crate::elemental::{BlockCyclic2D, Layout, LocalPanel};
+use crate::linalg::DenseMatrix;
 use crate::protocol::{LayoutDesc, LayoutKind, MatrixMeta, Reader, Writer};
 use crate::{Error, Result};
 
@@ -86,6 +87,183 @@ fn place_rows_reader(out: &mut LocalPanel, r: &mut Reader<'_>, n: u32) -> Result
     Ok(())
 }
 
+fn check_grid_dist(mesh: &Mesh, dist: &BlockCyclic2D, rows: u64, cols: u64) -> Result<()> {
+    if dist.grid.size() as usize != mesh.size() {
+        return Err(Error::Shape(format!(
+            "grid {}x{} needs {} ranks, mesh has {}",
+            dist.grid.p_r,
+            dist.grid.p_c,
+            dist.grid.size(),
+            mesh.size()
+        )));
+    }
+    if dist.rows != rows || dist.cols != cols {
+        return Err(Error::Shape(format!(
+            "2D distribution is {}x{}, matrix is {rows}x{cols}",
+            dist.rows, dist.cols
+        )));
+    }
+    Ok(())
+}
+
+/// Scatter this rank's RowBlock panel into a 2D block-cyclic
+/// distribution: returns this rank's dense local block (its owned rows ×
+/// owned columns, both in local order). SPMD — one shifted all-to-all of
+/// (row, column-block) segments over the session mesh, the same exchange
+/// pattern as [`redistribute`] but bucketing contiguous column blocks
+/// instead of whole rows. This is the entry conversion that lets
+/// RowBlock uploads feed grid-distributed routines without any client
+/// change.
+pub fn rowblock_to_grid(
+    mesh: &mut Mesh,
+    panel: &LocalPanel,
+    dist: &BlockCyclic2D,
+) -> Result<DenseMatrix> {
+    if panel.meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape("rowblock_to_grid requires a RowBlock source".into()));
+    }
+    check_grid_dist(mesh, dist, panel.meta.rows, panel.meta.cols)?;
+    let p = mesh.size();
+    let rank = mesh.rank();
+    let (my_r, my_c) = (dist.grid.row_of(rank as u32), dist.grid.col_of(rank as u32));
+    let mut out =
+        DenseMatrix::zeros(dist.local_rows(my_r) as usize, dist.local_cols(my_c) as usize);
+
+    // Column blocks owned by each grid column (contiguous in both global
+    // and local index space — the copy unit).
+    let col_blocks: Vec<Vec<(u64, u64)>> =
+        (0..dist.grid.p_c).map(|c| dist.col_blocks_of(c).collect()).collect();
+
+    let mut buckets: Vec<Writer> = (0..p).map(|_| Writer::new()).collect();
+    let mut counts = vec![0u32; p];
+    for (r, row) in panel.iter_rows() {
+        let dest_row = dist.owner_row(r);
+        let lr = dist.local_row(r) as usize;
+        for c in 0..dist.grid.p_c {
+            let dest = dist.grid.rank_of(dest_row, c) as usize;
+            for &(j0, w) in &col_blocks[c as usize] {
+                let seg = &row[j0 as usize..(j0 + w) as usize];
+                if dest == rank {
+                    let lj = dist.local_col(j0) as usize;
+                    out.row_mut(lr)[lj..lj + w as usize].copy_from_slice(seg);
+                } else {
+                    buckets[dest].put_u64(r);
+                    buckets[dest].put_u64(j0);
+                    buckets[dest].put_f64_slice(seg);
+                    counts[dest] += 1;
+                }
+            }
+        }
+    }
+
+    exchange_segments(mesh, buckets, &counts, |gr, j0, vals| {
+        let lr = dist.local_row(gr) as usize;
+        let lj = dist.local_col(j0) as usize;
+        out.row_mut(lr)[lj..lj + vals.len()].copy_from_slice(vals);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Inverse of [`rowblock_to_grid`]: gather a 2D-distributed matrix back
+/// into RowBlock panels (one per mesh rank, slot = rank). `meta` names
+/// the resulting matrix (its layout must be RowBlock over the mesh) —
+/// this is the exit conversion that hands grid-distributed results back
+/// to the 1D world the client sees.
+pub fn grid_to_rowblock(
+    mesh: &mut Mesh,
+    local: &DenseMatrix,
+    dist: &BlockCyclic2D,
+    meta: MatrixMeta,
+) -> Result<LocalPanel> {
+    if meta.layout.kind != LayoutKind::RowBlock {
+        return Err(Error::Shape("grid_to_rowblock requires a RowBlock target".into()));
+    }
+    check_grid_dist(mesh, dist, meta.rows, meta.cols)?;
+    let p = mesh.size();
+    if meta.layout.owners.len() != p {
+        return Err(Error::Shape(format!(
+            "grid_to_rowblock: {} owners vs mesh size {p}",
+            meta.layout.owners.len()
+        )));
+    }
+    let rank = mesh.rank();
+    let (my_r, my_c) = (dist.grid.row_of(rank as u32), dist.grid.col_of(rank as u32));
+    if local.shape() != (dist.local_rows(my_r) as usize, dist.local_cols(my_c) as usize) {
+        return Err(Error::Shape(format!(
+            "grid_to_rowblock: local block is {}x{}, distribution says {}x{}",
+            local.rows(),
+            local.cols(),
+            dist.local_rows(my_r),
+            dist.local_cols(my_c)
+        )));
+    }
+    let target = Layout::new(LayoutKind::RowBlock, dist.rows, p as u32)?;
+    let mut out = DenseMatrix::zeros(target.local_count(rank as u32) as usize, dist.cols as usize);
+
+    let my_col_blocks: Vec<(u64, u64)> = dist.col_blocks_of(my_c).collect();
+    let mut buckets: Vec<Writer> = (0..p).map(|_| Writer::new()).collect();
+    let mut counts = vec![0u32; p];
+    for li in 0..local.rows() {
+        let gr = dist.global_row(my_r, li as u64);
+        let dest = target.owner_slot(gr) as usize;
+        let mut lj = 0usize;
+        for &(j0, w) in &my_col_blocks {
+            let seg = &local.row(li)[lj..lj + w as usize];
+            if dest == rank {
+                let out_r = target.local_index(gr) as usize;
+                out.row_mut(out_r)[j0 as usize..(j0 + w) as usize].copy_from_slice(seg);
+            } else {
+                buckets[dest].put_u64(gr);
+                buckets[dest].put_u64(j0);
+                buckets[dest].put_f64_slice(seg);
+                counts[dest] += 1;
+            }
+            lj += w as usize;
+        }
+    }
+
+    exchange_segments(mesh, buckets, &counts, |gr, j0, vals| {
+        let out_r = target.local_index(gr) as usize;
+        out.row_mut(out_r)[j0 as usize..j0 as usize + vals.len()].copy_from_slice(vals);
+        Ok(())
+    })?;
+    LocalPanel::from_local(meta, rank as u32, out)
+}
+
+/// The shifted all-to-all under both 2D conversions: send bucket `to` at
+/// step s while receiving from `rank - s`, then feed every received
+/// (global row, global col start, values) segment to `place`.
+fn exchange_segments(
+    mesh: &mut Mesh,
+    mut buckets: Vec<Writer>,
+    counts: &[u32],
+    mut place: impl FnMut(u64, u64, &[f64]) -> Result<()>,
+) -> Result<()> {
+    let p = mesh.size();
+    let rank = mesh.rank();
+    for s in 1..p {
+        let to = (rank + s) % p;
+        let from = (rank + p - s) % p;
+        let mut payload = Writer::new();
+        payload.put_u32(counts[to]);
+        let body = std::mem::take(&mut buckets[to]).into_bytes();
+        payload.reserve(body.len());
+        let mut full = payload.into_bytes();
+        full.extend_from_slice(&body);
+        let got = mesh.exchange(to, &full, from)?;
+        let mut r = Reader::new(&got);
+        let n = r.get_u32()?;
+        for _ in 0..n {
+            let gr = r.get_u64()?;
+            let j0 = r.get_u64()?;
+            let vals = r.get_f64_slice()?;
+            place(gr, j0, &vals)?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +315,108 @@ mod tests {
     #[test]
     fn uneven_rows() {
         run_redistribution(17, 5, 4, LayoutKind::RowBlock, LayoutKind::RowCyclic);
+    }
+
+    use crate::elemental::layout::Grid;
+
+    /// Scatter RowBlock → 2D, check every local element against the full
+    /// matrix through the distribution maps, then gather back and demand
+    /// bitwise identity (redistribution must be a pure permutation).
+    fn roundtrip_2d(rows: u64, cols: u64, dist_of: impl Fn(Grid) -> BlockCyclic2D, p_r: u32, p_c: u32) {
+        let p = (p_r * p_c) as usize;
+        let meta = MatrixMeta {
+            handle: 1,
+            rows,
+            cols,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() },
+        };
+        let full = DenseMatrix::from_vec(
+            rows as usize,
+            cols as usize,
+            random_matrix(11, rows as usize, cols as usize),
+        )
+        .unwrap();
+        let panels = Arc::new(scatter_matrix(&meta, &full).unwrap());
+        let dist = dist_of(Grid::new(p_r, p_c).unwrap());
+        let full2 = full.clone();
+        let meta2 = meta.clone();
+        let out = run_mesh(p, move |mut mesh| {
+            let rank = mesh.rank() as u32;
+            let local = rowblock_to_grid(&mut mesh, &panels[rank as usize], &dist)?;
+            let (my_r, my_c) = (dist.grid.row_of(rank), dist.grid.col_of(rank));
+            assert_eq!(
+                local.shape(),
+                (dist.local_rows(my_r) as usize, dist.local_cols(my_c) as usize)
+            );
+            for li in 0..local.rows() {
+                for lj in 0..local.cols() {
+                    let (i, j) = (
+                        dist.global_row(my_r, li as u64),
+                        dist.global_col(my_c, lj as u64),
+                    );
+                    assert_eq!(
+                        local.get(li, lj),
+                        full2.get(i as usize, j as usize),
+                        "rank {rank} ({li},{lj}) <- ({i},{j})"
+                    );
+                }
+            }
+            let back_meta = MatrixMeta { handle: 2, ..meta2.clone() };
+            grid_to_rowblock(&mut mesh, &local, &dist, back_meta)
+        })
+        .unwrap();
+        let back = gather_matrix(&out).unwrap();
+        assert_eq!(back, full, "{p_r}x{p_c} {rows}x{cols}");
+        assert_eq!(out[0].meta.handle, 2);
+    }
+
+    #[test]
+    fn rowblock_to_grid_and_back_pure_block() {
+        for (p_r, p_c) in [(1u32, 1u32), (2, 2), (3, 2), (1, 4), (4, 1)] {
+            for (rows, cols) in [(17u64, 9u64), (5, 13), (3, 3)] {
+                roundtrip_2d(rows, cols, |g| BlockCyclic2D::blocked(g, rows, cols), p_r, p_c);
+            }
+        }
+    }
+
+    #[test]
+    fn rowblock_to_grid_and_back_block_cyclic() {
+        // narrow cyclic blocks (the SUMMA A/B shapes) and ragged tails
+        for (p_r, p_c) in [(2u32, 2u32), (3, 2), (2, 3)] {
+            roundtrip_2d(17, 11, |g| BlockCyclic2D::new(g, 17, 11, 3, 2).unwrap(), p_r, p_c);
+            roundtrip_2d(7, 19, |g| BlockCyclic2D::new(g, 7, 19, 1, 4).unwrap(), p_r, p_c);
+        }
+    }
+
+    #[test]
+    fn grid_conversions_handle_empty_and_tiny() {
+        // degenerate extents: fewer rows/cols than grid dimensions, and
+        // empty matrices
+        roundtrip_2d(1, 1, |g| BlockCyclic2D::blocked(g, 1, 1), 2, 2);
+        roundtrip_2d(0, 4, |g| BlockCyclic2D::blocked(g, 0, 4), 2, 2);
+        roundtrip_2d(4, 0, |g| BlockCyclic2D::blocked(g, 4, 0), 2, 2);
+        roundtrip_2d(2, 3, |g| BlockCyclic2D::blocked(g, 2, 3), 3, 2);
+    }
+
+    #[test]
+    fn grid_conversion_shape_errors() {
+        let meta = MatrixMeta {
+            handle: 1,
+            rows: 6,
+            cols: 4,
+            layout: LayoutDesc { kind: LayoutKind::RowBlock, owners: vec![0, 1] },
+        };
+        let full = DenseMatrix::from_vec(6, 4, random_matrix(1, 6, 4)).unwrap();
+        let panels = Arc::new(scatter_matrix(&meta, &full).unwrap());
+        run_mesh(2, move |mut mesh| {
+            // wrong grid size for the mesh
+            let bad = BlockCyclic2D::blocked(Grid::new(2, 2).unwrap(), 6, 4);
+            assert!(rowblock_to_grid(&mut mesh, &panels[mesh.rank()], &bad).is_err());
+            // wrong matrix extent
+            let wrong = BlockCyclic2D::blocked(Grid::new(2, 1).unwrap(), 7, 4);
+            assert!(rowblock_to_grid(&mut mesh, &panels[mesh.rank()], &wrong).is_err());
+            Ok(())
+        })
+        .unwrap();
     }
 }

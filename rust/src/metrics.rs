@@ -306,9 +306,22 @@ pub struct ComputeMetrics {
     /// ring GEMM (the ≤ 2·ceil(k/p)·n memory contract — asserted by the
     /// prop suite via the `dist_gemm` stats hook).
     pub peak_b_doubles: GaugeHandle,
+    /// High-water mark of A-panel doubles resident per rank during a
+    /// SUMMA row broadcast (≤ 2·ceil(m/p_r)·w — the dual of the bound
+    /// above; only the 2D algorithm buffers A panels).
+    pub peak_a_doubles: GaugeHandle,
     /// Pre-registered algorithm selection counts (per dist_gemm call).
     pub ring_gemms: CounterHandle,
     pub allgather_gemms: CounterHandle,
+    pub summa_gemms: CounterHandle,
+    /// Registry gauges describing the active compute configuration:
+    /// the compute backend (see [`backend_code`]) and the process grid
+    /// the most recent dist_gemm ran on (r × c; 1D algorithms report
+    /// p × 1). Exported as "compute.backend"/"compute.grid_r"/
+    /// "compute.grid_c" in `FetchTelemetry`.
+    pub backend: GaugeHandle,
+    pub grid_r: GaugeHandle,
+    pub grid_c: GaugeHandle,
     /// Legacy string-keyed view over the counters above (same cells).
     pub counters: CountersView,
 }
@@ -319,11 +332,29 @@ impl ComputeMetrics {
         ComputeMetrics {
             phases: PhasesView::new(registry.clone()),
             peak_b_doubles: registry.gauge("peak_b_doubles"),
+            peak_a_doubles: registry.gauge("peak_a_doubles"),
             ring_gemms: registry.counter("ring_gemms"),
             allgather_gemms: registry.counter("allgather_gemms"),
+            summa_gemms: registry.counter("summa_gemms"),
+            backend: registry.gauge("backend"),
+            grid_r: registry.gauge("grid_r"),
+            grid_c: registry.gauge("grid_c"),
             counters: CountersView::new(registry.clone()),
             registry,
         }
+    }
+}
+
+/// Numeric code for a compute backend name, for the "compute.backend"
+/// telemetry gauge (gauges are integers): 0 = the native kernel,
+/// 1 = any PJRT-prefixed accelerator backend, 2 = anything else.
+pub fn backend_code(name: &str) -> i64 {
+    if name == "native" {
+        0
+    } else if name.starts_with("pjrt") {
+        1
+    } else {
+        2
     }
 }
 
@@ -501,6 +532,26 @@ mod tests {
         assert!(m.phases.get_secs("ring_compute_r0") > 0.0);
         assert!(m.peak_b_doubles.get() >= 1024);
         assert!(m.counters.get("ring_gemms") >= 1);
+        m.peak_a_doubles.set_max(512);
+        m.summa_gemms.inc(1);
+        assert!(m.peak_a_doubles.get() >= 512);
+        assert!(m.counters.get("summa_gemms") >= 1);
+        // Grid/backend gauges on a private bundle — concurrent dist_gemm
+        // tests write the process-wide one.
+        let own = ComputeMetrics::new();
+        own.backend.set(backend_code("native"));
+        own.grid_r.set(2);
+        own.grid_c.set(2);
+        assert_eq!(own.backend.get(), 0);
+        assert_eq!((own.grid_r.get(), own.grid_c.get()), (2, 2));
+    }
+
+    #[test]
+    fn backend_codes() {
+        assert_eq!(backend_code("native"), 0);
+        assert_eq!(backend_code("pjrt-cpu"), 1);
+        assert_eq!(backend_code("pjrt"), 1);
+        assert_eq!(backend_code("something-else"), 2);
     }
 
     #[test]

@@ -85,6 +85,13 @@ impl WorkerTelemetry {
             registry: self.registry.snapshot(),
             spans: self.sink.snapshot(),
         };
+        // The compute-plane bundle (backend/grid gauges, per-rank gemm
+        // phases, peak panel footprints) lives in a process-wide registry;
+        // fold it in so `fetch_telemetry()` shows it under
+        // `w<id>.compute.*` even when workers are separate processes.
+        report
+            .registry
+            .merge(&crate::metrics::compute_metrics().registry.snapshot().prefixed("compute."));
         let dropped = self.sink.dropped();
         if dropped > 0 {
             report.registry.counters.insert("spans_dropped".into(), dropped);
@@ -225,6 +232,9 @@ pub fn run_worker(
 
     // Backend: PJRT Pallas tiles unless configured (or forced) native.
     let (backend, runtime) = build_backend(&cfg);
+    // Advertise the resolved backend in the compute telemetry registry so
+    // `fetch_telemetry()` (and alchemist_top) show it before any gemm runs.
+    crate::metrics::compute_metrics().backend.set(crate::metrics::backend_code(backend.name()));
 
     let mut registry = LibraryRegistry::new();
     let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();

@@ -48,10 +48,11 @@ fn gemm_via_alchemist_matches_local() {
 }
 
 #[test]
-fn gemm_ring_and_allgather_end_to_end() {
-    // Full driver-session path for both distributed algorithms, plus a
-    // narrow-panel ring: all three must agree bitwise with each other
-    // (identical local schedules) and match the local reference.
+fn gemm_all_algorithms_end_to_end() {
+    // Full driver-session path for all three distributed algorithms,
+    // plus a narrow-panel ring and explicit summa2d grid shapes: every
+    // variant must agree bitwise with the others (identical globally
+    // ascending-k schedules) and with the local reference.
     let server = start_server(&native_config(4)).unwrap();
     let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm_algos").unwrap();
     ac.request_workers(4).unwrap();
@@ -71,12 +72,51 @@ fn gemm_ring_and_allgather_end_to_end() {
     let c_narrow = ac
         .fetch_dense(&wrappers::gemm_with_algo(&ac, &al_a, &al_b, "ring", 2).unwrap())
         .unwrap();
+    let c_summa = ac
+        .fetch_dense(&wrappers::gemm_with_algo(&ac, &al_a, &al_b, "summa2d", 0).unwrap())
+        .unwrap();
+    let c_2x2 = ac
+        .fetch_dense(&wrappers::gemm_with_grid(&ac, &al_a, &al_b, "2x2", 3).unwrap())
+        .unwrap();
+    let c_1x4 = ac
+        .fetch_dense(&wrappers::gemm_with_grid(&ac, &al_a, &al_b, "1x4", 0).unwrap())
+        .unwrap();
 
     assert_eq!(c_ring, c_agb, "ring vs allgather through a real session");
     assert_eq!(c_ring, c_narrow, "panel width must not change bits (native kernel fold)");
+    assert_eq!(c_ring, c_summa, "summa2d (auto grid) vs ring through a real session");
+    assert_eq!(c_ring, c_2x2, "summa2d 2x2 grid must not change bits");
+    assert_eq!(c_ring, c_1x4, "summa2d 1x4 degeneration must not change bits");
     let want = gemm(&a, &b).unwrap();
     assert!(c_ring.max_abs_diff(&want).unwrap() < 1e-10);
 
+    // a fixed grid that does not tile the worker group is rejected
+    // server-side at run time (spelling passes pre-admission)
+    assert!(wrappers::gemm_with_grid(&ac, &al_a, &al_b, "3x2", 0).is_err());
+    // and a malformed spelling is rejected before admission
+    assert!(wrappers::gemm_with_grid(&ac, &al_a, &al_b, "0x4", 0).is_err());
+
+    ac.stop().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn gemm_via_config_selected_summa_grid() {
+    // `[compute] dist_gemm_algo = "summa2d"` + `grid = "2x2"` reach the
+    // workers through the launcher/config plumbing.
+    let mut cfg = native_config(4);
+    cfg.compute.dist_gemm_algo = "summa2d".into();
+    cfg.compute.grid = "2x2".into();
+    let server = start_server(&cfg).unwrap();
+    let mut ac = AlchemistContext::connect(&server.driver_addr, "it_gemm_grid_cfg").unwrap();
+    ac.request_workers(4).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    let a = rand(31, 22, 10);
+    let b = rand(32, 10, 7);
+    let al_a = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+    let al_b = ac.send_dense(&b, LayoutKind::RowBlock).unwrap();
+    let c = ac.fetch_dense(&wrappers::gemm(&ac, &al_a, &al_b).unwrap()).unwrap();
+    assert_eq!(c, gemm(&a, &b).unwrap(), "config-selected summa2d must match local bits");
     ac.stop().unwrap();
     server.shutdown();
 }

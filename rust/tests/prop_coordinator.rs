@@ -179,30 +179,38 @@ fn dist_ops_match_local_on_random_shapes() {
 }
 
 #[test]
-fn ring_gemm_bitwise_equals_allgather_and_respects_memory_bound() {
-    // Across ragged shapes (p ∤ k), p > k, single-rank meshes, empty
-    // matrices and random sub-panel widths:
-    //  * RingPipelined and AllGatherB produce *bit-identical* C (they
-    //    run the same local schedule; only the communication differs);
-    //  * rank 0's C panel is bit-identical to the local gemm (its cyclic
-    //    origin order IS ascending k, and the native kernel's per-element
-    //    fold is split-invariant);
-    //  * all panels match local gemm within round-off (other ranks
-    //    accumulate k in a rotated order);
-    //  * the ring never holds more than 2·ceil(k/p)·n B doubles.
+fn all_gemm_algorithms_bitwise_equal_and_respect_memory_bounds() {
+    // Across ragged shapes (p ∤ k), p > k (k < grid), prime p (forcing
+    // 1D grid factorings), single-rank meshes, empty matrices, random
+    // sub-panel widths and random p_r × p_c grids:
+    //  * RingPipelined, AllGatherB and Summa2D produce *bit-identical*
+    //    C (all three run the globally ascending-k panel schedule; only
+    //    the communication pattern differs);
+    //  * every rank's C panel is bit-identical to the local gemm (the
+    //    native kernel's per-element fold is split-invariant);
+    //  * the ring never holds more than 2·ceil(k/p)·n B doubles, and
+    //    summa2d's store-and-forward gating bounds each dimension at
+    //    two in-flight panels.
     use alchemist::elemental::dist_gemm::{
-        dist_gemm_ring_with_stats, dist_gemm_with, DistGemmAlgo, DistGemmOptions, NativeBackend,
+        dist_gemm_ring_with_stats, dist_gemm_summa_with_stats, dist_gemm_with, DistGemmAlgo,
+        DistGemmOptions, NativeBackend,
     };
     use alchemist::comm::run_mesh;
+    use alchemist::elemental::GridSpec;
     use std::sync::Arc;
 
-    check("elemental: ring vs allgather dist_gemm", 10, |rng| {
+    check("elemental: ring vs allgather vs summa2d dist_gemm", 10, |rng| {
         let p = int_in(rng, 1, 5) as usize;
         // deliberately include degenerate shapes: k < p, k = 0, n = 0
         let m = int_in(rng, 0, 30);
         let k = int_in(rng, 0, 16);
         let n = int_in(rng, 0, 12);
         let w = int_in(rng, 0, 5) as usize; // 0 = whole panels
+        // random valid grid factoring of p (prime p only admits 1D)
+        let divs: Vec<usize> = (1..=p).filter(|d| p % d == 0).collect();
+        let p_r = divs[rng.next_range(divs.len() as u64) as usize];
+        let p_c = p / p_r;
+        let grid = GridSpec::Fixed(p_r as u32, p_c as u32);
         let desc = LayoutDesc { kind: LayoutKind::RowBlock, owners: (0..p as u32).collect() };
         let a_full = DenseMatrix::from_fn(m as usize, k as usize, |_, _| rng.next_signed());
         let b_full = DenseMatrix::from_fn(k as usize, n as usize, |_, _| rng.next_signed());
@@ -220,8 +228,15 @@ fn ring_gemm_bitwise_equals_allgather_and_respects_memory_bound() {
         let (ap, bp) = (a_panels.clone(), b_panels.clone());
         let agb = run_mesh(p, move |mut mesh| {
             let r = mesh.rank();
-            let opts = DistGemmOptions { algo: DistGemmAlgo::AllGatherB, panel_rows: w };
+            let opts =
+                DistGemmOptions { algo: DistGemmAlgo::AllGatherB, panel_rows: w, grid: GridSpec::Auto };
             dist_gemm_with(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, &opts)
+        })
+        .map_err(|e| e.to_string())?;
+        let (ap, bp) = (a_panels.clone(), b_panels.clone());
+        let summa = run_mesh(p, move |mut mesh| {
+            let r = mesh.rank();
+            dist_gemm_summa_with_stats(&mut mesh, &ap[r], &bp[r], 3, &NativeBackend, w, grid)
         })
         .map_err(|e| e.to_string())?;
 
@@ -245,21 +260,38 @@ fn ring_gemm_bitwise_equals_allgather_and_respects_memory_bound() {
                 ));
             }
         }
-
-        let want = alchemist::linalg::gemm::gemm(&a_full, &b_full).map_err(|e| e.to_string())?;
-        // rank 0: ascending-k schedule -> exact bits vs local gemm
-        let r0 = &ring[0].0;
-        for li in 0..r0.local_rows() {
-            let gr = r0.layout().global_index(0, li as u64) as usize;
-            if r0.local().row(li) != want.row(gr) {
-                return Err(format!("rank0 bits differ from local gemm at row {gr} (k={k} n={n} p={p} w={w})"));
+        // summa2d: same bits, and ≤ 2 in-flight panels per grid dimension
+        let w_eff = if w == 0 { ceil.max(1) } else { w };
+        let a_bound = 2 * (m as usize).div_ceil(p_r) * w_eff.min(k as usize).max(1);
+        let b_bound = 2 * w_eff.min(k as usize).max(1) * (n as usize).div_ceil(p_c);
+        for ((rpanel, _), (spanel, stats)) in ring.iter().zip(&summa) {
+            if rpanel.local() != spanel.local() {
+                return Err(format!(
+                    "ring != summa2d bits at m={m} k={k} n={n} p={p} w={w} grid={p_r}x{p_c}"
+                ));
+            }
+            if stats.grid != (p_r as u32, p_c as u32) {
+                return Err(format!("summa grid {:?} != {p_r}x{p_c}", stats.grid));
+            }
+            if stats.steps != (k as usize).div_ceil(w_eff) {
+                return Err(format!("summa steps {} at k={k} w_eff={w_eff}", stats.steps));
+            }
+            if stats.peak_a_doubles > a_bound || stats.peak_b_doubles > b_bound {
+                return Err(format!(
+                    "summa peaks ({}, {}) exceed ({a_bound}, {b_bound}) at m={m} k={k} n={n} \
+                     grid={p_r}x{p_c} w={w}",
+                    stats.peak_a_doubles, stats.peak_b_doubles
+                ));
             }
         }
-        // all ranks: tolerance vs local
+
+        let want = alchemist::linalg::gemm::gemm(&a_full, &b_full).map_err(|e| e.to_string())?;
+        // every rank: the globally ascending-k schedule makes the gathered
+        // C bit-identical to the local gemm, not merely close
         let c_panels: Vec<_> = ring.iter().map(|(c, _)| c.clone()).collect();
         let c = gather_matrix(&c_panels).map_err(|e| e.to_string())?;
-        if m > 0 && n > 0 && c.max_abs_diff(&want).map_err(|e| e.to_string())? > 1e-9 {
-            return Err(format!("ring dist_gemm off vs local at m={m} k={k} n={n} p={p}"));
+        if c != want {
+            return Err(format!("ring bits differ from local gemm at m={m} k={k} n={n} p={p} w={w}"));
         }
         Ok(())
     });

@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
 # Snapshot the perf-trajectory benchmarks into a single JSON file
-# (BENCH_PR8.json at the repo root).
+# (BENCH_PR9.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
 # Spark comparison), ablate_collectives (all-reduce + barrier),
 # ablate_scheduler (submission disciplines + the pool_recovery and
 # PR 8 fault_storm fault-injection scenarios), and the table2/table3 transfer benches
 # (node grid + the PR 7 transport x compression sweep: tcp / uds /
-# striped-N x none / delta / f32), each with its machine-readable
+# striped-N x none / delta / f32), and ablate_gemm_backend (the PR 9
+# summa2d process-grid sweep), each with its machine-readable
 # --json output, then captures a live telemetry snapshot (merged
 # registry + span timeline) from a headless alchemist_top run, and
 # merges everything.
@@ -17,7 +18,7 @@
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR8.json}"
+OUT="${1:-BENCH_PR9.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -52,6 +53,11 @@ cargo bench --bench table3_transfer_wide -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/transfer_wide.json"
 
+echo "== bench_snapshot: ablate_gemm_backend + grid sweep (reps=$REPS) =="
+cargo bench --bench ablate_gemm_backend -- \
+    --set "bench.reps=$REPS" \
+    --json "$TMP/gemm_backend.json"
+
 echo "== bench_snapshot: telemetry snapshot (alchemist_top --headless) =="
 cargo run --release --example alchemist_top -- \
     --headless --jobs 4 --snapshot-json "$TMP/telemetry.json"
@@ -69,6 +75,7 @@ DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
     printf '  "ablate_scheduler": %s,\n' "$(cat "$TMP/scheduler.json")"
     printf '  "table2_transfer_tall": %s,\n' "$(cat "$TMP/transfer_tall.json")"
     printf '  "table3_transfer_wide": %s,\n' "$(cat "$TMP/transfer_wide.json")"
+    printf '  "ablate_gemm_backend": %s,\n' "$(cat "$TMP/gemm_backend.json")"
     printf '  "telemetry": %s\n' "$(cat "$TMP/telemetry.json")"
     printf '}\n'
 } > "$ROOT/$OUT"

@@ -152,6 +152,59 @@ class Checker:
                     ["table", "transport", "compression", "secs", "mb_per_s"],
                     f"{section}.transport_sweep[{i}]",
                 )
+        # PR 9: ablate_gemm_backend emits the summa2d process-grid sweep.
+        if "ablate_gemm_backend" in doc:
+            self.rows(
+                doc,
+                "ablate_gemm_backend",
+                ["scenario"],
+                ["p_r", "p_c", "ranks", "n", "secs", "per_rank_bcast_bytes", "peak_tmp_doubles"],
+            )
+            sweeps = [
+                r
+                for r in doc["ablate_gemm_backend"] or []
+                if isinstance(r, dict) and r.get("scenario") == "grid_sweep"
+            ]
+            if not sweeps:
+                self.err("ablate_gemm_backend", "expected at least one grid_sweep row")
+            for i, row in enumerate(sweeps):
+                where = f"ablate_gemm_backend.grid_sweep[{i}]"
+                self.require_keys(
+                    row,
+                    [
+                        "backend",
+                        "grid",
+                        "p_r",
+                        "p_c",
+                        "ranks",
+                        "n",
+                        "secs",
+                        "per_rank_bcast_bytes",
+                        "peak_tmp_doubles",
+                    ],
+                    where,
+                )
+            # The acceptance claim the snapshot carries: on a square
+            # problem the auto/square grid moves fewer bytes per rank
+            # than the 1xp degeneration at the same (n, ranks).
+            by_shape = {}
+            for row in sweeps:
+                if not isinstance(row, dict) or not is_num_or_null(row.get("per_rank_bcast_bytes")):
+                    continue
+                if row.get("per_rank_bcast_bytes") is None:
+                    continue
+                key = (row.get("n"), row.get("ranks"))
+                by_shape.setdefault(key, {})[(row.get("p_r"), row.get("p_c"))] = row[
+                    "per_rank_bcast_bytes"
+                ]
+            for key, grids in by_shape.items():
+                flat = [v for (pr, pc), v in grids.items() if pr == 1 or pc == 1]
+                square = [v for (pr, pc), v in grids.items() if pr != 1 and pc != 1]
+                if flat and square and min(square) >= min(flat):
+                    self.err(
+                        f"ablate_gemm_backend.grid_sweep{key}",
+                        f"square grid should move fewer bytes/rank than 1xp: {grids}",
+                    )
         if "telemetry" in doc:
             self.telemetry(doc)
         return self.errors
