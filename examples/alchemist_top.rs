@@ -64,6 +64,14 @@ fn render(report: &TelemetryReport) {
         g("sched.queue_depth"),
     );
     println!(
+        "  qos: queue int/batch/be {}/{}/{} | {} preemption(s), {} backfill(s)",
+        g("sched.queue_depth_interactive"),
+        g("sched.queue_depth_batch"),
+        g("sched.queue_depth_best_effort"),
+        c("sched.preemptions"),
+        c("sched.backfills"),
+    );
+    println!(
         "  transfer: {} rows out ({} B), {} rows in ({} B)",
         c("transfer.rows_sent"),
         c("transfer.bytes_sent"),

@@ -21,10 +21,17 @@
 //! fixed batch of upload→fro_norm jobs complete under the storm, plus
 //! how long the pool takes to return to full strength afterwards.
 //!
+//! A sixth scenario, `mixed_tenant`, interleaves whole-pool batch
+//! tenants with single-worker interactive tenants and reports p50/p99
+//! admission queue wait per QoS class, once with the v11 policy
+//! (weighted fair share + backfill + preemption) and once in v10-style
+//! FIFO — the interactive tail should collapse while batch throughput
+//! stays within a few percent.
+//!
 //! Run: `cargo bench --bench ablate_scheduler [-- --set bench.reps=1]
 //!       [--json out.json]`
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use alchemist::bench_support::{bench_config, harness::Table, json_out_path, write_json_rows};
@@ -34,6 +41,7 @@ use alchemist::fault::{parse_sites, FaultPlane};
 use alchemist::linalg::DenseMatrix;
 use alchemist::metrics::Timer;
 use alchemist::protocol::LayoutKind;
+use alchemist::sched::QosClass;
 use alchemist::server::start_server;
 use alchemist::workload::random_matrix;
 
@@ -202,6 +210,103 @@ fn run_fault_storm(seed: u64) -> alchemist::Result<(usize, f64, f64, bool)> {
     Ok((completed, secs, recovery_secs, timed_out))
 }
 
+struct MixedStats {
+    interactive_waits_ms: Vec<f64>,
+    batch_waits_ms: Vec<f64>,
+    batch_jobs_per_s: f64,
+    interactive_jobs_per_s: f64,
+}
+
+fn percentile_ms(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+    samples[idx]
+}
+
+/// Mixed-tenant scenario: two batch tenants cycle whole-pool grants with
+/// a ~40 ms service time while two interactive tenants cycle
+/// single-worker grants with a ~5 ms service time, all measuring their
+/// admission queue wait client-side. `qos_on` selects the v11 policy
+/// (class weights + backfill + preemption); off reproduces v10 FIFO
+/// (equal weights, no backfill, no preemption).
+fn run_mixed_tenant(qos_on: bool) -> alchemist::Result<MixedStats> {
+    let pool = 2u32;
+    let mut cfg = Config::default();
+    cfg.server.workers = pool;
+    cfg.server.gemm_backend = "native".into();
+    cfg.sched.backfill = qos_on;
+    cfg.sched.preemption = qos_on;
+    if !qos_on {
+        cfg.sched.weight_interactive = 1;
+        cfg.sched.weight_batch = 1;
+        cfg.sched.weight_best_effort = 1;
+    }
+    let srv = start_server(&cfg)?;
+    let addr = srv.driver_addr.clone();
+
+    let batch_cycles = 8usize;
+    let interactive_cycles = 12usize;
+    // (interactive waits, batch waits), in milliseconds.
+    let waits: Arc<Mutex<(Vec<f64>, Vec<f64>)>> = Arc::new(Mutex::new((Vec::new(), Vec::new())));
+
+    let mut batch_joins = Vec::new();
+    for b in 0..2 {
+        let (addr, waits) = (addr.clone(), waits.clone());
+        batch_joins.push(std::thread::spawn(move || -> alchemist::Result<f64> {
+            let t = Timer::start();
+            for i in 0..batch_cycles {
+                let mut ac = AlchemistContext::connect(&addr, &format!("bt{b}-{i}"))?;
+                let w = Instant::now();
+                ac.request_workers_wait(pool, 30_000)?;
+                waits.lock().unwrap().1.push(w.elapsed().as_secs_f64() * 1e3);
+                std::thread::sleep(Duration::from_millis(40));
+                ac.stop()?;
+            }
+            Ok(t.elapsed_secs())
+        }));
+    }
+    let mut inter_joins = Vec::new();
+    for n in 0..2 {
+        let (addr, waits) = (addr.clone(), waits.clone());
+        inter_joins.push(std::thread::spawn(move || -> alchemist::Result<f64> {
+            let t = Timer::start();
+            for i in 0..interactive_cycles {
+                let mut ac = AlchemistContext::connect(&addr, &format!("it{n}-{i}"))?;
+                ac.qos_class = QosClass::Interactive;
+                let w = Instant::now();
+                ac.request_workers_wait(1, 30_000)?;
+                waits.lock().unwrap().0.push(w.elapsed().as_secs_f64() * 1e3);
+                std::thread::sleep(Duration::from_millis(5));
+                ac.stop()?;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Ok(t.elapsed_secs())
+        }));
+    }
+
+    let mut batch_secs = 0.0;
+    for j in batch_joins {
+        batch_secs += j.join().expect("batch tenant panicked")?;
+    }
+    let mut inter_secs = 0.0;
+    for j in inter_joins {
+        inter_secs += j.join().expect("interactive tenant panicked")?;
+    }
+    srv.shutdown();
+
+    let (interactive_waits_ms, batch_waits_ms) =
+        Arc::try_unwrap(waits).expect("tenant threads gone").into_inner().unwrap();
+    Ok(MixedStats {
+        interactive_waits_ms,
+        batch_waits_ms,
+        batch_jobs_per_s: (2 * batch_cycles) as f64 / (batch_secs / 2.0),
+        interactive_jobs_per_s: (2 * interactive_cycles) as f64 / (inter_secs / 2.0),
+    })
+}
+
 fn main() {
     let base = bench_config();
     let json_path = json_out_path();
@@ -310,6 +415,50 @@ fn main() {
         "\ncompleted/jobs is the storm survival rate: every fault schedule is\n\
          finite (max_fires), so the retry + resume ladder should carry most\n\
          jobs to a correct result; recovery(ms) is the post-storm heal time."
+    );
+
+    println!(
+        "\n=== mixed tenants: whole-pool batch vs single-worker interactive, \
+         v11 QoS vs v10 FIFO ===\n"
+    );
+    let mut mixed = Table::new(&[
+        "mode",
+        "int p50(ms)",
+        "int p99(ms)",
+        "batch p50(ms)",
+        "batch p99(ms)",
+        "batch jobs/s",
+    ]);
+    for (mode, qos_on) in [("qos", true), ("fifo", false)] {
+        let mut st = run_mixed_tenant(qos_on).expect("mixed_tenant scenario failed");
+        let ip50 = percentile_ms(&mut st.interactive_waits_ms, 50.0);
+        let ip99 = percentile_ms(&mut st.interactive_waits_ms, 99.0);
+        let bp50 = percentile_ms(&mut st.batch_waits_ms, 50.0);
+        let bp99 = percentile_ms(&mut st.batch_waits_ms, 99.0);
+        mixed.row(vec![
+            mode.to_string(),
+            format!("{ip50:.1}"),
+            format!("{ip99:.1}"),
+            format!("{bp50:.1}"),
+            format!("{bp99:.1}"),
+            format!("{:.1}", st.batch_jobs_per_s),
+        ]);
+        json_rows.push(format!(
+            "{{\"scenario\":\"mixed_tenant\",\"mode\":\"{mode}\",\"backfill\":{qos_on},\
+             \"preemption\":{qos_on},\"interactive_p50_ms\":{ip50:.2},\
+             \"interactive_p99_ms\":{ip99:.2},\"batch_p50_ms\":{bp50:.2},\
+             \"batch_p99_ms\":{bp99:.2},\"batch_jobs_per_s\":{:.2},\
+             \"interactive_jobs_per_s\":{:.2}}}",
+            st.batch_jobs_per_s, st.interactive_jobs_per_s
+        ));
+    }
+    mixed.print();
+    println!(
+        "\nqos = class weights + backfill + preemption (protocol v11); fifo =\n\
+         equal weights, no backfill, no preemption (the v10 discipline). The\n\
+         interactive p99 should collapse under qos — single-worker requests\n\
+         backfill into the worker the parked whole-pool batch request cannot\n\
+         use yet — while batch throughput stays within a few percent."
     );
 
     if let Some(path) = json_path {

@@ -20,9 +20,10 @@ use crate::linalg::DenseMatrix;
 use crate::metrics::{PhaseTimes, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutKind, MatrixMeta, Params,
-    RoutineDescriptor, WireCodec, WorkerInfo, IDEMPOTENT_SUBMIT_PROTOCOL_VERSION,
-    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, ROUTINE_ENGINE_PROTOCOL_VERSION,
-    SLAB_PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION, TRANSPORT_PROTOCOL_VERSION,
+    QosClass, RoutineDescriptor, WireCodec, WorkerInfo,
+    IDEMPOTENT_SUBMIT_PROTOCOL_VERSION, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+    QOS_PROTOCOL_VERSION, ROUTINE_ENGINE_PROTOCOL_VERSION, SLAB_PROTOCOL_VERSION,
+    TELEMETRY_PROTOCOL_VERSION, TRANSPORT_PROTOCOL_VERSION,
 };
 use crate::telemetry::TelemetryReport;
 use crate::{Error, Result};
@@ -66,6 +67,13 @@ pub struct ServerStatus {
     pub recovered_workers: u32,
     /// Worker re-registrations (epoch bumps) accepted, cumulative (v7).
     pub worker_epochs: u32,
+    /// Parked allocation requests of class `interactive` (v11 servers;
+    /// 0 from older ones).
+    pub queued_interactive: u32,
+    /// Parked allocation requests of class `batch` (v11).
+    pub queued_batch: u32,
+    /// Parked allocation requests of class `best_effort` (v11).
+    pub queued_best_effort: u32,
 }
 
 /// Paper-shaped per-job phase decomposition (Table 1 / Fig. 3 of the
@@ -104,6 +112,11 @@ pub struct JobHandle<'a> {
     /// the result even if the server has since evicted the (delivered)
     /// entry from its retained history.
     terminal: Mutex<Option<JobState>>,
+    /// Highest preemption count observed for this job (v11): how many
+    /// times a higher-class arrival bounced it off the worker group
+    /// before it completed. Updated by `poll`/`wait` whenever they see
+    /// `JobState::Preempted`.
+    preemptions: Mutex<u32>,
 }
 
 impl std::fmt::Debug for JobHandle<'_> {
@@ -129,10 +142,22 @@ impl<'a> JobHandle<'a> {
             return Ok(state);
         }
         let state = self.ac.poll_job(self.job_id)?;
+        if let JobState::Preempted { count } = &state {
+            *self.preemptions.lock().unwrap() = *count;
+        }
         if state.is_terminal() {
             *self.terminal.lock().unwrap() = Some(state.clone());
         }
         Ok(state)
+    }
+
+    /// How many times this job has been preempted so far (v11): a
+    /// higher-class arrival bounced it off the worker group and it was
+    /// re-queued. 0 until a `Preempted` state has been observed —
+    /// preemption is a detour, not a failure, so a completed job with a
+    /// nonzero count still returned its normal result.
+    pub fn preemptions(&self) -> u32 {
+        *self.preemptions.lock().unwrap()
     }
 
     /// True once the job is `Done` or `Failed`.
@@ -169,6 +194,9 @@ impl<'a> JobHandle<'a> {
                     // so callers can reconnect-and-retry programmatically.
                     self.ac.phases.add("compute", t.elapsed());
                     return Err(Error::from_server_message(message));
+                }
+                JobState::Preempted { count } => {
+                    *self.preemptions.lock().unwrap() = count;
                 }
                 JobState::Queued | JobState::Running { .. } => {}
             }
@@ -249,6 +277,11 @@ pub struct AlchemistContext {
     /// Client-side fault plane (chaos tests/benches); `None` — the
     /// default — costs nothing on any path.
     fault: Option<Arc<crate::fault::FaultPlane>>,
+    /// QoS class this session requests workers (and, by inheritance,
+    /// runs unclassed submissions) under — v11 sessions only; older
+    /// sessions never put it on the wire. Defaults to `Batch`, matching
+    /// the server's default for unclassed tenants.
+    pub qos_class: QosClass,
     /// Monotonic source of v10 submission nonces (starts at 1; nonce 0
     /// on the wire means "no dedup").
     nonce_counter: AtomicU64,
@@ -308,6 +341,7 @@ impl AlchemistContext {
             phases: PhaseTimes::new(),
             retry: RetryConfig::default(),
             fault: None,
+            qos_class: QosClass::Batch,
             nonce_counter: AtomicU64::new(1),
             nodelay: true,
             negotiated: version,
@@ -466,7 +500,16 @@ impl AlchemistContext {
         wait: bool,
         timeout_ms: u64,
     ) -> Result<&[WorkerInfo]> {
-        match self.call(&ClientMsg::RequestWorkers { count, wait, timeout_ms })? {
+        // The session's class rides every request; `encode_versioned`
+        // drops it below v11, so older servers see their legacy shape.
+        let msg = ClientMsg::RequestWorkers {
+            count,
+            wait,
+            timeout_ms,
+            class: Some(self.qos_class),
+            deadline_ms: 0,
+        };
+        match self.call(&msg)? {
             DriverMsg::WorkersGranted { workers } => {
                 self.workers = workers;
                 Ok(&self.workers)
@@ -615,6 +658,34 @@ impl AlchemistContext {
         routine: &str,
         params: Params,
     ) -> Result<JobHandle<'_>> {
+        self.submit_inner(library, routine, params, None, 0)
+    }
+
+    /// [`run_async`](Self::run_async) with an explicit QoS class and
+    /// deadline hint (v11): the class overrides the session's for this
+    /// one job, and a nonzero `deadline_ms` asks the driver to count the
+    /// job against its `deadline_missed` telemetry when queue wait
+    /// exceeds it (advisory — the job still runs).
+    pub fn run_async_with_class(
+        &self,
+        library: &str,
+        routine: &str,
+        params: Params,
+        class: QosClass,
+        deadline_ms: u64,
+    ) -> Result<JobHandle<'_>> {
+        self.need_v11("classed submission")?;
+        self.submit_inner(library, routine, params, Some(class), deadline_ms)
+    }
+
+    fn submit_inner(
+        &self,
+        library: &str,
+        routine: &str,
+        params: Params,
+        class: Option<QosClass>,
+        deadline_ms: u64,
+    ) -> Result<JobHandle<'_>> {
         // v10: mint a per-submission idempotency nonce so a re-sent
         // Submit (reply deadline hit, driver dropped the reply) maps to
         // the same job instead of running the routine twice. ≤ v9
@@ -629,6 +700,8 @@ impl AlchemistContext {
             routine: routine.into(),
             params,
             nonce,
+            class,
+            deadline_ms,
         })?;
         match reply {
             DriverMsg::JobAccepted { job_id } => Ok(JobHandle {
@@ -636,6 +709,7 @@ impl AlchemistContext {
                 job_id,
                 routine: routine.to_string(),
                 terminal: Mutex::new(None),
+                preemptions: Mutex::new(0),
             }),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
@@ -673,6 +747,17 @@ impl AlchemistContext {
         if self.negotiated < TELEMETRY_PROTOCOL_VERSION {
             return Err(Error::Protocol(format!(
                 "{what} needs protocol v{TELEMETRY_PROTOCOL_VERSION}+, session \
+                 negotiated v{}",
+                self.negotiated
+            )));
+        }
+        Ok(())
+    }
+
+    fn need_v11(&self, what: &str) -> Result<()> {
+        if self.negotiated < QOS_PROTOCOL_VERSION {
+            return Err(Error::Protocol(format!(
+                "{what} needs protocol v{QOS_PROTOCOL_VERSION}+, session \
                  negotiated v{}",
                 self.negotiated
             )));
@@ -779,6 +864,7 @@ impl AlchemistContext {
                 lost_workers,
                 recovered_workers,
                 worker_epochs,
+                queued_by_class,
             } => Ok(ServerStatus {
                 total_workers,
                 free_workers,
@@ -788,6 +874,9 @@ impl AlchemistContext {
                 lost_workers,
                 recovered_workers,
                 worker_epochs,
+                queued_interactive: queued_by_class[QosClass::Interactive.idx()],
+                queued_batch: queued_by_class[QosClass::Batch.idx()],
+                queued_best_effort: queued_by_class[QosClass::BestEffort.idx()],
             }),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }

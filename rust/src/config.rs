@@ -192,6 +192,26 @@ pub struct SchedConfig {
     /// still-wedged worker fails its probe within this bound and stays
     /// quarantined until the next round.
     pub probe_timeout_ms: u64,
+    /// QoS class assumed for sessions and jobs that do not name one:
+    /// "interactive", "batch", or "best_effort" (protocol v11).
+    pub default_class: String,
+    /// Fair-share weights per class — a weight-8 class is offered ~8x
+    /// the worker-grant throughput of a weight-1 class under contention.
+    /// Must be >= 1.
+    pub weight_interactive: u32,
+    pub weight_batch: u32,
+    pub weight_best_effort: u32,
+    /// Allow small waiting requests to be granted out of order when they
+    /// fit in currently-idle workers (bounded by the bypass limit so the
+    /// skipped request cannot starve).
+    pub backfill: bool,
+    /// Allow a higher-priority `RequestWorkers { wait: true }` arrival to
+    /// cancel-and-requeue the lowest-priority running job when the pool
+    /// cannot cover it.
+    pub preemption: bool,
+    /// Upper bound on preemptions of any single job — victims always
+    /// eventually finish.
+    pub max_preemptions_per_job: u32,
 }
 
 impl Default for SchedConfig {
@@ -204,6 +224,13 @@ impl Default for SchedConfig {
             max_inflight_cost_per_session: 0.0,
             probe_interval_ms: 500,
             probe_timeout_ms: 1_000,
+            default_class: "batch".into(),
+            weight_interactive: 8,
+            weight_batch: 4,
+            weight_best_effort: 1,
+            backfill: true,
+            preemption: true,
+            max_preemptions_per_job: 2,
         }
     }
 }
@@ -389,6 +416,16 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         }
         "sched.probe_interval_ms" => cfg.sched.probe_interval_ms = parse(key, val)?,
         "sched.probe_timeout_ms" => cfg.sched.probe_timeout_ms = parse(key, val)?,
+        "sched.default_class" => {
+            crate::protocol::QosClass::parse(val)?;
+            cfg.sched.default_class = val.to_string();
+        }
+        "sched.weight_interactive" => cfg.sched.weight_interactive = parse(key, val)?,
+        "sched.weight_batch" => cfg.sched.weight_batch = parse(key, val)?,
+        "sched.weight_best_effort" => cfg.sched.weight_best_effort = parse(key, val)?,
+        "sched.backfill" => cfg.sched.backfill = parse(key, val)?,
+        "sched.preemption" => cfg.sched.preemption = parse(key, val)?,
+        "sched.max_preemptions_per_job" => cfg.sched.max_preemptions_per_job = parse(key, val)?,
         "compute.dist_gemm_algo" => {
             crate::elemental::dist_gemm::DistGemmAlgo::parse(val)?;
             cfg.compute.dist_gemm_algo = val.to_string();
@@ -503,6 +540,14 @@ impl Config {
             ));
         }
         // re-validate in case the struct was mutated directly
+        crate::protocol::QosClass::parse(&self.sched.default_class)?;
+        if self.sched.weight_interactive == 0
+            || self.sched.weight_batch == 0
+            || self.sched.weight_best_effort == 0
+        {
+            return Err(Error::Config("sched QoS class weights must be >= 1".into()));
+        }
+        // re-validate in case the struct was mutated directly
         crate::elemental::dist_gemm::DistGemmAlgo::parse(&self.compute.dist_gemm_algo)?;
         crate::elemental::GridSpec::parse(&self.compute.grid)?;
         if self.transfer.sender_threads == 0 {
@@ -595,6 +640,13 @@ scale = 0.5
             "sched.max_inflight_cost_per_session=1e9",
             "sched.probe_interval_ms=50",
             "sched.probe_timeout_ms=250",
+            "sched.default_class=interactive",
+            "sched.weight_interactive=16",
+            "sched.weight_batch=3",
+            "sched.weight_best_effort=2",
+            "sched.backfill=false",
+            "sched.preemption=false",
+            "sched.max_preemptions_per_job=5",
         ])
         .unwrap();
         assert_eq!(cfg.sched.max_workers_per_session, 2);
@@ -604,6 +656,23 @@ scale = 0.5
         assert_eq!(cfg.sched.max_inflight_cost_per_session, 1e9);
         assert_eq!(cfg.sched.probe_interval_ms, 50);
         assert_eq!(cfg.sched.probe_timeout_ms, 250);
+        assert_eq!(cfg.sched.default_class, "interactive");
+        assert_eq!(cfg.sched.weight_interactive, 16);
+        assert_eq!(cfg.sched.weight_batch, 3);
+        assert_eq!(cfg.sched.weight_best_effort, 2);
+        assert!(!cfg.sched.backfill);
+        assert!(!cfg.sched.preemption);
+        assert_eq!(cfg.sched.max_preemptions_per_job, 5);
+        cfg.validate().unwrap();
+        // unknown classes are rejected at apply time...
+        assert!(cfg.apply_overrides(&["sched.default_class=platinum"]).is_err());
+        // ...and direct struct mutation is caught by validate.
+        cfg.sched.default_class = "platinum".into();
+        assert!(cfg.validate().is_err());
+        cfg.sched.default_class = "batch".into();
+        cfg.sched.weight_batch = 0;
+        assert!(cfg.validate().is_err());
+        cfg.sched.weight_batch = 4;
         cfg.sched.max_inflight_cost_per_session = -1.0;
         assert!(cfg.validate().is_err());
         cfg.sched.max_inflight_cost_per_session = 0.0;

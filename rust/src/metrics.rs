@@ -158,6 +158,11 @@ pub struct SchedMetrics {
     pub registry: Arc<MetricsRegistry>,
     /// Sessions currently parked in the allocator's admission queue.
     pub queue_depth: GaugeHandle,
+    /// Admission-queue depth split by QoS class (protocol v11) — the
+    /// three gauges always sum to `queue_depth`.
+    pub queue_depth_interactive: GaugeHandle,
+    pub queue_depth_batch: GaugeHandle,
+    pub queue_depth_best_effort: GaugeHandle,
     /// Jobs submitted but not yet `Done`/`Failed`.
     pub jobs_inflight: GaugeHandle,
     /// Workers currently quarantined (pool-recovery lifecycle: set on
@@ -182,6 +187,9 @@ impl SchedMetrics {
         let registry = Arc::new(MetricsRegistry::new());
         SchedMetrics {
             queue_depth: registry.gauge("queue_depth"),
+            queue_depth_interactive: registry.gauge("queue_depth_interactive"),
+            queue_depth_batch: registry.gauge("queue_depth_batch"),
+            queue_depth_best_effort: registry.gauge("queue_depth_best_effort"),
             jobs_inflight: registry.gauge("jobs_inflight"),
             lost_workers: registry.gauge("lost_workers"),
             jobs_requeued: registry.counter("jobs_requeued"),
@@ -489,6 +497,16 @@ mod tests {
         assert_eq!(m.counters.get("readmitted_workers"), 1);
         m.jobs_requeued.inc(1);
         assert_eq!(m.counters.get("jobs_requeued"), 1);
+        m.queue_depth_interactive.set(2);
+        m.queue_depth_batch.set(1);
+        m.queue_depth_best_effort.set(4);
+        assert_eq!(m.queue_depth_interactive.get(), 2);
+        assert_eq!(m.queue_depth_batch.get(), 1);
+        assert_eq!(m.queue_depth_best_effort.get(), 4);
+        m.counters.add("preemptions", 1);
+        m.counters.add("backfills", 2);
+        assert_eq!(m.counters.get("preemptions"), 1);
+        assert_eq!(m.counters.get("backfills"), 2);
     }
 
     #[test]

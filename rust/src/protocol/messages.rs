@@ -51,7 +51,14 @@ use crate::{Error, Result};
 /// change: the data plane and every other message are untouched, and the
 /// fault-injection plane (`crate::fault`) is config-local with zero wire
 /// surface at any version.
-pub const PROTOCOL_VERSION: u16 = 10;
+/// v11: QoS scheduling — `RequestWorkers` (tag 17) and `SubmitRoutine`
+/// (tag 18) carry an optional priority class plus a deadline/SLO hint,
+/// `Status` (tag 17) reports per-class queue depths, and `JobState`
+/// gains the non-terminal `Preempted { count }` (tag 5; ≤ v10 readers
+/// see the job as `Queued`, which is exactly what a preempted job is
+/// about to become). ≤ v10 frames keep their byte shape and hint-less
+/// submits default to the session's class.
+pub const PROTOCOL_VERSION: u16 = 11;
 
 /// Oldest client version the server still speaks. The handshake
 /// *negotiates*: the server acks `min(client, server)` and both sides use
@@ -92,6 +99,95 @@ pub const TRANSPORT_PROTOCOL_VERSION: u16 = 9;
 /// legacy tag-9 shape with no nonce; the driver treats those submissions
 /// as nonce 0 (= dedup disabled), exactly the pre-v10 behaviour.
 pub const IDEMPOTENT_SUBMIT_PROTOCOL_VERSION: u16 = 10;
+
+/// First version that understands the QoS scheduling surfaces: priority
+/// classes + deadline hints on `RequestWorkers`/`SubmitRoutine`,
+/// per-class queue depths in `Status`, and the `Preempted` job state.
+/// Sessions negotiated below this keep the v10 byte shapes and their
+/// work is admitted under the server's default class.
+pub const QOS_PROTOCOL_VERSION: u16 = 11;
+
+/// Priority class of a session or an individual job — the scheduler's
+/// admission currency (`sched/policy.rs`). Lower wire tags are *higher*
+/// priority so the enum reads in rank order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive, small requests (notebook queries). Highest
+    /// weight; may preempt lower classes when the pool is full.
+    Interactive,
+    /// Throughput work — the default for unclassed sessions.
+    Batch,
+    /// Scavenger class: admitted only from spare capacity, first to be
+    /// preempted.
+    BestEffort,
+}
+
+impl QosClass {
+    /// Wire tag (also the index into per-class `[T; 3]` arrays:
+    /// interactive / batch / best_effort).
+    pub fn tag(self) -> u8 {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Batch => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<QosClass> {
+        Ok(match t {
+            0 => QosClass::Interactive,
+            1 => QosClass::Batch,
+            2 => QosClass::BestEffort,
+            _ => return Err(Error::Protocol(format!("bad QosClass tag {t}"))),
+        })
+    }
+
+    /// Index into per-class `[T; 3]` arrays.
+    pub fn idx(self) -> usize {
+        self.tag() as usize
+    }
+
+    /// Preemption rank: strictly higher ranks may preempt strictly lower
+    /// ones (never the same class — equal-class contention is the fair
+    /// share's job).
+    pub fn rank(self) -> u8 {
+        2 - self.tag()
+    }
+
+    /// Config spelling (`sched.default_class`, bench flags).
+    pub fn parse(s: &str) -> Result<QosClass> {
+        Ok(match s {
+            "interactive" => QosClass::Interactive,
+            "batch" => QosClass::Batch,
+            "best_effort" => QosClass::BestEffort,
+            other => {
+                return Err(Error::Config(format!(
+                    "bad QoS class {other:?} (expected interactive|batch|best_effort)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+            QosClass::BestEffort => "best_effort",
+        }
+    }
+
+    /// Encode an optional class as a single byte (255 = unspecified).
+    pub fn encode_opt(class: Option<QosClass>, w: &mut Writer) {
+        w.put_u8(class.map_or(255, QosClass::tag));
+    }
+
+    pub fn decode_opt(r: &mut Reader<'_>) -> Result<Option<QosClass>> {
+        match r.get_u8()? {
+            255 => Ok(None),
+            t => QosClass::from_tag(t).map(Some),
+        }
+    }
+}
 
 /// Scalar / handle parameter value — the paper's "non-distributed input
 /// and output parameters" (§2.1), plus matrix handles (§3.3's `AlMatrix`).
@@ -465,7 +561,9 @@ impl WorkerInfo {
 }
 
 /// Lifecycle state of an asynchronously submitted routine (`sched` job
-/// queue): `Queued -> Running -> Done | Failed`. Terminal states carry the
+/// queue): `Queued -> Running -> Done | Failed`, with the v11
+/// `Running -> Preempted -> Queued` detour when the scheduler reclaims a
+/// job's workers. Terminal states carry the
 /// full routine result / error so `PollJob`/`WaitJob` replies are
 /// self-contained.
 #[derive(Debug, Clone, PartialEq)]
@@ -479,6 +577,13 @@ pub enum JobState {
     Running { phase: String, progress: f64 },
     Done { outputs: Params, new_matrices: Vec<MatrixMeta> },
     Failed { message: String },
+    /// v11: the scheduler reclaimed this job's workers for a
+    /// higher-priority arrival; the job is being requeued and will run
+    /// again (`count` = times preempted so far, bounded by
+    /// `sched.max_preemptions_per_job`). Non-terminal — ≤ v10 readers
+    /// see the legacy `Queued` tag, which is the state the job is
+    /// headed back to.
+    Preempted { count: u32 },
 }
 
 impl JobState {
@@ -499,6 +604,7 @@ impl JobState {
             JobState::Running { .. } => "running",
             JobState::Done { .. } => "done",
             JobState::Failed { .. } => "failed",
+            JobState::Preempted { .. } => "preempted",
         }
     }
 
@@ -533,6 +639,16 @@ impl JobState {
                 w.put_u8(3);
                 w.put_str(message);
             }
+            JobState::Preempted { count } => {
+                if version >= QOS_PROTOCOL_VERSION {
+                    w.put_u8(5);
+                    w.put_u32(*count);
+                } else {
+                    // ≤ v10 readers have no Preempted tag; the job is on
+                    // its way back to the queue, so show it as Queued.
+                    w.put_u8(0);
+                }
+            }
         }
     }
 
@@ -541,6 +657,7 @@ impl JobState {
             0 => JobState::Queued,
             1 => JobState::running(),
             4 => JobState::Running { phase: r.get_str()?, progress: r.get_f64()? },
+            5 => JobState::Preempted { count: r.get_u32()? },
             2 => {
                 let outputs = decode_params(r)?;
                 let n = r.get_u32()? as usize;
@@ -571,8 +688,17 @@ pub enum ClientMsg {
     /// queue until enough workers free up or `timeout_ms` elapses
     /// (0 = the server's `sched.wait_timeout_ms` default, which is also
     /// the ceiling — a parked session head-blocks the queue, so clients
-    /// may shorten the wait but not extend it).
-    RequestWorkers { count: u32, wait: bool, timeout_ms: u64 },
+    /// may shorten the wait but not extend it). Since v11 the request
+    /// may carry the session's priority `class` (None = the server's
+    /// `sched.default_class`) and a `deadline_ms` SLO hint (0 = none);
+    /// ≤ v10 sessions keep the legacy tag-1 byte shape without them.
+    RequestWorkers {
+        count: u32,
+        wait: bool,
+        timeout_ms: u64,
+        class: Option<QosClass>,
+        deadline_ms: u64,
+    },
     /// Register an MPI-library wrapper (§3.3 `registerLibrary`).
     RegisterLibrary { name: String, path: String },
     /// Allocate an empty distributed matrix ahead of a row transfer.
@@ -594,8 +720,18 @@ pub enum ClientMsg {
     /// `nonce -> job_id` per session, so a submit retried after a lost
     /// reply returns the original job instead of double-running. 0 means
     /// "no dedup" — the only value ≤ v9 sessions can produce (their
-    /// legacy tag-9 wire shape has no nonce field).
-    SubmitRoutine { library: String, routine: String, params: Params, nonce: u64 },
+    /// legacy tag-9 wire shape has no nonce field). Since v11 a submit
+    /// may also carry a per-job priority `class` override (None = the
+    /// session's class) and a `deadline_ms` SLO hint (0 = none); v10
+    /// keeps tag 16 and ≤ v9 keeps tag 9, both byte-for-byte.
+    SubmitRoutine {
+        library: String,
+        routine: String,
+        params: Params,
+        nonce: u64,
+        class: Option<QosClass>,
+        deadline_ms: u64,
+    },
     /// Non-blocking job-state snapshot.
     PollJob { job_id: u64 },
     /// Block (server-side, up to `timeout_ms`) until the job reaches a
@@ -643,11 +779,22 @@ impl ClientMsg {
                 w.put_str(app_name);
                 w.put_u16(*version);
             }
-            ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
-                w.put_u8(1);
-                w.put_u32(*count);
-                w.put_bool(*wait);
-                w.put_u64(*timeout_ms);
+            ClientMsg::RequestWorkers { count, wait, timeout_ms, class, deadline_ms } => {
+                if version >= QOS_PROTOCOL_VERSION {
+                    w.put_u8(17);
+                    w.put_u32(*count);
+                    w.put_bool(*wait);
+                    w.put_u64(*timeout_ms);
+                    QosClass::encode_opt(*class, &mut w);
+                    w.put_u64(*deadline_ms);
+                } else {
+                    // Legacy shape: class/deadline dropped — a ≤ v10 peer
+                    // must see exactly the old bytes.
+                    w.put_u8(1);
+                    w.put_u32(*count);
+                    w.put_bool(*wait);
+                    w.put_u64(*timeout_ms);
+                }
             }
             ClientMsg::RegisterLibrary { name, path } => {
                 w.put_u8(2);
@@ -676,8 +823,16 @@ impl ClientMsg {
             }
             ClientMsg::Stop => w.put_u8(7),
             ClientMsg::ServerStatus => w.put_u8(8),
-            ClientMsg::SubmitRoutine { library, routine, params, nonce } => {
-                if version >= IDEMPOTENT_SUBMIT_PROTOCOL_VERSION {
+            ClientMsg::SubmitRoutine { library, routine, params, nonce, class, deadline_ms } => {
+                if version >= QOS_PROTOCOL_VERSION {
+                    w.put_u8(18);
+                    w.put_str(library);
+                    w.put_str(routine);
+                    encode_params(&mut w, params);
+                    w.put_u64(*nonce);
+                    QosClass::encode_opt(*class, &mut w);
+                    w.put_u64(*deadline_ms);
+                } else if version >= IDEMPOTENT_SUBMIT_PROTOCOL_VERSION {
                     w.put_u8(16);
                     w.put_str(library);
                     w.put_str(routine);
@@ -729,6 +884,8 @@ impl ClientMsg {
                 count: r.get_u32()?,
                 wait: r.get_bool()?,
                 timeout_ms: r.get_u64()?,
+                class: None,
+                deadline_ms: 0,
             },
             2 => ClientMsg::RegisterLibrary { name: r.get_str()?, path: r.get_str()? },
             3 => ClientMsg::CreateMatrix {
@@ -750,6 +907,8 @@ impl ClientMsg {
                 routine: r.get_str()?,
                 params: decode_params(&mut r)?,
                 nonce: 0,
+                class: None,
+                deadline_ms: 0,
             },
             10 => ClientMsg::PollJob { job_id: r.get_u64()? },
             11 => ClientMsg::WaitJob { job_id: r.get_u64()?, timeout_ms: r.get_u64()? },
@@ -762,6 +921,23 @@ impl ClientMsg {
                 routine: r.get_str()?,
                 params: decode_params(&mut r)?,
                 nonce: r.get_u64()?,
+                class: None,
+                deadline_ms: 0,
+            },
+            17 => ClientMsg::RequestWorkers {
+                count: r.get_u32()?,
+                wait: r.get_bool()?,
+                timeout_ms: r.get_u64()?,
+                class: QosClass::decode_opt(&mut r)?,
+                deadline_ms: r.get_u64()?,
+            },
+            18 => ClientMsg::SubmitRoutine {
+                library: r.get_str()?,
+                routine: r.get_str()?,
+                params: decode_params(&mut r)?,
+                nonce: r.get_u64()?,
+                class: QosClass::decode_opt(&mut r)?,
+                deadline_ms: r.get_u64()?,
             },
             t => return Err(Error::Protocol(format!("bad ClientMsg tag {t}"))),
         };
@@ -799,6 +975,10 @@ pub enum DriverMsg {
         recovered_workers: u32,
         /// Worker re-registrations (epoch bumps) accepted, cumulative.
         worker_epochs: u32,
+        /// v11: queued allocation requests per QoS class, indexed
+        /// interactive / batch / best_effort (`QosClass::idx`). ≤ v10
+        /// sessions keep their shapes and decode this as zeros.
+        queued_by_class: [u32; 3],
     },
     /// Reply to `SubmitRoutine`: the job is in the session's job table.
     JobAccepted { job_id: u64 },
@@ -887,10 +1067,15 @@ impl DriverMsg {
                 lost_workers,
                 recovered_workers,
                 worker_epochs,
+                queued_by_class,
             } => {
-                // v7 gets its own tag so the decode stays self-describing
-                // (appending fields under tag 9 would desync ≤ v6 readers).
-                if version >= POOL_RECOVERY_PROTOCOL_VERSION {
+                // Each extension gets its own tag so the decode stays
+                // self-describing (appending fields under an old tag
+                // would desync older readers): 9 = legacy 5-field,
+                // 13 = v7 recovery counters, 17 = v11 per-class depths.
+                if version >= QOS_PROTOCOL_VERSION {
+                    w.put_u8(17);
+                } else if version >= POOL_RECOVERY_PROTOCOL_VERSION {
                     w.put_u8(13);
                 } else {
                     w.put_u8(9);
@@ -904,6 +1089,11 @@ impl DriverMsg {
                     w.put_u32(*lost_workers);
                     w.put_u32(*recovered_workers);
                     w.put_u32(*worker_epochs);
+                }
+                if version >= QOS_PROTOCOL_VERSION {
+                    for d in queued_by_class {
+                        w.put_u32(*d);
+                    }
                 }
             }
             DriverMsg::JobAccepted { job_id } => {
@@ -965,15 +1155,20 @@ impl DriverMsg {
             6 => DriverMsg::Released { handle: r.get_u64()? },
             7 => DriverMsg::Stopped,
             8 => DriverMsg::Err { message: r.get_str()? },
-            tag @ (9 | 13) => DriverMsg::Status {
+            tag @ (9 | 13 | 17) => DriverMsg::Status {
                 total_workers: r.get_u32()?,
                 free_workers: r.get_u32()?,
                 sessions: r.get_u32()?,
                 queued_sessions: r.get_u32()?,
                 jobs_inflight: r.get_u32()?,
-                lost_workers: if tag == 13 { r.get_u32()? } else { 0 },
-                recovered_workers: if tag == 13 { r.get_u32()? } else { 0 },
-                worker_epochs: if tag == 13 { r.get_u32()? } else { 0 },
+                lost_workers: if tag >= 13 { r.get_u32()? } else { 0 },
+                recovered_workers: if tag >= 13 { r.get_u32()? } else { 0 },
+                worker_epochs: if tag >= 13 { r.get_u32()? } else { 0 },
+                queued_by_class: if tag == 17 {
+                    [r.get_u32()?, r.get_u32()?, r.get_u32()?]
+                } else {
+                    [0; 3]
+                },
             },
             10 => DriverMsg::JobAccepted { job_id: r.get_u64()? },
             11 => DriverMsg::JobStatus { job_id: r.get_u64()?, state: JobState::decode(&mut r)? },
@@ -1646,8 +1841,20 @@ mod tests {
     fn client_msgs_roundtrip() {
         let msgs = vec![
             ClientMsg::Handshake { app_name: "quickstart".into(), version: PROTOCOL_VERSION },
-            ClientMsg::RequestWorkers { count: 8, wait: false, timeout_ms: 0 },
-            ClientMsg::RequestWorkers { count: 2, wait: true, timeout_ms: 1500 },
+            ClientMsg::RequestWorkers {
+                count: 8,
+                wait: false,
+                timeout_ms: 0,
+                class: None,
+                deadline_ms: 0,
+            },
+            ClientMsg::RequestWorkers {
+                count: 2,
+                wait: true,
+                timeout_ms: 1500,
+                class: Some(QosClass::Interactive),
+                deadline_ms: 4000,
+            },
             ClientMsg::RegisterLibrary { name: "elemlib".into(), path: "builtin:elemlib".into() },
             ClientMsg::CreateMatrix { rows: 100, cols: 10, kind: LayoutKind::RowCyclic },
             ClientMsg::RunRoutine {
@@ -1668,6 +1875,8 @@ mod tests {
                 routine: "gramian".into(),
                 params: vec![("A".into(), ParamValue::Matrix(4))],
                 nonce: 0xFEED_F00D,
+                class: Some(QosClass::BestEffort),
+                deadline_ms: 0,
             },
             ClientMsg::PollJob { job_id: 17 },
             ClientMsg::WaitJob { job_id: 17, timeout_ms: 250 },
@@ -1710,6 +1919,7 @@ mod tests {
                 lost_workers: 2,
                 recovered_workers: 5,
                 worker_epochs: 7,
+                queued_by_class: [1, 2, 3],
             },
             DriverMsg::JobAccepted { job_id: 5 },
             DriverMsg::JobStatus { job_id: 5, state: JobState::Queued },
@@ -1773,9 +1983,11 @@ mod tests {
     fn job_state_properties() {
         assert!(!JobState::Queued.is_terminal());
         assert!(!JobState::running().is_terminal());
+        assert!(!JobState::Preempted { count: 1 }.is_terminal());
         assert!(JobState::Done { outputs: vec![], new_matrices: vec![] }.is_terminal());
         assert!(JobState::Failed { message: "x".into() }.is_terminal());
         assert_eq!(JobState::running().name(), "running");
+        assert_eq!(JobState::Preempted { count: 2 }.name(), "preempted");
     }
 
     #[test]
@@ -1815,6 +2027,7 @@ mod tests {
             lost_workers: 2,
             recovered_workers: 6,
             worker_epochs: 9,
+            queued_by_class: [4, 0, 1],
         };
         let v6 = msg.encode_versioned(6);
         assert_eq!(v6[0], 9, "v6 Status must use the legacy tag");
@@ -1832,9 +2045,21 @@ mod tests {
             }
             other => panic!("bad v6 decode: {other:?}"),
         }
+        // v7–v10 keep tag 13 with the class depths dropped.
         let v7 = msg.encode_versioned(7);
         assert_eq!(v7[0], 13, "v7 Status carries recovery counters");
-        assert_eq!(DriverMsg::decode(&v7).unwrap(), msg);
+        assert_eq!(v7.len(), 1 + 8 * 4);
+        match DriverMsg::decode(&v7).unwrap() {
+            DriverMsg::Status { worker_epochs, queued_by_class, .. } => {
+                assert_eq!(worker_epochs, 9);
+                assert_eq!(queued_by_class, [0; 3], "class depths must not leak to v7");
+            }
+            other => panic!("bad v7 decode: {other:?}"),
+        }
+        // v11 gets tag 17 with the per-class depths appended.
+        let v11 = msg.encode_versioned(11);
+        assert_eq!(v11[0], 17, "v11 Status carries per-class depths");
+        assert_eq!(DriverMsg::decode(&v11).unwrap(), msg);
     }
 
     #[test]
@@ -1911,6 +2136,8 @@ mod tests {
             routine: "gramian".into(),
             params: params.clone(),
             nonce: 0xDEAD_BEEF,
+            class: Some(QosClass::Interactive),
+            deadline_ms: 2500,
         };
 
         let v9 = msg.encode_versioned(9);
@@ -1923,18 +2150,96 @@ mod tests {
         encode_params(&mut legacy, &params);
         assert_eq!(v9, legacy.into_bytes(), "v9 shape must be byte-identical to pre-v10");
         match ClientMsg::decode(&v9).unwrap() {
-            ClientMsg::SubmitRoutine { nonce, library, .. } => {
+            ClientMsg::SubmitRoutine { nonce, library, class, .. } => {
                 assert_eq!(nonce, 0, "legacy shape decodes as nonce 0");
                 assert_eq!(library, "elemlib");
+                assert_eq!(class, None, "legacy shape decodes as unclassed");
             }
             other => panic!("bad v9 decode: {other:?}"),
         }
 
+        // v10 keeps tag 16 byte-for-byte: nonce present, class/deadline
+        // dropped.
         let v10 = msg.encode_versioned(10);
         assert_eq!(v10[0], 16, "v10 SubmitRoutine carries the nonce");
-        assert_eq!(ClientMsg::decode(&v10).unwrap(), msg);
+        let mut legacy10 = Writer::new();
+        legacy10.put_u8(16);
+        legacy10.put_str("elemlib");
+        legacy10.put_str("gramian");
+        encode_params(&mut legacy10, &params);
+        legacy10.put_u64(0xDEAD_BEEF);
+        assert_eq!(v10, legacy10.into_bytes(), "v10 shape must be byte-identical to pre-v11");
+        match ClientMsg::decode(&v10).unwrap() {
+            ClientMsg::SubmitRoutine { nonce, class, deadline_ms, .. } => {
+                assert_eq!(nonce, 0xDEAD_BEEF);
+                assert_eq!((class, deadline_ms), (None, 0), "hints must not leak to v10");
+            }
+            other => panic!("bad v10 decode: {other:?}"),
+        }
+
+        let v11 = msg.encode_versioned(11);
+        assert_eq!(v11[0], 18, "v11 SubmitRoutine carries class + deadline");
+        assert_eq!(ClientMsg::decode(&v11).unwrap(), msg);
         // default encode() is the current-version shape
-        assert_eq!(msg.encode(), v10);
+        assert_eq!(msg.encode(), v11);
+    }
+
+    #[test]
+    fn request_workers_downgrades_for_v10_sessions() {
+        let msg = ClientMsg::RequestWorkers {
+            count: 2,
+            wait: true,
+            timeout_ms: 1500,
+            class: Some(QosClass::Interactive),
+            deadline_ms: 4000,
+        };
+        // ≤ v10 keeps the legacy tag-1 shape byte-for-byte.
+        let v10 = msg.encode_versioned(10);
+        assert_eq!(v10[0], 1, "v10 RequestWorkers must use the legacy tag");
+        let mut legacy = Writer::new();
+        legacy.put_u8(1);
+        legacy.put_u32(2);
+        legacy.put_bool(true);
+        legacy.put_u64(1500);
+        assert_eq!(v10, legacy.into_bytes(), "v10 shape must be byte-identical to pre-v11");
+        match ClientMsg::decode(&v10).unwrap() {
+            ClientMsg::RequestWorkers { count, class, deadline_ms, .. } => {
+                assert_eq!(count, 2);
+                assert_eq!((class, deadline_ms), (None, 0), "hints must not leak to v10");
+            }
+            other => panic!("bad v10 decode: {other:?}"),
+        }
+        let v11 = msg.encode_versioned(11);
+        assert_eq!(v11[0], 17, "v11 RequestWorkers carries class + deadline");
+        assert_eq!(ClientMsg::decode(&v11).unwrap(), msg);
+    }
+
+    #[test]
+    fn preempted_state_downgrades_for_v10_sessions() {
+        let msg = DriverMsg::JobStatus { job_id: 9, state: JobState::Preempted { count: 2 } };
+        // ≤ v10 readers see the legacy Queued tag (0).
+        let v10 = msg.encode_versioned(10);
+        assert_eq!(v10.len(), 10); // tag(1) + job_id(8) + state tag(1)
+        assert_eq!(v10[9], 0, "v10 Preempted must downgrade to Queued");
+        match DriverMsg::decode(&v10).unwrap() {
+            DriverMsg::JobStatus { state: JobState::Queued, .. } => {}
+            other => panic!("bad v10 decode: {other:?}"),
+        }
+        let v11 = msg.encode_versioned(11);
+        assert_eq!(v11[9], 5, "v11 Preempted has its own tag");
+        assert_eq!(DriverMsg::decode(&v11).unwrap(), msg);
+    }
+
+    #[test]
+    fn qos_class_parse_and_tags() {
+        for c in [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort] {
+            assert_eq!(QosClass::from_tag(c.tag()).unwrap(), c);
+            assert_eq!(QosClass::parse(c.name()).unwrap(), c);
+        }
+        assert!(QosClass::parse("turbo").is_err());
+        assert!(QosClass::from_tag(3).is_err());
+        assert!(QosClass::Interactive.rank() > QosClass::Batch.rank());
+        assert!(QosClass::Batch.rank() > QosClass::BestEffort.rank());
     }
 
     #[test]

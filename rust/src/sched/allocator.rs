@@ -1,14 +1,23 @@
-//! Worker-pool allocator: exclusive grants, FIFO queued admission,
-//! per-session quotas.
+//! Worker-pool allocator: exclusive grants, policy-driven queued
+//! admission, per-session quotas.
 //!
 //! Grants are exclusive (a worker belongs to at most one session — the
 //! paper's disjoint worker groups, Fig 2) and first-fit: the lowest free
 //! worker ids satisfy a request. When the pool is short, a `wait: true`
-//! request parks in a strict-FIFO queue; parked sessions are granted in
-//! arrival order as releases refill the pool, and nobody (waiting or not)
-//! is allowed to overtake the queue head. Every state change funnels
-//! through one mutex + condvar pair, which is what makes the
+//! request parks in the admission queue; *which* queued request is
+//! granted next is decided by [`policy::pick`] — weighted fair-share
+//! order across sessions with bounded backfill (see [`crate::sched::
+//! policy`]). With QoS weights left equal and backfill disabled the
+//! queue degenerates to the pre-v11 strict FIFO. Every state change
+//! funnels through one mutex + condvar pair, which is what makes the
 //! never-double-grant property easy to believe and easy to test.
+//!
+//! Wakeup discipline: *every* transition that changes what `pick` could
+//! return — release, quarantine, readmit, and (since PR 10) grant itself,
+//! because a grant moves a session's quota charge — does a
+//! `notify_all`, and each parked waiter re-evaluates the policy for
+//! itself. A waiter can therefore never sleep through its own admission
+//! window.
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -16,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SchedConfig;
 use crate::metrics::{SchedMetrics, Timer};
+use crate::sched::policy::{self, Entry, FairShare, QosClass, QosPolicy};
 use crate::{Error, Result};
 
 /// Allocation policy knobs (derived from [`SchedConfig`]).
@@ -25,6 +35,8 @@ pub struct AllocPolicy {
     pub max_workers_per_session: u32,
     /// Queue-wait budget used when a request does not carry its own.
     pub default_wait_timeout: Duration,
+    /// QoS half of the policy: class weights, backfill, preemption.
+    pub qos: QosPolicy,
 }
 
 impl Default for AllocPolicy {
@@ -38,15 +50,9 @@ impl From<&SchedConfig> for AllocPolicy {
         AllocPolicy {
             max_workers_per_session: cfg.max_workers_per_session,
             default_wait_timeout: Duration::from_millis(cfg.wait_timeout_ms),
+            qos: QosPolicy::from(cfg),
         }
     }
-}
-
-/// One parked `RequestWorkers { wait: true }` call. (The owning session
-/// is implicit: the parked thread *is* the session's control thread.)
-struct Waiter {
-    ticket: u64,
-    count: u32,
 }
 
 struct AllocState {
@@ -55,9 +61,12 @@ struct AllocState {
     granted: HashMap<u32, u64>,
     /// session -> workers held (quota accounting).
     held: HashMap<u64, u32>,
-    /// FIFO admission queue.
-    queue: VecDeque<Waiter>,
+    /// Admission queue; grant order is decided by [`policy::pick`], not
+    /// queue position (position only breaks exact ties via the ticket).
+    queue: VecDeque<Entry>,
     next_ticket: u64,
+    /// Stride fair-share pass accounting per session.
+    fair: FairShare,
     /// Quarantined workers (wedged or unreachable groups) — out of
     /// satisfiable capacity until a clean health probe readmits them
     /// (see [`PoolAllocator::readmit`]).
@@ -88,6 +97,7 @@ impl PoolAllocator {
                 held: HashMap::new(),
                 queue: VecDeque::new(),
                 next_ticket: 0,
+                fair: FairShare::default(),
                 lost: BTreeSet::new(),
             }),
             cv: Condvar::new(),
@@ -122,9 +132,33 @@ impl PoolAllocator {
         self.state.lock().unwrap().queue.len() as u32
     }
 
+    /// Parked requests per QoS class, indexed by [`QosClass::idx`]
+    /// (interactive / batch / best_effort) — the v11 `Status` row.
+    pub fn queue_depth_by_class(&self) -> [u32; 3] {
+        let st = self.state.lock().unwrap();
+        let mut out = [0u32; 3];
+        for e in &st.queue {
+            out[e.class.idx()] += 1;
+        }
+        out
+    }
+
     /// Workers currently held by `session_id`.
     pub fn held_by(&self, session_id: u64) -> u32 {
         self.state.lock().unwrap().held.get(&session_id).copied().unwrap_or(0)
+    }
+
+    /// The QoS policy this allocator admits under (weights, backfill,
+    /// preemption knobs) — the driver consults it for preemption
+    /// decisions and class defaults.
+    pub fn qos(&self) -> &QosPolicy {
+        &self.policy.qos
+    }
+
+    /// Drop a closed session's fair-share pass so the accounting map
+    /// cannot grow without bound across session churn.
+    pub fn forget_session(&self, session_id: u64) {
+        self.state.lock().unwrap().fair.forget(session_id);
     }
 
     /// True while `id` is granted to some session. The re-registration
@@ -135,14 +169,8 @@ impl PoolAllocator {
         self.state.lock().unwrap().granted.contains_key(&id)
     }
 
-    /// Acquire `count` workers for `session_id`.
-    ///
-    /// `wait: false` — grant immediately or fail with the paper's
-    /// `insufficient workers` error (also failing, for fairness, when
-    /// parked sessions are queued ahead even if the pool could cover it).
-    ///
-    /// `wait: true` — park in FIFO order until grantable or the timeout
-    /// (`timeout`, else the policy default) elapses.
+    /// Acquire `count` workers for `session_id` at the policy's default
+    /// class. See [`PoolAllocator::acquire_classed`].
     pub fn acquire(
         &self,
         session_id: u64,
@@ -150,9 +178,33 @@ impl PoolAllocator {
         wait: bool,
         timeout: Option<Duration>,
     ) -> Result<Vec<u32>> {
+        self.acquire_classed(session_id, count, None, wait, timeout)
+    }
+
+    /// Acquire `count` workers for `session_id` under `class` (policy
+    /// default when `None`).
+    ///
+    /// `wait: false` — grant immediately (including by backfill past
+    /// queued requests the policy allows bypassing) or fail with the
+    /// paper's `insufficient workers` error.
+    ///
+    /// `wait: true` — park in the admission queue until the policy picks
+    /// this request or the timeout (`timeout`, else the policy default)
+    /// elapses. A request that would transiently exceed the session
+    /// quota parks as quota-blocked: it is skipped by admission (never a
+    /// barrier to others) until releases free the session's charge.
+    pub fn acquire_classed(
+        &self,
+        session_id: u64,
+        count: u32,
+        class: Option<QosClass>,
+        wait: bool,
+        timeout: Option<Duration>,
+    ) -> Result<Vec<u32>> {
         if count == 0 {
             return Err(Error::Server("cannot request 0 workers".into()));
         }
+        let class = class.unwrap_or(self.policy.qos.default_class);
         let quota = self.policy.max_workers_per_session;
         let mut st = self.state.lock().unwrap();
         // Fast-fail requests the *current* live capacity can never
@@ -167,7 +219,10 @@ impl PoolAllocator {
         }
         if quota > 0 {
             let would_hold = st.held.get(&session_id).copied().unwrap_or(0) + count;
-            if would_hold > quota {
+            // `count > quota` can never be satisfied; a merely transient
+            // excess only fast-fails non-waiting requests — waiters park
+            // as quota-blocked below.
+            if would_hold > quota && (!wait || count > quota) {
                 return Err(Error::Server(format!(
                     "session quota exceeded: requesting {count} would hold {would_hold} \
                      workers, sched.max_workers_per_session = {quota}"
@@ -175,10 +230,22 @@ impl PoolAllocator {
             }
         }
 
-        if st.queue.is_empty() && st.free.len() as u32 >= count {
-            return Ok(Self::grant(&mut st, session_id, count, &self.metrics));
+        // Enqueue, then ask the policy whether this request is the one to
+        // grant right now (head of fair-share order, or backfillable).
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        let pass = st.fair.pass_for(session_id);
+        st.queue.push_back(Entry { ticket, session: session_id, count, class, pass, bypassed: 0 });
+        self.sync_queue_gauges(&st);
+        if let Some(ids) = self.try_grant_ticket(&mut st, ticket) {
+            // The grant moved free workers and this session's quota
+            // charge; parked waiters must re-evaluate the policy.
+            self.cv.notify_all();
+            return Ok(ids);
         }
         if !wait {
+            st.queue.retain(|e| e.ticket != ticket);
+            self.sync_queue_gauges(&st);
             return Err(Error::Server(format!(
                 "insufficient workers: requested {count}, available {} ({} queued ahead)",
                 st.free.len(),
@@ -186,13 +253,6 @@ impl PoolAllocator {
             )));
         }
 
-        // Park in FIFO order.
-        let ticket = st.next_ticket;
-        st.next_ticket += 1;
-        st.queue.push_back(Waiter { ticket, count });
-        // The gauge mirrors the queue; always set() from the
-        // authoritative length under the lock so it cannot drift.
-        self.metrics.queue_depth.set(st.queue.len() as i64);
         let waited = Timer::start();
         // Clamp the budget (clients send timeout_ms over the wire):
         // unchecked `Instant + huge Duration` would panic while the
@@ -208,8 +268,8 @@ impl PoolAllocator {
             // wakes waiters, but a parked session does not gamble the
             // queue head on recovery).
             if count > self.total - st.lost.len() as u32 {
-                st.queue.retain(|w| w.ticket != ticket);
-                self.metrics.queue_depth.set(st.queue.len() as i64);
+                st.queue.retain(|e| e.ticket != ticket);
+                self.sync_queue_gauges(&st);
                 self.metrics.phases.add("alloc_wait", waited.elapsed());
                 self.cv.notify_all();
                 return Err(Error::Server(format!(
@@ -217,24 +277,16 @@ impl PoolAllocator {
                     self.total - st.lost.len() as u32
                 )));
             }
-            let head_ok = st
-                .queue
-                .front()
-                .map(|w| w.ticket == ticket && st.free.len() as u32 >= w.count)
-                .unwrap_or(false);
-            if head_ok {
-                st.queue.pop_front();
-                self.metrics.queue_depth.set(st.queue.len() as i64);
+            if let Some(ids) = self.try_grant_ticket(&mut st, ticket) {
                 self.metrics.phases.add("alloc_wait", waited.elapsed());
-                let ids = Self::grant(&mut st, session_id, count, &self.metrics);
-                // The next waiter may also be satisfiable now.
+                // The next pick may also be satisfiable now.
                 self.cv.notify_all();
                 return Ok(ids);
             }
             let now = Instant::now();
             if now >= deadline {
-                st.queue.retain(|w| w.ticket != ticket);
-                self.metrics.queue_depth.set(st.queue.len() as i64);
+                st.queue.retain(|e| e.ticket != ticket);
+                self.sync_queue_gauges(&st);
                 self.metrics.counters.add("grant_timeouts", 1);
                 self.metrics.phases.add("alloc_wait", waited.elapsed());
                 // Our departure may unblock the waiter behind us.
@@ -250,22 +302,59 @@ impl PoolAllocator {
         }
     }
 
-    fn grant(
-        st: &mut AllocState,
-        session_id: u64,
-        count: u32,
-        metrics: &SchedMetrics,
-    ) -> Vec<u32> {
-        let ids: Vec<u32> = st.free.iter().take(count as usize).copied().collect();
-        debug_assert_eq!(ids.len(), count as usize);
+    /// Run the admission policy; iff `ticket` is its pick, commit the
+    /// grant — bypass accounting for requests the pick jumped over,
+    /// dequeue, worker handout, quota charge, fair-share charge — and
+    /// return the worker ids. Callers `notify_all` after a `Some`.
+    fn try_grant_ticket(&self, st: &mut AllocState, ticket: u64) -> Option<Vec<u32>> {
+        let p = policy::pick(
+            &st.queue,
+            st.free.len() as u32,
+            &st.held,
+            self.policy.max_workers_per_session,
+            self.policy.qos.backfill,
+        )?;
+        if p.ticket != ticket {
+            return None;
+        }
+        // Only the committing caller applies bypass accounting — `pick`
+        // itself stays pure so every parked waiter can re-evaluate it
+        // without skewing the starvation bound.
+        if !p.bypassed.is_empty() {
+            for e in st.queue.iter_mut() {
+                if p.bypassed.contains(&e.ticket) {
+                    e.bypassed += 1;
+                }
+            }
+            self.metrics.counters.add("backfills", 1);
+        }
+        let pos = st.queue.iter().position(|e| e.ticket == ticket)?;
+        let e = st.queue.remove(pos).expect("position just found");
+        self.sync_queue_gauges(st);
+        let ids: Vec<u32> = st.free.iter().take(e.count as usize).copied().collect();
+        debug_assert_eq!(ids.len(), e.count as usize);
         for id in &ids {
             st.free.remove(id);
-            let prev = st.granted.insert(*id, session_id);
+            let prev = st.granted.insert(*id, e.session);
             debug_assert!(prev.is_none(), "double-grant of worker {id}");
         }
-        *st.held.entry(session_id).or_insert(0) += count;
-        metrics.counters.add("grants", 1);
-        ids
+        *st.held.entry(e.session).or_insert(0) += e.count;
+        st.fair.charge(e.session, e.count, e.class, &self.policy.qos);
+        self.metrics.counters.add("grants", 1);
+        Some(ids)
+    }
+
+    /// The gauges mirror the queue; always set() from the authoritative
+    /// contents under the lock so they cannot drift.
+    fn sync_queue_gauges(&self, st: &AllocState) {
+        self.metrics.queue_depth.set(st.queue.len() as i64);
+        let mut by_class = [0i64; 3];
+        for e in &st.queue {
+            by_class[e.class.idx()] += 1;
+        }
+        self.metrics.queue_depth_interactive.set(by_class[0]);
+        self.metrics.queue_depth_batch.set(by_class[1]);
+        self.metrics.queue_depth_best_effort.set(by_class[2]);
     }
 
     /// Remove workers from circulation (e.g. a group wedged in collective
@@ -294,7 +383,8 @@ impl PoolAllocator {
             self.metrics.counters.add("quarantined_workers", moved as u64);
             self.metrics.lost_workers.set(st.lost.len() as i64);
             // Wake parked waiters: requests exceeding the shrunken live
-            // capacity must fail fast rather than sit at the queue head.
+            // capacity must fail fast rather than sit at the queue head,
+            // and the dropped quota charge may unblock a parked request.
             self.cv.notify_all();
         }
     }
@@ -347,9 +437,14 @@ mod tests {
     use super::*;
 
     fn alloc(n: u32, quota: u32, timeout_ms: u64) -> PoolAllocator {
+        alloc_with_qos(n, quota, timeout_ms, QosPolicy::default())
+    }
+
+    fn alloc_with_qos(n: u32, quota: u32, timeout_ms: u64, qos: QosPolicy) -> PoolAllocator {
         let policy = AllocPolicy {
             max_workers_per_session: quota,
             default_wait_timeout: Duration::from_millis(timeout_ms),
+            qos,
         };
         PoolAllocator::new(0..n, policy, Arc::new(SchedMetrics::new()))
     }
@@ -382,6 +477,10 @@ mod tests {
         assert!(err.to_string().contains("quota"), "{err}");
         // other sessions unaffected
         a.acquire(2, 2, false, None).unwrap();
+        // a single request above the quota can never be satisfied, so it
+        // fast-fails even with wait: true
+        let err = a.acquire(3, 3, true, None).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
     }
 
     #[test]
@@ -423,7 +522,8 @@ mod tests {
         while a.queue_depth() < 2 {
             std::thread::sleep(Duration::from_millis(5));
         }
-        // A non-waiting request may not overtake the queue.
+        // A non-waiting request may not overtake the queue (no worker is
+        // free, so there is no backfill window either).
         assert!(a.acquire(4, 1, false, None).is_err());
         a.release(1, &g);
         let w1 = first.join().unwrap().unwrap();
@@ -433,6 +533,69 @@ mod tests {
         let w2 = second.join().unwrap().unwrap();
         assert_eq!(w2, vec![0]);
         a.release(3, &w2);
+    }
+
+    /// PR 10 regression (parked-waiter wakeups + backfill): a small
+    /// request is granted straight through a queue whose entries are
+    /// quota-blocked or too big to fit, and releases then drain every
+    /// parked waiter — nobody sleeps through its admission window.
+    #[test]
+    fn backfill_grants_small_request_past_blocked_and_oversized_waiters() {
+        let a = Arc::new(alloc(3, 2, 5_000));
+        // Session 1 holds its full quota of 2...
+        let g1 = a.acquire(1, 2, false, None).unwrap();
+        // ...and parks for 2 more on another thread (the driver's requeue
+        // path acquires from job threads, so one session's requests race
+        // its control thread). This entry is quota-blocked.
+        let a2 = a.clone();
+        let blocked = std::thread::spawn(move || a2.acquire(1, 2, true, None));
+        while a.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Session 2 parks for 2, but only 1 worker is free: too big.
+        let a3 = a.clone();
+        let big = std::thread::spawn(move || a3.acquire(2, 2, true, None));
+        while a.queue_depth() < 2 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Session 3 asks for 1 without waiting: pre-v11 strict FIFO would
+        // refuse (two parked ahead); backfill grants the idle worker.
+        let g3 = a.acquire(3, 1, false, None).unwrap();
+        assert_eq!(g3, vec![2]);
+        assert_eq!(a.queue_depth(), 2, "parked waiters stay queued");
+        // Drain: freeing session 1's grant unblocks its parked request
+        // (quota charge drops), which must win over session 2 (lower
+        // pass was fixed at enqueue; equal passes fall back to ticket).
+        a.release(3, &g3);
+        a.release(1, &g1);
+        let g1b = blocked.join().unwrap().unwrap();
+        assert_eq!(g1b.len(), 2);
+        a.release(1, &g1b);
+        let g2 = big.join().unwrap().unwrap();
+        assert_eq!(g2.len(), 2);
+        a.release(2, &g2);
+        assert_eq!(a.queue_depth(), 0);
+        assert_eq!(a.free_count(), 3);
+    }
+
+    #[test]
+    fn backfill_disabled_preserves_strict_fifo_barrier() {
+        let qos = QosPolicy { backfill: false, ..QosPolicy::default() };
+        let a = Arc::new(alloc_with_qos(2, 0, 5_000, qos));
+        let g1 = a.acquire(1, 1, false, None).unwrap();
+        // Session 2 parks for 2 with one worker idle: does not fit, and
+        // with backfill off it is a hard barrier.
+        let a2 = a.clone();
+        let big = std::thread::spawn(move || a2.acquire(2, 2, true, None));
+        while a.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let err = a.acquire(3, 1, false, None).unwrap_err();
+        assert!(err.to_string().contains("queued ahead"), "{err}");
+        a.release(1, &g1);
+        let g2 = big.join().unwrap().unwrap();
+        assert_eq!(g2, vec![0, 1]);
+        a.release(2, &g2);
     }
 
     #[test]
@@ -516,5 +679,33 @@ mod tests {
         a.release(1, &g); // double release is a no-op
         assert_eq!(a.free_count(), 2);
         assert_eq!(a.held_by(1), 0);
+    }
+
+    #[test]
+    fn classed_acquire_reports_per_class_depths() {
+        let a = Arc::new(alloc(1, 0, 5_000));
+        let g = a.acquire(1, 1, false, None).unwrap();
+        let (a2, a3) = (a.clone(), a.clone());
+        let w1 = std::thread::spawn(move || {
+            a2.acquire_classed(2, 1, Some(QosClass::Interactive), true, None)
+        });
+        while a.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let w2 = std::thread::spawn(move || {
+            a3.acquire_classed(3, 1, Some(QosClass::BestEffort), true, None)
+        });
+        while a.queue_depth() < 2 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(a.queue_depth_by_class(), [1, 0, 1]);
+        a.release(1, &g);
+        // Equal passes (both sessions fresh): the earlier ticket wins
+        // first; class weights only matter across repeated grants.
+        let g2 = w1.join().unwrap().unwrap();
+        a.release(2, &g2);
+        let g3 = w2.join().unwrap().unwrap();
+        a.release(3, &g3);
+        assert_eq!(a.queue_depth_by_class(), [0, 0, 0]);
     }
 }

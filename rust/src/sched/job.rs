@@ -3,7 +3,11 @@
 //! A job is one `SubmitRoutine` call: it enters the table `Queued`, a
 //! driver thread moves it to `Running` once it holds the session's
 //! routine lock, and it finishes `Done` (carrying the routine outputs and
-//! new matrix metadata) or `Failed`. A terminal result is never evicted
+//! new matrix metadata) or `Failed`. Since protocol v11 a running job may
+//! also detour through `Preempted { count }` (non-terminal): the driver
+//! preempted its worker group for a higher-priority session and will
+//! re-run it on a fresh grant — `request_preempt` selects a victim,
+//! `preempt` parks it, `set_running` restarts it. A terminal result is never evicted
 //! before the client has read it (`get`/`wait` mark delivery); once
 //! *delivered*, only the most recent [`DEFAULT_RETAINED_TERMINAL`]
 //! entries are kept (oldest evicted FIFO), so a long-lived session
@@ -64,6 +68,16 @@ struct Job {
     /// Spec-derived admission cost (0.0 when the library publishes no
     /// specs); counted in `inflight_cost` until the job is terminal.
     cost: f64,
+    /// Times this job has been preempted so far (bounded by
+    /// `sched.max_preemptions_per_job` at victim selection).
+    preemptions: u32,
+    /// A preemption cancel is in flight to the worker group; the job
+    /// thread checks this when its routine aborts to requeue the job
+    /// instead of failing it.
+    preempt_pending: bool,
+    /// The client asked to cancel this job; a concurrent preemption must
+    /// not resurrect it (cancel always wins).
+    cancel_requested: bool,
 }
 
 struct Inner {
@@ -147,17 +161,24 @@ impl JobTable {
                 delivered: false,
                 token,
                 cost,
+                preemptions: 0,
+                preempt_pending: false,
+                cancel_requested: false,
             },
         );
         id
     }
 
-    /// Move a queued job to `Running`. Returns false if the job is
-    /// unknown or already past `Queued` (e.g. failed by session close).
+    /// Move a queued (or preempted — the job restarts on a fresh grant)
+    /// job to `Running`. Returns false if the job is unknown or in any
+    /// other state (e.g. failed by session close or a concurrent cancel).
     pub fn set_running(&self, id: JobId) -> bool {
         let mut inner = self.inner.lock().unwrap();
         let ok = match inner.jobs.get_mut(&id) {
-            Some(j) if j.state == JobState::Queued => {
+            Some(j)
+                if j.state == JobState::Queued
+                    || matches!(j.state, JobState::Preempted { .. }) =>
+            {
                 j.state = JobState::running();
                 true
             }
@@ -191,6 +212,60 @@ impl JobTable {
         ok
     }
 
+    /// Pick a preemption victim: the oldest `Running` job with no client
+    /// cancel in flight, no preemption already in flight, and fewer than
+    /// `max` preemptions so far. Marks it preempt-pending and returns its
+    /// id and invocation token (the caller relays the worker cancel under
+    /// that token). One table serves one session, so "oldest" is lowest
+    /// id. Returns `None` when no job is eligible.
+    pub fn request_preempt(&self, max: u32) -> Option<(JobId, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner
+            .jobs
+            .iter()
+            .filter(|(_, j)| {
+                matches!(j.state, JobState::Running { .. })
+                    && !j.cancel_requested
+                    && !j.preempt_pending
+                    && j.preemptions < max
+            })
+            .map(|(id, _)| *id)
+            .min()?;
+        let j = inner.jobs.get_mut(&id).expect("victim just selected");
+        j.preempt_pending = true;
+        Some((id, j.token))
+    }
+
+    /// True while a preemption cancel is in flight for `id` — the job
+    /// thread consults this when its routine aborts to distinguish a
+    /// preemption from a genuine failure.
+    pub fn preempt_pending(&self, id: JobId) -> bool {
+        self.inner.lock().unwrap().jobs.get(&id).is_some_and(|j| j.preempt_pending)
+    }
+
+    /// The routine aborted under a preemption cancel: move the job
+    /// `Running -> Preempted { count }` (non-terminal — the driver
+    /// re-acquires workers and re-runs it from scratch). Returns the new
+    /// preemption count, or `None` when a concurrent client cancel or
+    /// terminal transition won, in which case the caller must let the
+    /// failure stand. Inflight/cost accounting is untouched either way.
+    pub fn preempt(&self, id: JobId) -> Option<u32> {
+        let mut inner = self.inner.lock().unwrap();
+        let count = {
+            let j = inner.jobs.get_mut(&id)?;
+            j.preempt_pending = false;
+            if j.cancel_requested || !matches!(j.state, JobState::Running { .. }) {
+                return None;
+            }
+            j.preemptions += 1;
+            j.state = JobState::Preempted { count: j.preemptions };
+            j.preemptions
+        };
+        drop(inner);
+        self.cv.notify_all();
+        Some(count)
+    }
+
     /// Record a live progress report against a `Running` job (no-op in
     /// any other state — progress never resurrects a terminal job).
     pub fn update_progress(&self, id: JobId, phase: &str, frac: f64) {
@@ -203,19 +278,25 @@ impl JobTable {
         }
     }
 
-    /// Act on a client cancel request: queued jobs fail instantly (their
-    /// parked thread will observe the terminal state and bail); running
-    /// jobs report their token so the caller can relay the cancel to the
-    /// workers.
+    /// Act on a client cancel request: queued (and preempted — they are
+    /// off the workers, waiting for a fresh grant) jobs fail instantly;
+    /// running jobs report their token so the caller can relay the
+    /// cancel to the workers. A cancel on a running job also pins
+    /// `cancel_requested` so a racing preemption cannot resurrect it.
     pub fn request_cancel(&self, id: JobId) -> CancelDisposition {
         let mut inner = self.inner.lock().unwrap();
         let (disposition, freed_cost) = match inner.jobs.get_mut(&id) {
             None => (CancelDisposition::Unknown, None),
-            Some(j) if j.state == JobState::Queued => {
+            Some(j)
+                if j.state == JobState::Queued
+                    || matches!(j.state, JobState::Preempted { .. }) =>
+            {
                 j.state = JobState::Failed { message: "cancelled before start".into() };
+                j.cancel_requested = true;
                 (CancelDisposition::Queued, Some(j.cost))
             }
             Some(j) if matches!(j.state, JobState::Running { .. }) => {
+                j.cancel_requested = true;
                 (CancelDisposition::Running { token: j.token }, None)
             }
             Some(_) => (CancelDisposition::Terminal, None),
@@ -269,6 +350,9 @@ impl JobTable {
             if !j.delivered {
                 inner.undelivered = inner.undelivered.saturating_sub(1);
             }
+            // Keep the retention window keyed to live jobs only — a
+            // ghost id would consume an eviction slot.
+            inner.delivered_order.retain(|d| *d != id);
         }
         self.cv.notify_all();
     }
@@ -303,7 +387,13 @@ impl JobTable {
         if j.state.is_terminal() && !j.delivered {
             j.delivered = true;
             inner.undelivered = inner.undelivered.saturating_sub(1);
-            inner.delivered_order.push_back(id);
+            // Keyed on the job id: a job must occupy at most one
+            // retention slot no matter how many lifecycle round-trips
+            // (requeue, preempt) preceded its terminal state — a double
+            // entry would evict a neighbor's delivered result early.
+            if !inner.delivered_order.contains(&id) {
+                inner.delivered_order.push_back(id);
+            }
             while inner.delivered_order.len() > inner.retain_cap {
                 if let Some(old) = inner.delivered_order.pop_front() {
                     inner.jobs.remove(&old);
@@ -541,6 +631,89 @@ mod tests {
         assert!(!t.requeue(id), "terminal jobs are never resurrected");
         assert!(t.get(id).unwrap().state.is_terminal());
         assert!(!t.requeue(999));
+    }
+
+    #[test]
+    fn preempt_lifecycle_running_preempted_running_done() {
+        let t = JobTable::new();
+        let id = t.submit_with("truncated_svd", 21, 10.0);
+        // Nothing running yet: no victim.
+        assert_eq!(t.request_preempt(2), None);
+        t.set_running(id);
+        // Victim selection marks preempt-pending and reports the token.
+        assert_eq!(t.request_preempt(2), Some((id, 21)));
+        assert!(t.preempt_pending(id));
+        // A second preemption request cannot double-select the victim.
+        assert_eq!(t.request_preempt(2), None);
+        // The routine aborts; the job parks as Preempted{1}, non-terminal.
+        assert_eq!(t.preempt(id), Some(1));
+        assert!(!t.preempt_pending(id));
+        assert_eq!(t.get(id).unwrap().state, JobState::Preempted { count: 1 });
+        assert_eq!(t.inflight(), 1, "preempted jobs stay inflight");
+        assert_eq!(t.inflight_cost(), 10.0);
+        // Fresh grant: the job restarts and finishes normally.
+        assert!(t.set_running(id));
+        assert_eq!(t.request_preempt(2), Some((id, 21)));
+        assert_eq!(t.preempt(id), Some(2));
+        assert!(t.set_running(id));
+        // Preemption budget exhausted: never a victim again.
+        assert_eq!(t.request_preempt(2), None);
+        t.complete(id, vec![], vec![]);
+        assert!(t.get(id).unwrap().state.is_terminal());
+        assert_eq!(t.inflight(), 0);
+    }
+
+    #[test]
+    fn client_cancel_beats_preemption() {
+        let t = JobTable::new();
+        let id = t.submit_with("gemm", 9, 0.0);
+        t.set_running(id);
+        assert_eq!(t.request_preempt(2), Some((id, 9)));
+        // Client cancel lands while the preemption cancel is in flight.
+        assert_eq!(t.request_cancel(id), CancelDisposition::Running { token: 9 });
+        // The abort comes back: preemption must NOT resurrect the job.
+        assert_eq!(t.preempt(id), None);
+        t.fail(id, "cancelled by workers");
+        assert!(t.get(id).unwrap().state.is_terminal());
+        // Cancel of a Preempted job fails it instantly (it is off the
+        // workers, waiting for a fresh grant).
+        let id2 = t.submit_with("gemm", 10, 0.0);
+        t.set_running(id2);
+        assert_eq!(t.request_preempt(2), Some((id2, 10)));
+        assert_eq!(t.preempt(id2), Some(1));
+        assert_eq!(t.request_cancel(id2), CancelDisposition::Queued);
+        assert!(t.get(id2).unwrap().state.is_terminal());
+        assert!(!t.set_running(id2), "cancelled job must not restart");
+    }
+
+    /// PR 10 regression: one job occupies at most one retention slot and
+    /// `remove` purges its slot, so eviction can never fire early and
+    /// take a neighbor's delivered result with it.
+    #[test]
+    fn retention_slots_are_keyed_on_job_id() {
+        let t = JobTable::with_retention(2);
+        let a = t.submit("a");
+        t.complete(a, vec![], vec![]);
+        // Deliver `a` several times over: still one slot.
+        for _ in 0..3 {
+            assert!(t.get(a).is_some());
+        }
+        t.remove(a);
+        // Two fresh deliveries fill the cap; neither may be evicted even
+        // though `a`'s ghost would have consumed a slot.
+        let b = t.submit("b");
+        let c = t.submit("c");
+        t.complete(b, vec![], vec![]);
+        t.complete(c, vec![], vec![]);
+        assert!(t.get(b).is_some());
+        assert!(t.get(c).is_some());
+        let d = t.submit("d");
+        t.complete(d, vec![], vec![]);
+        assert!(t.get(d).is_some());
+        // Cap 2: only now does the oldest delivery (b) age out.
+        assert!(t.get(b).is_none());
+        assert!(t.get(c).is_some());
+        assert!(t.get(d).is_some());
     }
 
     #[test]

@@ -8,10 +8,14 @@
 //! connection end to end. This module upgrades both halves:
 //!
 //! * [`allocator`] — [`PoolAllocator`]: exclusive first-fit worker grants
-//!   with an optional FIFO admission queue (`wait: true` requests park
-//!   until workers free up, with a timeout) and an optional per-session
-//!   quota. Fairness is strict FIFO: nobody — not even a non-waiting
-//!   request — jumps over a parked session.
+//!   with an optional admission queue (`wait: true` requests park until
+//!   workers free up, with a timeout) and an optional per-session quota.
+//! * [`policy`] — the admission decision kernel (since protocol v11):
+//!   QoS classes (interactive / batch / best_effort) with configurable
+//!   weights, stride-based weighted fair share across sessions, bounded
+//!   backfill (small requests may jump past non-fitting ones while idle
+//!   workers cover them), and the preemption knobs. With equal weights
+//!   and backfill off, admission degenerates to the pre-v11 strict FIFO.
 //! * [`job`] — [`JobTable`]: per-session tables of submitted routines
 //!   with `Queued -> Running -> Done | Failed` lifecycles, condvar-based
 //!   waiting, and result retention until the session closes. The driver
@@ -33,6 +37,8 @@
 
 pub mod allocator;
 pub mod job;
+pub mod policy;
 
 pub use allocator::{AllocPolicy, PoolAllocator};
 pub use job::{CancelDisposition, JobId, JobSnapshot, JobTable};
+pub use policy::{QosClass, QosPolicy};

@@ -1,0 +1,307 @@
+//! Admission policy for the worker-pool scheduler — the decision kernel
+//! `PoolAllocator` consults whenever it must pick which queued request
+//! (if any) to grant next.
+//!
+//! PR 10 split this out of `allocator.rs`: the allocator owns the
+//! mechanism (free set, grants, parking, quarantine), this module owns
+//! the *policy*:
+//!
+//! * **Priority classes** ([`QosClass`]: interactive / batch /
+//!   best_effort) with configurable weights.
+//! * **Weighted fair share** across sessions ([`FairShare`]) — stride
+//!   scheduling: each grant advances the session's *pass* by
+//!   `count * STRIDE_SCALE / weight(class)`, and the lowest pass goes
+//!   first, so a weight-8 interactive session is offered roughly 8x the
+//!   worker-grant throughput of a weight-1 scavenger under contention.
+//!   Ties break on ticket (arrival) order, which keeps single-shot
+//!   sessions exactly FIFO.
+//! * **Backfill** — a small waiting request may be granted out of order
+//!   iff it fits in the currently idle workers. A bypassed request's
+//!   [`Entry::bypassed`] counter bounds how often that may happen
+//!   ([`HEAD_BYPASS_LIMIT`]); past the bound the non-fitting request
+//!   becomes a hard barrier again, so backfill can never starve a large
+//!   request indefinitely.
+//! * **Preemption limits** ([`QosPolicy::max_preemptions_per_job`]) —
+//!   enforced by `JobTable::request_preempt`, configured here.
+//!
+//! Everything in this module is deterministic: [`pick`] is a pure
+//! function of the queue contents and the free count, so the same
+//! arrival schedule always produces the same grant order (the
+//! `no_starvation_under_weighted_fair_share` property test runs it as a
+//! simulation with no threads at all).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::SchedConfig;
+pub use crate::protocol::QosClass;
+
+/// Pass-arithmetic scale. Weights divide into this, so any weight in
+/// `[1, 2^20]` yields a distinct positive stride.
+pub const STRIDE_SCALE: u64 = 1 << 20;
+
+/// How many times a non-fitting request may be bypassed by backfilled
+/// smaller requests before it becomes a hard admission barrier.
+pub const HEAD_BYPASS_LIMIT: u32 = 16;
+
+/// The QoS half of the allocator's policy knobs (`[sched]` config).
+#[derive(Debug, Clone)]
+pub struct QosPolicy {
+    /// Grant-throughput weights per class, indexed by [`QosClass::idx`]
+    /// (interactive / batch / best_effort).
+    pub weights: [u32; 3],
+    /// Allow small requests to jump the queue when they fit in idle
+    /// workers.
+    pub backfill: bool,
+    /// Allow a high-priority arrival to cancel-and-requeue the
+    /// lowest-priority running job when the pool is full.
+    pub preemption: bool,
+    /// Upper bound on how many times one job may be preempted — victims
+    /// always eventually finish.
+    pub max_preemptions_per_job: u32,
+    /// Class assumed for sessions/jobs that do not name one.
+    pub default_class: QosClass,
+}
+
+impl Default for QosPolicy {
+    fn default() -> Self {
+        QosPolicy {
+            weights: [8, 4, 1],
+            backfill: true,
+            preemption: true,
+            max_preemptions_per_job: 2,
+            default_class: QosClass::Batch,
+        }
+    }
+}
+
+impl From<&SchedConfig> for QosPolicy {
+    fn from(cfg: &SchedConfig) -> Self {
+        QosPolicy {
+            weights: [
+                cfg.weight_interactive.max(1),
+                cfg.weight_batch.max(1),
+                cfg.weight_best_effort.max(1),
+            ],
+            backfill: cfg.backfill,
+            preemption: cfg.preemption,
+            max_preemptions_per_job: cfg.max_preemptions_per_job,
+            // Validated at config load; fall back to the default rather
+            // than panic if the struct was mutated directly.
+            default_class: QosClass::parse(&cfg.default_class).unwrap_or(QosClass::Batch),
+        }
+    }
+}
+
+impl QosPolicy {
+    pub fn weight(&self, class: QosClass) -> u64 {
+        u64::from(self.weights[class.idx()].max(1))
+    }
+}
+
+/// Stride-scheduling pass accounting per session. Monotonic: passes only
+/// ever advance, and a session that has consumed little sits at a lower
+/// pass than one that has consumed much, so it is offered workers first.
+#[derive(Debug, Default)]
+pub struct FairShare {
+    passes: HashMap<u64, u64>,
+    /// High-water mark of granted passes. New sessions join *at* the
+    /// mark: they compete fairly from now on but cannot retroactively
+    /// claim "unused" share from before they existed.
+    global: u64,
+}
+
+impl FairShare {
+    /// The pass a new request from `session` enqueues at.
+    pub fn pass_for(&self, session: u64) -> u64 {
+        self.passes.get(&session).copied().unwrap_or(0).max(self.global)
+    }
+
+    /// Account a grant of `count` workers to `session` under `class`.
+    pub fn charge(&mut self, session: u64, count: u32, class: QosClass, policy: &QosPolicy) {
+        let stride = STRIDE_SCALE / policy.weight(class);
+        let pass = self.pass_for(session) + u64::from(count) * stride.max(1);
+        self.passes.insert(session, pass);
+        self.global = self.global.max(pass);
+    }
+
+    /// Drop a session's accumulated pass (session closed).
+    pub fn forget(&mut self, session: u64) {
+        self.passes.remove(&session);
+    }
+}
+
+/// One queued allocation request.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Monotonic arrival ticket — the deterministic tie-break.
+    pub ticket: u64,
+    pub session: u64,
+    pub count: u32,
+    pub class: QosClass,
+    /// Fair-share pass at enqueue time (never recomputed — a request's
+    /// place in line is fixed unless others are granted around it).
+    pub pass: u64,
+    /// Times a backfilled smaller request has been granted past this
+    /// one while it could not fit.
+    pub bypassed: u32,
+}
+
+/// The decision [`pick`] returns: which ticket to grant now, and which
+/// non-fitting requests it would bypass (the *granting* caller bumps
+/// their counters — `pick` itself is pure so every parked waiter can
+/// re-evaluate it without skewing the accounting).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pick {
+    pub ticket: u64,
+    pub bypassed: Vec<u64>,
+}
+
+/// Choose the next request to grant from `queue` given `free` idle
+/// workers. Deterministic; no side effects.
+///
+/// Walks requests in (pass, ticket) order:
+/// * **quota-blocked** requests (their session already holds so much
+///   that granting would exceed `quota`) are skipped in every mode —
+///   they are waiting on their *own* session's releases, not on the
+///   pool, so they never barrier anyone;
+/// * the first request that **fits** in `free` wins;
+/// * a request that does **not** fit is a hard barrier when backfill is
+///   off or once it has been bypassed [`HEAD_BYPASS_LIMIT`] times;
+///   otherwise it is bypassed and the walk continues.
+pub fn pick(
+    queue: &VecDeque<Entry>,
+    free: u32,
+    held: &HashMap<u64, u32>,
+    quota: u32,
+    backfill: bool,
+) -> Option<Pick> {
+    let mut order: Vec<&Entry> = queue.iter().collect();
+    order.sort_by_key(|e| (e.pass, e.ticket));
+
+    let mut bypassed: Vec<u64> = Vec::new();
+    for e in order {
+        let would_hold = held.get(&e.session).copied().unwrap_or(0).saturating_add(e.count);
+        if quota > 0 && would_hold > quota {
+            continue; // quota-blocked: neither grantable nor a barrier
+        }
+        if e.count <= free {
+            return Some(Pick { ticket: e.ticket, bypassed });
+        }
+        if !backfill || e.bypassed >= HEAD_BYPASS_LIMIT {
+            return None; // hard barrier
+        }
+        bypassed.push(e.ticket);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(ticket: u64, session: u64, count: u32, class: QosClass, pass: u64) -> Entry {
+        Entry { ticket, session, count, class, pass, bypassed: 0 }
+    }
+
+    fn q(entries: Vec<Entry>) -> VecDeque<Entry> {
+        entries.into()
+    }
+
+    #[test]
+    fn equal_passes_fall_back_to_fifo() {
+        let queue = q(vec![
+            entry(1, 10, 2, QosClass::Batch, 0),
+            entry(2, 11, 2, QosClass::Batch, 0),
+        ]);
+        let p = pick(&queue, 4, &HashMap::new(), 0, true).unwrap();
+        assert_eq!(p.ticket, 1);
+        assert!(p.bypassed.is_empty());
+    }
+
+    #[test]
+    fn lower_pass_wins_regardless_of_arrival() {
+        let queue = q(vec![
+            entry(1, 10, 2, QosClass::BestEffort, 500),
+            entry(2, 11, 2, QosClass::Interactive, 100),
+        ]);
+        assert_eq!(pick(&queue, 4, &HashMap::new(), 0, true).unwrap().ticket, 2);
+    }
+
+    #[test]
+    fn backfill_skips_non_fitting_head_and_reports_it() {
+        let queue = q(vec![
+            entry(1, 10, 8, QosClass::Batch, 0), // head: does not fit in 3
+            entry(2, 11, 2, QosClass::Batch, 0),
+        ]);
+        let p = pick(&queue, 3, &HashMap::new(), 0, true).unwrap();
+        assert_eq!(p.ticket, 2);
+        assert_eq!(p.bypassed, vec![1]);
+        // backfill off: the head is a hard barrier
+        assert_eq!(pick(&queue, 3, &HashMap::new(), 0, false), None);
+    }
+
+    #[test]
+    fn bypass_limit_turns_head_into_barrier() {
+        let mut head = entry(1, 10, 8, QosClass::Batch, 0);
+        head.bypassed = HEAD_BYPASS_LIMIT;
+        let queue = q(vec![head, entry(2, 11, 2, QosClass::Batch, 0)]);
+        assert_eq!(pick(&queue, 3, &HashMap::new(), 0, true), None);
+    }
+
+    #[test]
+    fn quota_blocked_entries_never_barrier() {
+        // Session 10 already holds 2 of a quota of 2: its request is
+        // skipped even with backfill off, and session 11 is granted.
+        let held = HashMap::from([(10u64, 2u32)]);
+        let queue = q(vec![
+            entry(1, 10, 1, QosClass::Batch, 0),
+            entry(2, 11, 2, QosClass::Batch, 10),
+        ]);
+        assert_eq!(pick(&queue, 3, &held, 2, false).unwrap().ticket, 2);
+        assert_eq!(pick(&queue, 3, &held, 2, true).unwrap().ticket, 2);
+        // No quota: session 10's request is grantable again and its
+        // lower pass wins.
+        assert_eq!(pick(&queue, 3, &held, 0, true).unwrap().ticket, 1);
+    }
+
+    #[test]
+    fn nothing_fits_is_none() {
+        let queue = q(vec![
+            entry(1, 10, 8, QosClass::Batch, 0),
+            entry(2, 11, 9, QosClass::Batch, 0),
+        ]);
+        assert_eq!(pick(&queue, 3, &HashMap::new(), 0, true), None);
+        assert_eq!(pick(&q(vec![]), 3, &HashMap::new(), 0, true), None);
+    }
+
+    #[test]
+    fn fair_share_strides_by_weight() {
+        let policy = QosPolicy::default();
+        let mut fs = FairShare::default();
+        // Interactive (weight 8) advances 8x slower than best_effort
+        // (weight 1) for the same worker-count.
+        fs.charge(1, 4, QosClass::Interactive, &policy);
+        let interactive = fs.pass_for(1);
+        let mut fs2 = FairShare::default();
+        fs2.charge(2, 4, QosClass::BestEffort, &policy);
+        let scavenger = fs2.pass_for(2);
+        assert_eq!(scavenger, interactive * 8);
+        // Newcomers join at the global high-water mark, not at zero.
+        fs.charge(1, 100, QosClass::Batch, &policy);
+        assert_eq!(fs.pass_for(99), fs.pass_for(1));
+        fs.forget(1);
+        assert_eq!(fs.pass_for(1), fs.pass_for(99));
+    }
+
+    #[test]
+    fn policy_from_config_clamps_weights() {
+        let mut cfg = SchedConfig::default();
+        cfg.weight_interactive = 0; // direct struct mutation
+        cfg.default_class = "interactive".into();
+        let p = QosPolicy::from(&cfg);
+        assert_eq!(p.weights[0], 1, "zero weight clamps to 1");
+        assert_eq!(p.default_class, QosClass::Interactive);
+        cfg.default_class = "bogus".into();
+        assert_eq!(QosPolicy::from(&cfg).default_class, QosClass::Batch);
+    }
+}

@@ -5,9 +5,12 @@
 //! processes").
 //!
 //! Scheduling is delegated to the [`crate::sched`] subsystem: worker
-//! grants go through [`PoolAllocator`] (queued FIFO admission instead of
-//! hard failure when `wait: true`), and routines can be submitted
-//! asynchronously (`SubmitRoutine` -> job thread -> `PollJob`/`WaitJob`).
+//! grants go through [`PoolAllocator`] (queued admission instead of hard
+//! failure when `wait: true`; since protocol v11, admission is ordered by
+//! QoS class weights and stride-based fair share, with bounded backfill
+//! and preemption — see [`crate::sched::policy`]), and routines can be
+//! submitted asynchronously (`SubmitRoutine` -> job thread ->
+//! `PollJob`/`WaitJob`).
 //! Jobs within one session are serialized by a per-session routine lock —
 //! the worker group is an SPMD unit — but the control connection stays
 //! free, so a client can pipeline submissions and overlap transfer with
@@ -16,19 +19,20 @@
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 use crate::ali::registry::load_library;
 use crate::ali::Library;
-use crate::config::{SchedConfig, TelemetryConfig};
+use crate::client::transfer::{self, TransferOptions};
+use crate::config::{SchedConfig, TelemetryConfig, TransferConfig};
 use crate::metrics::{compute_metrics, transfer_metrics, SchedMetrics, Timer};
 use crate::protocol::{
     frame, ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta,
     Params, RoutineDescriptor, WireCodec, WorkerAck, WorkerCtl, WorkerHello, WorkerInfo,
     WorkerReply, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, TELEMETRY_PROTOCOL_VERSION,
 };
-use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator};
+use crate::sched::{AllocPolicy, CancelDisposition, JobTable, PoolAllocator, QosClass};
 use crate::server::MAX_ACCEPT_ERRORS;
 use crate::telemetry::trace::push_trace_ctx;
 use crate::telemetry::{unix_micros, TelemetryReport, TelemetrySink, AMBIENT_TRACE};
@@ -195,6 +199,11 @@ pub struct DriverCore {
     active_sessions: AtomicU32,
     /// Cumulative worker re-registrations (epoch bumps) across the pool.
     reregistrations: AtomicU64,
+    /// Live sessions by id (v11): the preemption scan walks this registry
+    /// to find the lowest-class tenant holding workers. `Weak` keeps each
+    /// session's lifetime owned by its control thread; entries are removed
+    /// in `cleanup_session` and dead weaks are skipped defensively.
+    sessions: Mutex<HashMap<u64, Weak<SessionShared>>>,
 }
 
 impl DriverCore {
@@ -224,6 +233,7 @@ impl DriverCore {
             next_job_token: AtomicU64::new(1),
             active_sessions: AtomicU32::new(0),
             reregistrations: AtomicU64::new(0),
+            sessions: Mutex::new(HashMap::new()),
         })
     }
 
@@ -313,6 +323,11 @@ struct SessionShared {
     /// original job instead of double-running. Bounded FIFO (the client
     /// only ever replays its most recent submits).
     submit_nonces: Mutex<NonceCache>,
+    /// QoS class of this session's worker grant (v11): set by a classed
+    /// `RequestWorkers`, `sched.default_class` until then. Submissions
+    /// without their own class inherit it, and the preemption scan ranks
+    /// victims by it.
+    class: Mutex<QosClass>,
 }
 
 /// Bounded nonce -> job-id memory behind idempotent `SubmitRoutine`.
@@ -692,6 +707,11 @@ fn cleanup_session(s: &Arc<SessionShared>, core: &Arc<DriverCore>) {
         core.alloc.quarantine(s.id, &suspect);
     }
     core.alloc.release(s.id, &healthy);
+    // v11 bookkeeping: drop the session's fair-share pass state (ids are
+    // never reused, so keeping it would only grow the map) and its entry
+    // in the preemption registry.
+    core.alloc.forget_session(s.id);
+    core.sessions.lock().unwrap().remove(&s.id);
     core.active_sessions.fetch_sub(1, Ordering::SeqCst);
     info!("driver", "session {} ({}) closed", s.id, s.app_name);
 }
@@ -1144,7 +1164,7 @@ fn handle_client_msg(
             let id = core.next_session.fetch_add(1, Ordering::SeqCst);
             core.active_sessions.fetch_add(1, Ordering::SeqCst);
             info!("driver", "session {id} opened by {app_name:?} at v{negotiated}");
-            *session = Some(Arc::new(SessionShared {
+            let s = Arc::new(SessionShared {
                 id,
                 app_name,
                 wire_version: negotiated,
@@ -1161,7 +1181,10 @@ fn handle_client_msg(
                 closed: AtomicBool::new(false),
                 poison_cause: Mutex::new(None),
                 submit_nonces: Mutex::new(NonceCache::default()),
-            }));
+                class: Mutex::new(core.alloc.qos().default_class),
+            });
+            core.sessions.lock().unwrap().insert(id, Arc::downgrade(&s));
+            *session = Some(s);
             Ok(DriverMsg::HandshakeAck { session_id: id, version: negotiated })
         }
         ClientMsg::TransferCaps { codecs } => {
@@ -1174,7 +1197,7 @@ fn handle_client_msg(
             need_session(session)?;
             Ok(DriverMsg::TransferCaps { codecs: codecs & WireCodec::mask_all() })
         }
-        ClientMsg::RequestWorkers { count, wait, timeout_ms } => {
+        ClientMsg::RequestWorkers { count, wait, timeout_ms, class, deadline_ms } => {
             let s = need_session(session)?;
             if s.closed.load(Ordering::SeqCst) {
                 // A poisoned session must not acquire workers it can
@@ -1209,21 +1232,42 @@ fn handle_client_msg(
                     ));
                 }
             }
+            // v11: the class rides the request; pin it on the session so
+            // later submissions inherit it and the preemption scan can
+            // rank this tenant. Unclassed (≤ v10) requests keep the
+            // configured default.
+            let class = class.unwrap_or(core.alloc.qos().default_class);
+            *s.class.lock().unwrap() = class;
             // The server's wait_timeout_ms is a ceiling, not just the
             // default: a parked session head-blocks the FIFO queue, so
             // clients may shorten the wait but never extend it (a
             // crashed client's park would otherwise stall every tenant
-            // for a client-chosen duration).
-            let cap_ms = core.sched_cfg.wait_timeout_ms;
-            let timeout = if timeout_ms == 0 {
+            // for a client-chosen duration). The v11 deadline hint caps
+            // it further — a grant after the deadline is useless to the
+            // client, so don't park past it.
+            let mut cap_ms = core.sched_cfg.wait_timeout_ms;
+            if deadline_ms > 0 {
+                cap_ms = cap_ms.min(deadline_ms);
+            }
+            let timeout = if timeout_ms == 0 && deadline_ms == 0 {
                 None
+            } else if timeout_ms == 0 {
+                Some(Duration::from_millis(cap_ms))
             } else {
                 Some(Duration::from_millis(timeout_ms.min(cap_ms)))
             };
             // Ambient span covering queue wait + mesh formation; recorded
             // on failure too (a timed-out grant is a timeline event).
             let _grant = core.telemetry.span(AMBIENT_TRACE, "grant");
-            let ids = core.alloc.acquire(s.id, count, wait, timeout)?;
+            // v11 preemption: a waiting arrival that cannot be covered by
+            // the free pool may evict the lowest-class running job below
+            // its own class (cancel → quarantine → Reset → readmit), then
+            // park; the readmitted capacity satisfies this acquire.
+            let free = core.alloc.free_count();
+            if wait && core.alloc.qos().preemption && free < count {
+                try_preempt(core, s.id, class);
+            }
+            let ids = core.alloc.acquire_classed(s.id, count, Some(class), wait, timeout)?;
             // Injection site `driver.delay_grant`: stretch the window
             // between allocation and mesh formation (where concurrent
             // re-registrations / client timeouts can interleave).
@@ -1336,8 +1380,11 @@ fn handle_client_msg(
                 execute_routine(core, s, &library, &routine, &params, &output_handles)?;
             Ok(DriverMsg::RoutineResult { outputs, new_matrices })
         }
-        ClientMsg::SubmitRoutine { library, routine, params, nonce } => {
+        ClientMsg::SubmitRoutine { library, routine, params, nonce, class, deadline_ms } => {
             let s = need_session(session)?;
+            // v11: a submission may carry its own class; otherwise it
+            // inherits the session's (which a classed RequestWorkers set).
+            let job_class = class.unwrap_or(*s.class.lock().unwrap());
             // v10 idempotency: a nonce we have already accepted means the
             // client never saw the original JobAccepted (lost reply /
             // retried call) — return the same job id; the job runs once.
@@ -1419,6 +1466,8 @@ fn handle_client_msg(
                         job_id,
                         job_token,
                         submit_us,
+                        job_class,
+                        deadline_ms,
                         &library,
                         &routine,
                         params,
@@ -1571,6 +1620,7 @@ fn handle_client_msg(
             lost_workers: core.alloc.lost_count(),
             recovered_workers: core.metrics.counters.get("readmitted_workers") as u32,
             worker_epochs: core.reregistrations.load(Ordering::SeqCst) as u32,
+            queued_by_class: core.alloc.queue_depth_by_class(),
         }),
     }
 }
@@ -1641,6 +1691,68 @@ fn fetch_telemetry(
     Ok(report)
 }
 
+/// v11 preemption scan: pick the victim — the live session of the lowest
+/// class rank *strictly below* the arrival's (ties broken toward the
+/// oldest session id) that holds workers and has a preemptible running
+/// job — and ask that routine to abort over the data plane. The victim's
+/// job thread sees the pending mark when the abort surfaces as an error
+/// and detours through `preempt_and_requeue`; its quarantined workers
+/// re-enter the free pool via the prober's Reset → readmit cycle, where
+/// the waiting arrival's parked acquire picks them up. One victim per
+/// arrival — bulk eviction would let one burst flush every tenant below
+/// it — and `sched.max_preemptions_per_job` bounds how often any single
+/// job can be bounced (`request_preempt` refuses exhausted jobs).
+fn try_preempt(core: &DriverCore, requester: u64, class: QosClass) {
+    let max = core.alloc.qos().max_preemptions_per_job;
+    let mut victims: Vec<(u8, u64, Arc<SessionShared>)> = Vec::new();
+    {
+        let sessions = core.sessions.lock().unwrap();
+        for (&id, weak) in sessions.iter() {
+            if id == requester {
+                continue;
+            }
+            let Some(v) = weak.upgrade() else { continue };
+            if v.closed.load(Ordering::SeqCst) || v.workers.lock().unwrap().is_empty() {
+                continue;
+            }
+            let rank = v.class.lock().unwrap().rank();
+            if rank < class.rank() {
+                victims.push((rank, id, v));
+            }
+        }
+    }
+    victims.sort_by_key(|(rank, id, _)| (*rank, *id));
+    for (_, id, v) in victims {
+        let Some((job_id, token)) = v.jobs.request_preempt(max) else { continue };
+        // Same cooperative abort as CancelJob: every worker's cancel
+        // token flips and the routine bails at its next checkpoint.
+        let conns: Vec<Arc<WorkerConn>> = v.workers.lock().unwrap().clone();
+        for w in conns {
+            if let Err(e) = data_call(&w.data_addr, &DataMsg::CancelRoutine { token }) {
+                debugln!("driver", "preempt relay to worker {}: {e}", w.id);
+            }
+        }
+        core.metrics.counters.add("preemptions", 1);
+        info!(
+            "driver",
+            "session {id}: job {job_id} preempted by {} arrival from session {requester}",
+            class.name()
+        );
+        return;
+    }
+}
+
+/// The per-class queue-wait phase name (v11 QoS telemetry): these sit
+/// alongside the job-scoped `queue_wait` span so `mixed_tenant` runs can
+/// compare interactive vs batch wait distributions from one registry.
+fn queue_wait_phase(class: QosClass) -> &'static str {
+    match class {
+        QosClass::Interactive => "queue_wait_interactive",
+        QosClass::Batch => "queue_wait_batch",
+        QosClass::BestEffort => "queue_wait_best_effort",
+    }
+}
+
 /// Body of one async job thread.
 #[allow(clippy::too_many_arguments)]
 fn run_job(
@@ -1649,6 +1761,8 @@ fn run_job(
     job_id: u64,
     job_token: u64,
     submit_us: u64,
+    class: QosClass,
+    deadline_ms: u64,
     library: &str,
     routine: &str,
     params: Params,
@@ -1665,12 +1779,14 @@ fn run_job(
     }
     // queue_wait (submit → turn) and execute (turn → terminal) partition
     // the job's wall time exactly — phase_breakdown() relies on that.
-    core.telemetry.record(
-        job_token,
-        "queue_wait",
-        submit_us,
-        unix_micros().saturating_sub(submit_us),
-    );
+    let wait_us = unix_micros().saturating_sub(submit_us);
+    core.telemetry.record(job_token, "queue_wait", submit_us, wait_us);
+    core.metrics.phases.add(queue_wait_phase(class), Duration::from_micros(wait_us));
+    // The deadline hint is advisory — the job still runs — but a miss is
+    // a countable scheduling failure the operator can alert on.
+    if deadline_ms > 0 && wait_us / 1000 > deadline_ms {
+        core.metrics.counters.add("deadline_missed", 1);
+    }
     {
         let _ctx = push_trace_ctx(job_token, "driver");
         let _exec = core.telemetry.span(job_token, "execute");
@@ -1768,6 +1884,26 @@ fn run_job_body(
                 return;
             }
             Err(ExecError::Fatal(e)) => {
+                // v11 preemption detour: if this failure is the abort the
+                // preemption scan injected (the routine cancelled with a
+                // pending preempt mark and the streams stayed synced), the
+                // job is not failing — it hands its workers to the higher
+                // class, re-queues, and re-runs to completion later.
+                if s.jobs.preempt_pending(job_id) && !s.closed.load(Ordering::SeqCst) {
+                    match preempt_and_requeue(core, s, job_id) {
+                        Ok(()) => continue,
+                        Err(pe) => {
+                            debugln!(
+                                "driver",
+                                "job {job_id} ({routine}) preemption resume failed: {pe}"
+                            );
+                            core.metrics.jobs_inflight.dec();
+                            s.jobs.fail(job_id, pe.to_string());
+                            core.metrics.counters.add("jobs_failed", 1);
+                            return;
+                        }
+                    }
+                }
                 debugln!("driver", "job {job_id} ({routine}) failed: {e}");
                 core.metrics.jobs_inflight.dec();
                 s.jobs.fail(job_id, e.to_string());
@@ -1820,25 +1956,39 @@ fn requeue_onto_fresh_grant(
         // Concurrent cancel/teardown won while we quarantined.
         return Err(Error::Cancelled(format!("job {job_id} cancelled during requeue")));
     }
-    // Block for fresh capacity: the quarantined workers re-enter the
-    // pool through the prober's ping → Reset → readmit cycle, or other
-    // free workers satisfy the grant sooner. `acquire` fast-fails while
-    // the shrunken live pool cannot cover the request (it only promises
-    // what the pool holds *today*), so poll it until the prober readmits
-    // capacity or the wait budget runs out.
+    regrant_workers(core, s, count, &format!("requeue after `{cause}`"))?;
+    if !s.jobs.set_running(job_id) {
+        return Err(Error::Cancelled(format!("job {job_id} cancelled during requeue")));
+    }
+    Ok(())
+}
+
+/// Block for a fresh `count`-worker grant at the session's current class,
+/// form its mesh, and race-check it into the session's (empty) worker
+/// slot. Shared tail of the PR 8 pre-execution requeue and the v11
+/// preemption resume: both quarantined the previous group first, so the
+/// grant typically waits for the prober's ping → Reset → readmit cycle to
+/// replenish the pool. `acquire_classed` fast-fails while the shrunken
+/// live pool cannot cover the request (it only promises what the pool
+/// holds *today*), so poll it until the prober readmits capacity or the
+/// wait budget runs out.
+fn regrant_workers(
+    core: &DriverCore,
+    s: &SessionShared,
+    count: u32,
+    context: &str,
+) -> Result<Vec<Arc<WorkerConn>>> {
+    let class = *s.class.lock().unwrap();
     let deadline = Instant::now() + Duration::from_millis(core.sched_cfg.wait_timeout_ms);
     let fresh_ids = loop {
         let now = Instant::now();
         let remaining = deadline.saturating_duration_since(now);
-        match core.alloc.acquire(s.id, count, true, Some(remaining.max(
-            Duration::from_millis(1),
-        ))) {
+        let timeout = Some(remaining.max(Duration::from_millis(1)));
+        match core.alloc.acquire_classed(s.id, count, Some(class), true, timeout) {
             Ok(ids) => break ids,
             Err(e) => {
                 if now >= deadline || s.closed.load(Ordering::SeqCst) {
-                    return Err(Error::Server(format!(
-                        "requeue after `{cause}`: re-grant failed: {e}"
-                    )));
+                    return Err(Error::Server(format!("{context}: re-grant failed: {e}")));
                 }
                 std::thread::sleep(Duration::from_millis(
                     core.sched_cfg.probe_interval_ms.clamp(10, 200),
@@ -1851,14 +2001,14 @@ fn requeue_onto_fresh_grant(
         Ok(_) => {}
         Err(SetupFailure::Clean(e)) => {
             core.alloc.release(s.id, &fresh_ids);
-            return Err(Error::Server(format!("requeue mesh formation failed: {e}")));
+            return Err(Error::Server(format!("{context}: mesh formation failed: {e}")));
         }
         Err(SetupFailure::Quarantined(e, bad)) => {
             core.alloc.quarantine(s.id, &bad);
             let good: Vec<u32> =
                 fresh_ids.iter().copied().filter(|id| !bad.contains(id)).collect();
             core.alloc.release(s.id, &good);
-            return Err(Error::Server(format!("requeue mesh formation failed: {e}")));
+            return Err(Error::Server(format!("{context}: mesh formation failed: {e}")));
         }
     }
     {
@@ -1871,15 +2021,127 @@ fn requeue_onto_fresh_grant(
             core.alloc.release(s.id, &fresh_ids);
             return Err(closed_session_error(s));
         }
-        *workers = conns;
+        *workers = conns.clone();
     }
+    info!("driver", "session {}: re-granted workers {fresh_ids:?} ({context})", s.id);
+    Ok(conns)
+}
+
+/// Matrix rows parked driver-side across a preemption: the victim's
+/// panels live on workers about to be Reset, so the driver pulls them up
+/// before yielding the group and re-uploads them onto the fresh grant.
+struct ParkedMatrix {
+    meta: MatrixMeta,
+    rows: Vec<(u64, Vec<f64>)>,
+}
+
+/// The v11 preemption resume, run by the victim's own job thread after
+/// its routine was aborted (caller holds the routine lock and observed
+/// `preempt_pending`). Order matters:
+///
+/// 1. Park the session's distributed matrices driver-side — the prober's
+///    Reset wipes every panel on the outgoing group. Replicated outputs
+///    are dropped (row routing cannot repopulate p replicas); the client
+///    re-runs the producing routine if it still needs them.
+/// 2. Flip the job `Running → Preempted { count }`. `preempt` refuses if
+///    a client cancel raced in — cancel wins and the job just fails.
+/// 3. Quarantine the worker group: the prober's Reset → readmit returns
+///    the capacity to the pool, where the preemptor's parked acquire
+///    picks it up.
+/// 4. Block for a fresh grant at the session's class and re-form the
+///    mesh (shared `regrant_workers` tail).
+/// 5. Restore the parked matrices onto the new group — same handles and
+///    shapes, new owner lists — and mark the job Running again; the
+///    caller then re-executes it from the top on identical inputs.
+fn preempt_and_requeue(core: &DriverCore, s: &SessionShared, job_id: u64) -> Result<()> {
+    if s.closed.load(Ordering::SeqCst) {
+        return Err(closed_session_error(s));
+    }
+    let conns: Vec<Arc<WorkerConn>> = s.workers.lock().unwrap().clone();
+    let count = conns.len() as u32;
+    if count == 0 {
+        return Err(Error::Server("preempted session holds no workers".into()));
+    }
+    let infos: Vec<WorkerInfo> = conns
+        .iter()
+        .map(|w| WorkerInfo {
+            id: w.id,
+            data_addr: w.data_addr.clone(),
+            uds_addr: w.uds_addr.clone(),
+        })
+        .collect();
+    let opts = TransferOptions::new(&TransferConfig::default(), 256, true, true);
+    let metas: Vec<MatrixMeta> = s.matrices.lock().unwrap().values().cloned().collect();
+    let mut parked: Vec<ParkedMatrix> = Vec::new();
+    for meta in metas {
+        if meta.layout.kind == LayoutKind::Replicated {
+            warnln!(
+                "driver",
+                "session {}: dropping replicated matrix {} across preemption",
+                s.id,
+                meta.handle
+            );
+            s.matrices.lock().unwrap().remove(&meta.handle);
+            continue;
+        }
+        let mut rows: Vec<(u64, Vec<f64>)> = Vec::with_capacity(meta.rows as usize);
+        transfer::fetch_rows(&infos, &meta, 0, meta.rows, &opts, |r, vals| {
+            rows.push((r, vals.to_vec()));
+            Ok(())
+        })
+        .map_err(|e| {
+            Error::Server(format!("preempt: parking matrix {} failed: {e}", meta.handle))
+        })?;
+        parked.push(ParkedMatrix { meta, rows });
+    }
+    let preempt_count = s.jobs.preempt(job_id).ok_or_else(|| {
+        Error::Cancelled(format!("job {job_id} cancelled during preemption"))
+    })?;
+    let dead: Vec<Arc<WorkerConn>> = std::mem::take(&mut *s.workers.lock().unwrap());
+    let ids: Vec<u32> = dead.iter().map(|w| w.id).collect();
     info!(
         "driver",
-        "session {}: job {job_id} re-granted workers {fresh_ids:?} after requeue",
+        "session {}: job {job_id} preempted (count {preempt_count}), yielding {ids:?}",
         s.id
     );
+    core.alloc.quarantine(s.id, &ids);
+    let fresh = regrant_workers(core, s, count, "preemption resume")?;
+    let fresh_infos: Vec<WorkerInfo> = fresh
+        .iter()
+        .map(|w| WorkerInfo {
+            id: w.id,
+            data_addr: w.data_addr.clone(),
+            uds_addr: w.uds_addr.clone(),
+        })
+        .collect();
+    for p in parked {
+        let meta = MatrixMeta {
+            handle: p.meta.handle,
+            rows: p.meta.rows,
+            cols: p.meta.cols,
+            layout: LayoutDesc {
+                kind: p.meta.layout.kind,
+                owners: fresh.iter().map(|w| w.id).collect(),
+            },
+        };
+        let alloc = WorkerCtl::AllocMatrix { session_id: s.id, meta: meta.clone() };
+        let restored = broadcast(&fresh, &alloc).and_then(|()| {
+            transfer::push_rows(&fresh_infos, &meta, p.rows.into_iter(), &opts).map(|_| ())
+        });
+        if let Err(e) = restored {
+            // The panels are gone either way — drop the handle so later
+            // references fail typed ("unknown handle") instead of
+            // chasing a stale owner list.
+            s.matrices.lock().unwrap().remove(&meta.handle);
+            return Err(Error::Server(format!(
+                "preempt: restoring matrix {} failed: {e}",
+                meta.handle
+            )));
+        }
+        s.matrices.lock().unwrap().insert(meta.handle, meta);
+    }
     if !s.jobs.set_running(job_id) {
-        return Err(Error::Cancelled(format!("job {job_id} cancelled during requeue")));
+        return Err(Error::Cancelled(format!("job {job_id} cancelled during preemption")));
     }
     Ok(())
 }

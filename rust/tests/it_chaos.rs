@@ -185,8 +185,13 @@ fn replayed_submit_nonce_returns_same_job_and_runs_once() {
         DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, PROTOCOL_VERSION),
         other => panic!("expected ack, got {other:?}"),
     }
-    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
-    {
+    let workers = match call(&ClientMsg::RequestWorkers {
+        count: 1,
+        wait: false,
+        timeout_ms: 0,
+        class: None,
+        deadline_ms: 0,
+    }) {
         DriverMsg::WorkersGranted { workers } => workers,
         other => panic!("expected grant, got {other:?}"),
     };
@@ -228,6 +233,8 @@ fn replayed_submit_nonce_returns_same_job_and_runs_once() {
         routine: "fro_norm".into(),
         params: vec![("A".to_string(), ParamValue::Matrix(meta.handle))],
         nonce: 0xDEAD_BEEF,
+        class: None,
+        deadline_ms: 0,
     };
     let job1 = match call(&submit) {
         DriverMsg::JobAccepted { job_id } => job_id,
@@ -427,6 +434,8 @@ fn v9_sessions_keep_the_legacy_wire_shape() {
         routine: "fro_norm".into(),
         params: vec![("A".to_string(), ParamValue::Matrix(7))],
         nonce,
+        class: None,
+        deadline_ms: 0,
     };
     let v9 = msg.encode_versioned(9);
     let v10 = msg.encode_versioned(10);
@@ -435,7 +444,12 @@ fn v9_sessions_keep_the_legacy_wire_shape() {
     assert_eq!(v10.len(), v9.len() + 8, "v10 adds exactly the 8-byte nonce");
     assert_eq!(&v10[1..v10.len() - 8], &v9[1..], "payload identical up to the nonce");
     assert_eq!(&v10[v10.len() - 8..], &nonce.to_le_bytes(), "nonce trails the frame");
-    assert_eq!(msg.encode(), v10, "default encoding is the current version");
+    // The current (v11) encoding keeps the v10 payload and appends the
+    // class byte + deadline; v10 sessions never see it.
+    let v11 = msg.encode();
+    assert_eq!(v11[0], 18, "current tag");
+    assert_eq!(&v11[1..v10.len()], &v10[1..], "payload identical up to the hints");
+    assert_eq!(v11.len(), v10.len() + 9, "v11 adds class byte + 8-byte deadline");
     // Decoding the legacy shape yields the no-dedup sentinel.
     match ClientMsg::decode(&v9).unwrap() {
         ClientMsg::SubmitRoutine { nonce, .. } => assert_eq!(nonce, 0),
@@ -458,8 +472,13 @@ fn v9_sessions_keep_the_legacy_wire_shape() {
         DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 9),
         other => panic!("expected ack, got {other:?}"),
     }
-    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
-    {
+    let workers = match call(&ClientMsg::RequestWorkers {
+        count: 1,
+        wait: false,
+        timeout_ms: 0,
+        class: None,
+        deadline_ms: 0,
+    }) {
         DriverMsg::WorkersGranted { workers } => workers,
         other => panic!("expected grant, got {other:?}"),
     };
@@ -500,6 +519,8 @@ fn v9_sessions_keep_the_legacy_wire_shape() {
         routine: "fro_norm".into(),
         params: vec![("A".to_string(), ParamValue::Matrix(meta.handle))],
         nonce: 0,
+        class: None,
+        deadline_ms: 0,
     }) {
         DriverMsg::JobAccepted { job_id } => job_id,
         other => panic!("expected JobAccepted, got {other:?}"),

@@ -107,7 +107,14 @@ fn message_before_handshake_rejected() {
     let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
     frame::write_frame(
         &mut conn,
-        &ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }.encode(),
+        &ClientMsg::RequestWorkers {
+            count: 1,
+            wait: false,
+            timeout_ms: 0,
+            class: None,
+            deadline_ms: 0,
+        }
+        .encode(),
     )
     .unwrap();
     let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();

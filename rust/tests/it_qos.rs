@@ -1,0 +1,264 @@
+//! Integration: the v11 QoS plane end-to-end — a higher-priority tenant
+//! preempts a running batch job (cancel → park matrices → quarantine →
+//! Reset → readmit → requeue) and the preempted job still completes with
+//! a bitwise-identical result; per-class queue depths surface through
+//! `ServerStatus`; and a raw v10 client keeps working against the v11
+//! server with the old byte shapes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alchemist::ali::params::{self, ParamsBuilder};
+use alchemist::ali::registry::install_factory;
+use alchemist::ali::{Library, RoutineCtx, RoutineOutput};
+use alchemist::client::{wrappers, AlchemistContext};
+use alchemist::comm::collectives::{self, AllReduceAlgo};
+use alchemist::config::Config;
+use alchemist::linalg::DenseMatrix;
+use alchemist::protocol::{frame, ClientMsg, DriverMsg, JobState, LayoutKind, Params, ParamValue};
+use alchemist::sched::QosClass;
+use alchemist::server::start_server;
+use alchemist::workload::random_matrix;
+use alchemist::{Error, Result};
+
+fn cfg(workers: u32) -> Config {
+    let mut c = Config::default();
+    c.server.workers = workers;
+    c.server.gemm_backend = "native".into();
+    // Fast quarantine → Reset → readmit so the preempted session's
+    // workers return to the pool within a few probe rounds.
+    c.sched.probe_interval_ms = 50;
+    c
+}
+
+/// Foreign ALI with one routine, `slow_norm(A, spin_ms) -> sumsq`: spins
+/// cooperatively (agreeing on the cancel flag at every step, like the
+/// real solvers do) and then computes `||A||_F^2` with a deterministic
+/// ring all-reduce. Slow enough to preempt mid-run, and — unlike
+/// `truncated_svd` with `tol = 0` — it completes once re-run.
+struct QosLib;
+
+impl Library for QosLib {
+    fn name(&self) -> &str {
+        "qoslib"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec!["slow_norm"]
+    }
+
+    fn run(&self, routine: &str, p: &Params, ctx: &mut RoutineCtx<'_>) -> Result<RoutineOutput> {
+        match routine {
+            "slow_norm" => {
+                let ha = params::get_matrix(p, "A")?;
+                let spin_ms = params::get_i64_or(p, "spin_ms", 0)? as u64;
+                let steps = spin_ms / 5;
+                for i in 0..steps {
+                    ctx.progress.report("spin", (i + 1) as f64 / steps as f64 * 0.8);
+                    if collectives::allreduce_flag(ctx.mesh, ctx.cancel.is_cancelled())? {
+                        return Err(Error::Cancelled("slow_norm cancelled".into()));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                let local: f64 = {
+                    let a = ctx.store.get(ha)?;
+                    a.local().data().iter().map(|x| x * x).sum()
+                };
+                let mut acc = vec![local];
+                collectives::allreduce_sum(ctx.mesh, &mut acc, AllReduceAlgo::Ring)?;
+                Ok(RoutineOutput {
+                    outputs: vec![("sumsq".into(), ParamValue::F64(acc[0]))],
+                    new_matrices: vec![],
+                })
+            }
+            other => Err(Error::Ali(format!("qoslib has no routine {other:?}"))),
+        }
+    }
+}
+
+fn sumsq(outputs: &[(String, ParamValue)]) -> f64 {
+    outputs
+        .iter()
+        .find(|(k, _)| k == "sumsq")
+        .and_then(|(_, v)| v.as_f64().ok())
+        .expect("sumsq output")
+}
+
+/// An interactive tenant arriving under a full pool preempts the batch
+/// tenant's running job. The job surfaces the typed `Preempted` state
+/// (not a failure), its matrices survive the park/restore round trip
+/// bit-for-bit, and the re-run result is bitwise identical to an
+/// unpreempted run of the same routine.
+#[test]
+fn preempted_job_completes_bitwise_identical() {
+    install_factory("test:qoslib", || Arc::new(QosLib));
+    let srv = start_server(&cfg(2)).unwrap();
+    let mut ac = AlchemistContext::connect(&srv.driver_addr, "batch").unwrap();
+    ac.request_workers(2).unwrap();
+    wrappers::register_elemlib(&ac).unwrap();
+    ac.register_library("qoslib", "test:qoslib").unwrap();
+
+    let a = DenseMatrix::from_vec(120, 32, random_matrix(11, 120, 32)).unwrap();
+    let al = ac.send_dense(&a, LayoutKind::RowBlock).unwrap();
+
+    let h = ac
+        .run_async(
+            "qoslib",
+            "slow_norm",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("spin_ms", 1500).build(),
+        )
+        .unwrap();
+
+    // Make sure the victim is actually mid-routine before the
+    // higher-priority tenant shows up.
+    let mut running = false;
+    for _ in 0..4000 {
+        if h.progress().unwrap().is_some() {
+            running = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(running, "batch job never reported progress");
+
+    // Interactive tenant: full-pool request with wait triggers the
+    // preemption path, holds the workers briefly, then releases.
+    let addr = srv.driver_addr.clone();
+    let urgent = std::thread::spawn(move || -> alchemist::Result<()> {
+        let mut ac2 = AlchemistContext::connect(&addr, "urgent")?;
+        ac2.qos_class = QosClass::Interactive;
+        ac2.request_workers_wait(2, 30_000)?;
+        std::thread::sleep(Duration::from_millis(300));
+        ac2.stop()
+    });
+
+    // The victim reports the typed non-terminal Preempted state while
+    // the interactive tenant holds its workers.
+    let mut saw_preempted = false;
+    for _ in 0..5000 {
+        match h.poll().unwrap() {
+            JobState::Preempted { count } => {
+                assert!(count >= 1, "preempted state with count {count}");
+                saw_preempted = true;
+                break;
+            }
+            state => assert!(
+                !state.is_terminal(),
+                "job reached terminal state before preemption was observed: {state:?}"
+            ),
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    urgent.join().unwrap().expect("interactive tenant failed");
+    assert!(saw_preempted, "never observed the Preempted job state");
+
+    // The preempted job completes — no failure, preemption count on the
+    // handle, result identical to the unpreempted re-run below.
+    let (outputs, _) = h.wait().expect("preempted job did not complete");
+    assert!(h.preemptions() >= 1, "handle lost the preemption count");
+    let preempted = sumsq(&outputs);
+
+    let (clean_outputs, _) = ac
+        .run(
+            "qoslib",
+            "slow_norm",
+            ParamsBuilder::new().matrix("A", al.handle()).i64("spin_ms", 0).build(),
+        )
+        .unwrap();
+    let clean = sumsq(&clean_outputs);
+    assert_eq!(
+        preempted.to_bits(),
+        clean.to_bits(),
+        "preempted result drifted: {preempted:e} vs {clean:e}"
+    );
+
+    // The parked-and-restored input matrix survived bit-for-bit.
+    assert!((wrappers::fro_norm(&ac, &al).unwrap() - a.frobenius_norm()).abs() < 1e-12);
+    ac.stop().unwrap();
+    srv.shutdown();
+}
+
+/// Per-class queue depths: a parked interactive request is visible as
+/// `queued_interactive` in `ServerStatus` and drains back to zero once
+/// granted.
+#[test]
+fn per_class_queue_depths_in_status() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let addr = srv.driver_addr.clone();
+    let mut hog = AlchemistContext::connect(&addr, "hog").unwrap();
+    hog.request_workers(1).unwrap();
+
+    let waddr = addr.clone();
+    let waiter = std::thread::spawn(move || -> alchemist::Result<()> {
+        let mut ac = AlchemistContext::connect(&waddr, "urgent")?;
+        ac.qos_class = QosClass::Interactive;
+        ac.request_workers_wait(1, 20_000)?;
+        ac.stop()
+    });
+
+    let obs = AlchemistContext::connect(&addr, "observer").unwrap();
+    let mut seen = (0, 0);
+    for _ in 0..400 {
+        let st = obs.scheduler_status().unwrap();
+        seen = (st.queued_interactive, st.queued_batch);
+        if seen.0 == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(seen, (1, 0), "parked interactive request not classified in status");
+
+    // The hog holds but runs nothing, so there is no job to preempt —
+    // the waiter is granted the normal way once the hog releases.
+    hog.stop().unwrap();
+    waiter.join().unwrap().expect("interactive waiter failed");
+    let st = obs.scheduler_status().unwrap();
+    assert_eq!((st.queued_interactive, st.queued_batch, st.queued_best_effort), (0, 0, 0));
+    obs.stop().unwrap();
+    srv.shutdown();
+}
+
+/// v10 interop over raw frames: a client that never heard of QoS sends
+/// the old `RequestWorkers` byte shape, gets its grant, and decodes the
+/// legacy `Status` reply (which carries no per-class depths).
+#[test]
+fn v10_raw_frames_still_interoperate() {
+    let srv = start_server(&cfg(1)).unwrap();
+    let mut conn = std::net::TcpStream::connect(&srv.driver_addr).unwrap();
+    let hello = ClientMsg::Handshake { app_name: "legacy".into(), version: 10 };
+    frame::write_frame(&mut conn, &hello.encode_versioned(10)).unwrap();
+    let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
+    assert!(matches!(reply, DriverMsg::HandshakeAck { .. }), "{reply:?}");
+
+    // v10 RequestWorkers: legacy tag, no class, no deadline.
+    let req = ClientMsg::RequestWorkers {
+        count: 1,
+        wait: false,
+        timeout_ms: 0,
+        class: None,
+        deadline_ms: 0,
+    };
+    let bytes = req.encode_versioned(10);
+    assert_eq!(bytes[0], 1, "v10 RequestWorkers must keep the legacy tag");
+    frame::write_frame(&mut conn, &bytes).unwrap();
+    let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
+    match reply {
+        DriverMsg::WorkersGranted { workers } => assert_eq!(workers.len(), 1),
+        other => panic!("v10 RequestWorkers rejected: {other:?}"),
+    }
+
+    // The Status reply to a v10 session keeps the legacy shape; the
+    // decoder fills the per-class depths with zeros.
+    frame::write_frame(&mut conn, &ClientMsg::ServerStatus.encode_versioned(10)).unwrap();
+    let reply = DriverMsg::decode(&frame::read_frame(&mut conn).unwrap()).unwrap();
+    match reply {
+        DriverMsg::Status { total_workers, free_workers, queued_by_class, .. } => {
+            assert_eq!(total_workers, 1);
+            assert_eq!(free_workers, 0);
+            assert_eq!(queued_by_class, [0, 0, 0]);
+        }
+        other => panic!("expected Status, got {other:?}"),
+    }
+    drop(conn);
+    srv.shutdown();
+}

@@ -208,8 +208,13 @@ fn v5_client_interop_against_v6_server() {
         DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 5),
         other => panic!("expected ack, got {other:?}"),
     }
-    let workers = match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 })
-    {
+    let workers = match call(&ClientMsg::RequestWorkers {
+        count: 1,
+        wait: false,
+        timeout_ms: 0,
+        class: None,
+        deadline_ms: 0,
+    }) {
         DriverMsg::WorkersGranted { workers } => workers,
         other => panic!("expected grant, got {other:?}"),
     };
@@ -254,6 +259,8 @@ fn v5_client_interop_against_v6_server() {
             ("k".to_string(), ParamValue::I64(k)),
         ],
         nonce: 0,
+        class: None,
+        deadline_ms: 0,
     }) {
         DriverMsg::JobAccepted { job_id } => job_id,
         other => panic!("expected JobAccepted, got {other:?}"),

@@ -190,7 +190,13 @@ fn v7_client_interop_and_fetch_refused() {
         DriverMsg::HandshakeAck { version, .. } => assert_eq!(version, 7),
         other => panic!("expected ack, got {other:?}"),
     }
-    match call(&ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }) {
+    match call(&ClientMsg::RequestWorkers {
+        count: 1,
+        wait: false,
+        timeout_ms: 0,
+        class: None,
+        deadline_ms: 0,
+    }) {
         DriverMsg::WorkersGranted { workers } => assert_eq!(workers.len(), 1),
         other => panic!("expected grant, got {other:?}"),
     }

@@ -242,7 +242,14 @@ fn v8_raw_session_gets_legacy_grants_and_plain_tcp() {
     // v8 clients go straight to RequestWorkers — no TransferCaps exchange
     frame::write_frame(
         &mut s,
-        &ClientMsg::RequestWorkers { count: 1, wait: false, timeout_ms: 0 }.encode(),
+        &ClientMsg::RequestWorkers {
+            count: 1,
+            wait: false,
+            timeout_ms: 0,
+            class: None,
+            deadline_ms: 0,
+        }
+        .encode(),
     )
     .unwrap();
     let raw = frame::read_frame(&mut s).unwrap();

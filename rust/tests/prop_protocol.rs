@@ -4,7 +4,7 @@
 use alchemist::bench_support::prop::{check, int_in};
 use alchemist::protocol::{
     ClientMsg, DataMsg, DriverMsg, JobState, LayoutDesc, LayoutKind, MatrixMeta, ParamValue,
-    Params, WireRow, WorkerCtl, WorkerReply,
+    Params, QosClass, WireRow, WorkerCtl, WorkerReply,
 };
 use alchemist::workload::Rng;
 
@@ -20,6 +20,15 @@ fn random_param(rng: &mut Rng) -> ParamValue {
         2 => ParamValue::Bool(rng.next_f64() < 0.5),
         3 => ParamValue::Str(random_string(rng, 20)),
         _ => ParamValue::Matrix(rng.next_u64()),
+    }
+}
+
+fn random_class(rng: &mut Rng) -> Option<QosClass> {
+    match rng.next_range(4) {
+        0 => Some(QosClass::Interactive),
+        1 => Some(QosClass::Batch),
+        2 => Some(QosClass::BestEffort),
+        _ => None,
     }
 }
 
@@ -58,6 +67,8 @@ fn client_msgs_roundtrip_random() {
                 count: rng.next_u64() as u32,
                 wait: rng.next_f64() < 0.5,
                 timeout_ms: rng.next_range(100_000),
+                class: random_class(rng),
+                deadline_ms: rng.next_range(100_000),
             },
             2 => ClientMsg::RegisterLibrary {
                 name: random_string(rng, 20),
@@ -80,6 +91,8 @@ fn client_msgs_roundtrip_random() {
                 routine: random_string(rng, 15),
                 params: random_params(rng),
                 nonce: rng.next_u64(),
+                class: random_class(rng),
+                deadline_ms: rng.next_range(100_000),
             },
             8 => ClientMsg::PollJob { job_id: rng.next_u64() },
             9 => ClientMsg::WaitJob { job_id: rng.next_u64(), timeout_ms: rng.next_u64() },
@@ -108,8 +121,9 @@ fn driver_msgs_roundtrip_random() {
             5 => DriverMsg::JobAccepted { job_id: rng.next_u64() },
             6 => DriverMsg::JobStatus {
                 job_id: rng.next_u64(),
-                state: match rng.next_range(5) {
+                state: match rng.next_range(6) {
                     0 => JobState::Queued,
+                    5 => JobState::Preempted { count: rng.next_u64() as u32 },
                     1 => JobState::running(),
                     4 => JobState::Running {
                         phase: random_string(rng, 12),

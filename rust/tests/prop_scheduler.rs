@@ -1,19 +1,23 @@
 //! Property tests on the `sched` allocator: under random acquire/release
 //! interleavings — sequential or truly concurrent — no worker is ever
-//! granted to two sessions at once, and accounting never drifts.
+//! granted to two sessions at once, and accounting never drifts. Plus a
+//! pure simulation over the v11 policy kernel (`sched::policy::pick`):
+//! weighted fair share with bounded backfill never starves any waiter.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use alchemist::bench_support::prop::{check, int_in};
 use alchemist::metrics::SchedMetrics;
-use alchemist::sched::{AllocPolicy, PoolAllocator};
+use alchemist::sched::policy::{pick, Entry, FairShare, QosPolicy, HEAD_BYPASS_LIMIT};
+use alchemist::sched::{AllocPolicy, PoolAllocator, QosClass};
 
 fn policy(timeout_ms: u64) -> AllocPolicy {
     AllocPolicy {
         max_workers_per_session: 0,
         default_wait_timeout: Duration::from_millis(timeout_ms),
+        qos: QosPolicy::default(),
     }
 }
 
@@ -130,6 +134,92 @@ fn allocator_never_double_grants_concurrent() {
         }
         if alloc.queue_depth() != 0 {
             return Err("queue not drained".into());
+        }
+        Ok(())
+    });
+}
+
+/// Pure simulation over the v11 policy kernel: random arrivals across
+/// sessions and QoS classes, grants committed exactly as the allocator
+/// commits them (bypass counters bumped, fair-share charged), grants
+/// released on a rolling basis. Bounded backfill must never let any
+/// waiter starve: every enqueued request is eventually granted, and no
+/// entry is ever bypassed more than `HEAD_BYPASS_LIMIT` times.
+#[test]
+fn no_starvation_under_weighted_fair_share() {
+    check("sched: no starvation under weighted fair share", 40, |rng| {
+        let pool = int_in(rng, 2, 8) as u32;
+        let qos = QosPolicy::default();
+        let classes = [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort];
+        let mut queue: VecDeque<Entry> = VecDeque::new();
+        let mut fair = FairShare::default();
+        let mut held: HashMap<u64, u32> = HashMap::new();
+        let mut inflight: VecDeque<(u64, u32)> = VecDeque::new();
+        let mut free = pool;
+        let mut next_ticket = 1u64;
+        let mut enqueued = 0u64;
+        let mut granted = 0u64;
+        let arrival_steps = 300u64;
+        for step in 0..arrival_steps + 10_000 {
+            let arrivals_open = step < arrival_steps;
+            if arrivals_open && rng.next_f64() < 0.6 {
+                let session = int_in(rng, 1, 4);
+                let class = classes[int_in(rng, 0, 2) as usize];
+                let count = int_in(rng, 1, pool as u64) as u32;
+                queue.push_back(Entry {
+                    ticket: next_ticket,
+                    session,
+                    count,
+                    class,
+                    pass: fair.pass_for(session),
+                    bypassed: 0,
+                });
+                next_ticket += 1;
+                enqueued += 1;
+            }
+            // Release the oldest in-flight grant every other step (every
+            // step once arrivals stop) so the pool keeps cycling.
+            if step % 2 == 1 || !arrivals_open {
+                if let Some((session, count)) = inflight.pop_front() {
+                    free += count;
+                    let h = held.get_mut(&session).unwrap();
+                    *h -= count;
+                    if *h == 0 {
+                        held.remove(&session);
+                    }
+                }
+            }
+            // Grant while the policy picks someone, committing the pick
+            // exactly as the allocator does.
+            while let Some(p) = pick(&queue, free, &held, 0, true) {
+                for e in queue.iter_mut() {
+                    if p.bypassed.contains(&e.ticket) {
+                        e.bypassed += 1;
+                        if e.bypassed > HEAD_BYPASS_LIMIT {
+                            return Err(format!(
+                                "ticket {} bypassed {} times (limit {HEAD_BYPASS_LIMIT})",
+                                e.ticket, e.bypassed
+                            ));
+                        }
+                    }
+                }
+                let pos = queue.iter().position(|e| e.ticket == p.ticket).unwrap();
+                let e = queue.remove(pos).unwrap();
+                free -= e.count;
+                *held.entry(e.session).or_insert(0) += e.count;
+                fair.charge(e.session, e.count, e.class, &qos);
+                inflight.push_back((e.session, e.count));
+                granted += 1;
+            }
+            if !arrivals_open && queue.is_empty() && inflight.is_empty() {
+                break;
+            }
+        }
+        if granted != enqueued || !queue.is_empty() {
+            return Err(format!(
+                "starvation: {granted}/{enqueued} granted, {} still queued",
+                queue.len()
+            ));
         }
         Ok(())
     });

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Snapshot the perf-trajectory benchmarks into a single JSON file
-# (BENCH_PR9.json at the repo root).
+# (BENCH_PR10.json at the repo root).
 #
 # Runs table1_matmul (ring vs all-gather compute decomposition + the
 # Spark comparison), ablate_collectives (all-reduce + barrier),
 # ablate_scheduler (submission disciplines + the pool_recovery and
-# PR 8 fault_storm fault-injection scenarios), and the table2/table3 transfer benches
+# PR 8 fault_storm fault-injection scenarios + the PR 10 mixed_tenant
+# QoS scenario: per-class p50/p99 queue wait, v11 policy vs v10 FIFO),
+# and the table2/table3 transfer benches
 # (node grid + the PR 7 transport x compression sweep: tcp / uds /
 # striped-N x none / delta / f32), and ablate_gemm_backend (the PR 9
 # summa2d process-grid sweep), each with its machine-readable
@@ -18,7 +20,7 @@
 #        BUDGET_SECS=N spark-side budget (default 120)
 set -euo pipefail
 
-OUT="${1:-BENCH_PR9.json}"
+OUT="${1:-BENCH_PR10.json}"
 REPS="${REPS:-1}"
 BUDGET_SECS="${BUDGET_SECS:-120}"
 
@@ -38,7 +40,7 @@ cargo bench --bench ablate_collectives -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/collectives.json"
 
-echo "== bench_snapshot: ablate_scheduler + pool_recovery + fault_storm (reps=$REPS) =="
+echo "== bench_snapshot: ablate_scheduler + pool_recovery + fault_storm + mixed_tenant (reps=$REPS) =="
 cargo bench --bench ablate_scheduler -- \
     --set "bench.reps=$REPS" \
     --json "$TMP/scheduler.json"

@@ -133,6 +133,74 @@ class Checker:
                         self.err(where, f"{k!r} should be a number or null, got {row[k]!r}")
                 if not (row["timed_out"] is None or isinstance(row["timed_out"], bool)):
                     self.err(where, f"'timed_out' should be a bool or null, got {row['timed_out']!r}")
+            # PR 10: the mixed_tenant scenario reports per-class queue
+            # waits under the v11 QoS policy vs the v10 FIFO discipline.
+            mixed = [
+                r
+                for r in doc["ablate_scheduler"] or []
+                if isinstance(r, dict) and r.get("scenario") == "mixed_tenant"
+            ]
+            by_mode = {}
+            for i, row in enumerate(mixed):
+                where = f"ablate_scheduler.mixed_tenant[{i}]"
+                if not self.require_keys(
+                    row,
+                    [
+                        "mode",
+                        "backfill",
+                        "preemption",
+                        "interactive_p50_ms",
+                        "interactive_p99_ms",
+                        "batch_p50_ms",
+                        "batch_p99_ms",
+                        "batch_jobs_per_s",
+                        "interactive_jobs_per_s",
+                    ],
+                    where,
+                ):
+                    continue
+                for k in (
+                    "interactive_p50_ms",
+                    "interactive_p99_ms",
+                    "batch_p50_ms",
+                    "batch_p99_ms",
+                    "batch_jobs_per_s",
+                    "interactive_jobs_per_s",
+                ):
+                    if not is_num_or_null(row[k]):
+                        self.err(where, f"{k!r} should be a number or null, got {row[k]!r}")
+                for k in ("backfill", "preemption"):
+                    if not (row[k] is None or isinstance(row[k], bool)):
+                        self.err(where, f"{k!r} should be a bool or null, got {row[k]!r}")
+                if row["mode"] in ("qos", "fifo"):
+                    by_mode[row["mode"]] = row
+                elif row["mode"] is not None:
+                    self.err(where, f"'mode' should be 'qos'/'fifo' or null, got {row['mode']!r}")
+            # The acceptance claim the snapshot carries (null-safe: a
+            # schema seed skips both checks): the v11 policy improves the
+            # interactive p99 without giving up batch throughput.
+            if "qos" in by_mode and "fifo" in by_mode:
+                q, f = by_mode["qos"], by_mode["fifo"]
+                if (
+                    isinstance(q.get("interactive_p99_ms"), NUM)
+                    and isinstance(f.get("interactive_p99_ms"), NUM)
+                    and q["interactive_p99_ms"] > f["interactive_p99_ms"]
+                ):
+                    self.err(
+                        "ablate_scheduler.mixed_tenant",
+                        "qos interactive p99 should not exceed fifo: "
+                        f"{q['interactive_p99_ms']} vs {f['interactive_p99_ms']}",
+                    )
+                if (
+                    isinstance(q.get("batch_jobs_per_s"), NUM)
+                    and isinstance(f.get("batch_jobs_per_s"), NUM)
+                    and q["batch_jobs_per_s"] < 0.9 * f["batch_jobs_per_s"]
+                ):
+                    self.err(
+                        "ablate_scheduler.mixed_tenant",
+                        "qos batch throughput fell >10% below fifo: "
+                        f"{q['batch_jobs_per_s']} vs {f['batch_jobs_per_s']}",
+                    )
         # PR 7: the table2/table3 transfer benches emit transfer_grid
         # rows plus the transport x compression sweep.
         for section in ("table2_transfer_tall", "table3_transfer_wide"):
