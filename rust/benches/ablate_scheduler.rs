@@ -275,7 +275,7 @@ fn run_mixed_tenant(qos_on: bool) -> alchemist::Result<MixedStats> {
             let t = Timer::start();
             for i in 0..interactive_cycles {
                 let mut ac = AlchemistContext::connect(&addr, &format!("it{n}-{i}"))?;
-                ac.qos_class = QosClass::Interactive;
+                ac.qos_class = Some(QosClass::Interactive);
                 let w = Instant::now();
                 ac.request_workers_wait(1, 30_000)?;
                 waits.lock().unwrap().0.push(w.elapsed().as_secs_f64() * 1e3);

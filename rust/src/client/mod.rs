@@ -279,9 +279,10 @@ pub struct AlchemistContext {
     fault: Option<Arc<crate::fault::FaultPlane>>,
     /// QoS class this session requests workers (and, by inheritance,
     /// runs unclassed submissions) under — v11 sessions only; older
-    /// sessions never put it on the wire. Defaults to `Batch`, matching
-    /// the server's default for unclassed tenants.
-    pub qos_class: QosClass,
+    /// sessions never put it on the wire. Defaults to `None`, which
+    /// leaves the field off the wire so the server resolves its own
+    /// `sched.default_class`; set `Some(..)` to pin a class explicitly.
+    pub qos_class: Option<QosClass>,
     /// Monotonic source of v10 submission nonces (starts at 1; nonce 0
     /// on the wire means "no dedup").
     nonce_counter: AtomicU64,
@@ -341,7 +342,7 @@ impl AlchemistContext {
             phases: PhaseTimes::new(),
             retry: RetryConfig::default(),
             fault: None,
-            qos_class: QosClass::Batch,
+            qos_class: None,
             nonce_counter: AtomicU64::new(1),
             nodelay: true,
             negotiated: version,
@@ -500,13 +501,14 @@ impl AlchemistContext {
         wait: bool,
         timeout_ms: u64,
     ) -> Result<&[WorkerInfo]> {
-        // The session's class rides every request; `encode_versioned`
-        // drops it below v11, so older servers see their legacy shape.
+        // An explicitly-set class rides the request; the `None` default
+        // stays off the wire so the server applies `sched.default_class`
+        // (and `encode_versioned` drops the field below v11 either way).
         let msg = ClientMsg::RequestWorkers {
             count,
             wait,
             timeout_ms,
-            class: Some(self.qos_class),
+            class: self.qos_class,
             deadline_ms: 0,
         };
         match self.call(&msg)? {

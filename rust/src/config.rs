@@ -212,6 +212,12 @@ pub struct SchedConfig {
     /// Upper bound on preemptions of any single job — victims always
     /// eventually finish.
     pub max_preemptions_per_job: u32,
+    /// Preemption parking bound, MiB: a victim whose non-replicated
+    /// matrices would park more than this much row data in driver
+    /// memory across the regrant is skipped by the preemption scan
+    /// (0 = unbounded). This is what keeps one giant tenant from
+    /// OOMing the driver when it gets preempted.
+    pub max_preempt_park_mb: u32,
 }
 
 impl Default for SchedConfig {
@@ -231,6 +237,7 @@ impl Default for SchedConfig {
             backfill: true,
             preemption: true,
             max_preemptions_per_job: 2,
+            max_preempt_park_mb: 256,
         }
     }
 }
@@ -426,6 +433,7 @@ fn apply_one(cfg: &mut Config, key: &str, val: &str) -> Result<()> {
         "sched.backfill" => cfg.sched.backfill = parse(key, val)?,
         "sched.preemption" => cfg.sched.preemption = parse(key, val)?,
         "sched.max_preemptions_per_job" => cfg.sched.max_preemptions_per_job = parse(key, val)?,
+        "sched.max_preempt_park_mb" => cfg.sched.max_preempt_park_mb = parse(key, val)?,
         "compute.dist_gemm_algo" => {
             crate::elemental::dist_gemm::DistGemmAlgo::parse(val)?;
             cfg.compute.dist_gemm_algo = val.to_string();
@@ -647,6 +655,7 @@ scale = 0.5
             "sched.backfill=false",
             "sched.preemption=false",
             "sched.max_preemptions_per_job=5",
+            "sched.max_preempt_park_mb=64",
         ])
         .unwrap();
         assert_eq!(cfg.sched.max_workers_per_session, 2);
@@ -663,6 +672,7 @@ scale = 0.5
         assert!(!cfg.sched.backfill);
         assert!(!cfg.sched.preemption);
         assert_eq!(cfg.sched.max_preemptions_per_job, 5);
+        assert_eq!(cfg.sched.max_preempt_park_mb, 64);
         cfg.validate().unwrap();
         // unknown classes are rejected at apply time...
         assert!(cfg.apply_overrides(&["sched.default_class=platinum"]).is_err());

@@ -563,17 +563,19 @@ mod tests {
         let g3 = a.acquire(3, 1, false, None).unwrap();
         assert_eq!(g3, vec![2]);
         assert_eq!(a.queue_depth(), 2, "parked waiters stay queued");
-        // Drain: freeing session 1's grant unblocks its parked request
-        // (quota charge drops), which must win over session 2 (lower
-        // pass was fixed at enqueue; equal passes fall back to ticket).
+        // Drain: freeing session 1's grant drops its quota charge, so
+        // both parked requests are grantable — and weighted fair share
+        // ranks session 2 first (it has consumed nothing, so its pass
+        // fixed at enqueue is below session 1's, which was already
+        // charged for its first grant).
         a.release(3, &g3);
         a.release(1, &g1);
-        let g1b = blocked.join().unwrap().unwrap();
-        assert_eq!(g1b.len(), 2);
-        a.release(1, &g1b);
         let g2 = big.join().unwrap().unwrap();
         assert_eq!(g2.len(), 2);
         a.release(2, &g2);
+        let g1b = blocked.join().unwrap().unwrap();
+        assert_eq!(g1b.len(), 2);
+        a.release(1, &g1b);
         assert_eq!(a.queue_depth(), 0);
         assert_eq!(a.free_count(), 3);
     }

@@ -104,24 +104,29 @@ impl QosPolicy {
 #[derive(Debug, Default)]
 pub struct FairShare {
     passes: HashMap<u64, u64>,
-    /// High-water mark of granted passes. New sessions join *at* the
-    /// mark: they compete fairly from now on but cannot retroactively
-    /// claim "unused" share from before they existed.
+    /// The scheduler's *virtual time*: the highest pre-charge pass ever
+    /// granted. `pick` grants the lowest queued pass, so this tracks the
+    /// pass of the currently most-favored tenants. New sessions join
+    /// *at* this mark: they compete on equal footing with the favored
+    /// sessions from now on, but cannot retroactively claim "unused"
+    /// share from before they existed (no credit-hoarding). Existing
+    /// sessions keep their own pass — clamping them to any global value
+    /// would collapse the order back to FIFO and make the weights inert.
     global: u64,
 }
 
 impl FairShare {
     /// The pass a new request from `session` enqueues at.
     pub fn pass_for(&self, session: u64) -> u64 {
-        self.passes.get(&session).copied().unwrap_or(0).max(self.global)
+        self.passes.get(&session).copied().unwrap_or(self.global)
     }
 
     /// Account a grant of `count` workers to `session` under `class`.
     pub fn charge(&mut self, session: u64, count: u32, class: QosClass, policy: &QosPolicy) {
         let stride = STRIDE_SCALE / policy.weight(class);
-        let pass = self.pass_for(session) + u64::from(count) * stride.max(1);
-        self.passes.insert(session, pass);
-        self.global = self.global.max(pass);
+        let before = self.pass_for(session);
+        self.global = self.global.max(before);
+        self.passes.insert(session, before + u64::from(count) * stride.max(1));
     }
 
     /// Drop a session's accumulated pass (session closed).
@@ -286,11 +291,53 @@ mod tests {
         fs2.charge(2, 4, QosClass::BestEffort, &policy);
         let scavenger = fs2.pass_for(2);
         assert_eq!(scavenger, interactive * 8);
-        // Newcomers join at the global high-water mark, not at zero.
+        // Newcomers join at the virtual time — the highest *pre-charge*
+        // granted pass — not at zero (no credit-hoarding) and not behind
+        // the sessions already charged (no newcomer starvation).
         fs.charge(1, 100, QosClass::Batch, &policy);
-        assert_eq!(fs.pass_for(99), fs.pass_for(1));
+        assert_eq!(fs.pass_for(99), interactive);
+        assert!(fs.pass_for(99) < fs.pass_for(1));
         fs.forget(1);
         assert_eq!(fs.pass_for(1), fs.pass_for(99));
+    }
+
+    #[test]
+    fn shared_instance_interleaves_grants_by_weight() {
+        // Regression for the review finding: with one shared FairShare,
+        // sessions must keep their *own* passes. Clamping every session
+        // to the global mark made pass_for always return the mark, so
+        // (pass, ticket) order collapsed to arrival order — pure FIFO —
+        // and the class weights were inert.
+        let policy = QosPolicy::default();
+        let mut fair = FairShare::default();
+        let mut grants = [0u32; 2]; // [interactive, best_effort]
+        let mut ticket = 0u64;
+        for _ in 0..90 {
+            // Both tenants perpetually hungry: one single-worker request
+            // each, re-enqueued every round, contending for one worker.
+            let mut queue: VecDeque<Entry> = VecDeque::new();
+            for (session, class) in
+                [(1u64, QosClass::Interactive), (2u64, QosClass::BestEffort)]
+            {
+                ticket += 1;
+                queue.push_back(Entry {
+                    ticket,
+                    session,
+                    count: 1,
+                    class,
+                    pass: fair.pass_for(session),
+                    bypassed: 0,
+                });
+            }
+            let p = pick(&queue, 1, &HashMap::new(), 0, true).expect("a worker is free");
+            let e = queue.iter().find(|e| e.ticket == p.ticket).unwrap().clone();
+            fair.charge(e.session, e.count, e.class, &policy);
+            grants[(e.session - 1) as usize] += 1;
+        }
+        // Weight 8 vs weight 1 under constant contention: the stride
+        // schedule interleaves 8 interactive grants (plus the tie-break
+        // round) per best_effort grant.
+        assert_eq!(grants, [80, 10], "~8:1 interleaving expected");
     }
 
     #[test]

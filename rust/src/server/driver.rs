@@ -191,6 +191,10 @@ pub struct DriverCore {
     /// `FetchTelemetry` alongside each worker's sink.
     pub telemetry: Arc<TelemetrySink>,
     sched_cfg: SchedConfig,
+    /// The server's `[transfer]` knobs — driver-side transfers (e.g.
+    /// parking a preempted session's matrices) ride the same pipeline
+    /// shape the operator configured for clients.
+    transfer_cfg: TransferConfig,
     next_session: AtomicU64,
     next_handle: AtomicU64,
     /// Driver-unique tokens stamped on async `RunRoutine` commands so
@@ -213,6 +217,7 @@ impl DriverCore {
     pub fn new(
         workers: Vec<Arc<WorkerConn>>,
         sched_cfg: SchedConfig,
+        transfer_cfg: TransferConfig,
         tel_cfg: &TelemetryConfig,
         fault: Option<Arc<crate::fault::FaultPlane>>,
     ) -> Arc<DriverCore> {
@@ -228,6 +233,7 @@ impl DriverCore {
             fault,
             telemetry,
             sched_cfg,
+            transfer_cfg,
             next_session: AtomicU64::new(1),
             next_handle: AtomicU64::new(1),
             next_job_token: AtomicU64::new(1),
@@ -1265,7 +1271,7 @@ fn handle_client_msg(
             // park; the readmitted capacity satisfies this acquire.
             let free = core.alloc.free_count();
             if wait && core.alloc.qos().preemption && free < count {
-                try_preempt(core, s.id, class);
+                try_preempt(core, s.id, class, count);
             }
             let ids = core.alloc.acquire_classed(s.id, count, Some(class), wait, timeout)?;
             // Injection site `driver.delay_grant`: stretch the window
@@ -1702,7 +1708,16 @@ fn fetch_telemetry(
 /// arrival — bulk eviction would let one burst flush every tenant below
 /// it — and `sched.max_preemptions_per_job` bounds how often any single
 /// job can be bounced (`request_preempt` refuses exhausted jobs).
-fn try_preempt(core: &DriverCore, requester: u64, class: QosClass) {
+///
+/// Two kinds of victim are skipped outright:
+/// * one whose worker count plus the currently-free pool still could
+///   not cover the arrival's `count` — evicting it would throw away the
+///   victim's progress while the requester times out anyway;
+/// * one whose non-replicated matrices would park more than
+///   `sched.max_preempt_park_mb` of row data in driver memory across
+///   the regrant (`preempt_and_requeue` pulls every row driver-side, so
+///   an unbounded park is a driver OOM waiting on a large tenant).
+fn try_preempt(core: &DriverCore, requester: u64, class: QosClass, count: u32) {
     let max = core.alloc.qos().max_preemptions_per_job;
     let mut victims: Vec<(u8, u64, Arc<SessionShared>)> = Vec::new();
     {
@@ -1722,7 +1737,36 @@ fn try_preempt(core: &DriverCore, requester: u64, class: QosClass) {
         }
     }
     victims.sort_by_key(|(rank, id, _)| (*rank, *id));
+    let free = core.alloc.free_count();
+    let park_cap = u64::from(core.sched_cfg.max_preempt_park_mb) << 20;
     for (_, id, v) in victims {
+        let held = v.workers.lock().unwrap().len() as u32;
+        if held.saturating_add(free) < count {
+            debugln!(
+                "driver",
+                "preempt scan: session {id} too small ({held} held + {free} free < {count})"
+            );
+            continue;
+        }
+        if park_cap > 0 {
+            let park_bytes: u64 = v
+                .matrices
+                .lock()
+                .unwrap()
+                .values()
+                .filter(|m| m.layout.kind != LayoutKind::Replicated)
+                .map(|m| m.rows.saturating_mul(m.cols).saturating_mul(8))
+                .sum();
+            if park_bytes > park_cap {
+                debugln!(
+                    "driver",
+                    "preempt scan: session {id} would park {park_bytes} bytes \
+                     (sched.max_preempt_park_mb = {})",
+                    core.sched_cfg.max_preempt_park_mb
+                );
+                continue;
+            }
+        }
         let Some((job_id, token)) = v.jobs.request_preempt(max) else { continue };
         // Same cooperative abort as CancelJob: every worker's cancel
         // token flips and the routine bails at its next checkpoint.
@@ -2042,7 +2086,11 @@ struct ParkedMatrix {
 /// 1. Park the session's distributed matrices driver-side — the prober's
 ///    Reset wipes every panel on the outgoing group. Replicated outputs
 ///    are dropped (row routing cannot repopulate p replicas); the client
-///    re-runs the producing routine if it still needs them.
+///    re-runs the producing routine if it still needs them. The parked
+///    footprint is bounded: `try_preempt` skipped this session as a
+///    victim unless its non-replicated matrices fit under
+///    `sched.max_preempt_park_mb`, and the rows ride the server's own
+///    `[transfer]` pipeline configuration.
 /// 2. Flip the job `Running → Preempted { count }`. `preempt` refuses if
 ///    a client cancel raced in — cancel wins and the job just fails.
 /// 3. Quarantine the worker group: the prober's Reset → readmit returns
@@ -2070,7 +2118,7 @@ fn preempt_and_requeue(core: &DriverCore, s: &SessionShared, job_id: u64) -> Res
             uds_addr: w.uds_addr.clone(),
         })
         .collect();
-    let opts = TransferOptions::new(&TransferConfig::default(), 256, true, true);
+    let opts = TransferOptions::new(&core.transfer_cfg, 256, true, true);
     let metas: Vec<MatrixMeta> = s.matrices.lock().unwrap().values().cloned().collect();
     let mut parked: Vec<ParkedMatrix> = Vec::new();
     for meta in metas {

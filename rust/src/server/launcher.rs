@@ -109,7 +109,8 @@ pub fn start_server(cfg: &Config) -> Result<ServerHandle> {
     info!("launcher", "{n} workers registered; driver at {driver_addr}");
 
     let stop = Arc::new(AtomicBool::new(false));
-    let core = DriverCore::new(workers, cfg.sched.clone(), &cfg.telemetry, fault);
+    let core =
+        DriverCore::new(workers, cfg.sched.clone(), cfg.transfer.clone(), &cfg.telemetry, fault);
     {
         let core = core.clone();
         let stop = stop.clone();

@@ -126,7 +126,7 @@ fn preempted_job_completes_bitwise_identical() {
     let addr = srv.driver_addr.clone();
     let urgent = std::thread::spawn(move || -> alchemist::Result<()> {
         let mut ac2 = AlchemistContext::connect(&addr, "urgent")?;
-        ac2.qos_class = QosClass::Interactive;
+        ac2.qos_class = Some(QosClass::Interactive);
         ac2.request_workers_wait(2, 30_000)?;
         std::thread::sleep(Duration::from_millis(300));
         ac2.stop()
@@ -191,7 +191,7 @@ fn per_class_queue_depths_in_status() {
     let waddr = addr.clone();
     let waiter = std::thread::spawn(move || -> alchemist::Result<()> {
         let mut ac = AlchemistContext::connect(&waddr, "urgent")?;
-        ac.qos_class = QosClass::Interactive;
+        ac.qos_class = Some(QosClass::Interactive);
         ac.request_workers_wait(1, 20_000)?;
         ac.stop()
     });

@@ -224,3 +224,53 @@ fn no_starvation_under_weighted_fair_share() {
         Ok(())
     });
 }
+
+/// Deterministic saturation scenario on one shared [`FairShare`]: three
+/// perpetually-hungry sessions, one per class, contend for a single
+/// worker. Long-run grant throughput must track the configured 8/4/1
+/// weights — the regression this pins down was every session's pass
+/// being clamped to the shared global mark, which collapsed the grant
+/// order to pure FIFO (a 1:1:1 interleaving) and left the weights inert.
+#[test]
+fn weighted_fair_share_grant_ratio_tracks_weights() {
+    let qos = QosPolicy::default();
+    let sessions =
+        [(1u64, QosClass::Interactive), (2, QosClass::Batch), (3, QosClass::BestEffort)];
+    let mut fair = FairShare::default();
+    let mut queue: VecDeque<Entry> = VecDeque::new();
+    let mut next_ticket = 1u64;
+    for (session, class) in sessions {
+        queue.push_back(Entry {
+            ticket: next_ticket,
+            session,
+            count: 1,
+            class,
+            pass: fair.pass_for(session),
+            bypassed: 0,
+        });
+        next_ticket += 1;
+    }
+    let mut grants = [0u64; 3];
+    for _ in 0..260 {
+        let p = pick(&queue, 1, &HashMap::new(), 0, true).expect("one worker is free");
+        let pos = queue.iter().position(|e| e.ticket == p.ticket).unwrap();
+        let e = queue.remove(pos).unwrap();
+        fair.charge(e.session, e.count, e.class, &qos);
+        grants[(e.session - 1) as usize] += 1;
+        // The tenant releases and immediately re-requests, so every
+        // round contends for the same single worker.
+        queue.push_back(Entry {
+            ticket: next_ticket,
+            session: e.session,
+            count: 1,
+            class: e.class,
+            pass: fair.pass_for(e.session),
+            bypassed: 0,
+        });
+        next_ticket += 1;
+    }
+    let [i, b, be] = grants;
+    assert!(be > 0, "best_effort starved: {grants:?}");
+    assert!(i >= 7 * be && i <= 9 * be, "interactive:best_effort ~8:1 expected, got {grants:?}");
+    assert!(b >= 3 * be && b <= 5 * be, "batch:best_effort ~4:1 expected, got {grants:?}");
+}
